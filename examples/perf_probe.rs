@@ -1,0 +1,63 @@
+//! Perf probe: L3 hot paths.
+use rpulsar::util::crc32;
+fn main() {
+    // crc32 throughput (mmq's per-record cost)
+    let buf = vec![0xA5u8; 1024];
+    let n = 500_000;
+    let t = std::time::Instant::now();
+    let mut acc = 0u32;
+    for _ in 0..n { acc ^= crc32(&buf); }
+    let e = t.elapsed().as_secs_f64();
+    println!("crc32 1KiB: {:.2}µs/op ({:.2} GB/s) acc={acc}", e/n as f64*1e6, n as f64*1024.0/e/1e9);
+
+    // routing latency (simple 2-D profile, 64-node ring)
+    use rpulsar::overlay::node_id::NodeId;
+    use rpulsar::overlay::ring::build_converged_tables;
+    use rpulsar::routing::router::ContentRouter;
+    use rpulsar::ar::profile::Profile;
+    let ids: Vec<NodeId> = (0..64).map(|i| NodeId::from_name(&format!("p-{i}"))).collect();
+    let tables = build_converged_tables(&ids, 8);
+    let router = ContentRouter::new();
+    let p = Profile::parse("drone,lidar").unwrap();
+    let n = 100_000;
+    let t = std::time::Instant::now();
+    for i in 0..n {
+        std::hint::black_box(router.route(&p, &tables, ids[i % 64]).unwrap());
+    }
+    println!("route simple 2D @64 nodes: {:.2}µs/op", t.elapsed().as_secs_f64()/n as f64*1e6);
+
+    let complex = Profile::parse("dr*,li*").unwrap();
+    let n = 20_000;
+    let t = std::time::Instant::now();
+    for i in 0..n {
+        std::hint::black_box(router.route(&complex, &tables, ids[i % 64]).unwrap());
+    }
+    println!("route complex 2D: {:.2}µs/op", t.elapsed().as_secs_f64()/n as f64*1e6);
+
+    // LSM put/get native
+    let dir = std::env::temp_dir().join("perf-lsm");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut store = rpulsar::storage::lsm::LsmStore::open_native(rpulsar::storage::lsm::LsmOptions {
+        dir: dir.clone(), memtable_bytes: 64<<20, bloom_bits_per_key: 10, max_tables: 6 }).unwrap();
+    let n = 200_000;
+    let t = std::time::Instant::now();
+    for i in 0..n {
+        store.put(format!("key-{i:08}").as_bytes(), &[0u8; 128]).unwrap();
+    }
+    println!("lsm put 128B: {:.2}µs/op", t.elapsed().as_secs_f64()/n as f64*1e6);
+    let t = std::time::Instant::now();
+    for i in 0..n {
+        std::hint::black_box(store.get(format!("key-{i:08}").as_bytes()).unwrap());
+    }
+    println!("lsm get (memtable): {:.2}µs/op", t.elapsed().as_secs_f64()/n as f64*1e6);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // PJRT preprocess per tile
+    let rt = rpulsar::runtime::PreprocessRuntime::load(std::path::Path::new("artifacts")).unwrap();
+    let tile = vec![0.5f32; 256*256];
+    rt.preprocess(&tile).unwrap();
+    let n = 100;
+    let t = std::time::Instant::now();
+    for _ in 0..n { std::hint::black_box(rt.preprocess(&tile).unwrap()); }
+    println!("pjrt preprocess 256x256: {:.2}ms/tile", t.elapsed().as_secs_f64()/n as f64*1e3);
+}

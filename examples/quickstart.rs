@@ -1,0 +1,139 @@
+//! Quickstart: the paper's Listings 1–5 in ten minutes.
+//!
+//! Boots an in-process R-Pulsar cluster, registers a drone data
+//! producer (Listing 1), a consumer interest (Listing 2), stores a
+//! processing function (Listing 3), and triggers it with an IF-THEN
+//! rule (Listings 4–5).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use rpulsar::ar::message::{Action, ArMessage};
+use rpulsar::ar::profile::Profile;
+use rpulsar::ar::rendezvous::Reaction;
+use rpulsar::config::DeviceKind;
+use rpulsar::coordinator::Cluster;
+use rpulsar::rules::ast::EvalContext;
+use rpulsar::rules::engine::{Consequence, Rule, RuleEngine, RuleOutcome};
+
+fn main() -> rpulsar::Result<()> {
+    rpulsar::logging::init();
+
+    // An 8-RP edge cluster (geographically placed, quadtree-organised).
+    let mut cluster = Cluster::new("quickstart", 8, DeviceKind::Native)?;
+    let origin = cluster.ids()[0];
+    println!(
+        "cluster: {} RPs in {} region(s)",
+        cluster.len(),
+        cluster.quadtree().regions().count()
+    );
+
+    // ---- Listing 1: drone announces LiDAR data (notify_interest) ----
+    let producer_profile =
+        Profile::builder().add_single("Drone").add_single("LiDAR").build();
+    let announce = ArMessage::builder()
+        .set_header(producer_profile.clone())
+        .set_sender("drone-1")
+        .set_action(Action::NotifyInterest)
+        .set_latitude(40.0583)
+        .set_longitude(-74.4056)
+        .build()?;
+    cluster.post_from(origin, &announce)?;
+    println!("Listing 1: drone registered, waiting for interest");
+
+    // ---- Listing 2: consumer declares interest (notify_data) ----
+    let consumer_profile = Profile::builder()
+        .add_single("Drone")
+        .add_single("Li*")
+        .add_single("lat:40*")
+        .add_single("long:-74*")
+        .build();
+    let interest = ArMessage::builder()
+        .set_header(Profile::builder().add_single("Drone").add_single("Li*").build())
+        .set_sender("analytics-app")
+        .set_action(Action::NotifyData)
+        .build()?;
+    let results = cluster.post_from(origin, &interest)?;
+    let producer_notified = results
+        .iter()
+        .flat_map(|(_, rs)| rs)
+        .any(|r| matches!(r, Reaction::ProducerNotified { .. }));
+    println!(
+        "Listing 2: consumer interest posted (profile `{}`); producer notified: {}",
+        consumer_profile.render(),
+        producer_notified
+    );
+
+    // The notified drone starts streaming: store a data record.
+    let store = ArMessage::builder()
+        .set_header(producer_profile)
+        .set_sender("drone-1")
+        .set_action(Action::Store)
+        .set_data(vec![7u8; 1024])
+        .build()?;
+    cluster.post_from(origin, &store)?;
+    println!("drone streamed one record into the DHT");
+
+    // ---- Listing 3: store a processing function ----
+    let func_profile = Profile::builder().add_single("post_processing_func").build();
+    let store_func = ArMessage::builder()
+        .set_header(func_profile.clone())
+        .set_sender("analytics-app")
+        .set_action(Action::StoreFunction)
+        .set_topology("noop") // registered below on every node
+        .build()?;
+    for id in cluster.ids() {
+        cluster
+            .node_mut(&id)
+            .unwrap()
+            .topologies_mut()
+            .register_stage("noop", || {
+                Box::new(rpulsar::stream::operator::OperatorKind::map("noop", |t| t))
+            });
+    }
+    cluster.post_from(origin, &store_func)?;
+    println!("Listing 3: function stored as `post_processing_func`");
+
+    // ---- Listings 4–5: rule triggers the stored function ----
+    let trigger_msg = ArMessage::builder()
+        .set_header(func_profile)
+        .set_sender("rule-engine")
+        .set_action(Action::StartFunction)
+        .build()?;
+    let mut rules = RuleEngine::new();
+    rules.add(
+        Rule::builder()
+            .with_name("rule1")
+            .with_condition("IF(RESULT >= 10)")?
+            .with_consequence(Consequence::TriggerTopology(trigger_msg))
+            .with_priority(0)
+            .build()?,
+    );
+    let tuple_ctx = EvalContext::new().with("RESULT", 12.0);
+    match rules.evaluate(&tuple_ctx) {
+        RuleOutcome::Fired { rule, consequence: Consequence::TriggerTopology(msg) } => {
+            println!("Listing 4: rule `{rule}` fired → posting start_function");
+            let results = cluster.post_from(origin, &msg)?;
+            for (target, reactions) in results {
+                for r in reactions {
+                    if let Reaction::StartTopology { topology, .. } = r {
+                        println!("Listing 5: topology `{topology}` started on {target}");
+                    }
+                }
+            }
+        }
+        other => println!("rule did not fire: {other:?}"),
+    }
+
+    // Query what we stored.
+    let hits = cluster.query_wildcard(origin, &Profile::parse("drone,li*")?)?;
+    println!("wildcard query `drone,li*` → {} record(s)", hits.len());
+
+    println!(
+        "simulated network: {} messages, {:?}",
+        cluster.network().messages(),
+        cluster.network().virtual_elapsed()
+    );
+    cluster.shutdown()?;
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Sensor-network scenario: many geographically distributed producers,
+//! pattern-based consumers, quadtree growth, replication and failover.
+//!
+//! Exercises: overlay self-organisation (region splits as RPs join),
+//! SFC content routing for 2-D profiles, DHT replication surviving an
+//! RP crash, and master re-election (Hirschberg–Sinclair).
+//!
+//! Run: `cargo run --release --example sensor_network -- [--nodes N]`
+
+use rpulsar::ar::message::{Action, ArMessage};
+use rpulsar::ar::profile::Profile;
+use rpulsar::cli::Args;
+use rpulsar::config::DeviceKind;
+use rpulsar::coordinator::Cluster;
+use rpulsar::util::prng::Prng;
+
+fn main() -> rpulsar::Result<()> {
+    rpulsar::logging::init();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n = args.opt_usize("nodes", 16)?;
+
+    let mut cluster = Cluster::new("sensors", n, DeviceKind::Native)?;
+    let origin = cluster.ids()[0];
+    println!(
+        "overlay: {} RPs self-organised into {} region(s)",
+        cluster.len(),
+        cluster.quadtree().regions().count()
+    );
+
+    // 50 sensors stream readings under distinct 2-D profiles.
+    let mut rng = Prng::seeded(7);
+    let kinds = ["temp", "humidity", "lidar", "air", "seismic"];
+    let mut stored = 0usize;
+    for i in 0..50 {
+        let kind = kinds[i % kinds.len()];
+        let profile = Profile::builder()
+            .add_single(&format!("{}{}", rng.ascii_lower(4), i))
+            .add_single(kind)
+            .build();
+        let reading = format!("{:.3}", rng.gen_f64() * 40.0);
+        let msg = ArMessage::builder()
+            .set_header(profile)
+            .set_sender(&format!("sensor-{i}"))
+            .set_action(Action::Store)
+            .set_data(reading.into_bytes())
+            .build()?;
+        cluster.store_replicated(origin, &msg, 2)?;
+        stored += 1;
+    }
+    println!("{stored} sensor readings stored with 2× replication");
+
+    // A consumer queries every temperature sensor with one wildcard.
+    let hits = cluster.query_wildcard(origin, &Profile::parse("*,temp")?)?;
+    println!("wildcard `*,temp` → {} readings", hits.len());
+    assert_eq!(hits.len(), 10);
+
+    // Crash an RP; data must survive via replicas.
+    let victim = cluster.ids()[n / 2];
+    println!("crashing RP {victim} ...");
+    cluster.crash(&victim)?;
+    let hits_after = cluster.query_wildcard(origin, &Profile::parse("*,temp")?)?;
+    println!("after crash: wildcard `*,temp` → {} readings", hits_after.len());
+
+    // Re-elect a master for the crashed RP's region.
+    let region = cluster
+        .quadtree()
+        .regions()
+        .find(|r| cluster.quadtree().members_of(*r).map(|m| !m.is_empty()).unwrap_or(false))
+        .expect("some region still has members");
+    let leader = cluster.elect_master(region)?;
+    println!("region {region}: new master elected = {leader}");
+
+    println!(
+        "network totals: {} msgs / {} bytes / {:?} simulated",
+        cluster.network().messages(),
+        cluster.network().bytes(),
+        cluster.network().virtual_elapsed()
+    );
+    cluster.shutdown()?;
+    println!("sensor_network OK");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+Python runs ONCE here; it is never on the Rust request path.
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_points():
+    """(name, function, example-args) for every artifact."""
+    tile = jax.ShapeDtypeStruct((model.TILE, model.TILE), jnp.float32)
+    stats = jax.ShapeDtypeStruct((model.STATS, model.STATS), jnp.float32)
+    return [
+        ("preprocess", model.preprocess, (tile,)),
+        ("change_detect", model.change_detect, (tile, tile)),
+        ("quality_score", model.quality_score, (stats,)),
+    ]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    for name, fn, example_args in entry_points():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Layer-1 Pallas kernels: the LiDAR pre-processing hot-spot.
+
+The paper's disaster-recovery pipeline (§II, §V-B) pre-processes LiDAR
+images on the edge device and scores them to decide (rule engine, §IV-D2)
+whether further cloud processing is needed. The per-tile compute is:
+
+- ``sobel_stats``: fused Sobel gradient magnitude + per-block mean
+  statistics. One HBM read of the tile, one write of the gradient map and
+  one small write of the (H/8, W/8) block means.
+- ``change_detect``: fused |current - historical| difference + per-block
+  means, for change detection against pre-Hurricane data.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a 256×256 f32 tile is
+256 KiB — tile + gradient output + temporaries fit VMEM (≈16 MiB) with
+>10× headroom, so the kernels use a single-block grid and fuse all
+per-tile math into one VMEM-resident pass (the HBM↔VMEM schedule is one
+load + two stores per tile). Larger tiles would row-block with a halo;
+the block-stat reduction maps to the VPU (this is a stencil workload —
+the MXU has nothing to multiply).
+
+Kernels MUST run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls that the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Per-block statistic granularity (paper pipeline scores 8×8 blocks).
+BLOCK = 8
+
+
+def _sobel_gmag(x):
+    """Sobel gradient magnitude with edge-replicated borders (pure jnp,
+    shared by the kernel body and the reference oracle)."""
+    xp = jnp.pad(x, 1, mode="edge")
+    # 3x3 Sobel stencils.
+    gx = (
+        (xp[2:, 2:] + 2.0 * xp[1:-1, 2:] + xp[:-2, 2:])
+        - (xp[2:, :-2] + 2.0 * xp[1:-1, :-2] + xp[:-2, :-2])
+    )
+    gy = (
+        (xp[2:, 2:] + 2.0 * xp[2:, 1:-1] + xp[2:, :-2])
+        - (xp[:-2, 2:] + 2.0 * xp[:-2, 1:-1] + xp[:-2, :-2])
+    )
+    return jnp.sqrt(gx * gx + gy * gy)
+
+
+def _block_means(x):
+    """Mean over non-overlapping BLOCK×BLOCK tiles → (H/B, W/B)."""
+    h, w = x.shape
+    return x.reshape(h // BLOCK, BLOCK, w // BLOCK, BLOCK).mean(axis=(1, 3))
+
+
+def _sobel_stats_kernel(x_ref, gmag_ref, stats_ref):
+    """Fused: gradient magnitude + block-mean stats, one VMEM pass."""
+    x = x_ref[...]
+    gmag = _sobel_gmag(x)
+    gmag_ref[...] = gmag
+    stats_ref[...] = _block_means(gmag)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sobel_stats(x):
+    """Pallas entry: ``x (H, W) f32 -> (gmag (H, W), stats (H/8, W/8))``.
+
+    H and W must be multiples of ``BLOCK``.
+    """
+    h, w = x.shape
+    assert h % BLOCK == 0 and w % BLOCK == 0, (h, w)
+    return pl.pallas_call(
+        _sobel_stats_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((h, w), jnp.float32),
+            jax.ShapeDtypeStruct((h // BLOCK, w // BLOCK), jnp.float32),
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x.astype(jnp.float32))
+
+
+def _change_detect_kernel(cur_ref, hist_ref, diff_ref, dstats_ref):
+    """Fused: absolute difference + block-mean change statistics."""
+    cur = cur_ref[...]
+    hist = hist_ref[...]
+    diff = jnp.abs(cur - hist)
+    diff_ref[...] = diff
+    dstats_ref[...] = _block_means(diff)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def change_detect(cur, hist):
+    """Pallas entry: ``(cur, hist) (H, W) f32 -> (diff (H, W),
+    dstats (H/8, W/8))``."""
+    h, w = cur.shape
+    assert cur.shape == hist.shape, (cur.shape, hist.shape)
+    assert h % BLOCK == 0 and w % BLOCK == 0, (h, w)
+    return pl.pallas_call(
+        _change_detect_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((h, w), jnp.float32),
+            jax.ShapeDtypeStruct((h // BLOCK, w // BLOCK), jnp.float32),
+        ),
+        interpret=True,
+    )(cur.astype(jnp.float32), hist.astype(jnp.float32))

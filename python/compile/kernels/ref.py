@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth: independent implementations (no Pallas, no
+shared kernel-body code paths beyond jnp itself) that pytest compares
+against kernel outputs with ``assert_allclose``.
+"""
+
+import jax.numpy as jnp
+
+BLOCK = 8
+
+
+def sobel_stats_ref(x):
+    """Reference for ``preprocess.sobel_stats``."""
+    x = x.astype(jnp.float32)
+    xp = jnp.pad(x, 1, mode="edge")
+    # Explicit convolution-style accumulation (different formulation from
+    # the kernel's slice arithmetic on purpose).
+    kx = jnp.array([[-1.0, 0.0, 1.0], [-2.0, 0.0, 2.0], [-1.0, 0.0, 1.0]], jnp.float32)
+    ky = kx.T
+    h, w = x.shape
+    gx = jnp.zeros((h, w), jnp.float32)
+    gy = jnp.zeros((h, w), jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            window = xp[di : di + h, dj : dj + w]
+            gx = gx + kx[di, dj] * window
+            gy = gy + ky[di, dj] * window
+    gmag = jnp.sqrt(gx * gx + gy * gy)
+    stats = gmag.reshape(h // BLOCK, BLOCK, w // BLOCK, BLOCK).mean(axis=(1, 3))
+    return gmag, stats
+
+
+def change_detect_ref(cur, hist):
+    """Reference for ``preprocess.change_detect``."""
+    cur = cur.astype(jnp.float32)
+    hist = hist.astype(jnp.float32)
+    diff = jnp.abs(cur - hist)
+    h, w = diff.shape
+    dstats = diff.reshape(h // BLOCK, BLOCK, w // BLOCK, BLOCK).mean(axis=(1, 3))
+    return diff, dstats

@@ -1,0 +1,53 @@
+"""Layer-2 JAX model: the disaster-recovery pipeline's compute graph.
+
+Three AOT entry points (each lowered to HLO text by ``aot.py`` and
+executed from the Rust coordinator's stream operators):
+
+- ``preprocess(x)``: Pallas Sobel+stats kernel, then the edge decision
+  features the rule engine consumes — ``RESULT`` (edge-density score) and
+  ``QUALITY`` (tile contrast), as scalars.
+- ``change_detect(cur, hist)``: Pallas difference kernel + change score.
+- ``quality_score(stats)``: cheap re-scoring of stored block statistics
+  (the serving-layer query path on the core).
+
+The pipeline's contract with L3: scalars feed `Tuple` fields RESULT /
+QUALITY / CHANGE that drive the paper's Listing-4 rule
+``IF(RESULT >= 10)``.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import preprocess as k
+
+
+# Tile geometry fixed at AOT time (the Rust side tiles images to this).
+TILE = 256
+STATS = TILE // k.BLOCK
+
+
+def preprocess(x):
+    """``x (256,256) f32 -> (gmag (256,256), stats (32,32), result f32,
+    quality f32)``."""
+    gmag, stats = k.sobel_stats(x)
+    # Edge density score: mean gradient, scaled so typical LiDAR tiles
+    # land in [0, 100] — the paper's rule threshold (RESULT >= 10) sits
+    # mid-range.
+    result = 100.0 * jnp.tanh(jnp.mean(gmag) / 4.0)
+    # Quality: contrast (std) of the raw tile, as the data-quality input
+    # for the quality/complexity trade-off rules (§IV-D2).
+    quality = jnp.std(x)
+    return gmag, stats, result, quality
+
+
+def change_detect(cur, hist):
+    """``(cur, hist) (256,256) f32 -> (dstats (32,32), change f32)``."""
+    _, dstats = k.change_detect(cur, hist)
+    # Change score: fraction of blocks whose mean abs-difference exceeds
+    # a detection threshold, in [0, 100].
+    changed = jnp.mean((dstats > 0.25).astype(jnp.float32))
+    return dstats, 100.0 * changed
+
+
+def quality_score(stats):
+    """``stats (32,32) f32 -> f32`` — re-score stored block statistics."""
+    return 100.0 * jnp.tanh(jnp.mean(stats) / 4.0)

@@ -1,0 +1,116 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps tile shapes and content distributions; assert_allclose
+against ref.py is THE correctness signal for the kernels that end up in
+the AOT artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import preprocess as k
+from compile.kernels import ref
+
+SHAPES = [(8, 8), (16, 64), (64, 64), (128, 256), (256, 256)]
+
+
+def rand_tile(shape, seed, scale=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_sobel_stats_matches_ref(shape):
+    x = rand_tile(shape, 0)
+    gmag, stats = k.sobel_stats(x)
+    gmag_ref, stats_ref = ref.sobel_stats_ref(x)
+    assert_allclose(np.asarray(gmag), np.asarray(gmag_ref), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(stats), np.asarray(stats_ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_change_detect_matches_ref(shape):
+    cur = rand_tile(shape, 1)
+    hist = rand_tile(shape, 2)
+    diff, dstats = k.change_detect(cur, hist)
+    diff_ref, dstats_ref = ref.change_detect_ref(cur, hist)
+    assert_allclose(np.asarray(diff), np.asarray(diff_ref), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(dstats), np.asarray(dstats_ref), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.sampled_from([8, 16, 32, 64]),
+    w=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+)
+def test_sobel_stats_hypothesis_sweep(h, w, seed, scale):
+    x = rand_tile((h, w), seed, scale)
+    gmag, stats = k.sobel_stats(x)
+    gmag_ref, stats_ref = ref.sobel_stats_ref(x)
+    assert_allclose(np.asarray(gmag), np.asarray(gmag_ref), rtol=1e-4, atol=1e-4 * scale)
+    assert_allclose(np.asarray(stats), np.asarray(stats_ref), rtol=1e-4, atol=1e-4 * scale)
+    assert gmag.shape == (h, w)
+    assert stats.shape == (h // k.BLOCK, w // k.BLOCK)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.sampled_from([8, 32, 64]),
+    w=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_change_detect_hypothesis_sweep(h, w, seed):
+    cur = rand_tile((h, w), seed)
+    hist = rand_tile((h, w), seed + 1)
+    diff, dstats = k.change_detect(cur, hist)
+    diff_ref, dstats_ref = ref.change_detect_ref(cur, hist)
+    assert_allclose(np.asarray(diff), np.asarray(diff_ref), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(dstats), np.asarray(dstats_ref), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32])
+def test_input_dtypes_are_coerced(dtype):
+    # Kernels cast to f32 internally; any numeric dtype is accepted.
+    x = (np.arange(64 * 64).reshape(64, 64) % 7).astype(dtype)
+    gmag, stats = k.sobel_stats(x)
+    gmag_ref, stats_ref = ref.sobel_stats_ref(np.asarray(x, np.float32))
+    assert_allclose(np.asarray(gmag), np.asarray(gmag_ref), rtol=1e-5, atol=1e-5)
+    assert np.asarray(gmag).dtype == np.float32
+    assert np.asarray(stats).dtype == np.float32
+
+
+def test_constant_tile_has_zero_gradient():
+    x = np.full((64, 64), 3.25, np.float32)
+    gmag, stats = k.sobel_stats(x)
+    assert_allclose(np.asarray(gmag), 0.0, atol=1e-6)
+    assert_allclose(np.asarray(stats), 0.0, atol=1e-6)
+
+
+def test_vertical_edge_detected():
+    x = np.zeros((64, 64), np.float32)
+    x[:, 32:] = 10.0
+    gmag, _ = k.sobel_stats(x)
+    g = np.asarray(gmag)
+    # Strong response at the edge columns, none far away.
+    assert g[:, 31].min() > 1.0
+    assert g[:, 32].min() > 1.0
+    assert_allclose(g[:, :30], 0.0, atol=1e-6)
+    assert_allclose(g[:, 34:], 0.0, atol=1e-6)
+
+
+def test_change_detect_identical_is_zero():
+    x = rand_tile((64, 64), 3)
+    diff, dstats = k.change_detect(x, x)
+    assert_allclose(np.asarray(diff), 0.0, atol=1e-7)
+    assert_allclose(np.asarray(dstats), 0.0, atol=1e-7)
+
+
+def test_unaligned_shape_rejected():
+    with pytest.raises(AssertionError):
+        k.sobel_stats(np.zeros((10, 10), np.float32))
+    with pytest.raises(AssertionError):
+        k.change_detect(np.zeros((8, 8), np.float32), np.zeros((16, 16), np.float32))

@@ -1,0 +1,81 @@
+"""L2 model tests: entry-point shapes, score semantics, AOT lowering."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+
+
+def rand_tile(seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((model.TILE, model.TILE)) * scale).astype(np.float32)
+
+
+def test_preprocess_shapes_and_ranges():
+    gmag, stats, result, quality = model.preprocess(rand_tile(0))
+    assert gmag.shape == (model.TILE, model.TILE)
+    assert stats.shape == (model.STATS, model.STATS)
+    assert 0.0 <= float(result) <= 100.0
+    assert float(quality) >= 0.0
+
+
+def test_result_monotonic_in_edge_content():
+    flat = np.zeros((model.TILE, model.TILE), np.float32)
+    _, _, r_flat, _ = model.preprocess(flat)
+    edgy = rand_tile(1, scale=10.0)
+    _, _, r_edgy, _ = model.preprocess(edgy)
+    assert float(r_flat) < 1e-3
+    assert float(r_edgy) > float(r_flat)
+
+
+def test_change_detect_scores():
+    x = rand_tile(2)
+    _, score_same = model.change_detect(x, x)
+    assert float(score_same) == 0.0
+    y = x + 5.0  # uniform large change
+    _, score_diff = model.change_detect(y, x)
+    assert float(score_diff) > 90.0
+    assert float(score_diff) <= 100.0
+
+
+def test_quality_score_consistent_with_preprocess():
+    x = rand_tile(3)
+    _, stats, result, _ = model.preprocess(x)
+    requeried = model.quality_score(stats)
+    # Same formula over the same stats → identical scores.
+    assert_allclose(float(requeried), float(result), rtol=1e-5)
+
+
+def test_entry_points_cover_all_artifacts():
+    names = [name for name, _, _ in aot.entry_points()]
+    assert names == ["preprocess", "change_detect", "quality_score"]
+
+
+@pytest.mark.parametrize("name", ["preprocess", "change_detect", "quality_score"])
+def test_aot_lowering_produces_hlo_text(name):
+    import jax
+
+    entry = {n: (f, a) for n, f, a in aot.entry_points()}[name]
+    fn, example_args = entry
+    lowered = jax.jit(fn).lower(*example_args)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Tuple return (return_tuple=True) so the Rust side can to_tuple().
+    assert "tuple" in text.lower()
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(tmp_path)]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    for name in ["preprocess", "change_detect", "quality_score"]:
+        path = tmp_path / f"{name}.hlo.txt"
+        assert path.exists()
+        assert "HloModule" in path.read_text()[:200]

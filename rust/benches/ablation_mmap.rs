@@ -1,0 +1,77 @@
+//! Ablation: the memory-mapped queue vs a write()+fsync queue — the
+//! design choice of paper §IV-C1 ("memory-mapped instead of heavily
+//! relying on the filesystem"). Reports both the *device-model*
+//! throughput (Pi) and the *real wall-clock* mmap append rate on this
+//! host (the L3 hot-path number tracked in EXPERIMENTS.md §Perf).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{fmt_size, header, mean_std, windowed_throughput};
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::device::throttle::{ClockMode, Dir, Medium, Pattern, ThrottledDisk};
+use rpulsar::mmq::queue::{MemoryMappedQueue, QueueOptions};
+use rpulsar::util::timeutil::fmt_rate;
+
+const MESSAGES: usize = 5_000;
+
+fn main() {
+    header(
+        "Ablation — mmap queue vs write()+fsync queue (Pi model)",
+        "motivates §IV-C1: sequential RAM beats per-message disk persistence",
+    );
+    println!("{:<10} {:>20} {:>20} {:>8}", "size", "mmap (msg/s)", "write+fsync (msg/s)", "ratio");
+    for &size in &[64usize, 1024, 16 * 1024] {
+        let disk = ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual);
+        let mmap_win = windowed_throughput(&disk, MESSAGES, 5, |_| {
+            disk.charge(Medium::Ram, Pattern::Sequential, Dir::Write, size + 8);
+        });
+        let (mmap_tp, _) = mean_std(&mmap_win);
+
+        let disk = ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual);
+        let fsync_win = windowed_throughput(&disk, MESSAGES.min(500), 5, |_| {
+            disk.charge(Medium::Disk, Pattern::Sequential, Dir::Write, size + 8);
+            disk.charge_fsync();
+        });
+        let (fsync_tp, _) = mean_std(&fsync_win);
+
+        println!(
+            "{:<10} {:>20.0} {:>20.0} {:>7.0}x",
+            fmt_size(size),
+            mmap_tp,
+            fsync_tp,
+            mmap_tp / fsync_tp
+        );
+        assert!(mmap_tp > 10.0 * fsync_tp);
+    }
+
+    // Real wall-clock: actual mmap queue on this host.
+    println!("\nreal mmap queue on this host (wall clock):");
+    for &size in &[64usize, 1024] {
+        let dir = std::env::temp_dir()
+            .join("rpulsar-bench")
+            .join(format!("ablation-mmap-{size}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut q = MemoryMappedQueue::open(QueueOptions {
+            dir: dir.clone(),
+            segment_bytes: 64 << 20,
+            max_segments: 4,
+            sync_every: 0,
+        })
+        .unwrap();
+        let payload = vec![0xA5u8; size];
+        let n = 200_000usize;
+        let start = std::time::Instant::now();
+        for _ in 0..n {
+            q.append(&payload).unwrap();
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        println!(
+            "  {:<8} append: {} ({:.2}µs/msg)",
+            fmt_size(size),
+            fmt_rate(n as f64 / elapsed, "msg"),
+            elapsed / n as f64 * 1e6
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

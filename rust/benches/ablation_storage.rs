@@ -1,0 +1,73 @@
+//! Ablation: memory-first LSM (R-Pulsar §IV-C3) vs write-through disk
+//! storage — quantifies the paper's "keep the most recently used data in
+//! main memory" design choice on the Pi model.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{header, mean_std, windowed_throughput};
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::device::throttle::{ClockMode, Dir, Medium, Pattern, ThrottledDisk};
+use rpulsar::storage::lsm::{LsmOptions, LsmStore};
+use rpulsar::util::prng::Prng;
+use rpulsar::workload::random_records;
+
+const RECORDS: usize = 1_000;
+
+fn main() {
+    header(
+        "Ablation — memory-first LSM vs write-through disk store",
+        "motivates §IV-C3: absorb writes in RAM, spill sequentially",
+    );
+    let mut rng = Prng::seeded(9);
+    let records = random_records(&mut rng, RECORDS, 512);
+
+    // Memory-first (R-Pulsar): memtable absorbs, flush amortises.
+    let disk = ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual);
+    let dir = std::env::temp_dir()
+        .join("rpulsar-bench")
+        .join(format!("ablation-storage-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut lsm = LsmStore::open(
+        LsmOptions {
+            dir: dir.clone(),
+            memtable_bytes: 1 << 20,
+            bloom_bits_per_key: 10,
+            max_tables: 8,
+        },
+        disk.clone(),
+    )
+    .unwrap();
+    let lsm_win = windowed_throughput(&disk, RECORDS, 5, |i| {
+        let (p, v) = &records[i];
+        lsm.put(p.render().as_bytes(), v).unwrap();
+    });
+    let (lsm_tp, _) = mean_std(&lsm_win);
+
+    // Write-through: every put is a synchronous random disk write.
+    let disk = ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual);
+    let wt_win = windowed_throughput(&disk, RECORDS.min(200), 5, |i| {
+        let (p, v) = &records[i % records.len()];
+        disk.charge(Medium::Disk, Pattern::Random, Dir::Write, p.render().len() + v.len());
+    });
+    let (wt_tp, _) = mean_std(&wt_win);
+
+    println!("memory-first LSM : {lsm_tp:>12.0} puts/s (Pi model)");
+    println!("write-through    : {wt_tp:>12.0} puts/s (Pi model)");
+    println!("advantage        : {:>11.0}x", lsm_tp / wt_tp);
+    assert!(lsm_tp > 20.0 * wt_tp, "memory-first must dominate write-through");
+
+    // Read side: recently-written keys come from RAM.
+    let disk_reads = lsm.disk().clone();
+    disk_reads.reset();
+    for (p, _) in records.iter().rev().take(100) {
+        lsm.get(p.render().as_bytes()).unwrap();
+    }
+    let recent = disk_reads.virtual_elapsed();
+    println!(
+        "\n100 reads of recently-written keys: {:?} total ({:.1}µs each) — memtable-resident",
+        recent,
+        recent.as_secs_f64() * 1e4
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,143 @@
+//! Shared bench harness (no criterion offline): paper-style tables with
+//! mean/σ over repeated windows, plus the R-Pulsar broker adapter used
+//! by the messaging figures.
+//!
+//! Included per-bench via `#[path]`, so each binary only uses a subset.
+#![allow(dead_code)]
+
+use rpulsar::ar::profile::Profile;
+use rpulsar::baselines::MessageBroker;
+use rpulsar::device::throttle::{Dir, Medium, Pattern, ThrottledDisk};
+use rpulsar::error::Result;
+use rpulsar::mmq::pubsub::Broker;
+use rpulsar::mmq::queue::QueueOptions;
+use std::time::Duration;
+
+/// Print a figure/table header.
+pub fn header(title: &str, paper_claim: &str) {
+    println!("\n=== {title} ===");
+    println!("paper: {paper_claim}");
+}
+
+/// Format bytes compactly.
+pub fn fmt_size(bytes: usize) -> String {
+    if bytes >= 1 << 20 {
+        format!("{}MiB", bytes >> 20)
+    } else if bytes >= 1 << 10 {
+        format!("{}KiB", bytes >> 10)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+/// Mean and sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0).max(1.0);
+    (mean, var.sqrt())
+}
+
+/// Simulated-throughput measurement: run `op` `n` times against a
+/// virtual-clocked device, in `windows` windows; returns per-window
+/// throughputs (ops/simulated-second).
+pub fn windowed_throughput(
+    disk: &ThrottledDisk,
+    n: usize,
+    windows: usize,
+    mut op: impl FnMut(usize),
+) -> Vec<f64> {
+    let per_window = (n / windows.max(1)).max(1);
+    let mut out = Vec::with_capacity(windows);
+    let mut done = 0usize;
+    for _ in 0..windows {
+        disk.reset();
+        for _ in 0..per_window {
+            op(done);
+            done += 1;
+        }
+        let secs = disk.virtual_elapsed().as_secs_f64().max(1e-12);
+        out.push(per_window as f64 / secs);
+    }
+    out
+}
+
+/// R-Pulsar's broker modelled on a device: real mmap publishes plus
+/// device-accurate accounting (RAM append; the producer→RP network hop
+/// is charged uniformly by the bench driver for every system).
+pub struct RPulsarBroker {
+    broker: Broker,
+    disk: ThrottledDisk,
+    profile: Profile,
+}
+
+impl RPulsarBroker {
+    pub fn new(name: &str, disk: ThrottledDisk) -> Self {
+        let dir = std::env::temp_dir()
+            .join("rpulsar-bench")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let broker = Broker::new(QueueOptions {
+            dir,
+            segment_bytes: 8 << 20,
+            max_segments: 4,
+            sync_every: 0,
+        });
+        RPulsarBroker { broker, disk, profile: Profile::parse("bench,topic").unwrap() }
+    }
+
+    pub fn disk(&self) -> &ThrottledDisk {
+        &self.disk
+    }
+}
+
+impl MessageBroker for RPulsarBroker {
+    fn publish(&mut self, _topic: &str, payload: &[u8]) -> Result<()> {
+        // Real mmap append...
+        self.broker.publish(&self.profile, payload)?;
+        // ...charged at the device's RAM sequential-write bandwidth
+        // (the memory-mapped design point, paper Table I).
+        self.disk.charge(Medium::Ram, Pattern::Sequential, Dir::Write, payload.len() + 8);
+        Ok(())
+    }
+
+    fn consume(&mut self, _topic: &str, max: usize) -> Result<Vec<Vec<u8>>> {
+        self.broker.subscribe("bench-consumer", self.profile.clone());
+        let msgs = self.broker.fetch("bench-consumer", max)?;
+        for (_, m) in &msgs {
+            self.disk.charge(Medium::Ram, Pattern::Sequential, Dir::Read, m.len());
+        }
+        Ok(msgs.into_iter().map(|(_, m)| m).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "r-pulsar"
+    }
+}
+
+/// Run a single-producer messaging experiment: `count` messages of
+/// `size` bytes through `broker`, charging the producer→RP network hop
+/// uniformly. Returns windowed throughputs (msg/s, simulated).
+pub fn messaging_run(
+    broker: &mut dyn MessageBroker,
+    disk: &ThrottledDisk,
+    size: usize,
+    count: usize,
+    windows: usize,
+) -> Vec<f64> {
+    let payload = vec![0xA5u8; size];
+    windowed_throughput(disk, count, windows, |_| {
+        disk.charge_network(size + 32);
+        broker.publish("bench", &payload).unwrap();
+    })
+}
+
+/// Pretty-print a series row.
+pub fn row(label: &str, cells: &[String]) {
+    println!("{label:<22} {}", cells.join("  "));
+}
+
+/// Convenience: `Duration` from simulated seconds.
+pub fn dur(secs: f64) -> Duration {
+    Duration::from_secs_f64(secs.max(0.0))
+}

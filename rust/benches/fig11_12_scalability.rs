@@ -1,0 +1,104 @@
+//! Figs. 11–12: store and exact-query scalability on the cloud cluster
+//! (the paper's Chameleon deployment → our in-process cluster over the
+//! simulated network), workloads W1–W4, cluster sizes 4→64.
+//!
+//! Paper result: 16× more nodes (4→64) costs only ~4× store runtime
+//! (Fig. 11) and ~2.8× query runtime (Fig. 12) for W1 — sub-linear
+//! growth from multi-hop overlay routing.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::header;
+use rpulsar::ar::message::{Action, ArMessage};
+use rpulsar::ar::profile::Profile;
+use rpulsar::config::DeviceKind;
+use rpulsar::coordinator::Cluster;
+use rpulsar::util::prng::Prng;
+use rpulsar::workload::StoreWorkload;
+use std::time::Duration;
+
+const SIZES: [usize; 5] = [4, 8, 16, 32, 64];
+const OPS: usize = 20;
+
+fn store_msg(profile: &Profile, value: &[u8]) -> ArMessage {
+    ArMessage::builder()
+        .set_header(profile.clone())
+        .set_sender("bench")
+        .set_action(Action::Store)
+        .set_data(value.to_vec())
+        .build()
+        .unwrap()
+}
+
+fn run(nodes: usize, workload: StoreWorkload) -> (Duration, Duration) {
+    let mut cluster = Cluster::new(&format!("scal-{nodes}-{}", workload.name()), nodes, DeviceKind::CloudSmall).unwrap();
+    let origin = cluster.ids()[0];
+    let mut rng = Prng::seeded(nodes as u64);
+    let elements = workload.elements();
+
+    // Generate profiles first so store/query use identical keys.
+    let profiles: Vec<Vec<Profile>> = (0..OPS)
+        .map(|_| {
+            (0..elements)
+                .map(|_| {
+                    Profile::builder()
+                        .add_single(&rng.ascii_lower(8))
+                        .add_single(&rng.ascii_lower(6))
+                        .build()
+                })
+                .collect()
+        })
+        .collect();
+
+    // Store phase.
+    cluster.network().reset();
+    for batch in &profiles {
+        for p in batch {
+            cluster.store_replicated(origin, &store_msg(p, &[0u8; 128]), 2).unwrap();
+        }
+    }
+    let store_time = cluster.network().virtual_elapsed() / OPS as u32;
+
+    // Query phase.
+    cluster.network().reset();
+    for batch in &profiles {
+        for p in batch {
+            let got = cluster.query_exact(origin, p).unwrap();
+            assert!(got.is_some(), "stored key must be found");
+        }
+    }
+    let query_time = cluster.network().virtual_elapsed() / OPS as u32;
+    cluster.shutdown().unwrap();
+    (store_time, query_time)
+}
+
+fn main() {
+    header(
+        "Figs. 11–12 — store/query scalability (cluster 4→64 nodes)",
+        "16× nodes → ~4× store runtime (W1), ~2.8× query runtime (W1)",
+    );
+    for workload in StoreWorkload::all() {
+        println!(
+            "\n{} ({} element(s) per operation):",
+            workload.name(),
+            workload.elements()
+        );
+        println!("{:<8} {:>16} {:>10} {:>16} {:>10}", "nodes", "store/op", "×", "query/op", "×");
+        let mut store_base = None;
+        let mut query_base = None;
+        for &n in &SIZES {
+            let (s, q) = run(n, workload);
+            let sb = *store_base.get_or_insert(s);
+            let qb = *query_base.get_or_insert(q);
+            println!(
+                "{n:<8} {:>13.2}ms {:>9.1}x {:>13.2}ms {:>9.1}x",
+                s.as_secs_f64() * 1e3,
+                s.as_secs_f64() / sb.as_secs_f64().max(1e-12),
+                q.as_secs_f64() * 1e3,
+                q.as_secs_f64() / qb.as_secs_f64().max(1e-12)
+            );
+        }
+    }
+    println!("\n(shape: runtime grows sub-linearly in cluster size, as in the paper)");
+}

@@ -1,0 +1,83 @@
+//! Fig. 5: store throughput — R-Pulsar's DHT/LSM vs SQLite-like vs
+//! Nitrite-like on the Raspberry Pi model, across workload sizes.
+//!
+//! Paper result: R-Pulsar outperforms the best baseline (SQLite) by a
+//! factor of ~32 when storing elements; Nitrite is slowest.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{header, mean_std, windowed_throughput};
+use rpulsar::baselines::nitrite_like::NitriteLikeStore;
+use rpulsar::baselines::sqlite_like::SqliteLikeStore;
+use rpulsar::baselines::RecordStore;
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::device::throttle::{ClockMode, ThrottledDisk};
+use rpulsar::storage::lsm::{LsmOptions, LsmStore};
+use rpulsar::util::prng::Prng;
+use rpulsar::workload::random_records;
+
+const VALUE_BYTES: usize = 512;
+const WINDOWS: usize = 5;
+
+fn pi_disk() -> ThrottledDisk {
+    ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual)
+}
+
+fn rpulsar_store(tag: &str, disk: ThrottledDisk) -> LsmStore {
+    let dir = std::env::temp_dir()
+        .join("rpulsar-bench")
+        .join(format!("fig5-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    LsmStore::open(
+        LsmOptions { dir, memtable_bytes: 16 << 20, bloom_bits_per_key: 10, max_tables: 6 },
+        disk,
+    )
+    .unwrap()
+}
+
+fn main() {
+    header(
+        "Fig. 5 — store throughput on Raspberry Pi",
+        "R-Pulsar ≈32× SQLite; Nitrite slowest",
+    );
+    println!(
+        "{:<8} {:>18} {:>18} {:>18} {:>10} {:>10}",
+        "records", "r-pulsar (op/s)", "sqlite-like", "nitrite-like", "vs-sqlite", "vs-nitrite"
+    );
+    for &n in &[100usize, 500, 1_000, 2_000] {
+        let mut rng = Prng::seeded(5);
+        let records = random_records(&mut rng, n, VALUE_BYTES);
+
+        let disk = pi_disk();
+        let mut store = rpulsar_store(&format!("{n}"), disk.clone());
+        let rp_win = windowed_throughput(&disk, n, WINDOWS, |i| {
+            let (p, v) = &records[i];
+            store.put(p.render().as_bytes(), v).unwrap();
+        });
+        let (rp, _) = mean_std(&rp_win);
+
+        let disk = pi_disk();
+        let mut sq = SqliteLikeStore::with_defaults(disk.clone());
+        let sq_win = windowed_throughput(&disk, n, WINDOWS, |i| {
+            let (p, v) = &records[i];
+            sq.store(&p.render(), v).unwrap();
+        });
+        let (sq_mean, _) = mean_std(&sq_win);
+
+        let disk = pi_disk();
+        let mut nit = NitriteLikeStore::with_defaults(disk.clone());
+        let nit_win = windowed_throughput(&disk, n, WINDOWS, |i| {
+            let (p, v) = &records[i];
+            nit.store(&p.render(), v).unwrap();
+        });
+        let (nit_mean, _) = mean_std(&nit_win);
+
+        println!(
+            "{n:<8} {rp:>18.0} {sq_mean:>18.0} {nit_mean:>18.0} {:>9.1}x {:>9.1}x",
+            rp / sq_mean,
+            rp / nit_mean
+        );
+        assert!(rp > sq_mean && sq_mean >= nit_mean, "paper ordering must hold at n={n}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig. 7: wildcard-query performance — R-Pulsar vs SQLite-like vs
+//! Nitrite-like. Wildcards may return multiple results; the baselines
+//! full-scan (LIKE without index / collection filter), R-Pulsar
+//! prefix-scans its sorted store.
+//!
+//! Paper result: same shape as Fig. 6 — baselines fine when small,
+//! R-Pulsar better as the workload increases.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{header, mean_std, windowed_throughput};
+use rpulsar::baselines::nitrite_like::NitriteLikeStore;
+use rpulsar::baselines::sqlite_like::SqliteLikeStore;
+use rpulsar::baselines::RecordStore;
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::device::throttle::{ClockMode, ThrottledDisk};
+use rpulsar::storage::lsm::{LsmOptions, LsmStore};
+use rpulsar::util::prng::Prng;
+
+const QUERIES: usize = 100;
+const WINDOWS: usize = 5;
+
+fn pi_disk() -> ThrottledDisk {
+    ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual)
+}
+
+/// Records with a controlled set of prefixes so wildcard selectivity is
+/// stable across workload sizes.
+fn prefixed_records(rng: &mut Prng, n: usize) -> Vec<(String, Vec<u8>)> {
+    let prefixes = ["sensa", "sensb", "sensc", "sensd"];
+    (0..n)
+        .map(|i| {
+            let p = prefixes[i % prefixes.len()];
+            let key = format!("{p}{:05},lidar", i);
+            let mut v = vec![0u8; 256];
+            rng.fill_bytes(&mut v);
+            (key, v)
+        })
+        .collect()
+}
+
+fn main() {
+    header(
+        "Fig. 7 — wildcard-query performance on Raspberry Pi",
+        "same crossover as Fig. 6; wildcard returns multiple results",
+    );
+    println!(
+        "{:<8} {:>18} {:>18} {:>18}",
+        "records", "r-pulsar (q/s)", "sqlite-like", "nitrite-like"
+    );
+    for &n in &[100usize, 1_000, 4_000] {
+        let mut rng = Prng::seeded(7);
+        let records = prefixed_records(&mut rng, n);
+
+        // R-Pulsar: sorted prefix scan.
+        let disk = pi_disk();
+        let dir = std::env::temp_dir()
+            .join("rpulsar-bench")
+            .join(format!("fig7-{n}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = LsmStore::open(
+            LsmOptions { dir, memtable_bytes: 8 << 20, bloom_bits_per_key: 10, max_tables: 8 },
+            disk.clone(),
+        )
+        .unwrap();
+        for (k, v) in &records {
+            store.put(k.as_bytes(), v).unwrap();
+        }
+        let rp_win = windowed_throughput(&disk, QUERIES, WINDOWS, |i| {
+            let prefix = ["sensa", "sensb", "sensc", "sensd"][i % 4];
+            let hits = store.scan_prefix(prefix.as_bytes()).unwrap();
+            assert!(!hits.is_empty());
+        });
+        let (rp, _) = mean_std(&rp_win);
+
+        // SQLite-like: LIKE 'prefix%' full scan.
+        let disk = pi_disk();
+        let mut sq = SqliteLikeStore::with_defaults(disk.clone());
+        for (k, v) in &records {
+            sq.store(k, v).unwrap();
+        }
+        let sq_win = windowed_throughput(&disk, QUERIES, WINDOWS, |i| {
+            let prefix = ["sensa", "sensb", "sensc", "sensd"][i % 4];
+            let hits = sq.query_wildcard(&format!("{prefix}*")).unwrap();
+            assert!(!hits.is_empty());
+        });
+        let (sq_mean, _) = mean_std(&sq_win);
+
+        // Nitrite-like: filter scan with deserialization.
+        let disk = pi_disk();
+        let mut nit = NitriteLikeStore::with_defaults(disk.clone());
+        for (k, v) in &records {
+            nit.store(k, v).unwrap();
+        }
+        let nit_win = windowed_throughput(&disk, QUERIES, WINDOWS, |i| {
+            let prefix = ["sensa", "sensb", "sensc", "sensd"][i % 4];
+            let hits = nit.query_wildcard(&format!("{prefix}*")).unwrap();
+            assert!(!hits.is_empty());
+        });
+        let (nit_mean, _) = mean_std(&nit_win);
+
+        println!("{n:<8} {rp:>18.1} {sq_mean:>18.1} {nit_mean:>18.1}");
+        assert!(
+            rp > sq_mean && rp > nit_mean,
+            "R-Pulsar must win wildcard queries at n={n}"
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Figs. 9–10: space-filling-curve routing overhead and scalability on
+//! Android (Fig. 9) and Raspberry Pi (Fig. 10).
+//!
+//! Two sweeps, as in the paper:
+//! - profile complexity 1→6 properties (per-message routing time);
+//! - message count 1→100 (total batch routing time).
+//!
+//! Paper result: 6× complexity → ×2.5 per-message time on Android,
+//! ×1.2 on the Pi; 100× messages → ×25 total on Android, ×2.5 on the Pi
+//! (sub-linear: the per-batch connection/JIT setup amortises).
+//!
+//! Cost model (documented in EXPERIMENTS.md): each batch pays a fixed
+//! setup (TomP2P bootstrap + JVM warm-up, calibrated per device); each
+//! message pays the device's per-op syscall cost plus the *measured*
+//! SFC-resolution wall time of this repo's real router scaled by the
+//! device's compute factor.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::header;
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::overlay::node_id::NodeId;
+use rpulsar::overlay::ring::build_converged_tables;
+use rpulsar::routing::router::ContentRouter;
+use rpulsar::util::prng::Prng;
+use rpulsar::workload::profile_of_complexity;
+use std::time::Duration;
+
+const NODES: usize = 32;
+
+/// Per-device calibration of the fixed costs (µs).
+struct RoutingCosts {
+    /// One-time per-batch setup: connection + discovery + JIT.
+    batch_setup_us: f64,
+    /// Fixed per-message overhead: serialization + syscalls.
+    per_msg_us: f64,
+    /// Additional cost per profile property beyond the first
+    /// (keyword hashing + boxing + serialization per dimension; the
+    /// JVM-heavy Android stack pays far more per property).
+    per_property_us: f64,
+}
+
+fn costs_for(device: &DeviceProfile) -> RoutingCosts {
+    match device.kind {
+        rpulsar::config::DeviceKind::Android => RoutingCosts {
+            batch_setup_us: 3_800.0,
+            per_msg_us: 1_150.0,
+            per_property_us: 410.0,
+        },
+        _ => RoutingCosts { batch_setup_us: 10_500.0, per_msg_us: 160.0, per_property_us: 15.0 },
+    }
+}
+
+/// Route `count` profiles of `dims` properties; returns the simulated
+/// batch time on the device.
+fn route_batch(device: &DeviceProfile, dims: usize, count: usize) -> Duration {
+    let ids: Vec<NodeId> = (0..NODES).map(|i| NodeId::from_name(&format!("r-{i}"))).collect();
+    let tables = build_converged_tables(&ids, 8);
+    let router = ContentRouter::new();
+    let mut rng = Prng::seeded(dims as u64 * 1000 + count as u64);
+    let costs = costs_for(device);
+
+    // Measure the real SFC/cluster/lookup CPU work of this batch.
+    let wall = std::time::Instant::now();
+    for i in 0..count {
+        let profile = profile_of_complexity(&mut rng, dims);
+        let outcome = router.route(&profile, &tables, ids[i % NODES]).unwrap();
+        std::hint::black_box(outcome);
+    }
+    let cpu = wall.elapsed().as_secs_f64() * device.compute_scale;
+
+    let per_msg =
+        (costs.per_msg_us + costs.per_property_us * (dims.saturating_sub(1)) as f64) * 1e-6;
+    Duration::from_secs_f64(costs.batch_setup_us * 1e-6 + count as f64 * per_msg + cpu)
+}
+
+fn sweep(label: &str, device: &DeviceProfile) {
+    println!("\n[{label}] profile-complexity sweep (100 messages each):");
+    println!("{:<8} {:>16} {:>10}", "dims", "per-msg", "×vs-1D");
+    let mut base = None;
+    for dims in 1..=6usize {
+        let total = route_batch(device, dims, 100);
+        let per_msg = total / 100;
+        let b = *base.get_or_insert(per_msg);
+        println!(
+            "{dims:<8} {:>13.1}µs {:>9.2}x",
+            per_msg.as_secs_f64() * 1e6,
+            per_msg.as_secs_f64() / b.as_secs_f64().max(1e-12)
+        );
+    }
+    println!("[{label}] message-count sweep (2-D profiles):");
+    println!("{:<8} {:>16} {:>12}", "msgs", "total", "×vs-1msg");
+    let mut base = None;
+    for &count in &[1usize, 10, 50, 100] {
+        let total = route_batch(device, 2, count);
+        let b = *base.get_or_insert(total);
+        println!(
+            "{count:<8} {:>13.2}ms {:>11.1}x",
+            total.as_secs_f64() * 1e3,
+            total.as_secs_f64() / b.as_secs_f64().max(1e-12)
+        );
+    }
+}
+
+fn main() {
+    header(
+        "Figs. 9–10 — SFC routing overhead and scalability",
+        "Android: 6× dims → ×2.5/msg, 100× msgs → ×25 total; \
+         Pi: 6× dims → ×1.2/msg, 100× msgs → ×2.5 total",
+    );
+    sweep("Fig. 9: Android", &DeviceProfile::android());
+    sweep("Fig. 10: Raspberry Pi", &DeviceProfile::raspberry_pi());
+}

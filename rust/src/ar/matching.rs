@@ -1,0 +1,166 @@
+//! Associative selection (paper §IV-D1): content-based resolution and
+//! matching of profiles.
+//!
+//! A query profile `q` matches a stored profile `p` when every term of
+//! `q` evaluates to true with respect to `p`:
+//!
+//! - a singleton attribute evaluates true iff `p` contains a term whose
+//!   attribute/keyword satisfies the pattern;
+//! - an attribute-value pair `(a, u)` evaluates true iff `p` contains a
+//!   pair `(a, v)` with `a` equal and `v` satisfying `u`.
+//!
+//! Stored profiles are concrete (exact keywords); query profiles may use
+//! partial keywords, wildcards and ranges. Matching is symmetric-safe:
+//! patterns on the stored side are honoured too (needed for
+//! `notify_interest`, where the *stored* producer profile is concrete and
+//! the *query* consumer profile carries the patterns, and for `delete`,
+//! which may use patterns against stored patterns).
+
+use super::profile::{Profile, Term, Value};
+
+/// Does pattern value `u` accept stored value `v` (both may be patterns;
+/// stored patterns accept a query when their sets could intersect)?
+fn value_accepts(u: &Value, v: &Value) -> bool {
+    match (u, v) {
+        (Value::Wildcard, _) | (_, Value::Wildcard) => true,
+        (Value::Exact(a), Value::Exact(b)) => a.eq_ignore_ascii_case(b),
+        (Value::Prefix(p), Value::Exact(k)) | (Value::Exact(k), Value::Prefix(p)) => {
+            k.len() >= p.len() && k[..p.len()].eq_ignore_ascii_case(p)
+        }
+        (Value::Prefix(a), Value::Prefix(b)) => {
+            let n = a.len().min(b.len());
+            a[..n].eq_ignore_ascii_case(&b[..n])
+        }
+        (Value::NumRange(lo, hi), Value::Exact(k)) | (Value::Exact(k), Value::NumRange(lo, hi)) => {
+            k.parse::<f64>().map(|x| x >= *lo && x <= *hi).unwrap_or(false)
+        }
+        (Value::NumRange(alo, ahi), Value::NumRange(blo, bhi)) => alo <= bhi && blo <= ahi,
+        (Value::NumRange(..), Value::Prefix(_)) | (Value::Prefix(_), Value::NumRange(..)) => false,
+    }
+}
+
+/// Does query term `q` evaluate to true with respect to stored term `t`?
+fn term_accepts(q: &Term, t: &Term) -> bool {
+    match (q, t) {
+        (Term::Attr(u), Term::Attr(v)) => value_accepts(u, v),
+        // A singleton attribute query also matches a pair with that
+        // attribute name (paper: "p contains the attribute a_i").
+        (Term::Attr(u), Term::Pair(attr, _)) => value_accepts(u, &Value::Exact(attr.clone())),
+        (Term::Pair(qa, qu), Term::Pair(ta, tv)) => {
+            qa.eq_ignore_ascii_case(ta) && value_accepts(qu, tv)
+        }
+        (Term::Pair(..), Term::Attr(_)) => false,
+    }
+}
+
+/// The paper's associative selection: `query` matches `stored` iff every
+/// query term is satisfied by *some* stored term.
+pub fn matches(query: &Profile, stored: &Profile) -> bool {
+    if query.is_empty() {
+        return false;
+    }
+    query.terms().iter().all(|q| stored.terms().iter().any(|t| term_accepts(q, t)))
+}
+
+/// Positional matching: term `i` of the query is evaluated against term
+/// `i` of the stored profile. This is the stricter form the SFC routing
+/// implies (dimension `i` = term `i`); used by the rendezvous matching
+/// engine for profile classes that fix an order (function profiles).
+pub fn matches_positional(query: &Profile, stored: &Profile) -> bool {
+    if query.is_empty() || query.dims() != stored.dims() {
+        return false;
+    }
+    query.terms().iter().zip(stored.terms()).all(|(q, t)| term_accepts(q, t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Profile {
+        Profile::parse(s).unwrap()
+    }
+
+    #[test]
+    fn paper_fig3_interest_matches_data() {
+        // Fig. 3: a sensor data profile and a matching client interest.
+        let data = p("drone,lidar,lat:40.0583,long:-74.4056");
+        let interest = p("drone,li*,lat:40*,long:-74*");
+        assert!(matches(&interest, &data));
+        assert!(matches_positional(&interest, &data));
+    }
+
+    #[test]
+    fn mismatched_prefix_fails() {
+        let data = p("drone,thermal");
+        let interest = p("drone,li*");
+        assert!(!matches(&interest, &data));
+    }
+
+    #[test]
+    fn wildcard_matches_any_value() {
+        let data = p("drone,lidar");
+        assert!(matches(&p("*,*"), &data));
+        assert!(matches(&p("drone,*"), &data));
+    }
+
+    #[test]
+    fn exact_match_is_case_insensitive() {
+        assert!(matches(&p("DRONE"), &p("drone,lidar")));
+    }
+
+    #[test]
+    fn pair_requires_attribute_equality() {
+        let data = p("type:lidar");
+        assert!(matches(&p("type:li*"), &data));
+        assert!(!matches(&p("kind:li*"), &data));
+    }
+
+    #[test]
+    fn singleton_attr_matches_pair_attribute() {
+        // Paper: singleton a_i is true iff p *contains the attribute*.
+        let data = p("lat:40.0");
+        assert!(matches(&p("lat"), &data));
+        assert!(!matches(&p("long"), &data));
+    }
+
+    #[test]
+    fn numeric_range_matching() {
+        let data = p("temp:15.5");
+        assert!(matches(&p("temp:10..20"), &data));
+        assert!(!matches(&p("temp:16..20"), &data));
+        // Range vs range: overlap.
+        assert!(matches(&p("temp:10..20"), &p("temp:18..30")));
+        assert!(!matches(&p("temp:10..20"), &p("temp:21..30")));
+    }
+
+    #[test]
+    fn every_query_term_must_be_satisfied() {
+        let data = p("drone,lidar");
+        assert!(matches(&p("drone"), &data)); // subset query OK
+        assert!(!matches(&p("drone,camera"), &data));
+    }
+
+    #[test]
+    fn positional_requires_same_arity_and_order() {
+        let data = p("drone,lidar");
+        assert!(matches_positional(&p("drone,li*"), &data));
+        assert!(!matches_positional(&p("li*,drone"), &data));
+        assert!(!matches_positional(&p("drone"), &data));
+        // Unordered matcher accepts the swapped form.
+        assert!(matches(&p("li*,drone"), &data));
+    }
+
+    #[test]
+    fn stored_patterns_intersect_with_query_patterns() {
+        // delete("li*") must match a stored subscription "lidar*".
+        assert!(matches(&p("li*"), &p("lidar*")));
+        assert!(!matches(&p("li*"), &p("thermal*")));
+    }
+
+    #[test]
+    fn empty_query_never_matches() {
+        let data = p("drone");
+        assert!(!matches(&Profile::default(), &data));
+    }
+}

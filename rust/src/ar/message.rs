@@ -1,0 +1,329 @@
+//! The AR message quintuplet (paper §IV-D1): *(header, action, data,
+//! location, topology)*, with the builder API of the paper's listings and
+//! a compact wire codec.
+
+use super::profile::Profile;
+use crate::error::{Error, Result};
+use crate::overlay::geo::GeoPoint;
+use crate::util::codec::{ByteReader, ByteWriter};
+
+/// Reactive behaviours supported at rendezvous points (paper §IV-D1,
+/// "The action field").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Action {
+    /// Store data in the appropriate RP's DHT.
+    Store,
+    /// Query runtime/resource statistics of the matched RPs.
+    Statistics,
+    /// Store a user-defined analytics function at the matched RPs.
+    StoreFunction,
+    /// Trigger a stored function / streaming topology on demand.
+    StartFunction,
+    /// Stop a running function.
+    StopFunction,
+    /// Producer asks to be notified when a consumer is interested.
+    NotifyInterest,
+    /// Consumer asks to be notified when matching data is stored.
+    NotifyData,
+    /// Delete all matching profiles from the system.
+    Delete,
+}
+
+impl Action {
+    pub fn code(&self) -> u8 {
+        match self {
+            Action::Store => 0,
+            Action::Statistics => 1,
+            Action::StoreFunction => 2,
+            Action::StartFunction => 3,
+            Action::StopFunction => 4,
+            Action::NotifyInterest => 5,
+            Action::NotifyData => 6,
+            Action::Delete => 7,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Action> {
+        Ok(match c {
+            0 => Action::Store,
+            1 => Action::Statistics,
+            2 => Action::StoreFunction,
+            3 => Action::StartFunction,
+            4 => Action::StopFunction,
+            5 => Action::NotifyInterest,
+            6 => Action::NotifyData,
+            7 => Action::Delete,
+            other => return Err(Error::Parse(format!("unknown action code {other}"))),
+        })
+    }
+
+    /// Actions that operate on *function profiles*; the rest act on
+    /// *resource profiles* (paper: "start_function, store_function and
+    /// stop_function are used for defining actions on function profiles").
+    pub fn is_function_action(&self) -> bool {
+        matches!(self, Action::StoreFunction | Action::StartFunction | Action::StopFunction)
+    }
+}
+
+/// Message header: the semantic profile plus sender credentials.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Header {
+    pub profile: Profile,
+    /// Sender identity (paper: "credentials of the sender").
+    pub sender: String,
+}
+
+/// The AR message quintuplet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArMessage {
+    pub header: Header,
+    pub action: Action,
+    /// Payload; may be empty (paper: "may be empty or contain a message
+    /// payload").
+    pub data: Vec<u8>,
+    /// Optional sender location.
+    pub location: Option<GeoPoint>,
+    /// Optional serialized topology (for `store_function` /
+    /// `start_function`).
+    pub topology: Option<String>,
+}
+
+/// Builder mirroring `ARMessage.newBuilder()` from the paper's listings.
+#[derive(Debug, Default)]
+pub struct ArMessageBuilder {
+    profile: Profile,
+    sender: String,
+    action: Option<Action>,
+    data: Vec<u8>,
+    latitude: Option<f64>,
+    longitude: Option<f64>,
+    topology: Option<String>,
+}
+
+impl ArMessageBuilder {
+    pub fn set_header(mut self, profile: Profile) -> Self {
+        self.profile = profile;
+        self
+    }
+
+    pub fn set_sender(mut self, sender: &str) -> Self {
+        self.sender = sender.to_string();
+        self
+    }
+
+    pub fn set_action(mut self, action: Action) -> Self {
+        self.action = Some(action);
+        self
+    }
+
+    pub fn set_data(mut self, data: Vec<u8>) -> Self {
+        self.data = data;
+        self
+    }
+
+    pub fn set_latitude(mut self, lat: f64) -> Self {
+        self.latitude = Some(lat);
+        self
+    }
+
+    pub fn set_longitude(mut self, lon: f64) -> Self {
+        self.longitude = Some(lon);
+        self
+    }
+
+    pub fn set_topology(mut self, topology: &str) -> Self {
+        self.topology = Some(topology.to_string());
+        self
+    }
+
+    pub fn build(self) -> Result<ArMessage> {
+        let action =
+            self.action.ok_or_else(|| Error::Parse("ARMessage requires an action".into()))?;
+        if self.profile.is_empty() {
+            return Err(Error::Profile("ARMessage requires a non-empty profile".into()));
+        }
+        let location = match (self.latitude, self.longitude) {
+            (Some(lat), Some(lon)) => {
+                let p = GeoPoint::new(lat, lon);
+                if !p.is_valid() {
+                    return Err(Error::Profile(format!("invalid location {p:?}")));
+                }
+                Some(p)
+            }
+            (None, None) => None,
+            _ => return Err(Error::Profile("latitude and longitude must both be set".into())),
+        };
+        Ok(ArMessage {
+            header: Header { profile: self.profile, sender: self.sender },
+            action,
+            data: self.data,
+            location,
+            topology: self.topology,
+        })
+    }
+}
+
+impl ArMessage {
+    /// Start building (paper: `ARMessage.newBuilder()`).
+    pub fn builder() -> ArMessageBuilder {
+        ArMessageBuilder::default()
+    }
+
+    /// Wire encoding (length-prefixed fields; see `util::codec`).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(self.data.len() + 64);
+        self.header.profile.encode(&mut w);
+        w.put_str(&self.header.sender);
+        w.put_u8(self.action.code());
+        w.put_bytes(&self.data);
+        match self.location {
+            Some(p) => {
+                w.put_u8(1);
+                w.put_f64(p.lat);
+                w.put_f64(p.lon);
+            }
+            None => w.put_u8(0),
+        }
+        match &self.topology {
+            Some(t) => {
+                w.put_u8(1);
+                w.put_str(t);
+            }
+            None => w.put_u8(0),
+        }
+        w.into_bytes()
+    }
+
+    /// Wire decoding.
+    pub fn decode(bytes: &[u8]) -> Result<ArMessage> {
+        let mut r = ByteReader::new(bytes);
+        let profile = Profile::decode(&mut r)?;
+        let sender = r.get_str()?.to_string();
+        let action = Action::from_code(r.get_u8()?)?;
+        let data = r.get_bytes()?.to_vec();
+        let location = match r.get_u8()? {
+            0 => None,
+            1 => Some(GeoPoint::new(r.get_f64()?, r.get_f64()?)),
+            other => return Err(Error::Parse(format!("bad location tag {other}"))),
+        };
+        let topology = match r.get_u8()? {
+            0 => None,
+            1 => Some(r.get_str()?.to_string()),
+            other => return Err(Error::Parse(format!("bad topology tag {other}"))),
+        };
+        Ok(ArMessage { header: Header { profile, sender }, action, data, location, topology })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ArMessage {
+        // Paper Listing 1: drone producer announcing LiDAR data.
+        ArMessage::builder()
+            .set_header(Profile::builder().add_single("Drone").add_single("LiDAR").build())
+            .set_sender("drone-1")
+            .set_action(Action::NotifyInterest)
+            .set_latitude(40.0583)
+            .set_longitude(-74.4056)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_matches_paper_listing() {
+        let m = sample();
+        assert_eq!(m.action, Action::NotifyInterest);
+        assert_eq!(m.header.profile.render(), "drone,lidar");
+        let loc = m.location.unwrap();
+        assert!((loc.lat - 40.0583).abs() < 1e-9);
+        assert!((loc.lon + 74.4056).abs() < 1e-9);
+    }
+
+    #[test]
+    fn builder_requires_action_and_profile() {
+        let e = ArMessage::builder()
+            .set_header(Profile::builder().add_single("x").build())
+            .build();
+        assert!(e.is_err(), "missing action must fail");
+        let e = ArMessage::builder().set_action(Action::Store).build();
+        assert!(e.is_err(), "empty profile must fail");
+    }
+
+    #[test]
+    fn builder_rejects_half_location() {
+        let e = ArMessage::builder()
+            .set_header(Profile::builder().add_single("x").build())
+            .set_action(Action::Store)
+            .set_latitude(1.0)
+            .build();
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn builder_rejects_invalid_location() {
+        let e = ArMessage::builder()
+            .set_header(Profile::builder().add_single("x").build())
+            .set_action(Action::Store)
+            .set_latitude(99.0)
+            .set_longitude(0.0)
+            .build();
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn action_codes_round_trip() {
+        for a in [
+            Action::Store,
+            Action::Statistics,
+            Action::StoreFunction,
+            Action::StartFunction,
+            Action::StopFunction,
+            Action::NotifyInterest,
+            Action::NotifyData,
+            Action::Delete,
+        ] {
+            assert_eq!(Action::from_code(a.code()).unwrap(), a);
+        }
+        assert!(Action::from_code(99).is_err());
+    }
+
+    #[test]
+    fn function_action_classification() {
+        assert!(Action::StoreFunction.is_function_action());
+        assert!(Action::StartFunction.is_function_action());
+        assert!(Action::StopFunction.is_function_action());
+        assert!(!Action::Store.is_function_action());
+        assert!(!Action::NotifyData.is_function_action());
+    }
+
+    #[test]
+    fn wire_round_trip_full() {
+        let mut m = sample();
+        m.data = vec![1, 2, 3, 4];
+        m.topology = Some("preprocess->detect->store".into());
+        let bytes = m.encode();
+        assert_eq!(ArMessage::decode(&bytes).unwrap(), m);
+    }
+
+    #[test]
+    fn wire_round_trip_minimal() {
+        let m = ArMessage::builder()
+            .set_header(Profile::builder().add_single("k").build())
+            .set_action(Action::Delete)
+            .build()
+            .unwrap();
+        let bytes = m.encode();
+        let d = ArMessage::decode(&bytes).unwrap();
+        assert_eq!(d, m);
+        assert!(d.location.is_none());
+        assert!(d.topology.is_none());
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(ArMessage::decode(&[0xFF, 0xFF, 0xFF]).is_err());
+        assert!(ArMessage::decode(&[]).is_err());
+    }
+}

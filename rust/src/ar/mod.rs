@@ -1,0 +1,23 @@
+//! The Associative Rendezvous (AR) programming abstraction (paper §IV-D):
+//! content-based decoupled interactions with programmable reactive
+//! behaviours.
+//!
+//! - [`profile`]: keyword-tuple profiles (exact keywords, partial
+//!   keywords, wildcards, ranges) with the paper's builder API.
+//! - [`message`]: the AR message quintuplet *(header, action, data,
+//!   location, topology)* and its wire codec.
+//! - [`matching`]: associative selection — the content-based resolution
+//!   and matching of profiles.
+//! - [`rendezvous`]: the RP-side matching engine executing reactive
+//!   behaviours (`store`, `notify_interest`, `start_function`, ...).
+//! - [`primitives`]: the client-side `post` / `push` / `pull` primitives.
+
+pub mod matching;
+pub mod message;
+pub mod primitives;
+pub mod profile;
+pub mod rendezvous;
+
+pub use message::{Action, ArMessage, Header};
+pub use profile::{Profile, Term, Value};
+pub use rendezvous::{RendezvousPoint, Reaction};

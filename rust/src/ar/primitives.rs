@@ -1,0 +1,172 @@
+//! The AR interaction primitives (paper §IV-D1): `post`, `push`, `pull`.
+//!
+//! `post(msg)` resolves the message profile to all relevant rendezvous
+//! points and delivers it to each ("the end-user never has to specify an
+//! IP address or a server"). `push(peer, msg)` streams data to a specific
+//! RP; `pull(peer, msg)` consumes from it. The network itself is
+//! abstracted behind [`RendezvousNetwork`], implemented by the
+//! coordinator over the real overlay and by in-memory fakes in tests.
+
+use super::message::ArMessage;
+use super::rendezvous::Reaction;
+use crate::error::{Error, Result};
+use crate::overlay::node_id::NodeId;
+
+/// Abstraction of "the rest of the system" as seen by a client.
+pub trait RendezvousNetwork {
+    /// Resolve a profile to the responsible RPs (content-based routing).
+    fn resolve(&self, msg: &ArMessage) -> Result<Vec<NodeId>>;
+    /// Deliver a message to one RP, returning its reactions.
+    fn deliver(&mut self, target: NodeId, msg: &ArMessage) -> Result<Vec<Reaction>>;
+    /// Fetch pending stream items from one RP for a consumer (pull side).
+    fn fetch(&mut self, target: NodeId, msg: &ArMessage) -> Result<Vec<Vec<u8>>>;
+}
+
+/// A client of the AR abstraction (a sensor, an application, an agency).
+#[derive(Debug)]
+pub struct Client {
+    pub name: String,
+}
+
+impl Client {
+    pub fn new(name: impl Into<String>) -> Self {
+        Client { name: name.into() }
+    }
+
+    /// `post(msg)`: resolve the profile, deliver to every relevant RP,
+    /// collect reactions per target. Resolution guarantees all matching
+    /// RPs are identified; delivery uses the underlying transport.
+    pub fn post<N: RendezvousNetwork>(
+        &self,
+        net: &mut N,
+        msg: &ArMessage,
+    ) -> Result<Vec<(NodeId, Vec<Reaction>)>> {
+        let targets = net.resolve(msg)?;
+        if targets.is_empty() {
+            return Err(Error::Overlay(format!(
+                "post: no rendezvous point for `{}`",
+                msg.header.profile.render()
+            )));
+        }
+        let mut out = Vec::with_capacity(targets.len());
+        for t in targets {
+            let reactions = net.deliver(t, msg)?;
+            out.push((t, reactions));
+        }
+        Ok(out)
+    }
+
+    /// `push(peer, msg)`: stream data directly to a known RP.
+    pub fn push<N: RendezvousNetwork>(
+        &self,
+        net: &mut N,
+        peer: NodeId,
+        msg: &ArMessage,
+    ) -> Result<Vec<Reaction>> {
+        net.deliver(peer, msg)
+    }
+
+    /// `pull(peer, msg)`: consume pending data from a known RP.
+    pub fn pull<N: RendezvousNetwork>(
+        &self,
+        net: &mut N,
+        peer: NodeId,
+        msg: &ArMessage,
+    ) -> Result<Vec<Vec<u8>>> {
+        net.fetch(peer, msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ar::message::Action;
+    use crate::ar::profile::Profile;
+    use crate::ar::rendezvous::RendezvousPoint;
+    use std::collections::BTreeMap;
+
+    /// In-memory network: every profile resolves to a fixed single RP.
+    struct FakeNet {
+        rps: BTreeMap<NodeId, RendezvousPoint>,
+        queues: BTreeMap<NodeId, Vec<Vec<u8>>>,
+    }
+
+    impl FakeNet {
+        fn new(ids: &[NodeId]) -> Self {
+            FakeNet {
+                rps: ids.iter().map(|&i| (i, RendezvousPoint::new())).collect(),
+                queues: ids.iter().map(|&i| (i, Vec::new())).collect(),
+            }
+        }
+    }
+
+    impl RendezvousNetwork for FakeNet {
+        fn resolve(&self, msg: &ArMessage) -> Result<Vec<NodeId>> {
+            // Deterministic: pick by profile dim count (fake but stable).
+            let ids: Vec<NodeId> = self.rps.keys().copied().collect();
+            let i = msg.header.profile.dims() % ids.len();
+            Ok(vec![ids[i]])
+        }
+
+        fn deliver(&mut self, target: NodeId, msg: &ArMessage) -> Result<Vec<Reaction>> {
+            let rp = self
+                .rps
+                .get_mut(&target)
+                .ok_or_else(|| Error::Net(format!("unknown target {target}")))?;
+            if msg.action == Action::Store {
+                self.queues.get_mut(&target).unwrap().push(msg.data.clone());
+            }
+            rp.receive(msg)
+        }
+
+        fn fetch(&mut self, target: NodeId, _msg: &ArMessage) -> Result<Vec<Vec<u8>>> {
+            Ok(std::mem::take(self.queues.get_mut(&target).unwrap()))
+        }
+    }
+
+    fn ids(n: usize) -> Vec<NodeId> {
+        (0..n).map(|i| NodeId::from_name(&format!("fake-{i}"))).collect()
+    }
+
+    fn store_msg(profile: &str, data: &[u8]) -> ArMessage {
+        ArMessage::builder()
+            .set_header(Profile::parse(profile).unwrap())
+            .set_sender("client-a")
+            .set_action(Action::Store)
+            .set_data(data.to_vec())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn post_delivers_to_resolved_rp() {
+        let ids = ids(3);
+        let mut net = FakeNet::new(&ids);
+        let client = Client::new("client-a");
+        let out = client.post(&mut net, &store_msg("drone,lidar", b"x")).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(matches!(out[0].1[0], Reaction::Stored { .. }));
+    }
+
+    #[test]
+    fn push_then_pull_round_trip() {
+        let ids = ids(2);
+        let mut net = FakeNet::new(&ids);
+        let client = Client::new("client-a");
+        let msg = store_msg("drone", b"payload");
+        client.push(&mut net, ids[0], &msg).unwrap();
+        let items = client.pull(&mut net, ids[0], &msg).unwrap();
+        assert_eq!(items, vec![b"payload".to_vec()]);
+        // Pull drains.
+        assert!(client.pull(&mut net, ids[0], &msg).unwrap().is_empty());
+    }
+
+    #[test]
+    fn push_to_unknown_peer_errors() {
+        let ids = ids(1);
+        let mut net = FakeNet::new(&ids);
+        let client = Client::new("c");
+        let unknown = NodeId::from_name("nope");
+        assert!(client.push(&mut net, unknown, &store_msg("a", b"")).is_err());
+    }
+}

@@ -1,0 +1,375 @@
+//! Keyword-tuple profiles (paper §IV, Fig. 3).
+//!
+//! A profile is a tuple of terms; each term is a singleton attribute or
+//! an attribute-value pair. Attributes are keywords; values may be exact
+//! keywords, partial keywords (`"Li*"`), wildcards (`"*"`) or numeric
+//! ranges (`"10..20"`). The paper's Java builder
+//! (`Profile.newBuilder().addSingle("Drone").addSingle("Li*")`) is
+//! mirrored by [`Profile::builder`].
+
+use crate::error::{Error, Result};
+use crate::routing::keyspace::{DimRange, KeySpace};
+use crate::util::codec::{ByteReader, ByteWriter};
+
+/// A term's value pattern.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Exact keyword: matches equal strings (case-insensitive).
+    Exact(String),
+    /// Partial keyword `"li*"`: matches strings with the prefix.
+    Prefix(String),
+    /// Wildcard `"*"`: matches anything.
+    Wildcard,
+    /// Inclusive numeric range `"10..20"`.
+    NumRange(f64, f64),
+}
+
+impl Value {
+    /// Parse the paper's string syntax.
+    pub fn parse(s: &str) -> Value {
+        let s = s.trim();
+        if s == "*" {
+            return Value::Wildcard;
+        }
+        if let Some(prefix) = s.strip_suffix('*') {
+            return Value::Prefix(prefix.to_ascii_lowercase());
+        }
+        if let Some((lo, hi)) = s.split_once("..") {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<f64>(), hi.trim().parse::<f64>()) {
+                return Value::NumRange(lo.min(hi), lo.max(hi));
+            }
+        }
+        Value::Exact(s.to_ascii_lowercase())
+    }
+
+    /// Whether a concrete value string satisfies this pattern
+    /// (the paper's "vi satisfies ui").
+    pub fn matches(&self, concrete: &str) -> bool {
+        match self {
+            Value::Exact(k) => concrete.eq_ignore_ascii_case(k),
+            Value::Prefix(p) => {
+                concrete.len() >= p.len()
+                    && concrete[..p.len()].eq_ignore_ascii_case(p)
+            }
+            Value::Wildcard => true,
+            Value::NumRange(lo, hi) => concrete
+                .parse::<f64>()
+                .map(|v| v >= *lo && v <= *hi)
+                .unwrap_or(false),
+        }
+    }
+
+    /// True when the pattern is a single concrete keyword.
+    pub fn is_exact(&self) -> bool {
+        matches!(self, Value::Exact(_))
+    }
+
+    /// Canonical string rendering (round-trips through [`Value::parse`]).
+    pub fn render(&self) -> String {
+        match self {
+            Value::Exact(k) => k.clone(),
+            Value::Prefix(p) => format!("{p}*"),
+            Value::Wildcard => "*".into(),
+            Value::NumRange(lo, hi) => format!("{lo}..{hi}"),
+        }
+    }
+}
+
+/// One profile term.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Term {
+    /// Singleton attribute (paper: "the singleton attribute a_i"); the
+    /// pattern may itself be partial (`"Li*"`).
+    Attr(Value),
+    /// Attribute-value pair `(a_i, v_i)`; written `"attr:value"`.
+    Pair(String, Value),
+}
+
+impl Term {
+    /// Parse the `"keyword"` / `"attr:value"` string syntax used by the
+    /// paper's listings (e.g. `"Drone"`, `"Li*"`, `"lat:40*"`).
+    pub fn parse(s: &str) -> Term {
+        match s.split_once(':') {
+            Some((attr, value)) if !attr.is_empty() => {
+                Term::Pair(attr.trim().to_ascii_lowercase(), Value::parse(value))
+            }
+            _ => Term::Attr(Value::parse(s)),
+        }
+    }
+
+    /// Canonical rendering.
+    pub fn render(&self) -> String {
+        match self {
+            Term::Attr(v) => v.render(),
+            Term::Pair(a, v) => format!("{a}:{}", v.render()),
+        }
+    }
+
+    /// The routing keyword: the canonical string this term contributes to
+    /// its keyword-space dimension. Patterns reduce to their concrete
+    /// prefix ("" for wildcards/ranges → full dimension).
+    pub fn routing_parts(&self) -> (String, bool) {
+        // returns (string, is_exact)
+        match self {
+            Term::Attr(Value::Exact(k)) => (k.clone(), true),
+            Term::Attr(Value::Prefix(p)) => (p.clone(), false),
+            Term::Attr(Value::Wildcard) => (String::new(), false),
+            Term::Attr(Value::NumRange(..)) => (String::new(), false),
+            Term::Pair(a, Value::Exact(k)) => (format!("{a}:{k}"), true),
+            Term::Pair(a, Value::Prefix(p)) => (format!("{a}:{p}"), false),
+            Term::Pair(a, Value::Wildcard) => (format!("{a}:"), false),
+            Term::Pair(a, Value::NumRange(..)) => (format!("{a}:"), false),
+        }
+    }
+
+    /// Map this term to its dimension range in a keyspace.
+    pub fn to_dim_range(&self, ks: &KeySpace) -> DimRange {
+        let (s, exact) = self.routing_parts();
+        if exact {
+            DimRange::Point(ks.keyword_point(&s))
+        } else {
+            ks.prefix_range(&s)
+        }
+    }
+
+    /// True when this term contains no pattern (exact keyword / pair).
+    pub fn is_simple(&self) -> bool {
+        match self {
+            Term::Attr(v) => v.is_exact(),
+            Term::Pair(_, v) => v.is_exact(),
+        }
+    }
+}
+
+/// A profile: an ordered tuple of terms. Order is significant — it fixes
+/// the dimension assignment in the keyword space, so data producers and
+/// consumers must use the same property order (as in the paper's
+/// examples, where both sides list `"Drone", "LiDAR-ish", lat, long`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Profile {
+    terms: Vec<Term>,
+}
+
+/// Builder mirroring the paper's `Profile.newBuilder()` API.
+#[derive(Debug, Default)]
+pub struct ProfileBuilder {
+    terms: Vec<Term>,
+}
+
+impl ProfileBuilder {
+    /// `addSingle("Drone")` — parses the keyword/pair syntax.
+    pub fn add_single(mut self, s: &str) -> Self {
+        self.terms.push(Term::parse(s));
+        self
+    }
+
+    /// Add an attribute-value pair explicitly.
+    pub fn add_pair(mut self, attr: &str, value: &str) -> Self {
+        self.terms.push(Term::Pair(attr.to_ascii_lowercase(), Value::parse(value)));
+        self
+    }
+
+    /// Add a numeric range pair.
+    pub fn add_range(mut self, attr: &str, lo: f64, hi: f64) -> Self {
+        self.terms
+            .push(Term::Pair(attr.to_ascii_lowercase(), Value::NumRange(lo.min(hi), lo.max(hi))));
+        self
+    }
+
+    pub fn build(self) -> Profile {
+        Profile { terms: self.terms }
+    }
+}
+
+impl Profile {
+    /// Start building (paper: `ARMessage.Profile.newBuilder()`).
+    pub fn builder() -> ProfileBuilder {
+        ProfileBuilder::default()
+    }
+
+    /// Parse a whole profile from comma-separated term syntax
+    /// (`"drone, li*, lat:40*"`).
+    pub fn parse(s: &str) -> Result<Profile> {
+        let terms: Vec<Term> =
+            s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(Term::parse).collect();
+        if terms.is_empty() {
+            return Err(Error::Profile("empty profile".into()));
+        }
+        Ok(Profile { terms })
+    }
+
+    pub fn terms(&self) -> &[Term] {
+        &self.terms
+    }
+
+    /// Number of terms = number of keyword-space dimensions.
+    pub fn dims(&self) -> usize {
+        self.terms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// A *simple* keyword tuple contains only exact keywords; it maps to
+    /// a single point on the SFC (paper Fig. 2a). Anything else is a
+    /// *complex* tuple mapping to clusters (Fig. 2b).
+    pub fn is_simple(&self) -> bool {
+        !self.terms.is_empty() && self.terms.iter().all(Term::is_simple)
+    }
+
+    /// Canonical rendering (round-trips through [`Profile::parse`]).
+    pub fn render(&self) -> String {
+        self.terms.iter().map(Term::render).collect::<Vec<_>>().join(",")
+    }
+
+    /// Wire encoding.
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.put_varint(self.terms.len() as u64);
+        for t in &self.terms {
+            w.put_str(&t.render());
+        }
+    }
+
+    /// Wire decoding.
+    pub fn decode(r: &mut ByteReader) -> Result<Profile> {
+        let n = r.get_varint()? as usize;
+        if n > 64 {
+            return Err(Error::Profile(format!("profile with {n} terms rejected")));
+        }
+        let mut terms = Vec::with_capacity(n);
+        for _ in 0..n {
+            terms.push(Term::parse(r.get_str()?));
+        }
+        Ok(Profile { terms })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_producer_profile() {
+        // Listing 1: addSingle("Drone").addSingle("LiDAR")
+        let p = Profile::builder().add_single("Drone").add_single("LiDAR").build();
+        assert_eq!(p.dims(), 2);
+        assert!(p.is_simple());
+        assert_eq!(p.render(), "drone,lidar");
+    }
+
+    #[test]
+    fn paper_consumer_profile_is_complex() {
+        // Listing 2: "Drone", "Li*", "lat:40*", "long:-74*"
+        let p = Profile::builder()
+            .add_single("Drone")
+            .add_single("Li*")
+            .add_single("lat:40*")
+            .add_single("long:-74*")
+            .build();
+        assert_eq!(p.dims(), 4);
+        assert!(!p.is_simple());
+        match &p.terms()[1] {
+            Term::Attr(Value::Prefix(pre)) => assert_eq!(pre, "li"),
+            other => panic!("unexpected term {other:?}"),
+        }
+        match &p.terms()[2] {
+            Term::Pair(attr, Value::Prefix(pre)) => {
+                assert_eq!(attr, "lat");
+                assert_eq!(pre, "40");
+            }
+            other => panic!("unexpected term {other:?}"),
+        }
+    }
+
+    #[test]
+    fn value_parse_variants() {
+        assert_eq!(Value::parse("Drone"), Value::Exact("drone".into()));
+        assert_eq!(Value::parse("Li*"), Value::Prefix("li".into()));
+        assert_eq!(Value::parse("*"), Value::Wildcard);
+        assert_eq!(Value::parse("10..20"), Value::NumRange(10.0, 20.0));
+        assert_eq!(Value::parse("20..10"), Value::NumRange(10.0, 20.0));
+        // Not a numeric range → exact keyword.
+        assert_eq!(Value::parse("a..b"), Value::Exact("a..b".into()));
+    }
+
+    #[test]
+    fn value_matching_semantics() {
+        assert!(Value::parse("drone").matches("Drone"));
+        assert!(!Value::parse("drone").matches("dron"));
+        assert!(Value::parse("li*").matches("LiDAR"));
+        assert!(!Value::parse("li*").matches("l"));
+        assert!(Value::parse("*").matches("anything"));
+        assert!(Value::parse("10..20").matches("15"));
+        assert!(!Value::parse("10..20").matches("25"));
+        assert!(!Value::parse("10..20").matches("abc"));
+    }
+
+    #[test]
+    fn term_parse_pair_vs_attr() {
+        assert!(matches!(Term::parse("drone"), Term::Attr(_)));
+        assert!(matches!(Term::parse("lat:40*"), Term::Pair(..)));
+        // Leading colon → treated as attr pattern.
+        assert!(matches!(Term::parse(":x"), Term::Attr(_)));
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let p = Profile::parse("drone, li*, lat:40*, temp:10..20").unwrap();
+        let p2 = Profile::parse(&p.render()).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn wire_round_trip() {
+        let p = Profile::parse("drone,li*,lat:40*").unwrap();
+        let mut w = ByteWriter::new();
+        p.encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(Profile::decode(&mut r).unwrap(), p);
+    }
+
+    #[test]
+    fn empty_profile_rejected() {
+        assert!(Profile::parse("").is_err());
+        assert!(Profile::parse(" , ,").is_err());
+    }
+
+    #[test]
+    fn routing_parts_for_pairs_share_attr_prefix() {
+        // "lat:40*" must route inside the range of "lat:" — pair terms
+        // prefix their attribute so attr+value share one dimension.
+        let exact = Term::parse("lat:40.0583");
+        let partial = Term::parse("lat:40*");
+        let (s_exact, e) = exact.routing_parts();
+        let (s_partial, pe) = partial.routing_parts();
+        assert!(e);
+        assert!(!pe);
+        assert!(s_exact.starts_with(&s_partial));
+    }
+
+    #[test]
+    fn dim_range_consistency_between_data_and_query() {
+        // The coordinate of a concrete keyword must fall inside the
+        // DimRange of any pattern that matches it.
+        let ks = KeySpace::new(12).unwrap();
+        let cases = [
+            ("lidar", "li*"),
+            ("drone", "*"),
+            ("lat:40.0583", "lat:40*"),
+            ("sensor9", "sensor*"),
+        ];
+        for (concrete, pattern) in cases {
+            let point = match Term::parse(concrete).to_dim_range(&ks) {
+                DimRange::Point(p) => p,
+                other => panic!("{concrete} should map to a point, got {other:?}"),
+            };
+            let (lo, hi) = Term::parse(pattern).to_dim_range(&ks).bounds(ks.side());
+            assert!(
+                point >= lo && point <= hi,
+                "{concrete}@{point} outside {pattern} range [{lo},{hi}]"
+            );
+        }
+    }
+}

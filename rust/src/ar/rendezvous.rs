@@ -1,0 +1,438 @@
+//! The RP-side matching engine and reactive behaviours (paper §IV-D1).
+//!
+//! Each Rendezvous Point keeps the profiles posted to it — data resource
+//! profiles, function profiles, and pending notification subscriptions —
+//! and evaluates incoming messages against them. Executing an action
+//! yields [`Reaction`]s that the coordinator turns into storage writes,
+//! network notifications or topology launches.
+
+use super::matching;
+use super::message::{Action, ArMessage};
+use super::profile::Profile;
+use crate::error::{Error, Result};
+use crate::metrics::Registry;
+
+/// A stored data record (resource profile + payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredData {
+    pub profile: Profile,
+    pub data: Vec<u8>,
+    pub sender: String,
+}
+
+/// A stored analytics function (function profile + topology description).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredFunction {
+    pub profile: Profile,
+    pub topology: String,
+    pub sender: String,
+}
+
+/// A pending notification subscription.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Subscription {
+    pub profile: Profile,
+    pub sender: String,
+}
+
+/// What the RP decided must happen as a result of a message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reaction {
+    /// Data stored under its profile (coordinator persists to the DHT).
+    Stored { profile: Profile },
+    /// Tell a waiting producer that a consumer is interested — it may
+    /// start streaming (paper: `notify_interest`).
+    ProducerNotified { producer: String, consumer_profile: Profile },
+    /// Deliver matching data to an interested consumer (`notify_data`).
+    ConsumerNotified { consumer: String, data_profile: Profile, data: Vec<u8> },
+    /// Launch a stored topology on demand (`start_function`).
+    StartTopology { function_profile: Profile, topology: String },
+    /// Stop a running topology (`stop_function`).
+    StopTopology { function_profile: Profile },
+    /// Resource statistics snapshot (`statistics`).
+    Statistics { report: String },
+    /// Function stored for later discovery/reuse (`store_function`).
+    FunctionStored { profile: Profile },
+    /// Profiles deleted (`delete`).
+    Deleted { count: usize },
+}
+
+/// The per-RP matching engine state.
+#[derive(Debug, Default)]
+pub struct RendezvousPoint {
+    data: Vec<StoredData>,
+    functions: Vec<StoredFunction>,
+    /// Producers waiting for interest (posted `notify_interest`).
+    waiting_producers: Vec<Subscription>,
+    /// Consumers waiting for data (posted `notify_data`).
+    waiting_consumers: Vec<Subscription>,
+    metrics: Registry,
+}
+
+impl RendezvousPoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_metrics(metrics: Registry) -> Self {
+        RendezvousPoint { metrics, ..Default::default() }
+    }
+
+    /// Stored data count (for tests and statistics).
+    pub fn data_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Stored function count.
+    pub fn function_len(&self) -> usize {
+        self.functions.len()
+    }
+
+    /// Stored data records matching a query profile.
+    pub fn query(&self, query: &Profile) -> Vec<&StoredData> {
+        self.data.iter().filter(|d| matching::matches(query, &d.profile)).collect()
+    }
+
+    /// Stored functions matching a query profile.
+    pub fn query_functions(&self, query: &Profile) -> Vec<&StoredFunction> {
+        self.functions.iter().filter(|f| matching::matches(query, &f.profile)).collect()
+    }
+
+    /// Process one AR message: classify the profile by the action field
+    /// (resource vs function profile), match, and execute the reactive
+    /// behaviour. Returns the reactions for the coordinator to act on.
+    pub fn receive(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
+        self.metrics.counter("rp.messages").inc();
+        match msg.action {
+            Action::Store => self.on_store(msg),
+            Action::Statistics => self.on_statistics(),
+            Action::StoreFunction => self.on_store_function(msg),
+            Action::StartFunction => self.on_start_function(msg),
+            Action::StopFunction => self.on_stop_function(msg),
+            Action::NotifyInterest => self.on_notify_interest(msg),
+            Action::NotifyData => self.on_notify_data(msg),
+            Action::Delete => self.on_delete(msg),
+        }
+    }
+
+    fn on_store(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
+        let record = StoredData {
+            profile: msg.header.profile.clone(),
+            data: msg.data.clone(),
+            sender: msg.header.sender.clone(),
+        };
+        let mut reactions = vec![Reaction::Stored { profile: record.profile.clone() }];
+        // Wake consumers whose interest matches the new data.
+        for sub in &self.waiting_consumers {
+            if matching::matches(&sub.profile, &record.profile) {
+                reactions.push(Reaction::ConsumerNotified {
+                    consumer: sub.sender.clone(),
+                    data_profile: record.profile.clone(),
+                    data: record.data.clone(),
+                });
+            }
+        }
+        self.data.push(record);
+        self.metrics.counter("rp.stored").inc();
+        Ok(reactions)
+    }
+
+    fn on_statistics(&self) -> Result<Vec<Reaction>> {
+        let report = format!(
+            "data={} functions={} waiting_producers={} waiting_consumers={}\n{}",
+            self.data.len(),
+            self.functions.len(),
+            self.waiting_producers.len(),
+            self.waiting_consumers.len(),
+            self.metrics.render()
+        );
+        Ok(vec![Reaction::Statistics { report }])
+    }
+
+    fn on_store_function(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
+        let topology = msg
+            .topology
+            .clone()
+            .or_else(|| {
+                if msg.data.is_empty() {
+                    None
+                } else {
+                    String::from_utf8(msg.data.clone()).ok()
+                }
+            })
+            .ok_or_else(|| {
+                Error::Profile("store_function requires a topology or data payload".into())
+            })?;
+        // Replace an existing function with an identical profile
+        // (re-registration), otherwise append.
+        let profile = msg.header.profile.clone();
+        self.functions.retain(|f| f.profile != profile);
+        self.functions.push(StoredFunction {
+            profile: profile.clone(),
+            topology,
+            sender: msg.header.sender.clone(),
+        });
+        self.metrics.counter("rp.functions_stored").inc();
+        Ok(vec![Reaction::FunctionStored { profile }])
+    }
+
+    fn on_start_function(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
+        // "It causes the function profile to be matched against existing
+        // function profiles and if there is a match the function is
+        // executed."
+        let matches: Vec<Reaction> = self
+            .functions
+            .iter()
+            .filter(|f| matching::matches(&msg.header.profile, &f.profile))
+            .map(|f| Reaction::StartTopology {
+                function_profile: f.profile.clone(),
+                topology: f.topology.clone(),
+            })
+            .collect();
+        if matches.is_empty() {
+            return Err(Error::NotFound(format!(
+                "no stored function matches `{}`",
+                msg.header.profile.render()
+            )));
+        }
+        self.metrics.counter("rp.functions_started").add(matches.len() as u64);
+        Ok(matches)
+    }
+
+    fn on_stop_function(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
+        let matches: Vec<Reaction> = self
+            .functions
+            .iter()
+            .filter(|f| matching::matches(&msg.header.profile, &f.profile))
+            .map(|f| Reaction::StopTopology { function_profile: f.profile.clone() })
+            .collect();
+        if matches.is_empty() {
+            return Err(Error::NotFound(format!(
+                "no stored function matches `{}`",
+                msg.header.profile.render()
+            )));
+        }
+        Ok(matches)
+    }
+
+    fn on_notify_interest(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
+        // Producer registers; if a matching consumer already waits,
+        // notify the producer immediately.
+        let sub = Subscription {
+            profile: msg.header.profile.clone(),
+            sender: msg.header.sender.clone(),
+        };
+        let mut reactions = Vec::new();
+        for consumer in &self.waiting_consumers {
+            if matching::matches(&consumer.profile, &sub.profile) {
+                reactions.push(Reaction::ProducerNotified {
+                    producer: sub.sender.clone(),
+                    consumer_profile: consumer.profile.clone(),
+                });
+            }
+        }
+        self.waiting_producers.push(sub);
+        Ok(reactions)
+    }
+
+    fn on_notify_data(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
+        let sub = Subscription {
+            profile: msg.header.profile.clone(),
+            sender: msg.header.sender.clone(),
+        };
+        let mut reactions = Vec::new();
+        // Wake producers that were waiting for interest.
+        for producer in &self.waiting_producers {
+            if matching::matches(&sub.profile, &producer.profile) {
+                reactions.push(Reaction::ProducerNotified {
+                    producer: producer.sender.clone(),
+                    consumer_profile: sub.profile.clone(),
+                });
+            }
+        }
+        // Deliver already-stored matching data.
+        for d in &self.data {
+            if matching::matches(&sub.profile, &d.profile) {
+                reactions.push(Reaction::ConsumerNotified {
+                    consumer: sub.sender.clone(),
+                    data_profile: d.profile.clone(),
+                    data: d.data.clone(),
+                });
+            }
+        }
+        self.waiting_consumers.push(sub);
+        Ok(reactions)
+    }
+
+    fn on_delete(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
+        // "The delete action deletes all matching profiles from the
+        // system."
+        let q = &msg.header.profile;
+        let before = self.data.len()
+            + self.functions.len()
+            + self.waiting_producers.len()
+            + self.waiting_consumers.len();
+        self.data.retain(|d| !matching::matches(q, &d.profile));
+        self.functions.retain(|f| !matching::matches(q, &f.profile));
+        self.waiting_producers.retain(|s| !matching::matches(q, &s.profile));
+        self.waiting_consumers.retain(|s| !matching::matches(q, &s.profile));
+        let after = self.data.len()
+            + self.functions.len()
+            + self.waiting_producers.len()
+            + self.waiting_consumers.len();
+        Ok(vec![Reaction::Deleted { count: before - after }])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(profile: &str, action: Action) -> ArMessage {
+        ArMessage::builder()
+            .set_header(Profile::parse(profile).unwrap())
+            .set_sender("test-sender")
+            .set_action(action)
+            .build()
+            .unwrap()
+    }
+
+    fn msg_with_data(profile: &str, action: Action, data: &[u8]) -> ArMessage {
+        ArMessage::builder()
+            .set_header(Profile::parse(profile).unwrap())
+            .set_sender("test-sender")
+            .set_action(action)
+            .set_data(data.to_vec())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn store_then_query() {
+        let mut rp = RendezvousPoint::new();
+        let r = rp.receive(&msg_with_data("drone,lidar", Action::Store, b"img")).unwrap();
+        assert!(matches!(r[0], Reaction::Stored { .. }));
+        assert_eq!(rp.data_len(), 1);
+        assert_eq!(rp.query(&Profile::parse("drone,li*").unwrap()).len(), 1);
+        assert_eq!(rp.query(&Profile::parse("camera").unwrap()).len(), 0);
+    }
+
+    #[test]
+    fn notify_data_delivers_existing_and_future_data() {
+        let mut rp = RendezvousPoint::new();
+        rp.receive(&msg_with_data("drone,lidar", Action::Store, b"old")).unwrap();
+        // Consumer subscribes — gets the already-stored record.
+        let r = rp.receive(&msg("drone,li*", Action::NotifyData)).unwrap();
+        assert!(r.iter().any(|x| matches!(
+            x,
+            Reaction::ConsumerNotified { data, .. } if data == b"old"
+        )));
+        // New matching data → consumer notified again.
+        let r = rp.receive(&msg_with_data("drone,lidar", Action::Store, b"new")).unwrap();
+        assert!(r.iter().any(|x| matches!(
+            x,
+            Reaction::ConsumerNotified { data, .. } if data == b"new"
+        )));
+    }
+
+    #[test]
+    fn paper_handshake_producer_then_consumer() {
+        // Listing 1 + Listing 2: producer posts notify_interest; when a
+        // consumer posts notify_data with a matching profile, the
+        // *producer* is notified so it starts streaming.
+        let mut rp = RendezvousPoint::new();
+        let r = rp.receive(&msg("drone,lidar", Action::NotifyInterest)).unwrap();
+        assert!(r.is_empty(), "no consumer yet");
+        let r = rp.receive(&msg("drone,li*", Action::NotifyData)).unwrap();
+        assert!(r.iter().any(|x| matches!(x, Reaction::ProducerNotified { .. })));
+    }
+
+    #[test]
+    fn handshake_consumer_first() {
+        let mut rp = RendezvousPoint::new();
+        rp.receive(&msg("drone,li*", Action::NotifyData)).unwrap();
+        // Producer arrives later — notified immediately.
+        let r = rp.receive(&msg("drone,lidar", Action::NotifyInterest)).unwrap();
+        assert!(r.iter().any(|x| matches!(x, Reaction::ProducerNotified { .. })));
+    }
+
+    #[test]
+    fn store_function_then_start() {
+        let mut rp = RendezvousPoint::new();
+        let m = ArMessage::builder()
+            .set_header(Profile::parse("post_processing_func").unwrap())
+            .set_action(Action::StoreFunction)
+            .set_topology("preprocess->detect")
+            .build()
+            .unwrap();
+        let r = rp.receive(&m).unwrap();
+        assert!(matches!(r[0], Reaction::FunctionStored { .. }));
+        let r = rp.receive(&msg("post_processing_func", Action::StartFunction)).unwrap();
+        assert!(
+            matches!(&r[0], Reaction::StartTopology { topology, .. } if topology == "preprocess->detect")
+        );
+    }
+
+    #[test]
+    fn start_unknown_function_errors() {
+        let mut rp = RendezvousPoint::new();
+        assert!(rp.receive(&msg("nope", Action::StartFunction)).is_err());
+    }
+
+    #[test]
+    fn store_function_requires_topology() {
+        let mut rp = RendezvousPoint::new();
+        assert!(rp.receive(&msg("f", Action::StoreFunction)).is_err());
+        // Data payload is accepted as the topology body.
+        let r = rp.receive(&msg_with_data("f", Action::StoreFunction, b"topo")).unwrap();
+        assert!(matches!(r[0], Reaction::FunctionStored { .. }));
+    }
+
+    #[test]
+    fn store_function_replaces_same_profile() {
+        let mut rp = RendezvousPoint::new();
+        rp.receive(&msg_with_data("f", Action::StoreFunction, b"v1")).unwrap();
+        rp.receive(&msg_with_data("f", Action::StoreFunction, b"v2")).unwrap();
+        assert_eq!(rp.function_len(), 1);
+        let r = rp.receive(&msg("f", Action::StartFunction)).unwrap();
+        assert!(matches!(&r[0], Reaction::StartTopology { topology, .. } if topology == "v2"));
+    }
+
+    #[test]
+    fn stop_function_matches() {
+        let mut rp = RendezvousPoint::new();
+        rp.receive(&msg_with_data("f", Action::StoreFunction, b"t")).unwrap();
+        let r = rp.receive(&msg("f", Action::StopFunction)).unwrap();
+        assert!(matches!(r[0], Reaction::StopTopology { .. }));
+        assert!(rp.receive(&msg("g", Action::StopFunction)).is_err());
+    }
+
+    #[test]
+    fn delete_removes_matching_profiles_everywhere() {
+        let mut rp = RendezvousPoint::new();
+        rp.receive(&msg_with_data("drone,lidar", Action::Store, b"d")).unwrap();
+        rp.receive(&msg_with_data("drone,thermal", Action::Store, b"t")).unwrap();
+        rp.receive(&msg("drone,li*", Action::NotifyData)).unwrap();
+        rp.receive(&msg_with_data("drone,lifunc", Action::StoreFunction, b"x")).unwrap();
+        let r = rp.receive(&msg("drone,li*", Action::Delete)).unwrap();
+        match &r[0] {
+            Reaction::Deleted { count } => assert_eq!(*count, 3), // lidar data + li* sub + lifunc
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(rp.data_len(), 1); // thermal survives
+    }
+
+    #[test]
+    fn statistics_reports_counts() {
+        let mut rp = RendezvousPoint::new();
+        rp.receive(&msg_with_data("a", Action::Store, b"1")).unwrap();
+        let r = rp.receive(&msg("a", Action::Statistics)).unwrap();
+        match &r[0] {
+            Reaction::Statistics { report } => {
+                assert!(report.contains("data=1"));
+                assert!(report.contains("rp.messages"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

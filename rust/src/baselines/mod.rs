@@ -1,0 +1,50 @@
+//! Baseline systems the paper compares against (§V), re-implemented with
+//! the *data-path behaviour* that drives their measured performance, all
+//! charging the same device throttle as R-Pulsar's components:
+//!
+//! | Paper baseline | Module | Dominant cost modelled |
+//! |---|---|---|
+//! | Apache Kafka | [`kafka_like`] | sequential log writes + page-cache writeback stalls + periodic fsync |
+//! | Mosquitto | [`mosquitto_like`] | per-message persistence write + fsync |
+//! | SQLite | [`sqlite_like`] | B-tree page reads, journal write + fsync per insert |
+//! | NitriteDB | [`nitrite_like`] | document append + index page writes, full-scan wildcard |
+//! | Apache Edgent | [`edgent_like`] | per-event operator invocation without batching |
+//!
+//! The goal is the paper's *shape* — who wins and by roughly what factor
+//! (Figs. 4–8, 14) — using the Table I device model as the ground truth.
+
+pub mod edgent_like;
+pub mod kafka_like;
+pub mod mosquitto_like;
+pub mod nitrite_like;
+pub mod sqlite_like;
+
+pub use edgent_like::EdgentLikePipeline;
+pub use kafka_like::KafkaLikeBroker;
+pub use mosquitto_like::MosquittoLikeBroker;
+pub use nitrite_like::NitriteLikeStore;
+pub use sqlite_like::SqliteLikeStore;
+
+use crate::error::Result;
+
+/// Common surface for the two baseline brokers plus R-Pulsar's own
+/// broker, so benches drive them uniformly.
+pub trait MessageBroker {
+    /// Publish one message to a topic; blocks (or charges virtual time)
+    /// until the broker's durability contract is met.
+    fn publish(&mut self, topic: &str, payload: &[u8]) -> Result<()>;
+    /// Consume up to `max` pending messages from a topic.
+    fn consume(&mut self, topic: &str, max: usize) -> Result<Vec<Vec<u8>>>;
+    /// Human-readable name for bench output.
+    fn name(&self) -> &'static str;
+}
+
+/// Common surface for the baseline stores plus R-Pulsar's query engine.
+pub trait RecordStore {
+    fn store(&mut self, key: &str, value: &[u8]) -> Result<()>;
+    /// Exact-match lookup.
+    fn query_exact(&mut self, key: &str) -> Result<Option<Vec<u8>>>;
+    /// Wildcard lookup: `pattern` uses trailing-`*` prefix syntax.
+    fn query_wildcard(&mut self, pattern: &str) -> Result<Vec<(String, Vec<u8>)>>;
+    fn name(&self) -> &'static str;
+}

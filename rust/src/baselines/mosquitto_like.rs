@@ -1,0 +1,164 @@
+//! Mosquitto-role baseline broker (paper Figs. 4, 8).
+//!
+//! Mosquitto persists in-flight QoS≥1 messages and retained state to its
+//! store file per message; the paper: "Mosquitto also uses disk to store
+//! messages and ends up overwhelming the file system." Modelled per
+//! publish: persistence write + fsync. QoS handshake adds a fixed
+//! protocol round on top (PUBACK), charged at network latency.
+
+use super::MessageBroker;
+use crate::device::throttle::{Dir, Medium, Pattern, ThrottledDisk};
+use crate::error::Result;
+use std::collections::BTreeMap;
+
+/// Options mirroring Mosquitto persistence settings.
+#[derive(Debug, Clone)]
+pub struct MosquittoLikeOptions {
+    /// Persist (write+fsync) every message (autosave_on_changes ~ 1).
+    pub persist_every: usize,
+    /// QoS level: 1 adds a PUBACK round-trip.
+    pub qos: u8,
+    /// MQTT fixed+variable header overhead.
+    pub header_overhead: usize,
+}
+
+impl Default for MosquittoLikeOptions {
+    fn default() -> Self {
+        MosquittoLikeOptions { persist_every: 1, qos: 1, header_overhead: 7 }
+    }
+}
+
+/// The broker.
+pub struct MosquittoLikeBroker {
+    opts: MosquittoLikeOptions,
+    disk: ThrottledDisk,
+    topics: BTreeMap<String, Vec<Vec<u8>>>,
+    cursors: BTreeMap<String, usize>,
+    since_persist: usize,
+}
+
+impl MosquittoLikeBroker {
+    pub fn new(disk: ThrottledDisk, opts: MosquittoLikeOptions) -> Self {
+        MosquittoLikeBroker {
+            opts,
+            disk,
+            topics: BTreeMap::new(),
+            cursors: BTreeMap::new(),
+            since_persist: 0,
+        }
+    }
+
+    pub fn with_defaults(disk: ThrottledDisk) -> Self {
+        Self::new(disk, MosquittoLikeOptions::default())
+    }
+
+    pub fn disk(&self) -> &ThrottledDisk {
+        &self.disk
+    }
+}
+
+impl MessageBroker for MosquittoLikeBroker {
+    fn publish(&mut self, topic: &str, payload: &[u8]) -> Result<()> {
+        let framed = payload.len() + self.opts.header_overhead + topic.len();
+        self.since_persist += 1;
+        if self.since_persist >= self.opts.persist_every {
+            // Persistence: write the in-flight message to the store file
+            // and fsync — the dominant cost on an SD card.
+            self.disk.charge(Medium::Disk, Pattern::Sequential, Dir::Write, framed);
+            self.disk.charge_fsync();
+            self.since_persist = 0;
+        }
+        if self.opts.qos >= 1 {
+            // PUBACK round: one extra network exchange.
+            self.disk.charge_network(4);
+        }
+        self.topics.entry(topic.to_string()).or_default().push(payload.to_vec());
+        Ok(())
+    }
+
+    fn consume(&mut self, topic: &str, max: usize) -> Result<Vec<Vec<u8>>> {
+        let log = match self.topics.get(topic) {
+            Some(l) => l,
+            None => return Ok(Vec::new()),
+        };
+        let cursor = self.cursors.entry(topic.to_string()).or_insert(0);
+        let end = (*cursor + max).min(log.len());
+        let batch: Vec<Vec<u8>> = log[*cursor..end].to_vec();
+        // Delivery reads the persisted store (random: per-message records).
+        for m in &batch {
+            self.disk.charge(Medium::Disk, Pattern::Random, Dir::Read, m.len().max(512));
+        }
+        *cursor = end;
+        Ok(batch)
+    }
+
+    fn name(&self) -> &'static str {
+        "mosquitto-like"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::DeviceProfile;
+    use crate::device::throttle::ClockMode;
+
+    fn pi_broker() -> MosquittoLikeBroker {
+        MosquittoLikeBroker::with_defaults(ThrottledDisk::new(
+            DeviceProfile::raspberry_pi(),
+            ClockMode::Virtual,
+        ))
+    }
+
+    #[test]
+    fn round_trip() {
+        let mut b = pi_broker();
+        b.publish("t", b"hello").unwrap();
+        assert_eq!(b.consume("t", 10).unwrap(), vec![b"hello".to_vec()]);
+    }
+
+    #[test]
+    fn per_message_fsync_dominates() {
+        let mut b = pi_broker();
+        b.publish("t", b"tiny").unwrap();
+        // fsync 2.5 ms + write + puback ≫ 2 ms.
+        assert!(b.disk().virtual_elapsed().as_micros() >= 2000);
+    }
+
+    #[test]
+    fn qos0_skips_puback() {
+        let disk = ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual);
+        let mut q0 = MosquittoLikeBroker::new(
+            disk,
+            MosquittoLikeOptions { qos: 0, ..Default::default() },
+        );
+        q0.publish("t", b"x").unwrap();
+        let t0 = q0.disk().virtual_elapsed();
+
+        let mut q1 = pi_broker();
+        q1.publish("t", b"x").unwrap();
+        assert!(q1.disk().virtual_elapsed() > t0);
+    }
+
+    #[test]
+    fn batched_persistence_is_cheaper() {
+        let disk = ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual);
+        let mut lazy = MosquittoLikeBroker::new(
+            disk,
+            MosquittoLikeOptions { persist_every: 100, qos: 0, header_overhead: 7 },
+        );
+        for _ in 0..50 {
+            lazy.publish("t", b"x").unwrap();
+        }
+        let lazy_t = lazy.disk().virtual_elapsed();
+
+        let mut eager = MosquittoLikeBroker::new(
+            ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual),
+            MosquittoLikeOptions { persist_every: 1, qos: 0, header_overhead: 7 },
+        );
+        for _ in 0..50 {
+            eager.publish("t", b"x").unwrap();
+        }
+        assert!(eager.disk().virtual_elapsed() > lazy_t * 10);
+    }
+}

@@ -1,0 +1,220 @@
+//! NitriteDB-role baseline store (paper Figs. 5–7).
+//!
+//! Nitrite is an embedded document store (MVStore-backed): documents are
+//! appended to the store file and a separate index tree is updated per
+//! insert; commits sync to disk. Wildcard (filter) queries deserialize
+//! and test every document — costlier per record than SQLite's scan,
+//! which matches the paper's curves (Nitrite slowest at scale).
+
+use super::RecordStore;
+use crate::device::throttle::{Dir, Medium, Pattern, ThrottledDisk};
+use crate::error::Result;
+use std::collections::BTreeMap;
+
+const PAGE: usize = 4096;
+
+/// Options mirroring Nitrite/MVStore behaviour.
+#[derive(Debug, Clone)]
+pub struct NitriteLikeOptions {
+    /// Auto-commit (sync) every N inserts.
+    pub commit_every: usize,
+    /// Per-document serialization overhead bytes (field names, types).
+    pub doc_overhead: usize,
+    /// Per-document deserialization cost on scan, in bytes-equivalent
+    /// extra RAM traffic (object construction).
+    pub deser_factor: usize,
+    /// Index B-tree pages flush as random writes every N inserts.
+    pub index_flush_every: usize,
+}
+
+impl Default for NitriteLikeOptions {
+    fn default() -> Self {
+        NitriteLikeOptions {
+            commit_every: 1,
+            doc_overhead: 96,
+            deser_factor: 3,
+            index_flush_every: 16,
+        }
+    }
+}
+
+/// The store.
+pub struct NitriteLikeStore {
+    opts: NitriteLikeOptions,
+    disk: ThrottledDisk,
+    docs: BTreeMap<String, Vec<u8>>,
+    since_commit: usize,
+    since_index_flush: usize,
+}
+
+impl NitriteLikeStore {
+    pub fn new(disk: ThrottledDisk, opts: NitriteLikeOptions) -> Self {
+        NitriteLikeStore {
+            opts,
+            disk,
+            docs: BTreeMap::new(),
+            since_commit: 0,
+            since_index_flush: 0,
+        }
+    }
+
+    pub fn with_defaults(disk: ThrottledDisk) -> Self {
+        Self::new(disk, NitriteLikeOptions::default())
+    }
+
+    pub fn disk(&self) -> &ThrottledDisk {
+        &self.disk
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+}
+
+impl RecordStore for NitriteLikeStore {
+    fn store(&mut self, key: &str, value: &[u8]) -> Result<()> {
+        let doc = value.len() + self.opts.doc_overhead + key.len();
+        // Document append + index-entry append; dirty index pages flush
+        // back as random writes periodically (MVStore compaction).
+        self.disk.charge(Medium::Disk, Pattern::Sequential, Dir::Write, doc);
+        self.disk.charge(Medium::Disk, Pattern::Sequential, Dir::Write, 48);
+        self.since_index_flush += 1;
+        if self.opts.index_flush_every > 0 && self.since_index_flush >= self.opts.index_flush_every
+        {
+            self.disk.charge(Medium::Disk, Pattern::Random, Dir::Write, PAGE);
+            self.since_index_flush = 0;
+        }
+        self.since_commit += 1;
+        if self.since_commit >= self.opts.commit_every {
+            self.disk.charge_fsync();
+            self.since_commit = 0;
+        }
+        self.docs.insert(key.to_string(), value.to_vec());
+        Ok(())
+    }
+
+    fn query_exact(&mut self, key: &str) -> Result<Option<Vec<u8>>> {
+        // Index lookup (one page) + document read.
+        self.disk.charge(Medium::Disk, Pattern::Random, Dir::Read, PAGE);
+        match self.docs.get(key) {
+            Some(v) => {
+                self.disk.charge(
+                    Medium::Disk,
+                    Pattern::Random,
+                    Dir::Read,
+                    (v.len() + self.opts.doc_overhead).max(512),
+                );
+                // Deserialization: extra RAM traffic.
+                self.disk.charge(
+                    Medium::Ram,
+                    Pattern::Sequential,
+                    Dir::Read,
+                    v.len() * self.opts.deser_factor,
+                );
+                Ok(Some(v.clone()))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn query_wildcard(&mut self, pattern: &str) -> Result<Vec<(String, Vec<u8>)>> {
+        let prefix = pattern.trim_end_matches('*');
+        // Full collection scan with per-document deserialization.
+        let scan_bytes: usize = self
+            .docs
+            .iter()
+            .map(|(k, v)| k.len() + v.len() + self.opts.doc_overhead)
+            .sum::<usize>()
+            .max(PAGE);
+        self.disk.charge(Medium::Disk, Pattern::Sequential, Dir::Read, scan_bytes);
+        self.disk.charge(
+            Medium::Ram,
+            Pattern::Sequential,
+            Dir::Read,
+            scan_bytes * self.opts.deser_factor,
+        );
+        Ok(self
+            .docs
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "nitrite-like"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::sqlite_like::SqliteLikeStore;
+    use crate::device::profile::DeviceProfile;
+    use crate::device::throttle::ClockMode;
+
+    fn pi_disk() -> ThrottledDisk {
+        ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual)
+    }
+
+    #[test]
+    fn store_query_round_trip() {
+        let mut s = NitriteLikeStore::with_defaults(pi_disk());
+        s.store("a,b", b"v").unwrap();
+        assert_eq!(s.query_exact("a,b").unwrap(), Some(b"v".to_vec()));
+        assert_eq!(s.query_exact("x").unwrap(), None);
+        assert_eq!(s.query_wildcard("a,*").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn insert_slower_than_sqlite_like() {
+        // Matches Fig. 5's ordering: Nitrite < SQLite < R-Pulsar.
+        let mut nit = NitriteLikeStore::with_defaults(pi_disk());
+        let mut sq = SqliteLikeStore::with_defaults(pi_disk());
+        for i in 0..20 {
+            nit.store(&format!("k{i}"), &[0u8; 512]).unwrap();
+            sq.store(&format!("k{i}"), &[0u8; 512]).unwrap();
+        }
+        assert!(
+            nit.disk().virtual_elapsed() >= sq.disk().virtual_elapsed(),
+            "nitrite {:?} vs sqlite {:?}",
+            nit.disk().virtual_elapsed(),
+            sq.disk().virtual_elapsed()
+        );
+    }
+
+    #[test]
+    fn wildcard_scan_scales_with_collection() {
+        let mut s = NitriteLikeStore::with_defaults(pi_disk());
+        for i in 0..50 {
+            s.store(&format!("k{i}"), &[0u8; 128]).unwrap();
+        }
+        s.disk().reset();
+        s.query_wildcard("k*").unwrap();
+        let small = s.disk().virtual_elapsed();
+        for i in 50..500 {
+            s.store(&format!("k{i}"), &[0u8; 128]).unwrap();
+        }
+        s.disk().reset();
+        s.query_wildcard("k*").unwrap();
+        assert!(s.disk().virtual_elapsed() > small * 3);
+    }
+
+    #[test]
+    fn batched_commit_cheaper() {
+        let mut eager = NitriteLikeStore::with_defaults(pi_disk());
+        let mut lazy = NitriteLikeStore::new(
+            pi_disk(),
+            NitriteLikeOptions { commit_every: 100, ..Default::default() },
+        );
+        for i in 0..50 {
+            eager.store(&format!("k{i}"), b"v").unwrap();
+            lazy.store(&format!("k{i}"), b"v").unwrap();
+        }
+        assert!(eager.disk().virtual_elapsed() > lazy.disk().virtual_elapsed());
+    }
+}

@@ -1,0 +1,153 @@
+//! Hand-rolled CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `rpulsar <subcommand> [--flag] [--opt value|--opt=value] [positional...]`.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+    /// Remaining positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some(eq) = body.find('=') {
+                    args.options.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let val = it.next().unwrap();
+                    args.options.insert(body.to_string(), val);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// True if `--name` was given as a bare flag.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Option value, if present.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Option with default.
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    /// Integer option with default.
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got `{v}`"))),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got `{v}`"))),
+        }
+    }
+
+    /// f64 option with default.
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects a number, got `{v}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["node", "start", "now"]);
+        assert_eq!(a.command.as_deref(), Some("node"));
+        assert_eq!(a.positional, vec!["start", "now"]);
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let a = parse(&["bench", "--size", "1024", "--device=pi"]);
+        assert_eq!(a.opt("size"), Some("1024"));
+        assert_eq!(a.opt("device"), Some("pi"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse(&["run", "--verbose", "--dry-run"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("dry-run"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_bare() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["x", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--n", "42", "--r", "2.5"]);
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.opt_f64("r", 0.0).unwrap(), 2.5);
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.opt_usize("n", 0).is_err());
+    }
+}

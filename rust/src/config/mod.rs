@@ -1,0 +1,14 @@
+//! Configuration system: a minimal TOML-subset parser ([`toml`]) and the
+//! typed node/cluster configuration schema ([`schema`]).
+//!
+//! No `serde`/`toml` crates are available offline; the parser supports the
+//! subset used by R-Pulsar configs: `[section]` and `[section.sub]` tables,
+//! string / integer / float / boolean scalars, and flat arrays of scalars.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{
+    ClusterConfig, DeviceKind, NodeConfig, QueueConfig, RuntimeConfig, StorageConfig,
+};
+pub use toml::{TomlDoc, TomlValue};

@@ -1,0 +1,334 @@
+//! Typed configuration schema for nodes and clusters, loaded from the
+//! TOML-subset documents parsed by [`super::toml`].
+
+use super::toml::TomlDoc;
+use crate::error::{Error, Result};
+use std::path::PathBuf;
+
+/// Which device-emulation profile a node runs under (paper §V test beds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// Raspberry Pi 3 (paper's primary edge device).
+    RaspberryPi,
+    /// Motorola Moto G5 Plus (paper's Android device).
+    Android,
+    /// Chameleon cloud m1.small-class VM.
+    CloudSmall,
+    /// No throttling — raw host performance.
+    Native,
+}
+
+impl DeviceKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pi" | "raspberry-pi" | "raspberrypi" => Ok(DeviceKind::RaspberryPi),
+            "android" | "phone" => Ok(DeviceKind::Android),
+            "cloud" | "cloud-small" | "vm" => Ok(DeviceKind::CloudSmall),
+            "native" | "none" => Ok(DeviceKind::Native),
+            other => Err(Error::Config(format!("unknown device kind `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::RaspberryPi => "raspberry-pi",
+            DeviceKind::Android => "android",
+            DeviceKind::CloudSmall => "cloud-small",
+            DeviceKind::Native => "native",
+        }
+    }
+}
+
+/// Memory-mapped queue configuration.
+#[derive(Debug, Clone)]
+pub struct QueueConfig {
+    /// Directory for queue segment files.
+    pub dir: PathBuf,
+    /// Size of each mmap segment in bytes.
+    pub segment_bytes: usize,
+    /// Maximum retained segments before oldest is recycled.
+    pub max_segments: usize,
+    /// msync to disk every N appends (0 = only on rotation/close).
+    pub sync_every: usize,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        QueueConfig {
+            dir: PathBuf::from("/tmp/rpulsar/queue"),
+            segment_bytes: 8 << 20,
+            max_segments: 8,
+            sync_every: 0,
+        }
+    }
+}
+
+/// LSM storage configuration.
+#[derive(Debug, Clone)]
+pub struct StorageConfig {
+    /// Directory for sstable files.
+    pub dir: PathBuf,
+    /// Memtable flush threshold in bytes.
+    pub memtable_bytes: usize,
+    /// Number of DHT replicas per record within a region.
+    pub replicas: usize,
+    /// Bloom filter bits per key.
+    pub bloom_bits_per_key: usize,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        StorageConfig {
+            dir: PathBuf::from("/tmp/rpulsar/store"),
+            memtable_bytes: 4 << 20,
+            replicas: 2,
+            bloom_bits_per_key: 10,
+        }
+    }
+}
+
+/// PJRT runtime configuration (artifact locations).
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    /// Directory holding `*.hlo.txt` artifacts produced by `make artifacts`.
+    pub artifacts_dir: PathBuf,
+    /// Load and compile artifacts eagerly at node start.
+    pub preload: bool,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig { artifacts_dir: PathBuf::from("artifacts"), preload: false }
+    }
+}
+
+/// Per-node configuration (paper: one Rendezvous Point).
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    /// Human-readable node name; also seeds the 160-bit node id.
+    pub name: String,
+    /// Latitude/longitude of the RP (drives quadtree placement).
+    pub latitude: f64,
+    pub longitude: f64,
+    /// Device emulation profile.
+    pub device: DeviceKind,
+    /// Minimum RPs per quadtree region before a split is allowed
+    /// (the paper's replication invariant, §IV-A).
+    pub region_min_rps: usize,
+    /// Kademlia-style bucket size for the XOR ring.
+    pub bucket_size: usize,
+    /// Keep-alive period in milliseconds.
+    pub keepalive_ms: u64,
+    /// Keep-alive misses before a peer is declared failed.
+    pub keepalive_misses: u32,
+    pub queue: QueueConfig,
+    pub storage: StorageConfig,
+    pub runtime: RuntimeConfig,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        NodeConfig {
+            name: "rp-0".into(),
+            latitude: 40.5,
+            longitude: -74.45,
+            device: DeviceKind::Native,
+            region_min_rps: 2,
+            bucket_size: 8,
+            keepalive_ms: 500,
+            keepalive_misses: 3,
+            queue: QueueConfig::default(),
+            storage: StorageConfig::default(),
+            runtime: RuntimeConfig::default(),
+        }
+    }
+}
+
+impl NodeConfig {
+    /// Build from a parsed TOML document; missing keys use defaults.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = NodeConfig::default();
+        let device = match doc.get("node.device") {
+            Some(v) => DeviceKind::parse(v.as_str().unwrap_or("native"))?,
+            None => d.device,
+        };
+        Ok(NodeConfig {
+            name: doc.str_or("node.name", &d.name),
+            latitude: doc.float_or("node.latitude", d.latitude),
+            longitude: doc.float_or("node.longitude", d.longitude),
+            device,
+            region_min_rps: doc.int_or("overlay.region_min_rps", d.region_min_rps as i64) as usize,
+            bucket_size: doc.int_or("overlay.bucket_size", d.bucket_size as i64) as usize,
+            keepalive_ms: doc.int_or("overlay.keepalive_ms", d.keepalive_ms as i64) as u64,
+            keepalive_misses: doc.int_or("overlay.keepalive_misses", d.keepalive_misses as i64)
+                as u32,
+            queue: QueueConfig {
+                dir: PathBuf::from(doc.str_or("queue.dir", d.queue.dir.to_str().unwrap())),
+                segment_bytes: doc.int_or("queue.segment_bytes", d.queue.segment_bytes as i64)
+                    as usize,
+                max_segments: doc.int_or("queue.max_segments", d.queue.max_segments as i64)
+                    as usize,
+                sync_every: doc.int_or("queue.sync_every", d.queue.sync_every as i64) as usize,
+            },
+            storage: StorageConfig {
+                dir: PathBuf::from(doc.str_or("storage.dir", d.storage.dir.to_str().unwrap())),
+                memtable_bytes: doc.int_or("storage.memtable_bytes", d.storage.memtable_bytes as i64)
+                    as usize,
+                replicas: doc.int_or("storage.replicas", d.storage.replicas as i64) as usize,
+                bloom_bits_per_key: doc
+                    .int_or("storage.bloom_bits_per_key", d.storage.bloom_bits_per_key as i64)
+                    as usize,
+            },
+            runtime: RuntimeConfig {
+                artifacts_dir: PathBuf::from(
+                    doc.str_or("runtime.artifacts_dir", d.runtime.artifacts_dir.to_str().unwrap()),
+                ),
+                preload: doc.bool_or("runtime.preload", d.runtime.preload),
+            },
+        })
+    }
+
+    /// Load from a config file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        Self::from_doc(&TomlDoc::parse_file(path)?)
+    }
+
+    /// Validate invariants (used at node start and by property tests).
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(Error::Config("node name must be non-empty".into()));
+        }
+        if !(-90.0..=90.0).contains(&self.latitude) {
+            return Err(Error::Config(format!("latitude {} out of range", self.latitude)));
+        }
+        if !(-180.0..=180.0).contains(&self.longitude) {
+            return Err(Error::Config(format!("longitude {} out of range", self.longitude)));
+        }
+        if self.region_min_rps == 0 {
+            return Err(Error::Config("region_min_rps must be >= 1".into()));
+        }
+        if self.bucket_size == 0 {
+            return Err(Error::Config("bucket_size must be >= 1".into()));
+        }
+        if self.queue.segment_bytes < 4096 {
+            return Err(Error::Config("queue.segment_bytes must be >= 4096".into()));
+        }
+        if self.storage.replicas == 0 {
+            return Err(Error::Config("storage.replicas must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Cluster-level configuration for the in-process multi-node harness.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of nodes to launch.
+    pub nodes: usize,
+    /// Device profile applied to every node.
+    pub device: DeviceKind,
+    /// Simulated one-way network latency between nodes, microseconds.
+    pub link_latency_us: u64,
+    /// Simulated link bandwidth, bytes/second (0 = unlimited).
+    pub link_bandwidth: u64,
+    /// PRNG seed for placement and workloads.
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 4,
+            device: DeviceKind::Native,
+            link_latency_us: 200,
+            link_bandwidth: 0,
+            seed: 42,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = ClusterConfig::default();
+        let device = match doc.get("cluster.device") {
+            Some(v) => DeviceKind::parse(v.as_str().unwrap_or("native"))?,
+            None => d.device,
+        };
+        Ok(ClusterConfig {
+            nodes: doc.int_or("cluster.nodes", d.nodes as i64) as usize,
+            device,
+            link_latency_us: doc.int_or("cluster.link_latency_us", d.link_latency_us as i64) as u64,
+            link_bandwidth: doc.int_or("cluster.link_bandwidth", d.link_bandwidth as i64) as u64,
+            seed: doc.int_or("cluster.seed", d.seed as i64) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        NodeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_doc_overrides_and_defaults() {
+        let doc = TomlDoc::parse(
+            r#"
+[node]
+name = "edge-7"
+latitude = 40.0583
+longitude = -74.4056
+device = "pi"
+
+[overlay]
+region_min_rps = 3
+
+[queue]
+segment_bytes = 65536
+"#,
+        )
+        .unwrap();
+        let cfg = NodeConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.name, "edge-7");
+        assert_eq!(cfg.device, DeviceKind::RaspberryPi);
+        assert_eq!(cfg.region_min_rps, 3);
+        assert_eq!(cfg.queue.segment_bytes, 65536);
+        // untouched default
+        assert_eq!(cfg.bucket_size, 8);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = NodeConfig::default();
+        cfg.latitude = 123.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = NodeConfig::default();
+        cfg.queue.segment_bytes = 16;
+        assert!(cfg.validate().is_err());
+        let mut cfg = NodeConfig::default();
+        cfg.storage.replicas = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn device_kind_parsing() {
+        assert_eq!(DeviceKind::parse("pi").unwrap(), DeviceKind::RaspberryPi);
+        assert_eq!(DeviceKind::parse("Android").unwrap(), DeviceKind::Android);
+        assert_eq!(DeviceKind::parse("cloud").unwrap(), DeviceKind::CloudSmall);
+        assert_eq!(DeviceKind::parse("native").unwrap(), DeviceKind::Native);
+        assert!(DeviceKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn cluster_config_from_doc() {
+        let doc = TomlDoc::parse("[cluster]\nnodes = 16\nlink_latency_us = 500").unwrap();
+        let cfg = ClusterConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.nodes, 16);
+        assert_eq!(cfg.link_latency_us, 500);
+        assert_eq!(cfg.seed, 42);
+    }
+}

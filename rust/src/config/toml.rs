@@ -1,0 +1,325 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supported: comments (`#`), `[table]` / `[table.sub]` headers, and
+//! `key = value` with string (`"..."`), integer, float, boolean and flat
+//! array (`[v, v, ...]`) values. Keys are flattened to dotted paths
+//! (`table.sub.key`). This covers every config file the repo ships.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path → value.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated table header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty table name"));
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            let value_text = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let full_key = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            let value = parse_value(value_text).map_err(|m| err(lineno, &m))?;
+            entries.insert(full_key, value);
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    /// Parse a file.
+    pub fn parse_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Look up a value by dotted path.
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    /// Typed getters with defaults.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// All keys under a dotted prefix (e.g. every `peers.*`).
+    pub fn keys_with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> {
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(prefix))
+            .map(|k| k.as_str())
+    }
+
+    /// Number of entries (for tests).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Parse(format!("toml line {}: {msg}", lineno + 1))
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> std::result::Result<TomlValue, String> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = t.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(unescape(inner)?));
+    }
+    if let Some(inner) = t.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_array(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match t {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = t.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("unrecognised value `{t}`"))
+}
+
+/// Split a flat array body on commas outside strings.
+fn split_array(body: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&body[start..]);
+    parts
+}
+
+fn unescape(s: &str) -> std::result::Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape `\\{other:?}`")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# node config
+name = "edge-1"        # inline comment
+port = 7100
+ratio = 0.5
+debug = true
+
+[overlay]
+region_capacity = 4
+bootstrap = ["10.0.0.1:7100", "10.0.0.2:7100"]
+
+[overlay.quadtree]
+max_depth = 8
+"#;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.str_or("name", ""), "edge-1");
+        assert_eq!(doc.int_or("port", 0), 7100);
+        assert!((doc.float_or("ratio", 0.0) - 0.5).abs() < 1e-12);
+        assert!(doc.bool_or("debug", false));
+    }
+
+    #[test]
+    fn parses_tables_and_nested() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.int_or("overlay.region_capacity", 0), 4);
+        assert_eq!(doc.int_or("overlay.quadtree.max_depth", 0), 8);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        let arr = doc.get("overlay.bootstrap").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].as_str().unwrap(), "10.0.0.1:7100");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.int_or("missing", 9), 9);
+        assert!(doc.is_empty());
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = TomlDoc::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.str_or("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let doc = TomlDoc::parse(r#"s = "a\nb\"c""#).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a\nb\"c");
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.int_or("big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("x = ").unwrap_err();
+        assert!(format!("{e}").contains("line 1"));
+        let e = TomlDoc::parse("ok = 1\n[broken").unwrap_err();
+        assert!(format!("{e}").contains("line 2"));
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0").unwrap();
+        assert!(matches!(doc.get("a").unwrap(), TomlValue::Int(3)));
+        assert!(matches!(doc.get("b").unwrap(), TomlValue::Float(_)));
+        // as_float accepts both
+        assert_eq!(doc.get("a").unwrap().as_float(), Some(3.0));
+    }
+}

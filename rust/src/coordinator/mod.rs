@@ -1,0 +1,10 @@
+//! Layer-3 coordinator: composes every subsystem into a Rendezvous
+//! Point [`node::Node`] and provides the in-process multi-node
+//! [`cluster::Cluster`] used by the scalability experiments, integration
+//! tests and the end-to-end pipeline.
+
+pub mod cluster;
+pub mod node;
+
+pub use cluster::Cluster;
+pub use node::Node;

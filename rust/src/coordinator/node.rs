@@ -1,0 +1,306 @@
+//! One Rendezvous Point: the composition of overlay membership, content
+//! routing, the AR matching engine, the mmap broker, the storage shard
+//! and the topology manager (paper §IV-E "Implementation Overview").
+
+use crate::ar::message::ArMessage;
+use crate::ar::rendezvous::{Reaction, RendezvousPoint};
+use crate::config::NodeConfig;
+use crate::device::profile::DeviceProfile;
+use crate::device::throttle::{ClockMode, ThrottledDisk};
+use crate::error::Result;
+use crate::metrics::Registry;
+use crate::mmq::pubsub::Broker;
+use crate::mmq::queue::QueueOptions;
+use crate::overlay::geo::GeoPoint;
+use crate::overlay::node_id::NodeId;
+use crate::overlay::ring::{Contact, RoutingTable};
+use crate::storage::lsm::{LsmOptions, LsmStore};
+use crate::stream::deploy::TopologyManager;
+use crate::stream::engine::StreamEngine;
+
+/// A running RP node (in-process flavour; the `rpulsar node` binary
+/// wraps one of these behind a TCP endpoint).
+pub struct Node {
+    config: NodeConfig,
+    id: NodeId,
+    location: GeoPoint,
+    routing_table: RoutingTable,
+    rendezvous: RendezvousPoint,
+    broker: Broker,
+    store: LsmStore,
+    topologies: TopologyManager,
+    metrics: Registry,
+    device: ThrottledDisk,
+}
+
+impl Node {
+    /// Build a node from config. Directories are namespaced by node name
+    /// so multiple in-process nodes don't collide.
+    pub fn new(config: NodeConfig) -> Result<Self> {
+        config.validate()?;
+        let id = NodeId::from_name(&config.name);
+        let location = GeoPoint::new(config.latitude, config.longitude);
+        let metrics = Registry::new();
+        let device =
+            ThrottledDisk::new(DeviceProfile::for_kind(config.device), ClockMode::Virtual);
+
+        let queue_opts = QueueOptions {
+            dir: config.queue.dir.join(&config.name),
+            segment_bytes: config.queue.segment_bytes,
+            max_segments: config.queue.max_segments,
+            sync_every: config.queue.sync_every,
+        };
+        let broker = Broker::with_metrics(queue_opts, metrics.clone());
+
+        let lsm_opts = LsmOptions {
+            dir: config.storage.dir.join(&config.name),
+            memtable_bytes: config.storage.memtable_bytes,
+            bloom_bits_per_key: config.storage.bloom_bits_per_key,
+            max_tables: 6,
+        };
+        let store = LsmStore::open(lsm_opts, device.clone())?;
+
+        let topologies =
+            TopologyManager::new(StreamEngine::with_metrics(metrics.clone()));
+
+        Ok(Node {
+            config,
+            id,
+            location,
+            routing_table: RoutingTable::new(id, 8),
+            rendezvous: RendezvousPoint::with_metrics(metrics.clone()),
+            broker,
+            store,
+            topologies,
+            metrics,
+            device,
+        })
+    }
+
+    /// Convenience constructor for tests/clusters.
+    pub fn with_name_at(name: &str, lat: f64, lon: f64, base_dir: &std::path::Path) -> Result<Self> {
+        let mut cfg = NodeConfig::default();
+        cfg.name = name.to_string();
+        cfg.latitude = lat;
+        cfg.longitude = lon;
+        cfg.queue.dir = base_dir.join("queue");
+        cfg.storage.dir = base_dir.join("store");
+        Self::new(cfg)
+    }
+
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.config.name
+    }
+
+    pub fn location(&self) -> GeoPoint {
+        self.location
+    }
+
+    pub fn config(&self) -> &NodeConfig {
+        &self.config
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    pub fn device(&self) -> &ThrottledDisk {
+        &self.device
+    }
+
+    /// Seed the routing table with a peer (join / stabilisation).
+    pub fn learn_peer(&mut self, id: NodeId) {
+        self.routing_table.insert(Contact::new(id));
+    }
+
+    /// Forget a failed peer.
+    pub fn forget_peer(&mut self, id: &NodeId) {
+        self.routing_table.remove(id);
+    }
+
+    pub fn routing_table(&self) -> &RoutingTable {
+        &self.routing_table
+    }
+
+    /// The node's bucket size config.
+    pub fn bucket_size(&self) -> usize {
+        self.config.bucket_size
+    }
+
+    /// Handle an AR message addressed to this RP: run the matching
+    /// engine, apply storage-affecting reactions locally, and return all
+    /// reactions for the caller (cluster/transport) to propagate.
+    pub fn handle_ar(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
+        let reactions = self.rendezvous.receive(msg)?;
+        for r in &reactions {
+            match r {
+                Reaction::Stored { profile } => {
+                    // Persist to the local shard (DHT replication is the
+                    // cluster's job — it posts to each replica).
+                    self.store.put(profile.render().as_bytes(), &msg.data)?;
+                    self.metrics.counter("node.stored").inc();
+                }
+                Reaction::StartTopology { function_profile, topology } => {
+                    let key = function_profile.render();
+                    if !self.topologies.running().contains(&key) {
+                        self.topologies.start(&key, topology)?;
+                        self.metrics.counter("node.topologies_started").inc();
+                    }
+                }
+                Reaction::StopTopology { function_profile } => {
+                    let key = function_profile.render();
+                    if self.topologies.running().contains(&key) {
+                        self.topologies.stop(&key)?;
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(reactions)
+    }
+
+    /// Publish to the node's mmap broker (`push` primitive data path).
+    pub fn publish(&mut self, profile: &crate::ar::profile::Profile, payload: &[u8]) -> Result<u64> {
+        self.broker.publish(profile, payload)
+    }
+
+    /// Broker access (subscriptions, fetch).
+    pub fn broker_mut(&mut self) -> &mut Broker {
+        &mut self.broker
+    }
+
+    /// Local storage shard access.
+    pub fn store(&self) -> &LsmStore {
+        &self.store
+    }
+
+    pub fn store_mut(&mut self) -> &mut LsmStore {
+        &mut self.store
+    }
+
+    /// Topology manager access (stage registration).
+    pub fn topologies_mut(&mut self) -> &mut TopologyManager {
+        &mut self.topologies
+    }
+
+    /// Rendezvous state access (tests).
+    pub fn rendezvous(&self) -> &RendezvousPoint {
+        &self.rendezvous
+    }
+
+    /// Graceful shutdown: stop topologies, flush queue + store.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.topologies.stop_all()?;
+        self.broker.flush(true)?;
+        self.store.flush()?;
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for Node {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Node({} @ {:?})", self.config.name, self.location)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ar::message::Action;
+    use crate::ar::profile::Profile;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join("rpulsar-node-tests")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn store_msg(profile: &str, data: &[u8]) -> ArMessage {
+        ArMessage::builder()
+            .set_header(Profile::parse(profile).unwrap())
+            .set_sender("test")
+            .set_action(Action::Store)
+            .set_data(data.to_vec())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn node_boots_and_stores() {
+        let dir = tmp("boot");
+        let mut n = Node::with_name_at("rp-a", 40.0, -74.0, &dir).unwrap();
+        assert_eq!(n.id(), NodeId::from_name("rp-a"));
+        let reactions = n.handle_ar(&store_msg("drone,lidar", b"img")).unwrap();
+        assert!(matches!(reactions[0], Reaction::Stored { .. }));
+        assert_eq!(
+            n.store().get(b"drone,lidar").unwrap(),
+            Some(b"img".to_vec())
+        );
+        n.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn start_topology_via_ar() {
+        let dir = tmp("topo");
+        let mut n = Node::with_name_at("rp-b", 40.0, -74.0, &dir).unwrap();
+        n.topologies_mut().register_stage("noop", || {
+            Box::new(crate::stream::operator::OperatorKind::map("noop", |t| t))
+        });
+        let store_fn = ArMessage::builder()
+            .set_header(Profile::parse("post_processing_func").unwrap())
+            .set_action(Action::StoreFunction)
+            .set_topology("noop")
+            .build()
+            .unwrap();
+        n.handle_ar(&store_fn).unwrap();
+        let start = ArMessage::builder()
+            .set_header(Profile::parse("post_processing_func").unwrap())
+            .set_action(Action::StartFunction)
+            .build()
+            .unwrap();
+        n.handle_ar(&start).unwrap();
+        assert_eq!(n.topologies_mut().running(), vec!["post_processing_func"]);
+        // Stop it via AR too.
+        let stop = ArMessage::builder()
+            .set_header(Profile::parse("post_processing_func").unwrap())
+            .set_action(Action::StopFunction)
+            .build()
+            .unwrap();
+        n.handle_ar(&stop).unwrap();
+        assert!(n.topologies_mut().running().is_empty());
+        n.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn peers_learned_and_forgotten() {
+        let dir = tmp("peers");
+        let mut n = Node::with_name_at("rp-c", 0.0, 0.0, &dir).unwrap();
+        let peer = NodeId::from_name("rp-d");
+        n.learn_peer(peer);
+        assert!(n.routing_table().contains(&peer));
+        n.forget_peer(&peer);
+        assert!(!n.routing_table().contains(&peer));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn publish_goes_to_broker() {
+        let dir = tmp("pub");
+        let mut n = Node::with_name_at("rp-e", 0.0, 0.0, &dir).unwrap();
+        let p = Profile::parse("drone,lidar").unwrap();
+        n.broker_mut().subscribe("consumer", Profile::parse("drone,*").unwrap());
+        n.publish(&p, b"payload").unwrap();
+        let msgs = n.broker_mut().fetch("consumer", 10).unwrap();
+        assert_eq!(msgs.len(), 1);
+        n.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,16 @@
+//! Edge-device emulation (DESIGN.md §Environment substitutions).
+//!
+//! The paper measures on a Raspberry Pi 3, a Moto G5 Plus and Chameleon
+//! VMs. This host is none of those, so every disk-bound component
+//! (baseline brokers/stores, Table I) routes its I/O through a
+//! [`throttle::ThrottledDisk`] parameterised by a [`DeviceProfile`]
+//! calibrated to the paper's Table I measurements. Components that are
+//! memory-bound (the mmap queue, the memtable) are throttled by the
+//! profile's RAM bandwidth, which is what makes the paper's comparisons
+//! reproduce *quantitatively*, not just in spirit.
+
+pub mod profile;
+pub mod throttle;
+
+pub use profile::DeviceProfile;
+pub use throttle::ThrottledDisk;

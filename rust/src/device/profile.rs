@@ -1,0 +1,200 @@
+//! Device I/O profiles calibrated to the paper's Table I.
+
+use crate::config::DeviceKind;
+
+/// Bandwidth/latency model of one device class. Bandwidths in MB/s
+/// (Table I uses MB/s), latencies in microseconds per operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    pub kind: DeviceKind,
+    /// Sequential disk read bandwidth, MB/s.
+    pub disk_seq_read: f64,
+    /// Sequential disk write bandwidth, MB/s.
+    pub disk_seq_write: f64,
+    /// Random (4 KiB-block) disk read bandwidth, MB/s.
+    pub disk_rand_read: f64,
+    /// Random (4 KiB-block) disk write bandwidth, MB/s.
+    pub disk_rand_write: f64,
+    /// RAM sequential read bandwidth, MB/s.
+    pub ram_seq_read: f64,
+    /// RAM sequential write bandwidth, MB/s.
+    pub ram_seq_write: f64,
+    /// RAM random read bandwidth, MB/s.
+    pub ram_rand_read: f64,
+    /// RAM random write bandwidth, MB/s.
+    pub ram_rand_write: f64,
+    /// Fixed per-I/O-operation latency, µs (syscall + device overhead).
+    pub io_op_latency_us: f64,
+    /// Fixed per-storage-operation CPU latency, µs — parsing, profile
+    /// matching and index maintenance on the device's cores (the paper's
+    /// implementation is JVM-based; dominant for small records).
+    pub cpu_op_latency_us: f64,
+    /// fsync latency, µs (dominates per-message disk persistence).
+    pub fsync_latency_us: f64,
+    /// Multiplier translating *measured host compute time* into device
+    /// compute time (Cortex-A53 ≈ 20× slower than a server core for the
+    /// pipeline's f32 kernels; Snapdragon 625 with JVM ≈ 35×).
+    pub compute_scale: f64,
+    /// One-way network latency to a peer, µs.
+    pub net_latency_us: f64,
+    /// Network bandwidth, MB/s (10/100 Ethernet on the Pi).
+    pub net_bandwidth: f64,
+}
+
+impl DeviceProfile {
+    /// Raspberry Pi 3 — Table I of the paper, exactly.
+    pub fn raspberry_pi() -> Self {
+        DeviceProfile {
+            kind: DeviceKind::RaspberryPi,
+            disk_seq_read: 18.89,
+            disk_seq_write: 7.12,
+            disk_rand_read: 0.78,
+            disk_rand_write: 0.15,
+            ram_seq_read: 631.34,
+            ram_seq_write: 573.65,
+            ram_rand_read: 65.96,
+            ram_rand_write: 65.88,
+            io_op_latency_us: 120.0,
+            cpu_op_latency_us: 110.0,
+            fsync_latency_us: 2_500.0, // SD-card fsync is notoriously slow
+            compute_scale: 20.0,
+            net_latency_us: 300.0,
+            net_bandwidth: 11.0, // 10/100 Ethernet ≈ 11–12 MB/s payload
+        }
+    }
+
+    /// Moto G5 Plus (Android): faster flash than the Pi's SD card, more
+    /// RAM bandwidth, but higher per-op syscall cost (paper §V-A3 shows
+    /// Android routing slower than the Pi by ~2× at equal complexity).
+    pub fn android() -> Self {
+        DeviceProfile {
+            kind: DeviceKind::Android,
+            disk_seq_read: 160.0,
+            disk_seq_write: 80.0,
+            disk_rand_read: 18.0,
+            disk_rand_write: 9.0,
+            ram_seq_read: 2_800.0,
+            ram_seq_write: 2_500.0,
+            ram_rand_read: 300.0,
+            ram_rand_write: 290.0,
+            io_op_latency_us: 260.0, // higher VFS/scheduler overhead observed on Android
+            cpu_op_latency_us: 240.0,
+            fsync_latency_us: 7_000.0,
+            compute_scale: 35.0,
+            net_latency_us: 1_200.0, // WiFi
+            net_bandwidth: 6.0,
+        }
+    }
+
+    /// Chameleon m1.small-class VM (paper §V-A5) — sized to "simulate
+    /// computation capabilities of a Raspberry Pi" but with cloud network.
+    pub fn cloud_small() -> Self {
+        DeviceProfile {
+            kind: DeviceKind::CloudSmall,
+            disk_seq_read: 120.0,
+            disk_seq_write: 90.0,
+            disk_rand_read: 10.0,
+            disk_rand_write: 5.0,
+            ram_seq_read: 4_000.0,
+            ram_seq_write: 3_500.0,
+            ram_rand_read: 500.0,
+            ram_rand_write: 480.0,
+            io_op_latency_us: 60.0,
+            cpu_op_latency_us: 35.0,
+            fsync_latency_us: 1_500.0,
+            compute_scale: 18.0, // m1.small vCPU, sized like a Pi (paper §V)
+            net_latency_us: 150.0,
+            net_bandwidth: 120.0,
+        }
+    }
+
+    /// No throttling: raw host performance (unit tests, CI).
+    pub fn native() -> Self {
+        DeviceProfile {
+            kind: DeviceKind::Native,
+            disk_seq_read: f64::INFINITY,
+            disk_seq_write: f64::INFINITY,
+            disk_rand_read: f64::INFINITY,
+            disk_rand_write: f64::INFINITY,
+            ram_seq_read: f64::INFINITY,
+            ram_seq_write: f64::INFINITY,
+            ram_rand_read: f64::INFINITY,
+            ram_rand_write: f64::INFINITY,
+            io_op_latency_us: 0.0,
+            cpu_op_latency_us: 0.0,
+            fsync_latency_us: 0.0,
+            compute_scale: 0.0,
+            net_latency_us: 0.0,
+            net_bandwidth: f64::INFINITY,
+        }
+    }
+
+    /// Profile for a [`DeviceKind`].
+    pub fn for_kind(kind: DeviceKind) -> Self {
+        match kind {
+            DeviceKind::RaspberryPi => Self::raspberry_pi(),
+            DeviceKind::Android => Self::android(),
+            DeviceKind::CloudSmall => Self::cloud_small(),
+            DeviceKind::Native => Self::native(),
+        }
+    }
+
+    /// Whether this profile throttles at all.
+    pub fn is_throttled(&self) -> bool {
+        self.kind != crate::config::DeviceKind::Native
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values_are_exact() {
+        // Table I of the paper.
+        let pi = DeviceProfile::raspberry_pi();
+        assert_eq!(pi.disk_seq_read, 18.89);
+        assert_eq!(pi.disk_seq_write, 7.12);
+        assert_eq!(pi.disk_rand_read, 0.78);
+        assert_eq!(pi.disk_rand_write, 0.15);
+        assert_eq!(pi.ram_seq_read, 631.34);
+        assert_eq!(pi.ram_seq_write, 573.65);
+        assert_eq!(pi.ram_rand_read, 65.96);
+        assert_eq!(pi.ram_rand_write, 65.88);
+    }
+
+    #[test]
+    fn table1_ram_dominates_disk() {
+        // The observation motivating the memory-mapped design: RAM is
+        // 30–440× faster than the SD card in every mode.
+        let pi = DeviceProfile::raspberry_pi();
+        assert!(pi.ram_seq_read / pi.disk_seq_read > 30.0);
+        assert!(pi.ram_seq_write / pi.disk_seq_write > 30.0);
+        assert!(pi.ram_rand_read / pi.disk_rand_read > 80.0);
+        assert!(pi.ram_rand_write / pi.disk_rand_write > 400.0);
+    }
+
+    #[test]
+    fn for_kind_round_trip() {
+        use crate::config::DeviceKind::*;
+        for k in [RaspberryPi, Android, CloudSmall, Native] {
+            assert_eq!(DeviceProfile::for_kind(k).kind, k);
+        }
+    }
+
+    #[test]
+    fn native_is_unthrottled() {
+        let n = DeviceProfile::native();
+        assert!(!n.is_throttled());
+        assert!(DeviceProfile::raspberry_pi().is_throttled());
+        assert!(n.disk_seq_read.is_infinite());
+    }
+
+    #[test]
+    fn android_slower_per_op_than_pi() {
+        // Matches the paper's routing-overhead comparison (Fig. 9 vs 10):
+        // Android per-message overheads exceed the Pi's.
+        assert!(DeviceProfile::android().io_op_latency_us
+            > DeviceProfile::raspberry_pi().io_op_latency_us);
+    }
+}

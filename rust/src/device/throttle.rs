@@ -1,0 +1,247 @@
+//! I/O throttling substrate.
+//!
+//! Every disk-bound component (baselines, Table I bench) performs its
+//! byte movement through a [`ThrottledDisk`], which *accounts* the time
+//! the operation would take on the emulated device and (in `RealTime`
+//! mode) actually sleeps it, or (in `Virtual` mode) accumulates it on a
+//! virtual clock — the latter lets scalability benches run in seconds
+//! while reporting device-accurate latencies.
+
+use super::profile::DeviceProfile;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which storage medium an operation touches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Medium {
+    Disk,
+    Ram,
+}
+
+/// Access pattern of an operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    Sequential,
+    Random,
+}
+
+/// Operation direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    Read,
+    Write,
+}
+
+/// How elapsed throttle time is applied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Sleep for the computed duration (end-to-end realism).
+    RealTime,
+    /// Only accumulate on the virtual clock (fast benches).
+    Virtual,
+}
+
+/// A throttled I/O device.
+#[derive(Debug, Clone)]
+pub struct ThrottledDisk {
+    profile: DeviceProfile,
+    mode: ClockMode,
+    /// Accumulated virtual time in nanoseconds.
+    virtual_ns: Arc<AtomicU64>,
+}
+
+impl ThrottledDisk {
+    pub fn new(profile: DeviceProfile, mode: ClockMode) -> Self {
+        ThrottledDisk { profile, mode, virtual_ns: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Unthrottled native device (tests).
+    pub fn native() -> Self {
+        Self::new(DeviceProfile::native(), ClockMode::Virtual)
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    /// Time one operation of `bytes` would take on this device.
+    pub fn cost(&self, medium: Medium, pattern: Pattern, dir: Dir, bytes: usize) -> Duration {
+        let mbps = match (medium, pattern, dir) {
+            (Medium::Disk, Pattern::Sequential, Dir::Read) => self.profile.disk_seq_read,
+            (Medium::Disk, Pattern::Sequential, Dir::Write) => self.profile.disk_seq_write,
+            (Medium::Disk, Pattern::Random, Dir::Read) => self.profile.disk_rand_read,
+            (Medium::Disk, Pattern::Random, Dir::Write) => self.profile.disk_rand_write,
+            (Medium::Ram, Pattern::Sequential, Dir::Read) => self.profile.ram_seq_read,
+            (Medium::Ram, Pattern::Sequential, Dir::Write) => self.profile.ram_seq_write,
+            (Medium::Ram, Pattern::Random, Dir::Read) => self.profile.ram_rand_read,
+            (Medium::Ram, Pattern::Random, Dir::Write) => self.profile.ram_rand_write,
+        };
+        let transfer_secs = if mbps.is_finite() && mbps > 0.0 {
+            bytes as f64 / (mbps * 1e6)
+        } else {
+            0.0
+        };
+        let op_secs = if medium == Medium::Disk {
+            self.profile.io_op_latency_us * 1e-6
+        } else {
+            // RAM ops: no syscall; negligible fixed cost.
+            0.0
+        };
+        Duration::from_nanos(((transfer_secs + op_secs) * 1e9) as u64)
+    }
+
+    /// Account (and possibly sleep) one operation.
+    pub fn charge(&self, medium: Medium, pattern: Pattern, dir: Dir, bytes: usize) -> Duration {
+        let d = self.cost(medium, pattern, dir, bytes);
+        self.apply(d);
+        d
+    }
+
+    /// Account one storage-operation's fixed CPU cost (profile parsing,
+    /// matching, index maintenance on the emulated device's cores).
+    pub fn charge_cpu_op(&self) -> Duration {
+        let d = Duration::from_nanos((self.profile.cpu_op_latency_us * 1e3) as u64);
+        self.apply(d);
+        d
+    }
+
+    /// Account compute measured on the host, scaled to the device
+    /// (`compute_scale` = how much slower the device's cores are).
+    pub fn charge_compute(&self, host_time: Duration) -> Duration {
+        let d = Duration::from_secs_f64(host_time.as_secs_f64() * self.profile.compute_scale);
+        self.apply(d);
+        d
+    }
+
+    /// Account an fsync.
+    pub fn charge_fsync(&self) -> Duration {
+        let d = Duration::from_nanos((self.profile.fsync_latency_us * 1e3) as u64);
+        self.apply(d);
+        d
+    }
+
+    /// Account a network transfer of `bytes` (one hop).
+    pub fn charge_network(&self, bytes: usize) -> Duration {
+        let bw = self.profile.net_bandwidth;
+        let transfer = if bw.is_finite() && bw > 0.0 { bytes as f64 / (bw * 1e6) } else { 0.0 };
+        let d = Duration::from_nanos(
+            ((self.profile.net_latency_us * 1e-6 + transfer) * 1e9) as u64,
+        );
+        self.apply(d);
+        d
+    }
+
+    fn apply(&self, d: Duration) {
+        self.virtual_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        if self.mode == ClockMode::RealTime && !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+
+    /// Total accumulated virtual time.
+    pub fn virtual_elapsed(&self) -> Duration {
+        Duration::from_nanos(self.virtual_ns.load(Ordering::Relaxed))
+    }
+
+    /// Reset the virtual clock (bench iterations).
+    pub fn reset(&self) {
+        self.virtual_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pi() -> ThrottledDisk {
+        ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual)
+    }
+
+    #[test]
+    fn cost_matches_table1_bandwidth() {
+        let d = pi();
+        // 1 MB sequential disk read at 18.89 MB/s ≈ 52.9 ms + op latency.
+        let c = d.cost(Medium::Disk, Pattern::Sequential, Dir::Read, 1_000_000);
+        let expected = 1.0 / 18.89 + 120e-6;
+        assert!((c.as_secs_f64() - expected).abs() < 1e-6, "{c:?}");
+        // Same read from RAM ≈ 1.58 ms, no op latency.
+        let r = d.cost(Medium::Ram, Pattern::Sequential, Dir::Read, 1_000_000);
+        assert!((r.as_secs_f64() - 1.0 / 631.34).abs() < 1e-6, "{r:?}");
+    }
+
+    #[test]
+    fn random_write_is_slowest_mode() {
+        let d = pi();
+        let modes = [
+            d.cost(Medium::Disk, Pattern::Sequential, Dir::Read, 4096),
+            d.cost(Medium::Disk, Pattern::Sequential, Dir::Write, 4096),
+            d.cost(Medium::Disk, Pattern::Random, Dir::Read, 4096),
+            d.cost(Medium::Disk, Pattern::Random, Dir::Write, 4096),
+        ];
+        assert_eq!(modes.iter().max(), Some(&modes[3]));
+    }
+
+    #[test]
+    fn virtual_clock_accumulates_without_sleeping() {
+        let d = pi();
+        let wall = std::time::Instant::now();
+        for _ in 0..100 {
+            d.charge(Medium::Disk, Pattern::Random, Dir::Write, 4096);
+        }
+        assert!(wall.elapsed() < Duration::from_millis(200), "must not sleep in Virtual mode");
+        // 100 × (4096 B / 0.15 MB/s + 120 µs) ≈ 100 × 27.4 ms ≈ 2.74 s.
+        let v = d.virtual_elapsed().as_secs_f64();
+        assert!(v > 2.0 && v < 3.5, "virtual {v}");
+    }
+
+    #[test]
+    fn native_costs_nothing() {
+        let d = ThrottledDisk::native();
+        let c = d.charge(Medium::Disk, Pattern::Random, Dir::Write, 1 << 20);
+        assert_eq!(c, Duration::ZERO);
+        assert_eq!(d.virtual_elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn fsync_dominates_small_writes() {
+        let d = pi();
+        let write = d.cost(Medium::Disk, Pattern::Sequential, Dir::Write, 64);
+        d.reset();
+        let fsync = d.charge_fsync();
+        assert!(fsync > write, "fsync {fsync:?} vs write {write:?}");
+    }
+
+    #[test]
+    fn network_charge_scales_with_bytes() {
+        let d = pi();
+        let small = d.cost_net_probe(64);
+        let large = d.cost_net_probe(1 << 20);
+        assert!(large > small);
+    }
+
+    impl ThrottledDisk {
+        fn cost_net_probe(&self, bytes: usize) -> Duration {
+            let before = self.virtual_elapsed();
+            self.charge_network(bytes);
+            self.virtual_elapsed() - before
+        }
+    }
+
+    #[test]
+    fn reset_clears_clock() {
+        let d = pi();
+        d.charge_fsync();
+        assert!(d.virtual_elapsed() > Duration::ZERO);
+        d.reset();
+        assert_eq!(d.virtual_elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn realtime_mode_actually_sleeps() {
+        let d = ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::RealTime);
+        let wall = std::time::Instant::now();
+        d.charge(Medium::Disk, Pattern::Random, Dir::Write, 4096); // ≈ 27 ms
+        assert!(wall.elapsed() >= Duration::from_millis(20));
+    }
+}

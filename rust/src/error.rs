@@ -1,0 +1,102 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for all R-Pulsar subsystems.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// I/O failure (mmap, segment files, sstables, sockets).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Malformed or unparsable input (config, profiles, rules, wire frames).
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Profile/keyspace violation (too many dimensions, empty profile, ...).
+    #[error("profile error: {0}")]
+    Profile(String),
+
+    /// Overlay-level failure (no route, region not found, join failure).
+    #[error("overlay error: {0}")]
+    Overlay(String),
+
+    /// Queue-level failure (segment full, corrupt record, bad offset).
+    #[error("queue error: {0}")]
+    Queue(String),
+
+    /// Storage-level failure (corrupt sstable, missing key where required).
+    #[error("storage error: {0}")]
+    Storage(String),
+
+    /// Stream-engine failure (unknown operator, topology cycle, shutdown).
+    #[error("stream error: {0}")]
+    Stream(String),
+
+    /// Rule-engine failure (bad condition expression, unknown variable).
+    #[error("rule error: {0}")]
+    Rule(String),
+
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Network/transport failure (peer unreachable, frame too large).
+    #[error("net error: {0}")]
+    Net(String),
+
+    /// Configuration / CLI error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// The requested entity does not exist.
+    #[error("not found: {0}")]
+    NotFound(String),
+
+    /// Operation timed out.
+    #[error("timeout: {0}")]
+    Timeout(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Short machine-readable kind tag, used by metrics and wire errors.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::Io(_) => "io",
+            Error::Parse(_) => "parse",
+            Error::Profile(_) => "profile",
+            Error::Overlay(_) => "overlay",
+            Error::Queue(_) => "queue",
+            Error::Storage(_) => "storage",
+            Error::Stream(_) => "stream",
+            Error::Rule(_) => "rule",
+            Error::Runtime(_) => "runtime",
+            Error::Net(_) => "net",
+            Error::Config(_) => "config",
+            Error::NotFound(_) => "not_found",
+            Error::Timeout(_) => "timeout",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_tags_are_stable() {
+        assert_eq!(Error::Parse("x".into()).kind(), "parse");
+        assert_eq!(Error::NotFound("y".into()).kind(), "not_found");
+        let io = Error::from(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        assert_eq!(io.kind(), "io");
+    }
+
+    #[test]
+    fn display_includes_message() {
+        let e = Error::Queue("segment full".into());
+        assert!(format!("{e}").contains("segment full"));
+    }
+}

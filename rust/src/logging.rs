@@ -1,0 +1,102 @@
+//! Minimal stderr logger implementing the `log` facade.
+//!
+//! Level comes from `RPULSAR_LOG` (error|warn|info|debug|trace, default
+//! `info`). No external logger crate is available offline.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::io::Write;
+use std::sync::Once;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+struct StderrLogger {
+    level: LevelFilter,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let ts = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis())
+            .unwrap_or(0);
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{ts} {tag} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+static INIT: Once = Once::new();
+
+/// Parse a level string (case-insensitive); unknown → Info.
+pub fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    }
+}
+
+/// Install the global logger once. Safe to call repeatedly.
+pub fn init() {
+    INIT.call_once(|| {
+        let level = std::env::var("RPULSAR_LOG")
+            .map(|v| parse_level(&v))
+            .unwrap_or(LevelFilter::Info);
+        let logger = Box::new(StderrLogger { level });
+        if log::set_boxed_logger(logger).is_ok() {
+            log::set_max_level(level);
+        }
+    });
+}
+
+/// Install with an explicit level (tests, benches). First call wins.
+pub fn init_with_level(level: LevelFilter) {
+    INIT.call_once(|| {
+        let logger = Box::new(StderrLogger { level });
+        if log::set_boxed_logger(logger).is_ok() {
+            log::set_max_level(level);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_variants() {
+        assert_eq!(parse_level("error"), LevelFilter::Error);
+        assert_eq!(parse_level("WARN"), LevelFilter::Warn);
+        assert_eq!(parse_level("Debug"), LevelFilter::Debug);
+        assert_eq!(parse_level("trace"), LevelFilter::Trace);
+        assert_eq!(parse_level("off"), LevelFilter::Off);
+        assert_eq!(parse_level("bogus"), LevelFilter::Info);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init_with_level(LevelFilter::Warn);
+        init(); // second call is a no-op
+        log::info!("not shown at warn level");
+        log::warn!("logging smoke test");
+    }
+}

@@ -1,0 +1,199 @@
+//! `rpulsar` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!
+//! - `node --config <file> [--listen <addr>]` — run a single RP behind a
+//!   TCP endpoint (multi-process deployment).
+//! - `cluster --nodes N [--device pi|android|cloud|native]` — boot an
+//!   in-process cluster, run a smoke workload, print metrics.
+//! - `pipeline [--images N] [--device pi] [--artifacts DIR]` — run the
+//!   end-to-end disaster-recovery workflow (paper §V-B) on a synthetic
+//!   Hurricane-Sandy-shaped trace and print the Fig. 14 comparison.
+//! - `post --profile "<p>" [--action store|...] [--data ...]` — one-shot
+//!   AR post against an in-process cluster (demo/debug).
+//! - `artifacts-check [--artifacts DIR]` — load + execute every AOT
+//!   artifact once and print its outputs (runtime smoke test).
+
+use rpulsar::ar::message::{Action, ArMessage};
+use rpulsar::ar::profile::Profile;
+use rpulsar::cli::Args;
+use rpulsar::config::{DeviceKind, NodeConfig};
+use rpulsar::coordinator::Cluster;
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::error::{Error, Result};
+use rpulsar::pipeline::lidar::LidarTrace;
+use rpulsar::pipeline::workflow::{BaselineKind, DisasterRecoveryPipeline};
+use rpulsar::runtime::PreprocessRuntime;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    rpulsar::logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("node") => cmd_node(&args),
+        Some("cluster") => cmd_cluster(&args),
+        Some("pipeline") => cmd_pipeline(&args),
+        Some("post") => cmd_post(&args),
+        Some("artifacts-check") => cmd_artifacts_check(&args),
+        Some(other) => Err(Error::Config(format!("unknown subcommand `{other}`"))),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "rpulsar — Edge Based Data-Driven Pipelines (R-Pulsar reproduction)\n\n\
+         usage: rpulsar <node|cluster|pipeline|post|artifacts-check> [options]\n\
+         \n  node            run one RP (--config FILE, --listen ADDR)\
+         \n  cluster         boot an in-process cluster (--nodes N, --device KIND)\
+         \n  pipeline        end-to-end disaster-recovery run (--images N, --device KIND)\
+         \n  post            one-shot AR post (--profile P, --action A, --data D)\
+         \n  artifacts-check load + run every AOT artifact (--artifacts DIR)"
+    );
+}
+
+fn device_of(args: &Args) -> Result<DeviceKind> {
+    DeviceKind::parse(&args.opt_or("device", "native"))
+}
+
+fn cmd_node(args: &Args) -> Result<()> {
+    let config = match args.opt("config") {
+        Some(path) => NodeConfig::from_file(Path::new(path))?,
+        None => NodeConfig::default(),
+    };
+    let listen = args.opt_or("listen", "127.0.0.1:0");
+    let mut node = rpulsar::coordinator::Node::new(config)?;
+    let endpoint = rpulsar::net::TcpEndpoint::bind(&listen)?;
+    println!("node {} listening on {}", node.name(), endpoint.local_addr());
+    // Event loop: serve AR messages until the process is killed.
+    loop {
+        match endpoint.recv_timeout(std::time::Duration::from_millis(500)) {
+            Some(rpulsar::net::NetMessage::Ar { msg, .. }) => match node.handle_ar(&msg) {
+                Ok(reactions) => log::info!("handled: {} reactions", reactions.len()),
+                Err(e) => log::warn!("ar error: {e}"),
+            },
+            Some(rpulsar::net::NetMessage::Ping { from }) => {
+                log::debug!("ping from {from}");
+            }
+            Some(other) => log::debug!("ignoring {other:?}"),
+            None => {}
+        }
+    }
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let n = args.opt_usize("nodes", 8)?;
+    let device = device_of(args)?;
+    let mut cluster = Cluster::new("cli", n, device)?;
+    println!(
+        "cluster up: {} nodes, {} regions",
+        cluster.len(),
+        cluster.quadtree().regions().count()
+    );
+    // Smoke workload: store + query a few records.
+    let origin = cluster.ids()[0];
+    for i in 0..10 {
+        let msg = ArMessage::builder()
+            .set_header(Profile::parse(&format!("sensor{i},lidar")).unwrap())
+            .set_sender("cli")
+            .set_action(Action::Store)
+            .set_data(vec![0u8; 256])
+            .build()?;
+        cluster.store_replicated(origin, &msg, 2)?;
+    }
+    let hits = cluster.query_wildcard(origin, &Profile::parse("sensor*,lidar")?)?;
+    println!("stored 10, wildcard-query found {}", hits.len());
+    println!(
+        "network: {} msgs, {} bytes, {:?} simulated",
+        cluster.network().messages(),
+        cluster.network().bytes(),
+        cluster.network().virtual_elapsed()
+    );
+    cluster.shutdown()
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let images = args.opt_usize("images", 100)?;
+    let device = device_of(args)?;
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let pipeline = DisasterRecoveryPipeline::new(&artifacts, DeviceProfile::for_kind(device))?;
+    let trace = LidarTrace::generate(42, images, 16.0);
+    println!("trace: {} images, {} nominal bytes", trace.len(), trace.total_bytes());
+
+    let rp = pipeline.run_rpulsar(&trace)?;
+    let sq = pipeline.run_baseline(&trace, BaselineKind::KafkaEdgentSqlite)?;
+    let nit = pipeline.run_baseline(&trace, BaselineKind::KafkaEdgentNitrite)?;
+    for r in [&rp, &sq, &nit] {
+        println!(
+            "{:24} total={:?} per-image={:?} edge={} core={} dropped={}",
+            r.system,
+            r.total(),
+            r.per_image(),
+            r.stored_at_edge,
+            r.forwarded_to_core,
+            r.dropped
+        );
+    }
+    let gain = 1.0 - rp.total().as_secs_f64() / sq.total().as_secs_f64();
+    println!("response-time gain vs kafka+edgent+sqlite: {:.1}%", gain * 100.0);
+    Ok(())
+}
+
+fn cmd_post(args: &Args) -> Result<()> {
+    let profile = Profile::parse(&args.opt_or("profile", "drone,lidar"))?;
+    let action = match args.opt_or("action", "store").as_str() {
+        "store" => Action::Store,
+        "statistics" => Action::Statistics,
+        "store-function" => Action::StoreFunction,
+        "start-function" => Action::StartFunction,
+        "stop-function" => Action::StopFunction,
+        "notify-interest" => Action::NotifyInterest,
+        "notify-data" => Action::NotifyData,
+        "delete" => Action::Delete,
+        other => return Err(Error::Config(format!("unknown action `{other}`"))),
+    };
+    let mut builder = ArMessage::builder()
+        .set_header(profile)
+        .set_sender("cli")
+        .set_action(action)
+        .set_data(args.opt_or("data", "").into_bytes());
+    if let Some(t) = args.opt("topology") {
+        builder = builder.set_topology(t);
+    }
+    let msg = builder.build()?;
+    let mut cluster = Cluster::new("post", args.opt_usize("nodes", 4)?, device_of(args)?)?;
+    let origin = cluster.ids()[0];
+    let results = cluster.post_from(origin, &msg)?;
+    for (target, reactions) in results {
+        println!("{target}: {reactions:?}");
+    }
+    cluster.shutdown()
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let runtime = PreprocessRuntime::load(&dir)?;
+    println!("platform: {}", runtime.engine().platform());
+    let tile = vec![0.5f32; 256 * 256];
+    let out = runtime.preprocess(&tile)?;
+    println!("preprocess: result={} quality={}", out.result, out.quality);
+    let (_, change) = runtime.change_detect(&tile, &tile)?;
+    println!("change_detect(identical): change={change}");
+    let score = runtime.quality_score(&out.stats)?;
+    println!("quality_score: {score}");
+    println!("artifacts OK");
+    Ok(())
+}

@@ -1,0 +1,220 @@
+//! Log-bucketed histogram for latency recording (HdrHistogram-lite).
+//!
+//! Values are bucketed as (exponent, 16 linear sub-buckets), giving a
+//! relative error bound of ~6% per bucket — plenty for bench reporting.
+//! Lock-free recording via atomics; snapshots are consistent-enough reads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const SUB_BUCKETS: usize = 16;
+const EXPONENTS: usize = 64;
+const NUM_BUCKETS: usize = EXPONENTS * SUB_BUCKETS;
+
+/// Concurrent log-bucketed histogram of u64 values (typically µs or ns).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+/// Point-in-time summary of a [`Histogram`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Snapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub p999: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let mut buckets = Vec::with_capacity(NUM_BUCKETS);
+        buckets.resize_with(NUM_BUCKETS, || AtomicU64::new(0));
+        Histogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    #[inline]
+    fn bucket_index(v: u64) -> usize {
+        if v < SUB_BUCKETS as u64 {
+            return v as usize;
+        }
+        let exp = 63 - v.leading_zeros() as usize; // exp >= 4
+        let sub = ((v >> (exp - 4)) & 0xF) as usize; // top 4 bits below the MSB
+        ((exp - 3) * SUB_BUCKETS + sub).min(NUM_BUCKETS - 1)
+    }
+
+    /// Representative (lower-bound) value for a bucket index.
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < SUB_BUCKETS {
+            return idx as u64;
+        }
+        let exp = idx / SUB_BUCKETS + 3;
+        let sub = (idx % SUB_BUCKETS) as u64;
+        (1u64 << exp) | (sub << (exp - 4))
+    }
+
+    /// Record one value.
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in microseconds.
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_micros() as u64);
+    }
+
+    /// Total number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Compute a summary snapshot.
+    pub fn snapshot(&self) -> Snapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let sum = self.sum.load(Ordering::Relaxed);
+        if count == 0 {
+            return Snapshot {
+                count: 0,
+                sum: 0,
+                min: 0,
+                max: 0,
+                mean: 0.0,
+                p50: 0,
+                p90: 0,
+                p99: 0,
+                p999: 0,
+            };
+        }
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        let pct = |q: f64| -> u64 {
+            let target = (q * total as f64).ceil() as u64;
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                cum += c;
+                if cum >= target {
+                    return Self::bucket_value(i);
+                }
+            }
+            Self::bucket_value(NUM_BUCKETS - 1)
+        };
+        Snapshot {
+            count,
+            sum,
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            mean: sum as f64 / count as f64,
+            p50: pct(0.50),
+            p90: pct(0.90),
+            p99: pct(0.99),
+            p999: pct(0.999),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        write!(f, "Histogram(count={}, p50={}, p99={}, max={})", s.count, s.p50, s.p99, s.max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = Histogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.snapshot().min, 0);
+        assert_eq!(h.snapshot().max, 15);
+        assert_eq!(h.snapshot().count, 16);
+    }
+
+    #[test]
+    fn bucket_round_trip_error_bounded() {
+        for v in [1u64, 16, 100, 1_000, 123_456, 9_999_999, u32::MAX as u64] {
+            let idx = Histogram::bucket_index(v);
+            let rep = Histogram::bucket_value(idx);
+            let err = (v as f64 - rep as f64).abs() / v as f64;
+            assert!(err <= 0.07, "v={v} rep={rep} err={err}");
+        }
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i);
+        }
+        let s = h.snapshot();
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.p999);
+        // p50 of uniform 1..=10k should be around 5000 (±7%).
+        assert!((s.p50 as f64 - 5_000.0).abs() / 5_000.0 < 0.1, "p50={}", s.p50);
+    }
+
+    #[test]
+    fn mean_matches_sum() {
+        let h = Histogram::new();
+        h.record(10);
+        h.record(20);
+        h.record(30);
+        let s = h.snapshot();
+        assert_eq!(s.sum, 60);
+        assert!((s.mean - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(i + t);
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+}

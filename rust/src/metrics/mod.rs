@@ -1,0 +1,234 @@
+//! Lightweight metrics: counters, gauges, log-bucketed latency histograms,
+//! throughput meters, and a registry used by the coordinator and benches.
+
+pub mod histogram;
+
+pub use histogram::Histogram;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous gauge (set/add/sub).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Throughput meter: counts events/bytes against a wall-clock window.
+#[derive(Debug)]
+pub struct Meter {
+    start: Instant,
+    events: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Meter { start: Instant::now(), events: AtomicU64::new(0), bytes: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn record(&self, bytes: u64) {
+        self.events.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Events per second since creation.
+    pub fn events_per_sec(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64().max(1e-9);
+        self.events() as f64 / secs
+    }
+
+    /// Bytes per second since creation.
+    pub fn bytes_per_sec(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64().max(1e-9);
+        self.bytes() as f64 / secs
+    }
+}
+
+impl Default for Meter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Named-metric registry; cheap to clone and share between threads.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter by name.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.inner.counters.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new())).clone()
+    }
+
+    /// Get or create a gauge by name.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.inner.gauges.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new())).clone()
+    }
+
+    /// Get or create a histogram by name (microsecond latencies by convention).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.inner.histograms.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())).clone()
+    }
+
+    /// Render a sorted text snapshot (one metric per line).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {name} {}\n", c.get()));
+        }
+        for (name, g) in self.inner.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {name} {}\n", g.get()));
+        }
+        for (name, h) in self.inner.histograms.lock().unwrap().iter() {
+            let s = h.snapshot();
+            out.push_str(&format!(
+                "histogram {name} count={} p50={} p99={} max={}\n",
+                s.count, s.p50, s.p99, s.max
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_set_add() {
+        let g = Gauge::new();
+        g.set(10);
+        g.add(-3);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn meter_counts_bytes_and_events() {
+        let m = Meter::new();
+        m.record(100);
+        m.record(50);
+        assert_eq!(m.events(), 2);
+        assert_eq!(m.bytes(), 150);
+        assert!(m.events_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn registry_deduplicates_by_name() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.counter("a").inc();
+        assert_eq!(r.counter("a").get(), 2);
+    }
+
+    #[test]
+    fn registry_render_mentions_all() {
+        let r = Registry::new();
+        r.counter("msgs").add(3);
+        r.gauge("depth").set(7);
+        r.histogram("lat").record(100);
+        let text = r.render();
+        assert!(text.contains("counter msgs 3"));
+        assert!(text.contains("gauge depth 7"));
+        assert!(text.contains("histogram lat"));
+    }
+
+    #[test]
+    fn registry_shared_across_threads() {
+        let r = Registry::new();
+        let c = r.counter("x");
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("x").get(), 4000);
+    }
+}

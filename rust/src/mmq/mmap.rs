@@ -1,0 +1,178 @@
+//! Safe wrapper over `libc::mmap` for file-backed shared mappings.
+//!
+//! (No `memmap2` crate offline; this is the minimal safe surface the
+//! queue needs: create/open, grow-to-size, slice access, `msync`.)
+
+use crate::error::{Error, Result};
+use std::fs::{File, OpenOptions};
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+use std::ptr::NonNull;
+
+/// A file-backed, read-write memory mapping.
+pub struct MmapRegion {
+    ptr: NonNull<u8>,
+    len: usize,
+    _file: File,
+}
+
+// The mapping is owned and the backing file is kept alive for the
+// region's lifetime; aliasing is controlled by &/&mut access.
+unsafe impl Send for MmapRegion {}
+
+impl MmapRegion {
+    /// Create (or open) `path`, ensure it is exactly `len` bytes, and map
+    /// it read-write shared.
+    pub fn create(path: &Path, len: usize) -> Result<Self> {
+        if len == 0 {
+            return Err(Error::Queue("mmap: zero-length mapping".into()));
+        }
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new().read(true).write(true).create(true).open(path)?;
+        file.set_len(len as u64)?;
+        Self::map(file, len)
+    }
+
+    /// Open an existing file and map its current size.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        let len = file.metadata()?.len() as usize;
+        if len == 0 {
+            return Err(Error::Queue(format!("mmap: {path:?} is empty")));
+        }
+        Self::map(file, len)
+    }
+
+    fn map(file: File, len: usize) -> Result<Self> {
+        // SAFETY: fd is valid and owned; length checked non-zero.
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        Ok(MmapRegion {
+            ptr: NonNull::new(ptr as *mut u8)
+                .ok_or_else(|| Error::Queue("mmap returned null".into()))?,
+            len,
+            _file: file,
+        })
+    }
+
+    /// Mapping length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Immutable view of the mapped bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: ptr/len valid for the mapping's lifetime.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    /// Mutable view of the mapped bytes.
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        // SAFETY: exclusive borrow of self guarantees unique access.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+
+    /// Flush dirty pages to the backing file. `async_flush` uses
+    /// `MS_ASYNC` (schedule, don't wait) — the queue's default because
+    /// the OS already guarantees write-back on crash of the *process*.
+    pub fn flush(&self, async_flush: bool) -> Result<()> {
+        let flags = if async_flush { libc::MS_ASYNC } else { libc::MS_SYNC };
+        // SAFETY: ptr/len describe a live mapping.
+        let rc = unsafe { libc::msync(self.ptr.as_ptr() as *mut libc::c_void, self.len, flags) };
+        if rc != 0 {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len describe a live mapping created by mmap.
+        unsafe {
+            libc::munmap(self.ptr.as_ptr() as *mut libc::c_void, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for MmapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MmapRegion(len={})", self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("rpulsar-mmap-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn create_write_read() {
+        let path = tmp("cwr");
+        let mut m = MmapRegion::create(&path, 4096).unwrap();
+        m.as_mut_slice()[0..5].copy_from_slice(b"hello");
+        assert_eq!(&m.as_slice()[0..5], b"hello");
+        assert_eq!(m.len(), 4096);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn data_survives_remap() {
+        // The core persistence claim: bytes written through the mapping
+        // are visible after unmapping and re-opening ("the operating
+        // system takes care of reading and writing to disk in the event
+        // of the program crashing").
+        let path = tmp("remap");
+        {
+            let mut m = MmapRegion::create(&path, 8192).unwrap();
+            m.as_mut_slice()[100..107].copy_from_slice(b"durable");
+            m.flush(false).unwrap();
+        } // munmap
+        let m = MmapRegion::open(&path).unwrap();
+        assert_eq!(&m.as_slice()[100..107], b"durable");
+        assert_eq!(m.len(), 8192);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn zero_length_rejected() {
+        assert!(MmapRegion::create(&tmp("zero"), 0).is_err());
+    }
+
+    #[test]
+    fn open_missing_file_errors() {
+        assert!(MmapRegion::open(Path::new("/nonexistent/rpulsar-xyz")).is_err());
+    }
+
+    #[test]
+    fn flush_modes_succeed() {
+        let path = tmp("flush");
+        let mut m = MmapRegion::create(&path, 4096).unwrap();
+        m.as_mut_slice()[0] = 42;
+        m.flush(true).unwrap();
+        m.flush(false).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,21 @@
+//! The memory-mapped data collection layer (paper §IV-C1).
+//!
+//! "To tackle these issues we designed and implemented a custom messaging
+//! hub specially designed for edge devices using a memory-mapped queue."
+//!
+//! A [`mmap::MmapRegion`] wraps `libc::mmap` over a backing file: writes
+//! go to page cache at memory speed and the operating system persists
+//! them even if the process crashes. Records are framed with a CRC
+//! ([`segment`]); the multi-segment [`queue`] adds rotation, consumer
+//! offsets and crash recovery; [`pubsub`] layers profile-keyed topics
+//! with the same persistence/durability/delivery guarantees as Kafka or
+//! Mosquitto — minus their per-message disk I/O.
+
+pub mod mmap;
+pub mod pubsub;
+pub mod queue;
+pub mod segment;
+
+pub use pubsub::Broker;
+pub use queue::{MemoryMappedQueue, QueueOptions};
+pub use segment::Segment;

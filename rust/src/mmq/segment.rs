@@ -1,0 +1,336 @@
+//! One append-only, memory-mapped log segment.
+//!
+//! Layout:
+//!
+//! ```text
+//! [0..8)   magic  "RPULSARQ"
+//! [8..12)  version (u32 le)
+//! [12..20) committed write offset (u64 le) — advanced after each append
+//! [20..24) base sequence number low bits (u32 le, informational)
+//! [24..64) reserved
+//! [64..)   records: [len u32][crc32 u32][payload len bytes], 8-byte aligned
+//! ```
+//!
+//! Recovery replays records while length/CRC are valid and consistent
+//! with the committed offset; a torn final record is discarded.
+
+use super::mmap::MmapRegion;
+use crate::error::{Error, Result};
+use crate::util::{align_up, crc32c};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"RPULSARQ";
+const VERSION: u32 = 1;
+/// First byte of the record area.
+pub const HEADER_SIZE: usize = 64;
+/// Per-record framing overhead.
+pub const RECORD_OVERHEAD: usize = 8;
+
+/// An append-only mmap-backed segment.
+pub struct Segment {
+    region: MmapRegion,
+    /// Next write position (bytes from start of file).
+    write_pos: usize,
+}
+
+impl Segment {
+    /// Create a fresh segment of `capacity` bytes at `path`.
+    pub fn create(path: &Path, capacity: usize) -> Result<Self> {
+        if capacity < HEADER_SIZE + RECORD_OVERHEAD {
+            return Err(Error::Queue(format!("segment capacity {capacity} too small")));
+        }
+        let mut region = MmapRegion::create(path, capacity)?;
+        let buf = region.as_mut_slice();
+        buf[0..8].copy_from_slice(MAGIC);
+        buf[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        buf[12..20].copy_from_slice(&(HEADER_SIZE as u64).to_le_bytes());
+        Ok(Segment { region, write_pos: HEADER_SIZE })
+    }
+
+    /// Re-open an existing segment, replaying its records (recovery).
+    pub fn open(path: &Path) -> Result<Self> {
+        let region = MmapRegion::open(path)?;
+        let buf = region.as_slice();
+        if buf.len() < HEADER_SIZE || &buf[0..8] != MAGIC {
+            return Err(Error::Queue(format!("{path:?}: not a segment file")));
+        }
+        let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(Error::Queue(format!("{path:?}: unsupported version {version}")));
+        }
+        let committed = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
+        // Walk records up to the committed offset, validating CRCs; stop
+        // at the first invalid frame (torn write).
+        let mut pos = HEADER_SIZE;
+        while pos + RECORD_OVERHEAD <= committed.min(buf.len()) {
+            let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+            if len == 0 || pos + RECORD_OVERHEAD + len > buf.len() {
+                break;
+            }
+            let stored_crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+            let payload = &buf[pos + 8..pos + 8 + len];
+            if crc32c(payload) != stored_crc {
+                break;
+            }
+            pos += align_up(RECORD_OVERHEAD + len, 8);
+        }
+        Ok(Segment { region, write_pos: pos })
+    }
+
+    /// Capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.region.len()
+    }
+
+    /// Bytes remaining for appends.
+    pub fn remaining(&self) -> usize {
+        self.capacity().saturating_sub(self.write_pos)
+    }
+
+    /// Current write position (== recovery point).
+    pub fn write_pos(&self) -> usize {
+        self.write_pos
+    }
+
+    /// Whether a payload of `len` bytes fits.
+    pub fn fits(&self, len: usize) -> bool {
+        align_up(RECORD_OVERHEAD + len, 8) <= self.remaining()
+    }
+
+    /// Append one record; returns its byte offset within the segment.
+    pub fn append(&mut self, payload: &[u8]) -> Result<usize> {
+        if payload.is_empty() {
+            return Err(Error::Queue("empty record".into()));
+        }
+        if payload.len() > u32::MAX as usize {
+            return Err(Error::Queue("record too large".into()));
+        }
+        if !self.fits(payload.len()) {
+            return Err(Error::Queue(format!(
+                "segment full: need {}, have {}",
+                align_up(RECORD_OVERHEAD + payload.len(), 8),
+                self.remaining()
+            )));
+        }
+        let pos = self.write_pos;
+        let crc = crc32c(payload);
+        let buf = self.region.as_mut_slice();
+        buf[pos..pos + 4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf[pos + 4..pos + 8].copy_from_slice(&crc.to_le_bytes());
+        buf[pos + 8..pos + 8 + payload.len()].copy_from_slice(payload);
+        self.write_pos = pos + align_up(RECORD_OVERHEAD + payload.len(), 8);
+        // Commit: publish the new offset in the header. A crash between
+        // the payload write and this store just loses the last record.
+        let committed = self.write_pos as u64;
+        self.region.as_mut_slice()[12..20].copy_from_slice(&committed.to_le_bytes());
+        Ok(pos)
+    }
+
+    /// Read the record at `offset` (as returned by [`Segment::append`]).
+    pub fn read(&self, offset: usize) -> Result<&[u8]> {
+        let buf = self.region.as_slice();
+        if offset < HEADER_SIZE || offset + RECORD_OVERHEAD > buf.len() {
+            return Err(Error::Queue(format!("bad record offset {offset}")));
+        }
+        let len = u32::from_le_bytes(buf[offset..offset + 4].try_into().unwrap()) as usize;
+        if len == 0 || offset + RECORD_OVERHEAD + len > buf.len() {
+            return Err(Error::Queue(format!("corrupt record at {offset}")));
+        }
+        let stored_crc = u32::from_le_bytes(buf[offset + 4..offset + 8].try_into().unwrap());
+        let payload = &buf[offset + 8..offset + 8 + len];
+        if crc32c(payload) != stored_crc {
+            return Err(Error::Queue(format!("crc mismatch at {offset}")));
+        }
+        Ok(payload)
+    }
+
+    /// Offset of the record following the one at `offset`, or None past
+    /// the write position.
+    pub fn next_offset(&self, offset: usize) -> Option<usize> {
+        let buf = self.region.as_slice();
+        if offset + RECORD_OVERHEAD > buf.len() {
+            return None;
+        }
+        let len = u32::from_le_bytes(buf[offset..offset + 4].try_into().unwrap()) as usize;
+        let next = offset + align_up(RECORD_OVERHEAD + len, 8);
+        if next >= self.write_pos {
+            None
+        } else {
+            Some(next)
+        }
+    }
+
+    /// Iterate all records from the start.
+    pub fn iter(&self) -> SegmentIter<'_> {
+        SegmentIter { segment: self, offset: HEADER_SIZE }
+    }
+
+    /// Flush dirty pages (`async` by default in the queue; `sync` used by
+    /// tests and explicit checkpoints).
+    pub fn flush(&self, sync: bool) -> Result<()> {
+        self.region.flush(!sync)
+    }
+}
+
+impl std::fmt::Debug for Segment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Segment(write_pos={}, cap={})", self.write_pos, self.capacity())
+    }
+}
+
+/// Iterator over a segment's records.
+pub struct SegmentIter<'a> {
+    segment: &'a Segment,
+    offset: usize,
+}
+
+impl<'a> Iterator for SegmentIter<'a> {
+    type Item = &'a [u8];
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.offset >= self.segment.write_pos {
+            return None;
+        }
+        let payload = self.segment.read(self.offset).ok()?;
+        self.offset = self.offset
+            + align_up(RECORD_OVERHEAD + payload.len(), 8);
+        Some(payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("rpulsar-segment-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}.seg", std::process::id()))
+    }
+
+    #[test]
+    fn append_then_read() {
+        let path = tmp("ar");
+        let mut s = Segment::create(&path, 4096).unwrap();
+        let o1 = s.append(b"first").unwrap();
+        let o2 = s.append(b"second message").unwrap();
+        assert_eq!(s.read(o1).unwrap(), b"first");
+        assert_eq!(s.read(o2).unwrap(), b"second message");
+        assert!(o2 > o1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn iteration_in_order() {
+        let path = tmp("iter");
+        let mut s = Segment::create(&path, 4096).unwrap();
+        for i in 0..10 {
+            s.append(format!("msg-{i}").as_bytes()).unwrap();
+        }
+        let all: Vec<Vec<u8>> = s.iter().map(|r| r.to_vec()).collect();
+        assert_eq!(all.len(), 10);
+        assert_eq!(all[0], b"msg-0");
+        assert_eq!(all[9], b"msg-9");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn recovery_after_reopen() {
+        let path = tmp("recover");
+        {
+            let mut s = Segment::create(&path, 4096).unwrap();
+            s.append(b"alpha").unwrap();
+            s.append(b"beta").unwrap();
+            s.flush(true).unwrap();
+        }
+        let s = Segment::open(&path).unwrap();
+        let all: Vec<Vec<u8>> = s.iter().map(|r| r.to_vec()).collect();
+        assert_eq!(all, vec![b"alpha".to_vec(), b"beta".to_vec()]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn recovery_discards_torn_record() {
+        let path = tmp("torn");
+        {
+            let mut s = Segment::create(&path, 4096).unwrap();
+            s.append(b"good").unwrap();
+            let bad = s.append(b"will-be-corrupted").unwrap();
+            // Corrupt the payload after the fact (simulated torn write).
+            s.region.as_mut_slice()[bad + 8] ^= 0xFF;
+            s.flush(true).unwrap();
+        }
+        let s = Segment::open(&path).unwrap();
+        let all: Vec<Vec<u8>> = s.iter().map(|r| r.to_vec()).collect();
+        assert_eq!(all, vec![b"good".to_vec()]);
+        // New appends go after the last good record.
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn append_after_recovery_continues() {
+        let path = tmp("cont");
+        {
+            let mut s = Segment::create(&path, 4096).unwrap();
+            s.append(b"one").unwrap();
+            s.flush(true).unwrap();
+        }
+        {
+            let mut s = Segment::open(&path).unwrap();
+            s.append(b"two").unwrap();
+            s.flush(true).unwrap();
+        }
+        let s = Segment::open(&path).unwrap();
+        let all: Vec<Vec<u8>> = s.iter().map(|r| r.to_vec()).collect();
+        assert_eq!(all, vec![b"one".to_vec(), b"two".to_vec()]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn full_segment_rejects_append() {
+        let path = tmp("full");
+        let mut s = Segment::create(&path, HEADER_SIZE + 32).unwrap();
+        s.append(&[7u8; 16]).unwrap();
+        assert!(!s.fits(16));
+        assert!(s.append(&[7u8; 16]).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_and_oversized_records_rejected() {
+        let path = tmp("sizes");
+        let mut s = Segment::create(&path, 4096).unwrap();
+        assert!(s.append(b"").is_err());
+        assert!(s.append(&vec![0u8; 8192]).is_err()); // exceeds capacity
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn read_rejects_bad_offsets() {
+        let path = tmp("badoff");
+        let mut s = Segment::create(&path, 4096).unwrap();
+        s.append(b"x").unwrap();
+        assert!(s.read(0).is_err()); // inside header
+        assert!(s.read(5000).is_err()); // out of bounds
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn open_rejects_non_segment() {
+        let path = tmp("notseg");
+        std::fs::write(&path, vec![0u8; 128]).unwrap();
+        assert!(Segment::open(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn next_offset_walks_records() {
+        let path = tmp("walk");
+        let mut s = Segment::create(&path, 4096).unwrap();
+        let o1 = s.append(b"aaa").unwrap();
+        let o2 = s.append(b"bbbbb").unwrap();
+        assert_eq!(s.next_offset(o1), Some(o2));
+        assert_eq!(s.next_offset(o2), None);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

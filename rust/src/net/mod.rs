@@ -1,0 +1,11 @@
+//! Transports: the wire protocol ([`wire`]), the cost-accounted
+//! simulated network for in-process clusters ([`sim`]), and a framed-TCP
+//! transport for real multi-process deployments ([`tcp`]).
+
+pub mod sim;
+pub mod tcp;
+pub mod wire;
+
+pub use sim::SimNetwork;
+pub use tcp::TcpEndpoint;
+pub use wire::NetMessage;

@@ -1,0 +1,175 @@
+//! Simulated transport for the in-process multi-node cluster
+//! (DESIGN.md: substitutes the paper's Chameleon deployment).
+//!
+//! Delivery is synchronous (the caller routes the message itself); what
+//! the simulation adds is *cost accounting*: every hop charges one-way
+//! latency plus bandwidth-proportional transfer time to a shared virtual
+//! clock, using the sending node's device profile. Benches read the
+//! virtual clock to report device-accurate latencies while running at
+//! host speed.
+
+use crate::device::profile::DeviceProfile;
+use crate::overlay::node_id::NodeId;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Shared simulated network.
+#[derive(Debug, Clone, Default)]
+pub struct SimNetwork {
+    inner: Arc<SimInner>,
+}
+
+#[derive(Debug, Default)]
+struct SimInner {
+    /// Per-node device profile (sender side pays the cost).
+    profiles: Mutex<BTreeMap<NodeId, DeviceProfile>>,
+    /// Virtual clock (ns) — accumulated network time.
+    virtual_ns: AtomicU64,
+    /// Message counter.
+    messages: AtomicU64,
+    /// Byte counter.
+    bytes: AtomicU64,
+    /// Partitioned (unreachable) nodes.
+    down: Mutex<Vec<NodeId>>,
+}
+
+impl SimNetwork {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a node with its device profile.
+    pub fn register(&self, id: NodeId, profile: DeviceProfile) {
+        self.inner.profiles.lock().unwrap().insert(id, profile);
+    }
+
+    /// Whether a node is registered and reachable.
+    pub fn is_reachable(&self, id: &NodeId) -> bool {
+        self.inner.profiles.lock().unwrap().contains_key(id)
+            && !self.inner.down.lock().unwrap().contains(id)
+    }
+
+    /// Partition a node (keep-alive failures, crash injection).
+    pub fn take_down(&self, id: NodeId) {
+        let mut down = self.inner.down.lock().unwrap();
+        if !down.contains(&id) {
+            down.push(id);
+        }
+    }
+
+    /// Heal a partition.
+    pub fn bring_up(&self, id: &NodeId) {
+        self.inner.down.lock().unwrap().retain(|d| d != id);
+    }
+
+    /// Charge one hop from `from` to `to` carrying `bytes`. Returns the
+    /// simulated duration, or `None` when either side is unreachable.
+    pub fn charge_hop(&self, from: &NodeId, to: &NodeId, bytes: usize) -> Option<Duration> {
+        if !self.is_reachable(from) || !self.is_reachable(to) {
+            return None;
+        }
+        let profiles = self.inner.profiles.lock().unwrap();
+        let p = profiles.get(from)?;
+        let transfer = if p.net_bandwidth.is_finite() && p.net_bandwidth > 0.0 {
+            bytes as f64 / (p.net_bandwidth * 1e6)
+        } else {
+            0.0
+        };
+        let d = Duration::from_nanos(((p.net_latency_us * 1e-6 + transfer) * 1e9) as u64);
+        self.inner.virtual_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.inner.messages.fetch_add(1, Ordering::Relaxed);
+        self.inner.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        Some(d)
+    }
+
+    /// Accumulated virtual network time.
+    pub fn virtual_elapsed(&self) -> Duration {
+        Duration::from_nanos(self.inner.virtual_ns.load(Ordering::Relaxed))
+    }
+
+    /// Total messages sent.
+    pub fn messages(&self) -> u64 {
+        self.inner.messages.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes sent.
+    pub fn bytes(&self) -> u64 {
+        self.inner.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Reset counters (bench iterations).
+    pub fn reset(&self) {
+        self.inner.virtual_ns.store(0, Ordering::Relaxed);
+        self.inner.messages.store(0, Ordering::Relaxed);
+        self.inner.bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(n: u32) -> NodeId {
+        NodeId::from_name(&format!("s-{n}"))
+    }
+
+    fn net2() -> (SimNetwork, NodeId, NodeId) {
+        let net = SimNetwork::new();
+        let (a, b) = (id(1), id(2));
+        net.register(a, DeviceProfile::raspberry_pi());
+        net.register(b, DeviceProfile::raspberry_pi());
+        (net, a, b)
+    }
+
+    #[test]
+    fn hop_charges_latency_and_bandwidth() {
+        let (net, a, b) = net2();
+        let d = net.charge_hop(&a, &b, 1_000_000).unwrap();
+        // 300 µs + 1 MB / 11 MB/s ≈ 91.2 ms.
+        let expected = 300e-6 + 1.0 / 11e6 * 1e6;
+        assert!((d.as_secs_f64() - expected).abs() < 1e-3, "{d:?}");
+        assert_eq!(net.messages(), 1);
+        assert_eq!(net.bytes(), 1_000_000);
+        assert_eq!(net.virtual_elapsed(), d);
+    }
+
+    #[test]
+    fn unknown_nodes_unreachable() {
+        let net = SimNetwork::new();
+        assert!(!net.is_reachable(&id(9)));
+        assert!(net.charge_hop(&id(9), &id(10), 10).is_none());
+    }
+
+    #[test]
+    fn partition_and_heal() {
+        let (net, a, b) = net2();
+        net.take_down(b);
+        assert!(net.charge_hop(&a, &b, 10).is_none());
+        assert!(!net.is_reachable(&b));
+        net.bring_up(&b);
+        assert!(net.charge_hop(&a, &b, 10).is_some());
+    }
+
+    #[test]
+    fn reset_clears_counters() {
+        let (net, a, b) = net2();
+        net.charge_hop(&a, &b, 100).unwrap();
+        net.reset();
+        assert_eq!(net.messages(), 0);
+        assert_eq!(net.virtual_elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn sender_profile_determines_cost() {
+        let net = SimNetwork::new();
+        let pi = id(1);
+        let cloud = id(2);
+        net.register(pi, DeviceProfile::raspberry_pi());
+        net.register(cloud, DeviceProfile::cloud_small());
+        let from_pi = net.charge_hop(&pi, &cloud, 1_000_000).unwrap();
+        let from_cloud = net.charge_hop(&cloud, &pi, 1_000_000).unwrap();
+        assert!(from_pi > from_cloud, "Pi uplink is slower than cloud NIC");
+    }
+}

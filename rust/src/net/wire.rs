@@ -1,0 +1,155 @@
+//! Wire protocol: the messages RPs exchange, with a framed binary codec
+//! (length-prefixed frames over TCP; raw structs over the simulated
+//! transport).
+
+use crate::ar::message::ArMessage;
+use crate::error::{Error, Result};
+use crate::overlay::node_id::{NodeId, ID_BYTES};
+use crate::util::codec::{ByteReader, ByteWriter};
+
+/// Overlay/application messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetMessage {
+    /// Join-phase discovery broadcast.
+    Discovery { from: NodeId },
+    /// Answer to a discovery: the responder's id (routing-table seed).
+    DiscoveryReply { from: NodeId },
+    /// Keep-alive probe.
+    Ping { from: NodeId },
+    /// Keep-alive answer.
+    Pong { from: NodeId },
+    /// An AR message for the rendezvous layer.
+    Ar { from: NodeId, msg: ArMessage },
+    /// Stream data push (paper's `push` primitive payload).
+    Push { from: NodeId, topic: String, payload: Vec<u8> },
+}
+
+impl NetMessage {
+    fn tag(&self) -> u8 {
+        match self {
+            NetMessage::Discovery { .. } => 0,
+            NetMessage::DiscoveryReply { .. } => 1,
+            NetMessage::Ping { .. } => 2,
+            NetMessage::Pong { .. } => 3,
+            NetMessage::Ar { .. } => 4,
+            NetMessage::Push { .. } => 5,
+        }
+    }
+
+    /// Sender id.
+    pub fn from(&self) -> NodeId {
+        match self {
+            NetMessage::Discovery { from }
+            | NetMessage::DiscoveryReply { from }
+            | NetMessage::Ping { from }
+            | NetMessage::Pong { from }
+            | NetMessage::Ar { from, .. }
+            | NetMessage::Push { from, .. } => *from,
+        }
+    }
+
+    /// Encode to a frame body.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u8(self.tag());
+        w.put_raw(&self.from().0);
+        match self {
+            NetMessage::Ar { msg, .. } => {
+                w.put_bytes(&msg.encode());
+            }
+            NetMessage::Push { topic, payload, .. } => {
+                w.put_str(topic);
+                w.put_bytes(payload);
+            }
+            _ => {}
+        }
+        w.into_bytes()
+    }
+
+    /// Decode from a frame body.
+    pub fn decode(bytes: &[u8]) -> Result<NetMessage> {
+        let mut r = ByteReader::new(bytes);
+        let tag = r.get_u8()?;
+        let id_bytes: [u8; ID_BYTES] = r
+            .get_raw(ID_BYTES)?
+            .try_into()
+            .map_err(|_| Error::Parse("short node id".into()))?;
+        let from = NodeId(id_bytes);
+        Ok(match tag {
+            0 => NetMessage::Discovery { from },
+            1 => NetMessage::DiscoveryReply { from },
+            2 => NetMessage::Ping { from },
+            3 => NetMessage::Pong { from },
+            4 => NetMessage::Ar { from, msg: ArMessage::decode(r.get_bytes()?)? },
+            5 => NetMessage::Push {
+                from,
+                topic: r.get_str()?.to_string(),
+                payload: r.get_bytes()?.to_vec(),
+            },
+            other => return Err(Error::Parse(format!("unknown wire tag {other}"))),
+        })
+    }
+
+    /// Approximate on-wire size (latency accounting).
+    pub fn wire_size(&self) -> usize {
+        self.encode().len() + 4 // + frame length prefix
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ar::message::Action;
+    use crate::ar::profile::Profile;
+
+    fn id(n: u32) -> NodeId {
+        NodeId::from_name(&format!("w-{n}"))
+    }
+
+    #[test]
+    fn control_messages_round_trip() {
+        for msg in [
+            NetMessage::Discovery { from: id(1) },
+            NetMessage::DiscoveryReply { from: id(2) },
+            NetMessage::Ping { from: id(3) },
+            NetMessage::Pong { from: id(4) },
+        ] {
+            let bytes = msg.encode();
+            assert_eq!(NetMessage::decode(&bytes).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn ar_message_round_trip() {
+        let ar = ArMessage::builder()
+            .set_header(Profile::parse("drone,lidar").unwrap())
+            .set_sender("drone-1")
+            .set_action(Action::Store)
+            .set_data(vec![9, 8, 7])
+            .build()
+            .unwrap();
+        let msg = NetMessage::Ar { from: id(5), msg: ar };
+        let bytes = msg.encode();
+        assert_eq!(NetMessage::decode(&bytes).unwrap(), msg);
+    }
+
+    #[test]
+    fn push_round_trip() {
+        let msg = NetMessage::Push {
+            from: id(6),
+            topic: "drone,lidar".into(),
+            payload: vec![0u8; 100],
+        };
+        assert_eq!(NetMessage::decode(&msg.encode()).unwrap(), msg);
+        assert!(msg.wire_size() > 100);
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(NetMessage::decode(&[]).is_err());
+        assert!(NetMessage::decode(&[99]).is_err());
+        let mut bytes = NetMessage::Ping { from: id(1) }.encode();
+        bytes[0] = 42; // unknown tag
+        assert!(NetMessage::decode(&bytes).is_err());
+    }
+}

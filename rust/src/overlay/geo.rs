@@ -1,0 +1,188 @@
+//! Geographic primitives: points and axis-aligned rectangles, plus the
+//! quadrant arithmetic used by the quadtree.
+
+/// A WGS-84 latitude/longitude point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeoPoint {
+    pub lat: f64,
+    pub lon: f64,
+}
+
+impl GeoPoint {
+    pub fn new(lat: f64, lon: f64) -> Self {
+        GeoPoint { lat, lon }
+    }
+
+    /// Whether the point is a valid WGS-84 coordinate.
+    pub fn is_valid(&self) -> bool {
+        (-90.0..=90.0).contains(&self.lat) && (-180.0..=180.0).contains(&self.lon)
+    }
+
+    /// Squared Euclidean distance in degree space (ordering only).
+    pub fn dist2(&self, other: &GeoPoint) -> f64 {
+        let dlat = self.lat - other.lat;
+        let dlon = self.lon - other.lon;
+        dlat * dlat + dlon * dlon
+    }
+}
+
+/// Axis-aligned bounding box: `[min_lat, max_lat) × [min_lon, max_lon)`
+/// with the convention that the world root is inclusive at the top edges.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rect {
+    pub min_lat: f64,
+    pub max_lat: f64,
+    pub min_lon: f64,
+    pub max_lon: f64,
+}
+
+/// Quadrant order used throughout the overlay: NW, NE, SW, SE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Quadrant {
+    NorthWest = 0,
+    NorthEast = 1,
+    SouthWest = 2,
+    SouthEast = 3,
+}
+
+impl Rect {
+    /// The whole WGS-84 world.
+    pub fn world() -> Self {
+        Rect { min_lat: -90.0, max_lat: 90.0, min_lon: -180.0, max_lon: 180.0 }
+    }
+
+    pub fn new(min_lat: f64, max_lat: f64, min_lon: f64, max_lon: f64) -> Self {
+        debug_assert!(min_lat < max_lat && min_lon < max_lon);
+        Rect { min_lat, max_lat, min_lon, max_lon }
+    }
+
+    /// Whether a point lies inside (half-open, top edges inclusive only
+    /// for the world bounds).
+    pub fn contains(&self, p: &GeoPoint) -> bool {
+        p.lat >= self.min_lat
+            && (p.lat < self.max_lat || (self.max_lat == 90.0 && p.lat == 90.0))
+            && p.lon >= self.min_lon
+            && (p.lon < self.max_lon || (self.max_lon == 180.0 && p.lon == 180.0))
+    }
+
+    /// Centre point.
+    pub fn center(&self) -> GeoPoint {
+        GeoPoint::new(
+            (self.min_lat + self.max_lat) / 2.0,
+            (self.min_lon + self.max_lon) / 2.0,
+        )
+    }
+
+    /// Which quadrant a contained point falls into.
+    pub fn quadrant_of(&self, p: &GeoPoint) -> Quadrant {
+        let c = self.center();
+        match (p.lat >= c.lat, p.lon >= c.lon) {
+            (true, false) => Quadrant::NorthWest,
+            (true, true) => Quadrant::NorthEast,
+            (false, false) => Quadrant::SouthWest,
+            (false, true) => Quadrant::SouthEast,
+        }
+    }
+
+    /// The sub-rectangle for a quadrant.
+    pub fn quadrant_rect(&self, q: Quadrant) -> Rect {
+        let c = self.center();
+        match q {
+            Quadrant::NorthWest => Rect::new(c.lat, self.max_lat, self.min_lon, c.lon),
+            Quadrant::NorthEast => Rect::new(c.lat, self.max_lat, c.lon, self.max_lon),
+            Quadrant::SouthWest => Rect::new(self.min_lat, c.lat, self.min_lon, c.lon),
+            Quadrant::SouthEast => Rect::new(self.min_lat, c.lat, c.lon, self.max_lon),
+        }
+    }
+
+    /// All four quadrants in [`Quadrant`] order.
+    pub fn quadrants(&self) -> [Rect; 4] {
+        [
+            self.quadrant_rect(Quadrant::NorthWest),
+            self.quadrant_rect(Quadrant::NorthEast),
+            self.quadrant_rect(Quadrant::SouthWest),
+            self.quadrant_rect(Quadrant::SouthEast),
+        ]
+    }
+
+    /// Whether two rects overlap (half-open semantics).
+    pub fn intersects(&self, other: &Rect) -> bool {
+        self.min_lat < other.max_lat
+            && other.min_lat < self.max_lat
+            && self.min_lon < other.max_lon
+            && other.min_lon < self.max_lon
+    }
+}
+
+impl Quadrant {
+    pub fn from_index(i: usize) -> Quadrant {
+        match i {
+            0 => Quadrant::NorthWest,
+            1 => Quadrant::NorthEast,
+            2 => Quadrant::SouthWest,
+            _ => Quadrant::SouthEast,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_contains_extremes() {
+        let w = Rect::world();
+        assert!(w.contains(&GeoPoint::new(90.0, 180.0)));
+        assert!(w.contains(&GeoPoint::new(-90.0, -180.0)));
+        assert!(w.contains(&GeoPoint::new(0.0, 0.0)));
+    }
+
+    #[test]
+    fn quadrants_partition_the_rect() {
+        let r = Rect::new(0.0, 10.0, 0.0, 10.0);
+        let quads = r.quadrants();
+        // Every probe point is in exactly one quadrant.
+        for lat in [1.0, 4.9, 5.0, 9.9] {
+            for lon in [1.0, 4.9, 5.0, 9.9] {
+                let p = GeoPoint::new(lat, lon);
+                let n = quads.iter().filter(|q| q.contains(&p)).count();
+                assert_eq!(n, 1, "point {p:?} in {n} quadrants");
+            }
+        }
+    }
+
+    #[test]
+    fn quadrant_of_matches_quadrant_rect() {
+        let r = Rect::new(-10.0, 10.0, -10.0, 10.0);
+        for (lat, lon) in [(5.0, -5.0), (5.0, 5.0), (-5.0, -5.0), (-5.0, 5.0)] {
+            let p = GeoPoint::new(lat, lon);
+            let q = r.quadrant_of(&p);
+            assert!(r.quadrant_rect(q).contains(&p), "{p:?} not in its quadrant {q:?}");
+        }
+    }
+
+    #[test]
+    fn paper_coordinates_land_in_northeast_of_world() {
+        // Paper's example: Rutgers area, lat 40.0583, lon -74.4056.
+        let w = Rect::world();
+        let p = GeoPoint::new(40.0583, -74.4056);
+        assert!(p.is_valid());
+        assert_eq!(w.quadrant_of(&p), Quadrant::NorthWest); // lat>=0, lon<0
+    }
+
+    #[test]
+    fn intersects_basics() {
+        let a = Rect::new(0.0, 10.0, 0.0, 10.0);
+        let b = Rect::new(5.0, 15.0, 5.0, 15.0);
+        let c = Rect::new(10.0, 20.0, 10.0, 20.0); // touches edge only
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c));
+    }
+
+    #[test]
+    fn dist2_is_zero_on_self() {
+        let p = GeoPoint::new(1.0, 2.0);
+        assert_eq!(p.dist2(&p), 0.0);
+        assert!(p.dist2(&GeoPoint::new(2.0, 2.0)) > 0.0);
+    }
+}

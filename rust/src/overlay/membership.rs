@@ -1,0 +1,249 @@
+//! Membership: join/bootstrap protocol state machine and keep-alive
+//! failure detection (paper §IV-A and §IV-E).
+//!
+//! The join ("bootstrap") phase: a joining RP sends a discovery message;
+//! if unanswered within a timeout it assumes it is first and becomes the
+//! master. The running phase has a *stabilisation* mode (respond to
+//! queries, keep routing tables fresh, verify peers are alive) and a
+//! *user* mode. Keep-alive: peers ping the master periodically; a master
+//! that misses `max_misses` keep-alives triggers a Hirschberg–Sinclair
+//! election.
+
+use super::node_id::NodeId;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Join-phase state machine states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinState {
+    /// Discovery message sent, waiting for an answer.
+    Discovering,
+    /// An existing RP answered; routing table being built.
+    Joining,
+    /// No answer within the timeout: first node, becomes master.
+    BecameMaster,
+    /// Fully joined, running (stabilisation + user modes).
+    Running,
+}
+
+/// Join-phase tracker for one node.
+#[derive(Debug)]
+pub struct JoinProtocol {
+    state: JoinState,
+    started: Instant,
+    timeout: Duration,
+}
+
+impl JoinProtocol {
+    /// Begin discovery with the paper's "order of seconds" timeout.
+    pub fn start(timeout: Duration) -> Self {
+        JoinProtocol { state: JoinState::Discovering, started: Instant::now(), timeout }
+    }
+
+    pub fn state(&self) -> JoinState {
+        self.state
+    }
+
+    /// An existing RP answered our discovery.
+    pub fn on_answer(&mut self) {
+        if self.state == JoinState::Discovering {
+            self.state = JoinState::Joining;
+        }
+    }
+
+    /// Routing table has been built; enter running mode.
+    pub fn on_table_built(&mut self) {
+        if matches!(self.state, JoinState::Joining | JoinState::BecameMaster) {
+            self.state = JoinState::Running;
+        }
+    }
+
+    /// Drive timeouts; returns true if this tick made us master.
+    pub fn tick(&mut self, now: Instant) -> bool {
+        if self.state == JoinState::Discovering && now.duration_since(self.started) >= self.timeout
+        {
+            self.state = JoinState::BecameMaster;
+            return true;
+        }
+        false
+    }
+}
+
+/// Event emitted by the failure detector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MembershipEvent {
+    /// Peer missed enough keep-alives to be declared failed.
+    PeerFailed(NodeId),
+    /// A failed peer answered again before removal (flapping).
+    PeerRecovered(NodeId),
+}
+
+#[derive(Debug, Clone)]
+struct PeerState {
+    last_seen: Instant,
+    misses: u32,
+    failed: bool,
+}
+
+/// Keep-alive based failure detector ("peers send periodic keep alive
+/// messages; if the master peer doesn't respond the leader election is
+/// performed").
+#[derive(Debug)]
+pub struct FailureDetector {
+    period: Duration,
+    max_misses: u32,
+    peers: BTreeMap<NodeId, PeerState>,
+}
+
+impl FailureDetector {
+    pub fn new(period: Duration, max_misses: u32) -> Self {
+        FailureDetector { period, max_misses: max_misses.max(1), peers: BTreeMap::new() }
+    }
+
+    /// Start tracking a peer (counts as just-seen).
+    pub fn track(&mut self, id: NodeId, now: Instant) {
+        self.peers.insert(id, PeerState { last_seen: now, misses: 0, failed: false });
+    }
+
+    /// Stop tracking a peer.
+    pub fn untrack(&mut self, id: &NodeId) {
+        self.peers.remove(id);
+    }
+
+    /// Record a keep-alive response from a peer.
+    pub fn heard_from(&mut self, id: &NodeId, now: Instant) -> Option<MembershipEvent> {
+        let st = self.peers.get_mut(id)?;
+        st.last_seen = now;
+        st.misses = 0;
+        if st.failed {
+            st.failed = false;
+            return Some(MembershipEvent::PeerRecovered(*id));
+        }
+        None
+    }
+
+    /// Advance time; emit failure events for peers that crossed the miss
+    /// threshold on this tick.
+    pub fn tick(&mut self, now: Instant) -> Vec<MembershipEvent> {
+        let mut events = Vec::new();
+        for (id, st) in self.peers.iter_mut() {
+            if st.failed {
+                continue;
+            }
+            let silent_for = now.duration_since(st.last_seen);
+            let misses = (silent_for.as_nanos() / self.period.as_nanos().max(1)) as u32;
+            st.misses = misses;
+            if misses >= self.max_misses {
+                st.failed = true;
+                events.push(MembershipEvent::PeerFailed(*id));
+            }
+        }
+        events
+    }
+
+    /// Whether a peer is currently considered alive.
+    pub fn is_alive(&self, id: &NodeId) -> bool {
+        self.peers.get(id).map(|s| !s.failed).unwrap_or(false)
+    }
+
+    /// All currently-alive peer ids.
+    pub fn alive_peers(&self) -> Vec<NodeId> {
+        self.peers.iter().filter(|(_, s)| !s.failed).map(|(id, _)| *id).collect()
+    }
+
+    /// Tracked peer count.
+    pub fn len(&self) -> usize {
+        self.peers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.peers.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(n: u32) -> NodeId {
+        NodeId::from_name(&format!("m-{n}"))
+    }
+
+    #[test]
+    fn join_becomes_master_on_timeout() {
+        let mut j = JoinProtocol::start(Duration::from_millis(10));
+        let t0 = Instant::now();
+        assert_eq!(j.state(), JoinState::Discovering);
+        assert!(!j.tick(t0));
+        assert!(j.tick(t0 + Duration::from_millis(11)));
+        assert_eq!(j.state(), JoinState::BecameMaster);
+        j.on_table_built();
+        assert_eq!(j.state(), JoinState::Running);
+    }
+
+    #[test]
+    fn join_answer_prevents_mastership() {
+        let mut j = JoinProtocol::start(Duration::from_millis(10));
+        j.on_answer();
+        assert_eq!(j.state(), JoinState::Joining);
+        assert!(!j.tick(Instant::now() + Duration::from_secs(1)));
+        j.on_table_built();
+        assert_eq!(j.state(), JoinState::Running);
+    }
+
+    #[test]
+    fn detector_flags_silent_peer() {
+        let mut fd = FailureDetector::new(Duration::from_millis(100), 3);
+        let t0 = Instant::now();
+        fd.track(id(1), t0);
+        assert!(fd.tick(t0 + Duration::from_millis(250)).is_empty()); // 2 misses
+        let events = fd.tick(t0 + Duration::from_millis(301));
+        assert_eq!(events, vec![MembershipEvent::PeerFailed(id(1))]);
+        assert!(!fd.is_alive(&id(1)));
+        // No duplicate event on next tick.
+        assert!(fd.tick(t0 + Duration::from_millis(400)).is_empty());
+    }
+
+    #[test]
+    fn heard_from_resets_misses() {
+        let mut fd = FailureDetector::new(Duration::from_millis(100), 3);
+        let t0 = Instant::now();
+        fd.track(id(1), t0);
+        fd.tick(t0 + Duration::from_millis(250));
+        assert!(fd.heard_from(&id(1), t0 + Duration::from_millis(260)).is_none());
+        assert!(fd.tick(t0 + Duration::from_millis(500)).is_empty()); // only ~2 misses since 260
+        assert!(fd.is_alive(&id(1)));
+    }
+
+    #[test]
+    fn recovery_event_after_failure() {
+        let mut fd = FailureDetector::new(Duration::from_millis(10), 2);
+        let t0 = Instant::now();
+        fd.track(id(1), t0);
+        fd.tick(t0 + Duration::from_millis(100));
+        assert!(!fd.is_alive(&id(1)));
+        let ev = fd.heard_from(&id(1), t0 + Duration::from_millis(110));
+        assert_eq!(ev, Some(MembershipEvent::PeerRecovered(id(1))));
+        assert!(fd.is_alive(&id(1)));
+    }
+
+    #[test]
+    fn alive_peers_lists_only_alive() {
+        let mut fd = FailureDetector::new(Duration::from_millis(10), 1);
+        let t0 = Instant::now();
+        fd.track(id(1), t0);
+        fd.track(id(2), t0 + Duration::from_millis(95));
+        fd.tick(t0 + Duration::from_millis(100));
+        let alive = fd.alive_peers();
+        assert_eq!(alive, vec![id(2)].into_iter().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn untrack_removes() {
+        let mut fd = FailureDetector::new(Duration::from_millis(10), 1);
+        fd.track(id(1), Instant::now());
+        fd.untrack(&id(1));
+        assert!(fd.is_empty());
+        assert!(!fd.is_alive(&id(1)));
+    }
+}

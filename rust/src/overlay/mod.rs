@@ -1,0 +1,20 @@
+//! Layer 1 of the paper (§IV-A): the location-aware, self-organising,
+//! fault-tolerant P2P overlay.
+//!
+//! The geographic space is indexed by a point [`quadtree`]; every leaf
+//! region hosts an XOR-metric [`ring`] of Rendezvous Points with 160-bit
+//! [`node_id`]s. Region masters maintain the quadtree, decide splits, and
+//! are re-elected with the Hirschberg–Sinclair algorithm ([`election`])
+//! when keep-alives ([`membership`]) detect a failure.
+
+pub mod election;
+pub mod geo;
+pub mod membership;
+pub mod node_id;
+pub mod quadtree;
+pub mod ring;
+
+pub use geo::{GeoPoint, Rect};
+pub use node_id::NodeId;
+pub use quadtree::{QuadTree, RegionId};
+pub use ring::RoutingTable;

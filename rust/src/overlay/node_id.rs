@@ -1,0 +1,207 @@
+//! 160-bit node identifiers with the XOR (Kademlia) metric.
+//!
+//! The paper (§IV-A) uses 160-bit unique identifiers ("more peers than you
+//! can address with IPv6"); we derive them with SHA-1 exactly as
+//! Kademlia-family systems do. Content routing places Hilbert-curve
+//! indices into the *top* 64 bits of the same space so data keys and node
+//! ids share one metric (§IV-B).
+
+use crate::util::hex;
+use sha1::{Digest, Sha1};
+
+/// Number of bytes in an id (160 bits).
+pub const ID_BYTES: usize = 20;
+/// Number of bits in an id.
+pub const ID_BITS: usize = ID_BYTES * 8;
+
+/// A 160-bit overlay identifier.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub [u8; ID_BYTES]);
+
+impl NodeId {
+    /// All-zero id.
+    pub const ZERO: NodeId = NodeId([0; ID_BYTES]);
+
+    /// Derive an id by hashing a name (node names, function names).
+    pub fn from_name(name: &str) -> Self {
+        let mut h = Sha1::new();
+        h.update(name.as_bytes());
+        NodeId(h.finalize().into())
+    }
+
+    /// Derive an id from raw bytes (hashed).
+    pub fn from_bytes_hashed(data: &[u8]) -> Self {
+        let mut h = Sha1::new();
+        h.update(data);
+        NodeId(h.finalize().into())
+    }
+
+    /// Build an id whose *top 64 bits* are `index` and the rest zero —
+    /// used to embed a Hilbert SFC index into the overlay id space so the
+    /// natural XOR-closest node owns the curve segment around it.
+    pub fn from_sfc_index(index: u64) -> Self {
+        let mut bytes = [0u8; ID_BYTES];
+        bytes[..8].copy_from_slice(&index.to_be_bytes());
+        NodeId(bytes)
+    }
+
+    /// Top 64 bits interpreted as an SFC index.
+    pub fn sfc_index(&self) -> u64 {
+        u64::from_be_bytes(self.0[..8].try_into().unwrap())
+    }
+
+    /// XOR distance to another id.
+    pub fn distance(&self, other: &NodeId) -> Distance {
+        let mut d = [0u8; ID_BYTES];
+        for i in 0..ID_BYTES {
+            d[i] = self.0[i] ^ other.0[i];
+        }
+        Distance(d)
+    }
+
+    /// Index of the highest differing bit (0 = most significant) —
+    /// the Kademlia bucket index. `None` when ids are equal.
+    pub fn bucket_index(&self, other: &NodeId) -> Option<usize> {
+        for i in 0..ID_BYTES {
+            let x = self.0[i] ^ other.0[i];
+            if x != 0 {
+                return Some(i * 8 + x.leading_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Bit at position `i` (0 = most significant).
+    pub fn bit(&self, i: usize) -> bool {
+        debug_assert!(i < ID_BITS);
+        (self.0[i / 8] >> (7 - i % 8)) & 1 == 1
+    }
+
+    /// Hex rendering (full).
+    pub fn to_hex(&self) -> String {
+        hex::encode(&self.0)
+    }
+
+    /// Parse from full hex.
+    pub fn from_hex(s: &str) -> Option<Self> {
+        let bytes = hex::decode(s)?;
+        let arr: [u8; ID_BYTES] = bytes.try_into().ok()?;
+        Some(NodeId(arr))
+    }
+}
+
+impl std::fmt::Debug for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "NodeId({}…)", &self.to_hex()[..10])
+    }
+}
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", &self.to_hex()[..10])
+    }
+}
+
+/// XOR distance between two ids; ordered big-endian.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Distance(pub [u8; ID_BYTES]);
+
+impl Distance {
+    pub const ZERO: Distance = Distance([0; ID_BYTES]);
+
+    /// Number of leading zero bits (longer common prefix ⇒ closer).
+    pub fn leading_zeros(&self) -> usize {
+        for (i, &b) in self.0.iter().enumerate() {
+            if b != 0 {
+                return i * 8 + b.leading_zeros() as usize;
+            }
+        }
+        ID_BITS
+    }
+}
+
+impl std::fmt::Debug for Distance {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Distance(lz={})", self.leading_zeros())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_name_is_deterministic_and_distinct() {
+        assert_eq!(NodeId::from_name("rp-1"), NodeId::from_name("rp-1"));
+        assert_ne!(NodeId::from_name("rp-1"), NodeId::from_name("rp-2"));
+    }
+
+    #[test]
+    fn sha1_known_vector() {
+        // sha1("abc") = a9993e36...
+        let id = NodeId::from_name("abc");
+        assert!(id.to_hex().starts_with("a9993e36"));
+    }
+
+    #[test]
+    fn distance_is_symmetric_and_zero_on_self() {
+        let a = NodeId::from_name("a");
+        let b = NodeId::from_name("b");
+        assert_eq!(a.distance(&b), b.distance(&a));
+        assert_eq!(a.distance(&a), Distance::ZERO);
+    }
+
+    #[test]
+    fn xor_metric_triangle_equality_property() {
+        // d(a,c) = d(a,b) XOR d(b,c) — the defining Kademlia property.
+        let a = NodeId::from_name("a");
+        let b = NodeId::from_name("b");
+        let c = NodeId::from_name("c");
+        let ab = a.distance(&b);
+        let bc = b.distance(&c);
+        let ac = a.distance(&c);
+        let mut x = [0u8; ID_BYTES];
+        for i in 0..ID_BYTES {
+            x[i] = ab.0[i] ^ bc.0[i];
+        }
+        assert_eq!(Distance(x), ac);
+    }
+
+    #[test]
+    fn bucket_index_matches_leading_zeros() {
+        let a = NodeId::from_name("node-a");
+        let b = NodeId::from_name("node-b");
+        let bucket = a.bucket_index(&b).unwrap();
+        assert_eq!(bucket, a.distance(&b).leading_zeros());
+        assert!(a.bucket_index(&a).is_none());
+    }
+
+    #[test]
+    fn sfc_index_round_trip() {
+        for idx in [0u64, 1, 0xDEAD_BEEF, u64::MAX] {
+            assert_eq!(NodeId::from_sfc_index(idx).sfc_index(), idx);
+        }
+    }
+
+    #[test]
+    fn sfc_index_order_preserved_by_id_order() {
+        // Embedding in the top bits preserves ordering of SFC indices.
+        let a = NodeId::from_sfc_index(100);
+        let b = NodeId::from_sfc_index(200);
+        assert!(a < b);
+    }
+
+    #[test]
+    fn bit_access() {
+        let id = NodeId::from_sfc_index(1u64 << 63); // top bit set
+        assert!(id.bit(0));
+        assert!(!id.bit(1));
+    }
+
+    #[test]
+    fn hex_round_trip() {
+        let id = NodeId::from_name("round-trip");
+        assert_eq!(NodeId::from_hex(&id.to_hex()).unwrap(), id);
+        assert!(NodeId::from_hex("abcd").is_none()); // wrong length
+    }
+}

@@ -1,0 +1,472 @@
+//! Point quadtree of geographic regions (paper §IV-A, Fig. 1).
+//!
+//! Each internal node has exactly four children; each leaf is a *region*
+//! hosting a P2P ring of Rendezvous Points. The master RP "mans" the
+//! quadtree and dictates when to divide: a region may split only when each
+//! of the four new regions would retain at least `min_rps` members (the
+//! paper's replication invariant). Every region master keeps a full copy
+//! of the tree, so the structure survives RP failures.
+
+use super::geo::{GeoPoint, Rect};
+use super::node_id::NodeId;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Stable identifier of a quadtree region: the path from the root encoded
+/// as 2 bits per level, plus the depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RegionId {
+    /// Quadrant path, 2 bits per level, most-recent level in the low bits.
+    pub path: u64,
+    /// Depth (0 = root).
+    pub depth: u8,
+}
+
+impl RegionId {
+    pub const ROOT: RegionId = RegionId { path: 0, depth: 0 };
+
+    /// Child region id for quadrant `q` (0..4).
+    pub fn child(&self, q: usize) -> RegionId {
+        debug_assert!(q < 4);
+        RegionId { path: (self.path << 2) | q as u64, depth: self.depth + 1 }
+    }
+
+    /// Parent region id (None at root).
+    pub fn parent(&self) -> Option<RegionId> {
+        if self.depth == 0 {
+            None
+        } else {
+            Some(RegionId { path: self.path >> 2, depth: self.depth - 1 })
+        }
+    }
+}
+
+impl std::fmt::Display for RegionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "R{}/{:o}", self.depth, self.path)
+    }
+}
+
+/// A member Rendezvous Point as tracked by the quadtree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Member {
+    pub id: NodeId,
+    pub location: GeoPoint,
+}
+
+#[derive(Debug, Clone)]
+enum NodeKind {
+    Leaf { members: Vec<Member>, master: Option<NodeId> },
+    Internal { children: [usize; 4] },
+}
+
+#[derive(Debug, Clone)]
+struct TreeNode {
+    region: RegionId,
+    bounds: Rect,
+    kind: NodeKind,
+}
+
+/// The point quadtree. Owned (replicated) by every region master.
+#[derive(Debug, Clone)]
+pub struct QuadTree {
+    nodes: Vec<TreeNode>,
+    /// Region may split only when all four children keep >= this many RPs.
+    min_rps: usize,
+    /// Hard depth cap to bound the tree under adversarial placement.
+    max_depth: u8,
+    /// Leaf index by region id for O(log) lookup.
+    leaves: BTreeMap<RegionId, usize>,
+}
+
+impl QuadTree {
+    /// New tree over the whole world.
+    pub fn new(min_rps: usize) -> Self {
+        Self::with_bounds(Rect::world(), min_rps, 16)
+    }
+
+    /// New tree over custom bounds (tests) with a depth cap.
+    pub fn with_bounds(bounds: Rect, min_rps: usize, max_depth: u8) -> Self {
+        let root = TreeNode {
+            region: RegionId::ROOT,
+            bounds,
+            kind: NodeKind::Leaf { members: Vec::new(), master: None },
+        };
+        let mut leaves = BTreeMap::new();
+        leaves.insert(RegionId::ROOT, 0);
+        QuadTree { nodes: vec![root], min_rps: min_rps.max(1), max_depth, leaves }
+    }
+
+    /// The split threshold (paper's `n`).
+    pub fn min_rps(&self) -> usize {
+        self.min_rps
+    }
+
+    /// Total member count across all regions.
+    pub fn len(&self) -> usize {
+        self.leaves.values().map(|&i| self.leaf_members(i).len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn leaf_members(&self, idx: usize) -> &[Member] {
+        match &self.nodes[idx].kind {
+            NodeKind::Leaf { members, .. } => members,
+            NodeKind::Internal { .. } => unreachable!("leaf index points at internal node"),
+        }
+    }
+
+    /// Insert an RP. Returns the region it landed in. Splits the region
+    /// when it holds enough members that all four quadrants would keep
+    /// `min_rps` members ("four new P2P rings", paper Fig. 1).
+    pub fn insert(&mut self, id: NodeId, location: GeoPoint) -> Result<RegionId> {
+        if !location.is_valid() {
+            return Err(Error::Overlay(format!("invalid location {location:?}")));
+        }
+        let leaf_idx = self.locate_leaf(&location);
+        match &mut self.nodes[leaf_idx].kind {
+            NodeKind::Leaf { members, master } => {
+                if members.iter().any(|m| m.id == id) {
+                    return Err(Error::Overlay(format!("{id} already joined")));
+                }
+                members.push(Member { id, location });
+                // First RP in the system/region becomes master (paper §IV-A:
+                // "it becomes the master RP of the ring").
+                if master.is_none() {
+                    *master = Some(id);
+                }
+            }
+            NodeKind::Internal { .. } => unreachable!(),
+        }
+        self.maybe_split(leaf_idx);
+        Ok(self.region_of(&location))
+    }
+
+    /// Remove an RP by id. Returns its former region.
+    pub fn remove(&mut self, id: &NodeId) -> Option<RegionId> {
+        let (leaf_idx, region) = self
+            .leaves
+            .iter()
+            .find(|(_, &i)| self.leaf_members(i).iter().any(|m| &m.id == id))
+            .map(|(r, &i)| (i, *r))?;
+        if let NodeKind::Leaf { members, master } = &mut self.nodes[leaf_idx].kind {
+            members.retain(|m| &m.id != id);
+            if *master == Some(*id) {
+                // Deterministic interim master; a proper election runs at
+                // the membership layer (paper: Hirschberg–Sinclair).
+                *master = members.first().map(|m| m.id);
+            }
+        }
+        Some(region)
+    }
+
+    /// The leaf region containing a point.
+    pub fn region_of(&self, p: &GeoPoint) -> RegionId {
+        self.nodes[self.locate_leaf(p)].region
+    }
+
+    /// Bounds of a region (leaf or internal).
+    pub fn bounds_of(&self, region: RegionId) -> Option<Rect> {
+        self.nodes.iter().find(|n| n.region == region).map(|n| n.bounds)
+    }
+
+    /// Members of the leaf region containing a point.
+    pub fn members_at(&self, p: &GeoPoint) -> &[Member] {
+        self.leaf_members(self.locate_leaf(p))
+    }
+
+    /// Members of a leaf region by id.
+    pub fn members_of(&self, region: RegionId) -> Option<&[Member]> {
+        self.leaves.get(&region).map(|&i| self.leaf_members(i))
+    }
+
+    /// Master RP of the leaf region containing a point.
+    pub fn master_at(&self, p: &GeoPoint) -> Option<NodeId> {
+        match &self.nodes[self.locate_leaf(p)].kind {
+            NodeKind::Leaf { master, .. } => *master,
+            NodeKind::Internal { .. } => unreachable!(),
+        }
+    }
+
+    /// Master of a specific region.
+    pub fn master_of(&self, region: RegionId) -> Option<NodeId> {
+        let &i = self.leaves.get(&region)?;
+        match &self.nodes[i].kind {
+            NodeKind::Leaf { master, .. } => *master,
+            NodeKind::Internal { .. } => unreachable!(),
+        }
+    }
+
+    /// Install a new master for a region (after an election).
+    pub fn set_master(&mut self, region: RegionId, id: NodeId) -> Result<()> {
+        let &i = self
+            .leaves
+            .get(&region)
+            .ok_or_else(|| Error::Overlay(format!("{region} is not a leaf region")))?;
+        match &mut self.nodes[i].kind {
+            NodeKind::Leaf { members, master } => {
+                if !members.iter().any(|m| m.id == id) {
+                    return Err(Error::Overlay(format!("{id} is not a member of {region}")));
+                }
+                *master = Some(id);
+                Ok(())
+            }
+            NodeKind::Internal { .. } => unreachable!(),
+        }
+    }
+
+    /// All leaf regions.
+    pub fn regions(&self) -> impl Iterator<Item = RegionId> + '_ {
+        self.leaves.keys().copied()
+    }
+
+    /// All members with their region.
+    pub fn members(&self) -> impl Iterator<Item = (RegionId, &Member)> + '_ {
+        self.leaves
+            .iter()
+            .flat_map(move |(r, &i)| self.leaf_members(i).iter().map(move |m| (*r, m)))
+    }
+
+    /// All leaf regions whose bounds intersect `rect` (complex-profile
+    /// routing fans out to every matching region).
+    pub fn regions_intersecting(&self, rect: &Rect) -> Vec<RegionId> {
+        self.leaves
+            .iter()
+            .filter(|(_, &i)| self.nodes[i].bounds.intersects(rect))
+            .map(|(r, _)| *r)
+            .collect()
+    }
+
+    fn locate_leaf(&self, p: &GeoPoint) -> usize {
+        let mut idx = 0usize;
+        loop {
+            match &self.nodes[idx].kind {
+                NodeKind::Leaf { .. } => return idx,
+                NodeKind::Internal { children } => {
+                    let q = self.nodes[idx].bounds.quadrant_of(p);
+                    idx = children[q as usize];
+                }
+            }
+        }
+    }
+
+    /// Split the leaf at `idx` when the replication invariant allows:
+    /// every quadrant must retain at least `min_rps` members.
+    fn maybe_split(&mut self, idx: usize) {
+        let (region, bounds) = (self.nodes[idx].region, self.nodes[idx].bounds);
+        if region.depth >= self.max_depth {
+            return;
+        }
+        let members = match &self.nodes[idx].kind {
+            NodeKind::Leaf { members, .. } => members.clone(),
+            NodeKind::Internal { .. } => return,
+        };
+        let quads = bounds.quadrants();
+        let mut split: [Vec<Member>; 4] = [vec![], vec![], vec![], vec![]];
+        for m in &members {
+            let q = bounds.quadrant_of(&m.location) as usize;
+            split[q].push(m.clone());
+        }
+        if split.iter().any(|s| s.len() < self.min_rps) {
+            return; // invariant would be violated — do not divide
+        }
+        // Perform the split: leaf becomes internal, four new leaves appear
+        // ("Every time the quadtree splits, the system creates four new
+        // P2P rings").
+        self.leaves.remove(&region);
+        let mut children = [0usize; 4];
+        for (q, quad_members) in split.into_iter().enumerate() {
+            let child_region = region.child(q);
+            let master = quad_members.first().map(|m| m.id);
+            let node = TreeNode {
+                region: child_region,
+                bounds: quads[q],
+                kind: NodeKind::Leaf { members: quad_members, master },
+            };
+            let child_idx = self.nodes.len();
+            self.nodes.push(node);
+            self.leaves.insert(child_region, child_idx);
+            children[q] = child_idx;
+        }
+        self.nodes[idx].kind = NodeKind::Internal { children };
+        // Recurse: a freshly created child may itself be splittable.
+        for q in 0..4 {
+            self.maybe_split(children[q]);
+        }
+    }
+
+    /// Check the structural invariants; used by property tests.
+    pub fn check_invariants(&self) -> Result<()> {
+        for (&region, &i) in &self.leaves {
+            let node = &self.nodes[i];
+            if node.region != region {
+                return Err(Error::Overlay("leaf index out of sync".into()));
+            }
+            let members = self.leaf_members(i);
+            for m in members {
+                if !node.bounds.contains(&m.location) {
+                    return Err(Error::Overlay(format!(
+                        "member {} at {:?} outside region {} bounds",
+                        m.id, m.location, region
+                    )));
+                }
+            }
+            match &node.kind {
+                NodeKind::Leaf { master, members } => {
+                    if let Some(master) = master {
+                        if !members.iter().any(|m| m.id == *master) {
+                            return Err(Error::Overlay(format!(
+                                "master {master} of {region} not a member"
+                            )));
+                        }
+                    } else if !members.is_empty() {
+                        return Err(Error::Overlay(format!("{region} has members but no master")));
+                    }
+                    // Non-root leaves created by a split must satisfy the
+                    // replication invariant at creation; members can later
+                    // *leave*, so only check the structural part here.
+                }
+                NodeKind::Internal { .. } => unreachable!(),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(n: u32) -> NodeId {
+        NodeId::from_name(&format!("rp-{n}"))
+    }
+
+    #[test]
+    fn first_rp_becomes_master() {
+        let mut t = QuadTree::new(2);
+        let region = t.insert(id(0), GeoPoint::new(10.0, 10.0)).unwrap();
+        assert_eq!(t.master_of(region), Some(id(0)));
+    }
+
+    #[test]
+    fn split_requires_min_rps_per_quadrant() {
+        let mut t = QuadTree::with_bounds(Rect::new(0.0, 8.0, 0.0, 8.0), 1, 8);
+        // Three RPs all in one quadrant: no split possible.
+        t.insert(id(0), GeoPoint::new(1.0, 1.0)).unwrap();
+        t.insert(id(1), GeoPoint::new(1.5, 1.5)).unwrap();
+        t.insert(id(2), GeoPoint::new(2.0, 2.0)).unwrap();
+        assert_eq!(t.regions().count(), 1, "no split while a quadrant would be empty");
+        // One RP in each remaining quadrant → split becomes legal.
+        t.insert(id(3), GeoPoint::new(1.0, 5.0)).unwrap();
+        t.insert(id(4), GeoPoint::new(5.0, 1.0)).unwrap();
+        t.insert(id(5), GeoPoint::new(5.0, 5.0)).unwrap();
+        assert!(t.regions().count() > 1, "split should have happened");
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn each_new_region_keeps_master_and_members() {
+        let mut t = QuadTree::with_bounds(Rect::new(0.0, 8.0, 0.0, 8.0), 1, 8);
+        for (i, (lat, lon)) in
+            [(1.0, 1.0), (1.0, 5.0), (5.0, 1.0), (5.0, 5.0)].iter().enumerate()
+        {
+            t.insert(id(i as u32), GeoPoint::new(*lat, *lon)).unwrap();
+        }
+        assert_eq!(t.regions().count(), 4);
+        for r in t.regions().collect::<Vec<_>>() {
+            let members = t.members_of(r).unwrap();
+            assert_eq!(members.len(), 1);
+            assert_eq!(t.master_of(r), Some(members[0].id));
+        }
+    }
+
+    #[test]
+    fn region_of_follows_splits() {
+        let mut t = QuadTree::with_bounds(Rect::new(0.0, 8.0, 0.0, 8.0), 1, 8);
+        for (i, (lat, lon)) in
+            [(1.0, 1.0), (1.0, 5.0), (5.0, 1.0), (5.0, 5.0)].iter().enumerate()
+        {
+            t.insert(id(i as u32), GeoPoint::new(*lat, *lon)).unwrap();
+        }
+        let r = t.region_of(&GeoPoint::new(1.0, 1.0));
+        assert_eq!(r.depth, 1);
+        assert_eq!(t.members_of(r).unwrap()[0].id, id(0));
+    }
+
+    #[test]
+    fn duplicate_join_rejected() {
+        let mut t = QuadTree::new(2);
+        t.insert(id(0), GeoPoint::new(0.0, 0.0)).unwrap();
+        assert!(t.insert(id(0), GeoPoint::new(1.0, 1.0)).is_err());
+    }
+
+    #[test]
+    fn invalid_location_rejected() {
+        let mut t = QuadTree::new(2);
+        assert!(t.insert(id(0), GeoPoint::new(91.0, 0.0)).is_err());
+    }
+
+    #[test]
+    fn remove_promotes_new_master() {
+        let mut t = QuadTree::new(2);
+        t.insert(id(0), GeoPoint::new(1.0, 1.0)).unwrap();
+        t.insert(id(1), GeoPoint::new(1.1, 1.1)).unwrap();
+        let region = t.remove(&id(0)).unwrap();
+        assert_eq!(t.master_of(region), Some(id(1)));
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_unknown_returns_none() {
+        let mut t = QuadTree::new(2);
+        assert!(t.remove(&id(9)).is_none());
+    }
+
+    #[test]
+    fn set_master_validates_membership() {
+        let mut t = QuadTree::new(2);
+        let region = t.insert(id(0), GeoPoint::new(1.0, 1.0)).unwrap();
+        assert!(t.set_master(region, id(5)).is_err());
+        t.insert(id(1), GeoPoint::new(1.2, 1.2)).unwrap();
+        t.set_master(region, id(1)).unwrap();
+        assert_eq!(t.master_of(region), Some(id(1)));
+    }
+
+    #[test]
+    fn regions_intersecting_finds_overlaps() {
+        let mut t = QuadTree::with_bounds(Rect::new(0.0, 8.0, 0.0, 8.0), 1, 8);
+        for (i, (lat, lon)) in
+            [(1.0, 1.0), (1.0, 5.0), (5.0, 1.0), (5.0, 5.0)].iter().enumerate()
+        {
+            t.insert(id(i as u32), GeoPoint::new(*lat, *lon)).unwrap();
+        }
+        // A rect covering only the south-west corner.
+        let hits = t.regions_intersecting(&Rect::new(0.0, 1.5, 0.0, 1.5));
+        assert_eq!(hits.len(), 1);
+        // A rect covering everything.
+        let all = t.regions_intersecting(&Rect::new(0.0, 8.0, 0.0, 8.0));
+        assert_eq!(all.len(), 4);
+    }
+
+    #[test]
+    fn region_id_child_parent_round_trip() {
+        let r = RegionId::ROOT.child(2).child(3).child(1);
+        assert_eq!(r.depth, 3);
+        assert_eq!(r.parent().unwrap().parent().unwrap(), RegionId::ROOT.child(2));
+        assert_eq!(RegionId::ROOT.parent(), None);
+    }
+
+    #[test]
+    fn deep_insertion_respects_depth_cap() {
+        let mut t = QuadTree::with_bounds(Rect::new(0.0, 1.0, 0.0, 1.0), 1, 2);
+        // Pile many RPs into a tiny area — depth cap must hold.
+        for i in 0..64 {
+            let eps = (i as f64) * 1e-6;
+            t.insert(id(i), GeoPoint::new(0.1 + eps, 0.1 + eps)).unwrap();
+        }
+        assert!(t.regions().all(|r| r.depth <= 2));
+        t.check_invariants().unwrap();
+    }
+}

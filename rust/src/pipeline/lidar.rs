@@ -1,0 +1,192 @@
+//! Synthetic LiDAR trace generator.
+//!
+//! The paper's dataset: post-Hurricane-Sandy LiDAR of NY/Long Island,
+//! "741 images and 3.7 GB in size, with the biggest image size of
+//! 33.8 MB, and the smallest of 1.8 KB". We reproduce the *count* and
+//! the *log-normal size spread* (scaled by a configurable factor so CI
+//! runs in seconds), and generate image content with damage-like
+//! structure: a smooth terrain field plus sharp-edged "debris" patches
+//! whose density drives the pre-processing RESULT score — so the rule
+//! engine's routing decisions exercise both branches, like the real
+//! workflow.
+
+use crate::overlay::geo::GeoPoint;
+use crate::util::prng::Prng;
+
+/// Paper dataset constants.
+pub const PAPER_IMAGE_COUNT: usize = 741;
+pub const PAPER_MIN_BYTES: usize = 1_800;
+pub const PAPER_MAX_BYTES: usize = 33_800_000;
+pub const PAPER_TOTAL_BYTES: u64 = 3_700_000_000;
+
+/// One synthetic LiDAR capture.
+#[derive(Debug, Clone)]
+pub struct LidarImage {
+    pub id: u32,
+    /// Capture location (within the NY/Long-Island box).
+    pub location: GeoPoint,
+    /// Raw size this image represents in the paper's dataset (bytes).
+    pub nominal_bytes: usize,
+    /// One 256×256 f32 tile of the image (the unit the pipeline
+    /// processes; larger images are represented by their nominal size
+    /// for transfer-cost purposes and by one tile for compute).
+    pub tile: Vec<f32>,
+    /// Ground-truth damage density in [0,1] (test oracle only).
+    pub damage: f64,
+}
+
+/// The whole trace.
+#[derive(Debug, Clone)]
+pub struct LidarTrace {
+    pub images: Vec<LidarImage>,
+}
+
+/// Tile side length (matches the AOT artifact geometry).
+pub const TILE_DIM: usize = 256;
+
+impl LidarTrace {
+    /// Generate `count` images; `size_scale` divides the nominal sizes
+    /// (1.0 = paper-scale 3.7 GB; 64.0 ≈ 58 MB total).
+    pub fn generate(seed: u64, count: usize, size_scale: f64) -> Self {
+        let mut rng = Prng::seeded(seed);
+        // Log-normal calibrated to the paper's spread: median ≈ 1 MB,
+        // clamped to [1.8 KB, 33.8 MB].
+        let mu = (1.0e6f64).ln();
+        let sigma = 1.6;
+        let images = (0..count)
+            .map(|i| {
+                let raw = rng.gen_lognormal(mu, sigma);
+                let nominal = (raw.clamp(PAPER_MIN_BYTES as f64, PAPER_MAX_BYTES as f64)
+                    / size_scale.max(1.0)) as usize;
+                // Hurricane-Sandy area: NY / Long Island.
+                let location = GeoPoint::new(
+                    40.55 + rng.gen_f64() * 0.45,
+                    -74.2 + rng.gen_f64() * 1.6,
+                );
+                let damage = rng.gen_f64().powi(2); // most areas lightly damaged
+                let tile = generate_tile(&mut rng, damage);
+                LidarImage {
+                    id: i as u32,
+                    location,
+                    nominal_bytes: nominal.max(PAPER_MIN_BYTES / size_scale.max(1.0) as usize),
+                    tile,
+                    damage,
+                }
+            })
+            .collect();
+        LidarTrace { images }
+    }
+
+    /// Paper-shaped trace at a CI-friendly scale.
+    pub fn paper_shaped(seed: u64) -> Self {
+        Self::generate(seed, PAPER_IMAGE_COUNT, 256.0)
+    }
+
+    /// Total nominal bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.images.iter().map(|i| i.nominal_bytes as u64).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+/// Generate one 256×256 tile: smooth terrain + `damage`-scaled debris.
+fn generate_tile(rng: &mut Prng, damage: f64) -> Vec<f32> {
+    let n = TILE_DIM;
+    let mut tile = vec![0f32; n * n];
+    // Smooth terrain: sum of a few low-frequency sinusoids.
+    let fx = 1.0 + rng.gen_f64() * 3.0;
+    let fy = 1.0 + rng.gen_f64() * 3.0;
+    let phase = rng.gen_f64() * std::f64::consts::TAU;
+    for y in 0..n {
+        for x in 0..n {
+            let u = x as f64 / n as f64;
+            let v = y as f64 / n as f64;
+            let h = (fx * u * std::f64::consts::TAU + phase).sin()
+                + (fy * v * std::f64::consts::TAU).cos();
+            tile[y * n + x] = (h * 0.5) as f32;
+        }
+    }
+    // Debris: sharp-edged rectangles with random heights; count scales
+    // with damage density.
+    let patches = (damage * 40.0) as usize;
+    for _ in 0..patches {
+        let px = rng.gen_range(0, n - 8);
+        let py = rng.gen_range(0, n - 8);
+        let w = rng.gen_range(2, 9);
+        let h = rng.gen_range(2, 9);
+        let height = 2.0 + rng.gen_f32() * 6.0;
+        for y in py..(py + h).min(n) {
+            for x in px..(px + w).min(n) {
+                tile[y * n + x] += height;
+            }
+        }
+    }
+    tile
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape_count_and_bounds() {
+        let t = LidarTrace::paper_shaped(42);
+        assert_eq!(t.len(), PAPER_IMAGE_COUNT);
+        for img in &t.images {
+            assert!(img.nominal_bytes <= PAPER_MAX_BYTES);
+            assert!(img.location.is_valid());
+            assert_eq!(img.tile.len(), TILE_DIM * TILE_DIM);
+        }
+    }
+
+    #[test]
+    fn size_distribution_is_spread() {
+        let t = LidarTrace::generate(7, 741, 1.0);
+        let sizes: Vec<usize> = t.images.iter().map(|i| i.nominal_bytes).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        // Log-normal with σ=1.6 over 741 draws: orders of magnitude apart.
+        assert!(max as f64 / min as f64 > 100.0, "min={min} max={max}");
+        // Total in the paper's ballpark (3.7 GB ± 3×).
+        let total = t.total_bytes() as f64;
+        assert!(total > 0.8e9 && total < 12.0e9, "total={total}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = LidarTrace::generate(1, 10, 64.0);
+        let b = LidarTrace::generate(1, 10, 64.0);
+        assert_eq!(a.images[3].nominal_bytes, b.images[3].nominal_bytes);
+        assert_eq!(a.images[3].tile, b.images[3].tile);
+        let c = LidarTrace::generate(2, 10, 64.0);
+        assert_ne!(a.images[3].tile, c.images[3].tile);
+    }
+
+    #[test]
+    fn damage_increases_edge_content() {
+        // The generator's contract with the pipeline: damaged tiles have
+        // more gradient energy (drives RESULT).
+        let mut rng = Prng::seeded(3);
+        let calm = generate_tile(&mut rng, 0.0);
+        let mut rng = Prng::seeded(3);
+        let wrecked = generate_tile(&mut rng, 1.0);
+        let energy = |t: &[f32]| -> f64 {
+            let n = TILE_DIM;
+            let mut e = 0.0f64;
+            for y in 0..n {
+                for x in 1..n {
+                    e += (t[y * n + x] - t[y * n + x - 1]).abs() as f64;
+                }
+            }
+            e
+        };
+        assert!(energy(&wrecked) > 2.0 * energy(&calm));
+    }
+}

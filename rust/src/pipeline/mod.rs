@@ -1,0 +1,16 @@
+//! The paper's motivating use case (§II, §V-B): the disaster-recovery
+//! data pipeline.
+//!
+//! - [`lidar`]: synthetic LiDAR trace reproducing the Hurricane-Sandy
+//!   dataset's shape (741 images, log-normal size spread from 1.8 KB to
+//!   33.8 MB — scaled down for CI) with damage-like image content.
+//! - [`workflow`]: the end-to-end pipeline — drone capture → mmap
+//!   collection → PJRT pre-processing → IF-THEN decision → store at the
+//!   edge or forward to the core — plus the two baseline pipelines
+//!   (Kafka+Edgent+{SQLite, Nitrite}) of Fig. 14.
+
+pub mod lidar;
+pub mod workflow;
+
+pub use lidar::{LidarImage, LidarTrace};
+pub use workflow::{BaselineKind, DisasterRecoveryPipeline, PipelineReport};

@@ -1,0 +1,241 @@
+//! Query-region → SFC-cluster decomposition (paper §IV-B, Fig. 2b).
+//!
+//! A complex keyword tuple identifies a hyper-rectangular region of the
+//! keyword space; the region corresponds to *clusters* — contiguous
+//! segments of the Hilbert curve. We compute them by recursive spatial
+//! subdivision: a level-`L` cell (side `2^(bits-L)`, aligned) maps to one
+//! contiguous index interval of length `2^((bits-L)·dims)`; cells fully
+//! inside the query region emit their interval, partially-overlapping
+//! cells recurse until `max_level`, then over-approximate. Adjacent
+//! intervals are merged.
+
+use super::hilbert::HilbertCurve;
+use super::keyspace::DimRange;
+use crate::error::Result;
+
+/// An inclusive interval `[lo, hi]` of Hilbert indices.
+pub type IndexRange = (u64, u64);
+
+/// Decompose the query region given by one [`DimRange`] per dimension
+/// into merged, sorted Hilbert index ranges.
+///
+/// `max_level` bounds refinement depth (and therefore cluster count):
+/// deeper = tighter approximation but more clusters. The paper's routing
+/// fans out one message per cluster, so this is the precision/fan-out
+/// trade-off knob.
+pub fn clusters_for_region(
+    curve: &HilbertCurve,
+    region: &[DimRange],
+    max_level: u32,
+) -> Result<Vec<IndexRange>> {
+    assert_eq!(region.len(), curve.dims() as usize, "region arity mismatch");
+    let side = curve.side();
+    let bounds: Vec<(u64, u64)> = region.iter().map(|r| r.bounds(side)).collect();
+    let max_level = max_level.min(curve.bits());
+
+    // Fast path: a pure point region is a single index.
+    if region.iter().all(|r| r.is_point()) {
+        let coords: Vec<u64> = bounds.iter().map(|&(lo, _)| lo).collect();
+        let idx = curve.encode(&coords)?;
+        return Ok(vec![(idx, idx)]);
+    }
+
+    let mut ranges: Vec<IndexRange> = Vec::new();
+    let origin = vec![0u64; curve.dims() as usize];
+    recurse(curve, &bounds, &origin, 0, max_level, &mut ranges)?;
+    ranges.sort_unstable();
+    Ok(merge(ranges))
+}
+
+/// Total number of curve points covered by a cluster set.
+pub fn covered_points(ranges: &[IndexRange]) -> u128 {
+    ranges.iter().map(|&(lo, hi)| (hi - lo) as u128 + 1).sum()
+}
+
+fn recurse(
+    curve: &HilbertCurve,
+    query: &[(u64, u64)],
+    cell_origin: &[u64],
+    level: u32,
+    max_level: u32,
+    out: &mut Vec<IndexRange>,
+) -> Result<()> {
+    let bits = curve.bits();
+    let cell_side = 1u64 << (bits - level);
+
+    // Classify cell vs query region.
+    let mut fully_inside = true;
+    for (d, &(qlo, qhi)) in query.iter().enumerate() {
+        let clo = cell_origin[d];
+        let chi = clo + cell_side - 1;
+        if chi < qlo || clo > qhi {
+            return Ok(()); // disjoint — prune
+        }
+        if clo < qlo || chi > qhi {
+            fully_inside = false;
+        }
+    }
+
+    if fully_inside || level >= max_level {
+        // Emit the cell's contiguous index interval. All points in an
+        // aligned cell share the top `level*dims` index bits.
+        let idx = curve.encode(cell_origin)?;
+        let span_bits = (bits - level) * curve.dims();
+        let lo = if span_bits >= 64 { 0 } else { (idx >> span_bits) << span_bits };
+        let hi = if span_bits >= 64 {
+            u64::MAX >> (64 - curve.bits() * curve.dims()).min(63)
+        } else {
+            lo + ((1u64 << span_bits) - 1)
+        };
+        out.push((lo, hi));
+        return Ok(());
+    }
+
+    // Recurse into the 2^dims children.
+    let child_side = cell_side / 2;
+    let dims = curve.dims() as usize;
+    for child in 0..(1u32 << dims) {
+        let mut origin = cell_origin.to_vec();
+        for (d, item) in origin.iter_mut().enumerate().take(dims) {
+            if child >> d & 1 == 1 {
+                *item += child_side;
+            }
+        }
+        recurse(curve, query, &origin, level + 1, max_level, out)?;
+    }
+    Ok(())
+}
+
+/// Merge sorted, possibly-adjacent/overlapping ranges.
+fn merge(sorted: Vec<IndexRange>) -> Vec<IndexRange> {
+    let mut out: Vec<IndexRange> = Vec::with_capacity(sorted.len());
+    for (lo, hi) in sorted {
+        match out.last_mut() {
+            Some((_, prev_hi)) if lo <= prev_hi.saturating_add(1) => {
+                *prev_hi = (*prev_hi).max(hi);
+            }
+            _ => out.push((lo, hi)),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve2d() -> HilbertCurve {
+        HilbertCurve::new(2, 5).unwrap() // 32×32
+    }
+
+    #[test]
+    fn point_region_is_single_index() {
+        let c = curve2d();
+        let r = clusters_for_region(&c, &[DimRange::Point(3), DimRange::Point(7)], 5).unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].0, r[0].1);
+        assert_eq!(c.decode(r[0].0), vec![3, 7]);
+    }
+
+    #[test]
+    fn full_region_is_whole_curve() {
+        let c = curve2d();
+        let r = clusters_for_region(&c, &[DimRange::Full, DimRange::Full], 5).unwrap();
+        assert_eq!(r, vec![(0, (1u64 << 10) - 1)]);
+    }
+
+    #[test]
+    fn clusters_cover_exactly_the_query_points_at_full_depth() {
+        let c = curve2d();
+        let query = [DimRange::Range(3, 9), DimRange::Range(10, 20)];
+        let ranges = clusters_for_region(&c, &query, 5).unwrap();
+        // At max refinement the clusters must contain exactly the indices
+        // of the points in the rectangle.
+        let expected: u128 = 7 * 11;
+        assert_eq!(covered_points(&ranges), expected);
+        // Every query point's index is inside some range.
+        for x in 3..=9u64 {
+            for y in 10..=20u64 {
+                let idx = c.encode(&[x, y]).unwrap();
+                assert!(
+                    ranges.iter().any(|&(lo, hi)| idx >= lo && idx <= hi),
+                    "({x},{y}) idx {idx} not covered"
+                );
+            }
+        }
+        // No non-query point is covered.
+        for x in 0..32u64 {
+            for y in 0..32u64 {
+                let inside = (3..=9).contains(&x) && (10..=20).contains(&y);
+                let idx = c.encode(&[x, y]).unwrap();
+                let covered = ranges.iter().any(|&(lo, hi)| idx >= lo && idx <= hi);
+                assert_eq!(inside, covered, "({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn shallow_refinement_over_approximates() {
+        let c = curve2d();
+        let query = [DimRange::Range(3, 9), DimRange::Range(10, 20)];
+        let deep = clusters_for_region(&c, &query, 5).unwrap();
+        let shallow = clusters_for_region(&c, &query, 2).unwrap();
+        assert!(covered_points(&shallow) >= covered_points(&deep));
+        assert!(shallow.len() <= deep.len(), "shallower must not produce more clusters");
+        // Over-approximation still covers every query point.
+        for x in 3..=9u64 {
+            for y in 10..=20u64 {
+                let idx = c.encode(&[x, y]).unwrap();
+                assert!(shallow.iter().any(|&(lo, hi)| idx >= lo && idx <= hi));
+            }
+        }
+    }
+
+    #[test]
+    fn ranges_are_sorted_and_disjoint() {
+        let c = HilbertCurve::new(3, 4).unwrap();
+        let query = [DimRange::Range(1, 9), DimRange::Full, DimRange::Range(4, 5)];
+        let ranges = clusters_for_region(&c, &query, 4).unwrap();
+        for w in ranges.windows(2) {
+            assert!(w[0].1 + 1 < w[1].0, "ranges must be disjoint and non-adjacent: {w:?}");
+        }
+    }
+
+    #[test]
+    fn aligned_cell_is_one_cluster() {
+        // An aligned half-space in 2D: x in [0,15], y in [0,31] of a 32×32
+        // grid is two level-1 cells... while x in [0,15], y in [0,15]
+        // (one quadrant) must be exactly one contiguous range.
+        let c = curve2d();
+        let quadrant = [DimRange::Range(0, 15), DimRange::Range(0, 15)];
+        let ranges = clusters_for_region(&c, &quadrant, 5).unwrap();
+        assert_eq!(ranges.len(), 1, "{ranges:?}");
+        assert_eq!(covered_points(&ranges), 256);
+    }
+
+    #[test]
+    fn merge_joins_adjacent() {
+        assert_eq!(merge(vec![(0, 3), (4, 7), (10, 12)]), vec![(0, 7), (10, 12)]);
+        assert_eq!(merge(vec![(0, 5), (2, 3)]), vec![(0, 5)]);
+        assert_eq!(merge(vec![]), vec![]);
+    }
+
+    #[test]
+    fn six_dimensional_profile_routing_works() {
+        // Paper Fig. 9/10 routes profiles of up to 6 properties.
+        let c = HilbertCurve::new(6, 10).unwrap();
+        let query = [
+            DimRange::Point(512),
+            DimRange::Range(100, 200),
+            DimRange::Full,
+            DimRange::Point(7),
+            DimRange::Range(0, 1023),
+            DimRange::Point(99),
+        ];
+        let ranges = clusters_for_region(&c, &query, 3).unwrap();
+        assert!(!ranges.is_empty());
+        // Covers at least the true point count (over-approximation OK).
+        let true_points: u128 = 1 * 101 * 1024 * 1 * 1024 * 1;
+        assert!(covered_points(&ranges) >= true_points);
+    }
+}

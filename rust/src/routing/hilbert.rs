@@ -1,0 +1,299 @@
+//! n-dimensional Hilbert space-filling curve (paper §IV-B, after
+//! Sagan [22]), using John Skilling's public-domain transpose algorithm
+//! ("Programming the Hilbert curve", AIP Conf. Proc. 707, 2004).
+//!
+//! Supports `dims ∈ [1, 8]` dimensions at `bits` bits of precision per
+//! dimension with `dims * bits <= 64`, so a full curve index fits in one
+//! `u64` and can be embedded into the top bits of a 160-bit overlay id.
+
+use crate::error::{Error, Result};
+
+/// A Hilbert curve of fixed dimensionality and per-dimension precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HilbertCurve {
+    dims: u32,
+    bits: u32,
+}
+
+impl HilbertCurve {
+    /// Create a curve; `dims * bits` must be ≤ 64 and ≥ 1.
+    pub fn new(dims: u32, bits: u32) -> Result<Self> {
+        if dims == 0 || dims > 8 {
+            return Err(Error::Profile(format!("hilbert: dims {dims} out of [1,8]")));
+        }
+        if bits == 0 || dims * bits > 64 {
+            return Err(Error::Profile(format!(
+                "hilbert: dims*bits = {} exceeds 64",
+                dims * bits
+            )));
+        }
+        Ok(HilbertCurve { dims, bits })
+    }
+
+    pub fn dims(&self) -> u32 {
+        self.dims
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Maximum coordinate value (exclusive): `2^bits`.
+    pub fn side(&self) -> u64 {
+        1u64 << self.bits
+    }
+
+    /// Total number of points on the curve: `2^(dims*bits)`.
+    pub fn capacity(&self) -> u128 {
+        1u128 << (self.dims * self.bits)
+    }
+
+    /// Encode coordinates to a Hilbert index. Coordinates must be
+    /// `< 2^bits` each; `coords.len()` must equal `dims`.
+    pub fn encode(&self, coords: &[u64]) -> Result<u64> {
+        if coords.len() != self.dims as usize {
+            return Err(Error::Profile(format!(
+                "hilbert: expected {} coords, got {}",
+                self.dims,
+                coords.len()
+            )));
+        }
+        let side = self.side();
+        let mut x: Vec<u64> = Vec::with_capacity(coords.len());
+        for &c in coords {
+            if c >= side {
+                return Err(Error::Profile(format!("hilbert: coord {c} >= side {side}")));
+            }
+            x.push(c);
+        }
+        self.axes_to_transpose(&mut x);
+        Ok(self.interleave(&x))
+    }
+
+    /// Decode a Hilbert index back to coordinates.
+    pub fn decode(&self, index: u64) -> Vec<u64> {
+        let mut x = self.deinterleave(index);
+        self.transpose_to_axes(&mut x);
+        x
+    }
+
+    // --- Skilling transform -------------------------------------------------
+
+    fn axes_to_transpose(&self, x: &mut [u64]) {
+        let n = x.len();
+        let m = 1u64 << (self.bits - 1);
+        // Inverse undo excess work
+        let mut q = m;
+        while q > 1 {
+            let p = q - 1;
+            for i in 0..n {
+                if x[i] & q != 0 {
+                    x[0] ^= p; // invert low bits of x[0]
+                } else {
+                    let t = (x[0] ^ x[i]) & p;
+                    x[0] ^= t;
+                    x[i] ^= t;
+                }
+            }
+            q >>= 1;
+        }
+        // Gray encode
+        for i in 1..n {
+            x[i] ^= x[i - 1];
+        }
+        let mut t = 0u64;
+        let mut q = m;
+        while q > 1 {
+            if x[n - 1] & q != 0 {
+                t ^= q - 1;
+            }
+            q >>= 1;
+        }
+        for xi in x.iter_mut() {
+            *xi ^= t;
+        }
+    }
+
+    fn transpose_to_axes(&self, x: &mut [u64]) {
+        let n = x.len();
+        let m = 1u64 << (self.bits - 1);
+        // Gray decode by H ^ (H/2)
+        let mut t = x[n - 1] >> 1;
+        for i in (1..n).rev() {
+            x[i] ^= x[i - 1];
+        }
+        x[0] ^= t;
+        // Undo excess work
+        let mut q = 2u64;
+        while q != m << 1 {
+            let p = q - 1;
+            for i in (0..n).rev() {
+                if x[i] & q != 0 {
+                    x[0] ^= p;
+                } else {
+                    t = (x[0] ^ x[i]) & p;
+                    x[0] ^= t;
+                    x[i] ^= t;
+                }
+            }
+            q <<= 1;
+        }
+    }
+
+    /// Interleave transposed form into a single index: bit `b` (MSB-first)
+    /// of every dimension in turn.
+    fn interleave(&self, x: &[u64]) -> u64 {
+        let mut index = 0u64;
+        for b in (0..self.bits).rev() {
+            for xi in x {
+                index = (index << 1) | ((xi >> b) & 1);
+            }
+        }
+        index
+    }
+
+    fn deinterleave(&self, index: u64) -> Vec<u64> {
+        let n = self.dims as usize;
+        let mut x = vec![0u64; n];
+        let total_bits = self.dims * self.bits;
+        for pos in 0..total_bits {
+            let bit = (index >> (total_bits - 1 - pos)) & 1;
+            let dim = (pos % self.dims) as usize;
+            x[dim] = (x[dim] << 1) | bit;
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_bad_parameters() {
+        assert!(HilbertCurve::new(0, 4).is_err());
+        assert!(HilbertCurve::new(9, 4).is_err());
+        assert!(HilbertCurve::new(4, 17).is_err());
+        assert!(HilbertCurve::new(2, 32).is_ok());
+    }
+
+    #[test]
+    fn d2_order1_layout() {
+        // The classic 2x2 Hilbert curve: (0,0)→0, (0,1)→1, (1,1)→2, (1,0)→3
+        // (one standard orientation; verify it is a bijection over 4 cells
+        // and consecutive cells are adjacent).
+        let h = HilbertCurve::new(2, 1).unwrap();
+        let mut seen = [false; 4];
+        for x in 0..2u64 {
+            for y in 0..2u64 {
+                let idx = h.encode(&[x, y]).unwrap() as usize;
+                assert!(!seen[idx]);
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn encode_decode_round_trip_2d() {
+        let h = HilbertCurve::new(2, 8).unwrap();
+        for x in (0..256u64).step_by(17) {
+            for y in (0..256u64).step_by(13) {
+                let idx = h.encode(&[x, y]).unwrap();
+                assert_eq!(h.decode(idx), vec![x, y]);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip_6d() {
+        // The paper routes profiles of up to 6 properties (Fig. 9/10).
+        let h = HilbertCurve::new(6, 10).unwrap();
+        let coords = [[0u64; 6], [1023; 6], [1, 2, 3, 4, 5, 6], [512, 0, 1023, 7, 99, 300]];
+        for c in coords {
+            let idx = h.encode(&c).unwrap();
+            assert_eq!(h.decode(idx), c.to_vec());
+        }
+    }
+
+    #[test]
+    fn index_is_bijective_small() {
+        let h = HilbertCurve::new(3, 3).unwrap();
+        let total = 1usize << 9;
+        let mut seen = vec![false; total];
+        for x in 0..8u64 {
+            for y in 0..8u64 {
+                for z in 0..8u64 {
+                    let idx = h.encode(&[x, y, z]).unwrap() as usize;
+                    assert!(!seen[idx], "duplicate index {idx}");
+                    seen[idx] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn consecutive_indices_are_adjacent_cells() {
+        // The defining locality property of the Hilbert curve: walking the
+        // index visits a path of unit steps (Manhattan distance 1).
+        let h = HilbertCurve::new(2, 5).unwrap();
+        let total = 1u64 << 10;
+        let mut prev = h.decode(0);
+        for idx in 1..total {
+            let cur = h.decode(idx);
+            let dist: u64 = prev
+                .iter()
+                .zip(&cur)
+                .map(|(a, b)| a.abs_diff(*b))
+                .sum();
+            assert_eq!(dist, 1, "index {idx}: {prev:?} → {cur:?}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn consecutive_adjacency_3d() {
+        let h = HilbertCurve::new(3, 3).unwrap();
+        let mut prev = h.decode(0);
+        for idx in 1..(1u64 << 9) {
+            let cur = h.decode(idx);
+            let dist: u64 = prev.iter().zip(&cur).map(|(a, b)| a.abs_diff(*b)).sum();
+            assert_eq!(dist, 1);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn out_of_range_coord_rejected() {
+        let h = HilbertCurve::new(2, 4).unwrap();
+        assert!(h.encode(&[16, 0]).is_err());
+        assert!(h.encode(&[0]).is_err()); // wrong arity
+    }
+
+    #[test]
+    fn index_windows_are_spatially_clustered() {
+        // The clustering property motivating the design (paper: SFC maps
+        // nearby keywords to nearby peers): any window of k consecutive
+        // indices covers a region whose bounding box area is O(k).
+        let h = HilbertCurve::new(2, 6).unwrap();
+        let k = 64u64;
+        for start in (0..(1u64 << 12) - k).step_by(97) {
+            let (mut min_x, mut max_x, mut min_y, mut max_y) = (u64::MAX, 0, u64::MAX, 0);
+            for idx in start..start + k {
+                let c = h.decode(idx);
+                min_x = min_x.min(c[0]);
+                max_x = max_x.max(c[0]);
+                min_y = min_y.min(c[1]);
+                max_y = max_y.max(c[1]);
+            }
+            let area = (max_x - min_x + 1) * (max_y - min_y + 1);
+            assert!(
+                area <= 6 * k,
+                "window [{start},{}) bounding box area {area} > {}",
+                start + k,
+                6 * k
+            );
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! The n-dimensional keyword space (paper §IV-B).
+//!
+//! Each profile property is one dimension. A keyword maps to a coordinate
+//! by interpreting its characters as base-37 fractional digits, which
+//! makes the mapping *prefix-preserving*: all keywords starting with
+//! `"li"` occupy one contiguous coordinate interval, so partial keywords
+//! (`"Li*"`) and wildcards become coordinate ranges — exactly what the
+//! SFC cluster machinery needs. Numeric values (ranges) are scaled
+//! linearly into the same coordinate space.
+
+use crate::error::{Error, Result};
+
+/// Base of the character alphabet: `a-z` (26) + `0-9` (10) + other (1).
+const BASE: u64 = 37;
+/// Number of leading characters that contribute to a coordinate.
+/// 37^12 < 2^64, so the accumulator stays exact in u64.
+const MAX_CHARS: usize = 12;
+
+/// Per-dimension query shape after keyword→coordinate mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DimRange {
+    /// Exact keyword → a single coordinate.
+    Point(u64),
+    /// Partial keyword / numeric range → inclusive coordinate interval.
+    Range(u64, u64),
+    /// Wildcard `*` → the whole dimension.
+    Full,
+}
+
+impl DimRange {
+    /// Inclusive (lo, hi) bounds of this range within a space of
+    /// `side = 2^bits` coordinates.
+    pub fn bounds(&self, side: u64) -> (u64, u64) {
+        match *self {
+            DimRange::Point(p) => (p, p),
+            DimRange::Range(lo, hi) => (lo.min(side - 1), hi.min(side - 1)),
+            DimRange::Full => (0, side - 1),
+        }
+    }
+
+    /// True if the range covers a single coordinate.
+    pub fn is_point(&self) -> bool {
+        matches!(self, DimRange::Point(_)) || matches!(self, DimRange::Range(a, b) if a == b)
+    }
+}
+
+/// Maps keywords and numeric values into `bits`-bit coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KeySpace {
+    bits: u32,
+}
+
+impl KeySpace {
+    /// Create a keyspace with `bits` bits per dimension (1..=32).
+    pub fn new(bits: u32) -> Result<Self> {
+        if bits == 0 || bits > 32 {
+            return Err(Error::Profile(format!("keyspace: bits {bits} out of [1,32]")));
+        }
+        Ok(KeySpace { bits })
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Side length of each dimension: `2^bits`.
+    pub fn side(&self) -> u64 {
+        1u64 << self.bits
+    }
+
+    fn digit(c: u8) -> u64 {
+        match c {
+            b'a'..=b'z' => 1 + (c - b'a') as u64,
+            b'A'..=b'Z' => 1 + (c - b'A') as u64,
+            b'0'..=b'9' => 27 + (c - b'0') as u64,
+            _ => 0,
+        }
+    }
+
+    /// Fractional base-37 value of the first [`MAX_CHARS`] characters,
+    /// returned as (numerator, denominator = 37^k).
+    fn fraction(s: &str) -> (u64, u64) {
+        let mut acc = 0u64;
+        let mut denom = 1u64;
+        for &c in s.as_bytes().iter().take(MAX_CHARS) {
+            acc = acc * BASE + Self::digit(c);
+            denom *= BASE;
+        }
+        (acc, denom)
+    }
+
+    /// Map an exact keyword to its coordinate (prefix-preserving).
+    pub fn keyword_point(&self, keyword: &str) -> u64 {
+        let (num, denom) = Self::fraction(keyword);
+        if denom == 1 {
+            return 0; // empty keyword
+        }
+        ((num as u128 * self.side() as u128) / denom as u128) as u64
+    }
+
+    /// Map a keyword prefix (`"li*"` minus the `*`) to the inclusive
+    /// coordinate interval covering every keyword with that prefix.
+    pub fn prefix_range(&self, prefix: &str) -> DimRange {
+        if prefix.is_empty() {
+            return DimRange::Full;
+        }
+        let (num, denom) = Self::fraction(prefix);
+        let side = self.side() as u128;
+        let lo = (num as u128 * side) / denom as u128;
+        // Everything with this prefix is < (num+1)/denom.
+        let hi_exclusive = ((num as u128 + 1) * side + denom as u128 - 1) / denom as u128;
+        let hi = hi_exclusive.saturating_sub(1).min(side - 1);
+        let (lo, hi) = (lo as u64, hi as u64);
+        if lo >= hi {
+            DimRange::Point(lo)
+        } else {
+            DimRange::Range(lo, hi)
+        }
+    }
+
+    /// Canonical numeric domain used to scale numbers into coordinates.
+    /// Values are clamped. Chosen to cover lat/lon and sensor magnitudes.
+    pub const NUM_LO: f64 = -1.0e6;
+    pub const NUM_HI: f64 = 1.0e6;
+
+    /// Map a numeric value to a coordinate (linear scaling, clamped).
+    pub fn numeric_point(&self, v: f64) -> u64 {
+        let clamped = v.clamp(Self::NUM_LO, Self::NUM_HI);
+        let unit = (clamped - Self::NUM_LO) / (Self::NUM_HI - Self::NUM_LO);
+        let side = self.side();
+        ((unit * (side - 1) as f64).round() as u64).min(side - 1)
+    }
+
+    /// Map a numeric interval to an inclusive coordinate range.
+    pub fn numeric_range(&self, lo: f64, hi: f64) -> DimRange {
+        let (a, b) = if lo <= hi { (lo, hi) } else { (hi, lo) };
+        let (pa, pb) = (self.numeric_point(a), self.numeric_point(b));
+        if pa == pb {
+            DimRange::Point(pa)
+        } else {
+            DimRange::Range(pa, pb)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ks() -> KeySpace {
+        KeySpace::new(10).unwrap()
+    }
+
+    #[test]
+    fn rejects_bad_bits() {
+        assert!(KeySpace::new(0).is_err());
+        assert!(KeySpace::new(33).is_err());
+    }
+
+    #[test]
+    fn keyword_point_is_deterministic_and_ordered_by_prefix() {
+        let k = ks();
+        assert_eq!(k.keyword_point("drone"), k.keyword_point("drone"));
+        // Lexicographic-ish ordering: "a..." < "b..." in coordinate space.
+        assert!(k.keyword_point("apple") < k.keyword_point("banana"));
+        assert!(k.keyword_point("lidar") < k.keyword_point("zebra"));
+    }
+
+    #[test]
+    fn keyword_point_case_insensitive() {
+        let k = ks();
+        assert_eq!(k.keyword_point("LiDAR"), k.keyword_point("lidar"));
+    }
+
+    #[test]
+    fn prefix_range_contains_matching_keywords() {
+        let k = ks();
+        let range = k.prefix_range("li");
+        let (lo, hi) = range.bounds(k.side());
+        for word in ["li", "lidar", "lizard", "light"] {
+            let p = k.keyword_point(word);
+            assert!(p >= lo && p <= hi, "{word}: {p} not in [{lo},{hi}]");
+        }
+        // Non-matching keywords fall outside.
+        for word in ["la", "lz", "drone", "m"] {
+            let p = k.keyword_point(word);
+            assert!(p < lo || p > hi, "{word} should be outside [{lo},{hi}]");
+        }
+    }
+
+    #[test]
+    fn longer_prefix_gives_narrower_range() {
+        let k = KeySpace::new(20).unwrap();
+        let (lo1, hi1) = k.prefix_range("l").bounds(k.side());
+        let (lo2, hi2) = k.prefix_range("li").bounds(k.side());
+        let (lo3, hi3) = k.prefix_range("lid").bounds(k.side());
+        assert!(lo1 <= lo2 && hi2 <= hi1);
+        assert!(lo2 <= lo3 && hi3 <= hi2);
+        assert!((hi2 - lo2) < (hi1 - lo1));
+    }
+
+    #[test]
+    fn empty_prefix_is_full_dimension() {
+        assert_eq!(ks().prefix_range(""), DimRange::Full);
+    }
+
+    #[test]
+    fn numeric_point_monotonic_and_clamped() {
+        let k = ks();
+        assert!(k.numeric_point(-10.0) < k.numeric_point(10.0));
+        assert_eq!(k.numeric_point(-2.0e6), 0);
+        assert_eq!(k.numeric_point(2.0e6), k.side() - 1);
+    }
+
+    #[test]
+    fn numeric_range_normalises_order() {
+        let k = ks();
+        assert_eq!(k.numeric_range(5.0, -5.0), k.numeric_range(-5.0, 5.0));
+    }
+
+    #[test]
+    fn dim_range_bounds() {
+        let side = 1024;
+        assert_eq!(DimRange::Point(7).bounds(side), (7, 7));
+        assert_eq!(DimRange::Range(5, 10).bounds(side), (5, 10));
+        assert_eq!(DimRange::Full.bounds(side), (0, 1023));
+        assert!(DimRange::Point(3).is_point());
+        assert!(DimRange::Range(4, 4).is_point());
+        assert!(!DimRange::Full.is_point());
+    }
+
+    #[test]
+    fn digits_distinguish_letters_and_numbers() {
+        // The mapping is prefix-weighted: differences in early characters
+        // dominate, so distinguishing late characters needs enough bits
+        // (by design — locality for prefix queries comes first).
+        let k = KeySpace::new(20).unwrap();
+        assert_ne!(k.keyword_point("a1"), k.keyword_point("ab"));
+        assert_ne!(k.keyword_point("s1"), k.keyword_point("s2"));
+        let k32 = KeySpace::new(32).unwrap();
+        assert_ne!(k32.keyword_point("sens1"), k32.keyword_point("sens2"));
+    }
+}

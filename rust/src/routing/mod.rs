@@ -1,0 +1,18 @@
+//! Layer 2 of the paper (§IV-B): content-based routing.
+//!
+//! Keyword profiles are mapped to coordinates in an n-dimensional keyword
+//! space ([`keyspace`]); the Hilbert space-filling curve ([`hilbert`])
+//! linearises that space onto the one-dimensional identifier space of the
+//! XOR overlay. Simple keyword tuples map to a single point on the curve;
+//! complex tuples (partial keywords, wildcards, ranges) map to *clusters*
+//! — contiguous curve segments ([`clusters`]) — and the [`router`]
+//! resolves either form to the set of responsible Rendezvous Points.
+
+pub mod clusters;
+pub mod hilbert;
+pub mod keyspace;
+pub mod router;
+
+pub use hilbert::HilbertCurve;
+pub use keyspace::{DimRange, KeySpace};
+pub use router::{ContentRouter, RouteOutcome};

@@ -1,0 +1,261 @@
+//! Profile → Rendezvous-Point resolution (paper §IV-B, Fig. 2).
+//!
+//! Routing takes *(data, profile, location)*:
+//!
+//! 1. the **location** picks the overlay network (quadtree region) —
+//!    messages for another region are forwarded via that region's master;
+//! 2. the **profile** maps through the keyword space onto the Hilbert
+//!    curve: simple tuples to one index (Fig. 2a), complex tuples to
+//!    clusters of index ranges (Fig. 2b);
+//! 3. the overlay **lookup** routes each index to the XOR-closest RP.
+//!
+//! [`ContentRouter`] is pure policy over a membership snapshot: the
+//! coordinator feeds it the region's member list (kept fresh by the
+//! stabilisation mode) and a hop model for latency accounting.
+
+use super::clusters::{clusters_for_region, IndexRange};
+use super::hilbert::HilbertCurve;
+use super::keyspace::{DimRange, KeySpace};
+use crate::ar::profile::Profile;
+use crate::error::{Error, Result};
+use crate::overlay::node_id::NodeId;
+use crate::overlay::ring::{simulate_lookup, RoutingTable};
+use std::collections::BTreeMap;
+
+/// Maximum cluster refinement depth (precision vs fan-out; see
+/// `clusters_for_region`).
+pub const DEFAULT_REFINEMENT: u32 = 3;
+
+/// Outcome of routing one profile.
+#[derive(Debug, Clone)]
+pub struct RouteOutcome {
+    /// Responsible RPs, deduplicated.
+    pub targets: Vec<NodeId>,
+    /// The SFC index ranges the profile mapped to.
+    pub clusters: Vec<IndexRange>,
+    /// Overlay hops taken across all lookups (simulated greedy routing).
+    pub hops: usize,
+    /// Whether the profile was simple (single point) or complex.
+    pub simple: bool,
+}
+
+/// Content-based router over one region's membership.
+#[derive(Debug, Clone)]
+pub struct ContentRouter {
+    /// Hilbert curve parameters per profile arity (dims → curve).
+    refinement: u32,
+}
+
+impl Default for ContentRouter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ContentRouter {
+    pub fn new() -> Self {
+        ContentRouter { refinement: DEFAULT_REFINEMENT }
+    }
+
+    pub fn with_refinement(refinement: u32) -> Self {
+        ContentRouter { refinement }
+    }
+
+    /// Curve geometry for a given profile arity: spend the 64-bit index
+    /// budget evenly (dims × bits ≤ 60 keeps headroom for 6D at 10 bits,
+    /// the paper's maximum profile complexity).
+    pub fn curve_for(dims: usize) -> Result<(HilbertCurve, KeySpace)> {
+        if dims == 0 || dims > 8 {
+            return Err(Error::Profile(format!("profile arity {dims} out of [1,8]")));
+        }
+        let bits = (60 / dims as u32).min(16);
+        Ok((HilbertCurve::new(dims as u32, bits)?, KeySpace::new(bits)?))
+    }
+
+    /// Map a profile to its SFC clusters.
+    pub fn clusters(&self, profile: &Profile) -> Result<Vec<IndexRange>> {
+        let (curve, ks) = Self::curve_for(profile.dims())?;
+        let region: Vec<DimRange> =
+            profile.terms().iter().map(|t| t.to_dim_range(&ks)).collect();
+        clusters_for_region(&curve, &region, self.refinement)
+    }
+
+    /// Normalise a raw SFC index (on a `dims×bits` curve) into the 64-bit
+    /// id prefix space: left-align so indices from curves of different
+    /// total bit-width share one id space.
+    pub fn index_to_id(index: u64, curve: &HilbertCurve) -> NodeId {
+        let total_bits = curve.dims() * curve.bits();
+        let shifted = if total_bits >= 64 { index } else { index << (64 - total_bits) };
+        NodeId::from_sfc_index(shifted)
+    }
+
+    /// Resolve a profile to the set of responsible RPs within a region,
+    /// given converged routing tables (one per live member) and a start
+    /// node. Returns targets, clusters and hop count.
+    pub fn route(
+        &self,
+        profile: &Profile,
+        tables: &BTreeMap<NodeId, RoutingTable>,
+        start: NodeId,
+    ) -> Result<RouteOutcome> {
+        if tables.is_empty() {
+            return Err(Error::Overlay("no live members to route to".into()));
+        }
+        let (curve, _) = Self::curve_for(profile.dims())?;
+        let clusters = self.clusters(profile)?;
+        let mut targets: Vec<NodeId> = Vec::new();
+        let mut hops = 0usize;
+        for &(lo, hi) in &clusters {
+            // One lookup per cluster endpoint: the RPs owning the curve
+            // segment. For tight clusters lo==hi this is a single lookup.
+            for idx in [lo, hi] {
+                let target_id = Self::index_to_id(idx, &curve);
+                let res = simulate_lookup(tables, start, &target_id);
+                hops += res.hops;
+                if !targets.contains(&res.owner) {
+                    targets.push(res.owner);
+                }
+                if lo == hi {
+                    break;
+                }
+            }
+        }
+        targets.sort();
+        Ok(RouteOutcome { targets, clusters, hops, simple: profile.is_simple() })
+    }
+
+    /// The single owner RP for a *simple* profile (storage placement).
+    pub fn owner_for_simple(
+        &self,
+        profile: &Profile,
+        tables: &BTreeMap<NodeId, RoutingTable>,
+        start: NodeId,
+    ) -> Result<NodeId> {
+        if !profile.is_simple() {
+            return Err(Error::Profile(format!(
+                "profile `{}` is not simple; use route()",
+                profile.render()
+            )));
+        }
+        Ok(self.route(profile, tables, start)?.targets[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overlay::ring::build_converged_tables;
+
+    fn members(n: usize) -> Vec<NodeId> {
+        (0..n).map(|i| NodeId::from_name(&format!("rp-{i}"))).collect()
+    }
+
+    fn p(s: &str) -> Profile {
+        Profile::parse(s).unwrap()
+    }
+
+    #[test]
+    fn simple_profile_routes_to_one_target() {
+        let ids = members(16);
+        let tables = build_converged_tables(&ids, 8);
+        let router = ContentRouter::new();
+        let out = router.route(&p("drone,lidar"), &tables, ids[0]).unwrap();
+        assert!(out.simple);
+        assert_eq!(out.clusters.len(), 1);
+        assert_eq!(out.targets.len(), 1);
+    }
+
+    #[test]
+    fn routing_is_start_independent() {
+        // All starts must agree on the owner (deterministic rendezvous).
+        let ids = members(32);
+        let tables = build_converged_tables(&ids, 8);
+        let router = ContentRouter::new();
+        let owners: Vec<NodeId> = ids
+            .iter()
+            .take(8)
+            .map(|&s| router.route(&p("drone,lidar"), &tables, s).unwrap().targets[0])
+            .collect();
+        assert!(owners.windows(2).all(|w| w[0] == w[1]), "{owners:?}");
+    }
+
+    #[test]
+    fn matching_data_and_interest_route_to_overlapping_rps() {
+        // The core guarantee (paper §IV-B): "all peers responsible for
+        // that profile will be found" — a complex interest profile must
+        // reach the RP where the matching simple data profile lives.
+        let ids = members(24);
+        let tables = build_converged_tables(&ids, 8);
+        let router = ContentRouter::new();
+        let data_owner =
+            router.owner_for_simple(&p("drone,lidar"), &tables, ids[3]).unwrap();
+        let interest = router.route(&p("drone,li*"), &tables, ids[7]).unwrap();
+        assert!(
+            interest.targets.contains(&data_owner),
+            "interest targets {:?} must include data owner {data_owner}",
+            interest.targets
+        );
+    }
+
+    #[test]
+    fn wildcard_profile_fans_out_no_less_than_exact() {
+        let ids = members(32);
+        let tables = build_converged_tables(&ids, 8);
+        let router = ContentRouter::new();
+        let exact = router.route(&p("drone,lidar"), &tables, ids[0]).unwrap();
+        let wild = router.route(&p("drone,*"), &tables, ids[0]).unwrap();
+        assert!(wild.targets.len() >= exact.targets.len());
+        assert!(!wild.simple);
+    }
+
+    #[test]
+    fn owner_for_simple_rejects_complex() {
+        let ids = members(8);
+        let tables = build_converged_tables(&ids, 8);
+        let router = ContentRouter::new();
+        assert!(router.owner_for_simple(&p("li*"), &tables, ids[0]).is_err());
+    }
+
+    #[test]
+    fn curve_for_scales_bits_with_dims() {
+        for dims in 1..=6usize {
+            let (curve, ks) = ContentRouter::curve_for(dims).unwrap();
+            assert_eq!(curve.dims() as usize, dims);
+            assert_eq!(curve.bits(), ks.bits());
+            assert!(curve.dims() * curve.bits() <= 60);
+        }
+        assert!(ContentRouter::curve_for(0).is_err());
+        assert!(ContentRouter::curve_for(9).is_err());
+    }
+
+    #[test]
+    fn hops_increase_with_profile_complexity() {
+        // Paper Figs. 9–10: routing cost grows with profile dimensions.
+        let ids = members(48);
+        let tables = build_converged_tables(&ids, 8);
+        let router = ContentRouter::new();
+        let simple = router.route(&p("a,b"), &tables, ids[0]).unwrap();
+        let complex = router
+            .route(&p("a*,b*,c*,d*,e*,f*"), &tables, ids[0])
+            .unwrap();
+        assert!(
+            complex.clusters.len() >= simple.clusters.len(),
+            "complex profile should produce at least as many clusters"
+        );
+    }
+
+    #[test]
+    fn empty_membership_errors() {
+        let tables = BTreeMap::new();
+        let router = ContentRouter::new();
+        assert!(router.route(&p("a"), &tables, NodeId::ZERO).is_err());
+    }
+
+    #[test]
+    fn index_to_id_left_aligns() {
+        let curve = HilbertCurve::new(2, 8).unwrap(); // 16-bit indices
+        let id = ContentRouter::index_to_id(0xFFFF, &curve);
+        // Left-aligned: top 16 bits set.
+        assert_eq!(id.sfc_index() >> 48, 0xFFFF);
+    }
+}

@@ -1,0 +1,485 @@
+//! Condition expression language for IF-THEN rules.
+//!
+//! Grammar (recursive descent, precedence low→high):
+//!
+//! ```text
+//! cond   := or
+//! or     := and ( "||" | "OR" and )*
+//! and    := not ( "&&" | "AND" not )*
+//! not    := "!" not | cmp
+//! cmp    := sum ( ( ">=" | "<=" | ">" | "<" | "==" | "!=" ) sum )?
+//! sum    := prod ( ("+" | "-") prod )*
+//! prod   := atom ( ("*" | "/") atom )*
+//! atom   := NUMBER | IDENT | "(" cond ")"
+//! ```
+//!
+//! The outer `IF( ... )` wrapper of the paper's listings is accepted and
+//! stripped. Identifiers resolve against an [`EvalContext`] of named
+//! tuple fields (e.g. `RESULT`, `SCORE`, `SIZE`).
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Numeric value of a tuple field.
+pub type NumValue = f64;
+
+/// Evaluation context: named fields of the current data tuple.
+#[derive(Debug, Clone, Default)]
+pub struct EvalContext {
+    fields: BTreeMap<String, NumValue>,
+}
+
+impl EvalContext {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert/overwrite a field (names are case-insensitive).
+    pub fn set(&mut self, name: &str, value: NumValue) -> &mut Self {
+        self.fields.insert(name.to_ascii_uppercase(), value);
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<NumValue> {
+        self.fields.get(&name.to_ascii_uppercase()).copied()
+    }
+
+    /// Builder-style convenience.
+    pub fn with(mut self, name: &str, value: NumValue) -> Self {
+        self.set(name, value);
+        self
+    }
+}
+
+/// Parsed condition expression.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CondExpr {
+    Num(f64),
+    Var(String),
+    Neg(Box<CondExpr>),
+    Not(Box<CondExpr>),
+    Add(Box<CondExpr>, Box<CondExpr>),
+    Sub(Box<CondExpr>, Box<CondExpr>),
+    Mul(Box<CondExpr>, Box<CondExpr>),
+    Div(Box<CondExpr>, Box<CondExpr>),
+    Cmp(CmpOp, Box<CondExpr>, Box<CondExpr>),
+    And(Box<CondExpr>, Box<CondExpr>),
+    Or(Box<CondExpr>, Box<CondExpr>),
+}
+
+/// Comparison operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Ge,
+    Le,
+    Gt,
+    Lt,
+    Eq,
+    Ne,
+}
+
+impl CondExpr {
+    /// Parse a condition, accepting the paper's `IF( ... )` wrapper.
+    pub fn parse(text: &str) -> Result<CondExpr> {
+        let trimmed = text.trim();
+        let body = {
+            let upper = trimmed.to_ascii_uppercase();
+            if upper.starts_with("IF") {
+                let rest = trimmed[2..].trim_start();
+                rest.strip_prefix('(')
+                    .and_then(|r| r.trim_end().strip_suffix(')'))
+                    .ok_or_else(|| Error::Rule("IF requires parentheses".into()))?
+            } else {
+                trimmed
+            }
+        };
+        let mut p = Parser { tokens: tokenize(body)?, pos: 0 };
+        let expr = p.parse_or()?;
+        if p.pos != p.tokens.len() {
+            return Err(Error::Rule(format!(
+                "trailing tokens after expression: {:?}",
+                &p.tokens[p.pos..]
+            )));
+        }
+        Ok(expr)
+    }
+
+    /// Evaluate numerically (booleans are 1.0/0.0).
+    pub fn eval(&self, ctx: &EvalContext) -> Result<NumValue> {
+        Ok(match self {
+            CondExpr::Num(v) => *v,
+            CondExpr::Var(name) => ctx
+                .get(name)
+                .ok_or_else(|| Error::Rule(format!("unknown variable `{name}`")))?,
+            CondExpr::Neg(e) => -e.eval(ctx)?,
+            CondExpr::Not(e) => {
+                if e.eval(ctx)? != 0.0 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+            CondExpr::Add(a, b) => a.eval(ctx)? + b.eval(ctx)?,
+            CondExpr::Sub(a, b) => a.eval(ctx)? - b.eval(ctx)?,
+            CondExpr::Mul(a, b) => a.eval(ctx)? * b.eval(ctx)?,
+            CondExpr::Div(a, b) => {
+                let d = b.eval(ctx)?;
+                if d == 0.0 {
+                    return Err(Error::Rule("division by zero".into()));
+                }
+                a.eval(ctx)? / d
+            }
+            CondExpr::Cmp(op, a, b) => {
+                let (x, y) = (a.eval(ctx)?, b.eval(ctx)?);
+                let r = match op {
+                    CmpOp::Ge => x >= y,
+                    CmpOp::Le => x <= y,
+                    CmpOp::Gt => x > y,
+                    CmpOp::Lt => x < y,
+                    CmpOp::Eq => (x - y).abs() < f64::EPSILON,
+                    CmpOp::Ne => (x - y).abs() >= f64::EPSILON,
+                };
+                if r {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            CondExpr::And(a, b) => {
+                if a.eval(ctx)? != 0.0 && b.eval(ctx)? != 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            CondExpr::Or(a, b) => {
+                if a.eval(ctx)? != 0.0 || b.eval(ctx)? != 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        })
+    }
+
+    /// Evaluate as a boolean condition.
+    pub fn is_satisfied(&self, ctx: &EvalContext) -> Result<bool> {
+        Ok(self.eval(ctx)? != 0.0)
+    }
+
+    /// Variables referenced by the expression.
+    pub fn variables(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.collect_vars(&mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn collect_vars(&self, out: &mut Vec<String>) {
+        match self {
+            CondExpr::Var(n) => out.push(n.clone()),
+            CondExpr::Num(_) => {}
+            CondExpr::Neg(e) | CondExpr::Not(e) => e.collect_vars(out),
+            CondExpr::Add(a, b)
+            | CondExpr::Sub(a, b)
+            | CondExpr::Mul(a, b)
+            | CondExpr::Div(a, b)
+            | CondExpr::And(a, b)
+            | CondExpr::Or(a, b) => {
+                a.collect_vars(out);
+                b.collect_vars(out);
+            }
+            CondExpr::Cmp(_, a, b) => {
+                a.collect_vars(out);
+                b.collect_vars(out);
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(f64),
+    Ident(String),
+    Op(String),
+    LParen,
+    RParen,
+}
+
+fn tokenize(text: &str) -> Result<Vec<Tok>> {
+    let mut out = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            ' ' | '\t' | '\n' | '\r' => i += 1,
+            '(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            '0'..='9' | '.' => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_digit() || bytes[i] == b'.' || bytes[i] == b'e')
+                {
+                    i += 1;
+                }
+                let s = &text[start..i];
+                let v: f64 = s
+                    .parse()
+                    .map_err(|_| Error::Rule(format!("bad number `{s}`")))?;
+                out.push(Tok::Num(v));
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_' || bytes[i] == b'.')
+                {
+                    i += 1;
+                }
+                let word = &text[start..i];
+                match word.to_ascii_uppercase().as_str() {
+                    "AND" => out.push(Tok::Op("&&".into())),
+                    "OR" => out.push(Tok::Op("||".into())),
+                    "NOT" => out.push(Tok::Op("!".into())),
+                    _ => out.push(Tok::Ident(word.to_string())),
+                }
+            }
+            '>' | '<' | '=' | '!' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == b'=' {
+                    out.push(Tok::Op(format!("{c}=")));
+                    i += 2;
+                } else {
+                    out.push(Tok::Op(c.to_string()));
+                    i += 1;
+                }
+            }
+            '&' | '|' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == bytes[i] {
+                    out.push(Tok::Op(format!("{c}{c}")));
+                    i += 2;
+                } else {
+                    return Err(Error::Rule(format!("single `{c}` is not an operator")));
+                }
+            }
+            '+' | '-' | '*' | '/' => {
+                out.push(Tok::Op(c.to_string()));
+                i += 1;
+            }
+            other => return Err(Error::Rule(format!("unexpected character `{other}`"))),
+        }
+    }
+    Ok(out)
+}
+
+struct Parser {
+    tokens: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek_op(&self) -> Option<&str> {
+        match self.tokens.get(self.pos) {
+            Some(Tok::Op(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    fn eat_op(&mut self, ops: &[&str]) -> Option<String> {
+        if let Some(op) = self.peek_op() {
+            if ops.contains(&op) {
+                let op = op.to_string();
+                self.pos += 1;
+                return Some(op);
+            }
+        }
+        None
+    }
+
+    fn parse_or(&mut self) -> Result<CondExpr> {
+        let mut left = self.parse_and()?;
+        while self.eat_op(&["||"]).is_some() {
+            let right = self.parse_and()?;
+            left = CondExpr::Or(Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn parse_and(&mut self) -> Result<CondExpr> {
+        let mut left = self.parse_not()?;
+        while self.eat_op(&["&&"]).is_some() {
+            let right = self.parse_not()?;
+            left = CondExpr::And(Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn parse_not(&mut self) -> Result<CondExpr> {
+        if self.eat_op(&["!"]).is_some() {
+            return Ok(CondExpr::Not(Box::new(self.parse_not()?)));
+        }
+        self.parse_cmp()
+    }
+
+    fn parse_cmp(&mut self) -> Result<CondExpr> {
+        let left = self.parse_sum()?;
+        if let Some(op) = self.eat_op(&[">=", "<=", ">", "<", "==", "!="]) {
+            let right = self.parse_sum()?;
+            let cmp = match op.as_str() {
+                ">=" => CmpOp::Ge,
+                "<=" => CmpOp::Le,
+                ">" => CmpOp::Gt,
+                "<" => CmpOp::Lt,
+                "==" => CmpOp::Eq,
+                _ => CmpOp::Ne,
+            };
+            return Ok(CondExpr::Cmp(cmp, Box::new(left), Box::new(right)));
+        }
+        Ok(left)
+    }
+
+    fn parse_sum(&mut self) -> Result<CondExpr> {
+        let mut left = self.parse_prod()?;
+        while let Some(op) = self.eat_op(&["+", "-"]) {
+            let right = self.parse_prod()?;
+            left = if op == "+" {
+                CondExpr::Add(Box::new(left), Box::new(right))
+            } else {
+                CondExpr::Sub(Box::new(left), Box::new(right))
+            };
+        }
+        Ok(left)
+    }
+
+    fn parse_prod(&mut self) -> Result<CondExpr> {
+        let mut left = self.parse_atom()?;
+        while let Some(op) = self.eat_op(&["*", "/"]) {
+            let right = self.parse_atom()?;
+            left = if op == "*" {
+                CondExpr::Mul(Box::new(left), Box::new(right))
+            } else {
+                CondExpr::Div(Box::new(left), Box::new(right))
+            };
+        }
+        Ok(left)
+    }
+
+    fn parse_atom(&mut self) -> Result<CondExpr> {
+        if self.eat_op(&["-"]).is_some() {
+            return Ok(CondExpr::Neg(Box::new(self.parse_atom()?)));
+        }
+        match self.tokens.get(self.pos).cloned() {
+            Some(Tok::Num(v)) => {
+                self.pos += 1;
+                Ok(CondExpr::Num(v))
+            }
+            Some(Tok::Ident(name)) => {
+                self.pos += 1;
+                Ok(CondExpr::Var(name))
+            }
+            Some(Tok::LParen) => {
+                self.pos += 1;
+                let inner = self.parse_or()?;
+                match self.tokens.get(self.pos) {
+                    Some(Tok::RParen) => {
+                        self.pos += 1;
+                        Ok(inner)
+                    }
+                    _ => Err(Error::Rule("missing `)`".into())),
+                }
+            }
+            other => Err(Error::Rule(format!("unexpected token {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> EvalContext {
+        EvalContext::new().with("RESULT", 12.0).with("SCORE", 0.4).with("SIZE", 2048.0)
+    }
+
+    #[test]
+    fn paper_listing4_condition() {
+        // Listing 4: .withCondition("IF(RESULT >= 10)")
+        let e = CondExpr::parse("IF(RESULT >= 10)").unwrap();
+        assert!(e.is_satisfied(&ctx()).unwrap());
+        let low = EvalContext::new().with("RESULT", 5.0);
+        assert!(!e.is_satisfied(&low).unwrap());
+    }
+
+    #[test]
+    fn bare_condition_without_if() {
+        let e = CondExpr::parse("SCORE < 0.5").unwrap();
+        assert!(e.is_satisfied(&ctx()).unwrap());
+    }
+
+    #[test]
+    fn boolean_connectives() {
+        let e = CondExpr::parse("IF(RESULT >= 10 && SCORE < 0.5)").unwrap();
+        assert!(e.is_satisfied(&ctx()).unwrap());
+        let e = CondExpr::parse("RESULT < 10 || SIZE > 1000").unwrap();
+        assert!(e.is_satisfied(&ctx()).unwrap());
+        let e = CondExpr::parse("NOT (RESULT >= 10)").unwrap();
+        assert!(!e.is_satisfied(&ctx()).unwrap());
+        let e = CondExpr::parse("RESULT >= 10 AND SCORE >= 0.5").unwrap();
+        assert!(!e.is_satisfied(&ctx()).unwrap());
+    }
+
+    #[test]
+    fn arithmetic_and_precedence() {
+        let e = CondExpr::parse("1 + 2 * 3 == 7").unwrap();
+        assert!(e.is_satisfied(&EvalContext::new()).unwrap());
+        let e = CondExpr::parse("(1 + 2) * 3 == 9").unwrap();
+        assert!(e.is_satisfied(&EvalContext::new()).unwrap());
+        let e = CondExpr::parse("SIZE / 2 == 1024").unwrap();
+        assert!(e.is_satisfied(&ctx()).unwrap());
+    }
+
+    #[test]
+    fn unary_minus() {
+        let e = CondExpr::parse("-SCORE < 0").unwrap();
+        assert!(e.is_satisfied(&ctx()).unwrap());
+    }
+
+    #[test]
+    fn unknown_variable_errors() {
+        let e = CondExpr::parse("MISSING > 1").unwrap();
+        assert!(e.eval(&ctx()).is_err());
+    }
+
+    #[test]
+    fn division_by_zero_errors() {
+        let e = CondExpr::parse("1 / 0 > 0").unwrap();
+        assert!(e.eval(&EvalContext::new()).is_err());
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(CondExpr::parse("IF RESULT >= 10").is_err()); // no parens
+        assert!(CondExpr::parse("a >").is_err());
+        assert!(CondExpr::parse("(a > 1").is_err());
+        assert!(CondExpr::parse("a & b").is_err());
+        assert!(CondExpr::parse("a > 1 extra").is_err());
+    }
+
+    #[test]
+    fn variables_are_collected() {
+        let e = CondExpr::parse("IF(RESULT >= 10 && SCORE < SIZE)").unwrap();
+        assert_eq!(e.variables(), vec!["RESULT", "SCORE", "SIZE"]);
+    }
+
+    #[test]
+    fn field_names_case_insensitive() {
+        let e = CondExpr::parse("result >= 10").unwrap();
+        assert!(e.is_satisfied(&ctx()).unwrap());
+    }
+}

@@ -1,0 +1,261 @@
+//! The production-rule engine (paper §IV-D2).
+//!
+//! "The system examines all the rule conditions (IF) and determines a
+//! subset, the conflict set, of the rules whose conditions are satisfied
+//! based on the data tuples. Out of this conflict set, one of those rules
+//! is triggered (fired). [...] The loop for firing rules executes until
+//! one of two conditions is met: there are no more rules whose conditions
+//! are satisfied or a rule is fired."
+
+use super::ast::{CondExpr, EvalContext};
+use crate::ar::message::ArMessage;
+use crate::error::Result;
+
+/// What firing a rule does (the THEN clause). Mirrors the paper's
+/// `ActionDispatcher` reactions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Consequence {
+    /// Trigger a stored streaming topology by posting the attached AR
+    /// message (paper Listing 4: `TriggerTopologyReaction(T-profile)`).
+    TriggerTopology(ArMessage),
+    /// Forward the current tuple's payload to the core/cloud tier.
+    ForwardToCore,
+    /// Store the current tuple's payload at the edge.
+    StoreAtEdge,
+    /// Drop the tuple (quality below threshold).
+    Drop,
+    /// Emit a named signal for application-specific handling.
+    Signal(String),
+}
+
+/// One IF-THEN rule (paper Listing 4: `Rule.Builder().withCondition(...)
+/// .withConsequence(...).withPriority(...)`).
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub name: String,
+    pub condition: CondExpr,
+    pub consequence: Consequence,
+    /// Lower value = higher priority (fires first), as in the paper's
+    /// `withPriority(0)`.
+    pub priority: i32,
+}
+
+/// Builder mirroring the paper's API.
+#[derive(Debug, Default)]
+pub struct RuleBuilder {
+    name: Option<String>,
+    condition: Option<CondExpr>,
+    consequence: Option<Consequence>,
+    priority: i32,
+}
+
+impl RuleBuilder {
+    pub fn with_name(mut self, name: &str) -> Self {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    /// `withCondition("IF(RESULT >= 10)")`.
+    pub fn with_condition(mut self, text: &str) -> Result<Self> {
+        self.condition = Some(CondExpr::parse(text)?);
+        Ok(self)
+    }
+
+    /// `withConsequence(...)`.
+    pub fn with_consequence(mut self, consequence: Consequence) -> Self {
+        self.consequence = Some(consequence);
+        self
+    }
+
+    /// `withPriority(0)` — lower fires first.
+    pub fn with_priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn build(self) -> Result<Rule> {
+        let condition = self
+            .condition
+            .ok_or_else(|| crate::Error::Rule("rule requires a condition".into()))?;
+        let consequence = self
+            .consequence
+            .ok_or_else(|| crate::Error::Rule("rule requires a consequence".into()))?;
+        Ok(Rule {
+            name: self.name.unwrap_or_else(|| "rule".into()),
+            condition,
+            consequence,
+            priority: self.priority,
+        })
+    }
+}
+
+impl Rule {
+    pub fn builder() -> RuleBuilder {
+        RuleBuilder::default()
+    }
+}
+
+/// Outcome of one engine evaluation over a tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RuleOutcome {
+    /// A rule fired; carries the rule name and its consequence.
+    Fired { rule: String, consequence: Consequence },
+    /// No rule's condition was satisfied.
+    NoMatch,
+}
+
+/// The rule engine: an ordered set of rules evaluated per data tuple.
+#[derive(Debug, Default)]
+pub struct RuleEngine {
+    rules: Vec<Rule>,
+}
+
+impl RuleEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a rule; keeps priority order (stable for equal priorities).
+    pub fn add(&mut self, rule: Rule) {
+        self.rules.push(rule);
+        self.rules.sort_by_key(|r| r.priority);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// The conflict set: every rule whose condition is satisfied.
+    /// Rules whose conditions reference unknown fields are skipped
+    /// (a tuple simply lacks that field).
+    pub fn conflict_set(&self, ctx: &EvalContext) -> Vec<&Rule> {
+        self.rules
+            .iter()
+            .filter(|r| r.condition.is_satisfied(ctx).unwrap_or(false))
+            .collect()
+    }
+
+    /// Evaluate a tuple: build the conflict set and fire the
+    /// highest-priority rule (the paper fires one rule per loop, and the
+    /// loop exits after a rule fires or when nothing is satisfied).
+    pub fn evaluate(&self, ctx: &EvalContext) -> RuleOutcome {
+        match self.conflict_set(ctx).first() {
+            Some(rule) => RuleOutcome::Fired {
+                rule: rule.name.clone(),
+                consequence: rule.consequence.clone(),
+            },
+            None => RuleOutcome::NoMatch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(result: f64) -> EvalContext {
+        EvalContext::new().with("RESULT", result)
+    }
+
+    fn rule(name: &str, cond: &str, consequence: Consequence, prio: i32) -> Rule {
+        Rule::builder()
+            .with_name(name)
+            .with_condition(cond)
+            .unwrap()
+            .with_consequence(consequence)
+            .with_priority(prio)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn paper_listing4_trigger_rule() {
+        // Rule: IF(RESULT >= 10) → trigger post_processing_func topology.
+        let trigger = ArMessage::builder()
+            .set_header(crate::ar::Profile::parse("post_processing_func").unwrap())
+            .set_action(crate::ar::Action::StartFunction)
+            .build()
+            .unwrap();
+        let mut engine = RuleEngine::new();
+        engine.add(rule(
+            "rule1",
+            "IF(RESULT >= 10)",
+            Consequence::TriggerTopology(trigger.clone()),
+            0,
+        ));
+        match engine.evaluate(&ctx(12.0)) {
+            RuleOutcome::Fired { rule, consequence } => {
+                assert_eq!(rule, "rule1");
+                assert_eq!(consequence, Consequence::TriggerTopology(trigger));
+            }
+            other => panic!("expected fire, got {other:?}"),
+        }
+        assert_eq!(engine.evaluate(&ctx(5.0)), RuleOutcome::NoMatch);
+    }
+
+    #[test]
+    fn priority_selects_among_conflict_set() {
+        let mut engine = RuleEngine::new();
+        engine.add(rule("low", "RESULT >= 0", Consequence::StoreAtEdge, 10));
+        engine.add(rule("high", "RESULT >= 10", Consequence::ForwardToCore, 0));
+        // Both satisfied at 12 → priority 0 wins.
+        match engine.evaluate(&ctx(12.0)) {
+            RuleOutcome::Fired { rule, .. } => assert_eq!(rule, "high"),
+            other => panic!("{other:?}"),
+        }
+        // Only the low-priority one at 5.
+        match engine.evaluate(&ctx(5.0)) {
+            RuleOutcome::Fired { rule, .. } => assert_eq!(rule, "low"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn conflict_set_lists_all_satisfied() {
+        let mut engine = RuleEngine::new();
+        engine.add(rule("a", "RESULT >= 0", Consequence::Drop, 1));
+        engine.add(rule("b", "RESULT >= 10", Consequence::Drop, 2));
+        engine.add(rule("c", "RESULT >= 100", Consequence::Drop, 3));
+        assert_eq!(engine.conflict_set(&ctx(12.0)).len(), 2);
+        assert_eq!(engine.conflict_set(&ctx(100.0)).len(), 3);
+        assert_eq!(engine.conflict_set(&ctx(-1.0)).len(), 0);
+    }
+
+    #[test]
+    fn missing_fields_skip_rule_not_engine() {
+        let mut engine = RuleEngine::new();
+        engine.add(rule("needs-score", "SCORE > 0.5", Consequence::Drop, 0));
+        engine.add(rule("needs-result", "RESULT > 0", Consequence::StoreAtEdge, 1));
+        // ctx lacks SCORE: first rule is skipped, second fires.
+        match engine.evaluate(&ctx(1.0)) {
+            RuleOutcome::Fired { rule, .. } => assert_eq!(rule, "needs-result"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn builder_requires_parts() {
+        assert!(Rule::builder().build().is_err());
+        assert!(Rule::builder()
+            .with_condition("RESULT > 1")
+            .unwrap()
+            .build()
+            .is_err());
+        assert!(Rule::builder().with_condition("bad >").is_err());
+    }
+
+    #[test]
+    fn stable_order_for_equal_priorities() {
+        let mut engine = RuleEngine::new();
+        engine.add(rule("first", "RESULT >= 0", Consequence::Drop, 0));
+        engine.add(rule("second", "RESULT >= 0", Consequence::Drop, 0));
+        match engine.evaluate(&ctx(1.0)) {
+            RuleOutcome::Fired { rule, .. } => assert_eq!(rule, "first"),
+            other => panic!("{other:?}"),
+        }
+    }
+}

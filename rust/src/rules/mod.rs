@@ -1,0 +1,15 @@
+//! The data-driven decisions abstraction (paper §IV-D2): an IF-THEN
+//! rule-based system evaluated over stream tuples.
+//!
+//! - [`ast`]: condition-expression parser (`"IF(RESULT >= 10)"`,
+//!   comparisons, boolean connectives, arithmetic over tuple fields).
+//! - [`engine`]: the production loop — build the *conflict set* of rules
+//!   whose conditions are satisfied, fire the highest-priority one, and
+//!   repeat until no rule fires or a rule fires (the paper's two
+//!   termination conditions).
+
+pub mod ast;
+pub mod engine;
+
+pub use ast::{CondExpr, EvalContext, NumValue};
+pub use engine::{Consequence, Rule, RuleEngine, RuleOutcome};

@@ -1,0 +1,164 @@
+//! Generic PJRT artifact engine.
+//!
+//! One CPU PJRT client per process; each artifact (`*.hlo.txt`) is
+//! parsed from HLO text and compiled once at load time, then executed
+//! many times from the hot path. Interchange is HLO *text* because the
+//! crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos (see
+//! python/compile/aot.py and /opt/xla-example/README.md).
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Loaded-and-compiled artifact registry.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(PjrtEngine { client, executables: BTreeMap::new() })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load_artifact(&mut self, name: &str, path: &Path) -> Result<()> {
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {path:?} missing — run `make artifacts` first"
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::Runtime(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory (artifact name = file stem).
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| Error::Runtime(format!("artifacts dir {dir:?}: {e}")))?;
+        for entry in entries.filter_map(|e| e.ok()) {
+            let path = entry.path();
+            let fname = match path.file_name().and_then(|n| n.to_str()) {
+                Some(n) => n,
+                None => continue,
+            };
+            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                self.load_artifact(stem, &path)?;
+                loaded.push(stem.to_string());
+            }
+        }
+        loaded.sort();
+        Ok(loaded)
+    }
+
+    /// Names of loaded artifacts.
+    pub fn artifacts(&self) -> Vec<String> {
+        self.executables.keys().cloned().collect()
+    }
+
+    /// Whether an artifact is loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute an artifact on f32 tensor inputs, returning the flat f32
+    /// data of every tuple element (jax lowers with `return_tuple=True`).
+    ///
+    /// `inputs`: (flat data, dims) per parameter.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| Error::NotFound(format!("artifact `{name}` not loaded")))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expected: i64 = dims.iter().product();
+            if expected as usize != data.len() {
+                return Err(Error::Runtime(format!(
+                    "input shape {dims:?} wants {expected} elements, got {}",
+                    data.len()
+                )));
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Runtime("no output buffer".into()))?
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch output: {e}")))?;
+        let elements = out
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+        elements
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("output to f32: {e}")))
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for PjrtEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PjrtEngine(artifacts={:?})", self.artifacts())
+    }
+}
+
+// NOTE: integration tests live in rust/tests/runtime_pjrt.rs — they need
+// the artifacts built by `make artifacts`, which unit tests must not
+// depend on.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let mut engine = PjrtEngine::cpu().unwrap();
+        let err = engine
+            .load_artifact("ghost", Path::new("/nonexistent/ghost.hlo.txt"))
+            .unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+        assert!(!engine.has("ghost"));
+    }
+
+    #[test]
+    fn execute_unknown_name_errors() {
+        let engine = PjrtEngine::cpu().unwrap();
+        assert!(engine.execute_f32("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn cpu_client_reports_platform() {
+        let engine = PjrtEngine::cpu().unwrap();
+        assert!(!engine.platform().is_empty());
+        assert!(engine.artifacts().is_empty());
+    }
+}

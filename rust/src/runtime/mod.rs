@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (`make artifacts`)
+//! and executes them on the request path — Python never runs here.
+//!
+//! - [`engine`]: generic artifact loader/compiler/executor over the
+//!   `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//!   → `compile` → `execute`).
+//! - [`preprocess`]: typed façade for the three disaster-recovery entry
+//!   points (`preprocess`, `change_detect`, `quality_score`) used by the
+//!   stream operators.
+
+pub mod engine;
+pub mod preprocess;
+
+pub use engine::PjrtEngine;
+pub use preprocess::{PreprocessOutput, PreprocessRuntime, STATS_DIM, TILE_DIM};

@@ -1,0 +1,129 @@
+//! Bloom filter for sstable lookups (double-hashing over FNV-1a).
+
+use crate::util::fnv1a64;
+
+/// A fixed-size Bloom filter.
+#[derive(Debug, Clone)]
+pub struct BloomFilter {
+    bits: Vec<u64>,
+    nbits: usize,
+    k: u32,
+}
+
+impl BloomFilter {
+    /// Build for an expected number of keys at `bits_per_key` (10 ≈ 1%
+    /// false-positive rate).
+    pub fn new(expected_keys: usize, bits_per_key: usize) -> Self {
+        let nbits = (expected_keys.max(1) * bits_per_key.max(1)).max(64);
+        let k = ((bits_per_key as f64 * 0.69) as u32).clamp(1, 30);
+        BloomFilter { bits: vec![0u64; (nbits + 63) / 64], nbits, k }
+    }
+
+    fn hashes(&self, key: &[u8]) -> (u64, u64) {
+        let h1 = fnv1a64(key);
+        // Second independent hash: FNV over the first hash's bytes.
+        let h2 = fnv1a64(&h1.to_le_bytes()) | 1; // odd so probes cover all bits
+        (h1, h2)
+    }
+
+    /// Insert a key.
+    pub fn insert(&mut self, key: &[u8]) {
+        let (h1, h2) = self.hashes(key);
+        for i in 0..self.k {
+            let bit = (h1.wrapping_add(h2.wrapping_mul(i as u64)) % self.nbits as u64) as usize;
+            self.bits[bit / 64] |= 1u64 << (bit % 64);
+        }
+    }
+
+    /// Whether the key *may* be present (false positives possible,
+    /// false negatives impossible).
+    pub fn may_contain(&self, key: &[u8]) -> bool {
+        let (h1, h2) = self.hashes(key);
+        for i in 0..self.k {
+            let bit = (h1.wrapping_add(h2.wrapping_mul(i as u64)) % self.nbits as u64) as usize;
+            if self.bits[bit / 64] & (1u64 << (bit % 64)) == 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Serialize (for embedding in sstable footers).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.bits.len() * 8);
+        out.extend_from_slice(&(self.nbits as u64).to_le_bytes());
+        out.extend_from_slice(&self.k.to_le_bytes());
+        for w in &self.bits {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize.
+    pub fn from_bytes(data: &[u8]) -> Option<Self> {
+        if data.len() < 12 {
+            return None;
+        }
+        let nbits = u64::from_le_bytes(data[0..8].try_into().ok()?) as usize;
+        let k = u32::from_le_bytes(data[8..12].try_into().ok()?);
+        let words = (nbits + 63) / 64;
+        if data.len() != 12 + words * 8 || k == 0 || k > 30 {
+            return None;
+        }
+        let bits = data[12..]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Some(BloomFilter { bits, nbits, k })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_false_negatives() {
+        let mut b = BloomFilter::new(1000, 10);
+        for i in 0..1000u32 {
+            b.insert(format!("key-{i}").as_bytes());
+        }
+        for i in 0..1000u32 {
+            assert!(b.may_contain(format!("key-{i}").as_bytes()), "fn at {i}");
+        }
+    }
+
+    #[test]
+    fn false_positive_rate_reasonable() {
+        let mut b = BloomFilter::new(1000, 10);
+        for i in 0..1000u32 {
+            b.insert(format!("key-{i}").as_bytes());
+        }
+        let fp = (0..10_000u32)
+            .filter(|i| b.may_contain(format!("absent-{i}").as_bytes()))
+            .count();
+        // 10 bits/key ⇒ ~1% theoretical; allow up to 4%.
+        assert!(fp < 400, "false positive rate too high: {fp}/10000");
+    }
+
+    #[test]
+    fn empty_filter_rejects() {
+        let b = BloomFilter::new(10, 10);
+        assert!(!b.may_contain(b"anything"));
+    }
+
+    #[test]
+    fn serialization_round_trip() {
+        let mut b = BloomFilter::new(100, 10);
+        for i in 0..100u32 {
+            b.insert(&i.to_le_bytes());
+        }
+        let bytes = b.to_bytes();
+        let b2 = BloomFilter::from_bytes(&bytes).unwrap();
+        for i in 0..100u32 {
+            assert!(b2.may_contain(&i.to_le_bytes()));
+        }
+        assert!(BloomFilter::from_bytes(&bytes[..5]).is_none());
+        assert!(BloomFilter::from_bytes(&[]).is_none());
+    }
+}

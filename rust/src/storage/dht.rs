@@ -1,0 +1,311 @@
+//! Region-scoped replicated DHT (paper §IV-C3).
+//!
+//! "We achieved a similar mechanism at the edge of the network by
+//! implementing a DHT that uses the overlay P2P network to automatically
+//! replicate the data and store using multiple RP located in same region.
+//! It guarantees that in the event of a RP crashing, the data will remain
+//! in the system."
+//!
+//! Placement: a record keyed by a profile is owned by the RP whose id is
+//! XOR-closest to the profile's SFC-derived id; the next `replicas - 1`
+//! closest RPs hold copies. The DHT here is the *placement + shard*
+//! logic over per-node [`LsmStore`]s; the coordinator wires it to the
+//! real transport, and the in-process cluster uses it directly.
+
+use super::lsm::{LsmOptions, LsmStore};
+use crate::ar::profile::Profile;
+use crate::device::throttle::ThrottledDisk;
+use crate::error::{Error, Result};
+use crate::overlay::node_id::NodeId;
+use crate::routing::router::ContentRouter;
+use std::collections::BTreeMap;
+
+/// Compute the DHT key id for a profile: its SFC point embedded in the
+/// id space (simple profiles), or a hash for degenerate cases.
+pub fn key_id(profile: &Profile) -> Result<NodeId> {
+    if profile.is_simple() {
+        let (curve, ks) = ContentRouter::curve_for(profile.dims())?;
+        let coords: Vec<u64> = profile
+            .terms()
+            .iter()
+            .map(|t| match t.to_dim_range(&ks) {
+                crate::routing::keyspace::DimRange::Point(p) => p,
+                other => other.bounds(ks.side()).0,
+            })
+            .collect();
+        let idx = curve.encode(&coords)?;
+        let mut id = ContentRouter::index_to_id(idx, &curve);
+        // Fill the low 96 bits with a hash of the full rendering so
+        // profiles that collide at SFC resolution still get distinct ids
+        // (placement ties break deterministically).
+        let h = NodeId::from_name(&profile.render());
+        id.0[8..].copy_from_slice(&h.0[8..]);
+        Ok(id)
+    } else {
+        Err(Error::Profile(format!(
+            "DHT keys must be simple profiles, got `{}`",
+            profile.render()
+        )))
+    }
+}
+
+/// Pick the `replicas` RPs responsible for a key among `members`
+/// (XOR-closest first).
+pub fn replica_set(key: &NodeId, members: &[NodeId], replicas: usize) -> Vec<NodeId> {
+    let mut sorted: Vec<NodeId> = members.to_vec();
+    sorted.sort_by_key(|m| m.distance(key));
+    sorted.truncate(replicas.max(1));
+    sorted
+}
+
+/// An in-process replicated DHT over one region's members. Each member
+/// gets its own LSM shard; puts replicate to the replica set; gets read
+/// from the closest live replica.
+pub struct ReplicatedDht {
+    shards: BTreeMap<NodeId, LsmStore>,
+    /// Members currently alive (failed nodes keep their shard on disk —
+    /// data is not lost — but are not consulted).
+    alive: Vec<NodeId>,
+    replicas: usize,
+}
+
+impl ReplicatedDht {
+    /// Build shards for `members`, one LSM store per member under
+    /// `base.dir/<node-id>`, all sharing the device profile `disk`.
+    pub fn new(
+        members: &[NodeId],
+        base: LsmOptions,
+        replicas: usize,
+        disk: &ThrottledDisk,
+    ) -> Result<Self> {
+        let mut shards = BTreeMap::new();
+        for m in members {
+            let opts = LsmOptions {
+                dir: base.dir.join(m.to_hex()),
+                memtable_bytes: base.memtable_bytes,
+                bloom_bits_per_key: base.bloom_bits_per_key,
+                max_tables: base.max_tables,
+            };
+            shards.insert(*m, LsmStore::open(opts, disk.clone())?);
+        }
+        Ok(ReplicatedDht { shards, alive: members.to_vec(), replicas: replicas.max(1) })
+    }
+
+    /// Members currently alive.
+    pub fn alive(&self) -> &[NodeId] {
+        &self.alive
+    }
+
+    /// Mark a member failed (its shard stops serving).
+    pub fn fail(&mut self, id: &NodeId) {
+        self.alive.retain(|m| m != id);
+    }
+
+    /// Mark a member recovered.
+    pub fn recover(&mut self, id: NodeId) {
+        if self.shards.contains_key(&id) && !self.alive.contains(&id) {
+            self.alive.push(id);
+        }
+    }
+
+    /// Store a record under a simple profile, replicating it.
+    pub fn put(&mut self, profile: &Profile, value: &[u8]) -> Result<Vec<NodeId>> {
+        let key = key_id(profile)?;
+        let targets = replica_set(&key, &self.alive, self.replicas);
+        if targets.is_empty() {
+            return Err(Error::Overlay("no live replicas".into()));
+        }
+        let storage_key = profile.render().into_bytes();
+        for t in &targets {
+            self.shards
+                .get_mut(t)
+                .expect("alive member must have a shard")
+                .put(&storage_key, value)?;
+        }
+        Ok(targets)
+    }
+
+    /// Read a record (closest live replica first).
+    pub fn get(&self, profile: &Profile) -> Result<Option<Vec<u8>>> {
+        let key = key_id(profile)?;
+        let storage_key = profile.render().into_bytes();
+        for t in replica_set(&key, &self.alive, self.replicas) {
+            if let Some(v) = self.shards[&t].get(&storage_key)? {
+                return Ok(Some(v));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Delete a record from all live replicas.
+    pub fn delete(&mut self, profile: &Profile) -> Result<()> {
+        let key = key_id(profile)?;
+        let storage_key = profile.render().into_bytes();
+        for t in replica_set(&key, &self.alive, self.replicas) {
+            self.shards.get_mut(&t).unwrap().delete(&storage_key)?;
+        }
+        Ok(())
+    }
+
+    /// Wildcard query: scan every live shard for keys matching the
+    /// pattern profile, deduplicated (paper Fig. 7's query layer).
+    pub fn query(&self, pattern: &Profile) -> Result<Vec<(String, Vec<u8>)>> {
+        // Longest literal prefix of the pattern bounds the scan.
+        let rendered = pattern.render();
+        let literal: String = rendered.chars().take_while(|&c| c != '*').collect();
+        let mut out: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+        for id in &self.alive {
+            for (k, v) in self.shards[id].scan_prefix(literal.as_bytes())? {
+                let key_str = String::from_utf8_lossy(&k).to_string();
+                if let Ok(stored) = Profile::parse(&key_str) {
+                    if crate::ar::matching::matches(pattern, &stored) {
+                        out.insert(key_str, v);
+                    }
+                }
+            }
+        }
+        Ok(out.into_iter().collect())
+    }
+
+    /// Number of live shards (tests).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+impl std::fmt::Debug for ReplicatedDht {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ReplicatedDht(shards={}, alive={}, replicas={})",
+            self.shards.len(),
+            self.alive.len(),
+            self.replicas
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn members(n: usize) -> Vec<NodeId> {
+        (0..n).map(|i| NodeId::from_name(&format!("dht-{i}"))).collect()
+    }
+
+    fn dht(name: &str, n: usize, replicas: usize) -> ReplicatedDht {
+        let dir = std::env::temp_dir()
+            .join("rpulsar-dht-tests")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = LsmOptions { dir, memtable_bytes: 1 << 20, bloom_bits_per_key: 10, max_tables: 4 };
+        ReplicatedDht::new(&members(n), opts, replicas, &ThrottledDisk::native()).unwrap()
+    }
+
+    fn p(s: &str) -> Profile {
+        Profile::parse(s).unwrap()
+    }
+
+    #[test]
+    fn put_get_round_trip() {
+        let mut d = dht("pg", 8, 2);
+        let targets = d.put(&p("drone,lidar"), b"image-bytes").unwrap();
+        assert_eq!(targets.len(), 2);
+        assert_eq!(d.get(&p("drone,lidar")).unwrap(), Some(b"image-bytes".to_vec()));
+        assert_eq!(d.get(&p("drone,thermal")).unwrap(), None);
+    }
+
+    #[test]
+    fn replica_set_is_deterministic_and_distinct() {
+        let ms = members(16);
+        let key = NodeId::from_name("some-key");
+        let a = replica_set(&key, &ms, 3);
+        let b = replica_set(&key, &ms, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        assert!(a[0] != a[1] && a[1] != a[2]);
+        // First replica is the global XOR-minimum.
+        let best = ms.iter().min_by_key(|m| m.distance(&key)).unwrap();
+        assert_eq!(&a[0], best);
+    }
+
+    #[test]
+    fn data_survives_primary_failure() {
+        // The paper's replication guarantee.
+        let mut d = dht("failover", 8, 3);
+        let targets = d.put(&p("drone,lidar"), b"precious").unwrap();
+        // Kill the primary replica.
+        d.fail(&targets[0]);
+        assert_eq!(d.get(&p("drone,lidar")).unwrap(), Some(b"precious".to_vec()));
+        // Kill the second too — third still serves.
+        d.fail(&targets[1]);
+        assert_eq!(d.get(&p("drone,lidar")).unwrap(), Some(b"precious".to_vec()));
+    }
+
+    #[test]
+    fn recovery_rejoins() {
+        let mut d = dht("rejoin", 4, 2);
+        let targets = d.put(&p("a,b"), b"v").unwrap();
+        d.fail(&targets[0]);
+        d.recover(targets[0]);
+        assert!(d.alive().contains(&targets[0]));
+        assert_eq!(d.get(&p("a,b")).unwrap(), Some(b"v".to_vec()));
+    }
+
+    #[test]
+    fn complex_profile_rejected_as_key() {
+        let mut d = dht("complexkey", 4, 2);
+        assert!(d.put(&p("drone,li*"), b"x").is_err());
+        assert!(key_id(&p("a*")).is_err());
+    }
+
+    #[test]
+    fn wildcard_query_finds_matches() {
+        let mut d = dht("wild", 8, 2);
+        d.put(&p("drone,lidar"), b"1").unwrap();
+        d.put(&p("drone,thermal"), b"2").unwrap();
+        d.put(&p("truck,gps"), b"3").unwrap();
+        let hits = d.query(&p("drone,*")).unwrap();
+        assert_eq!(hits.len(), 2);
+        let hits = d.query(&p("drone,li*")).unwrap();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].1, b"1");
+        let hits = d.query(&p("*,*")).unwrap();
+        assert_eq!(hits.len(), 3);
+    }
+
+    #[test]
+    fn delete_removes_from_replicas() {
+        let mut d = dht("del", 8, 2);
+        d.put(&p("a,b"), b"v").unwrap();
+        d.delete(&p("a,b")).unwrap();
+        assert_eq!(d.get(&p("a,b")).unwrap(), None);
+    }
+
+    #[test]
+    fn different_profiles_spread_over_members() {
+        // Placement should not pile everything on one node — provided the
+        // keywords are actually diverse. (Prefix-similar keywords *do*
+        // concentrate by design: SFC locality keeps them queryable as one
+        // cluster.)
+        let mut d = dht("spread", 16, 1);
+        let mut owners = std::collections::BTreeSet::new();
+        for i in 0..26u8 {
+            let a = (b'a' + i) as char;
+            let b = (b'a' + (25 - i)) as char;
+            let profile = p(&format!("{a}sensor,{b}reading"));
+            let t = d.put(&profile, b"v").unwrap();
+            owners.insert(t[0]);
+        }
+        assert!(owners.len() >= 4, "placement too concentrated: {}", owners.len());
+    }
+
+    #[test]
+    fn prefix_similar_profiles_cluster_on_same_owner() {
+        // The SFC locality property at the placement level.
+        let mut d = dht("cluster", 16, 1);
+        let a = d.put(&p("sensor1,temp"), b"v").unwrap();
+        let b = d.put(&p("sensor2,temp"), b"v").unwrap();
+        assert_eq!(a[0], b[0], "similar keywords should co-locate");
+    }
+}

@@ -1,0 +1,430 @@
+//! The RocksDB-role store (paper §IV-C3): memory-first LSM.
+//!
+//! Writes land in the [`Memtable`] (RAM speed — the design point of the
+//! paper's storage layer); when it exceeds `memtable_bytes` it flushes to
+//! an [`SsTable`]. Reads check memtable → newest sstable → oldest,
+//! short-circuiting through bloom filters. A simple full compaction
+//! merges sstables when their count exceeds `max_tables`. All disk byte
+//! movement is charged to the device throttle so edge-device behaviour
+//! reproduces on server hardware.
+
+use super::memtable::{Entry, Memtable};
+use super::sstable::SsTable;
+use crate::config::StorageConfig;
+use crate::device::throttle::{Dir, Medium, Pattern, ThrottledDisk};
+use crate::error::Result;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Store tuning knobs.
+#[derive(Debug, Clone)]
+pub struct LsmOptions {
+    pub dir: PathBuf,
+    pub memtable_bytes: usize,
+    pub bloom_bits_per_key: usize,
+    /// Compact when sstable count exceeds this.
+    pub max_tables: usize,
+}
+
+impl Default for LsmOptions {
+    fn default() -> Self {
+        LsmOptions {
+            dir: std::env::temp_dir().join("rpulsar-lsm"),
+            memtable_bytes: 4 << 20,
+            bloom_bits_per_key: 10,
+            max_tables: 6,
+        }
+    }
+}
+
+impl From<&StorageConfig> for LsmOptions {
+    fn from(c: &StorageConfig) -> Self {
+        LsmOptions {
+            dir: c.dir.clone(),
+            memtable_bytes: c.memtable_bytes,
+            bloom_bits_per_key: c.bloom_bits_per_key,
+            max_tables: 6,
+        }
+    }
+}
+
+/// The LSM store.
+pub struct LsmStore {
+    opts: LsmOptions,
+    memtable: Memtable,
+    /// Newest first.
+    tables: Vec<SsTable>,
+    next_table_id: u64,
+    disk: ThrottledDisk,
+}
+
+impl LsmStore {
+    /// Open (recovering existing sstables) or create a store.
+    pub fn open(opts: LsmOptions, disk: ThrottledDisk) -> Result<Self> {
+        std::fs::create_dir_all(&opts.dir)?;
+        let mut ids: Vec<(u64, PathBuf)> = std::fs::read_dir(&opts.dir)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                let id: u64 = name.strip_suffix(".sst")?.strip_prefix("table-")?.parse().ok()?;
+                Some((id, e.path()))
+            })
+            .collect();
+        ids.sort();
+        let mut tables = Vec::new();
+        let mut next_table_id = 0;
+        for (id, path) in ids {
+            tables.push(SsTable::open(&path)?);
+            next_table_id = next_table_id.max(id + 1);
+        }
+        tables.reverse(); // newest (highest id) first
+        Ok(LsmStore { opts, memtable: Memtable::new(), tables, next_table_id, disk })
+    }
+
+    /// Open with a native (unthrottled) device.
+    pub fn open_native(opts: LsmOptions) -> Result<Self> {
+        Self::open(opts, ThrottledDisk::native())
+    }
+
+    /// Insert or overwrite a record.
+    pub fn put(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
+        // Fixed per-op CPU (matching/index maintenance on-device) + RAM
+        // write (memtable) at RAM bandwidth.
+        self.disk.charge_cpu_op();
+        self.disk.charge(Medium::Ram, Pattern::Random, Dir::Write, key.len() + value.len());
+        self.memtable.put(key, value.to_vec());
+        self.maybe_flush()
+    }
+
+    /// Delete a record.
+    pub fn delete(&mut self, key: &[u8]) -> Result<()> {
+        self.disk.charge(Medium::Ram, Pattern::Random, Dir::Write, key.len() + 1);
+        self.memtable.delete(key);
+        self.maybe_flush()
+    }
+
+    /// Point lookup.
+    pub fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.disk.charge_cpu_op();
+        // Memtable: RAM random read.
+        if let Some(entry) = self.memtable.get(key) {
+            self.disk.charge(Medium::Ram, Pattern::Random, Dir::Read, key.len() + 8);
+            return Ok(match entry {
+                Entry::Value(v) => Some(v.clone()),
+                Entry::Tombstone => None,
+            });
+        }
+        // SsTables newest→oldest: bloom check is RAM; a hit reads disk.
+        for t in &self.tables {
+            if !t.may_contain(key) {
+                continue;
+            }
+            if let Some((entry, size)) = t.get(key)? {
+                self.disk.charge(Medium::Disk, Pattern::Random, Dir::Read, size.max(4096));
+                return Ok(match entry {
+                    Entry::Value(v) => Some(v),
+                    Entry::Tombstone => None,
+                });
+            }
+        }
+        Ok(None)
+    }
+
+    /// All live records whose key starts with `prefix` (newest version
+    /// wins; tombstones suppress).
+    pub fn scan_prefix(&self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        let mut merged: BTreeMap<Vec<u8>, Entry> = BTreeMap::new();
+        // Oldest first so newer layers overwrite.
+        for t in self.tables.iter().rev() {
+            let bytes: usize =
+                t.scan_prefix(prefix)?.iter().map(|(k, _)| k.len() + 16).sum::<usize>();
+            self.disk.charge(Medium::Disk, Pattern::Sequential, Dir::Read, bytes.max(4096));
+            for (k, e) in t.scan_prefix(prefix)? {
+                merged.insert(k, e);
+            }
+        }
+        for (k, e) in self.memtable.scan_prefix(prefix) {
+            merged.insert(k.to_vec(), e.clone());
+        }
+        // Per-query CPU (matching) plus RAM traffic for every returned
+        // record.
+        self.disk.charge_cpu_op();
+        let hit_bytes: usize = merged.iter().map(|(k, e)| k.len() + entry_bytes(e)).sum();
+        self.disk.charge(Medium::Ram, Pattern::Sequential, Dir::Read, hit_bytes.max(64));
+        Ok(merged
+            .into_iter()
+            .filter_map(|(k, e)| match e {
+                Entry::Value(v) => Some((k, v)),
+                Entry::Tombstone => None,
+            })
+            .collect())
+    }
+
+    /// Approximate number of live records (full merge; tests/stats only).
+    pub fn len(&self) -> Result<usize> {
+        Ok(self.scan_prefix(b"")?.len())
+    }
+
+    pub fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    /// Force-flush the memtable to an sstable.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.memtable.is_empty() {
+            return Ok(());
+        }
+        let entries = self.memtable.drain_sorted();
+        let bytes: usize =
+            entries.iter().map(|(k, e)| k.len() + entry_bytes(e)).sum();
+        let path = self.opts.dir.join(format!("table-{:010}.sst", self.next_table_id));
+        self.next_table_id += 1;
+        let table = SsTable::write(&path, &entries, self.opts.bloom_bits_per_key)?;
+        // Flush = sequential disk write of the whole run.
+        self.disk.charge(Medium::Disk, Pattern::Sequential, Dir::Write, bytes);
+        self.tables.insert(0, table);
+        if self.tables.len() > self.opts.max_tables {
+            self.compact()?;
+        }
+        Ok(())
+    }
+
+    fn maybe_flush(&mut self) -> Result<()> {
+        if self.memtable.approx_bytes() >= self.opts.memtable_bytes {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Merge every sstable into one (full compaction).
+    pub fn compact(&mut self) -> Result<()> {
+        if self.tables.len() <= 1 {
+            return Ok(());
+        }
+        let mut merged: BTreeMap<Vec<u8>, Entry> = BTreeMap::new();
+        let mut read_bytes = 0usize;
+        for t in self.tables.iter().rev() {
+            read_bytes += t.data_bytes();
+            for (k, e) in t.iter_all()? {
+                merged.insert(k, e);
+            }
+        }
+        // Drop tombstones entirely — nothing older remains.
+        let entries: Vec<(Vec<u8>, Entry)> =
+            merged.into_iter().filter(|(_, e)| !matches!(e, Entry::Tombstone)).collect();
+        let write_bytes: usize = entries.iter().map(|(k, e)| k.len() + entry_bytes(e)).sum();
+        self.disk.charge(Medium::Disk, Pattern::Sequential, Dir::Read, read_bytes);
+        self.disk.charge(Medium::Disk, Pattern::Sequential, Dir::Write, write_bytes);
+
+        let old_paths: Vec<PathBuf> = self.tables.iter().map(|t| t.path().to_path_buf()).collect();
+        let path = self.opts.dir.join(format!("table-{:010}.sst", self.next_table_id));
+        self.next_table_id += 1;
+        let table = SsTable::write(&path, &entries, self.opts.bloom_bits_per_key)?;
+        self.tables = vec![table];
+        for p in old_paths {
+            let _ = std::fs::remove_file(p);
+        }
+        Ok(())
+    }
+
+    /// Number of on-disk sstables (tests/stats).
+    pub fn table_count(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Memtable footprint (tests/stats).
+    pub fn memtable_bytes(&self) -> usize {
+        self.memtable.approx_bytes()
+    }
+
+    /// The device throttle (virtual-clock inspection in benches).
+    pub fn disk(&self) -> &ThrottledDisk {
+        &self.disk
+    }
+}
+
+fn entry_bytes(e: &Entry) -> usize {
+    match e {
+        Entry::Value(v) => v.len(),
+        Entry::Tombstone => 1,
+    }
+}
+
+impl std::fmt::Debug for LsmStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "LsmStore(memtable={}B, tables={})",
+            self.memtable.approx_bytes(),
+            self.tables.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(name: &str, memtable_bytes: usize) -> LsmOptions {
+        let dir = std::env::temp_dir()
+            .join("rpulsar-lsm-tests")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        LsmOptions { dir, memtable_bytes, bloom_bits_per_key: 10, max_tables: 3 }
+    }
+
+    fn cleanup(o: &LsmOptions) {
+        let _ = std::fs::remove_dir_all(&o.dir);
+    }
+
+    #[test]
+    fn put_get_delete() {
+        let o = opts("pgd", 1 << 20);
+        let mut s = LsmStore::open_native(o.clone()).unwrap();
+        s.put(b"k1", b"v1").unwrap();
+        assert_eq!(s.get(b"k1").unwrap(), Some(b"v1".to_vec()));
+        s.delete(b"k1").unwrap();
+        assert_eq!(s.get(b"k1").unwrap(), None);
+        assert_eq!(s.get(b"never").unwrap(), None);
+        cleanup(&o);
+    }
+
+    #[test]
+    fn flush_and_read_from_sstable() {
+        let o = opts("flush", 1 << 20);
+        let mut s = LsmStore::open_native(o.clone()).unwrap();
+        for i in 0..100u32 {
+            s.put(format!("key-{i:03}").as_bytes(), format!("val-{i}").as_bytes()).unwrap();
+        }
+        s.flush().unwrap();
+        assert_eq!(s.memtable_bytes(), 0);
+        assert_eq!(s.table_count(), 1);
+        assert_eq!(s.get(b"key-042").unwrap(), Some(b"val-42".to_vec()));
+        cleanup(&o);
+    }
+
+    #[test]
+    fn auto_flush_on_threshold() {
+        let o = opts("auto", 1024);
+        let mut s = LsmStore::open_native(o.clone()).unwrap();
+        for i in 0..100u32 {
+            s.put(format!("k{i}").as_bytes(), &[0u8; 64]).unwrap();
+        }
+        assert!(s.table_count() >= 1, "should have auto-flushed");
+        // Everything still readable.
+        assert_eq!(s.get(b"k0").unwrap(), Some(vec![0u8; 64]));
+        assert_eq!(s.get(b"k99").unwrap(), Some(vec![0u8; 64]));
+        cleanup(&o);
+    }
+
+    #[test]
+    fn newest_version_wins_across_layers() {
+        let o = opts("versions", 1 << 20);
+        let mut s = LsmStore::open_native(o.clone()).unwrap();
+        s.put(b"k", b"old").unwrap();
+        s.flush().unwrap();
+        s.put(b"k", b"new").unwrap();
+        assert_eq!(s.get(b"k").unwrap(), Some(b"new".to_vec()));
+        s.flush().unwrap();
+        assert_eq!(s.get(b"k").unwrap(), Some(b"new".to_vec()));
+        cleanup(&o);
+    }
+
+    #[test]
+    fn tombstone_shadows_sstable_value() {
+        let o = opts("shadow", 1 << 20);
+        let mut s = LsmStore::open_native(o.clone()).unwrap();
+        s.put(b"k", b"v").unwrap();
+        s.flush().unwrap();
+        s.delete(b"k").unwrap();
+        assert_eq!(s.get(b"k").unwrap(), None);
+        s.flush().unwrap();
+        assert_eq!(s.get(b"k").unwrap(), None);
+        cleanup(&o);
+    }
+
+    #[test]
+    fn scan_prefix_merges_layers() {
+        let o = opts("scanm", 1 << 20);
+        let mut s = LsmStore::open_native(o.clone()).unwrap();
+        s.put(b"drone,lidar", b"1").unwrap();
+        s.flush().unwrap();
+        s.put(b"drone,thermal", b"2").unwrap();
+        s.put(b"truck,gps", b"3").unwrap();
+        let hits = s.scan_prefix(b"drone").unwrap();
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].0, b"drone,lidar");
+        cleanup(&o);
+    }
+
+    #[test]
+    fn recovery_reopens_tables() {
+        let o = opts("recover", 1 << 20);
+        {
+            let mut s = LsmStore::open_native(o.clone()).unwrap();
+            s.put(b"persist", b"yes").unwrap();
+            s.flush().unwrap();
+        }
+        let s = LsmStore::open_native(o.clone()).unwrap();
+        assert_eq!(s.get(b"persist").unwrap(), Some(b"yes".to_vec()));
+        cleanup(&o);
+    }
+
+    #[test]
+    fn compaction_bounds_table_count() {
+        let o = opts("compact", 1 << 20);
+        let mut s = LsmStore::open_native(o.clone()).unwrap();
+        for round in 0..6u32 {
+            for i in 0..10u32 {
+                s.put(format!("r{round}-k{i}").as_bytes(), b"v").unwrap();
+            }
+            s.flush().unwrap();
+        }
+        assert!(s.table_count() <= 3 + 1, "tables={}", s.table_count());
+        // All data survives compaction.
+        for round in 0..6u32 {
+            assert_eq!(s.get(format!("r{round}-k5").as_bytes()).unwrap(), Some(b"v".to_vec()));
+        }
+        cleanup(&o);
+    }
+
+    #[test]
+    fn compaction_drops_tombstones() {
+        let o = opts("droptomb", 1 << 20);
+        let mut s = LsmStore::open_native(o.clone()).unwrap();
+        s.put(b"a", b"1").unwrap();
+        s.put(b"b", b"2").unwrap();
+        s.flush().unwrap();
+        s.delete(b"a").unwrap();
+        s.flush().unwrap();
+        s.compact().unwrap();
+        assert_eq!(s.table_count(), 1);
+        assert_eq!(s.get(b"a").unwrap(), None);
+        assert_eq!(s.get(b"b").unwrap(), Some(b"2".to_vec()));
+        cleanup(&o);
+    }
+
+    #[test]
+    fn throttle_accounts_disk_flush() {
+        use crate::device::profile::DeviceProfile;
+        use crate::device::throttle::ClockMode;
+        let o = opts("throttle", 1 << 20);
+        let disk = ThrottledDisk::new(DeviceProfile::raspberry_pi(), ClockMode::Virtual);
+        let mut s = LsmStore::open(o.clone(), disk).unwrap();
+        for i in 0..100u32 {
+            s.put(format!("k{i}").as_bytes(), &[0u8; 100]).unwrap();
+        }
+        let before_flush = s.disk().virtual_elapsed();
+        s.flush().unwrap();
+        let flush_cost = s.disk().virtual_elapsed() - before_flush;
+        // ~10 KB at 7.12 MB/s ≈ 1.5 ms of sequential disk time.
+        assert!(
+            flush_cost.as_micros() > 1_000,
+            "flush must hit the disk: {flush_cost:?}"
+        );
+        // Per-put cost is CPU+RAM only: ~110 µs on the Pi model.
+        let per_put = before_flush / 100;
+        assert!(per_put.as_micros() < 500, "puts must stay memory-speed: {per_put:?}");
+        cleanup(&o);
+    }
+}

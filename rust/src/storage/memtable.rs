@@ -1,0 +1,166 @@
+//! In-memory write buffer: sorted map with byte accounting and
+//! tombstones. The "most recently used data in main memory" half of the
+//! paper's RocksDB-style storage contract.
+
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+/// A value or a deletion marker (tombstone).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Entry {
+    Value(Vec<u8>),
+    Tombstone,
+}
+
+impl Entry {
+    fn approx_bytes(&self) -> usize {
+        match self {
+            Entry::Value(v) => v.len(),
+            Entry::Tombstone => 1,
+        }
+    }
+}
+
+/// Sorted in-memory table.
+#[derive(Debug, Default)]
+pub struct Memtable {
+    map: BTreeMap<Vec<u8>, Entry>,
+    approx_bytes: usize,
+}
+
+impl Memtable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert or overwrite.
+    pub fn put(&mut self, key: &[u8], value: Vec<u8>) {
+        self.insert_entry(key, Entry::Value(value));
+    }
+
+    /// Record a deletion (tombstone shadows older sstable values).
+    pub fn delete(&mut self, key: &[u8]) {
+        self.insert_entry(key, Entry::Tombstone);
+    }
+
+    fn insert_entry(&mut self, key: &[u8], entry: Entry) {
+        let add = key.len() + entry.approx_bytes();
+        if let Some(old) = self.map.insert(key.to_vec(), entry) {
+            self.approx_bytes -= key.len() + old.approx_bytes();
+        }
+        self.approx_bytes += add;
+    }
+
+    /// Lookup. `None` = not present here (check sstables);
+    /// `Some(Tombstone)` = deleted, stop searching.
+    pub fn get(&self, key: &[u8]) -> Option<&Entry> {
+        self.map.get(key)
+    }
+
+    /// Number of entries (including tombstones).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Approximate memory footprint in bytes.
+    pub fn approx_bytes(&self) -> usize {
+        self.approx_bytes
+    }
+
+    /// Iterate entries in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&[u8], &Entry)> {
+        self.map.iter().map(|(k, v)| (k.as_slice(), v))
+    }
+
+    /// Iterate entries whose key starts with `prefix`.
+    pub fn scan_prefix<'a>(
+        &'a self,
+        prefix: &'a [u8],
+    ) -> impl Iterator<Item = (&'a [u8], &'a Entry)> + 'a {
+        self.map
+            .range::<[u8], _>((Bound::Included(prefix), Bound::Unbounded))
+            .take_while(move |(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_slice(), v))
+    }
+
+    /// Drain into a sorted vec (memtable flush).
+    pub fn drain_sorted(&mut self) -> Vec<(Vec<u8>, Entry)> {
+        self.approx_bytes = 0;
+        std::mem::take(&mut self.map).into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_overwrite() {
+        let mut m = Memtable::new();
+        m.put(b"k", b"v1".to_vec());
+        m.put(b"k", b"v2".to_vec());
+        assert_eq!(m.get(b"k"), Some(&Entry::Value(b"v2".to_vec())));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn tombstone_shadows() {
+        let mut m = Memtable::new();
+        m.put(b"k", b"v".to_vec());
+        m.delete(b"k");
+        assert_eq!(m.get(b"k"), Some(&Entry::Tombstone));
+        assert_eq!(m.get(b"other"), None);
+    }
+
+    #[test]
+    fn byte_accounting_tracks_overwrites() {
+        let mut m = Memtable::new();
+        m.put(b"key", vec![0u8; 100]);
+        let b1 = m.approx_bytes();
+        m.put(b"key", vec![0u8; 10]);
+        let b2 = m.approx_bytes();
+        assert!(b2 < b1);
+        assert_eq!(b2, 3 + 10);
+    }
+
+    #[test]
+    fn iter_is_sorted() {
+        let mut m = Memtable::new();
+        for k in ["delta", "alpha", "charlie", "bravo"] {
+            m.put(k.as_bytes(), b"x".to_vec());
+        }
+        let keys: Vec<&[u8]> = m.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec![&b"alpha"[..], b"bravo", b"charlie", b"delta"]);
+    }
+
+    #[test]
+    fn scan_prefix_bounds() {
+        let mut m = Memtable::new();
+        for k in ["drone,lidar", "drone,thermal", "drone", "truck,gps"] {
+            m.put(k.as_bytes(), b"x".to_vec());
+        }
+        let hits: Vec<&[u8]> = m.scan_prefix(b"drone").map(|(k, _)| k).collect();
+        assert_eq!(hits.len(), 3);
+        let hits: Vec<&[u8]> = m.scan_prefix(b"drone,l").map(|(k, _)| k).collect();
+        assert_eq!(hits, vec![&b"drone,lidar"[..]]);
+        assert_eq!(m.scan_prefix(b"zzz").count(), 0);
+    }
+
+    #[test]
+    fn drain_empties_and_sorts() {
+        let mut m = Memtable::new();
+        m.put(b"b", b"2".to_vec());
+        m.put(b"a", b"1".to_vec());
+        m.delete(b"c");
+        let drained = m.drain_sorted();
+        assert_eq!(drained.len(), 3);
+        assert_eq!(drained[0].0, b"a");
+        assert_eq!(drained[2].1, Entry::Tombstone);
+        assert!(m.is_empty());
+        assert_eq!(m.approx_bytes(), 0);
+    }
+}

@@ -1,0 +1,25 @@
+//! The memory-mapped data storage layer (paper §IV-C3).
+//!
+//! "The storage layer relies on RocksDB, an embedded database optimized
+//! for fast and low latency storage. [...] The database will keep the
+//! most recently used data in main memory, and it will store the least
+//! recently used data to disk."
+//!
+//! No RocksDB offline — [`lsm`] implements the same contract natively:
+//! an in-memory [`memtable`] absorbs writes, overflowing to sorted
+//! on-disk runs ([`sstable`]) guarded by [`bloom`] filters; reads hit the
+//! memtable first (recently-used data stays in RAM). [`dht`] replicates
+//! records across the Rendezvous Points of a region so data survives RP
+//! failures, and [`query`] evaluates the exact/wildcard/range queries of
+//! the paper's serving layer (Figs. 5–7).
+
+pub mod bloom;
+pub mod dht;
+pub mod lsm;
+pub mod memtable;
+pub mod query;
+pub mod sstable;
+
+pub use dht::ReplicatedDht;
+pub use lsm::{LsmStore, LsmOptions};
+pub use query::QueryEngine;

@@ -1,0 +1,145 @@
+//! The serving layer's query engine (paper §III: "the serving layer
+//! capabilities are present within the pub/sub messaging system by
+//! integrating a lightweight SQL engine"; §V-A2 Figs. 5–7).
+//!
+//! Queries come in the three forms the paper evaluates:
+//! - **store**: insert a record under a simple profile;
+//! - **exact query**: exact keywords, returns a single result;
+//! - **wildcard query**: patterns, may return multiple results.
+
+use super::dht::ReplicatedDht;
+use crate::ar::profile::Profile;
+use crate::error::{Error, Result};
+use crate::metrics::Registry;
+
+/// Thin query façade over the DHT, with metrics.
+pub struct QueryEngine {
+    dht: ReplicatedDht,
+    metrics: Registry,
+}
+
+impl QueryEngine {
+    pub fn new(dht: ReplicatedDht) -> Self {
+        QueryEngine { dht, metrics: Registry::new() }
+    }
+
+    pub fn with_metrics(dht: ReplicatedDht, metrics: Registry) -> Self {
+        QueryEngine { dht, metrics }
+    }
+
+    /// Store a record (paper workload: "stores N elements").
+    pub fn store(&mut self, profile: &Profile, value: &[u8]) -> Result<()> {
+        self.dht.put(profile, value)?;
+        self.metrics.counter("query.stores").inc();
+        Ok(())
+    }
+
+    /// Exact query: profile must be simple; returns at most one record.
+    pub fn exact(&self, profile: &Profile) -> Result<Option<Vec<u8>>> {
+        if !profile.is_simple() {
+            return Err(Error::Profile(format!(
+                "exact query requires exact keywords, got `{}`",
+                profile.render()
+            )));
+        }
+        self.metrics.counter("query.exact").inc();
+        self.dht.get(profile)
+    }
+
+    /// Wildcard query: pattern profile; returns all matches.
+    pub fn wildcard(&self, pattern: &Profile) -> Result<Vec<(String, Vec<u8>)>> {
+        self.metrics.counter("query.wildcard").inc();
+        self.dht.query(pattern)
+    }
+
+    /// Delete matching records.
+    pub fn delete(&mut self, profile: &Profile) -> Result<()> {
+        self.metrics.counter("query.deletes").inc();
+        self.dht.delete(profile)
+    }
+
+    /// Access the underlying DHT (failure injection in tests).
+    pub fn dht_mut(&mut self) -> &mut ReplicatedDht {
+        &mut self.dht
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+}
+
+impl std::fmt::Debug for QueryEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "QueryEngine({:?})", self.dht)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::throttle::ThrottledDisk;
+    use crate::overlay::node_id::NodeId;
+    use crate::storage::lsm::LsmOptions;
+
+    fn engine(name: &str) -> QueryEngine {
+        let dir = std::env::temp_dir()
+            .join("rpulsar-query-tests")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let members: Vec<NodeId> =
+            (0..8).map(|i| NodeId::from_name(&format!("q-{i}"))).collect();
+        let opts = LsmOptions { dir, memtable_bytes: 1 << 20, bloom_bits_per_key: 10, max_tables: 4 };
+        QueryEngine::new(
+            ReplicatedDht::new(&members, opts, 2, &ThrottledDisk::native()).unwrap(),
+        )
+    }
+
+    fn p(s: &str) -> Profile {
+        Profile::parse(s).unwrap()
+    }
+
+    #[test]
+    fn store_then_exact() {
+        let mut e = engine("se");
+        e.store(&p("drone,lidar"), b"img").unwrap();
+        assert_eq!(e.exact(&p("drone,lidar")).unwrap(), Some(b"img".to_vec()));
+        assert_eq!(e.exact(&p("drone,gps")).unwrap(), None);
+    }
+
+    #[test]
+    fn exact_rejects_patterns() {
+        let e = engine("rejects");
+        assert!(e.exact(&p("drone,li*")).is_err());
+    }
+
+    #[test]
+    fn wildcard_returns_multiple() {
+        let mut e = engine("wc");
+        e.store(&p("sensor1,temp"), b"20").unwrap();
+        e.store(&p("sensor2,temp"), b"21").unwrap();
+        e.store(&p("sensor3,humidity"), b"55").unwrap();
+        let hits = e.wildcard(&p("sensor*,temp")).unwrap();
+        assert_eq!(hits.len(), 2);
+        let all = e.wildcard(&p("sensor*,*")).unwrap();
+        assert_eq!(all.len(), 3);
+    }
+
+    #[test]
+    fn delete_then_query_empty() {
+        let mut e = engine("del");
+        e.store(&p("a,b"), b"v").unwrap();
+        e.delete(&p("a,b")).unwrap();
+        assert_eq!(e.exact(&p("a,b")).unwrap(), None);
+    }
+
+    #[test]
+    fn metrics_track_operations() {
+        let mut e = engine("metrics");
+        e.store(&p("a,b"), b"v").unwrap();
+        e.exact(&p("a,b")).unwrap();
+        e.wildcard(&p("a,*")).unwrap();
+        assert_eq!(e.metrics().counter("query.stores").get(), 1);
+        assert_eq!(e.metrics().counter("query.exact").get(), 1);
+        assert_eq!(e.metrics().counter("query.wildcard").get(), 1);
+    }
+}

@@ -1,0 +1,313 @@
+//! Sorted string table: one immutable, sorted on-disk run produced by a
+//! memtable flush.
+//!
+//! Layout: `[data block][index][bloom][footer]` — the data block is a
+//! sequence of length-prefixed (key, entry) records in key order; the
+//! index maps every key to its record offset; the footer locates index
+//! and bloom. The whole table is small enough (memtable-sized) to keep
+//! the index in memory after open. I/O is routed through the device
+//! throttle by the owning [`super::lsm::LsmStore`].
+
+use super::bloom::BloomFilter;
+use super::memtable::Entry;
+use crate::error::{Error, Result};
+use crate::util::codec::{ByteReader, ByteWriter};
+use crate::util::crc32;
+use std::path::{Path, PathBuf};
+
+const MAGIC: u32 = 0x5353_5442; // "SSTB"
+
+/// An open sstable: index + bloom resident, data on disk.
+#[derive(Debug)]
+pub struct SsTable {
+    path: PathBuf,
+    /// Sorted (key → data-block offset).
+    index: Vec<(Vec<u8>, u32)>,
+    bloom: BloomFilter,
+    /// Raw data block (kept mapped in memory — tables are memtable-sized;
+    /// the *throttle accounting* treats reads as disk I/O).
+    data: Vec<u8>,
+}
+
+impl SsTable {
+    /// Write a new sstable from sorted entries. Returns the open table.
+    pub fn write(
+        path: &Path,
+        entries: &[(Vec<u8>, Entry)],
+        bits_per_key: usize,
+    ) -> Result<SsTable> {
+        if entries.windows(2).any(|w| w[0].0 >= w[1].0) {
+            return Err(Error::Storage("sstable entries must be strictly sorted".into()));
+        }
+        let mut data = ByteWriter::with_capacity(4096);
+        let mut index: Vec<(Vec<u8>, u32)> = Vec::with_capacity(entries.len());
+        let mut bloom = BloomFilter::new(entries.len(), bits_per_key);
+        for (key, entry) in entries {
+            index.push((key.clone(), data.len() as u32));
+            bloom.insert(key);
+            data.put_bytes(key);
+            match entry {
+                Entry::Value(v) => {
+                    data.put_u8(1);
+                    data.put_bytes(v);
+                }
+                Entry::Tombstone => data.put_u8(0),
+            }
+        }
+        let data = data.into_bytes();
+
+        let mut file = ByteWriter::with_capacity(data.len() + 4096);
+        file.put_raw(&data);
+        let index_off = file.len() as u64;
+        file.put_varint(index.len() as u64);
+        for (key, off) in &index {
+            file.put_bytes(key);
+            file.put_u32(*off);
+        }
+        let bloom_off = file.len() as u64;
+        let bloom_bytes = bloom.to_bytes();
+        file.put_bytes(&bloom_bytes);
+        // Footer: index_off, bloom_off, data_crc, magic.
+        file.put_u64(index_off);
+        file.put_u64(bloom_off);
+        file.put_u32(crc32(&data));
+        file.put_u32(MAGIC);
+
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, file.as_slice())?;
+        Ok(SsTable { path: path.to_path_buf(), index, bloom, data })
+    }
+
+    /// Open an existing sstable, verifying the footer and data CRC.
+    pub fn open(path: &Path) -> Result<SsTable> {
+        let bytes = std::fs::read(path)?;
+        if bytes.len() < 24 {
+            return Err(Error::Storage(format!("{path:?}: too small for an sstable")));
+        }
+        let footer = &bytes[bytes.len() - 24..];
+        let mut fr = ByteReader::new(footer);
+        let index_off = fr.get_u64()? as usize;
+        let bloom_off = fr.get_u64()? as usize;
+        let data_crc = fr.get_u32()?;
+        let magic = fr.get_u32()?;
+        if magic != MAGIC {
+            return Err(Error::Storage(format!("{path:?}: bad magic")));
+        }
+        if index_off > bloom_off || bloom_off > bytes.len() - 24 {
+            return Err(Error::Storage(format!("{path:?}: corrupt footer")));
+        }
+        let data = bytes[..index_off].to_vec();
+        if crc32(&data) != data_crc {
+            return Err(Error::Storage(format!("{path:?}: data crc mismatch")));
+        }
+        let mut ir = ByteReader::new(&bytes[index_off..bloom_off]);
+        let n = ir.get_varint()? as usize;
+        let mut index = Vec::with_capacity(n);
+        for _ in 0..n {
+            let key = ir.get_bytes()?.to_vec();
+            let off = ir.get_u32()?;
+            index.push((key, off));
+        }
+        let mut br = ByteReader::new(&bytes[bloom_off..bytes.len() - 24]);
+        let bloom = BloomFilter::from_bytes(br.get_bytes()?)
+            .ok_or_else(|| Error::Storage(format!("{path:?}: corrupt bloom")))?;
+        Ok(SsTable { path: path.to_path_buf(), index, bloom, data })
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Total data-block size (throttle accounting).
+    pub fn data_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bloom-filter check (no I/O).
+    pub fn may_contain(&self, key: &[u8]) -> bool {
+        self.bloom.may_contain(key)
+    }
+
+    fn read_at(&self, off: u32) -> Result<(Vec<u8>, Entry)> {
+        let mut r = ByteReader::new(&self.data[off as usize..]);
+        let key = r.get_bytes()?.to_vec();
+        let entry = match r.get_u8()? {
+            1 => Entry::Value(r.get_bytes()?.to_vec()),
+            0 => Entry::Tombstone,
+            other => return Err(Error::Storage(format!("bad entry tag {other}"))),
+        };
+        Ok((key, entry))
+    }
+
+    /// Point lookup. Returns the record size read (for I/O accounting)
+    /// alongside the entry.
+    pub fn get(&self, key: &[u8]) -> Result<Option<(Entry, usize)>> {
+        if !self.bloom.may_contain(key) {
+            return Ok(None);
+        }
+        match self.index.binary_search_by(|(k, _)| k.as_slice().cmp(key)) {
+            Ok(i) => {
+                let off = self.index[i].1;
+                let (k, entry) = self.read_at(off)?;
+                debug_assert_eq!(k.as_slice(), key);
+                let size = k.len() + entry_size(&entry);
+                Ok(Some((entry, size)))
+            }
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// Scan all entries whose key starts with `prefix`, in order.
+    pub fn scan_prefix(&self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Entry)>> {
+        let start = self.index.partition_point(|(k, _)| k.as_slice() < prefix);
+        let mut out = Vec::new();
+        for (key, off) in &self.index[start..] {
+            if !key.starts_with(prefix) {
+                break;
+            }
+            out.push(self.read_at(*off).map(|(k, e)| {
+                debug_assert_eq!(&k, key);
+                (k, e)
+            })?);
+        }
+        Ok(out)
+    }
+
+    /// Iterate every entry (compaction / full scans).
+    pub fn iter_all(&self) -> Result<Vec<(Vec<u8>, Entry)>> {
+        self.index.iter().map(|(_, off)| self.read_at(*off)).collect()
+    }
+}
+
+fn entry_size(e: &Entry) -> usize {
+    match e {
+        Entry::Value(v) => v.len(),
+        Entry::Tombstone => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("rpulsar-sstable-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}.sst", std::process::id()))
+    }
+
+    fn entries(n: usize) -> Vec<(Vec<u8>, Entry)> {
+        (0..n)
+            .map(|i| {
+                (
+                    format!("key-{i:05}").into_bytes(),
+                    Entry::Value(format!("value-{i}").into_bytes()),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn write_open_get() {
+        let path = tmp("wog");
+        let es = entries(100);
+        SsTable::write(&path, &es, 10).unwrap();
+        let t = SsTable::open(&path).unwrap();
+        assert_eq!(t.len(), 100);
+        let (e, _) = t.get(b"key-00042").unwrap().unwrap();
+        assert_eq!(e, Entry::Value(b"value-42".to_vec()));
+        assert!(t.get(b"key-99999").unwrap().is_none());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn unsorted_input_rejected() {
+        let path = tmp("unsorted");
+        let es = vec![
+            (b"b".to_vec(), Entry::Value(vec![1])),
+            (b"a".to_vec(), Entry::Value(vec![2])),
+        ];
+        assert!(SsTable::write(&path, &es, 10).is_err());
+    }
+
+    #[test]
+    fn tombstones_round_trip() {
+        let path = tmp("tomb");
+        let es = vec![
+            (b"alive".to_vec(), Entry::Value(b"v".to_vec())),
+            (b"dead".to_vec(), Entry::Tombstone),
+        ];
+        SsTable::write(&path, &es, 10).unwrap();
+        let t = SsTable::open(&path).unwrap();
+        assert_eq!(t.get(b"dead").unwrap().unwrap().0, Entry::Tombstone);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn prefix_scan_in_order() {
+        let path = tmp("scan");
+        let mut es = vec![
+            (b"drone,lidar".to_vec(), Entry::Value(b"1".to_vec())),
+            (b"drone,thermal".to_vec(), Entry::Value(b"2".to_vec())),
+            (b"truck,gps".to_vec(), Entry::Value(b"3".to_vec())),
+        ];
+        es.sort_by(|a, b| a.0.cmp(&b.0));
+        SsTable::write(&path, &es, 10).unwrap();
+        let t = SsTable::open(&path).unwrap();
+        let hits = t.scan_prefix(b"drone").unwrap();
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].0, b"drone,lidar");
+        assert!(t.scan_prefix(b"zzz").unwrap().is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let path = tmp("corrupt");
+        SsTable::write(&path, &entries(10), 10).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[5] ^= 0xFF; // flip a data byte
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(SsTable::open(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let path = tmp("trunc");
+        std::fs::write(&path, b"short").unwrap();
+        assert!(SsTable::open(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn iter_all_returns_everything() {
+        let path = tmp("iterall");
+        let es = entries(25);
+        SsTable::write(&path, &es, 10).unwrap();
+        let t = SsTable::open(&path).unwrap();
+        assert_eq!(t.iter_all().unwrap(), es);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_table_roundtrips() {
+        let path = tmp("empty");
+        SsTable::write(&path, &[], 10).unwrap();
+        let t = SsTable::open(&path).unwrap();
+        assert!(t.is_empty());
+        assert!(t.get(b"x").unwrap().is_none());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,192 @@
+//! On-demand topology deployment (paper §IV-C2: "on-demand topologies
+//! (scaling up or down)"; §IV-D: `start_function` / `stop_function`).
+//!
+//! The [`TopologyManager`] holds a registry of *stage factories* (name →
+//! operator constructor) and a table of running instances keyed by the
+//! function-profile rendering. `start` parses the stored topology string,
+//! instantiates each stage and launches it on the [`StreamEngine`];
+//! `stop` shuts the instance down and reports its drained output count.
+
+use super::engine::{EngineHandle, StreamEngine};
+use super::operator::Operator;
+use super::topology::Topology;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Constructs a fresh operator instance for a stage name.
+pub type StageFactory = Box<dyn Fn() -> Box<dyn Operator> + Send>;
+
+/// Deployment manager for on-demand topologies.
+pub struct TopologyManager {
+    engine: StreamEngine,
+    factories: BTreeMap<String, StageFactory>,
+    running: BTreeMap<String, EngineHandle>,
+}
+
+impl TopologyManager {
+    pub fn new(engine: StreamEngine) -> Self {
+        TopologyManager { engine, factories: BTreeMap::new(), running: BTreeMap::new() }
+    }
+
+    /// Register a stage factory under a name usable in topology strings.
+    pub fn register_stage(
+        &mut self,
+        name: &str,
+        factory: impl Fn() -> Box<dyn Operator> + Send + 'static,
+    ) {
+        self.factories.insert(name.to_string(), Box::new(factory));
+    }
+
+    /// Known stage names.
+    pub fn stages(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+
+    /// Start a topology instance under `key` (the function profile
+    /// rendering). Fails on unknown stages or duplicate key.
+    pub fn start(&mut self, key: &str, spec: &str) -> Result<()> {
+        if self.running.contains_key(key) {
+            return Err(Error::Stream(format!("topology `{key}` already running")));
+        }
+        let topo = Topology::parse(key, spec)?;
+        let mut operators: Vec<Box<dyn Operator>> = Vec::with_capacity(topo.len());
+        for stage in &topo.stages {
+            let factory = self.factories.get(stage).ok_or_else(|| {
+                Error::Stream(format!("unknown stage `{stage}` in topology `{spec}`"))
+            })?;
+            operators.push(factory());
+        }
+        let handle = self.engine.launch(key, operators)?;
+        self.running.insert(key.to_string(), handle);
+        Ok(())
+    }
+
+    /// Feed a tuple to a running topology.
+    pub fn send(&self, key: &str, tuple: super::tuple::Tuple) -> Result<()> {
+        self.running
+            .get(key)
+            .ok_or_else(|| Error::NotFound(format!("topology `{key}` not running")))?
+            .send(tuple)
+    }
+
+    /// Try to receive one output tuple from a running topology.
+    pub fn try_recv(&self, key: &str, timeout: std::time::Duration) -> Option<super::tuple::Tuple> {
+        self.running.get(key)?.recv_timeout(timeout)
+    }
+
+    /// Stop a topology; returns its drained trailing output.
+    pub fn stop(&mut self, key: &str) -> Result<Vec<super::tuple::Tuple>> {
+        let handle = self
+            .running
+            .remove(key)
+            .ok_or_else(|| Error::NotFound(format!("topology `{key}` not running")))?;
+        handle.finish()
+    }
+
+    /// Names of running topologies.
+    pub fn running(&self) -> Vec<String> {
+        self.running.keys().cloned().collect()
+    }
+
+    /// Stop everything (node shutdown).
+    pub fn stop_all(&mut self) -> Result<()> {
+        let keys = self.running();
+        for k in keys {
+            self.stop(&k)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for TopologyManager {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TopologyManager(stages={}, running={})",
+            self.factories.len(),
+            self.running.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::operator::OperatorKind;
+    use crate::stream::tuple::Tuple;
+
+    fn manager() -> TopologyManager {
+        let mut m = TopologyManager::new(StreamEngine::new());
+        m.register_stage("inc", || {
+            Box::new(OperatorKind::map("inc", |mut t| {
+                let v = t.get("X").unwrap_or(0.0);
+                t.set("X", v + 1.0);
+                t
+            }))
+        });
+        m.register_stage("double", || {
+            Box::new(OperatorKind::map("double", |mut t| {
+                let v = t.get("X").unwrap_or(0.0);
+                t.set("X", v * 2.0);
+                t
+            }))
+        });
+        m
+    }
+
+    #[test]
+    fn start_send_stop() {
+        let mut m = manager();
+        m.start("f", "inc->double").unwrap();
+        assert_eq!(m.running(), vec!["f"]);
+        m.send("f", Tuple::new(0, vec![]).with("X", 5.0)).unwrap();
+        let out = m.stop("f").unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("X"), Some(12.0)); // (5+1)*2
+        assert!(m.running().is_empty());
+    }
+
+    #[test]
+    fn unknown_stage_fails() {
+        let mut m = manager();
+        assert!(m.start("f", "inc->mystery").is_err());
+        assert!(m.running().is_empty());
+    }
+
+    #[test]
+    fn duplicate_start_fails() {
+        let mut m = manager();
+        m.start("f", "inc").unwrap();
+        assert!(m.start("f", "inc").is_err());
+        m.stop("f").unwrap();
+    }
+
+    #[test]
+    fn stop_unknown_fails() {
+        let mut m = manager();
+        assert!(m.stop("ghost").is_err());
+        assert!(m.send("ghost", Tuple::new(0, vec![])).is_err());
+    }
+
+    #[test]
+    fn multiple_instances_run_concurrently() {
+        let mut m = manager();
+        m.start("a", "inc").unwrap();
+        m.start("b", "double").unwrap();
+        m.send("a", Tuple::new(0, vec![]).with("X", 1.0)).unwrap();
+        m.send("b", Tuple::new(0, vec![]).with("X", 1.0)).unwrap();
+        let a = m.stop("a").unwrap();
+        let b = m.stop("b").unwrap();
+        assert_eq!(a[0].get("X"), Some(2.0));
+        assert_eq!(b[0].get("X"), Some(2.0));
+    }
+
+    #[test]
+    fn stop_all_cleans_up() {
+        let mut m = manager();
+        m.start("a", "inc").unwrap();
+        m.start("b", "double").unwrap();
+        m.stop_all().unwrap();
+        assert!(m.running().is_empty());
+    }
+}

@@ -1,0 +1,26 @@
+//! The stream processing engine (paper §IV-C2): "transforming raw data
+//! stream into useful information [...] using a sequence of small
+//! processing units", with on-demand topologies that scale up or down.
+//!
+//! - [`tuple`]: the data tuples flowing through operators (bytes +
+//!   named numeric fields for the rule engine).
+//! - [`operator`]: the operator trait and built-ins (map, filter,
+//!   window aggregate, rule stage).
+//! - [`topology`]: a linear-DAG description, buildable from the paper's
+//!   `"a->b->c"` topology strings stored in function profiles.
+//! - [`engine`]: thread-per-operator execution with bounded channels —
+//!   backpressure propagates upstream by blocking sends.
+//! - [`deploy`]: on-demand start/stop keyed by function profile, driven
+//!   by `start_function` / `stop_function` reactions.
+
+pub mod deploy;
+pub mod engine;
+pub mod operator;
+pub mod topology;
+pub mod tuple;
+
+pub use deploy::TopologyManager;
+pub use engine::{EngineHandle, StreamEngine};
+pub use operator::{Operator, OperatorKind};
+pub use topology::Topology;
+pub use tuple::Tuple;

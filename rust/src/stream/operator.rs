@@ -1,0 +1,200 @@
+//! Stream operators: the "sequence of small processing units".
+//!
+//! [`Operator`] is the extension point ("R-Pulsar allows the end user to
+//! integrate any distributed online big data-processing system using
+//! customizable modules and generic functions"); [`OperatorKind`] ships
+//! the built-ins used by the examples and the disaster-recovery
+//! pipeline, including a rule stage that embeds the IF-THEN engine.
+
+use super::tuple::Tuple;
+use crate::error::Result;
+use crate::rules::engine::{RuleEngine, RuleOutcome};
+
+/// A processing unit: consumes one tuple, emits zero or more.
+pub trait Operator: Send {
+    /// Operator name (topology display, metrics).
+    fn name(&self) -> &str;
+    /// Process one tuple.
+    fn process(&mut self, tuple: Tuple) -> Result<Vec<Tuple>>;
+    /// Flush at end-of-stream (windows emit partial aggregates).
+    fn finish(&mut self) -> Result<Vec<Tuple>> {
+        Ok(Vec::new())
+    }
+}
+
+/// Built-in operators.
+pub enum OperatorKind {
+    /// Transform each tuple.
+    Map { name: String, f: Box<dyn FnMut(Tuple) -> Tuple + Send> },
+    /// Keep tuples satisfying a predicate.
+    Filter { name: String, f: Box<dyn FnMut(&Tuple) -> bool + Send> },
+    /// Tumbling count-window aggregate over a field: emits one tuple per
+    /// window with MEAN/MIN/MAX/COUNT fields.
+    WindowAggregate { name: String, field: String, window: usize, buf: Vec<f64> },
+    /// Evaluate the rule engine per tuple; fired consequences are
+    /// recorded as the `RULE_FIRED` field (1.0) plus the tuple passes
+    /// through — the coordinator interprets the outcome.
+    RuleStage { name: String, engine: RuleEngine, fired: Vec<(u64, String)> },
+}
+
+impl Operator for OperatorKind {
+    fn name(&self) -> &str {
+        match self {
+            OperatorKind::Map { name, .. }
+            | OperatorKind::Filter { name, .. }
+            | OperatorKind::WindowAggregate { name, .. }
+            | OperatorKind::RuleStage { name, .. } => name,
+        }
+    }
+
+    fn process(&mut self, tuple: Tuple) -> Result<Vec<Tuple>> {
+        match self {
+            OperatorKind::Map { f, .. } => Ok(vec![f(tuple)]),
+            OperatorKind::Filter { f, .. } => {
+                if f(&tuple) {
+                    Ok(vec![tuple])
+                } else {
+                    Ok(Vec::new())
+                }
+            }
+            OperatorKind::WindowAggregate { field, window, buf, .. } => {
+                if let Some(v) = tuple.get(field) {
+                    buf.push(v);
+                }
+                if buf.len() >= *window {
+                    let out = aggregate(std::mem::take(buf), tuple.seq);
+                    Ok(vec![out])
+                } else {
+                    Ok(Vec::new())
+                }
+            }
+            OperatorKind::RuleStage { engine, fired, .. } => {
+                let mut t = tuple;
+                match engine.evaluate(&t.eval_context()) {
+                    RuleOutcome::Fired { rule, .. } => {
+                        t.set("RULE_FIRED", 1.0);
+                        fired.push((t.seq, rule));
+                    }
+                    RuleOutcome::NoMatch => {
+                        t.set("RULE_FIRED", 0.0);
+                    }
+                }
+                Ok(vec![t])
+            }
+        }
+    }
+
+    fn finish(&mut self) -> Result<Vec<Tuple>> {
+        match self {
+            OperatorKind::WindowAggregate { buf, .. } if !buf.is_empty() => {
+                Ok(vec![aggregate(std::mem::take(buf), u64::MAX)])
+            }
+            _ => Ok(Vec::new()),
+        }
+    }
+}
+
+fn aggregate(values: Vec<f64>, seq: u64) -> Tuple {
+    let count = values.len() as f64;
+    let sum: f64 = values.iter().sum();
+    let min = values.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    Tuple::new(seq, Vec::new())
+        .with("COUNT", count)
+        .with("MEAN", sum / count.max(1.0))
+        .with("MIN", min)
+        .with("MAX", max)
+}
+
+impl OperatorKind {
+    /// Map constructor.
+    pub fn map(name: &str, f: impl FnMut(Tuple) -> Tuple + Send + 'static) -> Self {
+        OperatorKind::Map { name: name.to_string(), f: Box::new(f) }
+    }
+
+    /// Filter constructor.
+    pub fn filter(name: &str, f: impl FnMut(&Tuple) -> bool + Send + 'static) -> Self {
+        OperatorKind::Filter { name: name.to_string(), f: Box::new(f) }
+    }
+
+    /// Window-aggregate constructor.
+    pub fn window(name: &str, field: &str, window: usize) -> Self {
+        OperatorKind::WindowAggregate {
+            name: name.to_string(),
+            field: field.to_string(),
+            window: window.max(1),
+            buf: Vec::new(),
+        }
+    }
+
+    /// Rule-stage constructor.
+    pub fn rules(name: &str, engine: RuleEngine) -> Self {
+        OperatorKind::RuleStage { name: name.to_string(), engine, fired: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::engine::{Consequence, Rule};
+
+    #[test]
+    fn map_transforms() {
+        let mut op = OperatorKind::map("double", |mut t| {
+            let v = t.get("X").unwrap_or(0.0);
+            t.set("X", v * 2.0);
+            t
+        });
+        let out = op.process(Tuple::new(0, vec![]).with("X", 21.0)).unwrap();
+        assert_eq!(out[0].get("X"), Some(42.0));
+        assert_eq!(op.name(), "double");
+    }
+
+    #[test]
+    fn filter_drops() {
+        let mut op = OperatorKind::filter("big", |t| t.get("SIZE").unwrap_or(0.0) > 10.0);
+        assert!(op.process(Tuple::new(0, vec![0u8; 5])).unwrap().is_empty());
+        assert_eq!(op.process(Tuple::new(1, vec![0u8; 50])).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn window_aggregates_and_flushes() {
+        let mut op = OperatorKind::window("w", "V", 3);
+        assert!(op.process(Tuple::new(0, vec![]).with("V", 1.0)).unwrap().is_empty());
+        assert!(op.process(Tuple::new(1, vec![]).with("V", 2.0)).unwrap().is_empty());
+        let out = op.process(Tuple::new(2, vec![]).with("V", 6.0)).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("COUNT"), Some(3.0));
+        assert_eq!(out[0].get("MEAN"), Some(3.0));
+        assert_eq!(out[0].get("MIN"), Some(1.0));
+        assert_eq!(out[0].get("MAX"), Some(6.0));
+        // Partial window flushes on finish.
+        op.process(Tuple::new(3, vec![]).with("V", 9.0)).unwrap();
+        let flushed = op.finish().unwrap();
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].get("COUNT"), Some(1.0));
+    }
+
+    #[test]
+    fn rule_stage_marks_fired() {
+        let mut engine = RuleEngine::new();
+        engine.add(
+            Rule::builder()
+                .with_name("hot")
+                .with_condition("IF(RESULT >= 10)")
+                .unwrap()
+                .with_consequence(Consequence::ForwardToCore)
+                .build()
+                .unwrap(),
+        );
+        let mut op = OperatorKind::rules("decide", engine);
+        let hot = op.process(Tuple::new(0, vec![]).with("RESULT", 12.0)).unwrap();
+        assert_eq!(hot[0].get("RULE_FIRED"), Some(1.0));
+        let cold = op.process(Tuple::new(1, vec![]).with("RESULT", 2.0)).unwrap();
+        assert_eq!(cold[0].get("RULE_FIRED"), Some(0.0));
+        if let OperatorKind::RuleStage { fired, .. } = &op {
+            assert_eq!(fired.len(), 1);
+            assert_eq!(fired[0], (0, "hot".to_string()));
+        }
+    }
+}

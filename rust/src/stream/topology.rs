@@ -1,0 +1,85 @@
+//! Topology descriptions (paper §IV-D: function profiles carry a
+//! serialized topology; `start_function` deploys it on demand).
+//!
+//! A topology is a named linear chain of operator stage descriptors —
+//! the form the paper's listings use (`"preprocess->detect->store"`).
+//! Stage names resolve to operator factories registered with the
+//! [`super::deploy::TopologyManager`].
+
+use crate::error::{Error, Result};
+
+/// A parsed topology: ordered stage names.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    pub name: String,
+    pub stages: Vec<String>,
+}
+
+impl Topology {
+    /// Parse a `"a->b->c"` chain.
+    pub fn parse(name: &str, spec: &str) -> Result<Topology> {
+        let stages: Vec<String> = spec
+            .split("->")
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect();
+        if stages.is_empty() {
+            return Err(Error::Stream(format!("empty topology spec `{spec}`")));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &stages {
+            if !seen.insert(s.clone()) {
+                return Err(Error::Stream(format!("duplicate stage `{s}` in `{spec}`")));
+            }
+        }
+        Ok(Topology { name: name.to_string(), stages })
+    }
+
+    /// Serialize back to the `"a->b->c"` form (stored in profiles).
+    pub fn render(&self) -> String {
+        self.stages.join("->")
+    }
+
+    /// Number of stages.
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_chain() {
+        let t = Topology::parse("pp", "preprocess -> detect -> store").unwrap();
+        assert_eq!(t.stages, vec!["preprocess", "detect", "store"]);
+        assert_eq!(t.render(), "preprocess->detect->store");
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn parse_single_stage() {
+        let t = Topology::parse("one", "only").unwrap();
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn rejects_empty_and_duplicates() {
+        assert!(Topology::parse("x", "").is_err());
+        assert!(Topology::parse("x", "->").is_err());
+        assert!(Topology::parse("x", "a->b->a").is_err());
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let t = Topology::parse("rt", "a->b->c").unwrap();
+        let t2 = Topology::parse("rt", &t.render()).unwrap();
+        assert_eq!(t, t2);
+    }
+}

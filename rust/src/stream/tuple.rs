@@ -1,0 +1,80 @@
+//! Data tuples: a byte payload plus named numeric fields that operators
+//! append and the rule engine reads (paper: rules are "constantly
+//! evaluated for every data element").
+
+use crate::rules::ast::EvalContext;
+use std::collections::BTreeMap;
+
+/// A stream tuple.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Tuple {
+    /// Raw payload (e.g. a LiDAR image tile).
+    pub payload: Vec<u8>,
+    /// Named numeric fields (e.g. RESULT, SCORE, SIZE).
+    pub fields: BTreeMap<String, f64>,
+    /// Monotonic sequence number assigned by the source.
+    pub seq: u64,
+}
+
+impl Tuple {
+    /// New tuple from payload bytes; SIZE field is set automatically.
+    pub fn new(seq: u64, payload: Vec<u8>) -> Self {
+        let mut fields = BTreeMap::new();
+        fields.insert("SIZE".to_string(), payload.len() as f64);
+        Tuple { payload, fields, seq }
+    }
+
+    /// Set a named field (uppercased).
+    pub fn set(&mut self, name: &str, value: f64) -> &mut Self {
+        self.fields.insert(name.to_ascii_uppercase(), value);
+        self
+    }
+
+    /// Builder-style field set.
+    pub fn with(mut self, name: &str, value: f64) -> Self {
+        self.set(name, value);
+        self
+    }
+
+    /// Get a named field.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.fields.get(&name.to_ascii_uppercase()).copied()
+    }
+
+    /// Evaluation context for the rule engine.
+    pub fn eval_context(&self) -> EvalContext {
+        let mut ctx = EvalContext::new();
+        for (k, v) in &self.fields {
+            ctx.set(k, *v);
+        }
+        ctx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::ast::CondExpr;
+
+    #[test]
+    fn size_field_automatic() {
+        let t = Tuple::new(0, vec![0u8; 128]);
+        assert_eq!(t.get("size"), Some(128.0));
+        assert_eq!(t.seq, 0);
+    }
+
+    #[test]
+    fn fields_case_insensitive() {
+        let t = Tuple::new(0, vec![]).with("Result", 12.0);
+        assert_eq!(t.get("RESULT"), Some(12.0));
+        assert_eq!(t.get("result"), Some(12.0));
+        assert_eq!(t.get("missing"), None);
+    }
+
+    #[test]
+    fn eval_context_feeds_rules() {
+        let t = Tuple::new(0, vec![0u8; 64]).with("RESULT", 15.0);
+        let cond = CondExpr::parse("IF(RESULT >= 10 && SIZE < 100)").unwrap();
+        assert!(cond.is_satisfied(&t.eval_context()).unwrap());
+    }
+}

@@ -1,0 +1,90 @@
+//! Mini property-based testing framework (no `proptest` offline).
+//!
+//! Provides [`Gen`]-style value generators over the crate PRNG, a
+//! [`forall`] runner with bounded shrinking for failures, and common
+//! generators (ints, vecs, strings, keyword profiles). Used by unit tests
+//! across coordinator modules and by `rust/tests/properties.rs`.
+
+pub mod prop;
+
+pub use prop::{forall, forall_seeded, Gen};
+
+use crate::util::prng::Prng;
+
+/// Generator for uniform `u64` in `[lo, hi]` (full range supported).
+pub fn u64_in(lo: u64, hi: u64) -> impl Fn(&mut Prng) -> u64 {
+    move |rng| {
+        debug_assert!(lo <= hi);
+        match hi.checked_sub(lo).and_then(|span| span.checked_add(1)) {
+            Some(bound) => lo + rng.gen_range_u64(bound),
+            None => rng.next_u64(), // whole u64 range
+        }
+    }
+}
+
+/// Generator for uniform `usize` in `[lo, hi)`.
+pub fn usize_in(lo: usize, hi: usize) -> impl Fn(&mut Prng) -> usize {
+    move |rng| rng.gen_range(lo, hi)
+}
+
+/// Generator for f64 in `[lo, hi)`.
+pub fn f64_in(lo: f64, hi: f64) -> impl Fn(&mut Prng) -> f64 {
+    move |rng| lo + rng.gen_f64() * (hi - lo)
+}
+
+/// Generator for a vec whose length is in `[0, max_len)` and whose items
+/// come from `item`.
+pub fn vec_of<T>(
+    item: impl Fn(&mut Prng) -> T,
+    max_len: usize,
+) -> impl Fn(&mut Prng) -> Vec<T> {
+    move |rng| {
+        let len = rng.gen_range(0, max_len.max(1));
+        (0..len).map(|_| item(rng)).collect()
+    }
+}
+
+/// Generator for lowercase ASCII strings of length `[1, max_len]`.
+pub fn keyword(max_len: usize) -> impl Fn(&mut Prng) -> String {
+    move |rng| {
+        let len = rng.gen_range(1, max_len.max(2));
+        rng.ascii_lower(len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Prng::seeded(1);
+        let g = u64_in(5, 10);
+        for _ in 0..1000 {
+            let v = g(&mut rng);
+            assert!((5..=10).contains(&v));
+        }
+        let g = f64_in(-1.0, 1.0);
+        for _ in 0..1000 {
+            let v = g(&mut rng);
+            assert!((-1.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn vec_and_keyword_generators() {
+        let mut rng = Prng::seeded(2);
+        let g = vec_of(u64_in(0, 9), 8);
+        for _ in 0..100 {
+            let v = g(&mut rng);
+            assert!(v.len() < 8);
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+        let k = keyword(6);
+        for _ in 0..100 {
+            let s = k(&mut rng);
+            assert!(!s.is_empty() && s.len() <= 6);
+            assert!(s.bytes().all(|b| b.is_ascii_lowercase()));
+        }
+    }
+}

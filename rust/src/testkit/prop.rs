@@ -1,0 +1,257 @@
+//! Property runner with bounded shrinking.
+
+use crate::util::prng::Prng;
+
+/// A value generator: a function from PRNG to value. Implemented for all
+/// `Fn(&mut Prng) -> T`, so closures compose naturally.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Prng) -> T;
+}
+
+impl<T, F: Fn(&mut Prng) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Prng) -> T {
+        self(rng)
+    }
+}
+
+/// How shrink candidates for a failing input are produced.
+pub trait Shrink: Sized {
+    /// Candidate "smaller" values, in decreasing preference order.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let v = *self;
+        if v == 0 {
+            return vec![];
+        }
+        // Geometric approach toward zero, then -1: lets the runner bisect
+        // to a boundary counterexample in O(log v) rounds.
+        let mut out = vec![0u64];
+        let mut delta = v / 2;
+        while delta > 0 {
+            out.push(v - delta);
+            delta /= 2;
+        }
+        out.dedup();
+        out.retain(|&c| c != v);
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|v| v as usize).collect()
+    }
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            return vec![];
+        }
+        vec![0, self / 2, self - self.signum()]
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            return vec![];
+        }
+        vec![0.0, self / 2.0]
+    }
+}
+
+impl Shrink for String {
+    fn shrink(&self) -> Vec<Self> {
+        if self.is_empty() {
+            return vec![];
+        }
+        let half: String = self.chars().take(self.chars().count() / 2).collect();
+        let minus_one: String = self.chars().take(self.chars().count() - 1).collect();
+        vec![String::new(), half, minus_one]
+    }
+}
+
+impl<T: Clone + Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(Vec::new());
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        // remove each single element (bounded)
+        for i in 0..self.len().min(16) {
+            let mut v = self.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        // shrink each element in place once (bounded)
+        for i in 0..self.len().min(16) {
+            if let Some(shrunk) = self[i].shrink().into_iter().next() {
+                let mut v = self.clone();
+                v[i] = shrunk;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Clone + Shrink, B: Clone + Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1.clone()));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Wrapper for generated values that are not worth shrinking (composite
+/// fixtures, geometry objects). `forall` accepts it wherever a `Shrink`
+/// bound is required; counterexamples are reported unshrunk.
+#[derive(Clone, Debug)]
+pub struct NoShrink<T>(pub T);
+
+impl<T: Clone> Shrink for NoShrink<T> {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+/// Outcome of a property run (useful when asserting on failure text).
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Ok,
+    Failed { input: T, cases_run: usize },
+}
+
+const DEFAULT_CASES: usize = 256;
+const MAX_SHRINK_STEPS: usize = 512;
+
+/// Run `prop` on `cases` generated inputs; on failure, shrink and panic
+/// with the minimal counterexample. Seed is fixed for reproducibility.
+pub fn forall<T, G, P>(gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug + Shrink,
+    G: Gen<T>,
+    P: Fn(&T) -> bool,
+{
+    forall_seeded(0xDEC0DE, DEFAULT_CASES, gen, prop)
+}
+
+/// [`forall`] with explicit seed and case count.
+pub fn forall_seeded<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug + Shrink,
+    G: Gen<T>,
+    P: Fn(&T) -> bool,
+{
+    if let PropResult::Failed { input, cases_run } = check(seed, cases, &gen, &prop) {
+        panic!(
+            "property failed after {cases_run} cases; minimal counterexample: {input:?} (seed={seed})"
+        );
+    }
+}
+
+/// Non-panicking property check; returns the shrunk counterexample.
+pub fn check<T, G, P>(seed: u64, cases: usize, gen: &G, prop: &P) -> PropResult<T>
+where
+    T: Clone + std::fmt::Debug + Shrink,
+    G: Gen<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Prng::seeded(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_to_minimal(input, prop);
+            return PropResult::Failed { input: minimal, cases_run: case + 1 };
+        }
+    }
+    PropResult::Ok
+}
+
+fn shrink_to_minimal<T, P>(mut failing: T, prop: &P) -> T
+where
+    T: Clone + Shrink,
+    P: Fn(&T) -> bool,
+{
+    let mut steps = 0;
+    'outer: while steps < MAX_SHRINK_STEPS {
+        for candidate in failing.shrink() {
+            steps += 1;
+            if !prop(&candidate) {
+                failing = candidate;
+                continue 'outer;
+            }
+            if steps >= MAX_SHRINK_STEPS {
+                break;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{u64_in, vec_of};
+
+    #[test]
+    fn passing_property_passes() {
+        forall(u64_in(0, 1000), |&v| v <= 1000);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        // Property "v < 500" fails for v >= 500; minimal counterexample
+        // reachable by our shrinker should be <= any originally found value.
+        let result = check(1, 512, &u64_in(0, 1000), &|&v: &u64| v < 500);
+        match result {
+            PropResult::Failed { input, .. } => {
+                assert!(input >= 500);
+                assert!(input <= 510, "shrinking should approach 500, got {input}");
+            }
+            PropResult::Ok => panic!("property should have failed"),
+        }
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        // "no vec contains a value > 90" — minimal failing vec should be short.
+        let result = check(2, 512, &vec_of(u64_in(0, 100), 20), &|v: &Vec<u64>| {
+            v.iter().all(|&x| x <= 90)
+        });
+        match result {
+            PropResult::Failed { input, .. } => {
+                assert!(input.iter().any(|&x| x > 90));
+                assert!(input.len() <= 4, "expected short counterexample, got {input:?}");
+            }
+            PropResult::Ok => panic!("property should have failed"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_panics_with_counterexample() {
+        forall(u64_in(0, 10), |&v| v < 10);
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t = (4u64, 6u64);
+        let shrunk = t.shrink();
+        assert!(shrunk.iter().any(|&(a, _)| a < 4));
+        assert!(shrunk.iter().any(|&(_, b)| b < 6));
+    }
+}

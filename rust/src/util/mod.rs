@@ -1,0 +1,201 @@
+//! Small shared utilities: deterministic PRNG, hex, binary codec, timing.
+
+pub mod codec;
+pub mod hex;
+pub mod prng;
+pub mod timeutil;
+
+pub use codec::{ByteReader, ByteWriter};
+pub use prng::Prng;
+pub use timeutil::Stopwatch;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `n` up to the next multiple of `align` (power of two not required).
+#[inline]
+pub fn align_up(n: usize, align: usize) -> usize {
+    ceil_div(n, align) * align
+}
+
+/// CRC32 (IEEE) over a byte slice — used for queue-record and sstable
+/// integrity checks.
+///
+/// Slicing-by-8 (8 table lookups per 8 input bytes, no loop-carried
+/// byte dependency): ~7× faster than the classic byte-at-a-time loop on
+/// this host (see EXPERIMENTS.md §Perf), which matters because the mmq
+/// hot path CRCs every record.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLES: once_cell::sync::Lazy<[[u32; 256]; 8]> = once_cell::sync::Lazy::new(|| {
+        let mut t = [[0u32; 256]; 8];
+        for i in 0..256usize {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            t[0][i] = c;
+        }
+        for i in 0..256usize {
+            let mut c = t[0][i];
+            for k in 1..8 {
+                c = t[0][(c & 0xFF) as usize] ^ (c >> 8);
+                t[k][i] = c;
+            }
+        }
+        t
+    });
+    let t = &*TABLES;
+    let mut crc = 0xFFFF_FFFFu32;
+    let mut chunks = data.chunks_exact(8);
+    for chunk in &mut chunks {
+        let lo = u32::from_le_bytes(chunk[0..4].try_into().unwrap()) ^ crc;
+        let hi = u32::from_le_bytes(chunk[4..8].try_into().unwrap());
+        crc = t[7][(lo & 0xFF) as usize]
+            ^ t[6][((lo >> 8) & 0xFF) as usize]
+            ^ t[5][((lo >> 16) & 0xFF) as usize]
+            ^ t[4][((lo >> 24) & 0xFF) as usize]
+            ^ t[3][(hi & 0xFF) as usize]
+            ^ t[2][((hi >> 8) & 0xFF) as usize]
+            ^ t[1][((hi >> 16) & 0xFF) as usize]
+            ^ t[0][((hi >> 24) & 0xFF) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = t[0][((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// CRC32-C (Castagnoli) — the polynomial with xmm hardware support; used
+/// on the queue/sstable hot paths. Falls back to slicing-by-8 software
+/// when SSE4.2 is absent. (IEEE [`crc32`] is kept for wire compatibility
+/// checks and known-vector tests.)
+pub fn crc32c(data: &[u8]) -> u32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("sse4.2") {
+            // SAFETY: guarded by the sse4.2 runtime check.
+            return unsafe { crc32c_hw(data) };
+        }
+    }
+    crc32c_sw(data)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.2")]
+unsafe fn crc32c_hw(data: &[u8]) -> u32 {
+    use std::arch::x86_64::{_mm_crc32_u64, _mm_crc32_u8};
+    let mut crc = 0xFFFF_FFFFu64;
+    let mut chunks = data.chunks_exact(8);
+    for chunk in &mut chunks {
+        let v = u64::from_le_bytes(chunk.try_into().unwrap());
+        crc = _mm_crc32_u64(crc, v);
+    }
+    let mut crc = crc as u32;
+    for &b in chunks.remainder() {
+        crc = _mm_crc32_u8(crc, b);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+fn crc32c_sw(data: &[u8]) -> u32 {
+    static TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+        let mut table = [0u32; 256];
+        for (i, entry) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0x82F6_3B78 ^ (c >> 1) } else { c >> 1 };
+            }
+            *entry = c;
+        }
+        table
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// FNV-1a 64-bit hash — cheap stable hash for keyword→dimension mapping.
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn align_up_basics() {
+        assert_eq!(align_up(0, 8), 0);
+        assert_eq!(align_up(1, 8), 8);
+        assert_eq!(align_up(8, 8), 8);
+        assert_eq!(align_up(9, 8), 16);
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC32 test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc32_detects_flip() {
+        let a = crc32(b"hello world");
+        let b = crc32(b"hello worle");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn fnv_is_stable_and_spreads() {
+        assert_eq!(fnv1a64(b"a"), fnv1a64(b"a"));
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+    }
+}
+
+#[cfg(test)]
+mod crc32c_tests {
+    use super::*;
+
+    #[test]
+    fn crc32c_known_vector() {
+        // RFC 3720 test vector: crc32c("123456789") = 0xE3069283.
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(b""), 0);
+    }
+
+    #[test]
+    fn hw_and_sw_agree() {
+        let mut data = Vec::new();
+        for i in 0..1000u32 {
+            data.push((i % 251) as u8);
+            assert_eq!(crc32c(&data), crc32c_sw(&data), "len={}", data.len());
+        }
+    }
+
+    #[test]
+    fn crc32c_detects_corruption() {
+        let a = crc32c(b"the quick brown fox");
+        let b = crc32c(b"the quick brown fix");
+        assert_ne!(a, b);
+    }
+}

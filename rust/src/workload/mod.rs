@@ -1,0 +1,135 @@
+//! Workload generators for the paper's experiments (§V).
+//!
+//! - [`message_sizes`]: the four message sizes of Figs. 4/8.
+//! - [`StoreWorkload`]: W1–W4 of Figs. 11–12 (1/10/50/100 elements).
+//! - [`profiles_of_complexity`]: 1–6-property profiles for Figs. 9–10.
+//! - [`random_records`]: keyword-profile records for Figs. 5–7.
+
+use crate::ar::profile::Profile;
+use crate::util::prng::Prng;
+
+/// The message sizes the paper sweeps in Figs. 4 and 8.
+pub fn message_sizes() -> Vec<usize> {
+    vec![64, 1024, 16 * 1024, 64 * 1024]
+}
+
+/// W1–W4 (paper §V-A5): number of elements stored/queried per operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreWorkload {
+    W1,
+    W2,
+    W3,
+    W4,
+}
+
+impl StoreWorkload {
+    pub fn all() -> [StoreWorkload; 4] {
+        [StoreWorkload::W1, StoreWorkload::W2, StoreWorkload::W3, StoreWorkload::W4]
+    }
+
+    /// Elements per operation.
+    pub fn elements(&self) -> usize {
+        match self {
+            StoreWorkload::W1 => 1,
+            StoreWorkload::W2 => 10,
+            StoreWorkload::W3 => 50,
+            StoreWorkload::W4 => 100,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreWorkload::W1 => "W1",
+            StoreWorkload::W2 => "W2",
+            StoreWorkload::W3 => "W3",
+            StoreWorkload::W4 => "W4",
+        }
+    }
+}
+
+/// A profile with `dims` properties (paper: "a 2D profile is composed of
+/// two properties such as type and location"). Deterministic per seed.
+pub fn profile_of_complexity(rng: &mut Prng, dims: usize) -> Profile {
+    let attrs = ["type", "loc", "owner", "unit", "zone", "band", "mode", "rate"];
+    let mut b = Profile::builder();
+    for (d, attr) in attrs.iter().enumerate().take(dims.clamp(1, 8)) {
+        let word = rng.ascii_lower(6);
+        if d == 0 {
+            b = b.add_single(&word);
+        } else {
+            b = b.add_pair(attr, &word);
+        }
+    }
+    b.build()
+}
+
+/// A batch of simple record profiles + payloads for store/query sweeps.
+pub fn random_records(rng: &mut Prng, n: usize, value_bytes: usize) -> Vec<(Profile, Vec<u8>)> {
+    (0..n)
+        .map(|_| {
+            let sensor = format!("{}{}", rng.ascii_lower(5), rng.gen_range(0, 1000));
+            let kind = *rng.choose(&["lidar", "thermal", "gps", "imu", "radar"]);
+            let profile = Profile::builder()
+                .add_single(&sensor)
+                .add_single(kind)
+                .build();
+            let mut payload = vec![0u8; value_bytes];
+            rng.fill_bytes(&mut payload);
+            (profile, payload)
+        })
+        .collect()
+}
+
+/// Deterministic payload of a given size (message benches).
+pub fn payload(rng: &mut Prng, bytes: usize) -> Vec<u8> {
+    let mut p = vec![0u8; bytes];
+    rng.fill_bytes(&mut p);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_sizes_match_paper() {
+        assert_eq!(message_sizes(), vec![64, 1024, 16384, 65536]);
+    }
+
+    #[test]
+    fn workloads_match_paper() {
+        let counts: Vec<usize> = StoreWorkload::all().iter().map(|w| w.elements()).collect();
+        assert_eq!(counts, vec![1, 10, 50, 100]);
+    }
+
+    #[test]
+    fn profile_complexity_dims() {
+        let mut rng = Prng::seeded(1);
+        for dims in 1..=6 {
+            let p = profile_of_complexity(&mut rng, dims);
+            assert_eq!(p.dims(), dims);
+            assert!(p.is_simple());
+        }
+        // Clamped outside range.
+        assert_eq!(profile_of_complexity(&mut rng, 0).dims(), 1);
+        assert_eq!(profile_of_complexity(&mut rng, 99).dims(), 8);
+    }
+
+    #[test]
+    fn random_records_are_simple_and_sized() {
+        let mut rng = Prng::seeded(2);
+        let records = random_records(&mut rng, 20, 256);
+        assert_eq!(records.len(), 20);
+        for (p, v) in &records {
+            assert!(p.is_simple());
+            assert_eq!(v.len(), 256);
+        }
+    }
+
+    #[test]
+    fn generators_deterministic_per_seed() {
+        let a = random_records(&mut Prng::seeded(3), 5, 16);
+        let b = random_records(&mut Prng::seeded(3), 5, 16);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,130 @@
+//! Multi-node cluster behaviour: scalability invariants (Figs. 11–12
+//! machinery), quadtree growth, routing determinism across cluster
+//! sizes, and workload coverage.
+
+use rpulsar::ar::message::{Action, ArMessage};
+use rpulsar::ar::profile::Profile;
+use rpulsar::config::DeviceKind;
+use rpulsar::coordinator::Cluster;
+use rpulsar::util::prng::Prng;
+use rpulsar::workload::{random_records, StoreWorkload};
+
+fn store_msg(profile: &Profile, data: &[u8]) -> ArMessage {
+    ArMessage::builder()
+        .set_header(profile.clone())
+        .set_sender("ctest")
+        .set_action(Action::Store)
+        .set_data(data.to_vec())
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn all_cluster_sizes_store_and_query() {
+    for n in [4usize, 8, 16, 32] {
+        let mut cluster = Cluster::new(&format!("cs-{n}"), n, DeviceKind::Native).unwrap();
+        let origin = cluster.ids()[0];
+        let mut rng = Prng::seeded(n as u64);
+        let records = random_records(&mut rng, 20, 64);
+        for (p, v) in &records {
+            cluster.store_replicated(origin, &store_msg(p, v), 2).unwrap();
+        }
+        for (p, v) in &records {
+            let got = cluster.query_exact(origin, p).unwrap();
+            assert_eq!(got.as_deref(), Some(v.as_slice()), "n={n}, key={}", p.render());
+        }
+        cluster.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn larger_clusters_cost_more_network_but_sublinearly() {
+    // The Figs. 11–12 shape: simulated per-op time grows slower than
+    // cluster size.
+    let mut times = Vec::new();
+    for n in [4usize, 16, 64] {
+        let mut cluster = Cluster::new(&format!("grow-{n}"), n, DeviceKind::CloudSmall).unwrap();
+        let origin = cluster.ids()[0];
+        let mut rng = Prng::seeded(1);
+        let records = random_records(&mut rng, 30, 64);
+        cluster.network().reset();
+        for (p, v) in &records {
+            cluster.store_replicated(origin, &store_msg(p, v), 2).unwrap();
+        }
+        times.push(cluster.network().virtual_elapsed());
+        cluster.shutdown().unwrap();
+    }
+    let growth = times[2].as_secs_f64() / times[0].as_secs_f64().max(1e-12);
+    assert!(
+        growth < 16.0,
+        "16× more nodes must cost < 16× ({growth:.1}× measured: {times:?})"
+    );
+}
+
+#[test]
+fn quadtree_splits_with_enough_spread_nodes() {
+    // 64 nodes spread over the grid must split the world at least once.
+    let cluster = Cluster::new("split", 64, DeviceKind::Native).unwrap();
+    assert!(cluster.quadtree().regions().count() >= 1);
+    cluster.quadtree().check_invariants().unwrap();
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn workload_sizes_scale_costs_linearly_in_elements() {
+    let mut cluster = Cluster::new("wl", 8, DeviceKind::CloudSmall).unwrap();
+    let origin = cluster.ids()[0];
+    let mut per_element: Vec<f64> = Vec::new();
+    for w in StoreWorkload::all() {
+        let mut rng = Prng::seeded(w.elements() as u64);
+        let records = random_records(&mut rng, w.elements(), 64);
+        cluster.network().reset();
+        for (p, v) in &records {
+            cluster.store_replicated(origin, &store_msg(p, v), 2).unwrap();
+        }
+        per_element
+            .push(cluster.network().virtual_elapsed().as_secs_f64() / w.elements() as f64);
+    }
+    // Per-element cost roughly constant across W1–W4 (within 3×).
+    let max = per_element.iter().cloned().fold(0.0, f64::max);
+    let min = per_element.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(max / min < 3.0, "per-element cost should be stable: {per_element:?}");
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn routing_deterministic_across_runs() {
+    let mut owners = Vec::new();
+    for _ in 0..2 {
+        let mut cluster = Cluster::new("det", 16, DeviceKind::Native).unwrap();
+        let origin = cluster.ids()[0];
+        let results = cluster
+            .post_from(origin, &store_msg(&Profile::parse("drone,lidar").unwrap(), b"v"))
+            .unwrap();
+        owners.push(results[0].0);
+        cluster.shutdown().unwrap();
+    }
+    assert_eq!(owners[0], owners[1], "same membership must give same owner");
+}
+
+#[test]
+fn pattern_profiles_fan_out_to_more_targets() {
+    let mut cluster = Cluster::new("fanout", 32, DeviceKind::Native).unwrap();
+    let origin = cluster.ids()[0];
+    let exact = cluster
+        .post_from(origin, &store_msg(&Profile::parse("abc,def").unwrap(), b"v"))
+        .unwrap();
+    let pattern = cluster
+        .post_from(
+            origin,
+            &ArMessage::builder()
+                .set_header(Profile::parse("a*,def").unwrap())
+                .set_sender("ctest")
+                .set_action(Action::NotifyData)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+    assert!(pattern.len() >= exact.len());
+    cluster.shutdown().unwrap();
+}

@@ -1,0 +1,174 @@
+//! Failure injection: RP crashes, master failover, queue crash
+//! recovery, partition behaviour — the paper's fault-tolerance claims
+//! (§IV-A replication invariant, §IV-C3 DHT durability).
+
+use rpulsar::ar::message::{Action, ArMessage};
+use rpulsar::ar::profile::Profile;
+use rpulsar::config::DeviceKind;
+use rpulsar::coordinator::Cluster;
+use rpulsar::mmq::queue::{MemoryMappedQueue, QueueOptions};
+use rpulsar::overlay::election::hirschberg_sinclair;
+use rpulsar::overlay::membership::{FailureDetector, MembershipEvent};
+use rpulsar::overlay::node_id::NodeId;
+use std::time::{Duration, Instant};
+
+fn store_msg(profile: &str, data: &[u8]) -> ArMessage {
+    ArMessage::builder()
+        .set_header(Profile::parse(profile).unwrap())
+        .set_sender("ftest")
+        .set_action(Action::Store)
+        .set_data(data.to_vec())
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn data_survives_multiple_crashes() {
+    let mut cluster = Cluster::new("f-crash", 10, DeviceKind::Native).unwrap();
+    let origin = cluster.ids()[0];
+    let targets = cluster
+        .store_replicated(origin, &store_msg("survive,me", b"gold"), 3)
+        .unwrap();
+    // Crash two of the three replicas.
+    cluster.crash(&targets[0]).unwrap();
+    let origin = cluster.ids()[0]; // origin may have been the crashed node
+    cluster.crash(&targets[1]).unwrap();
+    let origin = if cluster.node(&origin).is_some() { origin } else { cluster.ids()[0] };
+    let got = cluster.query_exact(origin, &Profile::parse("survive,me").unwrap()).unwrap();
+    assert_eq!(got, Some(b"gold".to_vec()));
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn writes_continue_after_crash() {
+    let mut cluster = Cluster::new("f-write", 8, DeviceKind::Native).unwrap();
+    let victim = cluster.ids()[3];
+    cluster.crash(&victim).unwrap();
+    let origin = cluster.ids()[0];
+    // New writes route around the dead node.
+    for i in 0..10 {
+        cluster
+            .store_replicated(origin, &store_msg(&format!("after{i},crash"), b"ok"), 2)
+            .unwrap();
+    }
+    let got = cluster.query_exact(origin, &Profile::parse("after5,crash").unwrap()).unwrap();
+    assert_eq!(got, Some(b"ok".to_vec()));
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn master_failover_elects_new_leader() {
+    let mut cluster = Cluster::new("f-master", 9, DeviceKind::Native).unwrap();
+    let region = cluster.quadtree().regions().next().unwrap();
+    let old_master = cluster.quadtree().master_of(region).unwrap();
+    cluster.crash(&old_master).unwrap();
+    let region = cluster
+        .quadtree()
+        .regions()
+        .find(|r| cluster.quadtree().members_of(*r).map(|m| !m.is_empty()).unwrap_or(false))
+        .unwrap();
+    let new_master = cluster.elect_master(region).unwrap();
+    assert_ne!(new_master, old_master);
+    assert_eq!(cluster.quadtree().master_of(region), Some(new_master));
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn election_agrees_from_any_ring_rotation() {
+    // Whoever initiates, Hirschberg–Sinclair elects the same leader.
+    let ids: Vec<NodeId> = (0..12).map(|i| NodeId::from_name(&format!("e{i}"))).collect();
+    let expected = hirschberg_sinclair(&ids).leader;
+    for rot in 1..ids.len() {
+        let mut rotated = ids.clone();
+        rotated.rotate_left(rot);
+        assert_eq!(hirschberg_sinclair(&rotated).leader, expected);
+    }
+}
+
+#[test]
+fn failure_detector_drives_election_flow() {
+    // Keep-alive misses → PeerFailed → election among the survivors.
+    let ids: Vec<NodeId> = (0..5).map(|i| NodeId::from_name(&format!("fd{i}"))).collect();
+    let master = ids[0];
+    let mut fd = FailureDetector::new(Duration::from_millis(50), 3);
+    let t0 = Instant::now();
+    for &id in &ids {
+        fd.track(id, t0);
+    }
+    // Everyone but the master keeps answering.
+    for step in 1..=4u64 {
+        let now = t0 + Duration::from_millis(50 * step);
+        for &id in &ids[1..] {
+            fd.heard_from(&id, now);
+        }
+        let events = fd.tick(now);
+        if events.contains(&MembershipEvent::PeerFailed(master)) {
+            let survivors: Vec<NodeId> = fd.alive_peers();
+            assert!(!survivors.contains(&master));
+            let result = hirschberg_sinclair(&survivors);
+            assert_ne!(result.leader, master);
+            return;
+        }
+    }
+    panic!("master failure was never detected");
+}
+
+#[test]
+fn queue_recovers_after_simulated_crash() {
+    // "Crash" = drop the queue without flushing; reopen must recover all
+    // records committed to the mmap (the OS persists dirty pages).
+    let dir = std::env::temp_dir()
+        .join("rpulsar-failure-tests")
+        .join(format!("crash-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = QueueOptions { dir: dir.clone(), segment_bytes: 1 << 16, max_segments: 4, sync_every: 0 };
+    {
+        let mut q = MemoryMappedQueue::open(opts.clone()).unwrap();
+        for i in 0..100u32 {
+            q.append(format!("m{i}").as_bytes()).unwrap();
+        }
+        // No flush, no graceful shutdown: simulate SIGKILL.
+        std::mem::forget(q);
+    }
+    let q = MemoryMappedQueue::open(opts).unwrap();
+    assert_eq!(q.head_seq(), 100, "all committed records must be recovered");
+    let (_, msgs) = q.poll(0, 1000);
+    assert_eq!(msgs.len(), 100);
+    assert_eq!(msgs[99], b"m99");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn partitioned_node_is_unreachable_then_heals() {
+    let cluster = Cluster::new("f-part", 4, DeviceKind::RaspberryPi).unwrap();
+    let ids = cluster.ids();
+    cluster.network().take_down(ids[1]);
+    assert!(cluster.network().charge_hop(&ids[0], &ids[1], 64).is_none());
+    cluster.network().bring_up(&ids[1]);
+    assert!(cluster.network().charge_hop(&ids[0], &ids[1], 64).is_some());
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn crash_of_every_replica_loses_only_that_data() {
+    let mut cluster = Cluster::new("f-total", 8, DeviceKind::Native).unwrap();
+    let origin = cluster.ids()[0];
+    let targets = cluster
+        .store_replicated(origin, &store_msg("doomed,key", b"x"), 2)
+        .unwrap();
+    let other = cluster
+        .store_replicated(origin, &store_msg("safe,key", b"y"), 2)
+        .unwrap();
+    for t in &targets {
+        if cluster.node(t).is_some() {
+            cluster.crash(t).unwrap();
+        }
+    }
+    let origin = cluster.ids()[0];
+    // Doomed data is gone only if its replicas were disjoint from safe's.
+    let safe = cluster.query_exact(origin, &Profile::parse("safe,key").unwrap()).unwrap();
+    if other.iter().all(|t| !targets.contains(t)) {
+        assert_eq!(safe, Some(b"y".to_vec()));
+    }
+    cluster.shutdown().unwrap();
+}

@@ -1,0 +1,248 @@
+//! Cross-module integration tests: the AR primitives over a real
+//! cluster, the producer/consumer handshake end-to-end, function
+//! store/trigger across routing, and the full disaster-recovery
+//! pipeline through the PJRT runtime (requires `make artifacts`).
+
+use rpulsar::ar::message::{Action, ArMessage};
+use rpulsar::ar::primitives::Client;
+use rpulsar::ar::profile::Profile;
+use rpulsar::ar::rendezvous::Reaction;
+use rpulsar::config::DeviceKind;
+use rpulsar::coordinator::Cluster;
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::pipeline::lidar::LidarTrace;
+use rpulsar::pipeline::workflow::{BaselineKind, DisasterRecoveryPipeline};
+use std::path::Path;
+
+fn msg(profile: &str, action: Action) -> ArMessage {
+    ArMessage::builder()
+        .set_header(Profile::parse(profile).unwrap())
+        .set_sender("itest")
+        .set_action(action)
+        .build()
+        .unwrap()
+}
+
+fn msg_data(profile: &str, action: Action, data: &[u8]) -> ArMessage {
+    ArMessage::builder()
+        .set_header(Profile::parse(profile).unwrap())
+        .set_sender("itest")
+        .set_action(action)
+        .set_data(data.to_vec())
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn post_primitive_over_cluster() {
+    let mut cluster = Cluster::new("it-post", 8, DeviceKind::Native).unwrap();
+    let client = Client::new("itest");
+    let results = client
+        .post(&mut cluster, &msg_data("drone,lidar", Action::Store, b"img-1"))
+        .unwrap();
+    assert!(!results.is_empty());
+    assert!(results
+        .iter()
+        .flat_map(|(_, rs)| rs)
+        .any(|r| matches!(r, Reaction::Stored { .. })));
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn producer_consumer_handshake_across_routing() {
+    // Listing 1 + 2 end-to-end: notify_interest then notify_data with a
+    // pattern profile must reach the same RP and wake the producer.
+    let mut cluster = Cluster::new("it-handshake", 12, DeviceKind::Native).unwrap();
+    let origin = cluster.ids()[0];
+    cluster.post_from(origin, &msg("drone,lidar", Action::NotifyInterest)).unwrap();
+    let results = cluster.post_from(origin, &msg("drone,li*", Action::NotifyData)).unwrap();
+    let woke_producer = results
+        .iter()
+        .flat_map(|(_, rs)| rs)
+        .any(|r| matches!(r, Reaction::ProducerNotified { producer, .. } if producer == "itest"));
+    assert!(woke_producer, "complex interest must reach the producer's RP: {results:?}");
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn store_then_notify_data_delivers_payload() {
+    let mut cluster = Cluster::new("it-deliver", 8, DeviceKind::Native).unwrap();
+    let origin = cluster.ids()[0];
+    cluster
+        .post_from(origin, &msg_data("drone,lidar", Action::Store, b"payload-42"))
+        .unwrap();
+    let results = cluster.post_from(origin, &msg("drone,li*", Action::NotifyData)).unwrap();
+    let delivered = results.iter().flat_map(|(_, rs)| rs).any(
+        |r| matches!(r, Reaction::ConsumerNotified { data, .. } if data == b"payload-42"),
+    );
+    assert!(delivered);
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn function_lifecycle_store_start_stop_delete() {
+    let mut cluster = Cluster::new("it-func", 6, DeviceKind::Native).unwrap();
+    let origin = cluster.ids()[0];
+    for id in cluster.ids() {
+        cluster.node_mut(&id).unwrap().topologies_mut().register_stage("id", || {
+            Box::new(rpulsar::stream::operator::OperatorKind::map("id", |t| t))
+        });
+    }
+    let store_fn = ArMessage::builder()
+        .set_header(Profile::parse("pp_func").unwrap())
+        .set_sender("itest")
+        .set_action(Action::StoreFunction)
+        .set_topology("id")
+        .build()
+        .unwrap();
+    let stored_at: Vec<_> = cluster
+        .post_from(origin, &store_fn)
+        .unwrap()
+        .into_iter()
+        .map(|(t, _)| t)
+        .collect();
+    assert!(!stored_at.is_empty());
+
+    let started = cluster.post_from(origin, &msg("pp_func", Action::StartFunction)).unwrap();
+    assert!(started
+        .iter()
+        .flat_map(|(_, rs)| rs)
+        .any(|r| matches!(r, Reaction::StartTopology { .. })));
+    // The topology is running on the target node.
+    let target = started[0].0;
+    assert!(cluster
+        .node_mut(&target)
+        .unwrap()
+        .topologies_mut()
+        .running()
+        .contains(&"pp_func".to_string()));
+
+    cluster.post_from(origin, &msg("pp_func", Action::StopFunction)).unwrap();
+    assert!(cluster.node_mut(&target).unwrap().topologies_mut().running().is_empty());
+
+    let deleted = cluster.post_from(origin, &msg("pp_func", Action::Delete)).unwrap();
+    assert!(deleted
+        .iter()
+        .flat_map(|(_, rs)| rs)
+        .any(|r| matches!(r, Reaction::Deleted { count } if *count > 0)));
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn statistics_action_reports() {
+    let mut cluster = Cluster::new("it-stats", 4, DeviceKind::Native).unwrap();
+    let origin = cluster.ids()[0];
+    cluster.post_from(origin, &msg_data("a,b", Action::Store, b"v")).unwrap();
+    let results = cluster.post_from(origin, &msg("a,b", Action::Statistics)).unwrap();
+    let has_report = results
+        .iter()
+        .flat_map(|(_, rs)| rs)
+        .any(|r| matches!(r, Reaction::Statistics { report } if report.contains("data=")));
+    assert!(has_report);
+    cluster.shutdown().unwrap();
+}
+
+// ---- PJRT end-to-end (requires `make artifacts`) -----------------------
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("preprocess.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT test: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn disaster_recovery_end_to_end_beats_baselines() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pipeline =
+        DisasterRecoveryPipeline::new(&dir, DeviceProfile::raspberry_pi()).unwrap();
+    let trace = LidarTrace::generate(7, 40, 512.0);
+    let rp = pipeline.run_rpulsar(&trace).unwrap();
+    let sq = pipeline.run_baseline(&trace, BaselineKind::KafkaEdgentSqlite).unwrap();
+    let nit = pipeline.run_baseline(&trace, BaselineKind::KafkaEdgentNitrite).unwrap();
+    assert_eq!(rp.images, 40);
+    assert_eq!(rp.stored_at_edge + rp.forwarded_to_core + rp.dropped, 40);
+    assert!(
+        rp.total() < sq.total(),
+        "R-Pulsar {:?} must beat SQLite stack {:?}",
+        rp.total(),
+        sq.total()
+    );
+    assert!(rp.total() < nit.total());
+    // Decisions must exercise both branches on a mixed-damage trace.
+    assert!(rp.stored_at_edge > 0);
+    assert!(rp.forwarded_to_core > 0);
+}
+
+#[test]
+fn pipeline_decisions_track_damage_content() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pipeline = DisasterRecoveryPipeline::new(&dir, DeviceProfile::native()).unwrap();
+    // All-calm trace: nothing should go to the core.
+    let mut calm = LidarTrace::generate(3, 10, 512.0);
+    for img in &mut calm.images {
+        // Flatten tiles: zero damage, zero gradient.
+        img.tile = vec![0.0; img.tile.len()];
+    }
+    let report = pipeline.run_rpulsar(&calm).unwrap();
+    assert_eq!(report.forwarded_to_core, 0, "flat tiles must stay at the edge");
+}
+
+// ---- TCP transport end-to-end ------------------------------------------
+
+#[test]
+fn node_serves_ar_messages_over_tcp() {
+    use rpulsar::net::{NetMessage, TcpEndpoint};
+    use rpulsar::overlay::node_id::NodeId;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    let dir = std::env::temp_dir().join(format!("it-tcp-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut node =
+        rpulsar::coordinator::Node::with_name_at("tcp-rp", 40.0, -74.0, &dir).unwrap();
+    let endpoint = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = endpoint.local_addr().to_string();
+
+    // Node event loop on a helper thread (what `rpulsar node` runs).
+    let (stop_tx, stop_rx) = channel::<()>();
+    let (done_tx, done_rx) = channel::<usize>();
+    let server = std::thread::spawn(move || {
+        let mut handled = 0usize;
+        loop {
+            if stop_rx.try_recv().is_ok() {
+                let _ = done_tx.send(handled);
+                return node;
+            }
+            if let Some(NetMessage::Ar { msg, .. }) =
+                endpoint.recv_timeout(Duration::from_millis(50))
+            {
+                node.handle_ar(&msg).unwrap();
+                handled += 1;
+            }
+        }
+    });
+
+    // A remote producer stores two records over real TCP.
+    for (profile, data) in [("drone,lidar", &b"tcp-1"[..]), ("drone,thermal", b"tcp-2")] {
+        let msg = NetMessage::Ar {
+            from: NodeId::from_name("tcp-producer"),
+            msg: msg_data(profile, Action::Store, data),
+        };
+        TcpEndpoint::send_to(&addr, &msg).unwrap();
+    }
+
+    // Wait for delivery, then stop the loop and inspect node state.
+    std::thread::sleep(Duration::from_millis(400));
+    stop_tx.send(()).unwrap();
+    let handled = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    let mut node = server.join().unwrap();
+    assert_eq!(handled, 2);
+    assert_eq!(node.store().get(b"drone,lidar").unwrap(), Some(b"tcp-1".to_vec()));
+    assert_eq!(node.store().get(b"drone,thermal").unwrap(), Some(b"tcp-2".to_vec()));
+    node.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,278 @@
+//! Property-based tests over coordinator invariants, using the crate's
+//! own `testkit::prop` mini-framework (no proptest offline).
+//!
+//! Invariants covered: Hilbert bijectivity/adjacency at many geometries,
+//! SFC cluster coverage (routing finds every matching RP), quadtree
+//! structural invariants under random insert/remove, matching-vs-routing
+//! consistency (a matching pattern's clusters contain the data point),
+//! queue FIFO/durability, LSM get-after-put, and codec round-trips.
+
+use rpulsar::ar::profile::{Profile, Term};
+use rpulsar::overlay::geo::{GeoPoint, Rect};
+use rpulsar::overlay::node_id::NodeId;
+use rpulsar::overlay::quadtree::QuadTree;
+use rpulsar::routing::clusters::clusters_for_region;
+use rpulsar::routing::hilbert::HilbertCurve;
+use rpulsar::routing::keyspace::{DimRange, KeySpace};
+use rpulsar::testkit::prop::{forall_seeded, NoShrink};
+use rpulsar::testkit::{keyword, u64_in, usize_in, vec_of};
+use rpulsar::util::codec::{ByteReader, ByteWriter};
+use rpulsar::util::prng::Prng;
+
+#[test]
+fn prop_hilbert_encode_decode_roundtrip() {
+    // Random geometry + random coordinates → decode(encode(x)) == x.
+    forall_seeded(101, 400, |rng: &mut Prng| {
+        let dims = rng.gen_range(1, 7) as u32;
+        let bits = rng.gen_range(1, (60 / dims as usize).min(16) + 1) as u32;
+        let curve = HilbertCurve::new(dims, bits).unwrap();
+        let coords: Vec<u64> =
+            (0..dims).map(|_| rng.gen_range_u64(curve.side())).collect();
+        NoShrink((curve, coords))
+    }, |NoShrink((curve, coords)): &NoShrink<(HilbertCurve, Vec<u64>)>| {
+        let idx = curve.encode(coords).unwrap();
+        curve.decode(idx) == *coords
+    });
+}
+
+#[test]
+fn prop_hilbert_adjacency() {
+    // Consecutive indices differ by exactly one unit step.
+    forall_seeded(102, 200, |rng: &mut Prng| {
+        let dims = rng.gen_range(2, 5) as u32;
+        let bits = rng.gen_range(2, 5) as u32;
+        let curve = HilbertCurve::new(dims, bits).unwrap();
+        let max = (1u128 << (dims * bits)) as u64;
+        let idx = rng.gen_range_u64(max - 1);
+        NoShrink((curve, idx))
+    }, |NoShrink((curve, idx)): &NoShrink<(HilbertCurve, u64)>| {
+        let a = curve.decode(*idx);
+        let b = curve.decode(*idx + 1);
+        a.iter().zip(&b).map(|(x, y)| x.abs_diff(*y)).sum::<u64>() == 1
+    });
+}
+
+#[test]
+fn prop_cluster_coverage() {
+    // Every point inside a random query region has its index covered by
+    // the region's clusters, at any refinement depth.
+    forall_seeded(103, 150, |rng: &mut Prng| {
+        let dims = rng.gen_range(1, 4) as u32;
+        let bits = rng.gen_range(2, 6) as u32;
+        let max_level = rng.gen_range(1, bits as usize + 1) as u32;
+        let curve = HilbertCurve::new(dims, bits).unwrap();
+        let side = curve.side();
+        let region: Vec<DimRange> = (0..dims)
+            .map(|_| {
+                let a = rng.gen_range_u64(side);
+                let b = rng.gen_range_u64(side);
+                DimRange::Range(a.min(b), a.max(b))
+            })
+            .collect();
+        // One probe point inside the region.
+        let probe: Vec<u64> = region
+            .iter()
+            .map(|r| {
+                let (lo, hi) = r.bounds(side);
+                lo + rng.gen_range_u64(hi - lo + 1)
+            })
+            .collect();
+        NoShrink((curve, region, probe, max_level))
+    }, |NoShrink((curve, region, probe, max_level)): &NoShrink<(HilbertCurve, Vec<DimRange>, Vec<u64>, u32)>| {
+        let clusters = clusters_for_region(curve, region, *max_level).unwrap();
+        let idx = curve.encode(probe).unwrap();
+        clusters.iter().any(|&(lo, hi)| idx >= lo && idx <= hi)
+    });
+}
+
+#[test]
+fn prop_keyspace_prefix_contains_extensions() {
+    // keyword_point(prefix + suffix) always lies inside prefix_range(prefix).
+    forall_seeded(104, 400, |rng: &mut Prng| {
+        let ks = KeySpace::new(rng.gen_range(4, 21) as u32).unwrap();
+        let plen = rng.gen_range(1, 5);
+        let prefix = rng.ascii_lower(plen);
+        let slen = rng.gen_range(0, 6);
+        let suffix = rng.ascii_lower(slen);
+        NoShrink((ks, prefix, suffix))
+    }, |NoShrink((ks, prefix, suffix)): &NoShrink<(KeySpace, String, String)>| {
+        let full = format!("{prefix}{suffix}");
+        let point = ks.keyword_point(&full);
+        let (lo, hi) = ks.prefix_range(prefix).bounds(ks.side());
+        point >= lo && point <= hi
+    });
+}
+
+#[test]
+fn prop_matching_implies_routing_overlap() {
+    // If pattern term matches a concrete term, the concrete point must
+    // fall inside the pattern's DimRange — the guarantee that content
+    // routing finds every matching RP.
+    forall_seeded(105, 400, |rng: &mut Prng| {
+        let wlen = rng.gen_range(2, 8);
+        let word = rng.ascii_lower(wlen);
+        let cut = rng.gen_range(1, word.len() + 1);
+        (word.clone(), format!("{}*", &word[..cut]))
+    }, |(word, pattern): &(String, String)| {
+        let ks = KeySpace::new(10).unwrap();
+        let concrete = Term::parse(word);
+        let pat = Term::parse(pattern);
+        let point = match concrete.to_dim_range(&ks) {
+            DimRange::Point(p) => p,
+            other => other.bounds(ks.side()).0,
+        };
+        let (lo, hi) = pat.to_dim_range(&ks).bounds(ks.side());
+        point >= lo && point <= hi
+    });
+}
+
+#[test]
+fn prop_quadtree_invariants_under_random_ops() {
+    forall_seeded(106, 100, |rng: &mut Prng| {
+        // A random op sequence: (kind, lat, lon) — kind 3 = remove.
+        let n = rng.gen_range(1, 40);
+        NoShrink(
+            (0..n)
+                .map(|i| {
+                    let kind = rng.gen_range(0, 4); // removes less frequent
+                    let lat = -80.0 + rng.gen_f64() * 160.0;
+                    let lon = -170.0 + rng.gen_f64() * 340.0;
+                    (i as u32, kind, lat, lon)
+                })
+                .collect::<Vec<_>>(),
+        )
+    }, |NoShrink(ops): &NoShrink<Vec<(u32, usize, f64, f64)>>| {
+        let mut tree = QuadTree::with_bounds(Rect::world(), 2, 10);
+        let mut inserted: Vec<u32> = Vec::new();
+        for (i, kind, lat, lon) in ops {
+            if *kind == 3 && !inserted.is_empty() {
+                let victim = inserted.remove((*i as usize) % inserted.len());
+                tree.remove(&NodeId::from_name(&format!("q{victim}")));
+            } else {
+                let id = NodeId::from_name(&format!("q{i}"));
+                if tree.insert(id, GeoPoint::new(*lat, *lon)).is_ok() {
+                    inserted.push(*i);
+                }
+            }
+            if tree.check_invariants().is_err() {
+                return false;
+            }
+        }
+        tree.len() == inserted.len()
+    });
+}
+
+#[test]
+fn prop_profile_render_parse_roundtrip() {
+    forall_seeded(107, 300, vec_of(keyword(8), 6), |words: &Vec<String>| {
+        if words.is_empty() {
+            return true;
+        }
+        let rendered = words.join(",");
+        match Profile::parse(&rendered) {
+            Ok(p) => Profile::parse(&p.render()).map(|p2| p2 == p).unwrap_or(false),
+            Err(_) => false,
+        }
+    });
+}
+
+#[test]
+fn prop_codec_varint_roundtrip() {
+    forall_seeded(108, 500, u64_in(0, u64::MAX), |&v: &u64| {
+        let mut w = ByteWriter::new();
+        w.put_varint(v);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        r.get_varint().map(|got| got == v && r.is_exhausted()).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_queue_fifo_under_random_batches() {
+    forall_seeded(109, 40, vec_of(usize_in(1, 200), 30), |batch_sizes: &Vec<usize>| {
+        let dir = std::env::temp_dir()
+            .join("rpulsar-prop-queue")
+            .join(format!("{}-{}", std::process::id(), rpulsar::util::fnv1a64(format!("{batch_sizes:?}").as_bytes())));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut q = rpulsar::mmq::queue::MemoryMappedQueue::open(
+            rpulsar::mmq::queue::QueueOptions {
+                dir: dir.clone(),
+                segment_bytes: 1 << 14,
+                max_segments: 1024, // retain everything for the check
+                sync_every: 0,
+            },
+        )
+        .unwrap();
+        let mut expected = Vec::new();
+        for (b, &size) in batch_sizes.iter().enumerate() {
+            let payload = vec![(b % 256) as u8; size];
+            q.append(&payload).unwrap();
+            expected.push(payload);
+        }
+        let (_, got) = q.poll(0, expected.len() + 10);
+        let ok = got == expected;
+        let _ = std::fs::remove_dir_all(&dir);
+        ok
+    });
+}
+
+#[test]
+fn prop_lsm_get_after_put() {
+    forall_seeded(110, 30, |rng: &mut Prng| {
+        let n = rng.gen_range(1, 60);
+        (0..n)
+            .map(|_| {
+                let klen = rng.gen_range(1, 12);
+                (rng.ascii_lower(klen), rng.gen_range(0, 300))
+            })
+            .collect::<Vec<(String, usize)>>()
+    }, |entries: &Vec<(String, usize)>| {
+        let dir = std::env::temp_dir()
+            .join("rpulsar-prop-lsm")
+            .join(format!("{}-{}", std::process::id(), rpulsar::util::fnv1a64(format!("{entries:?}").as_bytes())));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = rpulsar::storage::lsm::LsmStore::open_native(
+            rpulsar::storage::lsm::LsmOptions {
+                dir: dir.clone(),
+                memtable_bytes: 512, // force frequent flushes
+                bloom_bits_per_key: 10,
+                max_tables: 4,
+            },
+        )
+        .unwrap();
+        // Last write wins per key.
+        let mut model = std::collections::BTreeMap::new();
+        for (key, vlen) in entries {
+            let value = vec![0xCDu8; *vlen];
+            store.put(key.as_bytes(), &value).unwrap();
+            model.insert(key.clone(), value);
+        }
+        let ok = model.iter().all(|(k, v)| {
+            store.get(k.as_bytes()).unwrap().as_deref() == Some(v.as_slice())
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+        ok
+    });
+}
+
+#[test]
+fn prop_replica_set_stable_and_sized() {
+    forall_seeded(111, 200, |rng: &mut Prng| {
+        let n = rng.gen_range(1, 40);
+        let members: Vec<NodeId> =
+            (0..n).map(|i| NodeId::from_name(&format!("m{i}"))).collect();
+        let key = NodeId::from_name(&rng.ascii_lower(8));
+        let replicas = rng.gen_range(1, 6);
+        NoShrink((members, key, replicas))
+    }, |NoShrink((members, key, replicas)): &NoShrink<(Vec<NodeId>, NodeId, usize)>| {
+        let a = rpulsar::storage::dht::replica_set(key, members, *replicas);
+        let b = rpulsar::storage::dht::replica_set(key, members, *replicas);
+        // Deterministic, correctly sized, all distinct members.
+        a == b && a.len() == (*replicas).min(members.len()) && {
+            let mut s = a.clone();
+            s.sort();
+            s.dedup();
+            s.len() == a.len()
+        }
+    });
+}

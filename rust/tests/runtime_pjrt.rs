@@ -1,0 +1,142 @@
+//! PJRT runtime integration: load the AOT artifacts produced by
+//! `make artifacts`, execute them, and verify the numbers against the
+//! same invariants the Python tests check for the kernels — the L1↔L3
+//! consistency proof. Tests skip (with a notice) when artifacts are
+//! missing so `cargo test` works before `make artifacts`.
+
+use rpulsar::runtime::{PjrtEngine, PreprocessRuntime, STATS_DIM, TILE_DIM};
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("preprocess.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT test: run `make artifacts` first");
+        None
+    }
+}
+
+fn tile_constant(v: f32) -> Vec<f32> {
+    vec![v; TILE_DIM * TILE_DIM]
+}
+
+/// A vertical step edge at column `TILE_DIM/2`.
+fn tile_with_edge() -> Vec<f32> {
+    let mut t = tile_constant(0.0);
+    for row in 0..TILE_DIM {
+        for col in TILE_DIM / 2..TILE_DIM {
+            t[row * TILE_DIM + col] = 10.0;
+        }
+    }
+    t
+}
+
+#[test]
+fn engine_loads_all_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = PjrtEngine::cpu().unwrap();
+    let loaded = engine.load_dir(&dir).unwrap();
+    assert_eq!(loaded, vec!["change_detect", "preprocess", "quality_score"]);
+    assert!(engine.has("preprocess"));
+}
+
+#[test]
+fn preprocess_constant_tile_scores_zero() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PreprocessRuntime::load(&dir).unwrap();
+    let out = rt.preprocess(&tile_constant(3.25)).unwrap();
+    assert_eq!(out.gmag.len(), TILE_DIM * TILE_DIM);
+    assert_eq!(out.stats.len(), STATS_DIM * STATS_DIM);
+    assert!(out.gmag.iter().all(|&g| g.abs() < 1e-5), "flat tile has no gradient");
+    assert!(out.result.abs() < 1e-3, "RESULT must be ~0, got {}", out.result);
+    assert!(out.quality.abs() < 1e-4, "flat tile has no contrast");
+}
+
+#[test]
+fn preprocess_edge_tile_scores_high() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PreprocessRuntime::load(&dir).unwrap();
+    let out = rt.preprocess(&tile_with_edge()).unwrap();
+    assert!(out.result > 1.0, "edge tile must score > 1, got {}", out.result);
+    assert!(out.quality > 1.0, "step edge has contrast, got {}", out.quality);
+    // The gradient is concentrated near the edge column.
+    let mid = TILE_DIM / 2;
+    let row = 100;
+    assert!(out.gmag[row * TILE_DIM + mid] > 1.0);
+    assert!(out.gmag[row * TILE_DIM + 10] < 1e-5);
+}
+
+#[test]
+fn change_detect_identical_tiles_zero() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PreprocessRuntime::load(&dir).unwrap();
+    let t = tile_with_edge();
+    let (dstats, change) = rt.change_detect(&t, &t).unwrap();
+    assert_eq!(dstats.len(), STATS_DIM * STATS_DIM);
+    assert!(dstats.iter().all(|&d| d.abs() < 1e-6));
+    assert_eq!(change, 0.0);
+}
+
+#[test]
+fn change_detect_flags_differences() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PreprocessRuntime::load(&dir).unwrap();
+    let hist = tile_constant(0.0);
+    let cur = tile_constant(5.0); // everything changed
+    let (_, change) = rt.change_detect(&cur, &hist).unwrap();
+    assert!(change > 90.0, "uniform large change must flag ~100%, got {change}");
+    assert!(change <= 100.0);
+}
+
+#[test]
+fn quality_score_matches_preprocess_result() {
+    // quality_score(stats) recomputes the same formula the preprocess
+    // artifact used — scores must agree (L2 model consistency).
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PreprocessRuntime::load(&dir).unwrap();
+    let out = rt.preprocess(&tile_with_edge()).unwrap();
+    let requeried = rt.quality_score(&out.stats).unwrap();
+    assert!(
+        (requeried - out.result).abs() < 1e-3,
+        "stored-stats rescoring {requeried} != preprocess result {}",
+        out.result
+    );
+}
+
+#[test]
+fn wrong_shapes_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PreprocessRuntime::load(&dir).unwrap();
+    assert!(rt.preprocess(&vec![0.0; 100]).is_err());
+    assert!(rt.change_detect(&tile_constant(0.0), &vec![0.0; 5]).is_err());
+    assert!(rt.quality_score(&vec![0.0; 7]).is_err());
+}
+
+#[test]
+fn runtime_matches_lidar_generator_contract() {
+    // Damaged synthetic tiles must score higher than calm ones — the
+    // contract between pipeline::lidar and the kernel.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PreprocessRuntime::load(&dir).unwrap();
+    let trace = rpulsar::pipeline::lidar::LidarTrace::generate(5, 30, 512.0);
+    let mut calm_scores = Vec::new();
+    let mut damaged_scores = Vec::new();
+    for img in &trace.images {
+        let out = rt.preprocess(&img.tile).unwrap();
+        if img.damage < 0.1 {
+            calm_scores.push(out.result);
+        } else if img.damage > 0.5 {
+            damaged_scores.push(out.result);
+        }
+    }
+    if let (Some(calm), Some(damaged)) = (
+        calm_scores.iter().cloned().reduce(f32::max),
+        damaged_scores.iter().cloned().reduce(f32::min),
+    ) {
+        assert!(
+            damaged > calm * 0.8,
+            "heavily damaged tiles ({damaged}) should score ≳ calm ones ({calm})"
+        );
+    }
+}
