@@ -19,6 +19,13 @@ pub fn header(title: &str, paper_claim: &str) {
     println!("paper: {paper_claim}");
 }
 
+/// Smoke-run mode (`cargo bench --bench fig… -- --test`): tiny sizes so
+/// CI can keep the bench binaries and their ablation arms compiling and
+/// running without paying full measurement time.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--test")
+}
+
 /// Format bytes compactly.
 pub fn fmt_size(bytes: usize) -> String {
     if bytes >= 1 << 20 {
@@ -107,7 +114,7 @@ impl MessageBroker for RPulsarBroker {
         for (_, m) in &msgs {
             self.disk.charge(Medium::Ram, Pattern::Sequential, Dir::Read, m.len());
         }
-        Ok(msgs.into_iter().map(|(_, m)| m).collect())
+        Ok(msgs.into_iter().map(|(_, m)| m.to_vec()).collect())
     }
 
     fn name(&self) -> &'static str {

@@ -8,13 +8,18 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{fmt_size, header, mean_std, messaging_run, RPulsarBroker};
+use common::{fmt_size, header, mean_std, messaging_run, smoke_mode, RPulsarBroker};
+use rpulsar::ar::matching;
+use rpulsar::ar::profile::Profile;
 use rpulsar::baselines::kafka_like::KafkaLikeBroker;
 use rpulsar::baselines::mosquitto_like::MosquittoLikeBroker;
 use rpulsar::baselines::MessageBroker;
 use rpulsar::device::profile::DeviceProfile;
 use rpulsar::device::throttle::{ClockMode, ThrottledDisk};
+use rpulsar::mmq::pubsub::Broker;
+use rpulsar::mmq::queue::QueueOptions;
 use rpulsar::workload::message_sizes;
+use std::time::Instant;
 
 const MESSAGES: usize = 2_000;
 const WINDOWS: usize = 10;
@@ -24,6 +29,7 @@ fn pi_disk() -> ThrottledDisk {
 }
 
 fn main() {
+    let smoke = smoke_mode();
     header(
         "Fig. 4 — single-producer throughput on Raspberry Pi",
         "R-Pulsar ≈3× Kafka, ≈7× Mosquitto; Kafka high variance",
@@ -32,20 +38,21 @@ fn main() {
         "{:<10} {:>22} {:>22} {:>22} {:>8} {:>8}",
         "size", "r-pulsar (msg/s)", "kafka-like (msg/s)", "mosquitto-like", "vs-kafka", "vs-mosq"
     );
+    let messages = if smoke { 100 } else { MESSAGES };
     for size in message_sizes() {
         let disk = pi_disk();
         let mut rp = RPulsarBroker::new(&format!("fig4-{size}"), disk.clone());
-        let rp_win = messaging_run(&mut rp, &disk, size, MESSAGES, WINDOWS);
+        let rp_win = messaging_run(&mut rp, &disk, size, messages, WINDOWS);
         let (rp_mean, rp_std) = mean_std(&rp_win);
 
         let disk = pi_disk();
         let mut kafka = KafkaLikeBroker::with_defaults(disk.clone());
-        let kafka_win = messaging_run(&mut kafka, &disk, size, MESSAGES, WINDOWS);
+        let kafka_win = messaging_run(&mut kafka, &disk, size, messages, WINDOWS);
         let (k_mean, k_std) = mean_std(&kafka_win);
 
         let disk = pi_disk();
         let mut mosq = MosquittoLikeBroker::with_defaults(disk.clone());
-        let mosq_win = messaging_run(&mut mosq, &disk, size, MESSAGES, WINDOWS);
+        let mosq_win = messaging_run(&mut mosq, &disk, size, messages, WINDOWS);
         let (m_mean, m_std) = mean_std(&mosq_win);
 
         println!(
@@ -71,4 +78,66 @@ fn main() {
         let _ = mosq.consume("bench", 1);
         let _ = rp.name();
     }
+
+    fetch_path_ablation(smoke);
+}
+
+/// Fetch-path ablation: with the subscription↔topic match cache, a
+/// fetch must not re-run `matching::matches` against every topic — the
+/// seed rematched all topics on every call. Proven with the matcher's
+/// invocation counter (this bench binary is single-threaded).
+fn fetch_path_ablation(smoke: bool) {
+    header(
+        "Fig. 4 ablation — fetch path: cached matching vs per-fetch rematch",
+        "fetch/lag use the broker match cache; zero matcher calls per fetch",
+    );
+    let topics: usize = if smoke { 8 } else { 64 };
+    let fetches: usize = if smoke { 200 } else { 5_000 };
+    let dir = std::env::temp_dir()
+        .join("rpulsar-bench")
+        .join(format!("fig4-fetchpath-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut broker = Broker::new(QueueOptions {
+        dir,
+        segment_bytes: 1 << 20,
+        max_segments: 4,
+        sync_every: 0,
+    });
+    let topic_profiles: Vec<Profile> = (0..topics)
+        .map(|t| Profile::parse(&format!("region{t:03},lidar")).unwrap())
+        .collect();
+    for p in &topic_profiles {
+        broker.publish(p, b"seed-message").unwrap();
+    }
+    broker.subscribe("app", Profile::parse("region*,lidar").unwrap());
+
+    let calls_before = matching::match_calls();
+    let broker_calls_before = broker.match_calls();
+    let t0 = Instant::now();
+    let mut delivered = 0usize;
+    for i in 0..fetches {
+        // Keep a trickle of new data flowing so fetches do real work.
+        let p = &topic_profiles[i % topic_profiles.len()];
+        broker.publish(p, b"payload").unwrap();
+        delivered += broker.fetch("app", 4).unwrap().len();
+        broker.lag("app").unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let rematches = matching::match_calls() - calls_before;
+    let broker_rematches = broker.match_calls() - broker_calls_before;
+
+    println!(
+        "{topics} topics, {fetches} fetches: {:.0} fetch/s, {delivered} delivered, \
+         {rematches} matcher calls during fetch loop (scan arm would do {})",
+        fetches as f64 / elapsed,
+        topics * fetches,
+    );
+    assert_eq!(
+        broker_rematches, 0,
+        "broker fetch/lag path must not invoke the profile matcher"
+    );
+    assert_eq!(
+        rematches, 0,
+        "no code on the fetch path may rerun matching::matches"
+    );
 }

@@ -5,11 +5,19 @@
 //! R-Pulsar shows better performance as the workload increases (its
 //! recently-used data stays in RAM, the baselines' B-tree/page caches
 //! stop fitting).
+//!
+//! Ablation arm (`indexed` vs `scan`): the associative matching plane
+//! itself — index-backed profile queries (`ar::index`) against the
+//! O(N) linear `matching::matches` scan they replaced, at growing
+//! stored-profile counts. Run with `-- --test` for a CI smoke pass.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{header, mean_std, windowed_throughput};
+use common::{header, mean_std, smoke_mode, windowed_throughput};
+use rpulsar::ar::index::IndexedProfiles;
+use rpulsar::ar::matching;
+use rpulsar::ar::profile::Profile;
 use rpulsar::baselines::nitrite_like::NitriteLikeStore;
 use rpulsar::baselines::sqlite_like::SqliteLikeStore;
 use rpulsar::baselines::RecordStore;
@@ -18,6 +26,7 @@ use rpulsar::device::throttle::{ClockMode, ThrottledDisk};
 use rpulsar::storage::lsm::{LsmOptions, LsmStore};
 use rpulsar::util::prng::Prng;
 use rpulsar::workload::random_records;
+use std::time::Instant;
 
 const VALUE_BYTES: usize = 256;
 const QUERIES: usize = 500;
@@ -28,6 +37,7 @@ fn pi_disk() -> ThrottledDisk {
 }
 
 fn main() {
+    let smoke = smoke_mode();
     header(
         "Fig. 6 — exact-query performance on Raspberry Pi",
         "baselines slightly faster when small; R-Pulsar wins as workload grows",
@@ -36,7 +46,8 @@ fn main() {
         "{:<8} {:>18} {:>18} {:>18}",
         "records", "r-pulsar (q/s)", "sqlite-like", "nitrite-like"
     );
-    for &n in &[100usize, 1_000, 5_000, 20_000] {
+    let sizes: &[usize] = if smoke { &[100] } else { &[100, 1_000, 5_000, 20_000] };
+    for &n in sizes {
         let mut rng = Prng::seeded(6);
         let records = random_records(&mut rng, n, VALUE_BYTES);
 
@@ -89,4 +100,67 @@ fn main() {
         println!("{n:<8} {rp:>18.0} {sq_mean:>18.0} {nit_mean:>18.0}");
     }
     println!("(series shape: R-Pulsar flat/improving, baselines degrade past cache capacity)");
+
+    matching_plane_ablation(smoke);
+}
+
+/// Build the deterministic stored-profile population: simple 3-term
+/// profiles (two keywords + one numeric pair), as the paper's resource
+/// profiles are.
+fn stored_profiles(n: usize) -> Vec<Profile> {
+    (0..n)
+        .map(|i| {
+            Profile::parse(&format!("node{i:06},mod{},zone:{}", i % 8, i % 97)).unwrap()
+        })
+        .collect()
+}
+
+/// `indexed` vs `scan` ablation over the associative matching plane with
+/// exact-tuple queries (the Fig. 6 query shape).
+fn matching_plane_ablation(smoke: bool) {
+    header(
+        "Fig. 6 ablation — exact associative query: indexed vs scan",
+        "inverted profile index replaces the O(N) matching scan",
+    );
+    println!(
+        "{:<8} {:>16} {:>16} {:>9}",
+        "profiles", "indexed (q/s)", "scan (q/s)", "speedup"
+    );
+    let sizes: &[usize] = if smoke { &[256] } else { &[1_000, 10_000, 40_000] };
+    for &n in sizes {
+        let stored = stored_profiles(n);
+        let mut ix: IndexedProfiles<Profile> = IndexedProfiles::new();
+        for p in &stored {
+            ix.insert(p.clone());
+        }
+        let queries = (2_000_000 / n).clamp(100, 2_000);
+
+        // Scan arm: the seed's linear pass over every stored profile.
+        let t0 = Instant::now();
+        let mut scan_hits = 0usize;
+        for i in 0..queries {
+            let q = &stored[(i * 37) % n];
+            scan_hits += stored.iter().filter(|s| matching::matches(q, s)).count();
+        }
+        let scan_qps = queries as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+        // Indexed arm: same queries through the inverted index.
+        let t0 = Instant::now();
+        let mut ix_hits = 0usize;
+        for i in 0..queries {
+            let q = &stored[(i * 37) % n];
+            ix_hits += ix.query(q).len();
+        }
+        let ix_qps = queries as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+        assert_eq!(ix_hits, scan_hits, "index and scan must agree on every query");
+        let speedup = ix_qps / scan_qps;
+        println!("{n:<8} {ix_qps:>16.0} {scan_qps:>16.0} {speedup:>8.1}x");
+        if !smoke && n >= 10_000 {
+            assert!(
+                speedup >= 5.0,
+                "indexed arm must be ≥5x the scan arm at n={n}, got {speedup:.1}x"
+            );
+        }
+    }
 }

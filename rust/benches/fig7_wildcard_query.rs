@@ -9,7 +9,10 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{header, mean_std, windowed_throughput};
+use common::{header, mean_std, smoke_mode, windowed_throughput};
+use rpulsar::ar::index::IndexedProfiles;
+use rpulsar::ar::matching;
+use rpulsar::ar::profile::Profile;
 use rpulsar::baselines::nitrite_like::NitriteLikeStore;
 use rpulsar::baselines::sqlite_like::SqliteLikeStore;
 use rpulsar::baselines::RecordStore;
@@ -17,6 +20,7 @@ use rpulsar::device::profile::DeviceProfile;
 use rpulsar::device::throttle::{ClockMode, ThrottledDisk};
 use rpulsar::storage::lsm::{LsmOptions, LsmStore};
 use rpulsar::util::prng::Prng;
+use std::time::Instant;
 
 const QUERIES: usize = 100;
 const WINDOWS: usize = 5;
@@ -41,6 +45,7 @@ fn prefixed_records(rng: &mut Prng, n: usize) -> Vec<(String, Vec<u8>)> {
 }
 
 fn main() {
+    let smoke = smoke_mode();
     header(
         "Fig. 7 — wildcard-query performance on Raspberry Pi",
         "same crossover as Fig. 6; wildcard returns multiple results",
@@ -49,7 +54,8 @@ fn main() {
         "{:<8} {:>18} {:>18} {:>18}",
         "records", "r-pulsar (q/s)", "sqlite-like", "nitrite-like"
     );
-    for &n in &[100usize, 1_000, 4_000] {
+    let sizes: &[usize] = if smoke { &[100] } else { &[100, 1_000, 4_000] };
+    for &n in sizes {
         let mut rng = Prng::seeded(7);
         let records = prefixed_records(&mut rng, n);
 
@@ -105,5 +111,68 @@ fn main() {
             rp > sq_mean && rp > nit_mean,
             "R-Pulsar must win wildcard queries at n={n}"
         );
+    }
+
+    matching_plane_ablation(smoke);
+}
+
+/// `indexed` vs `scan` ablation for the partial-keyword (prefix) query
+/// shape: stored profiles carry controlled prefixes; queries are
+/// selective `sens<c><ddd>*` patterns resolved by the index's prefix
+/// buckets versus the seed's linear matching scan.
+fn matching_plane_ablation(smoke: bool) {
+    header(
+        "Fig. 7 ablation — wildcard associative query: indexed vs scan",
+        "prefix buckets replace the O(N) pattern-matching scan",
+    );
+    println!(
+        "{:<8} {:>16} {:>16} {:>9}",
+        "profiles", "indexed (q/s)", "scan (q/s)", "speedup"
+    );
+    let sizes: &[usize] = if smoke { &[256] } else { &[1_000, 10_000, 40_000] };
+    let prefixes = ["sensa", "sensb", "sensc", "sensd"];
+    for &n in sizes {
+        let stored: Vec<Profile> = (0..n)
+            .map(|i| {
+                Profile::parse(&format!("{}{:05},lidar", prefixes[i % 4], i)).unwrap()
+            })
+            .collect();
+        let mut ix: IndexedProfiles<Profile> = IndexedProfiles::new();
+        for p in &stored {
+            ix.insert(p.clone());
+        }
+        let queries = (1_000_000 / n).clamp(100, 1_000);
+        // Selective partial keywords: "sensa012*" matches the ≤10 stored
+        // profiles whose counter falls in one decade of one prefix class.
+        let query_at = |i: usize| {
+            let decade = (i * 131) % (n / 10).max(1);
+            Profile::parse(&format!("{}{:04}*", prefixes[i % 4], decade)).unwrap()
+        };
+
+        let t0 = Instant::now();
+        let mut scan_hits = 0usize;
+        for i in 0..queries {
+            let q = query_at(i);
+            scan_hits += stored.iter().filter(|s| matching::matches(&q, s)).count();
+        }
+        let scan_qps = queries as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+        let t0 = Instant::now();
+        let mut ix_hits = 0usize;
+        for i in 0..queries {
+            let q = query_at(i);
+            ix_hits += ix.query(&q).len();
+        }
+        let ix_qps = queries as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+        assert_eq!(ix_hits, scan_hits, "index and scan must agree on every query");
+        let speedup = ix_qps / scan_qps;
+        println!("{n:<8} {ix_qps:>16.0} {scan_qps:>16.0} {speedup:>8.1}x");
+        if !smoke && n >= 10_000 {
+            assert!(
+                speedup >= 5.0,
+                "indexed arm must be ≥5x the scan arm at n={n}, got {speedup:.1}x"
+            );
+        }
     }
 }

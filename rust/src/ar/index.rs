@@ -1,0 +1,697 @@
+//! Inverted profile index — the indexed associative-matching plane.
+//!
+//! The paper's associative selection (§IV-D1) is defined by
+//! [`matching::matches`]: every query term must be satisfied by some
+//! stored term. The seed implementation evaluated that as an O(N·q·t)
+//! linear scan over every stored profile, on every `query`, `notify_*`
+//! and `delete` — the pattern that collapses under edge-scale workloads
+//! (ROADMAP: "heavy traffic from millions of users"). This module turns
+//! the matching plane into an index lookup:
+//!
+//! - **Keyword postings** — lowercase-interned exact keywords map to
+//!   posting lists (`BTreeMap<String, Vec<Posting>>`), so an exact query
+//!   term touches one entry instead of N profiles.
+//! - **Prefix buckets** — stored `li*` patterns are bucketed by their
+//!   prefix; a concrete keyword walks its own (char-boundary) prefixes,
+//!   and a prefix query range-scans the sorted keyword map, so partial
+//!   keywords on *either* side are honoured.
+//! - **Interval lists** — numeric-looking exact values are mirrored into
+//!   a `total_cmp`-ordered map for `10..20` range queries; stored range
+//!   patterns live in a small interval list scanned for overlap.
+//! - **Wildcard fall-through** — `*` terms (and other always-accepting
+//!   shapes) are kept in fall-through sets that are unioned into every
+//!   lookup, so the index never misses what the scan would find.
+//!
+//! Two query directions cover all call sites:
+//!
+//! - [`ProfileIndex::forward_candidates`]: stored profiles `p` such that
+//!   `matches(q, p)` — used by `query`/`query_functions`/`delete` and
+//!   the broker's subscribe-time topic matching.
+//! - [`ProfileIndex::reverse_candidates`]: stored profiles `q` (pattern
+//!   subscriptions) such that `matches(q, p)` for an incoming `p` —
+//!   counting-based (Siena/Gryphon style): a stored profile is a
+//!   candidate when *every* one of its term slots is satisfied by some
+//!   incoming term.
+//!
+//! Candidate sets are exact for parser-built profiles; callers
+//! nevertheless re-verify with [`matching::matches`] (cheap on the small
+//! candidate set) so the index can never change observable semantics —
+//! the equivalence is additionally proven against the linear scan by the
+//! property tests in `rust/tests/index_equivalence.rs`.
+//!
+//! [`IndexedProfiles`] wraps the index together with a tombstoned slab
+//! of owning entries (data records, functions, subscriptions) and
+//! re-packs both once dead entries dominate.
+
+use super::matching;
+use super::profile::{Profile, Term, Value};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+/// One stored term occurrence: profile id + term slot within it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Posting {
+    pid: u32,
+    slot: u32,
+}
+
+/// Tombstone marker in [`ProfileIndex::dims`].
+const DEAD: u32 = u32::MAX;
+
+/// ASCII-lowercase a key only when needed (parser-built keys already are).
+fn fold(s: &str) -> Cow<'_, str> {
+    if s.bytes().any(|b| b.is_ascii_uppercase()) {
+        Cow::Owned(s.to_ascii_lowercase())
+    } else {
+        Cow::Borrowed(s)
+    }
+}
+
+/// Map `-0.0` onto `+0.0` so `total_cmp` ordering agrees with the
+/// matcher's IEEE `>=`/`<=` comparisons at the zero boundary.
+fn norm_zero(x: f64) -> f64 {
+    if x == 0.0 {
+        0.0
+    } else {
+        x
+    }
+}
+
+/// `f64` wrapper ordered by `total_cmp` (NaN is excluded at insert).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct F64Key(f64);
+
+impl Eq for F64Key {}
+
+impl PartialOrd for F64Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for F64Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Postings for one value dimension, bucketed by pattern shape. Lookup
+/// returns every stored value `u` with `value_accepts(u, v)` — the
+/// relation is symmetric, so the same structure serves both query
+/// directions.
+#[derive(Debug, Default)]
+struct ValueIndex {
+    /// Exact keywords (lowercase-interned).
+    exact: BTreeMap<String, Vec<Posting>>,
+    /// Stored prefix patterns, keyed by their prefix.
+    prefix: BTreeMap<String, Vec<Posting>>,
+    /// Exact keywords that parse as (non-NaN) numbers, for range queries.
+    numeric: BTreeMap<F64Key, Vec<Posting>>,
+    /// Stored numeric-range patterns (interval list, overlap-scanned).
+    ranges: Vec<(f64, f64, Posting)>,
+    /// Stored wildcards: accepted by every lookup.
+    wildcard: Vec<Posting>,
+}
+
+impl ValueIndex {
+    fn insert(&mut self, v: &Value, p: Posting) {
+        match v {
+            Value::Exact(k) => self.insert_keyword(k, p),
+            Value::Prefix(s) => {
+                self.prefix.entry(fold(s).into_owned()).or_default().push(p)
+            }
+            Value::Wildcard => self.wildcard.push(p),
+            Value::NumRange(lo, hi) => self.ranges.push((*lo, *hi, p)),
+        }
+    }
+
+    /// Register an exact keyword (also used for pair attribute names).
+    fn insert_keyword(&mut self, k: &str, p: Posting) {
+        let k = fold(k);
+        if let Ok(x) = k.parse::<f64>() {
+            if !x.is_nan() {
+                self.numeric.entry(F64Key(norm_zero(x))).or_default().push(p);
+            }
+        }
+        self.exact.entry(k.into_owned()).or_default().push(p);
+    }
+
+    /// Stored values accepting pattern `v`.
+    fn lookup(&self, v: &Value, out: &mut Vec<Posting>) {
+        match v {
+            Value::Exact(k) => self.lookup_keyword(k, out),
+            Value::Prefix(p) => self.lookup_prefix(p, out),
+            Value::Wildcard => {
+                // `*` accepts everything; emit every bucket (numeric
+                // entries mirror `exact` ones, so they are skipped).
+                out.extend(self.exact.values().flatten());
+                out.extend(self.prefix.values().flatten());
+                out.extend(self.ranges.iter().map(|&(_, _, p)| p));
+                out.extend(&self.wildcard);
+            }
+            Value::NumRange(lo, hi) => self.lookup_range(*lo, *hi, out),
+        }
+    }
+
+    /// Stored values accepting the concrete keyword `k` (exact query
+    /// terms and pair attribute names take this path).
+    fn lookup_keyword(&self, k: &str, out: &mut Vec<Posting>) {
+        let k = fold(k);
+        let k = k.as_ref();
+        if let Some(posts) = self.exact.get(k) {
+            out.extend(posts);
+        }
+        // Stored prefixes that are prefixes of `k` (including the empty
+        // and full prefix); only char-boundary slices can equal a key.
+        for i in (0..=k.len()).filter(|&i| k.is_char_boundary(i)) {
+            if let Some(posts) = self.prefix.get(&k[..i]) {
+                out.extend(posts);
+            }
+        }
+        if let Ok(x) = k.parse::<f64>() {
+            if !x.is_nan() {
+                out.extend(
+                    self.ranges
+                        .iter()
+                        .filter(|(lo, hi, _)| x >= *lo && x <= *hi)
+                        .map(|&(_, _, p)| p),
+                );
+            }
+        }
+        out.extend(&self.wildcard);
+    }
+
+    /// Stored values accepting the prefix pattern `p*`.
+    fn lookup_prefix(&self, p: &str, out: &mut Vec<Posting>) {
+        let p = fold(p);
+        let p = p.as_ref();
+        // Exact keywords extending the prefix: sorted range scan.
+        for (key, posts) in
+            self.exact.range::<str, _>((Bound::Included(p), Bound::Unbounded))
+        {
+            if !key.starts_with(p) {
+                break;
+            }
+            out.extend(posts);
+        }
+        // Stored prefixes that are strict prefixes of `p`...
+        for i in (0..p.len()).filter(|&i| p.is_char_boundary(i)) {
+            if let Some(posts) = self.prefix.get(&p[..i]) {
+                out.extend(posts);
+            }
+        }
+        // ...or extend `p` (covers the equal prefix too).
+        for (key, posts) in
+            self.prefix.range::<str, _>((Bound::Included(p), Bound::Unbounded))
+        {
+            if !key.starts_with(p) {
+                break;
+            }
+            out.extend(posts);
+        }
+        // Numeric shapes never accept prefixes.
+        out.extend(&self.wildcard);
+    }
+
+    /// Stored values accepting the numeric range `lo..hi`.
+    fn lookup_range(&self, lo: f64, hi: f64, out: &mut Vec<Posting>) {
+        if lo <= hi {
+            // NaN bounds fail `lo <= hi`, keeping the BTreeMap range valid.
+            let (lo_k, hi_k) = (F64Key(norm_zero(lo)), F64Key(norm_zero(hi)));
+            out.extend(self.numeric.range(lo_k..=hi_k).flat_map(|(_, p)| p));
+        }
+        out.extend(
+            self.ranges
+                .iter()
+                .filter(|(slo, shi, _)| *slo <= hi && lo <= *shi)
+                .map(|&(_, _, p)| p),
+        );
+        out.extend(&self.wildcard);
+    }
+}
+
+/// The inverted index over a set of stored profiles, keyed by caller
+/// supplied `pid`s (fresh, monotonically increasing per insert).
+///
+/// Removal is tombstone-based: postings go stale and are filtered at
+/// query time; [`IndexedProfiles`] re-packs storage and index together
+/// once tombstones dominate.
+#[derive(Debug, Default)]
+pub struct ProfileIndex {
+    /// Stored singleton (`Term::Attr`) values.
+    singleton: ValueIndex,
+    /// Attribute names of stored pairs, as exact keywords (singleton
+    /// attribute queries match pairs by name).
+    pair_names: ValueIndex,
+    /// Per-attribute value indexes for stored pairs.
+    pairs: BTreeMap<String, ValueIndex>,
+    /// Term count per pid (`DEAD` = tombstone).
+    dims: Vec<u32>,
+    live: usize,
+}
+
+impl ProfileIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Live (non-tombstoned) profile count.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    fn is_live(&self, pid: u32) -> bool {
+        self.dims.get(pid as usize).map(|&d| d != DEAD).unwrap_or(false)
+    }
+
+    /// Index `profile` under `pid`. `pid` must be fresh: equal to every
+    /// previous insert's pid + 1 (slab position), never reused.
+    pub fn insert(&mut self, pid: u32, profile: &Profile) {
+        let idx = pid as usize;
+        if self.dims.len() <= idx {
+            self.dims.resize(idx + 1, DEAD);
+        }
+        debug_assert_eq!(self.dims[idx], DEAD, "pid {pid} reused");
+        self.dims[idx] = profile.dims() as u32;
+        self.live += 1;
+        for (slot, term) in profile.terms().iter().enumerate() {
+            let posting = Posting { pid, slot: slot as u32 };
+            match term {
+                Term::Attr(v) => self.singleton.insert(v, posting),
+                Term::Pair(a, v) => {
+                    self.pair_names.insert_keyword(a, posting);
+                    self.pairs
+                        .entry(fold(a).into_owned())
+                        .or_default()
+                        .insert(v, posting);
+                }
+            }
+        }
+    }
+
+    /// Tombstone `pid`; its postings are filtered out of later queries.
+    pub fn remove(&mut self, pid: u32) {
+        if let Some(d) = self.dims.get_mut(pid as usize) {
+            if *d != DEAD {
+                *d = DEAD;
+                self.live -= 1;
+            }
+        }
+    }
+
+    fn live_pids(&self) -> Vec<u32> {
+        self.dims
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d != DEAD)
+            .map(|(pid, _)| pid as u32)
+            .collect()
+    }
+
+    /// Sorted pids of stored profiles `p` with `matches(query, p)`
+    /// (exact for parser-built profiles; callers still verify).
+    pub fn forward_candidates(&self, query: &Profile) -> Vec<u32> {
+        if query.is_empty() {
+            return Vec::new();
+        }
+        let mut per_term: Vec<Vec<u32>> = Vec::new();
+        let mut scratch: Vec<Posting> = Vec::new();
+        for term in query.terms() {
+            // `*` singleton terms accept any term of any profile: a
+            // universal set that cannot narrow the intersection.
+            if matches!(term, Term::Attr(Value::Wildcard)) {
+                continue;
+            }
+            scratch.clear();
+            match term {
+                Term::Attr(v) => {
+                    self.singleton.lookup(v, &mut scratch);
+                    self.pair_names.lookup(v, &mut scratch);
+                }
+                Term::Pair(a, v) => match self.pairs.get(fold(a).as_ref()) {
+                    Some(vi) => vi.lookup(v, &mut scratch),
+                    None => return Vec::new(),
+                },
+            }
+            let mut pids: Vec<u32> = scratch
+                .iter()
+                .map(|p| p.pid)
+                .filter(|&pid| self.is_live(pid))
+                .collect();
+            pids.sort_unstable();
+            pids.dedup();
+            if pids.is_empty() {
+                return Vec::new();
+            }
+            per_term.push(pids);
+        }
+        if per_term.is_empty() {
+            // All terms were wildcards: every live profile matches.
+            return self.live_pids();
+        }
+        // Intersect smallest-first; sets are sorted, so membership is a
+        // binary search and the result stays sorted (= insertion order).
+        per_term.sort_by_key(|s| s.len());
+        let (first, rest) = per_term.split_first().expect("non-empty");
+        first
+            .iter()
+            .copied()
+            .filter(|pid| rest.iter().all(|s| s.binary_search(pid).is_ok()))
+            .collect()
+    }
+
+    /// Sorted pids of stored profiles `q` with `matches(q, incoming)` —
+    /// the reverse direction, where the *stored* side carries the
+    /// patterns (pending subscriptions, interests). Counting-based: a
+    /// stored profile qualifies when every one of its term slots is
+    /// satisfied by some incoming term.
+    pub fn reverse_candidates(&self, incoming: &Profile) -> Vec<u32> {
+        let mut scratch: Vec<Posting> = Vec::new();
+        for term in incoming.terms() {
+            match term {
+                Term::Attr(v) => self.singleton.lookup(v, &mut scratch),
+                Term::Pair(a, v) => {
+                    // A stored singleton pattern matches this pair by its
+                    // attribute name; a stored pair needs the same
+                    // attribute and an accepting value pattern.
+                    self.singleton.lookup_keyword(a, &mut scratch);
+                    if let Some(vi) = self.pairs.get(fold(a).as_ref()) {
+                        vi.lookup(v, &mut scratch);
+                    }
+                }
+            }
+        }
+        scratch.retain(|p| self.is_live(p.pid));
+        scratch.sort_unstable();
+        scratch.dedup();
+        // Count distinct satisfied slots per pid; emit fully-satisfied
+        // profiles (scratch is sorted, so pids arrive grouped).
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < scratch.len() {
+            let pid = scratch[i].pid;
+            let mut satisfied = 0usize;
+            while i < scratch.len() && scratch[i].pid == pid {
+                satisfied += 1;
+                i += 1;
+            }
+            if satisfied == self.dims[pid as usize] as usize {
+                out.push(pid);
+            }
+        }
+        out
+    }
+}
+
+/// Anything that exposes the profile it is stored under.
+pub trait Profiled {
+    fn profile(&self) -> &Profile;
+}
+
+impl Profiled for Profile {
+    fn profile(&self) -> &Profile {
+        self
+    }
+}
+
+/// An index-backed collection: a tombstoned slab of entries plus the
+/// [`ProfileIndex`] over their profiles. Queries return candidates from
+/// the index, re-verified against [`matching::matches`] so behaviour is
+/// bit-identical to the linear scan it replaces.
+pub struct IndexedProfiles<T> {
+    entries: Vec<Option<T>>,
+    index: ProfileIndex,
+    live: usize,
+}
+
+impl<T: Profiled> IndexedProfiles<T> {
+    pub fn new() -> Self {
+        IndexedProfiles { entries: Vec::new(), index: ProfileIndex::new(), live: 0 }
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Insertion-order iteration over live entries.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.entries.iter().flatten()
+    }
+
+    pub fn insert(&mut self, value: T) {
+        self.maybe_compact();
+        let pid = self.entries.len() as u32;
+        self.index.insert(pid, value.profile());
+        self.entries.push(Some(value));
+        self.live += 1;
+    }
+
+    /// Entries whose profile is matched by `query` (insertion order).
+    pub fn query(&self, query: &Profile) -> Vec<&T> {
+        self.index
+            .forward_candidates(query)
+            .into_iter()
+            .filter_map(|pid| self.entries[pid as usize].as_ref())
+            .filter(|t| matching::matches(query, t.profile()))
+            .collect()
+    }
+
+    /// Entries whose (pattern) profile matches the incoming profile —
+    /// i.e. `matches(entry.profile, incoming)` (insertion order).
+    pub fn query_reverse(&self, incoming: &Profile) -> Vec<&T> {
+        self.index
+            .reverse_candidates(incoming)
+            .into_iter()
+            .filter_map(|pid| self.entries[pid as usize].as_ref())
+            .filter(|t| matching::matches(t.profile(), incoming))
+            .collect()
+    }
+
+    /// Remove every entry matched by `query`; returns how many.
+    pub fn remove_matching(&mut self, query: &Profile) -> usize {
+        let mut removed = 0;
+        for pid in self.index.forward_candidates(query) {
+            let hit = match &self.entries[pid as usize] {
+                Some(t) => matching::matches(query, t.profile()),
+                None => false,
+            };
+            if hit {
+                self.entries[pid as usize] = None;
+                self.index.remove(pid);
+                self.live -= 1;
+                removed += 1;
+            }
+        }
+        removed
+    }
+
+    /// Remove entries satisfying `pred`. O(n) full scan — reserved for
+    /// rare paths (exact-profile re-registration), not matching queries.
+    pub fn remove_where(&mut self, pred: impl Fn(&T) -> bool) -> usize {
+        let mut removed = 0;
+        for (pid, slot) in self.entries.iter_mut().enumerate() {
+            if slot.as_ref().map(|t| pred(t)).unwrap_or(false) {
+                *slot = None;
+                self.index.remove(pid as u32);
+                self.live -= 1;
+                removed += 1;
+            }
+        }
+        removed
+    }
+
+    /// Re-pack the slab and rebuild the index once tombstones dominate,
+    /// bounding memory to O(live).
+    fn maybe_compact(&mut self) {
+        if self.entries.len() < 32 || self.entries.len() < self.live * 2 {
+            return;
+        }
+        let old = std::mem::take(&mut self.entries);
+        self.index = ProfileIndex::new();
+        self.live = 0;
+        for value in old.into_iter().flatten() {
+            let pid = self.entries.len() as u32;
+            self.index.insert(pid, value.profile());
+            self.entries.push(Some(value));
+            self.live += 1;
+        }
+    }
+}
+
+impl<T: Profiled> Default for IndexedProfiles<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> std::fmt::Debug for IndexedProfiles<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "IndexedProfiles(live={}, slab={})", self.live, self.entries.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Profile {
+        Profile::parse(s).unwrap()
+    }
+
+    /// Reference implementation: the linear scan the index replaces.
+    fn scan<'a>(stored: &'a [Profile], q: &Profile) -> Vec<&'a Profile> {
+        stored.iter().filter(|s| matching::matches(q, s)).collect()
+    }
+
+    fn indexed(stored: &[Profile]) -> IndexedProfiles<Profile> {
+        let mut ix = IndexedProfiles::new();
+        for s in stored {
+            ix.insert(s.clone());
+        }
+        ix
+    }
+
+    fn assert_equiv(stored: &[Profile], query: &str) {
+        let ix = indexed(stored);
+        let q = p(query);
+        let got: Vec<String> = ix.query(&q).iter().map(|s| s.render()).collect();
+        let want: Vec<String> = scan(stored, &q).iter().map(|s| s.render()).collect();
+        assert_eq!(got, want, "query `{query}` diverged from scan");
+    }
+
+    #[test]
+    fn exact_keyword_lookup() {
+        let stored = vec![p("drone,lidar"), p("drone,thermal"), p("truck,gps")];
+        assert_equiv(&stored, "drone,lidar");
+        assert_equiv(&stored, "drone");
+        assert_equiv(&stored, "camera");
+    }
+
+    #[test]
+    fn prefix_buckets_both_sides() {
+        let stored = vec![p("lidar"), p("lidarx"), p("li*"), p("thermal*"), p("l*")];
+        for q in ["li*", "lidar", "lidarxy", "t*", "*", "x*"] {
+            assert_equiv(&stored, q);
+        }
+    }
+
+    #[test]
+    fn numeric_intervals_both_sides() {
+        let stored = vec![p("temp:15.5"), p("temp:25"), p("temp:10..20"), p("temp:hot")];
+        for q in ["temp:10..20", "temp:21..30", "temp:15.5", "temp:*", "temp:1*"] {
+            assert_equiv(&stored, q);
+        }
+    }
+
+    #[test]
+    fn singleton_query_matches_pair_names() {
+        let stored = vec![p("lat:40.0"), p("long:-74.0"), p("lat")];
+        for q in ["lat", "la*", "long", "*"] {
+            assert_equiv(&stored, q);
+        }
+    }
+
+    #[test]
+    fn pair_query_never_matches_singletons() {
+        let stored = vec![p("lat"), p("lat:40.0")];
+        assert_equiv(&stored, "lat:40.0");
+        assert_equiv(&stored, "lat:4*");
+    }
+
+    #[test]
+    fn multi_term_intersection() {
+        let stored =
+            vec![p("drone,lidar,lat:40.1"), p("drone,thermal,lat:40.9"), p("drone,lidar,lat:50")];
+        for q in ["drone,li*,lat:40..41", "drone,*", "*,*", "drone,lidar,lat:40*"] {
+            assert_equiv(&stored, q);
+        }
+    }
+
+    #[test]
+    fn uppercase_values_fold() {
+        // Parser-built profiles are always lowercase; directly-built
+        // uppercase `Value`s (the enum is pub) must fold at insert and
+        // lookup so the index agrees with the case-insensitive matcher.
+        let mut vi = ValueIndex::default();
+        vi.insert(&Value::Exact("DRONE".into()), Posting { pid: 0, slot: 0 });
+        vi.insert(&Value::Prefix("LI".into()), Posting { pid: 1, slot: 0 });
+        let mut out = Vec::new();
+        vi.lookup(&Value::Exact("drone".into()), &mut out);
+        assert_eq!(out, vec![Posting { pid: 0, slot: 0 }]);
+        out.clear();
+        vi.lookup(&Value::Exact("LIDAR".into()), &mut out);
+        assert_eq!(out, vec![Posting { pid: 1, slot: 0 }], "LIDAR folds, LI* accepts it");
+        out.clear();
+        vi.lookup(&Value::Prefix("DRO".into()), &mut out);
+        assert_eq!(out, vec![Posting { pid: 0, slot: 0 }]);
+    }
+
+    #[test]
+    fn reverse_counting_requires_all_slots() {
+        let subs = vec![p("drone,li*"), p("drone,camera"), p("li*"), p("drone,li*,lat:40*")];
+        let ix = indexed(&subs);
+        let hits: Vec<String> =
+            ix.query_reverse(&p("drone,lidar")).iter().map(|s| s.render()).collect();
+        assert_eq!(hits, vec!["drone,li*", "li*"]);
+        // The 3-term subscription needs lat too.
+        let hits = ix.query_reverse(&p("drone,lidar,lat:40.5"));
+        assert_eq!(hits.len(), 3);
+    }
+
+    #[test]
+    fn reverse_pair_slots() {
+        let subs = vec![p("temp:10..20"), p("temp"), p("te*"), p("pressure:9*")];
+        let hits: Vec<String> =
+            indexed(&subs).query_reverse(&p("temp:15")).iter().map(|s| s.render()).collect();
+        assert_eq!(hits, vec!["temp:10..20", "temp", "te*"]);
+    }
+
+    #[test]
+    fn remove_matching_tombstones() {
+        let mut ix = indexed(&[p("drone,lidar"), p("drone,thermal"), p("truck,gps")]);
+        assert_eq!(ix.remove_matching(&p("drone,*")), 2);
+        assert_eq!(ix.len(), 1);
+        assert!(ix.query(&p("drone")).is_empty());
+        assert_eq!(ix.query(&p("truck")).len(), 1);
+    }
+
+    #[test]
+    fn compaction_preserves_results() {
+        let mut ix: IndexedProfiles<Profile> = IndexedProfiles::new();
+        for i in 0..64 {
+            ix.insert(p(&format!("sensor{i:03},lidar")));
+        }
+        assert_eq!(ix.remove_matching(&p("sensor0*")), 64);
+        for i in 0..8 {
+            // Insertions after mass-removal trigger re-packing.
+            ix.insert(p(&format!("cam{i},thermal")));
+        }
+        assert_eq!(ix.len(), 8);
+        assert_eq!(ix.query(&p("cam*")).len(), 8);
+        assert_eq!(ix.iter().count(), 8);
+    }
+
+    #[test]
+    fn zero_boundary_range() {
+        let stored = vec![p("v:-0"), p("v:0"), p("v:-1")];
+        assert_equiv(&stored, "v:0..5");
+        assert_equiv(&stored, "v:-2..0");
+    }
+
+    #[test]
+    fn empty_query_yields_nothing() {
+        let ix = indexed(&[p("drone")]);
+        assert!(ix.query(&Profile::default()).is_empty());
+        assert!(ix.index.forward_candidates(&Profile::default()).is_empty());
+    }
+}

@@ -15,21 +15,43 @@
 //! `notify_interest`, where the *stored* producer profile is concrete and
 //! the *query* consumer profile carries the patterns, and for `delete`,
 //! which may use patterns against stored patterns).
+//!
+//! The hot path is allocation-free: profiles intern their keywords to
+//! lowercase at parse time (see [`super::profile`]), so comparisons here
+//! are bytewise with an ASCII-case-insensitive fallback for values built
+//! outside the parser. The scan entry point [`matches`] is instrumented
+//! with a process-wide invocation counter ([`match_calls`]) so benches
+//! and tests can prove that index-backed paths (see [`super::index`])
+//! stopped re-running full scans.
 
-use super::profile::{Profile, Term, Value};
+use super::profile::{keyword_eq, keyword_prefix, Profile, Term, Value};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of [`matches`] invocations (ablation/regression
+/// instrumentation; see `fig4_messaging` and the broker cache tests).
+static MATCH_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Total [`matches`] invocations so far in this process. Only meaningful
+/// as a *delta* around a single-threaded section (benches are their own
+/// binaries; concurrent tests each take their own deltas).
+pub fn match_calls() -> u64 {
+    MATCH_CALLS.load(Ordering::Relaxed)
+}
 
 /// Does pattern value `u` accept stored value `v` (both may be patterns;
 /// stored patterns accept a query when their sets could intersect)?
-fn value_accepts(u: &Value, v: &Value) -> bool {
+/// Symmetric: `value_accepts(u, v) == value_accepts(v, u)`.
+pub(crate) fn value_accepts(u: &Value, v: &Value) -> bool {
     match (u, v) {
         (Value::Wildcard, _) | (_, Value::Wildcard) => true,
-        (Value::Exact(a), Value::Exact(b)) => a.eq_ignore_ascii_case(b),
+        (Value::Exact(a), Value::Exact(b)) => keyword_eq(a, b),
         (Value::Prefix(p), Value::Exact(k)) | (Value::Exact(k), Value::Prefix(p)) => {
-            k.len() >= p.len() && k[..p.len()].eq_ignore_ascii_case(p)
+            keyword_prefix(k, p)
         }
         (Value::Prefix(a), Value::Prefix(b)) => {
             let n = a.len().min(b.len());
-            a[..n].eq_ignore_ascii_case(&b[..n])
+            let (ab, bb) = (a.as_bytes(), b.as_bytes());
+            ab[..n] == bb[..n] || ab[..n].eq_ignore_ascii_case(&bb[..n])
         }
         (Value::NumRange(lo, hi), Value::Exact(k)) | (Value::Exact(k), Value::NumRange(lo, hi)) => {
             k.parse::<f64>().map(|x| x >= *lo && x <= *hi).unwrap_or(false)
@@ -40,14 +62,16 @@ fn value_accepts(u: &Value, v: &Value) -> bool {
 }
 
 /// Does query term `q` evaluate to true with respect to stored term `t`?
-fn term_accepts(q: &Term, t: &Term) -> bool {
+pub(crate) fn term_accepts(q: &Term, t: &Term) -> bool {
     match (q, t) {
         (Term::Attr(u), Term::Attr(v)) => value_accepts(u, v),
         // A singleton attribute query also matches a pair with that
         // attribute name (paper: "p contains the attribute a_i").
-        (Term::Attr(u), Term::Pair(attr, _)) => value_accepts(u, &Value::Exact(attr.clone())),
+        // `Value::matches` evaluates the pattern against the concrete
+        // attribute keyword directly — no temporary `Value` allocation.
+        (Term::Attr(u), Term::Pair(attr, _)) => u.matches(attr),
         (Term::Pair(qa, qu), Term::Pair(ta, tv)) => {
-            qa.eq_ignore_ascii_case(ta) && value_accepts(qu, tv)
+            keyword_eq(qa, ta) && value_accepts(qu, tv)
         }
         (Term::Pair(..), Term::Attr(_)) => false,
     }
@@ -56,6 +80,7 @@ fn term_accepts(q: &Term, t: &Term) -> bool {
 /// The paper's associative selection: `query` matches `stored` iff every
 /// query term is satisfied by *some* stored term.
 pub fn matches(query: &Profile, stored: &Profile) -> bool {
+    MATCH_CALLS.fetch_add(1, Ordering::Relaxed);
     if query.is_empty() {
         return false;
     }
@@ -66,6 +91,7 @@ pub fn matches(query: &Profile, stored: &Profile) -> bool {
 /// `i` of the stored profile. This is the stricter form the SFC routing
 /// implies (dimension `i` = term `i`); used by the rendezvous matching
 /// engine for profile classes that fix an order (function profiles).
+/// Not index-accelerated (see ROADMAP "Matching plane").
 pub fn matches_positional(query: &Profile, stored: &Profile) -> bool {
     if query.is_empty() || query.dims() != stored.dims() {
         return false;
@@ -106,7 +132,15 @@ mod tests {
 
     #[test]
     fn exact_match_is_case_insensitive() {
+        // Through the parser: input case folds at parse time.
         assert!(matches(&p("DRONE"), &p("drone,lidar")));
+        // Directly-constructed uppercase values (the parser always
+        // lowercases, so only the pub enum reaches these) take the
+        // case-insensitive fallback in keyword_eq / keyword_prefix.
+        assert!(Value::Exact("DRONE".into()).matches("drone"));
+        assert!(Value::Prefix("LI".into()).matches("lidar"));
+        assert!(value_accepts(&Value::Exact("DRONE".into()), &Value::Exact("drone".into())));
+        assert!(value_accepts(&Value::Prefix("LI".into()), &Value::Exact("lidar".into())));
     }
 
     #[test]
@@ -162,5 +196,22 @@ mod tests {
     fn empty_query_never_matches() {
         let data = p("drone");
         assert!(!matches(&Profile::default(), &data));
+    }
+
+    #[test]
+    fn non_ascii_keywords_do_not_panic() {
+        // Byte-based prefix comparison must not slice mid-codepoint.
+        let data = p("géo,drone");
+        assert!(!matches(&p("g*"), &Profile::default()));
+        assert!(matches(&p("g*"), &data)); // "g" is a byte-prefix of "géo"
+        assert!(!matches(&p("x*"), &data));
+    }
+
+    #[test]
+    fn match_calls_counter_advances() {
+        let before = match_calls();
+        let _ = matches(&p("a"), &p("a"));
+        let _ = matches(&p("a"), &p("b"));
+        assert!(match_calls() >= before + 2);
     }
 }

@@ -8,16 +8,21 @@
 //!   location, topology)* and its wire codec.
 //! - [`matching`]: associative selection — the content-based resolution
 //!   and matching of profiles.
+//! - [`index`]: the inverted profile index (keyword postings, prefix
+//!   buckets, interval lists, wildcard fall-through) that answers
+//!   matching queries without scanning every stored profile.
 //! - [`rendezvous`]: the RP-side matching engine executing reactive
 //!   behaviours (`store`, `notify_interest`, `start_function`, ...).
 //! - [`primitives`]: the client-side `post` / `push` / `pull` primitives.
 
+pub mod index;
 pub mod matching;
 pub mod message;
 pub mod primitives;
 pub mod profile;
 pub mod rendezvous;
 
+pub use index::{IndexedProfiles, ProfileIndex, Profiled};
 pub use message::{Action, ArMessage, Header};
 pub use profile::{Profile, Term, Value};
 pub use rendezvous::{RendezvousPoint, Reaction};

@@ -6,10 +6,33 @@
 //! ranges (`"10..20"`). The paper's Java builder
 //! (`Profile.newBuilder().addSingle("Drone").addSingle("Li*")`) is
 //! mirrored by [`Profile::builder`].
+//!
+//! **Interning invariant:** every constructor that goes through the
+//! parser ([`Value::parse`], [`Term::parse`], [`Profile::parse`],
+//! [`Profile::decode`], the builder) lowercases keywords and attribute
+//! names once, up front. The matcher ([`super::matching`]) and the
+//! inverted index ([`super::index`]) exploit this with bytewise
+//! comparisons and map lookups on their hot paths; hand-built values
+//! with uppercase ASCII still match via a case-insensitive fallback.
 
 use crate::error::{Error, Result};
 use crate::routing::keyspace::{DimRange, KeySpace};
 use crate::util::codec::{ByteReader, ByteWriter};
+
+/// Keyword equality: bytewise fast path (parse-interned lowercase), with
+/// an ASCII-case-insensitive fallback for hand-built values.
+#[inline]
+pub(crate) fn keyword_eq(a: &str, b: &str) -> bool {
+    a == b || a.eq_ignore_ascii_case(b)
+}
+
+/// Does `k` start with `p`, ASCII-case-insensitively? Byte-based so a
+/// pattern boundary inside a multi-byte codepoint cannot panic.
+#[inline]
+pub(crate) fn keyword_prefix(k: &str, p: &str) -> bool {
+    let (kb, pb) = (k.as_bytes(), p.as_bytes());
+    kb.len() >= pb.len() && (kb.starts_with(pb) || kb[..pb.len()].eq_ignore_ascii_case(pb))
+}
 
 /// A term's value pattern.
 #[derive(Debug, Clone, PartialEq)]
@@ -43,14 +66,11 @@ impl Value {
     }
 
     /// Whether a concrete value string satisfies this pattern
-    /// (the paper's "vi satisfies ui").
+    /// (the paper's "vi satisfies ui"). Allocation-free.
     pub fn matches(&self, concrete: &str) -> bool {
         match self {
-            Value::Exact(k) => concrete.eq_ignore_ascii_case(k),
-            Value::Prefix(p) => {
-                concrete.len() >= p.len()
-                    && concrete[..p.len()].eq_ignore_ascii_case(p)
-            }
+            Value::Exact(k) => keyword_eq(k, concrete),
+            Value::Prefix(p) => keyword_prefix(concrete, p),
             Value::Wildcard => true,
             Value::NumRange(lo, hi) => concrete
                 .parse::<f64>()

@@ -5,18 +5,25 @@
 //! and evaluates incoming messages against them. Executing an action
 //! yields [`Reaction`]s that the coordinator turns into storage writes,
 //! network notifications or topology launches.
+//!
+//! All four collections are [`IndexedProfiles`], so `query`,
+//! `notify_interest`/`notify_data` wake-ups and `delete` resolve through
+//! the inverted index (see [`super::index`]) instead of scanning every
+//! stored profile. Data payloads are shared `Arc<[u8]>` slices: waking N
+//! consumers clones a pointer, not the bytes.
 
-use super::matching;
+use super::index::{IndexedProfiles, Profiled};
 use super::message::{Action, ArMessage};
 use super::profile::Profile;
 use crate::error::{Error, Result};
 use crate::metrics::Registry;
+use std::sync::Arc;
 
 /// A stored data record (resource profile + payload).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StoredData {
     pub profile: Profile,
-    pub data: Vec<u8>,
+    pub data: Arc<[u8]>,
     pub sender: String,
 }
 
@@ -35,6 +42,24 @@ pub struct Subscription {
     pub sender: String,
 }
 
+impl Profiled for StoredData {
+    fn profile(&self) -> &Profile {
+        &self.profile
+    }
+}
+
+impl Profiled for StoredFunction {
+    fn profile(&self) -> &Profile {
+        &self.profile
+    }
+}
+
+impl Profiled for Subscription {
+    fn profile(&self) -> &Profile {
+        &self.profile
+    }
+}
+
 /// What the RP decided must happen as a result of a message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Reaction {
@@ -44,7 +69,7 @@ pub enum Reaction {
     /// start streaming (paper: `notify_interest`).
     ProducerNotified { producer: String, consumer_profile: Profile },
     /// Deliver matching data to an interested consumer (`notify_data`).
-    ConsumerNotified { consumer: String, data_profile: Profile, data: Vec<u8> },
+    ConsumerNotified { consumer: String, data_profile: Profile, data: Arc<[u8]> },
     /// Launch a stored topology on demand (`start_function`).
     StartTopology { function_profile: Profile, topology: String },
     /// Stop a running topology (`stop_function`).
@@ -60,12 +85,12 @@ pub enum Reaction {
 /// The per-RP matching engine state.
 #[derive(Debug, Default)]
 pub struct RendezvousPoint {
-    data: Vec<StoredData>,
-    functions: Vec<StoredFunction>,
+    data: IndexedProfiles<StoredData>,
+    functions: IndexedProfiles<StoredFunction>,
     /// Producers waiting for interest (posted `notify_interest`).
-    waiting_producers: Vec<Subscription>,
+    waiting_producers: IndexedProfiles<Subscription>,
     /// Consumers waiting for data (posted `notify_data`).
-    waiting_consumers: Vec<Subscription>,
+    waiting_consumers: IndexedProfiles<Subscription>,
     metrics: Registry,
 }
 
@@ -88,14 +113,14 @@ impl RendezvousPoint {
         self.functions.len()
     }
 
-    /// Stored data records matching a query profile.
+    /// Stored data records matching a query profile (index-backed).
     pub fn query(&self, query: &Profile) -> Vec<&StoredData> {
-        self.data.iter().filter(|d| matching::matches(query, &d.profile)).collect()
+        self.data.query(query)
     }
 
-    /// Stored functions matching a query profile.
+    /// Stored functions matching a query profile (index-backed).
     pub fn query_functions(&self, query: &Profile) -> Vec<&StoredFunction> {
-        self.functions.iter().filter(|f| matching::matches(query, &f.profile)).collect()
+        self.functions.query(query)
     }
 
     /// Process one AR message: classify the profile by the action field
@@ -118,21 +143,20 @@ impl RendezvousPoint {
     fn on_store(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
         let record = StoredData {
             profile: msg.header.profile.clone(),
-            data: msg.data.clone(),
+            data: Arc::from(msg.data.as_slice()),
             sender: msg.header.sender.clone(),
         };
         let mut reactions = vec![Reaction::Stored { profile: record.profile.clone() }];
-        // Wake consumers whose interest matches the new data.
-        for sub in &self.waiting_consumers {
-            if matching::matches(&sub.profile, &record.profile) {
-                reactions.push(Reaction::ConsumerNotified {
-                    consumer: sub.sender.clone(),
-                    data_profile: record.profile.clone(),
-                    data: record.data.clone(),
-                });
-            }
+        // Wake consumers whose interest matches the new data: the stored
+        // side carries the patterns, so this is a reverse index query.
+        for sub in self.waiting_consumers.query_reverse(&record.profile) {
+            reactions.push(Reaction::ConsumerNotified {
+                consumer: sub.sender.clone(),
+                data_profile: record.profile.clone(),
+                data: record.data.clone(),
+            });
         }
-        self.data.push(record);
+        self.data.insert(record);
         self.metrics.counter("rp.stored").inc();
         Ok(reactions)
     }
@@ -166,8 +190,8 @@ impl RendezvousPoint {
         // Replace an existing function with an identical profile
         // (re-registration), otherwise append.
         let profile = msg.header.profile.clone();
-        self.functions.retain(|f| f.profile != profile);
-        self.functions.push(StoredFunction {
+        self.functions.remove_where(|f| f.profile == profile);
+        self.functions.insert(StoredFunction {
             profile: profile.clone(),
             topology,
             sender: msg.header.sender.clone(),
@@ -182,8 +206,8 @@ impl RendezvousPoint {
         // executed."
         let matches: Vec<Reaction> = self
             .functions
-            .iter()
-            .filter(|f| matching::matches(&msg.header.profile, &f.profile))
+            .query(&msg.header.profile)
+            .into_iter()
             .map(|f| Reaction::StartTopology {
                 function_profile: f.profile.clone(),
                 topology: f.topology.clone(),
@@ -202,8 +226,8 @@ impl RendezvousPoint {
     fn on_stop_function(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
         let matches: Vec<Reaction> = self
             .functions
-            .iter()
-            .filter(|f| matching::matches(&msg.header.profile, &f.profile))
+            .query(&msg.header.profile)
+            .into_iter()
             .map(|f| Reaction::StopTopology { function_profile: f.profile.clone() })
             .collect();
         if matches.is_empty() {
@@ -217,21 +241,20 @@ impl RendezvousPoint {
 
     fn on_notify_interest(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
         // Producer registers; if a matching consumer already waits,
-        // notify the producer immediately.
+        // notify the producer immediately. The waiting consumers carry
+        // the patterns → reverse query with the producer's profile.
         let sub = Subscription {
             profile: msg.header.profile.clone(),
             sender: msg.header.sender.clone(),
         };
         let mut reactions = Vec::new();
-        for consumer in &self.waiting_consumers {
-            if matching::matches(&consumer.profile, &sub.profile) {
-                reactions.push(Reaction::ProducerNotified {
-                    producer: sub.sender.clone(),
-                    consumer_profile: consumer.profile.clone(),
-                });
-            }
+        for consumer in self.waiting_consumers.query_reverse(&sub.profile) {
+            reactions.push(Reaction::ProducerNotified {
+                producer: sub.sender.clone(),
+                consumer_profile: consumer.profile.clone(),
+            });
         }
-        self.waiting_producers.push(sub);
+        self.waiting_producers.insert(sub);
         Ok(reactions)
     }
 
@@ -241,26 +264,23 @@ impl RendezvousPoint {
             sender: msg.header.sender.clone(),
         };
         let mut reactions = Vec::new();
-        // Wake producers that were waiting for interest.
-        for producer in &self.waiting_producers {
-            if matching::matches(&sub.profile, &producer.profile) {
-                reactions.push(Reaction::ProducerNotified {
-                    producer: producer.sender.clone(),
-                    consumer_profile: sub.profile.clone(),
-                });
-            }
+        // Wake producers that were waiting for interest: here the
+        // incoming consumer profile is the pattern side → forward query.
+        for producer in self.waiting_producers.query(&sub.profile) {
+            reactions.push(Reaction::ProducerNotified {
+                producer: producer.sender.clone(),
+                consumer_profile: sub.profile.clone(),
+            });
         }
-        // Deliver already-stored matching data.
-        for d in &self.data {
-            if matching::matches(&sub.profile, &d.profile) {
-                reactions.push(Reaction::ConsumerNotified {
-                    consumer: sub.sender.clone(),
-                    data_profile: d.profile.clone(),
-                    data: d.data.clone(),
-                });
-            }
+        // Deliver already-stored matching data (shared, not copied).
+        for d in self.data.query(&sub.profile) {
+            reactions.push(Reaction::ConsumerNotified {
+                consumer: sub.sender.clone(),
+                data_profile: d.profile.clone(),
+                data: d.data.clone(),
+            });
         }
-        self.waiting_consumers.push(sub);
+        self.waiting_consumers.insert(sub);
         Ok(reactions)
     }
 
@@ -268,19 +288,11 @@ impl RendezvousPoint {
         // "The delete action deletes all matching profiles from the
         // system."
         let q = &msg.header.profile;
-        let before = self.data.len()
-            + self.functions.len()
-            + self.waiting_producers.len()
-            + self.waiting_consumers.len();
-        self.data.retain(|d| !matching::matches(q, &d.profile));
-        self.functions.retain(|f| !matching::matches(q, &f.profile));
-        self.waiting_producers.retain(|s| !matching::matches(q, &s.profile));
-        self.waiting_consumers.retain(|s| !matching::matches(q, &s.profile));
-        let after = self.data.len()
-            + self.functions.len()
-            + self.waiting_producers.len()
-            + self.waiting_consumers.len();
-        Ok(vec![Reaction::Deleted { count: before - after }])
+        let count = self.data.remove_matching(q)
+            + self.functions.remove_matching(q)
+            + self.waiting_producers.remove_matching(q)
+            + self.waiting_consumers.remove_matching(q);
+        Ok(vec![Reaction::Deleted { count }])
     }
 }
 
@@ -325,13 +337,13 @@ mod tests {
         let r = rp.receive(&msg("drone,li*", Action::NotifyData)).unwrap();
         assert!(r.iter().any(|x| matches!(
             x,
-            Reaction::ConsumerNotified { data, .. } if data == b"old"
+            Reaction::ConsumerNotified { data, .. } if &data[..] == b"old"
         )));
         // New matching data → consumer notified again.
         let r = rp.receive(&msg_with_data("drone,lidar", Action::Store, b"new")).unwrap();
         assert!(r.iter().any(|x| matches!(
             x,
-            Reaction::ConsumerNotified { data, .. } if data == b"new"
+            Reaction::ConsumerNotified { data, .. } if &data[..] == b"new"
         )));
     }
 
@@ -434,5 +446,25 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn shared_payloads_are_not_copied_per_consumer() {
+        // Two waiting consumers + one store → both reactions share the
+        // stored record's allocation (3 strong refs: record + 2 deliveries).
+        let mut rp = RendezvousPoint::new();
+        rp.receive(&msg("drone,li*", Action::NotifyData)).unwrap();
+        rp.receive(&msg("drone,*", Action::NotifyData)).unwrap();
+        let r = rp.receive(&msg_with_data("drone,lidar", Action::Store, b"payload")).unwrap();
+        let payloads: Vec<&Arc<[u8]>> = r
+            .iter()
+            .filter_map(|x| match x {
+                Reaction::ConsumerNotified { data, .. } => Some(data),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(payloads.len(), 2);
+        assert_eq!(Arc::strong_count(payloads[0]), 3);
+        assert!(Arc::ptr_eq(payloads[0], payloads[1]));
     }
 }

@@ -326,7 +326,7 @@ impl RendezvousNetwork for Cluster {
         let consumer = msg.header.sender.clone();
         node.broker_mut().subscribe(&consumer, msg.header.profile.clone());
         let msgs = node.broker_mut().fetch(&consumer, 1024)?;
-        Ok(msgs.into_iter().map(|(_, m)| m).collect())
+        Ok(msgs.into_iter().map(|(_, m)| m.to_vec()).collect())
     }
 }
 

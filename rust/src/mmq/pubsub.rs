@@ -6,14 +6,32 @@
 //! or Kafka (persistence, durability, and delivery guarantees)" — every
 //! message is framed+CRC'd in an mmap segment before acknowledgement, and
 //! consumers resume from their last acknowledged offset.
+//!
+//! **Match cache.** Subscription↔topic matching is resolved *once*, at
+//! the edges where the relation can change — [`Broker::subscribe`] runs
+//! one forward index query over the topic profiles, and opening a new
+//! topic runs one reverse index query over the subscription profiles to
+//! extend the affected caches (see [`crate::ar::index`]). `fetch` and
+//! [`Broker::lag`] walk the cached topic list and never re-run
+//! [`matching::matches`]; `broker.match_calls` counts the broker's
+//! matcher invocations so tests and `fig4_messaging` can prove it.
+//!
+//! **Fairness.** `fetch` drains the cached topics round-robin — the
+//! start topic rotates per call — so a small `max` no longer starves
+//! every topic after the lexicographically first one.
+//!
+//! Payloads are delivered as shared `Arc<[u8]>` slices (one copy out of
+//! the mmap, pointer clones beyond that).
 
 use super::queue::{MemoryMappedQueue, QueueOptions};
+use crate::ar::index::ProfileIndex;
 use crate::ar::matching;
 use crate::ar::profile::Profile;
 use crate::error::{Error, Result};
 use crate::metrics::Registry;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// A consumer's registered interest.
 #[derive(Debug, Clone)]
@@ -22,25 +40,56 @@ pub struct SubscriptionState {
     pub profile: Profile,
     /// Per-topic resume cursor.
     cursors: BTreeMap<String, u64>,
+    /// Cached keys of matching topics (sorted; incrementally maintained).
+    matched: Vec<String>,
+    /// Round-robin rotation: index into `matched` where the next fetch
+    /// starts draining.
+    rr: usize,
+    /// This subscription's pid in the broker's subscription index.
+    pid: u32,
 }
 
-/// The broker: one mmap queue per topic, plus subscription state.
+impl SubscriptionState {
+    /// Cached matching topic keys (sorted). Test/stats surface.
+    pub fn matched_topics(&self) -> &[String] {
+        &self.matched
+    }
+}
+
+/// The broker: one mmap queue per topic, plus subscription state and the
+/// incremental subscription↔topic match cache.
 pub struct Broker {
     base: QueueOptions,
     topics: BTreeMap<String, (Profile, MemoryMappedQueue)>,
+    /// Topic pid → topic key, aligned with `topic_index` (topics are
+    /// never removed, so no tombstones).
+    topic_keys: Vec<String>,
+    topic_index: ProfileIndex,
     subscriptions: BTreeMap<String, SubscriptionState>,
+    /// Subscription pid → consumer name (`None` = retired pid).
+    sub_pids: Vec<Option<String>>,
+    sub_index: ProfileIndex,
     metrics: Registry,
 }
 
 impl Broker {
     /// Create a broker rooted at `base.dir` (one subdirectory per topic).
     pub fn new(base: QueueOptions) -> Self {
-        Broker { base, topics: BTreeMap::new(), subscriptions: BTreeMap::new(), metrics: Registry::new() }
+        Self::with_metrics(base, Registry::new())
     }
 
     /// Broker with shared metrics registry.
     pub fn with_metrics(base: QueueOptions, metrics: Registry) -> Self {
-        Broker { base, topics: BTreeMap::new(), subscriptions: BTreeMap::new(), metrics }
+        Broker {
+            base,
+            topics: BTreeMap::new(),
+            topic_keys: Vec::new(),
+            topic_index: ProfileIndex::new(),
+            subscriptions: BTreeMap::new(),
+            sub_pids: Vec::new(),
+            sub_index: ProfileIndex::new(),
+            metrics,
+        }
     }
 
     fn topic_key(profile: &Profile) -> Result<String> {
@@ -62,6 +111,13 @@ impl Broker {
         self.base.dir.join(safe)
     }
 
+    /// Matcher invocation, counted so the fetch path can be proven
+    /// rematch-free (`broker.match_calls` + global [`matching::match_calls`]).
+    fn matches_counted(&self, query: &Profile, stored: &Profile) -> bool {
+        self.metrics.counter("broker.match_calls").inc();
+        matching::matches(query, stored)
+    }
+
     fn open_topic(&mut self, profile: &Profile) -> Result<&mut (Profile, MemoryMappedQueue)> {
         let key = Self::topic_key(profile)?;
         if !self.topics.contains_key(&key) {
@@ -73,6 +129,23 @@ impl Broker {
             };
             let queue = MemoryMappedQueue::open(opts)?;
             self.topics.insert(key.clone(), (profile.clone(), queue));
+            // Index the new topic and incrementally extend the match
+            // cache of every subscription the new topic matches: one
+            // reverse query, not a scan over all subscriptions.
+            let pid = self.topic_keys.len() as u32;
+            self.topic_keys.push(key.clone());
+            self.topic_index.insert(pid, profile);
+            let counter = self.metrics.counter("broker.match_calls");
+            for spid in self.sub_index.reverse_candidates(profile) {
+                let Some(name) = &self.sub_pids[spid as usize] else { continue };
+                let sub = self.subscriptions.get_mut(name).expect("pid map in sync");
+                counter.inc();
+                if matching::matches(&sub.profile, profile) {
+                    if let Err(pos) = sub.matched.binary_search(&key) {
+                        sub.matched.insert(pos, key.clone());
+                    }
+                }
+            }
         }
         Ok(self.topics.get_mut(&key).unwrap())
     }
@@ -88,58 +161,140 @@ impl Broker {
     }
 
     /// Register (or replace) a subscription; the profile may be complex —
-    /// it is matched associatively against topic profiles.
+    /// it is matched associatively against topic profiles (one index
+    /// query here; `fetch`/`lag` then use the cached result).
+    ///
+    /// Replacing an existing subscription preserves the cursors of every
+    /// topic the new profile still matches — re-subscribing with the same
+    /// or a widened profile does not rewind delivery. Cursors of topics
+    /// the new profile no longer matches are dropped (re-matching such a
+    /// topic later redelivers from the start of retention).
     pub fn subscribe(&mut self, consumer: &str, profile: Profile) {
+        let mut matched: Vec<String> = self
+            .topic_index
+            .forward_candidates(&profile)
+            .into_iter()
+            .map(|pid| &self.topic_keys[pid as usize])
+            .filter(|key| {
+                let (topic_profile, _) = &self.topics[*key];
+                self.matches_counted(&profile, topic_profile)
+            })
+            .cloned()
+            .collect();
+        matched.sort();
+
+        let mut cursors = BTreeMap::new();
+        if let Some(old) = self.subscriptions.get(consumer) {
+            cursors = old
+                .cursors
+                .iter()
+                .filter(|(key, _)| matched.binary_search(key).is_ok())
+                .map(|(key, &cur)| (key.clone(), cur))
+                .collect();
+            // Retire the old subscription's index entry.
+            self.sub_index.remove(old.pid);
+            self.sub_pids[old.pid as usize] = None;
+        }
+
+        let pid = self.sub_pids.len() as u32;
+        self.sub_pids.push(Some(consumer.to_string()));
+        self.sub_index.insert(pid, &profile);
         self.subscriptions.insert(
             consumer.to_string(),
-            SubscriptionState { consumer: consumer.to_string(), profile, cursors: BTreeMap::new() },
+            SubscriptionState {
+                consumer: consumer.to_string(),
+                profile,
+                cursors,
+                matched,
+                rr: 0,
+                pid,
+            },
         );
+        self.maybe_compact_sub_index();
     }
 
     /// Remove a subscription.
     pub fn unsubscribe(&mut self, consumer: &str) {
-        self.subscriptions.remove(consumer);
+        if let Some(sub) = self.subscriptions.remove(consumer) {
+            self.sub_index.remove(sub.pid);
+            self.sub_pids[sub.pid as usize] = None;
+        }
+    }
+
+    /// Re-pack the subscription index once retired pids dominate
+    /// (subscribe replaces retire one pid each), bounding it to O(live).
+    fn maybe_compact_sub_index(&mut self) {
+        if self.sub_pids.len() < 32 || self.sub_pids.len() < self.subscriptions.len() * 2 {
+            return;
+        }
+        self.sub_pids.clear();
+        self.sub_index = ProfileIndex::new();
+        for (name, sub) in self.subscriptions.iter_mut() {
+            let pid = self.sub_pids.len() as u32;
+            self.sub_pids.push(Some(name.clone()));
+            self.sub_index.insert(pid, &sub.profile);
+            sub.pid = pid;
+        }
     }
 
     /// Fetch up to `max` pending messages for a consumer across all
     /// matching topics, advancing its cursors (at-least-once delivery:
     /// cursors only advance past what this call returns).
-    pub fn fetch(&mut self, consumer: &str, max: usize) -> Result<Vec<(String, Vec<u8>)>> {
+    ///
+    /// Topics come from the subscription's match cache — no profile
+    /// matching runs here — and are drained round-robin: the start topic
+    /// rotates every call, so a small `max` cannot permanently starve
+    /// the topics after the first.
+    pub fn fetch(&mut self, consumer: &str, max: usize) -> Result<Vec<(String, Arc<[u8]>)>> {
         let sub = self
             .subscriptions
             .get_mut(consumer)
             .ok_or_else(|| Error::NotFound(format!("no subscription for `{consumer}`")))?;
+        // Disjoint field borrows: topic keys stay borrowed while the
+        // cursors advance, so idle topics cost no allocation.
+        let SubscriptionState { matched, cursors, rr, .. } = &mut *sub;
         let mut out = Vec::new();
-        for (key, (topic_profile, queue)) in self.topics.iter() {
+        let topics = matched.len();
+        if topics == 0 {
+            return Ok(out);
+        }
+        let start = *rr % topics;
+        *rr = (*rr + 1) % topics;
+        for i in 0..topics {
             if out.len() >= max {
                 break;
             }
-            if !matching::matches(&sub.profile, topic_profile) {
-                continue;
-            }
-            let cursor = sub.cursors.get(key).copied().unwrap_or(0);
-            let (next, msgs) = queue.poll(cursor, max - out.len());
+            let key = &matched[(start + i) % topics];
+            let (_, queue) = &self.topics[key];
+            let cursor = cursors.get(key).copied().unwrap_or(0);
+            let (next, msgs) = queue.poll_shared(cursor, max - out.len());
             for m in msgs {
                 out.push((key.clone(), m));
             }
-            sub.cursors.insert(key.clone(), next);
+            if let Some(c) = cursors.get_mut(key) {
+                *c = next;
+            } else if next > 0 {
+                // A zero cursor is the `unwrap_or(0)` default: no entry
+                // needed until the topic actually advances.
+                cursors.insert(key.clone(), next);
+            }
         }
         self.metrics.counter("broker.delivered").add(out.len() as u64);
         Ok(out)
     }
 
-    /// Current lag (pending message count) for a consumer.
+    /// Current lag (pending message count) for a consumer. Walks the
+    /// cached matching topics; no profile matching runs here.
     pub fn lag(&self, consumer: &str) -> Result<u64> {
         let sub = self
             .subscriptions
             .get(consumer)
             .ok_or_else(|| Error::NotFound(format!("no subscription for `{consumer}`")))?;
         let mut lag = 0u64;
-        for (key, (topic_profile, queue)) in self.topics.iter() {
-            if matching::matches(&sub.profile, topic_profile) {
-                let cursor = sub.cursors.get(key).copied().unwrap_or(0).max(queue.tail_seq());
-                lag += queue.head_seq() - cursor;
-            }
+        for key in &sub.matched {
+            let (_, queue) = &self.topics[key];
+            let cursor = sub.cursors.get(key).copied().unwrap_or(0).max(queue.tail_seq());
+            lag += queue.head_seq() - cursor;
         }
         Ok(lag)
     }
@@ -147,6 +302,16 @@ impl Broker {
     /// Topic count (tests/stats).
     pub fn topic_count(&self) -> usize {
         self.topics.len()
+    }
+
+    /// Subscription state for a consumer (tests/stats).
+    pub fn subscription(&self, consumer: &str) -> Option<&SubscriptionState> {
+        self.subscriptions.get(consumer)
+    }
+
+    /// How many times this broker invoked the profile matcher.
+    pub fn match_calls(&self) -> u64 {
+        self.metrics.counter("broker.match_calls").get()
     }
 
     /// Flush all topic queues.
@@ -193,7 +358,7 @@ mod tests {
         b.publish(&p("drone,lidar"), b"img-2").unwrap();
         let msgs = b.fetch("app", 10).unwrap();
         assert_eq!(msgs.len(), 2);
-        assert_eq!(msgs[0].1, b"img-1");
+        assert_eq!(&msgs[0].1[..], b"img-1");
         // Cursor advanced: nothing pending.
         assert!(b.fetch("app", 10).unwrap().is_empty());
     }
@@ -254,7 +419,7 @@ mod tests {
         b.publish(&p("s,t"), b"3").unwrap();
         let second = b.fetch("app", 10).unwrap();
         assert_eq!(second.len(), 2);
-        assert_eq!(second[0].1, b"2");
+        assert_eq!(&second[0].1[..], b"2");
     }
 
     #[test]
@@ -266,5 +431,108 @@ mod tests {
         assert_eq!(b.metrics().counter("broker.published").get(), 1);
         assert_eq!(b.metrics().counter("broker.published_bytes").get(), 3);
         assert_eq!(b.metrics().counter("broker.delivered").get(), 1);
+    }
+
+    #[test]
+    fn fetch_and_lag_never_rematch() {
+        let mut b = broker("nomatch");
+        for i in 0..8 {
+            b.publish(&p(&format!("topic{i},x")), b"m").unwrap();
+        }
+        b.subscribe("app", p("topic*,x"));
+        let after_subscribe = b.match_calls();
+        for _ in 0..50 {
+            b.fetch("app", 3).unwrap();
+            b.lag("app").unwrap();
+        }
+        assert_eq!(
+            b.match_calls(),
+            after_subscribe,
+            "fetch/lag must use the match cache, not re-run matching"
+        );
+    }
+
+    #[test]
+    fn new_topic_extends_existing_subscription_caches() {
+        let mut b = broker("extend");
+        b.subscribe("app", p("drone,*"));
+        assert!(b.subscription("app").unwrap().matched_topics().is_empty());
+        b.publish(&p("drone,lidar"), b"1").unwrap();
+        assert_eq!(b.subscription("app").unwrap().matched_topics(), ["drone,lidar"]);
+        b.publish(&p("truck,gps"), b"2").unwrap();
+        assert_eq!(b.subscription("app").unwrap().matched_topics().len(), 1);
+        let msgs = b.fetch("app", 10).unwrap();
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(&msgs[0].1[..], b"1");
+    }
+
+    #[test]
+    fn fetch_round_robins_start_topic() {
+        // Two matching topics, max=1 per fetch: the old fixed-order drain
+        // starved the lexicographically later topic forever.
+        let mut b = broker("rr");
+        b.publish(&p("a,x"), b"from-a-1").unwrap();
+        b.publish(&p("a,x"), b"from-a-2").unwrap();
+        b.publish(&p("b,x"), b"from-b-1").unwrap();
+        b.publish(&p("b,x"), b"from-b-2").unwrap();
+        b.subscribe("app", p("*,x"));
+        let first = b.fetch("app", 1).unwrap();
+        let second = b.fetch("app", 1).unwrap();
+        assert_eq!(first.len(), 1);
+        assert_eq!(second.len(), 1);
+        assert_ne!(first[0].0, second[0].0, "start topic must rotate between fetches");
+        // Four more single-message fetches drain everything.
+        let mut total = first.len() + second.len();
+        for _ in 0..4 {
+            total += b.fetch("app", 1).unwrap().len();
+        }
+        assert_eq!(total, 4);
+        assert!(b.fetch("app", 1).unwrap().is_empty());
+    }
+
+    #[test]
+    fn resubscribe_same_profile_preserves_cursors() {
+        let mut b = broker("resub-keep");
+        b.subscribe("app", p("s,t"));
+        b.publish(&p("s,t"), b"1").unwrap();
+        assert_eq!(b.fetch("app", 10).unwrap().len(), 1);
+        // Replacing with a still-matching profile keeps the cursor: no
+        // redelivery of message "1".
+        b.subscribe("app", p("s,*"));
+        assert!(b.fetch("app", 10).unwrap().is_empty());
+        b.publish(&p("s,t"), b"2").unwrap();
+        let msgs = b.fetch("app", 10).unwrap();
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(&msgs[0].1[..], b"2");
+    }
+
+    #[test]
+    fn resubscribe_away_and_back_redelivers() {
+        // Documented replace semantics: a cursor is dropped when the new
+        // profile stops matching its topic, so matching again later
+        // redelivers from the start of retention (at-least-once).
+        let mut b = broker("resub-drop");
+        b.subscribe("app", p("s,t"));
+        b.publish(&p("s,t"), b"1").unwrap();
+        assert_eq!(b.fetch("app", 10).unwrap().len(), 1);
+        b.subscribe("app", p("other"));
+        assert!(b.fetch("app", 10).unwrap().is_empty());
+        b.subscribe("app", p("s,t"));
+        let msgs = b.fetch("app", 10).unwrap();
+        assert_eq!(msgs.len(), 1, "cursor was dropped → message 1 redelivered");
+        assert_eq!(&msgs[0].1[..], b"1");
+    }
+
+    #[test]
+    fn subscription_index_compacts_under_churn() {
+        let mut b = broker("churn");
+        b.publish(&p("s,t"), b"1").unwrap();
+        for _ in 0..100 {
+            b.subscribe("app", p("s,*"));
+        }
+        b.subscribe("other", p("s,t"));
+        assert!(b.sub_pids.len() <= 33, "retired pids must be compacted: {}", b.sub_pids.len());
+        assert_eq!(b.fetch("app", 10).unwrap().len(), 1);
+        assert_eq!(b.fetch("other", 10).unwrap().len(), 1);
     }
 }

@@ -203,6 +203,22 @@ impl MemoryMappedQueue {
         (start + out.len() as u64, out)
     }
 
+    /// [`Self::poll`], but messages are copied out of the mmap once into
+    /// shared `Arc<[u8]>` slices — fan-out to multiple consumers or
+    /// reactions then clones pointers, not payload bytes.
+    pub fn poll_shared(&self, from: u64, max: usize) -> (u64, Vec<std::sync::Arc<[u8]>>) {
+        let start = from.max(self.tail_seq());
+        let end = (start + max as u64).min(self.next_seq);
+        let mut out = Vec::with_capacity((end - start) as usize);
+        for seq in start..end {
+            match self.get(seq) {
+                Ok(bytes) => out.push(std::sync::Arc::from(bytes)),
+                Err(_) => break,
+            }
+        }
+        (start + out.len() as u64, out)
+    }
+
     /// Flush all segments (used at shutdown/checkpoints).
     pub fn flush(&self, sync: bool) -> Result<()> {
         for s in &self.segments {

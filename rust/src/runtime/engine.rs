@@ -5,17 +5,83 @@
 //! many times from the hot path. Interchange is HLO *text* because the
 //! crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos (see
 //! python/compile/aot.py and /opt/xla-example/README.md).
+//!
+//! The `xla` dependency is optional (`--features pjrt`); without it an
+//! API-compatible stub keeps the crate building in environments that
+//! lack the PJRT toolchain — construction fails with a descriptive
+//! error, and the PJRT integration tests skip on missing artifacts.
 
 use crate::error::{Error, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Loaded-and-compiled artifact registry.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
+/// Stub engine compiled when the `pjrt` feature is off: same surface,
+/// every constructor reports the missing feature.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtEngine {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Runtime(
+            "built without the `pjrt` feature — rebuild with `--features pjrt` \
+             to load HLO artifacts"
+                .into(),
+        ))
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".into()
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load_artifact(&mut self, _name: &str, path: &Path) -> Result<()> {
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {path:?} missing — run `make artifacts` first"
+            )));
+        }
+        Err(Error::Runtime("pjrt feature disabled".into()))
+    }
+
+    /// Load every `*.hlo.txt` in a directory (artifact name = file stem).
+    pub fn load_dir(&mut self, _dir: &Path) -> Result<Vec<String>> {
+        Err(Error::Runtime("pjrt feature disabled".into()))
+    }
+
+    /// Names of loaded artifacts.
+    pub fn artifacts(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Whether an artifact is loaded.
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    /// Execute an artifact on f32 tensor inputs.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        _inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        Err(Error::NotFound(format!("artifact `{name}` not loaded (pjrt disabled)")))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -135,7 +201,7 @@ impl std::fmt::Debug for PjrtEngine {
 // NOTE: integration tests live in rust/tests/runtime_pjrt.rs — they need
 // the artifacts built by `make artifacts`, which unit tests must not
 // depend on.
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -1,0 +1,193 @@
+//! Property proof that the inverted profile index (`ar::index`) is
+//! result-equivalent to the linear `matching::matches` scan it replaced
+//! — forward and reverse directions, for every combination of the four
+//! value kinds (exact / prefix / wildcard / numeric range) on the query
+//! side crossed with each value kind on the stored side, including
+//! stored-side patterns (`delete` and `notify_*` rely on those).
+//!
+//! Each kind×kind combination runs ≥1000 random profile pairs; a shared
+//! mixed-shape fuzz adds singleton-vs-pair crossovers, duplicate terms
+//! and multi-term intersections.
+
+use rpulsar::ar::index::IndexedProfiles;
+use rpulsar::ar::matching;
+use rpulsar::ar::profile::Profile;
+use rpulsar::testkit::prop::{forall_seeded, NoShrink};
+use rpulsar::util::prng::Prng;
+
+/// Small keyword alphabet with shared prefixes so random pairs collide
+/// often (an index bug hides when nothing ever matches).
+const WORDS: &[&str] =
+    &["a", "ab", "abc", "abd", "b", "ba", "li", "lidar", "lidarx", "thermal", "zone"];
+const ATTRS: &[&str] = &["k", "lat", "zone"];
+
+/// One random value in the paper's string syntax, of a forced kind.
+/// Kinds: 0 = exact keyword, 1 = prefix pattern, 2 = wildcard,
+/// 3 = numeric range; numeric-looking exacts are emitted for kind 0 half
+/// the time so ranges have something to hit.
+fn value_of_kind(rng: &mut Prng, kind: usize) -> String {
+    match kind {
+        0 => {
+            if rng.gen_bool(0.5) {
+                format!("{}", rng.gen_range(0, 30) as i64 - 10)
+            } else {
+                rng.choose(WORDS).to_string()
+            }
+        }
+        1 => format!("{}*", rng.choose(WORDS)),
+        2 => "*".to_string(),
+        _ => {
+            let lo = rng.gen_range(0, 25) as i64 - 12;
+            let hi = lo + rng.gen_range(0, 8) as i64;
+            format!("{lo}..{hi}")
+        }
+    }
+}
+
+/// A random term (singleton or pair) whose value has the forced kind.
+fn term_of_kind(rng: &mut Prng, kind: usize) -> String {
+    let v = value_of_kind(rng, kind);
+    if rng.gen_bool(0.5) {
+        format!("{}:{}", rng.choose(ATTRS), v)
+    } else {
+        v
+    }
+}
+
+fn profile_of_kind(rng: &mut Prng, kind: usize, max_terms: usize) -> Profile {
+    let n = rng.gen_range(1, max_terms + 1);
+    let terms: Vec<String> = (0..n).map(|_| term_of_kind(rng, kind)).collect();
+    Profile::parse(&terms.join(",")).unwrap()
+}
+
+/// Fully mixed profile: every term draws its kind independently.
+fn mixed_profile(rng: &mut Prng, max_terms: usize) -> Profile {
+    let n = rng.gen_range(1, max_terms + 1);
+    let terms: Vec<String> =
+        (0..n).map(|_| term_of_kind(rng, rng.gen_range(0, 4))).collect();
+    Profile::parse(&terms.join(",")).unwrap()
+}
+
+/// The reference semantics: linear scan with `matching::matches`.
+fn scan_matches(stored: &[Profile], q: &Profile) -> Vec<String> {
+    stored.iter().filter(|s| matching::matches(q, s)).map(|s| s.render()).collect()
+}
+
+fn scan_matches_reverse(stored: &[Profile], incoming: &Profile) -> Vec<String> {
+    stored.iter().filter(|s| matching::matches(s, incoming)).map(|s| s.render()).collect()
+}
+
+fn indexed(stored: &[Profile]) -> IndexedProfiles<Profile> {
+    let mut ix = IndexedProfiles::new();
+    for p in stored {
+        ix.insert(p.clone());
+    }
+    ix
+}
+
+/// Forward + reverse equivalence for one generated (stored set, query).
+fn equivalent(stored: &[Profile], query: &Profile) -> bool {
+    let ix = indexed(stored);
+    let fwd: Vec<String> = ix.query(query).iter().map(|s| s.render()).collect();
+    if fwd != scan_matches(stored, query) {
+        return false;
+    }
+    // Swap roles: the stored set acts as pattern subscriptions matched
+    // against the "query" as incoming data (reverse direction).
+    let rev: Vec<String> = ix.query_reverse(query).iter().map(|s| s.render()).collect();
+    rev == scan_matches_reverse(stored, query)
+}
+
+/// 1000+ random pairs for one (query kind, stored kind) combination.
+fn check_kind_pair(query_kind: usize, stored_kind: usize) {
+    let seed = 0xE01u64 ^ ((query_kind as u64) << 8) ^ (stored_kind as u64);
+    forall_seeded(
+        seed,
+        1000,
+        |rng: &mut Prng| {
+            let n = rng.gen_range(1, 9);
+            let stored: Vec<Profile> =
+                (0..n).map(|_| profile_of_kind(rng, stored_kind, 3)).collect();
+            let query = profile_of_kind(rng, query_kind, 3);
+            NoShrink((stored, query))
+        },
+        |NoShrink((stored, query)): &NoShrink<(Vec<Profile>, Profile)>| {
+            equivalent(stored, query)
+        },
+    );
+}
+
+macro_rules! kind_pair_test {
+    ($name:ident, $qk:expr, $sk:expr) => {
+        #[test]
+        fn $name() {
+            check_kind_pair($qk, $sk);
+        }
+    };
+}
+
+kind_pair_test!(prop_equiv_exact_vs_exact, 0, 0);
+kind_pair_test!(prop_equiv_exact_vs_prefix, 0, 1);
+kind_pair_test!(prop_equiv_exact_vs_wildcard, 0, 2);
+kind_pair_test!(prop_equiv_exact_vs_range, 0, 3);
+kind_pair_test!(prop_equiv_prefix_vs_exact, 1, 0);
+kind_pair_test!(prop_equiv_prefix_vs_prefix, 1, 1);
+kind_pair_test!(prop_equiv_prefix_vs_wildcard, 1, 2);
+kind_pair_test!(prop_equiv_prefix_vs_range, 1, 3);
+kind_pair_test!(prop_equiv_wildcard_vs_exact, 2, 0);
+kind_pair_test!(prop_equiv_wildcard_vs_prefix, 2, 1);
+kind_pair_test!(prop_equiv_wildcard_vs_wildcard, 2, 2);
+kind_pair_test!(prop_equiv_wildcard_vs_range, 2, 3);
+kind_pair_test!(prop_equiv_range_vs_exact, 3, 0);
+kind_pair_test!(prop_equiv_range_vs_prefix, 3, 1);
+kind_pair_test!(prop_equiv_range_vs_wildcard, 3, 2);
+kind_pair_test!(prop_equiv_range_vs_range, 3, 3);
+
+#[test]
+fn prop_equiv_mixed_shapes() {
+    // Fully mixed kinds on both sides, larger stored sets.
+    forall_seeded(
+        0x141FED,
+        1500,
+        |rng: &mut Prng| {
+            let n = rng.gen_range(1, 16);
+            let stored: Vec<Profile> = (0..n).map(|_| mixed_profile(rng, 4)).collect();
+            let query = mixed_profile(rng, 4);
+            NoShrink((stored, query))
+        },
+        |NoShrink((stored, query)): &NoShrink<(Vec<Profile>, Profile)>| {
+            equivalent(stored, query)
+        },
+    );
+}
+
+#[test]
+fn prop_equiv_under_deletion() {
+    // Equivalence must survive tombstones: delete a random pattern, then
+    // compare queries against the surviving linear set.
+    forall_seeded(
+        0xDE1E7E,
+        800,
+        |rng: &mut Prng| {
+            let n = rng.gen_range(2, 12);
+            let stored: Vec<Profile> = (0..n).map(|_| mixed_profile(rng, 3)).collect();
+            let delete_q = mixed_profile(rng, 2);
+            let query = mixed_profile(rng, 3);
+            NoShrink((stored, delete_q, query))
+        },
+        |NoShrink((stored, delete_q, query)): &NoShrink<(Vec<Profile>, Profile, Profile)>| {
+            let mut ix = indexed(stored);
+            let removed = ix.remove_matching(delete_q);
+            let survivors: Vec<Profile> = stored
+                .iter()
+                .filter(|s| !matching::matches(delete_q, s))
+                .cloned()
+                .collect();
+            if removed != stored.len() - survivors.len() {
+                return false;
+            }
+            let got: Vec<String> = ix.query(query).iter().map(|s| s.render()).collect();
+            got == scan_matches(&survivors, query)
+        },
+    );
+}

@@ -2,7 +2,10 @@
 //! `make artifacts`, execute them, and verify the numbers against the
 //! same invariants the Python tests check for the kernels — the L1↔L3
 //! consistency proof. Tests skip (with a notice) when artifacts are
-//! missing so `cargo test` works before `make artifacts`.
+//! missing so `cargo test` works before `make artifacts`; the whole
+//! file is gated on the `pjrt` feature (without it the stub engine
+//! cannot execute artifacts even when they exist).
+#![cfg(feature = "pjrt")]
 
 use rpulsar::runtime::{PjrtEngine, PreprocessRuntime, STATS_DIM, TILE_DIM};
 use std::path::{Path, PathBuf};
