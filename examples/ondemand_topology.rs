@@ -30,21 +30,28 @@ fn main() -> rpulsar::Result<()> {
                 t.get("READING").unwrap_or(0.0) > 30.0
             }))
         });
+        // Keyed window: the parallel spike-filter stage interleaves
+        // sensor streams nondeterministically, so the window groups
+        // per SENSOR (per-key order is what the keyed shuffle keeps).
         node.topologies_mut().register_stage("window-mean", || {
-            Box::new(OperatorKind::window("window-mean", "READING", 5))
+            Box::new(OperatorKind::window_by("window-mean", "READING", 5, "SENSOR"))
         });
     }
 
-    // Store the on-demand topology under a function profile.
+    // Store the on-demand topology under a function profile. The spec
+    // uses the parallel executor's annotations: two spike-filter
+    // replicas fed by a SENSOR-keyed shuffle (per-sensor order is
+    // preserved into the window stage), window-mean serial.
+    let spec = "spike-filter*2@SENSOR->window-mean";
     let func = Profile::parse("hotspot_aggregator")?;
     let store_fn = ArMessage::builder()
         .set_header(func.clone())
         .set_sender("operator")
         .set_action(Action::StoreFunction)
-        .set_topology("spike-filter->window-mean")
+        .set_topology(spec)
         .build()?;
     cluster.post_from(origin, &store_fn)?;
-    println!("stored on-demand topology `spike-filter->window-mean`");
+    println!("stored on-demand topology `{spec}`");
 
     // The data-driven rule: trigger when a reading exceeds 35.
     let trigger = ArMessage::builder()
@@ -70,7 +77,9 @@ fn main() -> rpulsar::Result<()> {
     let mut fed = 0u32;
     for seq in 0..100u64 {
         let reading = 20.0 + rng.gen_f64() * 20.0; // 20..40
-        let tuple = Tuple::new(seq, vec![]).with("READING", reading);
+        let tuple = Tuple::new(seq, vec![])
+            .with("READING", reading)
+            .with("SENSOR", (seq % 3) as f64); // partition key for the keyed shuffle
         match rules.evaluate(&tuple.eval_context()) {
             RuleOutcome::Fired { consequence: Consequence::TriggerTopology(msg), .. } => {
                 if running_on.is_none() {

@@ -53,6 +53,11 @@ pub enum Error {
     #[error("not found: {0}")]
     NotFound(String),
 
+    /// A topology/function that was expected to be running is not
+    /// (never started, or already stopped).
+    #[error("not running: {0}")]
+    NotRunning(String),
+
     /// Operation timed out.
     #[error("timeout: {0}")]
     Timeout(String),
@@ -77,6 +82,7 @@ impl Error {
             Error::Net(_) => "net",
             Error::Config(_) => "config",
             Error::NotFound(_) => "not_found",
+            Error::NotRunning(_) => "not_running",
             Error::Timeout(_) => "timeout",
         }
     }
@@ -90,6 +96,7 @@ mod tests {
     fn kind_tags_are_stable() {
         assert_eq!(Error::Parse("x".into()).kind(), "parse");
         assert_eq!(Error::NotFound("y".into()).kind(), "not_found");
+        assert_eq!(Error::NotRunning("z".into()).kind(), "not_running");
         let io = Error::from(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
         assert_eq!(io.kind(), "io");
     }

@@ -10,6 +10,10 @@
 //! for SQLite-like or Nitrite-like stores.
 
 use super::lidar::LidarTrace;
+use crate::stream::deploy::TopologyManager;
+use crate::stream::engine::StreamEngine;
+use crate::stream::operator::OperatorKind;
+use crate::stream::tuple::Tuple;
 use crate::baselines::edgent_like::EdgentLikePipeline;
 use crate::baselines::kafka_like::KafkaLikeBroker;
 use crate::baselines::nitrite_like::NitriteLikeStore;
@@ -266,6 +270,123 @@ impl DisasterRecoveryPipeline {
     }
 }
 
+// ---- Stream-plane analytics (Fig. 13 as a parallel keyed topology) ----
+
+/// The Fig. 13 analytics chain in the annotated topology spec:
+/// CPU-bound tile scoring fanned across `parallelism` replicas (keyed
+/// by image so per-image tile order survives the shuffle), a serial
+/// rule-decision stage, and a per-image keyed window of tile scores.
+pub fn analytics_spec(parallelism: usize) -> String {
+    if parallelism <= 1 {
+        "score->decide->stats@IMG".to_string()
+    } else {
+        format!("score*{parallelism}@IMG->decide->stats@IMG")
+    }
+}
+
+/// Register the analytics stages on a [`TopologyManager`]. `work`
+/// scales the per-tile scoring cost (1 ≈ one pass over the payload).
+pub fn register_analytics_stages(manager: &mut TopologyManager, work: u32) {
+    manager.register_stage("score", move || {
+        Box::new(OperatorKind::map("score", move |mut t| {
+            let (result, quality) = edge_score(&t.payload, work);
+            t.set("RESULT", result);
+            t.set("QUALITY", quality);
+            t
+        }))
+    });
+    manager.register_stage("decide", || Box::new(OperatorKind::rules("decide", paper_rules())));
+    manager
+        .register_stage("stats", || Box::new(OperatorKind::window_by("stats", "RESULT", 8, "IMG")));
+}
+
+/// Deterministic CPU-bound edge-density proxy over a tile payload:
+/// `work` FNV+gradient passes. Pure function of `(payload, work)`, so
+/// serial and parallel topologies score identically — the equivalence
+/// hook for the fig15 ablation.
+pub fn edge_score(payload: &[u8], work: u32) -> (f64, f64) {
+    let mut acc: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut grad: u64 = 0;
+    for _ in 0..work.max(1) {
+        let mut prev = 0u8;
+        for &b in payload {
+            acc = (acc ^ b as u64).wrapping_mul(0x100_0000_01b3);
+            grad = grad.wrapping_add(b.abs_diff(prev) as u64);
+            prev = b;
+        }
+        acc = acc.rotate_left(7);
+    }
+    let result = (acc % 41) as f64; // paper rules: ≥10 forwards to core
+    let quality = (grad % 101) as f64 / 100.0; // <0.01 drops the tile
+    (result, quality)
+}
+
+/// Tile tuples for a LiDAR trace: one tuple per synthetic tile slice,
+/// keyed by image id (`IMG`).
+pub fn trace_tuples(trace: &LidarTrace, tile_slice_bytes: usize) -> Vec<Tuple> {
+    let slice = tile_slice_bytes.max(16);
+    let mut tuples = Vec::new();
+    let mut seq = 0u64;
+    for img in &trace.images {
+        let bytes = bytes_of(&img.tile);
+        for chunk in bytes.chunks(slice).take(tiles_of(img.nominal_bytes) as usize) {
+            tuples.push(Tuple::new(seq, chunk.to_vec()).with("IMG", img.id as f64));
+            seq += 1;
+        }
+    }
+    tuples
+}
+
+/// Report of one stream-plane analytics run.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub spec: String,
+    pub tuples: usize,
+    pub outputs: Vec<Tuple>,
+    pub elapsed: Duration,
+}
+
+impl StreamReport {
+    /// Input tuples per wall-clock second.
+    pub fn tuples_per_sec(&self) -> f64 {
+        self.tuples as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Drive `tuples` through the analytics topology `spec`: a producer
+/// thread feeds batches while `stop` drains concurrently on this
+/// thread (`finish` keeps consuming outputs until the producer's
+/// sender clone drops — the backpressure contract — so no polling
+/// thread competes with the replicas for cores).
+pub fn run_stream_analytics(spec: &str, tuples: Vec<Tuple>, work: u32) -> Result<StreamReport> {
+    let mut manager = TopologyManager::new(StreamEngine::new());
+    register_analytics_stages(&mut manager, work);
+    manager.start("analytics", spec)?;
+    let count = tuples.len();
+    let sender = manager.sender("analytics")?;
+    let started = std::time::Instant::now();
+    let producer = std::thread::spawn(move || -> Result<()> {
+        let mut it = tuples.into_iter();
+        loop {
+            let batch: Vec<Tuple> = it.by_ref().take(64).collect();
+            if batch.is_empty() {
+                return Ok(());
+            }
+            sender.send_batch(batch)?;
+        }
+    });
+    let stopped = manager.stop("analytics");
+    let produced = producer.join().expect("producer thread panicked");
+    let outputs = stopped?;
+    produced?;
+    Ok(StreamReport {
+        spec: spec.to_string(),
+        tuples: count,
+        outputs,
+        elapsed: started.elapsed(),
+    })
+}
+
 /// How many 256×256 tiles an image of `nominal` bytes decomposes into
 /// (the pipeline processes every tile; compute scales with image size,
 /// as in the paper's 1.8 KB – 33.8 MB dataset).
@@ -377,6 +498,49 @@ mod tests {
         assert_eq!(native.total(), Duration::from_millis(50));
         let empty = base_report("y", 0);
         assert_eq!(empty.per_image(), Duration::ZERO);
+    }
+
+    #[test]
+    fn edge_score_is_deterministic_and_scales_with_work() {
+        let payload = vec![7u8, 200, 3, 99, 250, 1];
+        assert_eq!(edge_score(&payload, 3), edge_score(&payload, 3));
+        let (r, q) = edge_score(&payload, 2);
+        assert!((0.0..41.0).contains(&r));
+        assert!((0.0..=1.0).contains(&q));
+        // Different payloads should (virtually always) score apart.
+        assert_ne!(edge_score(&payload, 2), edge_score(&[1, 2, 3], 2));
+    }
+
+    #[test]
+    fn analytics_spec_shapes() {
+        assert_eq!(analytics_spec(1), "score->decide->stats@IMG");
+        assert_eq!(analytics_spec(4), "score*4@IMG->decide->stats@IMG");
+        // Both forms parse as valid topologies.
+        for p in [1, 2, 4] {
+            rpulsar_parse(&analytics_spec(p));
+        }
+    }
+
+    fn rpulsar_parse(spec: &str) {
+        crate::stream::topology::Topology::parse("t", spec).unwrap();
+    }
+
+    #[test]
+    fn stream_analytics_serial_parallel_equivalent() {
+        let trace = LidarTrace::generate(7, 6, 0.2);
+        let tuples = trace_tuples(&trace, 512);
+        assert!(!tuples.is_empty());
+        let serial = run_stream_analytics(&analytics_spec(1), tuples.clone(), 1).unwrap();
+        let parallel = run_stream_analytics(&analytics_spec(3), tuples, 1).unwrap();
+        assert_eq!(serial.tuples, parallel.tuples);
+        let canon = |r: &StreamReport| {
+            let mut v: Vec<String> = r.outputs.iter().map(|t| format!("{:?}", t.fields)).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(canon(&serial), canon(&parallel), "spec: {}", parallel.spec);
+        assert!(!serial.outputs.is_empty(), "keyed stats windows must emit aggregates");
+        assert!(serial.tuples_per_sec() > 0.0);
     }
 
     #[test]

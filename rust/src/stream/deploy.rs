@@ -3,17 +3,22 @@
 //!
 //! The [`TopologyManager`] holds a registry of *stage factories* (name →
 //! operator constructor) and a table of running instances keyed by the
-//! function-profile rendering. `start` parses the stored topology string,
-//! instantiates each stage and launches it on the [`StreamEngine`];
-//! `stop` shuts the instance down and reports its drained output count.
+//! function-profile rendering. `start` parses the stored topology string
+//! (including `stage*P@KEY` parallelism/key annotations), instantiates
+//! one operator per replica via the stage's factory and launches the
+//! chain on the [`StreamEngine`]; `stop` shuts the instance down and
+//! returns its drained trailing output. Operations against a topology
+//! that was never started (or already stopped) fail with the structured
+//! [`Error::NotRunning`].
 
-use super::engine::{EngineHandle, StreamEngine};
+use super::engine::{EngineHandle, StageRuntime, StreamEngine};
 use super::operator::Operator;
 use super::topology::Topology;
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 
-/// Constructs a fresh operator instance for a stage name.
+/// Constructs a fresh operator instance for a stage name; called once
+/// per replica, so parallel stages never share operator state.
 pub type StageFactory = Box<dyn Fn() -> Box<dyn Operator> + Send>;
 
 /// Deployment manager for on-demand topologies.
@@ -49,24 +54,47 @@ impl TopologyManager {
             return Err(Error::Stream(format!("topology `{key}` already running")));
         }
         let topo = Topology::parse(key, spec)?;
-        let mut operators: Vec<Box<dyn Operator>> = Vec::with_capacity(topo.len());
+        let mut stages: Vec<StageRuntime> = Vec::with_capacity(topo.len());
         for stage in &topo.stages {
-            let factory = self.factories.get(stage).ok_or_else(|| {
-                Error::Stream(format!("unknown stage `{stage}` in topology `{spec}`"))
+            let factory = self.factories.get(&stage.name).ok_or_else(|| {
+                Error::Stream(format!("unknown stage `{}` in topology `{spec}`", stage.name))
             })?;
-            operators.push(factory());
+            let replicas: Vec<_> = (0..stage.parallelism).map(|_| factory()).collect();
+            if stage.parallelism > 1 && stage.key.is_none() && replicas[0].stateful() {
+                return Err(Error::Stream(format!(
+                    "stage `{}` in topology `{spec}` is stateful and parallel; \
+                     add a partition key (`{}*{}@FIELD`) or its output becomes \
+                     an arbitrary function of the shuffle",
+                    stage.name, stage.name, stage.parallelism
+                )));
+            }
+            stages.push(StageRuntime::new(stage.clone(), replicas)?);
         }
-        let handle = self.engine.launch(key, operators)?;
+        let handle = self.engine.launch_stages(key, stages)?;
         self.running.insert(key.to_string(), handle);
         Ok(())
     }
 
-    /// Feed a tuple to a running topology.
-    pub fn send(&self, key: &str, tuple: super::tuple::Tuple) -> Result<()> {
+    fn handle(&self, key: &str) -> Result<&EngineHandle> {
         self.running
             .get(key)
-            .ok_or_else(|| Error::NotFound(format!("topology `{key}` not running")))?
-            .send(tuple)
+            .ok_or_else(|| Error::NotRunning(format!("topology `{key}`")))
+    }
+
+    /// Feed a tuple to a running topology.
+    pub fn send(&self, key: &str, tuple: super::tuple::Tuple) -> Result<()> {
+        self.handle(key)?.send(tuple)
+    }
+
+    /// Feed a whole batch to a running topology in one channel hop.
+    pub fn send_batch(&self, key: &str, batch: Vec<super::tuple::Tuple>) -> Result<()> {
+        self.handle(key)?.send_batch(batch)
+    }
+
+    /// A cloneable sender for feeding a running topology from producer
+    /// threads (the topology drains only after all senders drop).
+    pub fn sender(&self, key: &str) -> Result<super::engine::StreamSender> {
+        self.handle(key)?.sender()
     }
 
     /// Try to receive one output tuple from a running topology.
@@ -74,12 +102,13 @@ impl TopologyManager {
         self.running.get(key)?.recv_timeout(timeout)
     }
 
-    /// Stop a topology; returns its drained trailing output.
+    /// Stop a topology; returns its drained trailing output, or
+    /// [`Error::NotRunning`] when no such instance is running.
     pub fn stop(&mut self, key: &str) -> Result<Vec<super::tuple::Tuple>> {
         let handle = self
             .running
             .remove(key)
-            .ok_or_else(|| Error::NotFound(format!("topology `{key}` not running")))?;
+            .ok_or_else(|| Error::NotRunning(format!("topology `{key}`")))?;
         handle.finish()
     }
 
@@ -88,13 +117,26 @@ impl TopologyManager {
         self.running.keys().cloned().collect()
     }
 
-    /// Stop everything (node shutdown).
+    /// Whether a topology instance is currently running under `key`.
+    pub fn is_running(&self, key: &str) -> bool {
+        self.running.contains_key(key)
+    }
+
+    /// Stop everything (node shutdown). Every topology is stopped and
+    /// joined even when an earlier one drained with a fault; the first
+    /// fault is returned afterwards.
     pub fn stop_all(&mut self) -> Result<()> {
-        let keys = self.running();
-        for k in keys {
-            self.stop(&k)?;
+        let mut first_err = None;
+        for k in self.running() {
+            if let Err(e) = self.stop(&k) {
+                log::error!("stopping topology `{k}`: {e}");
+                first_err.get_or_insert(e);
+            }
         }
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -131,6 +173,7 @@ mod tests {
                 t
             }))
         });
+        m.register_stage("kwin", || Box::new(OperatorKind::window_by("kwin", "X", 4, "K")));
         m
     }
 
@@ -139,11 +182,30 @@ mod tests {
         let mut m = manager();
         m.start("f", "inc->double").unwrap();
         assert_eq!(m.running(), vec!["f"]);
+        assert!(m.is_running("f"));
         m.send("f", Tuple::new(0, vec![]).with("X", 5.0)).unwrap();
         let out = m.stop("f").unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].get("X"), Some(12.0)); // (5+1)*2
         assert!(m.running().is_empty());
+        assert!(!m.is_running("f"));
+    }
+
+    #[test]
+    fn parallel_keyed_spec_runs() {
+        let mut m = manager();
+        m.start("p", "inc*4->kwin*2@K").unwrap();
+        let mut batch = Vec::new();
+        for i in 0..64u64 {
+            batch.push(Tuple::new(i, vec![]).with("X", i as f64).with("K", (i % 4) as f64));
+        }
+        m.send_batch("p", batch).unwrap();
+        let out = m.stop("p").unwrap();
+        // 4 keys × 16 values each → 4 full windows of 4 per key.
+        assert_eq!(out.len(), 16);
+        let total: f64 = out.iter().map(|t| t.get("COUNT").unwrap()).sum();
+        assert_eq!(total, 64.0);
+        assert!(out.iter().all(|t| t.get("K").is_some()), "aggregates must carry the key");
     }
 
     #[test]
@@ -151,6 +213,26 @@ mod tests {
         let mut m = manager();
         assert!(m.start("f", "inc->mystery").is_err());
         assert!(m.running().is_empty());
+    }
+
+    #[test]
+    fn bad_annotation_fails_cleanly() {
+        let mut m = manager();
+        assert!(m.start("f", "inc*0").is_err());
+        assert!(m.running().is_empty());
+    }
+
+    #[test]
+    fn unkeyed_parallel_stateful_stage_rejected() {
+        let mut m = manager();
+        let err = m.start("f", "inc->kwin*4").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("kwin"), "must name the stage: {msg}");
+        assert!(msg.contains("partition key"), "must say what is missing: {msg}");
+        assert!(m.running().is_empty());
+        // Keyed, it launches; stateless stages stay fine unkeyed.
+        m.start("f", "inc*4->kwin*2@K").unwrap();
+        m.stop("f").unwrap();
     }
 
     #[test]
@@ -162,10 +244,31 @@ mod tests {
     }
 
     #[test]
-    fn stop_unknown_fails() {
+    fn never_started_name_is_structured_not_running() {
+        let m = manager();
+        let err = m.send("ghost", Tuple::new(0, vec![])).unwrap_err();
+        assert!(matches!(err, Error::NotRunning(_)), "send: {err}");
+        assert_eq!(err.kind(), "not_running");
+        assert!(format!("{err}").contains("ghost"), "error must name the topology: {err}");
+    }
+
+    #[test]
+    fn stop_lifecycle_start_stop_double_stop() {
         let mut m = manager();
-        assert!(m.stop("ghost").is_err());
-        assert!(m.send("ghost", Tuple::new(0, vec![])).is_err());
+        // Stop before any start.
+        let err = m.stop("f").unwrap_err();
+        assert!(matches!(err, Error::NotRunning(_)), "{err}");
+        // Normal lifecycle.
+        m.start("f", "inc").unwrap();
+        m.send("f", Tuple::new(0, vec![]).with("X", 1.0)).unwrap();
+        let out = m.stop("f").unwrap();
+        assert_eq!(out.len(), 1);
+        // Double stop: structured, names the key, and is restartable.
+        let err = m.stop("f").unwrap_err();
+        assert!(matches!(err, Error::NotRunning(_)), "{err}");
+        assert!(format!("{err}").contains("`f`"), "{err}");
+        m.start("f", "inc").unwrap();
+        m.stop("f").unwrap();
     }
 
     #[test]
@@ -185,8 +288,23 @@ mod tests {
     fn stop_all_cleans_up() {
         let mut m = manager();
         m.start("a", "inc").unwrap();
-        m.start("b", "double").unwrap();
+        m.start("b", "double*2").unwrap();
         m.stop_all().unwrap();
         assert!(m.running().is_empty());
+    }
+
+    #[test]
+    fn stop_all_stops_everything_despite_faults() {
+        let mut m = manager();
+        m.register_stage("bad", || {
+            Box::new(OperatorKind::map("bad", |_t| panic!("injected stop_all fault")))
+        });
+        // BTreeMap order: the faulted topology is stopped first.
+        m.start("a-bad", "bad").unwrap();
+        m.start("z-ok", "inc").unwrap();
+        m.send("a-bad", Tuple::new(0, vec![])).unwrap();
+        let err = m.stop_all().unwrap_err();
+        assert!(format!("{err}").contains("injected stop_all fault"), "{err}");
+        assert!(m.running().is_empty(), "a fault must not strand later topologies");
     }
 }

@@ -1,26 +1,215 @@
-//! Thread-per-operator stream execution with bounded channels.
+//! Parallel keyed stream execution with batched bounded channels.
 //!
-//! Each stage runs on its own thread connected by bounded SPSC-ish
-//! channels; a full downstream queue blocks the upstream `send` — that's
-//! the backpressure mechanism (tokio is unavailable offline; the paper's
-//! engine is JVM-threaded too). The engine reports per-stage throughput
-//! via the shared metrics registry.
+//! Topologies run as a chain of *stages*; each stage has a parallelism
+//! degree (`"map*4"` in the topology spec) and an optional partition key
+//! (`"agg*4@SENSOR"`). A serial stage (`parallelism == 1`) is one worker
+//! thread owning one operator instance; a parallel stage is a router
+//! thread that hash-partitions tuples across `P` replica workers, each
+//! owning its own operator instance. Replica outputs fan back into the
+//! next stage's single inbound channel.
+//!
+//! **Batching.** Every channel hop moves `Vec<Tuple>` batches, not
+//! single tuples, so channel synchronization is amortized across up to
+//! [`DEFAULT_BATCH_CAPACITY`] tuples. A *flush-on-idle* rule bounds
+//! latency: whenever a worker or router finds its inbound queue
+//! momentarily empty it flushes its partial output batch downstream
+//! before blocking, so a lone tuple still traverses the whole chain
+//! immediately.
+//!
+//! **Backpressure.** All channels are bounded (depth counted in
+//! batches); a full downstream queue blocks the upstream send, and the
+//! block propagates transitively to [`EngineHandle::send`]. Outputs must
+//! be drained concurrently (`recv`) for streams longer than the total
+//! buffering — that *is* the backpressure contract (tokio is unavailable
+//! offline; the paper's engine is JVM-threaded too).
+//!
+//! **Ordering.** Serial topologies preserve global tuple order
+//! end-to-end, exactly like the old thread-per-operator engine. Keyed
+//! parallel stages preserve *per-key* order: equal key values hash to
+//! the same replica, and each replica is FIFO. Unkeyed parallel stages
+//! distribute round-robin and preserve only the multiset of outputs. On
+//! `finish`, replicas drain in replica order (a turn-based gate), so
+//! end-of-stream flushes (window remainders) are deterministic.
+//!
+//! **Failure.** A panicking or erroring operator replica records its
+//! fault in a shared slot and tears the topology down; `send` and
+//! `finish` surface it as [`Error::Stream`] instead of hanging. See
+//! `docs/stream-executor.md` for the full contract.
 
 use super::operator::Operator;
+use super::topology::StageSpec;
 use super::tuple::Tuple;
 use crate::error::{Error, Result};
-use crate::metrics::Registry;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use crate::metrics::{Counter, Gauge, Registry};
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-/// Default bounded-channel depth between stages.
+/// Default bounded-channel depth between stages, counted in batches.
 pub const DEFAULT_CHANNEL_DEPTH: usize = 256;
+
+/// Default max tuples per channel batch.
+pub const DEFAULT_BATCH_CAPACITY: usize = 64;
+
+type Batch = Vec<Tuple>;
+
+/// A channel endpoint paired with its queue-depth gauge (batches queued
+/// and in flight toward the receiving stage).
+struct Port {
+    tx: SyncSender<Batch>,
+    depth: Arc<Gauge>,
+}
+
+impl Clone for Port {
+    fn clone(&self) -> Self {
+        Port { tx: self.tx.clone(), depth: self.depth.clone() }
+    }
+}
+
+impl Port {
+    /// Send a non-empty batch; returns false when the receiver is gone.
+    fn send(&self, batch: Batch) -> bool {
+        self.depth.add(1);
+        if self.tx.send(batch).is_ok() {
+            true
+        } else {
+            self.depth.add(-1);
+            false
+        }
+    }
+
+    /// Flush `buf` downstream (no-op when empty), leaving it ready for
+    /// reuse at the same capacity.
+    fn flush(&self, buf: &mut Batch, capacity: usize) -> bool {
+        if buf.is_empty() {
+            return true;
+        }
+        self.send(std::mem::replace(buf, Vec::with_capacity(capacity)))
+    }
+}
+
+/// First-fault-wins record of a stage failure.
+#[derive(Clone, Default)]
+struct ErrorSlot(Arc<Mutex<Option<String>>>);
+
+impl ErrorSlot {
+    fn set(&self, msg: String) {
+        let mut slot = self.0.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(msg);
+        }
+    }
+
+    fn get(&self) -> Option<String> {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// Turn-based gate: replica `i` may flush its end-of-stream output only
+/// after replicas `0..i` have — the ordered-drain rule.
+struct FinishGate {
+    turn: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl FinishGate {
+    fn new() -> Self {
+        FinishGate { turn: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn wait_for(&self, replica: usize) {
+        let mut turn = self.turn.lock().unwrap();
+        while *turn < replica {
+            turn = self.cv.wait(turn).unwrap();
+        }
+    }
+
+    fn advance(&self) {
+        *self.turn.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+}
+
+/// One stage ready to launch: its spec plus one operator instance per
+/// replica (`replicas.len() == spec.parallelism`).
+pub struct StageRuntime {
+    pub spec: StageSpec,
+    pub replicas: Vec<Box<dyn Operator>>,
+}
+
+impl StageRuntime {
+    /// A classic serial stage wrapping a single operator instance.
+    pub fn serial(op: Box<dyn Operator>) -> Self {
+        let spec = StageSpec::serial(op.name());
+        StageRuntime { spec, replicas: vec![op] }
+    }
+
+    /// A stage built from a spec and per-replica instances.
+    pub fn new(spec: StageSpec, replicas: Vec<Box<dyn Operator>>) -> Result<Self> {
+        if replicas.is_empty() || replicas.len() != spec.parallelism {
+            return Err(Error::Stream(format!(
+                "stage `{}` wants parallelism {} but got {} operator instance(s)",
+                spec.name,
+                spec.parallelism,
+                replicas.len()
+            )));
+        }
+        Ok(StageRuntime { spec, replicas })
+    }
+}
+
+/// A cloneable input handle: feed tuples from any number of producer
+/// threads. The topology drains only after *every* sender (including
+/// the [`EngineHandle`]'s own) is dropped or `finish`ed.
+pub struct StreamSender {
+    port: Port,
+    error: ErrorSlot,
+    name: String,
+}
+
+impl Clone for StreamSender {
+    fn clone(&self) -> Self {
+        StreamSender { port: self.port.clone(), error: self.error.clone(), name: self.name.clone() }
+    }
+}
+
+impl StreamSender {
+    /// Feed one tuple (blocks under backpressure).
+    pub fn send(&self, tuple: Tuple) -> Result<()> {
+        self.send_batch(vec![tuple])
+    }
+
+    /// Feed a pre-built batch — amortizes the channel hop for hot
+    /// producers. Empty batches are ignored.
+    pub fn send_batch(&self, batch: Vec<Tuple>) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        if self.port.send(batch) {
+            Ok(())
+        } else {
+            Err(self.stopped_error())
+        }
+    }
+
+    fn stopped_error(&self) -> Error {
+        match self.error.get() {
+            Some(cause) => Error::Stream(format!("topology `{}` failed: {cause}", self.name)),
+            None => Error::Stream(format!("topology `{}` stopped", self.name)),
+        }
+    }
+}
 
 /// A running topology instance.
 pub struct EngineHandle {
-    input: Option<SyncSender<Tuple>>,
-    output: Receiver<Tuple>,
+    input: Option<StreamSender>,
+    output: Receiver<Batch>,
+    output_depth: Arc<Gauge>,
+    pending: Mutex<VecDeque<Tuple>>,
     threads: Vec<JoinHandle<()>>,
+    error: ErrorSlot,
     name: String,
 }
 
@@ -29,46 +218,98 @@ impl EngineHandle {
     ///
     /// NOTE: every channel in the chain is bounded, including the output.
     /// For streams longer than the total buffering
-    /// (`channel_depth × stages`), outputs must be drained concurrently
-    /// (`recv`) or the producer will block — that *is* the backpressure
-    /// contract.
+    /// (`channel_depth × batch_capacity × stages`), outputs must be
+    /// drained concurrently (`recv`) or the producer will block — that
+    /// *is* the backpressure contract.
     pub fn send(&self, tuple: Tuple) -> Result<()> {
         self.input
             .as_ref()
             .ok_or_else(|| Error::Stream("engine already closed".into()))?
             .send(tuple)
-            .map_err(|_| Error::Stream(format!("topology `{}` stopped", self.name)))
+    }
+
+    /// Feed a whole batch in one channel hop.
+    pub fn send_batch(&self, batch: Vec<Tuple>) -> Result<()> {
+        self.input
+            .as_ref()
+            .ok_or_else(|| Error::Stream("engine already closed".into()))?
+            .send_batch(batch)
+    }
+
+    /// A cloneable sender for multi-producer feeding.
+    pub fn sender(&self) -> Result<StreamSender> {
+        self.input
+            .as_ref()
+            .cloned()
+            .ok_or_else(|| Error::Stream("engine already closed".into()))
     }
 
     /// Receive one output tuple (blocking). `None` after completion.
     pub fn recv(&self) -> Option<Tuple> {
-        self.output.recv().ok()
+        let mut pending = self.pending.lock().unwrap();
+        loop {
+            if let Some(t) = pending.pop_front() {
+                return Some(t);
+            }
+            match self.output.recv() {
+                Ok(batch) => {
+                    self.output_depth.add(-1);
+                    pending.extend(batch);
+                }
+                Err(_) => return None,
+            }
+        }
     }
 
     /// Receive with a timeout.
     pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<Tuple> {
-        self.output.recv_timeout(timeout).ok()
+        let deadline = std::time::Instant::now() + timeout;
+        let mut pending = self.pending.lock().unwrap();
+        loop {
+            if let Some(t) = pending.pop_front() {
+                return Some(t);
+            }
+            let left = deadline.checked_duration_since(std::time::Instant::now())?;
+            match self.output.recv_timeout(left) {
+                Ok(batch) => {
+                    self.output_depth.add(-1);
+                    pending.extend(batch);
+                }
+                Err(_) => return None,
+            }
+        }
     }
 
-    /// Close the input and wait for all stages to drain; returns any
-    /// remaining output tuples.
+    /// Close this handle's input and wait for all stages to drain;
+    /// returns any remaining output tuples (replica-ordered for
+    /// parallel stages), or [`Error::Stream`] if any stage failed.
+    ///
+    /// Outstanding [`StreamSender`] clones keep the input open: the
+    /// drain completes once the last one is dropped, and `finish`
+    /// keeps consuming outputs in the meantime so producers never
+    /// deadlock against a full output channel.
     pub fn finish(mut self) -> Result<Vec<Tuple>> {
-        drop(self.input.take()); // close input channel → stages drain
-        let mut out = Vec::new();
-        while let Ok(t) = self.output.recv() {
-            out.push(t);
+        drop(self.input.take()); // close our input copy → stages drain
+        let mut out: Vec<Tuple> = self.pending.lock().unwrap().drain(..).collect();
+        while let Ok(batch) = self.output.recv() {
+            self.output_depth.add(-1);
+            out.extend(batch);
         }
         for t in self.threads.drain(..) {
             t.join().map_err(|_| Error::Stream("stage thread panicked".into()))?;
+        }
+        if let Some(cause) = self.error.get() {
+            return Err(Error::Stream(format!("topology `{}` failed: {cause}", self.name)));
         }
         Ok(out)
     }
 }
 
-/// Builder/launcher for operator chains.
+/// Builder/launcher for stage chains.
 pub struct StreamEngine {
     metrics: Registry,
     channel_depth: usize,
+    batch_capacity: usize,
 }
 
 impl Default for StreamEngine {
@@ -79,16 +320,27 @@ impl Default for StreamEngine {
 
 impl StreamEngine {
     pub fn new() -> Self {
-        StreamEngine { metrics: Registry::new(), channel_depth: DEFAULT_CHANNEL_DEPTH }
+        Self::with_metrics(Registry::new())
     }
 
     pub fn with_metrics(metrics: Registry) -> Self {
-        StreamEngine { metrics, channel_depth: DEFAULT_CHANNEL_DEPTH }
+        StreamEngine {
+            metrics,
+            channel_depth: DEFAULT_CHANNEL_DEPTH,
+            batch_capacity: DEFAULT_BATCH_CAPACITY,
+        }
     }
 
-    /// Override the inter-stage channel depth (backpressure tuning).
+    /// Override the inter-stage channel depth, in batches
+    /// (backpressure tuning).
     pub fn channel_depth(mut self, depth: usize) -> Self {
         self.channel_depth = depth.max(1);
+        self
+    }
+
+    /// Override the max tuples per channel batch (1 = unbatched hops).
+    pub fn batch_capacity(mut self, capacity: usize) -> Self {
+        self.batch_capacity = capacity.max(1);
         self
     }
 
@@ -96,54 +348,287 @@ impl StreamEngine {
         &self.metrics
     }
 
-    /// Launch a chain of operators as one running topology.
-    pub fn launch(
-        &self,
-        name: &str,
-        operators: Vec<Box<dyn Operator>>,
-    ) -> Result<EngineHandle> {
-        if operators.is_empty() {
+    /// Launch a serial chain of operators as one running topology —
+    /// the classic API; each operator becomes a parallelism-1 stage.
+    pub fn launch(&self, name: &str, operators: Vec<Box<dyn Operator>>) -> Result<EngineHandle> {
+        self.launch_stages(name, operators.into_iter().map(StageRuntime::serial).collect())
+    }
+
+    /// Launch a chain of (possibly parallel, possibly keyed) stages.
+    pub fn launch_stages(&self, name: &str, stages: Vec<StageRuntime>) -> Result<EngineHandle> {
+        if stages.is_empty() {
             return Err(Error::Stream("topology needs at least one operator".into()));
         }
-        let (input_tx, mut prev_rx) = sync_channel::<Tuple>(self.channel_depth);
-        let mut threads = Vec::with_capacity(operators.len());
-        for mut op in operators {
-            let (tx, rx) = sync_channel::<Tuple>(self.channel_depth);
-            let counter = self.metrics.counter(&format!("stage.{}.{}.out", name, op.name()));
-            let stage_rx = prev_rx;
-            prev_rx = rx;
-            threads.push(std::thread::spawn(move || {
-                while let Ok(tuple) = stage_rx.recv() {
-                    match op.process(tuple) {
-                        Ok(outs) => {
-                            for t in outs {
-                                counter.inc();
-                                if tx.send(t).is_err() {
-                                    return; // downstream gone
-                                }
-                            }
-                        }
-                        Err(e) => {
-                            log::error!("stage {} failed: {e}", op.name());
-                            return;
-                        }
-                    }
-                }
-                // End of stream: flush.
-                if let Ok(outs) = op.finish() {
-                    for t in outs {
-                        counter.inc();
-                        let _ = tx.send(t);
-                    }
-                }
-            }));
+        for s in &stages {
+            if s.replicas.is_empty() || s.replicas.len() != s.spec.parallelism {
+                return Err(Error::Stream(format!(
+                    "stage `{}` wants parallelism {} but got {} operator instance(s)",
+                    s.spec.name,
+                    s.spec.parallelism,
+                    s.replicas.len()
+                )));
+            }
         }
+
+        let error = ErrorSlot::default();
+        let mut threads = Vec::new();
+        let stage_names: Vec<String> = stages.iter().map(|s| s.spec.name.clone()).collect();
+
+        let (input_tx, mut prev_rx) = sync_channel::<Batch>(self.channel_depth);
+        let mut prev_depth =
+            self.metrics.gauge(&format!("stream.{name}.{}.in.depth", stage_names[0]));
+        let input_port = Port { tx: input_tx, depth: prev_depth.clone() };
+
+        for (si, stage) in stages.into_iter().enumerate() {
+            let StageRuntime { spec, replicas } = stage;
+            // The hop after this stage: the next stage's inbound queue,
+            // or the engine output.
+            let hop = match stage_names.get(si + 1) {
+                Some(next) => format!("stream.{name}.{next}.in.depth"),
+                None => format!("stream.{name}.out.depth"),
+            };
+            let (tx, rx) = sync_channel::<Batch>(self.channel_depth);
+            let out_depth = self.metrics.gauge(&hop);
+            let out_port = Port { tx, depth: out_depth.clone() };
+
+            let total = self.metrics.counter(&format!("stage.{name}.{}.out", spec.name));
+            if spec.parallelism == 1 {
+                let ctx = WorkerCtx {
+                    rx: prev_rx,
+                    rx_depth: prev_depth,
+                    out: out_port,
+                    batch_capacity: self.batch_capacity,
+                    total,
+                    replica: self.metrics.counter(&format!("stage.{name}.{}.r0.out", spec.name)),
+                    error: error.clone(),
+                    gate: None,
+                    stage: spec.name.clone(),
+                };
+                let mut op = replicas.into_iter().next().unwrap();
+                threads.push(std::thread::spawn(move || run_worker(op.as_mut(), ctx)));
+            } else {
+                let degree = spec.parallelism;
+                let gate = Arc::new(FinishGate::new());
+                let mut replica_ports = Vec::with_capacity(degree);
+                let mut replica_rxs = Vec::with_capacity(degree);
+                for r in 0..degree {
+                    let (rtx, rrx) = sync_channel::<Batch>(self.channel_depth);
+                    let rdepth = self
+                        .metrics
+                        .gauge(&format!("stream.{name}.{}.r{r}.depth", spec.name));
+                    replica_ports.push(Port { tx: rtx, depth: rdepth.clone() });
+                    replica_rxs.push((rrx, rdepth));
+                }
+                for (r, (mut op, (rrx, rdepth))) in
+                    replicas.into_iter().zip(replica_rxs).enumerate()
+                {
+                    let ctx = WorkerCtx {
+                        rx: rrx,
+                        rx_depth: rdepth,
+                        out: out_port.clone(),
+                        batch_capacity: self.batch_capacity,
+                        total: total.clone(),
+                        replica: self
+                            .metrics
+                            .counter(&format!("stage.{name}.{}.r{r}.out", spec.name)),
+                        error: error.clone(),
+                        gate: Some((gate.clone(), r)),
+                        stage: format!("{}[r{r}]", spec.name),
+                    };
+                    threads.push(std::thread::spawn(move || run_worker(op.as_mut(), ctx)));
+                }
+                drop(out_port); // workers hold the fan-in clones
+                let ctx = RouterCtx {
+                    rx: prev_rx,
+                    rx_depth: prev_depth,
+                    outs: replica_ports,
+                    key: spec.key.clone(),
+                    batch_capacity: self.batch_capacity,
+                };
+                threads.push(std::thread::spawn(move || run_router(ctx)));
+            }
+            prev_rx = rx;
+            prev_depth = out_depth;
+        }
+
         Ok(EngineHandle {
-            input: Some(input_tx),
+            input: Some(StreamSender {
+                port: input_port,
+                error: error.clone(),
+                name: name.to_string(),
+            }),
             output: prev_rx,
+            output_depth: prev_depth,
+            pending: Mutex::new(VecDeque::new()),
             threads,
+            error,
             name: name.to_string(),
         })
+    }
+}
+
+struct WorkerCtx {
+    rx: Receiver<Batch>,
+    rx_depth: Arc<Gauge>,
+    out: Port,
+    batch_capacity: usize,
+    total: Arc<Counter>,
+    replica: Arc<Counter>,
+    error: ErrorSlot,
+    /// `(gate, replica_index)` for replicas of a parallel stage.
+    gate: Option<(Arc<FinishGate>, usize)>,
+    stage: String,
+}
+
+/// One stage worker: process batches, re-batch outputs, flush on full
+/// or idle; on end-of-stream take the drain turn and flush the
+/// operator's `finish` output.
+fn run_worker(op: &mut dyn Operator, ctx: WorkerCtx) {
+    let mut buf: Batch = Vec::with_capacity(ctx.batch_capacity);
+    let clean = 'stream: loop {
+        // Prefer already-queued batches; when idle, flush the partial
+        // output batch downstream (latency bound), then block.
+        let batch = match ctx.rx.try_recv() {
+            Ok(b) => b,
+            Err(TryRecvError::Empty) => {
+                if !ctx.out.flush(&mut buf, ctx.batch_capacity) {
+                    break 'stream false;
+                }
+                match ctx.rx.recv() {
+                    Ok(b) => b,
+                    Err(_) => break 'stream true,
+                }
+            }
+            Err(TryRecvError::Disconnected) => break 'stream true,
+        };
+        ctx.rx_depth.add(-1);
+        for tuple in batch {
+            match catch(AssertUnwindSafe(|| op.process(tuple))) {
+                Ok(outs) => {
+                    for t in outs {
+                        ctx.total.inc();
+                        ctx.replica.inc();
+                        buf.push(t);
+                        if buf.len() >= ctx.batch_capacity
+                            && !ctx.out.flush(&mut buf, ctx.batch_capacity)
+                        {
+                            break 'stream false;
+                        }
+                    }
+                }
+                Err(fault) => {
+                    log::error!("stage {} {fault}", ctx.stage);
+                    ctx.error.set(format!("stage `{}` {fault}", ctx.stage));
+                    break 'stream false; // topology tears down
+                }
+            }
+        }
+    };
+    if clean {
+        // End-of-stream: drain replicas in index order so the flush
+        // output (window remainders etc.) is deterministic.
+        if let Some((gate, replica)) = &ctx.gate {
+            gate.wait_for(*replica);
+        }
+        match catch(AssertUnwindSafe(|| op.finish())) {
+            Ok(outs) => {
+                for t in outs {
+                    ctx.total.inc();
+                    ctx.replica.inc();
+                    buf.push(t);
+                }
+                let _ = ctx.out.flush(&mut buf, ctx.batch_capacity);
+            }
+            Err(fault) => {
+                log::error!("stage {} flush {fault}", ctx.stage);
+                ctx.error.set(format!("stage `{}` flush {fault}", ctx.stage));
+            }
+        }
+    }
+    // EVERY exit path must advance the gate — a faulted or
+    // downstream-less replica that skipped its turn would otherwise
+    // strand later replicas in wait_for and hang finish()'s join.
+    // (wait_for uses `turn < replica`, so out-of-order advances from
+    // faulty replicas only relax the ordering, never block it.)
+    if let Some((gate, _)) = &ctx.gate {
+        gate.advance();
+    }
+}
+
+struct RouterCtx {
+    rx: Receiver<Batch>,
+    rx_depth: Arc<Gauge>,
+    outs: Vec<Port>,
+    key: Option<String>,
+    batch_capacity: usize,
+}
+
+/// Shuffle stage: partition inbound tuples across replica queues —
+/// by key-field hash when keyed (per-key order preservation), else
+/// round-robin — with the same full/idle flush rules as workers.
+/// Tuples missing the key field pin to replica 0.
+fn run_router(ctx: RouterCtx) {
+    let degree = ctx.outs.len();
+    let mut bufs: Vec<Batch> =
+        (0..degree).map(|_| Vec::with_capacity(ctx.batch_capacity)).collect();
+    let mut rr = 0usize;
+    'stream: loop {
+        let batch = match ctx.rx.try_recv() {
+            Ok(b) => b,
+            Err(TryRecvError::Empty) => {
+                for (port, buf) in ctx.outs.iter().zip(bufs.iter_mut()) {
+                    if !port.flush(buf, ctx.batch_capacity) {
+                        break 'stream;
+                    }
+                }
+                match ctx.rx.recv() {
+                    Ok(b) => b,
+                    Err(_) => break 'stream,
+                }
+            }
+            Err(TryRecvError::Disconnected) => break 'stream,
+        };
+        ctx.rx_depth.add(-1);
+        for tuple in batch {
+            let r = match &ctx.key {
+                Some(field) => match tuple.key_hash(field) {
+                    Some(h) => (h % degree as u64) as usize,
+                    None => 0,
+                },
+                None => {
+                    rr = (rr + 1) % degree;
+                    rr
+                }
+            };
+            bufs[r].push(tuple);
+            if bufs[r].len() >= ctx.batch_capacity && !ctx.outs[r].flush(&mut bufs[r], ctx.batch_capacity)
+            {
+                break 'stream;
+            }
+        }
+    }
+    for (port, buf) in ctx.outs.iter().zip(bufs.iter_mut()) {
+        if !port.flush(buf, ctx.batch_capacity) {
+            break;
+        }
+    }
+    // Ports drop here → replica channels close → replicas drain.
+}
+
+/// Run an operator callback, converting both `Err` results and panics
+/// into a fault string.
+fn catch<T>(f: AssertUnwindSafe<impl FnOnce() -> Result<T>>) -> std::result::Result<T, String> {
+    match std::panic::catch_unwind(f) {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err(format!("failed: {e}")),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "panic".into());
+            Err(format!("panicked: {msg}"))
+        }
     }
 }
 
@@ -154,6 +639,23 @@ mod tests {
 
     fn ops(v: Vec<OperatorKind>) -> Vec<Box<dyn Operator>> {
         v.into_iter().map(|o| Box::new(o) as Box<dyn Operator>).collect()
+    }
+
+    fn parallel_stage(
+        name: &str,
+        degree: usize,
+        key: Option<&str>,
+        make: impl Fn() -> OperatorKind,
+    ) -> StageRuntime {
+        StageRuntime::new(
+            StageSpec {
+                name: name.to_string(),
+                parallelism: degree,
+                key: key.map(|k| k.to_string()),
+            },
+            (0..degree).map(|_| Box::new(make()) as Box<dyn Operator>).collect(),
+        )
+        .unwrap()
     }
 
     #[test]
@@ -234,6 +736,21 @@ mod tests {
     }
 
     #[test]
+    fn replica_count_must_match_parallelism() {
+        let engine = StreamEngine::new();
+        let bad = StageRuntime {
+            spec: StageSpec { name: "m".into(), parallelism: 3, key: None },
+            replicas: ops(vec![OperatorKind::map("m", |t| t)]),
+        };
+        assert!(engine.launch_stages("mismatch", vec![bad]).is_err());
+        assert!(StageRuntime::new(
+            StageSpec { name: "m".into(), parallelism: 2, key: None },
+            ops(vec![OperatorKind::map("m", |t| t)]),
+        )
+        .is_err());
+    }
+
+    #[test]
     fn metrics_count_stage_output() {
         let engine = StreamEngine::new();
         let h = engine
@@ -244,13 +761,115 @@ mod tests {
         }
         h.finish().unwrap();
         assert_eq!(engine.metrics().counter("stage.m.id.out").get(), 5);
+        assert_eq!(engine.metrics().counter("stage.m.id.r0.out").get(), 5);
+    }
+
+    #[test]
+    fn parallel_stage_preserves_multiset_and_counts_replicas() {
+        let engine = StreamEngine::new();
+        let h = engine
+            .launch_stages(
+                "p",
+                vec![parallel_stage("sq", 4, None, || {
+                    OperatorKind::map("sq", |mut t| {
+                        let v = t.get("X").unwrap_or(0.0);
+                        t.set("X", v * v);
+                        t
+                    })
+                })],
+            )
+            .unwrap();
+        for i in 0..100u64 {
+            h.send(Tuple::new(i, vec![]).with("X", i as f64)).unwrap();
+        }
+        let out = h.finish().unwrap();
+        assert_eq!(out.len(), 100);
+        let mut squares: Vec<u64> = out.iter().map(|t| t.get("X").unwrap() as u64).collect();
+        squares.sort_unstable();
+        assert_eq!(squares, (0..100u64).map(|i| i * i).collect::<Vec<_>>());
+        // Round-robin spreads work across every replica, and the
+        // per-replica counters sum to the stage total.
+        let per_replica: Vec<u64> = (0..4)
+            .map(|r| engine.metrics().counter(&format!("stage.p.sq.r{r}.out")).get())
+            .collect();
+        assert!(per_replica.iter().all(|&c| c > 0), "idle replica: {per_replica:?}");
+        assert_eq!(per_replica.iter().sum::<u64>(), 100);
+        assert_eq!(engine.metrics().counter("stage.p.sq.out").get(), 100);
+    }
+
+    #[test]
+    fn keyed_stage_preserves_per_key_order() {
+        let engine = StreamEngine::new().batch_capacity(4);
+        let h = engine
+            .launch_stages(
+                "k",
+                vec![parallel_stage("tag", 3, Some("KEY"), || {
+                    OperatorKind::map("tag", |t| t)
+                })],
+            )
+            .unwrap();
+        // 8 keys × 50 tuples, interleaved; per-key SEQN must stay sorted.
+        for step in 0..50u64 {
+            for key in 0..8u64 {
+                h.send(
+                    Tuple::new(step * 8 + key, vec![])
+                        .with("KEY", key as f64)
+                        .with("SEQN", step as f64),
+                )
+                .unwrap();
+            }
+        }
+        let out = h.finish().unwrap();
+        assert_eq!(out.len(), 400);
+        let mut last = std::collections::BTreeMap::new();
+        for t in &out {
+            let key = t.get("KEY").unwrap() as u64;
+            let seqn = t.get("SEQN").unwrap();
+            if let Some(prev) = last.insert(key, seqn) {
+                assert!(prev < seqn, "key {key} out of order");
+            }
+        }
+    }
+
+    #[test]
+    fn keyed_window_drains_in_replica_order() {
+        // Two replicas, keys pinned by hash; finish() must emit replica
+        // 0's window remainder before replica 1's every time.
+        for _ in 0..5 {
+            let engine = StreamEngine::new();
+            let h = engine
+                .launch_stages(
+                    "d",
+                    vec![parallel_stage("w", 2, Some("K"), || {
+                        OperatorKind::window("w", "V", 1000)
+                    })],
+                )
+                .unwrap();
+            for i in 0..40u64 {
+                h.send(Tuple::new(i, vec![]).with("K", (i % 4) as f64).with("V", i as f64))
+                    .unwrap();
+            }
+            let out = h.finish().unwrap();
+            // Windows never filled: exactly one flush aggregate per
+            // non-idle replica, in replica order — deterministic COUNTs.
+            let counts: Vec<f64> = out.iter().map(|t| t.get("COUNT").unwrap()).collect();
+            let expect: Vec<f64> = {
+                let mut per: [f64; 2] = [0.0; 2];
+                for i in 0..40u64 {
+                    let t = Tuple::new(i, vec![]).with("K", (i % 4) as f64);
+                    per[(t.key_hash("K").unwrap() % 2) as usize] += 1.0;
+                }
+                per.iter().copied().filter(|&c| c > 0.0).collect()
+            };
+            assert_eq!(counts, expect);
+        }
     }
 
     #[test]
     fn backpressure_blocks_but_does_not_lose() {
         // Tiny channels + slow stage + concurrent drain: all tuples must
         // arrive, in order, despite the producer repeatedly blocking.
-        let engine = StreamEngine::new().channel_depth(2);
+        let engine = StreamEngine::new().channel_depth(2).batch_capacity(1);
         let h = engine
             .launch(
                 "bp",
@@ -260,7 +879,7 @@ mod tests {
                 })]),
             )
             .unwrap();
-        let tx = h.input.clone().unwrap();
+        let tx = h.sender().unwrap();
         let producer = std::thread::spawn(move || {
             for i in 0..50 {
                 tx.send(Tuple::new(i, vec![0u8; 8])).unwrap();
@@ -278,16 +897,69 @@ mod tests {
     }
 
     #[test]
+    fn flush_on_idle_bounds_latency() {
+        // One tuple into a deep-batched chain must come out promptly
+        // without filling any batch.
+        let engine = StreamEngine::new().batch_capacity(1024);
+        let h = engine
+            .launch(
+                "idle",
+                ops(vec![
+                    OperatorKind::map("a", |t| t),
+                    OperatorKind::map("b", |t| t),
+                    OperatorKind::map("c", |t| t),
+                ]),
+            )
+            .unwrap();
+        h.send(Tuple::new(7, vec![])).unwrap();
+        let got = h
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("flush-on-idle should deliver a lone tuple");
+        assert_eq!(got.seq, 7);
+        assert!(h.finish().unwrap().is_empty());
+    }
+
+    #[test]
     fn send_after_stages_exit_fails() {
         let engine = StreamEngine::new();
         let h = engine.launch("x", ops(vec![OperatorKind::map("id", |t| t)])).unwrap();
-        let sender = h.input.clone().unwrap();
+        let sender = h.sender().unwrap();
         // Finish on a helper thread: it closes the handle's input copy;
         // our clone keeps the channel open, so drop it to let stages
-        // drain, then verify sends fail against the dead topology.
+        // drain, then verify the topology is really gone.
         let finisher = std::thread::spawn(move || h.finish().unwrap());
         drop(sender);
         let out = finisher.join().unwrap();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn operator_error_surfaces_in_finish_and_send() {
+        let engine = StreamEngine::new().channel_depth(1).batch_capacity(1);
+        let h = engine
+            .launch(
+                "err",
+                ops(vec![OperatorKind::map("boom", |t| {
+                    if t.seq == 3 {
+                        panic!("synthetic operator fault");
+                    }
+                    t
+                })]),
+            )
+            .unwrap();
+        // Keep sending until the dead stage propagates back to us; a
+        // bounded number of sends can sit in channel buffers first.
+        let mut send_err = None;
+        for i in 0..1000u64 {
+            if let Err(e) = h.send(Tuple::new(i, vec![])) {
+                send_err = Some(e);
+                break;
+            }
+        }
+        let send_err = send_err.expect("send into a dead topology must fail, not block");
+        assert!(format!("{send_err}").contains("synthetic operator fault"), "{send_err}");
+        let fin = h.finish().unwrap_err();
+        assert!(matches!(fin, Error::Stream(_)));
+        assert!(format!("{fin}").contains("boom"), "{fin}");
     }
 }

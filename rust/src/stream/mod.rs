@@ -1,15 +1,21 @@
 //! The stream processing engine (paper §IV-C2): "transforming raw data
 //! stream into useful information [...] using a sequence of small
-//! processing units", with on-demand topologies that scale up or down.
+//! processing units", with on-demand topologies that scale up or down —
+//! including *out* across cores: stages carry parallelism and partition
+//! key annotations (`"map*4@SENSOR"`), and channel hops move batches.
 //!
 //! - [`tuple`]: the data tuples flowing through operators (bytes +
-//!   named numeric fields for the rule engine).
+//!   named numeric fields for the rule engine), plus the stable key
+//!   hash used by the keyed shuffle.
 //! - [`operator`]: the operator trait and built-ins (map, filter,
-//!   window aggregate, rule stage).
+//!   window aggregate, keyed window aggregate, rule stage).
 //! - [`topology`]: a linear-DAG description, buildable from the paper's
-//!   `"a->b->c"` topology strings stored in function profiles.
-//! - [`engine`]: thread-per-operator execution with bounded channels —
-//!   backpressure propagates upstream by blocking sends.
+//!   `"a->b->c"` topology strings (extended with `*P`/`@KEY` stage
+//!   annotations) stored in function profiles.
+//! - [`engine`]: the parallel keyed executor — per-stage replica pools
+//!   fed by hash-partitioning routers, batched bounded channels with
+//!   flush-on-idle, backpressure by blocking sends, ordered drain and
+//!   fault surfacing on `finish`. See `docs/stream-executor.md`.
 //! - [`deploy`]: on-demand start/stop keyed by function profile, driven
 //!   by `start_function` / `stop_function` reactions.
 
@@ -20,7 +26,7 @@ pub mod topology;
 pub mod tuple;
 
 pub use deploy::TopologyManager;
-pub use engine::{EngineHandle, StreamEngine};
+pub use engine::{EngineHandle, StageRuntime, StreamEngine, StreamSender};
 pub use operator::{Operator, OperatorKind};
-pub use topology::Topology;
+pub use topology::{StageSpec, Topology};
 pub use tuple::Tuple;

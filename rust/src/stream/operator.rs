@@ -20,6 +20,13 @@ pub trait Operator: Send {
     fn finish(&mut self) -> Result<Vec<Tuple>> {
         Ok(Vec::new())
     }
+    /// Whether outputs depend on which tuples this instance has seen
+    /// (windows/aggregates). A stateful operator on a parallel stage
+    /// requires a partition key, or its output becomes an arbitrary
+    /// function of the shuffle; `TopologyManager::start` rejects that.
+    fn stateful(&self) -> bool {
+        false
+    }
 }
 
 /// Built-in operators.
@@ -31,6 +38,20 @@ pub enum OperatorKind {
     /// Tumbling count-window aggregate over a field: emits one tuple per
     /// window with MEAN/MIN/MAX/COUNT fields.
     WindowAggregate { name: String, field: String, window: usize, buf: Vec<f64> },
+    /// Tumbling count-window aggregate grouped by a key field: one
+    /// window buffer per key value, and each emitted aggregate carries
+    /// the key field. This is the window to use on a keyed parallel
+    /// stage (`stats*4@SENSOR`): the shuffle guarantees a key never
+    /// spans replicas, and the per-key buffers keep replicas that own
+    /// several keys correct.
+    KeyedWindow {
+        name: String,
+        field: String,
+        key: String,
+        window: usize,
+        /// Key value (as f64 bits) → pending window values.
+        bufs: std::collections::BTreeMap<u64, Vec<f64>>,
+    },
     /// Evaluate the rule engine per tuple; fired consequences are
     /// recorded as the `RULE_FIRED` field (1.0) plus the tuple passes
     /// through — the coordinator interprets the outcome.
@@ -43,6 +64,7 @@ impl Operator for OperatorKind {
             OperatorKind::Map { name, .. }
             | OperatorKind::Filter { name, .. }
             | OperatorKind::WindowAggregate { name, .. }
+            | OperatorKind::KeyedWindow { name, .. }
             | OperatorKind::RuleStage { name, .. } => name,
         }
     }
@@ -68,6 +90,18 @@ impl Operator for OperatorKind {
                     Ok(Vec::new())
                 }
             }
+            OperatorKind::KeyedWindow { field, key, window, bufs, .. } => {
+                if let (Some(kv), Some(v)) = (tuple.get(key), tuple.get(field)) {
+                    let buf = bufs.entry(kv.to_bits()).or_default();
+                    buf.push(v);
+                    if buf.len() >= *window {
+                        let mut out = aggregate(std::mem::take(buf), tuple.seq);
+                        out.set(key, kv);
+                        return Ok(vec![out]);
+                    }
+                }
+                Ok(Vec::new())
+            }
             OperatorKind::RuleStage { engine, fired, .. } => {
                 let mut t = tuple;
                 match engine.evaluate(&t.eval_context()) {
@@ -84,10 +118,29 @@ impl Operator for OperatorKind {
         }
     }
 
+    fn stateful(&self) -> bool {
+        matches!(
+            self,
+            OperatorKind::WindowAggregate { .. } | OperatorKind::KeyedWindow { .. }
+        )
+    }
+
     fn finish(&mut self) -> Result<Vec<Tuple>> {
         match self {
             OperatorKind::WindowAggregate { buf, .. } if !buf.is_empty() => {
                 Ok(vec![aggregate(std::mem::take(buf), u64::MAX)])
+            }
+            OperatorKind::KeyedWindow { key, bufs, .. } => {
+                // Flush partial windows in key-bits order: deterministic.
+                let mut outs = Vec::new();
+                for (bits, buf) in std::mem::take(bufs) {
+                    if !buf.is_empty() {
+                        let mut t = aggregate(buf, u64::MAX);
+                        t.set(key, f64::from_bits(bits));
+                        outs.push(t);
+                    }
+                }
+                Ok(outs)
             }
             _ => Ok(Vec::new()),
         }
@@ -124,6 +177,18 @@ impl OperatorKind {
             field: field.to_string(),
             window: window.max(1),
             buf: Vec::new(),
+        }
+    }
+
+    /// Keyed window-aggregate constructor: one tumbling window per
+    /// distinct value of `key`; aggregates carry the key field.
+    pub fn window_by(name: &str, field: &str, window: usize, key: &str) -> Self {
+        OperatorKind::KeyedWindow {
+            name: name.to_string(),
+            field: field.to_string(),
+            key: key.to_ascii_uppercase(),
+            window: window.max(1),
+            bufs: std::collections::BTreeMap::new(),
         }
     }
 
@@ -173,6 +238,30 @@ mod tests {
         let flushed = op.finish().unwrap();
         assert_eq!(flushed.len(), 1);
         assert_eq!(flushed[0].get("COUNT"), Some(1.0));
+    }
+
+    #[test]
+    fn keyed_window_groups_by_key() {
+        let mut op = OperatorKind::window_by("w", "V", 2, "sensor");
+        // Interleaved keys: each key's window fills independently.
+        assert!(op.process(Tuple::new(0, vec![]).with("SENSOR", 1.0).with("V", 10.0)).unwrap().is_empty());
+        assert!(op.process(Tuple::new(1, vec![]).with("SENSOR", 2.0).with("V", 100.0)).unwrap().is_empty());
+        let a = op.process(Tuple::new(2, vec![]).with("SENSOR", 1.0).with("V", 30.0)).unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].get("SENSOR"), Some(1.0));
+        assert_eq!(a[0].get("MEAN"), Some(20.0));
+        assert_eq!(a[0].get("COUNT"), Some(2.0));
+        // Tuples missing the key or the field are not aggregated.
+        assert!(op.process(Tuple::new(3, vec![]).with("V", 5.0)).unwrap().is_empty());
+        assert!(op.process(Tuple::new(4, vec![]).with("SENSOR", 2.0)).unwrap().is_empty());
+        // Finish flushes the partial window for key 2, carrying the key.
+        let flushed = op.finish().unwrap();
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].get("SENSOR"), Some(2.0));
+        assert_eq!(flushed[0].get("COUNT"), Some(1.0));
+        assert_eq!(flushed[0].get("MEAN"), Some(100.0));
+        // Drained: nothing left to flush.
+        assert!(op.finish().unwrap().is_empty());
     }
 
     #[test]

@@ -1,44 +1,155 @@
 //! Topology descriptions (paper §IV-D: function profiles carry a
 //! serialized topology; `start_function` deploys it on demand).
 //!
-//! A topology is a named linear chain of operator stage descriptors —
-//! the form the paper's listings use (`"preprocess->detect->store"`).
+//! A topology is a named linear chain of *stage specs*. The textual form
+//! extends the paper's `"preprocess->detect->store"` listings with two
+//! per-stage annotations understood by the parallel executor:
+//!
+//! ```text
+//! stage      := name [ '*' parallelism ] [ '@' key-field ]
+//! topology   := stage ( '->' stage )*
+//! ```
+//!
+//! - `name*4` runs four replicas of the stage's operator, fed through a
+//!   hash-partitioning shuffle.
+//! - `name*4@SENSOR` partitions tuples by the `SENSOR` field: every
+//!   tuple carrying the same value is routed to the same replica, which
+//!   preserves per-key order (required for stateful operators such as
+//!   [`super::operator::OperatorKind::WindowAggregate`]).
+//!
 //! Stage names resolve to operator factories registered with the
-//! [`super::deploy::TopologyManager`].
+//! [`super::deploy::TopologyManager`]; one operator instance is built
+//! per replica.
 
 use crate::error::{Error, Result};
 
-/// A parsed topology: ordered stage names.
+/// One stage of a topology: operator name plus executor annotations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSpec {
+    /// Operator/factory name.
+    pub name: String,
+    /// Number of replicas (≥ 1; 1 means the classic serial stage).
+    pub parallelism: usize,
+    /// Optional partition key field (uppercased, like tuple fields).
+    /// `None` on a parallel stage means round-robin distribution.
+    pub key: Option<String>,
+}
+
+impl StageSpec {
+    /// A serial, unkeyed stage.
+    pub fn serial(name: &str) -> Self {
+        StageSpec { name: name.to_string(), parallelism: 1, key: None }
+    }
+
+    /// Render back to the `name[*P][@KEY]` textual form.
+    pub fn render(&self) -> String {
+        let mut out = self.name.clone();
+        if self.parallelism > 1 {
+            out.push_str(&format!("*{}", self.parallelism));
+        }
+        if let Some(k) = &self.key {
+            out.push_str(&format!("@{k}"));
+        }
+        out
+    }
+
+    fn parse(segment: &str, spec: &str) -> Result<StageSpec> {
+        // Grammar: name [ '*' parallelism ] [ '@' key ].
+        let (head, key) = match segment.split_once('@') {
+            Some((h, k)) => {
+                let k = k.trim();
+                if k.is_empty() {
+                    return Err(Error::Stream(format!(
+                        "stage `{segment}` in `{spec}` has an empty key field after `@`"
+                    )));
+                }
+                if k.contains('*') || k.contains('@') {
+                    // Catches the reversed annotation order (`name@KEY*4`),
+                    // which would otherwise parse as a serial stage keyed
+                    // by the unmatchable field "KEY*4".
+                    return Err(Error::Stream(format!(
+                        "stage `{segment}` in `{spec}` has an invalid key field `{k}` \
+                         — annotations go `name*P@KEY`"
+                    )));
+                }
+                (h.trim(), Some(k.to_ascii_uppercase()))
+            }
+            None => (segment, None),
+        };
+        let (name, parallelism) = match head.split_once('*') {
+            Some((n, p)) => {
+                let p = p.trim();
+                let degree: usize = p.parse().map_err(|_| {
+                    Error::Stream(format!(
+                        "stage `{segment}` in `{spec}` has a bad parallelism `{p}` (want an integer)"
+                    ))
+                })?;
+                if degree == 0 {
+                    return Err(Error::Stream(format!(
+                        "stage `{segment}` in `{spec}` has parallelism 0 (must be ≥ 1)"
+                    )));
+                }
+                (n.trim(), degree)
+            }
+            None => (head.trim(), 1),
+        };
+        if name.is_empty() {
+            return Err(Error::Stream(format!(
+                "empty stage name in segment `{segment}` of `{spec}`"
+            )));
+        }
+        Ok(StageSpec { name: name.to_string(), parallelism, key })
+    }
+}
+
+/// A parsed topology: ordered stage specs.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Topology {
     pub name: String,
-    pub stages: Vec<String>,
+    pub stages: Vec<StageSpec>,
 }
 
 impl Topology {
-    /// Parse a `"a->b->c"` chain.
+    /// Parse a `"a*2@K->b->c"` chain. Rejects empty specs, empty
+    /// segments (`"a->->b"`), and duplicate stage names — the error
+    /// names the offending stage.
     pub fn parse(name: &str, spec: &str) -> Result<Topology> {
-        let stages: Vec<String> = spec
-            .split("->")
-            .map(str::trim)
-            .filter(|s| !s.is_empty())
-            .map(|s| s.to_string())
-            .collect();
+        if spec.trim().is_empty() {
+            return Err(Error::Stream(format!("empty topology spec `{spec}`")));
+        }
+        let mut stages = Vec::new();
+        for segment in spec.split("->") {
+            let segment = segment.trim();
+            if segment.is_empty() {
+                return Err(Error::Stream(format!(
+                    "empty stage (dangling `->`) in topology spec `{spec}`"
+                )));
+            }
+            stages.push(StageSpec::parse(segment, spec)?);
+        }
         if stages.is_empty() {
             return Err(Error::Stream(format!("empty topology spec `{spec}`")));
         }
         let mut seen = std::collections::BTreeSet::new();
         for s in &stages {
-            if !seen.insert(s.clone()) {
-                return Err(Error::Stream(format!("duplicate stage `{s}` in `{spec}`")));
+            if !seen.insert(s.name.clone()) {
+                return Err(Error::Stream(format!(
+                    "duplicate stage `{}` in topology spec `{spec}`",
+                    s.name
+                )));
             }
         }
         Ok(Topology { name: name.to_string(), stages })
     }
 
-    /// Serialize back to the `"a->b->c"` form (stored in profiles).
+    /// Serialize back to the `"a*2@K->b->c"` form (stored in profiles).
     pub fn render(&self) -> String {
-        self.stages.join("->")
+        self.stages.iter().map(StageSpec::render).collect::<Vec<_>>().join("->")
+    }
+
+    /// Stage names in order (without annotations).
+    pub fn stage_names(&self) -> Vec<&str> {
+        self.stages.iter().map(|s| s.name.as_str()).collect()
     }
 
     /// Number of stages.
@@ -58,9 +169,10 @@ mod tests {
     #[test]
     fn parse_chain() {
         let t = Topology::parse("pp", "preprocess -> detect -> store").unwrap();
-        assert_eq!(t.stages, vec!["preprocess", "detect", "store"]);
+        assert_eq!(t.stage_names(), vec!["preprocess", "detect", "store"]);
         assert_eq!(t.render(), "preprocess->detect->store");
         assert_eq!(t.len(), 3);
+        assert!(t.stages.iter().all(|s| s.parallelism == 1 && s.key.is_none()));
     }
 
     #[test]
@@ -70,16 +182,72 @@ mod tests {
     }
 
     #[test]
+    fn parse_parallelism_and_key() {
+        let t = Topology::parse("p", "map*4 -> agg*2@sensor -> sink").unwrap();
+        assert_eq!(t.stages[0], StageSpec { name: "map".into(), parallelism: 4, key: None });
+        assert_eq!(
+            t.stages[1],
+            StageSpec { name: "agg".into(), parallelism: 2, key: Some("SENSOR".into()) }
+        );
+        assert_eq!(t.stages[2], StageSpec::serial("sink"));
+        assert_eq!(t.render(), "map*4->agg*2@SENSOR->sink");
+    }
+
+    #[test]
+    fn parse_key_without_parallelism() {
+        let t = Topology::parse("k", "win@id").unwrap();
+        assert_eq!(t.stages[0].parallelism, 1);
+        assert_eq!(t.stages[0].key.as_deref(), Some("ID"));
+    }
+
+    #[test]
     fn rejects_empty_and_duplicates() {
         assert!(Topology::parse("x", "").is_err());
+        assert!(Topology::parse("x", "   ").is_err());
         assert!(Topology::parse("x", "->").is_err());
         assert!(Topology::parse("x", "a->b->a").is_err());
     }
 
     #[test]
+    fn duplicate_error_names_offending_stage() {
+        let err = Topology::parse("x", "a->dup*2->dup").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("duplicate stage `dup`"), "got: {msg}");
+        assert!(msg.contains("a->dup*2->dup"), "error should echo the spec, got: {msg}");
+        // Duplicates are detected by base name even when annotations differ.
+        assert!(Topology::parse("x", "a@K->a*3").is_err());
+    }
+
+    #[test]
+    fn rejects_whitespace_and_dangling_segments() {
+        for bad in ["a->->b", "->a", "a->", "a-> ->b", " -> "] {
+            let err = Topology::parse("x", bad).unwrap_err();
+            assert!(
+                format!("{err}").contains("empty stage"),
+                "`{bad}` should report an empty stage, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_annotations() {
+        assert!(Topology::parse("x", "a*0").is_err());
+        assert!(Topology::parse("x", "a*two").is_err());
+        assert!(Topology::parse("x", "a*").is_err());
+        assert!(Topology::parse("x", "a@").is_err());
+        assert!(Topology::parse("x", "*4").is_err());
+        // Reversed annotation order must error, not become key "K*4".
+        let err = Topology::parse("x", "a@K*4").unwrap_err();
+        assert!(format!("{err}").contains("name*P@KEY"), "{err}");
+        assert!(Topology::parse("x", "a@K@J").is_err());
+    }
+
+    #[test]
     fn render_parse_round_trip() {
-        let t = Topology::parse("rt", "a->b->c").unwrap();
-        let t2 = Topology::parse("rt", &t.render()).unwrap();
-        assert_eq!(t, t2);
+        for spec in ["a->b->c", "a*4->b@K", "s*2@ID->t*8->u@Z"] {
+            let t = Topology::parse("rt", spec).unwrap();
+            let t2 = Topology::parse("rt", &t.render()).unwrap();
+            assert_eq!(t, t2, "round-trip failed for `{spec}`");
+        }
     }
 }

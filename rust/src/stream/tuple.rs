@@ -41,6 +41,19 @@ impl Tuple {
         self.fields.get(&name.to_ascii_uppercase()).copied()
     }
 
+    /// Stable hash of a key field's value, for replica partitioning.
+    /// `None` when the tuple does not carry the field. Equal field
+    /// values always hash equal (f64 compared by bit pattern), so a
+    /// keyed shuffle routes every tuple of a key to the same replica.
+    pub fn key_hash(&self, field: &str) -> Option<u64> {
+        let bits = self.get(field)?.to_bits();
+        // SplitMix64 finalizer: cheap, well-mixed, dependency-free.
+        let mut z = bits.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        Some(z ^ (z >> 31))
+    }
+
     /// Evaluation context for the rule engine.
     pub fn eval_context(&self) -> EvalContext {
         let mut ctx = EvalContext::new();
@@ -69,6 +82,20 @@ mod tests {
         assert_eq!(t.get("RESULT"), Some(12.0));
         assert_eq!(t.get("result"), Some(12.0));
         assert_eq!(t.get("missing"), None);
+    }
+
+    #[test]
+    fn key_hash_is_stable_and_partitions() {
+        let a = Tuple::new(0, vec![]).with("K", 3.0);
+        let b = Tuple::new(9, vec![0u8; 32]).with("K", 3.0).with("OTHER", 1.0);
+        assert_eq!(a.key_hash("K"), b.key_hash("K"), "same value → same hash");
+        assert_eq!(a.key_hash("k"), a.key_hash("K"), "field lookup is case-insensitive");
+        assert_ne!(
+            a.key_hash("K"),
+            Tuple::new(0, vec![]).with("K", 4.0).key_hash("K"),
+            "different values should (virtually always) hash apart"
+        );
+        assert_eq!(a.key_hash("MISSING"), None);
     }
 
     #[test]

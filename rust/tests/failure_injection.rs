@@ -1,6 +1,8 @@
 //! Failure injection: RP crashes, master failover, queue crash
 //! recovery, partition behaviour — the paper's fault-tolerance claims
-//! (§IV-A replication invariant, §IV-C3 DHT durability).
+//! (§IV-A replication invariant, §IV-C3 DHT durability) — plus the
+//! stream executor's failure contract (deterministic drain under full
+//! channels, panicking replicas surfacing `Error::Stream`).
 
 use rpulsar::ar::message::{Action, ArMessage};
 use rpulsar::ar::profile::Profile;
@@ -136,6 +138,148 @@ fn queue_recovers_after_simulated_crash() {
     assert_eq!(msgs.len(), 100);
     assert_eq!(msgs[99], b"m99");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- Stream executor failure contract ----
+
+use rpulsar::error::Error;
+use rpulsar::stream::engine::{StageRuntime, StreamEngine};
+use rpulsar::stream::operator::{Operator, OperatorKind};
+use rpulsar::stream::topology::StageSpec;
+use rpulsar::stream::tuple::Tuple;
+
+fn slow_map(name: &'static str) -> Box<dyn Operator> {
+    Box::new(OperatorKind::map(name, |t| {
+        std::thread::sleep(std::time::Duration::from_micros(50));
+        t
+    }))
+}
+
+#[test]
+fn finish_loses_zero_tuples_with_full_channels_at_every_stage() {
+    // Channel depth 1 (in batches), batch capacity 1, three slow stages:
+    // every channel in the chain saturates while the producer is still
+    // sending. finish() must keep draining concurrently and return
+    // every tuple, in order, without deadlock.
+    const N: u64 = 300;
+    let engine = StreamEngine::new().channel_depth(1).batch_capacity(1);
+    let h = engine
+        .launch("drain", vec![slow_map("s1"), slow_map("s2"), slow_map("s3")])
+        .unwrap();
+    let sender = h.sender().unwrap();
+    let producer = std::thread::spawn(move || {
+        for i in 0..N {
+            sender.send(Tuple::new(i, vec![0u8; 16])).unwrap();
+        }
+        // Sender drops here → end-of-stream once channels drain.
+    });
+    // finish() runs while the producer is still blocked on full
+    // channels: it must consume outputs until the last sender drops.
+    let out = h.finish().unwrap();
+    producer.join().unwrap();
+    assert_eq!(out.len(), N as usize, "finish must lose zero tuples");
+    for (i, t) in out.iter().enumerate() {
+        assert_eq!(t.seq, i as u64, "serial chain must preserve order");
+    }
+}
+
+#[test]
+fn finish_drains_parallel_stage_without_loss() {
+    const N: u64 = 400;
+    let engine = StreamEngine::new().channel_depth(1).batch_capacity(2);
+    let stage = StageRuntime::new(
+        StageSpec { name: "p".into(), parallelism: 4, key: Some("K".into()) },
+        (0..4).map(|_| slow_map("p")).collect(),
+    )
+    .unwrap();
+    let h = engine.launch_stages("pdrain", vec![stage]).unwrap();
+    let sender = h.sender().unwrap();
+    let producer = std::thread::spawn(move || {
+        for i in 0..N {
+            sender.send(Tuple::new(i, vec![]).with("K", (i % 7) as f64)).unwrap();
+        }
+    });
+    let out = h.finish().unwrap();
+    producer.join().unwrap();
+    assert_eq!(out.len(), N as usize);
+    let mut seqs: Vec<u64> = out.iter().map(|t| t.seq).collect();
+    seqs.sort_unstable();
+    assert_eq!(seqs, (0..N).collect::<Vec<_>>(), "multiset must survive the shuffle");
+}
+
+#[test]
+fn panicking_replica_surfaces_stream_error_not_hang() {
+    // Both replicas carry the same fault; all K=1.0 tuples (poison
+    // included) hash to one of them, which panics. recv() must end
+    // instead of hanging, send() must eventually fail with the cause,
+    // finish() must return Error::Stream.
+    let engine = StreamEngine::new().channel_depth(1).batch_capacity(1);
+    let stage = StageRuntime::new(
+        StageSpec { name: "boom".into(), parallelism: 2, key: Some("K".into()) },
+        (0..2)
+            .map(|_| {
+                Box::new(OperatorKind::map("boom", |t| {
+                    if t.get("POISON") == Some(1.0) {
+                        panic!("injected replica fault");
+                    }
+                    t
+                })) as Box<dyn Operator>
+            })
+            .collect(),
+    )
+    .unwrap();
+    let h = engine.launch_stages("ft", vec![stage]).unwrap();
+    h.send(Tuple::new(0, vec![]).with("K", 1.0)).unwrap();
+    h.send(Tuple::new(1, vec![]).with("K", 1.0).with("POISON", 1.0)).unwrap();
+    // The topology is tearing down; bounded sends may still be buffered,
+    // but within a bounded number of attempts send must fail — never block.
+    let mut send_failed = false;
+    for i in 2..2000u64 {
+        if h.send(Tuple::new(i, vec![]).with("K", 1.0)).is_err() {
+            send_failed = true;
+            break;
+        }
+    }
+    assert!(send_failed, "send into a dead topology must fail");
+    // recv terminates (tuples processed before the fault may surface,
+    // then the closed stream yields None) — it must not hang.
+    let mut drained = 0;
+    while h.recv_timeout(std::time::Duration::from_secs(10)).is_some() {
+        drained += 1;
+        assert!(drained < 100, "dead topology must stop yielding tuples");
+    }
+    let err = h.finish().unwrap_err();
+    assert!(matches!(err, Error::Stream(_)), "want Error::Stream, got {err}");
+    let msg = format!("{err}");
+    assert!(msg.contains("injected replica fault"), "cause must be surfaced: {msg}");
+    assert!(msg.contains("boom"), "failing stage must be named: {msg}");
+}
+
+#[test]
+fn erroring_operator_fails_finish_with_stage_name() {
+    struct FailsAt(u64);
+    impl Operator for FailsAt {
+        fn name(&self) -> &str {
+            "failer"
+        }
+        fn process(&mut self, tuple: Tuple) -> rpulsar::Result<Vec<Tuple>> {
+            if tuple.seq == self.0 {
+                return Err(Error::Stream("synthetic process error".into()));
+            }
+            Ok(vec![tuple])
+        }
+    }
+    let engine = StreamEngine::new();
+    let h = engine.launch("err", vec![Box::new(FailsAt(5)) as Box<dyn Operator>]).unwrap();
+    for i in 0..10u64 {
+        if h.send(Tuple::new(i, vec![])).is_err() {
+            break;
+        }
+    }
+    let err = h.finish().unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("failer"), "{msg}");
+    assert!(msg.contains("synthetic process error"), "{msg}");
 }
 
 #[test]
