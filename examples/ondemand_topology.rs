@@ -3,7 +3,10 @@
 //! crosses a threshold, the rule *triggers a stored topology* on demand
 //! (`start_function`), which windows and aggregates subsequent tuples —
 //! the paper's "dynamic data-driven pipelines over the edge and the
-//! cloud".
+//! cloud". Mid-stream, the running topology is *re-scaled live*
+//! (§IV-C2 "scaling up or down"): the keyed spike-filter stage grows
+//! from 2 to 4 replicas with zero tuple loss and per-sensor order
+//! preserved across the key-range handoff.
 //!
 //! Run: `cargo run --release --example ondemand_topology`
 
@@ -75,7 +78,21 @@ fn main() -> rpulsar::Result<()> {
     let mut running_on: Option<rpulsar::overlay::NodeId> = None;
     let key = "hotspot_aggregator".to_string();
     let mut fed = 0u32;
+    let mut rescaled = false;
     for seq in 0..100u64 {
+        // Load grows mid-mission: scale the filter stage up, live.
+        if seq == 60 && !rescaled {
+            if let Some(target) = running_on {
+                let node = cluster.node_mut(&target).unwrap();
+                let report = node.topologies_mut().rescale(&key, "spike-filter", 4)?;
+                println!(
+                    "seq {seq}: live rescale `spike-filter` {} → {} replicas \
+                     ({} key snapshot(s) moved, stream uninterrupted)",
+                    report.from, report.to, report.moved_keys
+                );
+                rescaled = true;
+            }
+        }
         let reading = 20.0 + rng.gen_f64() * 20.0; // 20..40
         let tuple = Tuple::new(seq, vec![])
             .with("READING", reading)

@@ -9,10 +9,14 @@
 //! - **Latency-bound arm**: a stage that waits on each tuple (an
 //!   accelerator/IO round-trip model). Replica parallelism overlaps the
 //!   waits, so ≥2× at parallelism 4 is asserted on any host.
+//! - **Rescale arm**: the same latency-bound stage scaled 1→4 *live*,
+//!   mid-stream — throughput before/during/after the scale-up (the
+//!   ≥2× after/before floor is core-count independent), zero tuple
+//!   loss asserted, plus full-pipeline output equivalence of the
+//!   Fig-13 analytics across a mid-stream 1→4 scale-up.
 //!
-//! Both arms assert serial/parallel output equivalence — the ablation
-//! cannot drift from the property-tested semantics
-//! (`rust/tests/stream_parallel.rs`).
+//! All arms assert output equivalence — the ablation cannot drift from
+//! the property-tested semantics (`rust/tests/stream_parallel.rs`).
 //!
 //! `-- --test` runs a seconds-long smoke with tiny sizes (CI keeps the
 //! arms compiling and running; throughput floors are full-mode only).
@@ -22,18 +26,22 @@ mod common;
 
 use common::{header, smoke_mode};
 use rpulsar::pipeline::lidar::LidarTrace;
-use rpulsar::pipeline::workflow::{analytics_spec, run_stream_analytics, trace_tuples, StreamReport};
+use rpulsar::pipeline::workflow::{
+    analytics_spec, elastic_analytics_spec, run_rescaling_analytics, run_stream_analytics,
+    trace_tuples, StreamReport,
+};
 use rpulsar::stream::engine::{StageRuntime, StreamEngine};
 use rpulsar::stream::operator::{Operator, OperatorKind};
 use rpulsar::stream::topology::StageSpec;
 use rpulsar::stream::tuple::Tuple;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const PARALLELISM: usize = 4;
 
 fn main() {
     header(
-        "Fig. 15 — parallel keyed stream executor (serial vs parallel ablation)",
+        "Fig. 15 — parallel keyed stream executor (serial vs parallel ablation + live rescale)",
         "stage-level parallelism is the throughput lever on constrained edge devices",
     );
     let smoke = smoke_mode();
@@ -42,6 +50,7 @@ fn main() {
 
     cpu_bound_arm(smoke, cores);
     latency_bound_arm(smoke);
+    rescale_arm(smoke);
     println!("\nfig15 OK");
 }
 
@@ -108,6 +117,104 @@ fn latency_bound_arm(smoke: bool) {
             "latency-bound parallelism {PARALLELISM} must be ≥2× serial, got {speedup:.2}×"
         );
     }
+}
+
+/// Rescale arm: one elastic latency-bound stage scaled 1→4 live. Three
+/// phases of `count` tuples each — before (×1), during (the rescale
+/// fires a quarter into the phase), after (×4) — with per-phase
+/// throughput, the handoff pause, a ≥2× after/before floor
+/// (core-count independent: replicas overlap waits), and a zero-loss
+/// check over every sequence number. Then the Fig-13 analytics chain
+/// is scaled 1→4 mid-stream and must reproduce the static run's
+/// outputs exactly.
+fn rescale_arm(smoke: bool) {
+    let (count, wait) = if smoke {
+        (48usize, Duration::from_micros(300))
+    } else {
+        (768usize, Duration::from_micros(500))
+    };
+    println!("\n[rescale] {count} tuples per phase, {wait:?} wait per tuple, live 1→{PARALLELISM}");
+    let engine = StreamEngine::new();
+    let stage = StageRuntime::elastic(
+        StageSpec { name: "wait".into(), parallelism: 1, key: None },
+        Arc::new(move || {
+            Box::new(OperatorKind::map("wait", move |t| {
+                std::thread::sleep(wait);
+                t
+            })) as Box<dyn Operator>
+        }),
+    )
+    .unwrap();
+    let h = engine.launch_stages("fig15rescale", vec![stage]).unwrap();
+    let sender = h.sender().unwrap();
+    let mut seen: Vec<u64> = Vec::with_capacity(3 * count);
+
+    let mut run_phase = |label: &str, base: usize, rescale_at: Option<usize>| -> f64 {
+        let started = Instant::now();
+        let tx = sender.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..count {
+                tx.send(Tuple::new((base + i) as u64, vec![])).unwrap();
+            }
+        });
+        let mut got = 0usize;
+        let mut pause = None;
+        while got < count {
+            if rescale_at == Some(got) {
+                let t0 = Instant::now();
+                let report = h.rescale("wait", PARALLELISM).unwrap();
+                pause = Some((t0.elapsed(), report.moved_keys));
+                assert_eq!(report.to, PARALLELISM);
+            }
+            seen.push(h.recv().expect("rescale arm ended early").seq);
+            got += 1;
+        }
+        producer.join().unwrap();
+        let tps = count as f64 / started.elapsed().as_secs_f64().max(1e-9);
+        match pause {
+            Some((d, moved)) => println!(
+                "  {label:<12} {tps:>10.0} t/s   (handoff pause {d:.2?}, {moved} key snapshot(s) moved)"
+            ),
+            None => println!("  {label:<12} {tps:>10.0} t/s"),
+        }
+        tps
+    };
+    let before = run_phase("before ×1", 0, None);
+    let during = run_phase("during", count, Some(count / 4));
+    let after = run_phase(&format!("after ×{PARALLELISM}"), 2 * count, None);
+    drop(sender); // last live sender — lets finish() drain to completion
+    assert!(h.finish().unwrap().is_empty());
+    let speedup = after / before.max(1e-9);
+    println!("  during/before: {:.2}×   after/before: {speedup:.2}×", during / before.max(1e-9));
+    // Zero loss, zero duplication across the live handoff.
+    seen.sort_unstable();
+    assert_eq!(seen, (0..3 * count as u64).collect::<Vec<_>>(), "rescale arm lost or duplicated tuples");
+    if !smoke {
+        assert!(
+            speedup >= 2.0,
+            "live scale-up to {PARALLELISM} must be ≥2× the pre-rescale throughput, got {speedup:.2}×"
+        );
+    }
+
+    // Output equivalence through the analytics pipeline.
+    let (images, work) = if smoke { (4, 2) } else { (24, 16) };
+    let trace = LidarTrace::generate(31, images, 1.0);
+    let tuples = trace_tuples(&trace, 512);
+    let cut = tuples.len() / 2;
+    let serial = run_stream_analytics(&analytics_spec(1), tuples.clone(), work).unwrap();
+    let (rescaled, report) =
+        run_rescaling_analytics(&elastic_analytics_spec(1), tuples, work, "score", PARALLELISM, cut)
+            .unwrap();
+    assert_eq!((report.from, report.to), (1, PARALLELISM));
+    assert_eq!(
+        canon(&serial),
+        canon(&rescaled),
+        "a mid-stream 1→{PARALLELISM} scale-up must not change the analytics outputs"
+    );
+    println!(
+        "  analytics equivalence across mid-stream 1→{PARALLELISM} scale-up OK ({} outputs)",
+        rescaled.outputs.len()
+    );
 }
 
 /// Run `count` tuples through a single wait stage with `degree`

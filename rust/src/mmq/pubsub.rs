@@ -20,6 +20,13 @@
 //! start topic rotates per call — so a small `max` no longer starves
 //! every topic after the lexicographically first one.
 //!
+//! **Topic retirement.** Edge brokers live long and topics churn
+//! (short-lived sensors, per-mission streams). [`Broker::retire_topic`]
+//! drops a topic's queue and on-disk segments, tombstones its entry in
+//! the topic index, and purges it from every subscription's match cache
+//! together with the now-stale cursors; the index re-packs once
+//! tombstones dominate, bounding broker memory to O(live topics).
+//!
 //! Payloads are delivered as shared `Arc<[u8]>` slices (one copy out of
 //! the mmap, pointer clones beyond that).
 
@@ -61,9 +68,9 @@ impl SubscriptionState {
 pub struct Broker {
     base: QueueOptions,
     topics: BTreeMap<String, (Profile, MemoryMappedQueue)>,
-    /// Topic pid → topic key, aligned with `topic_index` (topics are
-    /// never removed, so no tombstones).
-    topic_keys: Vec<String>,
+    /// Topic pid → topic key, aligned with `topic_index` (`None` =
+    /// retired pid; compacted once tombstones dominate).
+    topic_keys: Vec<Option<String>>,
     topic_index: ProfileIndex,
     subscriptions: BTreeMap<String, SubscriptionState>,
     /// Subscription pid → consumer name (`None` = retired pid).
@@ -133,7 +140,7 @@ impl Broker {
             // cache of every subscription the new topic matches: one
             // reverse query, not a scan over all subscriptions.
             let pid = self.topic_keys.len() as u32;
-            self.topic_keys.push(key.clone());
+            self.topic_keys.push(Some(key.clone()));
             self.topic_index.insert(pid, profile);
             let counter = self.metrics.counter("broker.match_calls");
             for spid in self.sub_index.reverse_candidates(profile) {
@@ -174,12 +181,12 @@ impl Broker {
             .topic_index
             .forward_candidates(&profile)
             .into_iter()
-            .map(|pid| &self.topic_keys[pid as usize])
+            .filter_map(|pid| self.topic_keys[pid as usize].as_deref())
             .filter(|key| {
                 let (topic_profile, _) = &self.topics[*key];
                 self.matches_counted(&profile, topic_profile)
             })
-            .cloned()
+            .map(str::to_string)
             .collect();
         matched.sort();
 
@@ -218,6 +225,55 @@ impl Broker {
         if let Some(sub) = self.subscriptions.remove(consumer) {
             self.sub_index.remove(sub.pid);
             self.sub_pids[sub.pid as usize] = None;
+        }
+    }
+
+    /// Retire a topic: drop its queue and on-disk segments, tombstone
+    /// its entry in the topic index, and purge it from every
+    /// subscription's match cache (stale cursors are dropped with it —
+    /// a later topic under the same profile is a fresh topic and
+    /// redelivers from the start of retention). Runs zero matcher
+    /// calls. Returns `false` when no such topic exists; errors only
+    /// on a non-simple profile (topics are keyed by simple profiles).
+    pub fn retire_topic(&mut self, profile: &Profile) -> Result<bool> {
+        let key = Self::topic_key(profile)?;
+        if self.topics.remove(&key).is_none() {
+            return Ok(false);
+        }
+        // Tombstone the index entry; the postings go stale and are
+        // filtered at query time until the next compaction. (The pid
+        // scan is a Vec walk, bounded at O(2·live) by compaction.)
+        if let Some(pid) =
+            self.topic_keys.iter().position(|k| k.as_deref() == Some(key.as_str()))
+        {
+            self.topic_index.remove(pid as u32);
+            self.topic_keys[pid] = None;
+        }
+        for sub in self.subscriptions.values_mut() {
+            if let Ok(pos) = sub.matched.binary_search(&key) {
+                sub.matched.remove(pos);
+            }
+            sub.cursors.remove(&key);
+        }
+        // The queue handle dropped with the map entry; reclaim disk.
+        let _ = std::fs::remove_dir_all(self.topic_dir(&key));
+        self.metrics.counter("broker.topics_retired").inc();
+        self.maybe_compact_topic_index();
+        Ok(true)
+    }
+
+    /// Re-pack the topic index once retired pids dominate (topic
+    /// churn), bounding index memory to O(live topics).
+    fn maybe_compact_topic_index(&mut self) {
+        if self.topic_keys.len() < 32 || self.topic_keys.len() < self.topics.len() * 2 {
+            return;
+        }
+        self.topic_keys.clear();
+        self.topic_index = ProfileIndex::new();
+        for (key, (profile, _)) in self.topics.iter() {
+            let pid = self.topic_keys.len() as u32;
+            self.topic_keys.push(Some(key.clone()));
+            self.topic_index.insert(pid, profile);
         }
     }
 
@@ -521,6 +577,86 @@ mod tests {
         let msgs = b.fetch("app", 10).unwrap();
         assert_eq!(msgs.len(), 1, "cursor was dropped → message 1 redelivered");
         assert_eq!(&msgs[0].1[..], b"1");
+    }
+
+    #[test]
+    fn retire_topic_purges_caches_cursors_and_disk() {
+        let mut b = broker("retire");
+        b.publish(&p("a,x"), b"a1").unwrap();
+        b.publish(&p("a,x"), b"a2").unwrap();
+        b.publish(&p("b,x"), b"b1").unwrap();
+        b.subscribe("app", p("*,x"));
+        // Consume a1 so a cursor exists for the doomed topic.
+        while b
+            .fetch("app", 1)
+            .unwrap()
+            .first()
+            .map(|(topic, _)| topic != "a,x")
+            .unwrap_or(true)
+        {}
+        let calls_before = b.match_calls();
+        let dir = b.topic_dir("a,x");
+        assert!(dir.exists(), "topic segments should be on disk");
+        assert!(b.retire_topic(&p("a,x")).unwrap());
+        assert_eq!(b.match_calls(), calls_before, "retirement must not re-run matching");
+        assert!(!dir.exists(), "retirement must reclaim the segments");
+        assert_eq!(b.topic_count(), 1);
+        assert_eq!(b.subscription("app").unwrap().matched_topics(), ["b,x"]);
+        // Only b's backlog remains; the retired topic is gone from fetch.
+        let rest = b.fetch("app", 10).unwrap();
+        assert!(rest.iter().all(|(topic, _)| topic == "b,x"), "{rest:?}");
+        // Double retirement reports "no such topic"; complex profiles error.
+        assert!(!b.retire_topic(&p("a,x")).unwrap());
+        assert!(b.retire_topic(&p("a,*")).is_err());
+        // Re-publishing under the same profile creates a *fresh* topic:
+        // the old cursor was dropped, so delivery restarts at seq 0.
+        b.publish(&p("a,x"), b"a3").unwrap();
+        assert_eq!(b.subscription("app").unwrap().matched_topics(), ["a,x", "b,x"]);
+        let again = b.fetch("app", 10).unwrap();
+        assert_eq!(again.len(), 1);
+        assert_eq!(&again[0].1[..], b"a3");
+    }
+
+    #[test]
+    fn topic_index_compacts_under_churn() {
+        let mut b = broker("topic-churn");
+        b.subscribe("app", p("keep,*"));
+        b.publish(&p("keep,alive"), b"k").unwrap();
+        for i in 0..200 {
+            let profile = p(&format!("burst{i},x"));
+            b.publish(&profile, b"m").unwrap();
+            assert!(b.retire_topic(&profile).unwrap());
+        }
+        assert!(
+            b.topic_keys.len() <= 33,
+            "retired pids must be compacted: {}",
+            b.topic_keys.len()
+        );
+        // The surviving topic still matches and delivers.
+        assert_eq!(b.subscription("app").unwrap().matched_topics(), ["keep,alive"]);
+        assert_eq!(b.fetch("app", 10).unwrap().len(), 1);
+        b.publish(&p("keep,alive"), b"k2").unwrap();
+        assert_eq!(b.lag("app").unwrap(), 1);
+    }
+
+    #[test]
+    fn retire_fixes_round_robin_rotation() {
+        // Retiring a topic shrinks `matched`; the rotating fetch start
+        // must stay in bounds and keep draining the survivors.
+        let mut b = broker("retire-rr");
+        for t in ["a,x", "b,x", "c,x"] {
+            b.publish(&p(t), b"1").unwrap();
+            b.publish(&p(t), b"2").unwrap();
+        }
+        b.subscribe("app", p("*,x"));
+        b.fetch("app", 1).unwrap(); // advance rr past 0
+        assert!(b.retire_topic(&p("c,x")).unwrap());
+        let mut got = 0;
+        for _ in 0..10 {
+            got += b.fetch("app", 1).unwrap().len();
+        }
+        // 6 published, 2 retired with their topic, 1 consumed before.
+        assert_eq!(got, 3);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use super::lidar::LidarTrace;
 use crate::stream::deploy::TopologyManager;
-use crate::stream::engine::StreamEngine;
+use crate::stream::engine::{RescaleReport, StreamEngine};
 use crate::stream::operator::OperatorKind;
 use crate::stream::tuple::Tuple;
 use crate::baselines::edgent_like::EdgentLikePipeline;
@@ -284,6 +284,20 @@ pub fn analytics_spec(parallelism: usize) -> String {
     }
 }
 
+/// The analytics chain with the CPU stage keyed *even at parallelism 1*
+/// — the spec to deploy when the topology may be re-scaled live. The
+/// `@IMG` annotation is inert while serial, but it tells a later
+/// `rescale` how to partition: without it a scale-up degrades to
+/// round-robin and per-image tile order (which the stats windows
+/// depend on) is lost.
+pub fn elastic_analytics_spec(parallelism: usize) -> String {
+    if parallelism <= 1 {
+        "score@IMG->decide->stats@IMG".to_string()
+    } else {
+        analytics_spec(parallelism)
+    }
+}
+
 /// Register the analytics stages on a [`TopologyManager`]. `work`
 /// scales the per-tile scoring cost (1 ≈ one pass over the payload).
 pub fn register_analytics_stages(manager: &mut TopologyManager, work: u32) {
@@ -385,6 +399,67 @@ pub fn run_stream_analytics(spec: &str, tuples: Vec<Tuple>, work: u32) -> Result
         outputs,
         elapsed: started.elapsed(),
     })
+}
+
+/// Drive `tuples` through the analytics topology like
+/// [`run_stream_analytics`], but live-rescale `stage` to `to` replicas
+/// mid-stream, once `rescale_after` tuples have been fed (paper §IV-C2
+/// "scaling up or down" — without stopping the pipeline). The producer
+/// thread issues the rescale itself so feeding and scaling interleave
+/// exactly as they would on an edge node reacting to load. Returns the
+/// run report plus the rescale report; the output multiset must equal a
+/// static run's — asserted by the fig15 rescale arm and the tests
+/// below.
+pub fn run_rescaling_analytics(
+    spec: &str,
+    tuples: Vec<Tuple>,
+    work: u32,
+    stage: &str,
+    to: usize,
+    rescale_after: usize,
+) -> Result<(StreamReport, RescaleReport)> {
+    let mut manager = TopologyManager::new(StreamEngine::new());
+    register_analytics_stages(&mut manager, work);
+    manager.start("analytics", spec)?;
+    let count = tuples.len();
+    let sender = manager.sender("analytics")?;
+    let rescaler = manager.rescaler("analytics")?;
+    let stage = stage.to_string();
+    let started = std::time::Instant::now();
+    let producer = std::thread::spawn(move || -> Result<RescaleReport> {
+        let mut it = tuples.into_iter();
+        let mut fed = 0usize;
+        let mut report = None;
+        loop {
+            if report.is_none() && fed >= rescale_after {
+                report = Some(rescaler.rescale(&stage, to)?);
+            }
+            let batch: Vec<Tuple> = it.by_ref().take(64).collect();
+            if batch.is_empty() {
+                break;
+            }
+            fed += batch.len();
+            sender.send_batch(batch)?;
+        }
+        match report {
+            Some(r) => Ok(r),
+            // Stream shorter than the cut point: rescale at the end.
+            None => rescaler.rescale(&stage, to),
+        }
+    });
+    let stopped = manager.stop("analytics");
+    let produced = producer.join().expect("producer thread panicked");
+    let outputs = stopped?;
+    let report = produced?;
+    Ok((
+        StreamReport {
+            spec: spec.to_string(),
+            tuples: count,
+            outputs,
+            elapsed: started.elapsed(),
+        },
+        report,
+    ))
 }
 
 /// How many 256×256 tiles an image of `nominal` bytes decomposes into
@@ -515,9 +590,12 @@ mod tests {
     fn analytics_spec_shapes() {
         assert_eq!(analytics_spec(1), "score->decide->stats@IMG");
         assert_eq!(analytics_spec(4), "score*4@IMG->decide->stats@IMG");
-        // Both forms parse as valid topologies.
+        assert_eq!(elastic_analytics_spec(1), "score@IMG->decide->stats@IMG");
+        assert_eq!(elastic_analytics_spec(4), analytics_spec(4));
+        // All forms parse as valid topologies.
         for p in [1, 2, 4] {
             rpulsar_parse(&analytics_spec(p));
+            rpulsar_parse(&elastic_analytics_spec(p));
         }
     }
 
@@ -541,6 +619,29 @@ mod tests {
         assert_eq!(canon(&serial), canon(&parallel), "spec: {}", parallel.spec);
         assert!(!serial.outputs.is_empty(), "keyed stats windows must emit aggregates");
         assert!(serial.tuples_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn rescaled_analytics_equals_static_run() {
+        // A mid-stream 1→3 scale-up of the CPU stage must reproduce the
+        // static pipeline's outputs exactly: the keyed shuffle plus the
+        // state handoff keep the per-image stats windows intact.
+        let trace = LidarTrace::generate(9, 6, 0.2);
+        let tuples = trace_tuples(&trace, 512);
+        let cut = tuples.len() / 2;
+        let serial = run_stream_analytics(&analytics_spec(1), tuples.clone(), 1).unwrap();
+        let (rescaled, report) =
+            run_rescaling_analytics(&elastic_analytics_spec(1), tuples, 1, "score", 3, cut)
+                .unwrap();
+        assert_eq!((report.from, report.to), (1, 3));
+        assert_eq!(serial.tuples, rescaled.tuples);
+        let canon = |r: &StreamReport| {
+            let mut v: Vec<String> = r.outputs.iter().map(|t| format!("{:?}", t.fields)).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(canon(&serial), canon(&rescaled), "spec: {}", rescaled.spec);
+        assert!(!rescaled.outputs.is_empty());
     }
 
     #[test]

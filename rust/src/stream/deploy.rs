@@ -1,45 +1,122 @@
-//! On-demand topology deployment (paper §IV-C2: "on-demand topologies
-//! (scaling up or down)"; §IV-D: `start_function` / `stop_function`).
+//! On-demand topology deployment and autoscaling (paper §IV-C2:
+//! "on-demand topologies (scaling up or down)"; §IV-D: `start_function`
+//! / `stop_function`).
 //!
 //! The [`TopologyManager`] holds a registry of *stage factories* (name →
 //! operator constructor) and a table of running instances keyed by the
 //! function-profile rendering. `start` parses the stored topology string
-//! (including `stage*P@KEY` parallelism/key annotations), instantiates
-//! one operator per replica via the stage's factory and launches the
-//! chain on the [`StreamEngine`]; `stop` shuts the instance down and
+//! (including `stage*P@KEY` parallelism/key annotations), builds every
+//! stage as an *elastic* [`StageRuntime`] — the factory stays attached —
+//! and launches the chain on the [`StreamEngine`]; every stage of a
+//! managed topology can therefore be re-scaled live with
+//! [`TopologyManager::rescale`]. `stop` shuts the instance down and
 //! returns its drained trailing output. Operations against a topology
 //! that was never started (or already stopped) fail with the structured
 //! [`Error::NotRunning`].
+//!
+//! [`ScalePolicy`] closes the loop: [`TopologyManager::start_with_policy`]
+//! spawns a watcher thread that reads the executor's
+//! `stream.<topo>.<stage>.*.depth` gauges and rescales stages between
+//! watermarks automatically — the paper's "scaling up or down" under
+//! fluctuating edge load, without an operator in the loop.
 
-use super::engine::{EngineHandle, StageRuntime, StreamEngine};
+use super::engine::{EngineHandle, RescaleReport, Rescaler, StageRuntime, StreamEngine};
 use super::operator::Operator;
 use super::topology::Topology;
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
-/// Constructs a fresh operator instance for a stage name; called once
-/// per replica, so parallel stages never share operator state.
-pub type StageFactory = Box<dyn Fn() -> Box<dyn Operator> + Send>;
+pub use super::engine::StageFactory;
+
+/// Watermark-driven autoscaling of elastic stages.
+///
+/// Every `tick`, the watcher samples each stage's backlog — the maximum
+/// of its router inbound gauge `stream.<t>.<s>.in.depth` and its
+/// per-replica gauges `stream.<t>.<s>.r<i>.depth` (all in batches). A
+/// backlog at or above `high_depth` for `sustain` consecutive ticks
+/// doubles the stage's parallelism (capped at `max_parallelism`); a
+/// backlog at or below `low_depth` for `sustain` ticks halves it
+/// (floored at `min_parallelism`). Set `low_depth` negative to disable
+/// scale-down.
+#[derive(Debug, Clone)]
+pub struct ScalePolicy {
+    /// Scale up when the sampled backlog is ≥ this many batches.
+    pub high_depth: i64,
+    /// Scale down when the sampled backlog is ≤ this many batches.
+    pub low_depth: i64,
+    /// Never scale below this replica count.
+    pub min_parallelism: usize,
+    /// Never scale above this replica count.
+    pub max_parallelism: usize,
+    /// Consecutive out-of-band samples required before acting
+    /// (anti-flapping).
+    pub sustain: u32,
+    /// Sampling period.
+    pub tick: Duration,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> Self {
+        ScalePolicy {
+            high_depth: 16,
+            low_depth: 0,
+            min_parallelism: 1,
+            max_parallelism: 8,
+            sustain: 5,
+            tick: Duration::from_millis(20),
+        }
+    }
+}
+
+impl ScalePolicy {
+    /// The pure scaling decision for one sample: the target parallelism,
+    /// or `None` to hold. (The watcher additionally requires the same
+    /// direction for `sustain` consecutive samples.)
+    pub fn decide(&self, depth: i64, current: usize) -> Option<usize> {
+        if depth >= self.high_depth && current < self.max_parallelism {
+            Some((current * 2).min(self.max_parallelism))
+        } else if depth <= self.low_depth && current > self.min_parallelism {
+            Some((current / 2).max(self.min_parallelism))
+        } else {
+            None
+        }
+    }
+}
+
+/// A running policy watcher: its stop flag and thread handle.
+struct PolicyWatcher {
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
+}
 
 /// Deployment manager for on-demand topologies.
 pub struct TopologyManager {
     engine: StreamEngine,
     factories: BTreeMap<String, StageFactory>,
     running: BTreeMap<String, EngineHandle>,
+    watchers: BTreeMap<String, PolicyWatcher>,
 }
 
 impl TopologyManager {
     pub fn new(engine: StreamEngine) -> Self {
-        TopologyManager { engine, factories: BTreeMap::new(), running: BTreeMap::new() }
+        TopologyManager {
+            engine,
+            factories: BTreeMap::new(),
+            running: BTreeMap::new(),
+            watchers: BTreeMap::new(),
+        }
     }
 
     /// Register a stage factory under a name usable in topology strings.
     pub fn register_stage(
         &mut self,
         name: &str,
-        factory: impl Fn() -> Box<dyn Operator> + Send + 'static,
+        factory: impl Fn() -> Box<dyn Operator> + Send + Sync + 'static,
     ) {
-        self.factories.insert(name.to_string(), Box::new(factory));
+        self.factories.insert(name.to_string(), Arc::new(factory));
     }
 
     /// Known stage names.
@@ -48,7 +125,12 @@ impl TopologyManager {
     }
 
     /// Start a topology instance under `key` (the function profile
-    /// rendering). Fails on unknown stages or duplicate key.
+    /// rendering). Fails on unknown stages, duplicate key, or the
+    /// stateful-stage misuse shapes the engine rejects (unkeyed
+    /// parallel stateful stage; plain window on a keyed stage; stage
+    /// key disagreeing with the operator's state key) — each error
+    /// names the offending stage. Every stage launches elastic, so
+    /// [`TopologyManager::rescale`] works on all of them.
     pub fn start(&mut self, key: &str, spec: &str) -> Result<()> {
         if self.running.contains_key(key) {
             return Err(Error::Stream(format!("topology `{key}` already running")));
@@ -59,19 +141,23 @@ impl TopologyManager {
             let factory = self.factories.get(&stage.name).ok_or_else(|| {
                 Error::Stream(format!("unknown stage `{}` in topology `{spec}`", stage.name))
             })?;
-            let replicas: Vec<_> = (0..stage.parallelism).map(|_| factory()).collect();
-            if stage.parallelism > 1 && stage.key.is_none() && replicas[0].stateful() {
-                return Err(Error::Stream(format!(
-                    "stage `{}` in topology `{spec}` is stateful and parallel; \
-                     add a partition key (`{}*{}@FIELD`) or its output becomes \
-                     an arbitrary function of the shuffle",
-                    stage.name, stage.name, stage.parallelism
-                )));
-            }
-            stages.push(StageRuntime::new(stage.clone(), replicas)?);
+            stages.push(StageRuntime::elastic(stage.clone(), factory.clone())?);
         }
         let handle = self.engine.launch_stages(key, stages)?;
         self.running.insert(key.to_string(), handle);
+        Ok(())
+    }
+
+    /// [`TopologyManager::start`], plus a watcher thread that applies
+    /// `policy` to every stage of the topology until `stop`.
+    pub fn start_with_policy(&mut self, key: &str, spec: &str, policy: ScalePolicy) -> Result<()> {
+        self.start(key, spec)?;
+        let rescaler = self.running[key].rescaler();
+        let metrics = self.engine.metrics().clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let thread = std::thread::spawn(move || run_policy(rescaler, metrics, policy, flag));
+        self.watchers.insert(key.to_string(), PolicyWatcher { stop, thread });
         Ok(())
     }
 
@@ -97,6 +183,26 @@ impl TopologyManager {
         self.handle(key)?.sender()
     }
 
+    /// Live-rescale a stage of a running topology to `parallelism`
+    /// replicas: zero tuple loss or duplication, per-key order
+    /// preserved across the state handoff.
+    pub fn rescale(&self, key: &str, stage: &str, parallelism: usize) -> Result<RescaleReport> {
+        self.handle(key)?.rescale(stage, parallelism)
+    }
+
+    /// Current replica count of a stage of a running topology.
+    pub fn parallelism(&self, key: &str, stage: &str) -> Result<usize> {
+        self.handle(key)?.parallelism(stage).ok_or_else(|| {
+            Error::Stream(format!("topology `{key}` has no stage `{stage}`"))
+        })
+    }
+
+    /// A cloneable live-control handle (rescale + parallelism) for a
+    /// running topology, usable from policy or operator threads.
+    pub fn rescaler(&self, key: &str) -> Result<Rescaler> {
+        Ok(self.handle(key)?.rescaler())
+    }
+
     /// Try to receive one output tuple from a running topology.
     pub fn try_recv(&self, key: &str, timeout: std::time::Duration) -> Option<super::tuple::Tuple> {
         self.running.get(key)?.recv_timeout(timeout)
@@ -109,7 +215,18 @@ impl TopologyManager {
             .running
             .remove(key)
             .ok_or_else(|| Error::NotRunning(format!("topology `{key}`")))?;
-        handle.finish()
+        // Signal the watcher first, then drain. Draining is what
+        // unblocks a watcher stuck mid-rescale behind backpressure, so
+        // the join must come after `finish`.
+        let watcher = self.watchers.remove(key);
+        if let Some(w) = &watcher {
+            w.stop.store(true, Ordering::Relaxed);
+        }
+        let out = handle.finish();
+        if let Some(w) = watcher {
+            let _ = w.thread.join();
+        }
+        out
     }
 
     /// Names of running topologies.
@@ -140,13 +257,91 @@ impl TopologyManager {
     }
 }
 
+/// The watcher loop: sample stage backlogs, debounce with the policy's
+/// `sustain`, rescale. Exits when the stop flag is set or the topology
+/// goes away (a rescale fails with a stopped/failed topology).
+fn run_policy(
+    rescaler: Rescaler,
+    metrics: crate::metrics::Registry,
+    policy: ScalePolicy,
+    stop: Arc<AtomicBool>,
+) {
+    let topo = rescaler.topology().to_string();
+    // Per-stage streak of consecutive same-direction decisions.
+    let mut streaks: BTreeMap<String, (usize, u32)> = BTreeMap::new();
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(policy.tick);
+        for stage in rescaler.elastic_stages() {
+            let current = match rescaler.parallelism(&stage) {
+                Some(p) => p,
+                None => continue,
+            };
+            // Backlog: router inbound plus the replica queues.
+            let mut depth = metrics.gauge(&format!("stream.{topo}.{stage}.in.depth")).get();
+            for r in 0..current {
+                depth = depth.max(metrics.gauge(&format!("stream.{topo}.{stage}.r{r}.depth")).get());
+            }
+            let Some(target) = policy.decide(depth, current) else {
+                streaks.remove(&stage);
+                continue;
+            };
+            let streak = match streaks.get(&stage) {
+                Some((t, n)) if *t == target => n + 1,
+                _ => 1,
+            };
+            if streak < policy.sustain.max(1) {
+                streaks.insert(stage.clone(), (target, streak));
+                continue;
+            }
+            streaks.remove(&stage);
+            match rescaler.rescale(&stage, target) {
+                Ok(report) => log::info!(
+                    "scale policy: {topo}.{stage} {} → {} (backlog {depth})",
+                    report.from,
+                    report.to
+                ),
+                // Stage-level refusals leave the topology healthy; a
+                // cleanly stopped (`NotRunning`) or faulted topology
+                // ends the watcher — checked structurally, never by
+                // parsing message text (stage names are user-chosen).
+                Err(e) => {
+                    log::warn!("scale policy: {topo}.{stage}: {e}");
+                    if matches!(e, Error::NotRunning(_)) || rescaler.fault().is_some() {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for TopologyManager {
+    /// A manager dropped without `stop`/`stop_all` must not leak its
+    /// policy watcher threads: signal them, tear the topologies down
+    /// (which unblocks any watcher stuck mid-rescale — the dying
+    /// routers fail its call), then reap them.
+    fn drop(&mut self) {
+        if self.watchers.is_empty() {
+            return;
+        }
+        for w in self.watchers.values() {
+            w.stop.store(true, Ordering::Relaxed);
+        }
+        self.running.clear();
+        for (_, w) in std::mem::take(&mut self.watchers) {
+            let _ = w.thread.join();
+        }
+    }
+}
+
 impl std::fmt::Debug for TopologyManager {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "TopologyManager(stages={}, running={})",
+            "TopologyManager(stages={}, running={}, watchers={})",
             self.factories.len(),
-            self.running.len()
+            self.running.len(),
+            self.watchers.len()
         )
     }
 }
@@ -236,6 +431,18 @@ mod tests {
     }
 
     #[test]
+    fn keyed_stage_with_mismatched_window_key_rejected() {
+        let mut m = manager();
+        // kwin's per-key state is keyed by X's companion field `K`;
+        // partitioning by a different field would fragment its windows.
+        let err = m.start("f", "kwin*2@OTHER").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("kwin"), "{msg}");
+        assert!(msg.contains("`OTHER`") && msg.contains("`K`"), "{msg}");
+        assert!(m.running().is_empty());
+    }
+
+    #[test]
     fn duplicate_start_fails() {
         let mut m = manager();
         m.start("f", "inc").unwrap();
@@ -250,6 +457,8 @@ mod tests {
         assert!(matches!(err, Error::NotRunning(_)), "send: {err}");
         assert_eq!(err.kind(), "not_running");
         assert!(format!("{err}").contains("ghost"), "error must name the topology: {err}");
+        let err = m.rescale("ghost", "inc", 2).unwrap_err();
+        assert!(matches!(err, Error::NotRunning(_)), "rescale: {err}");
     }
 
     #[test]
@@ -306,5 +515,125 @@ mod tests {
         let err = m.stop_all().unwrap_err();
         assert!(format!("{err}").contains("injected stop_all fault"), "{err}");
         assert!(m.running().is_empty(), "a fault must not strand later topologies");
+    }
+
+    // ---- Live re-scaling through the manager ----
+
+    #[test]
+    fn manager_rescale_moves_keyed_window_state() {
+        let mut m = manager();
+        m.start("r", "kwin*2@K").unwrap();
+        // Half-fill every per-key window, re-partition 2 → 4, then
+        // finish the windows: the counts prove no sample was dropped.
+        let mut seq = 0u64;
+        for _ in 0..2 {
+            for k in 0..5u64 {
+                m.send("r", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0)).unwrap();
+                seq += 1;
+            }
+        }
+        let report = m.rescale("r", "kwin", 4).unwrap();
+        assert_eq!((report.from, report.to), (2, 4));
+        // Un-routed tuples go to the new generation rather than being
+        // exported, so the snapshot count is bounded, not exact.
+        assert!(report.moved_keys <= 5, "{report:?}");
+        assert_eq!(m.parallelism("r", "kwin").unwrap(), 4);
+        for _ in 0..2 {
+            for k in 0..5u64 {
+                m.send("r", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0)).unwrap();
+                seq += 1;
+            }
+        }
+        let out = m.stop("r").unwrap();
+        assert_eq!(out.len(), 5, "each key fills exactly one window of 4");
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(4.0)), "{out:?}");
+    }
+
+    #[test]
+    fn rescale_unknown_stage_is_structured() {
+        let mut m = manager();
+        m.start("r", "inc").unwrap();
+        let err = m.rescale("r", "ghost", 2).unwrap_err();
+        assert!(format!("{err}").contains("no stage `ghost`"), "{err}");
+        let err = m.parallelism("r", "ghost").unwrap_err();
+        assert!(format!("{err}").contains("ghost"), "{err}");
+        m.stop("r").unwrap();
+    }
+
+    // ---- ScalePolicy ----
+
+    #[test]
+    fn policy_decisions_respect_watermarks_and_bounds() {
+        let p = ScalePolicy {
+            high_depth: 8,
+            low_depth: 0,
+            min_parallelism: 1,
+            max_parallelism: 8,
+            sustain: 1,
+            tick: Duration::from_millis(1),
+        };
+        assert_eq!(p.decide(8, 1), Some(2), "high watermark doubles");
+        assert_eq!(p.decide(100, 4), Some(8));
+        assert_eq!(p.decide(100, 8), None, "max cap holds");
+        assert_eq!(p.decide(0, 4), Some(2), "low watermark halves");
+        assert_eq!(p.decide(0, 1), None, "min floor holds");
+        assert_eq!(p.decide(4, 4), None, "between watermarks holds");
+        // Negative low watermark disables scale-down entirely.
+        let up_only = ScalePolicy { low_depth: -1, ..p };
+        assert_eq!(up_only.decide(0, 4), None);
+    }
+
+    #[test]
+    fn dropping_manager_reaps_policy_watchers() {
+        // No stop()/stop_all(): Drop must signal the watcher, tear the
+        // topology down and join — without hanging and without leaking
+        // a 50 Hz polling thread for the process lifetime.
+        let mut m = manager();
+        m.start_with_policy("leak", "inc", ScalePolicy::default()).unwrap();
+        m.send("leak", Tuple::new(0, vec![]).with("X", 1.0)).unwrap();
+        drop(m);
+    }
+
+    #[test]
+    fn policy_scales_up_under_backlog() {
+        // Tiny channels + a slow stage: the inbound gauge saturates, the
+        // watcher must scale the stage up, and every tuple must still
+        // come out exactly once.
+        let mut m = TopologyManager::new(StreamEngine::new().channel_depth(2).batch_capacity(1));
+        m.register_stage("slow", || {
+            Box::new(OperatorKind::map("slow", |t| {
+                std::thread::sleep(Duration::from_micros(300));
+                t
+            }))
+        });
+        let policy = ScalePolicy {
+            high_depth: 1,
+            low_depth: -1, // never scale down: the final count is asserted
+            min_parallelism: 1,
+            max_parallelism: 4,
+            sustain: 1,
+            tick: Duration::from_millis(1),
+        };
+        m.start_with_policy("auto", "slow", policy).unwrap();
+        const N: u64 = 400;
+        let sender = m.sender("auto").unwrap();
+        let producer = std::thread::spawn(move || {
+            for i in 0..N {
+                sender.send(Tuple::new(i, vec![])).unwrap();
+            }
+        });
+        let mut got = 0u64;
+        while got < N {
+            if m.try_recv("auto", Duration::from_secs(10)).is_some() {
+                got += 1;
+            } else {
+                panic!("stream stalled after {got} tuples");
+            }
+        }
+        producer.join().unwrap();
+        let scaled = m.parallelism("auto", "slow").unwrap();
+        assert!(scaled > 1, "watcher never scaled the backlogged stage up");
+        let rest = m.stop("auto").unwrap();
+        assert_eq!(got + rest.len() as u64, N, "zero loss under autoscaling");
     }
 }

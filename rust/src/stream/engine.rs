@@ -1,18 +1,39 @@
-//! Parallel keyed stream execution with batched bounded channels.
+//! Parallel keyed stream execution with batched bounded channels and
+//! live re-scaling.
 //!
 //! Topologies run as a chain of *stages*; each stage has a parallelism
 //! degree (`"map*4"` in the topology spec) and an optional partition key
-//! (`"agg*4@SENSOR"`). A serial stage (`parallelism == 1`) is one worker
-//! thread owning one operator instance; a parallel stage is a router
-//! thread that hash-partitions tuples across `P` replica workers, each
-//! owning its own operator instance. Replica outputs fan back into the
-//! next stage's single inbound channel.
+//! (`"agg*4@SENSOR"`). A static serial stage (`parallelism == 1`, no
+//! factory) is one worker thread owning one operator instance; a
+//! parallel stage is a router thread that hash-partitions tuples across
+//! `P` replica workers, each owning its own operator instance. Replica
+//! outputs fan back into the next stage's single inbound channel.
 //!
-//! **Batching.** Every channel hop moves `Vec<Tuple>` batches, not
-//! single tuples, so channel synchronization is amortized across up to
+//! **Elasticity.** A stage launched with a [`StageFactory`]
+//! ([`StageRuntime::elastic`], or anything deployed through a
+//! `TopologyManager`) is *elastic*: it always runs behind a router (even
+//! at parallelism 1) and [`EngineHandle::rescale`] can change its
+//! replica count live — the router pauses the stage, drains in-flight
+//! batches through an in-band handoff marker, extracts per-key operator
+//! state ([`Operator::export_state`]), re-partitions the key space with
+//! the same hash the shuffle uses, seeds a fresh replica generation
+//! ([`Operator::import_state`]) and resumes. Zero tuples are lost or
+//! duplicated, and per-key order is preserved across the handoff: every
+//! old replica flushes its outputs downstream *before* acknowledging the
+//! marker, and the new generation only starts after every
+//! acknowledgement.
+//!
+//! **Direct exchange.** A *static* keyed parallel stage that follows
+//! another stage skips its router entirely: the upstream workers
+//! partition their outputs straight into the downstream replica queues
+//! (one hop less per tuple). Elastic stages keep their router — it is
+//! the pause point rescaling needs.
+//!
+//! **Batching.** Every channel hop moves tuple batches, not single
+//! tuples, so channel synchronization is amortized across up to
 //! [`DEFAULT_BATCH_CAPACITY`] tuples. A *flush-on-idle* rule bounds
 //! latency: whenever a worker or router finds its inbound queue
-//! momentarily empty it flushes its partial output batch downstream
+//! momentarily empty it flushes its partial output batches downstream
 //! before blocking, so a lone tuple still traverses the whole chain
 //! immediately.
 //!
@@ -21,29 +42,34 @@
 //! block propagates transitively to [`EngineHandle::send`]. Outputs must
 //! be drained concurrently (`recv`) for streams longer than the total
 //! buffering — that *is* the backpressure contract (tokio is unavailable
-//! offline; the paper's engine is JVM-threaded too).
+//! offline; the paper's engine is JVM-threaded too). `rescale` drains
+//! the paused stage downstream, so it blocks under exactly the same
+//! conditions as `send`.
 //!
-//! **Ordering.** Serial topologies preserve global tuple order
-//! end-to-end, exactly like the old thread-per-operator engine. Keyed
-//! parallel stages preserve *per-key* order: equal key values hash to
-//! the same replica, and each replica is FIFO. Unkeyed parallel stages
-//! distribute round-robin and preserve only the multiset of outputs. On
-//! `finish`, replicas drain in replica order (a turn-based gate), so
-//! end-of-stream flushes (window remainders) are deterministic.
+//! **Ordering.** Static serial topologies preserve global tuple order
+//! end-to-end, exactly like the old thread-per-operator engine; an
+//! elastic chain at parallelism 1 preserves the same global order
+//! through its per-stage routers. Keyed parallel stages preserve
+//! *per-key* order: equal key values hash to the same replica, and each
+//! replica is FIFO. Unkeyed parallel stages distribute round-robin and
+//! preserve only the multiset of outputs. On `finish`, replicas drain in
+//! replica order (a turn-based gate), so end-of-stream flushes (window
+//! remainders) are deterministic.
 //!
 //! **Failure.** A panicking or erroring operator replica records its
-//! fault in a shared slot and tears the topology down; `send` and
-//! `finish` surface it as [`Error::Stream`] instead of hanging. See
-//! `docs/stream-executor.md` for the full contract.
+//! fault in a shared slot and tears the topology down; `send`, `finish`
+//! and `rescale` surface it as [`Error::Stream`] instead of hanging. A
+//! replica that faults *during* a handoff aborts the rescale the same
+//! way. See `docs/stream-executor.md` for the full contract.
 
-use super::operator::Operator;
+use super::operator::{KeyState, Operator};
 use super::topology::StageSpec;
 use super::tuple::Tuple;
 use crate::error::{Error, Result};
 use crate::metrics::{Counter, Gauge, Registry};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::panic::AssertUnwindSafe;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -55,10 +81,34 @@ pub const DEFAULT_BATCH_CAPACITY: usize = 64;
 
 type Batch = Vec<Tuple>;
 
-/// A channel endpoint paired with its queue-depth gauge (batches queued
-/// and in flight toward the receiving stage).
+/// A stage inbound endpoint: the receiver plus its queue-depth gauge.
+type Inbound = (Receiver<StreamMsg>, Arc<Gauge>);
+
+/// Constructs a fresh operator instance for a stage. Called once per
+/// replica at launch and again for every replica of a rescaled
+/// generation, so replicas never share operator state.
+pub type StageFactory = Arc<dyn Fn() -> Box<dyn Operator> + Send + Sync>;
+
+/// Messages on stage channels: tuple batches, plus the in-band rescale
+/// marker a router sends its own replicas (never seen anywhere else).
+enum StreamMsg {
+    Batch(Batch),
+    /// Handoff: everything queued before this marker has been routed to
+    /// the replica, which must process it, flush its outputs, export its
+    /// per-key state through the enclosed channel and exit.
+    Export(Sender<ExportReply>),
+}
+
+/// One replica's answer to a handoff marker.
+struct ExportReply {
+    replica: usize,
+    state: std::result::Result<Vec<KeyState>, String>,
+}
+
+/// A channel endpoint paired with its queue-depth gauge (messages queued
+/// and in flight toward the receiving stage, counted in batches).
 struct Port {
-    tx: SyncSender<Batch>,
+    tx: SyncSender<StreamMsg>,
     depth: Arc<Gauge>,
 }
 
@@ -71,8 +121,24 @@ impl Clone for Port {
 impl Port {
     /// Send a non-empty batch; returns false when the receiver is gone.
     fn send(&self, batch: Batch) -> bool {
+        self.send_msg(StreamMsg::Batch(batch))
+    }
+
+    fn send_msg(&self, msg: StreamMsg) -> bool {
         self.depth.add(1);
-        if self.tx.send(batch).is_ok() {
+        if self.tx.send(msg).is_ok() {
+            true
+        } else {
+            self.depth.add(-1);
+            false
+        }
+    }
+
+    /// Non-blocking send; false when the channel is full or closed.
+    /// Used for the rescale wake-up sentinel, which must never block.
+    fn try_send_msg(&self, msg: StreamMsg) -> bool {
+        self.depth.add(1);
+        if self.tx.try_send(msg).is_ok() {
             true
         } else {
             self.depth.add(-1);
@@ -87,6 +153,68 @@ impl Port {
             return true;
         }
         self.send(std::mem::replace(buf, Vec::with_capacity(capacity)))
+    }
+}
+
+/// Where a worker or router sends its outputs: one port (serial hop or
+/// fan-in), or a partition across a downstream replica pool — keyed by
+/// hash when the pool is keyed, round-robin otherwise. Buffers one
+/// partial batch per port with the usual flush-on-full/idle rules.
+struct Emitter {
+    ports: Vec<Port>,
+    bufs: Vec<Batch>,
+    /// Partition key; `None` with several ports means round-robin.
+    key: Option<String>,
+    rr: usize,
+    capacity: usize,
+}
+
+impl Emitter {
+    fn new(ports: Vec<Port>, key: Option<String>, capacity: usize) -> Self {
+        let bufs = (0..ports.len()).map(|_| Vec::with_capacity(capacity)).collect();
+        Emitter { ports, bufs, key, rr: 0, capacity }
+    }
+
+    fn single(port: Port, capacity: usize) -> Self {
+        Self::new(vec![port], None, capacity)
+    }
+
+    /// Same downstream targets, fresh buffers — each worker of a
+    /// generation gets its own view of the shared fan-out.
+    fn clone_fresh(&self) -> Self {
+        Self::new(self.ports.clone(), self.key.clone(), self.capacity)
+    }
+
+    /// Queue one tuple toward its partition, flushing a filled batch;
+    /// false when the receiving side is gone. Tuples missing the key
+    /// field pin to partition 0, exactly like the shuffle.
+    fn emit(&mut self, tuple: Tuple) -> bool {
+        let r = if self.ports.len() == 1 {
+            0
+        } else if let Some(field) = &self.key {
+            match tuple.key_hash(field) {
+                Some(h) => (h % self.ports.len() as u64) as usize,
+                None => 0,
+            }
+        } else {
+            self.rr = (self.rr + 1) % self.ports.len();
+            self.rr
+        };
+        self.bufs[r].push(tuple);
+        if self.bufs[r].len() >= self.capacity {
+            return self.ports[r].flush(&mut self.bufs[r], self.capacity);
+        }
+        true
+    }
+
+    /// Flush every partial batch; false when a receiver is gone.
+    fn flush_all(&mut self) -> bool {
+        for (port, buf) in self.ports.iter().zip(self.bufs.iter_mut()) {
+            if !port.flush(buf, self.capacity) {
+                return false;
+            }
+        }
+        true
     }
 }
 
@@ -108,7 +236,9 @@ impl ErrorSlot {
 }
 
 /// Turn-based gate: replica `i` may flush its end-of-stream output only
-/// after replicas `0..i` have — the ordered-drain rule.
+/// after replicas `0..i` have — the ordered-drain rule. One gate per
+/// replica generation; a rescale discards the old generation's gate
+/// together with its replicas.
 struct FinishGate {
     turn: Mutex<usize>,
     cv: Condvar,
@@ -133,20 +263,25 @@ impl FinishGate {
 }
 
 /// One stage ready to launch: its spec plus one operator instance per
-/// replica (`replicas.len() == spec.parallelism`).
+/// replica (`replicas.len() == spec.parallelism`), and — for elastic
+/// stages — the factory that built them, kept for rescaling.
 pub struct StageRuntime {
     pub spec: StageSpec,
     pub replicas: Vec<Box<dyn Operator>>,
+    /// `Some` makes the stage *elastic*: it runs behind a router even at
+    /// parallelism 1 and [`EngineHandle::rescale`] can rebuild its
+    /// replica pool at any degree.
+    pub factory: Option<StageFactory>,
 }
 
 impl StageRuntime {
-    /// A classic serial stage wrapping a single operator instance.
+    /// A classic static serial stage wrapping a single operator instance.
     pub fn serial(op: Box<dyn Operator>) -> Self {
         let spec = StageSpec::serial(op.name());
-        StageRuntime { spec, replicas: vec![op] }
+        StageRuntime { spec, replicas: vec![op], factory: None }
     }
 
-    /// A stage built from a spec and per-replica instances.
+    /// A static stage built from a spec and per-replica instances.
     pub fn new(spec: StageSpec, replicas: Vec<Box<dyn Operator>>) -> Result<Self> {
         if replicas.is_empty() || replicas.len() != spec.parallelism {
             return Err(Error::Stream(format!(
@@ -156,7 +291,21 @@ impl StageRuntime {
                 replicas.len()
             )));
         }
-        Ok(StageRuntime { spec, replicas })
+        Ok(StageRuntime { spec, replicas, factory: None })
+    }
+
+    /// An elastic stage: `spec.parallelism` replicas built from
+    /// `factory`, which stays attached so a live rescale can rebuild the
+    /// pool at any degree.
+    pub fn elastic(spec: StageSpec, factory: StageFactory) -> Result<Self> {
+        if spec.parallelism == 0 {
+            return Err(Error::Stream(format!(
+                "stage `{}` wants parallelism 0 (must be ≥ 1)",
+                spec.name
+            )));
+        }
+        let replicas = (0..spec.parallelism).map(|_| factory()).collect();
+        Ok(StageRuntime { spec, replicas, factory: Some(factory) })
     }
 }
 
@@ -202,15 +351,146 @@ impl StreamSender {
     }
 }
 
+/// What a completed [`EngineHandle::rescale`] did.
+#[derive(Debug, Clone)]
+pub struct RescaleReport {
+    /// The rescaled stage.
+    pub stage: String,
+    /// Replica count before.
+    pub from: usize,
+    /// Replica count after.
+    pub to: usize,
+    /// Per-key state snapshots moved between replicas in the handoff.
+    pub moved_keys: usize,
+}
+
+/// Live control messages to an elastic stage's router.
+enum Control {
+    Rescale { degree: usize, ack: SyncSender<Result<RescaleReport>> },
+}
+
+/// Control-plane endpoints of one elastic stage: the command channel
+/// plus a port into the stage's data inbound, used to wake an idle
+/// (blocked) router with a no-op sentinel — idle stages cost zero
+/// periodic wakeups.
+struct StageControl {
+    ctrl: Sender<Control>,
+    nudge: Port,
+}
+
+/// Cloneable live-control handle for a running topology: rescale elastic
+/// stages and read their current parallelism without borrowing the
+/// [`EngineHandle`] (scale-policy threads hold one of these).
+#[derive(Clone)]
+pub struct Rescaler {
+    inner: Arc<RescalerInner>,
+}
+
+struct RescalerInner {
+    name: String,
+    error: ErrorSlot,
+    /// Stage name → control endpoints (`None` = static stage).
+    controls: BTreeMap<String, Option<StageControl>>,
+    /// Advisory view of each stage's replica count, updated from rescale
+    /// acknowledgements (the stage's router is the source of truth).
+    parallelism: Mutex<BTreeMap<String, usize>>,
+}
+
+impl Rescaler {
+    /// The topology this handle controls.
+    pub fn topology(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Names of the elastic (rescalable) stages.
+    pub fn elastic_stages(&self) -> Vec<String> {
+        self.inner
+            .controls
+            .iter()
+            .filter(|(_, c)| c.is_some())
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    /// Current replica count of a stage (`None` for unknown stages).
+    pub fn parallelism(&self, stage: &str) -> Option<usize> {
+        self.inner.parallelism.lock().unwrap().get(stage).copied()
+    }
+
+    /// Change `stage` to `parallelism` replicas, live. Blocks until the
+    /// stage's router has drained the replica pool, moved its per-key
+    /// state and resumed — under the same backpressure conditions as
+    /// `send` (outputs must be drained concurrently). Fails with
+    /// [`Error::Stream`] naming the stage when the stage is unknown,
+    /// static, stateful-but-not-per-key, or when the topology has
+    /// failed; a cleanly stopped topology yields [`Error::NotRunning`].
+    pub fn rescale(&self, stage: &str, parallelism: usize) -> Result<RescaleReport> {
+        if parallelism == 0 {
+            return Err(Error::Stream(format!(
+                "stage `{stage}`: cannot rescale to parallelism 0 (must be ≥ 1)"
+            )));
+        }
+        let control = match self.inner.controls.get(stage) {
+            None => {
+                return Err(Error::Stream(format!(
+                    "topology `{}` has no stage `{stage}`",
+                    self.inner.name
+                )))
+            }
+            Some(None) => {
+                return Err(Error::Stream(format!(
+                    "stage `{stage}` is not elastic: it was launched without a stage \
+                     factory (use `StageRuntime::elastic` or a `TopologyManager`)"
+                )))
+            }
+            Some(Some(control)) => control,
+        };
+        let (ack_tx, ack_rx) = sync_channel(1);
+        control
+            .ctrl
+            .send(Control::Rescale { degree: parallelism, ack: ack_tx })
+            .map_err(|_| self.stopped_error())?;
+        // Wake the router if it is parked on an empty inbound: a no-op
+        // sentinel batch. Skipped harmlessly when the channel is full —
+        // a busy router checks control between batches anyway.
+        let _ = control.nudge.try_send_msg(StreamMsg::Batch(Vec::new()));
+        let report = ack_rx.recv().map_err(|_| self.stopped_error())??;
+        self.inner
+            .parallelism
+            .lock()
+            .unwrap()
+            .insert(stage.to_string(), report.to);
+        Ok(report)
+    }
+
+    /// The recorded stage fault, if the topology has failed.
+    pub fn fault(&self) -> Option<String> {
+        self.inner.error.get()
+    }
+
+    fn stopped_error(&self) -> Error {
+        match self.inner.error.get() {
+            Some(cause) => {
+                Error::Stream(format!("topology `{}` failed: {cause}", self.inner.name))
+            }
+            // Clean shutdown: structurally distinguishable (`NotRunning`)
+            // so policy threads don't have to parse message text.
+            None => Error::NotRunning(format!("topology `{}` (stopped)", self.inner.name)),
+        }
+    }
+}
+
 /// A running topology instance.
 pub struct EngineHandle {
     input: Option<StreamSender>,
-    output: Receiver<Batch>,
+    output: Receiver<StreamMsg>,
     output_depth: Arc<Gauge>,
     pending: Mutex<VecDeque<Tuple>>,
     threads: Vec<JoinHandle<()>>,
     error: ErrorSlot,
     name: String,
+    rescaler: Rescaler,
+    linked: Vec<String>,
 }
 
 impl EngineHandle {
@@ -244,6 +524,30 @@ impl EngineHandle {
             .ok_or_else(|| Error::Stream("engine already closed".into()))
     }
 
+    /// Live-rescale an elastic stage to `parallelism` replicas without
+    /// stopping the topology: zero tuple loss or duplication, per-key
+    /// order preserved across the handoff. See [`Rescaler::rescale`].
+    pub fn rescale(&self, stage: &str, parallelism: usize) -> Result<RescaleReport> {
+        self.rescaler.rescale(stage, parallelism)
+    }
+
+    /// Current replica count of a stage (advisory; updated on every
+    /// acknowledged rescale).
+    pub fn parallelism(&self, stage: &str) -> Option<usize> {
+        self.rescaler.parallelism(stage)
+    }
+
+    /// A cloneable control handle for scale-policy threads.
+    pub fn rescaler(&self) -> Rescaler {
+        self.rescaler.clone()
+    }
+
+    /// Stages fed by direct replica→replica exchange (no router hop):
+    /// static keyed parallel stages after the first stage.
+    pub fn linked_stages(&self) -> &[String] {
+        &self.linked
+    }
+
     /// Receive one output tuple (blocking). `None` after completion.
     pub fn recv(&self) -> Option<Tuple> {
         let mut pending = self.pending.lock().unwrap();
@@ -252,9 +556,11 @@ impl EngineHandle {
                 return Some(t);
             }
             match self.output.recv() {
-                Ok(batch) => {
+                Ok(msg) => {
                     self.output_depth.add(-1);
-                    pending.extend(batch);
+                    if let StreamMsg::Batch(batch) = msg {
+                        pending.extend(batch);
+                    }
                 }
                 Err(_) => return None,
             }
@@ -271,9 +577,11 @@ impl EngineHandle {
             }
             let left = deadline.checked_duration_since(std::time::Instant::now())?;
             match self.output.recv_timeout(left) {
-                Ok(batch) => {
+                Ok(msg) => {
                     self.output_depth.add(-1);
-                    pending.extend(batch);
+                    if let StreamMsg::Batch(batch) = msg {
+                        pending.extend(batch);
+                    }
                 }
                 Err(_) => return None,
             }
@@ -291,9 +599,11 @@ impl EngineHandle {
     pub fn finish(mut self) -> Result<Vec<Tuple>> {
         drop(self.input.take()); // close our input copy → stages drain
         let mut out: Vec<Tuple> = self.pending.lock().unwrap().drain(..).collect();
-        while let Ok(batch) = self.output.recv() {
+        while let Ok(msg) = self.output.recv() {
             self.output_depth.add(-1);
-            out.extend(batch);
+            if let StreamMsg::Batch(batch) = msg {
+                out.extend(batch);
+            }
         }
         for t in self.threads.drain(..) {
             t.join().map_err(|_| Error::Stream("stage thread panicked".into()))?;
@@ -349,178 +659,349 @@ impl StreamEngine {
     }
 
     /// Launch a serial chain of operators as one running topology —
-    /// the classic API; each operator becomes a parallelism-1 stage.
+    /// the classic API; each operator becomes a static parallelism-1
+    /// stage.
     pub fn launch(&self, name: &str, operators: Vec<Box<dyn Operator>>) -> Result<EngineHandle> {
         self.launch_stages(name, operators.into_iter().map(StageRuntime::serial).collect())
     }
 
-    /// Launch a chain of (possibly parallel, possibly keyed) stages.
+    /// Launch a chain of (possibly parallel, keyed, elastic) stages.
+    ///
+    /// Rejects — naming the stage — a parallel stage whose operator is
+    /// stateful without a partition key, whose stateful operator keeps
+    /// monolithic (non-per-key) state, or whose operator state key
+    /// disagrees with the stage key: each of those silently corrupts
+    /// window state under the shuffle.
     pub fn launch_stages(&self, name: &str, stages: Vec<StageRuntime>) -> Result<EngineHandle> {
         if stages.is_empty() {
             return Err(Error::Stream("topology needs at least one operator".into()));
         }
+        let mut names = std::collections::BTreeSet::new();
         for s in &stages {
-            if s.replicas.is_empty() || s.replicas.len() != s.spec.parallelism {
+            validate_stage(s)?;
+            // Stage names key the control plane (rescale) and the
+            // metrics; `Topology::parse` already rejects duplicates,
+            // this covers programmatic callers.
+            if !names.insert(s.spec.name.clone()) {
                 return Err(Error::Stream(format!(
-                    "stage `{}` wants parallelism {} but got {} operator instance(s)",
-                    s.spec.name,
-                    s.spec.parallelism,
-                    s.replicas.len()
+                    "duplicate stage `{}` in topology `{name}`",
+                    s.spec.name
                 )));
             }
         }
 
         let error = ErrorSlot::default();
         let mut threads = Vec::new();
-        let stage_names: Vec<String> = stages.iter().map(|s| s.spec.name.clone()).collect();
+        let mut controls: BTreeMap<String, Option<StageControl>> = BTreeMap::new();
+        let mut parallelism: BTreeMap<String, usize> = BTreeMap::new();
+        let mut linked_names: Vec<String> = Vec::new();
 
-        let (input_tx, mut prev_rx) = sync_channel::<Batch>(self.channel_depth);
-        let mut prev_depth =
-            self.metrics.gauge(&format!("stream.{name}.{}.in.depth", stage_names[0]));
-        let input_port = Port { tx: input_tx, depth: prev_depth.clone() };
+        let n = stages.len();
+        // A stage is *elastic* (rescalable; always routed) when it
+        // carries a factory; *linked* when it is a static keyed parallel
+        // stage that the upstream workers can feed directly, skipping
+        // the router hop. The first stage keeps its router: the engine
+        // input is a single channel.
+        let elastic: Vec<bool> = stages.iter().map(|s| s.factory.is_some()).collect();
+        let linked: Vec<bool> = stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| i > 0 && !elastic[i] && s.spec.parallelism > 1 && s.spec.key.is_some())
+            .collect();
+        let specs: Vec<StageSpec> = stages.iter().map(|s| s.spec.clone()).collect();
+
+        // Engine input feeds stage 0 through a single channel even when
+        // stage 0 is parallel (its router partitions).
+        let (input_tx, rx0) = sync_channel::<StreamMsg>(self.channel_depth);
+        let in_depth0 = self.metrics.gauge(&format!("stream.{name}.{}.in.depth", specs[0].name));
+        let input_port = Port { tx: input_tx, depth: in_depth0.clone() };
+
+        // Inbound(s) for the stage being wired, produced while wiring
+        // the previous one; `next_port` is a send-side clone of the
+        // single inbound, kept so elastic stages can be nudged awake.
+        let mut next_single: Option<Inbound> = Some((rx0, in_depth0));
+        let mut next_port: Option<Port> = Some(input_port.clone());
+        let mut next_linked: Option<Vec<Inbound>> = None;
+        let mut engine_out: Option<Inbound> = None;
 
         for (si, stage) in stages.into_iter().enumerate() {
-            let StageRuntime { spec, replicas } = stage;
-            // The hop after this stage: the next stage's inbound queue,
-            // or the engine output.
-            let hop = match stage_names.get(si + 1) {
-                Some(next) => format!("stream.{name}.{next}.in.depth"),
-                None => format!("stream.{name}.out.depth"),
-            };
-            let (tx, rx) = sync_channel::<Batch>(self.channel_depth);
-            let out_depth = self.metrics.gauge(&hop);
-            let out_port = Port { tx, depth: out_depth.clone() };
+            let StageRuntime { spec, replicas, factory } = stage;
+            parallelism.insert(spec.name.clone(), spec.parallelism);
+            self.metrics
+                .gauge(&format!("stream.{name}.{}.parallelism", spec.name))
+                .set(spec.parallelism as i64);
+            let my_single = next_single.take();
+            let my_port = next_port.take();
+            let my_linked = next_linked.take();
 
-            let total = self.metrics.counter(&format!("stage.{name}.{}.out", spec.name));
-            if spec.parallelism == 1 {
-                let ctx = WorkerCtx {
-                    rx: prev_rx,
-                    rx_depth: prev_depth,
-                    out: out_port,
-                    batch_capacity: self.batch_capacity,
-                    total,
-                    replica: self.metrics.counter(&format!("stage.{name}.{}.r0.out", spec.name)),
-                    error: error.clone(),
-                    gate: None,
-                    stage: spec.name.clone(),
-                };
-                let mut op = replicas.into_iter().next().unwrap();
-                threads.push(std::thread::spawn(move || run_worker(op.as_mut(), ctx)));
-            } else {
-                let degree = spec.parallelism;
-                let gate = Arc::new(FinishGate::new());
-                let mut replica_ports = Vec::with_capacity(degree);
-                let mut replica_rxs = Vec::with_capacity(degree);
-                for r in 0..degree {
-                    let (rtx, rrx) = sync_channel::<Batch>(self.channel_depth);
-                    let rdepth = self
+            // ---- This stage's output emitter. ----
+            let out = if si + 1 == n {
+                let (tx, rx) = sync_channel::<StreamMsg>(self.channel_depth);
+                let depth = self.metrics.gauge(&format!("stream.{name}.out.depth"));
+                engine_out = Some((rx, depth.clone()));
+                Emitter::single(Port { tx, depth }, self.batch_capacity)
+            } else if linked[si + 1] {
+                // Direct exchange: create the downstream replica
+                // channels now; this stage's workers (or router)
+                // partition straight into them.
+                let next = &specs[si + 1];
+                let mut ports = Vec::with_capacity(next.parallelism);
+                let mut rxs = Vec::with_capacity(next.parallelism);
+                for r in 0..next.parallelism {
+                    let (tx, rx) = sync_channel::<StreamMsg>(self.channel_depth);
+                    let depth = self
                         .metrics
-                        .gauge(&format!("stream.{name}.{}.r{r}.depth", spec.name));
-                    replica_ports.push(Port { tx: rtx, depth: rdepth.clone() });
-                    replica_rxs.push((rrx, rdepth));
+                        .gauge(&format!("stream.{name}.{}.r{r}.depth", next.name));
+                    ports.push(Port { tx, depth: depth.clone() });
+                    rxs.push((rx, depth));
                 }
-                for (r, (mut op, (rrx, rdepth))) in
-                    replicas.into_iter().zip(replica_rxs).enumerate()
+                next_linked = Some(rxs);
+                Emitter::new(ports, next.key.clone(), self.batch_capacity)
+            } else {
+                let (tx, rx) = sync_channel::<StreamMsg>(self.channel_depth);
+                let depth = self
+                    .metrics
+                    .gauge(&format!("stream.{name}.{}.in.depth", specs[si + 1].name));
+                let port = Port { tx, depth: depth.clone() };
+                next_single = Some((rx, depth));
+                next_port = Some(port.clone());
+                Emitter::single(port, self.batch_capacity)
+            };
+
+            // ---- Spawn the stage. ----
+            let total = self.metrics.counter(&format!("stage.{name}.{}.out", spec.name));
+            if linked[si] {
+                // Fed directly by the upstream stage; no router thread.
+                linked_names.push(spec.name.clone());
+                controls.insert(spec.name.clone(), None);
+                let gate = Arc::new(FinishGate::new());
+                let rxs = my_linked.expect("linked stage has replica inbounds");
+                for (r, (mut op, (rx, rx_depth))) in
+                    replicas.into_iter().zip(rxs).enumerate()
                 {
                     let ctx = WorkerCtx {
-                        rx: rrx,
-                        rx_depth: rdepth,
-                        out: out_port.clone(),
-                        batch_capacity: self.batch_capacity,
+                        rx,
+                        rx_depth,
+                        out: out.clone_fresh(),
                         total: total.clone(),
                         replica: self
                             .metrics
                             .counter(&format!("stage.{name}.{}.r{r}.out", spec.name)),
                         error: error.clone(),
                         gate: Some((gate.clone(), r)),
+                        index: r,
                         stage: format!("{}[r{r}]", spec.name),
                     };
                     threads.push(std::thread::spawn(move || run_worker(op.as_mut(), ctx)));
                 }
-                drop(out_port); // workers hold the fan-in clones
+                // `out` drops here: the workers hold the only clones.
+            } else if elastic[si] || spec.parallelism > 1 {
+                let (rx, rx_depth) = my_single.expect("routed stage has a single inbound");
+                let control = if elastic[si] {
+                    let (ctl_tx, ctl_rx) = channel::<Control>();
+                    let nudge = my_port.expect("routed stage has an inbound port");
+                    controls.insert(spec.name.clone(), Some(StageControl { ctrl: ctl_tx, nudge }));
+                    Some(ctl_rx)
+                } else {
+                    controls.insert(spec.name.clone(), None);
+                    None
+                };
+                let stateful = replicas[0].stateful();
+                let state_key = replicas[0].state_key().map(str::to_string);
                 let ctx = RouterCtx {
-                    rx: prev_rx,
-                    rx_depth: prev_depth,
-                    outs: replica_ports,
+                    topo: name.to_string(),
+                    stage: spec.name.clone(),
                     key: spec.key.clone(),
+                    rx,
+                    rx_depth,
+                    control,
+                    factory,
+                    initial: replicas,
+                    out_proto: out,
                     batch_capacity: self.batch_capacity,
+                    channel_depth: self.channel_depth,
+                    metrics: self.metrics.clone(),
+                    total,
+                    error: error.clone(),
+                    stateful,
+                    state_key,
+                    rescales: self
+                        .metrics
+                        .counter(&format!("stream.{name}.{}.rescales", spec.name)),
+                    par_gauge: self
+                        .metrics
+                        .gauge(&format!("stream.{name}.{}.parallelism", spec.name)),
                 };
                 threads.push(std::thread::spawn(move || run_router(ctx)));
+            } else {
+                // Classic static serial stage: one bare worker thread.
+                controls.insert(spec.name.clone(), None);
+                let (rx, rx_depth) = my_single.expect("serial stage has a single inbound");
+                let ctx = WorkerCtx {
+                    rx,
+                    rx_depth,
+                    out,
+                    total,
+                    replica: self.metrics.counter(&format!("stage.{name}.{}.r0.out", spec.name)),
+                    error: error.clone(),
+                    gate: None,
+                    index: 0,
+                    stage: spec.name.clone(),
+                };
+                let mut op = replicas.into_iter().next().unwrap();
+                threads.push(std::thread::spawn(move || run_worker(op.as_mut(), ctx)));
             }
-            prev_rx = rx;
-            prev_depth = out_depth;
         }
 
+        let (out_rx, out_depth) = engine_out.expect("last stage wires the engine output");
+        let rescaler = Rescaler {
+            inner: Arc::new(RescalerInner {
+                name: name.to_string(),
+                error: error.clone(),
+                controls,
+                parallelism: Mutex::new(parallelism),
+            }),
+        };
         Ok(EngineHandle {
             input: Some(StreamSender {
                 port: input_port,
                 error: error.clone(),
                 name: name.to_string(),
             }),
-            output: prev_rx,
-            output_depth: prev_depth,
+            output: out_rx,
+            output_depth: out_depth,
             pending: Mutex::new(VecDeque::new()),
             threads,
             error,
             name: name.to_string(),
+            rescaler,
+            linked: linked_names,
         })
     }
 }
 
+/// Launch-time misuse checks (the contract holes PR 2 left open): a
+/// parallel stateful stage must be keyed, its operator state must be
+/// per-key, and the operator key must agree with the stage key.
+fn validate_stage(s: &StageRuntime) -> Result<()> {
+    if s.replicas.is_empty() || s.replicas.len() != s.spec.parallelism {
+        return Err(Error::Stream(format!(
+            "stage `{}` wants parallelism {} but got {} operator instance(s)",
+            s.spec.name,
+            s.spec.parallelism,
+            s.replicas.len()
+        )));
+    }
+    if s.spec.parallelism > 1 && s.replicas[0].stateful() {
+        let name = &s.spec.name;
+        match (&s.spec.key, s.replicas[0].state_key()) {
+            (None, _) => {
+                return Err(Error::Stream(format!(
+                    "stage `{name}` is stateful and parallel; add a partition key \
+                     (`{name}*{}@FIELD`) or its output becomes an arbitrary function \
+                     of the shuffle",
+                    s.spec.parallelism
+                )))
+            }
+            (Some(k), None) => {
+                return Err(Error::Stream(format!(
+                    "stage `{name}` is keyed by `{k}` but its operator keeps one window \
+                     across every key a replica owns, so results change with \
+                     parallelism; use a per-key operator (`OperatorKind::window_by`)"
+                )))
+            }
+            (Some(k), Some(sk)) if !sk.eq_ignore_ascii_case(k) => {
+                return Err(Error::Stream(format!(
+                    "stage `{name}` partitions tuples by `{k}` but its operator state \
+                     is keyed by `{sk}`; the stage key and the operator key must agree"
+                )))
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
 struct WorkerCtx {
-    rx: Receiver<Batch>,
+    rx: Receiver<StreamMsg>,
     rx_depth: Arc<Gauge>,
-    out: Port,
-    batch_capacity: usize,
+    out: Emitter,
     total: Arc<Counter>,
     replica: Arc<Counter>,
     error: ErrorSlot,
     /// `(gate, replica_index)` for replicas of a parallel stage.
     gate: Option<(Arc<FinishGate>, usize)>,
+    /// Replica index within the stage (0 for serial workers).
+    index: usize,
     stage: String,
 }
 
 /// One stage worker: process batches, re-batch outputs, flush on full
 /// or idle; on end-of-stream take the drain turn and flush the
-/// operator's `finish` output.
-fn run_worker(op: &mut dyn Operator, ctx: WorkerCtx) {
-    let mut buf: Batch = Vec::with_capacity(ctx.batch_capacity);
+/// operator's `finish` output; on a handoff marker, flush, export the
+/// operator's per-key state and exit (the generation is over).
+fn run_worker(op: &mut dyn Operator, mut ctx: WorkerCtx) {
     let clean = 'stream: loop {
-        // Prefer already-queued batches; when idle, flush the partial
-        // output batch downstream (latency bound), then block.
-        let batch = match ctx.rx.try_recv() {
-            Ok(b) => b,
+        // Prefer already-queued messages; when idle, flush the partial
+        // output batches downstream (latency bound), then block.
+        let msg = match ctx.rx.try_recv() {
+            Ok(m) => m,
             Err(TryRecvError::Empty) => {
-                if !ctx.out.flush(&mut buf, ctx.batch_capacity) {
+                if !ctx.out.flush_all() {
                     break 'stream false;
                 }
                 match ctx.rx.recv() {
-                    Ok(b) => b,
+                    Ok(m) => m,
                     Err(_) => break 'stream true,
                 }
             }
             Err(TryRecvError::Disconnected) => break 'stream true,
         };
         ctx.rx_depth.add(-1);
-        for tuple in batch {
-            match catch(AssertUnwindSafe(|| op.process(tuple))) {
-                Ok(outs) => {
-                    for t in outs {
-                        ctx.total.inc();
-                        ctx.replica.inc();
-                        buf.push(t);
-                        if buf.len() >= ctx.batch_capacity
-                            && !ctx.out.flush(&mut buf, ctx.batch_capacity)
-                        {
-                            break 'stream false;
+        match msg {
+            StreamMsg::Batch(batch) => {
+                for tuple in batch {
+                    match catch(AssertUnwindSafe(|| op.process(tuple))) {
+                        Ok(outs) => {
+                            for t in outs {
+                                ctx.total.inc();
+                                ctx.replica.inc();
+                                if !ctx.out.emit(t) {
+                                    break 'stream false;
+                                }
+                            }
+                        }
+                        Err(fault) => {
+                            log::error!("stage {} {fault}", ctx.stage);
+                            ctx.error.set(format!("stage `{}` {fault}", ctx.stage));
+                            break 'stream false; // topology tears down
                         }
                     }
                 }
-                Err(fault) => {
-                    log::error!("stage {} {fault}", ctx.stage);
-                    ctx.error.set(format!("stage `{}` {fault}", ctx.stage));
-                    break 'stream false; // topology tears down
+            }
+            StreamMsg::Export(reply) => {
+                // Rescale handoff. Everything queued before the marker
+                // has been processed; flush pending outputs downstream
+                // *before* replying, so the next generation's outputs
+                // for any key come strictly after this one's.
+                let state = if ctx.out.flush_all() {
+                    catch(AssertUnwindSafe(|| op.export_state()))
+                } else {
+                    Err("downstream closed during handoff".to_string())
+                };
+                if let Err(fault) = &state {
+                    log::error!("stage {} handoff {fault}", ctx.stage);
+                    ctx.error.set(format!("stage `{}` handoff {fault}", ctx.stage));
                 }
+                let _ = reply.send(ExportReply { replica: ctx.index, state });
+                // Advance the (old) gate even here: an aborted rescale
+                // leaves a mix of exported and surviving replicas, and a
+                // survivor draining later must never wait on a turn an
+                // exported replica can no longer take.
+                if let Some((gate, _)) = &ctx.gate {
+                    gate.advance();
+                }
+                return;
             }
         }
     };
@@ -532,12 +1013,18 @@ fn run_worker(op: &mut dyn Operator, ctx: WorkerCtx) {
         }
         match catch(AssertUnwindSafe(|| op.finish())) {
             Ok(outs) => {
+                let mut alive = true;
                 for t in outs {
                     ctx.total.inc();
                     ctx.replica.inc();
-                    buf.push(t);
+                    if !ctx.out.emit(t) {
+                        alive = false;
+                        break;
+                    }
                 }
-                let _ = ctx.out.flush(&mut buf, ctx.batch_capacity);
+                if alive {
+                    let _ = ctx.out.flush_all();
+                }
             }
             Err(fault) => {
                 log::error!("stage {} flush {fault}", ctx.stage);
@@ -556,63 +1043,288 @@ fn run_worker(op: &mut dyn Operator, ctx: WorkerCtx) {
 }
 
 struct RouterCtx {
-    rx: Receiver<Batch>,
-    rx_depth: Arc<Gauge>,
-    outs: Vec<Port>,
+    topo: String,
+    stage: String,
+    /// Stage partition key (`None` → round-robin).
     key: Option<String>,
+    rx: Receiver<StreamMsg>,
+    rx_depth: Arc<Gauge>,
+    /// Present on elastic stages only.
+    control: Option<Receiver<Control>>,
+    /// Present on elastic stages only: rebuilds replicas at rescale.
+    factory: Option<StageFactory>,
+    /// The launch generation's operator instances.
+    initial: Vec<Box<dyn Operator>>,
+    /// Downstream prototype; each worker gets a fresh-buffered clone.
+    out_proto: Emitter,
     batch_capacity: usize,
+    channel_depth: usize,
+    metrics: Registry,
+    total: Arc<Counter>,
+    error: ErrorSlot,
+    stateful: bool,
+    state_key: Option<String>,
+    rescales: Arc<Counter>,
+    par_gauge: Arc<Gauge>,
 }
 
-/// Shuffle stage: partition inbound tuples across replica queues —
-/// by key-field hash when keyed (per-key order preservation), else
-/// round-robin — with the same full/idle flush rules as workers.
-/// Tuples missing the key field pin to replica 0.
-fn run_router(ctx: RouterCtx) {
-    let degree = ctx.outs.len();
-    let mut bufs: Vec<Batch> =
-        (0..degree).map(|_| Vec::with_capacity(ctx.batch_capacity)).collect();
-    let mut rr = 0usize;
+/// One replica generation of a routed stage: the router's partitioning
+/// emitter over the replica queues, plus the worker join handles.
+struct Generation {
+    emitter: Emitter,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Shuffle stage: partition inbound tuples across the current replica
+/// generation — by key-field hash when keyed (per-key order
+/// preservation), else round-robin — with the same full/idle flush
+/// rules as workers. Elastic routers also drain a control channel,
+/// checked between batches (an idle router is woken by the rescaler's
+/// in-band sentinel), and apply live rescales at those points.
+fn run_router(mut ctx: RouterCtx) {
+    let initial = std::mem::take(&mut ctx.initial);
+    let mut gen = spawn_generation(&ctx, initial);
+    let mut control = ctx.control.take();
     'stream: loop {
-        let batch = match ctx.rx.try_recv() {
-            Ok(b) => b,
-            Err(TryRecvError::Empty) => {
-                for (port, buf) in ctx.outs.iter().zip(bufs.iter_mut()) {
-                    if !port.flush(buf, ctx.batch_capacity) {
+        let mut drop_control = false;
+        if let Some(ctrl) = &control {
+            match ctrl.try_recv() {
+                Ok(Control::Rescale { degree, ack }) => {
+                    if !apply_rescale(&ctx, &mut gen, degree, ack) {
                         break 'stream;
                     }
+                    continue 'stream;
+                }
+                Err(TryRecvError::Empty) => {}
+                // All control handles dropped: revert to plain blocking.
+                Err(TryRecvError::Disconnected) => drop_control = true,
+            }
+        }
+        if drop_control {
+            control = None;
+        }
+        // Idle routers park on the plain blocking receive: a rescale
+        // request wakes them with the in-band no-op sentinel, so an
+        // idle stage costs zero periodic wakeups.
+        let msg = match ctx.rx.try_recv() {
+            Ok(m) => m,
+            Err(TryRecvError::Empty) => {
+                if !gen.emitter.flush_all() {
+                    break 'stream;
                 }
                 match ctx.rx.recv() {
-                    Ok(b) => b,
+                    Ok(m) => m,
                     Err(_) => break 'stream,
                 }
             }
             Err(TryRecvError::Disconnected) => break 'stream,
         };
         ctx.rx_depth.add(-1);
-        for tuple in batch {
-            let r = match &ctx.key {
-                Some(field) => match tuple.key_hash(field) {
-                    Some(h) => (h % degree as u64) as usize,
-                    None => 0,
-                },
-                None => {
-                    rr = (rr + 1) % degree;
-                    rr
+        match msg {
+            StreamMsg::Batch(batch) => {
+                for tuple in batch {
+                    if !gen.emitter.emit(tuple) {
+                        break 'stream;
+                    }
                 }
-            };
-            bufs[r].push(tuple);
-            if bufs[r].len() >= ctx.batch_capacity && !ctx.outs[r].flush(&mut bufs[r], ctx.batch_capacity)
-            {
-                break 'stream;
+            }
+            // Handoff markers only ever flow router → replica.
+            StreamMsg::Export(_) => {}
+        }
+    }
+    // Teardown: flush what routed, close the replica queues, reap the
+    // workers; the downstream prototype drops when `ctx` does — after
+    // every replica has flushed through its own clone.
+    let _ = gen.emitter.flush_all();
+    drop(gen.emitter);
+    for w in gen.workers {
+        let _ = w.join();
+    }
+}
+
+/// Build and start a replica generation: per-replica queues, a fresh
+/// finish gate, one worker thread per operator instance.
+fn spawn_generation(ctx: &RouterCtx, ops: Vec<Box<dyn Operator>>) -> Generation {
+    let degree = ops.len();
+    let gate = Arc::new(FinishGate::new());
+    let mut ports = Vec::with_capacity(degree);
+    let mut workers = Vec::with_capacity(degree);
+    for (r, mut op) in ops.into_iter().enumerate() {
+        let (tx, rx) = sync_channel::<StreamMsg>(ctx.channel_depth);
+        let depth = ctx
+            .metrics
+            .gauge(&format!("stream.{}.{}.r{r}.depth", ctx.topo, ctx.stage));
+        ports.push(Port { tx, depth: depth.clone() });
+        let wctx = WorkerCtx {
+            rx,
+            rx_depth: depth,
+            out: ctx.out_proto.clone_fresh(),
+            total: ctx.total.clone(),
+            replica: ctx
+                .metrics
+                .counter(&format!("stage.{}.{}.r{r}.out", ctx.topo, ctx.stage)),
+            error: ctx.error.clone(),
+            gate: Some((gate.clone(), r)),
+            index: r,
+            stage: format!("{}[r{r}]", ctx.stage),
+        };
+        workers.push(std::thread::spawn(move || run_worker(op.as_mut(), wctx)));
+    }
+    ctx.par_gauge.set(degree as i64);
+    Generation { emitter: Emitter::new(ports, ctx.key.clone(), ctx.batch_capacity), workers }
+}
+
+/// Apply one rescale request on the router thread: validate, pause &
+/// drain the old generation through handoff markers, re-partition the
+/// exported per-key state, seed and start the new generation, resume.
+/// Returns false when the topology must tear down (a fault surfaced
+/// mid-handoff or the downstream is gone).
+fn apply_rescale(
+    ctx: &RouterCtx,
+    gen: &mut Generation,
+    degree: usize,
+    ack: SyncSender<Result<RescaleReport>>,
+) -> bool {
+    let from = gen.workers.len();
+    if degree == 0 {
+        let _ = ack.send(Err(Error::Stream(format!(
+            "stage `{}`: cannot rescale to parallelism 0 (must be ≥ 1)",
+            ctx.stage
+        ))));
+        return true;
+    }
+    if degree == from {
+        let _ = ack.send(Ok(RescaleReport {
+            stage: ctx.stage.clone(),
+            from,
+            to: degree,
+            moved_keys: 0,
+        }));
+        return true;
+    }
+    // Stateful stages can only re-partition per-key state: the same
+    // misuse shapes launch rejects, checked here because a serial stage
+    // may carry configurations that are fine at parallelism 1.
+    if ctx.stateful && degree > 1 {
+        let reject = match (&ctx.key, &ctx.state_key) {
+            (None, _) => Some(format!(
+                "stage `{}` is stateful and unkeyed; it cannot scale beyond one \
+                 replica — add a partition key (`@FIELD`) to the stage spec",
+                ctx.stage
+            )),
+            (Some(k), None) => Some(format!(
+                "stage `{}` is keyed by `{k}` but its operator keeps one window across \
+                 every key a replica owns; it cannot be re-partitioned — use a per-key \
+                 operator (`OperatorKind::window_by`)",
+                ctx.stage
+            )),
+            (Some(k), Some(sk)) if !sk.eq_ignore_ascii_case(k) => Some(format!(
+                "stage `{}` partitions tuples by `{k}` but its operator state is keyed \
+                 by `{sk}`; refusing to re-partition",
+                ctx.stage
+            )),
+            _ => None,
+        };
+        if let Some(msg) = reject {
+            let _ = ack.send(Err(Error::Stream(msg)));
+            return true; // rejected without disturbing the stage
+        }
+    }
+    let Some(factory) = &ctx.factory else {
+        let _ = ack.send(Err(Error::Stream(format!(
+            "stage `{}` is not elastic",
+            ctx.stage
+        ))));
+        return true;
+    };
+
+    // ---- Pause & drain: flush routed-but-unsent batches, then ask
+    // every replica to finish its queue and hand its state over.
+    if !gen.emitter.flush_all() {
+        let _ = ack.send(Err(abort_error(ctx, "downstream closed")));
+        return false;
+    }
+    let (reply_tx, reply_rx) = channel::<ExportReply>();
+    for port in &gen.emitter.ports {
+        if !port.send_msg(StreamMsg::Export(reply_tx.clone())) {
+            let _ = ack.send(Err(abort_error(ctx, "a replica died before the handoff")));
+            return false;
+        }
+    }
+    drop(reply_tx);
+    let mut moved: Vec<KeyState> = Vec::new();
+    for _ in 0..from {
+        match reply_rx.recv() {
+            Ok(ExportReply { state: Ok(state), .. }) => moved.extend(state),
+            Ok(ExportReply { replica, state: Err(cause) }) => {
+                let _ = ack.send(Err(Error::Stream(format!(
+                    "stage `{}[r{replica}]` handoff failed: {cause}",
+                    ctx.stage
+                ))));
+                return false;
+            }
+            Err(_) => {
+                let _ = ack.send(Err(abort_error(ctx, "a replica died mid-handoff")));
+                return false;
             }
         }
     }
-    for (port, buf) in ctx.outs.iter().zip(bufs.iter_mut()) {
-        if !port.flush(buf, ctx.batch_capacity) {
-            break;
-        }
+    // The old generation has replied and exited; reap it.
+    for w in gen.workers.drain(..) {
+        let _ = w.join();
     }
-    // Ports drop here → replica channels close → replicas drain.
+
+    // ---- Re-partition the key space and seed the new generation.
+    let moved_keys = moved.len();
+    let mut per: Vec<Vec<KeyState>> = (0..degree).map(|_| Vec::new()).collect();
+    for ks in moved {
+        per[(Tuple::hash_bits(ks.key_bits) % degree as u64) as usize].push(ks);
+    }
+    let mut ops: Vec<Box<dyn Operator>> = Vec::with_capacity(degree);
+    for (r, state) in per.into_iter().enumerate() {
+        let mut op = match catch(AssertUnwindSafe(|| Ok(factory()))) {
+            Ok(op) => op,
+            Err(fault) => {
+                let msg = format!("stage `{}` replica factory {fault}", ctx.stage);
+                log::error!("{msg}");
+                ctx.error.set(msg.clone());
+                let _ = ack.send(Err(Error::Stream(msg)));
+                return false;
+            }
+        };
+        if !state.is_empty() {
+            if let Err(fault) = catch(AssertUnwindSafe(|| op.import_state(state))) {
+                let msg = format!("stage `{}[r{r}]` handoff import {fault}", ctx.stage);
+                log::error!("{msg}");
+                ctx.error.set(msg.clone());
+                let _ = ack.send(Err(Error::Stream(msg)));
+                return false;
+            }
+        }
+        ops.push(op);
+    }
+    *gen = spawn_generation(ctx, ops);
+    ctx.rescales.inc();
+    log::info!(
+        "topology {} stage {} rescaled {from} → {degree} ({moved_keys} key snapshot(s) moved)",
+        ctx.topo,
+        ctx.stage
+    );
+    let _ = ack.send(Ok(RescaleReport {
+        stage: ctx.stage.clone(),
+        from,
+        to: degree,
+        moved_keys,
+    }));
+    true
+}
+
+fn abort_error(ctx: &RouterCtx, fallback: &str) -> Error {
+    Error::Stream(format!(
+        "stage `{}` rescale aborted: {}",
+        ctx.stage,
+        ctx.error.get().unwrap_or_else(|| fallback.to_string())
+    ))
 }
 
 /// Run an operator callback, converting both `Err` results and panics
@@ -654,6 +1366,23 @@ mod tests {
                 key: key.map(|k| k.to_string()),
             },
             (0..degree).map(|_| Box::new(make()) as Box<dyn Operator>).collect(),
+        )
+        .unwrap()
+    }
+
+    fn elastic_stage(
+        name: &str,
+        degree: usize,
+        key: Option<&str>,
+        make: impl Fn() -> OperatorKind + Send + Sync + 'static,
+    ) -> StageRuntime {
+        StageRuntime::elastic(
+            StageSpec {
+                name: name.to_string(),
+                parallelism: degree,
+                key: key.map(|k| k.to_string()),
+            },
+            Arc::new(move || Box::new(make()) as Box<dyn Operator>),
         )
         .unwrap()
     }
@@ -741,6 +1470,7 @@ mod tests {
         let bad = StageRuntime {
             spec: StageSpec { name: "m".into(), parallelism: 3, key: None },
             replicas: ops(vec![OperatorKind::map("m", |t| t)]),
+            factory: None,
         };
         assert!(engine.launch_stages("mismatch", vec![bad]).is_err());
         assert!(StageRuntime::new(
@@ -748,6 +1478,80 @@ mod tests {
             ops(vec![OperatorKind::map("m", |t| t)]),
         )
         .is_err());
+    }
+
+    #[test]
+    fn duplicate_stage_names_rejected_at_launch() {
+        // Names key the rescale control plane and the metrics; two
+        // stages sharing one would silently collide.
+        let engine = StreamEngine::new();
+        let err = engine
+            .launch_stages(
+                "dup",
+                vec![
+                    parallel_stage("m", 2, None, || OperatorKind::map("m", |t| t)),
+                    parallel_stage("m", 2, None, || OperatorKind::map("m", |t| t)),
+                ],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("duplicate stage `m`"), "{err}");
+    }
+
+    #[test]
+    fn unkeyed_parallel_stateful_stage_rejected_at_launch() {
+        // The hole PR 2 left for programmatic callers: TopologyManager
+        // rejected this shape, `launch_stages` did not.
+        let engine = StreamEngine::new();
+        let err = engine
+            .launch_stages(
+                "bad",
+                vec![parallel_stage("agg", 2, None, || OperatorKind::window("agg", "V", 4))],
+            )
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("`agg`"), "must name the stage: {msg}");
+        assert!(msg.contains("partition key"), "must say what is missing: {msg}");
+    }
+
+    #[test]
+    fn plain_window_on_keyed_parallel_stage_rejected_at_launch() {
+        // A keyed stage with a *plain* window silently aggregates across
+        // all keys a replica owns — results change with parallelism.
+        let engine = StreamEngine::new();
+        let err = engine
+            .launch_stages(
+                "bad",
+                vec![parallel_stage("w", 2, Some("K"), || OperatorKind::window("w", "V", 4))],
+            )
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("`w`"), "must name the stage: {msg}");
+        assert!(msg.contains("window_by"), "must point at the fix: {msg}");
+    }
+
+    #[test]
+    fn stage_key_and_operator_key_must_agree() {
+        let engine = StreamEngine::new();
+        let err = engine
+            .launch_stages(
+                "bad",
+                vec![parallel_stage("w", 2, Some("K"), || {
+                    OperatorKind::window_by("w", "V", 4, "J")
+                })],
+            )
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("`K`") && msg.contains("`J`"), "{msg}");
+        // Same keys (case-insensitively) launch fine.
+        let h = engine
+            .launch_stages(
+                "ok",
+                vec![parallel_stage("w", 2, Some("K"), || {
+                    OperatorKind::window_by("w", "V", 4, "k")
+                })],
+            )
+            .unwrap();
+        h.finish().unwrap();
     }
 
     #[test]
@@ -834,14 +1638,15 @@ mod tests {
     #[test]
     fn keyed_window_drains_in_replica_order() {
         // Two replicas, keys pinned by hash; finish() must emit replica
-        // 0's window remainder before replica 1's every time.
+        // 0's window remainders before replica 1's every time, each
+        // replica's in key-bits order.
         for _ in 0..5 {
             let engine = StreamEngine::new();
             let h = engine
                 .launch_stages(
                     "d",
                     vec![parallel_stage("w", 2, Some("K"), || {
-                        OperatorKind::window("w", "V", 1000)
+                        OperatorKind::window_by("w", "V", 1000, "K")
                     })],
                 )
                 .unwrap();
@@ -850,18 +1655,23 @@ mod tests {
                     .unwrap();
             }
             let out = h.finish().unwrap();
-            // Windows never filled: exactly one flush aggregate per
-            // non-idle replica, in replica order — deterministic COUNTs.
-            let counts: Vec<f64> = out.iter().map(|t| t.get("COUNT").unwrap()).collect();
-            let expect: Vec<f64> = {
-                let mut per: [f64; 2] = [0.0; 2];
-                for i in 0..40u64 {
-                    let t = Tuple::new(i, vec![]).with("K", (i % 4) as f64);
-                    per[(t.key_hash("K").unwrap() % 2) as usize] += 1.0;
-                }
-                per.iter().copied().filter(|&c| c > 0.0).collect()
-            };
-            assert_eq!(counts, expect);
+            // Windows never filled: one flush aggregate per key, keys
+            // grouped by owning replica (replica order), sorted by key
+            // bits within a replica — fully deterministic.
+            let got: Vec<(f64, f64)> = out
+                .iter()
+                .map(|t| (t.get("K").unwrap(), t.get("COUNT").unwrap()))
+                .collect();
+            let mut expect: Vec<(f64, f64)> = Vec::new();
+            for replica in 0..2u64 {
+                let mut keys: Vec<f64> = (0..4u64)
+                    .map(|k| k as f64)
+                    .filter(|k| Tuple::hash_bits(k.to_bits()) % 2 == replica)
+                    .collect();
+                keys.sort_by(|a, b| a.to_bits().cmp(&b.to_bits()));
+                expect.extend(keys.into_iter().map(|k| (k, 10.0)));
+            }
+            assert_eq!(got, expect);
         }
     }
 
@@ -961,5 +1771,268 @@ mod tests {
         let fin = h.finish().unwrap_err();
         assert!(matches!(fin, Error::Stream(_)));
         assert!(format!("{fin}").contains("boom"), "{fin}");
+    }
+
+    // ---- Live re-scaling ----
+
+    #[test]
+    fn rescale_scales_stateless_stage_up_and_down() {
+        let engine = StreamEngine::new().batch_capacity(4);
+        let h = engine
+            .launch_stages(
+                "el",
+                vec![elastic_stage("sq", 1, Some("K"), || {
+                    OperatorKind::map("sq", |mut t| {
+                        let v = t.get("X").unwrap_or(0.0);
+                        t.set("X", v * v);
+                        t
+                    })
+                })],
+            )
+            .unwrap();
+        assert_eq!(h.parallelism("sq"), Some(1));
+        for i in 0..50u64 {
+            h.send(Tuple::new(i, vec![]).with("X", i as f64).with("K", (i % 5) as f64)).unwrap();
+        }
+        let up = h.rescale("sq", 4).unwrap();
+        assert_eq!((up.from, up.to), (1, 4));
+        assert_eq!(up.moved_keys, 0, "stateless stages move no state");
+        for i in 50..100u64 {
+            h.send(Tuple::new(i, vec![]).with("X", i as f64).with("K", (i % 5) as f64)).unwrap();
+        }
+        let down = h.rescale("sq", 2).unwrap();
+        assert_eq!((down.from, down.to), (4, 2));
+        assert_eq!(h.parallelism("sq"), Some(2));
+        for i in 100..150u64 {
+            h.send(Tuple::new(i, vec![]).with("X", i as f64).with("K", (i % 5) as f64)).unwrap();
+        }
+        let out = h.finish().unwrap();
+        assert_eq!(out.len(), 150, "zero loss, zero duplication across handoffs");
+        let mut squares: Vec<u64> = out.iter().map(|t| t.get("X").unwrap() as u64).collect();
+        squares.sort_unstable();
+        let mut want: Vec<u64> = (0..150u64).map(|i| i * i).collect();
+        want.sort_unstable();
+        assert_eq!(squares, want);
+        assert_eq!(engine.metrics().counter("stream.el.sq.rescales").get(), 2);
+        assert_eq!(engine.metrics().gauge("stream.el.sq.parallelism").get(), 2);
+    }
+
+    #[test]
+    fn rescale_moves_keyed_window_state() {
+        // Half-filled per-key windows must survive a 2 → 4 re-partition:
+        // without the handoff every window would restart and the counts
+        // below would come out wrong.
+        let engine = StreamEngine::new();
+        let h = engine
+            .launch_stages(
+                "mv",
+                vec![elastic_stage("w", 2, Some("K"), || {
+                    OperatorKind::window_by("w", "V", 4, "K")
+                })],
+            )
+            .unwrap();
+        let mut seq = 0u64;
+        for _round in 0..2 {
+            for k in 0..6u64 {
+                h.send(Tuple::new(seq, vec![]).with("K", k as f64).with("V", k as f64)).unwrap();
+                seq += 1;
+            }
+        }
+        let report = h.rescale("w", 4).unwrap();
+        assert_eq!((report.from, report.to), (2, 4));
+        // Tuples still in the router inbound at rescale time are routed
+        // to the *new* generation instead of being exported, so the
+        // snapshot count is bounded but not exact.
+        assert!(report.moved_keys <= 6, "{report:?}");
+        for _round in 0..2 {
+            for k in 0..6u64 {
+                h.send(Tuple::new(seq, vec![]).with("K", k as f64).with("V", k as f64)).unwrap();
+                seq += 1;
+            }
+        }
+        let mut out = h.finish().unwrap();
+        assert_eq!(out.len(), 6, "each key fills exactly one window of 4");
+        out.sort_by(|a, b| a.get("K").unwrap().total_cmp(&b.get("K").unwrap()));
+        for (k, t) in out.iter().enumerate() {
+            assert_eq!(t.get("K"), Some(k as f64));
+            assert_eq!(t.get("COUNT"), Some(4.0));
+            assert_eq!(t.get("MEAN"), Some(k as f64));
+        }
+    }
+
+    #[test]
+    fn rescale_rejects_static_unknown_and_zero() {
+        let engine = StreamEngine::new();
+        let h = engine
+            .launch_stages(
+                "st",
+                vec![parallel_stage("p", 2, Some("K"), || OperatorKind::map("p", |t| t))],
+            )
+            .unwrap();
+        let err = h.rescale("p", 4).unwrap_err();
+        assert!(format!("{err}").contains("not elastic"), "{err}");
+        let err = h.rescale("ghost", 2).unwrap_err();
+        assert!(format!("{err}").contains("no stage `ghost`"), "{err}");
+        let err = h.rescale("p", 0).unwrap_err();
+        assert!(format!("{err}").contains("parallelism 0"), "{err}");
+        // The rejected calls disturbed nothing.
+        h.send(Tuple::new(0, vec![]).with("K", 1.0)).unwrap();
+        assert_eq!(h.finish().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn rescale_to_same_degree_is_a_noop() {
+        let engine = StreamEngine::new();
+        let h = engine
+            .launch_stages(
+                "same",
+                vec![elastic_stage("m", 2, None, || OperatorKind::map("m", |t| t))],
+            )
+            .unwrap();
+        let report = h.rescale("m", 2).unwrap();
+        assert_eq!((report.from, report.to, report.moved_keys), (2, 2, 0));
+        h.send(Tuple::new(0, vec![])).unwrap();
+        assert_eq!(h.finish().unwrap().len(), 1);
+        assert_eq!(engine.metrics().counter("stream.same.m.rescales").get(), 0);
+    }
+
+    #[test]
+    fn rescale_refuses_monolithic_state_without_killing_the_stage() {
+        // A serial stage with a plain (non-per-key) window is legal; the
+        // refusal to scale it must name the stage and leave it running.
+        let engine = StreamEngine::new();
+        let h = engine
+            .launch_stages(
+                "mono",
+                vec![elastic_stage("w", 1, None, || OperatorKind::window("w", "V", 3))],
+            )
+            .unwrap();
+        h.send(Tuple::new(0, vec![]).with("V", 3.0)).unwrap();
+        let err = h.rescale("w", 2).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("`w`") && msg.contains("stateful and unkeyed"), "{msg}");
+        // Keyed variant of the same refusal (serial keyed plain window).
+        let h2 = engine
+            .launch_stages(
+                "mono2",
+                vec![elastic_stage("w", 1, Some("K"), || OperatorKind::window("w", "V", 3))],
+            )
+            .unwrap();
+        let err = h2.rescale("w", 2).unwrap_err();
+        assert!(format!("{err}").contains("window_by"), "{err}");
+        h2.finish().unwrap();
+        // The first topology still works: the window fills and flushes.
+        h.send(Tuple::new(1, vec![]).with("V", 5.0)).unwrap();
+        h.send(Tuple::new(2, vec![]).with("V", 7.0)).unwrap();
+        let out = h.finish().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("COUNT"), Some(3.0));
+        assert_eq!(out[0].get("MEAN"), Some(5.0));
+    }
+
+    #[test]
+    fn rescale_preserves_per_key_order_across_handoff() {
+        let engine = StreamEngine::new().batch_capacity(3);
+        let h = engine
+            .launch_stages(
+                "ord",
+                vec![elastic_stage("tag", 2, Some("KEY"), || OperatorKind::map("tag", |t| t))],
+            )
+            .unwrap();
+        let mut seq = 0u64;
+        let mut seqn = [0u64; 6];
+        let mut feed = |h: &EngineHandle, rounds: u64| {
+            for _ in 0..rounds {
+                for key in 0..6u64 {
+                    h.send(
+                        Tuple::new(seq, vec![])
+                            .with("KEY", key as f64)
+                            .with("SEQN", seqn[key as usize] as f64),
+                    )
+                    .unwrap();
+                    seq += 1;
+                    seqn[key as usize] += 1;
+                }
+            }
+        };
+        feed(&h, 20);
+        h.rescale("tag", 5).unwrap();
+        feed(&h, 20);
+        h.rescale("tag", 1).unwrap();
+        feed(&h, 20);
+        let out = h.finish().unwrap();
+        assert_eq!(out.len(), 360);
+        let mut last = std::collections::BTreeMap::new();
+        for t in &out {
+            let key = t.get("KEY").unwrap() as u64;
+            let s = t.get("SEQN").unwrap();
+            if let Some(prev) = last.insert(key, s) {
+                assert!(prev < s, "key {key} reordered across the handoff");
+            }
+        }
+    }
+
+    #[test]
+    fn direct_exchange_links_static_keyed_chains() {
+        // Chained static keyed stages skip the downstream router; the
+        // equivalence guarantees must hold through the direct path.
+        let engine = StreamEngine::new().batch_capacity(2);
+        let h = engine
+            .launch_stages(
+                "dx",
+                vec![
+                    parallel_stage("a", 3, Some("K"), || OperatorKind::map("a", |t| t)),
+                    parallel_stage("b", 3, Some("K"), || OperatorKind::map("b", |t| t)),
+                    parallel_stage("w", 2, Some("K"), || {
+                        OperatorKind::window_by("w", "V", 4, "K")
+                    }),
+                ],
+            )
+            .unwrap();
+        assert_eq!(h.linked_stages(), &["b".to_string(), "w".to_string()]);
+        for i in 0..96u64 {
+            h.send(Tuple::new(i, vec![]).with("K", (i % 6) as f64).with("V", 1.0)).unwrap();
+        }
+        let out = h.finish().unwrap();
+        // 6 keys × 16 values → 4 full windows of 4 per key.
+        assert_eq!(out.len(), 24);
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(4.0)));
+        // Elastic stages are never linked (the router is the rescale
+        // point), and neither is the first stage.
+        let h2 = engine
+            .launch_stages(
+                "dx2",
+                vec![
+                    parallel_stage("a", 2, Some("K"), || OperatorKind::map("a", |t| t)),
+                    elastic_stage("b", 2, Some("K"), || OperatorKind::map("b", |t| t)),
+                ],
+            )
+            .unwrap();
+        assert!(h2.linked_stages().is_empty());
+        h2.finish().unwrap();
+    }
+
+    #[test]
+    fn elastic_serial_chain_preserves_global_order() {
+        // Elastic stages run behind routers even at parallelism 1; a
+        // 1-replica chain must still deliver in exact global order.
+        let engine = StreamEngine::new().batch_capacity(4);
+        let h = engine
+            .launch_stages(
+                "eserial",
+                vec![
+                    elastic_stage("a", 1, None, || OperatorKind::map("a", |t| t)),
+                    elastic_stage("b", 1, None, || OperatorKind::map("b", |t| t)),
+                ],
+            )
+            .unwrap();
+        for i in 0..200u64 {
+            h.send(Tuple::new(i, vec![])).unwrap();
+        }
+        let out = h.finish().unwrap();
+        assert_eq!(out.len(), 200);
+        for (i, t) in out.iter().enumerate() {
+            assert_eq!(t.seq, i as u64);
+        }
     }
 }

@@ -1,23 +1,28 @@
 //! The stream processing engine (paper §IV-C2): "transforming raw data
 //! stream into useful information [...] using a sequence of small
 //! processing units", with on-demand topologies that scale up or down —
-//! including *out* across cores: stages carry parallelism and partition
-//! key annotations (`"map*4@SENSOR"`), and channel hops move batches.
+//! *live*: stages carry parallelism and partition key annotations
+//! (`"map*4@SENSOR"`), channel hops move batches, and elastic stages
+//! re-scale mid-stream with a per-key state handoff.
 //!
 //! - [`tuple`]: the data tuples flowing through operators (bytes +
 //!   named numeric fields for the rule engine), plus the stable key
-//!   hash used by the keyed shuffle.
+//!   hash shared by the keyed shuffle and the rescale re-partition.
 //! - [`operator`]: the operator trait and built-ins (map, filter,
-//!   window aggregate, keyed window aggregate, rule stage).
+//!   window aggregate, keyed window aggregate, rule stage), and the
+//!   `export_state`/`import_state` handoff API keyed windows implement.
 //! - [`topology`]: a linear-DAG description, buildable from the paper's
 //!   `"a->b->c"` topology strings (extended with `*P`/`@KEY` stage
 //!   annotations) stored in function profiles.
 //! - [`engine`]: the parallel keyed executor — per-stage replica pools
 //!   fed by hash-partitioning routers, batched bounded channels with
 //!   flush-on-idle, backpressure by blocking sends, ordered drain and
-//!   fault surfacing on `finish`. See `docs/stream-executor.md`.
+//!   fault surfacing on `finish`, live re-scaling of elastic stages
+//!   (`EngineHandle::rescale`), and direct replica→replica exchange for
+//!   static same-key chains. See `docs/stream-executor.md`.
 //! - [`deploy`]: on-demand start/stop keyed by function profile, driven
-//!   by `start_function` / `stop_function` reactions.
+//!   by `start_function` / `stop_function` reactions, plus the
+//!   watermark-driven [`deploy::ScalePolicy`] autoscaler.
 
 pub mod deploy;
 pub mod engine;
@@ -25,8 +30,10 @@ pub mod operator;
 pub mod topology;
 pub mod tuple;
 
-pub use deploy::TopologyManager;
-pub use engine::{EngineHandle, StageRuntime, StreamEngine, StreamSender};
-pub use operator::{Operator, OperatorKind};
+pub use deploy::{ScalePolicy, TopologyManager};
+pub use engine::{
+    EngineHandle, RescaleReport, Rescaler, StageFactory, StageRuntime, StreamEngine, StreamSender,
+};
+pub use operator::{KeyState, Operator, OperatorKind};
 pub use topology::{StageSpec, Topology};
 pub use tuple::Tuple;

@@ -7,8 +7,21 @@
 //! pipeline, including a rule stage that embeds the IF-THEN engine.
 
 use super::tuple::Tuple;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::rules::engine::{RuleEngine, RuleOutcome};
+
+/// One key's operator state, snapshotted for a live-rescale handoff.
+///
+/// The engine re-partitions exported state with the same
+/// [`Tuple::hash_bits`] the keyed shuffle uses, so a key's state always
+/// lands on the replica that will receive the key's tuples next.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KeyState {
+    /// Partition-key value as raw f64 bits (the shuffle's encoding).
+    pub key_bits: u64,
+    /// Operator-defined serialized state for that key.
+    pub bytes: Vec<u8>,
+}
 
 /// A processing unit: consumes one tuple, emits zero or more.
 pub trait Operator: Send {
@@ -23,9 +36,45 @@ pub trait Operator: Send {
     /// Whether outputs depend on which tuples this instance has seen
     /// (windows/aggregates). A stateful operator on a parallel stage
     /// requires a partition key, or its output becomes an arbitrary
-    /// function of the shuffle; `TopologyManager::start` rejects that.
+    /// function of the shuffle; the engine rejects that at launch.
     fn stateful(&self) -> bool {
         false
+    }
+    /// The key field this operator's state is partitioned by, when it
+    /// is per-key (the keyed window). `None` means monolithic state: on
+    /// a parallel stage such an operator aggregates across every key a
+    /// replica owns, so the engine rejects it at launch and refuses to
+    /// rescale a serial stage carrying it beyond one replica.
+    fn state_key(&self) -> Option<&str> {
+        None
+    }
+    /// Extract (and remove) all per-key state for a rescale handoff.
+    /// Stateless operators export nothing; per-key stateful operators
+    /// must override together with [`Operator::import_state`]. The
+    /// default errors for stateful operators so a handoff can never
+    /// silently drop state.
+    fn export_state(&mut self) -> Result<Vec<KeyState>> {
+        if self.stateful() {
+            Err(Error::Stream(format!(
+                "operator `{}` is stateful but does not support state handoff",
+                self.name()
+            )))
+        } else {
+            Ok(Vec::new())
+        }
+    }
+    /// Install state previously exported by another replica of the same
+    /// operator. Called on a fresh instance before it processes any
+    /// tuple of the new generation.
+    fn import_state(&mut self, state: Vec<KeyState>) -> Result<()> {
+        if state.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Stream(format!(
+                "operator `{}` cannot import handoff state",
+                self.name()
+            )))
+        }
     }
 }
 
@@ -123,6 +172,71 @@ impl Operator for OperatorKind {
             self,
             OperatorKind::WindowAggregate { .. } | OperatorKind::KeyedWindow { .. }
         )
+    }
+
+    fn state_key(&self) -> Option<&str> {
+        match self {
+            OperatorKind::KeyedWindow { key, .. } => Some(key),
+            _ => None,
+        }
+    }
+
+    fn export_state(&mut self) -> Result<Vec<KeyState>> {
+        match self {
+            OperatorKind::KeyedWindow { bufs, .. } => {
+                // One snapshot per open window, in key-bits order; the
+                // values are the window's pending samples, 8 LE bytes
+                // each. `take` removes them: state must move, not copy.
+                Ok(std::mem::take(bufs)
+                    .into_iter()
+                    .filter(|(_, buf)| !buf.is_empty())
+                    .map(|(bits, buf)| KeyState {
+                        key_bits: bits,
+                        bytes: buf.iter().flat_map(|v| v.to_le_bytes()).collect(),
+                    })
+                    .collect())
+            }
+            // The plain window's state is not per-key; the engine never
+            // asks (launch/rescale validation), but refuse loudly if a
+            // caller does.
+            OperatorKind::WindowAggregate { name, .. } => Err(Error::Stream(format!(
+                "operator `{name}` is stateful but does not support state handoff"
+            ))),
+            _ => Ok(Vec::new()),
+        }
+    }
+
+    fn import_state(&mut self, state: Vec<KeyState>) -> Result<()> {
+        if state.is_empty() {
+            return Ok(());
+        }
+        match self {
+            OperatorKind::KeyedWindow { bufs, .. } => {
+                for ks in state {
+                    if ks.bytes.len() % 8 != 0 {
+                        return Err(Error::Stream(format!(
+                            "keyed-window handoff state for key bits {:#x} has a truncated \
+                             payload ({} bytes)",
+                            ks.key_bits,
+                            ks.bytes.len()
+                        )));
+                    }
+                    let values = ks
+                        .bytes
+                        .chunks_exact(8)
+                        .map(|c| f64::from_le_bytes(c.try_into().unwrap()));
+                    // Each key is exported by exactly one replica, but
+                    // extend (rather than replace) so a duplicate could
+                    // never silently drop samples.
+                    bufs.entry(ks.key_bits).or_default().extend(values);
+                }
+                Ok(())
+            }
+            other => Err(Error::Stream(format!(
+                "operator `{}` cannot import handoff state",
+                other.name()
+            ))),
+        }
     }
 
     fn finish(&mut self) -> Result<Vec<Tuple>> {
@@ -262,6 +376,52 @@ mod tests {
         assert_eq!(flushed[0].get("MEAN"), Some(100.0));
         // Drained: nothing left to flush.
         assert!(op.finish().unwrap().is_empty());
+    }
+
+    #[test]
+    fn keyed_window_state_round_trips_through_handoff() {
+        let mut a = OperatorKind::window_by("w", "V", 4, "K");
+        for (k, v) in [(1.0, 10.0), (2.0, 20.0), (1.0, 30.0), (3.0, 40.0)] {
+            assert!(a.process(Tuple::new(0, vec![]).with("K", k).with("V", v)).unwrap().is_empty());
+        }
+        assert_eq!(a.state_key(), Some("K"));
+        let state = a.export_state().unwrap();
+        assert_eq!(state.len(), 3, "one snapshot per open window");
+        // Export moves the state out: the source has nothing left.
+        assert!(a.finish().unwrap().is_empty());
+
+        let mut b = OperatorKind::window_by("w", "V", 4, "K");
+        b.import_state(state).unwrap();
+        // Key 1 already holds [10, 30]; two more fill its window.
+        assert!(b.process(Tuple::new(4, vec![]).with("K", 1.0).with("V", 50.0)).unwrap().is_empty());
+        let out = b.process(Tuple::new(5, vec![]).with("K", 1.0).with("V", 70.0)).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("COUNT"), Some(4.0));
+        assert_eq!(out[0].get("MEAN"), Some(40.0));
+        // Keys 2 and 3 flush their imported partial windows on finish.
+        let rest = b.finish().unwrap();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(rest[0].get("K"), Some(2.0));
+        assert_eq!(rest[1].get("K"), Some(3.0));
+    }
+
+    #[test]
+    fn stateless_operators_export_nothing() {
+        let mut op = OperatorKind::map("id", |t| t);
+        assert!(op.export_state().unwrap().is_empty());
+        assert!(op.import_state(Vec::new()).is_ok());
+        assert!(op
+            .import_state(vec![KeyState { key_bits: 0, bytes: vec![0; 8] }])
+            .is_err());
+    }
+
+    #[test]
+    fn plain_window_refuses_handoff() {
+        let mut op = OperatorKind::window("w", "V", 3);
+        op.process(Tuple::new(0, vec![]).with("V", 1.0)).unwrap();
+        let err = op.export_state().unwrap_err();
+        assert!(format!("{err}").contains("state handoff"), "{err}");
+        assert!(op.state_key().is_none());
     }
 
     #[test]

@@ -152,6 +152,12 @@ impl Topology {
         self.stages.iter().map(|s| s.name.as_str()).collect()
     }
 
+    /// Look a stage up by name (rescale callers resolve the target
+    /// stage of a stored spec through this).
+    pub fn stage(&self, name: &str) -> Option<&StageSpec> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+
     /// Number of stages.
     pub fn len(&self) -> usize {
         self.stages.len()
@@ -179,6 +185,14 @@ mod tests {
     fn parse_single_stage() {
         let t = Topology::parse("one", "only").unwrap();
         assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn stage_lookup_by_name() {
+        let t = Topology::parse("p", "map*4 -> agg*2@sensor").unwrap();
+        assert_eq!(t.stage("agg").unwrap().parallelism, 2);
+        assert_eq!(t.stage("agg").unwrap().key.as_deref(), Some("SENSOR"));
+        assert!(t.stage("missing").is_none());
     }
 
     #[test]

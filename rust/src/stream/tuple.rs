@@ -46,12 +46,19 @@ impl Tuple {
     /// values always hash equal (f64 compared by bit pattern), so a
     /// keyed shuffle routes every tuple of a key to the same replica.
     pub fn key_hash(&self, field: &str) -> Option<u64> {
-        let bits = self.get(field)?.to_bits();
-        // SplitMix64 finalizer: cheap, well-mixed, dependency-free.
+        Some(Self::hash_bits(self.get(field)?.to_bits()))
+    }
+
+    /// The partitioning hash over raw f64 key bits — the *single* hash
+    /// both the keyed shuffle and the rescale state handoff use, so a
+    /// key's operator state always lands on the replica that will
+    /// receive the key's tuples after a re-partition.
+    /// SplitMix64 finalizer: cheap, well-mixed, dependency-free.
+    pub fn hash_bits(bits: u64) -> u64 {
         let mut z = bits.wrapping_add(0x9E37_79B9_7F4A_7C15);
         z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
         z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        Some(z ^ (z >> 31))
+        z ^ (z >> 31)
     }
 
     /// Evaluation context for the rule engine.
@@ -96,6 +103,18 @@ mod tests {
             "different values should (virtually always) hash apart"
         );
         assert_eq!(a.key_hash("MISSING"), None);
+    }
+
+    #[test]
+    fn key_hash_agrees_with_hash_bits() {
+        // The rescale handoff partitions exported state with
+        // `hash_bits(key_bits)`; it must agree with the shuffle's
+        // `key_hash` for every value, or moved state lands on the
+        // wrong replica.
+        for v in [0.0, -0.0, 1.0, 3.25, -17.0, 1e300, f64::MIN_POSITIVE] {
+            let t = Tuple::new(0, vec![]).with("K", v);
+            assert_eq!(t.key_hash("K"), Some(Tuple::hash_bits(v.to_bits())));
+        }
     }
 
     #[test]

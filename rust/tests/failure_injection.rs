@@ -144,9 +144,10 @@ fn queue_recovers_after_simulated_crash() {
 
 use rpulsar::error::Error;
 use rpulsar::stream::engine::{StageRuntime, StreamEngine};
-use rpulsar::stream::operator::{Operator, OperatorKind};
+use rpulsar::stream::operator::{KeyState, Operator, OperatorKind};
 use rpulsar::stream::topology::StageSpec;
 use rpulsar::stream::tuple::Tuple;
+use std::sync::Arc;
 
 fn slow_map(name: &'static str) -> Box<dyn Operator> {
     Box::new(OperatorKind::map(name, |t| {
@@ -253,6 +254,106 @@ fn panicking_replica_surfaces_stream_error_not_hang() {
     let msg = format!("{err}");
     assert!(msg.contains("injected replica fault"), "cause must be surfaced: {msg}");
     assert!(msg.contains("boom"), "failing stage must be named: {msg}");
+}
+
+#[test]
+fn replica_panicking_mid_handoff_aborts_rescale_and_surfaces_fault() {
+    // A replica that dies while exporting its state must abort the
+    // rescale with the cause, tear the topology down (send fails
+    // bounded, recv terminates), and surface the fault from finish().
+    struct ExplodingExport;
+    impl Operator for ExplodingExport {
+        fn name(&self) -> &str {
+            "volatile"
+        }
+        fn process(&mut self, tuple: Tuple) -> rpulsar::Result<Vec<Tuple>> {
+            Ok(vec![tuple])
+        }
+        fn stateful(&self) -> bool {
+            true
+        }
+        fn state_key(&self) -> Option<&str> {
+            Some("K")
+        }
+        fn export_state(&mut self) -> rpulsar::Result<Vec<KeyState>> {
+            panic!("injected handoff fault");
+        }
+    }
+    let engine = StreamEngine::new();
+    let stage = StageRuntime::elastic(
+        StageSpec { name: "volatile".into(), parallelism: 2, key: Some("K".into()) },
+        Arc::new(|| Box::new(ExplodingExport) as Box<dyn Operator>),
+    )
+    .unwrap();
+    let h = engine.launch_stages("handoff", vec![stage]).unwrap();
+    for i in 0..16u64 {
+        h.send(Tuple::new(i, vec![]).with("K", (i % 4) as f64)).unwrap();
+    }
+    let err = h.rescale("volatile", 4).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("injected handoff fault"), "cause must surface: {msg}");
+    assert!(msg.contains("volatile"), "failing stage must be named: {msg}");
+    // Topology torn down: a bounded number of sends may land in channel
+    // buffers, then send must fail — never block.
+    let mut send_failed = false;
+    for i in 16..4000u64 {
+        if h.send(Tuple::new(i, vec![]).with("K", 0.0)).is_err() {
+            send_failed = true;
+            break;
+        }
+    }
+    assert!(send_failed, "send into a dead topology must fail");
+    // recv terminates (pre-fault tuples may surface first).
+    let mut drained = 0;
+    while h.recv_timeout(std::time::Duration::from_secs(10)).is_some() {
+        drained += 1;
+        assert!(drained < 5000, "dead topology must stop yielding tuples");
+    }
+    let fin = h.finish().unwrap_err();
+    assert!(matches!(fin, Error::Stream(_)), "want Error::Stream, got {fin}");
+    assert!(format!("{fin}").contains("injected handoff fault"), "{fin}");
+}
+
+#[test]
+fn rescale_into_faulted_topology_reports_the_original_fault() {
+    // Rescaling a topology that already died must return the recorded
+    // fault as a structured error, not hang waiting for a dead router.
+    let engine = StreamEngine::new().channel_depth(1).batch_capacity(1);
+    let stage = StageRuntime::elastic(
+        StageSpec { name: "boom".into(), parallelism: 2, key: Some("K".into()) },
+        Arc::new(|| {
+            Box::new(OperatorKind::map("boom", |t| {
+                if t.get("POISON") == Some(1.0) {
+                    panic!("injected replica fault");
+                }
+                t
+            })) as Box<dyn Operator>
+        }),
+    )
+    .unwrap();
+    let h = engine.launch_stages("deadscale", vec![stage]).unwrap();
+    h.send(Tuple::new(0, vec![]).with("K", 1.0).with("POISON", 1.0)).unwrap();
+    // Drive the fault home, then rescale: it must fail with the cause.
+    // Alternate the target degree so every call is a real handoff (a
+    // same-degree call is a no-op and would never touch the replicas).
+    let mut rescale_err = None;
+    for i in 0..2000usize {
+        match h.rescale("boom", 2 + (i % 2)) {
+            Ok(_) => std::thread::sleep(std::time::Duration::from_micros(100)),
+            Err(e) => {
+                rescale_err = Some(e);
+                break;
+            }
+        }
+    }
+    let err = rescale_err.expect("rescale against a faulted topology must fail");
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("injected replica fault") || msg.contains("rescale aborted"),
+        "fault must surface through rescale: {msg}"
+    );
+    let fin = h.finish().unwrap_err();
+    assert!(format!("{fin}").contains("injected replica fault"), "{fin}");
 }
 
 #[test]

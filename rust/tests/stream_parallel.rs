@@ -1,7 +1,10 @@
 //! Stream-plane equivalence properties: a parallel keyed topology must
 //! be observably equivalent to its serial twin — same output multiset
 //! for every operator kind, and per-key order preserved under keyed
-//! partitioning. 1000+ seeded cases per property via `testkit::forall`.
+//! partitioning — and both invariants must survive arbitrary *live
+//! rescales* mid-stream (zero tuple loss/duplication across the per-key
+//! state handoff). 500–1000+ seeded cases per property via
+//! `testkit::forall_seeded`.
 
 use rpulsar::rules::engine::{Consequence, Rule, RuleEngine};
 use rpulsar::stream::engine::{StageRuntime, StreamEngine};
@@ -11,6 +14,7 @@ use rpulsar::stream::tuple::Tuple;
 use rpulsar::testkit::prop::NoShrink;
 use rpulsar::testkit::{forall_seeded, Gen};
 use rpulsar::util::prng::Prng;
+use std::sync::Arc;
 
 /// Operator kinds under test. Stateless kinds are safe under any
 /// partitioning; the keyed window is the stateful one that *requires*
@@ -157,6 +161,70 @@ fn canon(out: Vec<Tuple>) -> Vec<String> {
     v
 }
 
+/// A scenario plus a schedule of live rescales: `(feed_index, stage,
+/// new_degree)` — before feeding tuple `feed_index`, rescale the
+/// chain's `stage`-th stage to `new_degree` replicas.
+#[derive(Clone, Debug)]
+struct RescaleScenario {
+    base: Scenario,
+    initial: usize,
+    rescales: Vec<(usize, usize, usize)>,
+}
+
+fn rescale_scenario_gen(max_tuples: usize) -> impl Gen<NoShrink<RescaleScenario>> {
+    move |rng: &mut Prng| {
+        let NoShrink(base) = scenario_gen(max_tuples).generate(rng);
+        let chain_len = CHAINS[base.chain].len();
+        let mut rescales: Vec<(usize, usize, usize)> = (0..rng.gen_range(1, 4))
+            .map(|_| {
+                (
+                    rng.gen_range(0, base.tuples.len() + 1),
+                    rng.gen_range(0, chain_len),
+                    rng.gen_range(1, 6),
+                )
+            })
+            .collect();
+        rescales.sort();
+        NoShrink(RescaleScenario { base, initial: rng.gen_range(1, 5), rescales })
+    }
+}
+
+/// Run the chain as an elastic topology (every stage keyed by `K`,
+/// launched from a factory at `initial` replicas), applying the
+/// scenario's rescales at their feed points.
+fn run_elastic(s: &RescaleScenario) -> Vec<Tuple> {
+    let engine = StreamEngine::new().batch_capacity(s.base.batch_capacity);
+    let stages = CHAINS[s.base.chain]
+        .iter()
+        .map(|&k| {
+            let window = s.base.window;
+            StageRuntime::elastic(
+                StageSpec {
+                    name: stage_name(k).to_string(),
+                    parallelism: s.initial,
+                    key: Some("K".to_string()),
+                },
+                Arc::new(move || make_op(k, window)),
+            )
+            .unwrap()
+        })
+        .collect();
+    let h = engine.launch_stages("elastic", stages).unwrap();
+    let mut ops = s.rescales.iter().peekable();
+    let chain = CHAINS[s.base.chain];
+    for (i, t) in input_tuples(&s.base).into_iter().enumerate() {
+        while ops.peek().map(|(at, _, _)| *at == i).unwrap_or(false) {
+            let (_, stage, degree) = ops.next().unwrap();
+            h.rescale(stage_name(chain[*stage]), *degree).unwrap();
+        }
+        h.send(t).unwrap();
+    }
+    for (_, stage, degree) in ops {
+        h.rescale(stage_name(chain[*stage]), *degree).unwrap();
+    }
+    h.finish().unwrap()
+}
+
 #[test]
 fn parallel_output_multiset_equals_serial_all_operator_kinds() {
     forall_seeded(0x5EED_0001, 1024, scenario_gen(48), |s: &NoShrink<Scenario>| {
@@ -174,6 +242,42 @@ fn per_key_output_order_is_preserved_under_keyed_partitioning() {
         // output with its SEQN intact.
         s.chain = if s.chain % 2 == 0 { 0 } else { 5 }; // [map] or [filter,map]
         let out = run_parallel(&s);
+        let mut last: std::collections::BTreeMap<u64, f64> = std::collections::BTreeMap::new();
+        for t in &out {
+            let key = t.get("K").unwrap() as u64;
+            let seqn = t.get("SEQN").unwrap();
+            if let Some(prev) = last.insert(key, seqn) {
+                if prev >= seqn {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn rescale_mid_stream_preserves_output_multiset() {
+    // The rescale acceptance bar: random mid-stream rescale schedules
+    // (up, down, repeated, every operator kind including the keyed
+    // window whose open state must move) yield exactly the static
+    // serial topology's output multiset — zero loss, zero duplication.
+    forall_seeded(0x5EED_0004, 512, rescale_scenario_gen(40), |s: &NoShrink<RescaleScenario>| {
+        canon(run_serial(&s.0.base)) == canon(run_elastic(&s.0))
+    });
+}
+
+#[test]
+fn rescale_mid_stream_preserves_per_key_order() {
+    forall_seeded(0x5EED_0005, 512, rescale_scenario_gen(48), |s: &NoShrink<RescaleScenario>| {
+        let mut s = s.0.clone();
+        // Restrict to pass-through chains so every input reaches the
+        // output with its SEQN intact.
+        s.base.chain = if s.base.chain % 2 == 0 { 0 } else { 5 }; // [map] or [filter,map]
+        for r in &mut s.rescales {
+            r.1 %= CHAINS[s.base.chain].len();
+        }
+        let out = run_elastic(&s);
         let mut last: std::collections::BTreeMap<u64, f64> = std::collections::BTreeMap::new();
         for t in &out {
             let key = t.get("K").unwrap() as u64;
