@@ -1,0 +1,106 @@
+//! Fig. 16 (beyond the paper): distributed stream topologies — the
+//! Fig-13 analytics chain run on one simulated node vs *split across
+//! the edge and the cloud* (paper's claim: pipelines run "across the
+//! cloud and edge in a uniform manner").
+//!
+//! Two placements of `score*P@IMG->decide->stats@IMG` on a two-node
+//! SimNetwork cluster (Raspberry Pi source + `cloud_small` core):
+//!
+//! - **single-node**: every stage on the Pi node — no cross-node hop,
+//!   zero network bytes.
+//! - **split**: `score`/`decide` stay source-adjacent on the Pi, the
+//!   `stats` aggregation runs on the cloud node; the inter-node hop
+//!   ships `Vec<Tuple>` batches as `NetMessage::StreamBatch` frames,
+//!   each charged to the SimNetwork at the Pi's uplink profile.
+//!
+//! Reported per placement: wall-clock throughput, network bytes /
+//! messages, and the device-accurate virtual network time the hops
+//! cost. Both placements must reproduce the single-process executor's
+//! output multiset exactly (the zero-loss cross-node drain contract,
+//! property-tested in `rust/tests/cluster.rs`).
+//!
+//! `-- --test` runs a seconds-long smoke with tiny sizes (CI gate).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{header, smoke_mode};
+use rpulsar::pipeline::lidar::LidarTrace;
+use rpulsar::pipeline::workflow::{
+    analytics_spec, run_distributed_analytics, run_stream_analytics, trace_tuples,
+    DistStreamReport,
+};
+use std::time::Duration;
+
+const PARALLELISM: usize = 4;
+
+fn main() {
+    header(
+        "Fig. 16 — distributed stream topologies (single-node vs edge→cloud split placement)",
+        "stream pipelines run across the cloud and the edge in a uniform manner",
+    );
+    let smoke = smoke_mode();
+    let (images, work) = if smoke { (4, 2) } else { (48, 48) };
+    let trace = LidarTrace::generate(23, images, 1.0);
+    let tuples = trace_tuples(&trace, 512);
+    println!(
+        "{} tile tuples, score work={work}, parallelism={PARALLELISM}, smoke={smoke}",
+        tuples.len()
+    );
+
+    // Ground truth: the plain single-process executor.
+    let local = run_stream_analytics(&analytics_spec(PARALLELISM), tuples.clone(), work).unwrap();
+
+    let single =
+        run_distributed_analytics(&analytics_spec(PARALLELISM), tuples.clone(), work, false)
+            .unwrap();
+    let split =
+        run_distributed_analytics(&analytics_spec(PARALLELISM), tuples, work, true).unwrap();
+
+    println!(
+        "\n{:<14} {:>10} {:>12} {:>10} {:>10} {:>12}  placement",
+        "placement", "t/s", "net bytes", "net msgs", "net time", "outputs"
+    );
+    row("single-node", &single);
+    row("split", &split);
+
+    // Output equivalence: both placements, and vs the local executor.
+    let want = canon_local(&local.outputs);
+    assert_eq!(want, canon_local(&single.outputs), "single-node placement must match local");
+    assert_eq!(want, canon_local(&split.outputs), "split placement must match local");
+
+    // Placement shape and network accounting.
+    assert!(
+        split.placement.contains("cloud:[stats"),
+        "the aggregation stage must land on the cloud node: {}",
+        split.placement
+    );
+    assert_eq!(single.net_bytes, 0, "single-node placement must ship nothing");
+    assert_eq!(single.net_messages, 0);
+    assert!(split.net_bytes > 0, "split placement must ship its hop batches");
+    assert!(split.net_messages > 0);
+    assert!(split.net_virtual > Duration::ZERO, "hops must cost virtual network time");
+    println!(
+        "\nsplit ships {} bytes in {} batches costing {:.2?} of Pi-uplink time",
+        split.net_bytes, split.net_messages, split.net_virtual
+    );
+    println!("\nfig16 OK");
+}
+
+fn row(label: &str, r: &DistStreamReport) {
+    println!(
+        "{label:<14} {:>10.0} {:>12} {:>10} {:>9.2?} {:>12}  {}",
+        r.tuples_per_sec(),
+        r.net_bytes,
+        r.net_messages,
+        r.net_virtual,
+        r.outputs.len(),
+        r.placement
+    );
+}
+
+fn canon_local(outs: &[rpulsar::stream::tuple::Tuple]) -> Vec<String> {
+    let mut v: Vec<String> = outs.iter().map(|t| format!("{:?}", t.fields)).collect();
+    v.sort();
+    v
+}

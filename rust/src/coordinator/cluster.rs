@@ -21,6 +21,10 @@ use crate::overlay::node_id::NodeId;
 use crate::overlay::quadtree::QuadTree;
 use crate::overlay::ring::{build_converged_tables, simulate_lookup, RoutingTable};
 use crate::routing::router::ContentRouter;
+use crate::stream::deploy::TopologyManager;
+use crate::stream::dist::{self, FragmentHost, PlacementPlan, RouteState};
+use crate::stream::topology::Topology;
+use crate::stream::tuple::Tuple;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
@@ -33,6 +37,25 @@ pub struct Cluster {
     network: SimNetwork,
     device: DeviceKind,
     base_dir: PathBuf,
+    /// Distributed stream topologies deployed across the nodes:
+    /// key → route of per-node fragments (see `stream::dist`).
+    streams: BTreeMap<String, RouteState>,
+}
+
+/// The cluster hosts topology fragments on its nodes' own managers and
+/// charges inter-fragment hops to its simulated network.
+impl FragmentHost for Cluster {
+    fn manager(&self, node: &NodeId) -> Option<&TopologyManager> {
+        self.nodes.get(node).map(|n| n.topologies())
+    }
+
+    fn manager_mut(&mut self, node: &NodeId) -> Option<&mut TopologyManager> {
+        self.nodes.get_mut(node).map(|n| n.topologies_mut())
+    }
+
+    fn network(&self) -> &SimNetwork {
+        &self.network
+    }
 }
 
 impl Cluster {
@@ -82,6 +105,7 @@ impl Cluster {
             network,
             device,
             base_dir,
+            streams: BTreeMap::new(),
         })
     }
 
@@ -277,8 +301,82 @@ impl Cluster {
         Ok(out.into_iter().collect())
     }
 
-    /// Shut every node down and remove scratch directories.
+    // ---- Distributed stream topologies (cross-node stage placement) ----
+
+    /// Deploy a stream topology split across the cluster per `plan`:
+    /// each fragment starts on its node's own `TopologyManager`
+    /// (stages must be registered there beforehand), and inter-node
+    /// hops ship `NetMessage::StreamBatch` frames charged to the
+    /// simulated network. Fails — rolling back started fragments —
+    /// on unknown nodes, unknown stages, or a plan that does not cover
+    /// the chain contiguously.
+    pub fn deploy_stream(&mut self, key: &str, spec: &str, plan: &PlacementPlan) -> Result<()> {
+        if self.streams.contains_key(key) {
+            return Err(Error::Stream(format!("stream topology `{key}` already deployed")));
+        }
+        let topo = Topology::parse(key, spec)?;
+        let route = dist::start_fragments(self, key, &topo, plan)?;
+        self.streams.insert(key.to_string(), route);
+        Ok(())
+    }
+
+    /// Feed one tuple into a deployed stream (blocks under cross-node
+    /// backpressure).
+    pub fn stream_send(&mut self, key: &str, tuple: Tuple) -> Result<()> {
+        self.stream_send_batch(key, vec![tuple])
+    }
+
+    /// Feed a batch, pumping inter-node hops as it goes.
+    pub fn stream_send_batch(&mut self, key: &str, batch: Vec<Tuple>) -> Result<()> {
+        let mut route = self.take_stream(key)?;
+        let r = dist::feed_route(&*self, &mut route, batch);
+        self.streams.insert(key.to_string(), route);
+        r
+    }
+
+    /// Move in-flight batches across the stream's node hops
+    /// (non-blocking) and return outputs collected so far from the
+    /// final fragment. On a pump error the collected outputs stay in
+    /// the route — a later `stream_stop` can still return them.
+    pub fn stream_pump(&mut self, key: &str) -> Result<Vec<Tuple>> {
+        let mut route = self.take_stream(key)?;
+        let r = dist::pump_route(&*self, &mut route);
+        let out = if r.is_ok() { route.take_collected() } else { Vec::new() };
+        self.streams.insert(key.to_string(), route);
+        r.map(|()| out)
+    }
+
+    /// Tear a deployed stream down: cascade-drain every fragment
+    /// front-to-back (zero loss across node boundaries) and return the
+    /// complete remaining output.
+    pub fn stream_stop(&mut self, key: &str) -> Result<Vec<Tuple>> {
+        let route = self.take_stream(key)?;
+        dist::stop_route(self, route)
+    }
+
+    /// Keys of deployed distributed streams.
+    pub fn streams(&self) -> Vec<String> {
+        self.streams.keys().cloned().collect()
+    }
+
+    /// Fragment route of a deployed stream (tests/inspection).
+    pub fn stream_route(&self, key: &str) -> Option<&RouteState> {
+        self.streams.get(key)
+    }
+
+    fn take_stream(&mut self, key: &str) -> Result<RouteState> {
+        self.streams
+            .remove(key)
+            .ok_or_else(|| Error::NotRunning(format!("stream topology `{key}`")))
+    }
+
+    /// Shut every node down and remove scratch directories. Deployed
+    /// streams are cascade-drained first (best-effort — their outputs
+    /// are discarded; call [`Cluster::stream_stop`] to keep them).
     pub fn shutdown(mut self) -> Result<()> {
+        for key in self.streams() {
+            let _ = self.stream_stop(&key);
+        }
         for node in self.nodes.values_mut() {
             node.shutdown()?;
         }
@@ -423,6 +521,50 @@ mod tests {
             .unwrap();
         let leader = c.elect_master(region).unwrap();
         assert_eq!(c.quadtree().master_of(region), Some(leader));
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn distributed_stream_spans_cluster_nodes() {
+        use crate::stream::operator::OperatorKind;
+        let mut c = Cluster::new("stream", 4, DeviceKind::Native).unwrap();
+        let ids = c.ids();
+        let (edge, core) = (ids[0], ids[1]);
+        for id in [edge, core] {
+            let topologies = c.node_mut(&id).unwrap().topologies_mut();
+            topologies.register_stage("inc", || {
+                Box::new(OperatorKind::map("inc", |mut t| {
+                    let v = t.get("X").unwrap_or(0.0);
+                    t.set("X", v + 1.0);
+                    t
+                }))
+            });
+            topologies.register_stage("sum", || {
+                Box::new(OperatorKind::window_by("sum", "X", 2, "K"))
+            });
+        }
+        let topo = Topology::parse("job", "inc->sum@K").unwrap();
+        let plan = PlacementPlan::split_at(&topo, 1, edge, core);
+        c.deploy_stream("job", "inc->sum@K", &plan).unwrap();
+        assert_eq!(c.streams(), vec!["job"]);
+        // Double-deploy is rejected without disturbing the instance.
+        assert!(c.deploy_stream("job", "inc->sum@K", &plan).is_err());
+        for i in 0..8u64 {
+            c.stream_send(
+                "job",
+                Tuple::new(i, vec![]).with("K", (i % 2) as f64).with("X", 1.0),
+            )
+            .unwrap();
+        }
+        let out = c.stream_stop("job").unwrap();
+        // 2 keys × 4 samples → two full windows of 2 per key.
+        assert_eq!(out.len(), 4, "{out:?}");
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(2.0)), "{out:?}");
+        assert!(c.network().messages() > 0, "cross-node hops must be charged");
+        assert!(c.streams().is_empty());
+        // The fragments are gone from the hosting nodes' managers.
+        assert!(c.node(&edge).unwrap().topologies().running().is_empty());
+        assert!(c.node(&core).unwrap().topologies().running().is_empty());
         c.shutdown().unwrap();
     }
 

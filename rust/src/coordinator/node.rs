@@ -187,6 +187,14 @@ impl Node {
         &mut self.topologies
     }
 
+    /// Shared topology-manager access: feeding, non-blocking egress /
+    /// ingress polling of deployed fragments (`send`/`poll_outputs`/
+    /// `try_send_batch` all take `&self`) — what the cluster's
+    /// cross-node stage hops drive.
+    pub fn topologies(&self) -> &TopologyManager {
+        &self.topologies
+    }
+
     /// Rendezvous state access (tests).
     pub fn rendezvous(&self) -> &RendezvousPoint {
         &self.rendezvous

@@ -39,6 +39,61 @@ use crate::metrics::Registry;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Age/idle-driven topic retirement: the *policy* deciding when to
+/// invoke the [`Broker::retire_topic`] mechanism. The broker keeps
+/// per-topic watermarks (creation, last publish, last fetch);
+/// [`Broker::retire_idle`] sweeps them through the pure
+/// [`RetirePolicy::decide`] and retires every topic it condemns —
+/// edge brokers live long and topics churn (short-lived sensors,
+/// per-mission streams), so without this the topic set only grows.
+#[derive(Debug, Clone)]
+pub struct RetirePolicy {
+    /// Retire only topics with no publish for at least this long.
+    pub max_publish_idle: Duration,
+    /// ...and no fetch touching them for at least this long (both idle
+    /// conditions must hold — a drained-but-actively-polled topic is
+    /// kept, as is a quiet topic a consumer still reads).
+    pub max_fetch_idle: Duration,
+    /// Grace period: never retire a topic younger than this, however
+    /// idle (a freshly created topic has had no chance to be used).
+    pub min_age: Duration,
+}
+
+impl Default for RetirePolicy {
+    fn default() -> Self {
+        RetirePolicy {
+            max_publish_idle: Duration::from_secs(600),
+            max_fetch_idle: Duration::from_secs(600),
+            min_age: Duration::from_secs(60),
+        }
+    }
+}
+
+impl RetirePolicy {
+    /// The pure retirement decision for one topic given its watermark
+    /// distances: `true` condemns the topic.
+    pub fn decide(&self, age: Duration, publish_idle: Duration, fetch_idle: Duration) -> bool {
+        age >= self.min_age
+            && publish_idle >= self.max_publish_idle
+            && fetch_idle >= self.max_fetch_idle
+    }
+}
+
+/// Per-topic activity watermarks feeding [`RetirePolicy::decide`].
+#[derive(Debug, Clone, Copy)]
+struct TopicWatermarks {
+    created: Instant,
+    last_publish: Instant,
+    last_fetch: Instant,
+}
+
+impl TopicWatermarks {
+    fn new(now: Instant) -> Self {
+        TopicWatermarks { created: now, last_publish: now, last_fetch: now }
+    }
+}
 
 /// A consumer's registered interest.
 #[derive(Debug, Clone)]
@@ -76,6 +131,8 @@ pub struct Broker {
     /// Subscription pid → consumer name (`None` = retired pid).
     sub_pids: Vec<Option<String>>,
     sub_index: ProfileIndex,
+    /// Topic key → activity watermarks (retirement policy input).
+    watermarks: BTreeMap<String, TopicWatermarks>,
     metrics: Registry,
 }
 
@@ -95,6 +152,7 @@ impl Broker {
             subscriptions: BTreeMap::new(),
             sub_pids: Vec::new(),
             sub_index: ProfileIndex::new(),
+            watermarks: BTreeMap::new(),
             metrics,
         }
     }
@@ -125,9 +183,16 @@ impl Broker {
         matching::matches(query, stored)
     }
 
-    fn open_topic(&mut self, profile: &Profile) -> Result<&mut (Profile, MemoryMappedQueue)> {
-        let key = Self::topic_key(profile)?;
-        if !self.topics.contains_key(&key) {
+    /// Open (creating if needed) the topic under its precomputed key —
+    /// `key` must be `Self::topic_key(profile)` (the caller already
+    /// rendered it; rendering is the publish hot path's allocation).
+    fn open_topic(
+        &mut self,
+        key: &str,
+        profile: &Profile,
+    ) -> Result<&mut (Profile, MemoryMappedQueue)> {
+        if !self.topics.contains_key(key) {
+            let key = key.to_string();
             let opts = QueueOptions {
                 dir: self.topic_dir(&key),
                 segment_bytes: self.base.segment_bytes,
@@ -136,6 +201,7 @@ impl Broker {
             };
             let queue = MemoryMappedQueue::open(opts)?;
             self.topics.insert(key.clone(), (profile.clone(), queue));
+            self.watermarks.insert(key.clone(), TopicWatermarks::new(Instant::now()));
             // Index the new topic and incrementally extend the match
             // cache of every subscription the new topic matches: one
             // reverse query, not a scan over all subscriptions.
@@ -154,14 +220,18 @@ impl Broker {
                 }
             }
         }
-        Ok(self.topics.get_mut(&key).unwrap())
+        Ok(self.topics.get_mut(key).unwrap())
     }
 
     /// Publish a message under a simple (concrete) profile. Returns the
     /// assigned sequence number within the topic.
     pub fn publish(&mut self, profile: &Profile, payload: &[u8]) -> Result<u64> {
-        let (_, queue) = self.open_topic(profile)?;
+        let key = Self::topic_key(profile)?;
+        let (_, queue) = self.open_topic(&key, profile)?;
         let seq = queue.append(payload)?;
+        if let Some(w) = self.watermarks.get_mut(&key) {
+            w.last_publish = Instant::now();
+        }
         self.metrics.counter("broker.published").inc();
         self.metrics.counter("broker.published_bytes").add(payload.len() as u64);
         Ok(seq)
@@ -240,6 +310,7 @@ impl Broker {
         if self.topics.remove(&key).is_none() {
             return Ok(false);
         }
+        self.watermarks.remove(&key);
         // Tombstone the index entry; the postings go stale and are
         // filtered at query time until the next compaction. (The pid
         // scan is a Vec walk, bounded at O(2·live) by compaction.)
@@ -260,6 +331,33 @@ impl Broker {
         self.metrics.counter("broker.topics_retired").inc();
         self.maybe_compact_topic_index();
         Ok(true)
+    }
+
+    /// Sweep every topic through `policy` and retire the condemned
+    /// ones via [`Broker::retire_topic`] (queue + segments dropped,
+    /// caches purged — see there). Returns the retired topic keys.
+    /// Call periodically (an edge node's housekeeping tick); runs zero
+    /// matcher calls.
+    pub fn retire_idle(&mut self, policy: &RetirePolicy) -> Result<Vec<String>> {
+        let now = Instant::now();
+        let doomed: Vec<(String, Profile)> = self
+            .topics
+            .iter()
+            .filter(|(key, _)| {
+                self.watermarks.get(*key).is_some_and(|w| {
+                    policy.decide(
+                        now.duration_since(w.created),
+                        now.duration_since(w.last_publish),
+                        now.duration_since(w.last_fetch),
+                    )
+                })
+            })
+            .map(|(key, (profile, _))| (key.clone(), profile.clone()))
+            .collect();
+        for (_, profile) in &doomed {
+            self.retire_topic(profile)?;
+        }
+        Ok(doomed.into_iter().map(|(key, _)| key).collect())
     }
 
     /// Re-pack the topic index once retired pids dominate (topic
@@ -316,12 +414,16 @@ impl Broker {
         }
         let start = *rr % topics;
         *rr = (*rr + 1) % topics;
+        let now = Instant::now();
         for i in 0..topics {
             if out.len() >= max {
                 break;
             }
             let key = &matched[(start + i) % topics];
             let (_, queue) = &self.topics[key];
+            if let Some(w) = self.watermarks.get_mut(key) {
+                w.last_fetch = now;
+            }
             let cursor = cursors.get(key).copied().unwrap_or(0);
             let (next, msgs) = queue.poll_shared(cursor, max - out.len());
             for m in msgs {
@@ -615,6 +717,72 @@ mod tests {
         let again = b.fetch("app", 10).unwrap();
         assert_eq!(again.len(), 1);
         assert_eq!(&again[0].1[..], b"a3");
+    }
+
+    #[test]
+    fn retire_policy_decisions_are_age_and_idle_driven() {
+        let s = Duration::from_secs;
+        let p = RetirePolicy { max_publish_idle: s(10), max_fetch_idle: s(20), min_age: s(5) };
+        // Old enough and idle on both watermarks → retire.
+        assert!(p.decide(s(60), s(10), s(20)), "thresholds are inclusive");
+        assert!(p.decide(s(60), s(300), s(300)));
+        // Any live signal keeps the topic.
+        assert!(!p.decide(s(60), s(9), s(300)), "recent publish keeps it");
+        assert!(!p.decide(s(60), s(300), s(19)), "recent fetch keeps it");
+        // Grace period: young topics are never retired.
+        assert!(!p.decide(s(4), s(300), s(300)));
+        // Zero thresholds condemn everything immediately.
+        let zero = RetirePolicy {
+            max_publish_idle: Duration::ZERO,
+            max_fetch_idle: Duration::ZERO,
+            min_age: Duration::ZERO,
+        };
+        assert!(zero.decide(Duration::ZERO, Duration::ZERO, Duration::ZERO));
+    }
+
+    #[test]
+    fn retire_idle_sweeps_through_the_mechanism() {
+        let mut b = broker("retire-idle");
+        b.publish(&p("a,x"), b"1").unwrap();
+        b.publish(&p("b,x"), b"2").unwrap();
+        b.subscribe("app", p("*,x"));
+        // Generous thresholds: nothing condemned.
+        let lazy = RetirePolicy::default();
+        assert!(b.retire_idle(&lazy).unwrap().is_empty());
+        assert_eq!(b.topic_count(), 2);
+        // Zero thresholds: every topic is idle by definition; the
+        // mechanism runs (caches purged, disk reclaimed, counted).
+        let eager = RetirePolicy {
+            max_publish_idle: Duration::ZERO,
+            max_fetch_idle: Duration::ZERO,
+            min_age: Duration::ZERO,
+        };
+        let retired = b.retire_idle(&eager).unwrap();
+        assert_eq!(retired, ["a,x", "b,x"]);
+        assert_eq!(b.topic_count(), 0);
+        assert!(b.subscription("app").unwrap().matched_topics().is_empty());
+        assert_eq!(b.metrics().counter("broker.topics_retired").get(), 2);
+        assert!(b.fetch("app", 10).unwrap().is_empty());
+        // The broker keeps working: a re-published topic is fresh.
+        b.publish(&p("a,x"), b"again").unwrap();
+        assert_eq!(b.fetch("app", 10).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn publish_and_fetch_refresh_watermarks() {
+        let mut b = broker("watermark");
+        b.publish(&p("s,t"), b"1").unwrap();
+        let w0 = b.watermarks["s,t"];
+        std::thread::sleep(Duration::from_millis(2));
+        b.publish(&p("s,t"), b"2").unwrap();
+        let w1 = b.watermarks["s,t"];
+        assert!(w1.last_publish > w0.last_publish, "publish must advance the watermark");
+        assert_eq!(w1.created, w0.created, "creation time is immutable");
+        b.subscribe("app", p("s,*"));
+        std::thread::sleep(Duration::from_millis(2));
+        b.fetch("app", 10).unwrap();
+        let w2 = b.watermarks["s,t"];
+        assert!(w2.last_fetch > w1.last_fetch, "fetch must advance the watermark");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use crate::ar::message::ArMessage;
 use crate::error::{Error, Result};
 use crate::overlay::node_id::{NodeId, ID_BYTES};
+use crate::stream::tuple::Tuple;
 use crate::util::codec::{ByteReader, ByteWriter};
 
 /// Overlay/application messages.
@@ -22,6 +23,14 @@ pub enum NetMessage {
     Ar { from: NodeId, msg: ArMessage },
     /// Stream data push (paper's `push` primitive payload).
     Push { from: NodeId, topic: String, payload: Vec<u8> },
+    /// A batch of stream tuples crossing a node boundary: the egress of
+    /// one topology fragment feeding the ingress (router inbound) of
+    /// the next fragment's first stage on another node.
+    StreamBatch { from: NodeId, topology: String, stage: String, tuples: Vec<Tuple> },
+    /// End-of-stream marker for a cross-node stage hop: everything the
+    /// upstream fragment will ever emit has been shipped; the receiving
+    /// fragment may drain and flush (zero-loss `finish` across nodes).
+    StreamEos { from: NodeId, topology: String, stage: String },
 }
 
 impl NetMessage {
@@ -33,6 +42,8 @@ impl NetMessage {
             NetMessage::Pong { .. } => 3,
             NetMessage::Ar { .. } => 4,
             NetMessage::Push { .. } => 5,
+            NetMessage::StreamBatch { .. } => 6,
+            NetMessage::StreamEos { .. } => 7,
         }
     }
 
@@ -44,7 +55,9 @@ impl NetMessage {
             | NetMessage::Ping { from }
             | NetMessage::Pong { from }
             | NetMessage::Ar { from, .. }
-            | NetMessage::Push { from, .. } => *from,
+            | NetMessage::Push { from, .. }
+            | NetMessage::StreamBatch { from, .. }
+            | NetMessage::StreamEos { from, .. } => *from,
         }
     }
 
@@ -60,6 +73,18 @@ impl NetMessage {
             NetMessage::Push { topic, payload, .. } => {
                 w.put_str(topic);
                 w.put_bytes(payload);
+            }
+            NetMessage::StreamBatch { topology, stage, tuples, .. } => {
+                w.put_str(topology);
+                w.put_str(stage);
+                w.put_varint(tuples.len() as u64);
+                for t in tuples {
+                    t.encode_into(&mut w);
+                }
+            }
+            NetMessage::StreamEos { topology, stage, .. } => {
+                w.put_str(topology);
+                w.put_str(stage);
             }
             _ => {}
         }
@@ -85,6 +110,21 @@ impl NetMessage {
                 from,
                 topic: r.get_str()?.to_string(),
                 payload: r.get_bytes()?.to_vec(),
+            },
+            6 => {
+                let topology = r.get_str()?.to_string();
+                let stage = r.get_str()?.to_string();
+                let n = r.get_varint()?;
+                let mut tuples = Vec::new();
+                for _ in 0..n {
+                    tuples.push(Tuple::decode_from(&mut r)?);
+                }
+                NetMessage::StreamBatch { from, topology, stage, tuples }
+            }
+            7 => NetMessage::StreamEos {
+                from,
+                topology: r.get_str()?.to_string(),
+                stage: r.get_str()?.to_string(),
             },
             other => return Err(Error::Parse(format!("unknown wire tag {other}"))),
         })
@@ -142,6 +182,29 @@ mod tests {
         };
         assert_eq!(NetMessage::decode(&msg.encode()).unwrap(), msg);
         assert!(msg.wire_size() > 100);
+    }
+
+    #[test]
+    fn stream_batch_round_trip() {
+        let tuples = vec![
+            Tuple::new(0, vec![1, 2, 3]).with("IMG", 4.0).with("V", -1.5),
+            Tuple::new(1, vec![]).with("IMG", 4.0),
+        ];
+        let msg = NetMessage::StreamBatch {
+            from: id(7),
+            topology: "analytics".into(),
+            stage: "stats".into(),
+            tuples,
+        };
+        let bytes = msg.encode();
+        assert_eq!(NetMessage::decode(&bytes).unwrap(), msg);
+        assert_eq!(msg.wire_size(), bytes.len() + 4);
+        let eos = NetMessage::StreamEos {
+            from: id(7),
+            topology: "analytics".into(),
+            stage: "stats".into(),
+        };
+        assert_eq!(NetMessage::decode(&eos.encode()).unwrap(), eos);
     }
 
     #[test]

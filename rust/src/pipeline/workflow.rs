@@ -10,10 +10,14 @@
 //! for SQLite-like or Nitrite-like stores.
 
 use super::lidar::LidarTrace;
+use crate::overlay::node_id::NodeId;
 use crate::stream::deploy::TopologyManager;
-use crate::stream::engine::{RescaleReport, StreamEngine};
-use crate::stream::operator::OperatorKind;
+use crate::stream::dist::{plan_placement, DistributedTopologyManager, PlacementPlan};
+use crate::stream::engine::{RescaleReport, StageFactory, StreamEngine};
+use crate::stream::operator::{Operator, OperatorKind};
+use crate::stream::topology::Topology;
 use crate::stream::tuple::Tuple;
+use std::sync::Arc;
 use crate::baselines::edgent_like::EdgentLikePipeline;
 use crate::baselines::kafka_like::KafkaLikeBroker;
 use crate::baselines::nitrite_like::NitriteLikeStore;
@@ -298,20 +302,50 @@ pub fn elastic_analytics_spec(parallelism: usize) -> String {
     }
 }
 
+/// The analytics stage factories, shared between local and distributed
+/// registration. `work` scales the per-tile scoring cost (1 ≈ one pass
+/// over the payload).
+fn analytics_stage_factories(work: u32) -> Vec<(&'static str, StageFactory)> {
+    vec![
+        (
+            "score",
+            Arc::new(move || {
+                Box::new(OperatorKind::map("score", move |mut t| {
+                    let (result, quality) = edge_score(&t.payload, work);
+                    t.set("RESULT", result);
+                    t.set("QUALITY", quality);
+                    t
+                })) as Box<dyn Operator>
+            }) as StageFactory,
+        ),
+        (
+            "decide",
+            Arc::new(|| Box::new(OperatorKind::rules("decide", paper_rules())) as Box<dyn Operator>)
+                as StageFactory,
+        ),
+        (
+            "stats",
+            Arc::new(|| {
+                Box::new(OperatorKind::window_by("stats", "RESULT", 8, "IMG")) as Box<dyn Operator>
+            }) as StageFactory,
+        ),
+    ]
+}
+
 /// Register the analytics stages on a [`TopologyManager`]. `work`
 /// scales the per-tile scoring cost (1 ≈ one pass over the payload).
 pub fn register_analytics_stages(manager: &mut TopologyManager, work: u32) {
-    manager.register_stage("score", move || {
-        Box::new(OperatorKind::map("score", move |mut t| {
-            let (result, quality) = edge_score(&t.payload, work);
-            t.set("RESULT", result);
-            t.set("QUALITY", quality);
-            t
-        }))
-    });
-    manager.register_stage("decide", || Box::new(OperatorKind::rules("decide", paper_rules())));
-    manager
-        .register_stage("stats", || Box::new(OperatorKind::window_by("stats", "RESULT", 8, "IMG")));
+    for (name, factory) in analytics_stage_factories(work) {
+        manager.register_stage_factory(name, factory);
+    }
+}
+
+/// Register the analytics stages on every node of a
+/// [`DistributedTopologyManager`].
+pub fn register_analytics_stages_dist(dist: &mut DistributedTopologyManager, work: u32) {
+    for (name, factory) in analytics_stage_factories(work) {
+        dist.register_stage_factory(name, factory);
+    }
 }
 
 /// Deterministic CPU-bound edge-density proxy over a tile payload:
@@ -460,6 +494,91 @@ pub fn run_rescaling_analytics(
         },
         report,
     ))
+}
+
+// ---- Distributed stream analytics (Fig-13 split edge → cloud) ----
+
+/// Report of one distributed analytics run: the stream metrics plus
+/// what the cross-node hops cost on the simulated network.
+#[derive(Debug, Clone)]
+pub struct DistStreamReport {
+    pub spec: String,
+    /// Human-readable fragment placement (`pi:[score->decide] → cloud:[stats@IMG]`).
+    pub placement: String,
+    pub tuples: usize,
+    pub outputs: Vec<Tuple>,
+    pub elapsed: Duration,
+    /// Bytes shipped between nodes (`StreamBatch` frames, wire-sized).
+    pub net_bytes: u64,
+    /// Inter-node messages (one per shipped batch).
+    pub net_messages: u64,
+    /// Device-accurate virtual network time those hops cost.
+    pub net_virtual: Duration,
+}
+
+impl DistStreamReport {
+    /// Input tuples per wall-clock second.
+    pub fn tuples_per_sec(&self) -> f64 {
+        self.tuples as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Drive `tuples` through the Fig-13 analytics topology placed across
+/// a two-node SimNetwork cluster — a Raspberry Pi source node and a
+/// `cloud_small` core node. With `split`, the placement planner puts
+/// the source-adjacent stages (`score`, `decide`) on the Pi and the
+/// `stats` aggregation on the cloud node, shipping tuple batches as
+/// `NetMessage::StreamBatch` over the simulated network; without it
+/// the whole chain runs on the Pi node (no hops, zero network bytes).
+/// Output equivalence between the two placements — and with the plain
+/// single-process `run_stream_analytics` — is asserted by
+/// `benches/fig16_distributed_stream.rs` and `rust/tests/cluster.rs`.
+pub fn run_distributed_analytics(
+    spec: &str,
+    tuples: Vec<Tuple>,
+    work: u32,
+    split: bool,
+) -> Result<DistStreamReport> {
+    let mut dist = DistributedTopologyManager::new();
+    let pi = NodeId::from_name("edge-pi");
+    let cloud = NodeId::from_name("cloud-core");
+    dist.add_node(pi, DeviceProfile::raspberry_pi());
+    dist.add_node(cloud, DeviceProfile::cloud_small());
+    register_analytics_stages_dist(&mut dist, work);
+    let topo = Topology::parse("analytics", spec)?;
+    let plan = if split {
+        plan_placement(&topo, pi, &dist.profiles(), &["stats"])?
+    } else {
+        PlacementPlan::single(pi, &topo)
+    };
+    let placement = plan
+        .fragments
+        .iter()
+        .map(|f| format!("{}:[{}]", if f.node == pi { "pi" } else { "cloud" }, f.spec()))
+        .collect::<Vec<_>>()
+        .join(" → ");
+    dist.start("analytics", spec, &plan)?;
+    let count = tuples.len();
+    let started = std::time::Instant::now();
+    let mut iter = tuples.into_iter();
+    loop {
+        let batch: Vec<Tuple> = iter.by_ref().take(64).collect();
+        if batch.is_empty() {
+            break;
+        }
+        dist.send_batch("analytics", batch)?;
+    }
+    let outputs = dist.stop("analytics")?;
+    Ok(DistStreamReport {
+        spec: spec.to_string(),
+        placement,
+        tuples: count,
+        outputs,
+        elapsed: started.elapsed(),
+        net_bytes: dist.network().bytes(),
+        net_messages: dist.network().messages(),
+        net_virtual: dist.network().virtual_elapsed(),
+    })
 }
 
 /// How many 256×256 tiles an image of `nominal` bytes decomposes into
@@ -642,6 +761,30 @@ mod tests {
         };
         assert_eq!(canon(&serial), canon(&rescaled), "spec: {}", rescaled.spec);
         assert!(!rescaled.outputs.is_empty());
+    }
+
+    #[test]
+    fn distributed_split_analytics_equals_local_run() {
+        // The flagship scenario: Fig-13 analytics split Pi → cloud must
+        // reproduce the single-process run's output multiset exactly,
+        // and the split placement must actually use the network.
+        let trace = LidarTrace::generate(11, 5, 0.2);
+        let tuples = trace_tuples(&trace, 512);
+        let local = run_stream_analytics(&analytics_spec(1), tuples.clone(), 1).unwrap();
+        let split = run_distributed_analytics(&analytics_spec(1), tuples.clone(), 1, true).unwrap();
+        let single = run_distributed_analytics(&analytics_spec(1), tuples, 1, false).unwrap();
+        let canon_t = |outs: &[Tuple]| {
+            let mut v: Vec<String> = outs.iter().map(|t| format!("{:?}", t.fields)).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(canon_t(&local.outputs), canon_t(&split.outputs), "{}", split.placement);
+        assert_eq!(canon_t(&local.outputs), canon_t(&single.outputs));
+        assert!(split.placement.contains("pi:[") && split.placement.contains("cloud:[stats"),
+            "source stages on the Pi, aggregation on the cloud: {}", split.placement);
+        assert!(split.net_bytes > 0 && split.net_messages > 0, "split must ship batches");
+        assert!(split.net_virtual > Duration::ZERO, "hops must cost virtual network time");
+        assert_eq!(single.net_bytes, 0, "single-node placement must not touch the net");
     }
 
     #[test]

@@ -30,6 +30,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 pub use super::engine::StageFactory;
+// The distributed layer (placement planning + the cross-node manager)
+// lives in `stream::dist`; re-exported here because deployment is its
+// natural entry point.
+pub use super::dist::{plan_placement, DistributedTopologyManager, Fragment, PlacementPlan};
 
 /// Watermark-driven autoscaling of elastic stages.
 ///
@@ -56,6 +60,15 @@ pub struct ScalePolicy {
     pub sustain: u32,
     /// Sampling period.
     pub tick: Duration,
+    /// Predictive term: smoothing factor (0 < α ≤ 1) for the EWMA of
+    /// the per-tick backlog *growth* (the arrival rate in excess of
+    /// service, in batches/tick). Only read when `growth_high > 0`.
+    pub ewma_alpha: f64,
+    /// Scale up when the smoothed growth rate is ≥ this many
+    /// batches/tick — *before* the absolute `high_depth` watermark is
+    /// reached ("scale ahead of the backlog"). ≤ 0 disables the
+    /// predictive term, reducing to the pure watermark policy.
+    pub growth_high: f64,
 }
 
 impl Default for ScalePolicy {
@@ -67,6 +80,8 @@ impl Default for ScalePolicy {
             max_parallelism: 8,
             sustain: 5,
             tick: Duration::from_millis(20),
+            ewma_alpha: 0.4,
+            growth_high: 0.0,
         }
     }
 }
@@ -74,11 +89,26 @@ impl Default for ScalePolicy {
 impl ScalePolicy {
     /// The pure scaling decision for one sample: the target parallelism,
     /// or `None` to hold. (The watcher additionally requires the same
-    /// direction for `sustain` consecutive samples.)
+    /// direction for `sustain` consecutive samples.) Watermark-only
+    /// form; see [`ScalePolicy::decide_with_rate`] for the predictive
+    /// variant the watcher actually drives.
     pub fn decide(&self, depth: i64, current: usize) -> Option<usize> {
-        if depth >= self.high_depth && current < self.max_parallelism {
+        self.decide_with_rate(depth, 0.0, current)
+    }
+
+    /// Predictive decision: `growth_ewma` is the smoothed per-tick
+    /// backlog growth. Scale-up triggers on the depth watermark *or*
+    /// (when enabled) a sustained positive growth trend; scale-down
+    /// additionally requires the backlog not to be growing, so a stage
+    /// that is momentarily shallow but filling is left alone.
+    pub fn decide_with_rate(&self, depth: i64, growth_ewma: f64, current: usize) -> Option<usize> {
+        let predicted_up = self.growth_high > 0.0 && growth_ewma >= self.growth_high;
+        if (depth >= self.high_depth || predicted_up) && current < self.max_parallelism {
             Some((current * 2).min(self.max_parallelism))
-        } else if depth <= self.low_depth && current > self.min_parallelism {
+        } else if depth <= self.low_depth
+            && current > self.min_parallelism
+            && (self.growth_high <= 0.0 || growth_ewma <= 0.0)
+        {
             Some((current / 2).max(self.min_parallelism))
         } else {
             None
@@ -116,7 +146,13 @@ impl TopologyManager {
         name: &str,
         factory: impl Fn() -> Box<dyn Operator> + Send + Sync + 'static,
     ) {
-        self.factories.insert(name.to_string(), Arc::new(factory));
+        self.register_stage_factory(name, Arc::new(factory));
+    }
+
+    /// Register an already-shared stage factory (the distributed
+    /// manager registers one factory on every node's manager).
+    pub fn register_stage_factory(&mut self, name: &str, factory: StageFactory) {
+        self.factories.insert(name.to_string(), factory);
     }
 
     /// Known stage names.
@@ -181,6 +217,25 @@ impl TopologyManager {
     /// threads (the topology drains only after all senders drop).
     pub fn sender(&self, key: &str) -> Result<super::engine::StreamSender> {
         self.handle(key)?.sender()
+    }
+
+    /// Non-blocking ingress: offer a batch, getting it back when the
+    /// topology's inbound channel is momentarily full (cross-node hops
+    /// re-offer instead of blocking the shipper). See
+    /// [`super::engine::StreamSender::try_send_batch`].
+    pub fn try_send_batch(
+        &self,
+        key: &str,
+        batch: Vec<super::tuple::Tuple>,
+    ) -> Result<Option<Vec<super::tuple::Tuple>>> {
+        self.handle(key)?.try_send_batch(batch)
+    }
+
+    /// Non-blocking egress: drain up to `max` already-available output
+    /// tuples of a running topology (the poll side of a cross-node
+    /// stage hop). See [`super::engine::EngineHandle::try_drain`].
+    pub fn poll_outputs(&self, key: &str, max: usize) -> Result<Vec<super::tuple::Tuple>> {
+        Ok(self.handle(key)?.try_drain(max))
     }
 
     /// Live-rescale a stage of a running topology to `parallelism`
@@ -269,6 +324,9 @@ fn run_policy(
     let topo = rescaler.topology().to_string();
     // Per-stage streak of consecutive same-direction decisions.
     let mut streaks: BTreeMap<String, (usize, u32)> = BTreeMap::new();
+    // Per-stage (previous depth sample, growth EWMA) for the
+    // predictive term; unused (stays 0) when `growth_high` disables it.
+    let mut trends: BTreeMap<String, (i64, f64)> = BTreeMap::new();
     while !stop.load(Ordering::Relaxed) {
         std::thread::sleep(policy.tick);
         for stage in rescaler.elastic_stages() {
@@ -281,7 +339,16 @@ fn run_policy(
             for r in 0..current {
                 depth = depth.max(metrics.gauge(&format!("stream.{topo}.{stage}.r{r}.depth")).get());
             }
-            let Some(target) = policy.decide(depth, current) else {
+            let growth = if policy.growth_high > 0.0 {
+                let (prev, ewma) = trends.get(&stage).copied().unwrap_or((depth, 0.0));
+                let alpha = policy.ewma_alpha.clamp(0.0, 1.0);
+                let next = alpha * (depth - prev) as f64 + (1.0 - alpha) * ewma;
+                trends.insert(stage.clone(), (depth, next));
+                next
+            } else {
+                0.0
+            };
+            let Some(target) = policy.decide_with_rate(depth, growth, current) else {
                 streaks.remove(&stage);
                 continue;
             };
@@ -571,6 +638,7 @@ mod tests {
             max_parallelism: 8,
             sustain: 1,
             tick: Duration::from_millis(1),
+            ..ScalePolicy::default()
         };
         assert_eq!(p.decide(8, 1), Some(2), "high watermark doubles");
         assert_eq!(p.decide(100, 4), Some(8));
@@ -579,8 +647,40 @@ mod tests {
         assert_eq!(p.decide(0, 1), None, "min floor holds");
         assert_eq!(p.decide(4, 4), None, "between watermarks holds");
         // Negative low watermark disables scale-down entirely.
-        let up_only = ScalePolicy { low_depth: -1, ..p };
+        let up_only = ScalePolicy { low_depth: -1, ..p.clone() };
         assert_eq!(up_only.decide(0, 4), None);
+    }
+
+    #[test]
+    fn predictive_policy_scales_ahead_of_the_backlog() {
+        let p = ScalePolicy {
+            high_depth: 16,
+            low_depth: 0,
+            min_parallelism: 1,
+            max_parallelism: 8,
+            sustain: 1,
+            tick: Duration::from_millis(1),
+            ewma_alpha: 0.5,
+            growth_high: 2.0,
+        };
+        // Depth well under the watermark, but the backlog is growing
+        // fast: the predictive term fires first.
+        assert_eq!(p.decide_with_rate(4, 3.0, 2), Some(4));
+        assert_eq!(p.decide_with_rate(4, 2.0, 2), Some(4), "threshold is inclusive");
+        assert_eq!(p.decide_with_rate(4, 1.9, 2), None, "below the growth threshold");
+        // The depth watermark still works on its own.
+        assert_eq!(p.decide_with_rate(16, 0.0, 2), Some(4));
+        // Bounds hold for predictive scale-ups too.
+        assert_eq!(p.decide_with_rate(4, 10.0, 8), None, "max cap holds");
+        // A shallow-but-filling stage is not scaled down.
+        assert_eq!(p.decide_with_rate(0, 1.0, 4), None, "growing backlog blocks scale-down");
+        assert_eq!(p.decide_with_rate(0, 0.0, 4), Some(2), "idle *and* flat halves");
+        assert_eq!(p.decide_with_rate(0, -0.5, 4), Some(2), "shrinking backlog halves");
+        // growth_high ≤ 0 disables the term: exactly the old policy.
+        let plain = ScalePolicy { growth_high: 0.0, ..p };
+        assert_eq!(plain.decide_with_rate(4, 100.0, 2), None);
+        assert_eq!(plain.decide_with_rate(0, 100.0, 4), Some(2));
+        assert_eq!(plain.decide(16, 2), Some(4));
     }
 
     #[test]
@@ -613,6 +713,7 @@ mod tests {
             max_parallelism: 4,
             sustain: 1,
             tick: Duration::from_millis(1),
+            ..ScalePolicy::default()
         };
         m.start_with_policy("auto", "slow", policy).unwrap();
         const N: u64 = 400;

@@ -1,0 +1,1023 @@
+//! Distributed stream topologies: cross-node stage placement over the
+//! net plane (paper §IV-C2 / §V-B — pipelines run "across the cloud and
+//! edge in a uniform manner" on heterogeneous devices).
+//!
+//! A topology's stage chain is split into contiguous *fragments*, each
+//! deployed on one cluster node's own [`TopologyManager`]. Inter-node
+//! stage hops ship `Vec<Tuple>` batches as
+//! [`NetMessage::StreamBatch`] frames: the upstream fragment's egress
+//! ([`super::engine::EngineHandle::try_drain`]) is polled, the batch is
+//! encoded with the `util::codec` tuple codec, the hop is charged to
+//! the [`SimNetwork`] at the sending node's device profile, and the
+//! decoded batch is offered to the downstream fragment's ingress
+//! ([`super::engine::EngineHandle::try_send_batch`]) — non-blocking on
+//! both sides, with a bounded staging window in between, so
+//! backpressure propagates across nodes without ever deadlocking the
+//! shipper.
+//!
+//! **Placement.** [`plan_placement`] assigns stages to nodes by
+//! [`DeviceProfile`]: source-adjacent stages stay on the source (edge)
+//! node, and from the first CPU-heavy stage onward (an explicit hint,
+//! or the first `*P` parallel stage) the chain runs on the most capable
+//! node (lowest `compute_scale`). Hand-built [`PlacementPlan`]s are
+//! validated to cover the chain contiguously in stage order — hops only
+//! ever flow downstream.
+//!
+//! **Ordering & drain.** A hop is a single FIFO route (poll → ship →
+//! staged queue → admission), so per-key order is preserved across
+//! every hop; fragment-internal guarantees are the executor's own.
+//! Teardown cascades front-to-back: fragment *i* is only stopped after
+//! everything upstream has been stopped and fully forwarded, and its
+//! trailing output (window remainders) is shipped downstream before
+//! fragment *i+1* closes — zero-loss `finish` holds across node
+//! boundaries. Over TCP the same contract is carried by an explicit
+//! [`NetMessage::StreamEos`] marker ([`tcp_ingress`]).
+//!
+//! Single-fragment plans short-circuit to plain local execution with
+//! byte-identical semantics (no hop, no serialization, zero network
+//! charge). See `docs/distributed-stream.md`.
+
+use super::deploy::TopologyManager;
+use super::engine::{RescaleReport, StageFactory, StreamEngine};
+use super::operator::Operator;
+use super::topology::{StageSpec, Topology};
+use super::tuple::Tuple;
+use crate::device::profile::DeviceProfile;
+use crate::error::{Error, Result};
+use crate::metrics::Registry;
+use crate::net::sim::SimNetwork;
+use crate::net::tcp::TcpEndpoint;
+use crate::net::wire::NetMessage;
+use crate::overlay::node_id::NodeId;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Max tuples per shipped `StreamBatch` frame.
+pub const SHIP_CHUNK: usize = 64;
+
+/// Max tuples drained from a fragment egress per pump pass.
+const PUMP_POLL: usize = 256;
+
+/// Staged-tuple bound per route: once this many decoded tuples are
+/// waiting for downstream admission, `send` blocks the producer — the
+/// cross-node backpressure window.
+const STAGE_WINDOW: usize = 4096;
+
+/// Pause between no-progress delivery passes (a downstream fragment is
+/// momentarily full; its workers need the core).
+const RETRY_PAUSE: Duration = Duration::from_micros(200);
+
+/// One contiguous run of stages assigned to a node.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fragment {
+    pub node: NodeId,
+    pub stages: Vec<StageSpec>,
+}
+
+impl Fragment {
+    /// The fragment's sub-chain rendered back to spec form.
+    pub fn spec(&self) -> String {
+        self.stages.iter().map(StageSpec::render).collect::<Vec<_>>().join("->")
+    }
+}
+
+/// A full placement: fragments in chain order, together covering every
+/// stage of the topology exactly once.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlacementPlan {
+    pub fragments: Vec<Fragment>,
+}
+
+impl PlacementPlan {
+    /// Everything on one node — the local fast path (no hops).
+    pub fn single(node: NodeId, topo: &Topology) -> Self {
+        PlacementPlan { fragments: vec![Fragment { node, stages: topo.stages.clone() }] }
+    }
+
+    /// Two fragments: stages `[..cut]` on `edge`, `[cut..]` on `core`.
+    /// `cut` must satisfy `0 < cut < topo.len()` (validated at start).
+    pub fn split_at(topo: &Topology, cut: usize, edge: NodeId, core: NodeId) -> Self {
+        let cut = cut.min(topo.stages.len());
+        PlacementPlan {
+            fragments: vec![
+                Fragment { node: edge, stages: topo.stages[..cut].to_vec() },
+                Fragment { node: core, stages: topo.stages[cut..].to_vec() },
+            ],
+        }
+    }
+
+    /// Check the plan covers `topo` contiguously in stage order with no
+    /// empty fragments. (Hops only flow downstream; a permuted or
+    /// partial plan would silently reorder or drop stages.)
+    pub fn validate(&self, topo: &Topology) -> Result<()> {
+        if self.fragments.is_empty() {
+            return Err(Error::Stream(format!(
+                "placement for topology `{}` has no fragments",
+                topo.name
+            )));
+        }
+        if let Some(f) = self.fragments.iter().find(|f| f.stages.is_empty()) {
+            return Err(Error::Stream(format!(
+                "placement for topology `{}` has an empty fragment on node {}",
+                topo.name, f.node
+            )));
+        }
+        let flat: Vec<&StageSpec> = self.fragments.iter().flat_map(|f| f.stages.iter()).collect();
+        if flat.len() != topo.stages.len()
+            || flat.iter().zip(topo.stages.iter()).any(|(got, want)| **got != *want)
+        {
+            return Err(Error::Stream(format!(
+                "placement does not cover topology `{}` contiguously in stage order",
+                topo.render()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Plan stage→node placement by device profile: source-adjacent stages
+/// stay on `source`; from the first CPU-heavy stage onward (named in
+/// `cpu_heavy`, else the first `*P` parallel stage) the chain runs on
+/// the most capable registered node (lowest `compute_scale`; the
+/// unthrottled Native profile counts as fastest). Stage 0 always stays
+/// with the source — it is the ingestion point — and when the source
+/// *is* the most capable node (or nothing is CPU-heavy) the whole chain
+/// stays local.
+pub fn plan_placement(
+    topo: &Topology,
+    source: NodeId,
+    profiles: &BTreeMap<NodeId, DeviceProfile>,
+    cpu_heavy: &[&str],
+) -> Result<PlacementPlan> {
+    if !profiles.contains_key(&source) {
+        return Err(Error::Net(format!("placement source {source} is not a registered node")));
+    }
+    let best = profiles
+        .iter()
+        .min_by(|(ia, a), (ib, b)| a.compute_scale.total_cmp(&b.compute_scale).then(ia.cmp(ib)))
+        .map(|(id, _)| *id)
+        .expect("profiles contains at least the source");
+    let cut = topo
+        .stages
+        .iter()
+        .position(|s| cpu_heavy.iter().any(|h| h.eq_ignore_ascii_case(&s.name)))
+        .or_else(|| topo.stages.iter().position(|s| s.parallelism > 1))
+        .map(|c| c.max(1));
+    match cut {
+        Some(c) if c < topo.stages.len() && best != source => {
+            Ok(PlacementPlan::split_at(topo, c, source, best))
+        }
+        _ => Ok(PlacementPlan::single(source, topo)),
+    }
+}
+
+/// Resolves fragment-hosting managers and the network hops are charged
+/// to — implemented by [`DistributedTopologyManager`] (standalone
+/// composition) and by the coordinator's `Cluster` (real nodes).
+pub trait FragmentHost {
+    /// The per-node topology manager hosting fragments on `node`.
+    fn manager(&self, node: &NodeId) -> Option<&TopologyManager>;
+    /// Mutable manager access (fragment start/stop).
+    fn manager_mut(&mut self, node: &NodeId) -> Option<&mut TopologyManager>;
+    /// The network inter-fragment batches ship over.
+    fn network(&self) -> &SimNetwork;
+}
+
+fn manager_of<'a, H: FragmentHost + ?Sized>(
+    host: &'a H,
+    node: &NodeId,
+) -> Result<&'a TopologyManager> {
+    host.manager(node)
+        .ok_or_else(|| Error::Net(format!("no stream manager for node {node}")))
+}
+
+/// One deployed fragment of a running distributed topology.
+#[derive(Debug, Clone)]
+pub struct RouteHop {
+    /// The hosting node.
+    pub node: NodeId,
+    /// The fragment's key on that node's manager (`<key>#f<i>`).
+    pub frag_key: String,
+    /// First stage name — labels the hop's `StreamBatch` frames.
+    pub stage: String,
+    /// All stage names in the fragment (rescale routing).
+    pub stages: Vec<String>,
+}
+
+/// Live state of one distributed topology: its fragments in chain
+/// order, the per-hop staging queues (tuples decoded off the wire,
+/// waiting for downstream admission), and the outputs drained from the
+/// final fragment.
+pub struct RouteState {
+    key: String,
+    hops: Vec<RouteHop>,
+    staged: Vec<VecDeque<Tuple>>,
+    collected: Vec<Tuple>,
+}
+
+impl RouteState {
+    /// The fragments, in chain order.
+    pub fn hops(&self) -> &[RouteHop] {
+        &self.hops
+    }
+
+    /// Total tuples staged between fragments (backpressure window).
+    pub fn staged_tuples(&self) -> usize {
+        self.staged.iter().map(VecDeque::len).sum()
+    }
+
+    /// Take everything collected from the final fragment so far.
+    pub fn take_collected(&mut self) -> Vec<Tuple> {
+        std::mem::take(&mut self.collected)
+    }
+}
+
+/// Start every fragment of `plan` on its node's manager. On failure the
+/// already-started fragments are rolled back. Fragment keys are
+/// `<key>#f<i>`; per-fragment stage specs keep their annotations, so
+/// parallel/keyed/elastic semantics are exactly the local executor's.
+pub fn start_fragments<H: FragmentHost + ?Sized>(
+    host: &mut H,
+    key: &str,
+    topo: &Topology,
+    plan: &PlacementPlan,
+) -> Result<RouteState> {
+    plan.validate(topo)?;
+    let mut hops: Vec<RouteHop> = Vec::with_capacity(plan.fragments.len());
+    for (i, frag) in plan.fragments.iter().enumerate() {
+        let frag_key = format!("{key}#f{i}");
+        let started = match host.manager_mut(&frag.node) {
+            Some(m) => m.start(&frag_key, &frag.spec()),
+            None => Err(Error::Net(format!("no stream manager for node {}", frag.node))),
+        };
+        if let Err(e) = started {
+            for h in &hops {
+                if let Some(m) = host.manager_mut(&h.node) {
+                    let _ = m.stop(&h.frag_key);
+                }
+            }
+            return Err(e);
+        }
+        hops.push(RouteHop {
+            node: frag.node,
+            frag_key,
+            stage: frag.stages[0].name.clone(),
+            stages: frag.stages.iter().map(|s| s.name.clone()).collect(),
+        });
+    }
+    let staged = (0..hops.len()).map(|_| VecDeque::new()).collect();
+    Ok(RouteState { key: key.to_string(), hops, staged, collected: Vec::new() })
+}
+
+/// Ship one batch across a node boundary: encode as a
+/// [`NetMessage::StreamBatch`], charge the hop to the network at the
+/// frame's wire size, and hand back the *decoded* tuples — the real
+/// codec runs on the data path, so what arrives is what the wire
+/// carries. Errors when either side is partitioned or unregistered.
+pub fn ship_batch(
+    net: &SimNetwork,
+    from: NodeId,
+    to: NodeId,
+    topology: &str,
+    stage: &str,
+    tuples: Vec<Tuple>,
+) -> Result<Vec<Tuple>> {
+    let msg = NetMessage::StreamBatch {
+        from,
+        topology: topology.to_string(),
+        stage: stage.to_string(),
+        tuples,
+    };
+    let bytes = msg.encode();
+    net.charge_hop(&from, &to, bytes.len() + 4).ok_or_else(|| {
+        Error::Net(format!("stream hop {from} → {to} unreachable (node down or unregistered)"))
+    })?;
+    match NetMessage::decode(&bytes)? {
+        NetMessage::StreamBatch { tuples, .. } => Ok(tuples),
+        _ => Err(Error::Net("stream hop decoded to a non-batch message".into())),
+    }
+}
+
+/// Re-offer staged tuples into fragment `i`'s ingress, preserving their
+/// order; returns whether anything was admitted. A rejected batch goes
+/// back to the *front* of the staging queue.
+fn offer_staged<H: FragmentHost + ?Sized>(
+    host: &H,
+    st: &mut RouteState,
+    i: usize,
+) -> Result<bool> {
+    let mut progress = false;
+    while !st.staged[i].is_empty() {
+        let take = SHIP_CHUNK.min(st.staged[i].len());
+        let batch: Vec<Tuple> = st.staged[i].drain(..take).collect();
+        let hop = &st.hops[i];
+        let mgr = manager_of(host, &hop.node)?;
+        match mgr.try_send_batch(&hop.frag_key, batch)? {
+            None => progress = true,
+            Some(back) => {
+                for t in back.into_iter().rev() {
+                    st.staged[i].push_front(t);
+                }
+                break;
+            }
+        }
+    }
+    Ok(progress)
+}
+
+/// One full pump: repeatedly move data one hop forward — deliver staged
+/// tuples into each fragment, drain each fragment's egress, ship it
+/// (encode → charge → decode) toward the next fragment's staging queue,
+/// and collect the final fragment's outputs — until a whole pass makes
+/// no progress. Non-blocking: a full downstream fragment leaves its
+/// tuples staged for the next pump.
+pub fn pump_route<H: FragmentHost + ?Sized>(host: &H, st: &mut RouteState) -> Result<()> {
+    loop {
+        let mut progress = false;
+        for i in 0..st.hops.len() {
+            if i > 0 {
+                progress |= offer_staged(host, st, i)?;
+            }
+            let outs = {
+                let hop = &st.hops[i];
+                let mgr = manager_of(host, &hop.node)?;
+                if !mgr.is_running(&hop.frag_key) {
+                    continue; // stopped (teardown cascade in progress)
+                }
+                mgr.poll_outputs(&hop.frag_key, PUMP_POLL)?
+            };
+            if outs.is_empty() {
+                continue;
+            }
+            progress = true;
+            if i + 1 == st.hops.len() {
+                st.collected.extend(outs);
+            } else {
+                let (from, to) = (st.hops[i].node, st.hops[i + 1].node);
+                let mut iter = outs.into_iter();
+                loop {
+                    let chunk: Vec<Tuple> = iter.by_ref().take(SHIP_CHUNK).collect();
+                    if chunk.is_empty() {
+                        break;
+                    }
+                    let arrived =
+                        ship_batch(host.network(), from, to, &st.key, &st.hops[i + 1].stage, chunk)?;
+                    st.staged[i + 1].extend(arrived);
+                }
+            }
+        }
+        if !progress {
+            return Ok(());
+        }
+    }
+}
+
+/// Feed a batch into the route's first fragment, pumping hops between
+/// chunks. The first-hop feed is a non-blocking offer retried around
+/// pumps — the route keeps moving (and downstream fragments keep
+/// draining) even while the first fragment is saturated, so the feeder
+/// can never wedge against its own unpumped hops. Once the staging
+/// window overflows — a downstream node cannot keep up — the call
+/// blocks the producer until the window drains: cross-node
+/// backpressure.
+pub fn feed_route<H: FragmentHost + ?Sized>(
+    host: &H,
+    st: &mut RouteState,
+    batch: Vec<Tuple>,
+) -> Result<()> {
+    let node = st.hops[0].node;
+    let frag_key = st.hops[0].frag_key.clone();
+    let mut iter = batch.into_iter();
+    loop {
+        let chunk: Vec<Tuple> = iter.by_ref().take(SHIP_CHUNK).collect();
+        if chunk.is_empty() {
+            break;
+        }
+        let mut pending = Some(chunk);
+        while let Some(chunk) = pending.take() {
+            if let Some(back) = manager_of(host, &node)?.try_send_batch(&frag_key, chunk)? {
+                pending = Some(back);
+                pump_route(host, st)?;
+                std::thread::sleep(RETRY_PAUSE); // executor backpressure
+            }
+        }
+        pump_route(host, st)?;
+    }
+    while st.staged_tuples() > STAGE_WINDOW {
+        pump_route(host, st)?;
+        if st.staged_tuples() > STAGE_WINDOW {
+            std::thread::sleep(RETRY_PAUSE);
+        }
+    }
+    Ok(())
+}
+
+/// Tear a route down front-to-back with zero loss: for each fragment in
+/// chain order, first deliver everything still staged for it (pumping
+/// the downstream hops so admission frees up), then stop it — its
+/// `finish` drain returns the trailing output (window remainders),
+/// which is shipped downstream before the next fragment closes. Every
+/// fragment is stopped even after a fault; the first error wins.
+/// Returns the distributed topology's complete output.
+pub fn stop_route<H: FragmentHost + ?Sized>(host: &mut H, mut st: RouteState) -> Result<Vec<Tuple>> {
+    let mut first_err: Option<Error> = None;
+    for i in 0..st.hops.len() {
+        if first_err.is_none() {
+            loop {
+                if let Err(e) = pump_route(&*host, &mut st) {
+                    first_err = Some(e);
+                    break;
+                }
+                if st.staged[i].is_empty() {
+                    break;
+                }
+                std::thread::sleep(RETRY_PAUSE);
+            }
+        } else {
+            st.staged[i].clear();
+        }
+        let trailing = {
+            let hop = &st.hops[i];
+            match host.manager_mut(&hop.node) {
+                Some(m) => m.stop(&hop.frag_key),
+                None => Err(Error::Net(format!("no stream manager for node {}", hop.node))),
+            }
+        };
+        match trailing {
+            Ok(tuples) => {
+                if first_err.is_some() {
+                    continue;
+                }
+                if i + 1 == st.hops.len() {
+                    st.collected.extend(tuples);
+                } else {
+                    let (from, to) = (st.hops[i].node, st.hops[i + 1].node);
+                    let mut iter = tuples.into_iter();
+                    loop {
+                        let chunk: Vec<Tuple> = iter.by_ref().take(SHIP_CHUNK).collect();
+                        if chunk.is_empty() {
+                            break;
+                        }
+                        match ship_batch(
+                            host.network(),
+                            from,
+                            to,
+                            &st.key,
+                            &st.hops[i + 1].stage,
+                            chunk,
+                        ) {
+                            Ok(arrived) => st.staged[i + 1].extend(arrived),
+                            Err(e) => {
+                                first_err = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(st.collected),
+    }
+}
+
+/// A node slot of the standalone distributed manager.
+struct NodeRuntime {
+    profile: DeviceProfile,
+    manager: TopologyManager,
+}
+
+/// Standalone cross-node composition: owns one [`TopologyManager`] per
+/// registered node and a [`SimNetwork`] charging every inter-fragment
+/// hop at the sending node's device profile. The coordinator's
+/// `Cluster` offers the same operations over its real nodes; this type
+/// is the stream plane alone (benches, property tests, examples).
+pub struct DistributedTopologyManager {
+    network: SimNetwork,
+    nodes: BTreeMap<NodeId, NodeRuntime>,
+    factories: BTreeMap<String, StageFactory>,
+    routes: BTreeMap<String, RouteState>,
+    metrics: Registry,
+}
+
+impl Default for DistributedTopologyManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FragmentHost for DistributedTopologyManager {
+    fn manager(&self, node: &NodeId) -> Option<&TopologyManager> {
+        self.nodes.get(node).map(|n| &n.manager)
+    }
+
+    fn manager_mut(&mut self, node: &NodeId) -> Option<&mut TopologyManager> {
+        self.nodes.get_mut(node).map(|n| &mut n.manager)
+    }
+
+    fn network(&self) -> &SimNetwork {
+        &self.network
+    }
+}
+
+impl DistributedTopologyManager {
+    pub fn new() -> Self {
+        Self::with_network(SimNetwork::new())
+    }
+
+    /// Share an existing network (a cluster's accounting clock).
+    pub fn with_network(network: SimNetwork) -> Self {
+        DistributedTopologyManager {
+            network,
+            nodes: BTreeMap::new(),
+            factories: BTreeMap::new(),
+            routes: BTreeMap::new(),
+            metrics: Registry::new(),
+        }
+    }
+
+    /// Register a node with its device profile. Previously registered
+    /// stage factories are replayed onto the new node's manager, so
+    /// registration order doesn't matter. Re-adding an existing node
+    /// only updates its profile — the manager (and any fragments
+    /// running on it) is kept, never silently replaced.
+    pub fn add_node(&mut self, id: NodeId, profile: DeviceProfile) {
+        self.network.register(id, profile);
+        if let Some(existing) = self.nodes.get_mut(&id) {
+            existing.profile = profile;
+            return;
+        }
+        let mut manager = TopologyManager::new(StreamEngine::with_metrics(self.metrics.clone()));
+        for (name, factory) in &self.factories {
+            manager.register_stage_factory(name, factory.clone());
+        }
+        self.nodes.insert(id, NodeRuntime { profile, manager });
+    }
+
+    /// Registered nodes, sorted.
+    pub fn nodes(&self) -> Vec<NodeId> {
+        self.nodes.keys().copied().collect()
+    }
+
+    /// Node id → device profile map (placement planning input).
+    pub fn profiles(&self) -> BTreeMap<NodeId, DeviceProfile> {
+        self.nodes.iter().map(|(id, n)| (*id, n.profile)).collect()
+    }
+
+    /// The shared network (bytes/messages/virtual-time counters).
+    pub fn network(&self) -> &SimNetwork {
+        &self.network
+    }
+
+    /// Shared metrics registry (all per-node executors report here).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Register a stage factory on every node (present and future).
+    pub fn register_stage(
+        &mut self,
+        name: &str,
+        factory: impl Fn() -> Box<dyn Operator> + Send + Sync + 'static,
+    ) {
+        self.register_stage_factory(name, Arc::new(factory));
+    }
+
+    /// Register an already-shared stage factory on every node.
+    pub fn register_stage_factory(&mut self, name: &str, factory: StageFactory) {
+        for node in self.nodes.values_mut() {
+            node.manager.register_stage_factory(name, factory.clone());
+        }
+        self.factories.insert(name.to_string(), factory);
+    }
+
+    /// Start `spec` under `key`, split across nodes per `plan`.
+    pub fn start(&mut self, key: &str, spec: &str, plan: &PlacementPlan) -> Result<()> {
+        if self.routes.contains_key(key) {
+            return Err(Error::Stream(format!("distributed topology `{key}` already running")));
+        }
+        let topo = Topology::parse(key, spec)?;
+        let st = start_fragments(self, key, &topo, plan)?;
+        self.routes.insert(key.to_string(), st);
+        Ok(())
+    }
+
+    /// Feed one tuple (blocks under cross-node backpressure).
+    pub fn send(&mut self, key: &str, tuple: Tuple) -> Result<()> {
+        self.send_batch(key, vec![tuple])
+    }
+
+    /// Feed a batch, pumping inter-node hops as it goes.
+    pub fn send_batch(&mut self, key: &str, batch: Vec<Tuple>) -> Result<()> {
+        let mut st = self.take_route(key)?;
+        let r = feed_route(&*self, &mut st, batch);
+        self.routes.insert(key.to_string(), st);
+        r
+    }
+
+    /// Move whatever is in flight one or more hops forward (non-blocking).
+    pub fn pump(&mut self, key: &str) -> Result<()> {
+        let mut st = self.take_route(key)?;
+        let r = pump_route(&*self, &mut st);
+        self.routes.insert(key.to_string(), st);
+        r
+    }
+
+    /// Drain up to `max` outputs already collected from the final
+    /// fragment (pumps first). On a pump error the collected outputs
+    /// stay in the route — a later `stop` can still return them.
+    pub fn poll(&mut self, key: &str, max: usize) -> Result<Vec<Tuple>> {
+        let mut st = self.take_route(key)?;
+        let r = pump_route(&*self, &mut st);
+        let out = if r.is_ok() {
+            let mut out = st.take_collected();
+            if out.len() > max {
+                st.collected = out.split_off(max);
+            }
+            out
+        } else {
+            Vec::new()
+        };
+        self.routes.insert(key.to_string(), st);
+        r.map(|()| out)
+    }
+
+    /// Live-rescale a stage of a running distributed topology on
+    /// whichever node hosts its fragment.
+    pub fn rescale(&mut self, key: &str, stage: &str, parallelism: usize) -> Result<RescaleReport> {
+        let (node, frag_key) = {
+            let st = self
+                .routes
+                .get(key)
+                .ok_or_else(|| Error::NotRunning(format!("distributed topology `{key}`")))?;
+            let hop = st
+                .hops
+                .iter()
+                .find(|h| h.stages.iter().any(|s| s == stage))
+                .ok_or_else(|| {
+                    Error::Stream(format!("distributed topology `{key}` has no stage `{stage}`"))
+                })?;
+            (hop.node, hop.frag_key.clone())
+        };
+        manager_of(&*self, &node)?.rescale(&frag_key, stage, parallelism)
+    }
+
+    /// Stop a distributed topology: cascade-drain every fragment
+    /// front-to-back and return the complete output.
+    pub fn stop(&mut self, key: &str) -> Result<Vec<Tuple>> {
+        let st = self.take_route(key)?;
+        stop_route(self, st)
+    }
+
+    /// Keys of running distributed topologies.
+    pub fn running(&self) -> Vec<String> {
+        self.routes.keys().cloned().collect()
+    }
+
+    /// Whether `key` is currently deployed.
+    pub fn is_running(&self, key: &str) -> bool {
+        self.routes.contains_key(key)
+    }
+
+    /// The route of a running topology (tests/inspection).
+    pub fn route(&self, key: &str) -> Option<&RouteState> {
+        self.routes.get(key)
+    }
+
+    fn take_route(&mut self, key: &str) -> Result<RouteState> {
+        self.routes
+            .remove(key)
+            .ok_or_else(|| Error::NotRunning(format!("distributed topology `{key}`")))
+    }
+}
+
+impl std::fmt::Debug for DistributedTopologyManager {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "DistributedTopologyManager(nodes={}, routes={})",
+            self.nodes.len(),
+            self.routes.len()
+        )
+    }
+}
+
+// ---- Framed-TCP stage hops (real multi-process runs) ----
+
+/// The egress side of a cross-process stage hop: one persistent framed
+/// TCP connection shipping [`NetMessage::StreamBatch`] frames to a
+/// remote fragment's [`tcp_ingress`]. A single connection is read by a
+/// single endpoint reader thread, so batch order — and therefore
+/// per-key order — is preserved across the process boundary; the
+/// closing [`TcpStageLink::eos`] marker carries the drain contract.
+pub struct TcpStageLink {
+    stream: std::net::TcpStream,
+    from: NodeId,
+    topology: String,
+    stage: String,
+}
+
+impl TcpStageLink {
+    /// Connect to the remote fragment's endpoint.
+    pub fn connect(addr: &str, from: NodeId, topology: &str, stage: &str) -> Result<Self> {
+        Ok(TcpStageLink {
+            stream: std::net::TcpStream::connect(addr)?,
+            from,
+            topology: topology.to_string(),
+            stage: stage.to_string(),
+        })
+    }
+
+    /// Ship one tuple batch downstream (empty batches are skipped).
+    pub fn ship(&mut self, tuples: Vec<Tuple>) -> Result<()> {
+        if tuples.is_empty() {
+            return Ok(());
+        }
+        crate::net::tcp::write_frame(
+            &mut self.stream,
+            &NetMessage::StreamBatch {
+                from: self.from,
+                topology: self.topology.clone(),
+                stage: self.stage.clone(),
+                tuples,
+            },
+        )
+    }
+
+    /// Signal end-of-stream and close the link: everything the
+    /// upstream fragment will ever emit has been shipped.
+    pub fn eos(mut self) -> Result<()> {
+        crate::net::tcp::write_frame(
+            &mut self.stream,
+            &NetMessage::StreamEos {
+                from: self.from,
+                topology: self.topology.clone(),
+                stage: self.stage.clone(),
+            },
+        )
+    }
+}
+
+/// Run a TCP ingress for the fragment `key` on `manager`: feed every
+/// matching [`NetMessage::StreamBatch`] into the fragment until its
+/// [`NetMessage::StreamEos`] arrives, then stop the fragment and return
+/// its complete output in order (zero-loss `finish` across the TCP
+/// boundary). The fragment's egress is drained *while* feeding — a
+/// non-blocking offer retried around `poll_outputs` — so a stream
+/// larger than the executor's bounded buffering can never wedge the
+/// ingress against its own undrained outputs. Frames for other
+/// topologies are ignored; `idle` bounds how long the ingress waits
+/// between frames before giving up.
+pub fn tcp_ingress(
+    endpoint: &TcpEndpoint,
+    manager: &mut TopologyManager,
+    key: &str,
+    idle: Duration,
+) -> Result<Vec<Tuple>> {
+    let mut out: Vec<Tuple> = Vec::new();
+    loop {
+        match endpoint.recv_timeout(idle) {
+            Some(NetMessage::StreamBatch { topology, tuples, .. }) if topology == key => {
+                let mut pending = Some(tuples);
+                while let Some(batch) = pending.take() {
+                    if let Some(back) = manager.try_send_batch(key, batch)? {
+                        pending = Some(back);
+                        out.extend(manager.poll_outputs(key, usize::MAX)?);
+                        std::thread::sleep(RETRY_PAUSE); // executor backpressure
+                    }
+                }
+                out.extend(manager.poll_outputs(key, usize::MAX)?);
+            }
+            Some(NetMessage::StreamEos { topology, .. }) if topology == key => {
+                out.extend(manager.stop(key)?);
+                return Ok(out);
+            }
+            Some(_) => {} // unrelated traffic on the shared endpoint
+            None => {
+                return Err(Error::Timeout(format!(
+                    "tcp ingress for `{key}` saw no frame for {idle:?}"
+                )))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::operator::OperatorKind;
+
+    fn id(n: u32) -> NodeId {
+        NodeId::from_name(&format!("d-{n}"))
+    }
+
+    fn two_node_manager() -> (DistributedTopologyManager, NodeId, NodeId) {
+        let mut dist = DistributedTopologyManager::new();
+        let (pi, cloud) = (id(1), id(2));
+        dist.add_node(pi, DeviceProfile::raspberry_pi());
+        dist.add_node(cloud, DeviceProfile::cloud_small());
+        dist.register_stage("inc", || {
+            Box::new(OperatorKind::map("inc", |mut t| {
+                let v = t.get("X").unwrap_or(0.0);
+                t.set("X", v + 1.0);
+                t
+            }))
+        });
+        dist.register_stage("double", || {
+            Box::new(OperatorKind::map("double", |mut t| {
+                let v = t.get("X").unwrap_or(0.0);
+                t.set("X", v * 2.0);
+                t
+            }))
+        });
+        dist.register_stage("kwin", || Box::new(OperatorKind::window_by("kwin", "X", 4, "K")));
+        (dist, pi, cloud)
+    }
+
+    fn topo(spec: &str) -> Topology {
+        Topology::parse("t", spec).unwrap()
+    }
+
+    #[test]
+    fn planner_splits_at_cpu_heavy_hint() {
+        let (dist, pi, cloud) = two_node_manager();
+        let t = topo("inc->double->kwin@K");
+        let plan = plan_placement(&t, pi, &dist.profiles(), &["kwin"]).unwrap();
+        assert_eq!(plan.fragments.len(), 2);
+        assert_eq!(plan.fragments[0].node, pi);
+        assert_eq!(plan.fragments[0].spec(), "inc->double");
+        assert_eq!(plan.fragments[1].node, cloud, "cloud_small out-computes the Pi");
+        assert_eq!(plan.fragments[1].spec(), "kwin@K");
+        plan.validate(&t).unwrap();
+    }
+
+    #[test]
+    fn planner_falls_back_to_first_parallel_stage() {
+        let (dist, pi, _cloud) = two_node_manager();
+        let t = topo("inc->double*4->kwin@K");
+        let plan = plan_placement(&t, pi, &dist.profiles(), &[]).unwrap();
+        assert_eq!(plan.fragments.len(), 2);
+        assert_eq!(plan.fragments[0].spec(), "inc");
+        assert_eq!(plan.fragments[1].spec(), "double*4->kwin@K");
+    }
+
+    #[test]
+    fn planner_keeps_chain_local_without_a_reason_to_split() {
+        let (dist, pi, _cloud) = two_node_manager();
+        // Nothing CPU-heavy, nothing parallel: stay on the source.
+        let t = topo("inc->double");
+        let plan = plan_placement(&t, pi, &dist.profiles(), &[]).unwrap();
+        assert_eq!(plan.fragments.len(), 1);
+        assert_eq!(plan.fragments[0].node, pi);
+        // A CPU-heavy *first* stage still leaves ingestion on the source.
+        let t = topo("inc*4->double");
+        let plan = plan_placement(&t, pi, &dist.profiles(), &[]).unwrap();
+        assert_eq!(plan.fragments.len(), 2);
+        assert_eq!(plan.fragments[0].spec(), "inc*4");
+        // Unknown source errors.
+        assert!(plan_placement(&t, id(99), &dist.profiles(), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_placements_are_rejected() {
+        let (mut dist, pi, cloud) = two_node_manager();
+        let t = topo("inc->double");
+        // Out-of-order fragments.
+        let permuted = PlacementPlan {
+            fragments: vec![
+                Fragment { node: pi, stages: vec![t.stages[1].clone()] },
+                Fragment { node: cloud, stages: vec![t.stages[0].clone()] },
+            ],
+        };
+        assert!(permuted.validate(&t).is_err());
+        assert!(dist.start("p", "inc->double", &permuted).is_err());
+        assert!(!dist.is_running("p"));
+        // Partial cover.
+        let partial = PlacementPlan {
+            fragments: vec![Fragment { node: pi, stages: vec![t.stages[0].clone()] }],
+        };
+        assert!(partial.validate(&t).is_err());
+        // Empty fragment.
+        let empty = PlacementPlan {
+            fragments: vec![
+                Fragment { node: pi, stages: t.stages.clone() },
+                Fragment { node: cloud, stages: vec![] },
+            ],
+        };
+        assert!(empty.validate(&t).is_err());
+        // Unknown node: start fails and rolls back cleanly.
+        let ghost = PlacementPlan::split_at(&t, 1, pi, id(42));
+        assert!(dist.start("p", "inc->double", &ghost).is_err());
+        assert!(!dist.is_running("p"));
+        assert!(dist.manager(&pi).unwrap().running().is_empty(), "rollback");
+    }
+
+    #[test]
+    fn split_chain_matches_local_run_and_charges_the_network() {
+        let (mut dist, pi, cloud) = two_node_manager();
+        let t = topo("inc->double");
+        let plan = PlacementPlan::split_at(&t, 1, pi, cloud);
+        dist.start("s", "inc->double", &plan).unwrap();
+        assert_eq!(dist.running(), vec!["s"]);
+        for i in 0..100u64 {
+            dist.send("s", Tuple::new(i, vec![]).with("X", i as f64)).unwrap();
+        }
+        let out = dist.stop("s").unwrap();
+        assert_eq!(out.len(), 100, "zero loss across the node boundary");
+        let mut xs: Vec<f64> = out.iter().map(|t| t.get("X").unwrap()).collect();
+        xs.sort_by(f64::total_cmp);
+        let mut want: Vec<f64> = (0..100).map(|i| (i as f64 + 1.0) * 2.0).collect();
+        want.sort_by(f64::total_cmp);
+        assert_eq!(xs, want);
+        assert!(dist.network().messages() > 0, "hops must be accounted");
+        assert!(dist.network().bytes() > 0);
+        assert!(!dist.is_running("s"));
+    }
+
+    #[test]
+    fn single_fragment_plan_ships_nothing() {
+        let (mut dist, pi, _cloud) = two_node_manager();
+        let t = topo("inc");
+        dist.start("l", "inc", &PlacementPlan::single(pi, &t)).unwrap();
+        dist.send("l", Tuple::new(0, vec![]).with("X", 1.0)).unwrap();
+        let out = dist.stop("l").unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("X"), Some(2.0));
+        assert_eq!(dist.network().messages(), 0, "local plans must not touch the net");
+    }
+
+    #[test]
+    fn keyed_window_state_survives_the_boundary() {
+        let (mut dist, pi, cloud) = two_node_manager();
+        let t = topo("inc->kwin@K");
+        dist.start("w", "inc->kwin@K", &PlacementPlan::split_at(&t, 1, pi, cloud)).unwrap();
+        // 3 keys × 8 samples = 2 full windows of 4 per key.
+        let mut seq = 0u64;
+        for _ in 0..8 {
+            for k in 0..3u64 {
+                dist.send("w", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let out = dist.stop("w").unwrap();
+        assert_eq!(out.len(), 6, "each key fills exactly two windows of 4: {out:?}");
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(4.0)), "{out:?}");
+    }
+
+    #[test]
+    fn partitioned_downstream_node_fails_the_route() {
+        let (mut dist, pi, cloud) = two_node_manager();
+        let t = topo("inc->double");
+        dist.start("p", "inc->double", &PlacementPlan::split_at(&t, 1, pi, cloud)).unwrap();
+        dist.network().take_down(cloud);
+        // The cross-node ship fails as soon as a batch reaches the hop
+        // (which may be during a send's pump or at the stop drain —
+        // workers process asynchronously); either way the error names
+        // the partition and every fragment is still torn down.
+        let mut failed = None;
+        for i in 0..8u64 {
+            if let Err(e) = dist.send("p", Tuple::new(i, vec![])) {
+                failed = Some(e);
+                break;
+            }
+        }
+        let err = match failed {
+            Some(e) => {
+                let _ = dist.stop("p");
+                e
+            }
+            None => dist.stop("p").unwrap_err(),
+        };
+        assert!(format!("{err}").contains("unreachable"), "{err}");
+        assert!(dist.manager(&pi).unwrap().running().is_empty());
+        assert!(dist.manager(&cloud).unwrap().running().is_empty());
+    }
+
+    #[test]
+    fn rescale_reaches_the_hosting_fragment() {
+        let (mut dist, pi, cloud) = two_node_manager();
+        let t = topo("inc->kwin@K");
+        dist.start("r", "inc->kwin@K", &PlacementPlan::split_at(&t, 1, pi, cloud)).unwrap();
+        let report = dist.rescale("r", "kwin", 3).unwrap();
+        assert_eq!((report.from, report.to), (1, 3));
+        let err = dist.rescale("r", "ghost", 2).unwrap_err();
+        assert!(format!("{err}").contains("ghost"), "{err}");
+        let mut seq = 0u64;
+        for _ in 0..4 {
+            for k in 0..3u64 {
+                dist.send("r", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let out = dist.stop("r").unwrap();
+        assert_eq!(out.len(), 3, "each key fills one window of 4 after the rescale");
+    }
+}

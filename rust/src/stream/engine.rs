@@ -61,6 +61,16 @@
 //! and `rescale` surface it as [`Error::Stream`] instead of hanging. A
 //! replica that faults *during* a handoff aborts the rescale the same
 //! way. See `docs/stream-executor.md` for the full contract.
+//!
+//! **Remote boundary.** A topology can be one *fragment* of a chain
+//! split across cluster nodes (`stream::dist`). The egress side is
+//! [`EngineHandle::try_drain`] — a non-blocking poll a forwarder uses
+//! to batch, serialize and ship outputs as `NetMessage::StreamBatch`
+//! frames — and the ingress side is [`EngineHandle::try_send_batch`] /
+//! [`StreamSender::try_send_batch`], a non-blocking admission port into
+//! the downstream fragment's first router that hands a full batch back
+//! instead of blocking (the shipper re-offers it, preserving order).
+//! See `docs/distributed-stream.md` for the cross-node contract.
 
 use super::operator::{KeyState, Operator};
 use super::topology::StageSpec;
@@ -69,7 +79,9 @@ use crate::error::{Error, Result};
 use crate::metrics::{Counter, Gauge, Registry};
 use std::collections::{BTreeMap, VecDeque};
 use std::panic::AssertUnwindSafe;
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -343,6 +355,30 @@ impl StreamSender {
         }
     }
 
+    /// Non-blocking batch feed — the admission port of a *remote
+    /// ingress* (a cross-node stage hop feeding this topology's first
+    /// router). `Ok(None)` means accepted; `Ok(Some(batch))` returns
+    /// the batch unsent because the inbound channel is momentarily full
+    /// (the caller re-offers it later, preserving its own order);
+    /// `Err` means the topology stopped or failed.
+    pub fn try_send_batch(&self, batch: Vec<Tuple>) -> Result<Option<Vec<Tuple>>> {
+        if batch.is_empty() {
+            return Ok(None);
+        }
+        self.port.depth.add(1);
+        match self.port.tx.try_send(StreamMsg::Batch(batch)) {
+            Ok(()) => Ok(None),
+            Err(e) => {
+                self.port.depth.add(-1);
+                match e {
+                    TrySendError::Full(StreamMsg::Batch(b)) => Ok(Some(b)),
+                    TrySendError::Full(_) => unreachable!("senders only carry batches"),
+                    TrySendError::Disconnected(_) => Err(self.stopped_error()),
+                }
+            }
+        }
+    }
+
     fn stopped_error(&self) -> Error {
         match self.error.get() {
             Some(cause) => Error::Stream(format!("topology `{}` failed: {cause}", self.name)),
@@ -563,6 +599,47 @@ impl EngineHandle {
                     }
                 }
                 Err(_) => return None,
+            }
+        }
+    }
+
+    /// Non-blocking ingress: offer a batch to the topology input,
+    /// getting it back when the inbound channel is momentarily full.
+    /// See [`StreamSender::try_send_batch`].
+    pub fn try_send_batch(&self, batch: Vec<Tuple>) -> Result<Option<Vec<Tuple>>> {
+        self.input
+            .as_ref()
+            .ok_or_else(|| Error::Stream("engine already closed".into()))?
+            .try_send_batch(batch)
+    }
+
+    /// Drain up to `max` already-available output tuples without
+    /// blocking — the *remote egress* port of a cross-node stage hop:
+    /// a forwarder polls here, serializes what it gets into
+    /// `NetMessage::StreamBatch` frames and ships them downstream.
+    /// Returns an empty vec when nothing is pending (including after
+    /// the topology has fully drained).
+    pub fn try_drain(&self, max: usize) -> Vec<Tuple> {
+        let mut pending = self.pending.lock().unwrap();
+        let mut out = Vec::new();
+        loop {
+            while out.len() < max {
+                match pending.pop_front() {
+                    Some(t) => out.push(t),
+                    None => break,
+                }
+            }
+            if out.len() >= max {
+                return out;
+            }
+            match self.output.try_recv() {
+                Ok(msg) => {
+                    self.output_depth.add(-1);
+                    if let StreamMsg::Batch(batch) = msg {
+                        pending.extend(batch);
+                    }
+                }
+                Err(_) => return out,
             }
         }
     }
@@ -1552,6 +1629,46 @@ mod tests {
             )
             .unwrap();
         h.finish().unwrap();
+    }
+
+    #[test]
+    fn try_drain_and_try_send_batch_form_a_nonblocking_boundary() {
+        // Tiny channels: the ingress must hand full batches back rather
+        // than block, and the egress must return whatever is ready.
+        let engine = StreamEngine::new().channel_depth(1).batch_capacity(1);
+        let h = engine
+            .launch("edge", ops(vec![OperatorKind::map("id", |t| t)]))
+            .unwrap();
+        assert!(h.try_drain(16).is_empty(), "nothing processed yet");
+        let mut got: Vec<u64> = Vec::new();
+        let mut rejected = 0u64;
+        for i in 0..64u64 {
+            let mut batch = vec![Tuple::new(i, vec![])];
+            // Re-offer until admitted, draining the egress to make room
+            // — exactly what a cross-node shipper does.
+            loop {
+                match h.try_send_batch(batch).unwrap() {
+                    None => break,
+                    Some(back) => {
+                        rejected += 1;
+                        assert_eq!(back.len(), 1, "a full channel returns the batch intact");
+                        batch = back;
+                        got.extend(h.try_drain(16).iter().map(|t| t.seq));
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+        assert!(rejected > 0, "depth-1 channels must exert backpressure");
+        while got.len() < 64 {
+            let drained = h.try_drain(8);
+            assert!(drained.len() <= 8);
+            got.extend(drained.iter().map(|t| t.seq));
+            std::thread::yield_now();
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..64).collect::<Vec<_>>(), "zero loss across the boundary");
+        assert!(h.finish().unwrap().is_empty());
     }
 
     #[test]

@@ -22,15 +22,24 @@
 //!   static same-key chains. See `docs/stream-executor.md`.
 //! - [`deploy`]: on-demand start/stop keyed by function profile, driven
 //!   by `start_function` / `stop_function` reactions, plus the
-//!   watermark-driven [`deploy::ScalePolicy`] autoscaler.
+//!   watermark-driven [`deploy::ScalePolicy`] autoscaler (with an
+//!   optional predictive arrival-growth term).
+//! - [`dist`]: distributed topologies — a placement planner assigns
+//!   stages to cluster nodes by device profile, fragments run on
+//!   per-node managers, and inter-node stage hops ship tuple batches as
+//!   `NetMessage::StreamBatch` frames over the net plane (SimNetwork
+//!   in-process, framed TCP across processes) with zero-loss cascade
+//!   drain. See `docs/distributed-stream.md`.
 
 pub mod deploy;
+pub mod dist;
 pub mod engine;
 pub mod operator;
 pub mod topology;
 pub mod tuple;
 
 pub use deploy::{ScalePolicy, TopologyManager};
+pub use dist::{plan_placement, DistributedTopologyManager, Fragment, PlacementPlan};
 pub use engine::{
     EngineHandle, RescaleReport, Rescaler, StageFactory, StageRuntime, StreamEngine, StreamSender,
 };

@@ -2,7 +2,9 @@
 //! append and the rule engine reads (paper: rules are "constantly
 //! evaluated for every data element").
 
+use crate::error::Result;
 use crate::rules::ast::EvalContext;
+use crate::util::codec::{ByteReader, ByteWriter};
 use std::collections::BTreeMap;
 
 /// A stream tuple.
@@ -61,6 +63,65 @@ impl Tuple {
         z ^ (z >> 31)
     }
 
+    /// Append this tuple's compact wire form: varint seq,
+    /// length-prefixed payload, then the field table (name + le-f64).
+    /// Field names are stored in their canonical (uppercased, sorted)
+    /// in-memory form, so `decode_from ∘ encode_into` is identity and
+    /// re-encoding a decoded tuple is byte-stable.
+    pub fn encode_into(&self, w: &mut ByteWriter) {
+        w.put_varint(self.seq);
+        w.put_bytes(&self.payload);
+        w.put_varint(self.fields.len() as u64);
+        for (name, value) in &self.fields {
+            w.put_str(name);
+            w.put_f64(*value);
+        }
+    }
+
+    /// Encode to a standalone byte string (cross-node stage hops embed
+    /// tuples in `net::wire::NetMessage::StreamBatch` frames).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(self.wire_size());
+        self.encode_into(&mut w);
+        w.into_bytes()
+    }
+
+    /// Decode one tuple from a reader positioned at `encode_into`
+    /// output. Errors (never panics) on truncated or malformed input.
+    /// Field names are canonicalized (uppercased) like [`Tuple::set`],
+    /// so a frame from a non-canonical peer still resolves through
+    /// `get`/`key_hash` instead of silently losing its key.
+    pub fn decode_from(r: &mut ByteReader) -> Result<Tuple> {
+        let seq = r.get_varint()?;
+        let payload = r.get_bytes()?.to_vec();
+        let n = r.get_varint()?;
+        let mut fields = BTreeMap::new();
+        for _ in 0..n {
+            let name = r.get_str()?.to_ascii_uppercase();
+            let value = r.get_f64()?;
+            fields.insert(name, value);
+        }
+        Ok(Tuple { payload, fields, seq })
+    }
+
+    /// Decode from a standalone byte string.
+    pub fn decode(bytes: &[u8]) -> Result<Tuple> {
+        Self::decode_from(&mut ByteReader::new(bytes))
+    }
+
+    /// Exact encoded size in bytes, computed without encoding (network
+    /// cost accounting on the egress side of a cross-node hop).
+    pub fn wire_size(&self) -> usize {
+        let mut n = varint_len(self.seq)
+            + varint_len(self.payload.len() as u64)
+            + self.payload.len()
+            + varint_len(self.fields.len() as u64);
+        for name in self.fields.keys() {
+            n += varint_len(name.len() as u64) + name.len() + 8;
+        }
+        n
+    }
+
     /// Evaluation context for the rule engine.
     pub fn eval_context(&self) -> EvalContext {
         let mut ctx = EvalContext::new();
@@ -69,6 +130,16 @@ impl Tuple {
         }
         ctx
     }
+}
+
+/// LEB128 length of a varint-encoded u64.
+fn varint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
 }
 
 #[cfg(test)]
@@ -114,6 +185,32 @@ mod tests {
         for v in [0.0, -0.0, 1.0, 3.25, -17.0, 1e300, f64::MIN_POSITIVE] {
             let t = Tuple::new(0, vec![]).with("K", v);
             assert_eq!(t.key_hash("K"), Some(Tuple::hash_bits(v.to_bits())));
+        }
+    }
+
+    #[test]
+    fn wire_codec_round_trips_and_sizes() {
+        let tuples = [
+            Tuple::new(0, vec![]),
+            Tuple::new(7, vec![1, 2, 3]).with("K", 3.0).with("V", -0.0),
+            Tuple::new(u64::MAX, vec![0xAB; 300])
+                .with("RESULT", 1e300)
+                .with("QUALITY", f64::MIN_POSITIVE)
+                .with("IMG", -17.25),
+        ];
+        for t in tuples {
+            let bytes = t.encode();
+            assert_eq!(bytes.len(), t.wire_size(), "wire_size must match the encoding");
+            assert_eq!(Tuple::decode(&bytes).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn wire_codec_rejects_truncation() {
+        let t = Tuple::new(3, vec![9; 16]).with("K", 2.0);
+        let bytes = t.encode();
+        for cut in 0..bytes.len() {
+            assert!(Tuple::decode(&bytes[..cut]).is_err(), "cut at {cut} must error");
         }
     }
 

@@ -1,13 +1,38 @@
 //! Multi-node cluster behaviour: scalability invariants (Figs. 11–12
 //! machinery), quadtree growth, routing determinism across cluster
-//! sizes, and workload coverage.
+//! sizes, workload coverage — and the distributed stream-plane
+//! properties: a topology split across SimNetwork nodes must be
+//! observably equivalent to the same spec run on one node's executor
+//! (same output multiset for every chain shape, zero loss/duplication
+//! across node boundaries including keyed window state and trailing
+//! flushes, per-key order preserved across every hop), plus the
+//! framed-TCP stage-hop loopback.
 
 use rpulsar::ar::message::{Action, ArMessage};
 use rpulsar::ar::profile::Profile;
 use rpulsar::config::DeviceKind;
 use rpulsar::coordinator::Cluster;
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::net::tcp::TcpEndpoint;
+use rpulsar::net::wire::NetMessage;
+use rpulsar::overlay::node_id::NodeId;
+use rpulsar::pipeline::lidar::LidarTrace;
+use rpulsar::pipeline::workflow::{
+    analytics_spec, run_distributed_analytics, run_stream_analytics, trace_tuples,
+};
+use rpulsar::stream::deploy::TopologyManager;
+use rpulsar::stream::dist::{
+    tcp_ingress, DistributedTopologyManager, Fragment, PlacementPlan, TcpStageLink,
+};
+use rpulsar::stream::engine::StreamEngine;
+use rpulsar::stream::operator::OperatorKind;
+use rpulsar::stream::topology::Topology;
+use rpulsar::stream::tuple::Tuple;
+use rpulsar::testkit::prop::NoShrink;
+use rpulsar::testkit::{forall_seeded, Gen};
 use rpulsar::util::prng::Prng;
 use rpulsar::workload::{random_records, StoreWorkload};
+use std::time::Duration;
 
 fn store_msg(profile: &Profile, data: &[u8]) -> ArMessage {
     ArMessage::builder()
@@ -105,6 +130,338 @@ fn routing_deterministic_across_runs() {
         cluster.shutdown().unwrap();
     }
     assert_eq!(owners[0], owners[1], "same membership must give same owner");
+}
+
+// ---- Distributed stream topologies (cross-node stage placement) ----
+
+/// Chains under test: registered stage names in order. `w` is the
+/// keyed window — the stateful stage whose open state must survive
+/// node boundaries and trailing-flush forwarding.
+const CHAINS: &[&[&str]] = &[&["a"], &["a", "b"], &["a", "w"], &["a", "b", "w"]];
+
+fn make_stage(name: &str, window: usize) -> OperatorKind {
+    match name {
+        "a" => OperatorKind::map("a", |mut t| {
+            let v = t.get("V").unwrap_or(0.0);
+            t.set("V", v * 2.0 + 1.0);
+            t
+        }),
+        "b" => OperatorKind::map("b", |mut t| {
+            let v = t.get("V").unwrap_or(0.0);
+            t.set("V", v + 10.0);
+            t
+        }),
+        "w" => OperatorKind::window_by("w", "V", window, "K"),
+        other => unreachable!("unknown stage {other}"),
+    }
+}
+
+fn register_on_manager(m: &mut TopologyManager, window: usize) {
+    for name in ["a", "b", "w"] {
+        m.register_stage(name, move || Box::new(make_stage(name, window)));
+    }
+}
+
+fn register_on_dist(d: &mut DistributedTopologyManager, window: usize) {
+    for name in ["a", "b", "w"] {
+        d.register_stage(name, move || Box::new(make_stage(name, window)));
+    }
+}
+
+#[derive(Clone, Debug)]
+struct DistScenario {
+    /// (key, value) pairs; per-key arrival order is their vec order.
+    tuples: Vec<(u64, f64)>,
+    chain: usize,
+    /// Per-stage parallelism annotation (all stages keyed by `K`).
+    parallelism: usize,
+    window: usize,
+    /// Fragment cut points: `cuts[i]` is the first stage index of
+    /// fragment `i+1`. Empty → a single local fragment.
+    cuts: Vec<usize>,
+    /// Feed batch size.
+    batch: usize,
+}
+
+impl DistScenario {
+    fn spec(&self) -> String {
+        CHAINS[self.chain]
+            .iter()
+            .map(|name| {
+                if self.parallelism > 1 {
+                    format!("{name}*{}@K", self.parallelism)
+                } else {
+                    format!("{name}@K")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("->")
+    }
+
+    fn plan(&self, topo: &Topology, nodes: &[NodeId]) -> PlacementPlan {
+        let mut bounds = vec![0usize];
+        bounds.extend(self.cuts.iter().copied());
+        bounds.push(topo.stages.len());
+        let fragments = bounds
+            .windows(2)
+            .enumerate()
+            .map(|(i, range)| Fragment {
+                node: nodes[i % nodes.len()],
+                stages: topo.stages[range[0]..range[1]].to_vec(),
+            })
+            .collect();
+        PlacementPlan { fragments }
+    }
+}
+
+fn scenario_gen(max_tuples: usize) -> impl Gen<NoShrink<DistScenario>> {
+    move |rng: &mut Prng| {
+        let n = rng.gen_range(0, max_tuples.max(2));
+        let keys = rng.gen_range(1, 7) as u64;
+        let tuples = (0..n)
+            .map(|_| (rng.gen_range_u64(keys), rng.gen_range_u64(32) as f64))
+            .collect();
+        let chain = rng.gen_range(0, CHAINS.len());
+        let len = CHAINS[chain].len();
+        // A random strictly-increasing subset of (0, len) cut points:
+        // single-fragment, two-way and (for 3-stage chains) three-way
+        // splits all occur.
+        let cuts: Vec<usize> = (1..len).filter(|_| rng.gen_bool(0.6)).collect();
+        NoShrink(DistScenario {
+            tuples,
+            chain,
+            parallelism: rng.gen_range(1, 4),
+            window: rng.gen_range(1, 5),
+            cuts,
+            batch: rng.gen_range(1, 33),
+        })
+    }
+}
+
+fn input_tuples(s: &DistScenario) -> Vec<Tuple> {
+    let mut per_key = std::collections::BTreeMap::new();
+    s.tuples
+        .iter()
+        .enumerate()
+        .map(|(i, (k, v))| {
+            let seqn = per_key.entry(*k).or_insert(0u64);
+            let t = Tuple::new(i as u64, vec![])
+                .with("K", *k as f64)
+                .with("V", *v)
+                .with("SEQN", *seqn as f64);
+            *seqn += 1;
+            t
+        })
+        .collect()
+}
+
+/// Ground truth: the same spec on one single-process manager.
+fn run_local(s: &DistScenario) -> Vec<Tuple> {
+    let mut m = TopologyManager::new(StreamEngine::new());
+    register_on_manager(&mut m, s.window);
+    m.start("t", &s.spec()).unwrap();
+    let mut iter = input_tuples(s).into_iter();
+    loop {
+        let batch: Vec<Tuple> = iter.by_ref().take(s.batch).collect();
+        if batch.is_empty() {
+            break;
+        }
+        m.send_batch("t", batch).unwrap();
+    }
+    m.stop("t").unwrap()
+}
+
+/// The same spec split across SimNetwork nodes per the scenario's cuts.
+fn run_distributed(s: &DistScenario) -> Vec<Tuple> {
+    let mut dist = DistributedTopologyManager::new();
+    let nodes = [
+        NodeId::from_name("pi-a"),
+        NodeId::from_name("cloud-b"),
+        NodeId::from_name("pi-c"),
+    ];
+    dist.add_node(nodes[0], DeviceProfile::raspberry_pi());
+    dist.add_node(nodes[1], DeviceProfile::cloud_small());
+    dist.add_node(nodes[2], DeviceProfile::raspberry_pi());
+    register_on_dist(&mut dist, s.window);
+    let topo = Topology::parse("t", &s.spec()).unwrap();
+    let plan = s.plan(&topo, &nodes);
+    dist.start("t", &s.spec(), &plan).unwrap();
+    let mut iter = input_tuples(s).into_iter();
+    loop {
+        let batch: Vec<Tuple> = iter.by_ref().take(s.batch).collect();
+        if batch.is_empty() {
+            break;
+        }
+        dist.send_batch("t", batch).unwrap();
+    }
+    let out = dist.stop("t").unwrap();
+    if plan.fragments.len() > 1 && !out.is_empty() {
+        assert!(dist.network().messages() > 0, "split runs must charge the network");
+    }
+    out
+}
+
+/// Canonical multiset form: sorted debug rendering of tuple fields.
+fn canon(out: Vec<Tuple>) -> Vec<String> {
+    let mut v: Vec<String> = out.into_iter().map(|t| format!("{:?}", t.fields)).collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn distributed_output_multiset_equals_local_all_chain_shapes() {
+    forall_seeded(0xD157_0001, 256, scenario_gen(48), |s: &NoShrink<DistScenario>| {
+        canon(run_local(&s.0)) == canon(run_distributed(&s.0))
+    });
+}
+
+#[test]
+fn per_key_order_is_preserved_across_node_hops() {
+    forall_seeded(0xD157_0002, 256, scenario_gen(64), |s: &NoShrink<DistScenario>| {
+        let mut s = s.0.clone();
+        // Pass-through chain so every input reaches the output with its
+        // SEQN intact; keep the generated cut (that is the node hop).
+        s.chain = 1; // ["a", "b"]
+        s.cuts.retain(|c| *c < CHAINS[s.chain].len());
+        let out = run_distributed(&s);
+        if out.len() != s.tuples.len() {
+            return false; // zero loss across every hop
+        }
+        let mut last: std::collections::BTreeMap<u64, f64> = std::collections::BTreeMap::new();
+        for t in &out {
+            let key = t.get("K").unwrap() as u64;
+            let seqn = t.get("SEQN").unwrap();
+            if let Some(prev) = last.insert(key, seqn) {
+                if prev >= seqn {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn distributed_rescale_mid_stream_preserves_multiset() {
+    // A live rescale of whichever fragment hosts the stage, while
+    // batches are crossing node boundaries, must not lose or duplicate
+    // anything — the handoff is fragment-local and the hops are FIFO.
+    forall_seeded(0xD157_0003, 96, scenario_gen(40), |s: &NoShrink<DistScenario>| {
+        let s = &s.0;
+        let mut dist = DistributedTopologyManager::new();
+        let nodes = [NodeId::from_name("pi-a"), NodeId::from_name("cloud-b")];
+        dist.add_node(nodes[0], DeviceProfile::raspberry_pi());
+        dist.add_node(nodes[1], DeviceProfile::cloud_small());
+        register_on_dist(&mut dist, s.window);
+        let topo = Topology::parse("t", &s.spec()).unwrap();
+        let plan = s.plan(&topo, &nodes);
+        dist.start("t", &s.spec(), &plan).unwrap();
+        let inputs = input_tuples(s);
+        let cut = inputs.len() / 2;
+        let stage = CHAINS[s.chain][s.tuples.len() % CHAINS[s.chain].len()];
+        let mut fed = 0usize;
+        let mut iter = inputs.into_iter();
+        let mut rescaled = false;
+        loop {
+            if !rescaled && fed >= cut {
+                dist.rescale("t", stage, s.parallelism + 1).unwrap();
+                rescaled = true;
+            }
+            let batch: Vec<Tuple> = iter.by_ref().take(s.batch).collect();
+            if batch.is_empty() {
+                break;
+            }
+            fed += batch.len();
+            dist.send_batch("t", batch).unwrap();
+        }
+        if !rescaled {
+            dist.rescale("t", stage, s.parallelism + 1).unwrap();
+        }
+        canon(dist.stop("t").unwrap()) == canon(run_local(s))
+    });
+}
+
+#[test]
+fn fig13_analytics_split_across_pi_and_cloud_is_equivalent() {
+    // The flagship acceptance scenario, across seeded traces: the
+    // Fig-13 analytics topology split Pi(score → decide) →
+    // cloud(stats) reproduces the single-process run exactly, with the
+    // hop bytes accounted on the simulated network.
+    forall_seeded(
+        0xD157_0004,
+        12,
+        |rng: &mut Prng| NoShrink((rng.next_u64(), rng.gen_range(2, 6))),
+        |case: &NoShrink<(u64, usize)>| {
+            let (seed, images) = case.0;
+            let trace = LidarTrace::generate(seed, images, 0.3);
+            let tuples = trace_tuples(&trace, 512);
+            let local = run_stream_analytics(&analytics_spec(2), tuples.clone(), 1).unwrap();
+            let split = run_distributed_analytics(&analytics_spec(2), tuples, 1, true).unwrap();
+            if split.net_bytes == 0 && !split.outputs.is_empty() {
+                return false;
+            }
+            canon(local.outputs) == canon(split.outputs)
+        },
+    );
+}
+
+#[test]
+fn stream_batch_frames_round_trip_over_tcp_loopback() {
+    let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().to_string();
+    let from = NodeId::from_name("edge-proc");
+    let tuples: Vec<Tuple> = (0..16)
+        .map(|i| Tuple::new(i, vec![i as u8; 8]).with("K", (i % 3) as f64).with("V", i as f64))
+        .collect();
+    let msg = NetMessage::StreamBatch {
+        from,
+        topology: "job".into(),
+        stage: "w".into(),
+        tuples: tuples.clone(),
+    };
+    let mut link = TcpStageLink::connect(&addr, from, "job", "w").unwrap();
+    link.ship(tuples).unwrap();
+    let got = ep.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(got, msg, "framed-TCP StreamBatch must round-trip byte-exactly");
+    link.eos().unwrap();
+    let got = ep.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert!(matches!(got, NetMessage::StreamEos { ref topology, .. } if topology == "job"));
+    ep.shutdown();
+}
+
+#[test]
+fn tcp_ingress_runs_a_remote_fragment_to_eos() {
+    // A real cross-process-shaped hop on loopback: this side is the
+    // upstream egress shipping batches + EOS over one framed-TCP
+    // connection; the thread is the downstream node running the
+    // fragment behind a `tcp_ingress`. Zero-loss drain: every shipped
+    // tuple comes back out after the EOS-triggered stop.
+    let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().to_string();
+    let from = NodeId::from_name("edge-proc");
+    let ingress = std::thread::spawn(move || {
+        let mut manager = TopologyManager::new(StreamEngine::new());
+        manager.register_stage("inc", || {
+            Box::new(OperatorKind::map("inc", |mut t| {
+                let v = t.get("V").unwrap_or(0.0);
+                t.set("V", v + 1.0);
+                t
+            }))
+        });
+        manager.start("job#f1", "inc").unwrap();
+        tcp_ingress(&ep, &mut manager, "job#f1", Duration::from_secs(20))
+    });
+    let mut link = TcpStageLink::connect(&addr, from, "job#f1", "inc").unwrap();
+    for chunk in (0..100u64).collect::<Vec<_>>().chunks(16) {
+        link.ship(chunk.iter().map(|i| Tuple::new(*i, vec![]).with("V", *i as f64)).collect())
+            .unwrap();
+    }
+    link.eos().unwrap();
+    let out = ingress.join().unwrap().unwrap();
+    assert_eq!(out.len(), 100, "zero loss across the TCP boundary");
+    let mut vs: Vec<f64> = out.iter().map(|t| t.get("V").unwrap()).collect();
+    vs.sort_by(f64::total_cmp);
+    assert_eq!(vs, (1..=100).map(|i| i as f64).collect::<Vec<_>>());
 }
 
 #[test]
