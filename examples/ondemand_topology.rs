@@ -17,6 +17,7 @@ use rpulsar::config::DeviceKind;
 use rpulsar::coordinator::Cluster;
 use rpulsar::rules::engine::{Consequence, Rule, RuleEngine, RuleOutcome};
 use rpulsar::stream::operator::OperatorKind;
+use rpulsar::stream::pipeline::{Pipeline, PipelineStage};
 use rpulsar::stream::tuple::Tuple;
 use rpulsar::util::prng::Prng;
 
@@ -25,33 +26,45 @@ fn main() -> rpulsar::Result<()> {
     let mut cluster = Cluster::new("ondemand", 4, DeviceKind::Native)?;
     let origin = cluster.ids()[0];
 
-    // Register the aggregation stages on every RP.
-    for id in cluster.ids() {
-        let node = cluster.node_mut(&id).unwrap();
-        node.topologies_mut().register_stage("spike-filter", || {
+    // The typed pipeline definition: two spike-filter replicas fed by
+    // a SENSOR-keyed shuffle (per-sensor order is preserved into the
+    // window stage), and a serial keyed window grouping per SENSOR —
+    // the parallel filter interleaves sensor streams
+    // nondeterministically, so the window must group by key. Stage
+    // factories travel with the definition; misuse (an unkeyed
+    // parallel stateful stage, a key mismatch) would be rejected right
+    // here at `build`, before anything is stored on the cluster.
+    let pipeline = Pipeline::builder("hotspot_aggregator")
+        .stage(PipelineStage::new("spike-filter").parallel(2).keyed("SENSOR").operator(|| {
             Box::new(OperatorKind::filter("spike-filter", |t| {
                 t.get("READING").unwrap_or(0.0) > 30.0
             }))
-        });
-        // Keyed window: the parallel spike-filter stage interleaves
-        // sensor streams nondeterministically, so the window groups
-        // per SENSOR (per-key order is what the keyed shuffle keeps).
-        node.topologies_mut().register_stage("window-mean", || {
+        }))
+        .stage(PipelineStage::new("window-mean").operator(|| {
             Box::new(OperatorKind::window_by("window-mean", "READING", 5, "SENSOR"))
-        });
+        }))
+        .build()?;
+
+    // Register the pipeline's stage factories on every RP.
+    for id in cluster.ids() {
+        let node = cluster.node_mut(&id).unwrap();
+        for s in pipeline.stages() {
+            if let Some(f) = s.factory_ref() {
+                node.topologies_mut().register_stage_factory(s.name(), f.clone());
+            }
+        }
     }
 
-    // Store the on-demand topology under a function profile. The spec
-    // uses the parallel executor's annotations: two spike-filter
-    // replicas fed by a SENSOR-keyed shuffle (per-sensor order is
-    // preserved into the window stage), window-mean serial.
-    let spec = "spike-filter*2@SENSOR->window-mean";
+    // Store the on-demand topology under a function profile: the
+    // profile carries the pipeline's spec rendering (`Pipeline::parse`
+    // round-trips it on the deploying node).
+    let spec = pipeline.to_spec();
     let func = Profile::parse("hotspot_aggregator")?;
     let store_fn = ArMessage::builder()
         .set_header(func.clone())
         .set_sender("operator")
         .set_action(Action::StoreFunction)
-        .set_topology(spec)
+        .set_topology(&spec)
         .build()?;
     cluster.post_from(origin, &store_fn)?;
     println!("stored on-demand topology `{spec}`");

@@ -14,6 +14,7 @@ use rpulsar::config::DeviceKind;
 use rpulsar::coordinator::Cluster;
 use rpulsar::rules::ast::EvalContext;
 use rpulsar::rules::engine::{Consequence, Rule, RuleEngine, RuleOutcome};
+use rpulsar::stream::pipeline::{Pipeline, PipelineStage};
 
 fn main() -> rpulsar::Result<()> {
     rpulsar::logging::init();
@@ -74,24 +75,37 @@ fn main() -> rpulsar::Result<()> {
     println!("drone streamed one record into the DHT");
 
     // ---- Listing 3: store a processing function ----
+    // The typed builder is the canonical definition: the stage carries
+    // its operator factory and the whole pipeline is validated *here*,
+    // before anything is stored or deployed. The function profile
+    // stores its spec rendering — `Pipeline::parse` round-trips it.
+    let noop_pipeline = Pipeline::builder("post_processing")
+        .stage(PipelineStage::new("noop").operator(|| {
+            Box::new(rpulsar::stream::operator::OperatorKind::map("noop", |t| t))
+        }))
+        .build()?;
     let func_profile = Profile::builder().add_single("post_processing_func").build();
     let store_func = ArMessage::builder()
         .set_header(func_profile.clone())
         .set_sender("analytics-app")
         .set_action(Action::StoreFunction)
-        .set_topology("noop") // registered below on every node
+        .set_topology(&noop_pipeline.to_spec())
         .build()?;
+    // Register the pipeline's stage factories on every RP so whichever
+    // node the profile routes to can host the deployment.
     for id in cluster.ids() {
-        cluster
-            .node_mut(&id)
-            .unwrap()
-            .topologies_mut()
-            .register_stage("noop", || {
-                Box::new(rpulsar::stream::operator::OperatorKind::map("noop", |t| t))
-            });
+        let node = cluster.node_mut(&id).unwrap();
+        for s in noop_pipeline.stages() {
+            if let Some(f) = s.factory_ref() {
+                node.topologies_mut().register_stage_factory(s.name(), f.clone());
+            }
+        }
     }
     cluster.post_from(origin, &store_func)?;
-    println!("Listing 3: function stored as `post_processing_func`");
+    println!(
+        "Listing 3: function stored as `post_processing_func` (spec `{}`)",
+        noop_pipeline.to_spec()
+    );
 
     // ---- Listings 4–5: rule triggers the stored function ----
     let trigger_msg = ArMessage::builder()

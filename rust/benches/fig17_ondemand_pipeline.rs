@@ -1,0 +1,167 @@
+//! Fig. 17 (beyond the paper): the serverless claim measured — a
+//! *trigger-activated* pipeline (deployed only while matching data
+//! flows, scale-to-zero when idle) vs the same pipeline pre-deployed
+//! as a standing topology.
+//!
+//! The Fig-13 analytics chain (`score*P@IMG->decide->stats@IMG`) is
+//! bound to the `drone,*` profile on an mmap broker. Arms:
+//!
+//! - **pre-deployed**: classic standing topology; tuples are fed
+//!   directly (the floor for steady-state throughput).
+//! - **on-demand**: tuples are *published*; the first matching message
+//!   cold-starts the pipeline, the broker cursor feeds it, and an idle
+//!   watermark decommissions it back to zero. Reported: cold-start
+//!   activation latency, end-to-end throughput, and the scale-to-zero
+//!   reclaim time after the stream dries up.
+//! - **bursts**: the same stream in idle-separated bursts — one cold
+//!   start per burst, zero running replicas between bursts, nothing
+//!   lost across the gaps (the cursor holds the backlog).
+//!
+//! Both arms must produce the *same output multiset* — on-demand
+//! activation is an execution-lifecycle choice, not a semantics
+//! change. `-- --test` runs a seconds-long smoke (CI gate).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{header, smoke_mode};
+use rpulsar::ar::profile::Profile;
+use rpulsar::mmq::pubsub::{Broker, RetirePolicy};
+use rpulsar::mmq::queue::QueueOptions;
+use rpulsar::pipeline::lidar::LidarTrace;
+use rpulsar::pipeline::trigger::{TriggerManager, TriggerOptions};
+use rpulsar::pipeline::workflow::{
+    analytics_spec, register_analytics_stages, run_stream_analytics, trace_tuples,
+};
+use rpulsar::stream::pipeline::Pipeline;
+use rpulsar::stream::tuple::Tuple;
+use std::time::{Duration, Instant};
+
+const PARALLELISM: usize = 2;
+
+fn broker(name: &str) -> Broker {
+    let dir = std::env::temp_dir()
+        .join("rpulsar-fig17")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    Broker::new(QueueOptions { dir, segment_bytes: 8 << 20, max_segments: 8, sync_every: 0 })
+}
+
+fn eager() -> TriggerOptions {
+    TriggerOptions {
+        idle: RetirePolicy {
+            max_publish_idle: Duration::ZERO,
+            max_fetch_idle: Duration::ZERO,
+            min_age: Duration::ZERO,
+        },
+        decode_payloads: true,
+    }
+}
+
+fn canon(outs: &[Tuple]) -> Vec<String> {
+    let mut v: Vec<String> = outs.iter().map(|t| format!("{:?}", t.fields)).collect();
+    v.sort();
+    v
+}
+
+fn main() {
+    header(
+        "Fig. 17 — on-demand (data-driven) pipeline vs pre-deployed topology",
+        "extends the serverless computing model to the edge: functions run only while data flows",
+    );
+    let smoke = smoke_mode();
+    let (images, work) = if smoke { (4, 2) } else { (32, 24) };
+    let trace = LidarTrace::generate(31, images, 1.0);
+    let tuples = trace_tuples(&trace, 512);
+    let spec = analytics_spec(PARALLELISM);
+    println!("{} tile tuples, score work={work}, spec `{spec}`, smoke={smoke}", tuples.len());
+
+    // ---- Arm 1: pre-deployed standing topology ----
+    let pre = run_stream_analytics(&spec, tuples.clone(), work).unwrap();
+    println!(
+        "\npre-deployed   {:>10.0} t/s   outputs {}",
+        pre.tuples_per_sec(),
+        pre.outputs.len()
+    );
+
+    // ---- Arm 2: on-demand activation over the broker ----
+    let mut b = broker("ondemand");
+    let mut trig = TriggerManager::in_process();
+    register_analytics_stages(trig.deployer_mut(), work);
+    let pipeline = Pipeline::parse("ondemand", &spec).unwrap();
+    trig.bind(&mut b, pipeline, Profile::parse("drone,*").unwrap(), eager()).unwrap();
+    let profile = Profile::parse("drone,lidar").unwrap();
+
+    let started = Instant::now();
+    for t in &tuples {
+        b.publish(&profile, &t.encode()).unwrap();
+    }
+    // Pump until the backlog is fed and the idle watermark reclaims.
+    trig.pump_until_idle(&mut b, Duration::from_secs(600)).unwrap();
+    let elapsed = started.elapsed();
+    let stats = trig.stats("ondemand").unwrap();
+    let cold = stats.last_cold_start.expect("an activation happened");
+    let main_run = trig.take_outputs("ondemand");
+    // Measure the reclaim edge in isolation: re-activate with a probe
+    // tuple, then time the drive back to zero.
+    b.publish(&profile, &tuples[0].encode()).unwrap();
+    trig.pump(&mut b).unwrap();
+    assert!(trig.is_active("ondemand"));
+    let reclaim_started = Instant::now();
+    trig.pump_until_idle(&mut b, Duration::from_secs(600)).unwrap();
+    let reclaim = reclaim_started.elapsed();
+    let _probe_out = trig.take_outputs("ondemand");
+    println!(
+        "on-demand      {:>10.0} t/s   outputs {}   cold-start {:.2?}   reclaim {:.2?}",
+        tuples.len() as f64 / elapsed.as_secs_f64().max(1e-9),
+        main_run.len(),
+        cold,
+        reclaim
+    );
+    println!(
+        "               activations {}  decommissions {}  fed {}",
+        stats.activations, stats.decommissions, stats.tuples_fed
+    );
+    assert_eq!(
+        canon(&pre.outputs),
+        canon(&main_run),
+        "on-demand activation must not change pipeline semantics"
+    );
+    assert!(
+        trig.deployer().running().is_empty(),
+        "scale-to-zero must leave no standing topology"
+    );
+
+    // ---- Arm 3: idle-separated bursts ----
+    let mut b2 = broker("bursts");
+    let mut trig2 = TriggerManager::in_process();
+    register_analytics_stages(trig2.deployer_mut(), work);
+    trig2
+        .bind(&mut b2, Pipeline::parse("bursty", &spec).unwrap(), Profile::parse("drone,*").unwrap(), eager())
+        .unwrap();
+    let bursts = 3usize;
+    let per = tuples.len().div_ceil(bursts);
+    for chunk in tuples.chunks(per) {
+        for t in chunk {
+            b2.publish(&profile, &t.encode()).unwrap();
+        }
+        trig2.pump_until_idle(&mut b2, Duration::from_secs(600)).unwrap();
+        assert!(
+            trig2.deployer().running().is_empty(),
+            "each idle gap must reach zero running replicas"
+        );
+    }
+    let s2 = trig2.stats("bursty").unwrap();
+    println!(
+        "bursts         {} bursts → {} cold starts, {} decommissions, {} tuples fed",
+        tuples.chunks(per).count(),
+        s2.activations,
+        s2.decommissions,
+        s2.tuples_fed
+    );
+    assert_eq!(s2.activations as usize, tuples.chunks(per).count());
+    assert_eq!(s2.activations, s2.decommissions);
+    assert_eq!(s2.tuples_fed as usize, tuples.len(), "the cursor must lose nothing across gaps");
+
+    println!("\nfig17 OK");
+}

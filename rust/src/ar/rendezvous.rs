@@ -187,9 +187,14 @@ impl RendezvousPoint {
             .ok_or_else(|| {
                 Error::Profile("store_function requires a topology or data payload".into())
             })?;
+        // The spec grammar is enforced at *store* time (the unified
+        // pipeline API's "reject before deploy" contract): a function
+        // whose topology cannot parse is refused here, not when the
+        // first `start_function` tries to launch it.
+        let profile = msg.header.profile.clone();
+        crate::stream::pipeline::Pipeline::parse(&profile.render(), &topology)?;
         // Replace an existing function with an identical profile
         // (re-registration), otherwise append.
-        let profile = msg.header.profile.clone();
         self.functions.remove_where(|f| f.profile == profile);
         self.functions.insert(StoredFunction {
             profile: profile.clone(),
@@ -397,6 +402,24 @@ mod tests {
         assert!(rp.receive(&msg("f", Action::StoreFunction)).is_err());
         // Data payload is accepted as the topology body.
         let r = rp.receive(&msg_with_data("f", Action::StoreFunction, b"topo")).unwrap();
+        assert!(matches!(r[0], Reaction::FunctionStored { .. }));
+    }
+
+    #[test]
+    fn store_function_validates_the_spec_grammar() {
+        // A topology that cannot parse is refused when *stored*, so no
+        // surface ever holds an undeployable function (`start_function`
+        // cannot hit a parse error at 3am).
+        let mut rp = RendezvousPoint::new();
+        for bad in ["a->->b", "a*0", "dup->dup"] {
+            let err = rp.receive(&msg_with_data("f", Action::StoreFunction, bad.as_bytes()));
+            assert!(err.is_err(), "`{bad}` must be rejected at store");
+        }
+        assert_eq!(rp.function_len(), 0);
+        // Annotated specs store fine.
+        let r = rp
+            .receive(&msg_with_data("f", Action::StoreFunction, b"score*4@IMG->stats@IMG"))
+            .unwrap();
         assert!(matches!(r[0], Reaction::FunctionStored { .. }));
     }
 

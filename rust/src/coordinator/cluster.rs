@@ -22,7 +22,9 @@ use crate::overlay::quadtree::QuadTree;
 use crate::overlay::ring::{build_converged_tables, simulate_lookup, RoutingTable};
 use crate::routing::router::ContentRouter;
 use crate::stream::deploy::TopologyManager;
-use crate::stream::dist::{self, FragmentHost, PlacementPlan, RouteState};
+use crate::stream::dist::{self, plan_placement, FragmentHost, PlacementPlan, RouteState};
+use crate::stream::engine::RescaleReport;
+use crate::stream::pipeline::{handle_for, Deployer, Pipeline, PipelineHandle};
 use crate::stream::topology::Topology;
 use crate::stream::tuple::Tuple;
 use std::collections::BTreeMap;
@@ -337,13 +339,69 @@ impl Cluster {
     /// Move in-flight batches across the stream's node hops
     /// (non-blocking) and return outputs collected so far from the
     /// final fragment. On a pump error the collected outputs stay in
-    /// the route — a later `stream_stop` can still return them.
+    /// the route — a later `stream_stop` can still return them. Doubles
+    /// as a housekeeping edge: every pump runs [`Cluster::tick`].
     pub fn stream_pump(&mut self, key: &str) -> Result<Vec<Tuple>> {
+        self.pump_stream_collect(key, usize::MAX)
+    }
+
+    /// Shared pump-and-collect body of [`Cluster::stream_pump`] and the
+    /// `Deployer::poll` surface: housekeeping tick, pump the route, and
+    /// take up to `max` collected outputs. On a pump error the
+    /// collected outputs stay in the route — a later `stream_stop` can
+    /// still return them.
+    fn pump_stream_collect(&mut self, key: &str, max: usize) -> Result<Vec<Tuple>> {
+        self.tick();
         let mut route = self.take_stream(key)?;
         let r = dist::pump_route(&*self, &mut route);
-        let out = if r.is_ok() { route.take_collected() } else { Vec::new() };
+        let out = if r.is_ok() { route.take_up_to(max) } else { Vec::new() };
         self.streams.insert(key.to_string(), route);
         r.map(|()| out)
+    }
+
+    /// Live-rescale a stage of a deployed stream on whichever node
+    /// hosts its fragment (zero loss, per-key order preserved — the
+    /// executor's own rescale contract).
+    pub fn stream_rescale(
+        &mut self,
+        key: &str,
+        stage: &str,
+        parallelism: usize,
+    ) -> Result<RescaleReport> {
+        let (node, frag_key) = {
+            let route = self
+                .streams
+                .get(key)
+                .ok_or_else(|| Error::NotRunning(format!("stream topology `{key}`")))?;
+            let hop = route
+                .hops()
+                .iter()
+                .find(|h| h.stages.iter().any(|s| s == stage))
+                .ok_or_else(|| {
+                    Error::Stream(format!("stream topology `{key}` has no stage `{stage}`"))
+                })?;
+            (hop.node, hop.frag_key.clone())
+        };
+        self.nodes
+            .get(&node)
+            .ok_or_else(|| Error::Net(format!("no stream manager for node {node}")))?
+            .topologies()
+            .rescale(&frag_key, stage, parallelism)
+    }
+
+    /// Housekeeping pass over every node (broker idle-topic retirement
+    /// via [`Node::tick`]; nodes without a retire policy are no-ops).
+    /// Called from the stream pump paths; safe to call any time.
+    /// Returns `(node, retired topic)` pairs.
+    pub fn tick(&mut self) -> Vec<(NodeId, String)> {
+        let mut retired = Vec::new();
+        for (id, node) in self.nodes.iter_mut() {
+            match node.tick() {
+                Ok(topics) => retired.extend(topics.into_iter().map(|t| (*id, t))),
+                Err(e) => log::warn!("node {id} housekeeping tick: {e}"),
+            }
+        }
+        retired
     }
 
     /// Tear a deployed stream down: cascade-drain every fragment
@@ -397,6 +455,103 @@ impl Cluster {
     /// Device kind the cluster runs as.
     pub fn device(&self) -> DeviceKind {
         self.device
+    }
+}
+
+/// The cluster as a [`Deployer`] surface: the *same* `Pipeline` value
+/// that runs in-process deploys split across the cluster's RP nodes —
+/// placement planned from the builder's hints, fragments on each
+/// node's own manager, hops charged to the simulated network. See
+/// `docs/pipeline-api.md`.
+impl Deployer for Cluster {
+    fn surface(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn validate(&self, pipeline: &Pipeline) -> Result<()> {
+        // A named stage resolves only when *every* node knows it:
+        // placement decides the hosting node later, so a stage
+        // registered on just some nodes would pass an any-node check
+        // here and still fail at fragment start — violating the
+        // reject-before-deploy contract. (Attached factories are
+        // registered on every node by `deploy`, so they cannot
+        // disagree either way.)
+        pipeline.validate_resolved(|name| {
+            let mut factories = self.nodes.values().map(|n| n.topologies().factory(name));
+            let first = factories.next().flatten()?;
+            if factories.all(|f| f.is_some()) {
+                Some(first)
+            } else {
+                None
+            }
+        })
+    }
+
+    fn deploy(&mut self, pipeline: &Pipeline) -> Result<PipelineHandle> {
+        Deployer::validate(self, pipeline)?;
+        for s in pipeline.stages() {
+            if let Some(f) = s.factory_ref() {
+                for node in self.nodes.values_mut() {
+                    node.topologies_mut().register_stage_factory(s.name(), f.clone());
+                }
+            }
+        }
+        let source = match pipeline.source_hint() {
+            Some(node) if self.nodes.contains_key(&node) => node,
+            Some(node) => {
+                return Err(Error::Net(format!(
+                    "pipeline `{}`: source hint {node} is not a cluster node",
+                    pipeline.name()
+                )))
+            }
+            None => *self
+                .nodes
+                .keys()
+                .next()
+                .ok_or_else(|| Error::Overlay("empty cluster".into()))?,
+        };
+        let profiles: BTreeMap<NodeId, DeviceProfile> = self
+            .nodes
+            .keys()
+            .map(|id| (*id, DeviceProfile::for_kind(self.device)))
+            .collect();
+        let heavy: Vec<&str> =
+            pipeline.cpu_heavy_hints().iter().map(String::as_str).collect();
+        let plan = plan_placement(&pipeline.topology(), source, &profiles, &heavy)?;
+        if pipeline.scale_policy().is_some() {
+            log::warn!(
+                "pipeline `{}`: ScalePolicy watchers are an in-process surface feature; \
+                 cluster fragments rescale via Deployer::rescale",
+                pipeline.name()
+            );
+        }
+        self.deploy_stream(pipeline.name(), &pipeline.to_spec(), &plan)?;
+        Ok(handle_for(pipeline, Deployer::surface(self)))
+    }
+
+    fn send_batch(&mut self, handle: &PipelineHandle, batch: Vec<Tuple>) -> Result<()> {
+        self.stream_send_batch(handle.key(), batch)
+    }
+
+    fn poll(&mut self, handle: &PipelineHandle, max: usize) -> Result<Vec<Tuple>> {
+        self.pump_stream_collect(handle.key(), max)
+    }
+
+    fn rescale(
+        &mut self,
+        handle: &PipelineHandle,
+        stage: &str,
+        parallelism: usize,
+    ) -> Result<RescaleReport> {
+        self.stream_rescale(handle.key(), stage, parallelism)
+    }
+
+    fn stop(&mut self, handle: &PipelineHandle) -> Result<Vec<Tuple>> {
+        self.stream_stop(handle.key())
+    }
+
+    fn is_deployed(&self, handle: &PipelineHandle) -> bool {
+        self.streams.contains_key(handle.key())
     }
 }
 
@@ -565,6 +720,78 @@ mod tests {
         // The fragments are gone from the hosting nodes' managers.
         assert!(c.node(&edge).unwrap().topologies().running().is_empty());
         assert!(c.node(&core).unwrap().topologies().running().is_empty());
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pipeline_deploys_via_cluster_surface() {
+        use crate::stream::operator::OperatorKind;
+        use crate::stream::pipeline::PipelineStage;
+        let mut c = Cluster::new("psurf", 4, DeviceKind::Native).unwrap();
+        let ids = c.ids();
+        // Source ≠ the most capable node (uniform profiles tie-break to
+        // the smallest id) → the planner splits at the cpu-heavy hint.
+        let p = Pipeline::builder("job")
+            .stage(PipelineStage::new("inc").operator(|| {
+                Box::new(OperatorKind::map("inc", |mut t| {
+                    let v = t.get("X").unwrap_or(0.0);
+                    t.set("X", v + 1.0);
+                    t
+                }))
+            }))
+            .stage(PipelineStage::new("sum").parallel(2).keyed("K").operator(|| {
+                Box::new(OperatorKind::window_by("sum", "X", 2, "K"))
+            }))
+            .cpu_heavy("sum")
+            .source(ids[1])
+            .build()
+            .unwrap();
+        Deployer::validate(&c, &p).unwrap();
+        let h = c.deploy(&p).unwrap();
+        assert_eq!(h.surface(), "cluster");
+        assert!(Deployer::is_deployed(&c, &h));
+        for i in 0..8u64 {
+            Deployer::send(
+                &mut c,
+                &h,
+                Tuple::new(i, vec![]).with("K", (i % 2) as f64).with("X", 1.0),
+            )
+            .unwrap();
+        }
+        let polled = Deployer::poll(&mut c, &h, 1024).unwrap();
+        let rest = Deployer::stop(&mut c, &h).unwrap();
+        // 2 keys × 4 samples → two full windows of 2 per key.
+        assert_eq!(polled.len() + rest.len(), 4);
+        assert!(c.network().messages() > 0, "split placement must cross the network");
+        assert!(!Deployer::is_deployed(&c, &h));
+        // A bad source hint is rejected before anything starts.
+        let ghost = Pipeline::builder("g")
+            .stage(PipelineStage::new("inc"))
+            .source(NodeId::from_name("nowhere"))
+            .build()
+            .unwrap();
+        assert!(c.deploy(&ghost).is_err());
+        assert!(c.streams().is_empty());
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn cluster_tick_retires_idle_topics_on_opted_in_nodes() {
+        use crate::mmq::pubsub::RetirePolicy;
+        use std::time::Duration;
+        let mut c = Cluster::new("tick", 2, DeviceKind::Native).unwrap();
+        let ids = c.ids();
+        let p = Profile::parse("sensor,temp").unwrap();
+        c.node_mut(&ids[0]).unwrap().publish(&p, b"x").unwrap();
+        // No policy anywhere: the housekeeping pass is a no-op.
+        assert!(c.tick().is_empty());
+        c.node_mut(&ids[0]).unwrap().set_retire_policy(Some(RetirePolicy {
+            max_publish_idle: Duration::ZERO,
+            max_fetch_idle: Duration::ZERO,
+            min_age: Duration::ZERO,
+        }));
+        let retired = c.tick();
+        assert_eq!(retired, vec![(ids[0], "sensor,temp".to_string())]);
         c.shutdown().unwrap();
     }
 

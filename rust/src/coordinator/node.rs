@@ -9,7 +9,7 @@ use crate::device::profile::DeviceProfile;
 use crate::device::throttle::{ClockMode, ThrottledDisk};
 use crate::error::Result;
 use crate::metrics::Registry;
-use crate::mmq::pubsub::Broker;
+use crate::mmq::pubsub::{Broker, RetirePolicy};
 use crate::mmq::queue::QueueOptions;
 use crate::overlay::geo::GeoPoint;
 use crate::overlay::node_id::NodeId;
@@ -31,6 +31,10 @@ pub struct Node {
     topologies: TopologyManager,
     metrics: Registry,
     device: ThrottledDisk,
+    /// Broker topic-retirement policy swept by [`Node::tick`]. `None`
+    /// (the default) disables retirement — a node only reclaims topics
+    /// once an operator opts in with [`Node::set_retire_policy`].
+    retire_policy: Option<RetirePolicy>,
 }
 
 impl Node {
@@ -74,6 +78,7 @@ impl Node {
             topologies,
             metrics,
             device,
+            retire_policy: None,
         })
     }
 
@@ -200,6 +205,43 @@ impl Node {
         &self.rendezvous
     }
 
+    /// Opt the node's broker into idle-topic retirement: [`Node::tick`]
+    /// sweeps every topic through `policy` (see
+    /// [`Broker::retire_idle`]). `None` disables the sweep again.
+    pub fn set_retire_policy(&mut self, policy: Option<RetirePolicy>) {
+        self.retire_policy = policy;
+    }
+
+    /// The active retirement policy, if any.
+    pub fn retire_policy(&self) -> Option<&RetirePolicy> {
+        self.retire_policy.as_ref()
+    }
+
+    /// Housekeeping tick (called from the cluster's pump paths, or by
+    /// whatever loop owns a standalone node): sweeps the broker's
+    /// topics through the retirement policy, reclaiming queues, disk
+    /// segments and match-cache entries of idle topics. Returns the
+    /// retired topic keys; a node without a policy does nothing.
+    ///
+    /// Retirement is *retention*, not delivery: a topic idle past both
+    /// watermarks is dropped together with any unfetched backlog and
+    /// its cursors (the broker's documented `retire_topic` semantics).
+    /// Active consumers are safe — every `fetch` refreshes the
+    /// `last_fetch` watermark of all its matched topics, empty or not
+    /// — so pick `max_fetch_idle` comfortably above the slowest
+    /// consumer's poll cadence (e.g. a trigger binding's pump loop)
+    /// before opting a node in.
+    pub fn tick(&mut self) -> Result<Vec<String>> {
+        let Some(policy) = self.retire_policy.clone() else {
+            return Ok(Vec::new());
+        };
+        let retired = self.broker.retire_idle(&policy)?;
+        if !retired.is_empty() {
+            self.metrics.counter("node.tick_topics_retired").add(retired.len() as u64);
+        }
+        Ok(retired)
+    }
+
     /// Graceful shutdown: stop topologies, flush queue + store.
     pub fn shutdown(&mut self) -> Result<()> {
         self.topologies.stop_all()?;
@@ -296,6 +338,29 @@ mod tests {
         assert!(n.routing_table().contains(&peer));
         n.forget_peer(&peer);
         assert!(!n.routing_table().contains(&peer));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tick_retires_idle_topics_once_opted_in() {
+        let dir = tmp("tick");
+        let mut n = Node::with_name_at("rp-t", 0.0, 0.0, &dir).unwrap();
+        let p = Profile::parse("sensor,temp").unwrap();
+        n.publish(&p, b"x").unwrap();
+        // No policy: tick is a no-op (existing deployments unaffected).
+        assert!(n.retire_policy().is_none());
+        assert!(n.tick().unwrap().is_empty());
+        // Zero-threshold policy: every topic is idle by definition.
+        n.set_retire_policy(Some(RetirePolicy {
+            max_publish_idle: std::time::Duration::ZERO,
+            max_fetch_idle: std::time::Duration::ZERO,
+            min_age: std::time::Duration::ZERO,
+        }));
+        let retired = n.tick().unwrap();
+        assert_eq!(retired, ["sensor,temp"]);
+        assert!(n.tick().unwrap().is_empty(), "second sweep finds nothing");
+        assert_eq!(n.metrics().counter("node.tick_topics_retired").get(), 1);
+        n.shutdown().unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

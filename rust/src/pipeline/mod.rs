@@ -8,9 +8,16 @@
 //!   collection → PJRT pre-processing → IF-THEN decision → store at the
 //!   edge or forward to the core — plus the two baseline pipelines
 //!   (Kafka+Edgent+{SQLite, Nitrite}) of Fig. 14.
+//! - [`trigger`]: data-driven activation — a typed
+//!   [`crate::stream::pipeline::Pipeline`] bound to an AR profile
+//!   cold-starts when matching data reaches the broker, feeds from its
+//!   topic cursor, and scales back to zero after an idle watermark
+//!   (the serverless half of "data-driven pipelines").
 
 pub mod lidar;
+pub mod trigger;
 pub mod workflow;
 
 pub use lidar::{LidarImage, LidarTrace};
+pub use trigger::{TriggerManager, TriggerOptions, TriggerStats};
 pub use workflow::{BaselineKind, DisasterRecoveryPipeline, PipelineReport};

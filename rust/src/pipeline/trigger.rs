@@ -1,0 +1,603 @@
+//! Data-driven pipeline activation (paper §IV-D2 + the serverless-edge
+//! gap named by the related work): a [`Pipeline`] bound to an AR
+//! [`Profile`] is *not* deployed until matching data actually arrives
+//! at the broker — then it cold-starts on demand, is fed from its
+//! topic cursor, and is decommissioned back to **zero** running
+//! replicas once an idle watermark passes. This is what makes the
+//! platform serverless rather than just streaming: compute exists only
+//! while data flows.
+//!
+//! **Cursor contract.** A binding subscribes its own broker consumer
+//! (`trigger:<pipeline>`), so delivery rides the broker's at-least-once
+//! cursor machinery: data published while the pipeline is idle is *not
+//! lost* — the next activation resumes from the cursor, and per-key
+//! order is preserved end-to-end (per-topic FIFO × the executor's
+//! keyed-shuffle guarantee). Activation → feed → idle-decommission →
+//! re-activation therefore loses no tuples (property-tested in
+//! `rust/tests/trigger_plane.rs`, pre-validated by
+//! `python/sims/trigger_sim.py`).
+//!
+//! **Idle watermark.** Scale-to-zero reuses the broker's
+//! [`RetirePolicy`] watermark machinery verbatim: `decide(age,
+//! publish_idle, fetch_idle)` is evaluated with *age* = time since
+//! activation and both idle distances = time since the last matching
+//! tuple was fed. The same policy type that retires idle topics
+//! retires idle pipelines.
+//!
+//! **Faults.** A pipeline that faults mid-activation (operator panic /
+//! error) is torn down best-effort, counted in `trigger.faults`, and
+//! the binding returns to idle — the next matching data cold-starts a
+//! fresh instance. Tuples fed to the faulted activation follow the
+//! executor's first-fault drain contract (in-flight output may be
+//! lost; the broker cursor has already advanced — at-least-once ends
+//! at the mouth of a faulted pipeline).
+//!
+//! Metrics: `trigger.activations`, `trigger.decommissions`,
+//! `trigger.faults`, `trigger.tuples_fed` (plus per-binding
+//! [`TriggerStats`] with the last cold-start latency). Measured by
+//! `benches/fig17_ondemand_pipeline.rs` against a pre-deployed
+//! topology.
+
+use crate::ar::profile::Profile;
+use crate::error::{Error, Result};
+use crate::metrics::Registry;
+use crate::mmq::pubsub::{Broker, RetirePolicy};
+use crate::stream::deploy::TopologyManager;
+use crate::stream::engine::StreamEngine;
+use crate::stream::pipeline::{Deployer, Pipeline, PipelineHandle};
+use crate::stream::tuple::Tuple;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Max messages fetched per binding per pump pass.
+const FETCH_MAX: usize = 1024;
+
+/// Per-binding activation knobs.
+#[derive(Debug, Clone)]
+pub struct TriggerOptions {
+    /// When to decommission an activated pipeline: evaluated as
+    /// `decide(time since activation, time since last fed tuple, time
+    /// since last fed tuple)` on every pump that fetched nothing for
+    /// the binding. The default (10 min idle, 1 min grace) suits
+    /// long-lived edge nodes; tests and benches shrink it.
+    pub idle: RetirePolicy,
+    /// Decode broker payloads with [`Tuple::decode`] (producers feed
+    /// `Tuple::encode` frames — field-carrying tuples for keyed
+    /// stages). When `false`, or when a payload does not decode, the
+    /// payload bytes become a fresh tuple with a binding-assigned
+    /// sequence number.
+    pub decode_payloads: bool,
+}
+
+impl Default for TriggerOptions {
+    fn default() -> Self {
+        TriggerOptions { idle: RetirePolicy::default(), decode_payloads: true }
+    }
+}
+
+/// Lifetime counters of one binding.
+#[derive(Debug, Clone, Default)]
+pub struct TriggerStats {
+    /// Cold starts performed.
+    pub activations: u64,
+    /// Scale-to-zero decommissions (idle watermark or unbind).
+    pub decommissions: u64,
+    /// Activations torn down by a pipeline fault.
+    pub faults: u64,
+    /// Matching tuples fed across all activations.
+    pub tuples_fed: u64,
+    /// Deploy latency of the most recent cold start.
+    pub last_cold_start: Option<Duration>,
+}
+
+/// A live activation.
+struct Active {
+    handle: PipelineHandle,
+    activated_at: Instant,
+    last_data: Instant,
+}
+
+/// One pipeline ↔ profile binding.
+struct Binding {
+    pipeline: Pipeline,
+    consumer: String,
+    opts: TriggerOptions,
+    active: Option<Active>,
+    outputs: Vec<Tuple>,
+    raw_seq: u64,
+    stats: TriggerStats,
+}
+
+/// Binds pipelines to data profiles over any [`Deployer`] surface and
+/// drives the activate/feed/decommission lifecycle. Single-threaded by
+/// design: [`TriggerManager::pump`] is called from whatever loop owns
+/// the broker (a node's housekeeping tick, a bench driver), so
+/// activation decisions are deterministic and test-friendly.
+pub struct TriggerManager<D: Deployer> {
+    deployer: D,
+    bindings: BTreeMap<String, Binding>,
+    metrics: Registry,
+}
+
+impl TriggerManager<TopologyManager> {
+    /// The common composition: trigger-activated pipelines running on
+    /// an in-process executor.
+    pub fn in_process() -> Self {
+        Self::new(TopologyManager::new(StreamEngine::new()))
+    }
+}
+
+impl<D: Deployer> TriggerManager<D> {
+    /// Bind the lifecycle to an existing deploy surface.
+    pub fn new(deployer: D) -> Self {
+        Self::with_metrics(deployer, Registry::new())
+    }
+
+    /// Share a metrics registry (node/bench composition).
+    pub fn with_metrics(deployer: D, metrics: Registry) -> Self {
+        TriggerManager { deployer, bindings: BTreeMap::new(), metrics }
+    }
+
+    /// The underlying deploy surface.
+    pub fn deployer(&self) -> &D {
+        &self.deployer
+    }
+
+    pub fn deployer_mut(&mut self) -> &mut D {
+        &mut self.deployer
+    }
+
+    /// Activation/decommission counters.
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Bind `pipeline` to `profile`: matching data arriving at `broker`
+    /// from now on activates the pipeline on demand. The pipeline is
+    /// fully validated against the deploy surface *here* — an invalid
+    /// definition is rejected at bind time, never at 3am when the
+    /// first matching tuple arrives. Binding names (pipeline names)
+    /// are unique.
+    pub fn bind(
+        &mut self,
+        broker: &mut Broker,
+        pipeline: Pipeline,
+        profile: Profile,
+        opts: TriggerOptions,
+    ) -> Result<()> {
+        if self.bindings.contains_key(pipeline.name()) {
+            return Err(Error::Stream(format!(
+                "pipeline `{}` is already bound",
+                pipeline.name()
+            )));
+        }
+        self.deployer.validate(&pipeline)?;
+        let consumer = format!("trigger:{}", pipeline.name());
+        broker.subscribe(&consumer, profile);
+        self.bindings.insert(
+            pipeline.name().to_string(),
+            Binding {
+                pipeline,
+                consumer,
+                opts,
+                active: None,
+                outputs: Vec::new(),
+                raw_seq: 0,
+                stats: TriggerStats::default(),
+            },
+        );
+        Ok(())
+    }
+
+    /// Remove a binding: unsubscribe its consumer, decommission any
+    /// live activation (zero-loss drain) and return everything the
+    /// binding ever produced that was not yet taken.
+    pub fn unbind(&mut self, broker: &mut Broker, name: &str) -> Result<Vec<Tuple>> {
+        let mut b = self
+            .bindings
+            .remove(name)
+            .ok_or_else(|| Error::NotFound(format!("no trigger binding `{name}`")))?;
+        broker.unsubscribe(&b.consumer);
+        if let Some(active) = b.active.take() {
+            let tail = self.deployer.stop(&active.handle)?;
+            b.outputs.extend(tail);
+            b.stats.decommissions += 1;
+            self.metrics.counter("trigger.decommissions").inc();
+        }
+        Ok(b.outputs)
+    }
+
+    /// One lifecycle pass over every binding: fetch matching messages
+    /// from the broker cursor, cold-start idle pipelines that received
+    /// data, feed, drain available outputs, and decommission
+    /// activations whose idle watermark has passed. A faulted binding
+    /// is torn down and reported; the other bindings still complete
+    /// their pass (first error wins).
+    pub fn pump(&mut self, broker: &mut Broker) -> Result<()> {
+        let names: Vec<String> = self.bindings.keys().cloned().collect();
+        let mut first_err: Option<Error> = None;
+        for name in names {
+            if let Err(e) = self.pump_one(broker, &name) {
+                self.fail_binding(&name);
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn pump_one(&mut self, broker: &mut Broker, name: &str) -> Result<()> {
+        let Self { deployer, bindings, metrics } = self;
+        let b = bindings.get_mut(name).expect("binding exists");
+        let msgs = broker.fetch(&b.consumer, FETCH_MAX)?;
+        let now = Instant::now();
+        if !msgs.is_empty() {
+            if b.active.is_none() {
+                let started = Instant::now();
+                let handle = deployer.deploy(&b.pipeline)?;
+                b.stats.last_cold_start = Some(started.elapsed());
+                b.stats.activations += 1;
+                metrics.counter("trigger.activations").inc();
+                b.active = Some(Active { handle, activated_at: now, last_data: now });
+            }
+            let mut batch = Vec::with_capacity(msgs.len());
+            for (_topic, payload) in &msgs {
+                batch.push(as_tuple(b.opts.decode_payloads, &mut b.raw_seq, payload));
+            }
+            b.stats.tuples_fed += batch.len() as u64;
+            metrics.counter("trigger.tuples_fed").add(batch.len() as u64);
+            let active = b.active.as_mut().expect("just activated");
+            active.last_data = now;
+            deployer.send_batch(&active.handle, batch)?;
+        }
+        if let Some(active) = &b.active {
+            b.outputs.extend(deployer.poll(&active.handle, usize::MAX)?);
+            let age = now.duration_since(active.activated_at);
+            let idle = now.duration_since(active.last_data);
+            if msgs.is_empty() && b.opts.idle.decide(age, idle, idle) {
+                let active = b.active.take().expect("checked above");
+                let tail = deployer.stop(&active.handle)?;
+                b.outputs.extend(tail);
+                b.stats.decommissions += 1;
+                metrics.counter("trigger.decommissions").inc();
+            }
+        }
+        Ok(())
+    }
+
+    /// Best-effort teardown after a pump error: the activation (if
+    /// any) is stopped and discarded, the binding returns to idle so
+    /// the next matching data cold-starts a fresh instance.
+    fn fail_binding(&mut self, name: &str) {
+        let Self { deployer, bindings, metrics } = self;
+        let Some(b) = bindings.get_mut(name) else { return };
+        if let Some(active) = b.active.take() {
+            match deployer.stop(&active.handle) {
+                Ok(tail) => b.outputs.extend(tail),
+                Err(e) => log::warn!("trigger `{name}`: teardown after fault: {e}"),
+            }
+        }
+        b.stats.faults += 1;
+        metrics.counter("trigger.faults").inc();
+    }
+
+    /// Keep pumping until every binding is idle (each backlog fed and
+    /// each idle watermark passed) or `timeout` elapses; errors
+    /// surface immediately. Convenience for drains in tests/benches.
+    pub fn pump_until_idle(&mut self, broker: &mut Broker, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.pump(broker)?;
+            if self.active().is_empty() {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::Timeout(format!(
+                    "trigger bindings still active after {timeout:?}: {:?}",
+                    self.active()
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Force every activation to zero *now* (node shutdown), ignoring
+    /// idle watermarks. Outputs stay buffered for [`Self::take_outputs`].
+    pub fn decommission_all(&mut self) -> Result<()> {
+        let mut first_err: Option<Error> = None;
+        let Self { deployer, bindings, metrics } = self;
+        for (name, b) in bindings.iter_mut() {
+            if let Some(active) = b.active.take() {
+                match deployer.stop(&active.handle) {
+                    Ok(tail) => {
+                        b.outputs.extend(tail);
+                        b.stats.decommissions += 1;
+                        metrics.counter("trigger.decommissions").inc();
+                    }
+                    Err(e) => {
+                        log::error!("trigger `{name}`: decommission: {e}");
+                        b.stats.faults += 1;
+                        metrics.counter("trigger.faults").inc();
+                        first_err.get_or_insert(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Take everything a binding's activations have produced so far.
+    pub fn take_outputs(&mut self, name: &str) -> Vec<Tuple> {
+        self.bindings
+            .get_mut(name)
+            .map(|b| std::mem::take(&mut b.outputs))
+            .unwrap_or_default()
+    }
+
+    /// Whether a binding currently has a live activation.
+    pub fn is_active(&self, name: &str) -> bool {
+        self.bindings.get(name).is_some_and(|b| b.active.is_some())
+    }
+
+    /// Names of bindings with live activations.
+    pub fn active(&self) -> Vec<String> {
+        self.bindings
+            .iter()
+            .filter(|(_, b)| b.active.is_some())
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    /// All binding names.
+    pub fn bound(&self) -> Vec<String> {
+        self.bindings.keys().cloned().collect()
+    }
+
+    /// A binding's lifetime counters.
+    pub fn stats(&self, name: &str) -> Option<TriggerStats> {
+        self.bindings.get(name).map(|b| b.stats.clone())
+    }
+}
+
+impl<D: Deployer> std::fmt::Debug for TriggerManager<D> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TriggerManager(bindings={}, active={})",
+            self.bindings.len(),
+            self.active().len()
+        )
+    }
+}
+
+/// Broker payload → tuple. Encoded frames carry their own seq and
+/// fields; raw payloads get a binding-assigned sequence number.
+fn as_tuple(decode: bool, raw_seq: &mut u64, payload: &[u8]) -> Tuple {
+    if decode {
+        if let Ok(t) = Tuple::decode(payload) {
+            return t;
+        }
+    }
+    let t = Tuple::new(*raw_seq, payload.to_vec());
+    *raw_seq += 1;
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mmq::queue::QueueOptions;
+    use crate::stream::operator::{Operator, OperatorKind};
+    use crate::stream::pipeline::PipelineStage;
+
+    fn broker(name: &str) -> Broker {
+        let dir = std::env::temp_dir()
+            .join("rpulsar-trigger-tests")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Broker::new(QueueOptions { dir, segment_bytes: 1 << 16, max_segments: 4, sync_every: 0 })
+    }
+
+    fn p(s: &str) -> Profile {
+        Profile::parse(s).unwrap()
+    }
+
+    fn inc_pipeline(name: &str) -> Pipeline {
+        Pipeline::builder(name)
+            .stage(PipelineStage::new("inc").operator(|| {
+                Box::new(OperatorKind::map("inc", |mut t| {
+                    let v = t.get("X").unwrap_or(0.0);
+                    t.set("X", v + 1.0);
+                    t
+                })) as Box<dyn Operator>
+            }))
+            .build()
+            .unwrap()
+    }
+
+    fn eager() -> TriggerOptions {
+        TriggerOptions {
+            idle: RetirePolicy {
+                max_publish_idle: Duration::ZERO,
+                max_fetch_idle: Duration::ZERO,
+                min_age: Duration::ZERO,
+            },
+            decode_payloads: true,
+        }
+    }
+
+    #[test]
+    fn data_arrival_cold_starts_and_idle_decommissions() {
+        let mut broker = broker("lifecycle");
+        let mut trig = TriggerManager::in_process();
+        trig.bind(&mut broker, inc_pipeline("job"), p("drone,*"), eager()).unwrap();
+        // Bound but idle: no deploy has happened, pump is a no-op.
+        assert!(!trig.is_active("job"));
+        trig.pump(&mut broker).unwrap();
+        assert!(!trig.is_active("job"));
+        assert_eq!(trig.stats("job").unwrap().activations, 0);
+        // Non-matching data does not activate.
+        broker.publish(&p("truck,gps"), &Tuple::new(0, vec![]).encode()).unwrap();
+        trig.pump(&mut broker).unwrap();
+        assert!(!trig.is_active("job"));
+        // Matching data cold-starts the pipeline.
+        broker
+            .publish(&p("drone,lidar"), &Tuple::new(1, vec![]).with("X", 1.0).encode())
+            .unwrap();
+        trig.pump(&mut broker).unwrap();
+        assert!(trig.is_active("job"), "matching data must activate");
+        let stats = trig.stats("job").unwrap();
+        assert_eq!(stats.activations, 1);
+        assert!(stats.last_cold_start.is_some());
+        assert_eq!(stats.tuples_fed, 1);
+        // Next pump fetches nothing → the zero-threshold idle policy
+        // decommissions back to zero.
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        assert!(!trig.is_active("job"));
+        let stats = trig.stats("job").unwrap();
+        assert_eq!(stats.decommissions, 1);
+        assert_eq!(trig.metrics().counter("trigger.activations").get(), 1);
+        assert_eq!(trig.metrics().counter("trigger.decommissions").get(), 1);
+        let out = trig.take_outputs("job");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("X"), Some(2.0));
+        // Re-activation on the next matching publish.
+        broker
+            .publish(&p("drone,lidar"), &Tuple::new(2, vec![]).with("X", 5.0).encode())
+            .unwrap();
+        trig.pump(&mut broker).unwrap();
+        assert!(trig.is_active("job"));
+        assert_eq!(trig.stats("job").unwrap().activations, 2);
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        let out = trig.take_outputs("job");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("X"), Some(6.0));
+    }
+
+    #[test]
+    fn data_published_while_idle_is_not_lost() {
+        // The binding's cursor holds the backlog across the idle gap.
+        let mut broker = broker("backlog");
+        let mut trig = TriggerManager::in_process();
+        trig.bind(&mut broker, inc_pipeline("job"), p("s,*"), eager()).unwrap();
+        for i in 0..5u64 {
+            broker
+                .publish(&p("s,t"), &Tuple::new(i, vec![]).with("X", i as f64).encode())
+                .unwrap();
+        }
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        assert_eq!(trig.take_outputs("job").len(), 5);
+        // Published while decommissioned…
+        for i in 5..9u64 {
+            broker
+                .publish(&p("s,t"), &Tuple::new(i, vec![]).with("X", i as f64).encode())
+                .unwrap();
+        }
+        // …and delivered in full by the next activation.
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        let out = trig.take_outputs("job");
+        assert_eq!(out.len(), 4, "backlog across the idle gap must survive");
+        assert_eq!(trig.stats("job").unwrap().activations, 2);
+    }
+
+    #[test]
+    fn invalid_pipeline_rejected_at_bind_not_at_first_tuple() {
+        let mut broker = broker("invalid");
+        let mut trig = TriggerManager::in_process();
+        let bad = Pipeline::parse("ghostly", "ghost").unwrap();
+        let err = trig.bind(&mut broker, bad, p("s,*"), eager()).unwrap_err();
+        assert!(format!("{err}").contains("unknown stage `ghost`"), "{err}");
+        assert!(trig.bound().is_empty());
+    }
+
+    #[test]
+    fn duplicate_binding_rejected() {
+        let mut broker = broker("dup");
+        let mut trig = TriggerManager::in_process();
+        trig.bind(&mut broker, inc_pipeline("job"), p("a,*"), eager()).unwrap();
+        let err = trig
+            .bind(&mut broker, inc_pipeline("job"), p("b,*"), eager())
+            .unwrap_err();
+        assert!(format!("{err}").contains("already bound"), "{err}");
+    }
+
+    #[test]
+    fn unbind_decommissions_and_returns_outputs() {
+        let mut broker = broker("unbind");
+        let mut trig = TriggerManager::in_process();
+        // Patient policy: stays active until unbind.
+        let opts = TriggerOptions::default();
+        trig.bind(&mut broker, inc_pipeline("job"), p("s,*"), opts).unwrap();
+        broker.publish(&p("s,t"), &Tuple::new(0, vec![]).with("X", 1.0).encode()).unwrap();
+        trig.pump(&mut broker).unwrap();
+        assert!(trig.is_active("job"));
+        let out = trig.unbind(&mut broker, "job").unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(trig.bound().is_empty());
+        assert!(trig.unbind(&mut broker, "job").is_err());
+    }
+
+    #[test]
+    fn raw_payloads_flow_with_assigned_seqs() {
+        let mut broker = broker("raw");
+        let mut trig = TriggerManager::in_process();
+        let opts = TriggerOptions { decode_payloads: false, ..eager() };
+        trig.bind(&mut broker, inc_pipeline("job"), p("s,*"), opts).unwrap();
+        broker.publish(&p("s,t"), b"not-a-tuple").unwrap();
+        broker.publish(&p("s,t"), b"also-raw").unwrap();
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        let out = trig.take_outputs("job");
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].payload, b"not-a-tuple");
+    }
+
+    #[test]
+    fn faulted_activation_returns_to_zero_and_restarts_fresh() {
+        let mut broker = broker("fault");
+        let mut trig = TriggerManager::in_process();
+        let boom = Pipeline::builder("boom")
+            .stage(PipelineStage::new("explode").operator(|| {
+                Box::new(OperatorKind::map("explode", |t| {
+                    if t.get("BAD") == Some(1.0) {
+                        panic!("injected trigger fault");
+                    }
+                    t
+                })) as Box<dyn Operator>
+            }))
+            .build()
+            .unwrap();
+        trig.bind(&mut broker, boom, p("s,*"), eager()).unwrap();
+        broker.publish(&p("s,t"), &Tuple::new(0, vec![]).with("BAD", 1.0).encode()).unwrap();
+        // The panic surfaces from some pump pass (feed or drain), the
+        // binding is torn down and idle again.
+        let mut failed = false;
+        for _ in 0..50 {
+            match trig.pump(&mut broker) {
+                Err(e) => {
+                    assert!(format!("{e}").contains("injected trigger fault"), "{e}");
+                    failed = true;
+                    break;
+                }
+                Ok(()) if !trig.is_active("boom") && trig.stats("boom").unwrap().faults > 0 => {
+                    failed = true;
+                    break;
+                }
+                Ok(()) => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        assert!(failed, "fault must surface");
+        assert!(!trig.is_active("boom"));
+        assert_eq!(trig.stats("boom").unwrap().faults, 1);
+        // A clean tuple re-activates a fresh instance end to end.
+        broker.publish(&p("s,t"), &Tuple::new(1, vec![]).with("X", 1.0).encode()).unwrap();
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        assert_eq!(trig.stats("boom").unwrap().activations, 2);
+        let out = trig.take_outputs("boom");
+        assert_eq!(out.len(), 1, "fresh activation must process cleanly");
+    }
+}

@@ -160,6 +160,12 @@ impl TopologyManager {
         self.factories.keys().cloned().collect()
     }
 
+    /// The registered factory for a stage name, if any (the pipeline
+    /// API resolves named stages through this before deploy).
+    pub fn factory(&self, name: &str) -> Option<StageFactory> {
+        self.factories.get(name).cloned()
+    }
+
     /// Start a topology instance under `key` (the function profile
     /// rendering). Fails on unknown stages, duplicate key, or the
     /// stateful-stage misuse shapes the engine rejects (unkeyed

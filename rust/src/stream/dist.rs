@@ -231,6 +231,16 @@ impl RouteState {
     pub fn take_collected(&mut self) -> Vec<Tuple> {
         std::mem::take(&mut self.collected)
     }
+
+    /// Take up to `max` collected outputs, leaving the rest queued
+    /// (the bounded `poll` of the deploy surfaces).
+    pub fn take_up_to(&mut self, max: usize) -> Vec<Tuple> {
+        let mut out = std::mem::take(&mut self.collected);
+        if out.len() > max {
+            self.collected = out.split_off(max);
+        }
+        out
+    }
 }
 
 /// Start every fragment of `plan` on its node's manager. On failure the
@@ -597,6 +607,12 @@ impl DistributedTopologyManager {
         self.factories.insert(name.to_string(), factory);
     }
 
+    /// The factory registered (on every node) for a stage name, if any
+    /// (the pipeline API resolves named stages through this).
+    pub fn factory(&self, name: &str) -> Option<StageFactory> {
+        self.factories.get(name).cloned()
+    }
+
     /// Start `spec` under `key`, split across nodes per `plan`.
     pub fn start(&mut self, key: &str, spec: &str, plan: &PlacementPlan) -> Result<()> {
         if self.routes.contains_key(key) {
@@ -635,15 +651,7 @@ impl DistributedTopologyManager {
     pub fn poll(&mut self, key: &str, max: usize) -> Result<Vec<Tuple>> {
         let mut st = self.take_route(key)?;
         let r = pump_route(&*self, &mut st);
-        let out = if r.is_ok() {
-            let mut out = st.take_collected();
-            if out.len() > max {
-                st.collected = out.split_off(max);
-            }
-            out
-        } else {
-            Vec::new()
-        };
+        let out = if r.is_ok() { st.take_up_to(max) } else { Vec::new() };
         self.routes.insert(key.to_string(), st);
         r.map(|()| out)
     }

@@ -30,11 +30,18 @@
 //!   `NetMessage::StreamBatch` frames over the net plane (SimNetwork
 //!   in-process, framed TCP across processes) with zero-loss cascade
 //!   drain. See `docs/distributed-stream.md`.
+//! - [`pipeline`]: the unified front door — a typed, validated
+//!   [`pipeline::Pipeline`] definition (builder or string-spec
+//!   parse-through) deployable unchanged on any [`pipeline::Deployer`]
+//!   surface (in-process, policy-elastic, cluster-split) and driven
+//!   through one [`pipeline::PipelineHandle`]. See
+//!   `docs/pipeline-api.md`.
 
 pub mod deploy;
 pub mod dist;
 pub mod engine;
 pub mod operator;
+pub mod pipeline;
 pub mod topology;
 pub mod tuple;
 
@@ -44,5 +51,6 @@ pub use engine::{
     EngineHandle, RescaleReport, Rescaler, StageFactory, StageRuntime, StreamEngine, StreamSender,
 };
 pub use operator::{KeyState, Operator, OperatorKind};
+pub use pipeline::{Deployer, Pipeline, PipelineBuilder, PipelineHandle, PipelineStage};
 pub use topology::{StageSpec, Topology};
 pub use tuple::Tuple;

@@ -1,0 +1,770 @@
+//! The unified serverless pipeline API (paper §IV-C2/§IV-D: pipelines
+//! run "across the cloud and edge in a uniform manner").
+//!
+//! A [`Pipeline`] is the *canonical, typed* definition of a stream
+//! pipeline: an ordered chain of [`PipelineStage`]s (parallelism and
+//! partition-key annotations, optionally an attached operator factory),
+//! an optional [`ScalePolicy`], and optional placement hints. The
+//! string specs of the earlier surfaces (`"score*4@IMG->decide"`)
+//! remain a parse-through — [`Pipeline::parse`] and
+//! [`Pipeline::to_spec`]/`Display` round-trip losslessly — so every
+//! stored function profile keeps working; the builder just makes the
+//! definition typed and validated *before* deploy.
+//!
+//! **One definition, three surfaces.** The [`Deployer`] trait is
+//! implemented by
+//!
+//! - [`TopologyManager`] — in-process execution (with a policy
+//!   attached, the watcher-driven *elastic* surface),
+//! - [`DistributedTopologyManager`] — the chain split into per-node
+//!   fragments placed by device profile ([`plan_placement`] consumes
+//!   the builder's `cpu_heavy`/`source` hints),
+//! - the coordinator's `Cluster` — fragments on real RP nodes with
+//!   hops charged to the simulated network,
+//!
+//! so the *same* `Pipeline` value deploys unchanged on any of them and
+//! is driven through one [`PipelineHandle`]
+//! (send/poll/rescale/stop). Every surface rejects an invalid pipeline
+//! identically, before anything starts: [`Pipeline::validate`] carries
+//! the launch-time contract checks (grammar round-trip, duplicate
+//! stage names, unkeyed parallel stateful stages, stage-key/operator
+//! state-key mismatches) that previously lived only inside the engine.
+//!
+//! The data-driven activation layer on top of this — pipelines that
+//! cold-start when matching data arrives and scale back to zero when
+//! idle — is [`crate::pipeline::trigger::TriggerManager`].
+//! See `docs/pipeline-api.md` for the full contract.
+
+use super::deploy::{ScalePolicy, TopologyManager};
+use super::dist::{plan_placement, DistributedTopologyManager};
+use super::engine::{RescaleReport, StageFactory};
+use super::operator::Operator;
+use super::topology::{StageSpec, Topology};
+use super::tuple::Tuple;
+use crate::error::{Error, Result};
+use crate::overlay::node_id::NodeId;
+use std::sync::Arc;
+
+/// One typed stage: the executor annotations plus (optionally) the
+/// operator factory that builds its replicas. Stages without a factory
+/// resolve against the deployer's registered stages at deploy time —
+/// that is how string-spec pipelines keep working.
+#[derive(Clone)]
+pub struct PipelineStage {
+    spec: StageSpec,
+    factory: Option<StageFactory>,
+}
+
+impl PipelineStage {
+    /// A serial, unkeyed stage resolving a registered factory by name.
+    pub fn new(name: &str) -> Self {
+        PipelineStage { spec: StageSpec::serial(name.trim()), factory: None }
+    }
+
+    /// Wrap an existing parsed spec (the parse-through path).
+    pub fn from_spec(spec: StageSpec) -> Self {
+        PipelineStage { spec, factory: None }
+    }
+
+    /// Run `p` replicas behind the hash-partitioning shuffle
+    /// (`p == 0` is rejected at [`PipelineBuilder::build`]).
+    pub fn parallel(mut self, p: usize) -> Self {
+        self.spec.parallelism = p;
+        self
+    }
+
+    /// Partition tuples by `field` (canonicalised uppercase, like
+    /// tuple fields): same key value → same replica, per-key order
+    /// preserved. Required for stateful parallel stages.
+    pub fn keyed(mut self, field: &str) -> Self {
+        self.spec.key = Some(field.trim().to_ascii_uppercase());
+        self
+    }
+
+    /// Attach the operator factory building this stage's replicas.
+    pub fn operator(
+        mut self,
+        factory: impl Fn() -> Box<dyn Operator> + Send + Sync + 'static,
+    ) -> Self {
+        self.factory = Some(Arc::new(factory));
+        self
+    }
+
+    /// Attach an already-shared factory (re-used across pipelines).
+    pub fn factory(mut self, factory: StageFactory) -> Self {
+        self.factory = Some(factory);
+        self
+    }
+
+    /// The stage's executor annotations.
+    pub fn spec(&self) -> &StageSpec {
+        &self.spec
+    }
+
+    /// Stage (operator) name.
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// The attached operator factory, if any.
+    pub fn factory_ref(&self) -> Option<&StageFactory> {
+        self.factory.as_ref()
+    }
+}
+
+impl std::fmt::Debug for PipelineStage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PipelineStage({}, factory={})",
+            self.spec.render(),
+            if self.factory.is_some() { "attached" } else { "named" }
+        )
+    }
+}
+
+/// A validated pipeline definition: what every deploy surface consumes.
+#[derive(Clone)]
+pub struct Pipeline {
+    name: String,
+    stages: Vec<PipelineStage>,
+    policy: Option<ScalePolicy>,
+    cpu_heavy: Vec<String>,
+    source: Option<NodeId>,
+}
+
+impl Pipeline {
+    /// Start a typed definition.
+    pub fn builder(name: &str) -> PipelineBuilder {
+        PipelineBuilder {
+            inner: Pipeline {
+                name: name.to_string(),
+                stages: Vec::new(),
+                policy: None,
+                cpu_heavy: Vec::new(),
+                source: None,
+            },
+        }
+    }
+
+    /// Parse a legacy string spec (`"score*4@IMG->decide"`) into a
+    /// pipeline whose stages resolve registered factories by name.
+    /// `Pipeline::parse(name, &p.to_spec())` reproduces `p`'s stage
+    /// chain exactly (property-tested in `rust/tests/pipeline_api.rs`).
+    pub fn parse(name: &str, spec: &str) -> Result<Pipeline> {
+        let topo = Topology::parse(name, spec)?;
+        Ok(Pipeline {
+            name: topo.name,
+            stages: topo.stages.into_iter().map(PipelineStage::from_spec).collect(),
+            policy: None,
+            cpu_heavy: Vec::new(),
+            source: None,
+        })
+    }
+
+    /// Serialize to the string spec form stored in function profiles
+    /// (`Display` delegates here). [`Pipeline::parse`] is the inverse.
+    pub fn to_spec(&self) -> String {
+        self.stages.iter().map(|s| s.spec.render()).collect::<Vec<_>>().join("->")
+    }
+
+    /// Pipeline (deploy-key) name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The typed stages, in chain order.
+    pub fn stages(&self) -> &[PipelineStage] {
+        &self.stages
+    }
+
+    /// Stage names in chain order.
+    pub fn stage_names(&self) -> Vec<String> {
+        self.stages.iter().map(|s| s.spec.name.clone()).collect()
+    }
+
+    /// Look a stage up by name.
+    pub fn stage(&self, name: &str) -> Option<&PipelineStage> {
+        self.stages.iter().find(|s| s.spec.name == name)
+    }
+
+    /// The plain topology view (what placement planning consumes).
+    pub fn topology(&self) -> Topology {
+        Topology {
+            name: self.name.clone(),
+            stages: self.stages.iter().map(|s| s.spec.clone()).collect(),
+        }
+    }
+
+    /// The autoscaling policy the elastic surface attaches at deploy.
+    pub fn scale_policy(&self) -> Option<&ScalePolicy> {
+        self.policy.as_ref()
+    }
+
+    /// Placement hint: stages named CPU-heavy (the planner cuts the
+    /// chain at the first of these and runs the rest on the most
+    /// capable node).
+    pub fn cpu_heavy_hints(&self) -> &[String] {
+        &self.cpu_heavy
+    }
+
+    /// Placement hint: the node ingesting the stream (stage 0 stays
+    /// there). `None` lets the deployer pick its first node.
+    pub fn source_hint(&self) -> Option<NodeId> {
+        self.source
+    }
+
+    /// Structural validation every surface runs identically *before*
+    /// deploy: the definition must round-trip through the spec grammar
+    /// (catches empty chains, bad names, duplicate stages, zero
+    /// parallelism — with the grammar's own error text), placement
+    /// hints must name real stages, and every stage carrying a factory
+    /// is probed for the stateful-stage contract (unkeyed parallel
+    /// stateful stage; monolithic state behind a keyed shuffle; stage
+    /// key ≠ operator state key).
+    pub fn validate(&self) -> Result<()> {
+        let rendered = self.to_spec();
+        let topo = Topology::parse(&self.name, &rendered)?;
+        if topo.stages.len() != self.stages.len()
+            || topo.stages.iter().zip(self.stages.iter()).any(|(got, want)| *got != want.spec)
+        {
+            return Err(Error::Stream(format!(
+                "pipeline `{}` does not round-trip through the spec grammar (`{rendered}`); \
+                 stage names must fit `name[*P][@KEY]`",
+                self.name
+            )));
+        }
+        for hint in &self.cpu_heavy {
+            if !self.stages.iter().any(|s| s.spec.name.eq_ignore_ascii_case(hint)) {
+                return Err(Error::Stream(format!(
+                    "pipeline `{}` marks unknown stage `{hint}` as cpu-heavy",
+                    self.name
+                )));
+            }
+        }
+        for s in &self.stages {
+            if let Some(factory) = &s.factory {
+                probe_stage(&s.spec, factory().as_ref())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Pipeline::validate`], additionally requiring *every* stage to
+    /// resolve an operator factory — the stage's own, or `resolve`
+    /// (the deployer's registry). This is the full pre-deploy gate the
+    /// [`Deployer`] impls run, so an invalid pipeline fails the same
+    /// way on every surface, before anything is started.
+    pub fn validate_resolved<F>(&self, mut resolve: F) -> Result<()>
+    where
+        F: FnMut(&str) -> Option<StageFactory>,
+    {
+        self.validate()?;
+        for s in &self.stages {
+            if s.factory.is_some() {
+                continue; // attached factories were probed by validate()
+            }
+            let factory = resolve(&s.spec.name).ok_or_else(|| {
+                Error::Stream(format!(
+                    "unknown stage `{}` in pipeline `{}`",
+                    s.spec.name, self.name
+                ))
+            })?;
+            probe_stage(&s.spec, factory().as_ref())?;
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for Pipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_spec())
+    }
+}
+
+impl std::fmt::Debug for Pipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Pipeline({} = {}, policy={}, cpu_heavy={:?})",
+            self.name,
+            self.to_spec(),
+            self.policy.is_some(),
+            self.cpu_heavy
+        )
+    }
+}
+
+/// The launch-time stateful-stage contract, applied to a probe replica
+/// built from the stage's factory. Mirrors the engine's own
+/// `validate_stage` checks (same error text) so a pipeline rejected
+/// here is exactly what the executor would have rejected at launch.
+fn probe_stage(spec: &StageSpec, op: &dyn Operator) -> Result<()> {
+    if spec.parallelism > 1 && op.stateful() {
+        let name = &spec.name;
+        match (&spec.key, op.state_key()) {
+            (None, _) => {
+                return Err(Error::Stream(format!(
+                    "stage `{name}` is stateful and parallel; add a partition key \
+                     (`{name}*{}@FIELD`) or its output becomes an arbitrary function \
+                     of the shuffle",
+                    spec.parallelism
+                )))
+            }
+            (Some(k), None) => {
+                return Err(Error::Stream(format!(
+                    "stage `{name}` is keyed by `{k}` but its operator keeps one window \
+                     across every key a replica owns, so results change with \
+                     parallelism; use a per-key operator (`OperatorKind::window_by`)"
+                )))
+            }
+            (Some(k), Some(sk)) if !sk.eq_ignore_ascii_case(k) => {
+                return Err(Error::Stream(format!(
+                    "stage `{name}` partitions tuples by `{k}` but its operator state \
+                     is keyed by `{sk}`; the stage key and the operator key must agree"
+                )))
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// Builder for [`Pipeline`]; [`PipelineBuilder::build`] validates.
+pub struct PipelineBuilder {
+    inner: Pipeline,
+}
+
+impl PipelineBuilder {
+    /// Append a stage to the chain.
+    pub fn stage(mut self, stage: PipelineStage) -> Self {
+        self.inner.stages.push(stage);
+        self
+    }
+
+    /// Attach a watermark autoscaling policy: the in-process surface
+    /// deploys the pipeline elastic, with a watcher driving rescales.
+    pub fn scale_policy(mut self, policy: ScalePolicy) -> Self {
+        self.inner.policy = Some(policy);
+        self
+    }
+
+    /// Placement hint: mark a stage CPU-heavy (distributed surfaces cut
+    /// the chain at the first such stage and run the rest on the most
+    /// capable node). May be called repeatedly.
+    pub fn cpu_heavy(mut self, stage: &str) -> Self {
+        self.inner.cpu_heavy.push(stage.to_string());
+        self
+    }
+
+    /// Placement hint: the node the stream enters at (stage 0 stays
+    /// there on distributed surfaces).
+    pub fn source(mut self, node: NodeId) -> Self {
+        self.inner.source = Some(node);
+        self
+    }
+
+    /// Validate and produce the pipeline. Every surface re-runs the
+    /// same [`Pipeline::validate`] at deploy, so a definition that
+    /// builds here can only fail deploy on *resolution* (a named stage
+    /// the deployer has not registered) or surface state (key already
+    /// running, no nodes).
+    pub fn build(self) -> Result<Pipeline> {
+        self.inner.validate()?;
+        Ok(self.inner)
+    }
+}
+
+/// A deployed pipeline instance: the token every [`Deployer`] operation
+/// takes. Cheap to clone; `key` is the pipeline name.
+#[derive(Debug, Clone)]
+pub struct PipelineHandle {
+    key: String,
+    stages: Vec<String>,
+    surface: &'static str,
+}
+
+impl PipelineHandle {
+    /// The deploy key (the pipeline's name).
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Stage names in chain order.
+    pub fn stages(&self) -> &[String] {
+        &self.stages
+    }
+
+    /// Which surface deployed it (`"in-process"`, `"distributed"`,
+    /// `"cluster"`).
+    pub fn surface(&self) -> &'static str {
+        self.surface
+    }
+}
+
+/// One deploy surface for [`Pipeline`]s. Implemented by
+/// [`TopologyManager`] (in-process / policy-elastic),
+/// [`DistributedTopologyManager`] (placement-planned fragments over the
+/// net plane) and the coordinator's `Cluster` (fragments on real RP
+/// nodes). Object-safe, so orchestration layers (the trigger plane)
+/// can hold `Box<dyn Deployer>`.
+///
+/// Contract, identical on every surface:
+/// - `validate` runs [`Pipeline::validate_resolved`] against the
+///   surface's stage registry — rejects exactly what `deploy` would,
+///   without starting anything.
+/// - `deploy` validates, registers the pipeline's attached factories,
+///   activates the pipeline under its name, and returns the handle.
+///   Deploying a name that is already live fails.
+/// - `send_batch` feeds input (blocking under backpressure); `poll`
+///   drains up to `max` outputs available so far without blocking;
+///   `stop` tears down with the zero-loss drain contract and returns
+///   the complete trailing output; `rescale` live-rescales one stage.
+pub trait Deployer {
+    /// Human-readable surface tag (stamped on handles).
+    fn surface(&self) -> &'static str;
+
+    /// Full pre-deploy validation against this surface's registry.
+    fn validate(&self, pipeline: &Pipeline) -> Result<()>;
+
+    /// Validate, register attached factories, and activate.
+    fn deploy(&mut self, pipeline: &Pipeline) -> Result<PipelineHandle>;
+
+    /// Feed a batch (blocks under backpressure).
+    fn send_batch(&mut self, handle: &PipelineHandle, batch: Vec<Tuple>) -> Result<()>;
+
+    /// Feed one tuple.
+    fn send(&mut self, handle: &PipelineHandle, tuple: Tuple) -> Result<()> {
+        self.send_batch(handle, vec![tuple])
+    }
+
+    /// Drain up to `max` output tuples available so far (non-blocking).
+    fn poll(&mut self, handle: &PipelineHandle, max: usize) -> Result<Vec<Tuple>>;
+
+    /// Live-rescale a stage to `parallelism` replicas.
+    fn rescale(
+        &mut self,
+        handle: &PipelineHandle,
+        stage: &str,
+        parallelism: usize,
+    ) -> Result<RescaleReport>;
+
+    /// Tear down (zero-loss drain) and return the trailing output.
+    fn stop(&mut self, handle: &PipelineHandle) -> Result<Vec<Tuple>>;
+
+    /// Whether the handle's pipeline is still live on this surface.
+    fn is_deployed(&self, handle: &PipelineHandle) -> bool;
+}
+
+/// Stamp a handle for a freshly deployed pipeline (used by every
+/// surface impl, including the `Cluster` one in `coordinator`).
+pub(crate) fn handle_for(pipeline: &Pipeline, surface: &'static str) -> PipelineHandle {
+    PipelineHandle {
+        key: pipeline.name().to_string(),
+        stages: pipeline.stage_names(),
+        surface,
+    }
+}
+
+// ---- Surface: in-process / policy-elastic (TopologyManager) ----
+
+impl Deployer for TopologyManager {
+    fn surface(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn validate(&self, pipeline: &Pipeline) -> Result<()> {
+        pipeline.validate_resolved(|name| self.factory(name))
+    }
+
+    fn deploy(&mut self, pipeline: &Pipeline) -> Result<PipelineHandle> {
+        Deployer::validate(self, pipeline)?;
+        for s in pipeline.stages() {
+            if let Some(f) = s.factory_ref() {
+                self.register_stage_factory(s.name(), f.clone());
+            }
+        }
+        let spec = pipeline.to_spec();
+        match pipeline.scale_policy() {
+            Some(policy) => self.start_with_policy(pipeline.name(), &spec, policy.clone())?,
+            None => self.start(pipeline.name(), &spec)?,
+        }
+        Ok(handle_for(pipeline, Deployer::surface(self)))
+    }
+
+    fn send_batch(&mut self, handle: &PipelineHandle, batch: Vec<Tuple>) -> Result<()> {
+        TopologyManager::send_batch(self, &handle.key, batch)
+    }
+
+    fn poll(&mut self, handle: &PipelineHandle, max: usize) -> Result<Vec<Tuple>> {
+        self.poll_outputs(&handle.key, max)
+    }
+
+    fn rescale(
+        &mut self,
+        handle: &PipelineHandle,
+        stage: &str,
+        parallelism: usize,
+    ) -> Result<RescaleReport> {
+        TopologyManager::rescale(self, &handle.key, stage, parallelism)
+    }
+
+    fn stop(&mut self, handle: &PipelineHandle) -> Result<Vec<Tuple>> {
+        TopologyManager::stop(self, &handle.key)
+    }
+
+    fn is_deployed(&self, handle: &PipelineHandle) -> bool {
+        self.is_running(&handle.key)
+    }
+}
+
+// ---- Surface: placement-planned fragments (DistributedTopologyManager) ----
+
+impl Deployer for DistributedTopologyManager {
+    fn surface(&self) -> &'static str {
+        "distributed"
+    }
+
+    fn validate(&self, pipeline: &Pipeline) -> Result<()> {
+        pipeline.validate_resolved(|name| self.factory(name))
+    }
+
+    fn deploy(&mut self, pipeline: &Pipeline) -> Result<PipelineHandle> {
+        Deployer::validate(self, pipeline)?;
+        for s in pipeline.stages() {
+            if let Some(f) = s.factory_ref() {
+                self.register_stage_factory(s.name(), f.clone());
+            }
+        }
+        let source = match pipeline.source_hint() {
+            Some(node) => node,
+            None => *self.nodes().first().ok_or_else(|| {
+                Error::Net(format!(
+                    "pipeline `{}`: no nodes registered to place fragments on",
+                    pipeline.name()
+                ))
+            })?,
+        };
+        let heavy: Vec<&str> =
+            pipeline.cpu_heavy_hints().iter().map(String::as_str).collect();
+        let plan = plan_placement(&pipeline.topology(), source, &self.profiles(), &heavy)?;
+        if pipeline.scale_policy().is_some() {
+            log::warn!(
+                "pipeline `{}`: ScalePolicy watchers are an in-process surface feature; \
+                 distributed fragments rescale via Deployer::rescale",
+                pipeline.name()
+            );
+        }
+        self.start(pipeline.name(), &pipeline.to_spec(), &plan)?;
+        Ok(handle_for(pipeline, Deployer::surface(self)))
+    }
+
+    fn send_batch(&mut self, handle: &PipelineHandle, batch: Vec<Tuple>) -> Result<()> {
+        DistributedTopologyManager::send_batch(self, &handle.key, batch)
+    }
+
+    fn poll(&mut self, handle: &PipelineHandle, max: usize) -> Result<Vec<Tuple>> {
+        DistributedTopologyManager::poll(self, &handle.key, max)
+    }
+
+    fn rescale(
+        &mut self,
+        handle: &PipelineHandle,
+        stage: &str,
+        parallelism: usize,
+    ) -> Result<RescaleReport> {
+        DistributedTopologyManager::rescale(self, &handle.key, stage, parallelism)
+    }
+
+    fn stop(&mut self, handle: &PipelineHandle) -> Result<Vec<Tuple>> {
+        DistributedTopologyManager::stop(self, &handle.key)
+    }
+
+    fn is_deployed(&self, handle: &PipelineHandle) -> bool {
+        self.is_running(&handle.key)
+    }
+}
+
+// The `Cluster` implementation lives in `crate::coordinator::cluster`
+// (it needs the cluster's private route table); same contract.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::DeviceProfile;
+    use crate::stream::engine::StreamEngine;
+    use crate::stream::operator::OperatorKind;
+
+    fn inc_factory() -> StageFactory {
+        Arc::new(|| {
+            Box::new(OperatorKind::map("inc", |mut t| {
+                let v = t.get("X").unwrap_or(0.0);
+                t.set("X", v + 1.0);
+                t
+            })) as Box<dyn Operator>
+        })
+    }
+
+    fn kwin_factory() -> StageFactory {
+        Arc::new(|| Box::new(OperatorKind::window_by("kwin", "X", 4, "K")) as Box<dyn Operator>)
+    }
+
+    fn typed_pipeline() -> Pipeline {
+        Pipeline::builder("p")
+            .stage(PipelineStage::new("inc").parallel(2).keyed("K").factory(inc_factory()))
+            .stage(PipelineStage::new("kwin").parallel(2).keyed("K").factory(kwin_factory()))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_produces_round_trippable_spec() {
+        let p = typed_pipeline();
+        assert_eq!(p.to_spec(), "inc*2@K->kwin*2@K");
+        assert_eq!(format!("{p}"), p.to_spec());
+        let parsed = Pipeline::parse("p", &p.to_spec()).unwrap();
+        assert_eq!(parsed.to_spec(), p.to_spec());
+        assert_eq!(parsed.stage_names(), p.stage_names());
+    }
+
+    #[test]
+    fn builder_rejects_grammar_misuse() {
+        // Zero parallelism, empty name, duplicate stages: all caught at
+        // build, with the grammar's own errors.
+        assert!(Pipeline::builder("z")
+            .stage(PipelineStage::new("a").parallel(0).operator(|| {
+                Box::new(OperatorKind::map("a", |t| t))
+            }))
+            .build()
+            .is_err());
+        assert!(Pipeline::builder("e").stage(PipelineStage::new("")).build().is_err());
+        assert!(Pipeline::builder("d")
+            .stage(PipelineStage::new("a"))
+            .stage(PipelineStage::new("a"))
+            .build()
+            .is_err());
+        assert!(Pipeline::builder("empty").build().is_err());
+        // Names must fit the grammar, or the round-trip would lie.
+        assert!(Pipeline::builder("g").stage(PipelineStage::new("a*2")).build().is_err());
+        assert!(Pipeline::builder("g2").stage(PipelineStage::new("a->b")).build().is_err());
+        // Placement hints must name real stages.
+        assert!(Pipeline::builder("h")
+            .stage(PipelineStage::new("a"))
+            .cpu_heavy("ghost")
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_rejects_stateful_misuse_before_deploy() {
+        // Unkeyed parallel stateful stage.
+        let err = Pipeline::builder("s1")
+            .stage(PipelineStage::new("kwin").parallel(4).factory(kwin_factory()))
+            .build()
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("kwin") && msg.contains("partition key"), "{msg}");
+        // Stage key disagreeing with the operator's state key.
+        let err = Pipeline::builder("s2")
+            .stage(PipelineStage::new("kwin").parallel(2).keyed("OTHER").factory(kwin_factory()))
+            .build()
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("`OTHER`") && msg.contains("`K`"), "{msg}");
+        // Monolithic-state operator behind a keyed shuffle.
+        let err = Pipeline::builder("s3")
+            .stage(PipelineStage::new("w").parallel(2).keyed("K").operator(|| {
+                Box::new(OperatorKind::window("w", "X", 4))
+            }))
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("per-key"), "{err}");
+    }
+
+    #[test]
+    fn parse_through_pipeline_resolves_registered_stages() {
+        let mut m = TopologyManager::new(StreamEngine::new());
+        m.register_stage_factory("inc", inc_factory());
+        let p = Pipeline::parse("legacy", "inc*2").unwrap();
+        // Unknown until the factory registry resolves it.
+        assert!(p.validate().is_ok(), "structural validation passes without factories");
+        assert!(p.validate_resolved(|_| None).is_err());
+        Deployer::validate(&m, &p).unwrap();
+        let h = m.deploy(&p).unwrap();
+        assert_eq!(h.surface(), "in-process");
+        Deployer::send(&mut m, &h, Tuple::new(0, vec![]).with("X", 1.0)).unwrap();
+        let out = Deployer::stop(&mut m, &h).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("X"), Some(2.0));
+    }
+
+    #[test]
+    fn unknown_stage_rejected_identically_on_both_managers() {
+        let p = Pipeline::parse("ghostly", "ghost").unwrap();
+        let local = TopologyManager::new(StreamEngine::new());
+        let mut dist = DistributedTopologyManager::new();
+        dist.add_node(NodeId::from_name("n1"), DeviceProfile::raspberry_pi());
+        let e1 = format!("{}", Deployer::validate(&local, &p).unwrap_err());
+        let e2 = format!("{}", Deployer::validate(&dist, &p).unwrap_err());
+        assert_eq!(e1, e2, "surfaces must reject identically");
+        assert!(e1.contains("unknown stage `ghost`"), "{e1}");
+    }
+
+    #[test]
+    fn one_pipeline_deploys_on_both_managers() {
+        let p = typed_pipeline();
+        // In-process.
+        let mut local = TopologyManager::new(StreamEngine::new());
+        let h = local.deploy(&p).unwrap();
+        assert!(Deployer::is_deployed(&local, &h));
+        // Distributed (two nodes, split at the parallel stage).
+        let mut dist = DistributedTopologyManager::new();
+        dist.add_node(NodeId::from_name("edge"), DeviceProfile::raspberry_pi());
+        dist.add_node(NodeId::from_name("core"), DeviceProfile::cloud_small());
+        let hd = dist.deploy(&p).unwrap();
+        assert_eq!(hd.surface(), "distributed");
+        let mut seq = 0u64;
+        for _ in 0..8 {
+            for k in 0..3u64 {
+                let t = Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0);
+                Deployer::send(&mut local, &h, t.clone()).unwrap();
+                Deployer::send(&mut dist, &hd, t).unwrap();
+                seq += 1;
+            }
+        }
+        let a = Deployer::stop(&mut local, &h).unwrap();
+        let b = Deployer::stop(&mut dist, &hd).unwrap();
+        let canon = |v: &[Tuple]| {
+            let mut out: Vec<String> = v.iter().map(|t| format!("{:?}", t.fields)).collect();
+            out.sort();
+            out
+        };
+        assert_eq!(canon(&a), canon(&b), "same outputs on both surfaces");
+        assert!(!Deployer::is_deployed(&local, &h));
+        assert!(!Deployer::is_deployed(&dist, &hd));
+    }
+
+    #[test]
+    fn policy_pipeline_deploys_elastic() {
+        let p = Pipeline::builder("auto")
+            .stage(PipelineStage::new("inc").factory(inc_factory()))
+            .scale_policy(ScalePolicy::default())
+            .build()
+            .unwrap();
+        let mut local = TopologyManager::new(StreamEngine::new());
+        let h = local.deploy(&p).unwrap();
+        Deployer::send(&mut local, &h, Tuple::new(0, vec![]).with("X", 1.0)).unwrap();
+        let out = Deployer::stop(&mut local, &h).unwrap();
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn double_deploy_fails_without_disturbing_the_instance() {
+        let p = typed_pipeline();
+        let mut local = TopologyManager::new(StreamEngine::new());
+        let h = local.deploy(&p).unwrap();
+        assert!(local.deploy(&p).is_err());
+        assert!(Deployer::is_deployed(&local, &h));
+        Deployer::stop(&mut local, &h).unwrap();
+    }
+}

@@ -42,6 +42,10 @@ impl StageSpec {
     }
 
     /// Render back to the `name[*P][@KEY]` textual form.
+    ///
+    /// [`StageSpec::parse`] is the inverse: `parse(&s.render())` is
+    /// identity for every spec a parse can produce (the key is stored
+    /// uppercased, so rendering is canonical). `Display` delegates here.
     pub fn render(&self) -> String {
         let mut out = self.name.clone();
         if self.parallelism > 1 {
@@ -53,7 +57,14 @@ impl StageSpec {
         out
     }
 
-    fn parse(segment: &str, spec: &str) -> Result<StageSpec> {
+    /// Parse one `name[*P][@KEY]` segment — the public single-stage
+    /// round-trip partner of [`StageSpec::render`] (typed pipeline
+    /// builders validate their stages through this).
+    pub fn parse(segment: &str) -> Result<StageSpec> {
+        Self::parse_in(segment, segment)
+    }
+
+    fn parse_in(segment: &str, spec: &str) -> Result<StageSpec> {
         // Grammar: name [ '*' parallelism ] [ '@' key ].
         let (head, key) = match segment.split_once('@') {
             Some((h, k)) => {
@@ -102,6 +113,20 @@ impl StageSpec {
     }
 }
 
+impl std::fmt::Display for StageSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+impl std::str::FromStr for StageSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<StageSpec> {
+        StageSpec::parse(s)
+    }
+}
+
 /// A parsed topology: ordered stage specs.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Topology {
@@ -125,7 +150,7 @@ impl Topology {
                     "empty stage (dangling `->`) in topology spec `{spec}`"
                 )));
             }
-            stages.push(StageSpec::parse(segment, spec)?);
+            stages.push(StageSpec::parse_in(segment, spec)?);
         }
         if stages.is_empty() {
             return Err(Error::Stream(format!("empty topology spec `{spec}`")));
@@ -143,6 +168,7 @@ impl Topology {
     }
 
     /// Serialize back to the `"a*2@K->b->c"` form (stored in profiles).
+    /// `Display` delegates here; [`Topology::parse`] is the inverse.
     pub fn render(&self) -> String {
         self.stages.iter().map(StageSpec::render).collect::<Vec<_>>().join("->")
     }
@@ -165,6 +191,12 @@ impl Topology {
 
     pub fn is_empty(&self) -> bool {
         self.stages.is_empty()
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
     }
 }
 
@@ -262,6 +294,26 @@ mod tests {
             let t = Topology::parse("rt", spec).unwrap();
             let t2 = Topology::parse("rt", &t.render()).unwrap();
             assert_eq!(t, t2, "round-trip failed for `{spec}`");
+            assert_eq!(format!("{t}"), t.render(), "Display must be the render form");
+        }
+    }
+
+    #[test]
+    fn stage_spec_public_parse_display_round_trip() {
+        // Canonical segments come back byte-identical through
+        // `FromStr` → `Display`; the key is canonicalised uppercase.
+        for seg in ["plain", "par*4", "keyed@K", "both*8@SENSOR"] {
+            let s: StageSpec = seg.parse().unwrap();
+            assert_eq!(format!("{s}"), seg, "Display must round-trip `{seg}`");
+            assert_eq!(StageSpec::parse(&s.render()).unwrap(), s);
+        }
+        let lower: StageSpec = "w*2@sensor".parse().unwrap();
+        assert_eq!(format!("{lower}"), "w*2@SENSOR");
+        assert_eq!(StageSpec::parse(&lower.render()).unwrap(), lower);
+        // The public single-segment parse rejects what the chain parser
+        // rejects, naming the segment.
+        for bad in ["", "a*0", "a*", "*4", "a@", "a@K*2", "a@K@J"] {
+            assert!(StageSpec::parse(bad).is_err(), "`{bad}` must be rejected");
         }
     }
 }

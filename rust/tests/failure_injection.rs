@@ -417,3 +417,107 @@ fn crash_of_every_replica_loses_only_that_data() {
     }
     cluster.shutdown().unwrap();
 }
+
+// ---- Trigger plane: faults mid-activation ----
+
+#[test]
+fn trigger_pipeline_fault_mid_activation_reclaims_and_recovers() {
+    use rpulsar::mmq::pubsub::RetirePolicy;
+    use rpulsar::mmq::queue::QueueOptions;
+    use rpulsar::pipeline::trigger::{TriggerManager, TriggerOptions};
+    use rpulsar::stream::pipeline::{Pipeline, PipelineStage};
+    use std::time::Duration;
+
+    let dir = std::env::temp_dir()
+        .join("rpulsar-trigger-fault")
+        .join(format!("{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut broker = rpulsar::mmq::pubsub::Broker::new(QueueOptions {
+        dir,
+        segment_bytes: 1 << 16,
+        max_segments: 4,
+        sync_every: 0,
+    });
+    let mut trig = TriggerManager::in_process();
+    // A keyed parallel stage that panics on the poison tuple — the
+    // fault lands mid-activation, with healthy tuples already fed.
+    let pipeline = Pipeline::builder("fragile")
+        .stage(PipelineStage::new("frag").parallel(2).keyed("K").operator(|| {
+            Box::new(OperatorKind::map("frag", |t| {
+                if t.get("POISON") == Some(1.0) {
+                    panic!("injected mid-activation fault");
+                }
+                t
+            })) as Box<dyn Operator>
+        }))
+        .build()
+        .unwrap();
+    let eager = TriggerOptions {
+        idle: RetirePolicy {
+            max_publish_idle: Duration::ZERO,
+            max_fetch_idle: Duration::ZERO,
+            min_age: Duration::ZERO,
+        },
+        decode_payloads: true,
+    };
+    let profile = Profile::parse("frag,data").unwrap();
+    trig.bind(&mut broker, pipeline, Profile::parse("frag,*").unwrap(), eager).unwrap();
+    // Healthy tuples, then poison, then more healthy ones behind it.
+    for i in 0..4u64 {
+        broker
+            .publish(&profile, &Tuple::new(i, vec![]).with("K", (i % 2) as f64).encode())
+            .unwrap();
+    }
+    broker
+        .publish(&profile, &Tuple::new(4, vec![]).with("K", 0.0).with("POISON", 1.0).encode())
+        .unwrap();
+    // Pump until the fault surfaces: the panicking replica fails the
+    // activation; the manager tears it down (never hangs) and the
+    // binding returns to idle with the fault counted.
+    let mut saw_fault = false;
+    for _ in 0..200 {
+        match trig.pump(&mut broker) {
+            Err(e) => {
+                assert!(
+                    format!("{e}").contains("injected mid-activation fault"),
+                    "fault must carry the cause: {e}"
+                );
+                saw_fault = true;
+                break;
+            }
+            Ok(()) => {
+                if trig.stats("fragile").unwrap().faults > 0 {
+                    saw_fault = true;
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+    assert!(saw_fault, "the injected fault must surface through pump");
+    assert!(!trig.is_active("fragile"), "faulted activation must reach zero");
+    assert!(
+        trig.deployer().running().is_empty(),
+        "no zombie topology may survive the fault"
+    );
+    assert_eq!(trig.stats("fragile").unwrap().faults, 1);
+    // The binding still works: fresh matching data cold-starts a new
+    // instance that processes cleanly end to end.
+    broker
+        .publish(&profile, &Tuple::new(5, vec![]).with("K", 1.0).encode())
+        .unwrap();
+    let mut recovered = false;
+    for _ in 0..200 {
+        trig.pump(&mut broker).unwrap();
+        if !trig.is_active("fragile") {
+            let out = trig.take_outputs("fragile");
+            if out.iter().any(|t| t.seq == 5) {
+                recovered = true;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(recovered, "a fresh activation must process post-fault data");
+    assert_eq!(trig.stats("fragile").unwrap().activations, 2);
+}

@@ -1,0 +1,358 @@
+//! The unified pipeline API contract: one typed `Pipeline` value
+//! deploys unchanged via all three `Deployer` surfaces — in-process,
+//! policy-elastic, and cluster-split — with the same output multiset
+//! and per-key order everywhere; every surface rejects an invalid
+//! definition identically, *before* deploy; and the string-spec
+//! grammar is a lossless public round-trip (`StageSpec` parse/Display,
+//! `Pipeline::parse(p.to_spec())` idempotent).
+
+use rpulsar::config::DeviceKind;
+use rpulsar::coordinator::Cluster;
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::overlay::node_id::NodeId;
+use rpulsar::stream::deploy::ScalePolicy;
+use rpulsar::stream::dist::DistributedTopologyManager;
+use rpulsar::stream::engine::{StageFactory, StreamEngine};
+use rpulsar::stream::operator::{Operator, OperatorKind};
+use rpulsar::stream::pipeline::{Deployer, Pipeline, PipelineStage};
+use rpulsar::stream::topology::StageSpec;
+use rpulsar::stream::tuple::Tuple;
+use rpulsar::stream::TopologyManager;
+use rpulsar::testkit::forall_seeded;
+use rpulsar::testkit::prop::NoShrink;
+use rpulsar::util::prng::Prng;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---- Spec-grammar round trip (public StageSpec parse/Display) ----
+
+fn name_gen(rng: &mut Prng) -> String {
+    const ALPHA: &[u8] = b"abcdefgh";
+    let len = rng.gen_range(1, 6);
+    (0..len).map(|_| ALPHA[rng.gen_range(0, ALPHA.len())] as char).collect()
+}
+
+fn spec_gen(rng: &mut Prng) -> StageSpec {
+    StageSpec {
+        name: name_gen(rng),
+        parallelism: rng.gen_range(1, 9),
+        key: if rng.gen_bool(0.5) {
+            Some(name_gen(rng).to_ascii_uppercase())
+        } else {
+            None
+        },
+    }
+}
+
+#[test]
+fn stage_spec_display_parse_round_trips() {
+    let gen = |rng: &mut Prng| NoShrink(spec_gen(rng));
+    forall_seeded(0xA91_0001, 1024, gen, |s: &NoShrink<StageSpec>| {
+        let rendered = format!("{}", s.0);
+        match StageSpec::parse(&rendered) {
+            Ok(back) => back == s.0 && back.render() == rendered,
+            Err(_) => false,
+        }
+    });
+}
+
+#[test]
+fn pipeline_parse_to_spec_is_idempotent() {
+    let gen = |rng: &mut Prng| {
+        let n = rng.gen_range(1, 6);
+        let mut stages = Vec::with_capacity(n);
+        let mut used = std::collections::BTreeSet::new();
+        while stages.len() < n {
+            let mut s = spec_gen(rng);
+            if !used.insert(s.name.clone()) {
+                // Duplicate stage names are a *rejected* shape; keep
+                // generating valid chains here.
+                s.name = format!("{}{}", s.name, stages.len());
+                if !used.insert(s.name.clone()) {
+                    continue;
+                }
+            }
+            stages.push(s);
+        }
+        NoShrink(stages.iter().map(StageSpec::render).collect::<Vec<_>>().join("->"))
+    };
+    forall_seeded(0xA91_0002, 1024, gen, |spec: &NoShrink<String>| {
+        let p1 = match Pipeline::parse("rt", &spec.0) {
+            Ok(p) => p,
+            Err(_) => return false,
+        };
+        let p2 = match Pipeline::parse("rt", &p1.to_spec()) {
+            Ok(p) => p,
+            Err(_) => return false,
+        };
+        // Idempotent: one parse canonicalises, the second is identity.
+        p2.to_spec() == p1.to_spec()
+            && p1.stages().iter().zip(p2.stages()).all(|(a, b)| a.spec() == b.spec())
+            && p1.validate().is_ok()
+    });
+}
+
+// ---- Cross-surface equivalence ----
+
+fn inc_factory() -> StageFactory {
+    Arc::new(|| {
+        Box::new(OperatorKind::map("inc", |mut t| {
+            let v = t.get("X").unwrap_or(0.0);
+            t.set("X", v + 1.0);
+            t
+        })) as Box<dyn Operator>
+    })
+}
+
+fn kwin_factory(window: usize) -> StageFactory {
+    Arc::new(move || {
+        Box::new(OperatorKind::window_by("kwin", "X", window, "K")) as Box<dyn Operator>
+    })
+}
+
+/// The pipeline under test: a keyed parallel map feeding a keyed
+/// window — the shape that exercises shuffle, state, and (split) the
+/// cross-node hop. Hints make distributed surfaces cut before `kwin`.
+fn test_pipeline(name: &str, par: usize, window: usize) -> Pipeline {
+    Pipeline::builder(name)
+        .stage(PipelineStage::new("inc").parallel(par).keyed("K").factory(inc_factory()))
+        .stage(PipelineStage::new("kwin").parallel(2).keyed("K").factory(kwin_factory(window)))
+        .cpu_heavy("kwin")
+        .build()
+        .unwrap()
+}
+
+fn canon(outs: &[Tuple]) -> Vec<String> {
+    let mut v: Vec<String> = outs.iter().map(|t| format!("{:?}", t.fields)).collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn one_pipeline_value_is_equivalent_across_all_three_surfaces() {
+    // One long-lived cluster hosts every case (cluster boot is the
+    // expensive part); the other surfaces are rebuilt per case.
+    let mut cluster = Cluster::new("pipeapi", 3, DeviceKind::Native).unwrap();
+    let ids = cluster.ids();
+    let mut rng = Prng::seeded(0xF17E_0001);
+    for case in 0..16 {
+        let par = rng.gen_range(1, 5);
+        let window = rng.gen_range(2, 5);
+        let keys = rng.gen_range(1, 6) as u64;
+        let n = rng.gen_range(8, 64) as u64;
+        let tuples: Vec<Tuple> = (0..n)
+            .map(|i| {
+                Tuple::new(i, vec![])
+                    .with("K", (i % keys) as f64)
+                    .with("X", rng.gen_range(0, 100) as f64)
+            })
+            .collect();
+
+        // (a) in-process.
+        let plain = test_pipeline(&format!("plain{case}"), par, window);
+        let mut local = TopologyManager::new(StreamEngine::new());
+        let h = local.deploy(&plain).unwrap();
+        Deployer::send_batch(&mut local, &h, tuples.clone()).unwrap();
+        let a = Deployer::stop(&mut local, &h).unwrap();
+
+        // (b) policy-elastic in-process: same definition plus a live
+        // autoscaling policy that may actually rescale mid-stream —
+        // equivalence must survive it (the rescale handoff contract).
+        let elastic = Pipeline::builder(&format!("elastic{case}"))
+            .stage(PipelineStage::new("inc").parallel(par).keyed("K").factory(inc_factory()))
+            .stage(
+                PipelineStage::new("kwin").parallel(2).keyed("K").factory(kwin_factory(window)),
+            )
+            .cpu_heavy("kwin")
+            .scale_policy(ScalePolicy {
+                high_depth: 1,
+                low_depth: -1,
+                min_parallelism: 1,
+                max_parallelism: 4,
+                sustain: 1,
+                tick: Duration::from_millis(1),
+                ..ScalePolicy::default()
+            })
+            .build()
+            .unwrap();
+        let mut auto = TopologyManager::new(StreamEngine::new());
+        let he = auto.deploy(&elastic).unwrap();
+        Deployer::send_batch(&mut auto, &he, tuples.clone()).unwrap();
+        let b = Deployer::stop(&mut auto, &he).unwrap();
+
+        // (c) distributed split: Pi source + cloud core; the cpu-heavy
+        // hint sends `kwin` to the more capable node.
+        let split = Pipeline::builder(&format!("split{case}"))
+            .stage(PipelineStage::new("inc").parallel(par).keyed("K").factory(inc_factory()))
+            .stage(
+                PipelineStage::new("kwin").parallel(2).keyed("K").factory(kwin_factory(window)),
+            )
+            .cpu_heavy("kwin")
+            .source(NodeId::from_name("pi"))
+            .build()
+            .unwrap();
+        let mut dist = DistributedTopologyManager::new();
+        dist.add_node(NodeId::from_name("pi"), DeviceProfile::raspberry_pi());
+        dist.add_node(NodeId::from_name("cloud"), DeviceProfile::cloud_small());
+        let hd = dist.deploy(&split).unwrap();
+        Deployer::send_batch(&mut dist, &hd, tuples.clone()).unwrap();
+        let c = Deployer::stop(&mut dist, &hd).unwrap();
+
+        // (d) cluster split: source ≠ the planner's best node (uniform
+        // profiles tie-break to the smallest id) → two fragments on
+        // real RP nodes, hops over the simulated network.
+        let clustered = Pipeline::builder(&format!("cluster{case}"))
+            .stage(PipelineStage::new("inc").parallel(par).keyed("K").factory(inc_factory()))
+            .stage(
+                PipelineStage::new("kwin").parallel(2).keyed("K").factory(kwin_factory(window)),
+            )
+            .cpu_heavy("kwin")
+            .source(ids[1])
+            .build()
+            .unwrap();
+        let hc = cluster.deploy(&clustered).unwrap();
+        Deployer::send_batch(&mut cluster, &hc, tuples.clone()).unwrap();
+        let d = Deployer::stop(&mut cluster, &hc).unwrap();
+
+        let want = canon(&a);
+        assert_eq!(want, canon(&b), "case {case}: policy-elastic surface diverged");
+        assert_eq!(want, canon(&c), "case {case}: distributed surface diverged");
+        assert_eq!(want, canon(&d), "case {case}: cluster surface diverged");
+    }
+    assert!(cluster.network().messages() > 0, "cluster splits must cross the network");
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn per_key_order_is_preserved_on_every_surface() {
+    // A keyed parallel relay tags nothing and drops nothing: for each
+    // key, outputs must replay the input's per-key ORD sequence
+    // exactly, on every surface.
+    let relay = |name: &str| {
+        Pipeline::builder(name)
+            .stage(PipelineStage::new("relay").parallel(3).keyed("K").operator(|| {
+                Box::new(OperatorKind::map("relay", |t| t)) as Box<dyn Operator>
+            }))
+            .cpu_heavy("relay")
+            .build()
+            .unwrap()
+    };
+    let mut rng = Prng::seeded(0xF17E_0002);
+    let keys = 5u64;
+    let mut ord = vec![0u64; keys as usize];
+    let tuples: Vec<Tuple> = (0..200u64)
+        .map(|i| {
+            let k = rng.gen_range(0, keys as usize) as u64;
+            ord[k as usize] += 1;
+            Tuple::new(i, vec![]).with("K", k as f64).with("ORD", ord[k as usize] as f64)
+        })
+        .collect();
+    let assert_per_key_order = |outs: &[Tuple], surface: &str| {
+        assert_eq!(outs.len(), tuples.len(), "{surface}: relay must drop nothing");
+        let mut last = vec![0u64; keys as usize];
+        for t in outs {
+            let k = t.get("K").unwrap() as usize;
+            let o = t.get("ORD").unwrap() as u64;
+            assert!(
+                o == last[k] + 1,
+                "{surface}: key {k} saw ORD {o} after {} — per-key order broken",
+                last[k]
+            );
+            last[k] = o;
+        }
+    };
+
+    let mut local = TopologyManager::new(StreamEngine::new());
+    let h = local.deploy(&relay("relay-local")).unwrap();
+    Deployer::send_batch(&mut local, &h, tuples.clone()).unwrap();
+    assert_per_key_order(&Deployer::stop(&mut local, &h).unwrap(), "in-process");
+
+    let mut dist = DistributedTopologyManager::new();
+    dist.add_node(NodeId::from_name("pi"), DeviceProfile::raspberry_pi());
+    dist.add_node(NodeId::from_name("cloud"), DeviceProfile::cloud_small());
+    let p = Pipeline::builder("relay-dist")
+        .stage(PipelineStage::new("pre").operator(|| {
+            Box::new(OperatorKind::map("pre", |t| t)) as Box<dyn Operator>
+        }))
+        .stage(PipelineStage::new("relay").parallel(3).keyed("K").operator(|| {
+            Box::new(OperatorKind::map("relay", |t| t)) as Box<dyn Operator>
+        }))
+        .cpu_heavy("relay")
+        .source(NodeId::from_name("pi"))
+        .build()
+        .unwrap();
+    let hd = dist.deploy(&p).unwrap();
+    Deployer::send_batch(&mut dist, &hd, tuples.clone()).unwrap();
+    assert_per_key_order(&Deployer::stop(&mut dist, &hd).unwrap(), "distributed");
+
+    let mut cluster = Cluster::new("pkorder", 2, DeviceKind::Native).unwrap();
+    let ids = cluster.ids();
+    let pc = Pipeline::builder("relay-cluster")
+        .stage(PipelineStage::new("pre").operator(|| {
+            Box::new(OperatorKind::map("pre", |t| t)) as Box<dyn Operator>
+        }))
+        .stage(PipelineStage::new("relay").parallel(3).keyed("K").operator(|| {
+            Box::new(OperatorKind::map("relay", |t| t)) as Box<dyn Operator>
+        }))
+        .cpu_heavy("relay")
+        .source(ids[1])
+        .build()
+        .unwrap();
+    let hc = cluster.deploy(&pc).unwrap();
+    Deployer::send_batch(&mut cluster, &hc, tuples.clone()).unwrap();
+    assert_per_key_order(&Deployer::stop(&mut cluster, &hc).unwrap(), "cluster");
+    cluster.shutdown().unwrap();
+}
+
+// ---- Identical rejection across surfaces ----
+
+#[test]
+fn every_surface_rejects_invalid_pipelines_identically() {
+    let mut cluster = Cluster::new("rejects", 2, DeviceKind::Native).unwrap();
+    let local = TopologyManager::new(StreamEngine::new());
+    let mut dist = DistributedTopologyManager::new();
+    dist.add_node(NodeId::from_name("pi"), DeviceProfile::raspberry_pi());
+
+    // Shapes: unknown stage; unkeyed parallel stateful; stage key ≠
+    // operator state key. Each must produce byte-identical errors on
+    // all three surfaces (none may start anything).
+    let unknown = Pipeline::parse("u", "ghost").unwrap();
+    let unkeyed = Pipeline::builder("s")
+        .stage(PipelineStage::new("kwin").parallel(4).factory(kwin_factory(4)));
+    let mismatch = Pipeline::builder("m")
+        .stage(PipelineStage::new("kwin").parallel(2).keyed("OTHER").factory(kwin_factory(4)));
+
+    // Builder-level shapes fail at build with the same error every
+    // surface would produce; the string-spec shape fails at validate.
+    let unkeyed_err = format!("{}", unkeyed.build().unwrap_err());
+    assert!(unkeyed_err.contains("kwin") && unkeyed_err.contains("partition key"));
+    let mismatch_err = format!("{}", mismatch.build().unwrap_err());
+    assert!(mismatch_err.contains("`OTHER`") && mismatch_err.contains("`K`"));
+
+    let e_local = format!("{}", Deployer::validate(&local, &unknown).unwrap_err());
+    let e_dist = format!("{}", Deployer::validate(&dist, &unknown).unwrap_err());
+    let e_cluster = format!("{}", Deployer::validate(&cluster, &unknown).unwrap_err());
+    assert_eq!(e_local, e_dist);
+    assert_eq!(e_local, e_cluster);
+    assert!(e_local.contains("unknown stage `ghost`"), "{e_local}");
+
+    // Nothing was started anywhere.
+    assert!(local.running().is_empty());
+    assert!(dist.running().is_empty());
+    assert!(cluster.streams().is_empty());
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn string_spec_call_sites_keep_working_through_parse() {
+    // The legacy surfaces' specs flow through the typed definition
+    // without loss — annotations included.
+    for spec in ["a", "score*4@IMG->decide->stats@IMG", "spike-filter*2@SENSOR->window-mean"] {
+        let p = Pipeline::parse("legacy", spec).unwrap();
+        assert_eq!(p.to_spec(), spec, "canonical specs must round-trip byte-identically");
+    }
+    // Whitespace and lowercase keys canonicalise exactly like the
+    // topology parser always did.
+    let p = Pipeline::parse("legacy", " a *2 @k -> b ").unwrap();
+    assert_eq!(p.to_spec(), "a*2@K->b");
+}

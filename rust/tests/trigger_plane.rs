@@ -1,0 +1,184 @@
+//! Trigger-plane properties: data-driven activation loses nothing.
+//! Across randomized publish/idle schedules, activation → feed →
+//! idle-decommission → re-activation must deliver every published
+//! tuple exactly once with per-key order preserved — the broker
+//! cursor holds the backlog across every scale-to-zero gap — and the
+//! activation/teardown counters must balance. Pre-validated by
+//! `python/sims/trigger_sim.py`.
+
+use rpulsar::ar::profile::Profile;
+use rpulsar::mmq::pubsub::{Broker, RetirePolicy};
+use rpulsar::mmq::queue::QueueOptions;
+use rpulsar::pipeline::trigger::{TriggerManager, TriggerOptions};
+use rpulsar::stream::operator::{Operator, OperatorKind};
+use rpulsar::stream::pipeline::{Pipeline, PipelineStage};
+use rpulsar::stream::tuple::Tuple;
+use rpulsar::util::prng::Prng;
+use std::time::Duration;
+
+fn broker(name: &str) -> Broker {
+    let dir = std::env::temp_dir()
+        .join("rpulsar-trigger-plane")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    Broker::new(QueueOptions { dir, segment_bytes: 1 << 18, max_segments: 8, sync_every: 0 })
+}
+
+fn p(s: &str) -> Profile {
+    Profile::parse(s).unwrap()
+}
+
+/// Zero-threshold idle policy: a pump that fetched nothing
+/// decommissions immediately — maximises scale-to-zero churn.
+fn eager() -> TriggerOptions {
+    TriggerOptions {
+        idle: RetirePolicy {
+            max_publish_idle: Duration::ZERO,
+            max_fetch_idle: Duration::ZERO,
+            min_age: Duration::ZERO,
+        },
+        decode_payloads: true,
+    }
+}
+
+/// Keyed parallel relay: drops nothing, so the output multiset must be
+/// the published multiset and per-key ORD sequences must replay.
+fn relay_pipeline(name: &str) -> Pipeline {
+    Pipeline::builder(name)
+        .stage(PipelineStage::new("relay").parallel(3).keyed("K").operator(|| {
+            Box::new(OperatorKind::map("relay", |t| t)) as Box<dyn Operator>
+        }))
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn randomized_schedules_lose_nothing_and_preserve_per_key_order() {
+    // Seeded property over randomized schedules of publish bursts and
+    // idle gaps (every gap decommissions under the eager policy).
+    for seed in 0..24u64 {
+        let mut rng = Prng::seeded(0x7816_0000 + seed);
+        let mut broker = broker(&format!("sched{seed}"));
+        let mut trig = TriggerManager::in_process();
+        trig.bind(&mut broker, relay_pipeline("job"), p("sensor,*"), eager()).unwrap();
+
+        let keys = rng.gen_range(1, 5) as u64;
+        let rounds = rng.gen_range(2, 6);
+        let mut published = 0u64;
+        let mut ord = vec![0u64; keys as usize];
+        let mut outputs: Vec<Tuple> = Vec::new();
+        for _ in 0..rounds {
+            // A burst of matching publishes (possibly across topics —
+            // every `sensor,<k>` topic matches the binding).
+            let burst = rng.gen_range(1, 24);
+            for _ in 0..burst {
+                let k = rng.gen_range(0, keys as usize) as u64;
+                ord[k as usize] += 1;
+                let t = Tuple::new(published, vec![])
+                    .with("K", k as f64)
+                    .with("ORD", ord[k as usize] as f64);
+                broker.publish(&p(&format!("sensor,s{k}")), &t.encode()).unwrap();
+                published += 1;
+            }
+            // Pump while active; the trailing no-data pump
+            // decommissions (scale-to-zero between bursts).
+            trig.pump(&mut broker).unwrap();
+            assert!(trig.is_active("job"), "a burst must activate");
+            trig.pump_until_idle(&mut broker, Duration::from_secs(30)).unwrap();
+            assert!(!trig.is_active("job"), "idle gap must reach zero");
+            outputs.extend(trig.take_outputs("job"));
+        }
+        let stats = trig.stats("job").unwrap();
+        assert_eq!(stats.activations, rounds as u64, "one cold start per burst (seed {seed})");
+        assert_eq!(
+            stats.activations, stats.decommissions,
+            "counters must balance after a full drain (seed {seed})"
+        );
+        assert_eq!(stats.tuples_fed, published, "seed {seed}");
+        assert_eq!(outputs.len() as u64, published, "zero loss across cycles (seed {seed})");
+        // Exactly-once: the seq multiset matches what was published.
+        let mut seqs: Vec<u64> = outputs.iter().map(|t| t.seq).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..published).collect::<Vec<_>>(), "seed {seed}");
+        // Per-key order: each key's ORD sequence replays 1..=n. A
+        // key's tuples all live on one `sensor,s<k>` topic (FIFO) and
+        // the keyed shuffle preserves per-key order inside the
+        // pipeline, so the property must hold end-to-end.
+        let mut last = vec![0u64; keys as usize];
+        for t in &outputs {
+            let k = t.get("K").unwrap() as usize;
+            let o = t.get("ORD").unwrap() as u64;
+            assert!(
+                o == last[k] + 1,
+                "seed {seed}: key {k} saw ORD {o} after {}",
+                last[k]
+            );
+            last[k] = o;
+        }
+    }
+}
+
+#[test]
+fn scale_to_zero_reclaims_the_executor() {
+    // After the idle decommission the deploy surface is actually
+    // empty — zero running topologies, not a parked instance.
+    let mut broker = broker("reclaim");
+    let mut trig = TriggerManager::in_process();
+    trig.bind(&mut broker, relay_pipeline("job"), p("s,*"), eager()).unwrap();
+    broker
+        .publish(&p("s,t"), &Tuple::new(0, vec![]).with("K", 0.0).with("ORD", 1.0).encode())
+        .unwrap();
+    trig.pump(&mut broker).unwrap();
+    assert_eq!(trig.deployer().running(), vec!["job"], "activation deploys for real");
+    trig.pump_until_idle(&mut broker, Duration::from_secs(30)).unwrap();
+    assert!(trig.deployer().running().is_empty(), "decommission must reach zero");
+    assert_eq!(trig.take_outputs("job").len(), 1);
+}
+
+#[test]
+fn patient_policy_keeps_the_activation_warm() {
+    // A non-zero idle watermark: pumps without data do *not*
+    // decommission until the watermark passes.
+    let mut broker = broker("warm");
+    let mut trig = TriggerManager::in_process();
+    let opts = TriggerOptions {
+        idle: RetirePolicy {
+            max_publish_idle: Duration::from_millis(500),
+            max_fetch_idle: Duration::from_millis(500),
+            min_age: Duration::ZERO,
+        },
+        decode_payloads: true,
+    };
+    trig.bind(&mut broker, relay_pipeline("job"), p("s,*"), opts).unwrap();
+    broker
+        .publish(&p("s,t"), &Tuple::new(0, vec![]).with("K", 0.0).encode())
+        .unwrap();
+    trig.pump(&mut broker).unwrap();
+    assert!(trig.is_active("job"));
+    // Well inside the watermark: still warm.
+    trig.pump(&mut broker).unwrap();
+    assert!(trig.is_active("job"), "must not decommission before the idle watermark");
+    // Wait out the watermark: the next pump reclaims.
+    std::thread::sleep(Duration::from_millis(700));
+    trig.pump(&mut broker).unwrap();
+    assert!(!trig.is_active("job"));
+    assert_eq!(trig.stats("job").unwrap().decommissions, 1);
+}
+
+#[test]
+fn decommission_all_forces_zero_now() {
+    let mut broker = broker("force");
+    let mut trig = TriggerManager::in_process();
+    // Patient policy (would stay warm for 10 minutes on its own).
+    trig.bind(&mut broker, relay_pipeline("job"), p("s,*"), TriggerOptions::default())
+        .unwrap();
+    broker
+        .publish(&p("s,t"), &Tuple::new(0, vec![]).with("K", 0.0).encode())
+        .unwrap();
+    trig.pump(&mut broker).unwrap();
+    assert!(trig.is_active("job"));
+    trig.decommission_all().unwrap();
+    assert!(!trig.is_active("job"));
+    assert!(trig.deployer().running().is_empty());
+    assert_eq!(trig.take_outputs("job").len(), 1, "forced drain keeps the outputs");
+}
