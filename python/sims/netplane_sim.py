@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Behavioral simulation of the PR-6 async net plane (rust/src/stream/dist.rs).
+
+The container has no cargo, so — like dist_stream_sim.py did for PR 4 —
+this ports the shipper/staging semantics to Python and fuzzes them under
+randomized interleavings of: producer feeds, shipper passes (deliver /
+encode / collect), arbitrary ingress rejections (backpressure), and the
+halt → restage → front-to-back cascade teardown.
+
+Checked invariants, per randomized case:
+  1. zero loss / zero duplication: output multiset == expected multiset;
+  2. per-key order: outputs of one key appear in their feed order;
+  3. encode-once: every batch is encoded exactly once, regardless of
+     how many times ingress rejected it (WireBatch keeps its bytes);
+  4. encodes == shipped messages at the end of a clean run;
+  5. the staging window bounds staged tuples (backpressure, no runaway).
+"""
+
+import random
+import sys
+from collections import deque
+
+STAGE_WINDOW = 4096
+SHIP_CHUNK = 64
+
+
+class WireBatch:
+    """Encoded batch: counts its encode exactly once at construction."""
+
+    def __init__(self, tuples, counters):
+        self.tuples = list(tuples)
+        counters["encodes"] += 1
+
+
+class Fragment:
+    """Identity fragment: per-key FIFO (models the executor's per-key
+    order guarantee); egress is drained in arrival order."""
+
+    def __init__(self):
+        self.egress = deque()
+
+    def ingest(self, tuples):
+        self.egress.extend(tuples)
+
+    def drain(self, maxn):
+        out = []
+        while self.egress and len(out) < maxn:
+            out.append(self.egress.popleft())
+        return out
+
+
+class Route:
+    def __init__(self, nfrags, counters, rng):
+        self.frags = [Fragment() for _ in range(nfrags)]
+        self.staged = [deque() for _ in range(nfrags - 1)]
+        self.staged_count = 0
+        self.collected = []
+        self.counters = counters
+        self.rng = rng
+
+    def feed(self, batch):
+        self.frags[0].ingest(batch)
+
+    def shipper_pass(self):
+        """One pass over every boundary, mirroring shipper_pass():
+        deliver staged (random rejection re-fronts, no re-encode),
+        then drain upstream egress into fresh encodes bounded by the
+        window, then sweep the last fragment."""
+        for b in range(len(self.frags) - 1):
+            q = self.staged[b]
+            while q:
+                wb = q.popleft()
+                if self.rng.random() < 0.4:  # ingress full: give_back
+                    q.appendleft(wb)
+                    break
+                self.frags[b + 1].ingest(wb.tuples)
+                self.staged_count -= len(wb.tuples)
+                self.counters["messages"] += 1
+            while self.staged_count < STAGE_WINDOW:
+                chunk = self.frags[b].drain(SHIP_CHUNK)
+                if not chunk:
+                    break
+                self.staged[b].append(WireBatch(chunk, self.counters))
+                self.staged_count += len(chunk)
+        self.collected.extend(self.frags[-1].drain(256))
+
+    def stop(self):
+        """halt (staged stays in order) + front-to-back cascade: every
+        boundary is fully drained and delivered before the next closes.
+        Teardown retries rejections until admitted (downstream is
+        draining, so it always eventually admits)."""
+        for b in range(len(self.frags) - 1):
+            while True:
+                chunk = self.frags[b].drain(SHIP_CHUNK)
+                if not chunk:
+                    break
+                self.staged[b].append(WireBatch(chunk, self.counters))
+            for wb in self.staged[b]:
+                self.frags[b + 1].ingest(wb.tuples)
+                self.counters["messages"] += 1
+            self.staged[b].clear()
+        self.collected.extend(self.frags[-1].drain(1 << 30))
+        return self.collected
+
+
+def run_case(seed):
+    rng = random.Random(seed)
+    nfrags = rng.randint(2, 4)
+    nkeys = rng.randint(1, 6)
+    counters = {"encodes": 0, "messages": 0}
+    route = Route(nfrags, counters, rng)
+    n = rng.randint(0, 600)
+    inputs = [(rng.randrange(nkeys), i) for i in range(n)]
+    i = 0
+    while i < len(inputs):
+        step = rng.randrange(3)
+        if step == 0:
+            k = rng.randint(1, 48)
+            route.feed(inputs[i : i + k])
+            i += k
+        else:
+            route.shipper_pass()
+        assert route.staged_count <= STAGE_WINDOW + SHIP_CHUNK, "window blown"
+    for _ in range(rng.randrange(4)):
+        route.shipper_pass()
+    out = route.stop()
+
+    assert sorted(out) == sorted(inputs), f"loss/dup: {len(out)} vs {len(inputs)}"
+    last = {}
+    for k, s in out:
+        assert last.get(k, -1) < s, f"key {k} reordered: {last[k]} then {s}"
+        last[k] = s
+    assert counters["encodes"] == counters["messages"], (
+        f"encode-once broken: {counters}"
+    )
+
+
+def main():
+    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 4000
+    for seed in range(cases):
+        run_case(seed)
+    print(f"netplane sim OK: {cases} randomized cases "
+          "(zero loss, per-key order, encode-once == messages, bounded window)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,9 @@
 //!   mid-stream — throughput before/during/after the scale-up (the
 //!   ≥2× after/before floor is core-count independent), zero tuple
 //!   loss asserted, plus full-pipeline output equivalence of the
-//!   Fig-13 analytics across a mid-stream 1→4 scale-up.
+//!   Fig-13 analytics across a mid-stream 1→4 scale-up — with the
+//!   keyed `stats` stage verified (linked-stages introspection) to
+//!   stay on the router-free direct-exchange fast path.
 //!
 //! All arms assert output equivalence — the ablation cannot drift from
 //! the property-tested semantics (`rust/tests/stream_parallel.rs`).
@@ -211,9 +213,19 @@ fn rescale_arm(smoke: bool) {
         canon(&rescaled),
         "a mid-stream 1→{PARALLELISM} scale-up must not change the analytics outputs"
     );
+    // Router-free fast path: the keyed `stats` stage is fed by direct
+    // replica→replica exchange, and because elastic exchanges re-wire
+    // in place, the link (and the equivalence above) holds across the
+    // live rescale.
+    assert!(
+        rescaled.linked.contains(&"stats".to_string()),
+        "stats must stay on the direct-exchange fast path, got {:?}",
+        rescaled.linked
+    );
     println!(
-        "  analytics equivalence across mid-stream 1→{PARALLELISM} scale-up OK ({} outputs)",
-        rescaled.outputs.len()
+        "  analytics equivalence across mid-stream 1→{PARALLELISM} scale-up OK ({} outputs, direct-exchange stages {:?})",
+        rescaled.outputs.len(),
+        rescaled.linked
     );
 }
 

@@ -3,21 +3,35 @@
 //! the edge and the cloud* (paper's claim: pipelines run "across the
 //! cloud and edge in a uniform manner").
 //!
-//! Two placements of `score*P@IMG->decide->stats@IMG` on a two-node
+//! Three placements of `score*P@IMG->decide->stats@IMG` on a two-node
 //! SimNetwork cluster (Raspberry Pi source + `cloud_small` core):
 //!
 //! - **single-node**: every stage on the Pi node — no cross-node hop,
 //!   zero network bytes.
-//! - **split**: `score`/`decide` stay source-adjacent on the Pi, the
-//!   `stats` aggregation runs on the cloud node; the inter-node hop
-//!   ships `Vec<Tuple>` batches as `NetMessage::StreamBatch` frames,
-//!   each charged to the SimNetwork at the Pi's uplink profile.
+//! - **split-sync**: `score`/`decide` stay source-adjacent on the Pi,
+//!   the `stats` aggregation runs on the cloud node, and the inter-node
+//!   hop is pumped *synchronously* by the feeding thread (the PR-4
+//!   net plane, kept as the ablation baseline).
+//! - **split-async**: the same placement with the background shipper —
+//!   hop encode/ship/deliver overlaps operator compute, and pooled
+//!   `WireBatch` buffers make the codec encode each batch exactly once.
 //!
 //! Reported per placement: wall-clock throughput, network bytes /
-//! messages, and the device-accurate virtual network time the hops
-//! cost. Both placements must reproduce the single-process executor's
-//! output multiset exactly (the zero-loss cross-node drain contract,
-//! property-tested in `rust/tests/cluster.rs`).
+//! messages, the device-accurate virtual network time the hops cost,
+//! and the hop-path codec counters (`net.hop.{encodes,buffer_reuses,
+//! bytes}`). All placements must reproduce the single-process
+//! executor's output multiset exactly (the zero-loss cross-node drain
+//! contract, property-tested in `rust/tests/netplane.rs`), and the
+//! encode-once contract is asserted as `net.hop.encodes ==` shipped
+//! batches in *both* pump modes.
+//!
+//! A second, saturated-link arm runs the chain at parallelism 16 with
+//! 4 KiB wire payloads and near-zero operator work, so the cross-node
+//! hop dominates: here the async shipper must beat the synchronous
+//! pump by ≥1.5× (asserted in full mode; printed in smoke).
+//!
+//! The run also writes `BENCH_netplane.json` at the repo root so later
+//! PRs can track the net-plane perf curve.
 //!
 //! `-- --test` runs a seconds-long smoke with tiny sizes (CI gate).
 
@@ -26,13 +40,15 @@ mod common;
 
 use common::{header, smoke_mode};
 use rpulsar::pipeline::lidar::LidarTrace;
+use rpulsar::stream::dist::netplane_async_default;
 use rpulsar::pipeline::workflow::{
-    analytics_spec, run_distributed_analytics, run_stream_analytics, trace_tuples,
+    analytics_spec, run_distributed_analytics_opts, run_stream_analytics, trace_tuples,
     DistStreamReport,
 };
 use std::time::Duration;
 
 const PARALLELISM: usize = 4;
+const SATURATED_PARALLELISM: usize = 16;
 
 fn main() {
     header(
@@ -51,49 +67,133 @@ fn main() {
     // Ground truth: the plain single-process executor.
     let local = run_stream_analytics(&analytics_spec(PARALLELISM), tuples.clone(), work).unwrap();
 
+    let spec = analytics_spec(PARALLELISM);
     let single =
-        run_distributed_analytics(&analytics_spec(PARALLELISM), tuples.clone(), work, false)
-            .unwrap();
-    let split =
-        run_distributed_analytics(&analytics_spec(PARALLELISM), tuples, work, true).unwrap();
+        run_distributed_analytics_opts(&spec, tuples.clone(), work, false, false).unwrap();
+    let split_sync =
+        run_distributed_analytics_opts(&spec, tuples.clone(), work, true, true).unwrap();
+    let split_async = run_distributed_analytics_opts(&spec, tuples, work, true, false).unwrap();
 
     println!(
-        "\n{:<14} {:>10} {:>12} {:>10} {:>10} {:>12}  placement",
-        "placement", "t/s", "net bytes", "net msgs", "net time", "outputs"
+        "\n{:<14} {:>10} {:>12} {:>10} {:>10} {:>9} {:>8} {:>12}  placement",
+        "placement", "t/s", "net bytes", "net msgs", "net time", "encodes", "reuses", "outputs"
     );
     row("single-node", &single);
-    row("split", &split);
+    row("split-sync", &split_sync);
+    row("split-async", &split_async);
 
-    // Output equivalence: both placements, and vs the local executor.
+    // Output equivalence: every placement and pump mode vs the local
+    // executor (zero-loss, order-per-key, decode≡encode).
     let want = canon_local(&local.outputs);
     assert_eq!(want, canon_local(&single.outputs), "single-node placement must match local");
-    assert_eq!(want, canon_local(&split.outputs), "split placement must match local");
+    assert_eq!(want, canon_local(&split_sync.outputs), "split(sync pump) must match local");
+    assert_eq!(want, canon_local(&split_async.outputs), "split(async shipper) must match local");
 
     // Placement shape and network accounting.
-    assert!(
-        split.placement.contains("cloud:[stats"),
-        "the aggregation stage must land on the cloud node: {}",
-        split.placement
-    );
+    for split in [&split_sync, &split_async] {
+        assert!(
+            split.placement.contains("cloud:[stats"),
+            "the aggregation stage must land on the cloud node: {}",
+            split.placement
+        );
+        assert!(split.net_bytes > 0, "split placement must ship its hop batches");
+        assert!(split.net_messages > 0);
+        assert!(split.net_virtual > Duration::ZERO, "hops must cost virtual network time");
+        // Encode-once contract: the codec touches each shipped batch
+        // exactly once, in both pump modes (no re-encode on
+        // backpressure), and every encoded byte went over the wire.
+        assert_eq!(
+            split.hop_encodes, split.net_messages,
+            "one encode per shipped batch (placement {})",
+            split.placement
+        );
+        assert_eq!(split.hop_bytes, split.net_bytes, "encoded bytes must equal shipped bytes");
+    }
     assert_eq!(single.net_bytes, 0, "single-node placement must ship nothing");
     assert_eq!(single.net_messages, 0);
-    assert!(split.net_bytes > 0, "split placement must ship its hop batches");
-    assert!(split.net_messages > 0);
-    assert!(split.net_virtual > Duration::ZERO, "hops must cost virtual network time");
+    assert_eq!(single.hop_encodes, 0, "no boundary, no codec work");
     println!(
         "\nsplit ships {} bytes in {} batches costing {:.2?} of Pi-uplink time",
-        split.net_bytes, split.net_messages, split.net_virtual
+        split_async.net_bytes, split_async.net_messages, split_async.net_virtual
+    );
+
+    // Saturated-link arm: parallelism 16, 4 KiB payload slices, near-
+    // zero operator work — the hop path dominates, so overlapping it
+    // with the feed (async shipper) vs serializing it on the feeding
+    // thread (sync pump) is the whole difference.
+    let (sat_images, sat_work) = if smoke { (6, 1) } else { (96, 4) };
+    let sat_trace = LidarTrace::generate(7, sat_images, 1.0);
+    let sat_tuples = trace_tuples(&sat_trace, 4096);
+    let sat_spec = analytics_spec(SATURATED_PARALLELISM);
+    let reps = if smoke { 1 } else { 3 };
+    println!(
+        "\nsaturated arm: {} tuples of ≤4KiB, work={sat_work}, parallelism={SATURATED_PARALLELISM}",
+        sat_tuples.len()
+    );
+    let sat_sync = best_of(reps, || {
+        run_distributed_analytics_opts(&sat_spec, sat_tuples.clone(), sat_work, true, true).unwrap()
+    });
+    let sat_async = best_of(reps, || {
+        run_distributed_analytics_opts(&sat_spec, sat_tuples.clone(), sat_work, true, false)
+            .unwrap()
+    });
+    row("sat-sync", &sat_sync);
+    row("sat-async", &sat_async);
+    assert_eq!(
+        canon_local(&sat_sync.outputs),
+        canon_local(&sat_async.outputs),
+        "saturated arm: async shipper must reproduce the sync pump's outputs"
+    );
+    assert_eq!(sat_sync.hop_encodes, sat_sync.net_messages);
+    assert_eq!(sat_async.hop_encodes, sat_async.net_messages);
+    let ratio = sat_async.tuples_per_sec() / sat_sync.tuples_per_sec().max(1e-9);
+    println!("saturated async/sync throughput ratio: {ratio:.2}×");
+    // The floor only means something when the "async" arm actually got
+    // shippers — `RPULSAR_NETPLANE=sync` (the CI sync-mode smoke) turns
+    // every arm into the legacy pump.
+    if !smoke && netplane_async_default() {
+        assert!(
+            ratio >= 1.5,
+            "async shipper must beat the synchronous pump ≥1.5× on a saturated link, got {ratio:.2}×"
+        );
+    }
+
+    write_bench_json(
+        smoke,
+        &[
+            ("single-node", &single),
+            ("split-sync", &split_sync),
+            ("split-async", &split_async),
+            ("sat-sync", &sat_sync),
+            ("sat-async", &sat_async),
+        ],
+        ratio,
     );
     println!("\nfig16 OK");
 }
 
+/// Keep the best-throughput run of `n` (wall-clock benches on shared
+/// CI hosts are noisy; peak is the stable statistic).
+fn best_of(n: usize, run: impl Fn() -> DistStreamReport) -> DistStreamReport {
+    let mut best = run();
+    for _ in 1..n {
+        let r = run();
+        if r.tuples_per_sec() > best.tuples_per_sec() {
+            best = r;
+        }
+    }
+    best
+}
+
 fn row(label: &str, r: &DistStreamReport) {
     println!(
-        "{label:<14} {:>10.0} {:>12} {:>10} {:>9.2?} {:>12}  {}",
+        "{label:<14} {:>10.0} {:>12} {:>10} {:>9.2?} {:>9} {:>8} {:>12}  {}",
         r.tuples_per_sec(),
         r.net_bytes,
         r.net_messages,
         r.net_virtual,
+        r.hop_encodes,
+        r.hop_buffer_reuses,
         r.outputs.len(),
         r.placement
     );
@@ -103,4 +203,36 @@ fn canon_local(outs: &[rpulsar::stream::tuple::Tuple]) -> Vec<String> {
     let mut v: Vec<String> = outs.iter().map(|t| format!("{:?}", t.fields)).collect();
     v.sort();
     v
+}
+
+/// Bench-trajectory record for later PRs: one JSON object per arm plus
+/// the saturated async/sync ratio, written at the repo root.
+fn write_bench_json(smoke: bool, arms: &[(&str, &DistStreamReport)], ratio: f64) {
+    let rows: Vec<String> = arms
+        .iter()
+        .map(|(name, r)| {
+            format!(
+                "    {{\"arm\": \"{name}\", \"tuples_per_sec\": {:.1}, \"net_bytes\": {}, \
+                 \"net_messages\": {}, \"hop_encodes\": {}, \"hop_buffer_reuses\": {}, \
+                 \"hop_bytes\": {}, \"outputs\": {}}}",
+                r.tuples_per_sec(),
+                r.net_bytes,
+                r.net_messages,
+                r.hop_encodes,
+                r.hop_buffer_reuses,
+                r.hop_bytes,
+                r.outputs.len()
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"fig16_netplane\",\n  \"smoke\": {smoke},\n  \"arms\": [\n{}\n  ],\n  \
+         \"saturated_async_over_sync\": {ratio:.3}\n}}\n",
+        rows.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_netplane.json");
+    match std::fs::write(path, json) {
+        Ok(()) => println!("bench trajectory written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

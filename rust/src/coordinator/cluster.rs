@@ -15,6 +15,7 @@ use crate::ar::rendezvous::Reaction;
 use crate::config::DeviceKind;
 use crate::device::profile::DeviceProfile;
 use crate::error::{Error, Result};
+use crate::metrics::Registry;
 use crate::net::sim::SimNetwork;
 use crate::overlay::geo::GeoPoint;
 use crate::overlay::node_id::NodeId;
@@ -42,6 +43,10 @@ pub struct Cluster {
     /// Distributed stream topologies deployed across the nodes:
     /// key → route of per-node fragments (see `stream::dist`).
     streams: BTreeMap<String, RouteState>,
+    /// Cluster-level stream metrics (`net.hop.*` wire-path counters).
+    metrics: Registry,
+    /// Whether newly deployed streams get a background shipper.
+    async_net: bool,
 }
 
 /// The cluster hosts topology fragments on its nodes' own managers and
@@ -57,6 +62,10 @@ impl FragmentHost for Cluster {
 
     fn network(&self) -> &SimNetwork {
         &self.network
+    }
+
+    fn metrics(&self) -> &Registry {
+        &self.metrics
     }
 }
 
@@ -108,6 +117,8 @@ impl Cluster {
             device,
             base_dir,
             streams: BTreeMap::new(),
+            metrics: Registry::new(),
+            async_net: dist::netplane_async_default(),
         })
     }
 
@@ -137,6 +148,20 @@ impl Cluster {
     /// The simulated network (virtual clock, counters).
     pub fn network(&self) -> &SimNetwork {
         &self.network
+    }
+
+    /// Cluster-level stream metrics: the `net.hop.*` wire-path
+    /// counters of every deployed stream.
+    pub fn stream_metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Choose the net-plane mode for *subsequently deployed* streams:
+    /// `true` (the default, unless `RPULSAR_NETPLANE=sync`) gives every
+    /// multi-fragment route a background shipper; `false` keeps hops on
+    /// the legacy synchronous pump. Deployed streams are unaffected.
+    pub fn set_async_shippers(&mut self, on: bool) {
+        self.async_net = on;
     }
 
     /// The shared quadtree view.
@@ -317,7 +342,10 @@ impl Cluster {
             return Err(Error::Stream(format!("stream topology `{key}` already deployed")));
         }
         let topo = Topology::parse(key, spec)?;
-        let route = dist::start_fragments(self, key, &topo, plan)?;
+        let mut route = dist::start_fragments(self, key, &topo, plan)?;
+        if self.async_net {
+            dist::start_shipper(&*self, &mut route)?;
+        }
         self.streams.insert(key.to_string(), route);
         Ok(())
     }
@@ -328,8 +356,17 @@ impl Cluster {
         self.stream_send_batch(key, vec![tuple])
     }
 
-    /// Feed a batch, pumping inter-node hops as it goes.
+    /// Feed a batch. Async streams hand hop movement to their
+    /// background shipper; sync streams pump inter-node hops inline.
     pub fn stream_send_batch(&mut self, key: &str, batch: Vec<Tuple>) -> Result<()> {
+        {
+            let this = &*self;
+            if let Some(route) = this.streams.get(key) {
+                if route.has_shipper() {
+                    return dist::feed_route_async(this, route, batch);
+                }
+            }
+        }
         let mut route = self.take_stream(key)?;
         let r = dist::feed_route(&*self, &mut route, batch);
         self.streams.insert(key.to_string(), route);
@@ -352,6 +389,15 @@ impl Cluster {
     /// still return them.
     fn pump_stream_collect(&mut self, key: &str, max: usize) -> Result<Vec<Tuple>> {
         self.tick();
+        {
+            let route = self
+                .streams
+                .get(key)
+                .ok_or_else(|| Error::NotRunning(format!("stream topology `{key}`")))?;
+            if route.has_shipper() {
+                return dist::poll_route_async(route, max);
+            }
+        }
         let mut route = self.take_stream(key)?;
         let r = dist::pump_route(&*self, &mut route);
         let out = if r.is_ok() { route.take_up_to(max) } else { Vec::new() };
@@ -404,12 +450,14 @@ impl Cluster {
         retired
     }
 
-    /// Tear a deployed stream down: cascade-drain every fragment
-    /// front-to-back (zero loss across node boundaries) and return the
-    /// complete remaining output.
+    /// Tear a deployed stream down: halt its shipper (if any), then
+    /// cascade-drain every fragment front-to-back (zero loss across
+    /// node boundaries) and return the complete remaining output. A
+    /// fault the shipper recorded wins.
     pub fn stream_stop(&mut self, key: &str) -> Result<Vec<Tuple>> {
-        let route = self.take_stream(key)?;
-        dist::stop_route(self, route)
+        let mut route = self.take_stream(key)?;
+        let fault = dist::halt_shipper(&mut route);
+        dist::stop_route_seeded(self, route, fault)
     }
 
     /// Keys of deployed distributed streams.

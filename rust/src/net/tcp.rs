@@ -18,12 +18,18 @@ const MAX_FRAME: usize = 64 << 20;
 
 /// Write one frame to a stream.
 pub fn write_frame(stream: &mut TcpStream, msg: &NetMessage) -> Result<()> {
-    let body = msg.encode();
+    write_frame_bytes(stream, &msg.encode())
+}
+
+/// Write an already-encoded frame body to a stream. The zero-copy hop
+/// path encodes batches once into a pooled buffer and ships the bytes
+/// directly; this is the transport half of that contract.
+pub fn write_frame_bytes(stream: &mut TcpStream, body: &[u8]) -> Result<()> {
     if body.len() > MAX_FRAME {
         return Err(Error::Net(format!("frame of {} bytes too large", body.len())));
     }
     stream.write_all(&(body.len() as u32).to_le_bytes())?;
-    stream.write_all(&body)?;
+    stream.write_all(body)?;
     Ok(())
 }
 

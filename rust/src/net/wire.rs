@@ -7,6 +7,11 @@ use crate::error::{Error, Result};
 use crate::overlay::node_id::{NodeId, ID_BYTES};
 use crate::stream::tuple::Tuple;
 use crate::util::codec::{ByteReader, ByteWriter};
+use std::sync::Mutex;
+
+/// Wire tag of a [`NetMessage::StreamBatch`] frame (the zero-copy
+/// encoder writes frames without constructing the enum).
+const STREAM_BATCH_TAG: u8 = 6;
 
 /// Overlay/application messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -63,6 +68,13 @@ impl NetMessage {
 
     /// Encode to a frame body.
     pub fn encode(&self) -> Vec<u8> {
+        if let NetMessage::StreamBatch { from, topology, stage, tuples } = self {
+            // Delegate to the zero-copy encoder so the two paths are
+            // byte-identical by construction.
+            let mut w = ByteWriter::new();
+            encode_stream_batch_into(&mut w, *from, topology, stage, tuples);
+            return w.into_bytes();
+        }
         let mut w = ByteWriter::new();
         w.put_u8(self.tag());
         w.put_raw(&self.from().0);
@@ -73,14 +85,6 @@ impl NetMessage {
             NetMessage::Push { topic, payload, .. } => {
                 w.put_str(topic);
                 w.put_bytes(payload);
-            }
-            NetMessage::StreamBatch { topology, stage, tuples, .. } => {
-                w.put_str(topology);
-                w.put_str(stage);
-                w.put_varint(tuples.len() as u64);
-                for t in tuples {
-                    t.encode_into(&mut w);
-                }
             }
             NetMessage::StreamEos { topology, stage, .. } => {
                 w.put_str(topology);
@@ -133,6 +137,159 @@ impl NetMessage {
     /// Approximate on-wire size (latency accounting).
     pub fn wire_size(&self) -> usize {
         self.encode().len() + 4 // + frame length prefix
+    }
+}
+
+/// Encode a `StreamBatch` frame body directly into `w`, without ever
+/// constructing a [`NetMessage`]. This is the hot-path encoder for
+/// cross-node hops: operator egress goes straight into a (pooled) wire
+/// buffer. Byte-identical to `NetMessage::StreamBatch { .. }.encode()`
+/// — that path delegates here.
+pub fn encode_stream_batch_into(
+    w: &mut ByteWriter,
+    from: NodeId,
+    topology: &str,
+    stage: &str,
+    tuples: &[Tuple],
+) {
+    w.put_u8(STREAM_BATCH_TAG);
+    w.put_raw(&from.0);
+    w.put_str(topology);
+    w.put_str(stage);
+    w.put_varint(tuples.len() as u64);
+    for t in tuples {
+        t.encode_into(w);
+    }
+}
+
+/// Decode just the tuples of a `StreamBatch` frame body, skipping the
+/// `String` allocations for topology/stage that `NetMessage::decode`
+/// performs (the receiving route already knows both).
+pub fn decode_stream_batch(bytes: &[u8]) -> Result<Vec<Tuple>> {
+    let mut r = ByteReader::new(bytes);
+    let tag = r.get_u8()?;
+    if tag != STREAM_BATCH_TAG {
+        return Err(Error::Parse(format!("expected stream batch frame, got tag {tag}")));
+    }
+    r.get_raw(ID_BYTES)?; // sender id — route context supplies it
+    r.get_str()?; // topology
+    r.get_str()?; // stage
+    let n = r.get_varint()?;
+    let mut tuples = Vec::with_capacity(n.min(4096) as usize);
+    for _ in 0..n {
+        tuples.push(Tuple::decode_from(&mut r)?);
+    }
+    Ok(tuples)
+}
+
+/// An encoded `StreamBatch` frame that optionally still owns its
+/// decoded tuples. The cross-node data path stages these: a batch is
+/// encoded exactly once at egress, shipped as raw bytes, and — when the
+/// decoded form is kept — handed to the downstream ingress without a
+/// decode round-trip. A backpressure rejection gives the tuples back
+/// (see [`WireBatch::give_back`]) so neither the bytes nor the decoded
+/// form are ever re-materialized.
+#[derive(Debug)]
+pub struct WireBatch {
+    bytes: Vec<u8>,
+    count: usize,
+    decoded: Option<Vec<Tuple>>,
+}
+
+impl WireBatch {
+    /// Encode `tuples` into `buf` (recycled: contents cleared, capacity
+    /// kept) and keep the decoded form alongside the bytes.
+    pub fn encode_with(
+        buf: Vec<u8>,
+        from: NodeId,
+        topology: &str,
+        stage: &str,
+        tuples: Vec<Tuple>,
+    ) -> WireBatch {
+        let mut w = ByteWriter::from_vec(buf);
+        encode_stream_batch_into(&mut w, from, topology, stage, &tuples);
+        WireBatch { bytes: w.into_bytes(), count: tuples.len(), decoded: Some(tuples) }
+    }
+
+    /// Drop the decoded form, forcing the first [`WireBatch::take_tuples`]
+    /// to decode from the wire bytes. The legacy synchronous pump uses
+    /// this to keep PR-4 fidelity: the receiving side pays the decode,
+    /// exactly as if the bytes had crossed a real link.
+    pub fn forget_decoded(&mut self) {
+        self.decoded = None;
+    }
+
+    /// Number of tuples in the frame.
+    pub fn tuple_count(&self) -> usize {
+        self.count
+    }
+
+    /// The encoded frame body.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// On-wire size (frame body + length prefix), matching
+    /// [`NetMessage::wire_size`] accounting.
+    pub fn wire_size(&self) -> usize {
+        self.bytes.len() + 4
+    }
+
+    /// Take the tuples: the cached decoded form when present, otherwise
+    /// one decode from the wire bytes.
+    pub fn take_tuples(&mut self) -> Result<Vec<Tuple>> {
+        match self.decoded.take() {
+            Some(tuples) => Ok(tuples),
+            None => decode_stream_batch(&self.bytes),
+        }
+    }
+
+    /// Return tuples after an ingress rejection: the batch keeps both
+    /// its encoded bytes and the decoded form, so a retry re-encodes
+    /// and re-decodes nothing.
+    pub fn give_back(&mut self, tuples: Vec<Tuple>) {
+        self.decoded = Some(tuples);
+    }
+
+    /// Consume the batch, recovering the byte buffer for pooling.
+    pub fn into_buffer(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+/// Upper bound on buffers a [`BufferPool`] retains; beyond this,
+/// returned buffers are simply dropped.
+const POOL_CAP: usize = 64;
+
+/// A small free-list of wire buffers. `get` hands out a recycled
+/// buffer when one is available (capacity intact, so the encode does
+/// not re-allocate); `put` returns a buffer after its frame is shipped
+/// and admitted downstream.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Mutex<Vec<Vec<u8>>>,
+}
+
+impl BufferPool {
+    /// New empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a buffer; `true` when it was recycled from the pool.
+    pub fn get(&self) -> (Vec<u8>, bool) {
+        match self.free.lock().unwrap().pop() {
+            Some(buf) => (buf, true),
+            None => (Vec::new(), false),
+        }
+    }
+
+    /// Return a buffer for reuse.
+    pub fn put(&self, buf: Vec<u8>) {
+        let mut free = self.free.lock().unwrap();
+        if free.len() < POOL_CAP {
+            free.push(buf);
+        }
     }
 }
 
@@ -205,6 +362,64 @@ mod tests {
             stage: "stats".into(),
         };
         assert_eq!(NetMessage::decode(&eos.encode()).unwrap(), eos);
+    }
+
+    #[test]
+    fn zero_copy_encode_is_byte_identical() {
+        let tuples = vec![
+            Tuple::new(0, vec![1, 2, 3]).with("IMG", 4.0).with("V", -1.5),
+            Tuple::new(1, vec![0xCD; 64]).with("IMG", 2.0),
+            Tuple::new(2, vec![]),
+        ];
+        let via_enum = NetMessage::StreamBatch {
+            from: id(9),
+            topology: "analytics".into(),
+            stage: "stats".into(),
+            tuples: tuples.clone(),
+        }
+        .encode();
+        let batch = WireBatch::encode_with(Vec::new(), id(9), "analytics", "stats", tuples.clone());
+        assert_eq!(batch.bytes(), &via_enum[..], "WireBatch frame must match NetMessage::encode");
+        assert_eq!(batch.wire_size(), via_enum.len() + 4);
+        assert_eq!(batch.tuple_count(), 3);
+        assert_eq!(decode_stream_batch(batch.bytes()).unwrap(), tuples);
+    }
+
+    #[test]
+    fn wire_batch_caches_decoded_form() {
+        let tuples =
+            vec![Tuple::new(4, vec![7; 16]).with("K", 1.0), Tuple::new(5, vec![]).with("K", 2.0)];
+        let mut batch = WireBatch::encode_with(Vec::new(), id(3), "t", "s", tuples.clone());
+        // Cached path: no decode happened, same tuples come back.
+        let got = batch.take_tuples().unwrap();
+        assert_eq!(got, tuples);
+        // Give-back after a rejection restores the cache.
+        batch.give_back(got);
+        assert_eq!(batch.take_tuples().unwrap(), tuples);
+        // Forgetting the decoded form forces a decode from wire bytes.
+        batch.give_back(tuples.clone());
+        batch.forget_decoded();
+        assert_eq!(batch.take_tuples().unwrap(), tuples);
+    }
+
+    #[test]
+    fn decode_stream_batch_rejects_other_frames() {
+        let ping = NetMessage::Ping { from: id(1) }.encode();
+        assert!(decode_stream_batch(&ping).is_err());
+        assert!(decode_stream_batch(&[]).is_err());
+    }
+
+    #[test]
+    fn buffer_pool_recycles() {
+        let pool = BufferPool::new();
+        let (buf, reused) = pool.get();
+        assert!(!reused, "empty pool cannot recycle");
+        let batch = WireBatch::encode_with(buf, id(2), "t", "s", vec![Tuple::new(0, vec![1; 256])]);
+        let cap = batch.bytes().len();
+        pool.put(batch.into_buffer());
+        let (buf, reused) = pool.get();
+        assert!(reused, "returned buffer must be handed back out");
+        assert!(buf.capacity() >= cap, "recycled buffer keeps its allocation");
     }
 
     #[test]

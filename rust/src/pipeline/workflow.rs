@@ -392,6 +392,9 @@ pub struct StreamReport {
     pub tuples: usize,
     pub outputs: Vec<Tuple>,
     pub elapsed: Duration,
+    /// Stages wired replica→replica (direct exchange, router-free) —
+    /// the executor's own introspection, captured at deploy time.
+    pub linked: Vec<String>,
 }
 
 impl StreamReport {
@@ -410,6 +413,7 @@ pub fn run_stream_analytics(spec: &str, tuples: Vec<Tuple>, work: u32) -> Result
     let mut manager = TopologyManager::new(StreamEngine::new());
     register_analytics_stages(&mut manager, work);
     manager.start("analytics", spec)?;
+    let linked = manager.linked_stages("analytics")?;
     let count = tuples.len();
     let sender = manager.sender("analytics")?;
     let started = std::time::Instant::now();
@@ -432,6 +436,7 @@ pub fn run_stream_analytics(spec: &str, tuples: Vec<Tuple>, work: u32) -> Result
         tuples: count,
         outputs,
         elapsed: started.elapsed(),
+        linked,
     })
 }
 
@@ -455,6 +460,7 @@ pub fn run_rescaling_analytics(
     let mut manager = TopologyManager::new(StreamEngine::new());
     register_analytics_stages(&mut manager, work);
     manager.start("analytics", spec)?;
+    let linked = manager.linked_stages("analytics")?;
     let count = tuples.len();
     let sender = manager.sender("analytics")?;
     let rescaler = manager.rescaler("analytics")?;
@@ -491,6 +497,7 @@ pub fn run_rescaling_analytics(
             tuples: count,
             outputs,
             elapsed: started.elapsed(),
+            linked,
         },
         report,
     ))
@@ -514,6 +521,14 @@ pub struct DistStreamReport {
     pub net_messages: u64,
     /// Device-accurate virtual network time those hops cost.
     pub net_virtual: Duration,
+    /// Codec encodes on the hop path (`net.hop.encodes`): the
+    /// encode-once contract means this equals `net_messages`.
+    pub hop_encodes: u64,
+    /// Wire buffers served from the pool instead of allocated
+    /// (`net.hop.buffer_reuses`).
+    pub hop_buffer_reuses: u64,
+    /// Bytes encoded onto the hop path (`net.hop.bytes`).
+    pub hop_bytes: u64,
 }
 
 impl DistStreamReport {
@@ -539,7 +554,25 @@ pub fn run_distributed_analytics(
     work: u32,
     split: bool,
 ) -> Result<DistStreamReport> {
+    run_distributed_analytics_opts(spec, tuples, work, split, false)
+}
+
+/// [`run_distributed_analytics`] with the net-plane mode explicit:
+/// `sync_pump` forces the legacy synchronous pump (hops moved inline on
+/// the producer thread) — the fig16 ablation axis. `false` keeps the
+/// process default: background shippers, unless `RPULSAR_NETPLANE=sync`
+/// turned them off globally.
+pub fn run_distributed_analytics_opts(
+    spec: &str,
+    tuples: Vec<Tuple>,
+    work: u32,
+    split: bool,
+    sync_pump: bool,
+) -> Result<DistStreamReport> {
     let mut dist = DistributedTopologyManager::new();
+    if sync_pump {
+        dist.set_async_shippers(false);
+    }
     let pi = NodeId::from_name("edge-pi");
     let cloud = NodeId::from_name("cloud-core");
     dist.add_node(pi, DeviceProfile::raspberry_pi());
@@ -578,6 +611,9 @@ pub fn run_distributed_analytics(
         net_bytes: dist.network().bytes(),
         net_messages: dist.network().messages(),
         net_virtual: dist.network().virtual_elapsed(),
+        hop_encodes: dist.metrics().counter("net.hop.encodes").get(),
+        hop_buffer_reuses: dist.metrics().counter("net.hop.buffer_reuses").get(),
+        hop_bytes: dist.metrics().counter("net.hop.bytes").get(),
     })
 }
 

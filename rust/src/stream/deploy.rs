@@ -244,6 +244,21 @@ impl TopologyManager {
         Ok(self.handle(key)?.try_drain(max))
     }
 
+    /// A cloneable, non-blocking egress tap on a running topology — the
+    /// endpoint a background shipper thread polls without holding a
+    /// borrow on this manager. See
+    /// [`super::engine::EngineHandle::egress_tap`].
+    pub fn egress_tap(&self, key: &str) -> Result<super::engine::EgressTap> {
+        Ok(self.handle(key)?.egress_tap())
+    }
+
+    /// Stages of a running topology fed by direct replica→replica
+    /// exchange (no router hop). See
+    /// [`super::engine::EngineHandle::linked_stages`].
+    pub fn linked_stages(&self, key: &str) -> Result<Vec<String>> {
+        Ok(self.handle(key)?.linked_stages().to_vec())
+    }
+
     /// Live-rescale a stage of a running topology to `parallelism`
     /// replicas: zero tuple loss or duplication, per-key order
     /// preserved across the state handoff.

@@ -4,16 +4,27 @@
 //!
 //! A topology's stage chain is split into contiguous *fragments*, each
 //! deployed on one cluster node's own [`TopologyManager`]. Inter-node
-//! stage hops ship `Vec<Tuple>` batches as
-//! [`NetMessage::StreamBatch`] frames: the upstream fragment's egress
-//! ([`super::engine::EngineHandle::try_drain`]) is polled, the batch is
-//! encoded with the `util::codec` tuple codec, the hop is charged to
-//! the [`SimNetwork`] at the sending node's device profile, and the
-//! decoded batch is offered to the downstream fragment's ingress
-//! ([`super::engine::EngineHandle::try_send_batch`]) — non-blocking on
-//! both sides, with a bounded staging window in between, so
-//! backpressure propagates across nodes without ever deadlocking the
-//! shipper.
+//! stage hops ship tuple batches as [`NetMessage::StreamBatch`] frames.
+//!
+//! **Wire path.** Operator egress is encoded *once* per shipped batch
+//! straight into a pooled byte buffer ([`WireBatch`] over
+//! [`BufferPool`]): the hop is charged to the [`SimNetwork`] at the
+//! frame's wire size, the encoded bytes travel as-is, and a batch that
+//! a saturated downstream fragment rejects keeps its bytes — the
+//! re-offer never pays a second encode. Per-route hop traffic is
+//! accounted in the host's metrics registry as `net.hop.encodes`,
+//! `net.hop.buffer_reuses` and `net.hop.bytes`.
+//!
+//! **Shipper.** By default every multi-fragment route gets a dedicated
+//! background shipper thread that overlaps the hop work (drain egress →
+//! encode → charge → admit downstream) with operator compute, so the
+//! cross-node data path is core-bound rather than feeder-bound. The
+//! producer only blocks when the bounded staging window overflows —
+//! cross-node backpressure — and a shipper fault (including a panic) is
+//! recorded first-fault-wins and surfaced on the next `send`/`pump`/
+//! `poll`/`stop`. `RPULSAR_NETPLANE=sync` selects the legacy
+//! synchronous pump, where [`feed_route`] moves hops forward inline on
+//! the producer thread.
 //!
 //! **Placement.** [`plan_placement`] assigns stages to nodes by
 //! [`DeviceProfile`]: source-adjacent stages stay on the source (edge)
@@ -24,9 +35,11 @@
 //! ever flow downstream.
 //!
 //! **Ordering & drain.** A hop is a single FIFO route (poll → ship →
-//! staged queue → admission), so per-key order is preserved across
-//! every hop; fragment-internal guarantees are the executor's own.
-//! Teardown cascades front-to-back: fragment *i* is only stopped after
+//! staged queue → admission) pumped by a single thread at a time, so
+//! per-key order is preserved across every hop; fragment-internal
+//! guarantees are the executor's own. Teardown first halts the shipper
+//! (its in-flight batches are handed back to the route, order intact),
+//! then cascades front-to-back: fragment *i* is only stopped after
 //! everything upstream has been stopped and fully forwarded, and its
 //! trailing output (window remainders) is shipped downstream before
 //! fragment *i+1* closes — zero-loss `finish` holds across node
@@ -34,23 +47,27 @@
 //! [`NetMessage::StreamEos`] marker ([`tcp_ingress`]).
 //!
 //! Single-fragment plans short-circuit to plain local execution with
-//! byte-identical semantics (no hop, no serialization, zero network
-//! charge). See `docs/distributed-stream.md`.
+//! byte-identical semantics (no hop, no serialization, no shipper,
+//! zero network charge). See `docs/distributed-stream.md`.
 
 use super::deploy::TopologyManager;
-use super::engine::{RescaleReport, StageFactory, StreamEngine};
+use super::engine::{EgressTap, RescaleReport, StageFactory, StreamEngine, StreamSender};
 use super::operator::Operator;
 use super::topology::{StageSpec, Topology};
 use super::tuple::Tuple;
 use crate::device::profile::DeviceProfile;
 use crate::error::{Error, Result};
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Registry};
 use crate::net::sim::SimNetwork;
 use crate::net::tcp::TcpEndpoint;
-use crate::net::wire::NetMessage;
+use crate::net::wire::{encode_stream_batch_into, BufferPool, NetMessage, WireBatch};
 use crate::overlay::node_id::NodeId;
+use crate::util::codec::ByteWriter;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::Arc;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Max tuples per shipped `StreamBatch` frame.
@@ -59,14 +76,23 @@ pub const SHIP_CHUNK: usize = 64;
 /// Max tuples drained from a fragment egress per pump pass.
 const PUMP_POLL: usize = 256;
 
-/// Staged-tuple bound per route: once this many decoded tuples are
-/// waiting for downstream admission, `send` blocks the producer — the
-/// cross-node backpressure window.
+/// Staged-tuple bound per route: once this many tuples sit encoded
+/// between fragments waiting for downstream admission, `send` blocks
+/// the producer — the cross-node backpressure window.
 const STAGE_WINDOW: usize = 4096;
 
 /// Pause between no-progress delivery passes (a downstream fragment is
 /// momentarily full; its workers need the core).
 const RETRY_PAUSE: Duration = Duration::from_micros(200);
+
+/// Env var selecting the net-plane mode for newly created managers:
+/// `sync` forces the legacy synchronous pump, anything else (or unset)
+/// keeps the default background shippers.
+pub const NETPLANE_ENV: &str = "RPULSAR_NETPLANE";
+
+/// Test hook: when set to a route key, that route's shipper thread
+/// panics on startup (failure-injection for first-fault-wins teardown).
+const SHIPPER_PANIC_ENV: &str = "RPULSAR_TEST_SHIPPER_PANIC";
 
 /// One contiguous run of stages assigned to a node.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -172,9 +198,10 @@ pub fn plan_placement(
     }
 }
 
-/// Resolves fragment-hosting managers and the network hops are charged
-/// to — implemented by [`DistributedTopologyManager`] (standalone
-/// composition) and by the coordinator's `Cluster` (real nodes).
+/// Resolves fragment-hosting managers, the network hops are charged to,
+/// and the metrics registry hop traffic is accounted in — implemented
+/// by [`DistributedTopologyManager`] (standalone composition) and by
+/// the coordinator's `Cluster` (real nodes).
 pub trait FragmentHost {
     /// The per-node topology manager hosting fragments on `node`.
     fn manager(&self, node: &NodeId) -> Option<&TopologyManager>;
@@ -182,6 +209,8 @@ pub trait FragmentHost {
     fn manager_mut(&mut self, node: &NodeId) -> Option<&mut TopologyManager>;
     /// The network inter-fragment batches ship over.
     fn network(&self) -> &SimNetwork;
+    /// The registry `net.hop.*` counters live in.
+    fn metrics(&self) -> &Registry;
 }
 
 fn manager_of<'a, H: FragmentHost + ?Sized>(
@@ -192,28 +221,75 @@ fn manager_of<'a, H: FragmentHost + ?Sized>(
         .ok_or_else(|| Error::Net(format!("no stream manager for node {node}")))
 }
 
-/// One deployed fragment of a running distributed topology.
+/// [`Error`] is not `Clone` (the `Io` variant); a route fault is
+/// recorded once and surfaced to every later caller, so re-materialize
+/// the message under the same variant.
+fn clone_err(e: &Error) -> Error {
+    match e {
+        Error::Io(io) => Error::Net(format!("io: {io}")),
+        Error::Parse(s) => Error::Parse(s.clone()),
+        Error::Profile(s) => Error::Profile(s.clone()),
+        Error::Overlay(s) => Error::Overlay(s.clone()),
+        Error::Queue(s) => Error::Queue(s.clone()),
+        Error::Storage(s) => Error::Storage(s.clone()),
+        Error::Stream(s) => Error::Stream(s.clone()),
+        Error::Rule(s) => Error::Rule(s.clone()),
+        Error::Runtime(s) => Error::Runtime(s.clone()),
+        Error::Net(s) => Error::Net(s.clone()),
+        Error::Config(s) => Error::Config(s.clone()),
+        Error::NotFound(s) => Error::NotFound(s.clone()),
+        Error::NotRunning(s) => Error::NotRunning(s.clone()),
+        Error::Timeout(s) => Error::Timeout(s.clone()),
+    }
+}
+
+/// The `net.hop.*` counters of one host registry, shared by every
+/// route (and its shipper thread) started on that host.
+#[derive(Clone)]
+struct HopCounters {
+    encodes: Arc<Counter>,
+    reuses: Arc<Counter>,
+    bytes: Arc<Counter>,
+}
+
+impl HopCounters {
+    fn new(metrics: &Registry) -> Self {
+        HopCounters {
+            encodes: metrics.counter("net.hop.encodes"),
+            reuses: metrics.counter("net.hop.buffer_reuses"),
+            bytes: metrics.counter("net.hop.bytes"),
+        }
+    }
+}
+
+/// One deployed fragment of a running distributed topology. The keys
+/// are shared `Arc<str>`s — hops are labeled on every shipped chunk,
+/// and the hot path must not re-allocate route strings per batch.
 #[derive(Debug, Clone)]
 pub struct RouteHop {
     /// The hosting node.
     pub node: NodeId,
     /// The fragment's key on that node's manager (`<key>#f<i>`).
-    pub frag_key: String,
+    pub frag_key: Arc<str>,
     /// First stage name — labels the hop's `StreamBatch` frames.
-    pub stage: String,
+    pub stage: Arc<str>,
     /// All stage names in the fragment (rescale routing).
     pub stages: Vec<String>,
 }
 
 /// Live state of one distributed topology: its fragments in chain
-/// order, the per-hop staging queues (tuples decoded off the wire,
-/// waiting for downstream admission), and the outputs drained from the
-/// final fragment.
+/// order, the per-hop staging queues (encoded wire batches waiting for
+/// downstream admission), the outputs drained from the final fragment,
+/// the route's buffer pool, and — in async mode — its background
+/// shipper.
 pub struct RouteState {
-    key: String,
+    key: Arc<str>,
     hops: Vec<RouteHop>,
-    staged: Vec<VecDeque<Tuple>>,
+    staged: Vec<VecDeque<WireBatch>>,
     collected: Vec<Tuple>,
+    pool: Arc<BufferPool>,
+    counters: HopCounters,
+    shipper: Option<Shipper>,
 }
 
 impl RouteState {
@@ -222,9 +298,22 @@ impl RouteState {
         &self.hops
     }
 
-    /// Total tuples staged between fragments (backpressure window).
+    /// Total tuples staged between fragments (backpressure window),
+    /// including batches held by the background shipper.
     pub fn staged_tuples(&self) -> usize {
-        self.staged.iter().map(VecDeque::len).sum()
+        let local: usize =
+            self.staged.iter().map(|q| q.iter().map(WireBatch::tuple_count).sum::<usize>()).sum();
+        let remote = self
+            .shipper
+            .as_ref()
+            .map(|s| s.shared.staged_count.load(Ordering::Acquire))
+            .unwrap_or(0);
+        local + remote
+    }
+
+    /// Whether a background shipper is pumping this route.
+    pub fn has_shipper(&self) -> bool {
+        self.shipper.is_some()
     }
 
     /// Take everything collected from the final fragment so far.
@@ -271,64 +360,100 @@ pub fn start_fragments<H: FragmentHost + ?Sized>(
         }
         hops.push(RouteHop {
             node: frag.node,
-            frag_key,
-            stage: frag.stages[0].name.clone(),
+            frag_key: Arc::from(frag_key),
+            stage: Arc::from(frag.stages[0].name.as_str()),
             stages: frag.stages.iter().map(|s| s.name.clone()).collect(),
         });
     }
     let staged = (0..hops.len()).map(|_| VecDeque::new()).collect();
-    Ok(RouteState { key: key.to_string(), hops, staged, collected: Vec::new() })
+    Ok(RouteState {
+        key: Arc::from(key),
+        hops,
+        staged,
+        collected: Vec::new(),
+        pool: Arc::new(BufferPool::new()),
+        counters: HopCounters::new(host.metrics()),
+        shipper: None,
+    })
 }
 
-/// Ship one batch across a node boundary: encode as a
-/// [`NetMessage::StreamBatch`], charge the hop to the network at the
-/// frame's wire size, and hand back the *decoded* tuples — the real
-/// codec runs on the data path, so what arrives is what the wire
-/// carries. Errors when either side is partitioned or unregistered.
-pub fn ship_batch(
-    net: &SimNetwork,
+fn unreachable_err(from: NodeId, to: NodeId) -> Error {
+    Error::Net(format!("stream hop {from} → {to} unreachable (node down or unregistered)"))
+}
+
+/// Encode one chunk into a pooled buffer and account it. This is the
+/// single encode a shipped batch ever pays: the sync pump forgets the
+/// decoded form so the real codec runs on arrival (what's admitted is
+/// what the wire carries), while the shipper keeps it cached alongside
+/// the bytes — both re-offer after backpressure without re-encoding.
+fn encode_chunk(
+    pool: &BufferPool,
+    counters: &HopCounters,
     from: NodeId,
-    to: NodeId,
     topology: &str,
     stage: &str,
     tuples: Vec<Tuple>,
-) -> Result<Vec<Tuple>> {
-    let msg = NetMessage::StreamBatch {
-        from,
-        topology: topology.to_string(),
-        stage: stage.to_string(),
-        tuples,
-    };
-    let bytes = msg.encode();
-    net.charge_hop(&from, &to, bytes.len() + 4).ok_or_else(|| {
-        Error::Net(format!("stream hop {from} → {to} unreachable (node down or unregistered)"))
-    })?;
-    match NetMessage::decode(&bytes)? {
-        NetMessage::StreamBatch { tuples, .. } => Ok(tuples),
-        _ => Err(Error::Net("stream hop decoded to a non-batch message".into())),
+    keep_decoded: bool,
+) -> WireBatch {
+    let (buf, recycled) = pool.get();
+    let mut wb = WireBatch::encode_with(buf, from, topology, stage, tuples);
+    if !keep_decoded {
+        wb.forget_decoded();
+    }
+    counters.encodes.inc();
+    if recycled {
+        counters.reuses.inc();
+    }
+    counters.bytes.add(wb.wire_size() as u64);
+    wb
+}
+
+/// Encode `outs` in `SHIP_CHUNK`-sized wire batches, charge each to the
+/// network, and stage them for fragment `i + 1`.
+fn ship_chunks<H: FragmentHost + ?Sized>(
+    host: &H,
+    st: &mut RouteState,
+    i: usize,
+    outs: Vec<Tuple>,
+) -> Result<()> {
+    let (from, to) = (st.hops[i].node, st.hops[i + 1].node);
+    let stage = st.hops[i + 1].stage.clone();
+    let mut iter = outs.into_iter();
+    loop {
+        let chunk: Vec<Tuple> = iter.by_ref().take(SHIP_CHUNK).collect();
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        let wb = encode_chunk(&st.pool, &st.counters, from, &st.key, &stage, chunk, false);
+        host.network()
+            .charge_hop(&from, &to, wb.wire_size())
+            .ok_or_else(|| unreachable_err(from, to))?;
+        st.staged[i + 1].push_back(wb);
     }
 }
 
-/// Re-offer staged tuples into fragment `i`'s ingress, preserving their
-/// order; returns whether anything was admitted. A rejected batch goes
-/// back to the *front* of the staging queue.
+/// Re-offer staged wire batches into fragment `i`'s ingress, preserving
+/// their order; returns whether anything was admitted. A rejected batch
+/// goes back to the *front* of the staging queue with its decoded form
+/// cached against the bytes — no re-encode, no re-decode.
 fn offer_staged<H: FragmentHost + ?Sized>(
     host: &H,
     st: &mut RouteState,
     i: usize,
 ) -> Result<bool> {
     let mut progress = false;
-    while !st.staged[i].is_empty() {
-        let take = SHIP_CHUNK.min(st.staged[i].len());
-        let batch: Vec<Tuple> = st.staged[i].drain(..take).collect();
+    while let Some(mut wb) = st.staged[i].pop_front() {
         let hop = &st.hops[i];
         let mgr = manager_of(host, &hop.node)?;
-        match mgr.try_send_batch(&hop.frag_key, batch)? {
-            None => progress = true,
+        let tuples = wb.take_tuples()?;
+        match mgr.try_send_batch(&hop.frag_key, tuples)? {
+            None => {
+                progress = true;
+                st.pool.put(wb.into_buffer());
+            }
             Some(back) => {
-                for t in back.into_iter().rev() {
-                    st.staged[i].push_front(t);
-                }
+                wb.give_back(back);
+                st.staged[i].push_front(wb);
                 break;
             }
         }
@@ -337,11 +462,11 @@ fn offer_staged<H: FragmentHost + ?Sized>(
 }
 
 /// One full pump: repeatedly move data one hop forward — deliver staged
-/// tuples into each fragment, drain each fragment's egress, ship it
-/// (encode → charge → decode) toward the next fragment's staging queue,
-/// and collect the final fragment's outputs — until a whole pass makes
-/// no progress. Non-blocking: a full downstream fragment leaves its
-/// tuples staged for the next pump.
+/// batches into each fragment, drain each fragment's egress, ship it
+/// (encode once → charge) toward the next fragment's staging queue, and
+/// collect the final fragment's outputs — until a whole pass makes no
+/// progress. Non-blocking: a full downstream fragment leaves its
+/// batches staged (bytes intact) for the next pump.
 pub fn pump_route<H: FragmentHost + ?Sized>(host: &H, st: &mut RouteState) -> Result<()> {
     loop {
         let mut progress = false;
@@ -364,17 +489,7 @@ pub fn pump_route<H: FragmentHost + ?Sized>(host: &H, st: &mut RouteState) -> Re
             if i + 1 == st.hops.len() {
                 st.collected.extend(outs);
             } else {
-                let (from, to) = (st.hops[i].node, st.hops[i + 1].node);
-                let mut iter = outs.into_iter();
-                loop {
-                    let chunk: Vec<Tuple> = iter.by_ref().take(SHIP_CHUNK).collect();
-                    if chunk.is_empty() {
-                        break;
-                    }
-                    let arrived =
-                        ship_batch(host.network(), from, to, &st.key, &st.hops[i + 1].stage, chunk)?;
-                    st.staged[i + 1].extend(arrived);
-                }
+                ship_chunks(host, st, i, outs)?;
             }
         }
         if !progress {
@@ -384,12 +499,13 @@ pub fn pump_route<H: FragmentHost + ?Sized>(host: &H, st: &mut RouteState) -> Re
 }
 
 /// Feed a batch into the route's first fragment, pumping hops between
-/// chunks. The first-hop feed is a non-blocking offer retried around
-/// pumps — the route keeps moving (and downstream fragments keep
-/// draining) even while the first fragment is saturated, so the feeder
-/// can never wedge against its own unpumped hops. Once the staging
-/// window overflows — a downstream node cannot keep up — the call
-/// blocks the producer until the window drains: cross-node
+/// chunks (the legacy synchronous net plane; async routes use
+/// [`feed_route_async`]). The first-hop feed is a non-blocking offer
+/// retried around pumps — the route keeps moving (and downstream
+/// fragments keep draining) even while the first fragment is saturated,
+/// so the feeder can never wedge against its own unpumped hops. Once
+/// the staging window overflows — a downstream node cannot keep up —
+/// the call blocks the producer until the window drains: cross-node
 /// backpressure.
 pub fn feed_route<H: FragmentHost + ?Sized>(
     host: &H,
@@ -423,6 +539,58 @@ pub fn feed_route<H: FragmentHost + ?Sized>(
     Ok(())
 }
 
+/// Feed a batch into an async route's first fragment. The shipper owns
+/// all hop movement, so the producer only offers into fragment 0 and
+/// blocks on the staging window — any recorded shipper fault
+/// short-circuits the feed (and every retry) immediately.
+pub fn feed_route_async<H: FragmentHost + ?Sized>(
+    host: &H,
+    st: &RouteState,
+    batch: Vec<Tuple>,
+) -> Result<()> {
+    let shipper = st.shipper.as_ref().expect("route has a background shipper");
+    let node = st.hops[0].node;
+    let frag_key = &st.hops[0].frag_key;
+    let mut iter = batch.into_iter();
+    loop {
+        let chunk: Vec<Tuple> = iter.by_ref().take(SHIP_CHUNK).collect();
+        if chunk.is_empty() {
+            break;
+        }
+        let mut pending = Some(chunk);
+        while let Some(chunk) = pending.take() {
+            if let Some(e) = shipper.fault() {
+                return Err(e);
+            }
+            if let Some(back) = manager_of(host, &node)?.try_send_batch(frag_key, chunk)? {
+                pending = Some(back);
+                std::thread::sleep(RETRY_PAUSE); // executor backpressure
+            }
+        }
+    }
+    while shipper.shared.staged_count.load(Ordering::Acquire) > STAGE_WINDOW {
+        if let Some(e) = shipper.fault() {
+            return Err(e);
+        }
+        std::thread::sleep(RETRY_PAUSE); // cross-node backpressure
+    }
+    Ok(())
+}
+
+/// Non-blocking poll of an async route: surface any shipper fault, else
+/// take up to `max` outputs the shipper collected from the final
+/// fragment. Panics if the route has no shipper (check
+/// [`RouteState::has_shipper`]).
+pub fn poll_route_async(st: &RouteState, max: usize) -> Result<Vec<Tuple>> {
+    let shipper = st.shipper.as_ref().expect("route has a background shipper");
+    if let Some(e) = shipper.fault() {
+        return Err(e);
+    }
+    let mut collected = shipper.shared.collected.lock().unwrap();
+    let take = max.min(collected.len());
+    Ok(collected.drain(..take).collect())
+}
+
 /// Tear a route down front-to-back with zero loss: for each fragment in
 /// chain order, first deliver everything still staged for it (pumping
 /// the downstream hops so admission frees up), then stop it — its
@@ -430,8 +598,22 @@ pub fn feed_route<H: FragmentHost + ?Sized>(
 /// which is shipped downstream before the next fragment closes. Every
 /// fragment is stopped even after a fault; the first error wins.
 /// Returns the distributed topology's complete output.
-pub fn stop_route<H: FragmentHost + ?Sized>(host: &mut H, mut st: RouteState) -> Result<Vec<Tuple>> {
-    let mut first_err: Option<Error> = None;
+///
+/// Async routes must run [`halt_shipper`] first and pass its fault (if
+/// any) through [`stop_route_seeded`].
+pub fn stop_route<H: FragmentHost + ?Sized>(host: &mut H, st: RouteState) -> Result<Vec<Tuple>> {
+    stop_route_seeded(host, st, None)
+}
+
+/// [`stop_route`] seeded with an error that already occurred (a halted
+/// shipper's fault): the cascade still stops every fragment, but skips
+/// forwarding work and returns the seed as the first error.
+pub fn stop_route_seeded<H: FragmentHost + ?Sized>(
+    host: &mut H,
+    mut st: RouteState,
+    mut first_err: Option<Error>,
+) -> Result<Vec<Tuple>> {
+    debug_assert!(st.shipper.is_none(), "halt_shipper must run before stop_route");
     for i in 0..st.hops.len() {
         if first_err.is_none() {
             loop {
@@ -461,29 +643,8 @@ pub fn stop_route<H: FragmentHost + ?Sized>(host: &mut H, mut st: RouteState) ->
                 }
                 if i + 1 == st.hops.len() {
                     st.collected.extend(tuples);
-                } else {
-                    let (from, to) = (st.hops[i].node, st.hops[i + 1].node);
-                    let mut iter = tuples.into_iter();
-                    loop {
-                        let chunk: Vec<Tuple> = iter.by_ref().take(SHIP_CHUNK).collect();
-                        if chunk.is_empty() {
-                            break;
-                        }
-                        match ship_batch(
-                            host.network(),
-                            from,
-                            to,
-                            &st.key,
-                            &st.hops[i + 1].stage,
-                            chunk,
-                        ) {
-                            Ok(arrived) => st.staged[i + 1].extend(arrived),
-                            Err(e) => {
-                                first_err = Some(e);
-                                break;
-                            }
-                        }
-                    }
+                } else if let Err(e) = ship_chunks(&*host, &mut st, i, tuples) {
+                    first_err = Some(e);
                 }
             }
             Err(e) => {
@@ -495,6 +656,213 @@ pub fn stop_route<H: FragmentHost + ?Sized>(host: &mut H, mut st: RouteState) ->
         Some(e) => Err(e),
         None => Ok(st.collected),
     }
+}
+
+// ---- Background shipper (async net plane) ----
+
+/// One cross-node boundary as the shipper thread sees it: the upstream
+/// fragment's egress and the downstream fragment's ingress, pre-resolved
+/// so the thread never touches the host's node maps.
+struct HopLink {
+    egress: EgressTap,
+    ingress: StreamSender,
+    from: NodeId,
+    to: NodeId,
+    stage: Arc<str>,
+}
+
+/// State shared between a route and its shipper thread.
+struct ShipperShared {
+    stop: AtomicBool,
+    /// First fault wins; later ones are dropped.
+    fault: Mutex<Option<Error>>,
+    /// Per-boundary encoded batches awaiting downstream admission
+    /// (index `b` feeds fragment `b + 1`).
+    staged: Vec<Mutex<VecDeque<WireBatch>>>,
+    /// Tuples across all staged queues — the backpressure window.
+    staged_count: AtomicUsize,
+    /// Outputs drained from the final fragment.
+    collected: Mutex<Vec<Tuple>>,
+}
+
+/// Everything the shipper thread needs, owned by the thread: network
+/// and metrics handles are cheap clones, egress/ingress taps keep the
+/// fragments' channels alive until the shipper is halted.
+struct ShipperCtx {
+    net: SimNetwork,
+    key: Arc<str>,
+    links: Vec<HopLink>,
+    last: EgressTap,
+    pool: Arc<BufferPool>,
+    counters: HopCounters,
+    shared: Arc<ShipperShared>,
+}
+
+/// Handle on a route's background shipper thread.
+struct Shipper {
+    shared: Arc<ShipperShared>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Shipper {
+    fn fault(&self) -> Option<Error> {
+        self.shared.fault.lock().unwrap().as_ref().map(clone_err)
+    }
+}
+
+/// Attach a background shipper to a multi-fragment route. Single-hop
+/// routes are left alone — there is nothing to ship.
+pub fn start_shipper<H: FragmentHost + ?Sized>(host: &H, st: &mut RouteState) -> Result<()> {
+    if st.hops.len() < 2 || st.shipper.is_some() {
+        return Ok(());
+    }
+    let mut links = Vec::with_capacity(st.hops.len() - 1);
+    for b in 0..st.hops.len() - 1 {
+        let (up, down) = (&st.hops[b], &st.hops[b + 1]);
+        links.push(HopLink {
+            egress: manager_of(host, &up.node)?.egress_tap(&up.frag_key)?,
+            ingress: manager_of(host, &down.node)?.sender(&down.frag_key)?,
+            from: up.node,
+            to: down.node,
+            stage: down.stage.clone(),
+        });
+    }
+    let last_hop = st.hops.last().expect("route has at least one hop");
+    let last = manager_of(host, &last_hop.node)?.egress_tap(&last_hop.frag_key)?;
+    let shared = Arc::new(ShipperShared {
+        stop: AtomicBool::new(false),
+        fault: Mutex::new(None),
+        staged: (0..st.hops.len() - 1).map(|_| Mutex::new(VecDeque::new())).collect(),
+        staged_count: AtomicUsize::new(0),
+        collected: Mutex::new(Vec::new()),
+    });
+    let ctx = ShipperCtx {
+        net: host.network().clone(),
+        key: st.key.clone(),
+        links,
+        last,
+        pool: st.pool.clone(),
+        counters: st.counters.clone(),
+        shared: shared.clone(),
+    };
+    let thread = std::thread::Builder::new()
+        .name(format!("shipper-{}", st.key))
+        .spawn(move || run_shipper(ctx))?;
+    st.shipper = Some(Shipper { shared, thread: Some(thread) });
+    Ok(())
+}
+
+/// Halt a route's shipper (no-op without one): signal, join, and move
+/// its in-flight batches and collected outputs back onto the route in
+/// order, so the synchronous teardown cascade finishes the drain with
+/// zero loss. Returns the shipper's recorded fault, if any.
+pub fn halt_shipper(st: &mut RouteState) -> Option<Error> {
+    let mut shipper = st.shipper.take()?;
+    shipper.shared.stop.store(true, Ordering::Release);
+    if let Some(thread) = shipper.thread.take() {
+        let _ = thread.join();
+    }
+    for (b, q) in shipper.shared.staged.iter().enumerate() {
+        st.staged[b + 1].extend(q.lock().unwrap().drain(..));
+    }
+    st.collected.append(&mut shipper.shared.collected.lock().unwrap());
+    shipper.shared.fault.lock().unwrap().take()
+}
+
+fn run_shipper(ctx: ShipperCtx) {
+    let result = std::panic::catch_unwind(AssertUnwindSafe(|| shipper_loop(&ctx)));
+    let fault = match result {
+        Ok(Ok(())) => None,
+        Ok(Err(e)) => Some(e),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown cause".to_string());
+            Some(Error::Stream(format!("shipper panicked: {msg} (route `{}`)", ctx.key)))
+        }
+    };
+    if let Some(e) = fault {
+        ctx.shared.fault.lock().unwrap().get_or_insert(e);
+    }
+}
+
+fn shipper_loop(ctx: &ShipperCtx) -> Result<()> {
+    if std::env::var(SHIPPER_PANIC_ENV).ok().as_deref() == Some(&*ctx.key) {
+        panic!("injected shipper fault");
+    }
+    while !ctx.shared.stop.load(Ordering::Acquire) {
+        if !shipper_pass(ctx)? {
+            std::thread::sleep(RETRY_PAUSE);
+        }
+    }
+    Ok(())
+}
+
+/// One shipper pass over every boundary: deliver staged batches
+/// downstream, then drain upstream egress into freshly encoded batches
+/// (bounded by the staging window), then collect final-fragment
+/// outputs. Returns whether anything moved.
+fn shipper_pass(ctx: &ShipperCtx) -> Result<bool> {
+    let mut progress = false;
+    for (b, link) in ctx.links.iter().enumerate() {
+        {
+            let mut q = ctx.shared.staged[b].lock().unwrap();
+            while let Some(mut wb) = q.pop_front() {
+                let n = wb.tuple_count();
+                let tuples = wb.take_tuples()?;
+                match link.ingress.try_send_batch(tuples)? {
+                    None => {
+                        ctx.shared.staged_count.fetch_sub(n, Ordering::AcqRel);
+                        ctx.pool.put(wb.into_buffer());
+                        progress = true;
+                    }
+                    Some(back) => {
+                        // Downstream is full: keep bytes and decoded
+                        // form both — the re-offer is free.
+                        wb.give_back(back);
+                        q.push_front(wb);
+                        break;
+                    }
+                }
+            }
+        }
+        while ctx.shared.staged_count.load(Ordering::Acquire) < STAGE_WINDOW {
+            let mut chunk = Vec::new();
+            if link.egress.try_drain_into(SHIP_CHUNK, &mut chunk) == 0 {
+                break;
+            }
+            let n = chunk.len();
+            let wb = encode_chunk(
+                &ctx.pool,
+                &ctx.counters,
+                link.from,
+                &ctx.key,
+                &link.stage,
+                chunk,
+                true,
+            );
+            ctx.net
+                .charge_hop(&link.from, &link.to, wb.wire_size())
+                .ok_or_else(|| unreachable_err(link.from, link.to))?;
+            ctx.shared.staged_count.fetch_add(n, Ordering::AcqRel);
+            ctx.shared.staged[b].lock().unwrap().push_back(wb);
+            progress = true;
+        }
+    }
+    let mut out = Vec::new();
+    if ctx.last.try_drain_into(PUMP_POLL, &mut out) > 0 {
+        ctx.shared.collected.lock().unwrap().extend(out);
+        progress = true;
+    }
+    Ok(progress)
+}
+
+/// Whether newly created managers default to background shippers:
+/// yes, unless `RPULSAR_NETPLANE=sync` selects the legacy pump.
+pub fn netplane_async_default() -> bool {
+    !matches!(std::env::var(NETPLANE_ENV).as_deref(), Ok("sync"))
 }
 
 /// A node slot of the standalone distributed manager.
@@ -514,6 +882,7 @@ pub struct DistributedTopologyManager {
     factories: BTreeMap<String, StageFactory>,
     routes: BTreeMap<String, RouteState>,
     metrics: Registry,
+    async_net: bool,
 }
 
 impl Default for DistributedTopologyManager {
@@ -534,6 +903,10 @@ impl FragmentHost for DistributedTopologyManager {
     fn network(&self) -> &SimNetwork {
         &self.network
     }
+
+    fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
 }
 
 impl DistributedTopologyManager {
@@ -549,6 +922,7 @@ impl DistributedTopologyManager {
             factories: BTreeMap::new(),
             routes: BTreeMap::new(),
             metrics: Registry::new(),
+            async_net: netplane_async_default(),
         }
     }
 
@@ -590,6 +964,19 @@ impl DistributedTopologyManager {
         &self.metrics
     }
 
+    /// Choose the net-plane mode for *subsequently started* routes:
+    /// `true` (the default, unless `RPULSAR_NETPLANE=sync`) gives every
+    /// multi-fragment route a background shipper; `false` keeps hops on
+    /// the legacy synchronous pump. Running routes are unaffected.
+    pub fn set_async_shippers(&mut self, on: bool) {
+        self.async_net = on;
+    }
+
+    /// Whether new routes get a background shipper.
+    pub fn async_shippers(&self) -> bool {
+        self.async_net
+    }
+
     /// Register a stage factory on every node (present and future).
     pub fn register_stage(
         &mut self,
@@ -619,7 +1006,10 @@ impl DistributedTopologyManager {
             return Err(Error::Stream(format!("distributed topology `{key}` already running")));
         }
         let topo = Topology::parse(key, spec)?;
-        let st = start_fragments(self, key, &topo, plan)?;
+        let mut st = start_fragments(self, key, &topo, plan)?;
+        if self.async_net {
+            start_shipper(&*self, &mut st)?;
+        }
         self.routes.insert(key.to_string(), st);
         Ok(())
     }
@@ -629,16 +1019,39 @@ impl DistributedTopologyManager {
         self.send_batch(key, vec![tuple])
     }
 
-    /// Feed a batch, pumping inter-node hops as it goes.
+    /// Feed a batch. Async routes hand hop movement to the shipper;
+    /// sync routes pump inter-node hops as they go.
     pub fn send_batch(&mut self, key: &str, batch: Vec<Tuple>) -> Result<()> {
+        {
+            let this = &*self;
+            if let Some(st) = this.routes.get(key) {
+                if st.has_shipper() {
+                    return feed_route_async(this, st, batch);
+                }
+            }
+        }
         let mut st = self.take_route(key)?;
         let r = feed_route(&*self, &mut st, batch);
         self.routes.insert(key.to_string(), st);
         r
     }
 
-    /// Move whatever is in flight one or more hops forward (non-blocking).
+    /// Move whatever is in flight one or more hops forward
+    /// (non-blocking). On an async route the shipper is already doing
+    /// this continuously; the call just surfaces any recorded fault.
     pub fn pump(&mut self, key: &str) -> Result<()> {
+        {
+            let st = self
+                .routes
+                .get(key)
+                .ok_or_else(|| Error::NotRunning(format!("distributed topology `{key}`")))?;
+            if let Some(shipper) = &st.shipper {
+                return match shipper.fault() {
+                    Some(e) => Err(e),
+                    None => Ok(()),
+                };
+            }
+        }
         let mut st = self.take_route(key)?;
         let r = pump_route(&*self, &mut st);
         self.routes.insert(key.to_string(), st);
@@ -646,9 +1059,19 @@ impl DistributedTopologyManager {
     }
 
     /// Drain up to `max` outputs already collected from the final
-    /// fragment (pumps first). On a pump error the collected outputs
-    /// stay in the route — a later `stop` can still return them.
+    /// fragment (pumps first on sync routes). On a pump error the
+    /// collected outputs stay in the route — a later `stop` can still
+    /// return them.
     pub fn poll(&mut self, key: &str, max: usize) -> Result<Vec<Tuple>> {
+        {
+            let st = self
+                .routes
+                .get(key)
+                .ok_or_else(|| Error::NotRunning(format!("distributed topology `{key}`")))?;
+            if st.has_shipper() {
+                return poll_route_async(st, max);
+            }
+        }
         let mut st = self.take_route(key)?;
         let r = pump_route(&*self, &mut st);
         let out = if r.is_ok() { st.take_up_to(max) } else { Vec::new() };
@@ -676,11 +1099,13 @@ impl DistributedTopologyManager {
         manager_of(&*self, &node)?.rescale(&frag_key, stage, parallelism)
     }
 
-    /// Stop a distributed topology: cascade-drain every fragment
-    /// front-to-back and return the complete output.
+    /// Stop a distributed topology: halt its shipper (if any),
+    /// cascade-drain every fragment front-to-back, and return the
+    /// complete output. A fault the shipper recorded wins.
     pub fn stop(&mut self, key: &str) -> Result<Vec<Tuple>> {
-        let st = self.take_route(key)?;
-        stop_route(self, st)
+        let mut st = self.take_route(key)?;
+        let fault = halt_shipper(&mut st);
+        stop_route_seeded(self, st, fault)
     }
 
     /// Keys of running distributed topologies.
@@ -724,11 +1149,14 @@ impl std::fmt::Debug for DistributedTopologyManager {
 /// single endpoint reader thread, so batch order — and therefore
 /// per-key order — is preserved across the process boundary; the
 /// closing [`TcpStageLink::eos`] marker carries the drain contract.
+/// Frames are encoded into one reused buffer — no per-frame message
+/// construction or string cloning on the data path.
 pub struct TcpStageLink {
     stream: std::net::TcpStream,
     from: NodeId,
     topology: String,
     stage: String,
+    buf: Vec<u8>,
 }
 
 impl TcpStageLink {
@@ -739,6 +1167,7 @@ impl TcpStageLink {
             from,
             topology: topology.to_string(),
             stage: stage.to_string(),
+            buf: Vec::new(),
         })
     }
 
@@ -747,15 +1176,12 @@ impl TcpStageLink {
         if tuples.is_empty() {
             return Ok(());
         }
-        crate::net::tcp::write_frame(
-            &mut self.stream,
-            &NetMessage::StreamBatch {
-                from: self.from,
-                topology: self.topology.clone(),
-                stage: self.stage.clone(),
-                tuples,
-            },
-        )
+        let mut w = ByteWriter::from_vec(std::mem::take(&mut self.buf));
+        encode_stream_batch_into(&mut w, self.from, &self.topology, &self.stage, &tuples);
+        let body = w.into_bytes();
+        let r = crate::net::tcp::write_frame_bytes(&mut self.stream, &body);
+        self.buf = body;
+        r
     }
 
     /// Signal end-of-stream and close the link: everything the
@@ -933,6 +1359,7 @@ mod tests {
         let plan = PlacementPlan::split_at(&t, 1, pi, cloud);
         dist.start("s", "inc->double", &plan).unwrap();
         assert_eq!(dist.running(), vec!["s"]);
+        assert!(dist.route("s").unwrap().has_shipper(), "async net plane is the default");
         for i in 0..100u64 {
             dist.send("s", Tuple::new(i, vec![]).with("X", i as f64)).unwrap();
         }
@@ -949,10 +1376,38 @@ mod tests {
     }
 
     #[test]
+    fn sync_netplane_matches_and_encodes_once_per_message() {
+        for sync in [false, true] {
+            let (mut dist, pi, cloud) = two_node_manager();
+            dist.set_async_shippers(!sync);
+            let t = topo("inc->double");
+            dist.start("e", "inc->double", &PlacementPlan::split_at(&t, 1, pi, cloud)).unwrap();
+            assert_eq!(dist.route("e").unwrap().has_shipper(), !sync);
+            for i in 0..200u64 {
+                dist.send("e", Tuple::new(i, vec![]).with("X", i as f64)).unwrap();
+            }
+            let out = dist.stop("e").unwrap();
+            assert_eq!(out.len(), 200, "sync={sync}");
+            let encodes = dist.metrics().counter("net.hop.encodes").get();
+            assert_eq!(
+                encodes,
+                dist.network().messages(),
+                "exactly one encode per shipped batch (sync={sync})"
+            );
+            assert!(
+                dist.metrics().counter("net.hop.buffer_reuses").get() > 0,
+                "pooled buffers must be recycled (sync={sync})"
+            );
+            assert!(dist.metrics().counter("net.hop.bytes").get() >= dist.network().bytes());
+        }
+    }
+
+    #[test]
     fn single_fragment_plan_ships_nothing() {
         let (mut dist, pi, _cloud) = two_node_manager();
         let t = topo("inc");
         dist.start("l", "inc", &PlacementPlan::single(pi, &t)).unwrap();
+        assert!(!dist.route("l").unwrap().has_shipper(), "no hop, no shipper");
         dist.send("l", Tuple::new(0, vec![]).with("X", 1.0)).unwrap();
         let out = dist.stop("l").unwrap();
         assert_eq!(out.len(), 1);
@@ -986,9 +1441,9 @@ mod tests {
         dist.start("p", "inc->double", &PlacementPlan::split_at(&t, 1, pi, cloud)).unwrap();
         dist.network().take_down(cloud);
         // The cross-node ship fails as soon as a batch reaches the hop
-        // (which may be during a send's pump or at the stop drain —
-        // workers process asynchronously); either way the error names
-        // the partition and every fragment is still torn down.
+        // (the shipper records the fault asynchronously; a send or the
+        // stop drain surfaces it); either way the error names the
+        // partition and every fragment is still torn down.
         let mut failed = None;
         for i in 0..8u64 {
             if let Err(e) = dist.send("p", Tuple::new(i, vec![])) {

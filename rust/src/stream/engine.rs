@@ -23,11 +23,16 @@
 //! marker, and the new generation only starts after every
 //! acknowledgement.
 //!
-//! **Direct exchange.** A *static* keyed parallel stage that follows
-//! another stage skips its router entirely: the upstream workers
-//! partition their outputs straight into the downstream replica queues
-//! (one hop less per tuple). Elastic stages keep their router — it is
-//! the pause point rescaling needs.
+//! **Direct exchange.** A keyed stage that follows another stage skips
+//! its router entirely: the upstream workers partition their outputs
+//! straight into the downstream replica queues (one hop less per
+//! tuple). Static keyed parallel stages wire a fixed port set; an
+//! *elastic* keyed stage exposes a shared, swappable port set (an
+//! `Exchange`, its ports behind a lock) to the upstream emitters, so a
+//! live rescale re-wires the exchange in place — the post-rescale
+//! topology keeps the router-free fast path. Elastic *unkeyed* stages
+//! keep their router: round-robin needs a single serialization point
+//! to stay a pause point.
 //!
 //! **Batching.** Every channel hop moves tuple batches, not single
 //! tuples, so channel synchronization is amortized across up to
@@ -66,11 +71,14 @@
 //! split across cluster nodes (`stream::dist`). The egress side is
 //! [`EngineHandle::try_drain`] — a non-blocking poll a forwarder uses
 //! to batch, serialize and ship outputs as `NetMessage::StreamBatch`
-//! frames — and the ingress side is [`EngineHandle::try_send_batch`] /
-//! [`StreamSender::try_send_batch`], a non-blocking admission port into
-//! the downstream fragment's first router that hands a full batch back
-//! instead of blocking (the shipper re-offers it, preserving order).
-//! See `docs/distributed-stream.md` for the cross-node contract.
+//! frames — or, for a background shipper thread, a cloneable
+//! [`EgressTap`] ([`EngineHandle::egress_tap`]) that drains the same
+//! buffer without borrowing the handle. The ingress side is
+//! [`EngineHandle::try_send_batch`] / [`StreamSender::try_send_batch`],
+//! a non-blocking admission port into the downstream fragment's first
+//! router that hands a full batch back instead of blocking (the
+//! shipper re-offers it, preserving order). See
+//! `docs/distributed-stream.md` for the cross-node contract.
 
 use super::operator::{KeyState, Operator};
 use super::topology::StageSpec;
@@ -82,7 +90,7 @@ use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
 };
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::thread::JoinHandle;
 
 /// Default bounded-channel depth between stages, counted in batches.
@@ -168,12 +176,44 @@ impl Port {
     }
 }
 
+/// A late-bound port set an *elastic* linked stage exposes to its
+/// upstream emitters. The replica ports live behind a lock so a live
+/// rescale can swap them in place (holding the lock quiesces in-flight
+/// upstream flushes for the duration of the handoff), and dropping the
+/// last upstream reference signals the stage's control thread to reap
+/// the final replica generation.
+struct Exchange {
+    ports: Mutex<Vec<Port>>,
+    ctrl: Sender<Control>,
+}
+
+impl Drop for Exchange {
+    fn drop(&mut self) {
+        // The rescaler keeps a control sender alive for the topology's
+        // whole life, so channel disconnection alone can never signal
+        // end-of-stream to the exchange thread — an explicit shutdown
+        // does. The ports drop with the struct, closing the replica
+        // inbounds so the final generation drains and exits.
+        let _ = self.ctrl.send(Control::Shutdown);
+    }
+}
+
+/// Where an emitter's batches go: a fixed port set wired at launch, or
+/// an elastic linked stage's shared, swappable [`Exchange`].
+#[derive(Clone)]
+enum Sink {
+    Fixed(Vec<Port>),
+    Shared(Arc<Exchange>),
+}
+
 /// Where a worker or router sends its outputs: one port (serial hop or
 /// fan-in), or a partition across a downstream replica pool — keyed by
 /// hash when the pool is keyed, round-robin otherwise. Buffers one
-/// partial batch per port with the usual flush-on-full/idle rules.
+/// partial batch per port with the usual flush-on-full/idle rules; a
+/// shared sink buffers a single batch and partitions at flush time,
+/// because the port set may change between flushes.
 struct Emitter {
-    ports: Vec<Port>,
+    sink: Sink,
     bufs: Vec<Batch>,
     /// Partition key; `None` with several ports means round-robin.
     key: Option<String>,
@@ -183,46 +223,122 @@ struct Emitter {
 
 impl Emitter {
     fn new(ports: Vec<Port>, key: Option<String>, capacity: usize) -> Self {
-        let bufs = (0..ports.len()).map(|_| Vec::with_capacity(capacity)).collect();
-        Emitter { ports, bufs, key, rr: 0, capacity }
+        Self::with_sink(Sink::Fixed(ports), key, capacity)
     }
 
     fn single(port: Port, capacity: usize) -> Self {
         Self::new(vec![port], None, capacity)
     }
 
+    fn shared(exchange: Arc<Exchange>, key: Option<String>, capacity: usize) -> Self {
+        Self::with_sink(Sink::Shared(exchange), key, capacity)
+    }
+
+    fn with_sink(sink: Sink, key: Option<String>, capacity: usize) -> Self {
+        let n = match &sink {
+            Sink::Fixed(ports) => ports.len(),
+            Sink::Shared(_) => 1,
+        };
+        let bufs = (0..n).map(|_| Vec::with_capacity(capacity)).collect();
+        Emitter { sink, bufs, key, rr: 0, capacity }
+    }
+
     /// Same downstream targets, fresh buffers — each worker of a
     /// generation gets its own view of the shared fan-out.
     fn clone_fresh(&self) -> Self {
-        Self::new(self.ports.clone(), self.key.clone(), self.capacity)
+        Self::with_sink(self.sink.clone(), self.key.clone(), self.capacity)
+    }
+
+    /// The launch-time port set. Router replica generations always wire
+    /// fixed ports; exchange sinks answer with an empty slice.
+    fn fixed_ports(&self) -> &[Port] {
+        match &self.sink {
+            Sink::Fixed(ports) => ports,
+            Sink::Shared(_) => &[],
+        }
     }
 
     /// Queue one tuple toward its partition, flushing a filled batch;
     /// false when the receiving side is gone. Tuples missing the key
     /// field pin to partition 0, exactly like the shuffle.
     fn emit(&mut self, tuple: Tuple) -> bool {
-        let r = if self.ports.len() == 1 {
-            0
-        } else if let Some(field) = &self.key {
-            match tuple.key_hash(field) {
-                Some(h) => (h % self.ports.len() as u64) as usize,
-                None => 0,
+        let r = match &self.sink {
+            Sink::Shared(_) => 0,
+            Sink::Fixed(ports) if ports.len() == 1 => 0,
+            Sink::Fixed(ports) => {
+                if let Some(field) = &self.key {
+                    match tuple.key_hash(field) {
+                        Some(h) => (h % ports.len() as u64) as usize,
+                        None => 0,
+                    }
+                } else {
+                    self.rr = (self.rr + 1) % ports.len();
+                    self.rr
+                }
             }
-        } else {
-            self.rr = (self.rr + 1) % self.ports.len();
-            self.rr
         };
         self.bufs[r].push(tuple);
         if self.bufs[r].len() >= self.capacity {
-            return self.ports[r].flush(&mut self.bufs[r], self.capacity);
+            if matches!(self.sink, Sink::Shared(_)) {
+                return self.flush_shared();
+            }
+            if let Sink::Fixed(ports) = &self.sink {
+                return ports[r].flush(&mut self.bufs[r], self.capacity);
+            }
         }
         true
     }
 
     /// Flush every partial batch; false when a receiver is gone.
     fn flush_all(&mut self) -> bool {
-        for (port, buf) in self.ports.iter().zip(self.bufs.iter_mut()) {
-            if !port.flush(buf, self.capacity) {
+        if matches!(self.sink, Sink::Shared(_)) {
+            return self.flush_shared();
+        }
+        match &self.sink {
+            Sink::Fixed(ports) => {
+                for (port, buf) in ports.iter().zip(self.bufs.iter_mut()) {
+                    if !port.flush(buf, self.capacity) {
+                        return false;
+                    }
+                }
+                true
+            }
+            Sink::Shared(_) => true,
+        }
+    }
+
+    /// Flush the shared buffer through the exchange: partition the
+    /// batch across the *current* port set under the exchange lock —
+    /// which is exactly the pause point a concurrent rescale uses, so
+    /// the partitioning always sees a complete generation.
+    fn flush_shared(&mut self) -> bool {
+        if self.bufs[0].is_empty() {
+            return true;
+        }
+        let ex = match &self.sink {
+            Sink::Shared(ex) => ex.clone(),
+            Sink::Fixed(_) => return true,
+        };
+        let batch = std::mem::replace(&mut self.bufs[0], Vec::with_capacity(self.capacity));
+        let ports = ex.ports.lock().unwrap();
+        if ports.len() == 1 {
+            return ports[0].send(batch);
+        }
+        let mut parts: Vec<Batch> = (0..ports.len()).map(|_| Vec::new()).collect();
+        for tuple in batch {
+            let r = if let Some(field) = &self.key {
+                match tuple.key_hash(field) {
+                    Some(h) => (h % ports.len() as u64) as usize,
+                    None => 0,
+                }
+            } else {
+                self.rr = (self.rr + 1) % ports.len();
+                self.rr
+            };
+            parts[r].push(tuple);
+        }
+        for (port, part) in ports.iter().zip(parts) {
+            if !part.is_empty() && !port.send(part) {
                 return false;
             }
         }
@@ -400,18 +516,25 @@ pub struct RescaleReport {
     pub moved_keys: usize,
 }
 
-/// Live control messages to an elastic stage's router.
+/// Live control messages to an elastic stage's router or exchange
+/// control thread.
 enum Control {
     Rescale { degree: usize, ack: SyncSender<Result<RescaleReport>> },
+    /// Sent by a dropping [`Exchange`] when the upstream stage is gone:
+    /// the control thread reaps the final replica generation and exits.
+    /// Routers never receive this.
+    Shutdown,
 }
 
 /// Control-plane endpoints of one elastic stage: the command channel
-/// plus a port into the stage's data inbound, used to wake an idle
-/// (blocked) router with a no-op sentinel — idle stages cost zero
-/// periodic wakeups.
+/// plus, for routed stages, a port into the stage's data inbound used
+/// to wake an idle (blocked) router with a no-op sentinel — idle
+/// stages cost zero periodic wakeups. Exchange stages have no nudge
+/// (`None`): their control thread always listens on the command
+/// channel.
 struct StageControl {
     ctrl: Sender<Control>,
-    nudge: Port,
+    nudge: Option<Port>,
 }
 
 /// Cloneable live-control handle for a running topology: rescale elastic
@@ -488,8 +611,12 @@ impl Rescaler {
             .map_err(|_| self.stopped_error())?;
         // Wake the router if it is parked on an empty inbound: a no-op
         // sentinel batch. Skipped harmlessly when the channel is full —
-        // a busy router checks control between batches anyway.
-        let _ = control.nudge.try_send_msg(StreamMsg::Batch(Vec::new()));
+        // a busy router checks control between batches anyway. Exchange
+        // stages have no nudge; their control thread is always parked
+        // on the command channel itself.
+        if let Some(nudge) = &control.nudge {
+            let _ = nudge.try_send_msg(StreamMsg::Batch(Vec::new()));
+        }
         let report = ack_rx.recv().map_err(|_| self.stopped_error())??;
         self.inner
             .parallelism
@@ -516,12 +643,73 @@ impl Rescaler {
     }
 }
 
+/// The engine output endpoint: the final stage's channel plus the
+/// buffer of already-received-but-undrained tuples, shareable between
+/// the [`EngineHandle`] and any number of [`EgressTap`]s (a background
+/// shipper drains here while the owner keeps the handle).
+struct OutputBuf {
+    chan: Mutex<OutputChan>,
+    depth: Arc<Gauge>,
+}
+
+struct OutputChan {
+    rx: Receiver<StreamMsg>,
+    pending: VecDeque<Tuple>,
+}
+
+impl OutputBuf {
+    /// Drain up to `max` ready tuples into `out` (appending) without
+    /// blocking; returns how many were appended.
+    fn try_drain_into(&self, max: usize, out: &mut Vec<Tuple>) -> usize {
+        let mut chan = self.chan.lock().unwrap();
+        let start = out.len();
+        loop {
+            while out.len() - start < max {
+                match chan.pending.pop_front() {
+                    Some(t) => out.push(t),
+                    None => break,
+                }
+            }
+            if out.len() - start >= max {
+                break;
+            }
+            match chan.rx.try_recv() {
+                Ok(msg) => {
+                    self.depth.add(-1);
+                    if let StreamMsg::Batch(batch) = msg {
+                        chan.pending.extend(batch);
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        out.len() - start
+    }
+}
+
+/// A cloneable, thread-safe view of a running topology's egress,
+/// supporting non-blocking draining only. A background shipper holds
+/// one of these and polls the fragment's output from its own thread
+/// while the owning manager keeps the [`EngineHandle`] — tuples move
+/// off the operator threads without an intermediate copy-out queue.
+#[derive(Clone)]
+pub struct EgressTap {
+    buf: Arc<OutputBuf>,
+}
+
+impl EgressTap {
+    /// Drain up to `max` ready output tuples into `out`, appending;
+    /// returns how many arrived. Never blocks; 0 when nothing is
+    /// pending (including after the topology has fully drained).
+    pub fn try_drain_into(&self, max: usize, out: &mut Vec<Tuple>) -> usize {
+        self.buf.try_drain_into(max, out)
+    }
+}
+
 /// A running topology instance.
 pub struct EngineHandle {
     input: Option<StreamSender>,
-    output: Receiver<StreamMsg>,
-    output_depth: Arc<Gauge>,
-    pending: Mutex<VecDeque<Tuple>>,
+    output: Arc<OutputBuf>,
     threads: Vec<JoinHandle<()>>,
     error: ErrorSlot,
     name: String,
@@ -579,23 +767,30 @@ impl EngineHandle {
     }
 
     /// Stages fed by direct replica→replica exchange (no router hop):
-    /// static keyed parallel stages after the first stage.
+    /// keyed parallel or elastic stages after the first stage.
     pub fn linked_stages(&self) -> &[String] {
         &self.linked
     }
 
+    /// A cloneable, non-blocking egress tap — the remote-egress port a
+    /// background shipper polls from its own thread while the owning
+    /// manager keeps this handle.
+    pub fn egress_tap(&self) -> EgressTap {
+        EgressTap { buf: self.output.clone() }
+    }
+
     /// Receive one output tuple (blocking). `None` after completion.
     pub fn recv(&self) -> Option<Tuple> {
-        let mut pending = self.pending.lock().unwrap();
+        let mut chan = self.output.chan.lock().unwrap();
         loop {
-            if let Some(t) = pending.pop_front() {
+            if let Some(t) = chan.pending.pop_front() {
                 return Some(t);
             }
-            match self.output.recv() {
+            match chan.rx.recv() {
                 Ok(msg) => {
-                    self.output_depth.add(-1);
+                    self.output.depth.add(-1);
                     if let StreamMsg::Batch(batch) = msg {
-                        pending.extend(batch);
+                        chan.pending.extend(batch);
                     }
                 }
                 Err(_) => return None,
@@ -620,44 +815,25 @@ impl EngineHandle {
     /// Returns an empty vec when nothing is pending (including after
     /// the topology has fully drained).
     pub fn try_drain(&self, max: usize) -> Vec<Tuple> {
-        let mut pending = self.pending.lock().unwrap();
         let mut out = Vec::new();
-        loop {
-            while out.len() < max {
-                match pending.pop_front() {
-                    Some(t) => out.push(t),
-                    None => break,
-                }
-            }
-            if out.len() >= max {
-                return out;
-            }
-            match self.output.try_recv() {
-                Ok(msg) => {
-                    self.output_depth.add(-1);
-                    if let StreamMsg::Batch(batch) = msg {
-                        pending.extend(batch);
-                    }
-                }
-                Err(_) => return out,
-            }
-        }
+        self.output.try_drain_into(max, &mut out);
+        out
     }
 
     /// Receive with a timeout.
     pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<Tuple> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut pending = self.pending.lock().unwrap();
+        let mut chan = self.output.chan.lock().unwrap();
         loop {
-            if let Some(t) = pending.pop_front() {
+            if let Some(t) = chan.pending.pop_front() {
                 return Some(t);
             }
             let left = deadline.checked_duration_since(std::time::Instant::now())?;
-            match self.output.recv_timeout(left) {
+            match chan.rx.recv_timeout(left) {
                 Ok(msg) => {
-                    self.output_depth.add(-1);
+                    self.output.depth.add(-1);
                     if let StreamMsg::Batch(batch) = msg {
-                        pending.extend(batch);
+                        chan.pending.extend(batch);
                     }
                 }
                 Err(_) => return None,
@@ -675,11 +851,15 @@ impl EngineHandle {
     /// deadlock against a full output channel.
     pub fn finish(mut self) -> Result<Vec<Tuple>> {
         drop(self.input.take()); // close our input copy → stages drain
-        let mut out: Vec<Tuple> = self.pending.lock().unwrap().drain(..).collect();
-        while let Ok(msg) = self.output.recv() {
-            self.output_depth.add(-1);
-            if let StreamMsg::Batch(batch) = msg {
-                out.extend(batch);
+        let mut out: Vec<Tuple> = Vec::new();
+        {
+            let mut chan = self.output.chan.lock().unwrap();
+            out.extend(chan.pending.drain(..));
+            while let Ok(msg) = chan.rx.recv() {
+                self.output.depth.add(-1);
+                if let StreamMsg::Batch(batch) = msg {
+                    out.extend(batch);
+                }
             }
         }
         for t in self.threads.drain(..) {
@@ -774,16 +954,21 @@ impl StreamEngine {
         let mut linked_names: Vec<String> = Vec::new();
 
         let n = stages.len();
-        // A stage is *elastic* (rescalable; always routed) when it
-        // carries a factory; *linked* when it is a static keyed parallel
-        // stage that the upstream workers can feed directly, skipping
-        // the router hop. The first stage keeps its router: the engine
-        // input is a single channel.
+        // A stage is *elastic* (rescalable) when it carries a factory;
+        // *linked* when it is a keyed stage the upstream workers can
+        // feed directly, skipping the router hop: static keyed parallel
+        // stages get a fixed port set, elastic keyed stages a shared
+        // swappable one (`Exchange`) so rescales re-wire in place.
+        // Elastic unkeyed stages keep their router (round-robin needs a
+        // single serialization point), and the first stage always does:
+        // the engine input is a single channel.
         let elastic: Vec<bool> = stages.iter().map(|s| s.factory.is_some()).collect();
         let linked: Vec<bool> = stages
             .iter()
             .enumerate()
-            .map(|(i, s)| i > 0 && !elastic[i] && s.spec.parallelism > 1 && s.spec.key.is_some())
+            .map(|(i, s)| {
+                i > 0 && s.spec.key.is_some() && (elastic[i] || s.spec.parallelism > 1)
+            })
             .collect();
         let specs: Vec<StageSpec> = stages.iter().map(|s| s.spec.clone()).collect();
 
@@ -799,6 +984,7 @@ impl StreamEngine {
         let mut next_single: Option<Inbound> = Some((rx0, in_depth0));
         let mut next_port: Option<Port> = Some(input_port.clone());
         let mut next_linked: Option<Vec<Inbound>> = None;
+        let mut next_exchange: Option<(Weak<Exchange>, Receiver<Control>)> = None;
         let mut engine_out: Option<Inbound> = None;
 
         for (si, stage) in stages.into_iter().enumerate() {
@@ -810,6 +996,7 @@ impl StreamEngine {
             let my_single = next_single.take();
             let my_port = next_port.take();
             let my_linked = next_linked.take();
+            let my_exchange = next_exchange.take();
 
             // ---- This stage's output emitter. ----
             let out = if si + 1 == n {
@@ -820,7 +1007,9 @@ impl StreamEngine {
             } else if linked[si + 1] {
                 // Direct exchange: create the downstream replica
                 // channels now; this stage's workers (or router)
-                // partition straight into them.
+                // partition straight into them. An *elastic* next stage
+                // gets its ports wrapped in a shared `Exchange` so a
+                // live rescale can re-wire this stage's emitters.
                 let next = &specs[si + 1];
                 let mut ports = Vec::with_capacity(next.parallelism);
                 let mut rxs = Vec::with_capacity(next.parallelism);
@@ -833,7 +1022,18 @@ impl StreamEngine {
                     rxs.push((rx, depth));
                 }
                 next_linked = Some(rxs);
-                Emitter::new(ports, next.key.clone(), self.batch_capacity)
+                if elastic[si + 1] {
+                    let (ctl_tx, ctl_rx) = channel::<Control>();
+                    controls.insert(
+                        next.name.clone(),
+                        Some(StageControl { ctrl: ctl_tx.clone(), nudge: None }),
+                    );
+                    let ex = Arc::new(Exchange { ports: Mutex::new(ports), ctrl: ctl_tx });
+                    next_exchange = Some((Arc::downgrade(&ex), ctl_rx));
+                    Emitter::shared(ex, next.key.clone(), self.batch_capacity)
+                } else {
+                    Emitter::new(ports, next.key.clone(), self.batch_capacity)
+                }
             } else {
                 let (tx, rx) = sync_channel::<StreamMsg>(self.channel_depth);
                 let depth = self
@@ -849,10 +1049,15 @@ impl StreamEngine {
             let total = self.metrics.counter(&format!("stage.{name}.{}.out", spec.name));
             if linked[si] {
                 // Fed directly by the upstream stage; no router thread.
+                // (An elastic linked stage registered its exchange
+                // control endpoint during the upstream's out-wiring.)
                 linked_names.push(spec.name.clone());
-                controls.insert(spec.name.clone(), None);
+                controls.entry(spec.name.clone()).or_insert(None);
+                let stateful = replicas[0].stateful();
+                let state_key = replicas[0].state_key().map(str::to_string);
                 let gate = Arc::new(FinishGate::new());
                 let rxs = my_linked.expect("linked stage has replica inbounds");
+                let mut workers = Vec::new();
                 for (r, (mut op, (rx, rx_depth))) in
                     replicas.into_iter().zip(rxs).enumerate()
                 {
@@ -869,15 +1074,47 @@ impl StreamEngine {
                         index: r,
                         stage: format!("{}[r{r}]", spec.name),
                     };
-                    threads.push(std::thread::spawn(move || run_worker(op.as_mut(), ctx)));
+                    workers.push(std::thread::spawn(move || run_worker(op.as_mut(), ctx)));
                 }
-                // `out` drops here: the workers hold the only clones.
+                if let Some((exchange, control)) = my_exchange {
+                    // Elastic linked stage: a control thread owns the
+                    // replica generation and applies live re-wires.
+                    let ctx = ExchangeCtx {
+                        topo: name.to_string(),
+                        stage: spec.name.clone(),
+                        key: spec.key.clone(),
+                        control,
+                        factory: factory.expect("exchange stages are elastic"),
+                        exchange,
+                        out_proto: out,
+                        channel_depth: self.channel_depth,
+                        metrics: self.metrics.clone(),
+                        total,
+                        error: error.clone(),
+                        stateful,
+                        state_key,
+                        rescales: self
+                            .metrics
+                            .counter(&format!("stream.{name}.{}.rescales", spec.name)),
+                        par_gauge: self
+                            .metrics
+                            .gauge(&format!("stream.{name}.{}.parallelism", spec.name)),
+                        workers,
+                    };
+                    threads.push(std::thread::spawn(move || run_exchange(ctx)));
+                } else {
+                    // `out` drops here: the workers hold the only clones.
+                    threads.append(&mut workers);
+                }
             } else if elastic[si] || spec.parallelism > 1 {
                 let (rx, rx_depth) = my_single.expect("routed stage has a single inbound");
                 let control = if elastic[si] {
                     let (ctl_tx, ctl_rx) = channel::<Control>();
                     let nudge = my_port.expect("routed stage has an inbound port");
-                    controls.insert(spec.name.clone(), Some(StageControl { ctrl: ctl_tx, nudge }));
+                    controls.insert(
+                        spec.name.clone(),
+                        Some(StageControl { ctrl: ctl_tx, nudge: Some(nudge) }),
+                    );
                     Some(ctl_rx)
                 } else {
                     controls.insert(spec.name.clone(), None);
@@ -945,9 +1182,10 @@ impl StreamEngine {
                 error: error.clone(),
                 name: name.to_string(),
             }),
-            output: out_rx,
-            output_depth: out_depth,
-            pending: Mutex::new(VecDeque::new()),
+            output: Arc::new(OutputBuf {
+                chan: Mutex::new(OutputChan { rx: out_rx, pending: VecDeque::new() }),
+                depth: out_depth,
+            }),
             threads,
             error,
             name: name.to_string(),
@@ -1172,6 +1410,9 @@ fn run_router(mut ctx: RouterCtx) {
                     }
                     continue 'stream;
                 }
+                // Shutdown is an exchange-plane signal; routers learn
+                // about end-of-stream from their data channel instead.
+                Ok(Control::Shutdown) => {}
                 Err(TryRecvError::Empty) => {}
                 // All control handles dropped: revert to plain blocking.
                 Err(TryRecvError::Disconnected) => drop_control = true,
@@ -1279,33 +1520,10 @@ fn apply_rescale(
         }));
         return true;
     }
-    // Stateful stages can only re-partition per-key state: the same
-    // misuse shapes launch rejects, checked here because a serial stage
-    // may carry configurations that are fine at parallelism 1.
-    if ctx.stateful && degree > 1 {
-        let reject = match (&ctx.key, &ctx.state_key) {
-            (None, _) => Some(format!(
-                "stage `{}` is stateful and unkeyed; it cannot scale beyond one \
-                 replica — add a partition key (`@FIELD`) to the stage spec",
-                ctx.stage
-            )),
-            (Some(k), None) => Some(format!(
-                "stage `{}` is keyed by `{k}` but its operator keeps one window across \
-                 every key a replica owns; it cannot be re-partitioned — use a per-key \
-                 operator (`OperatorKind::window_by`)",
-                ctx.stage
-            )),
-            (Some(k), Some(sk)) if !sk.eq_ignore_ascii_case(k) => Some(format!(
-                "stage `{}` partitions tuples by `{k}` but its operator state is keyed \
-                 by `{sk}`; refusing to re-partition",
-                ctx.stage
-            )),
-            _ => None,
-        };
-        if let Some(msg) = reject {
-            let _ = ack.send(Err(Error::Stream(msg)));
-            return true; // rejected without disturbing the stage
-        }
+    if let Some(msg) = rescale_reject(&ctx.stage, ctx.stateful, degree, &ctx.key, &ctx.state_key)
+    {
+        let _ = ack.send(Err(Error::Stream(msg)));
+        return true; // rejected without disturbing the stage
     }
     let Some(factory) = &ctx.factory else {
         let _ = ack.send(Err(Error::Stream(format!(
@@ -1322,7 +1540,7 @@ fn apply_rescale(
         return false;
     }
     let (reply_tx, reply_rx) = channel::<ExportReply>();
-    for port in &gen.emitter.ports {
+    for port in gen.emitter.fixed_ports() {
         if !port.send_msg(StreamMsg::Export(reply_tx.clone())) {
             let _ = ack.send(Err(abort_error(ctx, "a replica died before the handoff")));
             return false;
@@ -1397,6 +1615,270 @@ fn apply_rescale(
 }
 
 fn abort_error(ctx: &RouterCtx, fallback: &str) -> Error {
+    Error::Stream(format!(
+        "stage `{}` rescale aborted: {}",
+        ctx.stage,
+        ctx.error.get().unwrap_or_else(|| fallback.to_string())
+    ))
+}
+
+/// Why a stateful stage cannot re-partition to `degree` replicas
+/// (`None` = admissible). The same misuse shapes launch rejects,
+/// re-checked at rescale time because a serial stage may carry
+/// configurations that are fine at parallelism 1. Shared by the router
+/// and exchange rescale paths.
+fn rescale_reject(
+    stage: &str,
+    stateful: bool,
+    degree: usize,
+    key: &Option<String>,
+    state_key: &Option<String>,
+) -> Option<String> {
+    if !stateful || degree <= 1 {
+        return None;
+    }
+    match (key, state_key) {
+        (None, _) => Some(format!(
+            "stage `{stage}` is stateful and unkeyed; it cannot scale beyond one \
+             replica — add a partition key (`@FIELD`) to the stage spec"
+        )),
+        (Some(k), None) => Some(format!(
+            "stage `{stage}` is keyed by `{k}` but its operator keeps one window across \
+             every key a replica owns; it cannot be re-partitioned — use a per-key \
+             operator (`OperatorKind::window_by`)"
+        )),
+        (Some(k), Some(sk)) if !sk.eq_ignore_ascii_case(k) => Some(format!(
+            "stage `{stage}` partitions tuples by `{k}` but its operator state is keyed \
+             by `{sk}`; refusing to re-partition"
+        )),
+        _ => None,
+    }
+}
+
+/// Control-plane state of an elastic *linked* stage: the replicas are
+/// fed directly by the upstream emitters through the shared
+/// [`Exchange`], so no router thread touches the data path — this
+/// context only serves rescales and teardown.
+struct ExchangeCtx {
+    topo: String,
+    stage: String,
+    /// Stage partition key (`None` → upstream round-robins).
+    key: Option<String>,
+    control: Receiver<Control>,
+    /// Rebuilds replicas at rescale (exchange stages are elastic).
+    factory: StageFactory,
+    /// The shared port set the upstream emitters flush through. Weak:
+    /// the upstream owns the exchange; once it drops, the stage is
+    /// draining and can no longer re-wire.
+    exchange: Weak<Exchange>,
+    /// Downstream prototype; each replica gets a fresh-buffered clone.
+    out_proto: Emitter,
+    channel_depth: usize,
+    metrics: Registry,
+    total: Arc<Counter>,
+    error: ErrorSlot,
+    stateful: bool,
+    state_key: Option<String>,
+    rescales: Arc<Counter>,
+    par_gauge: Arc<Gauge>,
+    /// Join handles of the current replica generation.
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Control loop of an elastic linked (exchange) stage. Data never flows
+/// through this thread; it parks on the control channel, applies live
+/// re-wires, and reaps the final replica generation when the upstream
+/// drops the exchange (end-of-stream). `ctx.out_proto` drops last —
+/// after every replica has flushed through its own clone — so the
+/// downstream hop closes in drain order.
+fn run_exchange(mut ctx: ExchangeCtx) {
+    loop {
+        match ctx.control.recv() {
+            Ok(Control::Rescale { degree, ack }) => {
+                if !apply_exchange_rescale(&mut ctx, degree, ack) {
+                    break;
+                }
+            }
+            Ok(Control::Shutdown) | Err(_) => break,
+        }
+    }
+    // The replica inbound ports dropped with the exchange (or with a
+    // failed handoff): the replicas drain, flush in gate order and
+    // exit.
+    for w in ctx.workers.drain(..) {
+        let _ = w.join();
+    }
+}
+
+/// Apply one rescale on an exchange stage's control thread: pause the
+/// upstream emitters by holding the exchange's port lock, drain the
+/// old generation through handoff markers, re-partition the exported
+/// per-key state, seed the new generation and swap the port set in
+/// place — the upstream never observes a partial generation. Returns
+/// false when the stage must tear down (a fault surfaced mid-handoff).
+fn apply_exchange_rescale(
+    ctx: &mut ExchangeCtx,
+    degree: usize,
+    ack: SyncSender<Result<RescaleReport>>,
+) -> bool {
+    let from = ctx.workers.len();
+    if degree == 0 {
+        let _ = ack.send(Err(Error::Stream(format!(
+            "stage `{}`: cannot rescale to parallelism 0 (must be ≥ 1)",
+            ctx.stage
+        ))));
+        return true;
+    }
+    if degree == from {
+        let _ = ack.send(Ok(RescaleReport {
+            stage: ctx.stage.clone(),
+            from,
+            to: degree,
+            moved_keys: 0,
+        }));
+        return true;
+    }
+    if let Some(msg) = rescale_reject(&ctx.stage, ctx.stateful, degree, &ctx.key, &ctx.state_key)
+    {
+        let _ = ack.send(Err(Error::Stream(msg)));
+        return true; // rejected without disturbing the stage
+    }
+    let Some(exchange) = ctx.exchange.upgrade() else {
+        // Upstream already dropped its last reference: the stage is
+        // draining toward end-of-stream; nothing left to re-wire.
+        let _ = ack.send(Err(Error::Stream(format!(
+            "stage `{}` is draining; cannot rescale",
+            ctx.stage
+        ))));
+        return true;
+    };
+
+    // ---- Pause & drain. Holding the port lock blocks every upstream
+    // flush for the duration of the handoff — the exchange-plane
+    // equivalent of the router pause. Upstream partial batches simply
+    // arrive at the new generation, partitioned by the new port count;
+    // they are *later* than everything the old replicas flushed, so
+    // per-key order holds across the swap.
+    let mut ports = exchange.ports.lock().unwrap();
+    let (reply_tx, reply_rx) = channel::<ExportReply>();
+    for port in ports.iter() {
+        if !port.send_msg(StreamMsg::Export(reply_tx.clone())) {
+            let _ =
+                ack.send(Err(exchange_abort_error(ctx, "a replica died before the handoff")));
+            return false;
+        }
+    }
+    drop(reply_tx);
+    let mut moved: Vec<KeyState> = Vec::new();
+    for _ in 0..from {
+        match reply_rx.recv() {
+            Ok(ExportReply { state: Ok(state), .. }) => moved.extend(state),
+            Ok(ExportReply { replica, state: Err(cause) }) => {
+                let _ = ack.send(Err(Error::Stream(format!(
+                    "stage `{}[r{replica}]` handoff failed: {cause}",
+                    ctx.stage
+                ))));
+                return false;
+            }
+            Err(_) => {
+                let _ = ack.send(Err(exchange_abort_error(ctx, "a replica died mid-handoff")));
+                return false;
+            }
+        }
+    }
+    // The old generation has replied and exited; reap it.
+    for w in ctx.workers.drain(..) {
+        let _ = w.join();
+    }
+
+    // ---- Re-partition the key space and seed the new generation.
+    let moved_keys = moved.len();
+    let mut per: Vec<Vec<KeyState>> = (0..degree).map(|_| Vec::new()).collect();
+    for ks in moved {
+        per[(Tuple::hash_bits(ks.key_bits) % degree as u64) as usize].push(ks);
+    }
+    let mut ops: Vec<Box<dyn Operator>> = Vec::with_capacity(degree);
+    for (r, state) in per.into_iter().enumerate() {
+        let factory = &ctx.factory;
+        let mut op = match catch(AssertUnwindSafe(|| Ok(factory()))) {
+            Ok(op) => op,
+            Err(fault) => {
+                let msg = format!("stage `{}` replica factory {fault}", ctx.stage);
+                log::error!("{msg}");
+                ctx.error.set(msg.clone());
+                let _ = ack.send(Err(Error::Stream(msg)));
+                return false;
+            }
+        };
+        if !state.is_empty() {
+            if let Err(fault) = catch(AssertUnwindSafe(|| op.import_state(state))) {
+                let msg = format!("stage `{}[r{r}]` handoff import {fault}", ctx.stage);
+                log::error!("{msg}");
+                ctx.error.set(msg.clone());
+                let _ = ack.send(Err(Error::Stream(msg)));
+                return false;
+            }
+        }
+        ops.push(op);
+    }
+    let (new_ports, new_workers) = spawn_exchange_replicas(ctx, ops);
+    *ports = new_ports;
+    drop(ports); // re-wire visible; upstream flushes resume
+    ctx.workers = new_workers;
+    ctx.rescales.inc();
+    log::info!(
+        "topology {} stage {} rescaled {from} → {degree} \
+         ({moved_keys} key snapshot(s) moved, direct exchange kept)",
+        ctx.topo,
+        ctx.stage
+    );
+    let _ = ack.send(Ok(RescaleReport {
+        stage: ctx.stage.clone(),
+        from,
+        to: degree,
+        moved_keys,
+    }));
+    true
+}
+
+/// Build and start an exchange-stage replica generation: per-replica
+/// queues, a fresh finish gate, one worker per operator instance.
+/// Returns the new ports (to install into the exchange) alongside the
+/// worker join handles.
+fn spawn_exchange_replicas(
+    ctx: &ExchangeCtx,
+    ops: Vec<Box<dyn Operator>>,
+) -> (Vec<Port>, Vec<JoinHandle<()>>) {
+    let degree = ops.len();
+    let gate = Arc::new(FinishGate::new());
+    let mut ports = Vec::with_capacity(degree);
+    let mut workers = Vec::with_capacity(degree);
+    for (r, mut op) in ops.into_iter().enumerate() {
+        let (tx, rx) = sync_channel::<StreamMsg>(ctx.channel_depth);
+        let depth = ctx
+            .metrics
+            .gauge(&format!("stream.{}.{}.r{r}.depth", ctx.topo, ctx.stage));
+        ports.push(Port { tx, depth: depth.clone() });
+        let wctx = WorkerCtx {
+            rx,
+            rx_depth: depth,
+            out: ctx.out_proto.clone_fresh(),
+            total: ctx.total.clone(),
+            replica: ctx
+                .metrics
+                .counter(&format!("stage.{}.{}.r{r}.out", ctx.topo, ctx.stage)),
+            error: ctx.error.clone(),
+            gate: Some((gate.clone(), r)),
+            index: r,
+            stage: format!("{}[r{r}]", ctx.stage),
+        };
+        workers.push(std::thread::spawn(move || run_worker(op.as_mut(), wctx)));
+    }
+    ctx.par_gauge.set(degree as i64);
+    (ports, workers)
+}
+
+fn exchange_abort_error(ctx: &ExchangeCtx, fallback: &str) -> Error {
     Error::Stream(format!(
         "stage `{}` rescale aborted: {}",
         ctx.stage,
@@ -2114,8 +2596,9 @@ mod tests {
         // 6 keys × 16 values → 4 full windows of 4 per key.
         assert_eq!(out.len(), 24);
         assert!(out.iter().all(|t| t.get("COUNT") == Some(4.0)));
-        // Elastic stages are never linked (the router is the rescale
-        // point), and neither is the first stage.
+        // Elastic keyed stages are linked too — through a swappable
+        // exchange, so they stay rescalable — but the first stage never
+        // is (the engine input is a single channel).
         let h2 = engine
             .launch_stages(
                 "dx2",
@@ -2125,8 +2608,104 @@ mod tests {
                 ],
             )
             .unwrap();
-        assert!(h2.linked_stages().is_empty());
+        assert_eq!(h2.linked_stages(), &["b".to_string()]);
+        let report = h2.rescale("b", 3).unwrap();
+        assert_eq!((report.from, report.to), (2, 3));
         h2.finish().unwrap();
+    }
+
+    #[test]
+    fn exchange_rescale_keeps_direct_path_and_state() {
+        // An elastic keyed stage behind another stage is fed by direct
+        // exchange; a live rescale must re-wire the upstream emitters
+        // in place — keeping the router-free fast path — and move open
+        // window state exactly like a routed rescale would.
+        let engine = StreamEngine::new().batch_capacity(4);
+        let h = engine
+            .launch_stages(
+                "exr",
+                vec![
+                    parallel_stage("pre", 2, Some("K"), || OperatorKind::map("pre", |t| t)),
+                    elastic_stage("w", 1, Some("K"), || {
+                        OperatorKind::window_by("w", "V", 4, "K")
+                    }),
+                ],
+            )
+            .unwrap();
+        assert_eq!(h.linked_stages(), &["w".to_string()]);
+        assert_eq!(h.parallelism("w"), Some(1));
+        let mut seq = 0u64;
+        let mut feed = |h: &EngineHandle, rounds: usize| {
+            for _ in 0..rounds {
+                for k in 0..6u64 {
+                    h.send(
+                        Tuple::new(seq, vec![]).with("K", k as f64).with("V", k as f64),
+                    )
+                    .unwrap();
+                    seq += 1;
+                }
+            }
+        };
+        feed(&h, 2); // every key holds a half-open window of 2
+        let report = h.rescale("w", 4).unwrap();
+        assert_eq!((report.from, report.to), (1, 4));
+        assert_eq!(h.parallelism("w"), Some(4));
+        feed(&h, 2); // fill the windows post-rescale
+        let mut out = h.finish().unwrap();
+        assert_eq!(out.len(), 6, "each key fills exactly one window of 4");
+        out.sort_by(|a, b| a.get("K").unwrap().total_cmp(&b.get("K").unwrap()));
+        for (k, t) in out.iter().enumerate() {
+            assert_eq!(t.get("K"), Some(k as f64));
+            assert_eq!(t.get("COUNT"), Some(4.0));
+            assert_eq!(t.get("MEAN"), Some(k as f64), "window state lost in re-wire");
+        }
+        assert_eq!(engine.metrics().counter("stream.exr.w.rescales").get(), 1);
+    }
+
+    #[test]
+    fn exchange_rescale_preserves_per_key_order() {
+        // Scale an exchange-fed stage up and down mid-stream; per-key
+        // order must hold across both re-wires and the drain.
+        let engine = StreamEngine::new().batch_capacity(3);
+        let h = engine
+            .launch_stages(
+                "exo",
+                vec![
+                    parallel_stage("a", 3, Some("KEY"), || OperatorKind::map("a", |t| t)),
+                    elastic_stage("tag", 2, Some("KEY"), || OperatorKind::map("tag", |t| t)),
+                ],
+            )
+            .unwrap();
+        assert_eq!(h.linked_stages(), &["tag".to_string()]);
+        let mut seq = 0u64;
+        let mut feed = |h: &EngineHandle, rounds: usize| {
+            for _ in 0..rounds {
+                for k in 0..6u64 {
+                    h.send(
+                        Tuple::new(seq, vec![])
+                            .with("KEY", k as f64)
+                            .with("SEQN", seq as f64),
+                    )
+                    .unwrap();
+                    seq += 1;
+                }
+            }
+        };
+        feed(&h, 20);
+        h.rescale("tag", 5).unwrap();
+        feed(&h, 20);
+        h.rescale("tag", 1).unwrap();
+        feed(&h, 20);
+        let out = h.finish().unwrap();
+        assert_eq!(out.len(), 360);
+        let mut last = std::collections::BTreeMap::new();
+        for t in &out {
+            let key = t.get("KEY").unwrap() as u64;
+            let s = t.get("SEQN").unwrap();
+            if let Some(prev) = last.insert(key, s) {
+                assert!(prev < s, "key {key} reordered across the exchange re-wire");
+            }
+        }
     }
 
     #[test]

@@ -19,7 +19,9 @@
 //!   flush-on-idle, backpressure by blocking sends, ordered drain and
 //!   fault surfacing on `finish`, live re-scaling of elastic stages
 //!   (`EngineHandle::rescale`), and direct replica→replica exchange for
-//!   static same-key chains. See `docs/stream-executor.md`.
+//!   keyed chains — static ones via fixed ports, elastic ones via a
+//!   swappable exchange that survives rescales. See
+//!   `docs/stream-executor.md`.
 //! - [`deploy`]: on-demand start/stop keyed by function profile, driven
 //!   by `start_function` / `stop_function` reactions, plus the
 //!   watermark-driven [`deploy::ScalePolicy`] autoscaler (with an
@@ -29,7 +31,10 @@
 //!   per-node managers, and inter-node stage hops ship tuple batches as
 //!   `NetMessage::StreamBatch` frames over the net plane (SimNetwork
 //!   in-process, framed TCP across processes) with zero-loss cascade
-//!   drain. See `docs/distributed-stream.md`.
+//!   drain. Hops are pumped by a background shipper thread by default
+//!   (encode-once pooled wire buffers, overlap with operator compute);
+//!   `RPULSAR_NETPLANE=sync` selects the legacy synchronous pump. See
+//!   `docs/distributed-stream.md`.
 //! - [`pipeline`]: the unified front door — a typed, validated
 //!   [`pipeline::Pipeline`] definition (builder or string-spec
 //!   parse-through) deployable unchanged on any [`pipeline::Deployer`]
@@ -48,7 +53,8 @@ pub mod tuple;
 pub use deploy::{ScalePolicy, TopologyManager};
 pub use dist::{plan_placement, DistributedTopologyManager, Fragment, PlacementPlan};
 pub use engine::{
-    EngineHandle, RescaleReport, Rescaler, StageFactory, StageRuntime, StreamEngine, StreamSender,
+    EgressTap, EngineHandle, RescaleReport, Rescaler, StageFactory, StageRuntime, StreamEngine,
+    StreamSender,
 };
 pub use operator::{KeyState, Operator, OperatorKind};
 pub use pipeline::{Deployer, Pipeline, PipelineBuilder, PipelineHandle, PipelineStage};

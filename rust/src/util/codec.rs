@@ -21,6 +21,14 @@ impl ByteWriter {
         ByteWriter { buf: Vec::with_capacity(cap) }
     }
 
+    /// Recycle an existing buffer: its contents are cleared but its
+    /// capacity is kept, so pooled wire buffers encode without
+    /// re-allocating (`net::wire::BufferPool`).
+    pub fn from_vec(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        ByteWriter { buf }
+    }
+
     /// Finish and take the underlying buffer.
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
@@ -261,6 +269,18 @@ mod tests {
         assert_eq!(r.get_str().unwrap(), "héllo");
         assert_eq!(r.get_bytes().unwrap(), &[1, 2, 3]);
         assert_eq!(r.get_str().unwrap(), "");
+    }
+
+    #[test]
+    fn from_vec_reuses_capacity() {
+        let mut w = ByteWriter::with_capacity(256);
+        w.put_u64(7);
+        let buf = w.into_bytes();
+        let cap = buf.capacity();
+        let w = ByteWriter::from_vec(buf);
+        assert!(w.is_empty(), "recycled writer must start empty");
+        let buf = w.into_bytes();
+        assert_eq!(buf.capacity(), cap, "recycling must keep the allocation");
     }
 
     #[test]

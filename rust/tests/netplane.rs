@@ -1,0 +1,388 @@
+//! Net-plane property suite: the background-shipper + zero-copy
+//! `WireBatch` data path must be observably identical to the PR-4
+//! synchronous pump — same output multiset for every chain shape and
+//! cut, per-key order preserved, byte-identical `StreamBatch` frames on
+//! the wire — while holding the encode-once contract under slow-consumer
+//! backpressure, and failing clean (first fault wins, no wedged drain)
+//! when the shipper thread itself dies.
+
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::net::wire::{
+    decode_stream_batch, encode_stream_batch_into, BufferPool, NetMessage, WireBatch,
+};
+use rpulsar::overlay::node_id::NodeId;
+use rpulsar::stream::dist::{DistributedTopologyManager, Fragment, PlacementPlan};
+use rpulsar::stream::operator::OperatorKind;
+use rpulsar::stream::topology::Topology;
+use rpulsar::stream::tuple::Tuple;
+use rpulsar::testkit::prop::NoShrink;
+use rpulsar::testkit::{forall_seeded, Gen};
+use rpulsar::util::codec::ByteWriter;
+use rpulsar::util::prng::Prng;
+use std::time::Duration;
+
+// ---- shared scenario machinery (mirrors rust/tests/cluster.rs) ----
+
+/// Chains under test: `w` is the keyed window — the stateful stage
+/// whose open state must survive node boundaries in both pump modes.
+const CHAINS: &[&[&str]] = &[&["a"], &["a", "b"], &["a", "w"], &["a", "b", "w"]];
+
+fn make_stage(name: &'static str, window: usize) -> Box<dyn rpulsar::stream::operator::Operator> {
+    match name {
+        "a" => Box::new(OperatorKind::map("a", |mut t| {
+            let v = t.get("V").unwrap_or(0.0);
+            t.set("V", v * 2.0 + 1.0);
+            t
+        })),
+        "b" => Box::new(OperatorKind::map("b", |mut t| {
+            let v = t.get("V").unwrap_or(0.0);
+            t.set("V", v + 0.5);
+            t
+        })),
+        "w" => Box::new(OperatorKind::window_by("w", "V", window, "K")),
+        other => panic!("unknown stage {other}"),
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Scenario {
+    /// (key, value) pairs; per-key arrival order is their vec order.
+    tuples: Vec<(u64, f64)>,
+    chain: usize,
+    parallelism: usize,
+    window: usize,
+    /// Fragment cut points: `cuts[i]` is the first stage index of
+    /// fragment `i+1`. Empty → a single local fragment.
+    cuts: Vec<usize>,
+    batch: usize,
+}
+
+impl Scenario {
+    fn spec(&self) -> String {
+        CHAINS[self.chain]
+            .iter()
+            .map(|name| {
+                if self.parallelism > 1 {
+                    format!("{name}*{}@K", self.parallelism)
+                } else {
+                    format!("{name}@K")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("->")
+    }
+
+    fn plan(&self, topo: &Topology, nodes: &[NodeId]) -> PlacementPlan {
+        if self.cuts.is_empty() {
+            return PlacementPlan::single(nodes[0], topo);
+        }
+        let mut fragments = Vec::new();
+        let mut start = 0usize;
+        let bounds: Vec<usize> =
+            self.cuts.iter().copied().chain([topo.stages.len()]).collect();
+        for (i, end) in bounds.into_iter().enumerate() {
+            fragments.push(Fragment {
+                node: nodes[i % nodes.len()],
+                stages: topo.stages[start..end].to_vec(),
+            });
+            start = end;
+        }
+        PlacementPlan { fragments }
+    }
+}
+
+fn scenario_gen(max_tuples: usize) -> impl Gen<NoShrink<Scenario>> {
+    move |rng: &mut Prng| {
+        let n = rng.gen_range(0, max_tuples.max(2));
+        let keys = rng.gen_range(1, 7) as u64;
+        let tuples = (0..n)
+            .map(|_| (rng.gen_range_u64(keys), rng.gen_range_u64(32) as f64))
+            .collect();
+        let chain = rng.gen_range(0, CHAINS.len());
+        let len = CHAINS[chain].len();
+        let cuts: Vec<usize> = (1..len).filter(|_| rng.gen_bool(0.6)).collect();
+        NoShrink(Scenario {
+            tuples,
+            chain,
+            parallelism: rng.gen_range(1, 4),
+            window: rng.gen_range(1, 5),
+            cuts,
+            batch: rng.gen_range(1, 33),
+        })
+    }
+}
+
+fn input_tuples(s: &Scenario) -> Vec<Tuple> {
+    let mut per_key = std::collections::BTreeMap::new();
+    s.tuples
+        .iter()
+        .enumerate()
+        .map(|(i, (k, v))| {
+            let seqn = per_key.entry(*k).or_insert(0u64);
+            let t = Tuple::new(i as u64, vec![])
+                .with("K", *k as f64)
+                .with("V", *v)
+                .with("SEQN", *seqn as f64);
+            *seqn += 1;
+            t
+        })
+        .collect()
+}
+
+fn new_dist(async_on: bool, window: usize) -> (DistributedTopologyManager, [NodeId; 3]) {
+    let mut dist = DistributedTopologyManager::new();
+    dist.set_async_shippers(async_on);
+    let nodes =
+        [NodeId::from_name("np-pi"), NodeId::from_name("np-cloud"), NodeId::from_name("np-pi2")];
+    dist.add_node(nodes[0], DeviceProfile::raspberry_pi());
+    dist.add_node(nodes[1], DeviceProfile::cloud_small());
+    dist.add_node(nodes[2], DeviceProfile::raspberry_pi());
+    for name in ["a", "b", "w"] {
+        dist.register_stage(name, move || make_stage(name, window));
+    }
+    (dist, nodes)
+}
+
+/// Run the scenario with the chosen net-plane mode and return the
+/// topology's output.
+fn run_mode(s: &Scenario, async_on: bool) -> Vec<Tuple> {
+    let (mut dist, nodes) = new_dist(async_on, s.window);
+    let topo = Topology::parse("t", &s.spec()).unwrap();
+    let plan = s.plan(&topo, &nodes);
+    dist.start("t", &s.spec(), &plan).unwrap();
+    let mut iter = input_tuples(s).into_iter();
+    loop {
+        let batch: Vec<Tuple> = iter.by_ref().take(s.batch).collect();
+        if batch.is_empty() {
+            break;
+        }
+        dist.send_batch("t", batch).unwrap();
+    }
+    dist.stop("t").unwrap()
+}
+
+/// Canonical multiset form: sorted debug rendering of tuple fields.
+fn canon(out: Vec<Tuple>) -> Vec<String> {
+    let mut v: Vec<String> = out.into_iter().map(|t| format!("{:?}", t.fields)).collect();
+    v.sort();
+    v
+}
+
+// ---- properties ----
+
+#[test]
+fn async_shipper_path_equals_sync_pump_all_chain_shapes() {
+    forall_seeded(0x0E7_0001, 128, scenario_gen(48), |s: &NoShrink<Scenario>| {
+        canon(run_mode(&s.0, false)) == canon(run_mode(&s.0, true))
+    });
+}
+
+#[test]
+fn per_key_order_preserved_on_the_async_path() {
+    forall_seeded(0x0E7_0002, 128, scenario_gen(64), |s: &NoShrink<Scenario>| {
+        let mut s = s.0.clone();
+        // Pass-through chain so every input reaches the output with its
+        // SEQN intact; keep the generated cut (that is the node hop).
+        s.chain = 1; // ["a", "b"]
+        s.cuts.retain(|c| *c < CHAINS[s.chain].len());
+        let out = run_mode(&s, true);
+        if out.len() != s.tuples.len() {
+            return false; // zero loss across every hop
+        }
+        let mut last: std::collections::BTreeMap<u64, f64> = std::collections::BTreeMap::new();
+        for t in &out {
+            let key = t.get("K").unwrap() as u64;
+            let seqn = t.get("SEQN").unwrap();
+            if let Some(prev) = last.insert(key, seqn) {
+                if prev >= seqn {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn stream_batch_frames_are_byte_identical_across_encoders() {
+    // The zero-copy encoder, the legacy enum codec, and the pooled
+    // `WireBatch` must put the *same bytes* on the wire, and both
+    // decode sides must agree — for arbitrary tuple batches.
+    let from = NodeId::from_name("np-codec");
+    forall_seeded(
+        0x0E7_0003,
+        128,
+        |rng: &mut Prng| {
+            let n = rng.gen_range(0, 24);
+            let tuples: Vec<Tuple> = (0..n)
+                .map(|i| {
+                    let len = rng.gen_range(0, 48);
+                    let payload: Vec<u8> = (0..len).map(|_| rng.gen_range_u64(256) as u8).collect();
+                    Tuple::new(i as u64, payload)
+                        .with("K", rng.gen_range_u64(5) as f64)
+                        .with("V", rng.gen_f64())
+                })
+                .collect();
+            NoShrink(tuples)
+        },
+        |case: &NoShrink<Vec<Tuple>>| {
+            let tuples = &case.0;
+            let legacy = NetMessage::StreamBatch {
+                from,
+                topology: "job".into(),
+                stage: "w".into(),
+                tuples: tuples.clone(),
+            }
+            .encode();
+            let mut w = ByteWriter::new();
+            encode_stream_batch_into(&mut w, from, "job", "w", tuples);
+            let direct = w.into_bytes();
+            let mut wb = WireBatch::encode_with(Vec::new(), from, "job", "w", tuples.clone());
+            let identical = direct == legacy && wb.bytes() == &legacy[..];
+            let sizes = wb.wire_size() == legacy.len() + 4 && wb.tuple_count() == tuples.len();
+            // Cached decoded form (async path) and wire-bytes decode
+            // (sync fidelity path) must both reproduce the input.
+            let cached = wb.take_tuples().unwrap() == *tuples;
+            wb.give_back(tuples.clone());
+            wb.forget_decoded();
+            let decoded = wb.take_tuples().unwrap() == *tuples
+                && decode_stream_batch(&legacy).unwrap() == *tuples;
+            identical && sizes && cached && decoded
+        },
+    );
+}
+
+#[test]
+fn buffer_pool_recycles_wire_buffers() {
+    let pool = BufferPool::new();
+    let (buf, recycled) = pool.get();
+    assert!(!recycled, "empty pool cannot recycle");
+    let wb = WireBatch::encode_with(
+        buf,
+        NodeId::from_name("np-pool"),
+        "job",
+        "w",
+        vec![Tuple::new(1, vec![7; 32]).with("K", 1.0)],
+    );
+    pool.put(wb.into_buffer());
+    let (buf, recycled) = pool.get();
+    assert!(recycled, "returned buffer must come back from the pool");
+    assert!(buf.capacity() > 0, "recycled buffer keeps its capacity");
+}
+
+#[test]
+fn backpressure_from_a_slow_consumer_never_re_encodes() {
+    // A deliberately slow remote stage forces ingress rejections; the
+    // staged `WireBatch` keeps its bytes across every give-back, so the
+    // encode counter equals the shipped-batch count in both pump modes
+    // — and the pool is actually recycling buffers.
+    for async_on in [false, true] {
+        let mut dist = DistributedTopologyManager::new();
+        dist.set_async_shippers(async_on);
+        let pi = NodeId::from_name("np-slow-pi");
+        let cloud = NodeId::from_name("np-slow-cloud");
+        dist.add_node(pi, DeviceProfile::raspberry_pi());
+        dist.add_node(cloud, DeviceProfile::cloud_small());
+        dist.register_stage("fast", || {
+            Box::new(OperatorKind::map("fast", |mut t| {
+                let v = t.get("V").unwrap_or(0.0);
+                t.set("V", v + 1.0);
+                t
+            }))
+        });
+        dist.register_stage("slow", || {
+            Box::new(OperatorKind::map("slow", |t| {
+                std::thread::sleep(Duration::from_micros(400));
+                t
+            }))
+        });
+        let spec = "fast@K->slow@K";
+        let topo = Topology::parse("t", spec).unwrap();
+        let plan = PlacementPlan::split_at(&topo, 1, pi, cloud);
+        dist.start("t", spec, &plan).unwrap();
+        let inputs: Vec<Tuple> = (0..384)
+            .map(|i| Tuple::new(i as u64, vec![]).with("K", (i % 5) as f64).with("V", i as f64))
+            .collect();
+        for chunk in inputs.chunks(48) {
+            dist.send_batch("t", chunk.to_vec()).unwrap();
+        }
+        let out = dist.stop("t").unwrap();
+        assert_eq!(out.len(), 384, "zero loss under backpressure (async={async_on})");
+        let encodes = dist.metrics().counter("net.hop.encodes").get();
+        let reuses = dist.metrics().counter("net.hop.buffer_reuses").get();
+        let hop_bytes = dist.metrics().counter("net.hop.bytes").get();
+        assert!(dist.network().messages() > 0);
+        assert_eq!(
+            encodes,
+            dist.network().messages(),
+            "exactly one encode per shipped batch (async={async_on})"
+        );
+        assert_eq!(hop_bytes, dist.network().bytes(), "every encoded byte crossed the wire");
+        assert!(reuses > 0, "the wire-buffer pool must recycle (async={async_on})");
+    }
+}
+
+#[test]
+fn shipper_panic_surfaces_first_fault_and_stops_clean() {
+    // Failure injection: the route's shipper thread panics on startup.
+    // The fault must surface as an error on the producer API (send /
+    // stop), teardown must still stop every fragment, and nothing may
+    // hang — the env hook is keyed by route name so only this route's
+    // shipper dies.
+    const PANIC_ENV: &str = "RPULSAR_TEST_SHIPPER_PANIC";
+    let key = "panic-route";
+    std::env::set_var(PANIC_ENV, key);
+    let (mut dist, nodes) = new_dist(true, 2);
+    let spec = "a@K->b@K";
+    let topo = Topology::parse(key, spec).unwrap();
+    let plan = PlacementPlan::split_at(&topo, 1, nodes[0], nodes[1]);
+    dist.start(key, spec, &plan).unwrap();
+    let mut fault = None;
+    for i in 0..64u64 {
+        if let Err(e) = dist.send_batch(key, vec![Tuple::new(i, vec![]).with("K", 0.0)]) {
+            fault = Some(e);
+            break;
+        }
+    }
+    let stop_err = dist.stop(key).err();
+    std::env::remove_var(PANIC_ENV);
+    let err = fault.or(stop_err).expect("an injected shipper panic must surface as an error");
+    assert!(
+        err.to_string().contains("shipper panicked"),
+        "fault must name the shipper: {err}"
+    );
+    // The route is fully torn down, not wedged: it is gone from the
+    // manager and a fresh one can start under the same key.
+    assert!(dist.stop(key).is_err(), "route must be gone after the faulted stop");
+    let (mut fresh, fresh_nodes) = new_dist(true, 2);
+    let plan = PlacementPlan::split_at(&topo, 1, fresh_nodes[0], fresh_nodes[1]);
+    fresh.start(key, spec, &plan).unwrap();
+    fresh.send_batch(key, vec![Tuple::new(0, vec![]).with("K", 0.0)]).unwrap();
+    assert_eq!(fresh.stop(key).unwrap().len(), 1);
+}
+
+#[test]
+fn partition_mid_stream_fails_the_async_route_without_wedging() {
+    let (mut dist, nodes) = new_dist(true, 2);
+    let spec = "a@K->b@K";
+    let topo = Topology::parse("t", spec).unwrap();
+    let plan = PlacementPlan::split_at(&topo, 1, nodes[0], nodes[1]);
+    dist.start("t", spec, &plan).unwrap();
+    for i in 0..4u64 {
+        dist.send_batch("t", vec![Tuple::new(i, vec![]).with("K", 0.0)]).unwrap();
+    }
+    // Cut the downstream node. The shipper hits the dead hop, records
+    // the fault, and every producer-side call surfaces it — including
+    // the final stop, which must still tear everything down.
+    dist.network().take_down(nodes[1]);
+    let mut fault = None;
+    for i in 4..512u64 {
+        if let Err(e) = dist.send_batch("t", vec![Tuple::new(i, vec![]).with("K", 0.0)]) {
+            fault = Some(e);
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(50));
+    }
+    let err = fault.or(dist.stop("t").err()).expect("a dead hop must fail the route");
+    assert!(err.to_string().contains("unreachable"), "{err}");
+}
