@@ -1,0 +1,237 @@
+#!/usr/bin/env python3
+"""Behavioral sim for the federated matching plane (PR 7).
+
+The container has no cargo, so the sharding/federation design is validated
+here first, with the exact hash arithmetic `ar/shard.rs` implements:
+
+  1. HRW (rendezvous) shard map: removing a shard moves ONLY the keys it
+     owned; adding a shard moves ONLY the keys the new shard wins.  This is
+     the property the churn fuzz suite asserts in Rust.
+  2. TTL register -> expire -> re-register lifecycle: a swept registration
+     never receives a match ("no stale matches after expiry"), and
+     re-registration resumes delivery.
+  3. The satellite-3 bug: after shard churn moves topic ownership, an
+     owner-routed retire_topic misses the old shard and leaves a stale
+     match cache behind; the fixed all-shard retire does not.
+
+All arithmetic is u64 (masked), mirroring wrapping Rust ops.
+"""
+
+import random
+
+MASK = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & MASK
+    return h
+
+
+def mix(z: int) -> int:
+    """splitmix64 finalizer, as in util/prng.rs."""
+    z = (z + 0x9E3779B97F4A7C15) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return z ^ (z >> 31)
+
+
+def weight(shard: str, key: str) -> int:
+    return mix(fnv1a64(shard.encode()) ^ mix(fnv1a64(key.encode())))
+
+
+def owner(shards, key):
+    # Tie-break on name for determinism (weights are u64 so ties are
+    # astronomically unlikely, but the Rust code breaks ties the same way).
+    return max(shards, key=lambda s: (weight(s, key), s))
+
+
+def check_hrw_stability(rng):
+    shards = [f"shard-{i}" for i in range(rng.randint(2, 9))]
+    keys = [f"topic{rng.randrange(10**6):06}" for _ in range(500)]
+    before = {k: owner(shards, k) for k in keys}
+
+    # Remove-stability: only keys owned by the removed shard move.
+    victim = rng.choice(shards)
+    rest = [s for s in shards if s != victim]
+    for k in keys:
+        after = owner(rest, k)
+        if before[k] != victim:
+            assert after == before[k], (
+                f"key {k} moved {before[k]} -> {after} though {victim} removed"
+            )
+        else:
+            assert after != victim
+
+    # Add-stability: only keys the new shard wins move.
+    newcomer = f"shard-{rng.randrange(100, 200)}"
+    grown = shards + [newcomer]
+    for k in keys:
+        after = owner(grown, k)
+        assert after in (before[k], newcomer)
+
+    # Balance sanity: HRW spreads load; no shard should be pathological.
+    if len(shards) >= 4:
+        counts = {s: 0 for s in shards}
+        for k in keys:
+            counts[before[k]] += 1
+        assert max(counts.values()) < len(keys) * 0.75
+
+
+class Plane:
+    """Sharded matching plane, topic-granular (profiles abstracted to
+    exact topic keys here; the Rust side layers real matching on top)."""
+
+    def __init__(self, shards):
+        self.shards = {s: {"topics": {}, "cache": {}} for s in shards}
+        self.regs = {}  # consumer -> dict(pattern, ttl, registered_at, cursor)
+
+    def register(self, consumer, pattern, ttl, now):
+        # Fan-out idiom: the registration exists at every shard; only the
+        # TTL watermark is plane-level.  Cursors survive re-registration.
+        prev = self.regs.get(consumer)
+        cursor = prev["cursor"] if prev else {}
+        self.regs[consumer] = {
+            "pattern": pattern, "ttl": ttl, "registered_at": now, "cursor": cursor,
+        }
+        for sh in self.shards.values():
+            sh["cache"][consumer] = [
+                t for t in sh["topics"] if pattern in t
+            ]
+
+    def sweep(self, now):
+        expired = [
+            c for c, r in self.regs.items()
+            if r["ttl"] is not None and now - r["registered_at"] >= r["ttl"]
+        ]
+        for c in expired:
+            del self.regs[c]
+            for sh in self.shards.values():
+                sh["cache"].pop(c, None)
+        return expired
+
+    def publish(self, topic, now):
+        own = owner(list(self.shards), topic)
+        sh = self.shards[own]
+        if topic not in sh["topics"]:
+            sh["topics"][topic] = []
+            for c, r in self.regs.items():
+                if r["pattern"] in topic:
+                    sh["cache"].setdefault(c, []).append(topic)
+        sh["topics"][topic].append(now)
+
+    def fetch(self, consumer):
+        if consumer not in self.regs:
+            return []
+        out = []
+        cur = self.regs[consumer]["cursor"]
+        for sh in self.shards.values():
+            for t in sh["cache"].get(consumer, []):
+                q = sh["topics"].get(t, [])
+                seen = cur.get(t, 0)
+                out.extend(q[seen:])
+                cur[t] = len(q)
+        return out
+
+    def retire_topic(self, topic, all_shards):
+        if all_shards:
+            targets = list(self.shards.values())
+        else:  # the buggy owner-only route
+            targets = [self.shards[owner(list(self.shards), topic)]]
+        hit = False
+        for sh in targets:
+            if topic in sh["topics"]:
+                del sh["topics"][topic]
+                for cached in sh["cache"].values():
+                    if topic in cached:
+                        cached.remove(topic)
+                hit = True
+        return hit
+
+
+def check_ttl_lifecycle(rng):
+    plane = Plane([f"shard-{i}" for i in range(rng.randint(2, 5))])
+    now = 0.0
+    live = set()
+    for _ in range(60):
+        now += rng.random()
+        op = rng.random()
+        c = f"consumer-{rng.randrange(6)}"
+        if op < 0.35:
+            plane.register(c, rng.choice(["drone", "lidar", "cam"]), rng.uniform(0.5, 3.0), now)
+            live.add(c)
+        elif op < 0.7:
+            plane.publish(f"{rng.choice(['drone', 'lidar', 'cam'])}{rng.randrange(40):02}", now)
+        else:
+            for e in plane.sweep(now):
+                live.discard(e)
+        # Invariant: a consumer whose TTL has lapsed and been swept gets
+        # nothing; a never-registered consumer gets nothing.
+        dead = f"consumer-{rng.randrange(6)}"
+        if dead not in plane.regs:
+            assert plane.fetch(dead) == [], "stale match after expiry"
+    # Expiry then re-register resumes delivery without replay:
+    plane = Plane(["a", "b"])
+    plane.register("c1", "drone", 1.0, 0.0)
+    plane.publish("drone01", 0.1)
+    got = plane.fetch("c1")
+    assert len(got) == 1
+    assert plane.sweep(2.0) == ["c1"]
+    plane.publish("drone01", 2.1)
+    assert plane.fetch("c1") == [], "delivered to expired registration"
+    # Re-register after a sweep is a FRESH subscription: cursors restart at 0
+    # and the retained backlog replays (the Broker's at-least-once contract;
+    # cursors survive only live re-registration, i.e. renew-before-expiry).
+    plane.register("c1", "drone", 1.0, 2.5)
+    got = plane.fetch("c1")
+    assert got == [0.1, 2.1], f"re-register should replay retained backlog, got {got}"
+    # Renew-before-expiry DOES preserve the cursor:
+    plane.publish("drone01", 2.6)
+    plane.register("c1", "drone", 1.0, 2.7)
+    got = plane.fetch("c1")
+    assert got == [2.6], f"live re-register should resume past cursor, got {got}"
+
+
+def check_cross_shard_retire(rng):
+    # Ownership of `topic` must move when a shard is added; find such a case.
+    for attempt in range(200):
+        shards = [f"shard-{rng.randrange(1000)}" for _ in range(3)]
+        topic = f"drone{rng.randrange(10**4):04}"
+        extra = f"shard-{rng.randrange(1000, 2000)}"
+        if owner(shards + [extra], topic) == extra:
+            break
+    else:
+        raise AssertionError("no ownership-moving churn case found")
+
+    for fixed in (False, True):
+        plane = Plane(shards)
+        plane.register("c1", "drone", None, 0.0)
+        plane.publish(topic, 0.0)
+        plane.shards[extra] = {"topics": {}, "cache": {}}
+        plane.register("c1", "drone", None, 0.1)  # re-register reaches new shard
+        plane.retire_topic(topic, all_shards=fixed)
+        stale = plane.fetch("c1")
+        if fixed:
+            assert stale == [], "all-shard retire left a stale match"
+        else:
+            assert stale != [], "expected the owner-only route to exhibit the bug"
+
+
+def main():
+    rng = random.Random(0xA11CE)
+    for i in range(300):
+        check_hrw_stability(rng)
+    for i in range(300):
+        check_ttl_lifecycle(rng)
+    check_cross_shard_retire(rng)
+    print("federated_matching_sim: all checks passed")
+    print("  - HRW add/remove stability x300 (only owned keys move)")
+    print("  - TTL register/expire/re-register x300 (no stale matches)")
+    print("  - cross-shard retirement: owner-only route exhibits the bug,")
+    print("    all-shard retire fixes it")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,14 +10,24 @@
 //! itself — index-backed profile queries (`ar::index`) against the
 //! O(N) linear `matching::matches` scan they replaced, at growing
 //! stored-profile counts. Run with `-- --test` for a CI smoke pass.
+//!
+//! Federated arm: the sharded matching plane under churn — profiles
+//! rendezvous-hashed over shards, queries fanned out and verified
+//! per-candidate only (the matcher-call counter proves zero full
+//! scans on the fetch path), shard removal moving exactly the removed
+//! shard's keys, and TTL-expired subscriptions provably swept. Writes
+//! `BENCH_matching.json` at the repo root. Smoke scales the population
+//! down; the full run uses 1M profiles / 100k queries.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use common::{header, mean_std, smoke_mode, windowed_throughput};
-use rpulsar::ar::index::IndexedProfiles;
+use rpulsar::ar::index::{IndexedProfiles, ProfileIndex};
 use rpulsar::ar::matching;
 use rpulsar::ar::profile::Profile;
+use rpulsar::ar::shard::{MatchingPlane, ShardMap, ShardedBroker};
+use rpulsar::mmq::QueueOptions;
 use rpulsar::baselines::nitrite_like::NitriteLikeStore;
 use rpulsar::baselines::sqlite_like::SqliteLikeStore;
 use rpulsar::baselines::RecordStore;
@@ -102,6 +112,7 @@ fn main() {
     println!("(series shape: R-Pulsar flat/improving, baselines degrade past cache capacity)");
 
     matching_plane_ablation(smoke);
+    federated_matching_arm(smoke);
 }
 
 /// Build the deterministic stored-profile population: simple 3-term
@@ -162,5 +173,245 @@ fn matching_plane_ablation(smoke: bool) {
                 "indexed arm must be ≥5x the scan arm at n={n}, got {speedup:.1}x"
             );
         }
+    }
+}
+
+/// One shard of the federated plane: the index plus its profile slab
+/// (the index returns pids; the slab verifies and resolves them).
+struct FedShard {
+    index: ProfileIndex,
+    slab: Vec<Profile>,
+}
+
+impl FedShard {
+    fn new() -> Self {
+        FedShard { index: ProfileIndex::new(), slab: Vec::new() }
+    }
+
+    fn insert(&mut self, p: Profile) {
+        self.index.insert(self.slab.len() as u32, &p);
+        self.slab.push(p);
+    }
+}
+
+/// The Fig. 6 federated arm: rendezvous-sharded matching at scale with
+/// churn, zero-scan counter proofs, and the TTL register/expire/sweep
+/// lifecycle. Full scale is 1M profiles / 100k queries over 4 shards
+/// (minutes on a laptop — run `cargo bench --bench fig6_exact_query`
+/// without `-- --test`); smoke shrinks the population for CI.
+fn federated_matching_arm(smoke: bool) {
+    header(
+        "Fig. 6 federated arm — sharded matching plane at 1M profiles",
+        "HRW shards + candidate-only verify: no full scans, churn moves only owned keys",
+    );
+    let n: usize = if smoke { 20_000 } else { 1_000_000 };
+    let q: usize = if smoke { 400 } else { 100_000 };
+    let equiv_stride = if smoke { 1 } else { 500 };
+    let shard_names = ["alpha", "beta", "gamma", "delta"];
+
+    // Build: every profile lives on exactly its HRW owner shard.
+    let mut map = ShardMap::new(shard_names);
+    let mut shards: std::collections::BTreeMap<String, FedShard> =
+        shard_names.iter().map(|s| (s.to_string(), FedShard::new())).collect();
+    let stored = stored_profiles(n);
+    let t0 = Instant::now();
+    for p in &stored {
+        let owner = map.owner(&p.render()).unwrap().to_string();
+        shards.get_mut(&owner).unwrap().insert(p.clone());
+    }
+    let build_s = t0.elapsed().as_secs_f64();
+    let populations: Vec<usize> = shards.values().map(|s| s.slab.len()).collect();
+    println!(
+        "built {n} profiles over {} shards in {build_s:.2}s (populations {populations:?})"
+    );
+
+    // Query mix: exact tuples, partial keywords, numeric ranges — the
+    // three Fig. 6/7 shapes — fanned out to every shard. The matcher
+    // counter proves every `matches` call was a per-candidate verify.
+    let query_at = |i: usize| -> Profile {
+        match i % 3 {
+            0 => stored[(i * 37) % n].clone(),
+            1 => Profile::parse(&format!("node{:05}*", (i * 131) % (n / 10).max(1))).unwrap(),
+            _ => {
+                let lo = (i * 29) % 90;
+                Profile::parse(&format!("zone:{lo}..{}", lo + 7)).unwrap()
+            }
+        }
+    };
+    let mc0 = matching::match_calls();
+    let mut candidates = 0u64;
+    let mut fed_hits = 0usize;
+    let t0 = Instant::now();
+    for i in 0..q {
+        let query = query_at(i);
+        for shard in shards.values() {
+            let cands = shard.index.forward_candidates(&query);
+            candidates += cands.len() as u64;
+            fed_hits += cands
+                .iter()
+                .filter(|&&pid| matching::matches(&query, &shard.slab[pid as usize]))
+                .count();
+        }
+    }
+    let fed_qps = q as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let verify_calls = matching::match_calls() - mc0;
+    assert_eq!(
+        verify_calls, candidates,
+        "every matcher call on the fetch path must be a per-candidate verify — zero full scans"
+    );
+
+    // Positional routing takes the same indexed path (satellite of the
+    // same scan surface): counter-asserted like the associative form.
+    let pm0 = matching::positional_match_calls();
+    let mut pos_candidates = 0u64;
+    for i in 0..q.min(if smoke { 200 } else { 10_000 }) {
+        let query = stored[(i * 53) % n].clone();
+        for shard in shards.values() {
+            let cands = shard.index.forward_candidates_positional(&query);
+            pos_candidates += cands.len() as u64;
+            for pid in cands {
+                matching::matches_positional(&query, &shard.slab[pid as usize]);
+            }
+        }
+    }
+    let pos_calls = matching::positional_match_calls() - pm0;
+    assert_eq!(pos_calls, pos_candidates, "positional fetch path must not full-scan either");
+
+    // Set-equivalence against the shard-local linear scan baseline, on
+    // a stride of the query stream (every query in smoke mode).
+    let t0 = Instant::now();
+    let mut scan_hits = 0usize;
+    let mut scanned_queries = 0usize;
+    for i in (0..q).step_by(equiv_stride) {
+        let query = query_at(i);
+        scanned_queries += 1;
+        let mut fed: Vec<String> = Vec::new();
+        let mut scan: Vec<String> = Vec::new();
+        for shard in shards.values() {
+            fed.extend(
+                shard
+                    .index
+                    .forward_candidates(&query)
+                    .into_iter()
+                    .filter(|&pid| matching::matches(&query, &shard.slab[pid as usize]))
+                    .map(|pid| shard.slab[pid as usize].render()),
+            );
+            scan.extend(
+                shard
+                    .slab
+                    .iter()
+                    .filter(|s| matching::matches(&query, s))
+                    .map(|s| s.render()),
+            );
+        }
+        fed.sort();
+        scan.sort();
+        assert_eq!(fed, scan, "federated result must be set-equivalent to the scan");
+        scan_hits += scan.len();
+    }
+    let scan_qps = scanned_queries as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let _ = scan_hits;
+
+    // Churn: drop one shard; exactly its keys re-home (HRW property),
+    // and the re-homed plane answers the same queries.
+    let victim = "delta";
+    let moved = shards.remove(victim).unwrap();
+    map.remove(victim);
+    for p in &moved.slab {
+        debug_assert_ne!(map.owner(&p.render()).unwrap(), victim);
+        let owner = map.owner(&p.render()).unwrap().to_string();
+        shards.get_mut(&owner).unwrap().insert(p.clone());
+    }
+    let moved_keys = moved.slab.len();
+    for p in stored.iter().step_by((n / 1000).max(1)) {
+        // Sampled stability check: survivors kept their owner unless
+        // they were the victim's.
+        let owner = map.owner(&p.render()).unwrap();
+        assert!(shard_names.contains(&owner) && owner != victim);
+    }
+    for i in (0..q).step_by(equiv_stride.max(10)) {
+        let query = query_at(i);
+        let mut fed = 0usize;
+        let mut scan = 0usize;
+        for shard in shards.values() {
+            fed += shard
+                .index
+                .forward_candidates(&query)
+                .into_iter()
+                .filter(|&pid| matching::matches(&query, &shard.slab[pid as usize]))
+                .count();
+            scan += shard.slab.iter().filter(|s| matching::matches(&query, s)).count();
+        }
+        assert_eq!(fed, scan, "post-churn federated result must stay scan-equivalent");
+    }
+    println!(
+        "churn: removed `{victim}`, re-homed {moved_keys} keys (only its own); \
+         results unchanged"
+    );
+
+    // TTL lifecycle on the broker-backed plane: a zero-TTL registration
+    // is provably swept from every shard, and a re-register replays.
+    let dir = std::env::temp_dir()
+        .join("rpulsar-bench")
+        .join(format!("fig6-fed-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts =
+        QueueOptions { dir: dir.clone(), segment_bytes: 1 << 18, max_segments: 4, sync_every: 0 };
+    let mut plane = ShardedBroker::new(opts, shard_names);
+    plane.subscribe_with_ttl(
+        "ephemeral",
+        Profile::parse("node*,*,zone:*").unwrap(),
+        Some(std::time::Duration::ZERO),
+    );
+    for p in stored.iter().take(16) {
+        plane.publish(p, b"tuple").unwrap();
+    }
+    let swept = plane.sweep_expired();
+    assert_eq!(swept, ["ephemeral"], "zero-TTL registration must be swept");
+    assert!(plane.fetch("ephemeral", 16).is_err(), "swept consumer no longer fetches");
+    plane.subscribe_with_ttl("ephemeral", Profile::parse("node*,*,zone:*").unwrap(), None);
+    assert_eq!(
+        plane.fetch("ephemeral", 64).unwrap().len(),
+        16,
+        "post-expiry re-register replays the retained backlog"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("ttl: swept {} expired registration(s); re-register replayed 16", swept.len());
+
+    let speedup = fed_qps / scan_qps;
+    println!(
+        "federated {fed_qps:>10.0} q/s   shard-local scan {scan_qps:>8.0} q/s   \
+         ({speedup:.1}x, {fed_hits} hits, {verify_calls} candidate verifies)"
+    );
+    write_matching_json(
+        smoke, n, q, fed_qps, scan_qps, verify_calls, candidates, moved_keys, swept.len(),
+    );
+}
+
+/// Bench-trajectory record for later PRs, written at the repo root.
+#[allow(clippy::too_many_arguments)]
+fn write_matching_json(
+    smoke: bool,
+    profiles: usize,
+    queries: usize,
+    fed_qps: f64,
+    scan_qps: f64,
+    verify_calls: u64,
+    candidates: u64,
+    moved_keys: usize,
+    ttl_swept: usize,
+) {
+    let json = format!(
+        "{{\n  \"bench\": \"fig6_federated_matching\",\n  \"smoke\": {smoke},\n  \
+         \"profiles\": {profiles},\n  \"queries\": {queries},\n  \
+         \"federated_qps\": {fed_qps:.1},\n  \"shard_scan_qps\": {scan_qps:.1},\n  \
+         \"matcher_calls\": {verify_calls},\n  \"candidates\": {candidates},\n  \
+         \"full_scans_on_fetch_path\": 0,\n  \"moved_keys_on_churn\": {moved_keys},\n  \
+         \"ttl_swept\": {ttl_swept}\n}}\n"
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_matching.json");
+    match std::fs::write(path, json) {
+        Ok(()) => println!("bench trajectory written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -5,6 +5,11 @@
 //!
 //! Paper result: same shape as Fig. 6 — baselines fine when small,
 //! R-Pulsar better as the workload increases.
+//!
+//! Second ablation arm: interval tree vs linear interval list for
+//! range-heavy populations — stabbing and overlap queries against
+//! stored `lo..hi` profiles, where the old interval *list* degraded to
+//! O(ranges) per lookup.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -114,6 +119,75 @@ fn main() {
     }
 
     matching_plane_ablation(smoke);
+    interval_tree_ablation(smoke);
+}
+
+/// Interval-tree ablation: stored profiles are numeric ranges
+/// (`zone:lo..hi`), the Fig. 7 query stream stabs and overlaps them.
+/// The baseline is the linear interval list the tree replaced: every
+/// stored range tested per query via the matching scan. Hit counts
+/// must agree exactly; at scale the tree must win clearly.
+fn interval_tree_ablation(smoke: bool) {
+    header(
+        "Fig. 7 ablation — range matching: interval tree vs linear list",
+        "sorted-lo prefix + subtree-max-hi pruning replaces the O(ranges) sweep",
+    );
+    println!(
+        "{:<8} {:>16} {:>16} {:>9}",
+        "ranges", "tree (q/s)", "list (q/s)", "speedup"
+    );
+    let sizes: &[usize] = if smoke { &[256] } else { &[1_000, 10_000, 40_000] };
+    for &n in sizes {
+        // Mostly-short ranges over a wide domain, plus a few giants so
+        // subtree-max pruning actually earns its keep.
+        let stored: Vec<Profile> = (0..n)
+            .map(|i| {
+                let lo = (i * 37) % (n * 4);
+                let span = if i % 97 == 0 { n } else { 3 + i % 13 };
+                Profile::parse(&format!("zone:{lo}..{}", lo + span)).unwrap()
+            })
+            .collect();
+        let mut ix: IndexedProfiles<Profile> = IndexedProfiles::new();
+        for p in &stored {
+            ix.insert(p.clone());
+        }
+        let queries = (1_000_000 / n).clamp(100, 1_000);
+        // Alternate stabbing (`zone:x`) and overlap (`zone:a..b`).
+        let query_at = |i: usize| {
+            let x = (i * 131) % (n * 4);
+            if i % 2 == 0 {
+                Profile::parse(&format!("zone:{x}")).unwrap()
+            } else {
+                Profile::parse(&format!("zone:{x}..{}", x + 9)).unwrap()
+            }
+        };
+
+        let t0 = Instant::now();
+        let mut list_hits = 0usize;
+        for i in 0..queries {
+            let q = query_at(i);
+            list_hits += stored.iter().filter(|s| matching::matches(&q, s)).count();
+        }
+        let list_qps = queries as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+        let t0 = Instant::now();
+        let mut tree_hits = 0usize;
+        for i in 0..queries {
+            let q = query_at(i);
+            tree_hits += ix.query(&q).len();
+        }
+        let tree_qps = queries as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+        assert_eq!(tree_hits, list_hits, "tree and list must agree on every range query");
+        let speedup = tree_qps / list_qps;
+        println!("{n:<8} {tree_qps:>16.0} {list_qps:>16.0} {speedup:>8.1}x");
+        if !smoke && n >= 10_000 {
+            assert!(
+                speedup >= 3.0,
+                "interval tree must be ≥3x the linear list at n={n}, got {speedup:.1}x"
+            );
+        }
+    }
 }
 
 /// `indexed` vs `scan` ablation for the partial-keyword (prefix) query

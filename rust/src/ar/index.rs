@@ -15,9 +15,13 @@
 //!   prefix; a concrete keyword walks its own (char-boundary) prefixes,
 //!   and a prefix query range-scans the sorted keyword map, so partial
 //!   keywords on *either* side are honoured.
-//! - **Interval lists** — numeric-looking exact values are mirrored into
+//! - **Interval tree** — numeric-looking exact values are mirrored into
 //!   a `total_cmp`-ordered map for `10..20` range queries; stored range
-//!   patterns live in a small interval list scanned for overlap.
+//!   patterns live in an [`IntervalTree`] (sorted-by-lo entries plus an
+//!   implicit segment tree over max-`hi`), so both stabbing and overlap
+//!   queries are output-sensitive instead of scanning every stored range
+//!   — at 1M profiles the former interval *list* was a correctness-of-
+//!   scale bug, not a style issue.
 //! - **Wildcard fall-through** — `*` terms (and other always-accepting
 //!   shapes) are kept in fall-through sets that are unioned into every
 //!   lookup, so the index never misses what the scan would find.
@@ -49,7 +53,11 @@ use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::ops::Bound;
 
-/// One stored term occurrence: profile id + term slot within it.
+/// One stored term occurrence: profile id + term slot within it. The
+/// slot is what makes positional candidate generation possible: the
+/// positional matcher evaluates query term `i` against stored term `i`
+/// only, so its candidates are the ordinary per-term lookups filtered to
+/// `slot == i` (see [`ProfileIndex::forward_candidates_positional`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 struct Posting {
     pid: u32,
@@ -96,6 +104,118 @@ impl Ord for F64Key {
     }
 }
 
+/// Stored numeric-range patterns. Entries are kept sorted by `lo`
+/// (`total_cmp`) with an implicit segment tree of subtree max-`hi` on
+/// top; recent inserts sit in a small linear `pending` buffer until a
+/// rebuild amortizes them in (static-main + dynamic-buffer, so insert
+/// stays amortized O(log n) without per-insert re-sorting).
+///
+/// Both query shapes reduce to one primitive over the sorted array —
+/// "among the prefix with `lo <= bound`, report entries with
+/// `hi >= floor`":
+///
+/// - stabbing at concrete `x`: `bound = floor = x`;
+/// - overlap with `[qlo, qhi]`: `bound = qhi`, `floor = qlo`
+///   (the matcher's `slo <= qhi && qlo <= shi`, including its behaviour
+///   on inverted query ranges, falls out of the same predicate).
+///
+/// The descent visits only subtrees whose max-`hi` clears the floor, so
+/// reporting is O(log n + k·log n) instead of the former O(n) list scan.
+/// NaN-bounded entries are dropped at insert: every IEEE `<=` involving
+/// NaN is false on both the matcher and index paths, so they can never
+/// match — and excluding them keeps "sorted by total_cmp ⇒ `lo <= bound`
+/// is a prefix property" true.
+#[derive(Debug, Default)]
+struct IntervalTree {
+    /// Intervals sorted by `lo` under `total_cmp` (no NaN bounds).
+    built: Vec<(f64, f64, Posting)>,
+    /// Implicit segment tree over `built`: `max_hi[node]` = max `hi` in
+    /// the node's range. Node 1 is the root; children of `n` are `2n`,
+    /// `2n+1` (size 4·len covers the skewed implicit layout).
+    max_hi: Vec<f64>,
+    /// Inserts since the last rebuild, scanned linearly at query time.
+    pending: Vec<(f64, f64, Posting)>,
+}
+
+impl IntervalTree {
+    fn insert(&mut self, lo: f64, hi: f64, p: Posting) {
+        if lo.is_nan() || hi.is_nan() {
+            return;
+        }
+        self.pending.push((lo, hi, p));
+        if self.pending.len() >= 16 && self.pending.len() * 4 >= self.built.len() {
+            self.rebuild();
+        }
+    }
+
+    fn rebuild(&mut self) {
+        self.built.append(&mut self.pending);
+        self.built.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let n = self.built.len();
+        self.max_hi = vec![f64::NEG_INFINITY; 4 * n];
+        if n > 0 {
+            self.build_node(1, 0, n);
+        }
+    }
+
+    fn build_node(&mut self, node: usize, lo_i: usize, hi_i: usize) -> f64 {
+        let m = if hi_i - lo_i == 1 {
+            self.built[lo_i].1
+        } else {
+            let mid = lo_i + (hi_i - lo_i) / 2;
+            let l = self.build_node(2 * node, lo_i, mid);
+            let r = self.build_node(2 * node + 1, mid, hi_i);
+            l.max(r)
+        };
+        self.max_hi[node] = m;
+        m
+    }
+
+    /// Report every interval with `lo <= bound && hi >= floor`.
+    fn report(&self, bound: f64, floor: f64, out: &mut Vec<Posting>) {
+        if bound.is_nan() || floor.is_nan() {
+            return;
+        }
+        let r = self.built.partition_point(|e| e.0 <= bound);
+        if r > 0 {
+            self.report_node(1, 0, self.built.len(), r, floor, out);
+        }
+        out.extend(
+            self.pending
+                .iter()
+                .filter(|(slo, shi, _)| *slo <= bound && *shi >= floor)
+                .map(|&(_, _, p)| p),
+        );
+    }
+
+    fn report_node(
+        &self,
+        node: usize,
+        lo_i: usize,
+        hi_i: usize,
+        r: usize,
+        floor: f64,
+        out: &mut Vec<Posting>,
+    ) {
+        if lo_i >= r || self.max_hi[node] < floor {
+            return;
+        }
+        if hi_i - lo_i == 1 {
+            out.push(self.built[lo_i].2);
+            return;
+        }
+        let mid = lo_i + (hi_i - lo_i) / 2;
+        self.report_node(2 * node, lo_i, mid, r, floor, out);
+        self.report_node(2 * node + 1, mid, hi_i, r, floor, out);
+    }
+
+    /// Every stored interval (wildcard lookups accept all of them).
+    fn all(&self, out: &mut Vec<Posting>) {
+        out.extend(self.built.iter().map(|&(_, _, p)| p));
+        out.extend(self.pending.iter().map(|&(_, _, p)| p));
+    }
+}
+
 /// Postings for one value dimension, bucketed by pattern shape. Lookup
 /// returns every stored value `u` with `value_accepts(u, v)` — the
 /// relation is symmetric, so the same structure serves both query
@@ -108,8 +228,8 @@ struct ValueIndex {
     prefix: BTreeMap<String, Vec<Posting>>,
     /// Exact keywords that parse as (non-NaN) numbers, for range queries.
     numeric: BTreeMap<F64Key, Vec<Posting>>,
-    /// Stored numeric-range patterns (interval list, overlap-scanned).
-    ranges: Vec<(f64, f64, Posting)>,
+    /// Stored numeric-range patterns.
+    ranges: IntervalTree,
     /// Stored wildcards: accepted by every lookup.
     wildcard: Vec<Posting>,
 }
@@ -122,7 +242,7 @@ impl ValueIndex {
                 self.prefix.entry(fold(s).into_owned()).or_default().push(p)
             }
             Value::Wildcard => self.wildcard.push(p),
-            Value::NumRange(lo, hi) => self.ranges.push((*lo, *hi, p)),
+            Value::NumRange(lo, hi) => self.ranges.insert(*lo, *hi, p),
         }
     }
 
@@ -147,7 +267,7 @@ impl ValueIndex {
                 // entries mirror `exact` ones, so they are skipped).
                 out.extend(self.exact.values().flatten());
                 out.extend(self.prefix.values().flatten());
-                out.extend(self.ranges.iter().map(|&(_, _, p)| p));
+                self.ranges.all(out);
                 out.extend(&self.wildcard);
             }
             Value::NumRange(lo, hi) => self.lookup_range(*lo, *hi, out),
@@ -170,14 +290,8 @@ impl ValueIndex {
             }
         }
         if let Ok(x) = k.parse::<f64>() {
-            if !x.is_nan() {
-                out.extend(
-                    self.ranges
-                        .iter()
-                        .filter(|(lo, hi, _)| x >= *lo && x <= *hi)
-                        .map(|&(_, _, p)| p),
-                );
-            }
+            // Stabbing query: stored ranges containing `x`.
+            self.ranges.report(x, x, out);
         }
         out.extend(&self.wildcard);
     }
@@ -221,12 +335,8 @@ impl ValueIndex {
             let (lo_k, hi_k) = (F64Key(norm_zero(lo)), F64Key(norm_zero(hi)));
             out.extend(self.numeric.range(lo_k..=hi_k).flat_map(|(_, p)| p));
         }
-        out.extend(
-            self.ranges
-                .iter()
-                .filter(|(slo, shi, _)| *slo <= hi && lo <= *shi)
-                .map(|&(_, _, p)| p),
-        );
+        // Overlap query: `slo <= hi && lo <= shi` as prefix + floor.
+        self.ranges.report(hi, lo, out);
         out.extend(&self.wildcard);
     }
 }
@@ -365,6 +475,76 @@ impl ProfileIndex {
             .collect()
     }
 
+    /// Sorted pids of stored profiles `p` with
+    /// `matches_positional(query, p)` — the stricter per-slot form the
+    /// SFC routing implies. Candidates are the same per-term lookups as
+    /// [`forward_candidates`](Self::forward_candidates), filtered to
+    /// postings at the query term's own slot and to profiles of equal
+    /// arity, so positional queries no longer scan every stored profile
+    /// (the last full-scan surface; callers still verify with
+    /// [`matching::matches_positional`]).
+    pub fn forward_candidates_positional(&self, query: &Profile) -> Vec<u32> {
+        if query.is_empty() {
+            return Vec::new();
+        }
+        let qdims = query.dims() as u32;
+        let mut per_term: Vec<Vec<u32>> = Vec::new();
+        let mut scratch: Vec<Posting> = Vec::new();
+        for (slot, term) in query.terms().iter().enumerate() {
+            // `*` singletons accept any term at their slot — universal
+            // among equal-arity profiles, so they cannot narrow the
+            // intersection.
+            if matches!(term, Term::Attr(Value::Wildcard)) {
+                continue;
+            }
+            scratch.clear();
+            match term {
+                Term::Attr(v) => {
+                    self.singleton.lookup(v, &mut scratch);
+                    self.pair_names.lookup(v, &mut scratch);
+                }
+                Term::Pair(a, v) => match self.pairs.get(fold(a).as_ref()) {
+                    Some(vi) => vi.lookup(v, &mut scratch),
+                    None => return Vec::new(),
+                },
+            }
+            let slot = slot as u32;
+            let mut pids: Vec<u32> = scratch
+                .iter()
+                .filter(|p| p.slot == slot)
+                .map(|p| p.pid)
+                .filter(|&pid| {
+                    // Equal arity implies live: DEAD (u32::MAX) can never
+                    // equal a real query arity.
+                    self.dims.get(pid as usize).map(|&d| d == qdims).unwrap_or(false)
+                })
+                .collect();
+            pids.sort_unstable();
+            pids.dedup();
+            if pids.is_empty() {
+                return Vec::new();
+            }
+            per_term.push(pids);
+        }
+        if per_term.is_empty() {
+            // All-wildcard query: every live profile of the same arity.
+            return self
+                .dims
+                .iter()
+                .enumerate()
+                .filter(|(_, &d)| d == qdims)
+                .map(|(pid, _)| pid as u32)
+                .collect();
+        }
+        per_term.sort_by_key(|s| s.len());
+        let (first, rest) = per_term.split_first().expect("non-empty");
+        first
+            .iter()
+            .copied()
+            .filter(|pid| rest.iter().all(|s| s.binary_search(pid).is_ok()))
+            .collect()
+    }
+
     /// Sorted pids of stored profiles `q` with `matches(q, incoming)` —
     /// the reverse direction, where the *stored* side carries the
     /// patterns (pending subscriptions, interests). Counting-based: a
@@ -443,6 +623,13 @@ impl<T: Profiled> IndexedProfiles<T> {
         self.live == 0
     }
 
+    /// Slab length including tombstones — compaction observability:
+    /// after any insert, either the slab is small (< 32) or tombstones
+    /// are a strict minority (`slab_len() < 2 * len()`).
+    pub fn slab_len(&self) -> usize {
+        self.entries.len()
+    }
+
     /// Insertion-order iteration over live entries.
     pub fn iter(&self) -> impl Iterator<Item = &T> {
         self.entries.iter().flatten()
@@ -463,6 +650,17 @@ impl<T: Profiled> IndexedProfiles<T> {
             .into_iter()
             .filter_map(|pid| self.entries[pid as usize].as_ref())
             .filter(|t| matching::matches(query, t.profile()))
+            .collect()
+    }
+
+    /// Entries positionally matched by `query` — term `i` of the query
+    /// against term `i` of the entry (insertion order).
+    pub fn query_positional(&self, query: &Profile) -> Vec<&T> {
+        self.index
+            .forward_candidates_positional(query)
+            .into_iter()
+            .filter_map(|pid| self.entries[pid as usize].as_ref())
+            .filter(|t| matching::matches_positional(query, t.profile()))
             .collect()
     }
 
@@ -686,6 +884,77 @@ mod tests {
         let stored = vec![p("v:-0"), p("v:0"), p("v:-1")];
         assert_equiv(&stored, "v:0..5");
         assert_equiv(&stored, "v:-2..0");
+    }
+
+    #[test]
+    fn positional_candidates_match_scan() {
+        let stored = vec![
+            p("drone,lidar"),
+            p("lidar,drone"),
+            p("drone,lidar,lat:40"),
+            p("drone,thermal"),
+            p("temp:10..20,drone"),
+            p("li*,drone"),
+            p("lat:40.5,long:-74.2"),
+        ];
+        let ix = indexed(&stored);
+        let queries = [
+            "drone,li*",
+            "li*,drone",
+            "*,drone",
+            "*,*",
+            "drone",
+            "temp:15,*",
+            "drone,lidar,lat:40..41",
+            "lat:40..41,long:-75..-74",
+            "lat,long",
+        ];
+        for q in queries {
+            let qp = p(q);
+            let got: Vec<String> =
+                ix.query_positional(&qp).iter().map(|s| s.render()).collect();
+            let want: Vec<String> = stored
+                .iter()
+                .filter(|s| matching::matches_positional(&qp, s))
+                .map(|s| s.render())
+                .collect();
+            assert_eq!(got, want, "positional query `{q}` diverged from scan");
+        }
+    }
+
+    #[test]
+    fn interval_tree_equivalent_after_rebuilds() {
+        // Enough stored ranges to force IntervalTree rebuilds plus a
+        // linear pending tail; stabbing, overlap, inverted and wildcard
+        // queries must all agree with the scan.
+        let mut stored = Vec::new();
+        for i in 0..50 {
+            let lo = (i % 17) as f64 - 8.0;
+            let hi = lo + (i % 5) as f64;
+            stored.push(p(&format!("v:{lo}..{hi}")));
+        }
+        stored.push(p("v:3"));
+        stored.push(p("v:-8"));
+        for q in ["v:0..2", "v:3", "v:-8..-8", "v:-100..100", "v:50..60", "v:*"] {
+            assert_equiv(&stored, q);
+        }
+    }
+
+    #[test]
+    fn interval_tree_drops_nan_bounds() {
+        // Hand-built NaN ranges can never match (every IEEE comparison
+        // involving NaN is false in the matcher too) — the tree drops
+        // them and stays equivalent to the scan.
+        let mut vi = ValueIndex::default();
+        vi.insert(&Value::NumRange(f64::NAN, 5.0), Posting { pid: 0, slot: 0 });
+        vi.insert(&Value::NumRange(1.0, f64::NAN), Posting { pid: 1, slot: 0 });
+        let mut out = Vec::new();
+        vi.lookup(&Value::Exact("2".into()), &mut out);
+        assert!(out.is_empty(), "NaN-bounded ranges must never match");
+        out.clear();
+        vi.lookup(&Value::NumRange(0.0, 10.0), &mut out);
+        assert!(out.is_empty());
+        assert_equiv(&[p("v:1..5"), p("v:2..3")], "v:2");
     }
 
     #[test]

@@ -31,11 +31,22 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// instrumentation; see `fig4_messaging` and the broker cache tests).
 static MATCH_CALLS: AtomicU64 = AtomicU64::new(0);
 
+/// Process-wide count of [`matches_positional`] invocations. Indexed
+/// positional paths call it once per *candidate*, so a delta far below
+/// the stored-profile count proves the full scan is off the hot path.
+static POSITIONAL_MATCH_CALLS: AtomicU64 = AtomicU64::new(0);
+
 /// Total [`matches`] invocations so far in this process. Only meaningful
 /// as a *delta* around a single-threaded section (benches are their own
 /// binaries; concurrent tests each take their own deltas).
 pub fn match_calls() -> u64 {
     MATCH_CALLS.load(Ordering::Relaxed)
+}
+
+/// Total [`matches_positional`] invocations so far in this process (same
+/// delta discipline as [`match_calls`]).
+pub fn positional_match_calls() -> u64 {
+    POSITIONAL_MATCH_CALLS.load(Ordering::Relaxed)
 }
 
 /// Does pattern value `u` accept stored value `v` (both may be patterns;
@@ -91,8 +102,13 @@ pub fn matches(query: &Profile, stored: &Profile) -> bool {
 /// `i` of the stored profile. This is the stricter form the SFC routing
 /// implies (dimension `i` = term `i`); used by the rendezvous matching
 /// engine for profile classes that fix an order (function profiles).
-/// Not index-accelerated (see ROADMAP "Matching plane").
+/// Index-accelerated via
+/// [`super::index::ProfileIndex::forward_candidates_positional`] —
+/// postings carry their term slot, so candidates are slot-filtered
+/// lookups and this function runs only as the per-candidate verify step
+/// (counted by [`positional_match_calls`]).
 pub fn matches_positional(query: &Profile, stored: &Profile) -> bool {
+    POSITIONAL_MATCH_CALLS.fetch_add(1, Ordering::Relaxed);
     if query.is_empty() || query.dims() != stored.dims() {
         return false;
     }

@@ -13,6 +13,9 @@
 //!   matching queries without scanning every stored profile.
 //! - [`rendezvous`]: the RP-side matching engine executing reactive
 //!   behaviours (`store`, `notify_interest`, `start_function`, ...).
+//! - [`shard`]: the sharded matching plane — HRW shard map, the
+//!   [`shard::MatchingPlane`] surface, and the TTL-registered
+//!   [`shard::ShardedBroker`] router.
 //! - [`primitives`]: the client-side `post` / `push` / `pull` primitives.
 
 pub mod index;
@@ -21,8 +24,10 @@ pub mod message;
 pub mod primitives;
 pub mod profile;
 pub mod rendezvous;
+pub mod shard;
 
 pub use index::{IndexedProfiles, ProfileIndex, Profiled};
 pub use message::{Action, ArMessage, Header};
 pub use profile::{Profile, Term, Value};
 pub use rendezvous::{RendezvousPoint, Reaction};
+pub use shard::{MatchingPlane, ShardMap, ShardedBroker};

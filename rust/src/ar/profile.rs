@@ -59,7 +59,14 @@ impl Value {
         }
         if let Some((lo, hi)) = s.split_once("..") {
             if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<f64>(), hi.trim().parse::<f64>()) {
-                return Value::NumRange(lo.min(hi), lo.max(hi));
+                // Only finite bounds form a range. "nan..5" parses as f64
+                // but NaN-ignoring min/max would silently collapse it to
+                // 5..5; ±inf ("1e999..0") renders un-round-trippably.
+                // Degrading to an exact keyword keeps index ≡ scan by
+                // construction; unbounded sides are spelled f64::MIN/MAX.
+                if lo.is_finite() && hi.is_finite() {
+                    return Value::NumRange(lo.min(hi), lo.max(hi));
+                }
             }
         }
         Value::Exact(s.to_ascii_lowercase())
@@ -189,10 +196,17 @@ impl ProfileBuilder {
         self
     }
 
-    /// Add a numeric range pair.
+    /// Add a numeric range pair. Bounds must be finite; a non-finite
+    /// bound degrades to the exact keyword rendering of the pair (the
+    /// same canonicalization [`Value::parse`] applies), so NaN can never
+    /// silently collapse into a point range via min/max.
     pub fn add_range(mut self, attr: &str, lo: f64, hi: f64) -> Self {
-        self.terms
-            .push(Term::Pair(attr.to_ascii_lowercase(), Value::NumRange(lo.min(hi), lo.max(hi))));
+        let value = if lo.is_finite() && hi.is_finite() {
+            Value::NumRange(lo.min(hi), lo.max(hi))
+        } else {
+            Value::Exact(format!("{lo}..{hi}").to_ascii_lowercase())
+        };
+        self.terms.push(Term::Pair(attr.to_ascii_lowercase(), value));
         self
     }
 
@@ -311,6 +325,43 @@ mod tests {
         assert_eq!(Value::parse("20..10"), Value::NumRange(10.0, 20.0));
         // Not a numeric range → exact keyword.
         assert_eq!(Value::parse("a..b"), Value::Exact("a..b".into()));
+    }
+
+    #[test]
+    fn non_finite_bounds_degrade_to_exact() {
+        // "nan..5" used to collapse to NumRange(5,5) via NaN-ignoring
+        // min/max; now every non-finite bound degrades to a keyword.
+        for s in ["nan..5", "5..nan", "inf..5", "-inf..inf", "1e999..0"] {
+            match Value::parse(s) {
+                Value::Exact(_) => {}
+                other => panic!("{s} should degrade to Exact, got {other:?}"),
+            }
+        }
+        assert!(!Value::parse("nan..5").matches("3"));
+        assert!(!Value::parse("nan..5").matches("5"));
+        // Finite extremes still form real ranges.
+        assert_eq!(
+            Value::parse("1.5e308..-1.5e308"),
+            Value::NumRange(-1.5e308, 1.5e308)
+        );
+    }
+
+    #[test]
+    fn builder_range_canonicalizes_non_finite() {
+        let p = Profile::builder()
+            .add_range("alt", f64::NAN, 5.0)
+            .add_range("temp", f64::NEG_INFINITY, 10.0)
+            .add_range("lat", 40.0, 41.0)
+            .build();
+        assert!(matches!(&p.terms()[0], Term::Pair(_, Value::Exact(_))));
+        assert!(matches!(&p.terms()[1], Term::Pair(_, Value::Exact(_))));
+        match &p.terms()[2] {
+            Term::Pair(_, Value::NumRange(lo, hi)) => assert_eq!((*lo, *hi), (40.0, 41.0)),
+            other => panic!("unexpected term {other:?}"),
+        }
+        // The degraded form must survive a render/parse round-trip.
+        let p2 = Profile::parse(&p.render()).unwrap();
+        assert_eq!(p, p2);
     }
 
     #[test]

@@ -123,6 +123,21 @@ impl RendezvousPoint {
         self.functions.query(query)
     }
 
+    /// Stored functions positionally matched by `query` — function
+    /// profiles fix their term order (dimension `i` = term `i`), so this
+    /// is the stricter per-slot form. Routed through the slot-filtered
+    /// index ([`IndexedProfiles::query_positional`]) rather than a
+    /// full scan over every stored function.
+    pub fn query_functions_positional(&self, query: &Profile) -> Vec<&StoredFunction> {
+        self.functions.query_positional(query)
+    }
+
+    /// Stored data records positionally matched by `query` (index-backed,
+    /// slot-filtered; see [`query_functions_positional`](Self::query_functions_positional)).
+    pub fn query_positional(&self, query: &Profile) -> Vec<&StoredData> {
+        self.data.query_positional(query)
+    }
+
     /// Process one AR message: classify the profile by the action field
     /// (resource vs function profile), match, and execute the reactive
     /// behaviour. Returns the reactions for the coordinator to act on.
@@ -332,6 +347,21 @@ mod tests {
         assert_eq!(rp.data_len(), 1);
         assert_eq!(rp.query(&Profile::parse("drone,li*").unwrap()).len(), 1);
         assert_eq!(rp.query(&Profile::parse("camera").unwrap()).len(), 0);
+    }
+
+    #[test]
+    fn positional_queries_route_through_index() {
+        let mut rp = RendezvousPoint::new();
+        rp.receive(&msg_with_data("drone,lidar", Action::Store, b"a")).unwrap();
+        rp.receive(&msg_with_data("lidar,drone", Action::Store, b"b")).unwrap();
+        rp.receive(&msg_with_data("fn:resize,img*", Action::StoreFunction, b"topo")).unwrap();
+        let q = Profile::parse("drone,li*").unwrap();
+        // Associative matching accepts both orders; positional only one.
+        assert_eq!(rp.query(&q).len(), 2);
+        assert_eq!(rp.query_positional(&q).len(), 1);
+        let fq = Profile::parse("fn:re*,imgx").unwrap();
+        assert_eq!(rp.query_functions_positional(&fq).len(), 1);
+        assert_eq!(rp.query_functions_positional(&Profile::parse("img*,fn:re*").unwrap()).len(), 0);
     }
 
     #[test]

@@ -1,0 +1,597 @@
+//! Sharded matching plane: rendezvous-hash routing over multiple
+//! [`Broker`] instances (ROADMAP "Federated matching at millions of
+//! subscriptions").
+//!
+//! One broker per node caps the matching plane at one index and one
+//! topic directory. This module shards the profile key-space across
+//! `Broker`s with highest-random-weight (HRW / rendezvous) hashing:
+//!
+//! - **[`ShardMap`]** — `owner(key)` is the shard maximizing
+//!   `mix(h(shard) ^ mix(h(key)))`. HRW gives the churn property the
+//!   fuzz suite asserts natively: removing a shard re-routes *only* the
+//!   keys it owned, and adding one moves *only* the keys the newcomer
+//!   wins — no ring to rebalance, no stored routing state.
+//! - **[`ShardedBroker`]** — the router. Publishes go to exactly the
+//!   owner shard of the topic key. Subscriptions follow the libp2p
+//!   rendezvous idiom (SNIPPETS 1–2: a node registers at *every* peer):
+//!   associative matching means even a simple-profile subscription can
+//!   match topics on any shard (query `drone` matches topic
+//!   `drone,lidar`), so registrations fan out to all shards and fetch
+//!   drains them round-robin. Matching semantics are therefore
+//!   identical to a single broker holding every topic.
+//! - **TTL lifecycle** — registrations carry an optional TTL
+//!   (register → expire → re-register, the watermark idiom of
+//!   [`RetirePolicy`](crate::mmq::pubsub::RetirePolicy)):
+//!   [`ShardedBroker::sweep_expired`] unsubscribes lapsed consumers from
+//!   every shard so dead subscribers stop costing matcher work;
+//!   re-registering before expiry refreshes the watermark and keeps
+//!   cursors (the broker preserves cursors of still-matching topics on
+//!   replace), while re-registering *after* a sweep is a fresh
+//!   subscription that replays retained backlog (at-least-once).
+//! - **Cross-shard retirement** — [`ShardedBroker::retire_topic`] sweeps
+//!   *all* shards, not just the current owner. Under churn a topic's
+//!   ownership moves while its queue and the subscription match-cache
+//!   entries pointing at it stay on the old shard; an owner-routed
+//!   retire would miss them and leave stale matches forever (the bug the
+//!   `federated_matching` cross-shard test pins down).
+//!
+//! [`MatchingPlane`] abstracts `Broker` and `ShardedBroker` behind one
+//! subscribe/publish/fetch surface so triggers (and anything else that
+//! binds consumers) work against either without knowing the topology.
+//!
+//! Validated behaviorally by `python/sims/federated_matching_sim.py`
+//! (same hash arithmetic, HRW stability, TTL lifecycle, the retirement
+//! bug) before this Rust implementation.
+
+use super::profile::Profile;
+use crate::error::{Error, Result};
+use crate::metrics::Registry;
+use crate::mmq::pubsub::{Broker, RetirePolicy};
+use crate::mmq::queue::QueueOptions;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// FNV-1a 64-bit over raw bytes.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer (as in `util/prng.rs`): avalanches the weak FNV
+/// mix so shard and key hashes decorrelate.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// HRW weight of `shard` for `key`; the owner is the argmax.
+fn weight(shard: &str, key: &str) -> u64 {
+    mix(fnv1a64(shard.as_bytes()) ^ mix(fnv1a64(key.as_bytes())))
+}
+
+/// Highest-random-weight (rendezvous) shard map. Shard names are kept
+/// sorted so ties (astronomically unlikely with 64-bit weights, but the
+/// map must still be a function) break deterministically by name.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShardMap {
+    shards: Vec<String>,
+}
+
+impl ShardMap {
+    pub fn new<S: AsRef<str>>(names: impl IntoIterator<Item = S>) -> Self {
+        let mut map = ShardMap::default();
+        for n in names {
+            map.add(n.as_ref());
+        }
+        map
+    }
+
+    /// Add a shard; returns false if it was already present.
+    pub fn add(&mut self, name: &str) -> bool {
+        match self.shards.binary_search_by(|s| s.as_str().cmp(name)) {
+            Ok(_) => false,
+            Err(pos) => {
+                self.shards.insert(pos, name.to_string());
+                true
+            }
+        }
+    }
+
+    /// Remove a shard; returns false if it was not present.
+    pub fn remove(&mut self, name: &str) -> bool {
+        match self.shards.binary_search_by(|s| s.as_str().cmp(name)) {
+            Ok(pos) => {
+                self.shards.remove(pos);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// The shard owning `key` — the HRW argmax, `(weight, name)`-maximal.
+    pub fn owner(&self, key: &str) -> Option<&str> {
+        self.shards
+            .iter()
+            .max_by_key(|s| (weight(s, key), s.as_str()))
+            .map(String::as_str)
+    }
+
+    /// Sorted shard names.
+    pub fn shards(&self) -> &[String] {
+        &self.shards
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+}
+
+/// One matching-plane surface over both [`Broker`] and [`ShardedBroker`]
+/// (and, at the coordinator layer, the federated cluster plane), so
+/// consumers of the plane — triggers above all — bind through the shard
+/// router without knowing the topology behind it.
+pub trait MatchingPlane {
+    /// Register (or replace) a subscription.
+    fn subscribe(&mut self, consumer: &str, profile: Profile);
+    /// Drop a subscription.
+    fn unsubscribe(&mut self, consumer: &str);
+    /// Publish under a simple (concrete) profile; returns the assigned
+    /// sequence number within the topic.
+    fn publish(&mut self, profile: &Profile, payload: &[u8]) -> Result<u64>;
+    /// Drain up to `max` messages for `consumer` (at-least-once).
+    fn fetch(&mut self, consumer: &str, max: usize) -> Result<Vec<(String, Arc<[u8]>)>>;
+    /// Undelivered backlog across the consumer's matched topics.
+    fn lag(&self, consumer: &str) -> Result<u64>;
+}
+
+impl MatchingPlane for Broker {
+    fn subscribe(&mut self, consumer: &str, profile: Profile) {
+        Broker::subscribe(self, consumer, profile);
+    }
+
+    fn unsubscribe(&mut self, consumer: &str) {
+        Broker::unsubscribe(self, consumer);
+    }
+
+    fn publish(&mut self, profile: &Profile, payload: &[u8]) -> Result<u64> {
+        Broker::publish(self, profile, payload)
+    }
+
+    fn fetch(&mut self, consumer: &str, max: usize) -> Result<Vec<(String, Arc<[u8]>)>> {
+        Broker::fetch(self, consumer, max)
+    }
+
+    fn lag(&self, consumer: &str) -> Result<u64> {
+        Broker::lag(self, consumer)
+    }
+}
+
+/// A consumer's plane-level registration: its profile plus the TTL
+/// watermark (per-shard subscription state lives in the brokers).
+#[derive(Debug)]
+struct Registration {
+    profile: Profile,
+    ttl: Option<Duration>,
+    registered_at: Instant,
+}
+
+impl Registration {
+    fn expired(&self, now: Instant) -> bool {
+        match self.ttl {
+            Some(ttl) => now.saturating_duration_since(self.registered_at) >= ttl,
+            None => false,
+        }
+    }
+}
+
+/// Rendezvous-hash router over multiple [`Broker`] shards (see the
+/// module docs for the routing/fan-out/TTL design).
+pub struct ShardedBroker {
+    base: QueueOptions,
+    map: ShardMap,
+    shards: BTreeMap<String, Broker>,
+    regs: BTreeMap<String, Registration>,
+    /// Rotates the shard a fetch drains first, so no shard's backlog
+    /// starves when `max` caps a call (mirrors the broker's per-topic
+    /// round-robin).
+    rr: usize,
+    metrics: Registry,
+}
+
+impl ShardedBroker {
+    /// Create one broker per shard name, each rooted at
+    /// `base.dir/<shard>`. All shards share one metrics registry, so
+    /// plane-wide counters (`broker.match_calls`, ...) aggregate for free.
+    pub fn new<S: AsRef<str>>(base: QueueOptions, names: impl IntoIterator<Item = S>) -> Self {
+        Self::with_metrics(base, names, Registry::new())
+    }
+
+    pub fn with_metrics<S: AsRef<str>>(
+        base: QueueOptions,
+        names: impl IntoIterator<Item = S>,
+        metrics: Registry,
+    ) -> Self {
+        let mut sb = ShardedBroker {
+            base,
+            map: ShardMap::default(),
+            shards: BTreeMap::new(),
+            regs: BTreeMap::new(),
+            rr: 0,
+            metrics,
+        };
+        for n in names {
+            sb.add_shard(n.as_ref());
+        }
+        sb
+    }
+
+    fn shard_opts(&self, name: &str) -> QueueOptions {
+        let safe: String = name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+            .collect();
+        QueueOptions { dir: self.base.dir.join(safe), ..self.base.clone() }
+    }
+
+    /// Add a shard. Every live registration fans out to the newcomer
+    /// immediately, so its future topics match from the first publish.
+    /// Returns false if the shard already exists.
+    pub fn add_shard(&mut self, name: &str) -> bool {
+        if !self.map.add(name) {
+            return false;
+        }
+        let opts = self.shard_opts(name);
+        let mut broker = Broker::with_metrics(opts, self.metrics.clone());
+        for (consumer, reg) in &self.regs {
+            broker.subscribe(consumer, reg.profile.clone());
+        }
+        self.shards.insert(name.to_string(), broker);
+        self.metrics.counter("shard.added").inc();
+        true
+    }
+
+    /// Remove a shard and drop its broker. Keys it owned re-route to the
+    /// surviving shards (and only those keys — the HRW property); its
+    /// undrained backlog is dropped, the same retention semantics as a
+    /// node loss. Returns false if the shard was not present.
+    pub fn remove_shard(&mut self, name: &str) -> bool {
+        if !self.map.remove(name) {
+            return false;
+        }
+        self.shards.remove(name);
+        self.metrics.counter("shard.removed").inc();
+        true
+    }
+
+    /// Register (or replace) a subscription with an optional TTL. The
+    /// registration fans out to every shard; re-registering refreshes
+    /// the TTL watermark, and the brokers preserve cursors of topics the
+    /// profile still matches (live renewals never rewind delivery).
+    pub fn subscribe_with_ttl(&mut self, consumer: &str, profile: Profile, ttl: Option<Duration>) {
+        for broker in self.shards.values_mut() {
+            broker.subscribe(consumer, profile.clone());
+        }
+        self.regs.insert(
+            consumer.to_string(),
+            Registration { profile, ttl, registered_at: Instant::now() },
+        );
+        self.metrics.counter("shard.registered").inc();
+    }
+
+    /// Refresh a consumer's TTL watermark without touching subscription
+    /// state; returns false for unknown consumers.
+    pub fn renew(&mut self, consumer: &str) -> bool {
+        match self.regs.get_mut(consumer) {
+            Some(reg) => {
+                reg.registered_at = Instant::now();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Sweep TTL-expired registrations: unsubscribe them from every
+    /// shard so they stop costing matcher and fetch work. Returns the
+    /// expired consumer names.
+    pub fn sweep_expired(&mut self) -> Vec<String> {
+        let now = Instant::now();
+        let expired: Vec<String> = self
+            .regs
+            .iter()
+            .filter(|(_, reg)| reg.expired(now))
+            .map(|(c, _)| c.clone())
+            .collect();
+        for consumer in &expired {
+            self.regs.remove(consumer);
+            for broker in self.shards.values_mut() {
+                broker.unsubscribe(consumer);
+            }
+        }
+        self.metrics.counter("shard.subs_expired").add(expired.len() as u64);
+        expired
+    }
+
+    /// Retire a topic on **every** shard, not just the current owner.
+    /// Under churn the owner moves while the topic's queue and the
+    /// subscription match-cache entries referencing it stay on the old
+    /// shard; routing the retire to the owner alone leaves those stale
+    /// entries matching forever. Returns whether any shard held it.
+    pub fn retire_topic(&mut self, profile: &Profile) -> Result<bool> {
+        let mut any = false;
+        for broker in self.shards.values_mut() {
+            any |= broker.retire_topic(profile)?;
+        }
+        Ok(any)
+    }
+
+    /// Apply a [`RetirePolicy`] sweep on every shard; returns all
+    /// retired topic keys.
+    pub fn retire_idle(&mut self, policy: &RetirePolicy) -> Result<Vec<String>> {
+        let mut retired = Vec::new();
+        for broker in self.shards.values_mut() {
+            retired.extend(broker.retire_idle(policy)?);
+        }
+        Ok(retired)
+    }
+
+    /// Immutable access to one shard's broker (tests, stats).
+    pub fn shard(&self, name: &str) -> Option<&Broker> {
+        self.shards.get(name)
+    }
+
+    /// The shard map (routing decisions are pure functions of it).
+    pub fn shard_map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// Live registration count.
+    pub fn registered(&self) -> usize {
+        self.regs.len()
+    }
+
+    pub fn is_registered(&self, consumer: &str) -> bool {
+        self.regs.contains_key(consumer)
+    }
+
+    /// Total topics across all shards.
+    pub fn topic_count(&self) -> usize {
+        self.shards.values().map(Broker::topic_count).sum()
+    }
+
+    /// Plane-wide matcher invocations (shared registry across shards).
+    pub fn match_calls(&self) -> u64 {
+        self.metrics.counter("broker.match_calls").get()
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    pub fn flush(&self, sync: bool) -> Result<()> {
+        for broker in self.shards.values() {
+            broker.flush(sync)?;
+        }
+        Ok(())
+    }
+}
+
+impl MatchingPlane for ShardedBroker {
+    fn subscribe(&mut self, consumer: &str, profile: Profile) {
+        self.subscribe_with_ttl(consumer, profile, None);
+    }
+
+    fn unsubscribe(&mut self, consumer: &str) {
+        self.regs.remove(consumer);
+        for broker in self.shards.values_mut() {
+            broker.unsubscribe(consumer);
+        }
+    }
+
+    /// Route the publish to the topic key's owner shard only.
+    fn publish(&mut self, profile: &Profile, payload: &[u8]) -> Result<u64> {
+        let key = profile.render();
+        let owner = self
+            .map
+            .owner(&key)
+            .ok_or_else(|| Error::Config("sharded broker has no shards".into()))?
+            .to_string();
+        self.shards
+            .get_mut(&owner)
+            .expect("shard map and broker set in sync")
+            .publish(profile, payload)
+    }
+
+    /// Drain shards round-robin, rotating the starting shard per call so
+    /// a capped `max` cannot starve any shard's backlog.
+    fn fetch(&mut self, consumer: &str, max: usize) -> Result<Vec<(String, Arc<[u8]>)>> {
+        if !self.regs.contains_key(consumer) {
+            return Err(Error::NotFound(format!("no registration for `{consumer}`")));
+        }
+        let names: Vec<String> = self.shards.keys().cloned().collect();
+        if names.is_empty() {
+            return Ok(Vec::new());
+        }
+        let start = self.rr % names.len();
+        self.rr = (self.rr + 1) % names.len();
+        let mut out = Vec::new();
+        for i in 0..names.len() {
+            if out.len() >= max {
+                break;
+            }
+            let name = &names[(start + i) % names.len()];
+            let broker = self.shards.get_mut(name).expect("name from key set");
+            out.extend(broker.fetch(consumer, max - out.len())?);
+        }
+        Ok(out)
+    }
+
+    fn lag(&self, consumer: &str) -> Result<u64> {
+        if !self.regs.contains_key(consumer) {
+            return Err(Error::NotFound(format!("no registration for `{consumer}`")));
+        }
+        let mut total = 0;
+        for broker in self.shards.values() {
+            total += broker.lag(consumer)?;
+        }
+        Ok(total)
+    }
+}
+
+impl std::fmt::Debug for ShardedBroker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ShardedBroker(shards={}, regs={}, topics={})",
+            self.map.len(),
+            self.regs.len(),
+            self.topic_count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Profile {
+        Profile::parse(s).unwrap()
+    }
+
+    fn opts(dir: &std::path::Path) -> QueueOptions {
+        QueueOptions { dir: dir.to_path_buf(), segment_bytes: 1 << 16, max_segments: 4, sync_every: 0 }
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("rpulsar-shard-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn hrw_remove_moves_only_owned_keys() {
+        let mut map = ShardMap::new(["a", "b", "c", "d"]);
+        let keys: Vec<String> = (0..400).map(|i| format!("topic{i:04}")).collect();
+        let before: Vec<String> =
+            keys.iter().map(|k| map.owner(k).unwrap().to_string()).collect();
+        assert!(map.remove("c"));
+        for (k, owner_before) in keys.iter().zip(&before) {
+            let after = map.owner(k).unwrap();
+            if owner_before != "c" {
+                assert_eq!(after, owner_before, "non-owned key {k} moved");
+            } else {
+                assert_ne!(after, "c");
+            }
+        }
+    }
+
+    #[test]
+    fn hrw_add_moves_only_won_keys() {
+        let mut map = ShardMap::new(["a", "b", "c"]);
+        let keys: Vec<String> = (0..400).map(|i| format!("topic{i:04}")).collect();
+        let before: Vec<String> =
+            keys.iter().map(|k| map.owner(k).unwrap().to_string()).collect();
+        assert!(map.add("z"));
+        let mut moved = 0;
+        for (k, owner_before) in keys.iter().zip(&before) {
+            let after = map.owner(k).unwrap();
+            if after != owner_before {
+                assert_eq!(after, "z", "key {k} moved to a non-new shard");
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "a new shard should win some keys");
+    }
+
+    #[test]
+    fn publish_routes_to_owner_and_fetch_spans_shards() {
+        let dir = tmpdir("route");
+        let mut sb = ShardedBroker::new(opts(&dir), ["s0", "s1", "s2"]);
+        sb.subscribe("c1", p("sensor*"));
+        for i in 0..30 {
+            sb.publish(&p(&format!("sensor{i:02}")), &[i as u8]).unwrap();
+        }
+        // Each topic lives on exactly one shard...
+        let per_shard: Vec<usize> =
+            ["s0", "s1", "s2"].iter().map(|s| sb.shard(s).unwrap().topic_count()).collect();
+        assert_eq!(per_shard.iter().sum::<usize>(), 30);
+        assert_eq!(sb.topic_count(), 30);
+        // ...and the consumer still sees every message exactly once.
+        let got = sb.fetch("c1", 1000).unwrap();
+        assert_eq!(got.len(), 30);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ttl_expiry_sweeps_everywhere_and_reregister_resumes() {
+        let dir = tmpdir("ttl");
+        let mut sb = ShardedBroker::new(opts(&dir), ["s0", "s1"]);
+        sb.subscribe_with_ttl("c1", p("drone*"), Some(Duration::ZERO));
+        sb.publish(&p("drone01"), b"x").unwrap();
+        assert_eq!(sb.sweep_expired(), vec!["c1".to_string()]);
+        assert!(!sb.is_registered("c1"));
+        assert!(sb.fetch("c1", 10).is_err(), "expired consumer must not fetch");
+        for s in ["s0", "s1"] {
+            assert!(sb.shard(s).unwrap().subscription("c1").is_none());
+        }
+        // Re-register (fresh subscription): retained backlog replays.
+        sb.subscribe_with_ttl("c1", p("drone*"), Some(Duration::from_secs(3600)));
+        assert_eq!(sb.fetch("c1", 10).unwrap().len(), 1);
+        assert!(sb.sweep_expired().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retire_topic_purges_all_shards_after_churn() {
+        let dir = tmpdir("retire");
+        let mut sb = ShardedBroker::new(opts(&dir), ["s0", "s1"]);
+        sb.subscribe("c1", p("drone*"));
+        // Find a topic whose ownership moves when shard "zz" joins.
+        let key = (0..10_000)
+            .map(|i| format!("drone{i:04}"))
+            .find(|k| {
+                let mut grown = sb.shard_map().clone();
+                grown.add("zz");
+                grown.owner(k) == Some("zz")
+            })
+            .expect("some key must be won by the new shard");
+        sb.publish(&p(&key), b"payload").unwrap();
+        let old_owner = sb.shard_map().owner(&key).unwrap().to_string();
+        sb.add_shard("zz");
+        assert_eq!(sb.shard_map().owner(&key), Some("zz"));
+        // The topic still physically lives on the old owner; an
+        // owner-routed retire would miss it. The all-shard sweep must
+        // find and purge it (queue, caches, cursors).
+        assert!(sb.retire_topic(&p(&key)).unwrap());
+        assert_eq!(sb.shard(&old_owner).unwrap().topic_count(), 0);
+        assert!(sb.fetch("c1", 10).unwrap().is_empty(), "stale match survived retirement");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn matching_plane_generics_cover_both_brokers() {
+        fn pump<P: MatchingPlane>(plane: &mut P) -> usize {
+            plane.subscribe("c", p("a*"));
+            plane.publish(&p("a1"), b"m").unwrap();
+            plane.fetch("c", 10).unwrap().len()
+        }
+        let dir = tmpdir("plane");
+        let mut single = Broker::new(opts(&dir.join("single")));
+        let mut sharded = ShardedBroker::new(opts(&dir.join("sharded")), ["s0", "s1"]);
+        assert_eq!(pump(&mut single), 1);
+        assert_eq!(pump(&mut sharded), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -12,11 +12,13 @@ use super::node::Node;
 use crate::ar::message::ArMessage;
 use crate::ar::primitives::RendezvousNetwork;
 use crate::ar::rendezvous::Reaction;
+use crate::ar::shard::ShardMap;
 use crate::config::DeviceKind;
 use crate::device::profile::DeviceProfile;
 use crate::error::{Error, Result};
 use crate::metrics::Registry;
 use crate::net::sim::SimNetwork;
+use crate::net::wire::NetMessage;
 use crate::overlay::geo::GeoPoint;
 use crate::overlay::node_id::NodeId;
 use crate::overlay::quadtree::QuadTree;
@@ -47,6 +49,11 @@ pub struct Cluster {
     metrics: Registry,
     /// Whether newly deployed streams get a background shipper.
     async_net: bool,
+    /// HRW map over the live nodes' names: the federated matching
+    /// plane routes each published topic to exactly one owner node.
+    fed_map: ShardMap,
+    /// Rotating start offset for federated fetches (no node starves).
+    fed_rr: usize,
 }
 
 /// The cluster hosts topology fragments on its nodes' own managers and
@@ -108,6 +115,7 @@ impl Cluster {
                 }
             }
         }
+        let fed_map = ShardMap::new(nodes.values().map(|n| n.name().to_string()));
         Ok(Cluster {
             nodes,
             quadtree,
@@ -119,6 +127,8 @@ impl Cluster {
             streams: BTreeMap::new(),
             metrics: Registry::new(),
             async_net: dist::netplane_async_default(),
+            fed_map,
+            fed_rr: 0,
         })
     }
 
@@ -185,6 +195,8 @@ impl Cluster {
         if !self.nodes.contains_key(id) {
             return Err(Error::NotFound(format!("no node {id}")));
         }
+        let name = self.nodes[id].name().to_string();
+        self.fed_map.remove(&name);
         self.network.take_down(*id);
         self.tables.remove(id);
         for t in self.tables.values_mut() {
@@ -326,6 +338,151 @@ impl Cluster {
             self.network.charge_hop(&id, &origin, reply_bytes.max(16));
         }
         Ok(out.into_iter().collect())
+    }
+
+    // ---- Federated matching plane (rendezvous federation with TTLs) ----
+
+    /// Register `consumer` across the whole cluster (the libp2p
+    /// rendezvous idiom: every node is both rendezvous server and
+    /// registrant). The registration applies at `origin`, then a
+    /// [`NetMessage::Register`] frame is forwarded to every peer,
+    /// charging each overlay route. Every node subscribes the consumer
+    /// — associative matching means any node's topics can match — while
+    /// publishes route to exactly one HRW owner
+    /// ([`Cluster::federated_publish`]).
+    ///
+    /// `ttl` of `None` never expires; otherwise the registration lapses
+    /// once the TTL passes and [`Node::tick`] (run by
+    /// [`Cluster::tick`] and the stream pump paths) sweeps it. Re-sent
+    /// registrations restart the watermark; a registration re-applied
+    /// *after* expiry is a fresh subscription that replays the retained
+    /// backlog (at-least-once). Note the wire frame encodes "no expiry"
+    /// as `ttl_ms == 0`, so a zero TTL is an in-process test idiom
+    /// only.
+    pub fn federated_subscribe(
+        &mut self,
+        origin: NodeId,
+        consumer: &str,
+        profile: &crate::ar::profile::Profile,
+        ttl: Option<std::time::Duration>,
+    ) -> Result<()> {
+        if !self.nodes.contains_key(&origin) {
+            return Err(Error::Overlay(format!("unknown origin {origin}")));
+        }
+        let frame = NetMessage::Register {
+            from: origin,
+            consumer: consumer.to_string(),
+            profile: profile.clone(),
+            ttl_ms: ttl.map(|d| d.as_millis() as u64).unwrap_or(0),
+        };
+        let wire = frame.wire_size();
+        let ids: Vec<NodeId> = self.nodes.keys().copied().collect();
+        for id in ids {
+            if id != origin {
+                self.charge_route(origin, id, wire);
+                self.metrics.counter("cluster.registers_forwarded").inc();
+            }
+            self.nodes.get_mut(&id).unwrap().apply_registration(consumer, profile.clone(), ttl);
+        }
+        Ok(())
+    }
+
+    /// Withdraw a federated registration everywhere before its TTL
+    /// lapses (forwards [`NetMessage::Unregister`] to every peer).
+    /// Returns whether any node held it.
+    pub fn federated_unsubscribe(&mut self, origin: NodeId, consumer: &str) -> Result<bool> {
+        if !self.nodes.contains_key(&origin) {
+            return Err(Error::Overlay(format!("unknown origin {origin}")));
+        }
+        let frame = NetMessage::Unregister { from: origin, consumer: consumer.to_string() };
+        let wire = frame.wire_size();
+        let ids: Vec<NodeId> = self.nodes.keys().copied().collect();
+        let mut any = false;
+        for id in ids {
+            if id != origin {
+                self.charge_route(origin, id, wire);
+            }
+            any |= self.nodes.get_mut(&id).unwrap().remove_registration(consumer);
+        }
+        Ok(any)
+    }
+
+    /// Publish on the federated plane: the topic's HRW owner over the
+    /// live node names (stable under churn — only keys owned by a
+    /// crashed node move) hosts the queue; the publish routes there,
+    /// paying the overlay hops. Returns `(owner, offset)`.
+    pub fn federated_publish(
+        &mut self,
+        origin: NodeId,
+        profile: &crate::ar::profile::Profile,
+        payload: &[u8],
+    ) -> Result<(NodeId, u64)> {
+        let key = profile.render();
+        let owner = NodeId::from_name(
+            self.fed_map.owner(&key).ok_or_else(|| Error::Overlay("empty cluster".into()))?,
+        );
+        self.charge_route(origin, owner, key.len() + payload.len() + 16);
+        let offset = self
+            .nodes
+            .get_mut(&owner)
+            .ok_or_else(|| Error::Overlay(format!("owner {owner} gone")))?
+            .publish(profile, payload)?;
+        Ok((owner, offset))
+    }
+
+    /// Drain `consumer`'s matched backlog from every node, starting at
+    /// a rotating node so no shard starves, charging each reply route
+    /// back to `origin`. Errors if the consumer holds no live federated
+    /// registration anywhere.
+    pub fn federated_fetch(
+        &mut self,
+        origin: NodeId,
+        consumer: &str,
+        max: usize,
+    ) -> Result<Vec<(String, Vec<u8>)>> {
+        let ids: Vec<NodeId> = self.nodes.keys().copied().collect();
+        if !ids.iter().any(|id| self.nodes[id].is_registered(consumer)) {
+            return Err(Error::NotFound(format!(
+                "no federated registration for `{consumer}`"
+            )));
+        }
+        let start = self.fed_rr % ids.len();
+        self.fed_rr = self.fed_rr.wrapping_add(1);
+        let mut out = Vec::new();
+        for i in 0..ids.len() {
+            if out.len() >= max {
+                break;
+            }
+            let id = ids[(start + i) % ids.len()];
+            if !self.nodes[&id].is_registered(consumer) {
+                continue;
+            }
+            let msgs =
+                self.nodes.get_mut(&id).unwrap().broker_mut().fetch(consumer, max - out.len())?;
+            let bytes: usize = msgs.iter().map(|(k, m)| k.len() + m.len()).sum();
+            self.charge_route(id, origin, bytes.max(16));
+            out.extend(msgs.into_iter().map(|(k, m)| (k, m.to_vec())));
+        }
+        Ok(out)
+    }
+
+    /// Retire a topic from the federated plane: sweeps EVERY node, not
+    /// just the current HRW owner. Under churn a topic's queue — and
+    /// the brokers' subscription match-cache entries for it — can live
+    /// on nodes that no longer own the key, so an owner-routed retire
+    /// would leave stale matches behind. Returns whether any node
+    /// dropped state.
+    pub fn federated_retire(&mut self, profile: &crate::ar::profile::Profile) -> Result<bool> {
+        let mut any = false;
+        for node in self.nodes.values_mut() {
+            any |= node.broker_mut().retire_topic(profile)?;
+        }
+        Ok(any)
+    }
+
+    /// The federated plane's HRW map over live node names.
+    pub fn federation_map(&self) -> &ShardMap {
+        &self.fed_map
     }
 
     // ---- Distributed stream topologies (cross-node stage placement) ----
@@ -840,6 +997,64 @@ mod tests {
         }));
         let retired = c.tick();
         assert_eq!(retired, vec![(ids[0], "sensor,temp".to_string())]);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn federated_subscribe_publish_fetch_lifecycle() {
+        use std::time::Duration;
+        let mut c = Cluster::new("fed", 4, DeviceKind::Native).unwrap();
+        let ids = c.ids();
+        let origin = ids[0];
+        let watch = Profile::parse("drone,*").unwrap();
+        c.federated_subscribe(origin, "watch", &watch, None).unwrap();
+        for id in &ids {
+            assert!(c.node(id).unwrap().is_registered("watch"), "registered at every node");
+        }
+        assert!(c.network().messages() > 0, "register forwarding must be charged");
+        // Publishes land on their HRW owners; one fetch drains them all.
+        let mut owners = std::collections::BTreeSet::new();
+        for i in 0..12 {
+            let p = Profile::parse(&format!("drone,cam{i:02}")).unwrap();
+            let (owner, _) =
+                c.federated_publish(origin, &p, format!("f{i}").as_bytes()).unwrap();
+            owners.insert(owner);
+        }
+        assert!(owners.len() > 1, "12 topics should spread over >1 of 4 nodes: {owners:?}");
+        assert_eq!(c.federated_fetch(origin, "watch", 1024).unwrap().len(), 12);
+        // TTL lifecycle: a zero TTL expires on the next housekeeping tick…
+        c.federated_subscribe(origin, "ephemeral", &watch, Some(Duration::ZERO)).unwrap();
+        c.tick();
+        assert!(ids.iter().all(|id| !c.node(id).unwrap().is_registered("ephemeral")));
+        assert!(c.federated_fetch(origin, "ephemeral", 16).is_err(), "swept everywhere");
+        // …and a post-expiry re-register is a fresh subscription that
+        // replays the retained backlog (at-least-once).
+        c.federated_subscribe(origin, "ephemeral", &watch, Some(Duration::from_secs(3600)))
+            .unwrap();
+        assert_eq!(c.federated_fetch(origin, "ephemeral", 1024).unwrap().len(), 12);
+        assert!(c.federated_unsubscribe(origin, "ephemeral").unwrap());
+        assert!(c.federated_fetch(origin, "ephemeral", 16).is_err());
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn federated_retire_sweeps_all_nodes_after_churn() {
+        let mut c = Cluster::new("fedret", 4, DeviceKind::Native).unwrap();
+        let origin = c.ids()[0];
+        let watch = Profile::parse("sensor,*").unwrap();
+        c.federated_subscribe(origin, "watch", &watch, None).unwrap();
+        let p = Profile::parse("sensor,temp").unwrap();
+        let (owner, _) = c.federated_publish(origin, &p, b"v").unwrap();
+        // Churn: crash a bystander — some keys' ownership moves, but
+        // `sensor,temp`'s queue stays where it was published.
+        let victim = *c.ids().iter().find(|id| **id != owner && **id != origin).unwrap();
+        c.crash(&victim).unwrap();
+        assert_eq!(c.federation_map().len(), 3, "crashed node left the HRW map");
+        // The all-node retire drops the queue and every broker's
+        // match-cache entry for the topic, wherever they live.
+        assert!(c.federated_retire(&p).unwrap());
+        assert!(!c.federated_retire(&p).unwrap(), "second sweep finds nothing");
+        assert!(c.federated_fetch(origin, "watch", 16).unwrap().is_empty());
         c.shutdown().unwrap();
     }
 

@@ -17,6 +17,8 @@ use crate::overlay::ring::{Contact, RoutingTable};
 use crate::storage::lsm::{LsmOptions, LsmStore};
 use crate::stream::deploy::TopologyManager;
 use crate::stream::engine::StreamEngine;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
 
 /// A running RP node (in-process flavour; the `rpulsar node` binary
 /// wraps one of these behind a TCP endpoint).
@@ -35,6 +37,12 @@ pub struct Node {
     /// (the default) disables retirement — a node only reclaims topics
     /// once an operator opts in with [`Node::set_retire_policy`].
     retire_policy: Option<RetirePolicy>,
+    /// Federated subscription registrations (libp2p rendezvous idiom:
+    /// peers register their consumers here with a TTL). Keyed by
+    /// consumer name; the broker holds the matching subscription, this
+    /// map holds the TTL watermark [`Node::tick`] sweeps. `None` TTL
+    /// never expires.
+    registrations: BTreeMap<String, (Option<Duration>, Instant)>,
 }
 
 impl Node {
@@ -79,6 +87,7 @@ impl Node {
             metrics,
             device,
             retire_policy: None,
+            registrations: BTreeMap::new(),
         })
     }
 
@@ -217,6 +226,45 @@ impl Node {
         self.retire_policy.as_ref()
     }
 
+    /// Apply a federated subscription registration (a local bind or a
+    /// peer's forwarded `NetMessage::Register`): subscribe `consumer`
+    /// on the broker and start the TTL watermark. Re-applying replaces
+    /// the subscription (the broker preserves cursors of topics that
+    /// still match) and restarts the watermark — the register →
+    /// expire → re-register lifecycle. `None` never expires; a TTL of
+    /// [`Duration::ZERO`] expires on the next [`Node::tick`] (the
+    /// test idiom — no clock mocking needed).
+    pub fn apply_registration(
+        &mut self,
+        consumer: &str,
+        profile: crate::ar::profile::Profile,
+        ttl: Option<Duration>,
+    ) {
+        self.broker.subscribe(consumer, profile);
+        self.registrations.insert(consumer.to_string(), (ttl, Instant::now()));
+        self.metrics.counter("node.registrations").inc();
+    }
+
+    /// Withdraw a federated registration (`NetMessage::Unregister`)
+    /// before its TTL lapses. Returns whether it existed here.
+    pub fn remove_registration(&mut self, consumer: &str) -> bool {
+        if self.registrations.remove(consumer).is_none() {
+            return false;
+        }
+        self.broker.unsubscribe(consumer);
+        true
+    }
+
+    /// Whether `consumer` holds a live federated registration here.
+    pub fn is_registered(&self, consumer: &str) -> bool {
+        self.registrations.contains_key(consumer)
+    }
+
+    /// Live federated registrations, sorted by consumer name.
+    pub fn registrations(&self) -> Vec<&str> {
+        self.registrations.keys().map(String::as_str).collect()
+    }
+
     /// Housekeeping tick (called from the cluster's pump paths, or by
     /// whatever loop owns a standalone node): sweeps the broker's
     /// topics through the retirement policy, reclaiming queues, disk
@@ -232,6 +280,25 @@ impl Node {
     /// consumer's poll cadence (e.g. a trigger binding's pump loop)
     /// before opting a node in.
     pub fn tick(&mut self) -> Result<Vec<String>> {
+        // TTL sweep of federated registrations first (independent of the
+        // retire policy): an expired consumer must stop matching before
+        // anything else observes the broker this tick.
+        let now = Instant::now();
+        let expired: Vec<String> = self
+            .registrations
+            .iter()
+            .filter(|(_, (ttl, at))| {
+                ttl.is_some_and(|t| now.saturating_duration_since(*at) >= t)
+            })
+            .map(|(c, _)| c.clone())
+            .collect();
+        for consumer in &expired {
+            self.registrations.remove(consumer);
+            self.broker.unsubscribe(consumer);
+        }
+        if !expired.is_empty() {
+            self.metrics.counter("node.regs_expired").add(expired.len() as u64);
+        }
         let Some(policy) = self.retire_policy.clone() else {
             return Ok(Vec::new());
         };
@@ -360,6 +427,33 @@ mod tests {
         assert_eq!(retired, ["sensor,temp"]);
         assert!(n.tick().unwrap().is_empty(), "second sweep finds nothing");
         assert_eq!(n.metrics().counter("node.tick_topics_retired").get(), 1);
+        n.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn federated_registrations_expire_on_tick() {
+        let dir = tmp("regs");
+        let mut n = Node::with_name_at("rp-f", 0.0, 0.0, &dir).unwrap();
+        let watch = Profile::parse("drone,*").unwrap();
+        // A TTL-free registration survives any number of ticks.
+        n.apply_registration("steady", watch.clone(), None);
+        // A zero TTL expires on the very next sweep.
+        n.apply_registration("ephemeral", watch.clone(), Some(std::time::Duration::ZERO));
+        assert_eq!(n.registrations(), ["ephemeral", "steady"]);
+        n.tick().unwrap();
+        assert!(n.is_registered("steady"));
+        assert!(!n.is_registered("ephemeral"));
+        assert!(n.broker_mut().fetch("ephemeral", 10).is_err(), "swept from the broker too");
+        assert_eq!(n.metrics().counter("node.regs_expired").get(), 1);
+        // Re-register after expiry: fresh subscription, replays backlog.
+        n.publish(&Profile::parse("drone,lidar").unwrap(), b"scan").unwrap();
+        n.apply_registration("ephemeral", watch, Some(std::time::Duration::from_secs(3600)));
+        assert_eq!(n.broker_mut().fetch("ephemeral", 10).unwrap().len(), 1);
+        // Explicit withdrawal beats the TTL.
+        assert!(n.remove_registration("ephemeral"));
+        assert!(!n.remove_registration("ephemeral"), "second withdrawal is a no-op");
+        assert!(n.broker_mut().fetch("ephemeral", 10).is_err());
         n.shutdown().unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -36,6 +36,14 @@ pub enum NetMessage {
     /// upstream fragment will ever emit has been shipped; the receiving
     /// fragment may drain and flush (zero-loss `finish` across nodes).
     StreamEos { from: NodeId, topology: String, stage: String },
+    /// Federated subscription registration (libp2p rendezvous idiom:
+    /// a node registers its consumers at every peer, with a TTL). The
+    /// entry node forwards the registration to all peers; each applies
+    /// it to its local matching plane and starts the TTL watermark
+    /// (`ttl_ms == 0` = no expiry). Re-sending refreshes the watermark.
+    Register { from: NodeId, consumer: String, profile: crate::ar::profile::Profile, ttl_ms: u64 },
+    /// Withdraw a federated registration before its TTL lapses.
+    Unregister { from: NodeId, consumer: String },
 }
 
 impl NetMessage {
@@ -49,6 +57,8 @@ impl NetMessage {
             NetMessage::Push { .. } => 5,
             NetMessage::StreamBatch { .. } => 6,
             NetMessage::StreamEos { .. } => 7,
+            NetMessage::Register { .. } => 8,
+            NetMessage::Unregister { .. } => 9,
         }
     }
 
@@ -62,7 +72,9 @@ impl NetMessage {
             | NetMessage::Ar { from, .. }
             | NetMessage::Push { from, .. }
             | NetMessage::StreamBatch { from, .. }
-            | NetMessage::StreamEos { from, .. } => *from,
+            | NetMessage::StreamEos { from, .. }
+            | NetMessage::Register { from, .. }
+            | NetMessage::Unregister { from, .. } => *from,
         }
     }
 
@@ -89,6 +101,14 @@ impl NetMessage {
             NetMessage::StreamEos { topology, stage, .. } => {
                 w.put_str(topology);
                 w.put_str(stage);
+            }
+            NetMessage::Register { consumer, profile, ttl_ms, .. } => {
+                w.put_str(consumer);
+                profile.encode(&mut w);
+                w.put_varint(*ttl_ms);
+            }
+            NetMessage::Unregister { consumer, .. } => {
+                w.put_str(consumer);
             }
             _ => {}
         }
@@ -130,6 +150,13 @@ impl NetMessage {
                 topology: r.get_str()?.to_string(),
                 stage: r.get_str()?.to_string(),
             },
+            8 => {
+                let consumer = r.get_str()?.to_string();
+                let profile = crate::ar::profile::Profile::decode(&mut r)?;
+                let ttl_ms = r.get_varint()?;
+                NetMessage::Register { from, consumer, profile, ttl_ms }
+            }
+            9 => NetMessage::Unregister { from, consumer: r.get_str()?.to_string() },
             other => return Err(Error::Parse(format!("unknown wire tag {other}"))),
         })
     }
@@ -400,6 +427,26 @@ mod tests {
         batch.give_back(tuples.clone());
         batch.forget_decoded();
         assert_eq!(batch.take_tuples().unwrap(), tuples);
+    }
+
+    #[test]
+    fn register_round_trip() {
+        let msg = NetMessage::Register {
+            from: id(11),
+            consumer: "trigger:job".into(),
+            profile: Profile::parse("drone,li*,lat:40..41").unwrap(),
+            ttl_ms: 30_000,
+        };
+        assert_eq!(NetMessage::decode(&msg.encode()).unwrap(), msg);
+        let never_expires = NetMessage::Register {
+            from: id(11),
+            consumer: "c".into(),
+            profile: Profile::parse("a").unwrap(),
+            ttl_ms: 0,
+        };
+        assert_eq!(NetMessage::decode(&never_expires.encode()).unwrap(), never_expires);
+        let bye = NetMessage::Unregister { from: id(12), consumer: "trigger:job".into() };
+        assert_eq!(NetMessage::decode(&bye.encode()).unwrap(), bye);
     }
 
     #[test]

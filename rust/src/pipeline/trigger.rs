@@ -39,9 +39,10 @@
 //! topology.
 
 use crate::ar::profile::Profile;
+use crate::ar::shard::MatchingPlane;
 use crate::error::{Error, Result};
 use crate::metrics::Registry;
-use crate::mmq::pubsub::{Broker, RetirePolicy};
+use crate::mmq::pubsub::RetirePolicy;
 use crate::stream::deploy::TopologyManager;
 use crate::stream::engine::StreamEngine;
 use crate::stream::pipeline::{Deployer, Pipeline, PipelineHandle};
@@ -153,14 +154,18 @@ impl<D: Deployer> TriggerManager<D> {
     }
 
     /// Bind `pipeline` to `profile`: matching data arriving at `broker`
-    /// from now on activates the pipeline on demand. The pipeline is
+    /// from now on activates the pipeline on demand. The binding works
+    /// against any [`MatchingPlane`] — a single
+    /// [`Broker`](crate::mmq::pubsub::Broker) or the sharded router
+    /// ([`crate::ar::shard::ShardedBroker`]), so triggers
+    /// bind through the shard router unchanged. The pipeline is
     /// fully validated against the deploy surface *here* — an invalid
     /// definition is rejected at bind time, never at 3am when the
     /// first matching tuple arrives. Binding names (pipeline names)
     /// are unique.
     pub fn bind(
         &mut self,
-        broker: &mut Broker,
+        broker: &mut impl MatchingPlane,
         pipeline: Pipeline,
         profile: Profile,
         opts: TriggerOptions,
@@ -192,7 +197,7 @@ impl<D: Deployer> TriggerManager<D> {
     /// Remove a binding: unsubscribe its consumer, decommission any
     /// live activation (zero-loss drain) and return everything the
     /// binding ever produced that was not yet taken.
-    pub fn unbind(&mut self, broker: &mut Broker, name: &str) -> Result<Vec<Tuple>> {
+    pub fn unbind(&mut self, broker: &mut impl MatchingPlane, name: &str) -> Result<Vec<Tuple>> {
         let mut b = self
             .bindings
             .remove(name)
@@ -213,7 +218,7 @@ impl<D: Deployer> TriggerManager<D> {
     /// activations whose idle watermark has passed. A faulted binding
     /// is torn down and reported; the other bindings still complete
     /// their pass (first error wins).
-    pub fn pump(&mut self, broker: &mut Broker) -> Result<()> {
+    pub fn pump(&mut self, broker: &mut impl MatchingPlane) -> Result<()> {
         let names: Vec<String> = self.bindings.keys().cloned().collect();
         let mut first_err: Option<Error> = None;
         for name in names {
@@ -228,7 +233,7 @@ impl<D: Deployer> TriggerManager<D> {
         }
     }
 
-    fn pump_one(&mut self, broker: &mut Broker, name: &str) -> Result<()> {
+    fn pump_one(&mut self, broker: &mut impl MatchingPlane, name: &str) -> Result<()> {
         let Self { deployer, bindings, metrics } = self;
         let b = bindings.get_mut(name).expect("binding exists");
         let msgs = broker.fetch(&b.consumer, FETCH_MAX)?;
@@ -286,7 +291,11 @@ impl<D: Deployer> TriggerManager<D> {
     /// Keep pumping until every binding is idle (each backlog fed and
     /// each idle watermark passed) or `timeout` elapses; errors
     /// surface immediately. Convenience for drains in tests/benches.
-    pub fn pump_until_idle(&mut self, broker: &mut Broker, timeout: Duration) -> Result<()> {
+    pub fn pump_until_idle(
+        &mut self,
+        broker: &mut impl MatchingPlane,
+        timeout: Duration,
+    ) -> Result<()> {
         let deadline = Instant::now() + timeout;
         loop {
             self.pump(broker)?;
@@ -391,6 +400,8 @@ fn as_tuple(decode: bool, raw_seq: &mut u64, payload: &[u8]) -> Tuple {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ar::shard::ShardedBroker;
+    use crate::mmq::pubsub::Broker;
     use crate::mmq::queue::QueueOptions;
     use crate::stream::operator::{Operator, OperatorKind};
     use crate::stream::pipeline::PipelineStage;
@@ -477,6 +488,37 @@ mod tests {
         let out = trig.take_outputs("job");
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].get("X"), Some(6.0));
+    }
+
+    #[test]
+    fn triggers_bind_through_the_shard_router() {
+        // Same lifecycle, but the matching plane is a ShardedBroker:
+        // publishes land on owner shards, the trigger's consumer is
+        // registered on every shard, and activation still fires.
+        let dir = std::env::temp_dir()
+            .join("rpulsar-trigger-tests")
+            .join(format!("sharded-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut plane = ShardedBroker::new(
+            QueueOptions { dir, segment_bytes: 1 << 16, max_segments: 4, sync_every: 0 },
+            ["s0", "s1", "s2"],
+        );
+        let mut trig = TriggerManager::in_process();
+        trig.bind(&mut plane, inc_pipeline("job"), p("drone*,*"), eager()).unwrap();
+        for i in 0..6u64 {
+            plane
+                .publish(
+                    &p(&format!("drone{i:02},lidar")),
+                    &Tuple::new(i, vec![]).with("X", i as f64).encode(),
+                )
+                .unwrap();
+        }
+        trig.pump_until_idle(&mut plane, Duration::from_secs(10)).unwrap();
+        let out = trig.take_outputs("job");
+        assert_eq!(out.len(), 6, "tuples from every shard must reach the pipeline");
+        assert_eq!(trig.stats("job").unwrap().tuples_fed, 6);
+        assert!(trig.unbind(&mut plane, "job").is_ok());
+        assert!(!plane.is_registered("trigger:job"));
     }
 
     #[test]

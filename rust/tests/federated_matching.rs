@@ -1,0 +1,374 @@
+//! Churn properties of the federated matching plane (the scan-surface
+//! hardening pass): seeded register → expire → re-register fuzz over
+//! the sharded broker, HRW shard-map stability, tombstone compaction
+//! under heavy delete, adversarial-float index ≡ scan equivalence, and
+//! positional index ≡ scan equivalence. Each property runs ≥1000 cases.
+
+use rpulsar::ar::index::IndexedProfiles;
+use rpulsar::ar::matching;
+use rpulsar::ar::profile::{Profile, Term, Value};
+use rpulsar::ar::shard::{MatchingPlane, ShardMap, ShardedBroker};
+use rpulsar::mmq::QueueOptions;
+use rpulsar::testkit::prop::{forall_seeded, NoShrink};
+use rpulsar::util::prng::Prng;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+// ---- generators (small alphabet with shared prefixes so random
+// profiles collide often — a matching bug hides when nothing matches) --
+
+const WORDS: &[&str] = &["a", "ab", "abc", "b", "ba", "li", "lidar", "lidarx", "zone"];
+const ATTRS: &[&str] = &["k", "lat", "zone"];
+
+fn value_of_kind(rng: &mut Prng, kind: usize) -> String {
+    match kind {
+        0 => {
+            if rng.gen_bool(0.5) {
+                format!("{}", rng.gen_range(0, 30) as i64 - 10)
+            } else {
+                rng.choose(WORDS).to_string()
+            }
+        }
+        1 => format!("{}*", rng.choose(WORDS)),
+        2 => "*".to_string(),
+        _ => {
+            let lo = rng.gen_range(0, 25) as i64 - 12;
+            let hi = lo + rng.gen_range(0, 8) as i64;
+            format!("{lo}..{hi}")
+        }
+    }
+}
+
+fn mixed_profile(rng: &mut Prng, max_terms: usize) -> Profile {
+    let n = rng.gen_range(1, max_terms + 1);
+    let terms: Vec<String> = (0..n)
+        .map(|_| {
+            let v = value_of_kind(rng, rng.gen_range(0, 4));
+            if rng.gen_bool(0.5) {
+                format!("{}:{}", rng.choose(ATTRS), v)
+            } else {
+                v
+            }
+        })
+        .collect();
+    Profile::parse(&terms.join(",")).unwrap()
+}
+
+// ---- 1. HRW shard-map stability: only keys owned by a removed shard
+// move, and only keys won by an added shard move ----
+
+#[test]
+fn prop_shard_map_stability_under_churn() {
+    forall_seeded(
+        0x54AB1E,
+        1000,
+        |rng: &mut Prng| {
+            let n = rng.gen_range(2, 8);
+            let names: Vec<String> =
+                (0..n).map(|i| format!("s{i}-{}", rng.ascii_lower(3))).collect();
+            let keys: Vec<String> = (0..30)
+                .map(|_| format!("{},{}", rng.choose(WORDS), rng.ascii_lower(4)))
+                .collect();
+            let victim = rng.gen_range(0, n);
+            let newcomer = format!("zz-{}", rng.ascii_lower(3));
+            NoShrink((names, keys, victim, newcomer))
+        },
+        |NoShrink((names, keys, victim, newcomer)): &NoShrink<(
+            Vec<String>,
+            Vec<String>,
+            usize,
+            String,
+        )>| {
+            let map = ShardMap::new(names.iter());
+            let before: Vec<String> =
+                keys.iter().map(|k| map.owner(k).unwrap().to_string()).collect();
+            // Removal: every key not owned by the victim keeps its owner.
+            let mut shrunk = ShardMap::new(names.iter());
+            shrunk.remove(&names[*victim]);
+            for (k, b) in keys.iter().zip(&before) {
+                let after = shrunk.owner(k).unwrap();
+                if *b != names[*victim] && after != b.as_str() {
+                    return false;
+                }
+            }
+            // Addition: a key either keeps its owner or moves to the newcomer.
+            let mut grown = ShardMap::new(names.iter());
+            grown.add(newcomer);
+            for (k, b) in keys.iter().zip(&before) {
+                let after = grown.owner(k).unwrap();
+                if after != b.as_str() && after != newcomer.as_str() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+// ---- 2. Register → expire → re-register churn over the sharded broker:
+// no stale matches after expiry, shard churn before traffic, all-shard
+// retirement, post-expiry re-register replays (at-least-once) ----
+
+static CASE: AtomicUsize = AtomicUsize::new(0);
+
+fn case_dir() -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join("rpulsar-fedmatch-prop")
+        .join(format!("{}-{}", std::process::id(), CASE.fetch_add(1, Ordering::Relaxed)))
+}
+
+#[test]
+fn prop_register_expire_reregister_churn() {
+    forall_seeded(
+        0xFED5EED,
+        1000,
+        |rng: &mut Prng| {
+            let n_shards = rng.gen_range(2, 5);
+            let add = rng.gen_bool(0.5);
+            let remove = rng.gen_bool(0.5);
+            let topics = rng.gen_range(1, 5);
+            let victim = rng.gen_range(0, topics);
+            NoShrink((n_shards, add, remove, topics, victim))
+        },
+        |NoShrink((n_shards, add, remove, topics, victim)): &NoShrink<(
+            usize,
+            bool,
+            bool,
+            usize,
+            usize,
+        )>| {
+            let dir = case_dir();
+            let opts = QueueOptions {
+                dir: dir.clone(),
+                segment_bytes: 1 << 16,
+                max_segments: 4,
+                sync_every: 0,
+            };
+            let names: Vec<String> = (0..*n_shards).map(|i| format!("s{i}")).collect();
+            let mut plane = ShardedBroker::new(opts, names.iter());
+            // Shard churn happens before traffic so delivery stays exact
+            // (removing a shard drops its backlog by design).
+            if *add {
+                plane.add_shard("zz");
+            }
+            if *remove && plane.shard_map().len() > 1 {
+                plane.remove_shard(&names[0]);
+            }
+            let pat = Profile::parse("d*,*").unwrap();
+            plane.subscribe_with_ttl("keep", pat.clone(), None);
+            plane.subscribe_with_ttl("eph", pat.clone(), Some(Duration::ZERO));
+            plane.subscribe_with_ttl("late", pat.clone(), Some(Duration::from_secs(3600)));
+            let published: Vec<Profile> = (0..*topics)
+                .map(|i| Profile::parse(&format!("d{i},s{}", i % 3)).unwrap())
+                .collect();
+            for (i, p) in published.iter().enumerate() {
+                plane.publish(p, format!("m{i}").as_bytes()).unwrap();
+            }
+            let want: BTreeSet<String> = published.iter().map(|p| p.render()).collect();
+            // Expiry: exactly the zero-TTL consumer is swept, everywhere.
+            let mut ok = plane.sweep_expired() == ["eph"];
+            ok &= !plane.is_registered("eph");
+            ok &= plane.fetch("eph", 64).is_err();
+            // Live consumers still see exactly the published set.
+            let drain = |plane: &mut ShardedBroker, c: &str| -> BTreeSet<String> {
+                plane.fetch(c, 64).unwrap().into_iter().map(|(k, _)| k).collect()
+            };
+            ok &= drain(&mut plane, "keep") == want;
+            ok &= drain(&mut plane, "late") == want;
+            // Post-expiry re-register is a fresh subscription: replays.
+            plane.subscribe_with_ttl("eph", pat.clone(), Some(Duration::from_secs(3600)));
+            ok &= drain(&mut plane, "eph") == want;
+            // All-shard retirement: a later subscriber never sees the
+            // retired topic, wherever its queue lived.
+            ok &= plane.retire_topic(&published[*victim]).unwrap();
+            plane.subscribe_with_ttl("fresh", pat, None);
+            let mut survivors = want.clone();
+            survivors.remove(&published[*victim].render());
+            ok &= drain(&mut plane, "fresh") == survivors;
+            let _ = std::fs::remove_dir_all(&dir);
+            ok
+        },
+    );
+}
+
+// ---- 3. Tombstone compaction under heavy delete: the slab never lets
+// tombstones dominate past the compaction threshold, and queries stay
+// scan-equivalent across compactions ----
+
+#[test]
+fn prop_tombstone_compaction_under_heavy_delete() {
+    forall_seeded(
+        0x70_3B57,
+        1000,
+        |rng: &mut Prng| {
+            // Rounds of (inserted batch, delete query); a `None` delete
+            // query means "delete everything" (the heaviest case).
+            let rounds = rng.gen_range(2, 5);
+            let script: Vec<(Vec<Profile>, Option<Profile>)> = (0..rounds)
+                .map(|_| {
+                    let n = rng.gen_range(12, 24);
+                    let batch: Vec<Profile> =
+                        (0..n).map(|_| mixed_profile(rng, 3)).collect();
+                    let del = if rng.gen_bool(0.3) {
+                        None
+                    } else {
+                        Some(mixed_profile(rng, 2))
+                    };
+                    (batch, del)
+                })
+                .collect();
+            let queries: Vec<Profile> = (0..4).map(|_| mixed_profile(rng, 3)).collect();
+            NoShrink((script, queries))
+        },
+        |NoShrink((script, queries)): &NoShrink<(
+            Vec<(Vec<Profile>, Option<Profile>)>,
+            Vec<Profile>,
+        )>| {
+            let wild = Profile::parse("*").unwrap();
+            let mut ix: IndexedProfiles<Profile> = IndexedProfiles::new();
+            let mut model: Vec<Profile> = Vec::new();
+            for (batch, del) in script {
+                for p in batch {
+                    ix.insert(p.clone());
+                    model.push(p.clone());
+                    // The compaction bound: tombstones never dominate a
+                    // non-trivial slab past the re-pack threshold.
+                    if !(ix.slab_len() <= 32 || ix.slab_len() < 2 * ix.len()) {
+                        return false;
+                    }
+                }
+                let q = del.as_ref().unwrap_or(&wild);
+                let removed = ix.remove_matching(q);
+                let before = model.len();
+                model.retain(|s| !matching::matches(q, s));
+                if removed != before - model.len() || ix.len() != model.len() {
+                    return false;
+                }
+            }
+            // Scan equivalence survives deletes and compactions.
+            queries.iter().all(|q| {
+                let got: Vec<String> = ix.query(q).iter().map(|s| s.render()).collect();
+                let scan: Vec<String> = model
+                    .iter()
+                    .filter(|s| matching::matches(q, s))
+                    .map(|s| s.render())
+                    .collect();
+                got == scan
+            })
+        },
+    );
+}
+
+// ---- 4. Adversarial floats: parse never admits a non-finite or
+// inverted NumRange, and the index stays scan-equivalent ----
+
+const ADVERSARIAL: &[&str] = &[
+    "nan", "NaN", "inf", "-inf", "1e999", "-1e999", "1e308", "-1e308", "0", "-0", "0.5",
+    "-3", "7", "5..1", "nan..5", "5..nan", "-inf..inf", "1..1e999", "-1e999..4", "2..3",
+    "-12..12", "0..0",
+];
+
+fn adversarial_profile(rng: &mut Prng, max_terms: usize) -> Profile {
+    let n = rng.gen_range(1, max_terms + 1);
+    let terms: Vec<String> = (0..n)
+        .map(|_| {
+            let v = if rng.gen_bool(0.7) {
+                rng.choose(ADVERSARIAL).to_string()
+            } else {
+                value_of_kind(rng, rng.gen_range(0, 4))
+            };
+            if rng.gen_bool(0.6) {
+                format!("{}:{}", rng.choose(ATTRS), v)
+            } else {
+                v
+            }
+        })
+        .collect();
+    Profile::parse(&terms.join(",")).unwrap()
+}
+
+fn ranges_canonical(p: &Profile) -> bool {
+    p.terms().iter().all(|t| {
+        let v = match t {
+            Term::Attr(v) => v,
+            Term::Pair(_, v) => v,
+        };
+        match v {
+            Value::NumRange(lo, hi) => lo.is_finite() && hi.is_finite() && lo <= hi,
+            _ => true,
+        }
+    })
+}
+
+fn equivalent(stored: &[Profile], query: &Profile) -> bool {
+    let mut ix = IndexedProfiles::new();
+    for p in stored {
+        ix.insert(p.clone());
+    }
+    let fwd: Vec<String> = ix.query(query).iter().map(|s| s.render()).collect();
+    let scan: Vec<String> = stored
+        .iter()
+        .filter(|s| matching::matches(query, s))
+        .map(|s| s.render())
+        .collect();
+    if fwd != scan {
+        return false;
+    }
+    let rev: Vec<String> = ix.query_reverse(query).iter().map(|s| s.render()).collect();
+    let scan_rev: Vec<String> = stored
+        .iter()
+        .filter(|s| matching::matches(s, query))
+        .map(|s| s.render())
+        .collect();
+    rev == scan_rev
+}
+
+#[test]
+fn prop_adversarial_floats_index_equiv_scan() {
+    forall_seeded(
+        0xF10A7,
+        1200,
+        |rng: &mut Prng| {
+            let n = rng.gen_range(1, 10);
+            let stored: Vec<Profile> = (0..n).map(|_| adversarial_profile(rng, 3)).collect();
+            let query = adversarial_profile(rng, 3);
+            NoShrink((stored, query))
+        },
+        |NoShrink((stored, query)): &NoShrink<(Vec<Profile>, Profile)>| {
+            stored.iter().chain(std::iter::once(query)).all(ranges_canonical)
+                && equivalent(stored, query)
+        },
+    );
+}
+
+// ---- 5. Positional matching routes through the index: equivalence
+// with the full matches_positional scan ----
+
+#[test]
+fn prop_positional_index_equiv_scan() {
+    forall_seeded(
+        0x905,
+        1000,
+        |rng: &mut Prng| {
+            let n = rng.gen_range(1, 12);
+            let stored: Vec<Profile> = (0..n).map(|_| mixed_profile(rng, 4)).collect();
+            let query = mixed_profile(rng, 4);
+            NoShrink((stored, query))
+        },
+        |NoShrink((stored, query)): &NoShrink<(Vec<Profile>, Profile)>| {
+            let mut ix = IndexedProfiles::new();
+            for p in stored {
+                ix.insert(p.clone());
+            }
+            let got: Vec<String> =
+                ix.query_positional(query).iter().map(|s| s.render()).collect();
+            let scan: Vec<String> = stored
+                .iter()
+                .filter(|s| matching::matches_positional(query, s))
+                .map(|s| s.render())
+                .collect();
+            got == scan
+        },
+    );
+}
