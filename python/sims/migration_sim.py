@@ -1,0 +1,296 @@
+#!/usr/bin/env python3
+"""Behavioral pre-validation of the live fragment-migration protocol
+(PR 8) — no cargo in the dev container, so the drain/handoff/re-route
+sequencing is fuzzed here before the Rust implementation.
+
+Model
+-----
+A topology is a linear chain of stages split into contiguous fragments,
+each fragment hosted on a node. Tuples are (key, value) pairs; the one
+stateful stage is a keyed tumbling window (per-key buffer, emits the
+sum every W samples, flushes partials only at stream end). Between
+fragments sits a staging queue of batches: `staged[i]` holds batches
+shipped toward fragment i but not yet admitted (the Rust RouteState's
+per-hop VecDeque + the shipper's in-flight set).
+
+Migration protocol under test (the Rust `migrate_fragment` contract):
+
+1. stop feeding the route, halt the shipper (in-flight batches restage
+   in order — modeled by `staged` never reordering),
+2. freeze the old fragment: everything already *delivered* to it is
+   processed and its outputs shipped downstream, then every stage
+   exports its per-key state (open windows move, they do NOT flush),
+3. the state ships to the destination node and is imported into a
+   freshly started fragment (hash re-partitioning is a no-op here: the
+   model keeps one logical operator per stage, as does the per-key
+   merge in Rust),
+4. `staged[i]` batches — never delivered to the old fragment — are
+   re-routed to the new fragment unchanged and in order,
+5. feeding resumes.
+
+Invariants fuzzed (multiset + order + liveness + accounting):
+
+- outputs across any schedule of feeds/deliveries/pumps/migrations are
+  multiset-equal to a single-node reference run,
+- per-key output order matches the reference exactly,
+- every schedule terminates (no livelock): bounded step count,
+- encode-once accounting: data batches are encoded exactly once when
+  first shipped; migrations add only state frames, so
+  `data_encodes + state_frames == messages`.
+"""
+
+import random
+import sys
+from collections import defaultdict
+
+WINDOW = 3
+
+
+class KeyedWindow:
+    """Per-key tumbling sum window (the stateful stage)."""
+
+    def __init__(self):
+        self.bufs = defaultdict(list)
+
+    def process(self, t):
+        k, v = t
+        buf = self.bufs[k]
+        buf.append(v)
+        if len(buf) == WINDOW:
+            out = (k, sum(buf))
+            self.bufs[k] = []
+            return [out]
+        return []
+
+    def export_state(self):
+        state = {k: list(b) for k, b in self.bufs.items() if b}
+        self.bufs = defaultdict(list)
+        return state
+
+    def import_state(self, state):
+        for k, b in state.items():
+            self.bufs[k].extend(b)
+
+    def finish(self):
+        outs = [(k, sum(b)) for k, b in sorted(self.bufs.items()) if b]
+        self.bufs = defaultdict(list)
+        return outs
+
+
+class Mapper:
+    """Stateless stage: value transform keeps per-key order observable."""
+
+    def __init__(self, delta):
+        self.delta = delta
+
+    def process(self, t):
+        return [(t[0], t[1] + self.delta)]
+
+    def export_state(self):
+        return {}
+
+    def import_state(self, state):
+        assert not state
+
+    def finish(self):
+        return []
+
+
+def make_stage(spec):
+    return KeyedWindow() if spec == "kwin" else Mapper(int(spec[3:]))
+
+
+class Fragment:
+    """One placed fragment: delivered-but-unprocessed inbox + stages."""
+
+    def __init__(self, specs, node):
+        self.specs = specs
+        self.node = node
+        self.inbox = []  # delivered batches, FIFO
+        self.stages = [make_stage(s) for s in specs]
+
+    def run_batch(self, batch):
+        for stage in self.stages:
+            nxt = []
+            for t in batch:
+                nxt.extend(stage.process(t))
+            batch = nxt
+        return batch
+
+    def drain_inbox(self):
+        out = []
+        while self.inbox:
+            out.extend(self.run_batch(self.inbox.pop(0)))
+        return out
+
+    def freeze(self):
+        """Drain delivered input, then move (not flush) all state."""
+        trailing = self.drain_inbox()
+        states = [s.export_state() for s in self.stages]
+        return trailing, states
+
+    def finish(self):
+        out = self.drain_inbox()
+        for i, stage in enumerate(self.stages):
+            flushed = stage.finish()
+            for later in self.stages[i + 1 :]:
+                nxt = []
+                for t in flushed:
+                    nxt.extend(later.process(t))
+                flushed = nxt
+            out.extend(flushed)
+        return out
+
+
+class Route:
+    def __init__(self, fragments):
+        self.frags = fragments
+        n = len(fragments)
+        self.staged = [[] for _ in range(n)]  # staged[i] feeds frag i
+        self.collected = []
+        self.data_encodes = 0
+        self.state_frames = 0
+        self.messages = 0
+        self.migrations = 0
+
+    def feed(self, batch):
+        # Encode-once: a batch is encoded when it first ships a hop.
+        self.staged[0].append(list(batch))
+
+    def deliver_one(self, i, rng):
+        """Admit one staged batch into fragment i (the offer path)."""
+        if not self.staged[i]:
+            return False
+        batch = self.staged[i].pop(0)
+        if i > 0:  # hop 0 is local ingress; hops 1.. cross the network
+            self.data_encodes += 1
+            self.messages += 1
+        self.frags[i].inbox.append(batch)
+        return True
+
+    def pump_one(self, i):
+        """Process one delivered batch through fragment i."""
+        if not self.frags[i].inbox:
+            return False
+        out = self.frags[i].run_batch(self.frags[i].inbox.pop(0))
+        self.route_out(i, out)
+        return True
+
+    def route_out(self, i, out):
+        if not out:
+            return
+        if i + 1 == len(self.frags):
+            self.collected.extend(out)
+        else:
+            self.staged[i + 1].append(out)
+
+    def migrate(self, i, to_node):
+        """The protocol under test (steps 2–4 of the module docstring)."""
+        frag = self.frags[i]
+        trailing, states = frag.freeze()
+        self.route_out(i, trailing)
+        # Ship one state frame per stage holding state.
+        for st in states:
+            if st:
+                self.state_frames += 1
+                self.messages += 1
+        fresh = Fragment(frag.specs, to_node)
+        for stage, st in zip(fresh.stages, states):
+            stage.import_state(st)
+        self.frags[i] = fresh  # staged[i] re-routes untouched, in order
+        self.migrations += 1
+
+    def stop(self):
+        """Zero-loss teardown: drain staged + inboxes upstream-first."""
+        for i in range(len(self.frags)):
+            while self.deliver_one(i, None) or self.pump_one(i):
+                pass
+            self.route_out(i, self.frags[i].finish())
+        return self.collected
+
+
+def reference_run(specs, tuples):
+    frag = Fragment(specs, "ref")
+    out = frag.run_batch(list(tuples))
+    return out + frag.finish()
+
+
+def run_case(seed):
+    rng = random.Random(seed)
+    nstages = rng.randint(2, 5)
+    specs = [f"map{rng.randint(1, 9)}" for _ in range(nstages - 1)]
+    specs.insert(rng.randrange(nstages), "kwin")
+    # Random contiguous fragmentation into 1..n fragments.
+    cuts = sorted(rng.sample(range(1, nstages), rng.randint(0, nstages - 1)))
+    bounds = [0] + cuts + [nstages]
+    frags = [
+        Fragment(specs[a:b], f"node{j}")
+        for j, (a, b) in enumerate(zip(bounds, bounds[1:]))
+    ]
+    route = Route(frags)
+
+    nkeys = rng.randint(1, 5)
+    seqs = defaultdict(int)
+    tuples = []
+    for i in range(rng.randint(5, 120)):
+        k = rng.randrange(nkeys)
+        seqs[k] += 1
+        tuples.append((k, seqs[k] * 1000 + rng.randint(0, 9)))
+
+    fed = 0
+    steps = 0
+    budget = 10_000
+    while fed < len(tuples) or rng.random() < 0.3:
+        steps += 1
+        assert steps < budget, f"seed {seed}: livelock (no progress bound hit)"
+        action = rng.random()
+        if action < 0.4 and fed < len(tuples):
+            n = min(rng.randint(1, 7), len(tuples) - fed)
+            route.feed(tuples[fed : fed + n])
+            fed += n
+        elif action < 0.65:
+            route.deliver_one(rng.randrange(len(frags)), rng)
+        elif action < 0.9:
+            route.pump_one(rng.randrange(len(frags)))
+        else:
+            # Migrate a random fragment to a fresh node mid-stream.
+            i = rng.randrange(len(frags))
+            route.migrate(i, f"node{rng.randint(100, 999)}")
+        if fed == len(tuples) and rng.random() < 0.5:
+            break
+
+    got = route.stop()
+    want = reference_run(specs, tuples)
+
+    assert sorted(got) == sorted(want), (
+        f"seed {seed}: multiset diverged\n got {sorted(got)}\nwant {sorted(want)}"
+    )
+    per_key_got = defaultdict(list)
+    per_key_want = defaultdict(list)
+    for k, v in got:
+        per_key_got[k].append(v)
+    for k, v in want:
+        per_key_want[k].append(v)
+    assert per_key_got == per_key_want, f"seed {seed}: per-key order diverged"
+    assert route.data_encodes + route.state_frames == route.messages, (
+        f"seed {seed}: encode-once accounting broke"
+    )
+    return route.migrations, len(got)
+
+
+def main():
+    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 3000
+    migrations = outputs = 0
+    for seed in range(cases):
+        m, o = run_case(seed)
+        migrations += m
+        outputs += o
+    print(
+        f"migration_sim OK: {cases} randomized schedules, "
+        f"{migrations} migrations, {outputs} outputs verified "
+        f"(multiset, per-key order, encode-once, bounded steps)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,320 @@
+//! Fig. 18 (beyond the paper): cluster-wide elasticity — a keyed
+//! analytics chain rides a diurnal load curve while the cluster
+//! changes under it.
+//!
+//! The scenario, on a SimNetwork cluster of two Raspberry-Pi-class
+//! nodes (`ingest` on the edge, `featurize` on a spare Pi, the
+//! CPU-heavy keyed window back on the edge):
+//!
+//! - **pre-join**: the diurnal feed runs on the two Pis; the policy
+//!   plane ticks along the way and finds no migration worth taking
+//!   (uniform hosts — every alternative costs the same).
+//! - **join**: a `cloud_small` node joins. The join alone is inert; the
+//!   next [`ClusterPolicy`] tick live-migrates the heavy window
+//!   fragment onto the joiner — open keyed windows ship as
+//!   `MigrateState` frames, zero loss, measured pause — and the next
+//!   tick confirms the placement converged.
+//! - **leave**: mid-run the cloud node is *decommissioned*: its
+//!   fragment (open state again) drains back to the best surviving Pi,
+//!   then the node leaves membership and reachability. The feed never
+//!   stops.
+//!
+//! Reported per phase: wall-clock feed throughput and the policy
+//! actions taken; per migration: moved keys, wire bytes and the
+//! measured pause. The final output multiset must equal the
+//! single-process ground truth — the zero-loss contract the elasticity
+//! suite (`rust/tests/elasticity.rs`) property-tests — and the
+//! `net.migration.*` counters must agree exactly with the reports.
+//!
+//! Writes `BENCH_elasticity.json` at the repo root so later PRs can
+//! track the elasticity curve. `-- --test` runs a seconds-long smoke
+//! (CI gate).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{header, smoke_mode};
+use rpulsar::device::profile::DeviceProfile;
+use rpulsar::overlay::node_id::NodeId;
+use rpulsar::stream::deploy::TopologyManager;
+use rpulsar::stream::dist::{
+    ClusterPolicy, DistributedTopologyManager, Fragment, MigrationReport, PlacementPlan,
+    PolicyAction,
+};
+use rpulsar::stream::engine::StreamEngine;
+use rpulsar::stream::operator::OperatorKind;
+use rpulsar::stream::topology::Topology;
+use rpulsar::stream::tuple::Tuple;
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+const KEYS: u64 = 16;
+const SPEC: &str = "ingest->featurize*2@K->kwin@K";
+/// Chunk sizes cycled through each phase: the diurnal peak→trough→peak.
+const DIURNAL: &[usize] = &[256, 192, 128, 64, 32, 64, 128, 192];
+
+fn make_stage(name: &str, window: usize) -> OperatorKind {
+    match name {
+        "ingest" => OperatorKind::map("ingest", |mut t| {
+            let v = t.get("V").unwrap_or(0.0);
+            t.set("V", v + 1.0);
+            t
+        }),
+        "featurize" => OperatorKind::map("featurize", |mut t| {
+            let v = t.get("V").unwrap_or(0.0);
+            // Fixed CPU work, value-neutral: the stage the cost model
+            // weighs as heavy actually burns cycles.
+            let mut acc = 0.0f64;
+            for i in 0..40 {
+                acc += (v + i as f64).sqrt();
+            }
+            black_box(acc);
+            t.set("V", v * 2.0);
+            t
+        }),
+        "kwin" => OperatorKind::window_by("kwin", "V", window, "K"),
+        other => unreachable!("unknown stage {other}"),
+    }
+}
+
+fn tuples(total: usize) -> Vec<Tuple> {
+    (0..total)
+        .map(|i| {
+            Tuple::new(i as u64, vec![])
+                .with("K", (i as u64 % KEYS) as f64)
+                .with("V", (i % 97) as f64 * 0.5)
+        })
+        .collect()
+}
+
+fn canon(out: Vec<Tuple>) -> Vec<String> {
+    let mut v: Vec<String> = out.into_iter().map(|t| format!("{:?}", t.fields)).collect();
+    v.sort();
+    v
+}
+
+/// Feed one phase of the diurnal curve, ticking the policy plane every
+/// few chunks. Returns (tuples/sec wall-clock, policy actions taken).
+fn feed_phase(
+    dist: &mut DistributedTopologyManager,
+    input: &[Tuple],
+    policy: &ClusterPolicy,
+) -> (f64, Vec<PolicyAction>) {
+    let mut actions = Vec::new();
+    let clock = Instant::now();
+    let (mut i, mut c) = (0usize, 0usize);
+    while i < input.len() {
+        let n = DIURNAL[c % DIURNAL.len()].min(input.len() - i);
+        dist.send_batch("job", input[i..i + n].to_vec()).unwrap();
+        i += n;
+        c += 1;
+        if c % 4 == 0 {
+            actions.extend(dist.policy_tick(policy).unwrap());
+        }
+    }
+    let secs = clock.elapsed().as_secs_f64().max(1e-9);
+    (input.len() as f64 / secs, actions)
+}
+
+fn hosts(dist: &DistributedTopologyManager) -> Vec<NodeId> {
+    dist.route("job").unwrap().hops().iter().map(|h| h.node).collect()
+}
+
+/// Let the background shipper deliver what is in flight, so migrations
+/// at phase boundaries find the keyed state in the window fragment
+/// rather than in staged batches (bounded wait — this is cosmetic for
+/// the report, not a correctness requirement).
+fn settle(dist: &DistributedTopologyManager) {
+    let clock = Instant::now();
+    while dist.route("job").unwrap().staged_tuples() > 0 && clock.elapsed() < Duration::from_secs(2)
+    {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn main() {
+    header(
+        "Fig. 18 — cluster elasticity (live migration, join/leave, policy plane)",
+        "pipelines scale across the cloud and the edge as resources come and go",
+    );
+    let smoke = smoke_mode();
+    // Window sizes chosen so open keyed state exists at both migration
+    // points (the per-key arrival counts are not window multiples).
+    let (total, window) = if smoke { (600usize, 4usize) } else { (24_000, 7) };
+    let input = tuples(total);
+    println!("{total} tuples over {KEYS} keys, window={window}, spec={SPEC}, smoke={smoke}");
+
+    // Ground truth: the same spec on one single-process manager.
+    let mut local = TopologyManager::new(StreamEngine::new());
+    for name in ["ingest", "featurize", "kwin"] {
+        local.register_stage(name, move || Box::new(make_stage(name, window)));
+    }
+    local.start("job", SPEC).unwrap();
+    for chunk in input.chunks(512) {
+        local.send_batch("job", chunk.to_vec()).unwrap();
+    }
+    let expected = canon(local.stop("job").unwrap());
+
+    // The elastic cluster: two Pis now, a cloud node later.
+    let mut dist = DistributedTopologyManager::new();
+    let edge = NodeId::from_name("pi-edge");
+    let spare = NodeId::from_name("pi-spare");
+    let cloud = NodeId::from_name("cloud-join");
+    dist.add_node(edge, DeviceProfile::raspberry_pi());
+    dist.add_node(spare, DeviceProfile::raspberry_pi());
+    for name in ["ingest", "featurize", "kwin"] {
+        dist.register_stage(name, move || Box::new(make_stage(name, window)));
+    }
+    let topo = Topology::parse("job", SPEC).unwrap();
+    let plan = PlacementPlan {
+        fragments: vec![
+            Fragment { node: edge, stages: topo.stages[0..1].to_vec() },
+            Fragment { node: spare, stages: topo.stages[1..2].to_vec() },
+            Fragment { node: edge, stages: topo.stages[2..3].to_vec() },
+        ],
+    };
+    dist.start("job", SPEC, &plan).unwrap();
+    let policy = ClusterPolicy {
+        sustain: 2,
+        migrate_min_gain: 0.05,
+        cpu_heavy: vec!["kwin".to_string()],
+        ..ClusterPolicy::default()
+    };
+
+    let phase = total / 3;
+
+    // -- Phase 1: the two-Pi cluster rides the curve.
+    let (tps_pre, acts_pre) = feed_phase(&mut dist, &input[0..phase], &policy);
+    assert!(
+        !acts_pre.iter().any(|a| matches!(a, PolicyAction::Migrate { .. })),
+        "uniform hosts: no migration is worth taking before the join"
+    );
+
+    // -- Join: inert until the policy plane pulls the heavy fragment.
+    settle(&dist);
+    let before = hosts(&dist);
+    dist.add_node(cloud, DeviceProfile::cloud_small());
+    assert_eq!(before, hosts(&dist), "a join alone must move nothing");
+    let clock = Instant::now();
+    let join_actions = dist.policy_tick(&policy).unwrap();
+    let join_tick = clock.elapsed();
+    let pulls = join_actions
+        .iter()
+        .filter(|a| matches!(a, PolicyAction::Migrate { to, .. } if *to == cloud))
+        .count();
+    assert_eq!(pulls, 1, "the tick must pull exactly the heavy window fragment: {join_actions:?}");
+    assert!(hosts(&dist).contains(&cloud), "the joiner hosts the pulled fragment");
+    assert!(
+        !dist
+            .policy_tick(&policy)
+            .unwrap()
+            .iter()
+            .any(|a| matches!(a, PolicyAction::Migrate { .. })),
+        "placement converges after one pull"
+    );
+    let pull_report = dist.route("job").unwrap().migrations().last().unwrap().clone();
+    assert!(
+        pull_report.moved_keys <= KEYS as usize,
+        "at most one state snapshot per key: {pull_report:?}"
+    );
+
+    // -- Phase 2: edge + cloud split.
+    let (tps_mid, acts_mid) = feed_phase(&mut dist, &input[phase..2 * phase], &policy);
+
+    // -- Leave: clean decommission of the cloud node, mid-run.
+    settle(&dist);
+    let hosted = hosts(&dist).iter().filter(|n| **n == cloud).count();
+    let drain_reports = dist.decommission_node(cloud, &policy).unwrap();
+    assert_eq!(drain_reports.len(), hosted, "every hosted fragment drains off the leaver");
+    assert!(drain_reports[0].moved_keys <= KEYS as usize);
+    assert!(!dist.nodes().contains(&cloud), "the leaver is out of membership");
+    assert!(!dist.network().is_reachable(&cloud), "the leaver is out of reachability");
+    assert!(!hosts(&dist).contains(&cloud));
+
+    // -- Phase 3: back on the surviving Pis.
+    let (tps_post, acts_post) = feed_phase(&mut dist, &input[2 * phase..], &policy);
+
+    // Migration accounting: the route log, the reports and the
+    // `net.migration.*` counters agree exactly.
+    let migrations: Vec<MigrationReport> = dist.route("job").unwrap().migrations().to_vec();
+    assert_eq!(migrations.len(), 2, "one pull at join, one drain at leave");
+    let m = dist.metrics();
+    assert_eq!(m.counter("net.migration.started").get(), 2);
+    assert_eq!(m.counter("net.migration.completed").get(), 2);
+    assert_eq!(
+        m.counter("net.migration.bytes").get(),
+        migrations.iter().map(|r| r.state_bytes as u64).sum::<u64>()
+    );
+    assert_eq!(
+        m.counter("net.migration.pause_ms").get(),
+        migrations.iter().map(|r| r.pause.as_millis() as u64).sum::<u64>()
+    );
+    for r in &migrations {
+        assert!(r.pause < Duration::from_secs(60), "pause must be measured and sane: {r:?}");
+    }
+
+    // Zero loss across the whole ride.
+    let out = dist.stop("job").unwrap();
+    assert_eq!(
+        canon(out),
+        expected,
+        "join, pull, and decommission must not change the output multiset"
+    );
+
+    println!("\n{:<12} {:>12} {:>9}  policy actions", "phase", "t/s (wall)", "rescales");
+    for (name, tps, acts) in
+        [("pre-join", tps_pre, &acts_pre), ("split", tps_mid, &acts_mid), ("drained", tps_post, &acts_post)]
+    {
+        let rescales =
+            acts.iter().filter(|a| matches!(a, PolicyAction::Rescale { .. })).count();
+        println!("{name:<12} {tps:>12.0} {rescales:>9}  {acts:?}");
+    }
+    println!("\njoin tick (incl. live pull): {join_tick:.2?}");
+    for r in &migrations {
+        println!(
+            "migration f{} {} → {}: {} keys, {} B state, pause {:.2?}",
+            r.fragment, r.from, r.to, r.moved_keys, r.state_bytes, r.pause
+        );
+    }
+
+    write_bench_json(
+        smoke,
+        &[("pre-join", tps_pre), ("split", tps_mid), ("drained", tps_post)],
+        &migrations,
+    );
+    println!("\nfig18 OK");
+}
+
+/// Bench-trajectory record for later PRs, written at the repo root.
+fn write_bench_json(smoke: bool, phases: &[(&str, f64)], migrations: &[MigrationReport]) {
+    let phase_rows: Vec<String> = phases
+        .iter()
+        .map(|(name, tps)| format!("    {{\"phase\": \"{name}\", \"tuples_per_sec\": {tps:.1}}}"))
+        .collect();
+    let mig_rows: Vec<String> = migrations
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"fragment\": {}, \"from\": \"{}\", \"to\": \"{}\", \"moved_keys\": {}, \
+                 \"state_bytes\": {}, \"pause_ms\": {}}}",
+                r.fragment,
+                r.from,
+                r.to,
+                r.moved_keys,
+                r.state_bytes,
+                r.pause.as_millis()
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"fig18_elasticity\",\n  \"smoke\": {smoke},\n  \"phases\": [\n{}\n  ],\n  \
+         \"migrations\": [\n{}\n  ]\n}}\n",
+        phase_rows.join(",\n"),
+        mig_rows.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_elasticity.json");
+    match std::fs::write(path, json) {
+        Ok(()) => println!("bench trajectory written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

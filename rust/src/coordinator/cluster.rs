@@ -18,6 +18,7 @@ use crate::device::profile::DeviceProfile;
 use crate::error::{Error, Result};
 use crate::metrics::Registry;
 use crate::net::sim::SimNetwork;
+use crate::net::tcp::TcpEndpoint;
 use crate::net::wire::NetMessage;
 use crate::overlay::geo::GeoPoint;
 use crate::overlay::node_id::NodeId;
@@ -25,13 +26,18 @@ use crate::overlay::quadtree::QuadTree;
 use crate::overlay::ring::{build_converged_tables, simulate_lookup, RoutingTable};
 use crate::routing::router::ContentRouter;
 use crate::stream::deploy::TopologyManager;
-use crate::stream::dist::{self, plan_placement, FragmentHost, PlacementPlan, RouteState};
+use crate::stream::dist::{
+    self, plan_placement, ClusterPolicy, Fragment, FragmentHost, MigrationReport, PlacementPlan,
+    PolicyAction, RouteState,
+};
 use crate::stream::engine::RescaleReport;
 use crate::stream::pipeline::{handle_for, Deployer, Pipeline, PipelineHandle};
 use crate::stream::topology::Topology;
 use crate::stream::tuple::Tuple;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 /// The in-process cluster.
 pub struct Cluster {
@@ -54,6 +60,9 @@ pub struct Cluster {
     fed_map: ShardMap,
     /// Rotating start offset for federated fetches (no node starves).
     fed_rr: usize,
+    /// Consecutive same-direction watermark hits per `frag_key/stage`,
+    /// debouncing [`Cluster::stream_policy_tick`] rescales.
+    policy_streaks: BTreeMap<String, (usize, u32)>,
 }
 
 /// The cluster hosts topology fragments on its nodes' own managers and
@@ -129,6 +138,7 @@ impl Cluster {
             async_net: dist::netplane_async_default(),
             fed_map,
             fed_rr: 0,
+            policy_streaks: BTreeMap::new(),
         })
     }
 
@@ -485,6 +495,66 @@ impl Cluster {
         &self.fed_map
     }
 
+    /// Apply one federation control frame received from a transport —
+    /// the TCP ingress half of [`Cluster::federated_subscribe`] /
+    /// [`Cluster::federated_unsubscribe`]. A frame whose `from` is a
+    /// cluster node replays the full federated call (simulated
+    /// forwarding routes charged); an external registrant's frame
+    /// already paid the real wire, so it applies at every node
+    /// directly. The wire encodes "no expiry" as `ttl_ms == 0`.
+    /// Returns whether the frame changed any node. Errors on frames
+    /// that are not federation control traffic.
+    pub fn apply_federation_frame(&mut self, frame: NetMessage) -> Result<bool> {
+        match frame {
+            NetMessage::Register { from, consumer, profile, ttl_ms } => {
+                let ttl = (ttl_ms > 0).then(|| Duration::from_millis(ttl_ms));
+                if self.nodes.contains_key(&from) {
+                    self.federated_subscribe(from, &consumer, &profile, ttl)?;
+                } else {
+                    for node in self.nodes.values_mut() {
+                        node.apply_registration(&consumer, profile.clone(), ttl);
+                    }
+                }
+                self.metrics.counter("cluster.federation.frames_applied").inc();
+                Ok(true)
+            }
+            NetMessage::Unregister { from, consumer } => {
+                let any = if self.nodes.contains_key(&from) {
+                    self.federated_unsubscribe(from, &consumer)?
+                } else {
+                    let mut any = false;
+                    for node in self.nodes.values_mut() {
+                        any |= node.remove_registration(&consumer);
+                    }
+                    any
+                };
+                self.metrics.counter("cluster.federation.frames_applied").inc();
+                Ok(any)
+            }
+            other => Err(Error::Net(format!("not a federation frame: {other:?}"))),
+        }
+    }
+
+    /// Drain an endpoint's inbox into the federated plane: every
+    /// Register/Unregister frame that arrived over the wire is applied
+    /// via [`Cluster::apply_federation_frame`]; other message kinds are
+    /// logged and skipped (they belong to other planes). Waits up to
+    /// `wait` for each successive frame, so `Duration::ZERO` is a pure
+    /// poll. Returns how many frames were applied.
+    pub fn drain_federation(&mut self, endpoint: &TcpEndpoint, wait: Duration) -> Result<usize> {
+        let mut applied = 0;
+        while let Some(frame) = endpoint.recv_timeout(wait) {
+            match frame {
+                f @ (NetMessage::Register { .. } | NetMessage::Unregister { .. }) => {
+                    self.apply_federation_frame(f)?;
+                    applied += 1;
+                }
+                other => log::warn!("federation ingress: ignoring {other:?}"),
+            }
+        }
+        Ok(applied)
+    }
+
     // ---- Distributed stream topologies (cross-node stage placement) ----
 
     /// Deploy a stream topology split across the cluster per `plan`:
@@ -592,13 +662,188 @@ impl Cluster {
             .rescale(&frag_key, stage, parallelism)
     }
 
-    /// Housekeeping pass over every node (broker idle-topic retirement
-    /// via [`Node::tick`]; nodes without a retire policy are no-ops).
-    /// Called from the stream pump paths; safe to call any time.
-    /// Returns `(node, retired topic)` pairs.
+    /// Live-migrate one fragment of a deployed stream to another
+    /// cluster node: same pause/zero-loss/per-key-order contract as
+    /// [`DistributedTopologyManager::migrate_fragment`] — the shared
+    /// [`dist::migrate_route`] mechanism runs against the cluster's
+    /// nodes and simulated network. The target node must know the
+    /// fragment's stages (register them there, or deploy through the
+    /// [`Deployer`] surface, which registers attached factories on
+    /// every node).
+    ///
+    /// [`DistributedTopologyManager::migrate_fragment`]:
+    /// crate::stream::dist::DistributedTopologyManager::migrate_fragment
+    pub fn stream_migrate(
+        &mut self,
+        key: &str,
+        fragment: usize,
+        to: NodeId,
+    ) -> Result<MigrationReport> {
+        let mut route = self.take_stream(key)?;
+        let r = dist::migrate_route(self, &mut route, fragment, to);
+        self.streams.insert(key.to_string(), route);
+        r
+    }
+
+    /// Current placement of a deployed stream, from its live hops
+    /// (reflects past migrations).
+    pub fn stream_placement(&self, key: &str) -> Option<PlacementPlan> {
+        self.streams.get(key).map(|st| PlacementPlan {
+            fragments: st
+                .hops()
+                .iter()
+                .map(|h| Fragment { node: h.node, stages: h.specs.clone() })
+                .collect(),
+        })
+    }
+
+    /// Device profiles the stream planner sees for the cluster's nodes
+    /// (uniform: every node runs as [`Cluster::device`]).
+    fn stream_profiles(&self) -> BTreeMap<NodeId, DeviceProfile> {
+        self.nodes.keys().map(|id| (*id, DeviceProfile::for_kind(self.device))).collect()
+    }
+
+    /// One cluster policy pass over the deployed streams — the
+    /// coordinator flavour of
+    /// [`DistributedTopologyManager::policy_tick`]. Runs the
+    /// housekeeping [`Cluster::tick`] (which publishes each node's
+    /// gauges cluster-wide), then samples every fragment's depth gauges
+    /// *from its hosting node's own registry*, rescales between the
+    /// policy watermarks (`sustain`-debounced), and finally re-ranks
+    /// each stream's placement with the policy's cost model, migrating
+    /// a fragment when another host wins by `migrate_min_gain`. On a
+    /// uniform cluster the placement pass converges immediately; it
+    /// earns its keep under churn (see [`Cluster::decommission`]).
+    ///
+    /// [`DistributedTopologyManager::policy_tick`]:
+    /// crate::stream::dist::DistributedTopologyManager::policy_tick
+    pub fn stream_policy_tick(&mut self, policy: &ClusterPolicy) -> Result<Vec<PolicyAction>> {
+        self.tick();
+        let mut actions = Vec::new();
+        // -- Elasticity: watermark rescales, debounced per stage.
+        let mut samples: Vec<(String, Arc<str>, NodeId, String, usize, i64)> = Vec::new();
+        for (key, st) in &self.streams {
+            for hop in st.hops() {
+                for stage in &hop.stages {
+                    let Some(node) = self.nodes.get(&hop.node) else { continue };
+                    let Ok(current) = node.topologies().parallelism(&hop.frag_key, stage)
+                    else {
+                        continue;
+                    };
+                    let reg = node.metrics();
+                    let mut depth =
+                        reg.gauge(&format!("stream.{}.{stage}.in.depth", hop.frag_key)).get();
+                    for r in 0..current {
+                        depth = depth.max(
+                            reg.gauge(&format!("stream.{}.{stage}.r{r}.depth", hop.frag_key))
+                                .get(),
+                        );
+                    }
+                    samples.push((
+                        key.clone(),
+                        hop.frag_key.clone(),
+                        hop.node,
+                        stage.clone(),
+                        current,
+                        depth,
+                    ));
+                }
+            }
+        }
+        for (key, frag_key, node, stage, current, depth) in samples {
+            let streak_key = format!("{frag_key}/{stage}");
+            let Some(target) = policy.decide(depth, current) else {
+                self.policy_streaks.remove(&streak_key);
+                continue;
+            };
+            let streak = match self.policy_streaks.get(&streak_key) {
+                Some((t, n)) if *t == target => n + 1,
+                _ => 1,
+            };
+            if streak < policy.sustain.max(1) {
+                self.policy_streaks.insert(streak_key, (target, streak));
+                continue;
+            }
+            self.policy_streaks.remove(&streak_key);
+            self.nodes
+                .get(&node)
+                .ok_or_else(|| Error::Net(format!("no stream manager for node {node}")))?
+                .topologies()
+                .rescale(&frag_key, &stage, target)?;
+            actions.push(PolicyAction::Rescale { topology: key, stage, parallelism: target });
+        }
+        // -- Placement: migrate when the cost model finds a clearly
+        //    better host for a non-ingestion fragment.
+        let profiles = self.stream_profiles();
+        let heavy: Vec<&str> = policy.cpu_heavy.iter().map(String::as_str).collect();
+        let keys: Vec<String> = self.streams.keys().cloned().collect();
+        for key in keys {
+            let Some(plan) = self.stream_placement(&key) else { continue };
+            let Some(current) = policy.cost.plan_cost(&plan, &profiles, &heavy) else { continue };
+            if let Some((c, f, target)) =
+                dist::best_single_move(&policy.cost, &plan, &profiles, &heavy)
+            {
+                if current > 0.0 && (current - c) / current >= policy.migrate_min_gain {
+                    self.stream_migrate(&key, f, target)?;
+                    actions.push(PolicyAction::Migrate { topology: key, fragment: f, to: target });
+                }
+            }
+        }
+        Ok(actions)
+    }
+
+    /// Gracefully drain a node out of the cluster: every stream
+    /// fragment it hosts is live-migrated to the best-cost surviving
+    /// node (zero loss — the antithesis of [`Cluster::crash`], which
+    /// stays lossy by design), the node is shut down (topologies
+    /// stopped, queue and store flushed), and then removed from the
+    /// overlay, federation map and network exactly like a crash. Fails
+    /// — with the node still serving — when it hosts a fragment no
+    /// surviving node can take.
+    pub fn decommission(
+        &mut self,
+        id: NodeId,
+        policy: &ClusterPolicy,
+    ) -> Result<Vec<MigrationReport>> {
+        if !self.nodes.contains_key(&id) {
+            return Err(Error::NotFound(format!("no node {id}")));
+        }
+        let survivors: Vec<NodeId> =
+            self.nodes.keys().copied().filter(|n| *n != id).collect();
+        let profiles = self.stream_profiles();
+        let heavy: Vec<&str> = policy.cpu_heavy.iter().map(String::as_str).collect();
+        let mut reports = Vec::new();
+        let keys: Vec<String> = self.streams.keys().cloned().collect();
+        for key in keys {
+            loop {
+                let Some(plan) = self.stream_placement(&key) else { break };
+                let Some(f) = plan.fragments.iter().position(|fr| fr.node == id) else { break };
+                let best =
+                    dist::best_host_for(&policy.cost, &plan, f, &survivors, &profiles, &heavy);
+                let Some((_, to)) = best else {
+                    return Err(Error::Net(format!(
+                        "cannot decommission node {id}: no surviving node can host \
+                         fragment #{f} of `{key}`"
+                    )));
+                };
+                reports.push(self.stream_migrate(&key, f, to)?);
+            }
+        }
+        self.nodes.get_mut(&id).expect("presence checked above").shutdown()?;
+        self.crash(&id)?;
+        Ok(reports)
+    }
+
+    /// Housekeeping pass over every node: publishes each node's gauges
+    /// into the cluster registry as `node.{name}.{gauge}` (the policy
+    /// plane's cluster-wide view), then runs broker idle-topic
+    /// retirement via [`Node::tick`] (nodes without a retire policy are
+    /// no-ops). Called from the stream pump paths; safe to call any
+    /// time. Returns `(node, retired topic)` pairs.
     pub fn tick(&mut self) -> Vec<(NodeId, String)> {
         let mut retired = Vec::new();
         for (id, node) in self.nodes.iter_mut() {
+            node.publish_gauges(&self.metrics);
             match node.tick() {
                 Ok(topics) => retired.extend(topics.into_iter().map(|t| (*id, t))),
                 Err(e) => log::warn!("node {id} housekeeping tick: {e}"),
@@ -1062,6 +1307,180 @@ mod tests {
     fn crash_unknown_node_errors() {
         let mut c = Cluster::new("unknown", 2, DeviceKind::Native).unwrap();
         assert!(c.crash(&NodeId::from_name("ghost")).is_err());
+        c.shutdown().unwrap();
+    }
+
+    /// Register the inc/sum test stages on every node, so any node can
+    /// host (or receive a migrated) fragment.
+    fn register_stream_stages(c: &mut Cluster) {
+        use crate::stream::operator::OperatorKind;
+        for id in c.ids() {
+            let topologies = c.node_mut(&id).unwrap().topologies_mut();
+            topologies.register_stage("inc", || {
+                Box::new(OperatorKind::map("inc", |mut t| {
+                    let v = t.get("X").unwrap_or(0.0);
+                    t.set("X", v + 1.0);
+                    t
+                }))
+            });
+            topologies.register_stage("sum", || {
+                Box::new(OperatorKind::window_by("sum", "X", 2, "K"))
+            });
+        }
+    }
+
+    #[test]
+    fn stream_migration_moves_fragment_between_cluster_nodes() {
+        let mut c = Cluster::new("mig", 4, DeviceKind::Native).unwrap();
+        register_stream_stages(&mut c);
+        let ids = c.ids();
+        let (edge, core, spare) = (ids[0], ids[1], ids[2]);
+        let topo = Topology::parse("job", "inc->sum@K").unwrap();
+        c.deploy_stream("job", "inc->sum@K", &PlacementPlan::split_at(&topo, 1, edge, core))
+            .unwrap();
+        // Half-fill both per-key windows across the node boundary.
+        for k in 0..2u64 {
+            c.stream_send("job", Tuple::new(k, vec![]).with("K", k as f64).with("X", 1.0))
+                .unwrap();
+        }
+        let report = c.stream_migrate("job", 1, spare).unwrap();
+        assert_eq!((report.from, report.to), (core, spare));
+        assert!(report.moved_keys <= 2, "{report:?}");
+        let route = c.stream_route("job").unwrap();
+        assert_eq!(route.hops()[1].node, spare);
+        assert_eq!(route.migrations().len(), 1);
+        assert_eq!(c.stream_metrics().counter("net.migration.completed").get(), 1);
+        // The old host no longer runs the fragment; the new one does.
+        assert!(c.node(&core).unwrap().topologies().running().is_empty());
+        assert_eq!(c.node(&spare).unwrap().topologies().running(), vec!["job#f1"]);
+        // Second halves land on the new host: both windows complete.
+        for k in 0..2u64 {
+            c.stream_send("job", Tuple::new(2 + k, vec![]).with("K", k as f64).with("X", 1.0))
+                .unwrap();
+        }
+        let out = c.stream_stop("job").unwrap();
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(2.0)), "{out:?}");
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn policy_tick_rescales_from_node_gauges_and_exports_them() {
+        let mut c = Cluster::new("cpol", 2, DeviceKind::Native).unwrap();
+        register_stream_stages(&mut c);
+        let ids = c.ids();
+        let host = ids[0];
+        let topo = Topology::parse("job", "inc").unwrap();
+        c.deploy_stream("job", "inc", &PlacementPlan::single(host, &topo)).unwrap();
+        let policy = ClusterPolicy { high_depth: 8, sustain: 2, ..ClusterPolicy::default() };
+        // Backlog appears in the *hosting node's* registry — where the
+        // engine's depth gauges actually live.
+        c.node(&host).unwrap().metrics().gauge("stream.job#f0.inc.in.depth").set(50);
+        assert!(c.stream_policy_tick(&policy).unwrap().is_empty(), "sustain debounces");
+        // The tick's housekeeping pass published the node's gauges
+        // cluster-wide under a node.{name} prefix.
+        let exported = format!(
+            "node.{}.stream.job#f0.inc.in.depth",
+            c.node(&host).unwrap().name()
+        );
+        assert_eq!(c.stream_metrics().gauge(&exported).get(), 50);
+        let actions = c.stream_policy_tick(&policy).unwrap();
+        assert_eq!(
+            actions,
+            vec![PolicyAction::Rescale {
+                topology: "job".to_string(),
+                stage: "inc".to_string(),
+                parallelism: 2
+            }]
+        );
+        assert_eq!(
+            c.node(&host).unwrap().topologies().parallelism("job#f0", "inc").unwrap(),
+            2
+        );
+        // Uniform profiles: the placement pass never finds a gain.
+        c.node(&host).unwrap().metrics().gauge("stream.job#f0.inc.in.depth").set(4);
+        assert!(c.stream_policy_tick(&policy).unwrap().is_empty());
+        c.stream_stop("job").unwrap();
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn decommission_relocates_stream_fragments_then_removes_node() {
+        let mut c = Cluster::new("decom", 4, DeviceKind::Native).unwrap();
+        register_stream_stages(&mut c);
+        let ids = c.ids();
+        let (edge, core) = (ids[0], ids[1]);
+        let topo = Topology::parse("job", "inc->sum@K").unwrap();
+        c.deploy_stream("job", "inc->sum@K", &PlacementPlan::split_at(&topo, 1, edge, core))
+            .unwrap();
+        for k in 0..2u64 {
+            c.stream_send("job", Tuple::new(k, vec![]).with("K", k as f64).with("X", 1.0))
+                .unwrap();
+        }
+        let policy = ClusterPolicy::default();
+        let reports = c.decommission(core, &policy).unwrap();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].from, core);
+        assert_eq!(c.len(), 3);
+        assert!(c.node(&core).is_none());
+        assert!(!c.network().is_reachable(&core));
+        let new_host = c.stream_route("job").unwrap().hops()[1].node;
+        assert_ne!(new_host, core, "fragment re-homed before the node left");
+        for k in 0..2u64 {
+            c.stream_send("job", Tuple::new(2 + k, vec![]).with("K", k as f64).with("X", 1.0))
+                .unwrap();
+        }
+        let out = c.stream_stop("job").unwrap();
+        assert_eq!(out.len(), 2, "windows opened pre-leave complete: {out:?}");
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(2.0)), "{out:?}");
+        // Unknown node refuses.
+        assert!(c.decommission(NodeId::from_name("ghost"), &policy).is_err());
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn federation_frames_apply_over_live_tcp() {
+        use std::time::Duration;
+        let mut c = Cluster::new("fedtcp", 3, DeviceKind::Native).unwrap();
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().to_string();
+        // An external registrant (not a cluster member) registers over
+        // the real wire; the drained frame applies at every node.
+        let watch = Profile::parse("drone,*").unwrap();
+        TcpEndpoint::send_to(
+            &addr,
+            &NetMessage::Register {
+                from: NodeId::from_name("external-client"),
+                consumer: "watch".to_string(),
+                profile: watch.clone(),
+                ttl_ms: 0,
+            },
+        )
+        .unwrap();
+        assert_eq!(c.drain_federation(&ep, Duration::from_secs(2)).unwrap(), 1);
+        for id in c.ids() {
+            assert!(c.node(&id).unwrap().is_registered("watch"));
+        }
+        // The registration is live: a publish is fetchable.
+        let origin = c.ids()[0];
+        c.federated_publish(origin, &Profile::parse("drone,cam").unwrap(), b"f").unwrap();
+        assert_eq!(c.federated_fetch(origin, "watch", 16).unwrap().len(), 1);
+        // Unregister over the same wire withdraws it everywhere.
+        TcpEndpoint::send_to(
+            &addr,
+            &NetMessage::Unregister {
+                from: NodeId::from_name("external-client"),
+                consumer: "watch".to_string(),
+            },
+        )
+        .unwrap();
+        assert_eq!(c.drain_federation(&ep, Duration::from_secs(2)).unwrap(), 1);
+        assert!(c.ids().iter().all(|id| !c.node(id).unwrap().is_registered("watch")));
+        // Non-federation frames are rejected by the applier.
+        assert!(c
+            .apply_federation_frame(NetMessage::Ping { from: origin })
+            .is_err());
+        ep.shutdown();
         c.shutdown().unwrap();
     }
 }

@@ -309,6 +309,17 @@ impl Node {
         Ok(retired)
     }
 
+    /// Export every gauge of this node's private registry into `into`,
+    /// re-keyed as `node.{name}.{gauge}`. The cluster calls this from
+    /// its tick so cluster-level observers (the policy plane, bench
+    /// probes) see per-node stream depths without reaching into each
+    /// node's registry — the per-node registries stay the only writers.
+    pub fn publish_gauges(&self, into: &Registry) {
+        for (name, value) in self.metrics.gauges_with_prefix("") {
+            into.gauge(&format!("node.{}.{name}", self.config.name)).set(value);
+        }
+    }
+
     /// Graceful shutdown: stop topologies, flush queue + store.
     pub fn shutdown(&mut self) -> Result<()> {
         self.topologies.stop_all()?;

@@ -143,6 +143,29 @@ impl DeviceProfile {
     pub fn is_throttled(&self) -> bool {
         self.kind != crate::config::DeviceKind::Native
     }
+
+    /// Canonicalized network bandwidth for cost arithmetic, MB/s.
+    ///
+    /// [`DeviceProfile::native`] stores `f64::INFINITY` (the profile
+    /// tables pin Table I exactly, infinity included), which leaks NaNs
+    /// into `bytes / bandwidth` rankings and makes 0-cost ties compare
+    /// nondeterministically. Every consumer that divides by bandwidth —
+    /// the placement cost model and `SimNetwork::charge_hop` — goes
+    /// through here instead: infinite, NaN and non-positive values
+    /// clamp to a large-but-finite cap, everything else to a sane
+    /// positive range.
+    pub fn effective_net_bandwidth(&self) -> f64 {
+        /// Stand-in for an "unthrottled" link: 10 GB/s, comfortably
+        /// above any Table-I figure yet finite, so per-byte costs stay
+        /// ordered and arithmetic stays NaN-free.
+        const BANDWIDTH_CAP_MBPS: f64 = 10_000.0;
+        const BANDWIDTH_FLOOR_MBPS: f64 = 1e-3;
+        if self.net_bandwidth.is_finite() && self.net_bandwidth > 0.0 {
+            self.net_bandwidth.clamp(BANDWIDTH_FLOOR_MBPS, BANDWIDTH_CAP_MBPS)
+        } else {
+            BANDWIDTH_CAP_MBPS
+        }
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +211,27 @@ mod tests {
         assert!(!n.is_throttled());
         assert!(DeviceProfile::raspberry_pi().is_throttled());
         assert!(n.disk_seq_read.is_infinite());
+    }
+
+    #[test]
+    fn effective_bandwidth_is_always_finite_and_positive() {
+        use crate::config::DeviceKind::*;
+        for k in [RaspberryPi, Android, CloudSmall, Native] {
+            let bw = DeviceProfile::for_kind(k).effective_net_bandwidth();
+            assert!(bw.is_finite() && bw > 0.0, "{k:?} → {bw}");
+        }
+        // Table-I figures pass through unchanged…
+        assert_eq!(DeviceProfile::raspberry_pi().effective_net_bandwidth(), 11.0);
+        assert_eq!(DeviceProfile::cloud_small().effective_net_bandwidth(), 120.0);
+        // …while infinity, NaN and zero canonicalize to the finite cap.
+        let mut weird = DeviceProfile::native();
+        assert_eq!(weird.effective_net_bandwidth(), 10_000.0);
+        weird.net_bandwidth = f64::NAN;
+        assert_eq!(weird.effective_net_bandwidth(), 10_000.0);
+        weird.net_bandwidth = 0.0;
+        assert_eq!(weird.effective_net_bandwidth(), 10_000.0);
+        weird.net_bandwidth = -5.0;
+        assert_eq!(weird.effective_net_bandwidth(), 10_000.0);
     }
 
     #[test]

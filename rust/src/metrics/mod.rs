@@ -142,6 +142,21 @@ impl Registry {
         map.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())).clone()
     }
 
+    /// Snapshot every gauge whose name starts with `prefix`, sorted by
+    /// name (`""` snapshots all). The cluster policy plane samples
+    /// queue-depth gauges across whole topologies through this without
+    /// knowing the stage names up front.
+    pub fn gauges_with_prefix(&self, prefix: &str) -> Vec<(String, i64)> {
+        self.inner
+            .gauges
+            .lock()
+            .unwrap()
+            .range(prefix.to_string()..)
+            .take_while(|(name, _)| name.starts_with(prefix))
+            .map(|(name, g)| (name.clone(), g.get()))
+            .collect()
+    }
+
     /// Render a sorted text snapshot (one metric per line).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -210,6 +225,25 @@ mod tests {
         assert!(text.contains("counter msgs 3"));
         assert!(text.contains("gauge depth 7"));
         assert!(text.contains("histogram lat"));
+    }
+
+    #[test]
+    fn gauges_with_prefix_snapshots_matching_sorted() {
+        let r = Registry::new();
+        r.gauge("stream.a.s1.in.depth").set(4);
+        r.gauge("stream.a.s2.r0.depth").set(9);
+        r.gauge("stream.b.s1.in.depth").set(1);
+        r.gauge("net.in_flight").set(2);
+        assert_eq!(
+            r.gauges_with_prefix("stream.a."),
+            vec![
+                ("stream.a.s1.in.depth".to_string(), 4),
+                ("stream.a.s2.r0.depth".to_string(), 9),
+            ]
+        );
+        assert_eq!(r.gauges_with_prefix("stream.b.").len(), 1);
+        assert_eq!(r.gauges_with_prefix("").len(), 4);
+        assert!(r.gauges_with_prefix("missing.").is_empty());
     }
 
     #[test]

@@ -72,11 +72,11 @@ impl SimNetwork {
         }
         let profiles = self.inner.profiles.lock().unwrap();
         let p = profiles.get(from)?;
-        let transfer = if p.net_bandwidth.is_finite() && p.net_bandwidth > 0.0 {
-            bytes as f64 / (p.net_bandwidth * 1e6)
-        } else {
-            0.0
-        };
+        // Canonicalized bandwidth: infinite/NaN/zero profiles charge a
+        // large-but-finite link instead of a literal 0-cost hop, so the
+        // virtual clock (and everything ranked on it) stays NaN-free
+        // and deterministically ordered.
+        let transfer = bytes as f64 / (p.effective_net_bandwidth() * 1e6);
         let d = Duration::from_nanos(((p.net_latency_us * 1e-6 + transfer) * 1e9) as u64);
         self.inner.virtual_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
         self.inner.messages.fetch_add(1, Ordering::Relaxed);
@@ -159,6 +159,19 @@ mod tests {
         net.reset();
         assert_eq!(net.messages(), 0);
         assert_eq!(net.virtual_elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn infinite_bandwidth_charges_finite_nonzero_transfer() {
+        // `native()` keeps Table-I-style infinity in the stored profile;
+        // the hop charge canonicalizes it so virtual time stays ordered.
+        let net = SimNetwork::new();
+        let (a, b) = (id(1), id(2));
+        net.register(a, DeviceProfile::native());
+        net.register(b, DeviceProfile::native());
+        let d = net.charge_hop(&a, &b, 1_000_000_000).unwrap();
+        assert!(d > Duration::ZERO, "1 GB over a canonicalized link must cost time");
+        assert!(d < Duration::from_secs(1), "native link is still near-free: {d:?}");
     }
 
     #[test]

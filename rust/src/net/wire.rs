@@ -5,6 +5,7 @@
 use crate::ar::message::ArMessage;
 use crate::error::{Error, Result};
 use crate::overlay::node_id::{NodeId, ID_BYTES};
+use crate::stream::operator::KeyState;
 use crate::stream::tuple::Tuple;
 use crate::util::codec::{ByteReader, ByteWriter};
 use std::sync::Mutex;
@@ -44,6 +45,11 @@ pub enum NetMessage {
     Register { from: NodeId, consumer: String, profile: crate::ar::profile::Profile, ttl_ms: u64 },
     /// Withdraw a federated registration before its TTL lapses.
     Unregister { from: NodeId, consumer: String },
+    /// Per-key operator state of one stage crossing a node boundary
+    /// during a live fragment migration: the rescale handoff's exported
+    /// `KeyState`s, shipped from the old host to the fresh fragment on
+    /// the new host. One frame per stage holding state.
+    MigrateState { from: NodeId, topology: String, stage: String, state: Vec<KeyState> },
 }
 
 impl NetMessage {
@@ -59,6 +65,7 @@ impl NetMessage {
             NetMessage::StreamEos { .. } => 7,
             NetMessage::Register { .. } => 8,
             NetMessage::Unregister { .. } => 9,
+            NetMessage::MigrateState { .. } => 10,
         }
     }
 
@@ -74,7 +81,8 @@ impl NetMessage {
             | NetMessage::StreamBatch { from, .. }
             | NetMessage::StreamEos { from, .. }
             | NetMessage::Register { from, .. }
-            | NetMessage::Unregister { from, .. } => *from,
+            | NetMessage::Unregister { from, .. }
+            | NetMessage::MigrateState { from, .. } => *from,
         }
     }
 
@@ -109,6 +117,15 @@ impl NetMessage {
             }
             NetMessage::Unregister { consumer, .. } => {
                 w.put_str(consumer);
+            }
+            NetMessage::MigrateState { topology, stage, state, .. } => {
+                w.put_str(topology);
+                w.put_str(stage);
+                w.put_varint(state.len() as u64);
+                for ks in state {
+                    w.put_u64(ks.key_bits);
+                    w.put_bytes(&ks.bytes);
+                }
             }
             _ => {}
         }
@@ -157,6 +174,18 @@ impl NetMessage {
                 NetMessage::Register { from, consumer, profile, ttl_ms }
             }
             9 => NetMessage::Unregister { from, consumer: r.get_str()?.to_string() },
+            10 => {
+                let topology = r.get_str()?.to_string();
+                let stage = r.get_str()?.to_string();
+                let n = r.get_varint()?;
+                let mut state = Vec::with_capacity(n.min(4096) as usize);
+                for _ in 0..n {
+                    let key_bits = r.get_u64()?;
+                    let bytes = r.get_bytes()?.to_vec();
+                    state.push(KeyState { key_bits, bytes });
+                }
+                NetMessage::MigrateState { from, topology, stage, state }
+            }
             other => return Err(Error::Parse(format!("unknown wire tag {other}"))),
         })
     }
@@ -447,6 +476,30 @@ mod tests {
         assert_eq!(NetMessage::decode(&never_expires.encode()).unwrap(), never_expires);
         let bye = NetMessage::Unregister { from: id(12), consumer: "trigger:job".into() };
         assert_eq!(NetMessage::decode(&bye.encode()).unwrap(), bye);
+    }
+
+    #[test]
+    fn migrate_state_round_trip() {
+        let msg = NetMessage::MigrateState {
+            from: id(13),
+            topology: "analytics#f1".into(),
+            stage: "kwin".into(),
+            state: vec![
+                KeyState { key_bits: 3.0f64.to_bits(), bytes: vec![1, 2, 3, 4, 5, 6, 7, 8] },
+                KeyState { key_bits: 7.5f64.to_bits(), bytes: vec![] },
+            ],
+        };
+        let bytes = msg.encode();
+        assert_eq!(NetMessage::decode(&bytes).unwrap(), msg);
+        assert_eq!(msg.wire_size(), bytes.len() + 4);
+        // A stateless stage still frames cleanly (empty state vector).
+        let empty = NetMessage::MigrateState {
+            from: id(13),
+            topology: "analytics#f1".into(),
+            stage: "inc".into(),
+            state: Vec::new(),
+        };
+        assert_eq!(NetMessage::decode(&empty.encode()).unwrap(), empty);
     }
 
     #[test]

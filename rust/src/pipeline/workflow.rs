@@ -12,7 +12,9 @@
 use super::lidar::LidarTrace;
 use crate::overlay::node_id::NodeId;
 use crate::stream::deploy::TopologyManager;
-use crate::stream::dist::{plan_placement, DistributedTopologyManager, PlacementPlan};
+use crate::stream::dist::{
+    plan_placement, DistributedTopologyManager, MigrationReport, PlacementPlan,
+};
 use crate::stream::engine::{RescaleReport, StageFactory, StreamEngine};
 use crate::stream::operator::{Operator, OperatorKind};
 use crate::stream::topology::Topology;
@@ -529,6 +531,9 @@ pub struct DistStreamReport {
     pub hop_buffer_reuses: u64,
     /// Bytes encoded onto the hop path (`net.hop.bytes`).
     pub hop_bytes: u64,
+    /// Live fragment migrations the route underwent during the run
+    /// (empty unless an elasticity scenario moved fragments mid-run).
+    pub migrations: Vec<MigrationReport>,
 }
 
 impl DistStreamReport {
@@ -601,6 +606,8 @@ pub fn run_distributed_analytics_opts(
         }
         dist.send_batch("analytics", batch)?;
     }
+    let migrations =
+        dist.route("analytics").map(|r| r.migrations().to_vec()).unwrap_or_default();
     let outputs = dist.stop("analytics")?;
     Ok(DistStreamReport {
         spec: spec.to_string(),
@@ -614,6 +621,7 @@ pub fn run_distributed_analytics_opts(
         hop_encodes: dist.metrics().counter("net.hop.encodes").get(),
         hop_buffer_reuses: dist.metrics().counter("net.hop.buffer_reuses").get(),
         hop_bytes: dist.metrics().counter("net.hop.bytes").get(),
+        migrations,
     })
 }
 

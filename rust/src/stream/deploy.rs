@@ -284,6 +284,59 @@ impl TopologyManager {
         self.running.get(key)?.recv_timeout(timeout)
     }
 
+    /// Freeze a running topology for live migration: drain it
+    /// upstream-first and extract every stage's per-key operator state
+    /// *without flushing open windows* (see
+    /// [`super::engine::EngineHandle::freeze`]). Returns the trailing
+    /// output tuples plus `(stage, states)` pairs in chain order; the
+    /// instance is torn down and its key freed for a restart elsewhere.
+    ///
+    /// The all-elastic precheck runs against a borrowed [`Rescaler`]
+    /// *before* the handle leaves the running map — `EngineHandle::freeze`
+    /// consumes the handle even when it refuses, and a refused freeze
+    /// must leave the topology running. Topologies started through this
+    /// manager always pass (every stage launches elastic).
+    pub fn freeze(
+        &mut self,
+        key: &str,
+    ) -> Result<(Vec<super::tuple::Tuple>, Vec<(String, Vec<super::operator::KeyState>)>)> {
+        let rescaler = self.handle(key)?.rescaler();
+        let elastic: std::collections::BTreeSet<String> =
+            rescaler.elastic_stages().into_iter().collect();
+        if let Some(stage) = rescaler.stage_order().iter().find(|s| !elastic.contains(*s)) {
+            return Err(Error::Stream(format!(
+                "cannot freeze topology `{key}`: stage `{stage}` is static \
+                 (launch it through a stage factory to make it migratable)"
+            )));
+        }
+        let handle = self.running.remove(key).expect("presence checked above");
+        // Same watcher discipline as `stop`: signal before the drain
+        // (draining unblocks a watcher stuck mid-rescale), join after.
+        let watcher = self.watchers.remove(key);
+        if let Some(w) = &watcher {
+            w.stop.store(true, Ordering::Relaxed);
+        }
+        let frozen = handle.freeze();
+        if let Some(w) = watcher {
+            let _ = w.thread.join();
+        }
+        frozen
+    }
+
+    /// Seed a stage of a running topology with migrated-in per-key
+    /// state — the receiving half of a live migration. Runs a state
+    /// handoff at the current parallelism whose snapshot carries
+    /// `state` alongside anything already resident, so merge semantics
+    /// follow `Operator::import_state` (extend, never replace).
+    pub fn inject_state(
+        &self,
+        key: &str,
+        stage: &str,
+        state: Vec<super::operator::KeyState>,
+    ) -> Result<RescaleReport> {
+        self.handle(key)?.inject_state(stage, state)
+    }
+
     /// Stop a topology; returns its drained trailing output, or
     /// [`Error::NotRunning`] when no such instance is running.
     pub fn stop(&mut self, key: &str) -> Result<Vec<super::tuple::Tuple>> {
@@ -635,6 +688,49 @@ mod tests {
         let out = m.stop("r").unwrap();
         assert_eq!(out.len(), 5, "each key fills exactly one window of 4");
         assert!(out.iter().all(|t| t.get("COUNT") == Some(4.0)), "{out:?}");
+    }
+
+    #[test]
+    fn freeze_then_inject_moves_topology_between_managers() {
+        // The manager-level migration contract: freeze on one manager,
+        // restart + inject on another (in production: another node),
+        // and half-open keyed windows complete as if nothing moved.
+        let mut from = manager();
+        from.start("m", "inc->kwin*2@K").unwrap();
+        let mut seq = 0u64;
+        for k in 0..3u64 {
+            for _ in 0..2 {
+                from.send("m", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let (trailing, states) = from.freeze("m").unwrap();
+        assert!(trailing.is_empty(), "no window closed before the freeze: {trailing:?}");
+        assert!(!from.is_running("m"), "freeze frees the key");
+        let stages: Vec<&str> = states.iter().map(|(s, _)| s.as_str()).collect();
+        assert_eq!(stages, ["inc", "kwin"], "chain order, upstream first");
+        assert_eq!(states[1].1.len(), 3, "one snapshot per half-open key");
+
+        let mut to = manager();
+        to.start("m", "inc->kwin*2@K").unwrap();
+        for (stage, state) in states {
+            if !state.is_empty() {
+                to.inject_state("m", &stage, state).unwrap();
+            }
+        }
+        for k in 0..3u64 {
+            for _ in 0..2 {
+                to.send("m", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let out = to.stop("m").unwrap();
+        assert_eq!(out.len(), 3, "each key completes exactly one window of 4");
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(4.0)), "{out:?}");
+        // Freeze of a never-started key stays structured.
+        assert!(matches!(from.freeze("ghost").unwrap_err(), Error::NotRunning(_)));
     }
 
     #[test]

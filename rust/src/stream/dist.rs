@@ -26,13 +26,31 @@
 //! synchronous pump, where [`feed_route`] moves hops forward inline on
 //! the producer thread.
 //!
-//! **Placement.** [`plan_placement`] assigns stages to nodes by
-//! [`DeviceProfile`]: source-adjacent stages stay on the source (edge)
-//! node, and from the first CPU-heavy stage onward (an explicit hint,
-//! or the first `*P` parallel stage) the chain runs on the most capable
-//! node (lowest `compute_scale`). Hand-built [`PlacementPlan`]s are
-//! validated to cover the chain contiguously in stage order — hops only
-//! ever flow downstream.
+//! **Placement.** [`plan_placement`] assigns stages to nodes with a
+//! cost model ([`PlacementCost`]) weighing per-tuple hop cost — wire
+//! bytes over the sending [`DeviceProfile`]'s network bandwidth plus
+//! amortized latency — against the compute win of off-loading
+//! CPU-heavy work (an explicit hint, or any `*P` parallel stage) to a
+//! more capable node. Stage 0 always stays with the source (it is the
+//! ingestion point), a chain with no reason to off-load stays local,
+//! and a slow uplink (Table I's Android WiFi, say) can veto a split
+//! that a compute-only ranking would take. Hand-built
+//! [`PlacementPlan`]s are validated to cover the chain contiguously in
+//! stage order — hops only ever flow downstream.
+//!
+//! **Migration & policy.** A deployed fragment can be moved to another
+//! node *live* ([`DistributedTopologyManager::migrate_fragment`]): the
+//! old host's fragment is frozen — drained upstream-first, open keyed
+//! windows exported as `KeyState`s rather than flushed — the state
+//! crosses the wire as [`NetMessage::MigrateState`] frames (charged to
+//! the network like any hop), and a fresh fragment on the new host is
+//! seeded before traffic resumes. Zero loss, per-key order preserved,
+//! pause measured and reported ([`MigrationReport`]). [`ClusterPolicy`]
+//! closes the loop cluster-wide: each [`DistributedTopologyManager::policy_tick`]
+//! samples every stage's depth gauges in the shared registry and
+//! decides rescale vs migrate vs no-op; node joins attract work (and
+//! [`DistributedTopologyManager::decommission_node`] drains a leaving
+//! node) through the same cost model.
 //!
 //! **Ordering & drain.** A hop is a single FIFO route (poll → ship →
 //! staged queue → admission) pumped by a single thread at a time, so
@@ -52,7 +70,7 @@
 
 use super::deploy::TopologyManager;
 use super::engine::{EgressTap, RescaleReport, StageFactory, StreamEngine, StreamSender};
-use super::operator::Operator;
+use super::operator::{KeyState, Operator};
 use super::topology::{StageSpec, Topology};
 use super::tuple::Tuple;
 use crate::device::profile::DeviceProfile;
@@ -68,7 +86,7 @@ use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Max tuples per shipped `StreamBatch` frame.
 pub const SHIP_CHUNK: usize = 64;
@@ -162,15 +180,114 @@ impl PlacementPlan {
     }
 }
 
-/// Plan stage→node placement by device profile: source-adjacent stages
-/// stay on `source`; from the first CPU-heavy stage onward (named in
-/// `cpu_heavy`, else the first `*P` parallel stage) the chain runs on
-/// the most capable registered node (lowest `compute_scale`; the
-/// unthrottled Native profile counts as fastest). Stage 0 always stays
-/// with the source — it is the ingestion point — and when the source
-/// *is* the most capable node (or nothing is CPU-heavy) the whole chain
-/// stays local.
+/// Bandwidth-aware placement cost model — pure arithmetic over
+/// [`DeviceProfile`]s, shared by the initial planner
+/// ([`plan_placement`]), live re-placement
+/// ([`DistributedTopologyManager::migrate_fragment`] targets), and the
+/// cluster policy plane ([`ClusterPolicy`]).
+///
+/// A plan's cost is the *bottleneck* fragment's compute cost (the
+/// pipeline runs at the speed of its slowest fragment) plus the
+/// per-tuple cost of every hop:
+///
+/// * Fragment compute: Σ over its stages of `stage_weight ×
+///   compute_scale(host)` — a CPU-heavy stage (named in the planner's
+///   `cpu_heavy` hints) weighs [`PlacementCost::heavy_weight`], any
+///   other stage `1.0`. The unthrottled Native profile
+///   (`compute_scale = 0`) is free.
+/// * Hop: the sending profile's one-way latency amortized over a full
+///   [`SHIP_CHUNK`] batch, plus [`PlacementCost::tuple_bytes`] over the
+///   sender's canonicalized bandwidth
+///   ([`DeviceProfile::effective_net_bandwidth`], so Table I's
+///   infinities never produce NaN rankings). In µs per tuple — a MB/s
+///   bandwidth is exactly a byte/µs.
+///
+/// The units are abstract (compute_scale is a multiplier, not µs), but
+/// both terms grow linearly with real per-tuple wall time, which is all
+/// a *ranking* needs: fat tuples on a slow uplink genuinely do out-cost
+/// an 8× compute win, exactly the case where off-loading loses.
+#[derive(Debug, Clone)]
+pub struct PlacementCost {
+    /// Estimated wire bytes per tuple crossing a hop. Default 64 — a
+    /// few f64 fields plus framing, matching the small sensor tuples of
+    /// the paper's pipelines. Raise it for image/feature payloads.
+    pub tuple_bytes: f64,
+    /// Cost weight of a CPU-heavy stage relative to a plain stage.
+    pub heavy_weight: f64,
+}
+
+impl Default for PlacementCost {
+    fn default() -> Self {
+        PlacementCost { tuple_bytes: 64.0, heavy_weight: 8.0 }
+    }
+}
+
+impl PlacementCost {
+    /// Relative compute weight of one stage.
+    pub fn stage_weight(&self, stage: &StageSpec, cpu_heavy: &[&str]) -> f64 {
+        if cpu_heavy.iter().any(|h| h.eq_ignore_ascii_case(&stage.name)) {
+            self.heavy_weight
+        } else {
+            1.0
+        }
+    }
+
+    /// Per-tuple cost (µs) of a hop leaving a node with `sender`'s
+    /// profile: chunk-amortized latency + bytes over bandwidth.
+    pub fn hop_cost(&self, sender: &DeviceProfile) -> f64 {
+        sender.net_latency_us / SHIP_CHUNK as f64
+            + self.tuple_bytes / sender.effective_net_bandwidth()
+    }
+
+    /// Cost of a whole plan: bottleneck fragment compute + every hop.
+    /// `None` when a fragment's host has no profile.
+    pub fn plan_cost(
+        &self,
+        plan: &PlacementPlan,
+        profiles: &BTreeMap<NodeId, DeviceProfile>,
+        cpu_heavy: &[&str],
+    ) -> Option<f64> {
+        let mut bottleneck = 0.0f64;
+        let mut hops = 0.0f64;
+        for (i, frag) in plan.fragments.iter().enumerate() {
+            let p = profiles.get(&frag.node)?;
+            let compute: f64 =
+                frag.stages.iter().map(|s| self.stage_weight(s, cpu_heavy) * p.compute_scale).sum();
+            bottleneck = bottleneck.max(compute);
+            if i + 1 < plan.fragments.len() {
+                // The sim charges every fragment boundary at the
+                // sender's profile (same-node included), so the model
+                // does too — rankings match what the clock will say.
+                hops += self.hop_cost(p);
+            }
+        }
+        Some(bottleneck + hops)
+    }
+}
+
+/// Plan stage→node placement with the default [`PlacementCost`]. Stage
+/// 0 always stays with `source` — it is the ingestion point — and a
+/// chain with no reason to off-load (no `cpu_heavy` hint, no `*P`
+/// parallel stage) stays local regardless of cost: splitting a cheap
+/// serial chain buys nothing but a hop. When there is a reason, every
+/// cut point × target node is ranked by [`PlacementCost::plan_cost`]
+/// and the cheapest wins — but only if *strictly* cheaper than staying
+/// local, so a slow uplink or fat tuples veto the off-load that a
+/// compute-only ranking would take. Ties break toward the earliest cut,
+/// then the smallest [`NodeId`].
 pub fn plan_placement(
+    topo: &Topology,
+    source: NodeId,
+    profiles: &BTreeMap<NodeId, DeviceProfile>,
+    cpu_heavy: &[&str],
+) -> Result<PlacementPlan> {
+    plan_placement_with(&PlacementCost::default(), topo, source, profiles, cpu_heavy)
+}
+
+/// [`plan_placement`] with an explicit cost model (payload size,
+/// heavy-stage weight).
+pub fn plan_placement_with(
+    cost: &PlacementCost,
     topo: &Topology,
     source: NodeId,
     profiles: &BTreeMap<NodeId, DeviceProfile>,
@@ -179,23 +296,169 @@ pub fn plan_placement(
     if !profiles.contains_key(&source) {
         return Err(Error::Net(format!("placement source {source} is not a registered node")));
     }
-    let best = profiles
-        .iter()
-        .min_by(|(ia, a), (ib, b)| a.compute_scale.total_cmp(&b.compute_scale).then(ia.cmp(ib)))
-        .map(|(id, _)| *id)
-        .expect("profiles contains at least the source");
-    let cut = topo
-        .stages
-        .iter()
-        .position(|s| cpu_heavy.iter().any(|h| h.eq_ignore_ascii_case(&s.name)))
-        .or_else(|| topo.stages.iter().position(|s| s.parallelism > 1))
-        .map(|c| c.max(1));
-    match cut {
-        Some(c) if c < topo.stages.len() && best != source => {
-            Ok(PlacementPlan::split_at(topo, c, source, best))
-        }
-        _ => Ok(PlacementPlan::single(source, topo)),
+    let single = PlacementPlan::single(source, topo);
+    let reason_to_split = topo.stages.iter().any(|s| {
+        s.parallelism > 1 || cpu_heavy.iter().any(|h| h.eq_ignore_ascii_case(&s.name))
+    });
+    if !reason_to_split || topo.stages.len() < 2 {
+        return Ok(single);
     }
+    let local = cost
+        .plan_cost(&single, profiles, cpu_heavy)
+        .expect("source presence checked above");
+    let mut best: Option<(f64, usize, NodeId)> = None;
+    for cut in 1..topo.stages.len() {
+        for &target in profiles.keys() {
+            if target == source {
+                continue;
+            }
+            let c = cost
+                .plan_cost(&PlacementPlan::split_at(topo, cut, source, target), profiles, cpu_heavy)
+                .expect("every candidate host is registered");
+            let better = match &best {
+                None => true,
+                Some((bc, bcut, bid)) => {
+                    c.total_cmp(bc).then(cut.cmp(bcut)).then(target.cmp(bid)).is_lt()
+                }
+            };
+            if better {
+                best = Some((c, cut, target));
+            }
+        }
+    }
+    match best {
+        Some((c, cut, target)) if c < local => {
+            Ok(PlacementPlan::split_at(topo, cut, source, target))
+        }
+        _ => Ok(single),
+    }
+}
+
+/// The cheapest host for re-homing `plan`'s fragment `#fragment` among
+/// `candidates` (the fragment's current host is skipped), with the
+/// resulting whole-plan cost. Ties break toward the smallest
+/// [`NodeId`]. `None` when no candidate yields a costable plan.
+pub fn best_host_for(
+    cost: &PlacementCost,
+    plan: &PlacementPlan,
+    fragment: usize,
+    candidates: &[NodeId],
+    profiles: &BTreeMap<NodeId, DeviceProfile>,
+    cpu_heavy: &[&str],
+) -> Option<(f64, NodeId)> {
+    let mut best: Option<(f64, NodeId)> = None;
+    for &cand in candidates {
+        if cand == plan.fragments[fragment].node {
+            continue;
+        }
+        let mut alt = plan.clone();
+        alt.fragments[fragment].node = cand;
+        let Some(c) = cost.plan_cost(&alt, profiles, cpu_heavy) else { continue };
+        let better = match &best {
+            None => true,
+            Some((bc, bid)) => c.total_cmp(bc).then(cand.cmp(bid)).is_lt(),
+        };
+        if better {
+            best = Some((c, cand));
+        }
+    }
+    best
+}
+
+/// The cheapest single-fragment re-hosting of `plan` over every
+/// registered node — fragment 0 excluded (ingestion stays pinned; only
+/// a decommission moves it). The shared search behind both policy
+/// planes' migrate decisions. Ties break toward the earliest fragment,
+/// then the smallest [`NodeId`].
+pub fn best_single_move(
+    cost: &PlacementCost,
+    plan: &PlacementPlan,
+    profiles: &BTreeMap<NodeId, DeviceProfile>,
+    cpu_heavy: &[&str],
+) -> Option<(f64, usize, NodeId)> {
+    let all: Vec<NodeId> = profiles.keys().copied().collect();
+    let mut best: Option<(f64, usize, NodeId)> = None;
+    for f in 1..plan.fragments.len() {
+        let Some((c, cand)) = best_host_for(cost, plan, f, &all, profiles, cpu_heavy) else {
+            continue;
+        };
+        let better = match &best {
+            None => true,
+            Some((bc, bf, bid)) => c.total_cmp(bc).then(f.cmp(bf)).then(cand.cmp(bid)).is_lt(),
+        };
+        if better {
+            best = Some((c, f, cand));
+        }
+    }
+    best
+}
+
+/// Cluster-wide elasticity policy: the per-stage watermark rules of
+/// `deploy::ScalePolicy` generalized across every node's stages, plus
+/// a placement term deciding when a fragment is worth *migrating*.
+/// Driven by explicit [`DistributedTopologyManager::policy_tick`] calls
+/// rather than a watcher thread — migrations need `&mut` access to the
+/// whole manager, and the owner (bench loop, coordinator tick) already
+/// has a cadence.
+#[derive(Debug, Clone)]
+pub struct ClusterPolicy {
+    /// Scale a stage up when its sampled backlog is ≥ this many batches.
+    pub high_depth: i64,
+    /// Scale down when ≤ this many (negative disables scale-down).
+    pub low_depth: i64,
+    /// Never scale below this replica count.
+    pub min_parallelism: usize,
+    /// Never scale above this replica count.
+    pub max_parallelism: usize,
+    /// Consecutive same-direction ticks required before a rescale fires.
+    pub sustain: u32,
+    /// Minimum fractional plan-cost win (`0.15` = 15 %) before a
+    /// migration is worth its pause.
+    pub migrate_min_gain: f64,
+    /// CPU-heavy stage hints for the cost model — the same names the
+    /// initial planner was given.
+    pub cpu_heavy: Vec<String>,
+    /// The placement cost model (shared with [`plan_placement_with`]).
+    pub cost: PlacementCost,
+}
+
+impl Default for ClusterPolicy {
+    fn default() -> Self {
+        ClusterPolicy {
+            high_depth: 16,
+            low_depth: 0,
+            min_parallelism: 1,
+            max_parallelism: 8,
+            sustain: 3,
+            migrate_min_gain: 0.15,
+            cpu_heavy: Vec::new(),
+            cost: PlacementCost::default(),
+        }
+    }
+}
+
+impl ClusterPolicy {
+    /// The pure per-stage scaling decision for one sample: target
+    /// parallelism, or `None` to hold. (The tick additionally requires
+    /// the same direction `sustain` ticks in a row.)
+    pub fn decide(&self, depth: i64, current: usize) -> Option<usize> {
+        if depth >= self.high_depth && current < self.max_parallelism {
+            Some((current * 2).min(self.max_parallelism))
+        } else if depth <= self.low_depth && current > self.min_parallelism {
+            Some((current / 2).max(self.min_parallelism))
+        } else {
+            None
+        }
+    }
+}
+
+/// One action a [`DistributedTopologyManager::policy_tick`] took.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PolicyAction {
+    /// A stage was rescaled to `parallelism` replicas.
+    Rescale { topology: String, stage: String, parallelism: usize },
+    /// A fragment was live-migrated to `to`.
+    Migrate { topology: String, fragment: usize, to: NodeId },
 }
 
 /// Resolves fragment-hosting managers, the network hops are charged to,
@@ -275,6 +538,31 @@ pub struct RouteHop {
     pub stage: Arc<str>,
     /// All stage names in the fragment (rescale routing).
     pub stages: Vec<String>,
+    /// The fragment's full stage specs (annotations included) — a
+    /// migration re-renders these, with live parallelism patched in, to
+    /// start the replacement fragment on the new host.
+    pub specs: Vec<StageSpec>,
+}
+
+/// What one live fragment migration did — returned by
+/// [`DistributedTopologyManager::migrate_fragment`] and kept on the
+/// route (surfaced through `DistStreamReport` by the pipeline API).
+#[derive(Debug, Clone)]
+pub struct MigrationReport {
+    /// The distributed topology's key.
+    pub topology: String,
+    /// Which fragment (chain index) moved.
+    pub fragment: usize,
+    /// The fragment's stage names.
+    pub stages: Vec<String>,
+    pub from: NodeId,
+    pub to: NodeId,
+    /// Per-key state snapshots shipped across (0 for stateless stages).
+    pub moved_keys: usize,
+    /// Wire bytes of state + redirected in-flight batches.
+    pub state_bytes: usize,
+    /// Wall-clock pause: freeze begun → traffic flowing again.
+    pub pause: Duration,
 }
 
 /// Live state of one distributed topology: its fragments in chain
@@ -290,6 +578,7 @@ pub struct RouteState {
     pool: Arc<BufferPool>,
     counters: HopCounters,
     shipper: Option<Shipper>,
+    migrations: Vec<MigrationReport>,
 }
 
 impl RouteState {
@@ -314,6 +603,11 @@ impl RouteState {
     /// Whether a background shipper is pumping this route.
     pub fn has_shipper(&self) -> bool {
         self.shipper.is_some()
+    }
+
+    /// Every live migration this route has been through, in order.
+    pub fn migrations(&self) -> &[MigrationReport] {
+        &self.migrations
     }
 
     /// Take everything collected from the final fragment so far.
@@ -363,6 +657,7 @@ pub fn start_fragments<H: FragmentHost + ?Sized>(
             frag_key: Arc::from(frag_key),
             stage: Arc::from(frag.stages[0].name.as_str()),
             stages: frag.stages.iter().map(|s| s.name.clone()).collect(),
+            specs: frag.stages.clone(),
         });
     }
     let staged = (0..hops.len()).map(|_| VecDeque::new()).collect();
@@ -374,6 +669,7 @@ pub fn start_fragments<H: FragmentHost + ?Sized>(
         pool: Arc::new(BufferPool::new()),
         counters: HopCounters::new(host.metrics()),
         shipper: None,
+        migrations: Vec::new(),
     })
 }
 
@@ -883,6 +1179,10 @@ pub struct DistributedTopologyManager {
     routes: BTreeMap<String, RouteState>,
     metrics: Registry,
     async_net: bool,
+    /// Per-(fragment, stage) streak of consecutive same-direction
+    /// policy decisions — [`DistributedTopologyManager::policy_tick`]'s
+    /// anti-flapping state, keyed `<frag_key>/<stage>`.
+    policy_streaks: BTreeMap<String, (usize, u32)>,
 }
 
 impl Default for DistributedTopologyManager {
@@ -923,6 +1223,7 @@ impl DistributedTopologyManager {
             routes: BTreeMap::new(),
             metrics: Registry::new(),
             async_net: netplane_async_default(),
+            policy_streaks: BTreeMap::new(),
         }
     }
 
@@ -933,6 +1234,9 @@ impl DistributedTopologyManager {
     /// running on it) is kept, never silently replaced.
     pub fn add_node(&mut self, id: NodeId, profile: DeviceProfile) {
         self.network.register(id, profile);
+        // A node re-joining after a decommission or crash is reachable
+        // again — joins are inert until a policy tick pulls work over.
+        self.network.bring_up(&id);
         if let Some(existing) = self.nodes.get_mut(&id) {
             existing.profile = profile;
             return;
@@ -1099,6 +1403,321 @@ impl DistributedTopologyManager {
         manager_of(&*self, &node)?.rescale(&frag_key, stage, parallelism)
     }
 
+    /// Live-migrate fragment `fragment` of the running topology `key`
+    /// to node `to`: freeze the old host's fragment (drained
+    /// upstream-first, open keyed windows *exported*, never flushed),
+    /// ship its per-key state as [`NetMessage::MigrateState`] frames
+    /// charged to the network like any hop, start a replacement
+    /// fragment on `to` with the live (post-rescale) parallelism, seed
+    /// it, and re-route. Zero tuple loss and per-key order hold across
+    /// the move; the measured pause and wire bytes come back in the
+    /// [`MigrationReport`] (also kept on the route and counted under
+    /// `net.migration.*`).
+    pub fn migrate_fragment(
+        &mut self,
+        key: &str,
+        fragment: usize,
+        to: NodeId,
+    ) -> Result<MigrationReport> {
+        let mut st = self.take_route(key)?;
+        let r = migrate_route(self, &mut st, fragment, to);
+        self.routes.insert(key.to_string(), st);
+        r
+    }
+}
+
+/// Live-migrate `st`'s fragment `#fragment` to node `to` on any
+/// [`FragmentHost`] — the shared mechanism behind
+/// [`DistributedTopologyManager::migrate_fragment`] and the
+/// coordinator `Cluster`'s stream migration. See the module docs for
+/// the pause/zero-loss contract.
+pub fn migrate_route<H: FragmentHost + ?Sized>(
+    host: &mut H,
+    st: &mut RouteState,
+    fragment: usize,
+    to: NodeId,
+) -> Result<MigrationReport> {
+    {
+        if fragment >= st.hops.len() {
+            return Err(Error::Stream(format!(
+                "distributed topology `{}` has no fragment #{fragment} ({} fragments)",
+                st.key,
+                st.hops.len()
+            )));
+        }
+        let from = st.hops[fragment].node;
+        if to == from {
+            return Err(Error::Stream(format!(
+                "fragment #{fragment} of `{}` already runs on node {to}",
+                st.key
+            )));
+        }
+        if host.manager(&to).is_none() {
+            return Err(Error::Net(format!("no stream manager for node {to}")));
+        }
+        if !host.network().is_reachable(&to) {
+            return Err(unreachable_err(from, to));
+        }
+        let pause_clock = Instant::now();
+        host.metrics().counter("net.migration.started").inc();
+
+        // Single-thread the route for the move: the shipper's in-flight
+        // batches and collected outputs come back onto `st` in order.
+        let had_shipper = st.has_shipper();
+        if let Some(e) = halt_shipper(st) {
+            return Err(e);
+        }
+
+        // Live parallelism snapshot — policy rescales survive the move.
+        let frag_key = st.hops[fragment].frag_key.clone();
+        let mut specs = st.hops[fragment].specs.clone();
+        {
+            let mgr = manager_of(&*host, &from)?;
+            for spec in specs.iter_mut() {
+                spec.parallelism = mgr.parallelism(&frag_key, &spec.name)?;
+            }
+        }
+
+        // Freeze the old fragment; its trailing outputs were produced
+        // pre-move and flow onward from the old host like any egress.
+        let (trailing, states) = match host.manager_mut(&from) {
+            Some(m) => m.freeze(&frag_key)?,
+            None => return Err(Error::Net(format!("no stream manager for node {from}"))),
+        };
+        if !trailing.is_empty() {
+            if fragment + 1 == st.hops.len() {
+                st.collected.extend(trailing);
+            } else {
+                ship_chunks(&*host, st, fragment, trailing)?;
+            }
+        }
+
+        // Ship the exported state: encoded once, charged, and decoded
+        // on "arrival" — what the new host imports is exactly what the
+        // wire carried.
+        let bytes_ctr = host.metrics().counter("net.migration.bytes");
+        let mut moved_keys = 0usize;
+        let mut state_bytes = 0usize;
+        let mut shipped: Vec<(String, Vec<KeyState>)> = Vec::new();
+        for (stage, state) in states {
+            if state.is_empty() {
+                continue;
+            }
+            let frame =
+                NetMessage::MigrateState { from, topology: st.key.to_string(), stage, state };
+            let wire = frame.encode();
+            let size = wire.len() + 4;
+            host.network().charge_hop(&from, &to, size).ok_or_else(|| unreachable_err(from, to))?;
+            state_bytes += size;
+            bytes_ctr.add(size as u64);
+            match NetMessage::decode(&wire)? {
+                NetMessage::MigrateState { stage, state, .. } => {
+                    moved_keys += state.len();
+                    shipped.push((stage, state));
+                }
+                other => {
+                    return Err(Error::Net(format!(
+                        "migrate-state frame for `{}` decoded as {other:?}",
+                        st.key
+                    )))
+                }
+            }
+        }
+
+        // Batches already staged for the old fragment are redirected to
+        // the new host — they pay (and count as) migration traffic too.
+        for wb in st.staged[fragment].iter() {
+            let size = wb.wire_size();
+            host.network().charge_hop(&from, &to, size).ok_or_else(|| unreachable_err(from, to))?;
+            state_bytes += size;
+            bytes_ctr.add(size as u64);
+        }
+
+        // Fresh fragment on the new host, seeded before any traffic.
+        let spec = specs.iter().map(StageSpec::render).collect::<Vec<_>>().join("->");
+        match host.manager_mut(&to) {
+            Some(m) => m.start(&frag_key, &spec)?,
+            None => return Err(Error::Net(format!("no stream manager for node {to}"))),
+        }
+        for (stage, state) in shipped {
+            manager_of(&*host, &to)?.inject_state(&frag_key, &stage, state)?;
+        }
+        st.hops[fragment].node = to;
+        st.hops[fragment].specs = specs.clone();
+
+        // Deliver everything the pause left queued (redirected batches
+        // included) before handing the route back to a shipper — a
+        // fresh shipper never looks at the route's local queues.
+        while st.staged.iter().any(|q| !q.is_empty()) {
+            pump_route(&*host, st)?;
+            if st.staged.iter().any(|q| !q.is_empty()) {
+                std::thread::sleep(RETRY_PAUSE);
+            }
+        }
+        if had_shipper {
+            start_shipper(&*host, st)?;
+            if let Some(shipper) = &st.shipper {
+                // Outputs collected while single-threaded belong ahead
+                // of anything the new shipper has already drained.
+                let mut collected = shipper.shared.collected.lock().unwrap();
+                let newer = std::mem::replace(&mut *collected, std::mem::take(&mut st.collected));
+                collected.extend(newer);
+            }
+        }
+
+        let pause = pause_clock.elapsed();
+        host.metrics().counter("net.migration.completed").inc();
+        host.metrics().counter("net.migration.pause_ms").add(pause.as_millis() as u64);
+        let report = MigrationReport {
+            topology: st.key.to_string(),
+            fragment,
+            stages: specs.iter().map(|s| s.name.clone()).collect(),
+            from,
+            to,
+            moved_keys,
+            state_bytes,
+            pause,
+        };
+        log::info!(
+            "migrated `{}`#f{fragment} {from} → {to}: {moved_keys} keys, {state_bytes} B, pause {pause:?}",
+            st.key
+        );
+        st.migrations.push(report.clone());
+        Ok(report)
+    }
+}
+
+impl DistributedTopologyManager {
+    /// The current placement of a running route, reconstructed from its
+    /// live hops (annotations included, post-migration hosts).
+    pub fn placement_of(&self, key: &str) -> Option<PlacementPlan> {
+        self.routes.get(key).map(|st| PlacementPlan {
+            fragments: st
+                .hops
+                .iter()
+                .map(|h| Fragment { node: h.node, stages: h.specs.clone() })
+                .collect(),
+        })
+    }
+
+    /// One cluster policy pass. Per stage: sample the shared registry's
+    /// depth gauges and rescale between the policy's watermarks,
+    /// `sustain`-debounced. Per route: re-rank the live placement with
+    /// the policy's cost model and migrate a fragment when another host
+    /// wins by at least `migrate_min_gain` — this is how a freshly
+    /// joined node attracts work. Fragment 0 stays pinned (the
+    /// ingestion point only moves through
+    /// [`DistributedTopologyManager::decommission_node`]). Returns what
+    /// was done, in order.
+    pub fn policy_tick(&mut self, policy: &ClusterPolicy) -> Result<Vec<PolicyAction>> {
+        let mut actions = Vec::new();
+        // -- Elasticity: watermark rescales, debounced per stage.
+        let mut samples: Vec<(String, Arc<str>, NodeId, String, usize, i64)> = Vec::new();
+        for (key, st) in &self.routes {
+            for hop in &st.hops {
+                for stage in &hop.stages {
+                    let Some(mgr) = self.manager(&hop.node) else { continue };
+                    let Ok(current) = mgr.parallelism(&hop.frag_key, stage) else { continue };
+                    let mut depth = self
+                        .metrics
+                        .gauge(&format!("stream.{}.{stage}.in.depth", hop.frag_key))
+                        .get();
+                    for r in 0..current {
+                        depth = depth.max(
+                            self.metrics
+                                .gauge(&format!("stream.{}.{stage}.r{r}.depth", hop.frag_key))
+                                .get(),
+                        );
+                    }
+                    samples.push((
+                        key.clone(),
+                        hop.frag_key.clone(),
+                        hop.node,
+                        stage.clone(),
+                        current,
+                        depth,
+                    ));
+                }
+            }
+        }
+        for (key, frag_key, node, stage, current, depth) in samples {
+            let streak_key = format!("{frag_key}/{stage}");
+            let Some(target) = policy.decide(depth, current) else {
+                self.policy_streaks.remove(&streak_key);
+                continue;
+            };
+            let streak = match self.policy_streaks.get(&streak_key) {
+                Some((t, n)) if *t == target => n + 1,
+                _ => 1,
+            };
+            if streak < policy.sustain.max(1) {
+                self.policy_streaks.insert(streak_key, (target, streak));
+                continue;
+            }
+            self.policy_streaks.remove(&streak_key);
+            manager_of(&*self, &node)?.rescale(&frag_key, &stage, target)?;
+            actions.push(PolicyAction::Rescale { topology: key, stage, parallelism: target });
+        }
+        // -- Placement: migrate when the cost model finds a clearly
+        //    better host for a non-ingestion fragment.
+        let profiles = self.profiles();
+        let heavy: Vec<&str> = policy.cpu_heavy.iter().map(String::as_str).collect();
+        let keys: Vec<String> = self.routes.keys().cloned().collect();
+        for key in keys {
+            let Some(plan) = self.placement_of(&key) else { continue };
+            let Some(current) = policy.cost.plan_cost(&plan, &profiles, &heavy) else { continue };
+            if let Some((c, f, target)) = best_single_move(&policy.cost, &plan, &profiles, &heavy)
+            {
+                if current > 0.0 && (current - c) / current >= policy.migrate_min_gain {
+                    self.migrate_fragment(&key, f, target)?;
+                    actions.push(PolicyAction::Migrate { topology: key, fragment: f, to: target });
+                }
+            }
+        }
+        Ok(actions)
+    }
+
+    /// Gracefully drain a node out of the cluster: every fragment it
+    /// hosts (ingestion fragments included) is live-migrated to the
+    /// best-cost surviving host, then the node is deregistered and its
+    /// network slot taken down. Fails — with the node still serving —
+    /// when it hosts a fragment and no other node is registered. A
+    /// crash (`SimNetwork::take_down` without this call) stays lossy by
+    /// design; this is the clean leave.
+    pub fn decommission_node(
+        &mut self,
+        node: NodeId,
+        policy: &ClusterPolicy,
+    ) -> Result<Vec<MigrationReport>> {
+        let survivors: Vec<NodeId> =
+            self.nodes.keys().copied().filter(|id| *id != node).collect();
+        // Rank candidate plans over the *full* profile map: a route may
+        // have several fragments on the leaving node, and the others'
+        // contribution must stay comparable while they wait their turn.
+        let profiles = self.profiles();
+        let heavy: Vec<&str> = policy.cpu_heavy.iter().map(String::as_str).collect();
+        let mut reports = Vec::new();
+        let keys: Vec<String> = self.routes.keys().cloned().collect();
+        for key in keys {
+            loop {
+                let Some(plan) = self.placement_of(&key) else { break };
+                let Some(f) = plan.fragments.iter().position(|fr| fr.node == node) else { break };
+                let best =
+                    best_host_for(&policy.cost, &plan, f, &survivors, &profiles, &heavy);
+                let Some((_, to)) = best else {
+                    return Err(Error::Net(format!(
+                        "cannot decommission node {node}: no surviving node can host \
+                         fragment #{f} of `{key}`"
+                    )));
+                };
+                reports.push(self.migrate_fragment(&key, f, to)?);
+            }
+        }
+        self.nodes.remove(&node);
+        self.network.take_down(node);
+        Ok(reports)
+    }
+
     /// Stop a distributed topology: halt its shipper (if any),
     /// cascade-drain every fragment front-to-back, and return the
     /// complete output. A fault the shipper recorded wins.
@@ -1256,6 +1875,18 @@ mod tests {
         let (pi, cloud) = (id(1), id(2));
         dist.add_node(pi, DeviceProfile::raspberry_pi());
         dist.add_node(cloud, DeviceProfile::cloud_small());
+        register_test_stages(&mut dist);
+        (dist, pi, cloud)
+    }
+
+    fn three_node_manager() -> (DistributedTopologyManager, NodeId, NodeId, NodeId) {
+        let (mut dist, pi, cloud) = two_node_manager();
+        let spare = id(3);
+        dist.add_node(spare, DeviceProfile::cloud_small());
+        (dist, pi, cloud, spare)
+    }
+
+    fn register_test_stages(dist: &mut DistributedTopologyManager) {
         dist.register_stage("inc", || {
             Box::new(OperatorKind::map("inc", |mut t| {
                 let v = t.get("X").unwrap_or(0.0);
@@ -1271,7 +1902,6 @@ mod tests {
             }))
         });
         dist.register_stage("kwin", || Box::new(OperatorKind::window_by("kwin", "X", 4, "K")));
-        (dist, pi, cloud)
     }
 
     fn topo(spec: &str) -> Topology {
@@ -1482,5 +2112,284 @@ mod tests {
         }
         let out = dist.stop("r").unwrap();
         assert_eq!(out.len(), 3, "each key fills one window of 4 after the rescale");
+    }
+
+    // ---- Bandwidth-aware placement ----
+
+    #[test]
+    fn placement_cost_weighs_bandwidth_against_compute() {
+        let cost = PlacementCost::default();
+        let mut profiles = BTreeMap::new();
+        let (android, cloud) = (id(1), id(2));
+        profiles.insert(android, DeviceProfile::android());
+        profiles.insert(cloud, DeviceProfile::cloud_small());
+        let t = topo("inc->kwin@K");
+        // Small tuples: the 8× compute win of off-loading kwin beats
+        // the WiFi hop, so the planner splits.
+        let plan = plan_placement_with(&cost, &t, android, &profiles, &["kwin"]).unwrap();
+        assert_eq!(plan.fragments.len(), 2);
+        assert_eq!(plan.fragments[1].node, cloud);
+        // Fat tuples (2 KiB features): same chain, same nodes, but now
+        // the uplink out-costs the compute win and the chain stays
+        // local. A compute-only ranking — which never sees the payload
+        // size — would still split here and lose.
+        let fat = PlacementCost { tuple_bytes: 2048.0, ..PlacementCost::default() };
+        let plan = plan_placement_with(&fat, &t, android, &profiles, &["kwin"]).unwrap();
+        assert_eq!(plan.fragments.len(), 1, "slow uplink must veto the off-load");
+        assert_eq!(plan.fragments[0].node, android);
+        // The arithmetic behind the veto, explicitly.
+        let local =
+            fat.plan_cost(&PlacementPlan::single(android, &t), &profiles, &["kwin"]).unwrap();
+        let split = fat
+            .plan_cost(&PlacementPlan::split_at(&t, 1, android, cloud), &profiles, &["kwin"])
+            .unwrap();
+        assert!(split > local, "split {split} must out-cost local {local}");
+        // A fragment on an unregistered node has no cost.
+        assert!(cost.plan_cost(&PlacementPlan::single(id(9), &t), &profiles, &[]).is_none());
+    }
+
+    // ---- Live fragment migration ----
+
+    #[test]
+    fn migrate_fragment_moves_live_state_with_zero_loss() {
+        let (mut dist, pi, cloud, spare) = three_node_manager();
+        let t = topo("inc->kwin@K");
+        dist.start("w", "inc->kwin@K", &PlacementPlan::split_at(&t, 1, pi, cloud)).unwrap();
+        // Half-fill every per-key window across the node boundary.
+        let mut seq = 0u64;
+        for _ in 0..2 {
+            for k in 0..3u64 {
+                dist.send("w", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let report = dist.migrate_fragment("w", 1, spare).unwrap();
+        assert_eq!((report.from, report.to), (cloud, spare));
+        assert_eq!(report.fragment, 1);
+        assert_eq!(report.stages, vec!["kwin".to_string()]);
+        // Keys still in flight at freeze time ride the stream instead
+        // of the snapshot, so the count is bounded, not exact.
+        assert!(report.moved_keys <= 3, "{report:?}");
+        if report.moved_keys > 0 {
+            assert!(report.state_bytes > 0, "{report:?}");
+            assert_eq!(
+                dist.metrics().counter("net.migration.bytes").get(),
+                report.state_bytes as u64
+            );
+        }
+        assert_eq!(dist.metrics().counter("net.migration.started").get(), 1);
+        assert_eq!(dist.metrics().counter("net.migration.completed").get(), 1);
+        let route = dist.route("w").unwrap();
+        assert_eq!(route.hops()[1].node, spare, "route must point at the new host");
+        assert_eq!(route.migrations().len(), 1);
+        // Second half of every window lands on the new host.
+        for _ in 0..2 {
+            for k in 0..3u64 {
+                dist.send("w", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let out = dist.stop("w").unwrap();
+        assert_eq!(out.len(), 3, "each key completes exactly one window of 4: {out:?}");
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(4.0)), "{out:?}");
+    }
+
+    #[test]
+    fn migrate_empty_fragment_never_encodes_or_charges() {
+        let (mut dist, pi, cloud, spare) = three_node_manager();
+        dist.set_async_shippers(false);
+        let t = topo("inc->kwin@K");
+        dist.start("e", "inc->kwin@K", &PlacementPlan::split_at(&t, 1, pi, cloud)).unwrap();
+        let report = dist.migrate_fragment("e", 1, spare).unwrap();
+        assert_eq!(report.moved_keys, 0);
+        assert_eq!(report.state_bytes, 0);
+        assert_eq!(dist.network().messages(), 0, "no state, no staged batches, no charge");
+        assert_eq!(
+            dist.metrics().counter("net.hop.encodes").get(),
+            0,
+            "the migration path must never (re-)encode batches itself"
+        );
+        // The re-routed chain works: one full window over the new hop.
+        for i in 0..4u64 {
+            dist.send("e", Tuple::new(i, vec![]).with("K", 1.0).with("X", 1.0)).unwrap();
+        }
+        let out = dist.stop("e").unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("COUNT"), Some(4.0));
+        assert!(dist.network().messages() > 0, "post-migration hops are charged normally");
+    }
+
+    #[test]
+    fn migrate_fragment_validates_route_fragment_and_target() {
+        let (mut dist, pi, cloud, spare) = three_node_manager();
+        let t = topo("inc->double");
+        dist.start("v", "inc->double", &PlacementPlan::split_at(&t, 1, pi, cloud)).unwrap();
+        let err = dist.migrate_fragment("ghost", 0, spare).unwrap_err();
+        assert!(matches!(err, Error::NotRunning(_)), "{err}");
+        let err = dist.migrate_fragment("v", 7, spare).unwrap_err();
+        assert!(format!("{err}").contains("no fragment #7"), "{err}");
+        let err = dist.migrate_fragment("v", 1, cloud).unwrap_err();
+        assert!(format!("{err}").contains("already runs"), "{err}");
+        let err = dist.migrate_fragment("v", 1, id(42)).unwrap_err();
+        assert!(format!("{err}").contains("no stream manager"), "{err}");
+        dist.network().take_down(spare);
+        let err = dist.migrate_fragment("v", 1, spare).unwrap_err();
+        assert!(format!("{err}").contains("unreachable"), "{err}");
+        assert_eq!(dist.metrics().counter("net.migration.started").get(), 0, "refusals are free");
+        // Every refusal left the route serving.
+        dist.network().bring_up(&spare);
+        dist.send("v", Tuple::new(0, vec![]).with("X", 1.0)).unwrap();
+        let out = dist.stop("v").unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("X"), Some(4.0)); // (1+1)*2
+    }
+
+    // ---- Cluster policy plane ----
+
+    #[test]
+    fn policy_tick_pulls_work_to_a_joined_node() {
+        let mut dist = DistributedTopologyManager::new();
+        let (edge_a, edge_b) = (id(1), id(2));
+        dist.add_node(edge_a, DeviceProfile::raspberry_pi());
+        dist.add_node(edge_b, DeviceProfile::raspberry_pi());
+        register_test_stages(&mut dist);
+        let t = topo("inc->kwin@K");
+        dist.start("j", "inc->kwin@K", &PlacementPlan::split_at(&t, 1, edge_a, edge_b)).unwrap();
+        let policy = ClusterPolicy {
+            migrate_min_gain: 0.05,
+            cpu_heavy: vec!["kwin".to_string()],
+            ..ClusterPolicy::default()
+        };
+        assert!(
+            dist.policy_tick(&policy).unwrap().is_empty(),
+            "two equal edges: nothing worth moving"
+        );
+        // Half-open windows before the join, so the migration the join
+        // triggers has real state to carry.
+        let mut seq = 0u64;
+        for _ in 0..2 {
+            for k in 0..3u64 {
+                dist.send("j", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let cloud = id(3);
+        dist.add_node(cloud, DeviceProfile::cloud_small());
+        assert_eq!(dist.route("j").unwrap().hops()[1].node, edge_b, "a join alone is inert");
+        let actions = dist.policy_tick(&policy).unwrap();
+        assert_eq!(
+            actions,
+            vec![PolicyAction::Migrate { topology: "j".to_string(), fragment: 1, to: cloud }],
+            "the policy plane moves the heavy fragment to the stronger joiner"
+        );
+        assert_eq!(dist.route("j").unwrap().hops()[1].node, cloud);
+        assert!(dist.policy_tick(&policy).unwrap().is_empty(), "placement converges");
+        for _ in 0..2 {
+            for k in 0..3u64 {
+                dist.send("j", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let out = dist.stop("j").unwrap();
+        assert_eq!(out.len(), 3, "windows opened pre-join complete post-migration: {out:?}");
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(4.0)), "{out:?}");
+    }
+
+    #[test]
+    fn policy_tick_rescales_between_watermarks_with_sustain() {
+        let (mut dist, pi, _cloud) = two_node_manager();
+        let t = topo("inc");
+        dist.start("r", "inc", &PlacementPlan::single(pi, &t)).unwrap();
+        let policy = ClusterPolicy { high_depth: 8, sustain: 2, ..ClusterPolicy::default() };
+        let depth = dist.metrics().gauge("stream.r#f0.inc.in.depth");
+        depth.set(50);
+        assert!(dist.policy_tick(&policy).unwrap().is_empty(), "sustain debounces tick one");
+        let actions = dist.policy_tick(&policy).unwrap();
+        assert_eq!(
+            actions,
+            vec![PolicyAction::Rescale {
+                topology: "r".to_string(),
+                stage: "inc".to_string(),
+                parallelism: 2
+            }]
+        );
+        assert_eq!(dist.manager(&pi).unwrap().parallelism("r#f0", "inc").unwrap(), 2);
+        // Back inside the band: the streak resets, nothing fires.
+        depth.set(4);
+        assert!(dist.policy_tick(&policy).unwrap().is_empty());
+        // Idle long enough: scale back down.
+        depth.set(0);
+        assert!(dist.policy_tick(&policy).unwrap().is_empty(), "sustain again");
+        let actions = dist.policy_tick(&policy).unwrap();
+        assert_eq!(
+            actions,
+            vec![PolicyAction::Rescale {
+                topology: "r".to_string(),
+                stage: "inc".to_string(),
+                parallelism: 1
+            }]
+        );
+        dist.stop("r").unwrap();
+    }
+
+    #[test]
+    fn decommission_drains_a_leaving_node_with_zero_loss() {
+        let (mut dist, pi, cloud, spare) = three_node_manager();
+        let t = topo("inc->kwin@K");
+        dist.start("d", "inc->kwin@K", &PlacementPlan::split_at(&t, 1, pi, cloud)).unwrap();
+        let mut seq = 0u64;
+        for _ in 0..2 {
+            for k in 0..3u64 {
+                dist.send("d", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let policy =
+            ClusterPolicy { cpu_heavy: vec!["kwin".to_string()], ..ClusterPolicy::default() };
+        let reports = dist.decommission_node(cloud, &policy).unwrap();
+        assert_eq!(reports.len(), 1);
+        assert_eq!((reports[0].from, reports[0].to), (cloud, spare));
+        assert!(!dist.nodes().contains(&cloud), "the node is gone");
+        assert!(!dist.network().is_reachable(&cloud));
+        assert_eq!(dist.route("d").unwrap().hops()[1].node, spare);
+        for _ in 0..2 {
+            for k in 0..3u64 {
+                dist.send("d", Tuple::new(seq, vec![]).with("K", k as f64).with("X", 1.0))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let out = dist.stop("d").unwrap();
+        assert_eq!(out.len(), 3, "{out:?}");
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(4.0)), "{out:?}");
+        // A node hosting nothing just leaves.
+        assert!(dist.decommission_node(pi, &policy).unwrap().is_empty());
+        // The last node under a running route refuses to leave.
+        let mut solo = DistributedTopologyManager::new();
+        let only = id(7);
+        solo.add_node(only, DeviceProfile::raspberry_pi());
+        register_test_stages(&mut solo);
+        let t = topo("inc");
+        solo.start("s", "inc", &PlacementPlan::single(only, &t)).unwrap();
+        let err = solo.decommission_node(only, &policy).unwrap_err();
+        assert!(format!("{err}").contains("cannot decommission"), "{err}");
+        assert!(solo.is_running("s"), "a refused decommission leaves the route serving");
+        solo.stop("s").unwrap();
+    }
+
+    #[test]
+    fn rejoining_a_decommissioned_node_heals_reachability() {
+        let (mut dist, pi, _cloud, _spare) = three_node_manager();
+        let policy = ClusterPolicy::default();
+        dist.decommission_node(pi, &policy).unwrap();
+        assert!(!dist.network().is_reachable(&pi));
+        dist.add_node(pi, DeviceProfile::raspberry_pi());
+        assert!(dist.network().is_reachable(&pi), "add_node heals the partition");
+        assert!(dist.nodes().contains(&pi));
     }
 }

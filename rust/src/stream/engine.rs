@@ -520,6 +520,18 @@ pub struct RescaleReport {
 /// control thread.
 enum Control {
     Rescale { degree: usize, ack: SyncSender<Result<RescaleReport>> },
+    /// Migration pause: drain the stage's queued input through the
+    /// current replica generation, flush downstream, export every
+    /// replica's per-key state and park the stage. The control thread
+    /// stays alive afterwards — it keeps the downstream hop wired until
+    /// the topology input closes — but rejects further control
+    /// messages.
+    Freeze { ack: SyncSender<Result<Vec<KeyState>>> },
+    /// Seed per-key state into the running generation — the receiving
+    /// side of a fragment migration. Runs the same pause/drain/seed
+    /// cycle as a rescale at the current degree, so the injected state
+    /// merges with whatever the generation already held.
+    Inject { state: Vec<KeyState>, ack: SyncSender<Result<RescaleReport>> },
     /// Sent by a dropping [`Exchange`] when the upstream stage is gone:
     /// the control thread reaps the final replica generation and exits.
     /// Routers never receive this.
@@ -550,6 +562,11 @@ struct RescalerInner {
     error: ErrorSlot,
     /// Stage name → control endpoints (`None` = static stage).
     controls: BTreeMap<String, Option<StageControl>>,
+    /// Stage names in chain order (upstream first) — the order a
+    /// whole-topology freeze pauses stages in, so each stage's handoff
+    /// flush lands in its successor's queues before the successor's own
+    /// handoff marker.
+    order: Vec<String>,
     /// Advisory view of each stage's replica count, updated from rescale
     /// acknowledgements (the stage's router is the source of truth).
     parallelism: Mutex<BTreeMap<String, usize>>,
@@ -576,6 +593,25 @@ impl Rescaler {
         self.inner.parallelism.lock().unwrap().get(stage).copied()
     }
 
+    /// Stage names in chain order (upstream first).
+    pub fn stage_order(&self) -> Vec<String> {
+        self.inner.order.clone()
+    }
+
+    fn control_of(&self, stage: &str) -> Result<&StageControl> {
+        match self.inner.controls.get(stage) {
+            None => Err(Error::Stream(format!(
+                "topology `{}` has no stage `{stage}`",
+                self.inner.name
+            ))),
+            Some(None) => Err(Error::Stream(format!(
+                "stage `{stage}` is not elastic: it was launched without a stage \
+                 factory (use `StageRuntime::elastic` or a `TopologyManager`)"
+            ))),
+            Some(Some(control)) => Ok(control),
+        }
+    }
+
     /// Change `stage` to `parallelism` replicas, live. Blocks until the
     /// stage's router has drained the replica pool, moved its per-key
     /// state and resumed — under the same backpressure conditions as
@@ -589,21 +625,7 @@ impl Rescaler {
                 "stage `{stage}`: cannot rescale to parallelism 0 (must be ≥ 1)"
             )));
         }
-        let control = match self.inner.controls.get(stage) {
-            None => {
-                return Err(Error::Stream(format!(
-                    "topology `{}` has no stage `{stage}`",
-                    self.inner.name
-                )))
-            }
-            Some(None) => {
-                return Err(Error::Stream(format!(
-                    "stage `{stage}` is not elastic: it was launched without a stage \
-                     factory (use `StageRuntime::elastic` or a `TopologyManager`)"
-                )))
-            }
-            Some(Some(control)) => control,
-        };
+        let control = self.control_of(stage)?;
         let (ack_tx, ack_rx) = sync_channel(1);
         control
             .ctrl
@@ -624,6 +646,24 @@ impl Rescaler {
             .unwrap()
             .insert(stage.to_string(), report.to);
         Ok(report)
+    }
+
+    /// Seed per-key state into a running elastic stage — the receiving
+    /// side of a fragment migration. The stage pauses, drains, merges
+    /// `state` with what its replicas already held (re-partitioned by
+    /// the same hash the shuffle uses) and resumes at its current
+    /// degree. Same failure modes as [`Rescaler::rescale`].
+    pub fn inject(&self, stage: &str, state: Vec<KeyState>) -> Result<RescaleReport> {
+        let control = self.control_of(stage)?;
+        let (ack_tx, ack_rx) = sync_channel(1);
+        control
+            .ctrl
+            .send(Control::Inject { state, ack: ack_tx })
+            .map_err(|_| self.stopped_error())?;
+        if let Some(nudge) = &control.nudge {
+            let _ = nudge.try_send_msg(StreamMsg::Batch(Vec::new()));
+        }
+        ack_rx.recv().map_err(|_| self.stopped_error())?
     }
 
     /// The recorded stage fault, if the topology has failed.
@@ -869,6 +909,94 @@ impl EngineHandle {
             return Err(Error::Stream(format!("topology `{}` failed: {cause}", self.name)));
         }
         Ok(out)
+    }
+
+    /// Freeze the whole topology for a live migration: pause every
+    /// stage upstream-first, drain all in-flight tuples, and collect
+    /// each stage's exported per-key state (open windows *move*, they
+    /// are not flushed). Returns the trailing output tuples — everything
+    /// the topology emitted from the freeze onward, drained to
+    /// end-of-stream — plus `(stage, state)` snapshots in chain order.
+    /// Consumes the handle: the frozen topology is torn down; the
+    /// caller restarts it elsewhere and seeds the state back with
+    /// [`EngineHandle::inject_state`] on the new instance.
+    ///
+    /// The caller must have stopped feeding first (outstanding
+    /// [`StreamSender`] clones must be idle). Fails without disturbing
+    /// the topology when any stage is static — freezing needs every
+    /// stage behind a control plane, which stage factories provide.
+    pub fn freeze(mut self) -> Result<(Vec<Tuple>, Vec<(String, Vec<KeyState>)>)> {
+        let inner = self.rescaler.inner.clone();
+        for (stage, control) in &inner.controls {
+            if control.is_none() {
+                return Err(Error::Stream(format!(
+                    "cannot freeze topology `{}`: stage `{stage}` is static (launch it \
+                     through a stage factory to make it migratable)",
+                    self.name
+                )));
+            }
+        }
+        let mut trailing: Vec<Tuple> = Vec::new();
+        let mut states: Vec<(String, Vec<KeyState>)> = Vec::new();
+        for stage in &inner.order {
+            let control = inner
+                .controls
+                .get(stage)
+                .and_then(|c| c.as_ref())
+                .expect("prechecked: every stage is elastic");
+            let (ack_tx, ack_rx) = sync_channel(1);
+            control
+                .ctrl
+                .send(Control::Freeze { ack: ack_tx })
+                .map_err(|_| self.rescaler.stopped_error())?;
+            if let Some(nudge) = &control.nudge {
+                let _ = nudge.try_send_msg(StreamMsg::Batch(Vec::new()));
+            }
+            // Interleave the ack wait with draining the engine output:
+            // the freeze flushes trailing tuples downstream, and on the
+            // bounded output channel that flush completes only if
+            // someone consumes.
+            let state = loop {
+                match ack_rx.recv_timeout(std::time::Duration::from_millis(1)) {
+                    Ok(result) => break result?,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        self.output.try_drain_into(usize::MAX, &mut trailing);
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        return Err(self.rescaler.stopped_error());
+                    }
+                }
+            };
+            states.push((stage.clone(), state));
+        }
+        // Every stage is parked. Close the input so the frozen control
+        // loops unwind (an upstream-first cascade: each exiting stage
+        // drops its downstream ports), then drain the output to
+        // end-of-stream and reap the threads.
+        drop(self.input.take());
+        {
+            let mut chan = self.output.chan.lock().unwrap();
+            trailing.extend(chan.pending.drain(..));
+            while let Ok(msg) = chan.rx.recv() {
+                self.output.depth.add(-1);
+                if let StreamMsg::Batch(batch) = msg {
+                    trailing.extend(batch);
+                }
+            }
+        }
+        for t in self.threads.drain(..) {
+            t.join().map_err(|_| Error::Stream("stage thread panicked".into()))?;
+        }
+        if let Some(cause) = self.error.get() {
+            return Err(Error::Stream(format!("topology `{}` failed: {cause}", self.name)));
+        }
+        Ok((trailing, states))
+    }
+
+    /// Seed per-key state into a running elastic stage — the receiving
+    /// side of a fragment migration. See [`Rescaler::inject`].
+    pub fn inject_state(&self, stage: &str, state: Vec<KeyState>) -> Result<RescaleReport> {
+        self.rescaler.inject(stage, state)
     }
 }
 
@@ -1173,6 +1301,7 @@ impl StreamEngine {
                 name: name.to_string(),
                 error: error.clone(),
                 controls,
+                order: specs.iter().map(|s| s.name.clone()).collect(),
                 parallelism: Mutex::new(parallelism),
             }),
         };
@@ -1400,12 +1529,39 @@ fn run_router(mut ctx: RouterCtx) {
     let initial = std::mem::take(&mut ctx.initial);
     let mut gen = spawn_generation(&ctx, initial);
     let mut control = ctx.control.take();
+    let mut frozen = false;
     'stream: loop {
         let mut drop_control = false;
         if let Some(ctrl) = &control {
             match ctrl.try_recv() {
                 Ok(Control::Rescale { degree, ack }) => {
-                    if !apply_rescale(&ctx, &mut gen, degree, ack) {
+                    if frozen {
+                        let _ = ack.send(Err(frozen_error(&ctx.stage)));
+                    } else if !apply_rescale(&ctx, &mut gen, degree, Vec::new(), ack) {
+                        break 'stream;
+                    }
+                    continue 'stream;
+                }
+                Ok(Control::Inject { state, ack }) => {
+                    if frozen {
+                        let _ = ack.send(Err(frozen_error(&ctx.stage)));
+                    } else {
+                        let degree = gen.workers.len();
+                        if !apply_rescale(&ctx, &mut gen, degree, state, ack) {
+                            break 'stream;
+                        }
+                    }
+                    continue 'stream;
+                }
+                Ok(Control::Freeze { ack }) => {
+                    if frozen {
+                        let _ = ack.send(Err(frozen_error(&ctx.stage)));
+                    } else if apply_freeze(&ctx, &mut gen, ack) {
+                        // Parked: the loop keeps running (holding the
+                        // downstream ports open for later fragments)
+                        // until the stage inbound disconnects.
+                        frozen = true;
+                    } else {
                         break 'stream;
                     }
                     continue 'stream;
@@ -1440,9 +1596,21 @@ fn run_router(mut ctx: RouterCtx) {
         ctx.rx_depth.add(-1);
         match msg {
             StreamMsg::Batch(batch) => {
-                for tuple in batch {
-                    if !gen.emitter.emit(tuple) {
+                if frozen {
+                    // Only the control plane's empty wake-up sentinel is
+                    // legal after a freeze; data arriving here would
+                    // bypass the already-exported state.
+                    if !batch.is_empty() {
+                        let msg = format!("stage `{}` received tuples after freeze", ctx.stage);
+                        log::error!("{msg}");
+                        ctx.error.set(msg);
                         break 'stream;
+                    }
+                } else {
+                    for tuple in batch {
+                        if !gen.emitter.emit(tuple) {
+                            break 'stream;
+                        }
                     }
                 }
             }
@@ -1494,13 +1662,15 @@ fn spawn_generation(ctx: &RouterCtx, ops: Vec<Box<dyn Operator>>) -> Generation 
 
 /// Apply one rescale request on the router thread: validate, pause &
 /// drain the old generation through handoff markers, re-partition the
-/// exported per-key state, seed and start the new generation, resume.
+/// exported per-key state (merged with `seed`, the inject path's
+/// migrated-in snapshots), seed and start the new generation, resume.
 /// Returns false when the topology must tear down (a fault surfaced
 /// mid-handoff or the downstream is gone).
 fn apply_rescale(
     ctx: &RouterCtx,
     gen: &mut Generation,
     degree: usize,
+    seed: Vec<KeyState>,
     ack: SyncSender<Result<RescaleReport>>,
 ) -> bool {
     let from = gen.workers.len();
@@ -1511,7 +1681,7 @@ fn apply_rescale(
         ))));
         return true;
     }
-    if degree == from {
+    if degree == from && seed.is_empty() {
         let _ = ack.send(Ok(RescaleReport {
             stage: ctx.stage.clone(),
             from,
@@ -1568,6 +1738,9 @@ fn apply_rescale(
     for w in gen.workers.drain(..) {
         let _ = w.join();
     }
+    // Migrated-in state joins the exported state; per-key merge happens
+    // inside `import_state` (it extends, never replaces).
+    moved.extend(seed);
 
     // ---- Re-partition the key space and seed the new generation.
     let moved_keys = moved.len();
@@ -1617,6 +1790,92 @@ fn apply_rescale(
 fn abort_error(ctx: &RouterCtx, fallback: &str) -> Error {
     Error::Stream(format!(
         "stage `{}` rescale aborted: {}",
+        ctx.stage,
+        ctx.error.get().unwrap_or_else(|| fallback.to_string())
+    ))
+}
+
+fn frozen_error(stage: &str) -> Error {
+    Error::Stream(format!("stage `{stage}` is frozen (topology mid-migration)"))
+}
+
+/// Freeze a routed stage on its router thread: route everything already
+/// queued on the stage inbound through the current generation, flush,
+/// drain the replicas through handoff markers and hand their collected
+/// per-key state to `ack`. On success the generation is gone (workers
+/// reaped, parallelism gauge at 0) and the router parks; returns false
+/// only when the topology must tear down.
+fn apply_freeze(
+    ctx: &RouterCtx,
+    gen: &mut Generation,
+    ack: SyncSender<Result<Vec<KeyState>>>,
+) -> bool {
+    // Drain the stage inbound first. This is stable: the caller freezes
+    // upstream-first and stops feeding beforehand, so no producer is
+    // mid-send — everything the stage will ever receive is already
+    // queued here.
+    loop {
+        match ctx.rx.try_recv() {
+            Ok(StreamMsg::Batch(batch)) => {
+                ctx.rx_depth.add(-1);
+                for tuple in batch {
+                    if !gen.emitter.emit(tuple) {
+                        let _ = ack.send(Err(freeze_abort_error(ctx, "downstream closed")));
+                        return false;
+                    }
+                }
+            }
+            Ok(StreamMsg::Export(_)) => ctx.rx_depth.add(-1),
+            Err(_) => break,
+        }
+    }
+    if !gen.emitter.flush_all() {
+        let _ = ack.send(Err(freeze_abort_error(ctx, "downstream closed")));
+        return false;
+    }
+    let (reply_tx, reply_rx) = channel::<ExportReply>();
+    for port in gen.emitter.fixed_ports() {
+        if !port.send_msg(StreamMsg::Export(reply_tx.clone())) {
+            let _ = ack.send(Err(freeze_abort_error(ctx, "a replica died before the handoff")));
+            return false;
+        }
+    }
+    drop(reply_tx);
+    let from = gen.workers.len();
+    let mut moved: Vec<KeyState> = Vec::new();
+    for _ in 0..from {
+        match reply_rx.recv() {
+            Ok(ExportReply { state: Ok(state), .. }) => moved.extend(state),
+            Ok(ExportReply { replica, state: Err(cause) }) => {
+                let _ = ack.send(Err(Error::Stream(format!(
+                    "stage `{}[r{replica}]` handoff failed: {cause}",
+                    ctx.stage
+                ))));
+                return false;
+            }
+            Err(_) => {
+                let _ = ack.send(Err(freeze_abort_error(ctx, "a replica died mid-handoff")));
+                return false;
+            }
+        }
+    }
+    for w in gen.workers.drain(..) {
+        let _ = w.join();
+    }
+    ctx.par_gauge.set(0);
+    log::info!(
+        "topology {} stage {} frozen ({} key snapshot(s) exported)",
+        ctx.topo,
+        ctx.stage,
+        moved.len()
+    );
+    let _ = ack.send(Ok(moved));
+    true
+}
+
+fn freeze_abort_error(ctx: &RouterCtx, fallback: &str) -> Error {
+    Error::Stream(format!(
+        "stage `{}` freeze aborted: {}",
         ctx.stage,
         ctx.error.get().unwrap_or_else(|| fallback.to_string())
     ))
@@ -1692,10 +1951,35 @@ struct ExchangeCtx {
 /// after every replica has flushed through its own clone — so the
 /// downstream hop closes in drain order.
 fn run_exchange(mut ctx: ExchangeCtx) {
+    let mut frozen = false;
     loop {
         match ctx.control.recv() {
             Ok(Control::Rescale { degree, ack }) => {
-                if !apply_exchange_rescale(&mut ctx, degree, ack) {
+                if frozen {
+                    let _ = ack.send(Err(frozen_error(&ctx.stage)));
+                } else if !apply_exchange_rescale(&mut ctx, degree, Vec::new(), ack) {
+                    break;
+                }
+            }
+            Ok(Control::Inject { state, ack }) => {
+                if frozen {
+                    let _ = ack.send(Err(frozen_error(&ctx.stage)));
+                } else {
+                    let degree = ctx.workers.len();
+                    if !apply_exchange_rescale(&mut ctx, degree, state, ack) {
+                        break;
+                    }
+                }
+            }
+            Ok(Control::Freeze { ack }) => {
+                if frozen {
+                    let _ = ack.send(Err(frozen_error(&ctx.stage)));
+                } else if apply_exchange_freeze(&mut ctx, ack) {
+                    // Parked until the upstream's exchange drop sends
+                    // Shutdown (keeps `out_proto` — the downstream hop
+                    // — alive meanwhile).
+                    frozen = true;
+                } else {
                     break;
                 }
             }
@@ -1719,6 +2003,7 @@ fn run_exchange(mut ctx: ExchangeCtx) {
 fn apply_exchange_rescale(
     ctx: &mut ExchangeCtx,
     degree: usize,
+    seed: Vec<KeyState>,
     ack: SyncSender<Result<RescaleReport>>,
 ) -> bool {
     let from = ctx.workers.len();
@@ -1729,7 +2014,7 @@ fn apply_exchange_rescale(
         ))));
         return true;
     }
-    if degree == from {
+    if degree == from && seed.is_empty() {
         let _ = ack.send(Ok(RescaleReport {
             stage: ctx.stage.clone(),
             from,
@@ -1790,6 +2075,9 @@ fn apply_exchange_rescale(
     for w in ctx.workers.drain(..) {
         let _ = w.join();
     }
+    // Migrated-in state joins the exported state; per-key merge happens
+    // inside `import_state` (it extends, never replaces).
+    moved.extend(seed);
 
     // ---- Re-partition the key space and seed the new generation.
     let moved_keys = moved.len();
@@ -1881,6 +2169,83 @@ fn spawn_exchange_replicas(
 fn exchange_abort_error(ctx: &ExchangeCtx, fallback: &str) -> Error {
     Error::Stream(format!(
         "stage `{}` rescale aborted: {}",
+        ctx.stage,
+        ctx.error.get().unwrap_or_else(|| fallback.to_string())
+    ))
+}
+
+/// Freeze an exchange (elastic linked) stage on its control thread:
+/// hold the port lock (pausing any upstream flush for the handoff's
+/// duration), drain the replicas through handoff markers and hand the
+/// collected per-key state to `ack`. The whole-topology freeze runs
+/// upstream-first, so by the time this fires the upstream workers have
+/// already flushed everything into the replica queues — the markers
+/// land strictly after all data. Returns false only when the stage
+/// must tear down.
+fn apply_exchange_freeze(
+    ctx: &mut ExchangeCtx,
+    ack: SyncSender<Result<Vec<KeyState>>>,
+) -> bool {
+    let Some(exchange) = ctx.exchange.upgrade() else {
+        // Upstream already dropped its last reference: the stage is
+        // draining toward end-of-stream; nothing left to pause.
+        let _ = ack.send(Err(Error::Stream(format!(
+            "stage `{}` is draining; cannot freeze",
+            ctx.stage
+        ))));
+        return true;
+    };
+    let ports = exchange.ports.lock().unwrap();
+    let (reply_tx, reply_rx) = channel::<ExportReply>();
+    for port in ports.iter() {
+        if !port.send_msg(StreamMsg::Export(reply_tx.clone())) {
+            let _ = ack.send(Err(exchange_freeze_abort_error(
+                ctx,
+                "a replica died before the handoff",
+            )));
+            return false;
+        }
+    }
+    drop(reply_tx);
+    let from = ctx.workers.len();
+    let mut moved: Vec<KeyState> = Vec::new();
+    for _ in 0..from {
+        match reply_rx.recv() {
+            Ok(ExportReply { state: Ok(state), .. }) => moved.extend(state),
+            Ok(ExportReply { replica, state: Err(cause) }) => {
+                let _ = ack.send(Err(Error::Stream(format!(
+                    "stage `{}[r{replica}]` handoff failed: {cause}",
+                    ctx.stage
+                ))));
+                return false;
+            }
+            Err(_) => {
+                let _ = ack.send(Err(exchange_freeze_abort_error(
+                    ctx,
+                    "a replica died mid-handoff",
+                )));
+                return false;
+            }
+        }
+    }
+    drop(ports);
+    for w in ctx.workers.drain(..) {
+        let _ = w.join();
+    }
+    ctx.par_gauge.set(0);
+    log::info!(
+        "topology {} stage {} frozen ({} key snapshot(s) exported, direct exchange)",
+        ctx.topo,
+        ctx.stage,
+        moved.len()
+    );
+    let _ = ack.send(Ok(moved));
+    true
+}
+
+fn exchange_freeze_abort_error(ctx: &ExchangeCtx, fallback: &str) -> Error {
+    Error::Stream(format!(
+        "stage `{}` freeze aborted: {}",
         ctx.stage,
         ctx.error.get().unwrap_or_else(|| fallback.to_string())
     ))
@@ -2706,6 +3071,102 @@ mod tests {
                 assert!(prev < s, "key {key} reordered across the exchange re-wire");
             }
         }
+    }
+
+    // ---- Freeze / inject (the migration handoff) ----
+
+    #[test]
+    fn freeze_moves_open_windows_to_a_fresh_topology() {
+        // A whole-topology freeze must drain in-flight tuples and export
+        // open window state un-flushed; injecting the snapshots into a
+        // fresh instance (the "new node" of a migration) must continue
+        // every window exactly where it left off.
+        let engine = StreamEngine::new().batch_capacity(4);
+        let launch = |name: &str| {
+            engine
+                .launch_stages(
+                    name,
+                    vec![
+                        elastic_stage("inc", 1, None, || {
+                            OperatorKind::map("inc", |mut t| {
+                                let v = t.get("V").unwrap_or(0.0);
+                                t.set("V", v + 1.0);
+                                t
+                            })
+                        }),
+                        elastic_stage("w", 2, Some("K"), || {
+                            OperatorKind::window_by("w", "V", 4, "K")
+                        }),
+                    ],
+                )
+                .unwrap()
+        };
+        let h = launch("mig.a");
+        assert_eq!(h.rescaler().stage_order(), vec!["inc".to_string(), "w".to_string()]);
+        let mut seq = 0u64;
+        for _ in 0..2 {
+            for k in 0..6u64 {
+                h.send(Tuple::new(seq, vec![]).with("K", k as f64).with("V", k as f64)).unwrap();
+                seq += 1;
+            }
+        }
+        let (trailing, states) = h.freeze().unwrap();
+        // Every key holds an open window of 2 samples: nothing flushed.
+        assert!(trailing.is_empty(), "no window filled: {trailing:?}");
+        assert_eq!(states.len(), 2);
+        assert_eq!(states[0].0, "inc");
+        assert!(states[0].1.is_empty(), "stateless stage exports nothing");
+        assert_eq!(states[1].0, "w");
+        assert_eq!(states[1].1.len(), 6, "one open window per key");
+        // "Restart on another node" and seed the state back.
+        let h2 = launch("mig.b");
+        for (stage, state) in states {
+            if !state.is_empty() {
+                let report = h2.inject_state(&stage, state).unwrap();
+                assert_eq!(report.moved_keys, 6);
+            }
+        }
+        for _ in 0..2 {
+            for k in 0..6u64 {
+                h2.send(Tuple::new(seq, vec![]).with("K", k as f64).with("V", k as f64))
+                    .unwrap();
+                seq += 1;
+            }
+        }
+        let mut out = h2.finish().unwrap();
+        assert_eq!(out.len(), 6, "each key fills exactly one window of 4");
+        out.sort_by(|a, b| a.get("K").unwrap().total_cmp(&b.get("K").unwrap()));
+        for (k, t) in out.iter().enumerate() {
+            assert_eq!(t.get("K"), Some(k as f64));
+            assert_eq!(t.get("COUNT"), Some(4.0));
+            assert_eq!(t.get("MEAN"), Some(k as f64 + 1.0), "window state lost in migration");
+        }
+    }
+
+    #[test]
+    fn freeze_rejects_static_stages() {
+        let engine = StreamEngine::new();
+        let h = engine.launch("stat", ops(vec![OperatorKind::map("id", |t| t)])).unwrap();
+        let err = h.freeze().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("static") && msg.contains("`id`"), "{msg}");
+    }
+
+    #[test]
+    fn inject_validates_stage_and_empty_inject_is_noop() {
+        let engine = StreamEngine::new();
+        let h = engine
+            .launch_stages(
+                "inj",
+                vec![elastic_stage("m", 2, Some("K"), || OperatorKind::map("m", |t| t))],
+            )
+            .unwrap();
+        assert!(h.inject_state("ghost", Vec::new()).is_err());
+        let report = h.inject_state("m", Vec::new()).unwrap();
+        assert_eq!((report.from, report.to, report.moved_keys), (2, 2, 0));
+        assert_eq!(engine.metrics().counter("stream.inj.m.rescales").get(), 0);
+        h.send(Tuple::new(0, vec![]).with("K", 1.0)).unwrap();
+        assert_eq!(h.finish().unwrap().len(), 1);
     }
 
     #[test]

@@ -33,8 +33,12 @@
 //!   in-process, framed TCP across processes) with zero-loss cascade
 //!   drain. Hops are pumped by a background shipper thread by default
 //!   (encode-once pooled wire buffers, overlap with operator compute);
-//!   `RPULSAR_NETPLANE=sync` selects the legacy synchronous pump. See
-//!   `docs/distributed-stream.md`.
+//!   `RPULSAR_NETPLANE=sync` selects the legacy synchronous pump.
+//!   Placement is bandwidth-aware ([`dist::PlacementCost`]), fragments
+//!   live-migrate between nodes with zero loss
+//!   (`migrate_fragment`), and a [`dist::ClusterPolicy`] drives
+//!   rescale-vs-migrate decisions cluster-wide. See
+//!   `docs/distributed-stream.md` and `docs/elasticity.md`.
 //! - [`pipeline`]: the unified front door — a typed, validated
 //!   [`pipeline::Pipeline`] definition (builder or string-spec
 //!   parse-through) deployable unchanged on any [`pipeline::Deployer`]
@@ -51,7 +55,10 @@ pub mod topology;
 pub mod tuple;
 
 pub use deploy::{ScalePolicy, TopologyManager};
-pub use dist::{plan_placement, DistributedTopologyManager, Fragment, PlacementPlan};
+pub use dist::{
+    plan_placement, plan_placement_with, ClusterPolicy, DistributedTopologyManager, Fragment,
+    MigrationReport, PlacementCost, PlacementPlan, PolicyAction,
+};
 pub use engine::{
     EgressTap, EngineHandle, RescaleReport, Rescaler, StageFactory, StageRuntime, StreamEngine,
     StreamSender,

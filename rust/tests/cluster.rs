@@ -22,7 +22,8 @@ use rpulsar::pipeline::workflow::{
 };
 use rpulsar::stream::deploy::TopologyManager;
 use rpulsar::stream::dist::{
-    tcp_ingress, DistributedTopologyManager, Fragment, PlacementPlan, TcpStageLink,
+    tcp_ingress, ClusterPolicy, DistributedTopologyManager, Fragment, PlacementPlan, PolicyAction,
+    TcpStageLink,
 };
 use rpulsar::stream::engine::StreamEngine;
 use rpulsar::stream::operator::OperatorKind;
@@ -462,6 +463,150 @@ fn tcp_ingress_runs_a_remote_fragment_to_eos() {
     let mut vs: Vec<f64> = out.iter().map(|t| t.get("V").unwrap()).collect();
     vs.sort_by(f64::total_cmp);
     assert_eq!(vs, (1..=100).map(|i| i as f64).collect::<Vec<_>>());
+}
+
+// ---- Elasticity: node join/leave through the policy plane ----
+
+/// The policy driving the join/leave properties: watermark rescaling
+/// disabled (the depth gates can never trip) so every action is a
+/// placement decision, the keyed window hinted CPU-heavy, and the
+/// migrate threshold low enough that a cloud-class joiner wins the
+/// heavy fragment from a Pi (≈9.4 % plan-cost gain).
+fn placement_only_policy() -> ClusterPolicy {
+    ClusterPolicy {
+        high_depth: i64::MAX,
+        low_depth: -1,
+        sustain: 1,
+        migrate_min_gain: 0.05,
+        cpu_heavy: vec!["w".to_string()],
+        ..ClusterPolicy::default()
+    }
+}
+
+#[test]
+fn joined_node_attracts_work_only_through_the_policy_plane() {
+    // A node join is inert by itself; the next policy tick live-migrates
+    // the CPU-heavy window fragment onto the faster joiner exactly when
+    // the chain has one beyond the pinned ingestion fragment — and the
+    // moved stream still matches the single-process ground truth.
+    forall_seeded(0xE1A5_0001, 48, scenario_gen(40), |s: &NoShrink<DistScenario>| {
+        let s = &s.0;
+        let mut dist = DistributedTopologyManager::new();
+        let pis = [NodeId::from_name("pi-a"), NodeId::from_name("pi-b")];
+        dist.add_node(pis[0], DeviceProfile::raspberry_pi());
+        dist.add_node(pis[1], DeviceProfile::raspberry_pi());
+        register_on_dist(&mut dist, s.window);
+        let topo = Topology::parse("t", &s.spec()).unwrap();
+        let plan = s.plan(&topo, &pis);
+        dist.start("t", &s.spec(), &plan).unwrap();
+
+        let inputs = input_tuples(s);
+        let cut = inputs.len() / 2;
+        let (first, rest) = inputs.split_at(cut);
+        for batch in first.chunks(s.batch) {
+            dist.send_batch("t", batch.to_vec()).unwrap();
+        }
+
+        // Joining alone moves nothing.
+        let before: Vec<NodeId> =
+            dist.route("t").unwrap().hops().iter().map(|h| h.node).collect();
+        let joined = NodeId::from_name("cloud-join");
+        dist.add_node(joined, DeviceProfile::cloud_small());
+        let after_join: Vec<NodeId> =
+            dist.route("t").unwrap().hops().iter().map(|h| h.node).collect();
+        if before != after_join {
+            return false;
+        }
+
+        let actions = dist.policy_tick(&placement_only_policy()).unwrap();
+        let expect_pull = CHAINS[s.chain].contains(&"w") && !s.cuts.is_empty();
+        let pulled = actions
+            .iter()
+            .any(|a| matches!(a, PolicyAction::Migrate { to, .. } if *to == joined));
+        if pulled != expect_pull
+            || actions.iter().any(|a| matches!(a, PolicyAction::Rescale { .. }))
+        {
+            return false;
+        }
+        if expect_pull && !dist.route("t").unwrap().hops().iter().any(|h| h.node == joined) {
+            return false;
+        }
+        // A second tick finds nothing better: the policy converges.
+        if !dist.policy_tick(&placement_only_policy()).unwrap().is_empty() {
+            return false;
+        }
+
+        for batch in rest.chunks(s.batch) {
+            dist.send_batch("t", batch.to_vec()).unwrap();
+        }
+        canon(dist.stop("t").unwrap()) == canon(run_local(s))
+    });
+}
+
+#[test]
+fn decommissioned_node_drains_mid_stream_with_zero_loss_and_order() {
+    // Any node may leave mid-stream — the ingestion host included: its
+    // fragments live-migrate to the best surviving hosts, the node
+    // drops out of membership and reachability, and the output multiset
+    // (and, for pass-through chains, per-key order) is untouched.
+    forall_seeded(0xE1A5_0002, 48, scenario_gen(48), |s: &NoShrink<DistScenario>| {
+        let s = &s.0;
+        let mut dist = DistributedTopologyManager::new();
+        let nodes = [
+            NodeId::from_name("pi-a"),
+            NodeId::from_name("cloud-b"),
+            NodeId::from_name("pi-c"),
+        ];
+        dist.add_node(nodes[0], DeviceProfile::raspberry_pi());
+        dist.add_node(nodes[1], DeviceProfile::cloud_small());
+        dist.add_node(nodes[2], DeviceProfile::raspberry_pi());
+        register_on_dist(&mut dist, s.window);
+        let topo = Topology::parse("t", &s.spec()).unwrap();
+        let plan = s.plan(&topo, &nodes);
+        dist.start("t", &s.spec(), &plan).unwrap();
+
+        let inputs = input_tuples(s);
+        let cut = inputs.len() / 2;
+        let (first, rest) = inputs.split_at(cut);
+        for batch in first.chunks(s.batch) {
+            dist.send_batch("t", batch.to_vec()).unwrap();
+        }
+
+        let victim = nodes[s.tuples.len() % nodes.len()];
+        let hosted =
+            dist.route("t").unwrap().hops().iter().filter(|h| h.node == victim).count();
+        let reports = dist.decommission_node(victim, &placement_only_policy()).unwrap();
+        if reports.len() != hosted
+            || dist.nodes().contains(&victim)
+            || dist.network().is_reachable(&victim)
+            || dist.route("t").unwrap().hops().iter().any(|h| h.node == victim)
+        {
+            return false;
+        }
+
+        for batch in rest.chunks(s.batch) {
+            dist.send_batch("t", batch.to_vec()).unwrap();
+        }
+        let out = dist.stop("t").unwrap();
+        if matches!(s.chain, 0 | 1) {
+            // Pass-through chains: zero loss and per-key SEQN order
+            // survive the decommission handoff.
+            if out.len() != s.tuples.len() {
+                return false;
+            }
+            let mut last: std::collections::BTreeMap<u64, f64> = std::collections::BTreeMap::new();
+            for t in &out {
+                let key = t.get("K").unwrap() as u64;
+                let seqn = t.get("SEQN").unwrap();
+                if let Some(prev) = last.insert(key, seqn) {
+                    if prev >= seqn {
+                        return false;
+                    }
+                }
+            }
+        }
+        canon(out) == canon(run_local(s))
+    });
 }
 
 #[test]
