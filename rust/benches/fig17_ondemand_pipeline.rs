@@ -28,12 +28,19 @@ use common::{header, smoke_mode};
 use rpulsar::ar::profile::Profile;
 use rpulsar::mmq::pubsub::{Broker, RetirePolicy};
 use rpulsar::mmq::queue::QueueOptions;
+use rpulsar::pipeline::concurrent::TriggerPool;
 use rpulsar::pipeline::lidar::LidarTrace;
-use rpulsar::pipeline::trigger::{TriggerManager, TriggerOptions};
+use rpulsar::pipeline::pool::WarmPolicy;
+use rpulsar::pipeline::trigger::{
+    concurrent_default, AdmissionControl, TriggerManager, TriggerOptions,
+};
 use rpulsar::pipeline::workflow::{
     analytics_spec, register_analytics_stages, run_stream_analytics, trace_tuples,
 };
-use rpulsar::stream::pipeline::Pipeline;
+use rpulsar::stream::deploy::TopologyManager;
+use rpulsar::stream::engine::StreamEngine;
+use rpulsar::stream::operator::{Operator, OperatorKind};
+use rpulsar::stream::pipeline::{Deployer, Pipeline, PipelineStage};
 use rpulsar::stream::tuple::Tuple;
 use std::time::{Duration, Instant};
 
@@ -55,6 +62,7 @@ fn eager() -> TriggerOptions {
             min_age: Duration::ZERO,
         },
         decode_payloads: true,
+        tenant: None,
     }
 }
 
@@ -163,5 +171,247 @@ fn main() {
     assert_eq!(s2.activations, s2.decommissions);
     assert_eq!(s2.tuples_fed as usize, tuples.len(), "the cursor must lose nothing across gaps");
 
+    // ---- Arm 4: serverless at scale (PR 9 burst arm) ----
+    scale_arm(smoke);
+
     println!("\nfig17 OK");
+}
+
+// ---- Scale arm: thousands of bindings, concurrent plane, warm pools ----
+
+/// Tiny-segment broker for the burst arm: thousands of topics at the
+/// default 8 MiB segment size would map tens of GiB; 4 KiB segments
+/// keep the whole topic fleet resident in a few hundred MiB.
+fn scale_broker(name: &str) -> Broker {
+    let dir = std::env::temp_dir()
+        .join("rpulsar-fig17")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    Broker::new(QueueOptions { dir, segment_bytes: 1 << 12, max_segments: 2, sync_every: 0 })
+}
+
+/// Stateless `X += 1` relay — cheap enough that the measured cost is
+/// the activation machinery, not the operator.
+fn inc_pipeline(name: &str) -> Pipeline {
+    Pipeline::builder(name)
+        .stage(PipelineStage::new("inc").operator(|| {
+            Box::new(OperatorKind::map("inc", |mut t| {
+                let v = t.get("X").unwrap_or(0.0);
+                t.set("X", v + 1.0);
+                t
+            })) as Box<dyn Operator>
+        }))
+        .build()
+        .unwrap()
+}
+
+fn binding(i: usize) -> String {
+    format!("fn{i}")
+}
+
+/// One burst: one tuple per binding, X encoding (binding, round) so
+/// the union output multiset discriminates both.
+fn publish_burst(b: &mut Broker, bindings: usize, round: usize) {
+    for i in 0..bindings {
+        let x = (i * 100 + round) as f64;
+        b.publish(
+            &Profile::parse(&format!("t{i},d")).unwrap(),
+            &Tuple::new((i * 100 + round) as u64, vec![]).with("X", x).encode(),
+        )
+        .unwrap();
+    }
+}
+
+/// The input multiset a run of `rounds` bursts must produce (inc'd).
+fn expected(bindings: usize, rounds: usize) -> Vec<String> {
+    let mut tuples = Vec::new();
+    for round in 0..rounds {
+        for i in 0..bindings {
+            let x = (i * 100 + round) as f64;
+            tuples.push(Tuple::new((i * 100 + round) as u64, vec![]).with("X", x + 1.0));
+        }
+    }
+    canon(&tuples)
+}
+
+fn scale_arm(smoke: bool) {
+    let bindings = if smoke { 64 } else { 10_000 };
+    let rounds = 3usize;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let workers = cores.min(8);
+    let concurrent = concurrent_default();
+    println!(
+        "\n--- scale: {bindings} bindings, {rounds} warm rounds, {cores} cores, \
+         {workers} workers, concurrent={concurrent} ---"
+    );
+
+    // Reference: one pre-deployed standing pipeline fed the union of
+    // the first burst — the semantics every trigger-plane run below
+    // must reproduce.
+    let want_one = expected(bindings, 1);
+    let mut topo = TopologyManager::new(StreamEngine::new());
+    let href = Deployer::deploy(&mut topo, &inc_pipeline("ref")).unwrap();
+    let fed: Vec<Tuple> = (0..bindings)
+        .map(|i| Tuple::new((i * 100) as u64, vec![]).with("X", (i * 100) as f64))
+        .collect();
+    Deployer::send_batch(&mut topo, &href, fed).unwrap();
+    let ref_out = Deployer::stop(&mut topo, &href).unwrap();
+    assert_eq!(canon(&ref_out), want_one, "pre-deployed reference disagrees with the model");
+
+    // (a) Sequential trigger plane, cold every burst.
+    let mut bs = scale_broker("scale-seq");
+    let mut seq = TriggerManager::in_process();
+    seq.set_admission(AdmissionControl::bounded(256));
+    for i in 0..bindings {
+        seq.bind(
+            &mut bs,
+            inc_pipeline(&binding(i)),
+            Profile::parse(&format!("t{i},*")).unwrap(),
+            eager(),
+        )
+        .unwrap();
+    }
+    publish_burst(&mut bs, bindings, 0);
+    let t0 = Instant::now();
+    seq.pump_until_idle(&mut bs, Duration::from_secs(1800)).unwrap();
+    let seq_elapsed = t0.elapsed();
+    let seq_rate = bindings as f64 / seq_elapsed.as_secs_f64().max(1e-9);
+    let seq_cold = seq.metrics().histogram("trigger.cold_start_us").snapshot();
+    let mut seq_out = Vec::new();
+    for i in 0..bindings {
+        seq_out.extend(seq.take_outputs(&binding(i)));
+    }
+    assert_eq!(canon(&seq_out), want_one, "sequential plane lost or mutated tuples");
+    println!(
+        "sequential     {seq_rate:>10.0} act/s   cold-start p50/p95/p99 \
+         {}/{}/{} µs   admitted {}",
+        seq_cold.p50,
+        seq_cold.p95,
+        seq_cold.p99,
+        seq.metrics().counter("trigger.admitted").get()
+    );
+
+    // (b) Concurrent pool, same burst. Skipped when the A/B toggle
+    // pins the sequential plane (RPULSAR_TRIGGERPLANE=sync).
+    let mut conc_rate = None;
+    if concurrent {
+        let mut bc = scale_broker("scale-conc");
+        let mut pool = TriggerPool::in_process(workers);
+        pool.set_admission(AdmissionControl::bounded(256));
+        for i in 0..bindings {
+            pool.bind(
+                &mut bc,
+                inc_pipeline(&binding(i)),
+                Profile::parse(&format!("t{i},*")).unwrap(),
+                eager(),
+            )
+            .unwrap();
+        }
+        publish_burst(&mut bc, bindings, 0);
+        let t0 = Instant::now();
+        pool.pump_until_idle(&mut bc, Duration::from_secs(1800)).unwrap();
+        let elapsed = t0.elapsed();
+        let rate = bindings as f64 / elapsed.as_secs_f64().max(1e-9);
+        let mut out = Vec::new();
+        for i in 0..bindings {
+            out.extend(pool.take_outputs(&binding(i)));
+        }
+        assert_eq!(canon(&out), want_one, "concurrent plane lost or mutated tuples");
+        let ratio = rate / seq_rate.max(1e-9);
+        println!("concurrent     {rate:>10.0} act/s   {workers} workers   {ratio:.2}x sequential");
+        // The headline perf claim needs real cores behind the workers;
+        // smoke sizes and starved runners only print the ratio.
+        if !smoke && cores >= 4 {
+            assert!(
+                ratio >= 2.0,
+                "concurrent plane must beat sequential ≥2x on {cores} cores, got {ratio:.2}x"
+            );
+        }
+        conc_rate = Some(rate);
+    }
+
+    // (c) Warm pools over repeated bursts: first round cold, the rest
+    // must hit the pool; (d) then memory pressure reclaims it.
+    let (warm_snap, cold_snap, evictions) = if concurrent {
+        let mut bw = scale_broker("scale-warm");
+        let mut pool = TriggerPool::in_process(workers);
+        pool.set_warm_policy(WarmPolicy::retain(bindings));
+        for i in 0..bindings {
+            pool.bind(
+                &mut bw,
+                inc_pipeline(&binding(i)),
+                Profile::parse(&format!("t{i},*")).unwrap(),
+                eager(),
+            )
+            .unwrap();
+        }
+        for round in 0..rounds {
+            publish_burst(&mut bw, bindings, round);
+            pool.pump_until_idle(&mut bw, Duration::from_secs(1800)).unwrap();
+        }
+        let cold = pool.metrics().histogram("trigger.cold_start_us").snapshot();
+        let warm = pool.metrics().histogram("trigger.warm_start_us").snapshot();
+        assert_eq!(cold.count as usize, bindings, "exactly one cold start per binding");
+        assert_eq!(
+            warm.count as usize,
+            bindings * (rounds - 1),
+            "every re-activation must be a warm start"
+        );
+        assert!(
+            warm.p99 as f64 <= 0.5 * cold.p99 as f64,
+            "warm p99 ({} µs) must be ≤ half of cold p99 ({} µs)",
+            warm.p99,
+            cold.p99
+        );
+        // (d) Reclaim under memory pressure: coldest-first eviction
+        // down to a handful of residents.
+        let resident = pool.warm_resident();
+        let keep = workers; // ~1 per worker
+        let evicted = pool.reclaim_warm(keep).unwrap();
+        assert!(resident > keep, "the fleet must actually have been parked warm");
+        assert!(evicted > 0 && pool.warm_resident() <= keep.max(1));
+        let evictions = pool.metrics().counter("trigger.pool_evictions").get();
+        assert!(evictions as usize >= evicted);
+        let resident_after = pool.warm_resident();
+        pool.decommission_all().unwrap();
+        let mut out = Vec::new();
+        for i in 0..bindings {
+            out.extend(pool.take_outputs(&binding(i)));
+        }
+        assert_eq!(
+            canon(&out),
+            expected(bindings, rounds),
+            "warm pooling + reclaim must not change outputs"
+        );
+        println!(
+            "warm pool      cold p99 {} µs → warm p99 {} µs   {} warm hits   \
+             reclaim evicted {evicted} (resident {resident} → {resident_after})",
+            cold.p99,
+            warm.p99,
+            pool.metrics().counter("trigger.warm_hits").get(),
+        );
+        (Some(warm), Some(cold), evictions)
+    } else {
+        println!("warm pool      skipped (RPULSAR_TRIGGERPLANE=sync)");
+        (None, None, 0)
+    };
+
+    // Trajectory file for later PRs.
+    let json = format!(
+        "{{\n  \"figure\": \"fig17-scale\",\n  \"smoke\": {smoke},\n  \
+         \"bindings\": {bindings},\n  \"cores\": {cores},\n  \"workers\": {workers},\n  \
+         \"sequential_activations_per_sec\": {seq_rate:.1},\n  \
+         \"sequential_cold_p99_us\": {},\n  \
+         \"concurrent_activations_per_sec\": {},\n  \
+         \"warm_p99_us\": {},\n  \"cold_p99_us\": {},\n  \"pool_evictions\": {evictions}\n}}\n",
+        seq_cold.p99,
+        conc_rate.map_or("null".to_string(), |r| format!("{r:.1}")),
+        warm_snap.map_or("null".to_string(), |s| s.p99.to_string()),
+        cold_snap.map_or("null".to_string(), |s| s.p99.to_string()),
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serverless.json");
+    match std::fs::write(path, json) {
+        Ok(()) => println!("bench trajectory written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

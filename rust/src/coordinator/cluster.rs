@@ -24,6 +24,7 @@ use crate::overlay::geo::GeoPoint;
 use crate::overlay::node_id::NodeId;
 use crate::overlay::quadtree::QuadTree;
 use crate::overlay::ring::{build_converged_tables, simulate_lookup, RoutingTable};
+use crate::pipeline::trigger::{TriggerOptions, TriggerStats};
 use crate::routing::router::ContentRouter;
 use crate::stream::deploy::TopologyManager;
 use crate::stream::dist::{
@@ -31,7 +32,7 @@ use crate::stream::dist::{
     PolicyAction, RouteState,
 };
 use crate::stream::engine::RescaleReport;
-use crate::stream::pipeline::{handle_for, Deployer, Pipeline, PipelineHandle};
+use crate::stream::pipeline::{handle_for, Deployer, Pipeline, PipelineHandle, StageFactory};
 use crate::stream::topology::Topology;
 use crate::stream::tuple::Tuple;
 use std::collections::BTreeMap;
@@ -163,6 +164,45 @@ impl Cluster {
 
     pub fn node_mut(&mut self, id: &NodeId) -> Option<&mut Node> {
         self.nodes.get_mut(id)
+    }
+
+    /// Bind a data-driven pipeline on `node`'s trigger plane: matching
+    /// data reaching that node's broker activates the pipeline on
+    /// demand, and [`Cluster::tick`] (which runs every node's
+    /// housekeeping tick) pumps the lifecycle — a cluster can host
+    /// thousands of bindings with no external pump loop.
+    pub fn bind_trigger(
+        &mut self,
+        node: &NodeId,
+        pipeline: Pipeline,
+        profile: crate::ar::profile::Profile,
+        opts: TriggerOptions,
+    ) -> Result<()> {
+        self.nodes
+            .get_mut(node)
+            .ok_or_else(|| Error::Overlay(format!("unknown node {node}")))?
+            .bind_trigger(pipeline, profile, opts)
+    }
+
+    /// Remove a trigger binding from `node`; returns untaken outputs.
+    pub fn unbind_trigger(&mut self, node: &NodeId, name: &str) -> Result<Vec<Tuple>> {
+        self.nodes
+            .get_mut(node)
+            .ok_or_else(|| Error::Overlay(format!("unknown node {node}")))?
+            .unbind_trigger(name)
+    }
+
+    /// Take everything a node-hosted trigger binding has produced.
+    pub fn trigger_outputs(&mut self, node: &NodeId, name: &str) -> Vec<Tuple> {
+        self.nodes
+            .get_mut(node)
+            .map(|n| n.triggers_mut().take_outputs(name))
+            .unwrap_or_default()
+    }
+
+    /// A node-hosted trigger binding's lifetime counters.
+    pub fn trigger_stats(&self, node: &NodeId, name: &str) -> Option<TriggerStats> {
+        self.nodes.get(node)?.triggers().stats(name)
     }
 
     /// The simulated network (virtual clock, counters).
@@ -1003,6 +1043,19 @@ impl Deployer for Cluster {
     fn is_deployed(&self, handle: &PipelineHandle) -> bool {
         self.streams.contains_key(handle.key())
     }
+
+    fn stage_factory(&self, name: &str) -> Option<StageFactory> {
+        // All-nodes agreement, same reasoning as `validate`: a stage
+        // known to only some nodes must not resolve — placement could
+        // host the fragment anywhere.
+        let mut factories = self.nodes.values().map(|n| n.topologies().factory(name));
+        let first = factories.next().flatten()?;
+        if factories.all(|f| f.is_some()) {
+            Some(first)
+        } else {
+            None
+        }
+    }
 }
 
 /// The `RendezvousNetwork` view used by `ar::primitives::Client`.
@@ -1242,6 +1295,65 @@ mod tests {
         }));
         let retired = c.tick();
         assert_eq!(retired, vec![(ids[0], "sensor,temp".to_string())]);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn trigger_bindings_ride_the_cluster_tick() {
+        use crate::mmq::pubsub::RetirePolicy;
+        use crate::stream::operator::OperatorKind;
+        use std::time::Duration;
+        let mut c = Cluster::new("ctrig", 3, DeviceKind::Native).unwrap();
+        let ids = c.ids();
+        let host = ids[1];
+        c.node_mut(&host).unwrap().topologies_mut().register_stage("inc", || {
+            Box::new(OperatorKind::map("inc", |mut t| {
+                let v = t.get("X").unwrap_or(0.0);
+                t.set("X", v + 1.0);
+                t
+            }))
+        });
+        let eager = TriggerOptions {
+            idle: RetirePolicy {
+                max_publish_idle: Duration::ZERO,
+                max_fetch_idle: Duration::ZERO,
+                min_age: Duration::ZERO,
+            },
+            decode_payloads: true,
+            tenant: None,
+        };
+        c.bind_trigger(
+            &host,
+            Pipeline::parse("incjob", "inc").unwrap(),
+            Profile::parse("drone,*").unwrap(),
+            eager,
+        )
+        .unwrap();
+        c.node_mut(&host)
+            .unwrap()
+            .publish(
+                &Profile::parse("drone,lidar").unwrap(),
+                &Tuple::new(0, vec![]).with("X", 1.0).encode(),
+            )
+            .unwrap();
+        // The cluster's housekeeping pass activates, feeds and (after
+        // the backlog drains) decommissions — no external pump loop.
+        for _ in 0..200 {
+            c.tick();
+            let active = c.node(&host).unwrap().triggers().is_active("incjob");
+            let stats = c.trigger_stats(&host, "incjob").unwrap();
+            if !active && stats.activations > 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let stats = c.trigger_stats(&host, "incjob").unwrap();
+        assert_eq!(stats.activations, 1);
+        assert_eq!(stats.tuples_fed, 1);
+        let out = c.trigger_outputs(&host, "incjob");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("X"), Some(2.0));
+        assert!(c.unbind_trigger(&host, "incjob").unwrap().is_empty());
         c.shutdown().unwrap();
     }
 

@@ -14,9 +14,11 @@ use crate::mmq::queue::QueueOptions;
 use crate::overlay::geo::GeoPoint;
 use crate::overlay::node_id::NodeId;
 use crate::overlay::ring::{Contact, RoutingTable};
+use crate::pipeline::trigger::{TriggerManager, TriggerOptions};
 use crate::storage::lsm::{LsmOptions, LsmStore};
 use crate::stream::deploy::TopologyManager;
 use crate::stream::engine::StreamEngine;
+use crate::stream::pipeline::Pipeline;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
@@ -30,7 +32,11 @@ pub struct Node {
     rendezvous: RendezvousPoint,
     broker: Broker,
     store: LsmStore,
-    topologies: TopologyManager,
+    /// The trigger plane wrapping this node's topology manager: every
+    /// deployed topology (AR-started or trigger-activated) runs on the
+    /// same in-process executor; trigger bindings additionally scale
+    /// to zero and back as data arrives ([`Node::bind_trigger`]).
+    triggers: TriggerManager<TopologyManager>,
     metrics: Registry,
     device: ThrottledDisk,
     /// Broker topic-retirement policy swept by [`Node::tick`]. `None`
@@ -72,8 +78,10 @@ impl Node {
         };
         let store = LsmStore::open(lsm_opts, device.clone())?;
 
-        let topologies =
-            TopologyManager::new(StreamEngine::with_metrics(metrics.clone()));
+        let triggers = TriggerManager::with_metrics(
+            TopologyManager::new(StreamEngine::with_metrics(metrics.clone())),
+            metrics.clone(),
+        );
 
         Ok(Node {
             config,
@@ -83,7 +91,7 @@ impl Node {
             rendezvous: RendezvousPoint::with_metrics(metrics.clone()),
             broker,
             store,
-            topologies,
+            triggers,
             metrics,
             device,
             retire_policy: None,
@@ -150,6 +158,7 @@ impl Node {
     /// reactions for the caller (cluster/transport) to propagate.
     pub fn handle_ar(&mut self, msg: &ArMessage) -> Result<Vec<Reaction>> {
         let reactions = self.rendezvous.receive(msg)?;
+        let mut notified = false;
         for r in &reactions {
             match r {
                 Reaction::Stored { profile } => {
@@ -160,18 +169,33 @@ impl Node {
                 }
                 Reaction::StartTopology { function_profile, topology } => {
                     let key = function_profile.render();
-                    if !self.topologies.running().contains(&key) {
-                        self.topologies.start(&key, topology)?;
+                    let topologies = self.triggers.deployer_mut();
+                    if !topologies.running().contains(&key) {
+                        topologies.start(&key, topology)?;
                         self.metrics.counter("node.topologies_started").inc();
                     }
                 }
                 Reaction::StopTopology { function_profile } => {
                     let key = function_profile.render();
-                    if self.topologies.running().contains(&key) {
-                        self.topologies.stop(&key)?;
+                    let topologies = self.triggers.deployer_mut();
+                    if topologies.running().contains(&key) {
+                        topologies.stop(&key)?;
                     }
                 }
+                Reaction::ConsumerNotified { .. } => notified = true,
                 _ => {}
+            }
+        }
+        // Data reached a consumer: give the trigger plane a pass right
+        // away instead of waiting for the next housekeeping tick —
+        // this is what activates bound pipelines at data-arrival
+        // latency on an AR-driven node. Trigger faults are the
+        // bindings' problem (counted + logged), not the AR path's.
+        if notified && !self.triggers.bound().is_empty() {
+            let name = self.config.name.clone();
+            let Node { triggers, broker, .. } = self;
+            if let Err(e) = triggers.pump(broker) {
+                log::warn!("node {name}: trigger pump: {e}");
             }
         }
         Ok(reactions)
@@ -198,7 +222,7 @@ impl Node {
 
     /// Topology manager access (stage registration).
     pub fn topologies_mut(&mut self) -> &mut TopologyManager {
-        &mut self.topologies
+        self.triggers.deployer_mut()
     }
 
     /// Shared topology-manager access: feeding, non-blocking egress /
@@ -206,7 +230,45 @@ impl Node {
     /// `try_send_batch` all take `&self`) — what the cluster's
     /// cross-node stage hops drive.
     pub fn topologies(&self) -> &TopologyManager {
-        &self.topologies
+        self.triggers.deployer()
+    }
+
+    /// The node's trigger plane: bindings, stats, admission and
+    /// warm-pool knobs.
+    pub fn triggers(&self) -> &TriggerManager<TopologyManager> {
+        &self.triggers
+    }
+
+    pub fn triggers_mut(&mut self) -> &mut TriggerManager<TopologyManager> {
+        &mut self.triggers
+    }
+
+    /// Bind `pipeline` to `profile` on this node's broker: matching
+    /// data arriving here (published locally or routed in by the
+    /// cluster) activates the pipeline on demand, and the node's own
+    /// [`Node::tick`] / AR reaction path pumps the lifecycle — no
+    /// external pump loop needed.
+    pub fn bind_trigger(
+        &mut self,
+        pipeline: Pipeline,
+        profile: crate::ar::profile::Profile,
+        opts: TriggerOptions,
+    ) -> Result<()> {
+        let Node { triggers, broker, .. } = self;
+        triggers.bind(broker, pipeline, profile, opts)
+    }
+
+    /// Remove a trigger binding; returns its untaken outputs.
+    pub fn unbind_trigger(&mut self, name: &str) -> Result<Vec<crate::stream::tuple::Tuple>> {
+        let Node { triggers, broker, .. } = self;
+        triggers.unbind(broker, name)
+    }
+
+    /// One explicit trigger pass (tests/benches; [`Node::tick`] and
+    /// the AR reaction path call this implicitly).
+    pub fn pump_triggers(&mut self) -> Result<()> {
+        let Node { triggers, broker, .. } = self;
+        triggers.pump(broker)
     }
 
     /// Rendezvous state access (tests).
@@ -299,6 +361,17 @@ impl Node {
         if !expired.is_empty() {
             self.metrics.counter("node.regs_expired").add(expired.len() as u64);
         }
+        // Pump the trigger plane every tick: activates bindings whose
+        // topics accumulated backlog, feeds live ones, decommissions
+        // past the idle watermark. Faults are per-binding (counted in
+        // `trigger.faults`), never a tick failure.
+        if !self.triggers.bound().is_empty() {
+            let name = self.config.name.clone();
+            let Node { triggers, broker, .. } = self;
+            if let Err(e) = triggers.pump(broker) {
+                log::warn!("node {name}: trigger pump: {e}");
+            }
+        }
         let Some(policy) = self.retire_policy.clone() else {
             return Ok(Vec::new());
         };
@@ -320,9 +393,11 @@ impl Node {
         }
     }
 
-    /// Graceful shutdown: stop topologies, flush queue + store.
+    /// Graceful shutdown: decommission trigger activations and drain
+    /// warm pools, stop topologies, flush queue + store.
     pub fn shutdown(&mut self) -> Result<()> {
-        self.topologies.stop_all()?;
+        self.triggers.decommission_all()?;
+        self.triggers.deployer_mut().stop_all()?;
         self.broker.flush(true)?;
         self.store.flush()?;
         Ok(())
@@ -465,6 +540,109 @@ mod tests {
         assert!(n.remove_registration("ephemeral"));
         assert!(!n.remove_registration("ephemeral"), "second withdrawal is a no-op");
         assert!(n.broker_mut().fetch("ephemeral", 10).is_err());
+        n.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trigger_bindings_ride_the_node_tick() {
+        use crate::stream::tuple::Tuple;
+        let dir = tmp("trig");
+        let mut n = Node::with_name_at("rp-g", 0.0, 0.0, &dir).unwrap();
+        n.topologies_mut().register_stage("inc", || {
+            Box::new(crate::stream::operator::OperatorKind::map("inc", |mut t| {
+                let v = t.get("X").unwrap_or(0.0);
+                t.set("X", v + 1.0);
+                t
+            }))
+        });
+        let eager = TriggerOptions {
+            idle: RetirePolicy {
+                max_publish_idle: Duration::ZERO,
+                max_fetch_idle: Duration::ZERO,
+                min_age: Duration::ZERO,
+            },
+            decode_payloads: true,
+            tenant: None,
+        };
+        n.bind_trigger(
+            Pipeline::parse("incjob", "inc").unwrap(),
+            Profile::parse("drone,*").unwrap(),
+            eager,
+        )
+        .unwrap();
+        // Backlog arrives; the next housekeeping tick activates the
+        // binding with no external pump loop.
+        n.publish(
+            &Profile::parse("drone,lidar").unwrap(),
+            &Tuple::new(0, vec![]).with("X", 1.0).encode(),
+        )
+        .unwrap();
+        n.tick().unwrap();
+        assert!(n.triggers().is_active("incjob"), "tick must activate on backlog");
+        // Further ticks drain and decommission back to zero.
+        for _ in 0..200 {
+            n.tick().unwrap();
+            if !n.triggers().is_active("incjob") {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(!n.triggers().is_active("incjob"));
+        let out = n.triggers_mut().take_outputs("incjob");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("X"), Some(2.0));
+        assert_eq!(n.triggers().stats("incjob").unwrap().activations, 1);
+        // Unbind returns nothing further and the node shuts down clean.
+        assert!(n.unbind_trigger("incjob").unwrap().is_empty());
+        n.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn consumer_notified_reaction_pumps_triggers() {
+        use crate::stream::tuple::Tuple;
+        let dir = tmp("trig-ar");
+        let mut n = Node::with_name_at("rp-h", 0.0, 0.0, &dir).unwrap();
+        n.topologies_mut().register_stage("inc", || {
+            Box::new(crate::stream::operator::OperatorKind::map("inc", |mut t| {
+                let v = t.get("X").unwrap_or(0.0);
+                t.set("X", v + 1.0);
+                t
+            }))
+        });
+        n.bind_trigger(
+            Pipeline::parse("incjob", "inc").unwrap(),
+            Profile::parse("drone,*").unwrap(),
+            TriggerOptions::default(),
+        )
+        .unwrap();
+        // An AR consumer waits on matching data, so a later Store
+        // emits ConsumerNotified — the node piggybacks a trigger pump
+        // on that reaction instead of waiting for the next tick.
+        n.handle_ar(
+            &ArMessage::builder()
+                .set_header(Profile::parse("drone,li*").unwrap())
+                .set_sender("watcher")
+                .set_action(Action::NotifyData)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        n.publish(
+            &Profile::parse("drone,lidar").unwrap(),
+            &Tuple::new(0, vec![]).with("X", 1.0).encode(),
+        )
+        .unwrap();
+        assert!(!n.triggers().is_active("incjob"));
+        let reactions = n.handle_ar(&store_msg("drone,lidar", b"img")).unwrap();
+        assert!(reactions
+            .iter()
+            .any(|r| matches!(r, Reaction::ConsumerNotified { .. })));
+        assert!(
+            n.triggers().is_active("incjob"),
+            "ConsumerNotified must pump the trigger plane"
+        );
         n.shutdown().unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }

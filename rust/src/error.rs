@@ -61,6 +61,13 @@ pub enum Error {
     /// Operation timed out.
     #[error("timeout: {0}")]
     Timeout(String),
+
+    /// Activation refused by trigger-plane admission control (the
+    /// in-flight cap is reached). Structured, not a hang: the refused
+    /// binding's broker cursor has not advanced, so retrying after
+    /// capacity frees loses nothing.
+    #[error("admission refused: {0}")]
+    Admission(String),
 }
 
 /// Crate-wide result alias.
@@ -84,6 +91,7 @@ impl Error {
             Error::NotFound(_) => "not_found",
             Error::NotRunning(_) => "not_running",
             Error::Timeout(_) => "timeout",
+            Error::Admission(_) => "admission",
         }
     }
 }
@@ -97,6 +105,7 @@ mod tests {
         assert_eq!(Error::Parse("x".into()).kind(), "parse");
         assert_eq!(Error::NotFound("y".into()).kind(), "not_found");
         assert_eq!(Error::NotRunning("z".into()).kind(), "not_running");
+        assert_eq!(Error::Admission("full".into()).kind(), "admission");
         let io = Error::from(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
         assert_eq!(io.kind(), "io");
     }

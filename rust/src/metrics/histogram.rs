@@ -29,6 +29,7 @@ pub struct Snapshot {
     pub mean: f64,
     pub p50: u64,
     pub p90: u64,
+    pub p95: u64,
     pub p99: u64,
     pub p999: u64,
 }
@@ -98,6 +99,7 @@ impl Histogram {
                 mean: 0.0,
                 p50: 0,
                 p90: 0,
+                p95: 0,
                 p99: 0,
                 p999: 0,
             };
@@ -124,6 +126,7 @@ impl Histogram {
             mean: sum as f64 / count as f64,
             p50: pct(0.50),
             p90: pct(0.90),
+            p95: pct(0.95),
             p99: pct(0.99),
             p999: pct(0.999),
         }
@@ -183,7 +186,7 @@ mod tests {
             h.record(i);
         }
         let s = h.snapshot();
-        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.p999);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.p999);
         // p50 of uniform 1..=10k should be around 5000 (±7%).
         assert!((s.p50 as f64 - 5_000.0).abs() / 5_000.0 < 0.1, "p50={}", s.p50);
     }

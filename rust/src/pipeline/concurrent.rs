@@ -1,0 +1,758 @@
+//! Concurrent trigger plane: a shared worker pool pumping many
+//! bindings off one [`MatchingPlane`] at once.
+//!
+//! The sequential [`TriggerManager`](super::trigger::TriggerManager)
+//! activates bindings one at a time from the caller's thread — fine
+//! for a dozen bindings, a bottleneck for a node hosting thousands
+//! (the ISSUE's serverless-at-scale gap: every cold start serializes
+//! behind every other). [`TriggerPool`] splits the plane in two:
+//!
+//! - The **front end** (caller thread) owns the broker. Each
+//!   [`TriggerPool::pump`] pass runs the *same* gating as the
+//!   sequential pump — fair-scheduler order, `lag`-gate, admission
+//!   cap with pass-start snapshot semantics — then fetches each
+//!   admitted binding's batch and dispatches it to the binding's
+//!   worker. Because gating and fetching stay single-threaded on the
+//!   broker owner, concurrent and sequential mode take *identical*
+//!   admission decisions and deliver identical batches; only the
+//!   lifecycle work (deploy, feed, poll, park) runs in parallel.
+//! - Each **worker** owns a full
+//!   [`BindingRunner`](super::trigger::BindingRunner) — deployer,
+//!   bindings, warm pool — built from a deployer factory invoked *on*
+//!   the worker thread (so non-`Send` deployers work). A binding
+//!   lives on exactly one worker (round-robin at bind), so per-binding
+//!   order is preserved: batches for one binding execute in dispatch
+//!   order on one thread.
+//!
+//! **Faults** follow the shipper idiom (PR 6): a panicking step is
+//! caught per-worker (`catch_unwind`), the binding is torn down
+//! best-effort, the pass reports the first error, and every other
+//! binding keeps processing — first-fault-wins without poisoning the
+//! pool. `rust/tests/failure_injection.rs` drives this with the
+//! `RPULSAR_TEST_TRIGGER_PANIC` hook.
+//!
+//! Output equivalence (concurrent ≡ sequential, multiset per binding)
+//! is property-tested in `rust/tests/trigger_scale.rs` and
+//! pre-validated by `python/sims/trigger_scale_sim.py`; throughput is
+//! measured by the fig17 10k-binding burst arm.
+
+use crate::ar::profile::Profile;
+use crate::ar::shard::MatchingPlane;
+use crate::error::{Error, Result};
+use crate::metrics::Registry;
+use crate::pipeline::pool::WarmPolicy;
+use crate::pipeline::trigger::{
+    AdmissionControl, BindingRunner, FairScheduler, StepEvents, TriggerOptions, TriggerStats,
+    FETCH_MAX,
+};
+use crate::stream::deploy::TopologyManager;
+use crate::stream::engine::StreamEngine;
+use crate::stream::pipeline::{Deployer, Pipeline};
+use crate::stream::tuple::Tuple;
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Test hook (failure injection): when this env var equals a binding
+/// name, the worker stepping that binding panics mid-activation.
+const TRIGGER_PANIC_ENV: &str = "RPULSAR_TEST_TRIGGER_PANIC";
+
+/// Commands the front end sends to a worker.
+enum Cmd {
+    Attach { pipeline: Pipeline, opts: TriggerOptions, reply: Sender<Result<String>> },
+    Detach { name: String, reply: Sender<Result<Vec<Tuple>>> },
+    Step { name: String, msgs: Vec<(String, Arc<[u8]>)> },
+    NoteRejection { name: String },
+    Stats { name: String, reply: Sender<Option<TriggerStats>> },
+    TakeOutputs { name: String, reply: Sender<Vec<Tuple>> },
+    DecommissionAll { reply: Sender<(Result<()>, Vec<(String, Vec<Tuple>)>)> },
+    SweepWarm,
+    SetWarmPolicy { policy: WarmPolicy },
+    WarmResident { reply: Sender<usize> },
+    ReclaimWarm { keep: usize, reply: Sender<Result<usize>> },
+    Shutdown,
+}
+
+/// One step's outcome, shipped back to the front end.
+struct StepResult {
+    name: String,
+    events: Result<StepEvents>,
+    /// Every non-empty output buffer on the worker — carries the
+    /// stepped binding's outputs *and* any park-eviction tails routed
+    /// to sibling bindings.
+    outputs: Vec<(String, Vec<Tuple>)>,
+}
+
+/// Front-end view of one binding.
+struct BindingMeta {
+    consumer: String,
+    tenant: String,
+    worker: usize,
+    active: bool,
+}
+
+struct Worker {
+    tx: Sender<Cmd>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// The concurrent trigger plane: same binding lifecycle and admission
+/// semantics as [`TriggerManager`](super::trigger::TriggerManager),
+/// pumped by a shared pool of worker threads. Selected by default
+/// where a pool is composed in (see
+/// [`TRIGGERPLANE_ENV`](super::trigger::TRIGGERPLANE_ENV)).
+pub struct TriggerPool {
+    workers: Vec<Worker>,
+    results: Receiver<StepResult>,
+    bindings: BTreeMap<String, BindingMeta>,
+    outputs: BTreeMap<String, Vec<Tuple>>,
+    admission: AdmissionControl,
+    sched: FairScheduler,
+    metrics: Registry,
+    next_worker: usize,
+}
+
+impl TriggerPool {
+    /// A pool of `workers` threads, each owning a deployer built by
+    /// `make` *on the worker thread* (register stages inside `make`;
+    /// the deployer itself never crosses threads).
+    pub fn new<D, F>(workers: usize, make: F) -> Self
+    where
+        D: Deployer + 'static,
+        F: Fn() -> D + Send + Sync + 'static,
+    {
+        Self::with_metrics(workers, Registry::new(), make)
+    }
+
+    /// Same, sharing a metrics registry (node/bench composition).
+    pub fn with_metrics<D, F>(workers: usize, metrics: Registry, make: F) -> Self
+    where
+        D: Deployer + 'static,
+        F: Fn() -> D + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
+        let make = Arc::new(make);
+        let (res_tx, res_rx) = channel::<StepResult>();
+        let mut pool = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (cmd_tx, cmd_rx) = channel::<Cmd>();
+            let make = Arc::clone(&make);
+            let metrics = metrics.clone();
+            let res_tx = res_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("trigger-worker-{w}"))
+                .spawn(move || worker_loop(cmd_rx, res_tx, make(), metrics))
+                .expect("spawn trigger worker");
+            pool.push(Worker { tx: cmd_tx, join: Some(join) });
+        }
+        TriggerPool {
+            workers: pool,
+            results: res_rx,
+            bindings: BTreeMap::new(),
+            outputs: BTreeMap::new(),
+            admission: AdmissionControl::default(),
+            sched: FairScheduler::new(),
+            metrics,
+            next_worker: 0,
+        }
+    }
+
+    /// The common composition: each worker gets its own in-process
+    /// executor surface.
+    pub fn in_process(workers: usize) -> Self {
+        Self::new(workers, || TopologyManager::new(StreamEngine::new()))
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Bound in-flight activations across the whole pool (default:
+    /// unlimited). Same snapshot semantics as the sequential pump.
+    pub fn set_admission(&mut self, admission: AdmissionControl) {
+        self.admission = admission;
+    }
+
+    pub fn admission(&self) -> &AdmissionControl {
+        &self.admission
+    }
+
+    /// Opt every worker's warm pool into retention. `capacity` applies
+    /// *per worker* — a pool of 4 workers with capacity 8 holds up to
+    /// 32 warm pipelines.
+    pub fn set_warm_policy(&mut self, policy: WarmPolicy) {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::SetWarmPolicy { policy: policy.clone() });
+        }
+    }
+
+    /// Parked warm pipelines across all workers.
+    pub fn warm_resident(&self) -> usize {
+        let mut total = 0;
+        for w in &self.workers {
+            let (tx, rx) = channel();
+            if w.tx.send(Cmd::WarmResident { reply: tx }).is_ok() {
+                total += rx.recv().unwrap_or(0);
+            }
+        }
+        total
+    }
+
+    /// Memory-pressure reclaim: shrink the pool-wide warm population
+    /// to at most `keep`. Quotas are assigned worker-by-worker
+    /// (each worker evicts its own coldest-first); cross-worker
+    /// coldness is approximated, not total-ordered — reclaim is a
+    /// pressure valve, not a strict LRU.
+    pub fn reclaim_warm(&mut self, keep: usize) -> Result<usize> {
+        let residents: Vec<usize> = self
+            .workers
+            .iter()
+            .map(|w| {
+                let (tx, rx) = channel();
+                if w.tx.send(Cmd::WarmResident { reply: tx }).is_ok() {
+                    rx.recv().unwrap_or(0)
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let mut budget = keep;
+        let mut evicted_total = 0;
+        for (w, &resident) in self.workers.iter().zip(&residents) {
+            let keep_here = budget.min(resident);
+            budget -= keep_here;
+            if resident > keep_here {
+                let (tx, rx) = channel();
+                w.tx.send(Cmd::ReclaimWarm { keep: keep_here, reply: tx })
+                    .map_err(|_| Error::Stream("trigger worker gone".into()))?;
+                evicted_total += rx
+                    .recv()
+                    .map_err(|_| Error::Stream("trigger worker gone".into()))??;
+            }
+        }
+        Ok(evicted_total)
+    }
+
+    /// Lifetime admitted activations per tenant.
+    pub fn admitted_by_tenant(&self) -> &BTreeMap<String, u64> {
+        self.sched.admitted()
+    }
+
+    /// Bind `pipeline` to `profile` on the next worker (round-robin).
+    /// Validation happens on the worker's own deploy surface at bind
+    /// time, same contract as the sequential manager.
+    pub fn bind(
+        &mut self,
+        broker: &mut impl MatchingPlane,
+        pipeline: Pipeline,
+        profile: Profile,
+        opts: TriggerOptions,
+    ) -> Result<()> {
+        if self.bindings.contains_key(pipeline.name()) {
+            return Err(Error::Stream(format!(
+                "pipeline `{}` is already bound",
+                pipeline.name()
+            )));
+        }
+        let name = pipeline.name().to_string();
+        let tenant = opts.tenant.clone().unwrap_or_else(|| name.clone());
+        let worker = self.next_worker % self.workers.len();
+        let (tx, rx) = channel();
+        self.workers[worker]
+            .tx
+            .send(Cmd::Attach { pipeline, opts, reply: tx })
+            .map_err(|_| Error::Stream("trigger worker gone".into()))?;
+        let consumer = rx
+            .recv()
+            .map_err(|_| Error::Stream("trigger worker gone".into()))??;
+        self.next_worker = self.next_worker.wrapping_add(1);
+        broker.subscribe(&consumer, profile);
+        self.bindings
+            .insert(name, BindingMeta { consumer, tenant, worker, active: false });
+        Ok(())
+    }
+
+    /// Remove a binding: unsubscribe, decommission on its worker, and
+    /// return everything it produced that was not yet taken.
+    pub fn unbind(&mut self, broker: &mut impl MatchingPlane, name: &str) -> Result<Vec<Tuple>> {
+        let meta = self
+            .bindings
+            .get(name)
+            .ok_or_else(|| Error::NotFound(format!("no trigger binding `{name}`")))?;
+        broker.unsubscribe(&meta.consumer);
+        let (tx, rx) = channel();
+        self.workers[meta.worker]
+            .tx
+            .send(Cmd::Detach { name: name.to_string(), reply: tx })
+            .map_err(|_| Error::Stream("trigger worker gone".into()))?;
+        let mut out = rx
+            .recv()
+            .map_err(|_| Error::Stream("trigger worker gone".into()))??;
+        self.bindings.remove(name);
+        if let Some(buffered) = self.outputs.remove(name) {
+            let mut all = buffered;
+            all.extend(out);
+            out = all;
+        }
+        Ok(out)
+    }
+
+    /// One concurrent lifecycle pass: gate and fetch every binding on
+    /// this thread (fair order, lag-gate, snapshot admission — the
+    /// exact sequential semantics), dispatch admitted batches to the
+    /// workers, then collect every step result. A faulted binding is
+    /// torn down on its worker and reported; the other bindings still
+    /// complete their pass (first error wins).
+    pub fn pump(&mut self, broker: &mut impl MatchingPlane) -> Result<()> {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::SweepWarm);
+        }
+        let roster: Vec<(String, String)> = self
+            .bindings
+            .iter()
+            .map(|(n, m)| (n.clone(), m.tenant.clone()))
+            .collect();
+        let order = self.sched.order(&roster);
+        // Snapshot semantics: slots freed mid-pass open up next pass,
+        // so the decisions below match the sequential pump exactly.
+        let mut active_now = self.bindings.values().filter(|m| m.active).count();
+        let mut first_err: Option<Error> = None;
+        let mut dispatched = 0usize;
+        for name in order {
+            let Some(meta) = self.bindings.get(&name) else { continue };
+            if !meta.active {
+                let lag = match broker.lag(&meta.consumer) {
+                    Ok(lag) => lag,
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                        continue;
+                    }
+                };
+                if lag == 0 {
+                    continue;
+                }
+                if !self.admission.admit(active_now) {
+                    let _ = self.workers[meta.worker]
+                        .tx
+                        .send(Cmd::NoteRejection { name: name.clone() });
+                    if self.admission.strict {
+                        first_err.get_or_insert(self.admission.refusal(&name, active_now));
+                    }
+                    continue;
+                }
+                active_now += 1;
+                self.sched.charge(&meta.tenant.clone());
+                self.metrics.counter("trigger.admitted").inc();
+            }
+            let msgs = match broker.fetch(&meta.consumer, FETCH_MAX) {
+                Ok(msgs) => msgs,
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                    continue;
+                }
+            };
+            let worker = meta.worker;
+            if self.workers[worker]
+                .tx
+                .send(Cmd::Step { name: name.clone(), msgs })
+                .is_err()
+            {
+                first_err.get_or_insert(Error::Stream(format!(
+                    "trigger worker gone stepping `{name}`"
+                )));
+                continue;
+            }
+            dispatched += 1;
+        }
+        for _ in 0..dispatched {
+            let res = self
+                .results
+                .recv()
+                .map_err(|_| Error::Stream("trigger worker gone".into()))?;
+            for (owner, tail) in res.outputs {
+                self.outputs.entry(owner).or_default().extend(tail);
+            }
+            let meta = self.bindings.get_mut(&res.name);
+            match res.events {
+                Ok(ev) => {
+                    if let Some(meta) = meta {
+                        if ev.activated {
+                            meta.active = true;
+                        }
+                        if ev.decommissioned {
+                            meta.active = false;
+                        }
+                    }
+                }
+                Err(e) => {
+                    if let Some(meta) = meta {
+                        meta.active = false;
+                    }
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Total unfetched backlog across every binding's consumer.
+    pub fn backlog(&self, broker: &impl MatchingPlane) -> Result<u64> {
+        let mut total = 0;
+        for meta in self.bindings.values() {
+            total += broker.lag(&meta.consumer)?;
+        }
+        Ok(total)
+    }
+
+    /// Keep pumping until every binding is idle *and* every backlog is
+    /// drained, or `timeout` elapses; errors surface immediately.
+    pub fn pump_until_idle(
+        &mut self,
+        broker: &mut impl MatchingPlane,
+        timeout: Duration,
+    ) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.pump(broker)?;
+            if self.active().is_empty() && self.backlog(broker)? == 0 {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::Timeout(format!(
+                    "trigger bindings still active after {timeout:?}: {:?}",
+                    self.active()
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Force every activation to zero *now* and drain all warm pools.
+    /// Outputs stay buffered for [`Self::take_outputs`].
+    pub fn decommission_all(&mut self) -> Result<()> {
+        let mut first_err: Option<Error> = None;
+        let mut replies = Vec::new();
+        for w in &self.workers {
+            let (tx, rx) = channel();
+            if w.tx.send(Cmd::DecommissionAll { reply: tx }).is_ok() {
+                replies.push(rx);
+            } else {
+                first_err.get_or_insert(Error::Stream("trigger worker gone".into()));
+            }
+        }
+        for rx in replies {
+            match rx.recv() {
+                Ok((res, outputs)) => {
+                    for (owner, tail) in outputs {
+                        self.outputs.entry(owner).or_default().extend(tail);
+                    }
+                    if let Err(e) = res {
+                        first_err.get_or_insert(e);
+                    }
+                }
+                Err(_) => {
+                    first_err.get_or_insert(Error::Stream("trigger worker gone".into()));
+                }
+            }
+        }
+        for meta in self.bindings.values_mut() {
+            meta.active = false;
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Take everything a binding's activations have produced so far
+    /// (step results already shipped here, plus anything still
+    /// buffered on the worker).
+    pub fn take_outputs(&mut self, name: &str) -> Vec<Tuple> {
+        let mut out = self.outputs.remove(name).unwrap_or_default();
+        if let Some(meta) = self.bindings.get(name) {
+            let (tx, rx) = channel();
+            if self.workers[meta.worker]
+                .tx
+                .send(Cmd::TakeOutputs { name: name.to_string(), reply: tx })
+                .is_ok()
+            {
+                if let Ok(tail) = rx.recv() {
+                    out.extend(tail);
+                }
+            }
+        }
+        out
+    }
+
+    /// A binding's lifetime counters (fetched from its worker).
+    pub fn stats(&self, name: &str) -> Option<TriggerStats> {
+        let meta = self.bindings.get(name)?;
+        let (tx, rx) = channel();
+        self.workers[meta.worker]
+            .tx
+            .send(Cmd::Stats { name: name.to_string(), reply: tx })
+            .ok()?;
+        rx.recv().ok()?
+    }
+
+    /// Whether a binding currently has a live activation.
+    pub fn is_active(&self, name: &str) -> bool {
+        self.bindings.get(name).is_some_and(|m| m.active)
+    }
+
+    /// Names of bindings with live activations.
+    pub fn active(&self) -> Vec<String> {
+        self.bindings
+            .iter()
+            .filter(|(_, m)| m.active)
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    /// All binding names.
+    pub fn bound(&self) -> Vec<String> {
+        self.bindings.keys().cloned().collect()
+    }
+}
+
+impl std::fmt::Debug for TriggerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TriggerPool(workers={}, bindings={}, active={})",
+            self.workers.len(),
+            self.bindings.len(),
+            self.active().len()
+        )
+    }
+}
+
+impl Drop for TriggerPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+/// The worker loop: owns one [`BindingRunner`] and serves commands
+/// until shutdown. Steps are panic-isolated.
+fn worker_loop<D: Deployer>(
+    cmds: Receiver<Cmd>,
+    results: Sender<StepResult>,
+    deployer: D,
+    metrics: Registry,
+) {
+    let mut runner = BindingRunner::new(deployer, metrics);
+    while let Ok(cmd) = cmds.recv() {
+        match cmd {
+            Cmd::Attach { pipeline, opts, reply } => {
+                let _ = reply.send(runner.attach(pipeline, opts));
+            }
+            Cmd::Detach { name, reply } => {
+                let _ = reply.send(runner.detach(&name));
+            }
+            Cmd::Step { name, msgs } => {
+                let events = catch_unwind(AssertUnwindSafe(|| {
+                    if std::env::var(TRIGGER_PANIC_ENV).as_deref() == Ok(name.as_str()) {
+                        panic!("injected trigger worker panic");
+                    }
+                    runner.step(&name, msgs)
+                }))
+                .unwrap_or_else(|payload| {
+                    let cause = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "unknown panic".to_string());
+                    Err(Error::Stream(format!(
+                        "trigger worker panicked pumping `{name}`: {cause}"
+                    )))
+                });
+                if events.is_err() {
+                    runner.fail(&name);
+                }
+                let outputs = runner.drain_outputs();
+                if results.send(StepResult { name, events, outputs }).is_err() {
+                    break; // front end gone — shut down
+                }
+            }
+            Cmd::NoteRejection { name } => runner.note_rejection(&name),
+            Cmd::Stats { name, reply } => {
+                let _ = reply.send(runner.stats(&name));
+            }
+            Cmd::TakeOutputs { name, reply } => {
+                let _ = reply.send(runner.take_outputs(&name));
+            }
+            Cmd::DecommissionAll { reply } => {
+                let res = runner.decommission_all();
+                let _ = reply.send((res, runner.drain_outputs()));
+            }
+            Cmd::SweepWarm => {
+                if let Err(e) = runner.sweep_warm() {
+                    log::warn!("trigger worker: warm sweep: {e}");
+                }
+            }
+            Cmd::SetWarmPolicy { policy } => runner.set_warm_policy(policy),
+            Cmd::WarmResident { reply } => {
+                let _ = reply.send(runner.warm_resident());
+            }
+            Cmd::ReclaimWarm { keep, reply } => {
+                let _ = reply.send(runner.reclaim_warm(keep));
+            }
+            Cmd::Shutdown => {
+                if let Err(e) = runner.decommission_all() {
+                    log::warn!("trigger worker: shutdown decommission: {e}");
+                }
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mmq::pubsub::{Broker, RetirePolicy};
+    use crate::mmq::queue::QueueOptions;
+    use crate::stream::operator::{Operator, OperatorKind};
+    use crate::stream::pipeline::PipelineStage;
+
+    fn broker(name: &str) -> Broker {
+        let dir = std::env::temp_dir()
+            .join("rpulsar-trigger-pool-tests")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Broker::new(QueueOptions { dir, segment_bytes: 1 << 16, max_segments: 4, sync_every: 0 })
+    }
+
+    fn p(s: &str) -> Profile {
+        Profile::parse(s).unwrap()
+    }
+
+    fn inc_pipeline(name: &str) -> Pipeline {
+        Pipeline::builder(name)
+            .stage(PipelineStage::new("inc").operator(|| {
+                Box::new(OperatorKind::map("inc", |mut t| {
+                    let v = t.get("X").unwrap_or(0.0);
+                    t.set("X", v + 1.0);
+                    t
+                })) as Box<dyn Operator>
+            }))
+            .build()
+            .unwrap()
+    }
+
+    fn eager() -> TriggerOptions {
+        TriggerOptions {
+            idle: RetirePolicy {
+                max_publish_idle: Duration::ZERO,
+                max_fetch_idle: Duration::ZERO,
+                min_age: Duration::ZERO,
+            },
+            decode_payloads: true,
+            tenant: None,
+        }
+    }
+
+    #[test]
+    fn pool_runs_many_bindings_and_loses_nothing() {
+        let mut broker = broker("fanout");
+        let mut pool = TriggerPool::in_process(3);
+        for i in 0..8 {
+            pool.bind(
+                &mut broker,
+                inc_pipeline(&format!("job{i}")),
+                p(&format!("s{i},*")),
+                eager(),
+            )
+            .unwrap();
+        }
+        for i in 0..8u64 {
+            for k in 0..5u64 {
+                broker
+                    .publish(
+                        &p(&format!("s{i},t")),
+                        &Tuple::new(k, vec![]).with("X", (i * 10 + k) as f64).encode(),
+                    )
+                    .unwrap();
+            }
+        }
+        pool.pump_until_idle(&mut broker, Duration::from_secs(20)).unwrap();
+        for i in 0..8u64 {
+            let name = format!("job{i}");
+            let mut xs: Vec<f64> =
+                pool.take_outputs(&name).iter().filter_map(|t| t.get("X")).collect();
+            xs.sort_by(f64::total_cmp);
+            let want: Vec<f64> = (0..5).map(|k| (i * 10 + k) as f64 + 1.0).collect();
+            assert_eq!(xs, want, "binding {name} lost or corrupted tuples");
+            assert_eq!(pool.stats(&name).unwrap().tuples_fed, 5);
+        }
+        assert!(pool.active().is_empty());
+    }
+
+    #[test]
+    fn pool_admission_defers_and_retry_drains() {
+        let mut broker = broker("pool-admission");
+        let mut pool = TriggerPool::in_process(2);
+        pool.set_admission(AdmissionControl::bounded(1));
+        for i in 0..4 {
+            pool.bind(
+                &mut broker,
+                inc_pipeline(&format!("job{i}")),
+                p(&format!("s{i},*")),
+                eager(),
+            )
+            .unwrap();
+        }
+        for i in 0..4u64 {
+            broker
+                .publish(&p(&format!("s{i},t")), &Tuple::new(0, vec![]).with("X", 1.0).encode())
+                .unwrap();
+        }
+        // A single pass admits exactly one activation…
+        pool.pump(&mut broker).unwrap();
+        assert!(pool.active().len() <= 1);
+        assert!(pool.metrics().counter("trigger.rejected").get() >= 1);
+        // …and retries drain everything with nothing lost.
+        pool.pump_until_idle(&mut broker, Duration::from_secs(20)).unwrap();
+        for i in 0..4u64 {
+            assert_eq!(pool.take_outputs(&format!("job{i}")).len(), 1);
+        }
+    }
+
+    #[test]
+    fn pool_unbind_and_decommission_all() {
+        let mut broker = broker("pool-unbind");
+        let mut pool = TriggerPool::in_process(2);
+        pool.bind(&mut broker, inc_pipeline("a"), p("a,*"), TriggerOptions::default())
+            .unwrap();
+        pool.bind(&mut broker, inc_pipeline("b"), p("b,*"), TriggerOptions::default())
+            .unwrap();
+        broker.publish(&p("a,t"), &Tuple::new(0, vec![]).with("X", 1.0).encode()).unwrap();
+        broker.publish(&p("b,t"), &Tuple::new(0, vec![]).with("X", 2.0).encode()).unwrap();
+        pool.pump(&mut broker).unwrap();
+        assert_eq!(pool.active().len(), 2);
+        let out = pool.unbind(&mut broker, "a").unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(pool.unbind(&mut broker, "a").is_err());
+        pool.decommission_all().unwrap();
+        assert!(pool.active().is_empty());
+        assert_eq!(pool.take_outputs("b").len(), 1);
+    }
+}

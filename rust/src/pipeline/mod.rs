@@ -12,12 +12,24 @@
 //!   [`crate::stream::pipeline::Pipeline`] bound to an AR profile
 //!   cold-starts when matching data reaches the broker, feeds from its
 //!   topic cursor, and scales back to zero after an idle watermark
-//!   (the serverless half of "data-driven pipelines").
+//!   (the serverless half of "data-driven pipelines"). Admission
+//!   control and per-tenant fair scheduling live here too.
+//! - [`concurrent`]: the scaled trigger plane — a shared worker pool
+//!   pumping thousands of bindings concurrently with the same
+//!   admission/fairness/output semantics as the sequential manager
+//!   (`RPULSAR_TRIGGERPLANE=sync` selects the baseline).
+//! - [`pool`]: warm pipeline pools — bounded retention of
+//!   decommissioned pipelines so re-activation approaches re-attach
+//!   latency instead of a full cold start.
 
+pub mod concurrent;
 pub mod lidar;
+pub mod pool;
 pub mod trigger;
 pub mod workflow;
 
+pub use concurrent::TriggerPool;
 pub use lidar::{LidarImage, LidarTrace};
-pub use trigger::{TriggerManager, TriggerOptions, TriggerStats};
+pub use pool::{WarmPolicy, WarmPool};
+pub use trigger::{AdmissionControl, TriggerManager, TriggerOptions, TriggerStats};
 pub use workflow::{BaselineKind, DisasterRecoveryPipeline, PipelineReport};

@@ -1,0 +1,265 @@
+//! Warm pipeline pools: cold-start engineering for the trigger plane.
+//!
+//! A cold start pays the full [`Deployer::deploy`] path — validation,
+//! factory resolution, operator construction, channel wiring, replica
+//! threads. The serverless-edge literature treats that latency as the
+//! decisive metric, so the trigger plane keeps a bounded pool of
+//! *warm* pipelines: deployed-but-idle instances a re-activation can
+//! take over in O(map lookup) instead of a full deploy.
+//!
+//! **Mechanism → policy split** (the [`RetirePolicy`] idiom): the pool
+//! is pure mechanism; [`WarmPolicy`] decides capacity, whether
+//! stateful pipelines get a pre-built standby, and when a parked entry
+//! has sat too long. The default policy has `capacity: 0` — warm
+//! pooling is strictly opt-in and every pre-existing trigger lifecycle
+//! (deploy on data, stop on idle) is unchanged without it.
+//!
+//! **Statefulness rule.** A *stateless* pipeline is parked live: its
+//! replicas keep running, in-flight outputs are surfaced on the next
+//! activation, and taking it back is a pure re-attach. A *stateful*
+//! pipeline can NOT be parked live — open windows would carry state
+//! across what the contract says is a scale-to-zero boundary, and the
+//! warm path would diverge from the cold path (whose
+//! [`Deployer::stop`] flushes partial windows through
+//! `Operator::finish`). So a stateful park performs the flushing stop
+//! (the tail goes to the binding's outputs, exactly as a cold
+//! decommission would), and — when `prebuild` is on — deploys a
+//! *fresh standby* off the activation path, so the next activation
+//! still skips the deploy. Warm ≡ cold output equivalence is
+//! property-tested in `rust/tests/trigger_scale.rs` and pre-validated
+//! by `python/sims/trigger_scale_sim.py`.
+//!
+//! **Eviction.** Capacity overflow, idle expiry ([`WarmPool::sweep`])
+//! and memory-pressure reclaim ([`WarmPool::reclaim`]) all evict
+//! coldest-first (oldest `parked_at`). An evicted entry is stopped
+//! through the deployer and its drain tail is routed back to the
+//! owning binding — eviction never loses tuples. Counted in
+//! `trigger.pool_evictions`.
+//!
+//! [`RetirePolicy`]: crate::mmq::pubsub::RetirePolicy
+
+use crate::error::Result;
+use crate::metrics::Registry;
+use crate::stream::pipeline::{Deployer, Pipeline, PipelineHandle};
+use crate::stream::tuple::Tuple;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Policy half of the warm pool: how many decommissioned pipelines to
+/// retain, whether stateful pipelines get a pre-built standby, and how
+/// long a parked entry may sit before the sweep evicts it.
+#[derive(Debug, Clone)]
+pub struct WarmPolicy {
+    /// Max parked pipelines. `0` disables warm pooling entirely
+    /// (every decommission is a plain stop — the pre-PR-9 lifecycle).
+    pub capacity: usize,
+    /// Deploy a fresh standby when a *stateful* pipeline is parked
+    /// (its live instance must flush, see the module docs). Off, a
+    /// stateful decommission is a plain stop and the next activation
+    /// is cold.
+    pub prebuild: bool,
+    /// Parked entries older than this are evicted by
+    /// [`WarmPool::sweep`] — warmth has a shelf life; an edge node
+    /// should not hold replicas for a tenant that went quiet an hour
+    /// ago.
+    pub max_idle: Duration,
+}
+
+impl Default for WarmPolicy {
+    fn default() -> Self {
+        WarmPolicy::disabled()
+    }
+}
+
+impl WarmPolicy {
+    /// No warm pooling (the default): decommission means stop.
+    pub fn disabled() -> Self {
+        WarmPolicy { capacity: 0, prebuild: true, max_idle: Duration::from_secs(300) }
+    }
+
+    /// Retain up to `capacity` warm pipelines with the default
+    /// prebuild/expiry knobs.
+    pub fn retain(capacity: usize) -> Self {
+        WarmPolicy { capacity, ..WarmPolicy::disabled() }
+    }
+
+    /// Whether a pool currently holding `resident` entries may accept
+    /// one more without evicting.
+    pub fn admits(&self, resident: usize) -> bool {
+        resident < self.capacity
+    }
+
+    /// Whether an entry parked `parked` ago has expired.
+    pub fn expired(&self, parked: Duration) -> bool {
+        parked >= self.max_idle
+    }
+}
+
+struct WarmEntry {
+    handle: PipelineHandle,
+    parked_at: Instant,
+}
+
+/// What a park produced: the flushed tail of the parked pipeline (to
+/// the owner's outputs) plus the drain tails of anything evicted to
+/// make room (routed to *their* owners by the caller).
+pub struct ParkOutcome {
+    /// Flush tail of the pipeline being parked (empty for a stateless
+    /// live-park).
+    pub tail: Vec<Tuple>,
+    /// `(binding, drain tail)` for each entry evicted by capacity.
+    pub evicted: Vec<(String, Vec<Tuple>)>,
+}
+
+/// Mechanism half: the bounded map of parked pipelines, keyed by
+/// binding name. Owned by a `BindingRunner`; all mutations that touch
+/// live topologies take the runner's deployer.
+pub struct WarmPool {
+    policy: WarmPolicy,
+    entries: BTreeMap<String, WarmEntry>,
+    metrics: Registry,
+}
+
+impl WarmPool {
+    pub fn new(policy: WarmPolicy, metrics: Registry) -> Self {
+        WarmPool { policy, entries: BTreeMap::new(), metrics }
+    }
+
+    /// Swap the policy (capacity shrink applies lazily: the next
+    /// park/sweep/reclaim enforces it).
+    pub fn set_policy(&mut self, policy: WarmPolicy) {
+        self.policy = policy;
+    }
+
+    pub fn policy(&self) -> &WarmPolicy {
+        &self.policy
+    }
+
+    /// Parked entries right now.
+    pub fn resident(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Take `name`'s warm pipeline for re-activation, if parked. The
+    /// caller verifies the handle is still deployed (and counts
+    /// `trigger.warm_hits`) — the pool only owns residency.
+    pub fn take(&mut self, name: &str) -> Option<PipelineHandle> {
+        self.entries.remove(name).map(|e| e.handle)
+    }
+
+    /// Park a decommissioning activation. With `capacity: 0` this is a
+    /// plain stop. Stateless pipelines park live; stateful ones flush
+    /// (stop) and, under `prebuild`, a fresh standby is deployed and
+    /// parked in their place. Over-capacity evicts coldest-first.
+    pub fn park(
+        &mut self,
+        deployer: &mut dyn Deployer,
+        name: &str,
+        handle: PipelineHandle,
+        stateful: bool,
+        pipeline: &Pipeline,
+    ) -> Result<ParkOutcome> {
+        if self.policy.capacity == 0 {
+            return Ok(ParkOutcome { tail: deployer.stop(&handle)?, evicted: Vec::new() });
+        }
+        let (tail, parked) = if stateful {
+            let tail = deployer.stop(&handle)?;
+            if !self.policy.prebuild {
+                return Ok(ParkOutcome { tail, evicted: Vec::new() });
+            }
+            (tail, deployer.deploy(pipeline)?)
+        } else {
+            (Vec::new(), handle)
+        };
+        self.entries
+            .insert(name.to_string(), WarmEntry { handle: parked, parked_at: Instant::now() });
+        let mut evicted = Vec::new();
+        while self.entries.len() > self.policy.capacity {
+            if let Some((owner, tail)) = self.evict_coldest(deployer)? {
+                evicted.push((owner, tail));
+            }
+        }
+        Ok(ParkOutcome { tail, evicted })
+    }
+
+    /// Evict entries whose warmth has expired ([`WarmPolicy::max_idle`]).
+    pub fn sweep(&mut self, deployer: &mut dyn Deployer) -> Result<Vec<(String, Vec<Tuple>)>> {
+        let mut evicted = Vec::new();
+        loop {
+            let Some(name) = self
+                .coldest()
+                .filter(|n| self.policy.expired(self.entries[n].parked_at.elapsed()))
+            else {
+                break;
+            };
+            let entry = self.entries.remove(&name).expect("coldest exists");
+            self.metrics.counter("trigger.pool_evictions").inc();
+            evicted.push((name, deployer.stop(&entry.handle)?));
+        }
+        Ok(evicted)
+    }
+
+    /// Memory-pressure reclaim: evict coldest-first down to `keep`
+    /// resident entries. Returns how many were evicted plus their
+    /// drain tails.
+    pub fn reclaim(
+        &mut self,
+        deployer: &mut dyn Deployer,
+        keep: usize,
+    ) -> Result<(usize, Vec<(String, Vec<Tuple>)>)> {
+        let mut evicted = Vec::new();
+        while self.entries.len() > keep {
+            if let Some((owner, tail)) = self.evict_coldest(deployer)? {
+                evicted.push((owner, tail));
+            }
+        }
+        Ok((evicted.len(), evicted))
+    }
+
+    /// Stop every parked pipeline (shutdown / decommission-all). Not
+    /// counted as evictions — this is teardown, not pressure.
+    pub fn drain_all(&mut self, deployer: &mut dyn Deployer) -> Result<Vec<(String, Vec<Tuple>)>> {
+        let mut out = Vec::new();
+        let entries = std::mem::take(&mut self.entries);
+        for (name, entry) in entries {
+            out.push((name, deployer.stop(&entry.handle)?));
+        }
+        Ok(out)
+    }
+
+    /// Drop `name`'s parked entry (unbind): stop it, return its tail.
+    pub fn remove(
+        &mut self,
+        deployer: &mut dyn Deployer,
+        name: &str,
+    ) -> Result<Option<Vec<Tuple>>> {
+        match self.entries.remove(name) {
+            Some(entry) => Ok(Some(deployer.stop(&entry.handle)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn coldest(&self) -> Option<String> {
+        self.entries
+            .iter()
+            .min_by_key(|(_, e)| e.parked_at)
+            .map(|(n, _)| n.clone())
+    }
+
+    fn evict_coldest(
+        &mut self,
+        deployer: &mut dyn Deployer,
+    ) -> Result<Option<(String, Vec<Tuple>)>> {
+        let Some(name) = self.coldest() else { return Ok(None) };
+        let entry = self.entries.remove(&name).expect("coldest exists");
+        self.metrics.counter("trigger.pool_evictions").inc();
+        let tail = deployer.stop(&entry.handle)?;
+        Ok(Some((name, tail)))
+    }
+}
+
+impl std::fmt::Debug for WarmPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WarmPool(resident={}, capacity={})", self.entries.len(), self.policy.capacity)
+    }
+}

@@ -7,6 +7,29 @@
 //! platform serverless rather than just streaming: compute exists only
 //! while data flows.
 //!
+//! Since PR 9 the plane is built to host *thousands* of bindings:
+//!
+//! - **Admission control** ([`AdmissionControl`]): in-flight
+//!   activations are bounded. A refused binding is *not fetched* — its
+//!   broker cursor never advances — so refusal + retry loses nothing;
+//!   strict mode surfaces the refusal as a structured
+//!   [`Error::Admission`] instead of a silent deferral.
+//! - **Per-tenant fair scheduling** ([`FairScheduler`]): the pump
+//!   visits bindings tenant-interleaved, tenants ordered by lifetime
+//!   admitted activations (deficit) with a rotating tie-break, and
+//!   each tenant's own binding list rotates too — one hot tenant
+//!   cannot starve the rest, and the pre-PR-9 fixed-map-order
+//!   starvation is gone from the sequential pump as well.
+//! - **Warm pools** ([`WarmPolicy`], `pipeline/pool.rs`): opt-in
+//!   retention of decommissioned pipelines so re-activation
+//!   approaches re-attach latency instead of a full deploy.
+//! - **Concurrent pumping** (`pipeline/concurrent.rs`): the
+//!   [`TriggerPool`](crate::pipeline::concurrent::TriggerPool) worker
+//!   pool runs the same per-binding lifecycle (this module's
+//!   `BindingRunner`) across threads; `RPULSAR_TRIGGERPLANE=sync`
+//!   ([`TRIGGERPLANE_ENV`]) keeps the sequential manager as the A/B
+//!   baseline.
+//!
 //! **Cursor contract.** A binding subscribes its own broker consumer
 //! (`trigger:<pipeline>`), so delivery rides the broker's at-least-once
 //! cursor machinery: data published while the pipeline is idle is *not
@@ -14,8 +37,9 @@
 //! order is preserved end-to-end (per-topic FIFO × the executor's
 //! keyed-shuffle guarantee). Activation → feed → idle-decommission →
 //! re-activation therefore loses no tuples (property-tested in
-//! `rust/tests/trigger_plane.rs`, pre-validated by
-//! `python/sims/trigger_sim.py`).
+//! `rust/tests/trigger_plane.rs` and `rust/tests/trigger_scale.rs`,
+//! pre-validated by `python/sims/trigger_sim.py` and
+//! `python/sims/trigger_scale_sim.py`).
 //!
 //! **Idle watermark.** Scale-to-zero reuses the broker's
 //! [`RetirePolicy`] watermark machinery verbatim: `decide(age,
@@ -32,26 +56,42 @@
 //! lost; the broker cursor has already advanced — at-least-once ends
 //! at the mouth of a faulted pipeline).
 //!
-//! Metrics: `trigger.activations`, `trigger.decommissions`,
-//! `trigger.faults`, `trigger.tuples_fed` (plus per-binding
-//! [`TriggerStats`] with the last cold-start latency). Measured by
-//! `benches/fig17_ondemand_pipeline.rs` against a pre-deployed
-//! topology.
+//! Metrics: `trigger.{activations,decommissions,faults,tuples_fed}`
+//! plus the scale counters `trigger.{admitted,rejected,warm_hits,
+//! warm_misses,pool_evictions}` and the `trigger.cold_start_us` /
+//! `trigger.warm_start_us` latency histograms (p50/p95/p99). Measured
+//! by `benches/fig17_ondemand_pipeline.rs` against a pre-deployed
+//! topology; the full contract is `docs/serverless-scale.md`.
 
 use crate::ar::profile::Profile;
 use crate::ar::shard::MatchingPlane;
 use crate::error::{Error, Result};
 use crate::metrics::Registry;
 use crate::mmq::pubsub::RetirePolicy;
+use crate::pipeline::pool::{WarmPolicy, WarmPool};
 use crate::stream::deploy::TopologyManager;
 use crate::stream::engine::StreamEngine;
 use crate::stream::pipeline::{Deployer, Pipeline, PipelineHandle};
 use crate::stream::tuple::Tuple;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Max messages fetched per binding per pump pass.
-const FETCH_MAX: usize = 1024;
+pub(crate) const FETCH_MAX: usize = 1024;
+
+/// Env var selecting the trigger-plane pump mode for composed surfaces
+/// (benches, `Node`): anything but `"sync"` (including unset) means
+/// the concurrent worker pool is the default where one is available;
+/// `"sync"` keeps the sequential [`TriggerManager::pump`] as the A/B
+/// baseline. Same idiom as `RPULSAR_NETPLANE`.
+pub const TRIGGERPLANE_ENV: &str = "RPULSAR_TRIGGERPLANE";
+
+/// Whether composed surfaces should default to the concurrent pump
+/// (see [`TRIGGERPLANE_ENV`]).
+pub fn concurrent_default() -> bool {
+    !matches!(std::env::var(TRIGGERPLANE_ENV).as_deref(), Ok("sync"))
+}
 
 /// Per-binding activation knobs.
 #[derive(Debug, Clone)]
@@ -68,27 +108,166 @@ pub struct TriggerOptions {
     /// payload bytes become a fresh tuple with a binding-assigned
     /// sequence number.
     pub decode_payloads: bool,
+    /// The tenant this binding belongs to, for fair scheduling under
+    /// burst ([`FairScheduler`]). `None` makes the binding its own
+    /// tenant — the pre-multi-tenant behavior.
+    pub tenant: Option<String>,
 }
 
 impl Default for TriggerOptions {
     fn default() -> Self {
-        TriggerOptions { idle: RetirePolicy::default(), decode_payloads: true }
+        TriggerOptions {
+            idle: RetirePolicy::default(),
+            decode_payloads: true,
+            tenant: None,
+        }
     }
 }
 
 /// Lifetime counters of one binding.
 #[derive(Debug, Clone, Default)]
 pub struct TriggerStats {
-    /// Cold starts performed.
+    /// Activations performed (cold starts + warm starts).
     pub activations: u64,
+    /// Activations served from the warm pool (subset of
+    /// `activations`).
+    pub warm_starts: u64,
     /// Scale-to-zero decommissions (idle watermark or unbind).
     pub decommissions: u64,
     /// Activations torn down by a pipeline fault.
     pub faults: u64,
+    /// Activation attempts refused by admission control (each later
+    /// retried from an unmoved cursor).
+    pub rejections: u64,
     /// Matching tuples fed across all activations.
     pub tuples_fed: u64,
     /// Deploy latency of the most recent cold start.
     pub last_cold_start: Option<Duration>,
+}
+
+/// Bounded in-flight activations: the trigger plane's back door
+/// against activation storms. Mechanism only — the bound is the
+/// policy knob. A refused binding's cursor has not advanced, so the
+/// next pump retries it with nothing lost; `strict` additionally
+/// surfaces each refusal as a structured [`Error::Admission`] from
+/// `pump` (the pass still completes — refusal never tears a binding
+/// down).
+#[derive(Debug, Clone)]
+pub struct AdmissionControl {
+    /// Max concurrently live activations across the plane. Slots
+    /// freed by a mid-pass decommission become available on the
+    /// *next* pass (snapshot semantics — identical decisions in
+    /// sequential and concurrent mode).
+    pub max_active: usize,
+    /// Surface refusals as [`Error::Admission`] from `pump` instead
+    /// of silent deferral.
+    pub strict: bool,
+}
+
+impl Default for AdmissionControl {
+    fn default() -> Self {
+        AdmissionControl::unlimited()
+    }
+}
+
+impl AdmissionControl {
+    /// No bound (the default — pre-PR-9 behavior).
+    pub fn unlimited() -> Self {
+        AdmissionControl { max_active: usize::MAX, strict: false }
+    }
+
+    /// Bound in-flight activations; refusals defer silently.
+    pub fn bounded(max_active: usize) -> Self {
+        AdmissionControl { max_active, strict: false }
+    }
+
+    /// Bound in-flight activations; refusals surface as
+    /// [`Error::Admission`].
+    pub fn strict(max_active: usize) -> Self {
+        AdmissionControl { max_active, strict: true }
+    }
+
+    /// May another activation start while `active_now` are live?
+    pub fn admit(&self, active_now: usize) -> bool {
+        active_now < self.max_active
+    }
+
+    /// The structured refusal.
+    pub fn refusal(&self, name: &str, active_now: usize) -> Error {
+        Error::Admission(format!(
+            "binding `{name}`: {active_now}/{} activations in flight; \
+             cursor unmoved, retry next pump",
+            self.max_active
+        ))
+    }
+}
+
+/// Per-tenant fair pass order: tenants sorted by lifetime admitted
+/// activations (deficit first), ties broken by a rotating start, each
+/// tenant's own binding list rotated per pass, then interleaved one
+/// binding per tenant per round. Under a tight admission cap this
+/// guarantees a bursting tenant cannot starve the rest; with every
+/// binding its own tenant it degrades to plain rotation — the
+/// round-robin fix for the old fixed-map-order sequential pump.
+#[derive(Debug, Default)]
+pub struct FairScheduler {
+    rr: u64,
+    rr_in_tenant: BTreeMap<String, u64>,
+    admitted: BTreeMap<String, u64>,
+}
+
+impl FairScheduler {
+    pub fn new() -> Self {
+        FairScheduler::default()
+    }
+
+    /// Produce this pass's visit order from `(binding, tenant)` pairs
+    /// (callers pass them name-sorted; `BTreeMap` iteration does).
+    pub fn order(&mut self, roster: &[(String, String)]) -> Vec<String> {
+        let mut groups: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+        for (name, tenant) in roster {
+            groups.entry(tenant.as_str()).or_default().push(name.as_str());
+        }
+        let mut tenants: Vec<&str> = groups.keys().copied().collect();
+        if !tenants.is_empty() {
+            let rot = (self.rr % tenants.len() as u64) as usize;
+            tenants.rotate_left(rot);
+        }
+        self.rr = self.rr.wrapping_add(1);
+        // Stable sort: deficit decides, the rotation above breaks ties.
+        tenants.sort_by_key(|t| self.admitted.get(*t).copied().unwrap_or(0));
+        for t in &tenants {
+            let names = groups.get_mut(*t).expect("tenant grouped above");
+            let ctr = self.rr_in_tenant.entry((*t).to_string()).or_insert(0);
+            let rot = (*ctr % names.len() as u64) as usize;
+            names.rotate_left(rot);
+            *ctr = ctr.wrapping_add(1);
+        }
+        let mut out = Vec::with_capacity(roster.len());
+        let mut round = 0usize;
+        loop {
+            let before = out.len();
+            for t in &tenants {
+                if let Some(n) = groups[*t].get(round) {
+                    out.push((*n).to_string());
+                }
+            }
+            if out.len() == before {
+                return out;
+            }
+            round += 1;
+        }
+    }
+
+    /// Record an admitted activation against `tenant`'s deficit.
+    pub fn charge(&mut self, tenant: &str) {
+        *self.admitted.entry(tenant.to_string()).or_insert(0) += 1;
+    }
+
+    /// Lifetime admitted activations per tenant (fairness assertions).
+    pub fn admitted(&self) -> &BTreeMap<String, u64> {
+        &self.admitted
+    }
 }
 
 /// A live activation.
@@ -102,6 +281,10 @@ struct Active {
 struct Binding {
     pipeline: Pipeline,
     consumer: String,
+    tenant: String,
+    /// Any stage's operator is stateful (probed at bind; unresolvable
+    /// stages count as stateful). Decides live-park vs flush-park.
+    stateful: bool,
     opts: TriggerOptions,
     active: Option<Active>,
     outputs: Vec<Tuple>,
@@ -109,15 +292,348 @@ struct Binding {
     stats: TriggerStats,
 }
 
-/// Binds pipelines to data profiles over any [`Deployer`] surface and
-/// drives the activate/feed/decommission lifecycle. Single-threaded by
-/// design: [`TriggerManager::pump`] is called from whatever loop owns
-/// the broker (a node's housekeeping tick, a bench driver), so
-/// activation decisions are deterministic and test-friendly.
-pub struct TriggerManager<D: Deployer> {
+/// What one [`BindingRunner::step`] did — the concurrent pool mirrors
+/// caller-side state from these.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct StepEvents {
+    pub activated: bool,
+    pub decommissioned: bool,
+}
+
+/// The per-binding lifecycle engine: owns the deployer, the bindings
+/// and the warm pool, and performs one binding's
+/// fetch-result → activate → feed → poll → decommission step. It
+/// never touches the broker — fetching stays with whoever owns the
+/// broker (the sequential [`TriggerManager`] or the
+/// [`TriggerPool`](crate::pipeline::concurrent::TriggerPool) front
+/// end), which is what lets the same runner serve both pumps.
+pub(crate) struct BindingRunner<D: Deployer> {
     deployer: D,
     bindings: BTreeMap<String, Binding>,
+    warm: WarmPool,
     metrics: Registry,
+}
+
+impl<D: Deployer> BindingRunner<D> {
+    pub(crate) fn new(deployer: D, metrics: Registry) -> Self {
+        let warm = WarmPool::new(WarmPolicy::default(), metrics.clone());
+        BindingRunner { deployer, bindings: BTreeMap::new(), warm, metrics }
+    }
+
+    pub(crate) fn deployer(&self) -> &D {
+        &self.deployer
+    }
+
+    pub(crate) fn deployer_mut(&mut self) -> &mut D {
+        &mut self.deployer
+    }
+
+    pub(crate) fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Validate, probe statefulness and register the binding. Returns
+    /// the consumer name the caller must subscribe on its broker.
+    pub(crate) fn attach(&mut self, pipeline: Pipeline, opts: TriggerOptions) -> Result<String> {
+        if self.bindings.contains_key(pipeline.name()) {
+            return Err(Error::Stream(format!(
+                "pipeline `{}` is already bound",
+                pipeline.name()
+            )));
+        }
+        self.deployer.validate(&pipeline)?;
+        let stateful = pipeline.stages().iter().any(|s| {
+            s.factory_ref()
+                .cloned()
+                .or_else(|| self.deployer.stage_factory(s.name()))
+                .map(|f| f().stateful())
+                .unwrap_or(true)
+        });
+        let consumer = format!("trigger:{}", pipeline.name());
+        let tenant = opts.tenant.clone().unwrap_or_else(|| pipeline.name().to_string());
+        self.bindings.insert(
+            pipeline.name().to_string(),
+            Binding {
+                pipeline,
+                consumer: consumer.clone(),
+                tenant,
+                stateful,
+                opts,
+                active: None,
+                outputs: Vec::new(),
+                raw_seq: 0,
+                stats: TriggerStats::default(),
+            },
+        );
+        Ok(consumer)
+    }
+
+    /// Remove a binding: decommission any live activation (zero-loss
+    /// drain), evict its warm entry, and return everything the binding
+    /// produced that was not yet taken. The caller unsubscribes the
+    /// consumer.
+    pub(crate) fn detach(&mut self, name: &str) -> Result<Vec<Tuple>> {
+        let Self { deployer, bindings, warm, metrics } = self;
+        let mut b = bindings
+            .remove(name)
+            .ok_or_else(|| Error::NotFound(format!("no trigger binding `{name}`")))?;
+        if let Some(active) = b.active.take() {
+            let tail = deployer.stop(&active.handle)?;
+            b.outputs.extend(tail);
+            b.stats.decommissions += 1;
+            metrics.counter("trigger.decommissions").inc();
+        }
+        if let Some(tail) = warm.remove(deployer, name)? {
+            b.outputs.extend(tail);
+        }
+        Ok(b.outputs)
+    }
+
+    /// One binding's lifecycle step against an already-fetched batch:
+    /// activate if data arrived while idle (warm pool first, full
+    /// deploy on miss), feed, poll outputs, and park/stop when the
+    /// idle watermark passes on an empty fetch.
+    pub(crate) fn step(
+        &mut self,
+        name: &str,
+        msgs: Vec<(String, Arc<[u8]>)>,
+    ) -> Result<StepEvents> {
+        let Self { deployer, bindings, warm, metrics } = self;
+        let b = bindings
+            .get_mut(name)
+            .ok_or_else(|| Error::NotFound(format!("no trigger binding `{name}`")))?;
+        let mut events = StepEvents::default();
+        let mut evicted_tails = Vec::new();
+        let now = Instant::now();
+        if !msgs.is_empty() {
+            if b.active.is_none() {
+                let started = Instant::now();
+                let mut parked = warm.take(name);
+                if let Some(h) = &parked {
+                    if !deployer.is_deployed(h) {
+                        parked = None;
+                    }
+                }
+                let (handle, was_warm) = match parked {
+                    Some(handle) => {
+                        metrics.counter("trigger.warm_hits").inc();
+                        (handle, true)
+                    }
+                    None => {
+                        metrics.counter("trigger.warm_misses").inc();
+                        (deployer.deploy(&b.pipeline)?, false)
+                    }
+                };
+                let latency = started.elapsed();
+                if was_warm {
+                    b.stats.warm_starts += 1;
+                    metrics.histogram("trigger.warm_start_us").record_duration(latency);
+                } else {
+                    b.stats.last_cold_start = Some(latency);
+                    metrics.histogram("trigger.cold_start_us").record_duration(latency);
+                }
+                b.stats.activations += 1;
+                metrics.counter("trigger.activations").inc();
+                b.active = Some(Active { handle, activated_at: now, last_data: now });
+                events.activated = true;
+            }
+            let mut batch = Vec::with_capacity(msgs.len());
+            for (_topic, payload) in &msgs {
+                batch.push(as_tuple(b.opts.decode_payloads, &mut b.raw_seq, payload));
+            }
+            b.stats.tuples_fed += batch.len() as u64;
+            metrics.counter("trigger.tuples_fed").add(batch.len() as u64);
+            let active = b.active.as_mut().expect("just activated");
+            active.last_data = now;
+            deployer.send_batch(&active.handle, batch)?;
+        }
+        if let Some(active) = &b.active {
+            b.outputs.extend(deployer.poll(&active.handle, usize::MAX)?);
+            let age = now.duration_since(active.activated_at);
+            let idle = now.duration_since(active.last_data);
+            if msgs.is_empty() && b.opts.idle.decide(age, idle, idle) {
+                let active = b.active.take().expect("checked above");
+                let outcome =
+                    warm.park(deployer, name, active.handle, b.stateful, &b.pipeline)?;
+                b.outputs.extend(outcome.tail);
+                b.stats.decommissions += 1;
+                metrics.counter("trigger.decommissions").inc();
+                events.decommissioned = true;
+                evicted_tails = outcome.evicted;
+            }
+        }
+        for (owner, tail) in evicted_tails {
+            if let Some(other) = bindings.get_mut(&owner) {
+                other.outputs.extend(tail);
+            }
+        }
+        Ok(events)
+    }
+
+    /// Best-effort teardown after a step error: the activation (if
+    /// any) is stopped and discarded, the binding returns to idle so
+    /// the next matching data cold-starts a fresh instance.
+    pub(crate) fn fail(&mut self, name: &str) {
+        let Self { deployer, bindings, metrics, .. } = self;
+        let Some(b) = bindings.get_mut(name) else { return };
+        if let Some(active) = b.active.take() {
+            match deployer.stop(&active.handle) {
+                Ok(tail) => b.outputs.extend(tail),
+                Err(e) => log::warn!("trigger `{name}`: teardown after fault: {e}"),
+            }
+        }
+        b.stats.faults += 1;
+        metrics.counter("trigger.faults").inc();
+    }
+
+    /// Count a refused activation attempt against the binding.
+    pub(crate) fn note_rejection(&mut self, name: &str) {
+        if let Some(b) = self.bindings.get_mut(name) {
+            b.stats.rejections += 1;
+        }
+        self.metrics.counter("trigger.rejected").inc();
+    }
+
+    /// Force every activation to zero *now* (shutdown), ignoring idle
+    /// watermarks, and drain the warm pool. Outputs stay buffered.
+    pub(crate) fn decommission_all(&mut self) -> Result<()> {
+        let mut first_err: Option<Error> = None;
+        let Self { deployer, bindings, warm, metrics } = self;
+        for (name, b) in bindings.iter_mut() {
+            if let Some(active) = b.active.take() {
+                match deployer.stop(&active.handle) {
+                    Ok(tail) => {
+                        b.outputs.extend(tail);
+                        b.stats.decommissions += 1;
+                        metrics.counter("trigger.decommissions").inc();
+                    }
+                    Err(e) => {
+                        log::error!("trigger `{name}`: decommission: {e}");
+                        b.stats.faults += 1;
+                        metrics.counter("trigger.faults").inc();
+                        first_err.get_or_insert(e);
+                    }
+                }
+            }
+        }
+        match warm.drain_all(deployer) {
+            Ok(tails) => {
+                for (owner, tail) in tails {
+                    if let Some(b) = bindings.get_mut(&owner) {
+                        b.outputs.extend(tail);
+                    }
+                }
+            }
+            Err(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Evict warm entries whose warmth expired; tails are routed back
+    /// to their bindings' output buffers.
+    pub(crate) fn sweep_warm(&mut self) -> Result<()> {
+        let Self { deployer, bindings, warm, .. } = self;
+        for (owner, tail) in warm.sweep(deployer)? {
+            if let Some(b) = bindings.get_mut(&owner) {
+                b.outputs.extend(tail);
+            }
+        }
+        Ok(())
+    }
+
+    /// Memory-pressure reclaim: shrink the warm pool to `keep`
+    /// entries, coldest-first. Returns how many were evicted.
+    pub(crate) fn reclaim_warm(&mut self, keep: usize) -> Result<usize> {
+        let Self { deployer, bindings, warm, .. } = self;
+        let (evicted, tails) = warm.reclaim(deployer, keep)?;
+        for (owner, tail) in tails {
+            if let Some(b) = bindings.get_mut(&owner) {
+                b.outputs.extend(tail);
+            }
+        }
+        Ok(evicted)
+    }
+
+    pub(crate) fn set_warm_policy(&mut self, policy: WarmPolicy) {
+        self.warm.set_policy(policy);
+    }
+
+    pub(crate) fn warm_resident(&self) -> usize {
+        self.warm.resident()
+    }
+
+    pub(crate) fn take_outputs(&mut self, name: &str) -> Vec<Tuple> {
+        self.bindings
+            .get_mut(name)
+            .map(|b| std::mem::take(&mut b.outputs))
+            .unwrap_or_default()
+    }
+
+    /// Drain every non-empty output buffer (the concurrent pool ships
+    /// these back to the caller with each step result).
+    pub(crate) fn drain_outputs(&mut self) -> Vec<(String, Vec<Tuple>)> {
+        self.bindings
+            .iter_mut()
+            .filter(|(_, b)| !b.outputs.is_empty())
+            .map(|(n, b)| (n.clone(), std::mem::take(&mut b.outputs)))
+            .collect()
+    }
+
+    pub(crate) fn is_active(&self, name: &str) -> bool {
+        self.bindings.get(name).is_some_and(|b| b.active.is_some())
+    }
+
+    pub(crate) fn active(&self) -> Vec<String> {
+        self.bindings
+            .iter()
+            .filter(|(_, b)| b.active.is_some())
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    pub(crate) fn active_count(&self) -> usize {
+        self.bindings.values().filter(|b| b.active.is_some()).count()
+    }
+
+    pub(crate) fn bound(&self) -> Vec<String> {
+        self.bindings.keys().cloned().collect()
+    }
+
+    /// `(binding, tenant)` pairs in name order (scheduler input).
+    pub(crate) fn roster(&self) -> Vec<(String, String)> {
+        self.bindings.iter().map(|(n, b)| (n.clone(), b.tenant.clone())).collect()
+    }
+
+    pub(crate) fn consumer(&self, name: &str) -> Option<String> {
+        self.bindings.get(name).map(|b| b.consumer.clone())
+    }
+
+    pub(crate) fn tenant(&self, name: &str) -> Option<String> {
+        self.bindings.get(name).map(|b| b.tenant.clone())
+    }
+
+    pub(crate) fn stats(&self, name: &str) -> Option<TriggerStats> {
+        self.bindings.get(name).map(|b| b.stats.clone())
+    }
+}
+
+/// Binds pipelines to data profiles over any [`Deployer`] surface and
+/// drives the activate/feed/decommission lifecycle from the caller's
+/// thread — the *sequential* pump, kept as the deterministic baseline
+/// (`RPULSAR_TRIGGERPLANE=sync`) of the concurrent
+/// [`TriggerPool`](crate::pipeline::concurrent::TriggerPool). Both
+/// pumps share the same admission, fairness and warm-pool semantics;
+/// `rust/tests/trigger_scale.rs` property-tests their output
+/// equivalence.
+pub struct TriggerManager<D: Deployer> {
+    runner: BindingRunner<D>,
+    admission: AdmissionControl,
+    sched: FairScheduler,
 }
 
 impl TriggerManager<TopologyManager> {
@@ -136,21 +652,55 @@ impl<D: Deployer> TriggerManager<D> {
 
     /// Share a metrics registry (node/bench composition).
     pub fn with_metrics(deployer: D, metrics: Registry) -> Self {
-        TriggerManager { deployer, bindings: BTreeMap::new(), metrics }
+        TriggerManager {
+            runner: BindingRunner::new(deployer, metrics),
+            admission: AdmissionControl::default(),
+            sched: FairScheduler::new(),
+        }
     }
 
     /// The underlying deploy surface.
     pub fn deployer(&self) -> &D {
-        &self.deployer
+        self.runner.deployer()
     }
 
     pub fn deployer_mut(&mut self) -> &mut D {
-        &mut self.deployer
+        self.runner.deployer_mut()
     }
 
-    /// Activation/decommission counters.
+    /// Activation/decommission counters + cold/warm-start histograms.
     pub fn metrics(&self) -> &Registry {
-        &self.metrics
+        self.runner.metrics()
+    }
+
+    /// Bound in-flight activations (default: unlimited).
+    pub fn set_admission(&mut self, admission: AdmissionControl) {
+        self.admission = admission;
+    }
+
+    pub fn admission(&self) -> &AdmissionControl {
+        &self.admission
+    }
+
+    /// Opt into warm pooling (default: [`WarmPolicy::disabled`]).
+    pub fn set_warm_policy(&mut self, policy: WarmPolicy) {
+        self.runner.set_warm_policy(policy);
+    }
+
+    /// Parked warm pipelines right now.
+    pub fn warm_resident(&self) -> usize {
+        self.runner.warm_resident()
+    }
+
+    /// Memory-pressure reclaim: shrink the warm pool to `keep`
+    /// entries, coldest-first. Returns how many were evicted.
+    pub fn reclaim_warm(&mut self, keep: usize) -> Result<usize> {
+        self.runner.reclaim_warm(keep)
+    }
+
+    /// Lifetime admitted activations per tenant.
+    pub fn admitted_by_tenant(&self) -> &BTreeMap<String, u64> {
+        self.sched.admitted()
     }
 
     /// Bind `pipeline` to `profile`: matching data arriving at `broker`
@@ -170,27 +720,8 @@ impl<D: Deployer> TriggerManager<D> {
         profile: Profile,
         opts: TriggerOptions,
     ) -> Result<()> {
-        if self.bindings.contains_key(pipeline.name()) {
-            return Err(Error::Stream(format!(
-                "pipeline `{}` is already bound",
-                pipeline.name()
-            )));
-        }
-        self.deployer.validate(&pipeline)?;
-        let consumer = format!("trigger:{}", pipeline.name());
+        let consumer = self.runner.attach(pipeline, opts)?;
         broker.subscribe(&consumer, profile);
-        self.bindings.insert(
-            pipeline.name().to_string(),
-            Binding {
-                pipeline,
-                consumer,
-                opts,
-                active: None,
-                outputs: Vec::new(),
-                raw_seq: 0,
-                stats: TriggerStats::default(),
-            },
-        );
         Ok(())
     }
 
@@ -198,32 +729,63 @@ impl<D: Deployer> TriggerManager<D> {
     /// live activation (zero-loss drain) and return everything the
     /// binding ever produced that was not yet taken.
     pub fn unbind(&mut self, broker: &mut impl MatchingPlane, name: &str) -> Result<Vec<Tuple>> {
-        let mut b = self
-            .bindings
-            .remove(name)
+        let consumer = self
+            .runner
+            .consumer(name)
             .ok_or_else(|| Error::NotFound(format!("no trigger binding `{name}`")))?;
-        broker.unsubscribe(&b.consumer);
-        if let Some(active) = b.active.take() {
-            let tail = self.deployer.stop(&active.handle)?;
-            b.outputs.extend(tail);
-            b.stats.decommissions += 1;
-            self.metrics.counter("trigger.decommissions").inc();
-        }
-        Ok(b.outputs)
+        broker.unsubscribe(&consumer);
+        self.runner.detach(name)
     }
 
-    /// One lifecycle pass over every binding: fetch matching messages
-    /// from the broker cursor, cold-start idle pipelines that received
-    /// data, feed, drain available outputs, and decommission
-    /// activations whose idle watermark has passed. A faulted binding
-    /// is torn down and reported; the other bindings still complete
-    /// their pass (first error wins).
+    /// One lifecycle pass over every binding, in the fair scheduler's
+    /// order: idle bindings are `lag`-gated (no backlog → no fetch)
+    /// and admission-gated (cap reached → deferred with the cursor
+    /// unmoved); admitted and already-active bindings fetch and run
+    /// their lifecycle step. A faulted binding is torn down and
+    /// reported; the other bindings still complete their pass (first
+    /// error wins).
     pub fn pump(&mut self, broker: &mut impl MatchingPlane) -> Result<()> {
-        let names: Vec<String> = self.bindings.keys().cloned().collect();
+        self.runner.sweep_warm()?;
+        let order = self.sched.order(&self.runner.roster());
+        // Snapshot semantics: slots freed mid-pass open up next pass.
+        let mut active_now = self.runner.active_count();
         let mut first_err: Option<Error> = None;
-        for name in names {
-            if let Err(e) = self.pump_one(broker, &name) {
-                self.fail_binding(&name);
+        for name in order {
+            let Some(consumer) = self.runner.consumer(&name) else { continue };
+            if !self.runner.is_active(&name) {
+                let lag = match broker.lag(&consumer) {
+                    Ok(lag) => lag,
+                    Err(e) => {
+                        self.runner.fail(&name);
+                        first_err.get_or_insert(e);
+                        continue;
+                    }
+                };
+                if lag == 0 {
+                    continue;
+                }
+                if !self.admission.admit(active_now) {
+                    self.runner.note_rejection(&name);
+                    if self.admission.strict {
+                        first_err.get_or_insert(self.admission.refusal(&name, active_now));
+                    }
+                    continue;
+                }
+                active_now += 1;
+                let tenant = self.runner.tenant(&name).unwrap_or_else(|| name.clone());
+                self.sched.charge(&tenant);
+                self.runner.metrics().counter("trigger.admitted").inc();
+            }
+            let msgs = match broker.fetch(&consumer, FETCH_MAX) {
+                Ok(msgs) => msgs,
+                Err(e) => {
+                    self.runner.fail(&name);
+                    first_err.get_or_insert(e);
+                    continue;
+                }
+            };
+            if let Err(e) = self.runner.step(&name, msgs) {
+                self.runner.fail(&name);
                 first_err.get_or_insert(e);
             }
         }
@@ -233,64 +795,21 @@ impl<D: Deployer> TriggerManager<D> {
         }
     }
 
-    fn pump_one(&mut self, broker: &mut impl MatchingPlane, name: &str) -> Result<()> {
-        let Self { deployer, bindings, metrics } = self;
-        let b = bindings.get_mut(name).expect("binding exists");
-        let msgs = broker.fetch(&b.consumer, FETCH_MAX)?;
-        let now = Instant::now();
-        if !msgs.is_empty() {
-            if b.active.is_none() {
-                let started = Instant::now();
-                let handle = deployer.deploy(&b.pipeline)?;
-                b.stats.last_cold_start = Some(started.elapsed());
-                b.stats.activations += 1;
-                metrics.counter("trigger.activations").inc();
-                b.active = Some(Active { handle, activated_at: now, last_data: now });
-            }
-            let mut batch = Vec::with_capacity(msgs.len());
-            for (_topic, payload) in &msgs {
-                batch.push(as_tuple(b.opts.decode_payloads, &mut b.raw_seq, payload));
-            }
-            b.stats.tuples_fed += batch.len() as u64;
-            metrics.counter("trigger.tuples_fed").add(batch.len() as u64);
-            let active = b.active.as_mut().expect("just activated");
-            active.last_data = now;
-            deployer.send_batch(&active.handle, batch)?;
-        }
-        if let Some(active) = &b.active {
-            b.outputs.extend(deployer.poll(&active.handle, usize::MAX)?);
-            let age = now.duration_since(active.activated_at);
-            let idle = now.duration_since(active.last_data);
-            if msgs.is_empty() && b.opts.idle.decide(age, idle, idle) {
-                let active = b.active.take().expect("checked above");
-                let tail = deployer.stop(&active.handle)?;
-                b.outputs.extend(tail);
-                b.stats.decommissions += 1;
-                metrics.counter("trigger.decommissions").inc();
+    /// Total unfetched backlog across every binding's consumer.
+    pub fn backlog(&self, broker: &impl MatchingPlane) -> Result<u64> {
+        let mut total = 0;
+        for (name, _) in self.runner.roster() {
+            if let Some(consumer) = self.runner.consumer(&name) {
+                total += broker.lag(&consumer)?;
             }
         }
-        Ok(())
+        Ok(total)
     }
 
-    /// Best-effort teardown after a pump error: the activation (if
-    /// any) is stopped and discarded, the binding returns to idle so
-    /// the next matching data cold-starts a fresh instance.
-    fn fail_binding(&mut self, name: &str) {
-        let Self { deployer, bindings, metrics } = self;
-        let Some(b) = bindings.get_mut(name) else { return };
-        if let Some(active) = b.active.take() {
-            match deployer.stop(&active.handle) {
-                Ok(tail) => b.outputs.extend(tail),
-                Err(e) => log::warn!("trigger `{name}`: teardown after fault: {e}"),
-            }
-        }
-        b.stats.faults += 1;
-        metrics.counter("trigger.faults").inc();
-    }
-
-    /// Keep pumping until every binding is idle (each backlog fed and
-    /// each idle watermark passed) or `timeout` elapses; errors
-    /// surface immediately. Convenience for drains in tests/benches.
+    /// Keep pumping until every binding is idle *and* every backlog is
+    /// drained (admission may defer backlog across passes), or
+    /// `timeout` elapses; errors surface immediately. Convenience for
+    /// drains in tests/benches.
     pub fn pump_until_idle(
         &mut self,
         broker: &mut impl MatchingPlane,
@@ -299,7 +818,7 @@ impl<D: Deployer> TriggerManager<D> {
         let deadline = Instant::now() + timeout;
         loop {
             self.pump(broker)?;
-            if self.active().is_empty() {
+            if self.active().is_empty() && self.backlog(broker)? == 0 {
                 return Ok(());
             }
             if Instant::now() >= deadline {
@@ -313,63 +832,35 @@ impl<D: Deployer> TriggerManager<D> {
     }
 
     /// Force every activation to zero *now* (node shutdown), ignoring
-    /// idle watermarks. Outputs stay buffered for [`Self::take_outputs`].
+    /// idle watermarks, and drain the warm pool. Outputs stay buffered
+    /// for [`Self::take_outputs`].
     pub fn decommission_all(&mut self) -> Result<()> {
-        let mut first_err: Option<Error> = None;
-        let Self { deployer, bindings, metrics } = self;
-        for (name, b) in bindings.iter_mut() {
-            if let Some(active) = b.active.take() {
-                match deployer.stop(&active.handle) {
-                    Ok(tail) => {
-                        b.outputs.extend(tail);
-                        b.stats.decommissions += 1;
-                        metrics.counter("trigger.decommissions").inc();
-                    }
-                    Err(e) => {
-                        log::error!("trigger `{name}`: decommission: {e}");
-                        b.stats.faults += 1;
-                        metrics.counter("trigger.faults").inc();
-                        first_err.get_or_insert(e);
-                    }
-                }
-            }
-        }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(()),
-        }
+        self.runner.decommission_all()
     }
 
     /// Take everything a binding's activations have produced so far.
     pub fn take_outputs(&mut self, name: &str) -> Vec<Tuple> {
-        self.bindings
-            .get_mut(name)
-            .map(|b| std::mem::take(&mut b.outputs))
-            .unwrap_or_default()
+        self.runner.take_outputs(name)
     }
 
     /// Whether a binding currently has a live activation.
     pub fn is_active(&self, name: &str) -> bool {
-        self.bindings.get(name).is_some_and(|b| b.active.is_some())
+        self.runner.is_active(name)
     }
 
     /// Names of bindings with live activations.
     pub fn active(&self) -> Vec<String> {
-        self.bindings
-            .iter()
-            .filter(|(_, b)| b.active.is_some())
-            .map(|(n, _)| n.clone())
-            .collect()
+        self.runner.active()
     }
 
     /// All binding names.
     pub fn bound(&self) -> Vec<String> {
-        self.bindings.keys().cloned().collect()
+        self.runner.bound()
     }
 
     /// A binding's lifetime counters.
     pub fn stats(&self, name: &str) -> Option<TriggerStats> {
-        self.bindings.get(name).map(|b| b.stats.clone())
+        self.runner.stats(name)
     }
 }
 
@@ -377,9 +868,10 @@ impl<D: Deployer> std::fmt::Debug for TriggerManager<D> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "TriggerManager(bindings={}, active={})",
-            self.bindings.len(),
-            self.active().len()
+            "TriggerManager(bindings={}, active={}, warm={})",
+            self.runner.bound().len(),
+            self.runner.active_count(),
+            self.runner.warm_resident()
         )
     }
 }
@@ -431,6 +923,15 @@ mod tests {
             .unwrap()
     }
 
+    fn window_pipeline(name: &str) -> Pipeline {
+        Pipeline::builder(name)
+            .stage(PipelineStage::new("kwin").keyed("K").operator(|| {
+                Box::new(OperatorKind::window_by("kwin", "X", 4, "K")) as Box<dyn Operator>
+            }))
+            .build()
+            .unwrap()
+    }
+
     fn eager() -> TriggerOptions {
         TriggerOptions {
             idle: RetirePolicy {
@@ -439,6 +940,7 @@ mod tests {
                 min_age: Duration::ZERO,
             },
             decode_payloads: true,
+            tenant: None,
         }
     }
 
@@ -474,6 +976,7 @@ mod tests {
         assert_eq!(stats.decommissions, 1);
         assert_eq!(trig.metrics().counter("trigger.activations").get(), 1);
         assert_eq!(trig.metrics().counter("trigger.decommissions").get(), 1);
+        assert_eq!(trig.metrics().histogram("trigger.cold_start_us").count(), 1);
         let out = trig.take_outputs("job");
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].get("X"), Some(2.0));
@@ -641,5 +1144,119 @@ mod tests {
         assert_eq!(trig.stats("boom").unwrap().activations, 2);
         let out = trig.take_outputs("boom");
         assert_eq!(out.len(), 1, "fresh activation must process cleanly");
+    }
+
+    #[test]
+    fn fair_scheduler_rotates_and_pays_deficit() {
+        let roster = vec![
+            ("a1".to_string(), "ta".to_string()),
+            ("a2".to_string(), "ta".to_string()),
+            ("z0".to_string(), "tz".to_string()),
+        ];
+        let mut sched = FairScheduler::new();
+        // Pass 1: no deficit, no rotation → tenant-interleaved name
+        // order.
+        assert_eq!(sched.order(&roster), ["a1", "z0", "a2"]);
+        // `ta` gets an activation; pass 2 must front the zero-deficit
+        // tenant and rotate within `ta`.
+        sched.charge("ta");
+        assert_eq!(sched.order(&roster), ["z0", "a2", "a1"]);
+        // Equal deficit again → the rotating start breaks the tie the
+        // other way on some later pass (starvation-free even on ties).
+        sched.charge("tz");
+        let pass3 = sched.order(&roster);
+        assert_eq!(pass3.len(), 3);
+        assert!(pass3.contains(&"z0".to_string()));
+    }
+
+    #[test]
+    fn strict_admission_surfaces_structured_refusal_and_retry_loses_nothing() {
+        let mut broker = broker("admission");
+        let mut trig = TriggerManager::in_process();
+        trig.set_admission(AdmissionControl::strict(0));
+        trig.bind(&mut broker, inc_pipeline("job"), p("s,*"), eager()).unwrap();
+        broker.publish(&p("s,t"), &Tuple::new(0, vec![]).with("X", 1.0).encode()).unwrap();
+        let err = trig.pump(&mut broker).unwrap_err();
+        assert_eq!(err.kind(), "admission", "{err}");
+        assert!(!trig.is_active("job"), "a refused binding must not activate");
+        assert_eq!(trig.stats("job").unwrap().rejections, 1);
+        assert_eq!(trig.metrics().counter("trigger.rejected").get(), 1);
+        // Lifting the cap delivers the full backlog: refusal left the
+        // cursor unmoved.
+        trig.set_admission(AdmissionControl::unlimited());
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        let out = trig.take_outputs("job");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("X"), Some(2.0));
+    }
+
+    #[test]
+    fn warm_pool_serves_reactivation_without_redeploy() {
+        let mut broker = broker("warm");
+        let mut trig = TriggerManager::in_process();
+        trig.set_warm_policy(WarmPolicy::retain(2));
+        trig.bind(&mut broker, inc_pipeline("job"), p("s,*"), eager()).unwrap();
+        broker.publish(&p("s,t"), &Tuple::new(0, vec![]).with("X", 1.0).encode()).unwrap();
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        // Decommissioned to idle — but parked warm (live), not stopped.
+        assert!(!trig.is_active("job"));
+        assert_eq!(trig.warm_resident(), 1);
+        assert_eq!(trig.stats("job").unwrap().decommissions, 1);
+        // Re-activation takes the parked instance: a warm start.
+        broker.publish(&p("s,t"), &Tuple::new(1, vec![]).with("X", 5.0).encode()).unwrap();
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        let stats = trig.stats("job").unwrap();
+        assert_eq!(stats.activations, 2);
+        assert_eq!(stats.warm_starts, 1);
+        assert_eq!(trig.metrics().counter("trigger.warm_hits").get(), 1);
+        assert_eq!(trig.metrics().histogram("trigger.warm_start_us").count(), 1);
+        // Reclaim under memory pressure drains the pool through the
+        // deployer; the stop flushes everything the live-parked
+        // instance still held — both bursts' outputs, none lost.
+        assert_eq!(trig.reclaim_warm(0).unwrap(), 1);
+        assert_eq!(trig.warm_resident(), 0);
+        assert!(trig.deployer().running().is_empty());
+        let mut xs: Vec<f64> =
+            trig.take_outputs("job").iter().filter_map(|t| t.get("X")).collect();
+        xs.sort_by(f64::total_cmp);
+        assert_eq!(xs, [2.0, 6.0]);
+    }
+
+    #[test]
+    fn stateful_pipelines_flush_when_parked() {
+        // A keyed window must not carry open-window state across a
+        // scale-to-zero boundary: parking flushes (warm ≡ cold), and
+        // the warm standby starts stateless-fresh.
+        let mut broker = broker("warm-stateful");
+        let mut trig = TriggerManager::in_process();
+        trig.set_warm_policy(WarmPolicy::retain(1));
+        trig.bind(&mut broker, window_pipeline("win"), p("s,*"), eager()).unwrap();
+        for i in 0..2u64 {
+            broker
+                .publish(
+                    &p("s,t"),
+                    &Tuple::new(i, vec![]).with("K", 1.0).with("X", 10.0).encode(),
+                )
+                .unwrap();
+        }
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        // Park flushed the 2-element partial window.
+        let out = trig.take_outputs("win");
+        assert_eq!(out.len(), 1, "partial window must flush at park");
+        assert_eq!(trig.warm_resident(), 1, "a fresh standby is parked");
+        // Second burst is served warm and flushes its own partial —
+        // exactly what a cold path would produce.
+        for i in 2..4u64 {
+            broker
+                .publish(
+                    &p("s,t"),
+                    &Tuple::new(i, vec![]).with("K", 1.0).with("X", 20.0).encode(),
+                )
+                .unwrap();
+        }
+        trig.pump_until_idle(&mut broker, Duration::from_secs(10)).unwrap();
+        let out = trig.take_outputs("win");
+        assert_eq!(out.len(), 1, "state must not leak across the boundary");
+        assert_eq!(trig.stats("win").unwrap().warm_starts, 1);
     }
 }

@@ -503,6 +503,7 @@ fn clone_err(e: &Error) -> Error {
         Error::NotFound(s) => Error::NotFound(s.clone()),
         Error::NotRunning(s) => Error::NotRunning(s.clone()),
         Error::Timeout(s) => Error::Timeout(s.clone()),
+        Error::Admission(s) => Error::Admission(s.clone()),
     }
 }
 

@@ -454,6 +454,16 @@ pub trait Deployer {
 
     /// Whether the handle's pipeline is still live on this surface.
     fn is_deployed(&self, handle: &PipelineHandle) -> bool;
+
+    /// Resolve a *named* stage against this surface's registry (how
+    /// string-spec pipelines find their operators). The trigger plane
+    /// uses it to probe statefulness before a pipeline ever runs —
+    /// warm pools park stateless pipelines live but must flush
+    /// stateful ones. The default (no registry) resolves nothing;
+    /// callers treat an unresolvable stage conservatively (stateful).
+    fn stage_factory(&self, _name: &str) -> Option<StageFactory> {
+        None
+    }
 }
 
 /// Stamp a handle for a freshly deployed pipeline (used by every
@@ -515,6 +525,10 @@ impl Deployer for TopologyManager {
 
     fn is_deployed(&self, handle: &PipelineHandle) -> bool {
         self.is_running(&handle.key)
+    }
+
+    fn stage_factory(&self, name: &str) -> Option<StageFactory> {
+        self.factory(name)
     }
 }
 
@@ -582,6 +596,10 @@ impl Deployer for DistributedTopologyManager {
 
     fn is_deployed(&self, handle: &PipelineHandle) -> bool {
         self.is_running(&handle.key)
+    }
+
+    fn stage_factory(&self, name: &str) -> Option<StageFactory> {
+        self.factory(name)
     }
 }
 

@@ -459,6 +459,7 @@ fn trigger_pipeline_fault_mid_activation_reclaims_and_recovers() {
             min_age: Duration::ZERO,
         },
         decode_payloads: true,
+        tenant: None,
     };
     let profile = Profile::parse("frag,data").unwrap();
     trig.bind(&mut broker, pipeline, Profile::parse("frag,*").unwrap(), eager).unwrap();
@@ -520,4 +521,85 @@ fn trigger_pipeline_fault_mid_activation_reclaims_and_recovers() {
     }
     assert!(recovered, "a fresh activation must process post-fault data");
     assert_eq!(trig.stats("fragile").unwrap().activations, 2);
+}
+
+#[test]
+fn trigger_worker_panic_tears_down_cleanly_and_spares_siblings() {
+    // A panic on a TriggerPool worker thread mid-step must surface as
+    // a structured error carrying the cause, tear the poisoned binding
+    // down (faults counted, back to idle), and leave sibling bindings
+    // — including ones on the same worker — processing normally.
+    use rpulsar::mmq::pubsub::RetirePolicy;
+    use rpulsar::pipeline::concurrent::TriggerPool;
+    use rpulsar::pipeline::trigger::TriggerOptions;
+    use rpulsar::stream::pipeline::{Pipeline, PipelineStage};
+
+    let dir = std::env::temp_dir()
+        .join("rpulsar-trigger-worker-panic")
+        .join(format!("{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut broker = rpulsar::mmq::pubsub::Broker::new(QueueOptions {
+        dir,
+        segment_bytes: 1 << 16,
+        max_segments: 4,
+        sync_every: 0,
+    });
+    let eager = || TriggerOptions {
+        idle: RetirePolicy {
+            max_publish_idle: Duration::ZERO,
+            max_fetch_idle: Duration::ZERO,
+            min_age: Duration::ZERO,
+        },
+        decode_payloads: true,
+        tenant: None,
+    };
+    let inc = |name: &str| {
+        Pipeline::builder(name)
+            .stage(PipelineStage::new("inc").operator(|| {
+                Box::new(OperatorKind::map("inc", |mut t| {
+                    let v = t.get("X").unwrap_or(0.0);
+                    t.set("X", v + 1.0);
+                    t
+                })) as Box<dyn Operator>
+            }))
+            .build()
+            .unwrap()
+    };
+    // The injection hook: the worker stepping `doomed` panics.
+    std::env::set_var("RPULSAR_TEST_TRIGGER_PANIC", "doomed");
+    let mut pool = TriggerPool::in_process(2);
+    pool.bind(&mut broker, inc("doomed"), Profile::parse("bad,*").unwrap(), eager())
+        .unwrap();
+    pool.bind(&mut broker, inc("steady"), Profile::parse("good,*").unwrap(), eager())
+        .unwrap();
+    broker
+        .publish(&Profile::parse("bad,data").unwrap(), &Tuple::new(0, vec![]).with("X", 1.0).encode())
+        .unwrap();
+    broker
+        .publish(&Profile::parse("good,data").unwrap(), &Tuple::new(0, vec![]).with("X", 5.0).encode())
+        .unwrap();
+    let err = pool.pump(&mut broker).unwrap_err();
+    assert!(
+        format!("{err}").contains("injected trigger worker panic"),
+        "the error must carry the panic cause: {err}"
+    );
+    assert!(!pool.is_active("doomed"), "poisoned binding must be torn down");
+    assert_eq!(pool.stats("doomed").unwrap().faults, 1);
+    // Stop injecting before any other step runs.
+    std::env::remove_var("RPULSAR_TEST_TRIGGER_PANIC");
+    // The sibling binding (and the pool itself) keeps working.
+    pool.pump_until_idle(&mut broker, Duration::from_secs(20)).unwrap();
+    let out = pool.take_outputs("steady");
+    assert_eq!(out.len(), 1, "sibling binding must process normally");
+    assert_eq!(out[0].get("X"), Some(6.0));
+    // The poisoned binding recovers on fresh data too.
+    broker
+        .publish(&Profile::parse("bad,data").unwrap(), &Tuple::new(1, vec![]).with("X", 9.0).encode())
+        .unwrap();
+    pool.pump_until_idle(&mut broker, Duration::from_secs(20)).unwrap();
+    let out = pool.take_outputs("doomed");
+    assert!(
+        out.iter().any(|t| t.get("X") == Some(10.0)),
+        "recovered binding must process post-fault data: {out:?}"
+    );
 }

@@ -38,6 +38,7 @@ fn eager() -> TriggerOptions {
             min_age: Duration::ZERO,
         },
         decode_payloads: true,
+        tenant: None,
     }
 }
 
@@ -148,6 +149,7 @@ fn patient_policy_keeps_the_activation_warm() {
             min_age: Duration::ZERO,
         },
         decode_payloads: true,
+        tenant: None,
     };
     trig.bind(&mut broker, relay_pipeline("job"), p("s,*"), opts).unwrap();
     broker

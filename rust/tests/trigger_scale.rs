@@ -1,0 +1,435 @@
+//! Trigger plane at scale: property tests for the concurrent worker
+//! pool, warm pipeline pools, admission control and fair scheduling
+//! (PR 9 tentpole). Each property was pre-validated by
+//! `python/sims/trigger_scale_sim.py`; the contracts live in
+//! `docs/serverless-scale.md`.
+//!
+//! The load-bearing invariants:
+//! - **Concurrent ≡ sequential**: over seeded burst schedules, the
+//!   per-binding output multiset of a [`TriggerPool`] equals the
+//!   sequential [`TriggerManager`]'s — for stateless relays *and*
+//!   stateful keyed windows (same batching ⇒ same flush boundaries).
+//! - **Warm ≡ cold**: enabling warm pools changes latency, never
+//!   output.
+//! - **Refusal loses nothing**: an admission-refused binding's cursor
+//!   has not advanced; retry delivers everything.
+//! - **Eviction/reclaim lose nothing**: evicted warm entries flush
+//!   their tails back to their bindings.
+
+use rpulsar::ar::profile::Profile;
+use rpulsar::mmq::pubsub::{Broker, RetirePolicy};
+use rpulsar::mmq::queue::QueueOptions;
+use rpulsar::pipeline::concurrent::TriggerPool;
+use rpulsar::pipeline::pool::WarmPolicy;
+use rpulsar::pipeline::trigger::{AdmissionControl, TriggerManager, TriggerOptions};
+use rpulsar::pipeline::WarmPool;
+use rpulsar::stream::operator::{Operator, OperatorKind};
+use rpulsar::stream::pipeline::{Pipeline, PipelineStage};
+use rpulsar::stream::tuple::Tuple;
+use rpulsar::util::prng::Prng;
+use std::time::Duration;
+
+fn broker(name: &str) -> Broker {
+    let dir = std::env::temp_dir()
+        .join("rpulsar-trigger-scale")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    Broker::new(QueueOptions { dir, segment_bytes: 1 << 16, max_segments: 8, sync_every: 0 })
+}
+
+fn p(s: &str) -> Profile {
+    Profile::parse(s).unwrap()
+}
+
+fn opts(tenant: &str) -> TriggerOptions {
+    TriggerOptions {
+        idle: RetirePolicy {
+            max_publish_idle: Duration::ZERO,
+            max_fetch_idle: Duration::ZERO,
+            min_age: Duration::ZERO,
+        },
+        decode_payloads: true,
+        tenant: Some(tenant.to_string()),
+    }
+}
+
+/// Stateless relay: output multiset == input multiset (tagged).
+fn relay(name: &str) -> Pipeline {
+    Pipeline::builder(name)
+        .stage(PipelineStage::new("tag").operator(|| {
+            Box::new(OperatorKind::map("tag", |mut t| {
+                let v = t.get("X").unwrap_or(0.0);
+                t.set("X", v + 1.0);
+                t
+            })) as Box<dyn Operator>
+        }))
+        .build()
+        .unwrap()
+}
+
+/// Stateful keyed window: flush boundaries depend on batching, so this
+/// is the sensitive shape for equivalence properties.
+fn window(name: &str) -> Pipeline {
+    Pipeline::builder(name)
+        .stage(PipelineStage::new("win").keyed("K").operator(|| {
+            Box::new(OperatorKind::window_by("win", "X", 3, "K")) as Box<dyn Operator>
+        }))
+        .build()
+        .unwrap()
+}
+
+/// Canonical multiset form of an output batch.
+fn canon(outs: &[Tuple]) -> Vec<String> {
+    let mut v: Vec<String> = outs.iter().map(|t| format!("{:?}", t.fields)).collect();
+    v.sort();
+    v
+}
+
+/// One seeded burst schedule: `rounds` rounds, each publishing a
+/// random number of tuples to a random subset of bindings, drained
+/// between rounds. `B` bindings across 3 tenants.
+const BINDINGS: usize = 6;
+const TENANTS: [&str; 3] = ["ta", "tb", "tc"];
+
+fn binding_name(i: usize) -> String {
+    format!("job{i}")
+}
+
+/// Drives either plane through the same seeded schedule and returns
+/// the per-binding canonical output multisets.
+enum Plane {
+    Seq(TriggerManager<rpulsar::stream::deploy::TopologyManager>),
+    Pool(TriggerPool),
+}
+
+impl Plane {
+    fn bind(&mut self, broker: &mut Broker, pipeline: Pipeline, profile: Profile, o: TriggerOptions) {
+        match self {
+            Plane::Seq(t) => t.bind(broker, pipeline, profile, o).unwrap(),
+            Plane::Pool(t) => t.bind(broker, pipeline, profile, o).unwrap(),
+        }
+    }
+    fn pump_until_idle(&mut self, broker: &mut Broker) {
+        match self {
+            Plane::Seq(t) => t.pump_until_idle(broker, Duration::from_secs(60)).unwrap(),
+            Plane::Pool(t) => t.pump_until_idle(broker, Duration::from_secs(60)).unwrap(),
+        }
+    }
+    fn decommission_all(&mut self) {
+        match self {
+            Plane::Seq(t) => t.decommission_all().unwrap(),
+            Plane::Pool(t) => t.decommission_all().unwrap(),
+        }
+    }
+    fn take_outputs(&mut self, name: &str) -> Vec<Tuple> {
+        match self {
+            Plane::Seq(t) => t.take_outputs(name),
+            Plane::Pool(t) => t.take_outputs(name),
+        }
+    }
+    fn set_admission(&mut self, a: AdmissionControl) {
+        match self {
+            Plane::Seq(t) => t.set_admission(a),
+            Plane::Pool(t) => t.set_admission(a),
+        }
+    }
+    fn set_warm_policy(&mut self, w: WarmPolicy) {
+        match self {
+            Plane::Seq(t) => t.set_warm_policy(w),
+            Plane::Pool(t) => t.set_warm_policy(w),
+        }
+    }
+}
+
+/// Runs one seeded schedule on a fresh broker and plane; returns each
+/// binding's canonical output multiset after a full drain.
+fn run_schedule(
+    tag: &str,
+    seed: u64,
+    stateful: bool,
+    mut plane: Plane,
+    admission: AdmissionControl,
+    warm: WarmPolicy,
+) -> Vec<Vec<String>> {
+    let mut broker = broker(&format!("{tag}-{seed}-{stateful}"));
+    plane.set_admission(admission);
+    plane.set_warm_policy(warm);
+    for i in 0..BINDINGS {
+        let name = binding_name(i);
+        let pipeline = if stateful { window(&name) } else { relay(&name) };
+        plane.bind(
+            &mut broker,
+            pipeline,
+            p(&format!("s{i},*")),
+            opts(TENANTS[i % TENANTS.len()]),
+        );
+    }
+    let mut rng = Prng::seeded(seed);
+    let mut next_seq = 0u64;
+    for _round in 0..4 {
+        for i in 0..BINDINGS {
+            if rng.gen_bool(0.7) {
+                let n = rng.gen_range(1, 6);
+                for _ in 0..n {
+                    let key = rng.gen_range(0, 2) as f64;
+                    broker
+                        .publish(
+                            &p(&format!("s{i},d")),
+                            &Tuple::new(next_seq, vec![])
+                                .with("K", key)
+                                .with("X", (next_seq % 17) as f64)
+                                .encode(),
+                        )
+                        .unwrap();
+                    next_seq += 1;
+                }
+            }
+        }
+        plane.pump_until_idle(&mut broker);
+    }
+    // Final drain flushes live-parked warm instances too.
+    plane.decommission_all();
+    (0..BINDINGS)
+        .map(|i| canon(&plane.take_outputs(&binding_name(i))))
+        .collect()
+}
+
+#[test]
+fn concurrent_pool_matches_sequential_pump_exactly() {
+    // The tentpole equivalence: same schedule, same admission cap →
+    // identical per-binding output multisets, stateless and stateful.
+    for &stateful in &[false, true] {
+        for seed in 0..3u64 {
+            let seq = run_schedule(
+                "eq-seq",
+                seed,
+                stateful,
+                Plane::Seq(TriggerManager::in_process()),
+                AdmissionControl::bounded(2),
+                WarmPolicy::disabled(),
+            );
+            let conc = run_schedule(
+                "eq-conc",
+                seed,
+                stateful,
+                Plane::Pool(TriggerPool::in_process(3)),
+                AdmissionControl::bounded(2),
+                WarmPolicy::disabled(),
+            );
+            assert_eq!(
+                seq, conc,
+                "seed {seed} stateful {stateful}: concurrent output diverged from sequential"
+            );
+        }
+    }
+}
+
+#[test]
+fn warm_pools_change_latency_never_output() {
+    for &stateful in &[false, true] {
+        for seed in 10..13u64 {
+            let cold = run_schedule(
+                "warm-off",
+                seed,
+                stateful,
+                Plane::Seq(TriggerManager::in_process()),
+                AdmissionControl::unlimited(),
+                WarmPolicy::disabled(),
+            );
+            let warm = run_schedule(
+                "warm-on",
+                seed,
+                stateful,
+                Plane::Seq(TriggerManager::in_process()),
+                AdmissionControl::unlimited(),
+                WarmPolicy::retain(8),
+            );
+            assert_eq!(
+                cold, warm,
+                "seed {seed} stateful {stateful}: warm pooling changed outputs"
+            );
+            // And the same through the concurrent pool.
+            let warm_conc = run_schedule(
+                "warm-conc",
+                seed,
+                stateful,
+                Plane::Pool(TriggerPool::in_process(2)),
+                AdmissionControl::unlimited(),
+                WarmPolicy::retain(8),
+            );
+            assert_eq!(
+                cold, warm_conc,
+                "seed {seed} stateful {stateful}: warm+concurrent changed outputs"
+            );
+        }
+    }
+}
+
+#[test]
+fn warm_reactivations_actually_hit_the_pool() {
+    // Sanity alongside the equivalence: with retention on and repeated
+    // bursts, warm starts must actually happen (the property above
+    // would pass vacuously if the pool never hit).
+    let mut broker = broker("warm-hits");
+    let mut trig = TriggerManager::in_process();
+    trig.set_warm_policy(WarmPolicy::retain(4));
+    trig.bind(&mut broker, relay("job"), p("s,*"), opts("ta")).unwrap();
+    for burst in 0..4u64 {
+        broker
+            .publish(&p("s,d"), &Tuple::new(burst, vec![]).with("X", 1.0).encode())
+            .unwrap();
+        trig.pump_until_idle(&mut broker, Duration::from_secs(30)).unwrap();
+    }
+    let stats = trig.stats("job").unwrap();
+    assert_eq!(stats.activations, 4);
+    assert!(
+        stats.warm_starts >= 3,
+        "every re-activation after the first must be warm: {stats:?}"
+    );
+    assert_eq!(trig.metrics().counter("trigger.warm_hits").get(), stats.warm_starts);
+    assert!(trig.metrics().histogram("trigger.warm_start_us").count() >= 3);
+}
+
+#[test]
+fn admission_refusal_then_retry_loses_nothing() {
+    let mut broker = broker("refusal");
+    let mut trig = TriggerManager::in_process();
+    trig.set_admission(AdmissionControl::bounded(1));
+    for i in 0..BINDINGS {
+        trig.bind(
+            &mut broker,
+            relay(&binding_name(i)),
+            p(&format!("s{i},*")),
+            opts(TENANTS[i % TENANTS.len()]),
+        )
+        .unwrap();
+    }
+    for i in 0..BINDINGS as u64 {
+        for k in 0..3u64 {
+            broker
+                .publish(
+                    &p(&format!("s{i},d")),
+                    &Tuple::new(i * 10 + k, vec![]).with("X", (i * 10 + k) as f64).encode(),
+                )
+                .unwrap();
+        }
+    }
+    // One pass can admit at most one activation; the rest are refused.
+    trig.pump(&mut broker).unwrap();
+    assert!(trig.active().len() <= 1);
+    assert!(trig.metrics().counter("trigger.rejected").get() >= 1);
+    // Refusals deferred, never dropped: the retry loop delivers all.
+    trig.pump_until_idle(&mut broker, Duration::from_secs(60)).unwrap();
+    for i in 0..BINDINGS as u64 {
+        let mut xs: Vec<f64> = trig
+            .take_outputs(&binding_name(i as usize))
+            .iter()
+            .filter_map(|t| t.get("X"))
+            .collect();
+        xs.sort_by(f64::total_cmp);
+        let want: Vec<f64> = (0..3).map(|k| (i * 10 + k) as f64 + 1.0).collect();
+        assert_eq!(xs, want, "binding {i} lost tuples across refusals");
+    }
+    let rejections: u64 = (0..BINDINGS)
+        .filter_map(|i| trig.stats(&binding_name(i)))
+        .map(|s| s.rejections)
+        .sum();
+    assert!(rejections >= 1, "the cap must actually have refused someone");
+}
+
+#[test]
+fn tight_cap_schedules_tenants_fairly() {
+    // Tenants of different sizes — ta{3 bindings}, tb{2}, tc{1} — all
+    // bursting at once under a cap of 1: admitted activations must
+    // spread across tenants (deficit scheduling), not drain one tenant
+    // first. The sequential pre-PR-9 pump in fixed map order would
+    // starve tc until ta+tb fully drained.
+    let mut broker = broker("fairness");
+    let mut trig = TriggerManager::in_process();
+    trig.set_admission(AdmissionControl::bounded(1));
+    let shape = [("a0", "ta"), ("a1", "ta"), ("a2", "ta"), ("b0", "tb"), ("b1", "tb"), ("c0", "tc")];
+    for (name, tenant) in shape {
+        trig.bind(&mut broker, relay(name), p(&format!("{name},*")), opts(tenant)).unwrap();
+        broker
+            .publish(&p(&format!("{name},d")), &Tuple::new(0, vec![]).with("X", 1.0).encode())
+            .unwrap();
+    }
+    // Alternating pumps: the odd pump admits one binding (cap 1), the
+    // even pump sees it idle and decommissions it, freeing the slot
+    // for the *next* pass (snapshot admission semantics). Six pumps →
+    // exactly three activations.
+    for _ in 0..6 {
+        trig.pump(&mut broker).unwrap();
+    }
+    let admitted = trig.admitted_by_tenant().clone();
+    assert_eq!(
+        admitted.values().sum::<u64>(),
+        3,
+        "cap 1 with alternating drain passes admits exactly three, got {admitted:?}"
+    );
+    // Deficit scheduling spreads them one per tenant. The pre-PR-9
+    // pump in fixed map order would have burned all three slots on
+    // tenant `ta` (a0, a1, a2) and starved tc entirely.
+    assert_eq!(admitted.len(), 3, "all three tenants must be served: {admitted:?}");
+    assert!(
+        admitted.values().all(|&n| n == 1),
+        "one activation per tenant under deficit rotation, got {admitted:?}"
+    );
+}
+
+#[test]
+fn warm_eviction_and_reclaim_lose_nothing() {
+    // Capacity 2 with 4 bindings cycling: the pool must evict (LRU),
+    // reclaim must shrink to zero, and every binding's outputs must
+    // survive intact through all of it.
+    let mut broker = broker("evict");
+    let mut trig = TriggerManager::in_process();
+    trig.set_warm_policy(WarmPolicy::retain(2));
+    for i in 0..4 {
+        trig.bind(&mut broker, relay(&binding_name(i)), p(&format!("s{i},*")), opts("t"))
+            .unwrap();
+    }
+    for i in 0..4u64 {
+        broker
+            .publish(&p(&format!("s{i},d")), &Tuple::new(i, vec![]).with("X", i as f64).encode())
+            .unwrap();
+        trig.pump_until_idle(&mut broker, Duration::from_secs(30)).unwrap();
+    }
+    // 4 bindings parked into a pool of 2: at least 2 evictions.
+    assert!(trig.warm_resident() <= 2);
+    assert!(trig.metrics().counter("trigger.pool_evictions").get() >= 2);
+    // Memory pressure: reclaim everything.
+    let evicted = trig.reclaim_warm(0).unwrap();
+    assert!(evicted >= 1);
+    assert_eq!(trig.warm_resident(), 0);
+    assert!(trig.deployer().running().is_empty(), "reclaim must stop real topologies");
+    // Nothing lost anywhere: each binding's single tuple came through.
+    for i in 0..4u64 {
+        let out = trig.take_outputs(&binding_name(i as usize));
+        let xs: Vec<f64> = out.iter().filter_map(|t| t.get("X")).collect();
+        assert_eq!(xs, [i as f64 + 1.0], "binding {i} lost its tuple");
+    }
+}
+
+#[test]
+fn warm_policy_expiry_sweeps_stale_entries() {
+    // WarmPolicy::max_idle bounds warmth shelf life: a zero shelf life
+    // means the next pump's sweep evicts immediately.
+    let metrics = rpulsar::metrics::Registry::new();
+    let mut pool = WarmPool::new(
+        WarmPolicy { capacity: 4, prebuild: true, max_idle: Duration::ZERO },
+        metrics.clone(),
+    );
+    let mut deployer =
+        rpulsar::stream::deploy::TopologyManager::new(rpulsar::stream::engine::StreamEngine::new());
+    let pipeline = relay("job");
+    let handle = rpulsar::stream::pipeline::Deployer::deploy(&mut deployer, &pipeline).unwrap();
+    let outcome = pool.park(&mut deployer, "job", handle, false, &pipeline).unwrap();
+    assert!(outcome.tail.is_empty() && outcome.evicted.is_empty());
+    assert_eq!(pool.resident(), 1);
+    let swept = pool.sweep(&mut deployer).unwrap();
+    assert_eq!(swept.len(), 1, "zero shelf life must sweep immediately");
+    assert_eq!(pool.resident(), 0);
+    assert_eq!(metrics.counter("trigger.pool_evictions").get(), 1);
+    assert!(deployer.running().is_empty());
+}
