@@ -1,0 +1,368 @@
+#!/usr/bin/env python3
+"""Behavioral pre-validation of the checkpoint/recovery protocol
+(PR 10) — no cargo in the dev container, so the epoch-barrier /
+global-rollback / replay sequencing is fuzzed here before the Rust
+implementation.
+
+Model
+-----
+Same route shape as migration_sim: a linear chain of stages split into
+contiguous fragments with staging queues between them, one stateful
+keyed tumbling window. Three durability layers, mirroring the Rust
+design:
+
+- **volatile**: fragment operator state, staged batches, delivered
+  inboxes, and *uncommitted* collected outputs — all lost on a crash;
+- **durable journal** (the LSM `ckpt/` + `ilog/` keyspace): every fed
+  batch is appended to a write-ahead ingest log *before* it enters the
+  route, and each checkpoint persists an atomic epoch record
+  `(epoch, cursor, per-fragment per-stage states)`;
+- **committed outputs**: outputs released to the consumer only at a
+  checkpoint commit (or at clean stop) — never retracted.
+
+Checkpoint protocol under test (the Rust `checkpoint_route` contract):
+
+1. stop feeding, halt the shipper (a barrier frame crosses each hop),
+2. quiesce front-to-back: deliver every staged batch and pump every
+   fragment dry, shipping trailing outputs downstream — the aligned
+   epoch barrier (inside a fragment the engine's Export markers align
+   parallel replicas the same way),
+3. snapshot every stage's per-key state *in place* (open windows move
+   out and are reseeded — processing continues afterwards),
+4. persist `(epoch, cursor=tuples-fed, states)` atomically; GC the
+   superseded epoch and the ingest-log prefix below the cursor,
+5. commit the pending outputs: everything collected so far becomes
+   visible to the consumer exactly once.
+
+Crash/recovery protocol under test (`recover_stream`):
+
+- a crash at ANY interleaving point wipes all volatile state;
+- recovery restores every fragment (survivors included — global
+  rollback, no divergent epochs) from the latest committed epoch,
+  clears staging, and replays the ingest log from the checkpointed
+  cursor; log entries below the cursor are never replayed (sequence
+  dedup) and committed outputs are never re-released (epoch dedup).
+
+Invariants fuzzed:
+
+- committed outputs after clean stop are multiset-equal to a
+  never-crashed single-node reference run,
+- per-key output order matches the reference exactly,
+- no divergent epochs: epoch numbers strictly increase and recovery
+  always lands on the latest committed epoch,
+- replay accounting: replayed tuples == tuples fed since the last
+  checkpoint at crash time,
+- no output is ever delivered twice (committed set only grows),
+- bounded steps (no livelock).
+"""
+
+import random
+import sys
+from collections import defaultdict
+
+WINDOW = 3
+
+
+class KeyedWindow:
+    def __init__(self):
+        self.bufs = defaultdict(list)
+
+    def process(self, t):
+        k, v = t
+        buf = self.bufs[k]
+        buf.append(v)
+        if len(buf) == WINDOW:
+            out = (k, sum(buf))
+            self.bufs[k] = []
+            return [out]
+        return []
+
+    def export_state(self):
+        state = {k: list(b) for k, b in self.bufs.items() if b}
+        self.bufs = defaultdict(list)
+        return state
+
+    def import_state(self, state):
+        for k, b in state.items():
+            self.bufs[k].extend(b)
+
+    def finish(self):
+        outs = [(k, sum(b)) for k, b in sorted(self.bufs.items()) if b]
+        self.bufs = defaultdict(list)
+        return outs
+
+
+class Mapper:
+    def __init__(self, delta):
+        self.delta = delta
+
+    def process(self, t):
+        return [(t[0], t[1] + self.delta)]
+
+    def export_state(self):
+        return {}
+
+    def import_state(self, state):
+        assert not state
+
+    def finish(self):
+        return []
+
+
+def make_stage(spec):
+    return KeyedWindow() if spec == "kwin" else Mapper(int(spec[3:]))
+
+
+class Fragment:
+    def __init__(self, specs):
+        self.specs = specs
+        self.inbox = []
+        self.stages = [make_stage(s) for s in specs]
+
+    def run_batch(self, batch):
+        for stage in self.stages:
+            nxt = []
+            for t in batch:
+                nxt.extend(stage.process(t))
+            batch = nxt
+        return batch
+
+    def drain_inbox(self):
+        out = []
+        while self.inbox:
+            out.extend(self.run_batch(self.inbox.pop(0)))
+        return out
+
+    def snapshot(self):
+        """Non-destructive state snapshot: export, then reseed in place
+        (the Rust `Control::Snapshot` — replicas respawn with the same
+        state)."""
+        states = [s.export_state() for s in self.stages]
+        for stage, st in zip(self.stages, states):
+            stage.import_state(st)
+        return states
+
+    def restore(self, states):
+        self.stages = [make_stage(s) for s in self.specs]
+        for stage, st in zip(self.stages, states):
+            stage.import_state(st)
+        self.inbox = []
+
+    def finish(self):
+        out = self.drain_inbox()
+        for i, stage in enumerate(self.stages):
+            flushed = stage.finish()
+            for later in self.stages[i + 1:]:
+                nxt = []
+                for t in flushed:
+                    nxt.extend(later.process(t))
+                flushed = nxt
+            out.extend(flushed)
+        return out
+
+
+class Route:
+    """The durable/volatile split: `journal`, `ilog`, `committed` live;
+    everything else dies with a crash."""
+
+    def __init__(self, frag_specs):
+        self.frag_specs = frag_specs
+        self.frags = [Fragment(s) for s in frag_specs]
+        self.staged = [[] for _ in frag_specs]
+        self.pending = []          # collected but uncommitted outputs
+        self.committed = []        # released to the consumer
+        # Durable journal.
+        self.ilog = []             # [(start_seq, batch)] append-only
+        self.journal = None        # (epoch, cursor, [frag states])
+        self.epoch = 0
+        self.input_seq = 0         # tuples fed (and ilogged) so far
+        self.replayed = 0
+        self.recoveries = 0
+        self.epochs_seen = [0]
+
+    # -- data path -----------------------------------------------------
+    def feed(self, batch):
+        self.ilog.append((self.input_seq, list(batch)))
+        self.input_seq += len(batch)
+        self.staged[0].append(list(batch))
+
+    def deliver_one(self, i):
+        if not self.staged[i]:
+            return False
+        self.frags[i].inbox.append(self.staged[i].pop(0))
+        return True
+
+    def pump_one(self, i):
+        if not self.frags[i].inbox:
+            return False
+        out = self.frags[i].run_batch(self.frags[i].inbox.pop(0))
+        self.route_out(i, out)
+        return True
+
+    def route_out(self, i, out):
+        if not out:
+            return
+        if i + 1 == len(self.frags):
+            self.pending.extend(out)
+        else:
+            self.staged[i + 1].append(out)
+
+    # -- checkpoint barrier -------------------------------------------
+    def quiesce(self):
+        for i in range(len(self.frags)):
+            while self.deliver_one(i) or self.pump_one(i):
+                pass
+
+    def checkpoint(self):
+        self.quiesce()
+        states = [f.snapshot() for f in self.frags]
+        self.epoch += 1
+        self.epochs_seen.append(self.epoch)
+        # Atomic epoch record + GC of the superseded epoch and the
+        # ingest-log prefix at/below the cursor.
+        self.journal = (self.epoch, self.input_seq, states)
+        self.ilog = [(s, b) for s, b in self.ilog if s >= self.input_seq]
+        # Commit: pending outputs become visible exactly once.
+        self.committed.extend(self.pending)
+        self.pending = []
+
+    # -- crash / recovery ---------------------------------------------
+    def crash(self):
+        """kill -9: all volatile state gone."""
+        self.frags = [None] * len(self.frag_specs)
+        self.staged = [[] for _ in self.frag_specs]
+        self.pending = []
+
+    def recover(self):
+        self.recoveries += 1
+        if self.journal is None:
+            epoch, cursor, states = 0, 0, [None] * len(self.frag_specs)
+        else:
+            epoch, cursor, states = self.journal
+        assert epoch == self.epoch, (
+            f"divergent epochs: journal at {epoch}, route saw {self.epoch}"
+        )
+        # Global rollback: every fragment restored from the same epoch.
+        self.frags = [Fragment(s) for s in self.frag_specs]
+        for frag, st in zip(self.frags, states):
+            if st is not None:
+                frag.restore(st)
+        # Replay the backlog; entries below the cursor were GC'd (and
+        # would be skipped by the seq guard anyway).
+        expect_replay = self.input_seq - cursor
+        replayed = 0
+        for start_seq, batch in self.ilog:
+            if start_seq < cursor:
+                continue
+            self.staged[0].append(list(batch))
+            replayed += len(batch)
+        assert replayed == expect_replay, (
+            f"replay accounting: {replayed} != {expect_replay}"
+        )
+        self.replayed += replayed
+
+    def stop(self):
+        """Clean stop: quiesce, flush partial windows, commit all."""
+        for i in range(len(self.frags)):
+            while self.deliver_one(i) or self.pump_one(i):
+                pass
+            self.route_out(i, self.frags[i].finish())
+        self.committed.extend(self.pending)
+        self.pending = []
+        return self.committed
+
+
+def reference_run(specs, tuples):
+    frag = Fragment(specs)
+    out = frag.run_batch(list(tuples))
+    return out + frag.finish()
+
+
+def run_case(seed):
+    rng = random.Random(seed)
+    nstages = rng.randint(2, 5)
+    specs = [f"map{rng.randint(1, 9)}" for _ in range(nstages - 1)]
+    specs.insert(rng.randrange(nstages), "kwin")
+    cuts = sorted(rng.sample(range(1, nstages), rng.randint(0, nstages - 1)))
+    bounds = [0] + cuts + [nstages]
+    route = Route([specs[a:b] for a, b in zip(bounds, bounds[1:])])
+    nfrags = len(route.frags)
+
+    nkeys = rng.randint(1, 5)
+    seqs = defaultdict(int)
+    tuples = []
+    for _ in range(rng.randint(5, 140)):
+        k = rng.randrange(nkeys)
+        seqs[k] += 1
+        tuples.append((k, seqs[k] * 1000 + rng.randint(0, 9)))
+
+    fed = 0
+    steps = 0
+    committed_watermark = 0
+    while fed < len(tuples) or rng.random() < 0.3:
+        steps += 1
+        assert steps < 20_000, f"seed {seed}: livelock"
+        action = rng.random()
+        if action < 0.35 and fed < len(tuples):
+            n = min(rng.randint(1, 7), len(tuples) - fed)
+            route.feed(tuples[fed:fed + n])
+            fed += n
+        elif action < 0.55:
+            route.deliver_one(rng.randrange(nfrags))
+        elif action < 0.75:
+            route.pump_one(rng.randrange(nfrags))
+        elif action < 0.88:
+            route.checkpoint()
+        else:
+            # kill -9 at an arbitrary interleaving point, then recover.
+            route.crash()
+            route.recover()
+        # Committed outputs only ever grow (no retraction, no dupes).
+        assert len(route.committed) >= committed_watermark, (
+            f"seed {seed}: committed outputs shrank"
+        )
+        committed_watermark = len(route.committed)
+        if fed == len(tuples) and rng.random() < 0.4:
+            break
+
+    got = route.stop()
+    want = reference_run(specs, tuples)
+
+    assert sorted(got) == sorted(want), (
+        f"seed {seed}: multiset diverged after {route.recoveries} recoveries\n"
+        f" got {sorted(got)}\nwant {sorted(want)}"
+    )
+    per_key_got = defaultdict(list)
+    per_key_want = defaultdict(list)
+    for k, v in got:
+        per_key_got[k].append(v)
+    for k, v in want:
+        per_key_want[k].append(v)
+    assert per_key_got == per_key_want, f"seed {seed}: per-key order diverged"
+    # No divergent epochs: strictly increasing, no forks.
+    assert route.epochs_seen == sorted(set(route.epochs_seen)), (
+        f"seed {seed}: epoch fork {route.epochs_seen}"
+    )
+    return route.recoveries, route.epoch, route.replayed, len(got)
+
+
+def main():
+    cases = int(sys.argv[1]) if len(sys.argv) > 1 else 3000
+    recoveries = epochs = replayed = outputs = 0
+    for seed in range(cases):
+        r, e, rp, o = run_case(seed)
+        recoveries += r
+        epochs += e
+        replayed += rp
+        outputs += o
+    print(
+        f"recovery_sim OK: {cases} randomized crash×interleaving schedules, "
+        f"{recoveries} recoveries over {epochs} epochs, "
+        f"{replayed} tuples replayed, {outputs} outputs verified "
+        f"(exactly-once multiset, per-key order, no divergent epochs, "
+        f"replay accounting, bounded steps)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+//! Fig. 19 (beyond the paper): checkpoint/recovery — a keyed analytics
+//! chain survives a whole-node kill mid-stream, at several checkpoint
+//! intervals.
+//!
+//! The scenario, on an in-process `Cluster` of four nodes (ingest,
+//! featurize and the keyed window on three of them, one spare
+//! survivor):
+//!
+//! - **baseline**: checkpoints never enabled, no kill — the raw feed
+//!   throughput every other arm's overhead is measured against.
+//! - **ckpt-N** (one arm per interval): durable checkpoints every `N`
+//!   input tuples; halfway through the feed the window fragment's host
+//!   is killed outright. The coordinator detects the dead member,
+//!   restarts the fragment on the best survivor seeded from the latest
+//!   committed epoch, and replays the journaled backlog — the final
+//!   output multiset must equal the uncrashed single-process ground
+//!   truth (the exactly-once contract `rust/tests/recovery.rs`
+//!   property-tests).
+//!
+//! Reported per arm: wall-clock feed throughput, committed epochs and
+//! journal bytes (checkpoint overhead), recovery pause, replayed
+//! tuples and fragment restarts — the interval trades steady-state
+//! overhead against replay work, which is the curve this figure draws.
+//!
+//! Writes `BENCH_recovery.json` at the repo root so later PRs can
+//! track the recovery curve. `-- --test` runs a seconds-long smoke
+//! (CI gate). With `RPULSAR_CHECKPOINT=off` only the baseline arm
+//! runs (a kill without checkpoints is data loss by design).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{header, smoke_mode};
+use rpulsar::config::DeviceKind;
+use rpulsar::coordinator::Cluster;
+use rpulsar::stream::checkpoint::checkpointing_enabled;
+use rpulsar::stream::deploy::TopologyManager;
+use rpulsar::stream::dist::{Fragment, PlacementPlan};
+use rpulsar::stream::engine::StreamEngine;
+use rpulsar::stream::operator::OperatorKind;
+use rpulsar::stream::topology::Topology;
+use rpulsar::stream::tuple::Tuple;
+use std::hint::black_box;
+use std::time::Instant;
+
+const KEYS: u64 = 16;
+const SPEC: &str = "ingest->featurize@K->kwin@K";
+const STAGES: [&str; 3] = ["ingest", "featurize", "kwin"];
+
+fn make_stage(name: &str, window: usize) -> OperatorKind {
+    match name {
+        "ingest" => OperatorKind::map("ingest", |mut t| {
+            let v = t.get("V").unwrap_or(0.0);
+            t.set("V", v + 1.0);
+            t
+        }),
+        "featurize" => OperatorKind::map("featurize", |mut t| {
+            let v = t.get("V").unwrap_or(0.0);
+            // Fixed CPU work, value-neutral: throughput numbers mean
+            // something beyond channel overhead.
+            let mut acc = 0.0f64;
+            for i in 0..40 {
+                acc += (v + i as f64).sqrt();
+            }
+            black_box(acc);
+            t.set("V", v * 2.0);
+            t
+        }),
+        "kwin" => OperatorKind::window_by("kwin", "V", window, "K"),
+        other => unreachable!("unknown stage {other}"),
+    }
+}
+
+fn tuples(total: usize) -> Vec<Tuple> {
+    (0..total)
+        .map(|i| {
+            Tuple::new(i as u64, vec![])
+                .with("K", (i as u64 % KEYS) as f64)
+                .with("V", (i % 97) as f64 * 0.5)
+        })
+        .collect()
+}
+
+fn canon(out: Vec<Tuple>) -> Vec<String> {
+    let mut v: Vec<String> = out.into_iter().map(|t| format!("{:?}", t.fields)).collect();
+    v.sort();
+    v
+}
+
+/// One measured arm: throughput plus the checkpoint/recovery counters.
+struct Arm {
+    label: String,
+    /// Checkpoint interval in input tuples; `0` = checkpoints off.
+    interval: u64,
+    tps: f64,
+    epochs: u64,
+    ckpt_bytes: u64,
+    ckpt_us: u64,
+    pause_ms: u64,
+    replayed: u64,
+    restarts: u64,
+}
+
+/// Run the chain over `input` on a fresh four-node cluster. With
+/// `interval` set, durable checkpoints are enabled; with `kill`, the
+/// window fragment's host dies at the halfway chunk and the run must
+/// still match `expected` exactly-once.
+fn run_arm(
+    label: &str,
+    interval: Option<u64>,
+    kill: bool,
+    input: &[Tuple],
+    window: usize,
+    batch: usize,
+    expected: &[String],
+) -> Arm {
+    let mut c = Cluster::new(&format!("fig19-{label}"), 4, DeviceKind::Native).unwrap();
+    for id in c.ids() {
+        let topologies = c.node_mut(&id).unwrap().topologies_mut();
+        for name in STAGES {
+            topologies.register_stage(name, move || Box::new(make_stage(name, window)));
+        }
+    }
+    let ids = c.ids();
+    let topo = Topology::parse("job", SPEC).unwrap();
+    let plan = PlacementPlan {
+        fragments: vec![
+            Fragment { node: ids[0], stages: topo.stages[0..1].to_vec() },
+            Fragment { node: ids[1], stages: topo.stages[1..2].to_vec() },
+            Fragment { node: ids[2], stages: topo.stages[2..3].to_vec() },
+        ],
+    };
+    c.deploy_stream("job", SPEC, &plan).unwrap();
+    if let Some(iv) = interval {
+        assert!(c.enable_checkpoints("job", iv).unwrap(), "plane is on: enable must take");
+    }
+
+    let chunks: Vec<&[Tuple]> = input.chunks(batch).collect();
+    let kill_at = chunks.len() / 2;
+    let clock = Instant::now();
+    let mut out = Vec::new();
+    for (i, chunk) in chunks.iter().enumerate() {
+        if kill && i == kill_at {
+            let victim = c.stream_route("job").unwrap().hops()[2].node;
+            c.kill_node(&victim).unwrap();
+        }
+        c.stream_send_batch("job", chunk.to_vec()).unwrap();
+        out.extend(c.stream_pump("job").unwrap());
+    }
+    out.extend(c.stream_stop("job").unwrap());
+    let secs = clock.elapsed().as_secs_f64().max(1e-9);
+
+    let m = c.stream_metrics();
+    let arm = Arm {
+        label: label.to_string(),
+        interval: interval.unwrap_or(0),
+        tps: input.len() as f64 / secs,
+        epochs: m.counter("ckpt.epochs").get(),
+        ckpt_bytes: m.counter("ckpt.bytes").get(),
+        ckpt_us: m.counter("ckpt.duration_us").get(),
+        pause_ms: m.counter("recovery.pause_ms").get(),
+        replayed: m.counter("recovery.replayed_tuples").get(),
+        restarts: m.counter("recovery.restarts").get(),
+    };
+    if kill {
+        assert!(arm.restarts >= 1, "{label}: the kill must trigger a failover");
+        assert!(arm.epochs >= 1, "{label}: at least one epoch must have committed");
+    }
+    assert_eq!(canon(out), expected.to_vec(), "{label}: recovery must be exactly-once");
+    c.shutdown().unwrap();
+    arm
+}
+
+fn main() {
+    header(
+        "Fig. 19 — checkpoint/recovery (node kill, durable epochs, exactly-once replay)",
+        "edge pipelines keep their data-driven contract through resource loss",
+    );
+    let smoke = smoke_mode();
+    // Window sizes chosen so open keyed state exists at the kill point
+    // (per-key arrival counts are not window multiples) — recovery has
+    // to restore mid-window operator state, not just cursors.
+    let (total, window, batch) = if smoke { (600usize, 4usize, 48usize) } else { (24_000, 7, 256) };
+    let intervals: &[u64] = if smoke { &[8, 32] } else { &[64, 256, 1024] };
+    let input = tuples(total);
+    println!("{total} tuples over {KEYS} keys, window={window}, spec={SPEC}, smoke={smoke}");
+
+    // Ground truth: the same spec on one single-process manager.
+    let mut local = TopologyManager::new(StreamEngine::new());
+    for name in STAGES {
+        local.register_stage(name, move || Box::new(make_stage(name, window)));
+    }
+    local.start("job", SPEC).unwrap();
+    for chunk in input.chunks(512) {
+        local.send_batch("job", chunk.to_vec()).unwrap();
+    }
+    let expected = canon(local.stop("job").unwrap());
+
+    let mut arms = vec![run_arm("baseline", None, false, &input, window, batch, &expected)];
+    if checkpointing_enabled() {
+        for &iv in intervals {
+            let label = format!("ckpt-{iv}");
+            arms.push(run_arm(&label, Some(iv), true, &input, window, batch, &expected));
+        }
+    } else {
+        println!("RPULSAR_CHECKPOINT=off: kill arms skipped (baseline only)");
+    }
+
+    let base_tps = arms[0].tps;
+    println!(
+        "\n{:<12} {:>12} {:>9} {:>7} {:>10} {:>9} {:>9} {:>9} {:>9}",
+        "arm", "t/s (wall)", "overhead", "epochs", "ckpt B", "ckpt ms", "pause ms", "replayed", "restarts"
+    );
+    for a in &arms {
+        let overhead = if a.interval == 0 {
+            "-".to_string()
+        } else {
+            format!("{:+.1}%", (base_tps / a.tps.max(1e-9) - 1.0) * 100.0)
+        };
+        println!(
+            "{:<12} {:>12.0} {:>9} {:>7} {:>10} {:>9} {:>9} {:>9} {:>9}",
+            a.label,
+            a.tps,
+            overhead,
+            a.epochs,
+            a.ckpt_bytes,
+            a.ckpt_us / 1000,
+            a.pause_ms,
+            a.replayed,
+            a.restarts
+        );
+    }
+
+    write_bench_json(smoke, &arms);
+    println!("\nfig19 OK");
+}
+
+/// Bench-trajectory record for later PRs, written at the repo root.
+fn write_bench_json(smoke: bool, arms: &[Arm]) {
+    let rows: Vec<String> = arms
+        .iter()
+        .map(|a| {
+            format!(
+                "    {{\"arm\": \"{}\", \"interval\": {}, \"tuples_per_sec\": {:.1}, \
+                 \"epochs\": {}, \"ckpt_bytes\": {}, \"ckpt_us\": {}, \
+                 \"recovery_pause_ms\": {}, \"replayed_tuples\": {}, \"restarts\": {}}}",
+                a.label,
+                a.interval,
+                a.tps,
+                a.epochs,
+                a.ckpt_bytes,
+                a.ckpt_us,
+                a.pause_ms,
+                a.replayed,
+                a.restarts
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"fig19_recovery\",\n  \"smoke\": {smoke},\n  \"arms\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_recovery.json");
+    match std::fs::write(path, json) {
+        Ok(()) => println!("bench trajectory written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

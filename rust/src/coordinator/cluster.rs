@@ -26,6 +26,9 @@ use crate::overlay::quadtree::QuadTree;
 use crate::overlay::ring::{build_converged_tables, simulate_lookup, RoutingTable};
 use crate::pipeline::trigger::{TriggerOptions, TriggerStats};
 use crate::routing::router::ContentRouter;
+use crate::stream::checkpoint::{
+    checkpointing_enabled, CheckpointJournal, CheckpointRecord, CheckpointReport, RouteCheckpoint,
+};
 use crate::stream::deploy::TopologyManager;
 use crate::stream::dist::{
     self, plan_placement, ClusterPolicy, Fragment, FragmentHost, MigrationReport, PlacementPlan,
@@ -38,7 +41,13 @@ use crate::stream::tuple::Tuple;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Test hook: when set to a node *name*, that node is kill-9'd (crash
+/// semantics, no drain) the next time a stream feed touches the
+/// cluster — whole-node failure injection for the recovery suite.
+/// Idempotent: once the node is gone the variable matches nothing.
+pub const NODE_CRASH_ENV: &str = "RPULSAR_TEST_NODE_CRASH";
 
 /// The in-process cluster.
 pub struct Cluster {
@@ -64,6 +73,14 @@ pub struct Cluster {
     /// Consecutive same-direction watermark hits per `frag_key/stage`,
     /// debouncing [`Cluster::stream_policy_tick`] rescales.
     policy_streaks: BTreeMap<String, (usize, u32)>,
+    /// The durable checkpoint journal (`base_dir/ckpt`), opened lazily
+    /// by the first [`Cluster::enable_checkpoints`] /
+    /// [`Cluster::enable_checkpoint_journal`].
+    ckpt_journal: Option<CheckpointJournal>,
+    /// Identities of killed nodes ([`Cluster::kill_node`]), so
+    /// [`Cluster::restart_node`] can rebuild the same member — same
+    /// name, same [`NodeId`], same durable directories.
+    graveyard: BTreeMap<NodeId, (String, GeoPoint)>,
 }
 
 /// The cluster hosts topology fragments on its nodes' own managers and
@@ -140,6 +157,8 @@ impl Cluster {
             fed_map,
             fed_rr: 0,
             policy_streaks: BTreeMap::new(),
+            ckpt_journal: None,
+            graveyard: BTreeMap::new(),
         })
     }
 
@@ -434,6 +453,16 @@ impl Cluster {
             }
             self.nodes.get_mut(&id).unwrap().apply_registration(consumer, profile.clone(), ttl);
         }
+        // With the checkpoint journal enabled, registrations are
+        // durable: a node restarted after a crash re-applies them (see
+        // `Cluster::restart_node`).
+        if let Some(journal) = &self.ckpt_journal {
+            journal.record_registration(
+                consumer,
+                profile,
+                ttl.map(|d| d.as_millis() as u64).unwrap_or(0),
+            )?;
+        }
         Ok(())
     }
 
@@ -453,6 +482,9 @@ impl Cluster {
                 self.charge_route(origin, id, wire);
             }
             any |= self.nodes.get_mut(&id).unwrap().remove_registration(consumer);
+        }
+        if let Some(journal) = &self.ckpt_journal {
+            journal.remove_registration(consumer)?;
         }
         Ok(any)
     }
@@ -625,7 +657,21 @@ impl Cluster {
 
     /// Feed a batch. Async streams hand hop movement to their
     /// background shipper; sync streams pump inter-node hops inline.
+    /// On a checkpointed stream the batch is write-ahead logged first,
+    /// a dead hop triggers recovery before any new data enters the
+    /// route, and the periodic epoch barrier fires when due.
     pub fn stream_send_batch(&mut self, key: &str, batch: Vec<Tuple>) -> Result<()> {
+        self.maybe_inject_crash();
+        let checkpointed =
+            self.streams.get(key).map(|r| r.checkpoint().is_some()).unwrap_or(false);
+        if checkpointed {
+            return self.checkpointed_send(key, batch);
+        }
+        self.feed_deployed(key, batch)
+    }
+
+    /// The plain (pre-checkpoint) feed body, shared by both paths.
+    fn feed_deployed(&mut self, key: &str, batch: Vec<Tuple>) -> Result<()> {
         {
             let this = &*self;
             if let Some(route) = this.streams.get(key) {
@@ -638,6 +684,50 @@ impl Cluster {
         let r = dist::feed_route(&*self, &mut route, batch);
         self.streams.insert(key.to_string(), route);
         r
+    }
+
+    /// Checkpointed feed: detect-and-recover, write-ahead log, feed,
+    /// then run the epoch barrier if the interval has elapsed.
+    fn checkpointed_send(&mut self, key: &str, batch: Vec<Tuple>) -> Result<()> {
+        if self.stream_has_dead_hop(key) {
+            self.recover_stream(key)?;
+        }
+        {
+            let route = self
+                .streams
+                .get_mut(key)
+                .ok_or_else(|| Error::NotRunning(format!("stream topology `{key}`")))?;
+            let ckpt = route.checkpoint_mut().expect("caller checked the route is checkpointed");
+            ckpt.note_input(key, &batch)?;
+        }
+        self.feed_deployed(key, batch)?;
+        let due =
+            self.streams.get(key).and_then(|r| r.checkpoint()).map(|c| c.due()).unwrap_or(false);
+        if due {
+            self.checkpoint_stream(key)?;
+        }
+        Ok(())
+    }
+
+    /// Whether any of a deployed stream's fragments is hosted on a node
+    /// that is no longer a cluster member — the failure detector.
+    fn stream_has_dead_hop(&self, key: &str) -> bool {
+        self.streams
+            .get(key)
+            .map(|st| st.hops().iter().any(|h| !self.nodes.contains_key(&h.node)))
+            .unwrap_or(false)
+    }
+
+    /// Kill the node named by [`NODE_CRASH_ENV`], if it is (still) a
+    /// member. No-op without the variable — and after the first hit,
+    /// because the victim is gone.
+    fn maybe_inject_crash(&mut self) {
+        let Ok(victim) = std::env::var(NODE_CRASH_ENV) else { return };
+        let Some(id) = self.nodes.values().find(|n| n.name() == victim).map(|n| n.id()) else {
+            return;
+        };
+        log::warn!("injected whole-node crash: {victim} ({id})");
+        let _ = self.kill_node(&id);
     }
 
     /// Move in-flight batches across the stream's node hops
@@ -656,6 +746,24 @@ impl Cluster {
     /// still return them.
     fn pump_stream_collect(&mut self, key: &str, max: usize) -> Result<Vec<Tuple>> {
         self.tick();
+        let checkpointed = self
+            .streams
+            .get(key)
+            .ok_or_else(|| Error::NotRunning(format!("stream topology `{key}`")))?
+            .checkpoint()
+            .is_some();
+        if checkpointed {
+            // The committed-output gate: fresh outputs park in the
+            // pending set; only epochs that committed are released.
+            if self.stream_has_dead_hop(key) {
+                self.recover_stream(key)?;
+            }
+            let outs = self.drain_outputs(key)?;
+            let route = self.streams.get_mut(key).expect("checked above");
+            let ckpt = route.checkpoint_mut().expect("checked above");
+            ckpt.pending.extend(outs);
+            return Ok(ckpt.take_committed(max));
+        }
         {
             let route = self
                 .streams
@@ -668,6 +776,25 @@ impl Cluster {
         let mut route = self.take_stream(key)?;
         let r = dist::pump_route(&*self, &mut route);
         let out = if r.is_ok() { route.take_up_to(max) } else { Vec::new() };
+        self.streams.insert(key.to_string(), route);
+        r.map(|()| out)
+    }
+
+    /// Drain everything the route has produced so far (ungated — the
+    /// checkpointed pump path parks the result in the pending gate).
+    fn drain_outputs(&mut self, key: &str) -> Result<Vec<Tuple>> {
+        {
+            let route = self
+                .streams
+                .get(key)
+                .ok_or_else(|| Error::NotRunning(format!("stream topology `{key}`")))?;
+            if route.has_shipper() {
+                return dist::poll_route_async(route, usize::MAX);
+            }
+        }
+        let mut route = self.take_stream(key)?;
+        let r = dist::pump_route(&*self, &mut route);
+        let out = if r.is_ok() { route.take_collected() } else { Vec::new() };
         self.streams.insert(key.to_string(), route);
         r.map(|()| out)
     }
@@ -874,6 +1001,248 @@ impl Cluster {
         Ok(reports)
     }
 
+    // ---- Checkpoint/recovery plane (durable progress, crash failover) ----
+
+    /// Open (or hand back) the cluster's durable checkpoint journal at
+    /// `base_dir/ckpt`. Reopening after a process restart recovers
+    /// every journaled record.
+    fn open_checkpoint_journal(&mut self) -> Result<CheckpointJournal> {
+        if let Some(j) = &self.ckpt_journal {
+            return Ok(j.clone());
+        }
+        let j = CheckpointJournal::open(self.base_dir.join("ckpt"))?;
+        self.ckpt_journal = Some(j.clone());
+        Ok(j)
+    }
+
+    /// Opt the cluster into the durable journal without checkpointing
+    /// any stream yet — federation registrations start journaling (and
+    /// surviving node loss) from here. Returns `false` (no-op) when
+    /// `RPULSAR_CHECKPOINT=off` disables the plane.
+    pub fn enable_checkpoint_journal(&mut self) -> Result<bool> {
+        if !checkpointing_enabled() {
+            return Ok(false);
+        }
+        self.open_checkpoint_journal()?;
+        Ok(true)
+    }
+
+    /// The journal handle, if the plane has been enabled (tests,
+    /// benches, warm-pool snapshot seeding).
+    pub fn checkpoint_journal(&self) -> Option<&CheckpointJournal> {
+        self.ckpt_journal.as_ref()
+    }
+
+    /// Enable periodic checkpoints on a deployed stream: every
+    /// `interval` input tuples an epoch barrier snapshots all fragment
+    /// state plus the input cursor into the journal. Call right after
+    /// [`Cluster::deploy_stream`], before the first feed — the
+    /// write-ahead ingest log must see every batch the route sees.
+    /// From here outputs are released only as their epoch commits (or
+    /// at clean stop), and a node crash recovers exactly-once instead
+    /// of losing the stream. Returns `false` (leaving the data path
+    /// bit-for-bit unchanged) when `RPULSAR_CHECKPOINT=off`.
+    pub fn enable_checkpoints(&mut self, key: &str, interval: u64) -> Result<bool> {
+        if !checkpointing_enabled() {
+            return Ok(false);
+        }
+        if !self.streams.contains_key(key) {
+            return Err(Error::NotRunning(format!("stream topology `{key}`")));
+        }
+        let journal = self.open_checkpoint_journal()?;
+        let route = self.streams.get_mut(key).expect("presence checked above");
+        if route.checkpoint().is_some() {
+            return Err(Error::Stream(format!("stream `{key}` is already checkpointed")));
+        }
+        route.set_checkpoint(Some(RouteCheckpoint::new(journal, interval)));
+        Ok(true)
+    }
+
+    /// Run one epoch barrier over a checkpointed stream now (the
+    /// periodic trigger calls this from the feed path when the
+    /// interval elapses). See [`dist::checkpoint_route`].
+    pub fn checkpoint_stream(&mut self, key: &str) -> Result<CheckpointReport> {
+        let mut route = self.take_stream(key)?;
+        let r = dist::checkpoint_route(self, &mut route);
+        self.streams.insert(key.to_string(), route);
+        r
+    }
+
+    /// Kill a node with crash semantics — no drain, no migration; the
+    /// same lossy removal as [`Cluster::crash`] — but remember its
+    /// identity so [`Cluster::restart_node`] can bring the member back
+    /// and checkpointed streams can fail over.
+    pub fn kill_node(&mut self, id: &NodeId) -> Result<()> {
+        let node =
+            self.nodes.get(id).ok_or_else(|| Error::NotFound(format!("no node {id}")))?;
+        let identity = (node.name().to_string(), node.location());
+        self.graveyard.insert(*id, identity);
+        self.crash(id)
+    }
+
+    /// Rebuild a killed node as the same member: same name (hence the
+    /// same [`NodeId`] and the same durable queue/store directories —
+    /// `Node::new` namespaces them by name, so on-disk state is
+    /// recovered), same location, re-registered with the network,
+    /// overlay, routing tables and federation map. Journaled federation
+    /// registrations are re-applied, so the restarted node resumes
+    /// matching where the crashed one stopped.
+    pub fn restart_node(&mut self, id: &NodeId) -> Result<()> {
+        if self.nodes.contains_key(id) {
+            return Err(Error::Stream(format!("node {id} is still a live member")));
+        }
+        let (name, loc) = self
+            .graveyard
+            .remove(id)
+            .ok_or_else(|| Error::NotFound(format!("node {id} was never killed")))?;
+        let mut cfg = crate::config::NodeConfig::default();
+        cfg.name = name.clone();
+        cfg.latitude = loc.lat;
+        cfg.longitude = loc.lon;
+        cfg.device = self.device;
+        cfg.queue.dir = self.base_dir.join("queue");
+        cfg.storage.dir = self.base_dir.join("store");
+        let node = Node::new(cfg)?;
+        self.quadtree.insert(*id, loc)?;
+        self.network.register(*id, DeviceProfile::for_kind(self.device));
+        self.network.bring_up(id);
+        self.nodes.insert(*id, node);
+        // Converged routing + mutual peer knowledge over the restored
+        // membership, exactly as the constructor builds them.
+        let ids: Vec<NodeId> = self.nodes.keys().copied().collect();
+        self.tables = build_converged_tables(&ids, 8);
+        for n in self.nodes.values_mut() {
+            for &peer in &ids {
+                if peer != n.id() {
+                    n.learn_peer(peer);
+                }
+            }
+        }
+        self.fed_map.add(&name);
+        if let Some(journal) = self.ckpt_journal.clone() {
+            let regs = journal.registrations()?;
+            let n = self.nodes.get_mut(id).expect("inserted above");
+            for (consumer, profile, ttl_ms) in regs {
+                let ttl = (ttl_ms > 0).then(|| Duration::from_millis(ttl_ms));
+                n.apply_registration(&consumer, profile, ttl);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fail a checkpointed stream over after a node crash: re-home the
+    /// dead hops onto the best-[`dist::PlacementCost`] survivors, roll
+    /// *every* fragment back to the latest committed epoch (global
+    /// rollback — survivors included, so no two fragments run in
+    /// different epochs), and replay the write-ahead ingest log from
+    /// the checkpointed cursor. Uncommitted outputs were discarded by
+    /// the rollback and are regenerated by the replay; committed ones
+    /// are never re-released — exactly-once end to end. Returns how
+    /// many tuples were replayed; counted under `recovery.*`.
+    pub fn recover_stream(&mut self, key: &str) -> Result<usize> {
+        let mut route = self.take_stream(key)?;
+        let r = self.recover_route(key, &mut route);
+        self.streams.insert(key.to_string(), route);
+        r
+    }
+
+    fn recover_route(&mut self, key: &str, route: &mut RouteState) -> Result<usize> {
+        if route.checkpoint().is_none() {
+            return Err(Error::Stream(format!(
+                "stream `{key}` is not checkpointed (a crash is lossy without the \
+                 checkpoint plane — see `Cluster::enable_checkpoints`)"
+            )));
+        }
+        let pause_clock = Instant::now();
+        // Single-thread the route; a fault the shipper recorded against
+        // the dead node is expected and void — the rollback discards
+        // everything uncommitted anyway.
+        let _ = dist::halt_shipper(route);
+        let record = route
+            .checkpoint()
+            .expect("checked above")
+            .journal
+            .latest(key)?
+            .unwrap_or_else(|| CheckpointRecord {
+                topology: key.to_string(),
+                epoch: 0,
+                cursor: 0,
+                fragments: Vec::new(),
+            });
+        let survivors: Vec<NodeId> = self.nodes.keys().copied().collect();
+        if survivors.is_empty() {
+            return Err(Error::Net(format!(
+                "cannot recover stream `{key}`: no surviving node"
+            )));
+        }
+        // Re-place dead hops with the shared cost model. Dead hosts are
+        // costed as uniform cluster devices so every candidate plan
+        // stays rankable; recovery may move the ingestion fragment —
+        // unlike a policy migrate, there is nothing left to pin it to.
+        let plan = PlacementPlan {
+            fragments: route
+                .hops()
+                .iter()
+                .map(|h| Fragment { node: h.node, stages: h.specs.clone() })
+                .collect(),
+        };
+        let mut profiles = self.stream_profiles();
+        for h in route.hops() {
+            profiles.entry(h.node).or_insert_with(|| DeviceProfile::for_kind(self.device));
+        }
+        let cost = dist::PlacementCost::default();
+        let dead: Vec<usize> = route
+            .hops()
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| !self.nodes.contains_key(&h.node))
+            .map(|(f, _)| f)
+            .collect();
+        for f in dead {
+            let to = dist::best_host_for(&cost, &plan, f, &survivors, &profiles, &[])
+                .map(|(_, id)| id)
+                .unwrap_or(survivors[0]);
+            route.rehome_hop(f, to);
+        }
+        let restarted = dist::rollback_route(self, route, &record)?;
+        {
+            let ckpt = route.checkpoint_mut().expect("checked above");
+            ckpt.pending.clear();
+            ckpt.epoch = record.epoch;
+            ckpt.cursor = record.cursor;
+            // `input_seq` stays: the WAL writer (this process) survived
+            // the node crash, so the in-memory log position is valid.
+        }
+        if self.async_net {
+            dist::start_shipper(&*self, route)?;
+        }
+        // Replay the backlog from the checkpointed cursor — straight
+        // into the route, never re-logged (the entries are already in
+        // the WAL under their original sequence numbers).
+        let batches =
+            route.checkpoint().expect("checked above").journal.replay_input(key, record.cursor)?;
+        let mut replayed = 0usize;
+        for (_, batch) in batches {
+            replayed += batch.len();
+            if route.has_shipper() {
+                dist::feed_route_async(&*self, route, batch)?;
+            } else {
+                dist::feed_route(&*self, route, batch)?;
+            }
+        }
+        let pause = pause_clock.elapsed();
+        self.metrics.counter("recovery.restarts").add(restarted as u64);
+        self.metrics.counter("recovery.replayed_tuples").add(replayed as u64);
+        self.metrics.counter("recovery.pause_ms").add(pause.as_millis() as u64);
+        log::info!(
+            "recovered stream `{key}` from epoch {} (cursor {}): {restarted} fragments \
+             restarted, {replayed} tuples replayed, pause {pause:?}",
+            record.epoch,
+            record.cursor
+        );
+        Ok(replayed)
+    }
+
     /// Housekeeping pass over every node: publishes each node's gauges
     /// into the cluster registry as `node.{name}.{gauge}` (the policy
     /// plane's cluster-wide view), then runs broker idle-topic
@@ -889,17 +1258,50 @@ impl Cluster {
                 Err(e) => log::warn!("node {id} housekeeping tick: {e}"),
             }
         }
+        // Failure detection for the checkpoint plane: a checkpointed
+        // stream with a hop on a departed member fails over here (the
+        // feed/pump paths also check, so whichever runs first wins).
+        let orphaned: Vec<String> = self
+            .streams
+            .iter()
+            .filter(|(_, st)| {
+                st.checkpoint().is_some()
+                    && st.hops().iter().any(|h| !self.nodes.contains_key(&h.node))
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        for key in orphaned {
+            if let Err(e) = self.recover_stream(&key) {
+                log::warn!("stream `{key}` recovery from tick failed: {e}");
+            }
+        }
         retired
     }
 
     /// Tear a deployed stream down: halt its shipper (if any), then
     /// cascade-drain every fragment front-to-back (zero loss across
     /// node boundaries) and return the complete remaining output. A
-    /// fault the shipper recorded wins.
+    /// fault the shipper recorded wins. On a checkpointed stream the
+    /// clean stop releases the gated outputs too (committed-but-unread
+    /// first, then uncommitted, then the drain tail — input order) and
+    /// retires the stream's journal state.
     pub fn stream_stop(&mut self, key: &str) -> Result<Vec<Tuple>> {
         let mut route = self.take_stream(key)?;
         let fault = dist::halt_shipper(&mut route);
-        dist::stop_route_seeded(self, route, fault)
+        let gated = route.checkpoint_mut().map(|ckpt| {
+            let mut head: Vec<Tuple> = ckpt.committed.drain(..).collect();
+            head.append(&mut ckpt.pending);
+            (head, ckpt.journal.clone())
+        });
+        let tail = dist::stop_route_seeded(self, route, fault)?;
+        match gated {
+            Some((mut head, journal)) => {
+                journal.forget(key)?;
+                head.extend(tail);
+                Ok(head)
+            }
+            None => Ok(tail),
+        }
     }
 
     /// Keys of deployed distributed streams.
@@ -1593,6 +1995,70 @@ mod tests {
             .apply_federation_frame(NetMessage::Ping { from: origin })
             .is_err());
         ep.shutdown();
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn checkpointed_stream_survives_node_kill_exactly_once() {
+        if !checkpointing_enabled() {
+            return; // RPULSAR_CHECKPOINT=off A/B arm: the plane is a no-op.
+        }
+        let mut c = Cluster::new("ckpt", 4, DeviceKind::Native).unwrap();
+        register_stream_stages(&mut c);
+        let ids = c.ids();
+        let (edge, core) = (ids[0], ids[1]);
+        let topo = Topology::parse("job", "inc->sum@K").unwrap();
+        c.deploy_stream("job", "inc->sum@K", &PlacementPlan::split_at(&topo, 1, edge, core))
+            .unwrap();
+        assert!(c.enable_checkpoints("job", 4).unwrap());
+        assert!(c.enable_checkpoints("job", 4).is_err(), "double enable refuses");
+        for i in 0..8u64 {
+            c.stream_send("job", Tuple::new(i, vec![]).with("K", (i % 2) as f64).with("X", 1.0))
+                .unwrap();
+        }
+        assert!(c.stream_metrics().counter("ckpt.epochs").get() >= 1, "interval 4 must fire");
+        // Kill-9 the tail fragment's host mid-stream: no drain, no
+        // goodbye. The next feed detects the dead hop, fails over to a
+        // survivor, rolls back to the last epoch and replays the WAL.
+        c.kill_node(&core).unwrap();
+        for i in 8..16u64 {
+            c.stream_send("job", Tuple::new(i, vec![]).with("K", (i % 2) as f64).with("X", 1.0))
+                .unwrap();
+        }
+        assert!(c.stream_metrics().counter("recovery.restarts").get() >= 1);
+        let route = c.stream_route("job").unwrap();
+        assert!(route.hops().iter().all(|h| h.node != core), "dead hop re-homed");
+        // Exactly-once: 16 tuples over 2 keys with window 2 make
+        // exactly 8 complete windows — no loss, no duplicates — same
+        // multiset an uncrashed run produces.
+        let mut out = c.stream_pump("job").unwrap();
+        out.extend(c.stream_stop("job").unwrap());
+        assert_eq!(out.len(), 8, "{out:?}");
+        assert!(out.iter().all(|t| t.get("COUNT") == Some(2.0)), "{out:?}");
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn restart_node_rejoins_and_reapplies_journaled_registrations() {
+        let mut c = Cluster::new("restart", 3, DeviceKind::Native).unwrap();
+        let journaled = c.enable_checkpoint_journal().unwrap();
+        let ids = c.ids();
+        let (origin, victim) = (ids[0], ids[2]);
+        let watch = Profile::parse("drone,*").unwrap();
+        c.federated_subscribe(origin, "watch", &watch, None).unwrap();
+        c.kill_node(&victim).unwrap();
+        assert_eq!(c.len(), 2);
+        c.restart_node(&victim).unwrap();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.federation_map().len(), 3, "restarted member rejoins the HRW map");
+        if journaled {
+            // Satellite contract: the fresh node resumes matching where
+            // the crashed one stopped — from the journal, not gossip.
+            assert!(c.node(&victim).unwrap().is_registered("watch"));
+        }
+        // A live member is not restartable; neither is a stranger.
+        assert!(c.restart_node(&victim).is_err());
+        assert!(c.restart_node(&NodeId::from_name("ghost")).is_err());
         c.shutdown().unwrap();
     }
 }

@@ -6,5 +6,5 @@
 pub mod cluster;
 pub mod node;
 
-pub use cluster::Cluster;
+pub use cluster::{Cluster, NODE_CRASH_ENV};
 pub use node::Node;

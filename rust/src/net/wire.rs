@@ -50,6 +50,12 @@ pub enum NetMessage {
     /// `KeyState`s, shipped from the old host to the fresh fragment on
     /// the new host. One frame per stage holding state.
     MigrateState { from: NodeId, topology: String, stage: String, state: Vec<KeyState> },
+    /// Checkpoint epoch barrier crossing a node boundary: everything
+    /// the upstream fragment emitted for epochs ≤ `epoch` has been
+    /// shipped ahead of this frame; the downstream fragment's snapshot
+    /// belongs to the same epoch. One frame per inter-node hop per
+    /// checkpoint.
+    Barrier { from: NodeId, topology: String, epoch: u64 },
 }
 
 impl NetMessage {
@@ -66,6 +72,7 @@ impl NetMessage {
             NetMessage::Register { .. } => 8,
             NetMessage::Unregister { .. } => 9,
             NetMessage::MigrateState { .. } => 10,
+            NetMessage::Barrier { .. } => 11,
         }
     }
 
@@ -82,7 +89,8 @@ impl NetMessage {
             | NetMessage::StreamEos { from, .. }
             | NetMessage::Register { from, .. }
             | NetMessage::Unregister { from, .. }
-            | NetMessage::MigrateState { from, .. } => *from,
+            | NetMessage::MigrateState { from, .. }
+            | NetMessage::Barrier { from, .. } => *from,
         }
     }
 
@@ -126,6 +134,10 @@ impl NetMessage {
                     w.put_u64(ks.key_bits);
                     w.put_bytes(&ks.bytes);
                 }
+            }
+            NetMessage::Barrier { topology, epoch, .. } => {
+                w.put_str(topology);
+                w.put_varint(*epoch);
             }
             _ => {}
         }
@@ -186,6 +198,11 @@ impl NetMessage {
                 }
                 NetMessage::MigrateState { from, topology, stage, state }
             }
+            11 => NetMessage::Barrier {
+                from,
+                topology: r.get_str()?.to_string(),
+                epoch: r.get_varint()?,
+            },
             other => return Err(Error::Parse(format!("unknown wire tag {other}"))),
         })
     }
@@ -500,6 +517,18 @@ mod tests {
             state: Vec::new(),
         };
         assert_eq!(NetMessage::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn barrier_round_trip() {
+        let msg =
+            NetMessage::Barrier { from: id(14), topology: "analytics".into(), epoch: 42 };
+        let bytes = msg.encode();
+        assert_eq!(NetMessage::decode(&bytes).unwrap(), msg);
+        assert_eq!(msg.wire_size(), bytes.len() + 4);
+        // Epoch 0 (the pre-data initial checkpoint) frames cleanly.
+        let first = NetMessage::Barrier { from: id(14), topology: "t".into(), epoch: 0 };
+        assert_eq!(NetMessage::decode(&first.encode()).unwrap(), first);
     }
 
     #[test]

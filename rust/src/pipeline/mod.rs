@@ -30,6 +30,6 @@ pub mod workflow;
 
 pub use concurrent::TriggerPool;
 pub use lidar::{LidarImage, LidarTrace};
-pub use pool::{WarmPolicy, WarmPool};
+pub use pool::{SnapshotSource, WarmPolicy, WarmPool};
 pub use trigger::{AdmissionControl, TriggerManager, TriggerOptions, TriggerStats};
 pub use workflow::{BaselineKind, DisasterRecoveryPipeline, PipelineReport};

@@ -25,7 +25,10 @@
 //! (the tail goes to the binding's outputs, exactly as a cold
 //! decommission would), and — when `prebuild` is on — deploys a
 //! *fresh standby* off the activation path, so the next activation
-//! still skips the deploy. Warm ≡ cold output equivalence is
+//! still skips the deploy. With a [`SnapshotSource`] attached the
+//! standby is additionally seeded from the binding's latest checkpoint
+//! snapshot via [`Deployer::seed_state`] — warm *resume* for
+//! checkpointed jobs. Warm ≡ cold output equivalence is
 //! property-tested in `rust/tests/trigger_scale.rs` and pre-validated
 //! by `python/sims/trigger_scale_sim.py`.
 //!
@@ -40,10 +43,18 @@
 
 use crate::error::Result;
 use crate::metrics::Registry;
+use crate::stream::checkpoint::StageStates;
 use crate::stream::pipeline::{Deployer, Pipeline, PipelineHandle};
 use crate::stream::tuple::Tuple;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Provider of the latest checkpointed per-stage state for a binding —
+/// typically a closure over `CheckpointJournal::latest`. Returning
+/// `None` means "no snapshot for this binding": the standby deploys
+/// empty, exactly as without a source.
+pub type SnapshotSource = Arc<dyn Fn(&str) -> Option<StageStates> + Send + Sync>;
 
 /// Policy half of the warm pool: how many decommissioned pipelines to
 /// retain, whether stateful pipelines get a pre-built standby, and how
@@ -118,11 +129,22 @@ pub struct WarmPool {
     policy: WarmPolicy,
     entries: BTreeMap<String, WarmEntry>,
     metrics: Registry,
+    snapshots: Option<SnapshotSource>,
 }
 
 impl WarmPool {
     pub fn new(policy: WarmPolicy, metrics: Registry) -> Self {
-        WarmPool { policy, entries: BTreeMap::new(), metrics }
+        WarmPool { policy, entries: BTreeMap::new(), metrics, snapshots: None }
+    }
+
+    /// Opt into checkpoint-seeded standbys: a stateful prebuild asks
+    /// `source` for the binding's latest snapshot and seeds it into the
+    /// fresh standby through [`Deployer::seed_state`] — the standby
+    /// resumes where the checkpointed instance left off instead of
+    /// starting empty. Without a source (the default), prebuilds stay
+    /// empty and the warm ≡ cold equivalence contract is untouched.
+    pub fn set_snapshot_source(&mut self, source: SnapshotSource) {
+        self.snapshots = Some(source);
     }
 
     /// Swap the policy (capacity shrink applies lazily: the next
@@ -167,7 +189,17 @@ impl WarmPool {
             if !self.policy.prebuild {
                 return Ok(ParkOutcome { tail, evicted: Vec::new() });
             }
-            (tail, deployer.deploy(pipeline)?)
+            let standby = deployer.deploy(pipeline)?;
+            if let Some(states) = self.snapshots.as_ref().and_then(|s| s(name)) {
+                for (stage, state) in states {
+                    if state.is_empty() {
+                        continue;
+                    }
+                    deployer.seed_state(&standby, &stage, state)?;
+                }
+                self.metrics.counter("trigger.pool_seeded").inc();
+            }
+            (tail, standby)
         } else {
             (Vec::new(), handle)
         };

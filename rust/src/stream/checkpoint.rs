@@ -1,0 +1,593 @@
+//! Checkpoint/recovery plane: durable progress for distributed stream
+//! routes (ROADMAP item 5 — crash tolerance and exactly-once across
+//! node failure).
+//!
+//! The durable-fact/journal layering follows the Aura Rendezvous
+//! reference: a replayable journal beneath (the storage plane's LSM),
+//! derived state above (the live fragments). Three layers with
+//! different lifetimes:
+//!
+//! - **volatile**: fragment operator state, staged batches, shipper
+//!   in-flight sets and *uncommitted* collected outputs — all lost
+//!   when a node dies;
+//! - **durable journal** (this module, over [`LsmStore`]): every fed
+//!   batch is appended to a write-ahead ingest log *before* it enters
+//!   the route (`ilog/<topo>/<seq>`), and each checkpoint persists an
+//!   atomic epoch record (`ckpt/<topo>/<epoch>` + the `meta/<topo>`
+//!   manifest pointer) holding the per-stage per-key operator state of
+//!   every fragment *together with* the input cursor that fed it;
+//! - **committed outputs**: tuples released to the consumer only when
+//!   their epoch commits (or at clean stop) — never retracted, never
+//!   re-released.
+//!
+//! The epoch barrier itself is realized by the engine's in-place
+//! snapshot (`Control::Snapshot` — handoff markers align the parallel
+//! replicas) walked front-to-back across the route's fragments, with a
+//! [`crate::net::wire::NetMessage::Barrier`] frame charged per
+//! inter-node hop. On a crash, recovery is a *global rollback*: every
+//! fragment — survivors included, so no two fragments ever run in
+//! different epochs — restarts from the latest committed epoch, and
+//! the ingest log replays from the checkpointed cursor. Log entries
+//! below the cursor are gone (GC) and would be skipped anyway
+//! (sequence dedup); committed outputs of earlier epochs are never
+//! re-released (epoch dedup). Together: exactly-once, property-tested
+//! as multiset equivalence against an uncrashed run
+//! (`rust/tests/recovery.rs`, pre-validated by
+//! `python/sims/recovery_sim.py`).
+//!
+//! `RPULSAR_CHECKPOINT=off` force-disables the plane even where a
+//! caller opted in — the A/B baseline reproducing the pre-checkpoint
+//! behavior bit-for-bit. See `docs/fault-tolerance.md`.
+
+use crate::ar::profile::Profile;
+use crate::error::{Error, Result};
+use crate::storage::lsm::{LsmOptions, LsmStore};
+use crate::stream::operator::KeyState;
+use crate::stream::tuple::Tuple;
+use crate::util::codec::{ByteReader, ByteWriter};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Whether the checkpoint plane is allowed at all. Checkpointing is
+/// opt-in per route (via `enable_checkpoints`), and this env toggle
+/// force-disables it fleet-wide: `RPULSAR_CHECKPOINT=off` makes every
+/// enable request a no-op, reproducing the pre-checkpoint data path
+/// bit-for-bit (the A/B baseline, same convention as
+/// `RPULSAR_NETPLANE` / `RPULSAR_TRIGGERPLANE`).
+pub fn checkpointing_enabled() -> bool {
+    std::env::var("RPULSAR_CHECKPOINT").map(|v| v != "off").unwrap_or(true)
+}
+
+/// Per-key operator state of one stage at an epoch barrier.
+pub type StageStates = Vec<(String, Vec<KeyState>)>;
+
+/// One fragment's slice of an epoch record: the per-stage per-key
+/// state exported at the barrier, in chain order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FragmentCheckpoint {
+    /// Fragment index within the route (hop order).
+    pub fragment: u64,
+    /// `(stage name, exported per-key state)` in chain order.
+    pub stages: StageStates,
+}
+
+/// An atomic epoch record: everything needed to rebuild a route's
+/// derived state at one consistent cut — operator state *and* the
+/// input cursor that fed it, persisted together.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointRecord {
+    /// Route/topology key.
+    pub topology: String,
+    /// Epoch number, strictly increasing per topology (0 = the
+    /// pre-data initial record written when checkpointing is enabled).
+    pub epoch: u64,
+    /// Input cursor: tuples fed (and ingest-logged) before the
+    /// barrier. Replay starts here; log entries below never replay.
+    pub cursor: u64,
+    /// Per-fragment state snapshots, in hop order.
+    pub fragments: Vec<FragmentCheckpoint>,
+}
+
+impl CheckpointRecord {
+    /// Encode to journal bytes (same ByteWriter codec as the wire).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_str(&self.topology);
+        w.put_varint(self.epoch);
+        w.put_varint(self.cursor);
+        w.put_varint(self.fragments.len() as u64);
+        for f in &self.fragments {
+            w.put_varint(f.fragment);
+            w.put_varint(f.stages.len() as u64);
+            for (stage, states) in &f.stages {
+                w.put_str(stage);
+                w.put_varint(states.len() as u64);
+                for ks in states {
+                    w.put_u64(ks.key_bits);
+                    w.put_bytes(&ks.bytes);
+                }
+            }
+        }
+        w.into_bytes()
+    }
+
+    /// Decode from journal bytes.
+    pub fn decode(bytes: &[u8]) -> Result<CheckpointRecord> {
+        let mut r = ByteReader::new(bytes);
+        let topology = r.get_str()?.to_string();
+        let epoch = r.get_varint()?;
+        let cursor = r.get_varint()?;
+        let nfrags = r.get_varint()?;
+        let mut fragments = Vec::with_capacity(nfrags.min(4096) as usize);
+        for _ in 0..nfrags {
+            let fragment = r.get_varint()?;
+            let nstages = r.get_varint()?;
+            let mut stages = Vec::with_capacity(nstages.min(4096) as usize);
+            for _ in 0..nstages {
+                let stage = r.get_str()?.to_string();
+                let nstates = r.get_varint()?;
+                let mut states = Vec::with_capacity(nstates.min(4096) as usize);
+                for _ in 0..nstates {
+                    let key_bits = r.get_u64()?;
+                    let bytes = r.get_bytes()?.to_vec();
+                    states.push(KeyState { key_bits, bytes });
+                }
+                stages.push((stage, states));
+            }
+            fragments.push(FragmentCheckpoint { fragment, stages });
+        }
+        Ok(CheckpointRecord { topology, epoch, cursor, fragments })
+    }
+}
+
+/// What one epoch barrier did — returned by `checkpoint_route` /
+/// `Cluster::checkpoint_stream` (the `MigrationReport` of this plane).
+#[derive(Debug, Clone)]
+pub struct CheckpointReport {
+    /// Route/topology key.
+    pub topology: String,
+    /// The epoch this barrier committed.
+    pub epoch: u64,
+    /// Input cursor persisted with it (tuples fed before the barrier).
+    pub cursor: u64,
+    /// Journaled record size in bytes (`ckpt.bytes`).
+    pub bytes: usize,
+    /// Fragments walked by the barrier.
+    pub fragments: usize,
+    /// Wall clock: shipper halted → epoch committed, traffic resumed.
+    pub duration: Duration,
+}
+
+/// LSM key of an epoch record: zero-padded hex so lexicographic scan
+/// order equals numeric epoch order.
+fn ckpt_key(topology: &str, epoch: u64) -> Vec<u8> {
+    format!("ckpt/{topology}/{epoch:016x}").into_bytes()
+}
+
+/// Manifest pointer: the latest *committed* epoch of a topology. The
+/// record is written first, the manifest second — a reader never sees
+/// a pointer to a record that is not fully present.
+fn meta_key(topology: &str) -> Vec<u8> {
+    format!("meta/{topology}").into_bytes()
+}
+
+/// Ingest-log entry: the batch whose first tuple is input sequence
+/// `seq` (zero-padded hex for ordered scans).
+fn ilog_key(topology: &str, seq: u64) -> Vec<u8> {
+    format!("ilog/{topology}/{seq:016x}").into_bytes()
+}
+
+/// Federation registration entry (satellite of ROADMAP item 1:
+/// registrations survive node loss by re-registering from the journal
+/// on restart).
+fn reg_key(consumer: &str) -> Vec<u8> {
+    format!("reg/{consumer}").into_bytes()
+}
+
+/// The durable checkpoint journal: epoch records, the write-ahead
+/// ingest log, and federation registrations, all in one LSM keyspace
+/// (`ckpt/`, `meta/`, `ilog/`, `reg/`). Clone-able — the cluster and
+/// every checkpointed route share one store.
+#[derive(Clone)]
+pub struct CheckpointJournal {
+    store: Arc<Mutex<LsmStore>>,
+}
+
+impl CheckpointJournal {
+    /// Open (or re-open — reopening recovers every journaled record)
+    /// the journal at `dir`.
+    pub fn open(dir: PathBuf) -> Result<CheckpointJournal> {
+        let store = LsmStore::open_native(LsmOptions { dir, ..LsmOptions::default() })?;
+        Ok(CheckpointJournal { store: Arc::new(Mutex::new(store)) })
+    }
+
+    /// Commit one epoch record atomically: write the record, advance
+    /// the manifest pointer, garbage-collect superseded epochs and the
+    /// ingest-log prefix below the new cursor, and flush. Returns the
+    /// encoded record size (the `ckpt.bytes` accounting).
+    pub fn commit(&self, record: &CheckpointRecord) -> Result<usize> {
+        let bytes = record.encode();
+        let mut store = self.store.lock().unwrap();
+        store.put(&ckpt_key(&record.topology, record.epoch), &bytes)?;
+        let mut w = ByteWriter::new();
+        w.put_varint(record.epoch);
+        store.put(&meta_key(&record.topology), w.as_slice())?;
+        // GC superseded epochs: only the committed epoch is ever read.
+        let prefix = format!("ckpt/{}/", record.topology).into_bytes();
+        let stale: Vec<Vec<u8>> = store
+            .scan_prefix(&prefix)?
+            .into_iter()
+            .map(|(k, _)| k)
+            .filter(|k| k < &ckpt_key(&record.topology, record.epoch))
+            .collect();
+        for k in stale {
+            store.delete(&k)?;
+        }
+        // GC the replayed-prefix of the ingest log: entries below the
+        // cursor can never be replayed again.
+        let ilog_prefix = format!("ilog/{}/", record.topology).into_bytes();
+        let replayed: Vec<Vec<u8>> = store
+            .scan_prefix(&ilog_prefix)?
+            .into_iter()
+            .map(|(k, _)| k)
+            .filter(|k| k < &ilog_key(&record.topology, record.cursor))
+            .collect();
+        for k in replayed {
+            store.delete(&k)?;
+        }
+        store.flush()?;
+        Ok(bytes.len())
+    }
+
+    /// The latest committed epoch record of a topology, if any.
+    pub fn latest(&self, topology: &str) -> Result<Option<CheckpointRecord>> {
+        let store = self.store.lock().unwrap();
+        let Some(meta) = store.get(&meta_key(topology))? else {
+            return Ok(None);
+        };
+        let epoch = ByteReader::new(&meta).get_varint()?;
+        let Some(bytes) = store.get(&ckpt_key(topology, epoch))? else {
+            return Err(Error::Storage(format!(
+                "checkpoint journal for `{topology}`: manifest points at epoch {epoch} \
+                 but the record is missing"
+            )));
+        };
+        Ok(Some(CheckpointRecord::decode(&bytes)?))
+    }
+
+    /// Epoch numbers currently retained for a topology (after GC only
+    /// the latest committed epoch survives — the GC property test).
+    pub fn epochs(&self, topology: &str) -> Result<Vec<u64>> {
+        let store = self.store.lock().unwrap();
+        let prefix = format!("ckpt/{topology}/").into_bytes();
+        let mut epochs = Vec::new();
+        for (k, _) in store.scan_prefix(&prefix)? {
+            let hex = std::str::from_utf8(&k[prefix.len()..])
+                .map_err(|_| Error::Storage("malformed checkpoint key".into()))?;
+            epochs.push(
+                u64::from_str_radix(hex, 16)
+                    .map_err(|_| Error::Storage("malformed checkpoint key".into()))?,
+            );
+        }
+        Ok(epochs)
+    }
+
+    /// Append one fed batch to the write-ahead ingest log. Runs
+    /// *before* the batch enters the route: a batch the route saw is
+    /// always replayable.
+    pub fn append_input(&self, topology: &str, start_seq: u64, batch: &[Tuple]) -> Result<()> {
+        let mut w = ByteWriter::new();
+        w.put_varint(batch.len() as u64);
+        for t in batch {
+            t.encode_into(&mut w);
+        }
+        let mut store = self.store.lock().unwrap();
+        store.put(&ilog_key(topology, start_seq), w.as_slice())?;
+        store.flush()
+    }
+
+    /// The replayable backlog: every logged batch whose start sequence
+    /// is at or past `cursor`, in input order. Entries below the
+    /// cursor never replay (they were GC'd at commit; the guard here
+    /// is the belt to that suspender).
+    pub fn replay_input(&self, topology: &str, cursor: u64) -> Result<Vec<(u64, Vec<Tuple>)>> {
+        let store = self.store.lock().unwrap();
+        let prefix = format!("ilog/{topology}/").into_bytes();
+        let floor = ilog_key(topology, cursor);
+        let mut out = Vec::new();
+        for (k, v) in store.scan_prefix(&prefix)? {
+            if k < floor {
+                continue;
+            }
+            let hex = std::str::from_utf8(&k[prefix.len()..])
+                .map_err(|_| Error::Storage("malformed ingest-log key".into()))?;
+            let seq = u64::from_str_radix(hex, 16)
+                .map_err(|_| Error::Storage("malformed ingest-log key".into()))?;
+            let mut r = ByteReader::new(&v);
+            let n = r.get_varint()?;
+            let mut batch = Vec::with_capacity(n.min(4096) as usize);
+            for _ in 0..n {
+                batch.push(Tuple::decode_from(&mut r)?);
+            }
+            out.push((seq, batch));
+        }
+        Ok(out)
+    }
+
+    /// Drop everything journaled for a topology (clean stop: the route
+    /// drained with zero loss, there is nothing left to recover).
+    pub fn forget(&self, topology: &str) -> Result<()> {
+        let mut store = self.store.lock().unwrap();
+        for prefix in
+            [format!("ckpt/{topology}/"), format!("ilog/{topology}/"), format!("meta/{topology}")]
+        {
+            let keys: Vec<Vec<u8>> =
+                store.scan_prefix(prefix.as_bytes())?.into_iter().map(|(k, _)| k).collect();
+            for k in keys {
+                store.delete(&k)?;
+            }
+        }
+        store.flush()
+    }
+
+    /// Journal a federated registration so it survives node loss
+    /// (re-applied by `Cluster::restart_node`).
+    pub fn record_registration(
+        &self,
+        consumer: &str,
+        profile: &Profile,
+        ttl_ms: u64,
+    ) -> Result<()> {
+        let mut w = ByteWriter::new();
+        w.put_str(consumer);
+        profile.encode(&mut w);
+        w.put_varint(ttl_ms);
+        let mut store = self.store.lock().unwrap();
+        store.put(&reg_key(consumer), w.as_slice())?;
+        store.flush()
+    }
+
+    /// Withdraw a journaled registration (federated unsubscribe).
+    pub fn remove_registration(&self, consumer: &str) -> Result<()> {
+        let mut store = self.store.lock().unwrap();
+        store.delete(&reg_key(consumer))?;
+        store.flush()
+    }
+
+    /// Every journaled registration, `(consumer, profile, ttl_ms)`.
+    pub fn registrations(&self) -> Result<Vec<(String, Profile, u64)>> {
+        let store = self.store.lock().unwrap();
+        let mut out = Vec::new();
+        for (_, v) in store.scan_prefix(b"reg/")? {
+            let mut r = ByteReader::new(&v);
+            let consumer = r.get_str()?.to_string();
+            let profile = Profile::decode(&mut r)?;
+            let ttl_ms = r.get_varint()?;
+            out.push((consumer, profile, ttl_ms));
+        }
+        Ok(out)
+    }
+}
+
+/// Per-route checkpoint runtime: the journal handle plus the cursors
+/// and output gate of one checkpointed route. Lives on the route's
+/// `RouteState`; absent (`None`) the data path is byte-for-byte the
+/// pre-checkpoint one.
+pub struct RouteCheckpoint {
+    pub journal: CheckpointJournal,
+    /// Checkpoint every `interval` input tuples (triggered from the
+    /// feed path; an explicit `checkpoint_stream` also works).
+    pub interval: u64,
+    /// Epoch of the latest committed record.
+    pub epoch: u64,
+    /// Tuples fed (and ingest-logged) so far.
+    pub input_seq: u64,
+    /// Input cursor of the latest committed epoch.
+    pub cursor: u64,
+    /// Collected but uncommitted outputs (discarded on rollback — the
+    /// replay regenerates them deterministically).
+    pub pending: Vec<Tuple>,
+    /// Outputs released to the consumer, not yet taken. Never
+    /// retracted: the exactly-once surface.
+    pub committed: VecDeque<Tuple>,
+}
+
+impl RouteCheckpoint {
+    pub fn new(journal: CheckpointJournal, interval: u64) -> RouteCheckpoint {
+        RouteCheckpoint {
+            journal,
+            interval: interval.max(1),
+            epoch: 0,
+            input_seq: 0,
+            cursor: 0,
+            pending: Vec::new(),
+            committed: VecDeque::new(),
+        }
+    }
+
+    /// Write-ahead log one fed batch and advance the input cursor.
+    pub fn note_input(&mut self, topology: &str, batch: &[Tuple]) -> Result<()> {
+        self.journal.append_input(topology, self.input_seq, batch)?;
+        self.input_seq += batch.len() as u64;
+        Ok(())
+    }
+
+    /// Whether the feed has advanced far enough past the last barrier
+    /// for the next periodic checkpoint.
+    pub fn due(&self) -> bool {
+        self.input_seq - self.cursor >= self.interval
+    }
+
+    /// Commit an epoch: persist the record, release pending outputs.
+    /// Returns the journaled record size.
+    pub fn commit_epoch(
+        &mut self,
+        topology: &str,
+        fragments: Vec<FragmentCheckpoint>,
+    ) -> Result<usize> {
+        let record = CheckpointRecord {
+            topology: topology.to_string(),
+            epoch: self.epoch + 1,
+            cursor: self.input_seq,
+            fragments,
+        };
+        let bytes = self.journal.commit(&record)?;
+        self.epoch = record.epoch;
+        self.cursor = record.cursor;
+        self.committed.extend(self.pending.drain(..));
+        Ok(bytes)
+    }
+
+    /// Take up to `max` committed outputs (the gated poll surface).
+    pub fn take_committed(&mut self, max: usize) -> Vec<Tuple> {
+        let n = self.committed.len().min(max);
+        self.committed.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join("rpulsar-ckpt-test")
+            .join(format!("{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_record(epoch: u64, cursor: u64) -> CheckpointRecord {
+        CheckpointRecord {
+            topology: "job".into(),
+            epoch,
+            cursor,
+            fragments: vec![
+                FragmentCheckpoint {
+                    fragment: 0,
+                    stages: vec![("inc".into(), Vec::new())],
+                },
+                FragmentCheckpoint {
+                    fragment: 1,
+                    stages: vec![(
+                        "kwin".into(),
+                        vec![
+                            KeyState { key_bits: 2.0f64.to_bits(), bytes: vec![1, 2, 3, 4] },
+                            KeyState { key_bits: 5.5f64.to_bits(), bytes: vec![] },
+                        ],
+                    )],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn record_round_trip() {
+        let rec = sample_record(7, 4096);
+        assert_eq!(CheckpointRecord::decode(&rec.encode()).unwrap(), rec);
+        let empty = CheckpointRecord {
+            topology: "t".into(),
+            epoch: 0,
+            cursor: 0,
+            fragments: Vec::new(),
+        };
+        assert_eq!(CheckpointRecord::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn commit_advances_manifest_and_gcs_superseded_epochs() {
+        let j = CheckpointJournal::open(dir("gc")).unwrap();
+        assert!(j.latest("job").unwrap().is_none());
+        j.commit(&sample_record(1, 10)).unwrap();
+        j.commit(&sample_record(2, 20)).unwrap();
+        let bytes = j.commit(&sample_record(3, 30)).unwrap();
+        assert!(bytes > 0);
+        let latest = j.latest("job").unwrap().unwrap();
+        assert_eq!(latest.epoch, 3);
+        assert_eq!(latest.cursor, 30);
+        // Only the committed epoch survives GC.
+        assert_eq!(j.epochs("job").unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn ingest_log_replays_from_cursor_and_gcs_below() {
+        let j = CheckpointJournal::open(dir("ilog")).unwrap();
+        let batch = |s: u64| vec![Tuple::new(s, vec![]).with("V", s as f64)];
+        j.append_input("job", 0, &batch(0)).unwrap();
+        j.append_input("job", 1, &batch(1)).unwrap();
+        j.append_input("job", 2, &batch(2)).unwrap();
+        // Replay everything from zero, in input order.
+        let all = j.replay_input("job", 0).unwrap();
+        assert_eq!(all.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // A checkpoint at cursor 2 GCs entries 0 and 1...
+        j.commit(&sample_record(1, 2)).unwrap();
+        let tail = j.replay_input("job", 2).unwrap();
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].0, 2);
+        assert_eq!(tail[0].1[0].get("V"), Some(2.0));
+        // ...and the seq guard skips below-cursor entries regardless.
+        assert!(j.replay_input("job", 3).unwrap().is_empty());
+    }
+
+    #[test]
+    fn journal_survives_reopen() {
+        let d = dir("reopen");
+        {
+            let j = CheckpointJournal::open(d.clone()).unwrap();
+            j.commit(&sample_record(5, 50)).unwrap();
+            j.append_input("job", 50, &[Tuple::new(50, vec![]).with("V", 1.0)]).unwrap();
+        }
+        let j = CheckpointJournal::open(d).unwrap();
+        assert_eq!(j.latest("job").unwrap().unwrap().epoch, 5);
+        assert_eq!(j.replay_input("job", 50).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn forget_drops_all_topology_keys() {
+        let j = CheckpointJournal::open(dir("forget")).unwrap();
+        j.commit(&sample_record(1, 5)).unwrap();
+        j.append_input("job", 5, &[Tuple::new(5, vec![])]).unwrap();
+        j.forget("job").unwrap();
+        assert!(j.latest("job").unwrap().is_none());
+        assert!(j.epochs("job").unwrap().is_empty());
+        assert!(j.replay_input("job", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn registration_journal_round_trip() {
+        let j = CheckpointJournal::open(dir("regs")).unwrap();
+        let p = Profile::parse("drone,li*").unwrap();
+        j.record_registration("trigger:job", &p, 30_000).unwrap();
+        j.record_registration("analytics", &Profile::parse("cam").unwrap(), 0).unwrap();
+        let mut regs = j.registrations().unwrap();
+        regs.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(regs.len(), 2);
+        assert_eq!(regs[1].0, "trigger:job");
+        assert_eq!(regs[1].2, 30_000);
+        j.remove_registration("analytics").unwrap();
+        assert_eq!(j.registrations().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn route_checkpoint_gates_outputs_until_commit() {
+        let j = CheckpointJournal::open(dir("gate")).unwrap();
+        let mut rc = RouteCheckpoint::new(j, 2);
+        rc.note_input("job", &[Tuple::new(0, vec![])]).unwrap();
+        assert!(!rc.due());
+        rc.note_input("job", &[Tuple::new(1, vec![])]).unwrap();
+        assert!(rc.due());
+        rc.pending.push(Tuple::new(0, vec![]).with("OUT", 1.0));
+        // Nothing visible before the epoch commits.
+        assert!(rc.take_committed(16).is_empty());
+        rc.commit_epoch("job", Vec::new()).unwrap();
+        assert_eq!(rc.epoch, 1);
+        assert_eq!(rc.cursor, 2);
+        assert!(!rc.due());
+        assert_eq!(rc.take_committed(16).len(), 1);
+        // Committed outputs never come back twice.
+        assert!(rc.take_committed(16).is_empty());
+        assert_eq!(rc.journal.latest("job").unwrap().unwrap().epoch, 1);
+    }
+}

@@ -323,6 +323,21 @@ impl TopologyManager {
         frozen
     }
 
+    /// Snapshot a running topology's per-key state *in place* — the
+    /// checkpoint plane's epoch barrier (see
+    /// [`super::engine::EngineHandle::snapshot_states`]). Unlike
+    /// [`TopologyManager::freeze`] the topology keeps running: each
+    /// stage exports through the rescale handoff markers and resumes
+    /// with its state reseeded. Returns trailing output tuples drained
+    /// while the barrier passed plus `(stage, states)` in chain order.
+    /// The caller must have stopped feeding for the duration.
+    pub fn snapshot(
+        &self,
+        key: &str,
+    ) -> Result<(Vec<super::tuple::Tuple>, Vec<(String, Vec<super::operator::KeyState>)>)> {
+        self.handle(key)?.snapshot_states()
+    }
+
     /// Seed a stage of a running topology with migrated-in per-key
     /// state — the receiving half of a live migration. Runs a state
     /// handoff at the current parallelism whose snapshot carries

@@ -68,6 +68,7 @@
 //! byte-identical semantics (no hop, no serialization, no shipper,
 //! zero network charge). See `docs/distributed-stream.md`.
 
+use super::checkpoint::{CheckpointRecord, CheckpointReport, FragmentCheckpoint, RouteCheckpoint};
 use super::deploy::TopologyManager;
 use super::engine::{EgressTap, RescaleReport, StageFactory, StreamEngine, StreamSender};
 use super::operator::{KeyState, Operator};
@@ -580,6 +581,9 @@ pub struct RouteState {
     counters: HopCounters,
     shipper: Option<Shipper>,
     migrations: Vec<MigrationReport>,
+    /// Checkpoint runtime — `None` (the default) keeps the data path
+    /// byte-for-byte the pre-checkpoint one.
+    ckpt: Option<RouteCheckpoint>,
 }
 
 impl RouteState {
@@ -624,6 +628,30 @@ impl RouteState {
             self.collected = out.split_off(max);
         }
         out
+    }
+
+    /// The route's checkpoint runtime, if checkpointing was enabled.
+    pub fn checkpoint(&self) -> Option<&RouteCheckpoint> {
+        self.ckpt.as_ref()
+    }
+
+    /// Mutable checkpoint runtime access (cursor/gate bookkeeping).
+    pub fn checkpoint_mut(&mut self) -> Option<&mut RouteCheckpoint> {
+        self.ckpt.as_mut()
+    }
+
+    /// Attach (or detach) the checkpoint runtime. Attach right after
+    /// deploy, before the first feed — the write-ahead ingest log must
+    /// see every batch the route sees.
+    pub fn set_checkpoint(&mut self, ckpt: Option<RouteCheckpoint>) {
+        self.ckpt = ckpt;
+    }
+
+    /// Re-home fragment `#fragment` to `to` without moving state — the
+    /// recovery path's re-placement (the fragment is dead; a rollback
+    /// restart follows, there is nothing live to migrate).
+    pub fn rehome_hop(&mut self, fragment: usize, to: NodeId) {
+        self.hops[fragment].node = to;
     }
 }
 
@@ -671,6 +699,7 @@ pub fn start_fragments<H: FragmentHost + ?Sized>(
         counters: HopCounters::new(host.metrics()),
         shipper: None,
         migrations: Vec::new(),
+        ckpt: None,
     })
 }
 
@@ -1586,6 +1615,143 @@ pub fn migrate_route<H: FragmentHost + ?Sized>(
         st.migrations.push(report.clone());
         Ok(report)
     }
+}
+
+/// Run one epoch barrier over `st` on any [`FragmentHost`]: quiesce the
+/// route (halt the shipper, single-threading it), walk the fragments
+/// front-to-back — deliver everything staged for each fragment, then
+/// take the engine's in-place snapshot (which drains the fragment's
+/// queued input through its operators and aligns the parallel replicas)
+/// and ship its trailing output onward, charging a
+/// [`NetMessage::Barrier`] frame per inter-node crossing — and commit
+/// the collected per-fragment state together with the input cursor as
+/// one atomic epoch record. Outputs produced up to the barrier move
+/// from the pending gate to the committed (released) queue; the shipper
+/// resumes before the call returns. Counted under `ckpt.*`.
+pub fn checkpoint_route<H: FragmentHost + ?Sized>(
+    host: &mut H,
+    st: &mut RouteState,
+) -> Result<CheckpointReport> {
+    if st.ckpt.is_none() {
+        return Err(Error::Stream(format!("route `{}` has no checkpoint runtime", st.key)));
+    }
+    let clock = Instant::now();
+    let had_shipper = st.has_shipper();
+    if let Some(e) = halt_shipper(st) {
+        return Err(e);
+    }
+    let next_epoch = st.ckpt.as_ref().expect("checked above").epoch + 1;
+    let mut fragments: Vec<FragmentCheckpoint> = Vec::with_capacity(st.hops.len());
+    for i in 0..st.hops.len() {
+        // Everything already in flight toward this fragment belongs on
+        // the barrier's near side: deliver it (draining the fragment's
+        // egress onward so admission can never wedge) before snapshotting.
+        while !st.staged[i].is_empty() {
+            let mut progress = offer_staged(&*host, st, i)?;
+            let outs = {
+                let hop = &st.hops[i];
+                manager_of(&*host, &hop.node)?.poll_outputs(&hop.frag_key, PUMP_POLL)?
+            };
+            if !outs.is_empty() {
+                progress = true;
+                if i + 1 == st.hops.len() {
+                    st.collected.extend(outs);
+                } else {
+                    ship_chunks(&*host, st, i, outs)?;
+                }
+            }
+            if !progress {
+                std::thread::sleep(RETRY_PAUSE);
+            }
+        }
+        // The barrier itself: a non-destructive in-place snapshot — the
+        // fragment keeps running with the same state afterwards.
+        let (trailing, states) = {
+            let hop = &st.hops[i];
+            manager_of(&*host, &hop.node)?.snapshot(&hop.frag_key)?
+        };
+        if !trailing.is_empty() {
+            if i + 1 == st.hops.len() {
+                st.collected.extend(trailing);
+            } else {
+                ship_chunks(&*host, st, i, trailing)?;
+            }
+        }
+        if i + 1 < st.hops.len() {
+            // The barrier crosses the hop as a real frame: charged to
+            // the network like the data it fences.
+            let (from, to) = (st.hops[i].node, st.hops[i + 1].node);
+            let frame =
+                NetMessage::Barrier { from, topology: st.key.to_string(), epoch: next_epoch };
+            let size = frame.encode().len() + 4;
+            host.network().charge_hop(&from, &to, size).ok_or_else(|| unreachable_err(from, to))?;
+        }
+        fragments.push(FragmentCheckpoint { fragment: i as u64, stages: states });
+    }
+    // Everything collected up to the barrier is this epoch's output.
+    let collected = std::mem::take(&mut st.collected);
+    let topology = st.key.to_string();
+    let ckpt = st.ckpt.as_mut().expect("checked above");
+    ckpt.pending.extend(collected);
+    let bytes = ckpt.commit_epoch(&topology, fragments)?;
+    let (epoch, cursor) = (ckpt.epoch, ckpt.cursor);
+    if had_shipper {
+        start_shipper(&*host, st)?;
+    }
+    let duration = clock.elapsed();
+    host.metrics().counter("ckpt.epochs").inc();
+    host.metrics().counter("ckpt.bytes").add(bytes as u64);
+    host.metrics().counter("ckpt.duration_us").add(duration.as_micros() as u64);
+    log::debug!(
+        "checkpointed `{topology}` epoch {epoch} (cursor {cursor}, {bytes} B, {duration:?})"
+    );
+    Ok(CheckpointReport { topology, epoch, cursor, bytes, fragments: st.hops.len(), duration })
+}
+
+/// Roll the whole route back to `record` — the recovery path's global
+/// rebuild. Every fragment (survivors included: no two fragments may
+/// run in different epochs) is stopped with its output *discarded*
+/// (pre-rollback outputs are uncommitted; the replay regenerates them),
+/// staged batches and uncollected outputs are dropped, and each
+/// fragment is restarted on its (possibly re-homed, see
+/// [`RouteState::rehome_hop`]) host seeded with the record's per-stage
+/// state. The caller replays the ingest log from `record.cursor`
+/// afterwards. Returns how many fragments were restarted.
+pub fn rollback_route<H: FragmentHost + ?Sized>(
+    host: &mut H,
+    st: &mut RouteState,
+    record: &CheckpointRecord,
+) -> Result<usize> {
+    debug_assert!(st.shipper.is_none(), "halt_shipper must run before rollback_route");
+    for hop in &st.hops {
+        if let Some(m) = host.manager_mut(&hop.node) {
+            if m.is_running(&hop.frag_key) {
+                let _ = m.stop(&hop.frag_key);
+            }
+        }
+    }
+    for q in st.staged.iter_mut() {
+        q.clear();
+    }
+    st.collected.clear();
+    let mut restarted = 0usize;
+    for (i, hop) in st.hops.iter().enumerate() {
+        let spec = hop.specs.iter().map(StageSpec::render).collect::<Vec<_>>().join("->");
+        match host.manager_mut(&hop.node) {
+            Some(m) => m.start(&hop.frag_key, &spec)?,
+            None => return Err(Error::Net(format!("no stream manager for node {}", hop.node))),
+        }
+        if let Some(f) = record.fragments.iter().find(|f| f.fragment == i as u64) {
+            for (stage, states) in &f.stages {
+                if states.is_empty() {
+                    continue;
+                }
+                manager_of(&*host, &hop.node)?.inject_state(&hop.frag_key, stage, states.clone())?;
+            }
+        }
+        restarted += 1;
+    }
+    Ok(restarted)
 }
 
 impl DistributedTopologyManager {

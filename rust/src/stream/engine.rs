@@ -532,6 +532,13 @@ enum Control {
     /// cycle as a rescale at the current degree, so the injected state
     /// merges with whatever the generation already held.
     Inject { state: Vec<KeyState>, ack: SyncSender<Result<RescaleReport>> },
+    /// Checkpoint barrier: drain the stage's queued input through the
+    /// current replica generation, flush downstream, export every
+    /// replica's per-key state — then reseed a fresh generation with
+    /// that same state and *resume*. Non-destructive: unlike a freeze
+    /// the stage keeps processing afterwards; the ack carries a copy of
+    /// the state at the barrier (the epoch snapshot).
+    Snapshot { ack: SyncSender<Result<Vec<KeyState>>> },
     /// Sent by a dropping [`Exchange`] when the upstream stage is gone:
     /// the control thread reaps the final replica generation and exits.
     /// Routers never receive this.
@@ -997,6 +1004,68 @@ impl EngineHandle {
     /// side of a fragment migration. See [`Rescaler::inject`].
     pub fn inject_state(&self, stage: &str, state: Vec<KeyState>) -> Result<RescaleReport> {
         self.rescaler.inject(stage, state)
+    }
+
+    /// Snapshot the whole topology's per-key state *in place* — the
+    /// checkpoint plane's epoch barrier. Stages are snapshotted
+    /// upstream-first (each stage's barrier flush lands in its
+    /// successor's queues before the successor's own barrier), every
+    /// replica exports through the same handoff markers a rescale
+    /// uses, and each stage resumes immediately with its state
+    /// reseeded — unlike [`EngineHandle::freeze`] the topology keeps
+    /// running. Returns the trailing output tuples drained while the
+    /// barrier passed plus `(stage, state)` snapshots in chain order.
+    ///
+    /// The caller must have stopped feeding for the duration (the
+    /// route checkpoint walk holds the feed), and every stage must be
+    /// elastic — the same precondition as freeze, checked up front
+    /// without disturbing the topology.
+    pub fn snapshot_states(&self) -> Result<(Vec<Tuple>, Vec<(String, Vec<KeyState>)>)> {
+        let inner = self.rescaler.inner.clone();
+        for (stage, control) in &inner.controls {
+            if control.is_none() {
+                return Err(Error::Stream(format!(
+                    "cannot snapshot topology `{}`: stage `{stage}` is static (launch it \
+                     through a stage factory to make it checkpointable)",
+                    self.name
+                )));
+            }
+        }
+        let mut trailing: Vec<Tuple> = Vec::new();
+        let mut states: Vec<(String, Vec<KeyState>)> = Vec::new();
+        for stage in &inner.order {
+            let control = inner
+                .controls
+                .get(stage)
+                .and_then(|c| c.as_ref())
+                .expect("prechecked: every stage is elastic");
+            let (ack_tx, ack_rx) = sync_channel(1);
+            control
+                .ctrl
+                .send(Control::Snapshot { ack: ack_tx })
+                .map_err(|_| self.rescaler.stopped_error())?;
+            if let Some(nudge) = &control.nudge {
+                let _ = nudge.try_send_msg(StreamMsg::Batch(Vec::new()));
+            }
+            // Interleave the ack wait with draining the engine output:
+            // the barrier flushes trailing tuples downstream, and on
+            // the bounded output channel that flush completes only if
+            // someone consumes.
+            let state = loop {
+                match ack_rx.recv_timeout(std::time::Duration::from_millis(1)) {
+                    Ok(result) => break result?,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        self.output.try_drain_into(usize::MAX, &mut trailing);
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        return Err(self.rescaler.stopped_error());
+                    }
+                }
+            };
+            states.push((stage.clone(), state));
+        }
+        self.output.try_drain_into(usize::MAX, &mut trailing);
+        Ok((trailing, states))
     }
 }
 
@@ -1566,6 +1635,14 @@ fn run_router(mut ctx: RouterCtx) {
                     }
                     continue 'stream;
                 }
+                Ok(Control::Snapshot { ack }) => {
+                    if frozen {
+                        let _ = ack.send(Err(frozen_error(&ctx.stage)));
+                    } else if !apply_snapshot(&ctx, &mut gen, ack) {
+                        break 'stream;
+                    }
+                    continue 'stream;
+                }
                 // Shutdown is an exchange-plane signal; routers learn
                 // about end-of-stream from their data channel instead.
                 Ok(Control::Shutdown) => {}
@@ -1881,6 +1958,121 @@ fn freeze_abort_error(ctx: &RouterCtx, fallback: &str) -> Error {
     ))
 }
 
+/// Checkpoint a routed stage in place on its router thread: drain the
+/// stage inbound through the current generation (the caller snapshots
+/// upstream-first with feeding stopped, exactly like a freeze, so the
+/// export marks a consistent cut — the epoch barrier aligned across
+/// all parallel replicas by the handoff markers), flush, export every
+/// replica's per-key state, then reseed a fresh generation with that
+/// same state and resume. The ack carries a copy of the exported
+/// state; the stage itself never observes the pause. Returns false
+/// only when the topology must tear down.
+fn apply_snapshot(
+    ctx: &RouterCtx,
+    gen: &mut Generation,
+    ack: SyncSender<Result<Vec<KeyState>>>,
+) -> bool {
+    let Some(factory) = &ctx.factory else {
+        let _ = ack.send(Err(Error::Stream(format!("stage `{}` is not elastic", ctx.stage))));
+        return true;
+    };
+    loop {
+        match ctx.rx.try_recv() {
+            Ok(StreamMsg::Batch(batch)) => {
+                ctx.rx_depth.add(-1);
+                for tuple in batch {
+                    if !gen.emitter.emit(tuple) {
+                        let _ = ack.send(Err(snapshot_abort_error(ctx, "downstream closed")));
+                        return false;
+                    }
+                }
+            }
+            Ok(StreamMsg::Export(_)) => ctx.rx_depth.add(-1),
+            Err(_) => break,
+        }
+    }
+    if !gen.emitter.flush_all() {
+        let _ = ack.send(Err(snapshot_abort_error(ctx, "downstream closed")));
+        return false;
+    }
+    let (reply_tx, reply_rx) = channel::<ExportReply>();
+    for port in gen.emitter.fixed_ports() {
+        if !port.send_msg(StreamMsg::Export(reply_tx.clone())) {
+            let _ = ack.send(Err(snapshot_abort_error(ctx, "a replica died before the handoff")));
+            return false;
+        }
+    }
+    drop(reply_tx);
+    let degree = gen.workers.len();
+    let mut moved: Vec<KeyState> = Vec::new();
+    for _ in 0..degree {
+        match reply_rx.recv() {
+            Ok(ExportReply { state: Ok(state), .. }) => moved.extend(state),
+            Ok(ExportReply { replica, state: Err(cause) }) => {
+                let _ = ack.send(Err(Error::Stream(format!(
+                    "stage `{}[r{replica}]` handoff failed: {cause}",
+                    ctx.stage
+                ))));
+                return false;
+            }
+            Err(_) => {
+                let _ = ack.send(Err(snapshot_abort_error(ctx, "a replica died mid-handoff")));
+                return false;
+            }
+        }
+    }
+    for w in gen.workers.drain(..) {
+        let _ = w.join();
+    }
+    // Reseed: same degree, same state — the snapshot must not change
+    // what the stage computes next. The ack gets the copy.
+    let snapshot = moved.clone();
+    let mut per: Vec<Vec<KeyState>> = (0..degree).map(|_| Vec::new()).collect();
+    for ks in moved {
+        per[(Tuple::hash_bits(ks.key_bits) % degree as u64) as usize].push(ks);
+    }
+    let mut ops: Vec<Box<dyn Operator>> = Vec::with_capacity(degree);
+    for (r, state) in per.into_iter().enumerate() {
+        let mut op = match catch(AssertUnwindSafe(|| Ok(factory()))) {
+            Ok(op) => op,
+            Err(fault) => {
+                let msg = format!("stage `{}` replica factory {fault}", ctx.stage);
+                log::error!("{msg}");
+                ctx.error.set(msg.clone());
+                let _ = ack.send(Err(Error::Stream(msg)));
+                return false;
+            }
+        };
+        if !state.is_empty() {
+            if let Err(fault) = catch(AssertUnwindSafe(|| op.import_state(state))) {
+                let msg = format!("stage `{}[r{r}]` snapshot reseed {fault}", ctx.stage);
+                log::error!("{msg}");
+                ctx.error.set(msg.clone());
+                let _ = ack.send(Err(Error::Stream(msg)));
+                return false;
+            }
+        }
+        ops.push(op);
+    }
+    *gen = spawn_generation(ctx, ops);
+    log::info!(
+        "topology {} stage {} snapshotted in place ({} key snapshot(s) exported)",
+        ctx.topo,
+        ctx.stage,
+        snapshot.len()
+    );
+    let _ = ack.send(Ok(snapshot));
+    true
+}
+
+fn snapshot_abort_error(ctx: &RouterCtx, fallback: &str) -> Error {
+    Error::Stream(format!(
+        "stage `{}` snapshot aborted: {}",
+        ctx.stage,
+        ctx.error.get().unwrap_or_else(|| fallback.to_string())
+    ))
+}
+
 /// Why a stateful stage cannot re-partition to `degree` replicas
 /// (`None` = admissible). The same misuse shapes launch rejects,
 /// re-checked at rescale time because a serial stage may carry
@@ -1980,6 +2172,13 @@ fn run_exchange(mut ctx: ExchangeCtx) {
                     // — alive meanwhile).
                     frozen = true;
                 } else {
+                    break;
+                }
+            }
+            Ok(Control::Snapshot { ack }) => {
+                if frozen {
+                    let _ = ack.send(Err(frozen_error(&ctx.stage)));
+                } else if !apply_exchange_snapshot(&mut ctx, ack) {
                     break;
                 }
             }
@@ -2246,6 +2445,113 @@ fn apply_exchange_freeze(
 fn exchange_freeze_abort_error(ctx: &ExchangeCtx, fallback: &str) -> Error {
     Error::Stream(format!(
         "stage `{}` freeze aborted: {}",
+        ctx.stage,
+        ctx.error.get().unwrap_or_else(|| fallback.to_string())
+    ))
+}
+
+/// Checkpoint an exchange (elastic linked) stage in place: hold the
+/// port lock (pausing any upstream flush for the handoff's duration —
+/// the barrier aligned across the direct replica→replica paths), drain
+/// the replicas through handoff markers, then reseed a fresh
+/// generation with the exported state and swap the port set — the
+/// upstream resumes against replicas holding exactly the state of the
+/// barrier. The ack carries a copy of the state. Returns false only
+/// when the stage must tear down.
+fn apply_exchange_snapshot(
+    ctx: &mut ExchangeCtx,
+    ack: SyncSender<Result<Vec<KeyState>>>,
+) -> bool {
+    let Some(exchange) = ctx.exchange.upgrade() else {
+        let _ = ack.send(Err(Error::Stream(format!(
+            "stage `{}` is draining; cannot snapshot",
+            ctx.stage
+        ))));
+        return true;
+    };
+    let mut ports = exchange.ports.lock().unwrap();
+    let (reply_tx, reply_rx) = channel::<ExportReply>();
+    for port in ports.iter() {
+        if !port.send_msg(StreamMsg::Export(reply_tx.clone())) {
+            let _ = ack.send(Err(exchange_snapshot_abort_error(
+                ctx,
+                "a replica died before the handoff",
+            )));
+            return false;
+        }
+    }
+    drop(reply_tx);
+    let degree = ctx.workers.len();
+    let mut moved: Vec<KeyState> = Vec::new();
+    for _ in 0..degree {
+        match reply_rx.recv() {
+            Ok(ExportReply { state: Ok(state), .. }) => moved.extend(state),
+            Ok(ExportReply { replica, state: Err(cause) }) => {
+                let _ = ack.send(Err(Error::Stream(format!(
+                    "stage `{}[r{replica}]` handoff failed: {cause}",
+                    ctx.stage
+                ))));
+                return false;
+            }
+            Err(_) => {
+                let _ = ack.send(Err(exchange_snapshot_abort_error(
+                    ctx,
+                    "a replica died mid-handoff",
+                )));
+                return false;
+            }
+        }
+    }
+    for w in ctx.workers.drain(..) {
+        let _ = w.join();
+    }
+    let snapshot = moved.clone();
+    let mut per: Vec<Vec<KeyState>> = (0..degree).map(|_| Vec::new()).collect();
+    for ks in moved {
+        per[(Tuple::hash_bits(ks.key_bits) % degree as u64) as usize].push(ks);
+    }
+    let mut ops: Vec<Box<dyn Operator>> = Vec::with_capacity(degree);
+    for (r, state) in per.into_iter().enumerate() {
+        let factory = &ctx.factory;
+        let mut op = match catch(AssertUnwindSafe(|| Ok(factory()))) {
+            Ok(op) => op,
+            Err(fault) => {
+                let msg = format!("stage `{}` replica factory {fault}", ctx.stage);
+                log::error!("{msg}");
+                ctx.error.set(msg.clone());
+                let _ = ack.send(Err(Error::Stream(msg)));
+                return false;
+            }
+        };
+        if !state.is_empty() {
+            if let Err(fault) = catch(AssertUnwindSafe(|| op.import_state(state))) {
+                let msg = format!("stage `{}[r{r}]` snapshot reseed {fault}", ctx.stage);
+                log::error!("{msg}");
+                ctx.error.set(msg.clone());
+                let _ = ack.send(Err(Error::Stream(msg)));
+                return false;
+            }
+        }
+        ops.push(op);
+    }
+    let (new_ports, new_workers) = spawn_exchange_replicas(ctx, ops);
+    *ports = new_ports;
+    drop(ports); // re-wire visible; upstream flushes resume
+    ctx.workers = new_workers;
+    log::info!(
+        "topology {} stage {} snapshotted in place \
+         ({} key snapshot(s) exported, direct exchange kept)",
+        ctx.topo,
+        ctx.stage,
+        snapshot.len()
+    );
+    let _ = ack.send(Ok(snapshot));
+    true
+}
+
+fn exchange_snapshot_abort_error(ctx: &ExchangeCtx, fallback: &str) -> Error {
+    Error::Stream(format!(
+        "stage `{}` snapshot aborted: {}",
         ctx.stage,
         ctx.error.get().unwrap_or_else(|| fallback.to_string())
     ))

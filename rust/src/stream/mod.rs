@@ -39,6 +39,14 @@
 //!   (`migrate_fragment`), and a [`dist::ClusterPolicy`] drives
 //!   rescale-vs-migrate decisions cluster-wide. See
 //!   `docs/distributed-stream.md` and `docs/elasticity.md`.
+//! - [`checkpoint`]: the checkpoint/recovery plane — periodic epoch
+//!   barriers snapshot per-key operator state (through the same
+//!   `export_state`/`import_state` boundary rescale and migration use)
+//!   together with input cursors into a durable LSM journal; on node
+//!   crash the cluster restarts dead fragments on survivors from the
+//!   latest epoch and replays the write-ahead ingest log, with
+//!   committed-output gating making recovery exactly-once. See
+//!   `docs/fault-tolerance.md`.
 //! - [`pipeline`]: the unified front door — a typed, validated
 //!   [`pipeline::Pipeline`] definition (builder or string-spec
 //!   parse-through) deployable unchanged on any [`pipeline::Deployer`]
@@ -46,6 +54,7 @@
 //!   through one [`pipeline::PipelineHandle`]. See
 //!   `docs/pipeline-api.md`.
 
+pub mod checkpoint;
 pub mod deploy;
 pub mod dist;
 pub mod engine;
@@ -54,6 +63,10 @@ pub mod pipeline;
 pub mod topology;
 pub mod tuple;
 
+pub use checkpoint::{
+    checkpointing_enabled, CheckpointJournal, CheckpointRecord, CheckpointReport,
+    FragmentCheckpoint, RouteCheckpoint,
+};
 pub use deploy::{ScalePolicy, TopologyManager};
 pub use dist::{
     plan_placement, plan_placement_with, ClusterPolicy, DistributedTopologyManager, Fragment,

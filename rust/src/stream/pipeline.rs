@@ -38,7 +38,7 @@
 use super::deploy::{ScalePolicy, TopologyManager};
 use super::dist::{plan_placement, DistributedTopologyManager};
 use super::engine::{RescaleReport, StageFactory};
-use super::operator::Operator;
+use super::operator::{KeyState, Operator};
 use super::topology::{StageSpec, Topology};
 use super::tuple::Tuple;
 use crate::error::{Error, Result};
@@ -464,6 +464,25 @@ pub trait Deployer {
     fn stage_factory(&self, _name: &str) -> Option<StageFactory> {
         None
     }
+
+    /// Seed per-key state into one stage of a *deployed* pipeline —
+    /// the same `export_state`/`import_state` boundary rescale,
+    /// migration and the checkpoint plane use. Warm pools use it to
+    /// prebuild a stateful standby from the latest checkpoint snapshot
+    /// instead of holding a live one. Surfaces without state injection
+    /// refuse (the default).
+    fn seed_state(
+        &mut self,
+        handle: &PipelineHandle,
+        _stage: &str,
+        _state: Vec<KeyState>,
+    ) -> Result<RescaleReport> {
+        Err(Error::Stream(format!(
+            "surface `{}` cannot seed state into pipeline `{}`",
+            Deployer::surface(self),
+            handle.key
+        )))
+    }
 }
 
 /// Stamp a handle for a freshly deployed pipeline (used by every
@@ -529,6 +548,15 @@ impl Deployer for TopologyManager {
 
     fn stage_factory(&self, name: &str) -> Option<StageFactory> {
         self.factory(name)
+    }
+
+    fn seed_state(
+        &mut self,
+        handle: &PipelineHandle,
+        stage: &str,
+        state: Vec<KeyState>,
+    ) -> Result<RescaleReport> {
+        TopologyManager::inject_state(self, &handle.key, stage, state)
     }
 }
 

@@ -603,3 +603,95 @@ fn trigger_worker_panic_tears_down_cleanly_and_spares_siblings() {
         "recovered binding must process post-fault data: {out:?}"
     );
 }
+
+// ---- Checkpoint/recovery plane: whole-node kills ----
+
+#[test]
+fn env_injected_node_kill_recovers_exactly_once() {
+    // The env hook kill-9s a whole member from inside the feed path —
+    // the harshest injection point: the batch that armed the crash is
+    // the first to find the route broken. With checkpointing on, the
+    // stream must recover to the same output multiset an uncrashed
+    // single-process run produces. Victim names are namespaced by the
+    // cluster name, so the armed variable cannot hit other tests.
+    use rpulsar::coordinator::NODE_CRASH_ENV;
+    use rpulsar::stream::checkpoint::checkpointing_enabled;
+    use rpulsar::stream::deploy::TopologyManager;
+    use rpulsar::stream::dist::PlacementPlan;
+    use rpulsar::stream::engine::StreamEngine;
+    use rpulsar::stream::topology::Topology;
+
+    if !checkpointing_enabled() {
+        return; // RPULSAR_CHECKPOINT=off arm: crashes stay lossy by design.
+    }
+    let register = |c: &mut Cluster| {
+        for id in c.ids() {
+            let topologies = c.node_mut(&id).unwrap().topologies_mut();
+            topologies.register_stage("inc", || {
+                Box::new(OperatorKind::map("inc", |mut t| {
+                    let v = t.get("X").unwrap_or(0.0);
+                    t.set("X", v + 1.0);
+                    t
+                })) as Box<dyn Operator>
+            });
+            topologies
+                .register_stage("sum", || Box::new(OperatorKind::window_by("sum", "X", 2, "K")));
+        }
+    };
+    let inputs: Vec<Tuple> = (0..24u64)
+        .map(|i| Tuple::new(i, vec![]).with("K", (i % 3) as f64).with("X", i as f64))
+        .collect();
+
+    // Ground truth: the same chain on one single-process manager.
+    let mut local = TopologyManager::new(StreamEngine::new());
+    local.register_stage("inc", || {
+        Box::new(OperatorKind::map("inc", |mut t| {
+            let v = t.get("X").unwrap_or(0.0);
+            t.set("X", v + 1.0);
+            t
+        })) as Box<dyn Operator>
+    });
+    local.register_stage("sum", || Box::new(OperatorKind::window_by("sum", "X", 2, "K")));
+    local.start("job", "inc->sum@K").unwrap();
+    for chunk in inputs.chunks(4) {
+        local.send_batch("job", chunk.to_vec()).unwrap();
+    }
+    let canon = |out: Vec<Tuple>| {
+        let mut v: Vec<String> = out.into_iter().map(|t| format!("{:?}", t.fields)).collect();
+        v.sort();
+        v
+    };
+    let expected = canon(local.stop("job").unwrap());
+
+    let mut c = Cluster::new("f-nodekill", 4, DeviceKind::Native).unwrap();
+    register(&mut c);
+    let ids = c.ids();
+    let (edge, core) = (ids[0], ids[1]);
+    let topo = Topology::parse("job", "inc->sum@K").unwrap();
+    c.deploy_stream("job", "inc->sum@K", &PlacementPlan::split_at(&topo, 1, edge, core))
+        .unwrap();
+    assert!(c.enable_checkpoints("job", 6).unwrap());
+    let victim = c.node(&core).unwrap().name().to_string();
+    let mut out = Vec::new();
+    for (b, chunk) in inputs.chunks(4).enumerate() {
+        if b == 3 {
+            // Arm the injection: the very next feed kills the tail
+            // fragment's host before any tuple of the batch moves.
+            std::env::set_var(NODE_CRASH_ENV, &victim);
+        }
+        c.stream_send_batch("job", chunk.to_vec()).unwrap();
+        if b == 3 {
+            std::env::remove_var(NODE_CRASH_ENV);
+            assert!(c.node(&core).is_none(), "the armed feed must kill the member");
+        }
+        out.extend(c.stream_pump("job").unwrap());
+    }
+    assert!(c.stream_metrics().counter("recovery.restarts").get() >= 1);
+    assert!(
+        c.stream_route("job").unwrap().hops().iter().all(|h| h.node != core),
+        "dead hop must be re-homed onto a survivor"
+    );
+    out.extend(c.stream_stop("job").unwrap());
+    assert_eq!(canon(out), expected, "recovery must be exactly-once, keyed windows included");
+    c.shutdown().unwrap();
+}

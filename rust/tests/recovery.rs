@@ -1,0 +1,301 @@
+//! Checkpoint/recovery properties (the fault-tolerance acceptance
+//! gate): seeded whole-node kills mid-stream must recover to multiset
+//! equivalence with an uncrashed single-process run — exactly-once,
+//! keyed windows included — plus journal GC (only the latest committed
+//! epoch survives), exact `recovery.*` accounting, and the
+//! `RPULSAR_CHECKPOINT=off` A/B arm where `enable_checkpoints` is a
+//! transparent no-op. CI runs this file in both arms. See
+//! `docs/fault-tolerance.md` and `python/sims/recovery_sim.py`.
+
+use rpulsar::config::DeviceKind;
+use rpulsar::coordinator::Cluster;
+use rpulsar::overlay::node_id::NodeId;
+use rpulsar::stream::checkpoint::checkpointing_enabled;
+use rpulsar::stream::deploy::TopologyManager;
+use rpulsar::stream::dist::{Fragment, PlacementPlan};
+use rpulsar::stream::engine::StreamEngine;
+use rpulsar::stream::operator::{Operator, OperatorKind};
+use rpulsar::stream::topology::Topology;
+use rpulsar::stream::tuple::Tuple;
+use rpulsar::testkit::prop::NoShrink;
+use rpulsar::testkit::{forall_seeded, Gen};
+use rpulsar::util::prng::Prng;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Unique cluster names per case — parallel tests in one process share
+/// a pid, and `Cluster::new` keys its scratch dirs by (name, pid).
+fn unique_name(prefix: &str) -> String {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    format!("{prefix}{}", N.fetch_add(1, Ordering::Relaxed))
+}
+
+fn make_stage(name: &str, window: usize) -> Box<dyn Operator> {
+    match name {
+        "inc" => Box::new(OperatorKind::map("inc", |mut t| {
+            let v = t.get("V").unwrap_or(0.0);
+            t.set("V", v + 1.0);
+            t
+        })),
+        "dbl" => Box::new(OperatorKind::map("dbl", |mut t| {
+            let v = t.get("V").unwrap_or(0.0);
+            t.set("V", v * 2.0);
+            t
+        })),
+        "agg" => Box::new(OperatorKind::window_by("agg", "V", window, "K")),
+        other => unreachable!("unknown stage {other}"),
+    }
+}
+
+const STAGES: [&str; 3] = ["inc", "dbl", "agg"];
+
+fn register_all(c: &mut Cluster, window: usize) {
+    for id in c.ids() {
+        let topologies = c.node_mut(&id).unwrap().topologies_mut();
+        for name in STAGES {
+            topologies.register_stage(name, move || make_stage(name, window));
+        }
+    }
+}
+
+fn input_tuples(tuples: &[(u64, f64)]) -> Vec<Tuple> {
+    tuples
+        .iter()
+        .enumerate()
+        .map(|(i, (k, v))| Tuple::new(i as u64, vec![]).with("K", *k as f64).with("V", *v))
+        .collect()
+}
+
+fn plan_from_cuts(topo: &Topology, cuts: &[usize], nodes: &[NodeId]) -> PlacementPlan {
+    let mut bounds = vec![0usize];
+    bounds.extend(cuts.iter().copied());
+    bounds.push(topo.stages.len());
+    PlacementPlan {
+        fragments: bounds
+            .windows(2)
+            .enumerate()
+            .map(|(i, r)| Fragment {
+                node: nodes[i % nodes.len()],
+                stages: topo.stages[r[0]..r[1]].to_vec(),
+            })
+            .collect(),
+    }
+}
+
+/// Order-free canonical form: the multiset of field maps.
+fn canon(out: Vec<Tuple>) -> Vec<String> {
+    let mut v: Vec<String> = out.into_iter().map(|t| format!("{:?}", t.fields)).collect();
+    v.sort();
+    v
+}
+
+/// The uncrashed ground truth: same spec, one single-process manager.
+fn reference_run(spec: &str, window: usize, inputs: &[Tuple], batch: usize) -> Vec<String> {
+    let mut local = TopologyManager::new(StreamEngine::new());
+    for name in STAGES {
+        local.register_stage(name, move || make_stage(name, window));
+    }
+    local.start("t", spec).unwrap();
+    for chunk in inputs.chunks(batch) {
+        local.send_batch("t", chunk.to_vec()).unwrap();
+    }
+    canon(local.stop("t").unwrap())
+}
+
+#[derive(Clone, Debug)]
+struct KillCase {
+    /// (key, value) pairs in arrival order.
+    tuples: Vec<(u64, f64)>,
+    window: usize,
+    /// Checkpoint every `interval` input tuples.
+    interval: u64,
+    batch: usize,
+    /// Fragment cut points over the 3-stage chain.
+    cuts: Vec<usize>,
+    /// Kill the host of hop `kill_frag % hops` after this many batches.
+    kill_at: usize,
+    kill_frag: usize,
+}
+
+fn kill_gen() -> impl Gen<NoShrink<KillCase>> {
+    |rng: &mut Prng| {
+        let n = rng.gen_range(4, 40);
+        let keys = rng.gen_range(1, 5) as u64;
+        let cuts: Vec<usize> = (1..STAGES.len()).filter(|_| rng.gen_bool(0.6)).collect();
+        NoShrink(KillCase {
+            tuples: (0..n)
+                .map(|_| (rng.gen_range_u64(keys), rng.gen_range_u64(32) as f64))
+                .collect(),
+            window: rng.gen_range(1, 4),
+            interval: rng.gen_range(1, 9) as u64,
+            batch: rng.gen_range(1, 7),
+            cuts,
+            kill_at: rng.gen_range(0, 8),
+            kill_frag: rng.gen_range(0, 4),
+        })
+    }
+}
+
+fn spec_of(window_keyed: bool) -> String {
+    let _ = window_keyed;
+    "inc->dbl->agg@K".to_string()
+}
+
+#[test]
+fn seeded_node_kills_recover_to_uncrashed_multiset() {
+    if !checkpointing_enabled() {
+        return; // The off arm exercises `checkpoint_toggle_is_transparent` instead.
+    }
+    forall_seeded(0xFA11_0001, 14, kill_gen(), |c: &NoShrink<KillCase>| {
+        let c = &c.0;
+        let spec = spec_of(true);
+        let inputs = input_tuples(&c.tuples);
+        let expected = reference_run(&spec, c.window, &inputs, c.batch);
+
+        let mut cluster = Cluster::new(&unique_name("rec"), 3, DeviceKind::Native).unwrap();
+        register_all(&mut cluster, c.window);
+        let ids = cluster.ids();
+        let topo = Topology::parse("job", &spec).unwrap();
+        cluster.deploy_stream("job", &spec, &plan_from_cuts(&topo, &c.cuts, &ids)).unwrap();
+        assert!(cluster.enable_checkpoints("job", c.interval).unwrap());
+
+        let mut killed = false;
+        let mut out = Vec::new();
+        for (b, chunk) in inputs.chunks(c.batch).enumerate() {
+            if !killed && b == c.kill_at.min(inputs.chunks(c.batch).count().saturating_sub(1)) {
+                let victim = {
+                    let hops = cluster.stream_route("job").unwrap().hops();
+                    hops[c.kill_frag % hops.len()].node
+                };
+                cluster.kill_node(&victim).unwrap();
+                killed = true;
+            }
+            cluster.stream_send_batch("job", chunk.to_vec()).unwrap();
+            out.extend(cluster.stream_pump("job").unwrap());
+        }
+        if !killed {
+            // Stream shorter than the schedule: kill at the end, let
+            // the pump path detect and recover before the final drain.
+            let victim = {
+                let hops = cluster.stream_route("job").unwrap().hops();
+                hops[c.kill_frag % hops.len()].node
+            };
+            cluster.kill_node(&victim).unwrap();
+            out.extend(cluster.stream_pump("job").unwrap());
+        }
+        out.extend(cluster.stream_stop("job").unwrap());
+        let restarts = cluster.stream_metrics().counter("recovery.restarts").get();
+        cluster.shutdown().unwrap();
+        canon(out) == expected && restarts >= 1
+    });
+}
+
+#[test]
+fn journal_gc_retains_only_latest_epoch_and_prunes_ingest_log() {
+    if !checkpointing_enabled() {
+        return;
+    }
+    let mut cluster = Cluster::new(&unique_name("gc"), 2, DeviceKind::Native).unwrap();
+    register_all(&mut cluster, 2);
+    let ids = cluster.ids();
+    let topo = Topology::parse("job", "inc->agg@K").unwrap();
+    cluster
+        .deploy_stream("job", "inc->agg@K", &plan_from_cuts(&topo, &[1], &ids))
+        .unwrap();
+    assert!(cluster.enable_checkpoints("job", 2).unwrap());
+    for i in 0..10u64 {
+        cluster.stream_send(
+            "job",
+            Tuple::new(i, vec![]).with("K", (i % 2) as f64).with("V", i as f64),
+        )
+        .unwrap();
+    }
+    let journal = cluster.checkpoint_journal().expect("journal enabled").clone();
+    // Interval 2 over 10 tuples: 5 epochs committed, stale ones GC'd —
+    // only the newest record survives.
+    let epochs = journal.epochs("job").unwrap();
+    assert_eq!(epochs, vec![5], "superseded epochs must be garbage-collected");
+    let record = journal.latest("job").unwrap().expect("committed record");
+    assert_eq!((record.epoch, record.cursor), (5, 10));
+    // The write-ahead ingest log keeps nothing below the cursor: a
+    // replay from zero equals a replay from the cursor (here: empty).
+    assert!(journal.replay_input("job", 0).unwrap().is_empty(), "WAL pruned at commit");
+    cluster.stream_stop("job").unwrap();
+    // A clean stop retires the stream's journal state entirely.
+    assert!(journal.latest("job").unwrap().is_none());
+    assert!(journal.epochs("job").unwrap().is_empty());
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn recovery_metrics_account_restarts_and_replays() {
+    if !checkpointing_enabled() {
+        return;
+    }
+    let mut cluster = Cluster::new(&unique_name("acct"), 3, DeviceKind::Native).unwrap();
+    register_all(&mut cluster, 2);
+    let ids = cluster.ids();
+    let topo = Topology::parse("job", "inc->agg@K").unwrap();
+    cluster
+        .deploy_stream("job", "inc->agg@K", &plan_from_cuts(&topo, &[1], &ids))
+        .unwrap();
+    assert!(cluster.enable_checkpoints("job", 4).unwrap());
+    // 4 tuples commit epoch 1 (cursor 4); 2 more sit in the WAL only.
+    for i in 0..6u64 {
+        cluster.stream_send(
+            "job",
+            Tuple::new(i, vec![]).with("K", (i % 2) as f64).with("V", 1.0),
+        )
+        .unwrap();
+    }
+    let victim = cluster.stream_route("job").unwrap().hops()[1].node;
+    cluster.kill_node(&victim).unwrap();
+    let replayed = cluster.recover_stream("job").unwrap();
+    assert_eq!(replayed, 2, "exactly the post-cursor backlog is replayed");
+    let m = cluster.stream_metrics();
+    assert_eq!(m.counter("recovery.restarts").get(), 2, "both fragments roll back");
+    assert_eq!(m.counter("recovery.replayed_tuples").get(), 2);
+    assert!(m.counter("ckpt.epochs").get() >= 1);
+    assert!(m.counter("ckpt.bytes").get() > 0);
+    // The failed-over stream still finishes exactly-once: 6 tuples on
+    // 2 keys with window 2 leave one complete window per key plus one
+    // partial each — 4 aggregate outputs in total.
+    let mut out = cluster.stream_pump("job").unwrap();
+    out.extend(cluster.stream_stop("job").unwrap());
+    assert_eq!(out.len(), 4, "{out:?}");
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn checkpoint_toggle_is_transparent() {
+    // Runs in BOTH CI arms. With the plane on, `enable_checkpoints`
+    // returns true and gates outputs through epochs; with
+    // `RPULSAR_CHECKPOINT=off` it returns false and the route runs the
+    // pre-checkpoint path bit-for-bit. Either way the output multiset
+    // equals the plain (never-enabled) run — the A/B contract.
+    let spec = "inc->dbl->agg@K";
+    let inputs = input_tuples(&(0..12u64).map(|i| (i % 3, i as f64)).collect::<Vec<_>>());
+    let expected = reference_run(spec, 2, &inputs, 4);
+
+    let mut cluster = Cluster::new(&unique_name("ab"), 2, DeviceKind::Native).unwrap();
+    register_all(&mut cluster, 2);
+    let ids = cluster.ids();
+    let topo = Topology::parse("job", spec).unwrap();
+    cluster.deploy_stream("job", spec, &plan_from_cuts(&topo, &[1], &ids)).unwrap();
+    let enabled = cluster.enable_checkpoints("job", 4).unwrap();
+    assert_eq!(enabled, checkpointing_enabled(), "enable mirrors the global toggle");
+    let mut out = Vec::new();
+    for chunk in inputs.chunks(4) {
+        cluster.stream_send_batch("job", chunk.to_vec()).unwrap();
+        out.extend(cluster.stream_pump("job").unwrap());
+    }
+    out.extend(cluster.stream_stop("job").unwrap());
+    assert_eq!(canon(out), expected, "the toggle must never change the output multiset");
+    if !enabled {
+        assert!(
+            cluster.stream_metrics().counter("ckpt.epochs").get() == 0,
+            "off arm must not touch the journal"
+        );
+    }
+    cluster.shutdown().unwrap();
+}

@@ -433,3 +433,60 @@ fn warm_policy_expiry_sweeps_stale_entries() {
     assert_eq!(metrics.counter("trigger.pool_evictions").get(), 1);
     assert!(deployer.running().is_empty());
 }
+
+#[test]
+fn snapshot_seeded_prebuild_resumes_from_checkpoint_state() {
+    // Checkpoint-plane satellite: with a SnapshotSource attached, a
+    // stateful park's prebuilt standby is seeded from the latest
+    // checkpoint snapshot through Deployer::seed_state — the next
+    // activation *resumes* half-open windows instead of starting
+    // empty. Without a source (every other test here), prebuilds stay
+    // empty and the warm ≡ cold equivalence contract is untouched.
+    use rpulsar::stream::deploy::TopologyManager;
+    use rpulsar::stream::engine::StreamEngine;
+    use rpulsar::stream::pipeline::Deployer;
+    use std::sync::Arc;
+
+    let metrics = rpulsar::metrics::Registry::new();
+    let mut pool = WarmPool::new(WarmPolicy::retain(2), metrics.clone());
+    let mut deployer = TopologyManager::new(StreamEngine::new());
+    let pipeline = window("job");
+    let handle = Deployer::deploy(&mut deployer, &pipeline).unwrap();
+    // One tuple into a window-3 key, then a live snapshot — standing in
+    // for `CheckpointJournal::latest` on a journaled cluster.
+    Deployer::send_batch(
+        &mut deployer,
+        &handle,
+        vec![Tuple::new(0, vec![]).with("K", 1.0).with("X", 5.0)],
+    )
+    .unwrap();
+    let (trailing, states) = deployer.snapshot(handle.key()).unwrap();
+    assert!(trailing.is_empty(), "no window completed yet");
+    let snapshot = Arc::new(states);
+    pool.set_snapshot_source(Arc::new(move |name: &str| {
+        (name == "job").then(|| (*snapshot).clone())
+    }));
+    // The stateful park flushes the live instance (its partial window
+    // drains to the tail, as any cold decommission would)…
+    let outcome = pool.park(&mut deployer, "job", handle, true, &pipeline).unwrap();
+    assert_eq!(outcome.tail.len(), 1, "partial window flushes on park: {:?}", outcome.tail);
+    assert_eq!(outcome.tail[0].get("COUNT"), Some(1.0));
+    assert_eq!(metrics.counter("trigger.pool_seeded").get(), 1);
+    // …and the seeded standby remembers the snapshot: two more tuples
+    // complete a window of 3 (5, 6, 7), not start a fresh one.
+    let standby = pool.take("job").unwrap();
+    Deployer::send_batch(
+        &mut deployer,
+        &standby,
+        vec![
+            Tuple::new(1, vec![]).with("K", 1.0).with("X", 6.0),
+            Tuple::new(2, vec![]).with("K", 1.0).with("X", 7.0),
+        ],
+    )
+    .unwrap();
+    let out = Deployer::stop(&mut deployer, &standby).unwrap();
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert_eq!(out[0].get("COUNT"), Some(3.0), "{out:?}");
+    assert_eq!(out[0].get("MIN"), Some(5.0));
+    assert_eq!(out[0].get("MAX"), Some(7.0));
+}
